@@ -1,0 +1,39 @@
+//! Channel-statistics explorer: dumps the raw data behind Figs. 2, 3 and 6
+//! from a real prefilled prompt — per-channel error, I/S correlation, and
+//! the salience-vs-scale tier decisions.
+//!
+//!     make artifacts && cargo run --release --example quant_explorer
+
+use anyhow::Result;
+use mixkvq::coordinator::engine::Engine;
+use mixkvq::harness::experiments::{ExpCtx, run};
+use mixkvq::quant::methods::Method;
+use mixkvq::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let artifacts = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let ctx = ExpCtx::new(&artifacts, true);
+
+    for id in ["fig2", "fig3", "fig6"] {
+        println!("{}", run(&ctx, id)?.print());
+    }
+
+    // bonus: live salience snapshot after some decoding
+    let mut engine = Engine::new(&artifacts, Method::mixkvq("mix30"), 32)?;
+    let mut rng = mixkvq::util::rng::Pcg32::seeded(2);
+    let task = mixkvq::harness::workloads::gen_passkey(&mut rng, 150);
+    let pre = engine.prefill(&task.prompt)?;
+    let cache = engine.admit_prefill(&pre)?;
+    println!("== live channel plan (layer 0) ==");
+    for h in 0..engine.meta.model.n_kv_heads {
+        let head = &cache.heads[0][h];
+        let spec = head.spec;
+        println!(
+            "head {h}: BF16 tier -> channels {:?}, UINT4 tier -> {:?}",
+            &head.idx[..spec.n16],
+            &head.idx[spec.n16..spec.n16 + spec.n4],
+        );
+    }
+    Ok(())
+}

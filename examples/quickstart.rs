@@ -1,0 +1,96 @@
+//! Quickstart: quantize a toy KV window with MixKVQ and every baseline,
+//! inspect error and memory — no artifacts needed (pure library use).
+//!
+//!     cargo run --release --example quickstart
+
+use mixkvq::kvcache::accountant::{bytes_per_token, effective_bits, fp16_bytes_per_token};
+use mixkvq::quant::methods::Method;
+use mixkvq::quant::window::{
+    dequantize_key_window, plan_order, quantize_key_window, quantize_value_window, TierSpec,
+};
+use mixkvq::util::rng::Pcg32;
+use mixkvq::util::stats::rel_l2;
+
+fn main() {
+    let (t, d, g) = (128usize, 32usize, 32usize);
+    let mut rng = Pcg32::seeded(0);
+
+    // A key window with two outlier channels (the Fig. 2 phenomenon) whose
+    // corresponding query magnitudes differ: channel 5 is hot for queries,
+    // channel 23 is not — exactly the case MixKVQ's salience score decides.
+    let mut k: Vec<f32> = (0..t * d).map(|_| rng.normal()).collect();
+    let mut importance = vec![0.3f32; d];
+    for tok in 0..t {
+        k[tok * d + 5] *= 10.0;
+        k[tok * d + 23] *= 10.0;
+    }
+    importance[5] = 3.0; // query-relevant outlier channel
+    importance[23] = 0.02; // query-irrelevant outlier channel
+
+    // Query vector proportional to importance (what attention would see).
+    let q: Vec<f32> = importance.iter().map(|&x| x).collect();
+    let exact: Vec<f32> = (0..t)
+        .map(|tok| (0..d).map(|ch| q[ch] * k[tok * d + ch]).sum())
+        .collect();
+
+    println!("MixKVQ quickstart — 3-tier key quantization on a {t}x{d} window\n");
+    println!(
+        "{:<16} {:>9} {:>12} {:>14} {:>12}",
+        "method", "key-bits", "B/token", "score rel-L2", "vs fp16"
+    );
+
+    let spec = TierSpec { n16: 2, n4: 2, n2: 28, v_bits: 2 };
+    for method in [
+        Method::bf16(),
+        Method::kivi("kv2"),
+        Method::kvquant("kv2"),
+        Method::skvq("kv2"),
+        Method::rotatekv("kv2"),
+        Method::mixkvq_error_only("mix30"),
+        Method::mixkvq("mix30"),
+    ] {
+        let use_spec = match method.variant.as_str() {
+            "bf16" => TierSpec { n16: d, n4: 0, n2: 0, v_bits: 16 },
+            "kv2" => TierSpec { n16: 0, n4: 0, n2: d, v_bits: 2 },
+            _ => spec,
+        };
+        // rotate if the method asks for it
+        let rot = method.rotation(d);
+        let mut krot = k.clone();
+        if method.rotate {
+            mixkvq::quant::rotation::rotate_rows(&mut krot, t, d, &rot);
+        }
+        let order = plan_order(method.ordering, &importance, &krot, t, d);
+        let w = quantize_key_window(&krot, t, d, use_spec, &order, method.key_opts(g));
+        let back_rot = dequantize_key_window(&w, d, g);
+        // scores in rotated space: (q·R)·(k̃)ᵀ
+        let mut qr = vec![0f32; d];
+        mixkvq::quant::rotation::rotate_vec(&q, &rot, &mut qr);
+        let approx: Vec<f32> = (0..t)
+            .map(|tok| (0..d).map(|ch| qr[ch] * back_rot[tok * d + ch]).sum())
+            .collect();
+        let bpt = bytes_per_token(&use_spec, d, g);
+        println!(
+            "{:<16} {:>9.2} {:>12.1} {:>14.4} {:>11.2}x",
+            method.name,
+            effective_bits(&use_spec, d, g) * 2.0 * d as f64 / (2.0 * d as f64), // = eff bits
+            bpt,
+            rel_l2(&approx, &exact),
+            fp16_bytes_per_token(d) / bpt,
+        );
+    }
+
+    // Value side: per-token 2-bit is enough (Table 2's finding).
+    let v: Vec<f32> = (0..t * d).map(|_| rng.normal()).collect();
+    let vw = quantize_value_window(&v, t, d, 2, g);
+    let vback = mixkvq::quant::window::dequantize_value_window(&vw, d, g);
+    println!(
+        "\nvalue cache @2-bit per-token: rel-L2 {:.4} (uniform error, no outliers — Fig. 2 right)",
+        rel_l2(&vback, &v)
+    );
+    println!(
+        "\nTakeaway: MixKVQ protects the query-relevant outlier channel (5) in BF16\n\
+         and lets the query-irrelevant one (23) stay 2-bit; error-only protects\n\
+         both outliers and wastes budget, fixed 2-bit protects neither."
+    );
+}

@@ -1,0 +1,75 @@
+//! End-to-end serving driver (the DESIGN.md validation workload): load the
+//! trained MiniReasoner artifacts, serve a batched mixed trace of reasoning
+//! and retrieval requests through the full L3→L2→L1 stack, and report
+//! accuracy, latency, throughput, and memory vs the BF16 baseline.
+//!
+//!     make artifacts && cargo run --release --example serve_reasoning
+//!     (options: --method mixkvq-mix30 --requests 24 --artifacts <dir>)
+
+use anyhow::{bail, Result};
+use mixkvq::coordinator::engine::Engine;
+use mixkvq::coordinator::metrics::breakdown;
+use mixkvq::coordinator::router::{Server, ServerConfig};
+use mixkvq::coordinator::session::Request;
+use mixkvq::harness::accuracy;
+use mixkvq::harness::workloads::{suite, TaskKind};
+use mixkvq::model::sampler::Sampling;
+use mixkvq::quant::methods::Method;
+use mixkvq::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let artifacts = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let n = args.usize_or("requests", 24)?;
+    let methods = ["bf16", args.get_or("method", "mixkvq-mix30").as_str()]
+        .iter()
+        .map(|m| Method::by_name(m).ok_or_else(|| anyhow::anyhow!("unknown method {m}")))
+        .collect::<Result<Vec<_>>>()?;
+
+    for method in methods {
+        println!("\n===== {} =====", method.name);
+        let mut engine = Engine::new(&artifacts, method.clone(), 128)?;
+
+        // 1) task accuracy through the quantized cache (teacher-forced)
+        for kind in [TaskKind::Chain, TaskKind::Passkey, TaskKind::KvLookup, TaskKind::Copy] {
+            let tasks = suite(kind, 16, 7, false);
+            let rep = accuracy::evaluate(&mut engine, &tasks)?;
+            println!(
+                "  {:<9} task-acc {:>5.1}%  answer-acc {:>5.1}%",
+                kind.name(),
+                100.0 * rep.task_acc(),
+                100.0 * rep.token_acc()
+            );
+        }
+
+        // 2) generative serving: mixed reasoning trace, batched
+        engine.timers = Default::default();
+        let mut server = Server::new(engine, ServerConfig::default());
+        let mut reqs = Vec::new();
+        let mut rng = mixkvq::util::rng::Pcg32::seeded(3);
+        for i in 0..n {
+            let task = match i % 3 {
+                0 => mixkvq::harness::workloads::gen_chain(&mut rng, 8),
+                1 => mixkvq::harness::workloads::gen_passkey(&mut rng, 200),
+                _ => mixkvq::harness::workloads::gen_kvlookup(&mut rng, 10),
+            };
+            reqs.push(Request {
+                id: i as u64,
+                prompt: task.prompt,
+                max_new_tokens: 48,
+                sampling: Sampling::Greedy,
+            });
+        }
+        let completed = server.run(reqs)?;
+        if completed.len() != n {
+            bail!("served {} of {n} requests", completed.len());
+        }
+        println!("  serving: {}", server.metrics.summary());
+        let b = breakdown(&server.engine.timers);
+        println!(
+            "  breakdown: model {:.1}% | quantize {:.1}% | assemble {:.1}% (quant events/step {:.1}%)",
+            b.model_exec_pct, b.quantize_pct, b.assemble_pct, b.quantize_call_rate_pct
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,126 @@
+"""AOT entry point: train (if needed) + lower every HLO artifact.
+
+Produces in artifacts/:
+  weights.bin                  — flat f32 LE in param_spec order
+  meta.json                    — model/cache/variant/tokenizer ABI
+  train_log.json               — loss curve + BF16 task accuracy
+  prefill_t<T>.hlo.txt         — prompt prefill per bucket
+  prefill_t<T>.inputs.json     — positional input manifest
+  decode_<variant>.hlo.txt     — batched quantized decode step per variant
+  decode_<variant>.inputs.json
+
+HLO *text* is the interchange format (NOT ``.serialize()``): jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .config import (
+    CacheConfig, ModelConfig, default_variants, meta_dict, validate_variant,
+)
+from .model import (
+    decode_input_manifest, make_decode, make_prefill, prefill_input_manifest,
+)
+from .train import TrainConfig, train
+
+DTYPES = {"f32": np.float32, "i32": np.int32, "u8": np.uint8}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shape_structs(manifest):
+    return [
+        jax.ShapeDtypeStruct(tuple(shape), DTYPES[dt]) for _, shape, dt in manifest
+    ]
+
+
+def write_artifact(fn, manifest, name: str, out_dir: str, verbose=True):
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*shape_structs(manifest))
+    text = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(text)
+    with open(os.path.join(out_dir, f"{name}.inputs.json"), "w") as f:
+        json.dump(
+            [{"name": n, "shape": list(s), "dtype": dt} for n, s, dt in manifest], f
+        )
+    if verbose:
+        print(
+            f"  {name}: {len(text) / 1e6:.2f} MB HLO, {len(manifest)} inputs, "
+            f"{time.time() - t0:.1f}s",
+            flush=True,
+        )
+
+
+def build(out_dir: str, train_steps: int = 12000, force_train: bool = False):
+    os.makedirs(out_dir, exist_ok=True)
+    mc, cc = ModelConfig(), CacheConfig()
+    variants = default_variants(mc)
+    for v in variants:
+        validate_variant(v, mc, cc)
+
+    wpath = os.path.join(out_dir, "weights.bin")
+    if force_train or not os.path.exists(wpath):
+        print(f"training MiniReasoner (stage1 {train_steps} steps + stage2 long-context)...", flush=True)
+        params, _ = train(mc, TrainConfig(steps=train_steps), out_dir)
+        from .train import finetune_long
+        finetune_long(params, mc, out_dir)
+    else:
+        print("weights.bin exists, skipping training", flush=True)
+
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta_dict(mc, cc, variants), f, indent=2)
+
+    print("lowering prefill buckets...", flush=True)
+    for t in cc.prefill_buckets:
+        write_artifact(
+            make_prefill(mc, t), prefill_input_manifest(mc, t), f"prefill_t{t}", out_dir
+        )
+
+    print("lowering decode variants...", flush=True)
+    for v in variants:
+        write_artifact(
+            make_decode(mc, cc, v),
+            decode_input_manifest(mc, cc, v),
+            f"decode_{v.name}",
+            out_dir,
+        )
+    print("artifacts complete", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--train-steps", type=int, default=12000)
+    ap.add_argument("--force-train", action="store_true")
+    args = ap.parse_args()
+    build(args.out, args.train_steps, args.force_train)
+
+
+if __name__ == "__main__":
+    main()
+
+
+# Kept for Makefile compatibility / quick smoke use: a trivial single-op
+# artifact proving the tool-chain end-to-end (not used by the runtime).
+def smoke(out_path: str):
+    import jax.numpy as jnp
+
+    lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+        jax.ShapeDtypeStruct((2, 2), np.float32)
+    )
+    open(out_path, "w").write(to_hlo_text(lowered))

@@ -1,0 +1,142 @@
+"""Shared model / quantization configuration for the MixKVQ reproduction.
+
+This is the single source of truth for shapes. `aot.py` serializes it to
+``artifacts/meta.json`` and the Rust side (``rust/src/model/config.rs``)
+deserializes it, so the two layers can never drift.
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import List, Tuple
+
+# ---------------------------------------------------------------------------
+# Vocabulary layout (mirrored in rust/src/model/tokenizer.rs)
+# ---------------------------------------------------------------------------
+VOCAB = 128
+PAD, BOS, EOS, SEP, EQ, ARROW, QMARK, KEY, VAL, COPY = range(10)
+OP_ADD, OP_SUB, OP_MUL = 10, 11, 12
+NUM_BASE = 16      # token NUM_BASE + v encodes the number v
+NUM_COUNT = 32     # values 0..31 (small enough for a ~600k-param model
+                   # to master modular arithmetic within the train budget)
+FILLER_BASE = 80   # filler "letters" 80..127
+FILLER_COUNT = 48
+
+
+def num_tok(v: int) -> int:
+    assert 0 <= v < NUM_COUNT
+    return NUM_BASE + v
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """MiniReasoner: a GQA + RoPE decoder-only transformer."""
+
+    vocab: int = VOCAB
+    d_model: int = 128
+    n_layers: int = 4
+    n_q_heads: int = 4
+    n_kv_heads: int = 2
+    d_head: int = 32
+    d_ff: int = 256
+    rope_theta: float = 10000.0
+    max_position: int = 704
+    rmsnorm_eps: float = 1e-5
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_q_heads // self.n_kv_heads
+
+
+@dataclass(frozen=True)
+class CacheConfig:
+    """Quantized-cache geometry shared by python (lowering) and rust (runtime)."""
+
+    capacity: int = 512      # C: quantized token slots
+    residual: int = 128      # R_max: full-precision residual buffer slots
+    group: int = 32          # G: quantization group size
+    decode_batch: int = 8    # B: static decode batch (padded with idle slots)
+    prefill_buckets: Tuple[int, ...] = (128, 512)
+
+    @property
+    def key_groups(self) -> int:
+        return self.capacity // self.group
+
+
+@dataclass
+class QuantVariant:
+    """A compile-time quantization layout.
+
+    Per layer: (n16, n4, n2) key-channel tier counts summing to d_head, and
+    the value bit-width v_bits in {2, 4, 16}. The paper's thresholds
+    (tau_BF16, tau_UINT4) select *which* channels land in each tier at
+    runtime; the *counts* are fixed per variant so the HLO stays
+    static-shaped (see DESIGN.md §Hardware-Adaptation).
+    """
+
+    name: str = "bf16"
+    # one (n16, n4, n2, v_bits) tuple per layer
+    layers: List[Tuple[int, int, int, int]] = field(default_factory=list)
+
+    def key_bits(self, d_head: int) -> float:
+        tot = sum(16 * a + 4 * b + 2 * c for a, b, c, _ in self.layers)
+        return tot / (d_head * len(self.layers))
+
+    def avg_bits(self, d_head: int) -> float:
+        kb = self.key_bits(d_head)
+        vb = sum(v for _, _, _, v in self.layers) / len(self.layers)
+        return (kb + vb) / 2.0
+
+
+def uniform_variant(name: str, n_layers: int, n16: int, n4: int, n2: int, v_bits: int) -> QuantVariant:
+    return QuantVariant(name=name, layers=[(n16, n4, n2, v_bits)] * n_layers)
+
+
+def default_variants(mc: ModelConfig) -> List[QuantVariant]:
+    d, L = mc.d_head, mc.n_layers
+    assert d == 32, "tier presets assume d_head=32"
+    vs = [
+        uniform_variant("bf16", L, d, 0, 0, 16),
+        uniform_variant("kv4", L, 0, d, 0, 4),      # KIVI/KVQuant/RotateKV @4
+        uniform_variant("kv2", L, 0, 0, d, 2),      # KIVI/KVQuant/RotateKV @2
+        uniform_variant("k4v2", L, 0, d, 0, 2),     # Table 2 asymmetry probe
+        uniform_variant("k2v4", L, 0, 0, d, 4),     # Table 2 asymmetry probe
+        # MixKVQ tiered layouts (key bits 2.25 / 3.0 / 3.25)
+        uniform_variant("mix225", L, 0, 4, 28, 2),
+        uniform_variant("mix30", L, 2, 2, 28, 2),
+        uniform_variant("mix325", L, 2, 6, 24, 2),
+    ]
+    # KVTuner-style static layer-wise mix: calibration marks layers 0,3 as
+    # sensitive (KV4) and 1,2 as non-critical (KV2) — App. B failure mode.
+    vs.append(
+        QuantVariant(
+            name="kvtuner",
+            layers=[(0, d, 0, 4), (0, 0, d, 2), (0, 0, d, 2), (0, d, 0, 4)],
+        )
+    )
+    return vs
+
+
+def validate_variant(v: QuantVariant, mc: ModelConfig, cc: CacheConfig) -> None:
+    assert len(v.layers) == mc.n_layers, v.name
+    for (n16, n4, n2, vb) in v.layers:
+        assert n16 + n4 + n2 == mc.d_head, v.name
+        assert n4 % 2 == 0, f"{v.name}: n4 must pack into bytes"
+        assert n2 % 4 == 0, f"{v.name}: n2 must pack into bytes"
+        assert vb in (2, 4, 16), v.name
+    assert cc.capacity % cc.group == 0
+    assert cc.residual % cc.group == 0
+
+
+def meta_dict(mc: ModelConfig, cc: CacheConfig, variants: List[QuantVariant]) -> dict:
+    return {
+        "model": asdict(mc),
+        "cache": asdict(cc),
+        "variants": [
+            {
+                "name": v.name,
+                "layers": [list(t) for t in v.layers],
+                "key_bits": v.key_bits(mc.d_head),
+                "avg_bits": v.avg_bits(mc.d_head),
+            }
+            for v in variants
+        ],
+    }

@@ -1,0 +1,132 @@
+"""Synthetic training corpus for MiniReasoner.
+
+Four task families, chosen to mirror what the paper's benchmarks measure
+(see DESIGN.md §2 substitution table):
+
+* ``chain``   — chained modular arithmetic: the AIME/MATH stand-in. The
+                answer of step *i* feeds step *i+1*, so a single corrupted
+                logit invalidates the remainder of the chain (Table 1's
+                error-accumulation phenomenon).
+* ``passkey`` — needle-in-a-haystack retrieval: the LongBench stand-in.
+* ``kvlookup``— associative recall over many KEY/VAL pairs.
+* ``copy``    — verbatim copy, the purest attention-fidelity probe.
+
+The Rust harness re-implements the same generators (harness/workloads.rs);
+distributional identity is by construction, not by shared RNG state.
+"""
+
+import numpy as np
+
+from .config import (
+    ARROW, BOS, COPY, EOS, EQ, FILLER_BASE, FILLER_COUNT, KEY, NUM_COUNT,
+    OP_ADD, OP_MUL, OP_SUB, QMARK, SEP, VAL, num_tok,
+)
+
+# MUL mod N is a 3-way table a ~600k model cannot master in the CPU train
+# budget; ADD/SUB keep the chain task learnable while preserving its
+# all-or-nothing error-accumulation structure.
+OPS = [OP_ADD, OP_SUB]
+
+
+def apply_op(op: int, a: int, b: int) -> int:
+    if op == OP_ADD:
+        return (a + b) % NUM_COUNT
+    if op == OP_SUB:
+        return (a - b) % NUM_COUNT
+    if op == OP_MUL:
+        return (a * b) % NUM_COUNT
+    raise ValueError(op)
+
+
+CHAIN_OPERAND_MAX = 5  # operands 1..4: a small op table a ~600k model can
+                       # master, while the chained structure still makes a
+                       # single corrupted step invalidate the rest (Table 1).
+
+
+def gen_chain(rng: np.random.Generator, steps: int):
+    """Returns (tokens, answer_positions). Each step: prev OP nb EQ res SEP."""
+    toks = [BOS]
+    answers = []  # (position_of_result_token, result_token)
+    prev = int(rng.integers(NUM_COUNT))
+    toks.append(num_tok(prev))
+    for _ in range(steps):
+        op = OPS[int(rng.integers(len(OPS)))]
+        b = int(rng.integers(1, CHAIN_OPERAND_MAX))
+        res = apply_op(op, prev, b)
+        toks += [op, num_tok(b), EQ]
+        answers.append((len(toks), num_tok(res)))
+        toks += [num_tok(res), SEP]
+        prev = res
+    toks.append(EOS)
+    return toks, answers
+
+
+def gen_passkey(rng: np.random.Generator, context_len: int, key_len: int = 2, val_len: int = 2):
+    key = [num_tok(int(rng.integers(NUM_COUNT))) for _ in range(key_len)]
+    val = [num_tok(int(rng.integers(NUM_COUNT))) for _ in range(val_len)]
+    needle = [KEY] + key + [VAL] + val
+    query = [QMARK] + key + [ARROW]
+    n_fill = max(0, context_len - len(needle) - len(query) - val_len - 2)
+    pos = int(rng.integers(n_fill + 1))
+    filler = rng.integers(FILLER_BASE, FILLER_BASE + FILLER_COUNT, size=n_fill).tolist()
+    toks = [BOS] + filler[:pos] + needle + filler[pos:] + query
+    answers = [(len(toks) + i, val[i]) for i in range(val_len)]
+    toks += val + [EOS]
+    return toks, answers
+
+
+def gen_kvlookup(rng: np.random.Generator, n_pairs: int):
+    keys = rng.choice(NUM_COUNT, size=n_pairs, replace=False)
+    vals = rng.integers(NUM_COUNT, size=n_pairs)
+    toks = [BOS]
+    for k, v in zip(keys, vals):
+        toks += [KEY, num_tok(int(k)), VAL, num_tok(int(v)), SEP]
+    i = int(rng.integers(n_pairs))
+    toks += [QMARK, num_tok(int(keys[i])), ARROW]
+    answers = [(len(toks), num_tok(int(vals[i])))]
+    toks += [num_tok(int(vals[i])), EOS]
+    return toks, answers
+
+
+def gen_copy(rng: np.random.Generator, n: int):
+    seq = [num_tok(int(t)) for t in rng.integers(NUM_COUNT, size=n)]
+    toks = [BOS, COPY] + seq + [ARROW]
+    answers = [(len(toks) + i, seq[i]) for i in range(n)]
+    toks += seq + [EOS]
+    return toks, answers
+
+
+def sample_example(rng: np.random.Generator, max_len: int):
+    kind = int(rng.integers(4))
+    if kind == 0:
+        toks, ans = gen_chain(rng, steps=int(rng.integers(2, 9)))
+    elif kind == 1:
+        toks, ans = gen_passkey(rng, context_len=int(rng.integers(24, max(25, max_len - 10))))
+    elif kind == 2:
+        toks, ans = gen_kvlookup(rng, n_pairs=int(rng.integers(2, 13)))
+    else:
+        toks, ans = gen_copy(rng, n=int(rng.integers(2, 13)))
+    return toks[:max_len], [(p, t) for p, t in ans if p < max_len]
+
+
+ANSWER_WEIGHT = 5.0  # focus capacity on the tokens the harness scores
+
+
+def make_batch(rng: np.random.Generator, batch: int, seq_len: int):
+    """Padded (tokens, loss_weights) arrays for next-token training.
+
+    Answer positions get ANSWER_WEIGHT; other (partly unlearnable filler)
+    positions weight 1. This concentrates the tiny model's capacity on the
+    retrieval/arithmetic behaviour the quantization experiments measure.
+    """
+    x = np.zeros((batch, seq_len), dtype=np.int32)
+    mask = np.zeros((batch, seq_len), dtype=np.float32)
+    for b in range(batch):
+        toks, answers = sample_example(rng, seq_len)
+        n = len(toks)
+        x[b, :n] = toks
+        mask[b, : max(0, n - 1)] = 1.0  # predict every non-pad next token
+        for pos, _ in answers:
+            if 0 < pos < seq_len:
+                mask[b, pos - 1] = ANSWER_WEIGHT
+    return x, mask

@@ -1,0 +1,118 @@
+"""Asymmetric group quantization + u2/u4 bit packing (jnp, build-time).
+
+Mirrors rust/src/quant/{asym,packing}.rs bit-for-bit:
+
+* codes: ``q = clip(round((x - z) / s), 0, 2^B - 1)`` with ``z = min``,
+  ``s = (max - min) / (2^B - 1)`` (Eq. 2–3 of the paper).
+* u4 packing: channel pair (2j, 2j+1) -> byte j, low nibble = channel 2j.
+* u2 packing: channel quad (4j..4j+3) -> byte j, bits (2k..2k+1) = 4j+k.
+"""
+
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+
+def qmax(bits: int) -> int:
+    return (1 << bits) - 1
+
+
+def quant_params(x, axis, bits: int):
+    """scale/zero over `axis` (kept as size-1 dims for broadcasting)."""
+    lo = jnp.min(x, axis=axis, keepdims=True)
+    hi = jnp.max(x, axis=axis, keepdims=True)
+    scale = jnp.maximum((hi - lo) / qmax(bits), EPS)
+    return scale, lo
+
+
+def quantize(x, scale, zero, bits: int):
+    q = jnp.round((x - zero) / scale)
+    return jnp.clip(q, 0, qmax(bits)).astype(jnp.uint8)
+
+
+def dequantize(q, scale, zero):
+    return q.astype(jnp.float32) * scale + zero
+
+
+# -- packing ----------------------------------------------------------------
+
+def pack_u4(q):
+    """[..., 2n] u8 codes in 0..15 -> [..., n] bytes."""
+    lo = q[..., 0::2]
+    hi = q[..., 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_u4(p):
+    lo = p & 0xF
+    hi = (p >> 4) & 0xF
+    return jnp.stack([lo, hi], axis=-1).reshape(*p.shape[:-1], p.shape[-1] * 2)
+
+
+def pack_u2(q):
+    """[..., 4n] u8 codes in 0..3 -> [..., n] bytes."""
+    b = q[..., 0::4] | (q[..., 1::4] << 2) | (q[..., 2::4] << 4) | (q[..., 3::4] << 6)
+    return b.astype(jnp.uint8)
+
+
+def unpack_u2(p):
+    parts = [(p >> (2 * k)) & 0x3 for k in range(4)]
+    return jnp.stack(parts, axis=-1).reshape(*p.shape[:-1], p.shape[-1] * 4)
+
+
+def pack(q, bits: int):
+    if bits == 4:
+        return pack_u4(q)
+    if bits == 2:
+        return pack_u2(q)
+    raise ValueError(bits)
+
+
+def unpack(p, bits: int):
+    if bits == 4:
+        return unpack_u4(p)
+    if bits == 2:
+        return unpack_u2(p)
+    raise ValueError(bits)
+
+
+# -- cache-shaped helpers ----------------------------------------------------
+
+def quantize_key_channelwise(k, group: int, bits: int):
+    """Per-channel key quant, grouped along tokens (KIVI layout).
+
+    k: [T, D] -> packed [T, D*bits//8], scale/zero [T//G, D].
+    """
+    t, d = k.shape
+    kg = k.reshape(t // group, group, d)
+    scale, zero = quant_params(kg, axis=1, bits=bits)          # [T/G, 1, D]
+    q = quantize(kg, scale, zero, bits).reshape(t, d)
+    return pack(q, bits), scale[:, 0, :], zero[:, 0, :]
+
+
+def dequantize_key_channelwise(packed, scale, zero, group: int, bits: int):
+    q = unpack(packed, bits)                                   # [T, D]
+    t, d = q.shape
+    qg = q.reshape(t // group, group, d).astype(jnp.float32)
+    x = qg * scale[:, None, :] + zero[:, None, :]
+    return x.reshape(t, d)
+
+
+def quantize_value_tokenwise(v, group: int, bits: int):
+    """Per-token value quant, grouped along channels.
+
+    v: [T, D] -> packed [T, D*bits//8], scale/zero [T, D//G].
+    """
+    t, d = v.shape
+    vg = v.reshape(t, d // group, group)
+    scale, zero = quant_params(vg, axis=2, bits=bits)          # [T, D/G, 1]
+    q = quantize(vg, scale, zero, bits).reshape(t, d)
+    return pack(q, bits), scale[..., 0], zero[..., 0]
+
+
+def dequantize_value_tokenwise(packed, scale, zero, group: int, bits: int):
+    q = unpack(packed, bits)
+    t, d = q.shape
+    qg = q.reshape(t, d // group, group).astype(jnp.float32)
+    x = qg * scale[..., None] + zero[..., None]
+    return x.reshape(t, d)

@@ -1,0 +1,153 @@
+"""L1 Pallas kernels: fused dequant + attention over the packed KV cache.
+
+The paper's CUDA hot spot is "dequantize K on the fly, right before QK^T".
+On the Pallas/TPU model this becomes (DESIGN.md §Hardware-Adaptation):
+
+* packed u8 key blocks + per-channel scale/zero vectors are streamed
+  HBM -> VMEM via BlockSpecs over the cache-length axis C;
+* nibble/crumb unpacking happens in-register (shift + mask on the VPU);
+* the tier matmuls target the MXU (f32 here; bf16 on real TPU).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that the Rust runtime
+compiles like any other op (see /opt/xla-example/README.md).
+
+VMEM budget at the default shapes (C=512, BLOCK_C=128, d_head=32, Hq=4,
+G=32): packed K block <= 128x16 B = 2 KiB, scales 4x32x4 B = 0.5 KiB,
+q tiles < 1 KiB, fp16 tier 128x n16 x4 B <= 16 KiB, out tile 4x128x4 B =
+2 KiB — orders of magnitude under the 16 MiB VMEM ceiling, leaving room to
+scale C to 64K tokens (128 KiB/block) before re-tiling is needed.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_C = 128
+
+
+def _unpack_u4(p):
+    lo = p & 0xF
+    hi = (p >> 4) & 0xF
+    return jnp.stack([lo, hi], axis=-1).reshape(*p.shape[:-1], p.shape[-1] * 2)
+
+
+def _unpack_u2(p):
+    parts = [(p >> (2 * k)) & 0x3 for k in range(4)]
+    return jnp.stack(parts, axis=-1).reshape(*p.shape[:-1], p.shape[-1] * 4)
+
+
+def _dequant_block(packed, scale, zero, group: int, bits: int):
+    """packed: [bc, n*bits/8]; scale/zero: [bc/G, n] -> [bc, n] f32."""
+    q = _unpack_u4(packed) if bits == 4 else _unpack_u2(packed)
+    s = jnp.repeat(scale, group, axis=0)
+    z = jnp.repeat(zero, group, axis=0)
+    return q.astype(jnp.float32) * s + z
+
+
+def mixed_qk_scores(q16, q4, q2, k16, k4p, k4s, k4z, k2p, k2s, k2z,
+                    *, group: int, block_c: int = BLOCK_C):
+    """Pre-softmax scores [Hq, C] of per-tier queries vs 3-tier packed keys.
+
+    Empty tiers (n = 0) are elided from the kernel signature so the lowered
+    HLO never carries zero-sized operands.
+    """
+    hq = q16.shape[0]
+    c = max(k16.shape[0], k4p.shape[0], k2p.shape[0])
+    n16, n4, n2 = k16.shape[1], k4s.shape[-1] if k4p.size else 0, k2s.shape[-1] if k2p.size else 0
+    if k4p.size == 0:
+        n4 = 0
+    if k2p.size == 0:
+        n2 = 0
+    gpb = block_c // group  # scale groups per block
+
+    args, in_specs, kinds = [], [], []
+
+    def add(arr, spec, kind):
+        args.append(arr)
+        in_specs.append(spec)
+        kinds.append(kind)
+
+    row = lambda n: pl.BlockSpec((hq, n), lambda i: (0, 0))
+    blk = lambda n: pl.BlockSpec((block_c, n), lambda i: (i, 0))
+    grp = lambda n: pl.BlockSpec((gpb, n), lambda i: (i, 0))
+
+    if n16:
+        add(q16, row(n16), "q16")
+        add(k16, blk(n16), "k16")
+    if n4:
+        add(q4, row(n4), "q4")
+        add(k4p, blk(n4 // 2), "k4p")
+        add(k4s, grp(n4), "k4s")
+        add(k4z, grp(n4), "k4z")
+    if n2:
+        add(q2, row(n2), "q2")
+        add(k2p, blk(n2 // 4), "k2p")
+        add(k2s, grp(n2), "k2s")
+        add(k2z, grp(n2), "k2z")
+
+    def kernel(*refs):
+        ins = dict(zip(kinds, refs[:-1]))
+        out_ref = refs[-1]
+        acc = jnp.zeros(out_ref.shape, jnp.float32)
+        if "k16" in ins:
+            acc += ins["q16"][...] @ ins["k16"][...].T
+        if "k4p" in ins:
+            k4 = _dequant_block(ins["k4p"][...], ins["k4s"][...], ins["k4z"][...], group, 4)
+            acc += ins["q4"][...] @ k4.T
+        if "k2p" in ins:
+            k2 = _dequant_block(ins["k2p"][...], ins["k2s"][...], ins["k2z"][...], group, 2)
+            acc += ins["q2"][...] @ k2.T
+        out_ref[...] = acc
+
+    return pl.pallas_call(
+        kernel,
+        grid=(c // block_c,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((hq, block_c), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((hq, c), jnp.float32),
+        interpret=True,
+    )(*args)
+
+
+def quant_av(probs, vp, vs, vz, *, group: int, bits: int, block_c: int = BLOCK_C):
+    """probs [Hq, C] x packed per-token values [C, D*bits/8] -> [Hq, D].
+
+    Accumulates across C-blocks into the output tile (classic flash-style
+    running sum; the softmax normalizer is handled by the caller).
+    """
+    hq, c = probs.shape
+    d = vs.shape[-1] * group
+
+    def kernel(p_ref, vp_ref, vs_ref, vz_ref, out_ref):
+        i = pl.program_id(0)
+
+        @pl.when(i == 0)
+        def _():
+            out_ref[...] = jnp.zeros(out_ref.shape, jnp.float32)
+
+        q = _unpack_u4(vp_ref[...]) if bits == 4 else _unpack_u2(vp_ref[...])
+        qg = q.reshape(block_c, d // group, group).astype(jnp.float32)
+        v = (qg * vs_ref[...][..., None] + vz_ref[...][..., None]).reshape(block_c, d)
+        out_ref[...] += p_ref[...] @ v
+
+    return pl.pallas_call(
+        kernel,
+        grid=(c // block_c,),
+        in_specs=[
+            pl.BlockSpec((hq, block_c), lambda i: (0, i)),
+            pl.BlockSpec((block_c, d * bits // 8), lambda i: (i, 0)),
+            pl.BlockSpec((block_c, d // group), lambda i: (i, 0)),
+            pl.BlockSpec((block_c, d // group), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((hq, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((hq, d), jnp.float32),
+        interpret=True,
+    )(probs, vp, vs, vz)
+
+
+@functools.partial(jax.jit, static_argnames=("group",))
+def jit_mixed_qk_scores(q16, q4, q2, k16, k4p, k4s, k4z, k2p, k2s, k2z, group):
+    return mixed_qk_scores(q16, q4, q2, k16, k4p, k4s, k4z, k2p, k2s, k2z, group=group)

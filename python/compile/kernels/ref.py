@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Everything here is dense, unfused, and obviously-correct; pytest asserts the
+Pallas kernels in quant_attn.py match these to float tolerance.
+"""
+
+import jax.numpy as jnp
+
+from . import quant as Q
+
+
+def ref_mixed_scores(q16, q4, q2, k16, k4_packed, k4_scale, k4_zero,
+                     k2_packed, k2_scale, k2_zero, group: int):
+    """Pre-softmax scores of queries against a 3-tier quantized key cache.
+
+    q16/q4/q2: [Hq, n16/n4/n2] query channels pre-gathered per tier.
+    k16: [C, n16] full-precision tier.
+    k4_packed: [C, n4/2] u8; k4_scale/zero: [C/G, n4]. Likewise for k2.
+    Returns [Hq, C].
+    """
+    hq = q16.shape[0]
+    c = max(k16.shape[0], k4_packed.shape[0], k2_packed.shape[0])
+    s = jnp.zeros((hq, c), jnp.float32)
+    if k16.size:
+        s = s + q16 @ k16.T
+    if k4_packed.size:
+        k4 = Q.dequantize_key_channelwise(k4_packed, k4_scale, k4_zero, group, 4)
+        s = s + q4 @ k4.T
+    if k2_packed.size:
+        k2 = Q.dequantize_key_channelwise(k2_packed, k2_scale, k2_zero, group, 2)
+        s = s + q2 @ k2.T
+    return s
+
+
+def ref_quant_av(probs, v_packed, v_scale, v_zero, group: int, bits: int):
+    """probs: [Hq, C]; quantized per-token values -> [Hq, D]."""
+    v = Q.dequantize_value_tokenwise(v_packed, v_scale, v_zero, group, bits)
+    return probs @ v
+
+
+def ref_attention(q, k, v, mask=None, scale=None):
+    """Vanilla single-step attention. q: [Hq, D]; k/v: [T, D]; mask: [T]."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d)
+    s = (q @ k.T) * scale
+    if mask is not None:
+        s = jnp.where(mask[None, :], s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return p @ v

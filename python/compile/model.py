@@ -1,0 +1,311 @@
+"""L2: MiniReasoner — GQA + RoPE decoder transformer over a quantized cache.
+
+Three entry points, all lowered to HLO text by ``aot.py``:
+
+* ``forward_train``  — full-precision causal LM forward (training / PPL).
+* ``make_prefill``   — one prompt -> last-position logits + full-precision
+                       K/V (post-RoPE) + per-channel |Q| statistics (the
+                       I_d accumulator seed, Eq. 6).
+* ``make_decode``    — one batched token step over a 3-tier quantized key
+                       cache + 2/4-bit value cache + full-precision residual
+                       buffer (Fig. 4 of the paper), calling the L1 Pallas
+                       kernels for the packed portion.
+
+The quantized tiers live in a *rotated* channel space (``rot`` input):
+identity for MixKVQ/KIVI/KVQuant/SKVQ, a scaled Hadamard for RotateKV.
+Scores against the quantized window therefore use ``q @ rot``, while the
+residual buffer and the current token stay in the unrotated space.
+
+Input/output orderings are defined by ``decode_input_manifest`` /
+``prefill_input_manifest`` and serialized to artifacts/<name>.inputs.json,
+which the Rust runtime treats as the ABI.
+"""
+
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import CacheConfig, ModelConfig, QuantVariant
+from .kernels.quant_attn import mixed_qk_scores, quant_av
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def param_spec(mc: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Canonical (name, shape) ordering — the weights.bin ABI."""
+    spec = [("embed", (mc.vocab, mc.d_model))]
+    hq, hkv, dh = mc.n_q_heads, mc.n_kv_heads, mc.d_head
+    for l in range(mc.n_layers):
+        spec += [
+            (f"l{l}.ln1", (mc.d_model,)),
+            (f"l{l}.wq", (mc.d_model, hq * dh)),
+            (f"l{l}.wk", (mc.d_model, hkv * dh)),
+            (f"l{l}.wv", (mc.d_model, hkv * dh)),
+            (f"l{l}.wo", (hq * dh, mc.d_model)),
+            (f"l{l}.ln2", (mc.d_model,)),
+            (f"l{l}.w1", (mc.d_model, mc.d_ff)),
+            (f"l{l}.w2", (mc.d_ff, mc.d_model)),
+        ]
+    spec.append(("ln_f", (mc.d_model,)))
+    return spec
+
+
+def init_params(mc: ModelConfig, seed: int = 0) -> Dict[str, jax.Array]:
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, shape in param_spec(mc):
+        if name.endswith(("ln1", "ln2")) or name == "ln_f":
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            w = rng.normal(0.0, fan_in ** -0.5, size=shape).astype(np.float32)
+            params[name] = jnp.asarray(w)
+    return params
+
+
+def flatten_params(params: Dict[str, jax.Array], mc: ModelConfig) -> List[jax.Array]:
+    return [params[name] for name, _ in param_spec(mc)]
+
+
+def unflatten_params(flat: List[jax.Array], mc: ModelConfig) -> Dict[str, jax.Array]:
+    return {name: a for (name, _), a in zip(param_spec(mc), flat)}
+
+
+# ---------------------------------------------------------------------------
+# Primitive blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * w
+
+
+def rope_tables(positions, d_head: int, theta: float):
+    """cos/sin [..., d_head/2] for integer positions."""
+    half = d_head // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """Half-rotation convention: (x1, x2) -> (x1 c - x2 s, x2 c + x1 s)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def mlp(x, w1, w2):
+    return jax.nn.gelu(x @ w1) @ w2
+
+
+# ---------------------------------------------------------------------------
+# Full-precision causal forward (training / perplexity / prefill)
+# ---------------------------------------------------------------------------
+
+def forward_train(params, tokens, mc: ModelConfig):
+    """tokens: i32[B, T] -> logits f32[B, T, V]. Also returns (k, v, qabs)."""
+    b, t = tokens.shape
+    hq, hkv, dh, qpk = mc.n_q_heads, mc.n_kv_heads, mc.d_head, mc.q_per_kv
+    h = params["embed"][tokens]
+    pos = jnp.arange(t)
+    cos, sin = rope_tables(pos, dh, mc.rope_theta)          # [T, dh/2]
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    ks, vs, qabss = [], [], []
+    for l in range(mc.n_layers):
+        x = rmsnorm(h, params[f"l{l}.ln1"], mc.rmsnorm_eps)
+        q = (x @ params[f"l{l}.wq"]).reshape(b, t, hq, dh)
+        k = (x @ params[f"l{l}.wk"]).reshape(b, t, hkv, dh)
+        v = (x @ params[f"l{l}.wv"]).reshape(b, t, hkv, dh)
+        q = apply_rope(q, cos[None, :, None], sin[None, :, None])
+        k = apply_rope(k, cos[None, :, None], sin[None, :, None])
+        ks.append(k)
+        vs.append(v)
+        qabss.append(jnp.mean(jnp.abs(q.reshape(b, t, hkv, qpk, dh)), axis=3))
+        # GQA scores: [B, Hkv, qpk, T, T]
+        qg = q.reshape(b, t, hkv, qpk, dh).transpose(0, 2, 3, 1, 4)
+        kg = k.transpose(0, 2, 1, 3)
+        s = jnp.einsum("bhgtd,bhsd->bhgts", qg, kg) / jnp.sqrt(dh)
+        s = jnp.where(causal[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgts,bhsd->bhgtd", p, v.transpose(0, 2, 1, 3))
+        o = o.transpose(0, 3, 1, 2, 4).reshape(b, t, hq * dh)
+        h = h + o @ params[f"l{l}.wo"]
+        x = rmsnorm(h, params[f"l{l}.ln2"], mc.rmsnorm_eps)
+        h = h + mlp(x, params[f"l{l}.w1"], params[f"l{l}.w2"])
+    h = rmsnorm(h, params["ln_f"], mc.rmsnorm_eps)
+    logits = h @ params["embed"].T
+    aux = (jnp.stack(ks), jnp.stack(vs), jnp.stack(qabss))  # [L,B,T,Hkv,dh]x2, [L,B,T,Hkv,dh]
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def make_prefill(mc: ModelConfig, t: int):
+    """Returns fn(*flat_params, tokens i32[T], length i32) -> tuple."""
+    n_params = len(param_spec(mc))
+
+    def prefill(*args):
+        flat, tokens, length = list(args[:n_params]), args[n_params], args[n_params + 1]
+        params = unflatten_params(flat, mc)
+        logits, (k, v, qabs) = forward_train(params, tokens[None], mc)
+        valid = (jnp.arange(t) < length)[None, :, None, None]
+        qabs_mean = jnp.sum(jnp.where(valid, qabs, 0.0), axis=(1, 2)) / jnp.maximum(
+            length.astype(jnp.float32), 1.0
+        )                                                    # [L, Hkv, dh]
+        last = logits[0, jnp.maximum(length - 1, 0)]         # [V]
+        # k/v: [L, 1, T, Hkv, dh] -> [L, Hkv, T, dh]
+        kk = k[:, 0].transpose(0, 2, 1, 3)
+        vv = v[:, 0].transpose(0, 2, 1, 3)
+        return (last, kk, vv, qabs_mean)
+
+    return prefill
+
+
+def prefill_input_manifest(mc: ModelConfig, t: int) -> List[Tuple[str, Tuple[int, ...], str]]:
+    m = [(n, s, "f32") for n, s in param_spec(mc)]
+    m += [("tokens", (t,), "i32"), ("length", (), "i32")]
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Decode over the quantized cache
+# ---------------------------------------------------------------------------
+
+def decode_input_manifest(mc: ModelConfig, cc: CacheConfig, var: QuantVariant):
+    """(name, shape, dtype) in positional order — the rust<->HLO ABI."""
+    b, c, r, g = cc.decode_batch, cc.capacity, cc.residual, cc.group
+    hkv, dh = mc.n_kv_heads, mc.d_head
+    cg = c // g
+    m = [(n, s, "f32") for n, s in param_spec(mc)]
+    m += [
+        ("token", (b,), "i32"),
+        ("pos", (b,), "i32"),
+        ("qlen", (b,), "i32"),
+        ("rlen", (b,), "i32"),
+        ("rot", (dh, dh), "f32"),
+    ]
+    for l, (n16, n4, n2, vb) in enumerate(var.layers):
+        if n16:
+            m += [(f"l{l}.idx16", (b, hkv, n16), "i32"),
+                  (f"l{l}.k16", (b, hkv, c, n16), "f32")]
+        if n4:
+            m += [(f"l{l}.idx4", (b, hkv, n4), "i32"),
+                  (f"l{l}.k4p", (b, hkv, c, n4 // 2), "u8"),
+                  (f"l{l}.k4s", (b, hkv, cg, n4), "f32"),
+                  (f"l{l}.k4z", (b, hkv, cg, n4), "f32")]
+        if n2:
+            m += [(f"l{l}.idx2", (b, hkv, n2), "i32"),
+                  (f"l{l}.k2p", (b, hkv, c, n2 // 4), "u8"),
+                  (f"l{l}.k2s", (b, hkv, cg, n2), "f32"),
+                  (f"l{l}.k2z", (b, hkv, cg, n2), "f32")]
+        if vb == 16:
+            m += [(f"l{l}.vfull", (b, hkv, c, dh), "f32")]
+        else:
+            m += [(f"l{l}.vp", (b, hkv, c, dh * vb // 8), "u8"),
+                  (f"l{l}.vs", (b, hkv, c, dh // g), "f32"),
+                  (f"l{l}.vz", (b, hkv, c, dh // g), "f32")]
+        m += [(f"l{l}.kres", (b, hkv, r, dh), "f32"),
+              (f"l{l}.vres", (b, hkv, r, dh), "f32")]
+    return m
+
+
+def make_decode(mc: ModelConfig, cc: CacheConfig, var: QuantVariant):
+    """Batched single-token decode step. See decode_input_manifest for ABI.
+
+    Outputs: (logits [B,V], knew [L,B,Hkv,dh], vnew [L,B,Hkv,dh],
+              qabs [L,B,Hkv,dh]).
+    """
+    b, c, r, g = cc.decode_batch, cc.capacity, cc.residual, cc.group
+    hq, hkv, dh, qpk = mc.n_q_heads, mc.n_kv_heads, mc.d_head, mc.q_per_kv
+    n_params = len(param_spec(mc))
+    manifest = decode_input_manifest(mc, cc, var)
+    names = [n for n, _, _ in manifest]
+
+    def decode(*args):
+        params = unflatten_params(list(args[:n_params]), mc)
+        ins = dict(zip(names[n_params:], args[n_params:]))
+        token, pos, qlen, rlen, rot = (
+            ins["token"], ins["pos"], ins["qlen"], ins["rlen"], ins["rot"]
+        )
+        h = params["embed"][token]                            # [B, d]
+        cos, sin = rope_tables(pos, dh, mc.rope_theta)        # [B, dh/2]
+        scale = 1.0 / jnp.sqrt(dh)
+        qmask = (jnp.arange(c)[None] < qlen[:, None])         # [B, C]
+        rmask = (jnp.arange(r)[None] < rlen[:, None])         # [B, R]
+        knews, vnews, qabss = [], [], []
+
+        for l, (n16, n4, n2, vb) in enumerate(var.layers):
+            x = rmsnorm(h, params[f"l{l}.ln1"], mc.rmsnorm_eps)
+            q = (x @ params[f"l{l}.wq"]).reshape(b, hq, dh)
+            k = (x @ params[f"l{l}.wk"]).reshape(b, hkv, dh)
+            v = (x @ params[f"l{l}.wv"]).reshape(b, hkv, dh)
+            q = apply_rope(q, cos[:, None], sin[:, None])
+            k = apply_rope(k, cos[:, None], sin[:, None])
+            knews.append(k)
+            vnews.append(v)
+            qg = q.reshape(b, hkv, qpk, dh)
+            qabss.append(jnp.mean(jnp.abs(qg), axis=2))       # [B, Hkv, dh]
+            qrot = qg @ rot                                   # quantized-space q
+
+            # -- scores vs the packed quantized window (L1 kernels) --------
+            def gather_q(idx):                                 # [B,Hkv,n] -> [B,Hkv,qpk,n]
+                return jnp.take_along_axis(
+                    qrot, idx[:, :, None, :].repeat(qpk, axis=2), axis=-1
+                )
+
+            empty_q = jnp.zeros((b, hkv, qpk, 0), jnp.float32)
+            empty_p = jnp.zeros((b, hkv, c, 0), jnp.uint8)
+            empty_s = jnp.zeros((b, hkv, c // g, 0), jnp.float32)
+            q16 = gather_q(ins[f"l{l}.idx16"]) if n16 else empty_q
+            q4 = gather_q(ins[f"l{l}.idx4"]) if n4 else empty_q
+            q2 = gather_q(ins[f"l{l}.idx2"]) if n2 else empty_q
+            k16 = ins.get(f"l{l}.k16", jnp.zeros((b, hkv, c, 0), jnp.float32))
+            k4p = ins.get(f"l{l}.k4p", empty_p)
+            k4s = ins.get(f"l{l}.k4s", empty_s)
+            k4z = ins.get(f"l{l}.k4z", empty_s)
+            k2p = ins.get(f"l{l}.k2p", empty_p)
+            k2s = ins.get(f"l{l}.k2s", empty_s)
+            k2z = ins.get(f"l{l}.k2z", empty_s)
+
+            kernel = functools.partial(mixed_qk_scores, group=g)
+            sq = jax.vmap(jax.vmap(kernel))(
+                q16, q4, q2, k16, k4p, k4s, k4z, k2p, k2s, k2z
+            )                                                  # [B,Hkv,qpk,C]
+
+            # -- scores vs residual + self (full precision, unrotated) -----
+            sr = jnp.einsum("bhgd,bhrd->bhgr", qg, ins[f"l{l}.kres"])
+            ss = jnp.einsum("bhgd,bhd->bhg", qg, k)[..., None]
+            s_all = jnp.concatenate([sq, sr, ss], axis=-1) * scale
+            mask = jnp.concatenate(
+                [qmask, rmask, jnp.ones((b, 1), bool)], axis=-1
+            )[:, None, None, :]
+            s_all = jnp.where(mask, s_all, -1e30)
+            p = jax.nn.softmax(s_all, axis=-1)
+            pq, pr, pself = p[..., :c], p[..., c:c + r], p[..., c + r:]
+
+            # -- weighted values -------------------------------------------
+            if vb == 16:
+                oq = jnp.einsum("bhgc,bhcd->bhgd", pq, ins[f"l{l}.vfull"])
+            else:
+                avk = functools.partial(quant_av, group=g, bits=vb)
+                oq = jax.vmap(jax.vmap(avk))(
+                    pq, ins[f"l{l}.vp"], ins[f"l{l}.vs"], ins[f"l{l}.vz"]
+                )
+            orr = jnp.einsum("bhgr,bhrd->bhgd", pr, ins[f"l{l}.vres"])
+            os = pself * v[:, :, None, :]
+            o = (oq + orr + os).reshape(b, hq * dh)
+            h = h + o @ params[f"l{l}.wo"]
+            x = rmsnorm(h, params[f"l{l}.ln2"], mc.rmsnorm_eps)
+            h = h + mlp(x, params[f"l{l}.w1"], params[f"l{l}.w2"])
+
+        h = rmsnorm(h, params["ln_f"], mc.rmsnorm_eps)
+        logits = h @ params["embed"].T
+        return (logits, jnp.stack(knews), jnp.stack(vnews), jnp.stack(qabss))
+
+    return decode

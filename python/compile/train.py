@@ -1,0 +1,223 @@
+"""Train MiniReasoner on the synthetic corpus (build-time only).
+
+Hand-rolled Adam (optax is not in the image). The loss curve is written to
+artifacts/train_log.json — this is the training record referenced by
+EXPERIMENTS.md. Run directly for a standalone training:
+
+    cd python && python -m compile.train --steps 800 --out ../artifacts
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .config import ModelConfig
+from .model import flatten_params, forward_train, init_params, param_spec
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 800
+    batch: int = 16
+    seq_len: int = 96
+    lr: float = 3e-3
+    warmup: int = 50
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    seed: int = 0
+    log_every: int = 25
+
+
+def loss_fn(params, tokens, mask, mc: ModelConfig):
+    logits, _ = forward_train(params, tokens, mc)
+    tgt = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    m = mask[:, : tgt.shape[1]]
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("mc", "tc"))
+def train_step(params, m_state, v_state, step, tokens, mask, mc: ModelConfig, tc: TrainConfig):
+    loss, grads = jax.value_and_grad(loss_fn)(params, tokens, mask, mc)
+    warm = jnp.minimum(1.0, (step + 1) / tc.warmup)
+    decay = 0.5 * (1 + jnp.cos(jnp.pi * step / tc.steps))
+    lr = tc.lr * warm * (0.1 + 0.9 * decay)
+
+    m2 = jax.tree.map(lambda m, g: tc.beta1 * m + (1 - tc.beta1) * g, m_state, grads)
+    v2 = jax.tree.map(lambda v, g: tc.beta2 * v + (1 - tc.beta2) * g * g, v_state, grads)
+    bc1 = 1 - tc.beta1 ** (step + 1)
+    bc2 = 1 - tc.beta2 ** (step + 1)
+    params2 = jax.tree.map(
+        lambda p, m, v: p
+        - lr * ((m / bc1) / (jnp.sqrt(v / bc2) + tc.eps) + tc.weight_decay * p),
+        params,
+        m2,
+        v2,
+    )
+    return params2, m2, v2, loss
+
+
+def greedy_eval(params, mc: ModelConfig, seed: int = 1234, n: int = 32):
+    """Teacher-forced answer-token accuracy per task family (full precision)."""
+    rng = np.random.default_rng(seed)
+    gens = {
+        "chain": lambda: corpus.gen_chain(rng, steps=6),
+        "passkey": lambda: corpus.gen_passkey(rng, context_len=64),
+        "kvlookup": lambda: corpus.gen_kvlookup(rng, n_pairs=8),
+        "copy": lambda: corpus.gen_copy(rng, n=8),
+    }
+    fwd = jax.jit(lambda p, t: forward_train(p, t, mc)[0])
+    acc = {}
+    for name, gen in gens.items():
+        hit = tot = 0
+        for _ in range(n):
+            toks, answers = gen()
+            x = jnp.asarray(np.array(toks, np.int32)[None])
+            logits = np.asarray(fwd(params, x))[0]
+            for pos, want in answers:
+                tot += 1
+                hit += int(np.argmax(logits[pos - 1]) == want)
+        acc[name] = hit / max(tot, 1)
+    return acc
+
+
+def save_weights(params, mc: ModelConfig, path: str):
+    flat = flatten_params(params, mc)
+    buf = b"".join(np.asarray(a, np.float32).tobytes() for a in flat)
+    with open(path, "wb") as f:
+        f.write(buf)
+    return len(buf)
+
+
+def train(mc: ModelConfig, tc: TrainConfig, out_dir: str, verbose: bool = True):
+    rng = np.random.default_rng(tc.seed)
+    params = init_params(mc, seed=tc.seed)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    m_state, v_state = zeros, jax.tree.map(jnp.zeros_like, params)
+    log = []
+    t0 = time.time()
+    for step in range(tc.steps):
+        x, mask = corpus.make_batch(rng, tc.batch, tc.seq_len)
+        params, m_state, v_state, loss = train_step(
+            params, m_state, v_state, step, jnp.asarray(x), jnp.asarray(mask), mc, tc
+        )
+        if step % tc.log_every == 0 or step == tc.steps - 1:
+            l = float(loss)
+            log.append({"step": step, "loss": l, "elapsed_s": round(time.time() - t0, 1)})
+            if verbose:
+                print(f"step {step:5d}  loss {l:.4f}  ({time.time()-t0:.0f}s)", flush=True)
+    acc = greedy_eval(params, mc)
+    if verbose:
+        print("final task accuracy (BF16, teacher-forced):", acc)
+    os.makedirs(out_dir, exist_ok=True)
+    nbytes = save_weights(params, mc, os.path.join(out_dir, "weights.bin"))
+    with open(os.path.join(out_dir, "train_log.json"), "w") as f:
+        json.dump(
+            {
+                "config": tc.__dict__,
+                "n_params": int(sum(int(np.prod(s)) for _, s in param_spec(mc))),
+                "weights_bytes": nbytes,
+                "loss_curve": log,
+                "final_accuracy": acc,
+            },
+            f,
+            indent=2,
+        )
+    return params, acc
+
+
+def long_context_batch(rng: np.random.Generator, batch: int, seq_len: int):
+    """Stage-2 curriculum: long passkeys / deep chains / many-pair lookups,
+    so RoPE sees positions up to seq_len (evals go to ~460)."""
+    x = np.zeros((batch, seq_len), dtype=np.int32)
+    mask = np.zeros((batch, seq_len), dtype=np.float32)
+    for b in range(batch):
+        r = rng.random()
+        if r < 0.45:
+            toks, ans = corpus.gen_passkey(rng, context_len=int(rng.integers(48, seq_len - 8)))
+        elif r < 0.75:
+            toks, ans = corpus.gen_kvlookup(rng, n_pairs=int(rng.integers(4, 25)))
+        elif r < 0.92:
+            toks, ans = corpus.gen_chain(rng, steps=int(rng.integers(6, min(48, (seq_len - 4) // 5))))
+        else:
+            toks, ans = corpus.gen_copy(rng, n=int(rng.integers(4, 17)))
+        toks = toks[:seq_len]
+        n = len(toks)
+        x[b, :n] = toks
+        mask[b, : max(0, n - 1)] = 1.0
+        for pos, _ in ans:
+            if 0 < pos < seq_len:
+                mask[b, pos - 1] = corpus.ANSWER_WEIGHT
+    return x, mask
+
+
+def finetune_long(params, mc: ModelConfig, out_dir: str, steps: int = 1600,
+                  seq_len: int = 320, batch: int = 4, lr: float = 1e-3, verbose=True):
+    """Stage 2: extend positional coverage + sharpen retrieval."""
+    tc = TrainConfig(steps=steps, batch=batch, seq_len=seq_len, lr=lr, warmup=50)
+    rng = np.random.default_rng(1)
+    m_state = jax.tree.map(jnp.zeros_like, params)
+    v_state = jax.tree.map(jnp.zeros_like, params)
+    t0 = time.time()
+    log = []
+    for step in range(steps):
+        x, mask = long_context_batch(rng, batch, seq_len)
+        params, m_state, v_state, loss = train_step(
+            params, m_state, v_state, step, jnp.asarray(x), jnp.asarray(mask), mc, tc
+        )
+        if step % 200 == 0 or step == steps - 1:
+            l = float(loss)
+            log.append({"step": step, "loss": l})
+            if verbose:
+                print(f"[stage2] step {step:5d}  loss {l:.4f}  ({time.time()-t0:.0f}s)", flush=True)
+    acc = greedy_eval(params, mc)
+    if verbose:
+        print("[stage2] final task accuracy:", acc)
+    save_weights(params, mc, os.path.join(out_dir, "weights.bin"))
+    with open(os.path.join(out_dir, "finetune_log.json"), "w") as f:
+        json.dump({"steps": steps, "seq_len": seq_len, "loss_curve": log,
+                   "final_accuracy": acc}, f, indent=2)
+    return params, acc
+
+
+def load_params(path: str, mc: ModelConfig):
+    raw = np.fromfile(path, dtype=np.float32)
+    params = {}
+    off = 0
+    for name, shape in param_spec(mc):
+        n = int(np.prod(shape))
+        params[name] = jnp.asarray(raw[off:off + n].reshape(shape))
+        off += n
+    return params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=800)
+    ap.add_argument("--stage2-steps", type=int, default=1600)
+    ap.add_argument("--stage2-only", action="store_true")
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    mc = ModelConfig()
+    if args.stage2_only:
+        params = load_params(os.path.join(args.out, "weights.bin"), mc)
+    else:
+        tc = TrainConfig(steps=args.steps)
+        params, _ = train(mc, tc, args.out)
+    if args.stage2_steps > 0:
+        finetune_long(params, mc, args.out, steps=args.stage2_steps)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Corpus generator invariants (hypothesis) — answers must be consistent
+with the generated context, mirroring rust/src/harness/workloads.rs tests."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import corpus
+from compile.config import (
+    ARROW, BOS, EOS, EQ, KEY, NUM_BASE, NUM_COUNT, QMARK, SEP, VAL, VOCAB,
+)
+
+
+@given(seed=st.integers(0, 2**32 - 1), steps=st.integers(1, 20))
+@settings(max_examples=50, deadline=None)
+def test_chain_answers_are_correct_arithmetic(seed, steps):
+    rng = np.random.default_rng(seed)
+    toks, answers = corpus.gen_chain(rng, steps)
+    assert len(answers) == steps
+    assert toks[0] == BOS and toks[-1] == EOS
+    for pos, tok in answers:
+        assert toks[pos] == tok
+        assert toks[pos - 1] == EQ
+    # recompute each step from the surface form
+    prev = toks[1] - NUM_BASE
+    i = 2
+    for pos, tok in answers:
+        op, b = toks[i], toks[i + 1] - NUM_BASE
+        want = (prev + b) % NUM_COUNT if op == corpus.OP_ADD else (prev - b) % NUM_COUNT
+        assert tok - NUM_BASE == want
+        prev = want
+        i = pos + 2  # skip result + SEP
+
+
+@given(seed=st.integers(0, 2**32 - 1), ctx=st.integers(24, 300))
+@settings(max_examples=50, deadline=None)
+def test_passkey_answer_matches_needle(seed, ctx):
+    rng = np.random.default_rng(seed)
+    toks, answers = corpus.gen_passkey(rng, ctx)
+    v = toks.index(VAL)
+    needle_vals = toks[v + 1:v + 3]
+    assert [t for _, t in answers] == needle_vals
+    q = toks.index(QMARK)
+    k = toks.index(KEY)
+    assert toks[q + 1:q + 3] == toks[k + 1:k + 3], "query key == needle key"
+
+
+@given(seed=st.integers(0, 2**32 - 1), n=st.integers(2, 30))
+@settings(max_examples=50, deadline=None)
+def test_kvlookup_answer_is_queried_pair(seed, n):
+    rng = np.random.default_rng(seed)
+    toks, answers = corpus.gen_kvlookup(rng, n)
+    q = toks.index(QMARK)
+    qkey = toks[q + 1]
+    # scan pairs
+    pairs = {}
+    i = 1
+    while toks[i] == KEY:
+        pairs[toks[i + 1]] = toks[i + 3]
+        i += 5
+    assert answers[0][1] == pairs[qkey]
+    assert len(pairs) == n, "keys must be distinct"
+
+
+@given(seed=st.integers(0, 2**32 - 1), n=st.integers(1, 20))
+@settings(max_examples=30, deadline=None)
+def test_copy_answers_echo_sequence(seed, n):
+    rng = np.random.default_rng(seed)
+    toks, answers = corpus.gen_copy(rng, n)
+    arrow = toks.index(ARROW)
+    assert toks[2:arrow] == [t for _, t in answers]
+
+
+@given(seed=st.integers(0, 2**32 - 1))
+@settings(max_examples=30, deadline=None)
+def test_all_tokens_in_vocab(seed):
+    rng = np.random.default_rng(seed)
+    toks, _ = corpus.sample_example(rng, 96)
+    assert all(0 <= t < VOCAB for t in toks)
+
+
+def test_batch_shapes_and_answer_weighting():
+    rng = np.random.default_rng(0)
+    x, mask = corpus.make_batch(rng, batch=4, seq_len=64)
+    assert x.shape == (4, 64) and mask.shape == (4, 64)
+    assert mask.max() == corpus.ANSWER_WEIGHT
+    # no loss weight on/after padding
+    for b in range(4):
+        n = int((x[b] != 0).sum()) + int(x[b, 0] == 0)
+        assert mask[b, max(0, n):].sum() == 0 or n >= 63

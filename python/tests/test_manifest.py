@@ -1,0 +1,89 @@
+"""ABI manifest consistency — the python↔rust contract.
+
+The rust runtime builds positional args purely from *.inputs.json; these
+tests pin the manifest's structure so a model.py refactor cannot silently
+break the serving path.
+"""
+
+import numpy as np
+import pytest
+
+from compile.config import (
+    CacheConfig, ModelConfig, default_variants, meta_dict, validate_variant,
+)
+from compile.model import (
+    decode_input_manifest, param_spec, prefill_input_manifest,
+)
+
+MC = ModelConfig()
+CC = CacheConfig()
+VARIANTS = default_variants(MC)
+
+
+def test_all_default_variants_validate():
+    for v in VARIANTS:
+        validate_variant(v, MC, CC)
+
+
+def test_param_spec_leads_every_manifest():
+    spec = param_spec(MC)
+    for v in VARIANTS:
+        m = decode_input_manifest(MC, CC, v)
+        for (pname, pshape), (name, shape, dt) in zip(spec, m):
+            assert name == pname
+            assert tuple(pshape) == tuple(shape)
+            assert dt == "f32"
+    pm = prefill_input_manifest(MC, 128)
+    assert [n for n, _, _ in pm[: len(spec)]] == [n for n, _ in spec]
+    assert pm[-2][0] == "tokens" and pm[-1][0] == "length"
+
+
+@pytest.mark.parametrize("vname", [v.name for v in VARIANTS])
+def test_decode_manifest_shapes_are_consistent(vname):
+    v = next(x for x in VARIANTS if x.name == vname)
+    m = decode_input_manifest(MC, CC, v)
+    b, c, r, g = CC.decode_batch, CC.capacity, CC.residual, CC.group
+    hkv, dh = MC.n_kv_heads, MC.d_head
+    by_name = {n: (shape, dt) for n, shape, dt in m}
+    for l, (n16, n4, n2, vb) in enumerate(v.layers):
+        if n16:
+            assert by_name[f"l{l}.k16"][0] == (b, hkv, c, n16)
+            assert by_name[f"l{l}.idx16"][1] == "i32"
+        else:
+            assert f"l{l}.k16" not in by_name
+        if n4:
+            assert by_name[f"l{l}.k4p"] == ((b, hkv, c, n4 // 2), "u8")
+            assert by_name[f"l{l}.k4s"][0] == (b, hkv, c // g, n4)
+        if n2:
+            assert by_name[f"l{l}.k2p"] == ((b, hkv, c, n2 // 4), "u8")
+        if vb == 16:
+            assert by_name[f"l{l}.vfull"][0] == (b, hkv, c, dh)
+            assert f"l{l}.vp" not in by_name
+        else:
+            assert by_name[f"l{l}.vp"] == ((b, hkv, c, dh * vb // 8), "u8")
+            assert by_name[f"l{l}.vs"][0] == (b, hkv, c, dh // g)
+        assert by_name[f"l{l}.kres"][0] == (b, hkv, r, dh)
+        assert by_name[f"l{l}.vres"][0] == (b, hkv, r, dh)
+    # tier channel counts partition d_head
+    if v.layers[0][0] and v.layers[0][1] and v.layers[0][2]:
+        n16, n4, n2, _ = v.layers[0]
+        assert n16 + n4 + n2 == dh
+
+
+def test_meta_dict_roundtrips_key_bits():
+    meta = meta_dict(MC, CC, VARIANTS)
+    by_name = {v["name"]: v for v in meta["variants"]}
+    assert by_name["kv2"]["key_bits"] == 2.0
+    assert by_name["mix30"]["key_bits"] == 3.0
+    assert by_name["mix225"]["key_bits"] == 2.25
+    assert abs(by_name["kvtuner"]["key_bits"] - 3.0) < 1e-9
+    assert meta["cache"]["capacity"] % meta["cache"]["group"] == 0
+
+
+def test_weights_bin_matches_param_spec_size():
+    import os
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "weights.bin")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    total = sum(int(np.prod(s)) for _, s in param_spec(MC))
+    assert os.path.getsize(path) == 4 * total

@@ -1,0 +1,163 @@
+"""L2 model tests: decode-over-cache consistency with the training forward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.config import CacheConfig, ModelConfig, default_variants
+from compile.kernels import quant as Q
+
+MC = ModelConfig()
+CC = CacheConfig()
+VARIANTS = {v.name: v for v in default_variants(MC)}
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(MC, seed=7)
+
+
+def residual_only_inputs(params, k, v, t, token, var):
+    """All context in the residual buffer; quantized window empty."""
+    b, c, r, hkv, dh = CC.decode_batch, CC.capacity, CC.residual, MC.n_kv_heads, MC.d_head
+    ins = {
+        "token": jnp.zeros((b,), jnp.int32).at[0].set(token),
+        "pos": jnp.zeros((b,), jnp.int32).at[0].set(t),
+        "qlen": jnp.zeros((b,), jnp.int32),
+        "rlen": jnp.zeros((b,), jnp.int32).at[0].set(t),
+        "rot": jnp.eye(dh),
+    }
+    for l in range(MC.n_layers):
+        n16, n4, n2, vb = var.layers[l]
+        if n16:
+            ins[f"l{l}.idx16"] = jnp.tile(jnp.arange(n16, dtype=jnp.int32), (b, hkv, 1))
+            ins[f"l{l}.k16"] = jnp.zeros((b, hkv, c, n16))
+        if n4:
+            ins[f"l{l}.idx4"] = jnp.tile(jnp.arange(n16, n16 + n4, dtype=jnp.int32), (b, hkv, 1))
+            ins[f"l{l}.k4p"] = jnp.zeros((b, hkv, c, n4 // 2), jnp.uint8)
+            ins[f"l{l}.k4s"] = jnp.full((b, hkv, c // CC.group, n4), 1e-8)
+            ins[f"l{l}.k4z"] = jnp.zeros((b, hkv, c // CC.group, n4))
+        if n2:
+            ins[f"l{l}.idx2"] = jnp.tile(jnp.arange(n16 + n4, dh, dtype=jnp.int32), (b, hkv, 1))
+            ins[f"l{l}.k2p"] = jnp.zeros((b, hkv, c, n2 // 4), jnp.uint8)
+            ins[f"l{l}.k2s"] = jnp.full((b, hkv, c // CC.group, n2), 1e-8)
+            ins[f"l{l}.k2z"] = jnp.zeros((b, hkv, c // CC.group, n2))
+        if vb == 16:
+            ins[f"l{l}.vfull"] = jnp.zeros((b, hkv, c, dh))
+        else:
+            ins[f"l{l}.vp"] = jnp.zeros((b, hkv, c, dh * vb // 8), jnp.uint8)
+            ins[f"l{l}.vs"] = jnp.full((b, hkv, c, dh // CC.group), 1e-8)
+            ins[f"l{l}.vz"] = jnp.zeros((b, hkv, c, dh // CC.group))
+        kres = jnp.zeros((b, hkv, r, dh)).at[0, :, :t].set(k[l, 0, :t].transpose(1, 0, 2))
+        vres = jnp.zeros((b, hkv, r, dh)).at[0, :, :t].set(v[l, 0, :t].transpose(1, 0, 2))
+        ins[f"l{l}.kres"] = kres
+        ins[f"l{l}.vres"] = vres
+    return ins
+
+
+def run_decode(params, var, ins):
+    manifest = M.decode_input_manifest(MC, CC, var)
+    names = [n for n, _, _ in manifest]
+    flat = M.flatten_params(params, MC)
+    args = flat + [ins[n] for n in names[len(flat):]]
+    return jax.jit(M.make_decode(MC, CC, var))(*args)
+
+
+@pytest.mark.parametrize("vname", ["bf16", "kv4", "mix30"])
+def test_decode_residual_only_matches_forward(params, vname):
+    """With the whole context in the residual buffer, every variant must
+    reproduce the full-precision forward exactly (no quantization touches
+    the residual path)."""
+    rng = np.random.default_rng(0)
+    t = 24
+    toks = jnp.asarray(rng.integers(1, MC.vocab, size=(1, t + 1)), jnp.int32)
+    logits_full, (k, v, _) = M.forward_train(params, toks, MC)
+    ins = residual_only_inputs(params, k, v, t, int(toks[0, t]), VARIANTS[vname])
+    out = run_decode(params, VARIANTS[vname], ins)
+    np.testing.assert_allclose(
+        np.asarray(out[0][0]), np.asarray(logits_full[0, t]), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_decode_emits_new_kv_matching_forward(params):
+    rng = np.random.default_rng(1)
+    t = 12
+    toks = jnp.asarray(rng.integers(1, MC.vocab, size=(1, t + 1)), jnp.int32)
+    _, (k, v, _) = M.forward_train(params, toks, MC)
+    ins = residual_only_inputs(params, k, v, t, int(toks[0, t]), VARIANTS["bf16"])
+    _, knew, vnew, _ = run_decode(params, VARIANTS["bf16"], ins)
+    # knew [L, B, Hkv, dh] must equal the forward's K at position t
+    np.testing.assert_allclose(
+        np.asarray(knew[:, 0]), np.asarray(k[:, 0, t]), rtol=1e-4, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(vnew[:, 0]), np.asarray(v[:, 0, t]), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_qabs_is_mean_abs_query(params):
+    rng = np.random.default_rng(2)
+    t = 8
+    toks = jnp.asarray(rng.integers(1, MC.vocab, size=(1, t + 1)), jnp.int32)
+    _, (k, v, qabs_tr) = M.forward_train(params, toks, MC)
+    ins = residual_only_inputs(params, k, v, t, int(toks[0, t]), VARIANTS["bf16"])
+    _, _, _, qabs = run_decode(params, VARIANTS["bf16"], ins)
+    np.testing.assert_allclose(
+        np.asarray(qabs[:, 0]), np.asarray(qabs_tr[:, 0, t]), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_prefill_matches_forward(params):
+    rng = np.random.default_rng(3)
+    t_bucket, n = 128, 50
+    toks = np.zeros(t_bucket, np.int32)
+    toks[:n] = rng.integers(1, MC.vocab, size=n)
+    prefill = jax.jit(M.make_prefill(MC, t_bucket))
+    flat = M.flatten_params(params, MC)
+    last, k, v, qabs = prefill(*flat, jnp.asarray(toks), jnp.asarray(n, jnp.int32))
+    logits_full, (k2, v2, _) = M.forward_train(params, jnp.asarray(toks[None]), MC)
+    np.testing.assert_allclose(
+        np.asarray(last), np.asarray(logits_full[0, n - 1]), rtol=1e-4, atol=1e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(k[:, :, :n]),
+        np.asarray(k2[:, 0, :n].transpose(0, 2, 1, 3)),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+def test_rotation_invariance_of_exact_scores(params):
+    """Hadamard rotation must not change exact (unquantized) scores:
+    (q R)·(k R) = q·k for orthonormal R — the RotateKV soundness condition."""
+    dh = MC.d_head
+    h = np.array([[1.0]])
+    while h.shape[0] < dh:
+        h = np.block([[h, h], [h, -h]])
+    rot = jnp.asarray((h / np.sqrt(dh)).astype(np.float32))
+    rng = np.random.default_rng(4)
+    q = jnp.asarray(rng.normal(size=(4, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(64, dh)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray((q @ rot) @ (k @ rot).T), np.asarray(q @ k.T), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_variant_bits_accounting():
+    v = VARIANTS["mix30"]
+    # (2*16 + 2*4 + 28*2) / 32 = 3.0
+    assert abs(v.key_bits(MC.d_head) - 3.0) < 1e-9
+    assert abs(VARIANTS["mix225"].key_bits(MC.d_head) - 2.25) < 1e-9
+    assert abs(VARIANTS["kv2"].avg_bits(MC.d_head) - 2.0) < 1e-9
+
+
+def test_idle_batch_slots_are_safe(params):
+    """Slots with qlen=rlen=0 must produce finite logits (self-attention only)."""
+    rng = np.random.default_rng(5)
+    t = 4
+    toks = jnp.asarray(rng.integers(1, MC.vocab, size=(1, t + 1)), jnp.int32)
+    _, (k, v, _) = M.forward_train(params, toks, MC)
+    ins = residual_only_inputs(params, k, v, t, int(toks[0, t]), VARIANTS["bf16"])
+    out = run_decode(params, VARIANTS["bf16"], ins)
+    assert bool(jnp.all(jnp.isfinite(out[0])))  # includes idle slots 1..7

@@ -1,0 +1,98 @@
+"""Quantization primitive tests: packing roundtrips + the Appendix-A bound."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant as Q
+
+
+def rand(shape, seed=0, lo=-3.0, hi=3.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Packing
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 64), st.integers(0, 2**32 - 1))
+@settings(max_examples=40, deadline=None)
+def test_pack_u4_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.integers(0, 16, size=(5, 2 * n)).astype(np.uint8))
+    assert jnp.array_equal(Q.unpack_u4(Q.pack_u4(q)), q)
+
+
+@given(st.integers(1, 32), st.integers(0, 2**32 - 1))
+@settings(max_examples=40, deadline=None)
+def test_pack_u2_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.integers(0, 4, size=(3, 4 * n)).astype(np.uint8))
+    assert jnp.array_equal(Q.unpack_u2(Q.pack_u2(q)), q)
+
+
+def test_pack_u4_nibble_order():
+    # byte j = channel 2j in the low nibble — the rust ABI (packing.rs)
+    q = jnp.asarray(np.array([[0x3, 0xA]], np.uint8))
+    assert int(Q.pack_u4(q)[0, 0]) == 0x3 | (0xA << 4)
+
+
+def test_pack_u2_crumb_order():
+    q = jnp.asarray(np.array([[1, 2, 3, 0]], np.uint8))
+    assert int(Q.pack_u2(q)[0, 0]) == 1 | (2 << 2) | (3 << 4)
+
+
+# ---------------------------------------------------------------------------
+# Error bound |x - x~| <= s/2 (Appendix A)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [2, 4])
+@given(seed=st.integers(0, 2**32 - 1), scale=st.floats(0.01, 100.0))
+@settings(max_examples=30, deadline=None)
+def test_key_quant_error_bound(bits, seed, scale):
+    rng = np.random.default_rng(seed)
+    k = jnp.asarray((rng.normal(size=(64, 8)) * scale).astype(np.float32))
+    p, s, z = Q.quantize_key_channelwise(k, group=32, bits=bits)
+    kd = Q.dequantize_key_channelwise(p, s, z, group=32, bits=bits)
+    bound = jnp.repeat(s, 32, axis=0) / 2
+    assert bool(jnp.all(jnp.abs(kd - k) <= bound * (1 + 1e-5) + 1e-6))
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+def test_value_quant_error_bound(bits):
+    v = rand((96, 32), seed=3, lo=-10, hi=10)
+    p, s, z = Q.quantize_value_tokenwise(v, group=32, bits=bits)
+    vd = Q.dequantize_value_tokenwise(p, s, z, group=32, bits=bits)
+    bound = jnp.repeat(s, 32, axis=-1).reshape(v.shape) / 2
+    assert bool(jnp.all(jnp.abs(vd - v) <= bound * (1 + 1e-5) + 1e-6))
+
+
+def test_outlier_inflates_scale():
+    """A single outlier inflates s and degrades *other* elements (Sec. 3.2)."""
+    k = np.zeros((32, 4), np.float32)  # 4 channels (u2 packs 4 per byte)
+    for ch in range(4):
+        k[:, ch] = np.linspace(-1, 1, 32)
+    k[7, 1] = 100.0  # outlier channel
+    p, s, z = Q.quantize_key_channelwise(jnp.asarray(k), group=32, bits=2)
+    kd = np.asarray(Q.dequantize_key_channelwise(p, s, z, group=32, bits=2))
+    err_clean = np.abs(kd[:, 0] - k[:, 0]).mean()
+    mask = np.arange(32) != 7
+    err_outlier_chan = np.abs(kd[mask, 1] - k[mask, 1]).mean()
+    assert err_outlier_chan > 5 * err_clean
+
+
+def test_constant_channel_zero_error():
+    k = jnp.ones((32, 4)) * 2.5
+    p, s, z = Q.quantize_key_channelwise(k, group=32, bits=2)
+    kd = Q.dequantize_key_channelwise(p, s, z, group=32, bits=2)
+    assert float(jnp.max(jnp.abs(kd - k))) < 1e-5
+
+
+@pytest.mark.parametrize("bits,levels", [(2, 4), (4, 16)])
+def test_codes_in_range(bits, levels):
+    k = rand((64, 8), seed=9)
+    p, _, _ = Q.quantize_key_channelwise(k, group=32, bits=bits)
+    codes = np.asarray(Q.unpack(p, bits))
+    assert codes.max() < levels

@@ -1,0 +1,59 @@
+//! End-to-end engine latency: prefill (both buckets) and the batched decode
+//! step per variant — the L3 §Perf headline numbers.
+//!
+//!     make artifacts && cargo bench --bench engine_step
+
+use mixkvq::coordinator::engine::Engine;
+use mixkvq::harness::workloads;
+use mixkvq::kvcache::cache::RequestCache;
+use mixkvq::quant::methods::Method;
+use mixkvq::util::bench::bench;
+use mixkvq::util::rng::Pcg32;
+
+fn main() {
+    let artifacts = std::path::PathBuf::from(
+        std::env::var("MIXKVQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    if !artifacts.join("meta.json").exists() {
+        eprintln!("SKIP engine_step: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    let mut results = Vec::new();
+    let mut rng = Pcg32::seeded(0);
+
+    for method in [Method::bf16(), Method::mixkvq("mix225"), Method::mixkvq("mix30"), Method::kivi("kv2")] {
+        let mut engine = Engine::new(&artifacts, method.clone(), 32).unwrap();
+        let b = engine.meta.cache.decode_batch;
+
+        // prefill latency (short + long bucket)
+        for ctx_len in [100usize, 450] {
+            let task = workloads::gen_passkey(&mut rng, ctx_len);
+            if method.name == "bf16" || ctx_len == 450 {
+                let name = format!("prefill t={} ({})", ctx_len, method.name);
+                results.push(bench(&name, 30, 2000.0, || {
+                    std::hint::black_box(engine.prefill(&task.prompt).unwrap());
+                }));
+            }
+        }
+
+        // full-batch decode step (8 live slots, quantized windows populated)
+        let task = workloads::gen_passkey(&mut rng, 450);
+        let pre = engine.prefill(&task.prompt).unwrap();
+        let mut caches: Vec<RequestCache> =
+            (0..b).map(|_| engine.admit_prefill(&pre).unwrap()).collect();
+        let name = format!("decode step B={b} qlen={} ({})", caches[0].qlen, method.name);
+        results.push(bench(&name, 100, 3000.0, || {
+            let mut slots: Vec<Option<(&mut RequestCache, i32)>> =
+                caches.iter_mut().map(|c| Some((c, 17i32))).collect();
+            std::hint::black_box(engine.decode_step(&mut slots).unwrap());
+            // caches keep growing; reset residuals by rebuilding when near full
+        }));
+        // rebuild caches if residuals filled during the bench
+        caches.clear();
+    }
+
+    println!("\n== engine_step ==");
+    for r in &results {
+        println!("{}", r.report());
+    }
+}

@@ -1,0 +1,27 @@
+//! `cargo bench --bench fig7_pareto` — regenerates: Fig. 7 Pareto frontier.
+//! Set MIXKVQ_QUICK=1 for a reduced-size run.
+
+use mixkvq::harness::experiments::{run, ExpCtx};
+
+fn main() {
+    let artifacts = std::path::PathBuf::from(
+        std::env::var("MIXKVQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    let quick = std::env::var("MIXKVQ_QUICK").is_ok();
+    if !artifacts.join("meta.json").exists() {
+        eprintln!("SKIP fig7_pareto: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    let ctx = ExpCtx::new(&artifacts, quick);
+    let t0 = std::time::Instant::now();
+    match run(&ctx, "fig7") {
+        Ok(table) => {
+            println!("{}", table.print());
+            println!("[fig7_pareto] regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => {
+            eprintln!("[fig7_pareto] FAILED: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

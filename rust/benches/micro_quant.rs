@@ -1,0 +1,69 @@
+//! Micro-benchmarks of the quantization hot paths (L3 §Perf targets):
+//! pack/unpack, per-channel quantization, window build, dequant views.
+//!
+//!     cargo bench --bench micro_quant
+
+use mixkvq::quant::asym;
+use mixkvq::quant::packing;
+use mixkvq::quant::salience::Ordering;
+use mixkvq::quant::window::{plan_order, quantize_key_window, quantize_value_window, KeyQuantOpts, TierSpec};
+use mixkvq::util::bench::bench;
+use mixkvq::util::rng::Pcg32;
+
+fn main() {
+    let mut rng = Pcg32::seeded(0);
+    let (t, d, g) = (128usize, 32usize, 32usize);
+    let k: Vec<f32> = (0..t * d).map(|_| rng.normal()).collect();
+    let v: Vec<f32> = (0..t * d).map(|_| rng.normal()).collect();
+    let imp: Vec<f32> = (0..d).map(|_| rng.f32() + 0.1).collect();
+    let spec = TierSpec { n16: 2, n4: 2, n2: 28, v_bits: 2 };
+    let opts = KeyQuantOpts { clip: 1.0, global_scales: false, group: g };
+
+    let mut results = Vec::new();
+
+    let codes: Vec<u8> = (0..t * d).map(|_| rng.below(4) as u8).collect();
+    results.push(bench("pack_u2 4096 codes", 2000, 300.0, || {
+        let mut out = Vec::with_capacity(t * d / 4);
+        packing::pack_u2(std::hint::black_box(&codes), &mut out);
+        std::hint::black_box(out);
+    }));
+
+    let mut packed = Vec::new();
+    packing::pack_u2(&codes, &mut packed);
+    results.push(bench("unpack_u2 1024 bytes", 2000, 300.0, || {
+        let mut out = Vec::with_capacity(t * d);
+        packing::unpack_u2(std::hint::black_box(&packed), &mut out);
+        std::hint::black_box(out);
+    }));
+
+    results.push(bench("quantize_key_channelwise 128x32 @2b", 1000, 400.0, || {
+        std::hint::black_box(asym::quantize_key_channelwise(&k, t, d, g, 2, 1.0));
+    }));
+
+    results.push(bench("quantize_value_tokenwise 128x32 @2b", 1000, 400.0, || {
+        std::hint::black_box(asym::quantize_value_tokenwise(&v, t, d, g, 2));
+    }));
+
+    results.push(bench("plan_order (salience) 128x32", 1000, 300.0, || {
+        std::hint::black_box(plan_order(Ordering::Salience, &imp, &k, t, d));
+    }));
+
+    let order = plan_order(Ordering::Salience, &imp, &k, t, d);
+    results.push(bench("quantize_key_window mix30 128x32", 1000, 400.0, || {
+        std::hint::black_box(quantize_key_window(&k, t, d, spec, &order, opts));
+    }));
+
+    results.push(bench("quantize_value_window @2b 128x32", 1000, 400.0, || {
+        std::hint::black_box(quantize_value_window(&v, t, d, 2, g));
+    }));
+
+    let w = quantize_key_window(&k, t, d, spec, &order, opts);
+    results.push(bench("dequantize_key_window 128x32", 1000, 400.0, || {
+        std::hint::black_box(mixkvq::quant::window::dequantize_key_window(&w, d, g));
+    }));
+
+    println!("\n== micro_quant ==");
+    for r in &results {
+        println!("{}", r.report());
+    }
+}

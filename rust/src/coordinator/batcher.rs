@@ -1,0 +1,131 @@
+//! Continuous batcher: a fixed-slot decode batch (the compiled graph's
+//! static B) fed from a FIFO wait queue — the Orca/vLLM iteration-level
+//! scheduling model specialized to static shapes.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::session::{Request, Session};
+
+pub struct Batcher {
+    pub waiting: VecDeque<Request>,
+    /// Fixed decode slots (None = idle).
+    pub slots: Vec<Option<Session>>,
+}
+
+impl Batcher {
+    pub fn new(batch: usize) -> Batcher {
+        Batcher {
+            waiting: VecDeque::new(),
+            slots: (0..batch).map(|_| None).collect(),
+        }
+    }
+
+    pub fn enqueue(&mut self, r: Request) {
+        self.waiting.push_back(r);
+    }
+
+    pub fn live(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn has_work(&self) -> bool {
+        self.live() > 0 || !self.waiting.is_empty()
+    }
+
+    pub fn free_slot(&self) -> Option<usize> {
+        self.slots.iter().position(|s| s.is_none())
+    }
+
+    /// Pop the next waiting request if a slot is free (FIFO — no
+    /// starvation: the head of the queue is always admitted first).
+    pub fn next_admission(&mut self) -> Option<(usize, Request)> {
+        let slot = self.free_slot()?;
+        let req = self.waiting.pop_front()?;
+        Some((slot, req))
+    }
+
+    pub fn install(&mut self, slot: usize, session: Session) {
+        debug_assert!(self.slots[slot].is_none());
+        self.slots[slot] = Some(session);
+    }
+
+    /// Remove finished sessions, returning them.
+    pub fn reap(&mut self) -> Vec<Session> {
+        let mut done = Vec::new();
+        for s in self.slots.iter_mut() {
+            if s.as_ref().map(|x| x.is_finished()).unwrap_or(false) {
+                done.push(s.take().unwrap());
+            }
+        }
+        done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::session::FinishReason;
+    use crate::kvcache::cache::RequestCache;
+    use crate::model::config::{CacheConfig, ModelConfig};
+    use crate::model::sampler::Sampling;
+    use crate::quant::methods::Method;
+    use crate::quant::window::TierSpec;
+    use std::time::Instant;
+
+    fn req(id: u64) -> Request {
+        Request { id, prompt: vec![1], max_new_tokens: 8, sampling: Sampling::Greedy }
+    }
+
+    fn session(id: u64) -> Session {
+        let mc = ModelConfig { n_layers: 1, ..ModelConfig::default_build() };
+        let cc = CacheConfig::default_build();
+        let cache = RequestCache::new(
+            &mc,
+            &cc,
+            &[TierSpec { n16: 32, n4: 0, n2: 0, v_bits: 16 }],
+            Method::bf16(),
+            32,
+        );
+        Session::new(req(id), cache, 5, Instant::now())
+    }
+
+    #[test]
+    fn fifo_admission() {
+        let mut b = Batcher::new(2);
+        b.enqueue(req(1));
+        b.enqueue(req(2));
+        b.enqueue(req(3));
+        let (s0, r0) = b.next_admission().unwrap();
+        assert_eq!((s0, r0.id), (0, 1));
+        b.install(0, session(1));
+        let (s1, r1) = b.next_admission().unwrap();
+        assert_eq!((s1, r1.id), (1, 2));
+        b.install(1, session(2));
+        assert!(b.next_admission().is_none(), "no free slot");
+        assert_eq!(b.waiting.len(), 1);
+    }
+
+    #[test]
+    fn reap_frees_slots() {
+        let mut b = Batcher::new(2);
+        b.install(0, session(1));
+        b.install(1, session(2));
+        b.slots[0].as_mut().unwrap().finish(FinishReason::Eos);
+        let done = b.reap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].request.id, 1);
+        assert_eq!(b.live(), 1);
+        assert_eq!(b.free_slot(), Some(0));
+    }
+
+    #[test]
+    fn has_work_tracks_queue_and_slots() {
+        let mut b = Batcher::new(1);
+        assert!(!b.has_work());
+        b.enqueue(req(1));
+        assert!(b.has_work());
+        let (slot, _r) = b.next_admission().unwrap();
+        b.install(slot, session(1));
+        assert!(b.has_work());
+    }
+}

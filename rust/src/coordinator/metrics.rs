@@ -1,0 +1,172 @@
+//! Serving metrics: latency/throughput aggregates (Fig. 5) and the
+//! operation-level time breakdown (Table 7).
+
+use std::time::Instant;
+
+use crate::util::stats::percentile;
+
+use super::engine::EngineTimers;
+use super::session::Completed;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub completed: Vec<Completed>,
+    pub t_start: Option<Instant>,
+    pub t_end: Option<Instant>,
+    pub decode_steps: u64,
+    pub live_slot_steps: u64,
+    pub slot_steps: u64,
+    pub peak_mem_bytes: usize,
+    pub max_concurrent: usize,
+}
+
+impl Metrics {
+    pub fn start(&mut self) {
+        self.t_start = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        self.t_end = Some(Instant::now());
+    }
+
+    pub fn record_step(&mut self, live: usize, batch: usize) {
+        self.decode_steps += 1;
+        self.live_slot_steps += live as u64;
+        self.slot_steps += batch as u64;
+        self.max_concurrent = self.max_concurrent.max(live);
+    }
+
+    pub fn wall_s(&self) -> f64 {
+        match (self.t_start, self.t_end) {
+            (Some(a), Some(b)) => b.duration_since(a).as_secs_f64(),
+            _ => 0.0,
+        }
+    }
+
+    pub fn total_generated(&self) -> usize {
+        self.completed.iter().map(|c| c.tokens.len()).sum()
+    }
+
+    pub fn total_prompt(&self) -> usize {
+        self.completed.iter().map(|c| c.prompt_len).sum()
+    }
+
+    /// Generated tokens per second (the Fig. 5 throughput metric).
+    pub fn throughput_tps(&self) -> f64 {
+        let w = self.wall_s();
+        if w == 0.0 {
+            0.0
+        } else {
+            self.total_generated() as f64 / w
+        }
+    }
+
+    pub fn batch_occupancy(&self) -> f64 {
+        if self.slot_steps == 0 {
+            0.0
+        } else {
+            self.live_slot_steps as f64 / self.slot_steps as f64
+        }
+    }
+
+    pub fn ttft_ms(&self) -> (f64, f64) {
+        let xs: Vec<f64> = self.completed.iter().map(|c| c.ttft_ms).collect();
+        (percentile(&xs, 50.0), percentile(&xs, 95.0))
+    }
+
+    pub fn latency_ms(&self) -> (f64, f64) {
+        let xs: Vec<f64> = self.completed.iter().map(|c| c.total_ms).collect();
+        (percentile(&xs, 50.0), percentile(&xs, 95.0))
+    }
+
+    pub fn summary(&self) -> String {
+        let (ttft50, ttft95) = self.ttft_ms();
+        let (lat50, lat95) = self.latency_ms();
+        format!(
+            "requests={} gen_tokens={} wall={:.2}s throughput={:.1} tok/s \
+             occupancy={:.2} max_concurrent={} peak_kv_mem={:.2} MB \
+             ttft p50/p95={:.0}/{:.0} ms latency p50/p95={:.0}/{:.0} ms",
+            self.completed.len(),
+            self.total_generated(),
+            self.wall_s(),
+            self.throughput_tps(),
+            self.batch_occupancy(),
+            self.max_concurrent,
+            self.peak_mem_bytes as f64 / 1e6,
+            ttft50,
+            ttft95,
+            lat50,
+            lat95,
+        )
+    }
+}
+
+/// Table 7-style breakdown from engine timers: share of per-step wall time
+/// in channel-selection/quantization vs model execution vs host assembly.
+pub struct Breakdown {
+    pub quantize_pct: f64,
+    pub model_exec_pct: f64,
+    pub assemble_pct: f64,
+    pub quantize_call_rate_pct: f64,
+}
+
+pub fn breakdown(t: &EngineTimers) -> Breakdown {
+    let total = (t.decode_exec_ns + t.quantize_ns + t.assemble_ns).max(1) as f64;
+    Breakdown {
+        quantize_pct: 100.0 * t.quantize_ns as f64 / total,
+        model_exec_pct: 100.0 * t.decode_exec_ns as f64 / total,
+        assemble_pct: 100.0 * t.assemble_ns as f64 / total,
+        quantize_call_rate_pct: if t.decode_steps == 0 {
+            0.0
+        } else {
+            100.0 * t.quantize_events as f64 / t.decode_steps as f64
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::session::FinishReason;
+
+    fn completed(n: usize) -> Completed {
+        Completed {
+            id: n as u64,
+            prompt_len: 10,
+            tokens: vec![1; n],
+            reason: FinishReason::Eos,
+            ttft_ms: 5.0 * n as f64,
+            total_ms: 20.0 * n as f64,
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let mut m = Metrics::default();
+        m.start();
+        m.completed.push(completed(4));
+        m.completed.push(completed(6));
+        m.record_step(2, 8);
+        m.record_step(1, 8);
+        m.stop();
+        assert_eq!(m.total_generated(), 10);
+        assert!((m.batch_occupancy() - 3.0 / 16.0).abs() < 1e-9);
+        assert!(m.throughput_tps() > 0.0);
+        assert_eq!(m.max_concurrent, 2);
+    }
+
+    #[test]
+    fn breakdown_sums_to_100() {
+        let t = EngineTimers {
+            decode_exec_ns: 700,
+            quantize_ns: 100,
+            assemble_ns: 200,
+            decode_steps: 10,
+            quantize_events: 1,
+            prefill_exec_ns: 0,
+        };
+        let b = breakdown(&t);
+        assert!((b.quantize_pct + b.model_exec_pct + b.assemble_pct - 100.0).abs() < 1e-6);
+        assert!((b.quantize_call_rate_pct - 10.0).abs() < 1e-9);
+    }
+}

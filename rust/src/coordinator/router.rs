@@ -1,0 +1,190 @@
+//! The serving front door: `Server` drives engine + batcher + scheduler
+//! over a request trace and returns per-request completions + metrics.
+//!
+//! Single-threaded by design: the PJRT client is not Send, the sandbox has
+//! one core, and iteration-level batching gives the same throughput math as
+//! an async loop — the *policy* (what gets batched when) is identical to a
+//! threaded deployment.
+
+use anyhow::Result;
+use std::time::Instant;
+
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::engine::Engine;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::scheduler::{Scheduler, SchedulerPolicy};
+use crate::coordinator::session::{Completed, FinishReason, Request, Session};
+use crate::kvcache::accountant::MemoryAccountant;
+use crate::model::sampler;
+use crate::util::rng::Pcg32;
+
+pub struct ServerConfig {
+    pub memory_budget_bytes: usize,
+    pub max_prefills_per_cycle: usize,
+    pub seed: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            memory_budget_bytes: 64 << 20,
+            max_prefills_per_cycle: 2,
+            seed: 0,
+        }
+    }
+}
+
+pub struct Server {
+    pub engine: Engine,
+    pub batcher: Batcher,
+    pub scheduler: Scheduler,
+    pub metrics: Metrics,
+    rng: Pcg32,
+}
+
+impl Server {
+    pub fn new(engine: Engine, cfg: ServerConfig) -> Server {
+        let per_request = MemoryAccountant::worst_case_request_bytes(
+            &engine.meta.model,
+            &engine.meta.cache,
+            &engine.variant.layers,
+        );
+        let batch = engine.meta.cache.decode_batch;
+        Server {
+            engine,
+            batcher: Batcher::new(batch),
+            scheduler: Scheduler::new(
+                SchedulerPolicy {
+                    max_prefills_per_cycle: cfg.max_prefills_per_cycle,
+                    per_request_bytes: per_request,
+                },
+                cfg.memory_budget_bytes,
+            ),
+            metrics: Metrics::default(),
+            rng: Pcg32::seeded(cfg.seed),
+        }
+    }
+
+    /// Serve a whole trace to completion (offline/batch mode — every bench
+    /// and example drives this; an online server would feed `enqueue`
+    /// from a socket instead).
+    pub fn run(&mut self, requests: Vec<Request>) -> Result<Vec<Completed>> {
+        for r in requests {
+            self.batcher.enqueue(r);
+        }
+        self.metrics.start();
+        while self.batcher.has_work() {
+            self.cycle()?;
+        }
+        self.metrics.stop();
+        Ok(self.metrics.completed.clone())
+    }
+
+    /// One scheduling cycle: admissions (prefill) then one decode step.
+    pub fn cycle(&mut self) -> Result<()> {
+        // --- admissions -------------------------------------------------
+        let quota = self
+            .scheduler
+            .admission_quota(self.batcher.slots.len() - self.batcher.live(), self.batcher.waiting.len());
+        for _ in 0..quota {
+            if !self.scheduler.try_admit() {
+                break; // memory budget saturated — leave in queue
+            }
+            let Some((slot, req)) = self.batcher.next_admission() else {
+                self.scheduler.release();
+                break;
+            };
+            let t_arrival = Instant::now();
+            let pre = self.engine.prefill(&req.prompt)?;
+            let mut cache = self.engine.admit_prefill(&pre)?;
+            let first = sampler::sample(&pre.last_logits, req.sampling, &mut self.rng);
+            cache.pos = pre.t; // next decode position
+            let mut sess = Session::new(req, cache, first, t_arrival);
+            sess.bytes_reserved = self.scheduler.policy.per_request_bytes;
+            // prompt-only EOS edge case
+            if sess.push_token_is_immediate_finish() {
+                self.finish_session(&mut sess);
+                self.scheduler.release();
+                self.metrics.completed.push(make_completed(&sess));
+                continue;
+            }
+            self.batcher.install(slot, sess);
+        }
+
+        // --- decode step -------------------------------------------------
+        let live = self.batcher.live();
+        if live > 0 {
+            let batch = self.batcher.slots.len();
+            self.metrics.record_step(live, batch);
+            let mut slots: Vec<Option<(&mut crate::kvcache::cache::RequestCache, i32)>> =
+                Vec::with_capacity(batch);
+            for s in self.batcher.slots.iter_mut() {
+                match s {
+                    Some(sess) if !sess.is_finished() => {
+                        let tok = sess.next_token;
+                        slots.push(Some((&mut sess.cache, tok)));
+                    }
+                    _ => slots.push(None),
+                }
+            }
+            let logits = self.engine.decode_step(&mut slots)?;
+            drop(slots);
+            for (i, lg) in logits.into_iter().enumerate() {
+                if let (Some(sess), Some(lg)) = (self.batcher.slots[i].as_mut(), lg) {
+                    if sess.cache.remaining() == 0 {
+                        sess.finish(FinishReason::CacheFull);
+                        continue;
+                    }
+                    let tok = sampler::sample(&lg, sess.request.sampling, &mut self.rng);
+                    sess.push_token(tok);
+                }
+            }
+            // account live cache bytes for the peak-memory metric
+            let live_bytes: usize = self
+                .batcher
+                .slots
+                .iter()
+                .flatten()
+                .map(|s| s.cache.bytes_used())
+                .sum();
+            self.metrics.peak_mem_bytes = self.metrics.peak_mem_bytes.max(live_bytes);
+        }
+
+        // --- reap finished ------------------------------------------------
+        for sess in self.batcher.reap() {
+            self.scheduler.release();
+            self.metrics.completed.push(make_completed(&sess));
+        }
+        Ok(())
+    }
+
+    fn finish_session(&mut self, sess: &mut Session) {
+        sess.finish(FinishReason::Eos);
+    }
+}
+
+impl Session {
+    /// First sampled token is already EOS / budget is 1.
+    fn push_token_is_immediate_finish(&mut self) -> bool {
+        self.next_token == crate::model::tokenizer::EOS || self.request.max_new_tokens <= 1
+    }
+}
+
+fn make_completed(sess: &Session) -> Completed {
+    let ttft = sess
+        .t_first_token
+        .map(|t| t.duration_since(sess.t_arrival).as_secs_f64() * 1e3)
+        .unwrap_or(0.0);
+    let total = sess
+        .t_finish
+        .map(|t| t.duration_since(sess.t_arrival).as_secs_f64() * 1e3)
+        .unwrap_or(0.0);
+    Completed {
+        id: sess.request.id,
+        prompt_len: sess.request.prompt.len(),
+        tokens: sess.generated.clone(),
+        reason: sess.finish_reason().unwrap_or(FinishReason::MaxTokens),
+        ttft_ms: ttft,
+        total_ms: total,
+    }
+}

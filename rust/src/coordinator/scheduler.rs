@@ -1,0 +1,81 @@
+//! Prefill/decode interleaving policy + memory admission control.
+//!
+//! Policy (vLLM-style, specialized to a static decode batch):
+//! * decode has priority: run one decode step per cycle over live slots;
+//! * before each decode step, admit up to `max_prefills_per_cycle` waiting
+//!   requests into free slots — if the memory accountant can reserve their
+//!   worst-case cache bytes (prevents mid-request OOM, which would force
+//!   eviction we don't model);
+//! * requests whose prompt exceeds every prefill bucket are rejected.
+
+use crate::kvcache::accountant::MemoryAccountant;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerPolicy {
+    /// Cap on prefills interleaved per decode cycle (bounds decode stall).
+    pub max_prefills_per_cycle: usize,
+    /// Worst-case per-request cache bytes (from the accountant).
+    pub per_request_bytes: usize,
+}
+
+pub struct Scheduler {
+    pub policy: SchedulerPolicy,
+    pub accountant: MemoryAccountant,
+    pub rejected: u64,
+}
+
+impl Scheduler {
+    pub fn new(policy: SchedulerPolicy, budget_bytes: usize) -> Scheduler {
+        Scheduler { policy, accountant: MemoryAccountant::new(budget_bytes), rejected: 0 }
+    }
+
+    /// How many admissions to attempt this cycle given free slots.
+    pub fn admission_quota(&self, free_slots: usize, waiting: usize) -> usize {
+        free_slots.min(waiting).min(self.policy.max_prefills_per_cycle)
+    }
+
+    /// Try to reserve memory for one request.
+    pub fn try_admit(&mut self) -> bool {
+        self.accountant.try_reserve(self.policy.per_request_bytes)
+    }
+
+    pub fn release(&mut self) {
+        self.accountant.release(self.policy.per_request_bytes);
+    }
+
+    /// Max concurrent requests the budget supports (Fig. 5's max batch).
+    pub fn max_concurrent(&self) -> usize {
+        self.accountant.budget_bytes / self.policy.per_request_bytes.max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched(budget: usize, per_req: usize) -> Scheduler {
+        Scheduler::new(
+            SchedulerPolicy { max_prefills_per_cycle: 2, per_request_bytes: per_req },
+            budget,
+        )
+    }
+
+    #[test]
+    fn quota_is_min_of_three() {
+        let s = sched(1000, 100);
+        assert_eq!(s.admission_quota(5, 9), 2); // capped by policy
+        assert_eq!(s.admission_quota(1, 9), 1); // capped by slots
+        assert_eq!(s.admission_quota(5, 0), 0); // capped by queue
+    }
+
+    #[test]
+    fn memory_admission() {
+        let mut s = sched(250, 100);
+        assert!(s.try_admit());
+        assert!(s.try_admit());
+        assert!(!s.try_admit(), "third request exceeds budget");
+        s.release();
+        assert!(s.try_admit());
+        assert_eq!(s.max_concurrent(), 2);
+    }
+}

@@ -1,0 +1,151 @@
+//! Per-request state machine: Queued → Prefilling → Decoding → Finished.
+
+use std::time::Instant;
+
+use crate::kvcache::cache::RequestCache;
+use crate::model::sampler::Sampling;
+use crate::model::tokenizer;
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub sampling: Sampling,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    Eos,
+    MaxTokens,
+    CacheFull,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Queued,
+    Decoding,
+    Finished(FinishReason),
+}
+
+pub struct Session {
+    pub request: Request,
+    pub cache: RequestCache,
+    pub generated: Vec<i32>,
+    /// Token to feed at the next decode step.
+    pub next_token: i32,
+    pub phase: Phase,
+    pub t_arrival: Instant,
+    pub t_first_token: Option<Instant>,
+    pub t_finish: Option<Instant>,
+    pub bytes_reserved: usize,
+}
+
+impl Session {
+    pub fn new(request: Request, cache: RequestCache, first_token: i32, t_arrival: Instant) -> Self {
+        Session {
+            request,
+            cache,
+            generated: vec![first_token],
+            next_token: first_token,
+            phase: Phase::Decoding,
+            t_arrival,
+            t_first_token: Some(Instant::now()),
+            t_finish: None,
+            bytes_reserved: 0,
+        }
+    }
+
+    /// Record a newly sampled token; returns true if the session finished.
+    pub fn push_token(&mut self, tok: i32) -> bool {
+        self.generated.push(tok);
+        self.next_token = tok;
+        if tok == tokenizer::EOS {
+            self.finish(FinishReason::Eos);
+            true
+        } else if self.generated.len() >= self.request.max_new_tokens {
+            self.finish(FinishReason::MaxTokens);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn finish(&mut self, reason: FinishReason) {
+        self.phase = Phase::Finished(reason);
+        self.t_finish = Some(Instant::now());
+    }
+
+    pub fn is_finished(&self) -> bool {
+        matches!(self.phase, Phase::Finished(_))
+    }
+
+    pub fn finish_reason(&self) -> Option<FinishReason> {
+        match self.phase {
+            Phase::Finished(r) => Some(r),
+            _ => None,
+        }
+    }
+}
+
+/// Completed-request record handed back to callers / metrics.
+#[derive(Clone, Debug)]
+pub struct Completed {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    pub reason: FinishReason,
+    pub ttft_ms: f64,
+    pub total_ms: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::{CacheConfig, ModelConfig};
+    use crate::quant::methods::Method;
+    use crate::quant::window::TierSpec;
+
+    fn mk_session(max_new: usize) -> Session {
+        let mc = ModelConfig { n_layers: 1, ..ModelConfig::default_build() };
+        let cc = CacheConfig::default_build();
+        let cache = RequestCache::new(
+            &mc,
+            &cc,
+            &[TierSpec { n16: 32, n4: 0, n2: 0, v_bits: 16 }],
+            Method::bf16(),
+            32,
+        );
+        let req = Request {
+            id: 1,
+            prompt: vec![tokenizer::BOS],
+            max_new_tokens: max_new,
+            sampling: Sampling::Greedy,
+        };
+        Session::new(req, cache, 42, Instant::now())
+    }
+
+    #[test]
+    fn eos_finishes() {
+        let mut s = mk_session(100);
+        assert!(!s.push_token(17));
+        assert!(s.push_token(tokenizer::EOS));
+        assert_eq!(s.finish_reason(), Some(FinishReason::Eos));
+        assert_eq!(s.generated, vec![42, 17, tokenizer::EOS]);
+    }
+
+    #[test]
+    fn max_tokens_finishes() {
+        let mut s = mk_session(3);
+        assert!(!s.push_token(17));
+        assert!(s.push_token(18)); // 3 tokens incl. first
+        assert_eq!(s.finish_reason(), Some(FinishReason::MaxTokens));
+    }
+
+    #[test]
+    fn next_token_tracks_last() {
+        let mut s = mk_session(10);
+        s.push_token(21);
+        assert_eq!(s.next_token, 21);
+    }
+}

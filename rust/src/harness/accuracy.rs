@@ -1,0 +1,146 @@
+//! Task-accuracy evaluation through the full serving stack (prefill →
+//! quantized cache → batched decode), teacher-forced for determinism.
+//!
+//! Metric: a task counts as correct iff **every** answer token is the
+//! argmax at its position — for chains this is exactly the paper's
+//! "one corrupted step invalidates the chain" criterion (Table 1),
+//! evaluated with the same quantized-cache state the model would see
+//! generatively (gold structure tokens, model-scored answers).
+
+use anyhow::Result;
+
+use crate::coordinator::engine::Engine;
+use crate::harness::workloads::Task;
+use crate::kvcache::cache::RequestCache;
+use crate::model::sampler::argmax;
+
+#[derive(Clone, Debug, Default)]
+pub struct AccuracyReport {
+    pub tasks: usize,
+    pub tasks_correct: usize,
+    pub answers: usize,
+    pub answers_correct: usize,
+}
+
+impl AccuracyReport {
+    pub fn task_acc(&self) -> f64 {
+        if self.tasks == 0 {
+            0.0
+        } else {
+            self.tasks_correct as f64 / self.tasks as f64
+        }
+    }
+
+    pub fn token_acc(&self) -> f64 {
+        if self.answers == 0 {
+            0.0
+        } else {
+            self.answers_correct as f64 / self.answers as f64
+        }
+    }
+}
+
+struct Live<'a> {
+    task: &'a Task,
+    cache: RequestCache,
+    /// Next gold index to feed (the token at gold[cursor] is fed next).
+    cursor: usize,
+    ok: bool,
+    hits: usize,
+}
+
+/// Evaluate tasks in batches through the engine's decode graph.
+pub fn evaluate(engine: &mut Engine, tasks: &[Task]) -> Result<AccuracyReport> {
+    let batch = engine.meta.cache.decode_batch;
+    let mut report = AccuracyReport::default();
+    for chunk in tasks.chunks(batch) {
+        let mut live: Vec<Option<Live>> = Vec::with_capacity(batch);
+        for task in chunk {
+            let pre = engine.prefill(&task.prompt)?;
+            let cache = engine.admit_prefill(&pre)?;
+            let mut l = Live { task, cache, cursor: task.prompt.len(), ok: true, hits: 0 };
+            // the prefill's last logits predict gold[prompt_len]
+            score_position(&pre.last_logits, &mut l);
+            live.push(Some(l));
+        }
+        while live.len() < batch {
+            live.push(None);
+        }
+        // teacher-forced decode until every task's gold is consumed
+        loop {
+            let mut any = false;
+            let mut slots: Vec<Option<(&mut RequestCache, i32)>> = Vec::with_capacity(batch);
+            for l in live.iter_mut() {
+                match l {
+                    Some(lv) if lv.cursor < lv.task.gold.len() - 1 => {
+                        any = true;
+                        let tok = lv.task.gold[lv.cursor];
+                        slots.push(Some((&mut lv.cache, tok)));
+                    }
+                    _ => slots.push(None),
+                }
+            }
+            if !any {
+                break;
+            }
+            let logits = engine.decode_step(&mut slots)?;
+            drop(slots);
+            for (l, lg) in live.iter_mut().zip(logits) {
+                if let (Some(lv), Some(lg)) = (l.as_mut(), lg) {
+                    if lv.cursor < lv.task.gold.len() - 1 {
+                        lv.cursor += 1;
+                        // logits now predict gold[cursor]
+                        score_position(&lg, lv);
+                    }
+                }
+            }
+        }
+        for l in live.into_iter().flatten() {
+            report.tasks += 1;
+            report.answers += l.task.answer_positions.len();
+            report.answers_correct += l.hits;
+            if l.ok && !l.task.answer_positions.is_empty() {
+                report.tasks_correct += 1;
+            }
+        }
+    }
+    Ok(report)
+}
+
+fn score_position(logits: &[f32], l: &mut Live) {
+    for &(p, want) in &l.task.answer_positions {
+        if p == l.cursor {
+            if argmax(logits) == want {
+                l.hits += 1;
+            } else {
+                l.ok = false;
+            }
+        }
+    }
+}
+
+/// Generative rollout of one task (Table-1-style transcript): greedy decode
+/// from the prompt, returning the produced tokens.
+pub fn rollout(engine: &mut Engine, task: &Task, max_new: usize) -> Result<Vec<i32>> {
+    let batch = engine.meta.cache.decode_batch;
+    let pre = engine.prefill(&task.prompt)?;
+    let mut cache = engine.admit_prefill(&pre)?;
+    let mut out = Vec::new();
+    let mut tok = argmax(&pre.last_logits);
+    out.push(tok);
+    for _ in 0..max_new {
+        if tok == crate::model::tokenizer::EOS || cache.remaining() == 0 {
+            break;
+        }
+        let mut slots: Vec<Option<(&mut RequestCache, i32)>> = Vec::with_capacity(batch);
+        slots.push(Some((&mut cache, tok)));
+        for _ in 1..batch {
+            slots.push(None);
+        }
+        let logits = engine.decode_step(&mut slots)?;
+        drop(slots);
+        tok = argmax(logits[0].as_ref().unwrap());
+        out.push(tok);
+    }
+    Ok(out)
+}

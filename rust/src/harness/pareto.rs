@@ -1,0 +1,129 @@
+//! Tier-budget Pareto search (Appendix C / Fig. 7).
+//!
+//! The paper runs OPTUNA-TPE over thresholds (τ_BF16, τ_UINT4); thresholds
+//! map 1:1 to tier *counts* per head (salience::threshold_counts), so we
+//! search the count grid directly — same frontier, no sampler dependency —
+//! and evaluate each point through the reference driver.
+
+use anyhow::Result;
+
+use crate::harness::refdriver::RefDriver;
+use crate::harness::workloads::Task;
+use crate::kvcache::accountant::effective_bits;
+use crate::model::config::{CacheConfig, ModelConfig};
+use crate::model::weights::Weights;
+use crate::quant::methods::Method;
+use crate::quant::window::TierSpec;
+
+#[derive(Clone, Debug)]
+pub struct ParetoPoint {
+    pub n16: usize,
+    pub n4: usize,
+    pub n2: usize,
+    pub eff_bits: f64,
+    pub accuracy: f64,
+    pub on_frontier: bool,
+}
+
+/// Valid (n16, n4) grid: packing requires n4 even and n2 ≡ 0 (mod 4).
+pub fn tier_grid(d: usize) -> Vec<(usize, usize, usize)> {
+    let mut out = Vec::new();
+    for n16 in [0usize, 2, 4, 8] {
+        for n4 in (0..=d - n16).step_by(2) {
+            let n2 = d - n16 - n4;
+            if n2 % 4 == 0 {
+                out.push((n16, n4, n2));
+            }
+        }
+    }
+    out
+}
+
+/// Evaluate the grid and mark the Pareto frontier (max accuracy, min bits).
+pub fn search(
+    mc: &ModelConfig,
+    cc: &CacheConfig,
+    weights: &Weights,
+    tasks: &[Task],
+    v_bits: usize,
+    r_limit: usize,
+) -> Result<Vec<ParetoPoint>> {
+    let mut points = Vec::new();
+    for (n16, n4, n2) in tier_grid(mc.d_head) {
+        let spec = TierSpec { n16, n4, n2, v_bits };
+        let driver = RefDriver::new(
+            mc.clone(),
+            cc.clone(),
+            weights,
+            vec![spec; mc.n_layers],
+            Method::mixkvq("grid"),
+            r_limit,
+        );
+        let rep = driver.accuracy(tasks)?;
+        points.push(ParetoPoint {
+            n16,
+            n4,
+            n2,
+            eff_bits: effective_bits(&spec, mc.d_head, cc.group),
+            accuracy: rep.task_acc(),
+            on_frontier: false,
+        });
+    }
+    mark_frontier(&mut points);
+    Ok(points)
+}
+
+/// A point is on the frontier iff no other point has ≤ bits AND > accuracy
+/// (or < bits AND ≥ accuracy).
+pub fn mark_frontier(points: &mut [ParetoPoint]) {
+    for i in 0..points.len() {
+        let dominated = points.iter().enumerate().any(|(j, q)| {
+            j != i
+                && ((q.eff_bits <= points[i].eff_bits && q.accuracy > points[i].accuracy)
+                    || (q.eff_bits < points[i].eff_bits && q.accuracy >= points[i].accuracy))
+        });
+        points[i].on_frontier = !dominated;
+    }
+}
+
+/// Pick the frontier point with max accuracy under a bits constraint
+/// (App. C: "highest accuracy while keeping effective bit-width below a
+/// strict constraint").
+pub fn select(points: &[ParetoPoint], max_bits: f64) -> Option<&ParetoPoint> {
+    points
+        .iter()
+        .filter(|p| p.eff_bits <= max_bits && p.on_frontier)
+        .max_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_respects_packing() {
+        for (n16, n4, n2) in tier_grid(32) {
+            assert_eq!(n16 + n4 + n2, 32);
+            assert_eq!(n4 % 2, 0);
+            assert_eq!(n2 % 4, 0);
+        }
+        assert!(tier_grid(32).len() >= 20);
+    }
+
+    #[test]
+    fn frontier_marking() {
+        let mut pts = vec![
+            ParetoPoint { n16: 0, n4: 0, n2: 32, eff_bits: 2.0, accuracy: 0.3, on_frontier: false },
+            ParetoPoint { n16: 2, n4: 2, n2: 28, eff_bits: 3.0, accuracy: 0.8, on_frontier: false },
+            ParetoPoint { n16: 2, n4: 0, n2: 28, eff_bits: 3.0, accuracy: 0.5, on_frontier: false }, // dominated
+            ParetoPoint { n16: 8, n4: 8, n2: 16, eff_bits: 6.0, accuracy: 0.9, on_frontier: false },
+        ];
+        mark_frontier(&mut pts);
+        assert!(pts[0].on_frontier);
+        assert!(pts[1].on_frontier);
+        assert!(!pts[2].on_frontier);
+        assert!(pts[3].on_frontier);
+        let sel = select(&pts, 3.5).unwrap();
+        assert_eq!((sel.n16, sel.n4), (2, 2));
+    }
+}

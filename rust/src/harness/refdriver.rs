@@ -1,0 +1,196 @@
+//! Reference-path evaluation driver: the pure-Rust model over the same
+//! RequestCache quantization machinery, with no compiled-shape constraints.
+//!
+//! Used where the experiment sweeps layouts beyond the compiled HLO
+//! variants (Fig. 6 heatmaps, Fig. 7 Pareto search, Table 5 group-size
+//! sweep). Agreement with the HLO path is enforced by tests/integration.rs
+//! (invariant #8), so results are interchangeable up to float tolerance.
+
+use anyhow::Result;
+
+use crate::harness::accuracy::AccuracyReport;
+use crate::harness::workloads::Task;
+use crate::kvcache::cache::RequestCache;
+use crate::model::config::{CacheConfig, ModelConfig};
+use crate::model::reference::{LayerCtx, RefModel};
+use crate::model::sampler::{argmax, log_prob};
+use crate::model::weights::Weights;
+use crate::quant::methods::Method;
+use crate::quant::window::TierSpec;
+
+pub struct RefDriver<'a> {
+    pub model: RefModel<'a>,
+    pub cc: CacheConfig,
+    pub specs: Vec<TierSpec>,
+    pub method: Method,
+    pub r_limit: usize,
+}
+
+impl<'a> RefDriver<'a> {
+    pub fn new(
+        mc: ModelConfig,
+        cc: CacheConfig,
+        w: &'a Weights,
+        specs: Vec<TierSpec>,
+        method: Method,
+        r_limit: usize,
+    ) -> Self {
+        RefDriver { model: RefModel::new(mc, w), cc, specs, method, r_limit }
+    }
+
+    fn new_cache(&self) -> RequestCache {
+        RequestCache::new(&self.model.mc, &self.cc, &self.specs, self.method.clone(), self.r_limit)
+    }
+
+    /// Prefill prompt into a fresh cache.
+    pub fn prefill(&self, prompt: &[i32]) -> Result<(RequestCache, Vec<f32>)> {
+        let (_, pre) = self.model.forward_full(prompt);
+        let mut cache = self.new_cache();
+        cache.load_prefill(&pre.k, &pre.v, &pre.qabs, prompt.len())?;
+        Ok((cache, pre.last_logits))
+    }
+
+    /// One teacher-forced decode step; returns logits for the next token.
+    pub fn step(&self, cache: &mut RequestCache, token: i32) -> Result<Vec<f32>> {
+        let mc = &self.model.mc;
+        let nl = mc.n_layers;
+        let hkv = mc.n_kv_heads;
+        let dh = mc.d_head;
+        // materialize dequantized windows + residual views
+        let mut kqs = Vec::with_capacity(nl);
+        let mut vqs = Vec::with_capacity(nl);
+        let mut kres = Vec::with_capacity(nl);
+        let mut vres = Vec::with_capacity(nl);
+        let tq = cache.qlen;
+        let tr = cache.rlen();
+        for l in 0..nl {
+            let mut kq = vec![0f32; hkv * tq * dh];
+            let mut vq = vec![0f32; hkv * tq * dh];
+            let mut kr = vec![0f32; hkv * tr * dh];
+            let mut vr = vec![0f32; hkv * tr * dh];
+            for h in 0..hkv {
+                let head = &cache.heads[l][h];
+                kq[h * tq * dh..(h + 1) * tq * dh].copy_from_slice(&head.dequant_keys(tq));
+                vq[h * tq * dh..(h + 1) * tq * dh].copy_from_slice(&head.dequant_values(tq));
+                kr[h * tr * dh..(h + 1) * tr * dh].copy_from_slice(head.res.keys());
+                vr[h * tr * dh..(h + 1) * tr * dh].copy_from_slice(head.res.values());
+            }
+            kqs.push(kq);
+            vqs.push(vq);
+            kres.push(kr);
+            vres.push(vr);
+        }
+        let ctx: Vec<LayerCtx> = (0..nl)
+            .map(|l| LayerCtx {
+                kq: &kqs[l],
+                vq: &vqs[l],
+                tq,
+                kres: &kres[l],
+                vres: &vres[l],
+                tr,
+            })
+            .collect();
+        let out = self.model.decode_step(token, cache.pos, &ctx, &cache.rot);
+        cache.append(&out.knew, &out.vnew, &out.qabs)?;
+        Ok(out.logits)
+    }
+
+    /// Teacher-forced answer accuracy (same metric as harness::accuracy).
+    pub fn accuracy(&self, tasks: &[Task]) -> Result<AccuracyReport> {
+        let mut rep = AccuracyReport::default();
+        for task in tasks {
+            let (mut cache, last_logits) = self.prefill(&task.prompt)?;
+            let mut ok = true;
+            let mut hits = 0;
+            let mut check = |cursor: usize, logits: &[f32]| {
+                for &(p, want) in &task.answer_positions {
+                    if p == cursor {
+                        if argmax(logits) == want {
+                            hits += 1;
+                        } else {
+                            ok = false;
+                        }
+                    }
+                }
+            };
+            let mut cursor = task.prompt.len();
+            check(cursor, &last_logits);
+            while cursor < task.gold.len() - 1 {
+                let logits = self.step(&mut cache, task.gold[cursor])?;
+                cursor += 1;
+                check(cursor, &logits);
+            }
+            rep.tasks += 1;
+            rep.answers += task.answer_positions.len();
+            rep.answers_correct += hits;
+            if ok && !task.answer_positions.is_empty() {
+                rep.tasks_correct += 1;
+            }
+        }
+        Ok(rep)
+    }
+
+    /// Teacher-forced perplexity (Table 5 sweeps).
+    pub fn perplexity(&self, seqs: &[Vec<i32>]) -> Result<f64> {
+        let mut nll = 0.0;
+        let mut n = 0usize;
+        for seq in seqs {
+            let (mut cache, last) = self.prefill(&seq[..1])?;
+            nll += -log_prob(&last, seq[1]);
+            n += 1;
+            for cursor in 1..seq.len() - 1 {
+                let logits = self.step(&mut cache, seq[cursor])?;
+                nll += -log_prob(&logits, seq[cursor + 1]);
+                n += 1;
+            }
+        }
+        Ok((nll / n as f64).exp())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::workloads::{gen_copy, gen_kvlookup};
+    use crate::util::rng::Pcg32;
+
+    fn driver(w: &Weights, spec: TierSpec, method: Method) -> RefDriver<'_> {
+        let mc = ModelConfig { n_layers: 2, ..ModelConfig::default_build() };
+        let cc = CacheConfig::default_build();
+        RefDriver::new(mc, cc, w, vec![spec; 2], method, 32)
+    }
+
+    #[test]
+    fn bf16_reference_runs_end_to_end() {
+        let mc = ModelConfig { n_layers: 2, ..ModelConfig::default_build() };
+        let w = Weights::random(&mc, 5);
+        let d = driver(&w, TierSpec { n16: 32, n4: 0, n2: 0, v_bits: 16 }, Method::bf16());
+        let mut rng = Pcg32::seeded(81);
+        let tasks = vec![gen_copy(&mut rng, 4), gen_kvlookup(&mut rng, 3)];
+        let rep = d.accuracy(&tasks).unwrap();
+        assert_eq!(rep.tasks, 2);
+        // untrained weights: accuracy is whatever it is, but the loop must
+        // have scored every answer position
+        assert_eq!(rep.answers, 4 + 1);
+    }
+
+    #[test]
+    fn quantized_path_changes_logits_but_stays_finite() {
+        let mc = ModelConfig { n_layers: 2, ..ModelConfig::default_build() };
+        let w = Weights::random(&mc, 6);
+        let bf = driver(&w, TierSpec { n16: 32, n4: 0, n2: 0, v_bits: 16 }, Method::bf16());
+        let kv2 = driver(&w, TierSpec { n16: 0, n4: 0, n2: 32, v_bits: 2 }, Method::kivi("kv2"));
+        let mut rng = Pcg32::seeded(82);
+        // long prompt so the window actually quantizes (> r_limit = 32)
+        let task = crate::harness::workloads::gen_passkey(&mut rng, 100);
+        let (mut c1, _) = bf.prefill(&task.prompt).unwrap();
+        let (mut c2, _) = kv2.prefill(&task.prompt).unwrap();
+        assert!(c1.qlen > 0, "window must be quantized");
+        let l1 = bf.step(&mut c1, task.gold[task.prompt.len()]).unwrap();
+        let l2 = kv2.step(&mut c2, task.gold[task.prompt.len()]).unwrap();
+        assert!(l1.iter().all(|x| x.is_finite()));
+        assert!(l2.iter().all(|x| x.is_finite()));
+        let diff: f32 = l1.iter().zip(&l2).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 1e-3, "2-bit quantization must perturb logits");
+    }
+}

@@ -1,0 +1,558 @@
+//! Per-request quantized KV cache — the Fig. 4 storage layout, held in
+//! exactly the buffers the decode HLO consumes:
+//!
+//! * three-tier quantized key window (BF16 / packed u4 / packed u2 columns,
+//!   grouped scales/zeros) at capacity C,
+//! * per-token quantized value window,
+//! * the full-precision residual buffer X_R,
+//! * per-head channel permutation `idx` + the running I_d accumulator.
+//!
+//! The channel plan (which channels land in which tier) is decided at the
+//! first quantization event from (prefill I_d) × (window S_d) and reused for
+//! later windows: the decode graph takes one `idx` input per head, so the
+//! permutation must be stable across a request. I_d keeps accumulating and
+//! is re-consulted if the plan is recomputed via `replan()` (used by the
+//! refresh ablation).
+
+use anyhow::{bail, Result};
+
+use crate::model::config::{CacheConfig, ModelConfig};
+use crate::quant::methods::Method;
+use crate::quant::packing;
+use crate::quant::rotation;
+use crate::quant::salience::QueryStats;
+use crate::quant::window::{self, TierSpec};
+
+use super::residual::ResidualBuffer;
+
+/// One (layer, kv-head) cache shard, ABI-shaped at capacity C.
+#[derive(Clone)]
+pub struct HeadState {
+    pub spec: TierSpec,
+    pub d: usize,
+    pub capacity: usize,
+    pub group: usize,
+    /// Channel permutation (tier-concatenated); identity until planned.
+    pub idx: Vec<i32>,
+    pub planned: bool,
+    pub k16: Vec<f32>,
+    pub k4p: Vec<u8>,
+    pub k4s: Vec<f32>,
+    pub k4z: Vec<f32>,
+    pub k2p: Vec<u8>,
+    pub k2s: Vec<f32>,
+    pub k2z: Vec<f32>,
+    pub vp: Vec<u8>,
+    pub vs: Vec<f32>,
+    pub vz: Vec<f32>,
+    pub vfull: Vec<f32>,
+    pub res: ResidualBuffer,
+    pub qstats: QueryStats,
+}
+
+impl HeadState {
+    /// Value-side channel group: values group along d_head, so G clamps to
+    /// d (relevant only for the Table 5 G-sweep where G > d_head).
+    pub fn vgroup(&self) -> usize {
+        self.group.min(self.d)
+    }
+
+    fn new(spec: TierSpec, d: usize, cc: &CacheConfig) -> Self {
+        let c = cc.capacity;
+        let gk = cc.group;          // key grouping (along tokens)
+        let gv = cc.group.min(d);   // value grouping (along channels)
+        let cg = c / gk;
+        HeadState {
+            spec,
+            d,
+            capacity: c,
+            group: gk,
+            idx: (0..d as i32).collect(),
+            planned: false,
+            k16: vec![0.0; c * spec.n16],
+            k4p: vec![0; c * spec.n4 / 2],
+            k4s: vec![0.0; cg * spec.n4],
+            k4z: vec![0.0; cg * spec.n4],
+            k2p: vec![0; c * spec.n2 / 4],
+            k2s: vec![0.0; cg * spec.n2],
+            k2z: vec![0.0; cg * spec.n2],
+            vp: if spec.v_bits == 16 { Vec::new() } else { vec![0; c * d * spec.v_bits / 8] },
+            vs: if spec.v_bits == 16 { Vec::new() } else { vec![0.0; c * d / gv] },
+            vz: if spec.v_bits == 16 { Vec::new() } else { vec![0.0; c * d / gv] },
+            vfull: if spec.v_bits == 16 { vec![0.0; c * d] } else { Vec::new() },
+            res: ResidualBuffer::new(cc.residual, d),
+            qstats: QueryStats::new(d),
+        }
+    }
+
+    /// Write a quantized key window into the ABI buffers at token offset
+    /// `at` (must be group-aligned).
+    fn store_key_window(&mut self, w: &window::KeyWindow, at: usize) {
+        debug_assert_eq!(at % self.group, 0);
+        let t = w.t;
+        let (n16, n4, n2) = (self.spec.n16, self.spec.n4, self.spec.n2);
+        self.k16[at * n16..(at + t) * n16].copy_from_slice(&w.k16);
+        if n4 > 0 {
+            self.k4p[at * n4 / 2..(at + t) * n4 / 2].copy_from_slice(&w.k4p);
+            let g0 = at / self.group;
+            let gn = t / self.group;
+            self.k4s[g0 * n4..(g0 + gn) * n4].copy_from_slice(&w.k4s);
+            self.k4z[g0 * n4..(g0 + gn) * n4].copy_from_slice(&w.k4z);
+        }
+        if n2 > 0 {
+            self.k2p[at * n2 / 4..(at + t) * n2 / 4].copy_from_slice(&w.k2p);
+            let g0 = at / self.group;
+            let gn = t / self.group;
+            self.k2s[g0 * n2..(g0 + gn) * n2].copy_from_slice(&w.k2s);
+            self.k2z[g0 * n2..(g0 + gn) * n2].copy_from_slice(&w.k2z);
+        }
+    }
+
+    fn store_value_window(&mut self, w: &window::ValueWindow, at: usize) {
+        let (t, d, g) = (w.t, self.d, self.vgroup());
+        if self.spec.v_bits == 16 {
+            self.vfull[at * d..(at + t) * d].copy_from_slice(&w.vfull);
+        } else {
+            let b = self.spec.v_bits;
+            self.vp[at * d * b / 8..(at + t) * d * b / 8].copy_from_slice(&w.vp);
+            self.vs[at * d / g..(at + t) * d / g].copy_from_slice(&w.vs);
+            self.vz[at * d / g..(at + t) * d / g].copy_from_slice(&w.vz);
+        }
+    }
+
+    /// Dequantize the first `qlen` key rows back to f32 in ORIGINAL channel
+    /// order (rotated space) — the reference-path view.
+    pub fn dequant_keys(&self, qlen: usize) -> Vec<f32> {
+        let (d, g) = (self.d, self.group);
+        let (n16, n4, n2) = (self.spec.n16, self.spec.n4, self.spec.n2);
+        let mut out = vec![0f32; qlen * d];
+        let mut row4 = Vec::with_capacity(n4);
+        let mut row2 = Vec::with_capacity(n2);
+        for t in 0..qlen {
+            let grp = t / g;
+            for j in 0..n16 {
+                out[t * d + self.idx[j] as usize] = self.k16[t * n16 + j];
+            }
+            row4.clear();
+            packing::unpack_u4(&self.k4p[t * n4 / 2..(t + 1) * n4 / 2], &mut row4);
+            for j in 0..n4 {
+                let s = self.k4s[grp * n4 + j];
+                let z = self.k4z[grp * n4 + j];
+                out[t * d + self.idx[n16 + j] as usize] = row4[j] as f32 * s + z;
+            }
+            row2.clear();
+            packing::unpack_u2(&self.k2p[t * n2 / 4..(t + 1) * n2 / 4], &mut row2);
+            for j in 0..n2 {
+                let s = self.k2s[grp * n2 + j];
+                let z = self.k2z[grp * n2 + j];
+                out[t * d + self.idx[n16 + n4 + j] as usize] = row2[j] as f32 * s + z;
+            }
+        }
+        out
+    }
+
+    /// Dequantize the first `qlen` value rows.
+    pub fn dequant_values(&self, qlen: usize) -> Vec<f32> {
+        let (d, g) = (self.d, self.vgroup());
+        if self.spec.v_bits == 16 {
+            return self.vfull[..qlen * d].to_vec();
+        }
+        let b = self.spec.v_bits;
+        let ng = d / g;
+        let mut out = vec![0f32; qlen * d];
+        let mut row = Vec::with_capacity(d);
+        for t in 0..qlen {
+            row.clear();
+            if b == 4 {
+                packing::unpack_u4(&self.vp[t * d / 2..(t + 1) * d / 2], &mut row);
+            } else {
+                packing::unpack_u2(&self.vp[t * d / 4..(t + 1) * d / 4], &mut row);
+            }
+            for ch in 0..d {
+                let s = self.vs[t * ng + ch / g];
+                let z = self.vz[t * ng + ch / g];
+                out[t * d + ch] = row[ch] as f32 * s + z;
+            }
+        }
+        out
+    }
+
+    /// Exact storage bytes for `qlen` quantized tokens + the residual
+    /// (invariant #7; BF16 tier & residual at 2 B/elem, scales f32).
+    pub fn bytes_used(&self, qlen: usize) -> usize {
+        let g = self.group;
+        let (n16, n4, n2) = (self.spec.n16, self.spec.n4, self.spec.n2);
+        let gq = qlen / g;
+        // deployment layout: BF16 outlier tier, BF16 scales/zeros (the CPU
+        // host buffers are f32, but the byte model follows the paper's GPU
+        // storage — DESIGN.md §2).
+        let key = 2 * qlen * n16
+            + qlen * n4 / 2
+            + qlen * n2 / 4
+            + 2 * (gq * n4 * 2 + gq * n2 * 2)
+            + 4 * self.d; // idx
+        let val = if self.spec.v_bits == 16 {
+            2 * qlen * self.d
+        } else {
+            qlen * self.d * self.spec.v_bits / 8 + 2 * 2 * qlen * self.d / self.vgroup()
+        };
+        key + val + self.res.bytes()
+    }
+}
+
+/// Full per-request cache across layers and kv-heads.
+pub struct RequestCache {
+    pub qlen: usize,
+    pub pos: usize,
+    /// heads[layer][kv_head]
+    pub heads: Vec<Vec<HeadState>>,
+    pub method: Method,
+    pub rot: Vec<f32>,
+    /// Runtime residual-length knob R (≤ CacheConfig::residual, multiple of G).
+    pub r_limit: usize,
+    /// What happens when the quantized window is full (extension: sink +
+    /// sliding-window eviction — kvcache::eviction).
+    pub policy: crate::kvcache::eviction::CachePolicy,
+    /// Total tokens dropped by sliding-window eviction (ext1 metric).
+    pub evicted_tokens: usize,
+    mc_n_kv: usize,
+    d: usize,
+    group: usize,
+    capacity: usize,
+}
+
+impl RequestCache {
+    pub fn new(
+        mc: &ModelConfig,
+        cc: &CacheConfig,
+        specs: &[TierSpec],
+        method: Method,
+        r_limit: usize,
+    ) -> Self {
+        assert_eq!(specs.len(), mc.n_layers);
+        assert!(r_limit > 0 && r_limit <= cc.residual && r_limit % cc.group == 0);
+        let heads = specs
+            .iter()
+            .map(|&s| (0..mc.n_kv_heads).map(|_| HeadState::new(s, mc.d_head, cc)).collect())
+            .collect();
+        let rot = method.rotation(mc.d_head);
+        RequestCache {
+            qlen: 0,
+            pos: 0,
+            heads,
+            method,
+            rot,
+            r_limit,
+            policy: crate::kvcache::eviction::CachePolicy::Stop,
+            evicted_tokens: 0,
+            mc_n_kv: mc.n_kv_heads,
+            d: mc.d_head,
+            group: cc.group,
+            capacity: cc.capacity,
+        }
+    }
+
+    pub fn rlen(&self) -> usize {
+        self.heads[0][0].res.len
+    }
+
+    /// Total positions this request still has room for.
+    pub fn remaining(&self) -> usize {
+        (self.capacity - self.qlen) + (self.heads[0][0].res.capacity - self.rlen())
+    }
+
+    /// Load prefill K/V (`k[l]`/`v[l]` row-major [Hkv, T, dh]) + the prompt
+    /// |Q| statistic, quantizing everything but the most recent tokens.
+    pub fn load_prefill(
+        &mut self,
+        k: &[Vec<f32>],
+        v: &[Vec<f32>],
+        qabs: &[Vec<f32>],
+        t: usize,
+    ) -> Result<()> {
+        let res_cap = self.heads[0][0].res.capacity;
+        let mut qt = if t > self.r_limit {
+            ((t - self.r_limit + self.group - 1) / self.group) * self.group
+        } else {
+            0
+        };
+        qt = qt.min(self.capacity).min(t / self.group * self.group);
+        let rl = t - qt;
+        if rl > res_cap {
+            bail!("prompt too long: residual leftover {rl} > capacity {res_cap}");
+        }
+        for l in 0..self.heads.len() {
+            for h in 0..self.mc_n_kv {
+                let d = self.d;
+                let kh = &k[l][h * t * d..(h + 1) * t * d];
+                let vh = &v[l][h * t * d..(h + 1) * t * d];
+                self.heads[l][h]
+                    .qstats
+                    .update(&qabs[l][h * d..(h + 1) * d], t as f32);
+                if qt > 0 {
+                    self.quantize_into(l, h, &kh[..qt * d], &vh[..qt * d], qt, 0);
+                }
+                let head = &mut self.heads[l][h];
+                head.res.extend(&kh[qt * d..], &vh[qt * d..], rl);
+            }
+        }
+        self.qlen = qt;
+        self.pos = t;
+        Ok(())
+    }
+
+    /// Append one decoded token's K/V/|Q| (from the decode step outputs);
+    /// triggers a lazy quantization flush when the residual has reached
+    /// `r_limit`. When the quantized window is full, tokens keep
+    /// accumulating in the residual until it genuinely overflows.
+    pub fn append(&mut self, knew: &[Vec<f32>], vnew: &[Vec<f32>], qabs: &[Vec<f32>]) -> Result<()> {
+        let can_flush = self.qlen + self.r_limit <= self.capacity
+            || !matches!(self.policy, crate::kvcache::eviction::CachePolicy::Stop);
+        if self.rlen() >= self.r_limit && can_flush {
+            self.flush()?;
+        }
+        if self.rlen() >= self.heads[0][0].res.capacity {
+            bail!("cache exhausted at pos {}", self.pos);
+        }
+        let d = self.d;
+        for l in 0..self.heads.len() {
+            for h in 0..self.mc_n_kv {
+                let head = &mut self.heads[l][h];
+                head.qstats.update(&qabs[l][h * d..(h + 1) * d], 1.0);
+                head.res.push(&knew[l][h * d..(h + 1) * d], &vnew[l][h * d..(h + 1) * d]);
+            }
+        }
+        self.pos += 1;
+        Ok(())
+    }
+
+    /// Quantize `r_limit` residual tokens into the window (the App. D.1
+    /// KeyQuant event).
+    pub fn flush(&mut self) -> Result<()> {
+        let t = self.r_limit;
+        if self.qlen + t > self.capacity {
+            // extension: sliding-window eviction instead of failing
+            let n = self.evict_for(self.policy, t);
+            self.evicted_tokens += n;
+        }
+        if self.qlen + t > self.capacity {
+            bail!("quantized window full ({} + {t} > {})", self.qlen, self.capacity);
+        }
+        for l in 0..self.heads.len() {
+            for h in 0..self.mc_n_kv {
+                let (kblk, vblk) = self.heads[l][h].res.drain(t);
+                let at = self.qlen;
+                self.quantize_into(l, h, &kblk, &vblk, t, at);
+            }
+        }
+        self.qlen += t;
+        Ok(())
+    }
+
+    /// Recompute the channel plan from current I_d (refresh ablation; also
+    /// re-quantizes nothing — only affects FUTURE windows, mirroring the
+    /// paper's periodic salience update).
+    pub fn replan(&mut self) {
+        for row in self.heads.iter_mut() {
+            for head in row.iter_mut() {
+                head.planned = false;
+            }
+        }
+    }
+
+    fn quantize_into(&mut self, l: usize, h: usize, k: &[f32], v: &[f32], t: usize, at: usize) {
+        let d = self.d;
+        let g = self.group;
+        let opts = self.method.key_opts(g);
+        // rotate keys into quantization space
+        let mut krot = k.to_vec();
+        if self.method.rotate {
+            rotation::rotate_rows(&mut krot, t, d, &self.rot);
+        }
+        let head = &mut self.heads[l][h];
+        if !head.planned {
+            let imp = head.qstats.importance();
+            let order = window::plan_order(self.method.ordering, &imp, &krot, t, d);
+            head.idx = order.iter().map(|&x| x as i32).collect();
+            head.planned = true;
+        }
+        let order: Vec<usize> = head.idx.iter().map(|&x| x as usize).collect();
+        let kw = window::quantize_key_window(&krot, t, d, head.spec, &order, opts);
+        head.store_key_window(&kw, at);
+        let gv = g.min(d);
+        let vw = window::quantize_value_window(v, t, d, head.spec.v_bits, gv);
+        head.store_value_window(&vw, at);
+    }
+
+    /// Exact cache bytes across all layers/heads (invariant #7).
+    pub fn bytes_used(&self) -> usize {
+        self.heads
+            .iter()
+            .flat_map(|row| row.iter())
+            .map(|h| h.bytes_used(self.qlen))
+            .sum()
+    }
+
+    /// What the same context would cost in 16-bit (the Fig. 5 baseline).
+    pub fn bytes_fp16_equiv(&self) -> usize {
+        let toks = self.qlen + self.rlen();
+        self.heads.len() * self.mc_n_kv * toks * self.d * 2 * 2
+    }
+
+    /// Importance snapshot for analyses (Fig. 3).
+    pub fn importance(&self, l: usize, h: usize) -> Vec<f32> {
+        self.heads[l][h].qstats.importance()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn setup(method: Method, r_limit: usize) -> (ModelConfig, CacheConfig, RequestCache) {
+        let mc = ModelConfig { n_layers: 2, ..ModelConfig::default_build() };
+        let cc = CacheConfig::default_build();
+        let spec = TierSpec { n16: 2, n4: 2, n2: 28, v_bits: 2 };
+        let cache = RequestCache::new(&mc, &cc, &vec![spec; 2], method, r_limit);
+        (mc, cc, cache)
+    }
+
+    fn rand_kv(rng: &mut Pcg32, mc: &ModelConfig, t: usize) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let n = mc.n_kv_heads * t * mc.d_head;
+        let k = (0..mc.n_layers).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+        let v = (0..mc.n_layers).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+        let qa = (0..mc.n_layers)
+            .map(|_| (0..mc.n_kv_heads * mc.d_head).map(|_| rng.f32() + 0.01).collect())
+            .collect();
+        (k, v, qa)
+    }
+
+    #[test]
+    fn prefill_split_respects_r_limit_and_alignment() {
+        let (mc, _, mut cache) = setup(Method::mixkvq("mix30"), 128);
+        let mut rng = Pcg32::seeded(61);
+        let t = 300;
+        let (k, v, qa) = rand_kv(&mut rng, &mc, t);
+        cache.load_prefill(&k, &v, &qa, t).unwrap();
+        assert_eq!(cache.qlen % 32, 0);
+        assert_eq!(cache.qlen + cache.rlen(), t);
+        assert!(cache.rlen() <= 128);
+        assert_eq!(cache.pos, t);
+        // t=300, r=128: qt = ceil(172/32)*32 = 192, residual 108
+        assert_eq!(cache.qlen, 192);
+        assert_eq!(cache.rlen(), 108);
+    }
+
+    #[test]
+    fn short_prompt_stays_in_residual() {
+        let (mc, _, mut cache) = setup(Method::kivi("kv2"), 128);
+        let mut rng = Pcg32::seeded(62);
+        let (k, v, qa) = rand_kv(&mut rng, &mc, 50);
+        cache.load_prefill(&k, &v, &qa, 50).unwrap();
+        assert_eq!(cache.qlen, 0);
+        assert_eq!(cache.rlen(), 50);
+        // residual keys are bit-exact (invariant #5)
+        let d = mc.d_head;
+        assert_eq!(cache.heads[0][1].res.keys(), &k[0][1 * 50 * d..1 * 50 * d + 50 * d]);
+    }
+
+    #[test]
+    fn append_triggers_flush_at_r_limit() {
+        let (mc, _, mut cache) = setup(Method::mixkvq("mix30"), 32);
+        let mut rng = Pcg32::seeded(63);
+        let (k, v, qa) = rand_kv(&mut rng, &mc, 20);
+        cache.load_prefill(&k, &v, &qa, 20).unwrap();
+        assert_eq!(cache.qlen, 0);
+        for step in 0..13 {
+            let (kn, vn, qn) = rand_kv(&mut rng, &mc, 1);
+            cache.append(&kn, &vn, &qn).unwrap();
+            assert_eq!(cache.pos, 21 + step);
+        }
+        // residual hit 32 = r_limit after 12 appends; the 13th flushes first
+        assert_eq!(cache.qlen, 32);
+        assert_eq!(cache.rlen(), 1);
+    }
+
+    #[test]
+    fn dequant_roundtrip_error_bounded() {
+        let (mc, _, mut cache) = setup(Method::mixkvq("mix30"), 32);
+        let mut rng = Pcg32::seeded(64);
+        let t = 64;
+        let (k, v, qa) = rand_kv(&mut rng, &mc, t);
+        cache.load_prefill(&k, &v, &qa, t).unwrap();
+        assert_eq!(cache.qlen, 32);
+        let d = mc.d_head;
+        let kq = cache.heads[0][0].dequant_keys(cache.qlen);
+        let korig = &k[0][..32 * d];
+        let err = kq.iter().zip(korig).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(err < 2.0, "{err}");
+        // 2 bf16 channels exact per token
+        let vq = cache.heads[0][0].dequant_values(cache.qlen);
+        let verr = vq
+            .iter()
+            .zip(&v[0][..32 * d])
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(verr < 2.0, "{verr}");
+    }
+
+    #[test]
+    fn rotation_roundtrip_through_cache() {
+        // RotateKV path: dequant(quant(k·H)) ≈ k·H, so scores with rotated q
+        // approximate exact scores.
+        let (mc, _, mut cache) = setup(Method::rotatekv("kv4"), 32);
+        let mut rng = Pcg32::seeded(65);
+        let t = 64; // > r_limit so 32 tokens land in the quantized window
+        let (k, v, qa) = rand_kv(&mut rng, &mc, t);
+        cache.load_prefill(&k, &v, &qa, t).unwrap();
+        assert_eq!(cache.qlen, 32);
+        let d = mc.d_head;
+        let kq = cache.heads[0][0].dequant_keys(32); // rotated space
+        let mut krot = k[0][..32 * d].to_vec();
+        rotation::rotate_rows(&mut krot, 32, d, &cache.rot);
+        // setup() uses the mix30 spec: 28 channels sit at 2-bit, so bound by
+        // the 2-bit worst case of a rotated gaussian (range/3 / 2)
+        let err = kq.iter().zip(&krot).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(err < 1.5, "{err}");
+    }
+
+    #[test]
+    fn bytes_used_smaller_than_fp16() {
+        let (mc, _, mut cache) = setup(Method::mixkvq("mix225"), 32);
+        let mut rng = Pcg32::seeded(66);
+        let t = 512;
+        let (k, v, qa) = rand_kv(&mut rng, &mc, t);
+        cache.load_prefill(&k, &v, &qa, t).unwrap();
+        let used = cache.bytes_used();
+        let fp16 = cache.bytes_fp16_equiv();
+        assert!(
+            (used as f64) < 0.45 * fp16 as f64,
+            "used={used} fp16={fp16} ratio={}",
+            used as f64 / fp16 as f64
+        );
+    }
+
+    #[test]
+    fn flush_overflow_errors() {
+        let (mc, _, mut cache) = setup(Method::kivi("kv2"), 128);
+        let mut rng = Pcg32::seeded(67);
+        let (k, v, qa) = rand_kv(&mut rng, &mc, 512);
+        cache.load_prefill(&k, &v, &qa, 512).unwrap();
+        // qt = ceil(384/32)*32 = 384, residual starts at 128 (= r_limit)
+        assert_eq!(cache.qlen, 384);
+        // first append flushes (384+128 <= 512) then pushes; subsequent
+        // appends fill the residual until it genuinely overflows.
+        let mut err_at = None;
+        for i in 0..200 {
+            let (kn, vn, qn) = rand_kv(&mut rng, &mc, 1);
+            if cache.append(&kn, &vn, &qn).is_err() {
+                err_at = Some(i);
+                break;
+            }
+        }
+        // after flush: qlen=512 (full); residual has 1 + 127 more = 128 slots
+        assert_eq!(cache.qlen, 512);
+        assert_eq!(err_at, Some(128), "should exhaust exactly at residual cap");
+    }
+}

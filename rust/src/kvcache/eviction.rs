@@ -1,0 +1,167 @@
+//! Extension: sink + sliding-window eviction over the *quantized* window.
+//!
+//! The paper positions MixKVQ as orthogonal to eviction ("it can be
+//! combined with ... active pages managed by retrieval systems", §2); this
+//! module provides the combination for the simplest eviction family the
+//! paper cites (StreamingLLM / attention sinks, Xiao et al. 2024): when the
+//! quantized window is full, drop the oldest non-sink group-aligned block
+//! so decoding can continue indefinitely at bounded memory.
+//!
+//! Eviction operates directly on the packed buffers (byte shifts), so a
+//! compaction costs O(window bytes) with no dequantization.
+//!
+//! Positions are NOT renumbered (RoPE already baked into stored keys);
+//! like StreamingLLM-with-cache this changes attention structure relative
+//! to a full cache — `ext1` in the experiment harness measures that cost.
+
+use crate::kvcache::cache::{HeadState, RequestCache};
+
+/// What to do when the quantized window cannot absorb another flush.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CachePolicy {
+    /// Finish the request (the default serving behaviour).
+    Stop,
+    /// Evict the oldest `evict` tokens beyond `sink` protected initial
+    /// tokens; both must be group-aligned.
+    SlidingWindow { sink: usize, evict: usize },
+}
+
+/// Shift a row-major [capacity, w] buffer left by `n` rows over the range
+/// `[from, len)` (drops rows `[from, from+n)`).
+fn shift_rows<T: Copy>(buf: &mut [T], w: usize, from: usize, n: usize, len: usize) {
+    if w == 0 || n == 0 {
+        return;
+    }
+    buf.copy_within((from + n) * w..len * w, from * w);
+}
+
+impl HeadState {
+    /// Drop quantized tokens `[sink, sink+evict)`, compacting codes and
+    /// scales. Caller updates the request-level qlen.
+    pub fn evict_block(&mut self, sink: usize, evict: usize, qlen: usize) {
+        let g = self.group;
+        assert!(sink % g == 0 && evict % g == 0, "eviction must be group-aligned");
+        assert!(sink + evict <= qlen);
+        let (n16, n4, n2) = (self.spec.n16, self.spec.n4, self.spec.n2);
+        let d = self.d;
+        shift_rows(&mut self.k16, n16, sink, evict, qlen);
+        shift_rows(&mut self.k4p, n4 / 2, sink, evict, qlen);
+        shift_rows(&mut self.k2p, n2 / 4, sink, evict, qlen);
+        let (gs, ge, gq) = (sink / g, evict / g, qlen / g);
+        shift_rows(&mut self.k4s, n4, gs, ge, gq);
+        shift_rows(&mut self.k4z, n4, gs, ge, gq);
+        shift_rows(&mut self.k2s, n2, gs, ge, gq);
+        shift_rows(&mut self.k2z, n2, gs, ge, gq);
+        if self.spec.v_bits == 16 {
+            shift_rows(&mut self.vfull, d, sink, evict, qlen);
+        } else {
+            shift_rows(&mut self.vp, d * self.spec.v_bits / 8, sink, evict, qlen);
+            shift_rows(&mut self.vs, d / g, sink, evict, qlen);
+            shift_rows(&mut self.vz, d / g, sink, evict, qlen);
+        }
+    }
+}
+
+impl RequestCache {
+    /// Apply a sliding-window eviction so that at least `needed` more
+    /// quantized tokens fit. Returns tokens evicted.
+    pub fn evict_for(&mut self, policy: CachePolicy, needed: usize) -> usize {
+        let CachePolicy::SlidingWindow { sink, evict } = policy else {
+            return 0;
+        };
+        let cap = self.capacity();
+        let mut total = 0;
+        while self.qlen + needed > cap && self.qlen >= sink + evict {
+            for row in 0..self.heads.len() {
+                for h in 0..self.heads[row].len() {
+                    let qlen = self.qlen;
+                    self.heads[row][h].evict_block(sink, evict, qlen);
+                }
+            }
+            self.qlen -= evict;
+            total += evict;
+        }
+        total
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.heads[0][0].capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::{CacheConfig, ModelConfig};
+    use crate::quant::methods::Method;
+    use crate::quant::window::TierSpec;
+    use crate::util::rng::Pcg32;
+
+    fn cache_with(t: usize, method: Method) -> (ModelConfig, RequestCache) {
+        let mc = ModelConfig { n_layers: 1, ..ModelConfig::default_build() };
+        let cc = CacheConfig::default_build();
+        let spec = TierSpec { n16: 2, n4: 2, n2: 28, v_bits: 2 };
+        let mut cache = RequestCache::new(&mc, &cc, &[spec], method, 32);
+        let mut rng = Pcg32::seeded(91);
+        let n = mc.n_kv_heads * t * mc.d_head;
+        let k = vec![(0..n).map(|_| rng.normal()).collect::<Vec<f32>>()];
+        let v = vec![(0..n).map(|_| rng.normal()).collect::<Vec<f32>>()];
+        let qa = vec![(0..mc.n_kv_heads * mc.d_head).map(|_| rng.f32() + 0.1).collect()];
+        cache.load_prefill(&k, &v, &qa, t).unwrap();
+        (mc, cache)
+    }
+
+    #[test]
+    fn eviction_preserves_sink_and_tail() {
+        let (_, mut cache) = cache_with(256, Method::mixkvq("mix30"));
+        let qlen0 = cache.qlen; // = ceil((256-32)/32)*32 = 224
+        let before_sink = cache.heads[0][0].dequant_keys(qlen0);
+        let d = cache.heads[0][0].d;
+        let evicted = cache.evict_for(
+            CachePolicy::SlidingWindow { sink: 32, evict: 32 },
+            cache.capacity() - cache.qlen + 32, // force one eviction round
+        );
+        assert_eq!(evicted, 32);
+        assert_eq!(cache.qlen, qlen0 - 32);
+        let after = cache.heads[0][0].dequant_keys(cache.qlen);
+        // sink rows identical
+        assert_eq!(&after[..32 * d], &before_sink[..32 * d]);
+        // tail rows = old rows shifted by 32
+        assert_eq!(&after[32 * d..], &before_sink[64 * d..qlen0 * d]);
+    }
+
+    #[test]
+    fn stop_policy_evicts_nothing() {
+        let (_, mut cache) = cache_with(256, Method::kivi("kv2"));
+        let q0 = cache.qlen;
+        assert_eq!(cache.evict_for(CachePolicy::Stop, 512), 0);
+        assert_eq!(cache.qlen, q0);
+    }
+
+    #[test]
+    fn repeated_eviction_bounds_window() {
+        let (_, mut cache) = cache_with(512, Method::mixkvq("mix225"));
+        // 512-token prompt at R=32: qlen = ceil((512-32)/32)*32 = 480
+        assert_eq!(cache.qlen, 480);
+        let policy = CachePolicy::SlidingWindow { sink: 32, evict: 64 };
+        let evicted = cache.evict_for(policy, 512); // impossible to satisfy fully
+        // evicts until qlen < sink + evict = 96 (sink always kept)
+        assert_eq!(cache.qlen, 32);
+        assert_eq!(evicted, 480 - 32);
+        // window remains group-aligned and dequantizable
+        let _ = cache.heads[0][0].dequant_keys(cache.qlen);
+    }
+
+    #[test]
+    fn values_evicted_consistently_with_keys() {
+        let (_, mut cache) = cache_with(256, Method::kivi("kv4"));
+        let q0 = cache.qlen;
+        let v_before = cache.heads[0][1].dequant_values(q0);
+        let d = cache.heads[0][1].d;
+        let needed = cache.capacity() - q0 + 32; // force exactly one round
+        cache.evict_for(CachePolicy::SlidingWindow { sink: 0, evict: 32 }, needed);
+        assert_eq!(cache.qlen, q0 - 32);
+        let v_after = cache.heads[0][1].dequant_values(cache.qlen);
+        assert_eq!(&v_after[..(q0 - 32) * d], &v_before[32 * d..q0 * d]);
+    }
+}

@@ -1,0 +1,116 @@
+//! Full-precision residual buffer X_R (Fig. 4 / App. D.1).
+//!
+//! Newly generated K/V stay here in f32 until `limit` tokens accumulate;
+//! then the whole block is drained into the quantized cache (lazy update —
+//! amortizes channel selection and bit-packing over R steps, and keeps
+//! volatile recent salience statistics out of the quantized window).
+
+/// One head's residual buffer: row-major [capacity, d], `len` valid rows.
+#[derive(Clone, Debug)]
+pub struct ResidualBuffer {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub len: usize,
+    pub capacity: usize,
+    pub d: usize,
+}
+
+impl ResidualBuffer {
+    pub fn new(capacity: usize, d: usize) -> Self {
+        ResidualBuffer {
+            k: vec![0.0; capacity * d],
+            v: vec![0.0; capacity * d],
+            len: 0,
+            capacity,
+            d,
+        }
+    }
+
+    pub fn push(&mut self, k: &[f32], v: &[f32]) {
+        assert!(self.len < self.capacity, "residual overflow");
+        assert_eq!(k.len(), self.d);
+        let off = self.len * self.d;
+        self.k[off..off + self.d].copy_from_slice(k);
+        self.v[off..off + self.d].copy_from_slice(v);
+        self.len += 1;
+    }
+
+    /// Bulk-load `t` tokens (prefill leftover), row-major [t, d].
+    pub fn extend(&mut self, k: &[f32], v: &[f32], t: usize) {
+        assert!(self.len + t <= self.capacity);
+        let off = self.len * self.d;
+        self.k[off..off + t * self.d].copy_from_slice(&k[..t * self.d]);
+        self.v[off..off + t * self.d].copy_from_slice(&v[..t * self.d]);
+        self.len += t;
+    }
+
+    /// Drain the first `t` tokens for quantization, shifting the remainder
+    /// down (t is the runtime R knob; remainder stays full-precision).
+    pub fn drain(&mut self, t: usize) -> (Vec<f32>, Vec<f32>) {
+        assert!(t <= self.len);
+        let k: Vec<f32> = self.k[..t * self.d].to_vec();
+        let v: Vec<f32> = self.v[..t * self.d].to_vec();
+        self.k.copy_within(t * self.d..self.len * self.d, 0);
+        self.v.copy_within(t * self.d..self.len * self.d, 0);
+        self.len -= t;
+        (k, v)
+    }
+
+    pub fn keys(&self) -> &[f32] {
+        &self.k[..self.len * self.d]
+    }
+
+    pub fn values(&self) -> &[f32] {
+        &self.v[..self.len * self.d]
+    }
+
+    /// Storage bytes if these f32 rows were held as BF16 on device (the
+    /// accountant's convention: residual is 2 bytes/elem, like the paper's
+    /// BF16 buffer).
+    pub fn bytes(&self) -> usize {
+        2 * 2 * self.len * self.d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_drain_preserves_order_and_tail() {
+        let mut rb = ResidualBuffer::new(8, 2);
+        for i in 0..5 {
+            rb.push(&[i as f32, 0.0], &[0.0, i as f32]);
+        }
+        assert_eq!(rb.len, 5);
+        let (k, _v) = rb.drain(4);
+        assert_eq!(k, vec![0.0, 0.0, 1.0, 0.0, 2.0, 0.0, 3.0, 0.0]);
+        assert_eq!(rb.len, 1);
+        // invariant #5: the undrained tail is bit-exact
+        assert_eq!(rb.keys(), &[4.0, 0.0]);
+    }
+
+    #[test]
+    fn extend_bulk() {
+        let mut rb = ResidualBuffer::new(4, 2);
+        rb.extend(&[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0], 2);
+        assert_eq!(rb.len, 2);
+        assert_eq!(rb.values(), &[5.0, 6.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "residual overflow")]
+    fn overflow_panics() {
+        let mut rb = ResidualBuffer::new(1, 2);
+        rb.push(&[0.0, 0.0], &[0.0, 0.0]);
+        rb.push(&[0.0, 0.0], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let mut rb = ResidualBuffer::new(8, 4);
+        rb.push(&[0.0; 4], &[0.0; 4]);
+        rb.push(&[0.0; 4], &[0.0; 4]);
+        assert_eq!(rb.bytes(), 2 * 2 * 2 * 4);
+    }
+}

@@ -1,0 +1,71 @@
+//! # MixKVQ — query-aware mixed-precision KV cache quantization
+//!
+//! A full-system reproduction of *MixKVQ: Query-Aware Mixed-Precision KV
+//! Cache Quantization for Long-Context Reasoning* (ACL 2026) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** (`python/compile/kernels/`): Pallas kernels fusing packed-int
+//!   dequantization into the attention dot products.
+//! * **L2** (`python/compile/model.py`): the MiniReasoner transformer whose
+//!   prefill/decode graphs are AOT-lowered to HLO text.
+//! * **L3** (this crate): the serving runtime — PJRT execution, quantized
+//!   paged KV cache, salience tracking, continuous batching, and the full
+//!   experiment harness reproducing every table and figure of the paper.
+//!
+//! See DESIGN.md for the experiment index and EXPERIMENTS.md for results.
+
+pub mod util {
+    pub mod bench;
+    pub mod cli;
+    pub mod json;
+    pub mod rng;
+    pub mod stats;
+}
+
+pub mod quant {
+    pub mod asym;
+    pub mod methods;
+    pub mod packing;
+    pub mod rotation;
+    pub mod salience;
+    pub mod window;
+}
+
+pub mod model {
+    pub mod config;
+    pub mod reference;
+    pub mod sampler;
+    pub mod tokenizer;
+    pub mod weights;
+}
+
+pub mod kvcache {
+    pub mod accountant;
+    pub mod cache;
+    pub mod eviction;
+    pub mod residual;
+}
+
+pub mod runtime {
+    pub mod client;
+    pub mod executor;
+    pub mod registry;
+}
+
+pub mod coordinator {
+    pub mod batcher;
+    pub mod engine;
+    pub mod metrics;
+    pub mod router;
+    pub mod scheduler;
+    pub mod session;
+}
+
+pub mod harness {
+    pub mod accuracy;
+    pub mod experiments;
+    pub mod pareto;
+    pub mod perplexity;
+    pub mod refdriver;
+    pub mod workloads;
+}

@@ -1,0 +1,127 @@
+//! MixKVQ CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   serve   --method <name> --requests N --max-new N --r-limit N --budget-mb N
+//!   bench   --id <fig1|...|tab8|all> [--quick]
+//!   demo    --id tab1            (error-accumulation transcript)
+//!   search  [--quick]            (Fig. 7 Pareto threshold search)
+//!   info                         (artifacts + variants + compile times)
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use mixkvq::coordinator::engine::Engine;
+use mixkvq::coordinator::router::{Server, ServerConfig};
+use mixkvq::harness::experiments::{self, ExpCtx, ALL_IDS};
+use mixkvq::harness::workloads;
+use mixkvq::model::config::Meta;
+use mixkvq::quant::methods::Method;
+use mixkvq::util::cli::Args;
+use mixkvq::util::rng::Pcg32;
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand().unwrap_or("help") {
+        "serve" => serve(&args),
+        "bench" => bench(&args),
+        "demo" => {
+            let ctx = ExpCtx::new(&artifacts_dir(&args), args.has("quick"));
+            let id = args.get_or("id", "tab1");
+            println!("{}", experiments::run(&ctx, &id)?.print());
+            Ok(())
+        }
+        "search" => {
+            let ctx = ExpCtx::new(&artifacts_dir(&args), args.has("quick"));
+            println!("{}", experiments::run(&ctx, "fig7")?.print());
+            Ok(())
+        }
+        "info" => info(&args),
+        _ => {
+            println!(
+                "mixkvq — query-aware mixed-precision KV cache quantization\n\n\
+                 USAGE: mixkvq <serve|bench|demo|search|info> [options]\n\n\
+                 serve   --method mixkvq-mix30 --requests 32 --max-new 48 --r-limit 128 --budget-mb 64\n\
+                 bench   --id all|fig1|fig2|fig3|fig5|fig6|fig7|tab1..tab8 [--quick]\n\
+                 demo    --id tab1\n\
+                 search  [--quick]\n\
+                 info\n\n\
+                 Global: --artifacts <dir> (default: artifacts)"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let method_name = args.get_or("method", "mixkvq-mix30");
+    let Some(method) = Method::by_name(&method_name) else {
+        bail!("unknown method `{method_name}` — see quant::methods::Method::by_name");
+    };
+    let n_requests = args.usize_or("requests", 32)?;
+    let max_new = args.usize_or("max-new", 48)?;
+    let r_limit = args.usize_or("r-limit", 128)?;
+    let budget_mb = args.usize_or("budget-mb", 64)?;
+    let seed = args.u64_or("seed", 0)?;
+
+    eprintln!("loading engine ({method_name})...");
+    let engine = Engine::new(&artifacts_dir(args), method, r_limit)?;
+    let mut server = Server::new(
+        engine,
+        ServerConfig {
+            memory_budget_bytes: budget_mb << 20,
+            max_prefills_per_cycle: 2,
+            seed,
+        },
+    );
+    let mut rng = Pcg32::seeded(seed);
+    let trace = workloads::sharegpt_trace(&mut rng, n_requests, max_new);
+    eprintln!("serving {n_requests} requests (max_new={max_new}, R={r_limit})...");
+    let completed = server.run(trace)?;
+    println!("{}", server.metrics.summary());
+    let b = mixkvq::coordinator::metrics::breakdown(&server.engine.timers);
+    println!(
+        "breakdown: model_exec {:.1}%  quantize {:.1}%  assemble {:.1}%  (quant events/step {:.1}%)",
+        b.model_exec_pct, b.quantize_pct, b.assemble_pct, b.quantize_call_rate_pct
+    );
+    println!("completed {} requests", completed.len());
+    Ok(())
+}
+
+fn bench(args: &Args) -> Result<()> {
+    let ctx = ExpCtx::new(&artifacts_dir(args), args.has("quick"));
+    let id = args.get_or("id", "all");
+    if id == "all" {
+        for id in ALL_IDS {
+            match experiments::run(&ctx, id) {
+                Ok(t) => println!("{}", t.print()),
+                Err(e) => println!("[{id}] FAILED: {e:#}"),
+            }
+        }
+    } else {
+        println!("{}", experiments::run(&ctx, &id)?.print());
+    }
+    Ok(())
+}
+
+fn info(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let meta = Meta::load(&dir)?;
+    println!("model: {:?}", meta.model);
+    println!("cache: {:?}", meta.cache);
+    println!("variants:");
+    for v in &meta.variants {
+        println!(
+            "  {:<8} key_bits={:.2} avg_bits={:.2} layers={:?}",
+            v.name,
+            v.key_bits,
+            v.avg_bits,
+            v.layers.iter().map(|l| (l.n16, l.n4, l.n2, l.v_bits)).collect::<Vec<_>>()
+        );
+    }
+    Ok(())
+}

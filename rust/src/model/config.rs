@@ -1,0 +1,220 @@
+//! Model/cache/variant configuration, deserialized from artifacts/meta.json
+//! (written by python/compile/aot.py — the single source of shape truth).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::quant::window::TierSpec;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub rope_theta: f32,
+    pub max_position: usize,
+    pub rmsnorm_eps: f32,
+}
+
+impl ModelConfig {
+    pub fn q_per_kv(&self) -> usize {
+        self.n_q_heads / self.n_kv_heads
+    }
+
+    /// The build-time default — must match python/compile/config.py. Used
+    /// by unit tests that run without artifacts.
+    pub fn default_build() -> Self {
+        ModelConfig {
+            vocab: 128,
+            d_model: 128,
+            n_layers: 4,
+            n_q_heads: 4,
+            n_kv_heads: 2,
+            d_head: 32,
+            d_ff: 256,
+            rope_theta: 10000.0,
+            max_position: 704,
+            rmsnorm_eps: 1e-5,
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct CacheConfig {
+    pub capacity: usize,
+    pub residual: usize,
+    pub group: usize,
+    pub decode_batch: usize,
+    pub prefill_buckets: Vec<usize>,
+}
+
+impl CacheConfig {
+    pub fn default_build() -> Self {
+        CacheConfig {
+            capacity: 512,
+            residual: 128,
+            group: 32,
+            decode_batch: 8,
+            prefill_buckets: vec![128, 512],
+        }
+    }
+
+    /// Max sequence positions a request can occupy (quantized + residual + 1).
+    pub fn max_context(&self) -> usize {
+        self.capacity + self.residual
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct VariantSpec {
+    pub name: String,
+    pub layers: Vec<TierSpec>,
+    pub key_bits: f64,
+    pub avg_bits: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Meta {
+    pub model: ModelConfig,
+    pub cache: CacheConfig,
+    pub variants: Vec<VariantSpec>,
+}
+
+impl Meta {
+    pub fn load(artifacts_dir: &Path) -> Result<Meta> {
+        let path = artifacts_dir.join("meta.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&src)
+    }
+
+    pub fn parse(src: &str) -> Result<Meta> {
+        let j = Json::parse(src)?;
+        let m = j.get("model")?;
+        let model = ModelConfig {
+            vocab: m.get("vocab")?.as_usize()?,
+            d_model: m.get("d_model")?.as_usize()?,
+            n_layers: m.get("n_layers")?.as_usize()?,
+            n_q_heads: m.get("n_q_heads")?.as_usize()?,
+            n_kv_heads: m.get("n_kv_heads")?.as_usize()?,
+            d_head: m.get("d_head")?.as_usize()?,
+            d_ff: m.get("d_ff")?.as_usize()?,
+            rope_theta: m.get("rope_theta")?.as_f64()? as f32,
+            max_position: m.get("max_position")?.as_usize()?,
+            rmsnorm_eps: m.get("rmsnorm_eps")?.as_f64()? as f32,
+        };
+        let c = j.get("cache")?;
+        let cache = CacheConfig {
+            capacity: c.get("capacity")?.as_usize()?,
+            residual: c.get("residual")?.as_usize()?,
+            group: c.get("group")?.as_usize()?,
+            decode_batch: c.get("decode_batch")?.as_usize()?,
+            prefill_buckets: c
+                .get("prefill_buckets")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_usize())
+                .collect::<Result<_>>()?,
+        };
+        let mut variants = Vec::new();
+        for v in j.get("variants")?.as_arr()? {
+            let mut layers = Vec::new();
+            for layer in v.get("layers")?.as_arr()? {
+                let l = layer.as_arr()?;
+                if l.len() != 4 {
+                    bail!("bad tier tuple");
+                }
+                layers.push(TierSpec {
+                    n16: l[0].as_usize()?,
+                    n4: l[1].as_usize()?,
+                    n2: l[2].as_usize()?,
+                    v_bits: l[3].as_usize()?,
+                });
+            }
+            variants.push(VariantSpec {
+                name: v.get("name")?.as_str()?.to_string(),
+                layers,
+                key_bits: v.get("key_bits")?.as_f64()?,
+                avg_bits: v.get("avg_bits")?.as_f64()?,
+            });
+        }
+        Ok(Meta { model, cache, variants })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantSpec> {
+        self.variants
+            .iter()
+            .find(|v| v.name == name)
+            .with_context(|| format!("unknown variant `{name}`"))
+    }
+
+    /// Synthetic Meta matching the build defaults (tests without artifacts).
+    pub fn default_build() -> Meta {
+        let model = ModelConfig::default_build();
+        let d = model.d_head;
+        let uni = |name: &str, n16: usize, n4: usize, n2: usize, vb: usize| VariantSpec {
+            name: name.to_string(),
+            layers: vec![TierSpec { n16, n4, n2, v_bits: vb }; model.n_layers],
+            key_bits: crate::quant::salience::effective_key_bits(n16, n4, n2),
+            avg_bits: (crate::quant::salience::effective_key_bits(n16, n4, n2) + vb as f64) / 2.0,
+        };
+        let mut variants = vec![
+            uni("bf16", d, 0, 0, 16),
+            uni("kv4", 0, d, 0, 4),
+            uni("kv2", 0, 0, d, 2),
+            uni("k4v2", 0, d, 0, 2),
+            uni("k2v4", 0, 0, d, 4),
+            uni("mix225", 0, 4, 28, 2),
+            uni("mix30", 2, 2, 28, 2),
+            uni("mix325", 2, 6, 24, 2),
+        ];
+        let kv4 = TierSpec { n16: 0, n4: d, n2: 0, v_bits: 4 };
+        let kv2 = TierSpec { n16: 0, n4: 0, n2: d, v_bits: 2 };
+        variants.push(VariantSpec {
+            name: "kvtuner".into(),
+            layers: vec![kv4, kv2, kv2, kv4],
+            key_bits: 3.0,
+            avg_bits: 3.0,
+        });
+        Meta { model, cache: CacheConfig::default_build(), variants }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_build_shaped_meta() {
+        let src = r#"{
+          "model": {"vocab":128,"d_model":128,"n_layers":2,"n_q_heads":4,
+                    "n_kv_heads":2,"d_head":32,"d_ff":256,"rope_theta":10000.0,
+                    "max_position":704,"rmsnorm_eps":1e-05},
+          "cache": {"capacity":512,"residual":128,"group":32,"decode_batch":8,
+                    "prefill_buckets":[128,512]},
+          "variants": [{"name":"mix30","layers":[[2,2,28,2],[2,2,28,2]],
+                        "key_bits":3.0,"avg_bits":2.5}]
+        }"#;
+        let meta = Meta::parse(src).unwrap();
+        assert_eq!(meta.model.n_layers, 2);
+        assert_eq!(meta.cache.max_context(), 640);
+        let v = meta.variant("mix30").unwrap();
+        assert_eq!(v.layers[0].n2, 28);
+        assert!(meta.variant("nope").is_err());
+    }
+
+    #[test]
+    fn default_build_has_all_variants() {
+        let meta = Meta::default_build();
+        for name in ["bf16", "kv4", "kv2", "k4v2", "k2v4", "mix225", "mix30", "mix325", "kvtuner"] {
+            assert!(meta.variant(name).is_ok(), "{name}");
+        }
+        assert_eq!(meta.variant("kvtuner").unwrap().layers[1].v_bits, 2);
+    }
+}

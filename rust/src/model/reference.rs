@@ -1,0 +1,472 @@
+//! Pure-Rust MiniReasoner — the f32 oracle mirroring python/compile/model.py.
+//!
+//! Two uses:
+//! * invariant #8 (DESIGN.md): the HLO executables must agree with this
+//!   implementation to ~1e-4 (tests/integration.rs);
+//! * the *flexible* experiment path: analyses that sweep tier counts or
+//!   thresholds beyond the compiled HLO variants (Figs. 6/7, Table 5/6
+//!   sweeps) run here, where shapes are not baked into a graph.
+//!
+//! Numerics deliberately match jax: RMSNorm, half-rotation RoPE, tanh-GELU
+//! (jax.nn.gelu approximate=True), softmax with max-subtraction.
+
+use super::config::ModelConfig;
+use super::weights::Weights;
+
+pub struct RefModel<'a> {
+    pub mc: ModelConfig,
+    pub w: &'a Weights,
+}
+
+/// Full-precision K/V/|Q| for one prompt: `k[l]`/`v[l]` are [Hkv, T, dh]
+/// row-major, `qabs[l]` is [Hkv, dh] (mean |q| over positions, grouped).
+pub struct PrefillOut {
+    pub last_logits: Vec<f32>,
+    pub k: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    pub qabs: Vec<Vec<f32>>,
+}
+
+/// Per-layer attention context for a reference decode step. The quantized
+/// window arrives *already dequantized* (in rotated space); the residual
+/// window is raw f32 (unrotated) — exactly the HLO decode semantics.
+pub struct LayerCtx<'a> {
+    /// [Hkv, tq, dh] dequantized quantized-window keys, rotated space.
+    pub kq: &'a [f32],
+    /// [Hkv, tq, dh] dequantized values.
+    pub vq: &'a [f32],
+    pub tq: usize,
+    /// [Hkv, tr, dh] residual keys (unrotated, post-RoPE).
+    pub kres: &'a [f32],
+    pub vres: &'a [f32],
+    pub tr: usize,
+}
+
+pub struct DecodeOut {
+    pub logits: Vec<f32>,
+    /// [L][Hkv*dh] post-RoPE key/value of the new token.
+    pub knew: Vec<Vec<f32>>,
+    pub vnew: Vec<Vec<f32>>,
+    /// [L][Hkv*dh] mean |q| over the head group (I_d observation).
+    pub qabs: Vec<Vec<f32>>,
+}
+
+pub fn rmsnorm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + eps).sqrt();
+    for i in 0..x.len() {
+        out[i] = x[i] * inv * w[i];
+    }
+}
+
+/// y += x · W for row-major W [n, m].
+pub fn matvec(x: &[f32], w: &[f32], n: usize, m: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), n);
+    debug_assert_eq!(w.len(), n * m);
+    out[..m].fill(0.0);
+    for i in 0..n {
+        let xi = x[i];
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * m..(i + 1) * m];
+        for j in 0..m {
+            out[j] += xi * row[j];
+        }
+    }
+}
+
+/// jax.nn.gelu(approximate=True): 0.5x(1+tanh(√(2/π)(x+0.044715x³))).
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// Half-rotation RoPE in place over one head vector.
+pub fn apply_rope(x: &mut [f32], pos: usize, theta: f32) {
+    let d = x.len();
+    let half = d / 2;
+    for i in 0..half {
+        let freq = theta.powf(-(i as f32) / half as f32);
+        let ang = pos as f32 * freq;
+        let (sin, cos) = ang.sin_cos();
+        let (a, b) = (x[i], x[i + half]);
+        x[i] = a * cos - b * sin;
+        x[i + half] = b * cos + a * sin;
+    }
+}
+
+pub fn softmax_inplace(s: &mut [f32]) {
+    let max = s.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+    let mut sum = 0.0;
+    for v in s.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in s.iter_mut() {
+        *v *= inv;
+    }
+}
+
+impl<'a> RefModel<'a> {
+    pub fn new(mc: ModelConfig, w: &'a Weights) -> Self {
+        RefModel { mc, w }
+    }
+
+    /// Causal full-precision forward; returns logits [T, V] (teacher-forced
+    /// scoring) plus per-layer K/V/|Q| (prefill products).
+    pub fn forward_full(&self, tokens: &[i32]) -> (Vec<f32>, PrefillOut) {
+        let mc = &self.mc;
+        let (t, d) = (tokens.len(), mc.d_model);
+        let (hq, hkv, dh, qpk) = (mc.n_q_heads, mc.n_kv_heads, mc.d_head, mc.q_per_kv());
+        let embed = self.w.get("embed");
+        let mut h = vec![0f32; t * d];
+        for (i, &tok) in tokens.iter().enumerate() {
+            h[i * d..(i + 1) * d].copy_from_slice(&embed[tok as usize * d..(tok as usize + 1) * d]);
+        }
+        let mut ks = Vec::new();
+        let mut vs = Vec::new();
+        let mut qabss = Vec::new();
+        let mut x = vec![0f32; d];
+        let scale = 1.0 / (dh as f32).sqrt();
+        for l in 0..mc.n_layers {
+            let (wq, wk, wv, wo) = (
+                self.w.get(&format!("l{l}.wq")),
+                self.w.get(&format!("l{l}.wk")),
+                self.w.get(&format!("l{l}.wv")),
+                self.w.get(&format!("l{l}.wo")),
+            );
+            let mut q_all = vec![0f32; t * hq * dh];
+            let mut k_all = vec![0f32; t * hkv * dh];
+            let mut v_all = vec![0f32; t * hkv * dh];
+            for tok in 0..t {
+                rmsnorm(&h[tok * d..(tok + 1) * d], self.w.get(&format!("l{l}.ln1")), mc.rmsnorm_eps, &mut x);
+                matvec(&x, wq, d, hq * dh, &mut q_all[tok * hq * dh..(tok + 1) * hq * dh]);
+                matvec(&x, wk, d, hkv * dh, &mut k_all[tok * hkv * dh..(tok + 1) * hkv * dh]);
+                matvec(&x, wv, d, hkv * dh, &mut v_all[tok * hkv * dh..(tok + 1) * hkv * dh]);
+                for hh in 0..hq {
+                    apply_rope(&mut q_all[tok * hq * dh + hh * dh..tok * hq * dh + (hh + 1) * dh], tok, mc.rope_theta);
+                }
+                for hh in 0..hkv {
+                    apply_rope(&mut k_all[tok * hkv * dh + hh * dh..tok * hkv * dh + (hh + 1) * dh], tok, mc.rope_theta);
+                }
+            }
+            // attention, causal
+            let mut scores = vec![0f32; t];
+            for tok in 0..t {
+                let mut o = vec![0f32; hq * dh];
+                for hh in 0..hq {
+                    let kvh = hh / qpk;
+                    let q = &q_all[tok * hq * dh + hh * dh..tok * hq * dh + (hh + 1) * dh];
+                    for s in 0..=tok {
+                        let k = &k_all[s * hkv * dh + kvh * dh..s * hkv * dh + (kvh + 1) * dh];
+                        scores[s] = q.iter().zip(k).map(|(a, b)| a * b).sum::<f32>() * scale;
+                    }
+                    softmax_inplace(&mut scores[..=tok]);
+                    for s in 0..=tok {
+                        let v = &v_all[s * hkv * dh + kvh * dh..s * hkv * dh + (kvh + 1) * dh];
+                        let p = scores[s];
+                        for j in 0..dh {
+                            o[hh * dh + j] += p * v[j];
+                        }
+                    }
+                }
+                let mut proj = vec![0f32; d];
+                matvec(&o, wo, hq * dh, d, &mut proj);
+                for j in 0..d {
+                    h[tok * d + j] += proj[j];
+                }
+            }
+            // MLP
+            let (w1, w2) = (self.w.get(&format!("l{l}.w1")), self.w.get(&format!("l{l}.w2")));
+            let mut ff = vec![0f32; mc.d_ff];
+            let mut proj = vec![0f32; d];
+            for tok in 0..t {
+                rmsnorm(&h[tok * d..(tok + 1) * d], self.w.get(&format!("l{l}.ln2")), mc.rmsnorm_eps, &mut x);
+                matvec(&x, w1, d, mc.d_ff, &mut ff);
+                for f in ff.iter_mut() {
+                    *f = gelu(*f);
+                }
+                matvec(&ff, w2, mc.d_ff, d, &mut proj);
+                for j in 0..d {
+                    h[tok * d + j] += proj[j];
+                }
+            }
+            // stash K/V in [Hkv, T, dh] layout + grouped |Q| means
+            let mut kl = vec![0f32; hkv * t * dh];
+            let mut vl = vec![0f32; hkv * t * dh];
+            for s in 0..t {
+                for hh in 0..hkv {
+                    kl[hh * t * dh + s * dh..hh * t * dh + (s + 1) * dh]
+                        .copy_from_slice(&k_all[s * hkv * dh + hh * dh..s * hkv * dh + (hh + 1) * dh]);
+                    vl[hh * t * dh + s * dh..hh * t * dh + (s + 1) * dh]
+                        .copy_from_slice(&v_all[s * hkv * dh + hh * dh..s * hkv * dh + (hh + 1) * dh]);
+                }
+            }
+            let mut qa = vec![0f32; hkv * dh];
+            for s in 0..t {
+                for hh in 0..hq {
+                    let kvh = hh / qpk;
+                    for j in 0..dh {
+                        qa[kvh * dh + j] += q_all[s * hq * dh + hh * dh + j].abs();
+                    }
+                }
+            }
+            for v in qa.iter_mut() {
+                *v /= (t * qpk) as f32;
+            }
+            ks.push(kl);
+            vs.push(vl);
+            qabss.push(qa);
+        }
+        // final norm + logits
+        let mut logits = vec![0f32; t * mc.vocab];
+        for tok in 0..t {
+            rmsnorm(&h[tok * d..(tok + 1) * d], self.w.get("ln_f"), mc.rmsnorm_eps, &mut x);
+            for v in 0..mc.vocab {
+                logits[tok * mc.vocab + v] =
+                    x.iter().zip(&embed[v * d..(v + 1) * d]).map(|(a, b)| a * b).sum();
+            }
+        }
+        let last = logits[(t - 1) * mc.vocab..t * mc.vocab].to_vec();
+        (
+            logits,
+            PrefillOut { last_logits: last, k: ks, v: vs, qabs: qabss },
+        )
+    }
+
+    /// Single-token decode over (dequantized quantized window + residual +
+    /// self), mirroring the HLO decode graph. `rot` is row-major [dh, dh].
+    pub fn decode_step(&self, token: i32, pos: usize, ctx: &[LayerCtx], rot: &[f32]) -> DecodeOut {
+        let mc = &self.mc;
+        let d = mc.d_model;
+        let (hq, hkv, dh, qpk) = (mc.n_q_heads, mc.n_kv_heads, mc.d_head, mc.q_per_kv());
+        let embed = self.w.get("embed");
+        let mut h = embed[token as usize * d..(token as usize + 1) * d].to_vec();
+        let mut x = vec![0f32; d];
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut knews = Vec::new();
+        let mut vnews = Vec::new();
+        let mut qabss = Vec::new();
+        for l in 0..mc.n_layers {
+            let c = &ctx[l];
+            rmsnorm(&h, self.w.get(&format!("l{l}.ln1")), mc.rmsnorm_eps, &mut x);
+            let mut q = vec![0f32; hq * dh];
+            let mut k = vec![0f32; hkv * dh];
+            let mut v = vec![0f32; hkv * dh];
+            matvec(&x, self.w.get(&format!("l{l}.wq")), d, hq * dh, &mut q);
+            matvec(&x, self.w.get(&format!("l{l}.wk")), d, hkv * dh, &mut k);
+            matvec(&x, self.w.get(&format!("l{l}.wv")), d, hkv * dh, &mut v);
+            for hh in 0..hq {
+                apply_rope(&mut q[hh * dh..(hh + 1) * dh], pos, mc.rope_theta);
+            }
+            for hh in 0..hkv {
+                apply_rope(&mut k[hh * dh..(hh + 1) * dh], pos, mc.rope_theta);
+            }
+            let mut qa = vec![0f32; hkv * dh];
+            for hh in 0..hq {
+                for j in 0..dh {
+                    qa[(hh / qpk) * dh + j] += q[hh * dh + j].abs();
+                }
+            }
+            for a in qa.iter_mut() {
+                *a /= qpk as f32;
+            }
+            let mut o = vec![0f32; hq * dh];
+            let n_scores = c.tq + c.tr + 1;
+            let mut s = vec![0f32; n_scores];
+            let mut qrot = vec![0f32; dh];
+            for hh in 0..hq {
+                let kvh = hh / qpk;
+                let qh = &q[hh * dh..(hh + 1) * dh];
+                crate::quant::rotation::rotate_vec(qh, rot, &mut qrot);
+                for t in 0..c.tq {
+                    let kk = &c.kq[kvh * c.tq * dh + t * dh..kvh * c.tq * dh + (t + 1) * dh];
+                    s[t] = qrot.iter().zip(kk).map(|(a, b)| a * b).sum::<f32>() * scale;
+                }
+                for t in 0..c.tr {
+                    let kk = &c.kres[kvh * c.tr * dh + t * dh..kvh * c.tr * dh + (t + 1) * dh];
+                    s[c.tq + t] = qh.iter().zip(kk).map(|(a, b)| a * b).sum::<f32>() * scale;
+                }
+                let kk = &k[kvh * dh..(kvh + 1) * dh];
+                s[c.tq + c.tr] = qh.iter().zip(kk).map(|(a, b)| a * b).sum::<f32>() * scale;
+                softmax_inplace(&mut s);
+                let oh = &mut o[hh * dh..(hh + 1) * dh];
+                for t in 0..c.tq {
+                    let vv = &c.vq[kvh * c.tq * dh + t * dh..kvh * c.tq * dh + (t + 1) * dh];
+                    let p = s[t];
+                    for j in 0..dh {
+                        oh[j] += p * vv[j];
+                    }
+                }
+                for t in 0..c.tr {
+                    let vv = &c.vres[kvh * c.tr * dh + t * dh..kvh * c.tr * dh + (t + 1) * dh];
+                    let p = s[c.tq + t];
+                    for j in 0..dh {
+                        oh[j] += p * vv[j];
+                    }
+                }
+                let p = s[c.tq + c.tr];
+                for j in 0..dh {
+                    oh[j] += p * v[kvh * dh + j];
+                }
+            }
+            let mut proj = vec![0f32; d];
+            matvec(&o, self.w.get(&format!("l{l}.wo")), hq * dh, d, &mut proj);
+            for j in 0..d {
+                h[j] += proj[j];
+            }
+            rmsnorm(&h, self.w.get(&format!("l{l}.ln2")), mc.rmsnorm_eps, &mut x);
+            let mut ff = vec![0f32; mc.d_ff];
+            matvec(&x, self.w.get(&format!("l{l}.w1")), d, mc.d_ff, &mut ff);
+            for f in ff.iter_mut() {
+                *f = gelu(*f);
+            }
+            matvec(&ff, self.w.get(&format!("l{l}.w2")), mc.d_ff, d, &mut proj);
+            for j in 0..d {
+                h[j] += proj[j];
+            }
+            knews.push(k);
+            vnews.push(v);
+            qabss.push(qa);
+        }
+        rmsnorm(&h, self.w.get("ln_f"), mc.rmsnorm_eps, &mut x);
+        let mut logits = vec![0f32; mc.vocab];
+        for vtok in 0..mc.vocab {
+            logits[vtok] = x.iter().zip(&embed[vtok * d..(vtok + 1) * d]).map(|(a, b)| a * b).sum();
+        }
+        DecodeOut { logits, knew: knews, vnew: vnews, qabs: qabss }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::model::weights::Weights;
+    use crate::quant::rotation;
+    use crate::util::rng::Pcg32;
+
+    fn tiny_mc() -> ModelConfig {
+        ModelConfig { n_layers: 2, ..ModelConfig::default_build() }
+    }
+
+    #[test]
+    fn decode_matches_forward_when_cache_residual_only() {
+        // Internal consistency: decoding token t with the first t tokens'
+        // K/V in the "residual" slot must equal the causal forward at t.
+        let mc = tiny_mc();
+        let w = Weights::random(&mc, 3);
+        let model = RefModel::new(mc.clone(), &w);
+        let mut rng = Pcg32::seeded(7);
+        let toks: Vec<i32> = (0..12).map(|_| rng.range(1, 127) as i32).collect();
+        let (logits_full, pre) = model.forward_full(&toks);
+        let t = toks.len() - 1;
+        // K/V for positions 0..t as residual context
+        let dh = mc.d_head;
+        let hkv = mc.n_kv_heads;
+        let mut kres = Vec::new();
+        let mut vres = Vec::new();
+        for l in 0..mc.n_layers {
+            let mut kl = vec![0f32; hkv * t * dh];
+            let mut vl = vec![0f32; hkv * t * dh];
+            for hh in 0..hkv {
+                let full_t = toks.len();
+                kl[hh * t * dh..(hh * t + t) * dh]
+                    .copy_from_slice(&pre.k[l][hh * full_t * dh..(hh * full_t + t) * dh]);
+                vl[hh * t * dh..(hh * t + t) * dh]
+                    .copy_from_slice(&pre.v[l][hh * full_t * dh..(hh * full_t + t) * dh]);
+            }
+            kres.push(kl);
+            vres.push(vl);
+        }
+        let rot = rotation::identity(dh);
+        let ctx: Vec<LayerCtx> = (0..mc.n_layers)
+            .map(|l| LayerCtx {
+                kq: &[],
+                vq: &[],
+                tq: 0,
+                kres: &kres[l],
+                vres: &vres[l],
+                tr: t,
+            })
+            .collect();
+        let out = model.decode_step(toks[t], t, &ctx, &rot);
+        let want = &logits_full[t * mc.vocab..(t + 1) * mc.vocab];
+        let err = out
+            .logits
+            .iter()
+            .zip(want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(err < 1e-3, "decode/forward mismatch {err}");
+    }
+
+    #[test]
+    fn quantized_context_equals_residual_context_at_full_precision() {
+        // Putting the same K/V through the "quantized" slot (dequantized
+        // identity) must give identical logits to the residual slot.
+        let mc = tiny_mc();
+        let w = Weights::random(&mc, 4);
+        let model = RefModel::new(mc.clone(), &w);
+        let mut rng = Pcg32::seeded(8);
+        let toks: Vec<i32> = (0..10).map(|_| rng.range(1, 127) as i32).collect();
+        let (_, pre) = model.forward_full(&toks);
+        let t = toks.len() - 1;
+        let dh = mc.d_head;
+        let hkv = mc.n_kv_heads;
+        let full_t = toks.len();
+        let slice = |m: &Vec<f32>| -> Vec<f32> {
+            let mut out = vec![0f32; hkv * t * dh];
+            for hh in 0..hkv {
+                out[hh * t * dh..(hh * t + t) * dh]
+                    .copy_from_slice(&m[hh * full_t * dh..(hh * full_t + t) * dh]);
+            }
+            out
+        };
+        let rot = rotation::identity(dh);
+        let ks: Vec<Vec<f32>> = (0..mc.n_layers).map(|l| slice(&pre.k[l])).collect();
+        let vs: Vec<Vec<f32>> = (0..mc.n_layers).map(|l| slice(&pre.v[l])).collect();
+        let ctx_q: Vec<LayerCtx> = (0..mc.n_layers)
+            .map(|l| LayerCtx { kq: &ks[l], vq: &vs[l], tq: t, kres: &[], vres: &[], tr: 0 })
+            .collect();
+        let ctx_r: Vec<LayerCtx> = (0..mc.n_layers)
+            .map(|l| LayerCtx { kq: &[], vq: &[], tq: 0, kres: &ks[l], vres: &vs[l], tr: t })
+            .collect();
+        let a = model.decode_step(toks[t], t, &ctx_q, &rot);
+        let b = model.decode_step(toks[t], t, &ctx_r, &rot);
+        let err = a
+            .logits
+            .iter()
+            .zip(&b.logits)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(err < 1e-4, "{err}");
+    }
+
+    #[test]
+    fn gelu_matches_jax_values() {
+        // jax.nn.gelu(1.0) ≈ 0.841192, gelu(-2.0) ≈ -0.0454023 (tanh approx)
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-4);
+        assert!((gelu(-2.0) + 0.0454023).abs() < 1e-4);
+        assert_eq!(gelu(0.0), 0.0);
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut x: Vec<f32> = (0..32).map(|i| (i as f32 * 0.37).sin()).collect();
+        let n0: f32 = x.iter().map(|v| v * v).sum();
+        apply_rope(&mut x, 17, 10000.0);
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() / n0 < 1e-5);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut s = vec![1.0, 2.0, 3.0, -100.0];
+        softmax_inplace(&mut s);
+        assert!((s.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(s[2] > s[1] && s[1] > s[0]);
+    }
+}

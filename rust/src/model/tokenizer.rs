@@ -1,0 +1,94 @@
+//! Synthetic-task vocabulary — mirrors python/compile/config.py exactly.
+
+pub const VOCAB: usize = 128;
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const SEP: i32 = 3;
+pub const EQ: i32 = 4;
+pub const ARROW: i32 = 5;
+pub const QMARK: i32 = 6;
+pub const KEY: i32 = 7;
+pub const VAL: i32 = 8;
+pub const COPY: i32 = 9;
+pub const OP_ADD: i32 = 10;
+pub const OP_SUB: i32 = 11;
+pub const OP_MUL: i32 = 12;
+pub const NUM_BASE: i32 = 16;
+pub const NUM_COUNT: i32 = 32;
+pub const FILLER_BASE: i32 = 80;
+pub const FILLER_COUNT: i32 = 48;
+
+pub fn num_tok(v: i32) -> i32 {
+    debug_assert!((0..NUM_COUNT).contains(&v));
+    NUM_BASE + v
+}
+
+pub fn tok_num(t: i32) -> Option<i32> {
+    if (NUM_BASE..NUM_BASE + NUM_COUNT).contains(&t) {
+        Some(t - NUM_BASE)
+    } else {
+        None
+    }
+}
+
+pub fn is_filler(t: i32) -> bool {
+    (FILLER_BASE..FILLER_BASE + FILLER_COUNT).contains(&t)
+}
+
+/// Human-readable rendering for demos / Table-1-style transcripts.
+pub fn render(tokens: &[i32]) -> String {
+    let mut out = String::new();
+    for &t in tokens {
+        let s = match t {
+            PAD => continue,
+            BOS => "<bos>".to_string(),
+            EOS => "<eos>".to_string(),
+            SEP => ";".to_string(),
+            EQ => "=".to_string(),
+            ARROW => "->".to_string(),
+            QMARK => "?".to_string(),
+            KEY => "KEY".to_string(),
+            VAL => "VAL".to_string(),
+            COPY => "COPY".to_string(),
+            OP_ADD => "+".to_string(),
+            OP_SUB => "-".to_string(),
+            OP_MUL => "*".to_string(),
+            t if tok_num(t).is_some() => tok_num(t).unwrap().to_string(),
+            t if is_filler(t) => {
+                char::from(b'a' + ((t - FILLER_BASE) % 26) as u8).to_string()
+            }
+            t => format!("<{t}>"),
+        };
+        if !out.is_empty() {
+            out.push(' ');
+        }
+        out.push_str(&s);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn num_roundtrip() {
+        for v in 0..NUM_COUNT {
+            assert_eq!(tok_num(num_tok(v)), Some(v));
+        }
+        assert_eq!(tok_num(BOS), None);
+    }
+
+    #[test]
+    fn render_chain() {
+        let toks = vec![BOS, num_tok(3), OP_ADD, num_tok(4), EQ, num_tok(7), SEP, EOS];
+        assert_eq!(render(&toks), "<bos> 3 + 4 = 7 ; <eos>");
+    }
+
+    #[test]
+    fn vocab_ranges_disjoint() {
+        assert!(NUM_BASE + NUM_COUNT <= FILLER_BASE);
+        assert!(FILLER_BASE + FILLER_COUNT <= VOCAB as i32);
+    }
+}

@@ -1,0 +1,153 @@
+//! weights.bin loader — flat little-endian f32 in `param_spec` order, the
+//! ABI shared with python/compile/model.py::param_spec.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::config::ModelConfig;
+
+/// Canonical (name, shape) ordering — must mirror python param_spec().
+pub fn param_spec(mc: &ModelConfig) -> Vec<(String, Vec<usize>)> {
+    let (hq, hkv, dh) = (mc.n_q_heads, mc.n_kv_heads, mc.d_head);
+    let mut spec = vec![("embed".to_string(), vec![mc.vocab, mc.d_model])];
+    for l in 0..mc.n_layers {
+        spec.push((format!("l{l}.ln1"), vec![mc.d_model]));
+        spec.push((format!("l{l}.wq"), vec![mc.d_model, hq * dh]));
+        spec.push((format!("l{l}.wk"), vec![mc.d_model, hkv * dh]));
+        spec.push((format!("l{l}.wv"), vec![mc.d_model, hkv * dh]));
+        spec.push((format!("l{l}.wo"), vec![hq * dh, mc.d_model]));
+        spec.push((format!("l{l}.ln2"), vec![mc.d_model]));
+        spec.push((format!("l{l}.w1"), vec![mc.d_model, mc.d_ff]));
+        spec.push((format!("l{l}.w2"), vec![mc.d_ff, mc.d_model]));
+    }
+    spec.push(("ln_f".to_string(), vec![mc.d_model]));
+    spec
+}
+
+#[derive(Clone)]
+pub struct Weights {
+    /// Tensors in param_spec order (the positional HLO inputs).
+    pub flat: Vec<Vec<f32>>,
+    pub shapes: Vec<(String, Vec<usize>)>,
+    index: HashMap<String, usize>,
+}
+
+impl Weights {
+    pub fn load(artifacts_dir: &Path, mc: &ModelConfig) -> Result<Weights> {
+        let path = artifacts_dir.join("weights.bin");
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::from_bytes(&bytes, mc)
+    }
+
+    pub fn from_bytes(bytes: &[u8], mc: &ModelConfig) -> Result<Weights> {
+        let spec = param_spec(mc);
+        let total: usize = spec.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        if bytes.len() != total * 4 {
+            bail!(
+                "weights.bin is {} bytes, expected {} ({} f32 params)",
+                bytes.len(),
+                total * 4,
+                total
+            );
+        }
+        let mut flat = Vec::with_capacity(spec.len());
+        let mut off = 0;
+        for (_, shape) in &spec {
+            let n: usize = shape.iter().product();
+            let mut v = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &bytes[(off + i) * 4..(off + i) * 4 + 4];
+                v.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += n;
+            flat.push(v);
+        }
+        let index = spec
+            .iter()
+            .enumerate()
+            .map(|(i, (n, _))| (n.clone(), i))
+            .collect();
+        Ok(Weights { flat, shapes: spec, index })
+    }
+
+    /// Random-init weights (tests without artifacts); matches the python
+    /// init distributionally, not bit-for-bit.
+    pub fn random(mc: &ModelConfig, seed: u64) -> Weights {
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::seeded(seed);
+        let spec = param_spec(mc);
+        let mut flat = Vec::new();
+        for (name, shape) in &spec {
+            let n: usize = shape.iter().product();
+            if name.ends_with("ln1") || name.ends_with("ln2") || name == "ln_f" {
+                flat.push(vec![1.0; n]);
+            } else {
+                let std = (shape[0] as f32).powf(-0.5);
+                flat.push((0..n).map(|_| rng.normal() * std).collect());
+            }
+        }
+        let index = spec
+            .iter()
+            .enumerate()
+            .map(|(i, (n, _))| (n.clone(), i))
+            .collect();
+        Weights { flat, shapes: spec, index }
+    }
+
+    pub fn get(&self, name: &str) -> &[f32] {
+        &self.flat[self.index[name]]
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.flat.iter().map(|v| v.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_matches_python_ordering() {
+        let mc = ModelConfig::default_build();
+        let spec = param_spec(&mc);
+        assert_eq!(spec[0].0, "embed");
+        assert_eq!(spec[1].0, "l0.ln1");
+        assert_eq!(spec[2].0, "l0.wq");
+        assert_eq!(spec.last().unwrap().0, "ln_f");
+        assert_eq!(spec.len(), 2 + 8 * mc.n_layers);
+    }
+
+    #[test]
+    fn from_bytes_roundtrip() {
+        let mc = ModelConfig::default_build();
+        let w = Weights::random(&mc, 9);
+        let mut bytes = Vec::new();
+        for t in &w.flat {
+            for x in t {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        let w2 = Weights::from_bytes(&bytes, &mc).unwrap();
+        assert_eq!(w.flat, w2.flat);
+        assert_eq!(w.n_params(), w2.n_params());
+    }
+
+    #[test]
+    fn rejects_wrong_size() {
+        let mc = ModelConfig::default_build();
+        assert!(Weights::from_bytes(&[0u8; 16], &mc).is_err());
+    }
+
+    #[test]
+    fn named_lookup() {
+        let mc = ModelConfig::default_build();
+        let w = Weights::random(&mc, 1);
+        assert_eq!(w.get("embed").len(), mc.vocab * mc.d_model);
+        assert_eq!(w.get("l2.w1").len(), mc.d_model * mc.d_ff);
+        assert!(w.get("ln_f").iter().all(|&x| x == 1.0));
+    }
+}

@@ -1,0 +1,308 @@
+//! Asymmetric B-bit group quantization (Eq. 2–3 of the paper).
+//!
+//! `z = min(X)`, `s = (max(X) − min(X)) / (2^B − 1)`,
+//! `q = round((x − z)/s)`, `x̃ = q·s + z`; `|x − x̃| ≤ s/2` (Appendix A).
+//!
+//! Matches python/compile/kernels/quant.py: same EPS floor, same rounding
+//! direction (ties away from zero vs numpy's ties-to-even differ only *at*
+//! exact .5 code boundaries; both stay within the s/2 bound, which is what
+//! every consumer relies on).
+
+pub const EPS: f32 = 1e-8;
+
+#[inline]
+pub fn qmax(bits: usize) -> u32 {
+    (1u32 << bits) - 1
+}
+
+/// scale/zero for one group of values.
+pub fn quant_params(xs: &[f32], bits: usize) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in xs {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    let scale = ((hi - lo) / qmax(bits) as f32).max(EPS);
+    (scale, lo)
+}
+
+/// scale/zero with range clipping (SKVQ): shrink the range by `clip` ∈ (0,1]
+/// around its midpoint before computing the scale; codes then saturate.
+pub fn quant_params_clipped(xs: &[f32], bits: usize, clip: f32) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in xs {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    let mid = 0.5 * (lo + hi);
+    let half = 0.5 * (hi - lo) * clip;
+    let (lo, hi) = (mid - half, mid + half);
+    let scale = ((hi - lo) / qmax(bits) as f32).max(EPS);
+    (scale, lo)
+}
+
+#[inline]
+pub fn encode(x: f32, scale: f32, zero: f32, bits: usize) -> u8 {
+    let q = ((x - zero) / scale).round();
+    q.clamp(0.0, qmax(bits) as f32) as u8
+}
+
+#[inline]
+pub fn decode(q: u8, scale: f32, zero: f32) -> f32 {
+    q as f32 * scale + zero
+}
+
+/// Per-channel key quantization over a [t, d] row-major window, groups of
+/// `group` tokens (KIVI layout). Returns (codes [t*d], scales [t/G, d],
+/// zeros [t/G, d]). `clip` = 1.0 disables clipping.
+pub fn quantize_key_channelwise(
+    k: &[f32],
+    t: usize,
+    d: usize,
+    group: usize,
+    bits: usize,
+    clip: f32,
+) -> (Vec<u8>, Vec<f32>, Vec<f32>) {
+    assert_eq!(k.len(), t * d);
+    assert!(t % group == 0, "t={t} not a multiple of group={group}");
+    let ngroups = t / group;
+    let mut codes = vec![0u8; t * d];
+    let mut scales = vec![0f32; ngroups * d];
+    let mut zeros = vec![0f32; ngroups * d];
+    let mut col = Vec::with_capacity(group);
+    for g in 0..ngroups {
+        for ch in 0..d {
+            col.clear();
+            for tok in 0..group {
+                col.push(k[(g * group + tok) * d + ch]);
+            }
+            let (s, z) = if clip < 1.0 {
+                quant_params_clipped(&col, bits, clip)
+            } else {
+                quant_params(&col, bits)
+            };
+            scales[g * d + ch] = s;
+            zeros[g * d + ch] = z;
+            for tok in 0..group {
+                codes[(g * group + tok) * d + ch] = encode(col[tok], s, z, bits);
+            }
+        }
+    }
+    (codes, scales, zeros)
+}
+
+/// Per-channel key quantization with a single group spanning the whole
+/// window (KVQuant-style global per-channel scales). Output scales/zeros
+/// are REPLICATED per G-group so the result is ABI-compatible with the
+/// grouped decode graph.
+pub fn quantize_key_channelwise_global(
+    k: &[f32],
+    t: usize,
+    d: usize,
+    group: usize,
+    bits: usize,
+) -> (Vec<u8>, Vec<f32>, Vec<f32>) {
+    assert_eq!(k.len(), t * d);
+    let ngroups = t / group;
+    let mut codes = vec![0u8; t * d];
+    let mut scales = vec![0f32; ngroups * d];
+    let mut zeros = vec![0f32; ngroups * d];
+    let mut col = Vec::with_capacity(t);
+    for ch in 0..d {
+        col.clear();
+        for tok in 0..t {
+            col.push(k[tok * d + ch]);
+        }
+        let (s, z) = quant_params(&col, bits);
+        for tok in 0..t {
+            codes[tok * d + ch] = encode(col[tok], s, z, bits);
+        }
+        for g in 0..ngroups {
+            scales[g * d + ch] = s;
+            zeros[g * d + ch] = z;
+        }
+    }
+    (codes, scales, zeros)
+}
+
+/// Per-token value quantization over [t, d], groups of `group` channels.
+/// Returns (codes [t*d], scales [t, d/G], zeros [t, d/G]).
+pub fn quantize_value_tokenwise(
+    v: &[f32],
+    t: usize,
+    d: usize,
+    group: usize,
+    bits: usize,
+) -> (Vec<u8>, Vec<f32>, Vec<f32>) {
+    assert_eq!(v.len(), t * d);
+    assert!(d % group == 0);
+    let ngroups = d / group;
+    let mut codes = vec![0u8; t * d];
+    let mut scales = vec![0f32; t * ngroups];
+    let mut zeros = vec![0f32; t * ngroups];
+    for tok in 0..t {
+        for g in 0..ngroups {
+            let row = &v[tok * d + g * group..tok * d + (g + 1) * group];
+            let (s, z) = quant_params(row, bits);
+            scales[tok * ngroups + g] = s;
+            zeros[tok * ngroups + g] = z;
+            for (i, &x) in row.iter().enumerate() {
+                codes[tok * d + g * group + i] = encode(x, s, z, bits);
+            }
+        }
+    }
+    (codes, scales, zeros)
+}
+
+/// Dequantize channelwise-grouped key codes back to f32 (reference path).
+pub fn dequantize_key_channelwise(
+    codes: &[u8],
+    scales: &[f32],
+    zeros: &[f32],
+    t: usize,
+    d: usize,
+    group: usize,
+) -> Vec<f32> {
+    let mut out = vec![0f32; t * d];
+    for tok in 0..t {
+        let g = tok / group;
+        for ch in 0..d {
+            out[tok * d + ch] = decode(codes[tok * d + ch], scales[g * d + ch], zeros[g * d + ch]);
+        }
+    }
+    out
+}
+
+pub fn dequantize_value_tokenwise(
+    codes: &[u8],
+    scales: &[f32],
+    zeros: &[f32],
+    t: usize,
+    d: usize,
+    group: usize,
+) -> Vec<f32> {
+    let ngroups = d / group;
+    let mut out = vec![0f32; t * d];
+    for tok in 0..t {
+        for ch in 0..d {
+            let g = ch / group;
+            out[tok * d + ch] =
+                decode(codes[tok * d + ch], scales[tok * ngroups + g], zeros[tok * ngroups + g]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn randn(rng: &mut Pcg32, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() * scale).collect()
+    }
+
+    #[test]
+    fn error_bound_property_key() {
+        // Appendix A: |x - x~| <= s/2 for every element — swept over random
+        // windows, bit-widths, and magnitudes (the proptest invariant).
+        let mut rng = Pcg32::seeded(21);
+        for case in 0..100 {
+            let bits = if case % 2 == 0 { 2 } else { 4 };
+            let (t, d, g) = (64, 8, 32);
+            let mag = 10f32.powf(rng.f32() * 4.0 - 2.0);
+            let k = randn(&mut rng, t * d, mag);
+            let (codes, s, z) = quantize_key_channelwise(&k, t, d, g, bits, 1.0);
+            let kd = dequantize_key_channelwise(&codes, &s, &z, t, d, g);
+            for tok in 0..t {
+                for ch in 0..d {
+                    let bound = s[(tok / g) * d + ch] / 2.0;
+                    let err = (kd[tok * d + ch] - k[tok * d + ch]).abs();
+                    assert!(err <= bound * 1.0001 + 1e-6, "err={err} bound={bound}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn error_bound_property_value() {
+        let mut rng = Pcg32::seeded(22);
+        for case in 0..100 {
+            let bits = if case % 2 == 0 { 2 } else { 4 };
+            let (t, d, g) = (16, 32, 32);
+            let v = randn(&mut rng, t * d, 1.0);
+            let (codes, s, z) = quantize_value_tokenwise(&v, t, d, g, bits);
+            let vd = dequantize_value_tokenwise(&codes, &s, &z, t, d, g);
+            for tok in 0..t {
+                for ch in 0..d {
+                    let bound = s[tok * (d / g) + ch / g] / 2.0;
+                    assert!((vd[tok * d + ch] - v[tok * d + ch]).abs() <= bound * 1.0001 + 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn global_scales_replicated_per_group() {
+        let mut rng = Pcg32::seeded(23);
+        let (t, d, g) = (128, 4, 32);
+        let k = randn(&mut rng, t * d, 1.0);
+        let (_, s, _) = quantize_key_channelwise_global(&k, t, d, g, 2);
+        for grp in 1..t / g {
+            for ch in 0..d {
+                assert_eq!(s[grp * d + ch], s[ch]);
+            }
+        }
+    }
+
+    #[test]
+    fn outlier_inflates_other_elements_error() {
+        // Section 3.2: one outlier degrades the whole channel group.
+        let (t, d, g) = (32, 2, 32);
+        let mut k = vec![0f32; t * d];
+        for tok in 0..t {
+            let x = -1.0 + 2.0 * tok as f32 / (t - 1) as f32;
+            k[tok * d] = x;
+            k[tok * d + 1] = x;
+        }
+        k[7 * d + 1] = 100.0;
+        let (codes, s, z) = quantize_key_channelwise(&k, t, d, g, 2, 1.0);
+        let kd = dequantize_key_channelwise(&codes, &s, &z, t, d, g);
+        let err_clean: f32 =
+            (0..t).map(|tok| (kd[tok * d] - k[tok * d]).abs()).sum::<f32>() / t as f32;
+        let err_outlier: f32 = (0..t)
+            .filter(|&tok| tok != 7)
+            .map(|tok| (kd[tok * d + 1] - k[tok * d + 1]).abs())
+            .sum::<f32>()
+            / (t - 1) as f32;
+        assert!(err_outlier > 5.0 * err_clean, "{err_outlier} vs {err_clean}");
+    }
+
+    #[test]
+    fn clipping_shrinks_scale() {
+        let xs: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        let (s_full, _) = quant_params(&xs, 2);
+        let (s_clip, _) = quant_params_clipped(&xs, 2, 0.8);
+        assert!((s_clip - 0.8 * s_full).abs() < 1e-6);
+    }
+
+    #[test]
+    fn constant_input_exact() {
+        let xs = vec![3.5f32; 64];
+        let (codes, s, z) = quantize_key_channelwise(&xs, 64, 1, 32, 2, 1.0);
+        let back = dequantize_key_channelwise(&codes, &s, &z, 64, 1, 32);
+        for (a, b) in back.iter().zip(&xs) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn codes_within_range() {
+        let mut rng = Pcg32::seeded(24);
+        let v = randn(&mut rng, 32 * 32, 5.0);
+        let (codes, _, _) = quantize_value_tokenwise(&v, 32, 32, 32, 2);
+        assert!(codes.iter().all(|&c| c < 4));
+    }
+}

@@ -1,0 +1,207 @@
+//! The quantization method zoo: MixKVQ + every baseline the paper compares
+//! against (Tables 3, 4, 8; Figs. 1, 5).
+//!
+//! Each method is a configuration of the shared quantization machinery:
+//!
+//! | method    | ordering          | rotation | scales            | variant(s)        |
+//! |-----------|-------------------|----------|-------------------|-------------------|
+//! | MixKVQ    | salience I·S      | no       | grouped           | mix225/mix30/mix325 |
+//! | MixKVQ-EO | sensitivity only  | no       | grouped           | (Table 6 ablation) |
+//! | KIVI      | natural           | no       | grouped           | kv4/kv2/k4v2/k2v4 |
+//! | KVQuant   | natural           | no       | global per-channel| kv4/kv2           |
+//! | RotateKV  | natural           | Hadamard | grouped           | kv4/kv2           |
+//! | SKVQ      | natural           | no       | grouped, clipped  | kv4/kv2           |
+//! | KVTuner   | natural           | no       | grouped           | kvtuner (layer-wise) |
+//! | BF16      | —                 | no       | —                 | bf16              |
+//!
+//! `variant` names a compiled decode graph (artifacts/decode_<variant>.hlo.txt)
+//! whose per-layer TierSpecs fix the static shapes.
+
+use crate::quant::rotation;
+use crate::quant::salience::Ordering;
+use crate::quant::window::KeyQuantOpts;
+
+#[derive(Clone, Debug)]
+pub struct Method {
+    pub name: String,
+    /// decode HLO variant this method runs on
+    pub variant: String,
+    pub ordering: Ordering,
+    pub rotate: bool,
+    pub clip: f32,
+    pub global_scales: bool,
+}
+
+impl Method {
+    pub fn bf16() -> Self {
+        Self::base("bf16", "bf16")
+    }
+
+    /// The paper's method. `variant` ∈ {mix225, mix30, mix325} selects the
+    /// effective key bit-width (2.25 / 3.0 / 3.25), mirroring the per-model
+    /// threshold outcomes of Appendix C.
+    pub fn mixkvq(variant: &str) -> Self {
+        let mut m = Self::base(&format!("mixkvq-{variant}"), variant);
+        m.ordering = Ordering::Salience;
+        m
+    }
+
+    /// Table 6 ablation: A_d = S_d (drop the query-aware term).
+    pub fn mixkvq_error_only(variant: &str) -> Self {
+        let mut m = Self::base(&format!("error-only-{variant}"), variant);
+        m.ordering = Ordering::SensitivityOnly;
+        m
+    }
+
+    /// KIVI (Liu et al. 2024): per-channel K / per-token V, fixed bits.
+    /// `bits` ∈ {kv4, kv2, k4v2, k2v4}.
+    pub fn kivi(bits: &str) -> Self {
+        Self::base(&format!("kivi-{bits}"), bits)
+    }
+
+    /// KVQuant (Hooper et al. 2024), simplified to its per-channel
+    /// whole-window scale computation (no calibration-time nuq). This is
+    /// the variant whose 2-bit mode collapses in Table 3.
+    pub fn kvquant(bits: &str) -> Self {
+        let mut m = Self::base(&format!("kvquant-{bits}"), bits);
+        m.global_scales = true;
+        m
+    }
+
+    /// RotateKV (Su et al. 2025b): scaled-Hadamard channel rotation before
+    /// fixed-bit quantization; queries rotated in-graph via the `rot` input.
+    pub fn rotatekv(bits: &str) -> Self {
+        let mut m = Self::base(&format!("rotatekv-{bits}"), bits);
+        m.rotate = true;
+        m
+    }
+
+    /// SKVQ (Duanmu et al. 2024), modeled by its clipped dynamic range
+    /// (clip ratio 0.92) + the shared sliding full-precision window (the
+    /// residual buffer plays that role for every method here).
+    pub fn skvq(bits: &str) -> Self {
+        let mut m = Self::base(&format!("skvq-{bits}"), bits);
+        m.clip = 0.92;
+        m
+    }
+
+    /// KVTuner (Li et al. 2025): static layer-wise mixed precision — the
+    /// `kvtuner` variant pins layers {0,3} at KV4 and {1,2} at KV2
+    /// (Appendix B failure analysis).
+    pub fn kvtuner() -> Self {
+        Self::base("kvtuner", "kvtuner")
+    }
+
+    fn base(name: &str, variant: &str) -> Self {
+        Method {
+            name: name.to_string(),
+            variant: variant.to_string(),
+            ordering: Ordering::Natural,
+            rotate: false,
+            clip: 1.0,
+            global_scales: false,
+        }
+    }
+
+    /// Rotation matrix fed to the decode graph (and applied to keys before
+    /// quantization). Identity unless the method rotates.
+    pub fn rotation(&self, d: usize) -> Vec<f32> {
+        if self.rotate {
+            rotation::hadamard(d)
+        } else {
+            rotation::identity(d)
+        }
+    }
+
+    pub fn key_opts(&self, group: usize) -> KeyQuantOpts {
+        KeyQuantOpts { clip: self.clip, global_scales: self.global_scales, group }
+    }
+
+    /// The roster evaluated in Table 3 / Fig. 1 (one MixKVQ operating point).
+    pub fn table3_roster(mix_variant: &str) -> Vec<Method> {
+        vec![
+            Method::bf16(),
+            Method::kivi("kv4"),
+            Method::kivi("kv2"),
+            Method::kvquant("kv4"),
+            Method::kvquant("kv2"),
+            Method::rotatekv("kv4"),
+            Method::rotatekv("kv2"),
+            Method::skvq("kv4"),
+            Method::skvq("kv2"),
+            Method::kvtuner(),
+            Method::mixkvq(mix_variant),
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Option<Method> {
+        let m = match name {
+            "bf16" => Method::bf16(),
+            "kivi-kv4" => Method::kivi("kv4"),
+            "kivi-kv2" => Method::kivi("kv2"),
+            "kivi-k4v2" => Method::kivi("k4v2"),
+            "kivi-k2v4" => Method::kivi("k2v4"),
+            "kvquant-kv4" => Method::kvquant("kv4"),
+            "kvquant-kv2" => Method::kvquant("kv2"),
+            "rotatekv-kv4" => Method::rotatekv("kv4"),
+            "rotatekv-kv2" => Method::rotatekv("kv2"),
+            "skvq-kv4" => Method::skvq("kv4"),
+            "skvq-kv2" => Method::skvq("kv2"),
+            "kvtuner" => Method::kvtuner(),
+            "mixkvq-mix225" => Method::mixkvq("mix225"),
+            "mixkvq-mix30" => Method::mixkvq("mix30"),
+            "mixkvq-mix325" => Method::mixkvq("mix325"),
+            "error-only-mix30" => Method::mixkvq_error_only("mix30"),
+            _ => return None,
+        };
+        Some(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roster_contains_all_baselines() {
+        let r = Method::table3_roster("mix30");
+        let names: Vec<&str> = r.iter().map(|m| m.name.as_str()).collect();
+        assert!(names.contains(&"bf16"));
+        assert!(names.contains(&"kivi-kv2"));
+        assert!(names.contains(&"kvquant-kv2"));
+        assert!(names.contains(&"rotatekv-kv4"));
+        assert!(names.contains(&"kvtuner"));
+        assert!(names.contains(&"mixkvq-mix30"));
+        assert_eq!(names.len(), 11);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for m in Method::table3_roster("mix325") {
+            let back = Method::by_name(&m.name).expect(&m.name);
+            assert_eq!(back.variant, m.variant);
+            assert_eq!(back.rotate, m.rotate);
+        }
+    }
+
+    #[test]
+    fn mixkvq_uses_salience_kivi_does_not() {
+        assert_eq!(Method::mixkvq("mix30").ordering, Ordering::Salience);
+        assert_eq!(Method::kivi("kv2").ordering, Ordering::Natural);
+        assert_eq!(
+            Method::mixkvq_error_only("mix30").ordering,
+            Ordering::SensitivityOnly
+        );
+    }
+
+    #[test]
+    fn skvq_clips_rotatekv_rotates() {
+        assert!(Method::skvq("kv2").clip < 1.0);
+        assert!(Method::rotatekv("kv2").rotate);
+        assert!(Method::kvquant("kv2").global_scales);
+        let rot = Method::rotatekv("kv2").rotation(4);
+        assert!((rot[0] - 0.5).abs() < 1e-6); // H4/2
+        let id = Method::kivi("kv2").rotation(4);
+        assert_eq!(id[0], 1.0);
+    }
+}

@@ -1,0 +1,115 @@
+//! u2/u4 bit packing — bit-for-bit identical to python/compile/kernels/quant.py.
+//!
+//! ABI: u4 packs channel pair (2j, 2j+1) into byte j with the *even* channel
+//! in the low nibble; u2 packs quad (4j..4j+3) with channel 4j in bits 0..1.
+
+/// Pack 4-bit codes (values 0..=15), `codes.len()` must be even.
+pub fn pack_u4(codes: &[u8], out: &mut Vec<u8>) {
+    debug_assert!(codes.len() % 2 == 0);
+    for pair in codes.chunks_exact(2) {
+        out.push(pair[0] | (pair[1] << 4));
+    }
+}
+
+/// Pack 2-bit codes (values 0..=3), `codes.len()` must be a multiple of 4.
+pub fn pack_u2(codes: &[u8], out: &mut Vec<u8>) {
+    debug_assert!(codes.len() % 4 == 0);
+    for quad in codes.chunks_exact(4) {
+        out.push(quad[0] | (quad[1] << 2) | (quad[2] << 4) | (quad[3] << 6));
+    }
+}
+
+pub fn unpack_u4(packed: &[u8], out: &mut Vec<u8>) {
+    for &b in packed {
+        out.push(b & 0xF);
+        out.push((b >> 4) & 0xF);
+    }
+}
+
+pub fn unpack_u2(packed: &[u8], out: &mut Vec<u8>) {
+    for &b in packed {
+        out.push(b & 0x3);
+        out.push((b >> 2) & 0x3);
+        out.push((b >> 4) & 0x3);
+        out.push((b >> 6) & 0x3);
+    }
+}
+
+/// Bytes needed to pack `n` codes at `bits` width (bits ∈ {2, 4, 8}).
+pub fn packed_len(n: usize, bits: usize) -> usize {
+    n * bits / 8
+}
+
+/// LUT-based unpack of a u2 byte into 4 codes — the hot-loop variant used
+/// by the reference attention path (see EXPERIMENTS.md §Perf).
+#[inline]
+pub fn unpack_u2_byte(b: u8) -> [u8; 4] {
+    [b & 3, (b >> 2) & 3, (b >> 4) & 3, (b >> 6) & 3]
+}
+
+#[inline]
+pub fn unpack_u4_byte(b: u8) -> [u8; 2] {
+    [b & 0xF, (b >> 4) & 0xF]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn u4_roundtrip_property() {
+        let mut rng = Pcg32::seeded(11);
+        for _ in 0..200 {
+            let n = 2 * (1 + rng.below(64) as usize);
+            let codes: Vec<u8> = (0..n).map(|_| rng.below(16) as u8).collect();
+            let mut packed = Vec::new();
+            pack_u4(&codes, &mut packed);
+            assert_eq!(packed.len(), packed_len(n, 4));
+            let mut back = Vec::new();
+            unpack_u4(&packed, &mut back);
+            assert_eq!(back, codes);
+        }
+    }
+
+    #[test]
+    fn u2_roundtrip_property() {
+        let mut rng = Pcg32::seeded(12);
+        for _ in 0..200 {
+            let n = 4 * (1 + rng.below(32) as usize);
+            let codes: Vec<u8> = (0..n).map(|_| rng.below(4) as u8).collect();
+            let mut packed = Vec::new();
+            pack_u2(&codes, &mut packed);
+            assert_eq!(packed.len(), packed_len(n, 2));
+            let mut back = Vec::new();
+            unpack_u2(&packed, &mut back);
+            assert_eq!(back, codes);
+        }
+    }
+
+    #[test]
+    fn nibble_order_matches_python_abi() {
+        let mut p = Vec::new();
+        pack_u4(&[0x3, 0xA], &mut p);
+        assert_eq!(p, vec![0x3 | (0xA << 4)]);
+    }
+
+    #[test]
+    fn crumb_order_matches_python_abi() {
+        let mut p = Vec::new();
+        pack_u2(&[1, 2, 3, 0], &mut p);
+        assert_eq!(p, vec![1 | (2 << 2) | (3 << 4)]);
+    }
+
+    #[test]
+    fn byte_luts_agree_with_unpack() {
+        for b in 0..=255u8 {
+            let mut v = Vec::new();
+            unpack_u2(&[b], &mut v);
+            assert_eq!(v, unpack_u2_byte(b).to_vec());
+            let mut v4 = Vec::new();
+            unpack_u4(&[b], &mut v4);
+            assert_eq!(v4, unpack_u4_byte(b).to_vec());
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Hadamard rotation substrate for the RotateKV baseline (Su et al., 2025b).
+//!
+//! RotateKV spreads key-channel outliers by rotating the head dimension with
+//! an orthonormal (scaled) Hadamard matrix before quantization. Because
+//! (qR)·(kR) = q·k, the decode graph applies the same rotation to queries
+//! (the `rot` input of decode_*.hlo.txt); every other method passes identity.
+
+/// Dense d×d scaled Hadamard (row-major), d must be a power of two.
+pub fn hadamard(d: usize) -> Vec<f32> {
+    assert!(d.is_power_of_two(), "hadamard needs a power-of-two dim");
+    let mut h = vec![1.0f32];
+    let mut n = 1;
+    while n < d {
+        let mut next = vec![0.0f32; 4 * n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let v = h[i * n + j];
+                next[i * 2 * n + j] = v;
+                next[i * 2 * n + (j + n)] = v;
+                next[(i + n) * 2 * n + j] = v;
+                next[(i + n) * 2 * n + (j + n)] = -v;
+            }
+        }
+        h = next;
+        n *= 2;
+    }
+    let norm = 1.0 / (d as f32).sqrt();
+    h.iter().map(|x| x * norm).collect()
+}
+
+pub fn identity(d: usize) -> Vec<f32> {
+    let mut m = vec![0.0f32; d * d];
+    for i in 0..d {
+        m[i * d + i] = 1.0;
+    }
+    m
+}
+
+/// y = x · R for a row vector x (R row-major d×d).
+pub fn rotate_vec(x: &[f32], rot: &[f32], out: &mut [f32]) {
+    let d = x.len();
+    debug_assert_eq!(rot.len(), d * d);
+    for j in 0..d {
+        let mut acc = 0.0;
+        for i in 0..d {
+            acc += x[i] * rot[i * d + j];
+        }
+        out[j] = acc;
+    }
+}
+
+/// Rotate each row of a [t, d] matrix in place (scratch-allocating).
+pub fn rotate_rows(x: &mut [f32], t: usize, d: usize, rot: &[f32]) {
+    let mut tmp = vec![0.0f32; d];
+    for tok in 0..t {
+        let row = &mut x[tok * d..(tok + 1) * d];
+        rotate_vec(row, rot, &mut tmp);
+        row.copy_from_slice(&tmp);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn hadamard_is_orthonormal() {
+        let d = 32;
+        let h = hadamard(d);
+        for i in 0..d {
+            for j in 0..d {
+                let dot: f32 = (0..d).map(|k| h[i * d + k] * h[j * d + k]).sum();
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-5, "({i},{j}) = {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn rotation_preserves_dot_products() {
+        let d = 32;
+        let h = hadamard(d);
+        let mut rng = Pcg32::seeded(41);
+        for _ in 0..20 {
+            let q: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            let k: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            let mut qr = vec![0.0; d];
+            let mut kr = vec![0.0; d];
+            rotate_vec(&q, &h, &mut qr);
+            rotate_vec(&k, &h, &mut kr);
+            let dot: f32 = q.iter().zip(&k).map(|(a, b)| a * b).sum();
+            let dot_r: f32 = qr.iter().zip(&kr).map(|(a, b)| a * b).sum();
+            assert!((dot - dot_r).abs() < 1e-3, "{dot} vs {dot_r}");
+        }
+    }
+
+    #[test]
+    fn rotation_spreads_outliers() {
+        // a single spike becomes a flat ±x/sqrt(d) profile — the RotateKV
+        // mechanism that shrinks per-channel ranges.
+        let d = 32;
+        let h = hadamard(d);
+        let mut x = vec![0.0f32; d];
+        x[5] = 8.0;
+        let mut y = vec![0.0; d];
+        rotate_vec(&x, &h, &mut y);
+        let max = y.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        assert!((max - 8.0 / (d as f32).sqrt()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn identity_rotation_is_noop() {
+        let d = 8;
+        let id = identity(d);
+        let x: Vec<f32> = (0..d).map(|i| i as f32).collect();
+        let mut y = vec![0.0; d];
+        rotate_vec(&x, &id, &mut y);
+        assert_eq!(x, y);
+    }
+}

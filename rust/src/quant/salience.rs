@@ -1,0 +1,185 @@
+//! The paper's core contribution: the query-aware Salience Score (Sec. 4.2).
+//!
+//! * Importance `I_d = mean_i |Q_{i,d}|` (Eq. 6) — a running accumulator fed
+//!   by the `qabs` output of the prefill/decode HLO (App. D.2's "efficient
+//!   online saliency estimation"; RoPE is applied before the statistic).
+//! * Sensitivity `S_d = (max k_d − min k_d)/(2^B − 1)` (Eq. 7) over the
+//!   window being quantized.
+//! * Salience `A_d = I_d · S_d` (Eq. 8). Channels with high `A_d` go to the
+//!   BF16 tier, then UINT4, then UINT2 — either by thresholds
+//!   (τ_BF16, τ_UINT4; paper App. C) or by fixed tier *counts* (the
+//!   static-shape form used on the HLO path, DESIGN.md §Hardware-Adaptation).
+
+use crate::quant::asym::qmax;
+
+/// Running per-channel accumulator of |Q| (one per layer × kv-head).
+#[derive(Clone, Debug)]
+pub struct QueryStats {
+    pub sum_abs: Vec<f32>,
+    pub count: f32,
+}
+
+impl QueryStats {
+    pub fn new(d: usize) -> Self {
+        QueryStats { sum_abs: vec![0.0; d], count: 0.0 }
+    }
+
+    /// Fold in a mean-|Q| observation covering `weight` query positions
+    /// (prefill passes weight = prompt length, decode passes 1).
+    pub fn update(&mut self, mean_abs_q: &[f32], weight: f32) {
+        debug_assert_eq!(mean_abs_q.len(), self.sum_abs.len());
+        for (s, &m) in self.sum_abs.iter_mut().zip(mean_abs_q) {
+            *s += m * weight;
+        }
+        self.count += weight;
+    }
+
+    /// I_d (Eq. 6). Uniform if no queries observed yet.
+    pub fn importance(&self) -> Vec<f32> {
+        if self.count == 0.0 {
+            return vec![1.0; self.sum_abs.len()];
+        }
+        self.sum_abs.iter().map(|s| s / self.count).collect()
+    }
+}
+
+/// S_d (Eq. 7) for a [t, d] row-major key window at reference bit-width `bits`.
+pub fn sensitivity(k: &[f32], t: usize, d: usize, bits: usize) -> Vec<f32> {
+    assert_eq!(k.len(), t * d);
+    let denom = qmax(bits) as f32;
+    let mut out = vec![0.0f32; d];
+    for ch in 0..d {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for tok in 0..t {
+            let x = k[tok * d + ch];
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        out[ch] = (hi - lo) / denom;
+    }
+    out
+}
+
+/// A_d = I_d · S_d (Eq. 8).
+pub fn salience(importance: &[f32], sensitivity: &[f32]) -> Vec<f32> {
+    importance.iter().zip(sensitivity).map(|(i, s)| i * s).collect()
+}
+
+/// How each channel is ordered into precision tiers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ordering {
+    /// Natural channel order (fixed-precision baselines: KIVI, KVQuant, ...).
+    Natural,
+    /// Descending S_d only — the "error-only" ablation of Table 6.
+    SensitivityOnly,
+    /// Descending A_d = I_d · S_d — full MixKVQ.
+    Salience,
+}
+
+/// Channel permutation for tier assignment: the first `n16` entries of the
+/// returned order land in BF16, the next `n4` in UINT4, the rest in UINT2.
+pub fn channel_order(ordering: Ordering, importance: &[f32], sens: &[f32]) -> Vec<usize> {
+    let d = sens.len();
+    let mut idx: Vec<usize> = (0..d).collect();
+    match ordering {
+        Ordering::Natural => {}
+        Ordering::SensitivityOnly => {
+            idx.sort_by(|&a, &b| sens[b].partial_cmp(&sens[a]).unwrap());
+        }
+        Ordering::Salience => {
+            let a = salience(importance, sens);
+            idx.sort_by(|&x, &y| a[y].partial_cmp(&a[x]).unwrap());
+        }
+    }
+    idx
+}
+
+/// Threshold-based tier counts (App. C form): returns (n16, n4) for a
+/// salience vector and thresholds (τ_BF16, τ_UINT4).
+pub fn threshold_counts(a: &[f32], tau_bf16: f32, tau_u4: f32) -> (usize, usize) {
+    let n16 = a.iter().filter(|&&x| x > tau_bf16).count();
+    let n4 = a.iter().filter(|&&x| x > tau_u4 && x <= tau_bf16).count();
+    (n16, n4)
+}
+
+/// Effective key bit-width for tier counts (Eq. 17 restricted to one head).
+pub fn effective_key_bits(n16: usize, n4: usize, n2: usize) -> f64 {
+    (16 * n16 + 4 * n4 + 2 * n2) as f64 / (n16 + n4 + n2) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn importance_is_running_mean() {
+        let mut qs = QueryStats::new(2);
+        qs.update(&[1.0, 3.0], 2.0); // 2 positions averaging 1.0 / 3.0
+        qs.update(&[4.0, 0.0], 1.0);
+        let i = qs.importance();
+        assert!((i[0] - 2.0).abs() < 1e-6); // (1*2 + 4*1)/3
+        assert!((i[1] - 2.0).abs() < 1e-6); // (3*2 + 0*1)/3
+    }
+
+    #[test]
+    fn sensitivity_matches_range() {
+        // channel 0 range 4 => s = 4/3 at 2-bit; channel 1 constant => 0
+        let k = vec![0.0, 5.0, 4.0, 5.0, 2.0, 5.0, 1.0, 5.0];
+        let s = sensitivity(&k, 4, 2, 2);
+        assert!((s[0] - 4.0 / 3.0).abs() < 1e-6);
+        assert_eq!(s[1], 0.0);
+    }
+
+    #[test]
+    fn salience_orders_by_product() {
+        // high S but tiny I must lose to moderate S with high I — the
+        // paper's Fig. 3 argument against scale-only selection.
+        let imp = vec![0.01, 1.0, 0.5];
+        let sens = vec![10.0, 1.0, 1.0];
+        let order = channel_order(Ordering::Salience, &imp, &sens);
+        assert_eq!(order[0], 1); // A = [0.1, 1.0, 0.5]
+        let order_s = channel_order(Ordering::SensitivityOnly, &imp, &sens);
+        assert_eq!(order_s[0], 0);
+    }
+
+    #[test]
+    fn natural_order_is_identity() {
+        let order = channel_order(Ordering::Natural, &[1.0; 5], &[1.0; 5]);
+        assert_eq!(order, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn threshold_monotonicity_property() {
+        // raising tau_BF16 never increases the BF16 count (invariant #4).
+        let mut rng = Pcg32::seeded(31);
+        for _ in 0..100 {
+            let a: Vec<f32> = (0..32).map(|_| rng.f32() * 2.0).collect();
+            let t1 = rng.f32() * 2.0;
+            let t2 = t1 + rng.f32();
+            let (n16_lo, _) = threshold_counts(&a, t1, 0.0);
+            let (n16_hi, _) = threshold_counts(&a, t2, 0.0);
+            assert!(n16_hi <= n16_lo);
+        }
+    }
+
+    #[test]
+    fn effective_bits_examples() {
+        assert!((effective_key_bits(2, 2, 28) - 3.0).abs() < 1e-9);
+        assert!((effective_key_bits(0, 4, 28) - 2.25).abs() < 1e-9);
+        assert!((effective_key_bits(32, 0, 0) - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn order_is_a_permutation() {
+        let mut rng = Pcg32::seeded(32);
+        for _ in 0..50 {
+            let imp: Vec<f32> = (0..32).map(|_| rng.f32()).collect();
+            let sens: Vec<f32> = (0..32).map(|_| rng.f32()).collect();
+            let mut o = channel_order(Ordering::Salience, &imp, &sens);
+            o.sort_unstable();
+            assert_eq!(o, (0..32).collect::<Vec<_>>());
+        }
+    }
+}

@@ -1,0 +1,372 @@
+//! Quantized key/value windows — the exact byte layout the decode HLO
+//! consumes (see python/compile/model.py::decode_input_manifest).
+//!
+//! A window is `t` tokens for one (layer, kv-head). The kvcache module
+//! copies windows into capacity-C device buffers; this module only deals in
+//! window-local data.
+
+use crate::quant::asym;
+use crate::quant::packing;
+use crate::quant::salience::{self, Ordering};
+
+/// Per-layer tier spec: (n16, n4, n2) key channels + value bit-width.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TierSpec {
+    pub n16: usize,
+    pub n4: usize,
+    pub n2: usize,
+    pub v_bits: usize,
+}
+
+impl TierSpec {
+    pub fn d(&self) -> usize {
+        self.n16 + self.n4 + self.n2
+    }
+
+    pub fn key_bits(&self) -> f64 {
+        salience::effective_key_bits(self.n16, self.n4, self.n2)
+    }
+}
+
+/// Three-tier quantized key window (rotated space), ABI-ready.
+#[derive(Clone, Debug)]
+pub struct KeyWindow {
+    pub t: usize,
+    pub spec: TierSpec,
+    /// Channel permutation: tier j holds original channel `order[j]`.
+    pub order: Vec<usize>,
+    pub k16: Vec<f32>,     // [t, n16]
+    pub k4p: Vec<u8>,      // [t, n4/2]
+    pub k4s: Vec<f32>,     // [t/G, n4]
+    pub k4z: Vec<f32>,
+    pub k2p: Vec<u8>,      // [t, n2/4]
+    pub k2s: Vec<f32>,     // [t/G, n2]
+    pub k2z: Vec<f32>,
+}
+
+/// Quantized (or full-precision) value window.
+#[derive(Clone, Debug)]
+pub struct ValueWindow {
+    pub t: usize,
+    pub bits: usize,       // 2, 4 or 16
+    pub vfull: Vec<f32>,   // [t, d] when bits == 16
+    pub vp: Vec<u8>,       // [t, d*bits/8] otherwise
+    pub vs: Vec<f32>,      // [t, d/G]
+    pub vz: Vec<f32>,
+}
+
+/// Options shaping how a key window is quantized (method-dependent).
+#[derive(Clone, Copy, Debug)]
+pub struct KeyQuantOpts {
+    pub clip: f32,          // SKVQ range clipping (1.0 = off)
+    pub global_scales: bool, // KVQuant whole-window per-channel scales
+    pub group: usize,
+}
+
+/// Channel permutation for a window under `ordering` (the per-request tier
+/// plan; computed once per request then reused so the decode graph sees a
+/// stable `idx` input — DESIGN.md §Hardware-Adaptation).
+pub fn plan_order(ordering: Ordering, importance: &[f32], k: &[f32], t: usize, d: usize) -> Vec<usize> {
+    let sens = salience::sensitivity(k, t, d, 2);
+    salience::channel_order(ordering, importance, &sens)
+}
+
+/// Quantize a [t, d] key window (already rotated if the method rotates)
+/// under an explicit channel `order` (see [`plan_order`]).
+pub fn quantize_key_window(
+    k: &[f32],
+    t: usize,
+    d: usize,
+    spec: TierSpec,
+    order: &[usize],
+    opts: KeyQuantOpts,
+) -> KeyWindow {
+    assert_eq!(spec.d(), d);
+    assert_eq!(k.len(), t * d);
+    let order = order.to_vec();
+
+    // Gather permuted columns into a contiguous [t, d] matrix.
+    let mut perm = vec![0f32; t * d];
+    for tok in 0..t {
+        for (j, &src) in order.iter().enumerate() {
+            perm[tok * d + j] = k[tok * d + src];
+        }
+    }
+    let col_block = |lo: usize, n: usize| -> Vec<f32> {
+        let mut out = vec![0f32; t * n];
+        for tok in 0..t {
+            out[tok * n..(tok + 1) * n].copy_from_slice(&perm[tok * d + lo..tok * d + lo + n]);
+        }
+        out
+    };
+
+    let k16 = col_block(0, spec.n16);
+
+    let quant_tier = |lo: usize, n: usize, bits: usize| -> (Vec<u8>, Vec<f32>, Vec<f32>) {
+        if n == 0 {
+            return (Vec::new(), Vec::new(), Vec::new());
+        }
+        let block = col_block(lo, n);
+        let (codes, s, z) = if opts.global_scales {
+            asym::quantize_key_channelwise_global(&block, t, n, opts.group, bits)
+        } else {
+            asym::quantize_key_channelwise(&block, t, n, opts.group, bits, opts.clip)
+        };
+        let mut packed = Vec::with_capacity(packing::packed_len(t * n, bits));
+        for tok in 0..t {
+            let row = &codes[tok * n..(tok + 1) * n];
+            if bits == 4 {
+                packing::pack_u4(row, &mut packed);
+            } else {
+                packing::pack_u2(row, &mut packed);
+            }
+        }
+        (packed, s, z)
+    };
+
+    let (k4p, k4s, k4z) = quant_tier(spec.n16, spec.n4, 4);
+    let (k2p, k2s, k2z) = quant_tier(spec.n16 + spec.n4, spec.n2, 2);
+
+    KeyWindow { t, spec, order, k16, k4p, k4s, k4z, k2p, k2s, k2z }
+}
+
+/// Quantize a [t, d] value window per-token (Sec. 4.2: "value cache
+/// undergoes uniform per-token quantization").
+pub fn quantize_value_window(v: &[f32], t: usize, d: usize, bits: usize, group: usize) -> ValueWindow {
+    assert_eq!(v.len(), t * d);
+    if bits == 16 {
+        return ValueWindow {
+            t,
+            bits,
+            vfull: v.to_vec(),
+            vp: Vec::new(),
+            vs: Vec::new(),
+            vz: Vec::new(),
+        };
+    }
+    let (codes, vs, vz) = asym::quantize_value_tokenwise(v, t, d, group, bits);
+    let mut vp = Vec::with_capacity(packing::packed_len(t * d, bits));
+    for tok in 0..t {
+        let row = &codes[tok * d..(tok + 1) * d];
+        if bits == 4 {
+            packing::pack_u4(row, &mut vp);
+        } else {
+            packing::pack_u2(row, &mut vp);
+        }
+    }
+    ValueWindow { t, bits, vfull: Vec::new(), vp, vs, vz }
+}
+
+/// Dequantize a key window back to the ORIGINAL (pre-permutation) channel
+/// order — the reference-path inverse used by model/reference.rs and the
+/// error analyses (Figs. 2/6).
+pub fn dequantize_key_window(w: &KeyWindow, d: usize, group: usize) -> Vec<f32> {
+    let t = w.t;
+    let mut perm = vec![0f32; t * d];
+    // BF16 tier
+    for tok in 0..t {
+        for j in 0..w.spec.n16 {
+            perm[tok * d + j] = w.k16[tok * w.spec.n16 + j];
+        }
+    }
+    if w.spec.n4 > 0 {
+        let mut codes = Vec::with_capacity(t * w.spec.n4);
+        packing::unpack_u4(&w.k4p, &mut codes);
+        let de = asym::dequantize_key_channelwise(&codes, &w.k4s, &w.k4z, t, w.spec.n4, group);
+        for tok in 0..t {
+            for j in 0..w.spec.n4 {
+                perm[tok * d + w.spec.n16 + j] = de[tok * w.spec.n4 + j];
+            }
+        }
+    }
+    if w.spec.n2 > 0 {
+        let base = w.spec.n16 + w.spec.n4;
+        let mut codes = Vec::with_capacity(t * w.spec.n2);
+        packing::unpack_u2(&w.k2p, &mut codes);
+        let de = asym::dequantize_key_channelwise(&codes, &w.k2s, &w.k2z, t, w.spec.n2, group);
+        for tok in 0..t {
+            for j in 0..w.spec.n2 {
+                perm[tok * d + base + j] = de[tok * w.spec.n2 + j];
+            }
+        }
+    }
+    // Undo the permutation.
+    let mut out = vec![0f32; t * d];
+    for tok in 0..t {
+        for (j, &src) in w.order.iter().enumerate() {
+            out[tok * d + src] = perm[tok * d + j];
+        }
+    }
+    out
+}
+
+pub fn dequantize_value_window(w: &ValueWindow, d: usize, group: usize) -> Vec<f32> {
+    if w.bits == 16 {
+        return w.vfull.clone();
+    }
+    let mut codes = Vec::with_capacity(w.t * d);
+    if w.bits == 4 {
+        packing::unpack_u4(&w.vp, &mut codes);
+    } else {
+        packing::unpack_u2(&w.vp, &mut codes);
+    }
+    asym::dequantize_value_tokenwise(&codes, &w.vs, &w.vz, w.t, d, group)
+}
+
+/// Exact storage bytes of a key window (2 bytes per BF16 scalar, 4 per f32
+/// scale/zero, 1 per packed byte, 4 per order index) — feeds the memory
+/// accountant (Fig. 5).
+pub fn key_window_bytes(w: &KeyWindow) -> usize {
+    2 * w.k16.len()
+        + w.k4p.len()
+        + w.k2p.len()
+        + 2 * (w.k4s.len() + w.k4z.len() + w.k2s.len() + w.k2z.len())
+        + 4 * w.order.len()
+}
+
+pub fn value_window_bytes(w: &ValueWindow) -> usize {
+    2 * w.vfull.len() + w.vp.len() + 2 * (w.vs.len() + w.vz.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    const G: usize = 32;
+
+    fn opts() -> KeyQuantOpts {
+        KeyQuantOpts { clip: 1.0, global_scales: false, group: G }
+    }
+
+    fn quant(k: &[f32], t: usize, d: usize, spec: TierSpec, imp: &[f32],
+             ordering: Ordering, o: KeyQuantOpts) -> KeyWindow {
+        let order = plan_order(ordering, imp, k, t, d);
+        quantize_key_window(k, t, d, spec, &order, o)
+    }
+
+    fn randn(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_all_tiers() {
+        let mut rng = Pcg32::seeded(51);
+        let (t, d) = (64, 32);
+        let spec = TierSpec { n16: 2, n4: 6, n2: 24, v_bits: 2 };
+        let k = randn(&mut rng, t * d);
+        let imp: Vec<f32> = (0..d).map(|_| rng.f32() + 0.1).collect();
+        let w = quant(&k, t, d, spec, &imp, Ordering::Salience, opts());
+        let back = dequantize_key_window(&w, d, G);
+        // BF16 channels exact, all within 2-bit worst-case bound
+        for tok in 0..t {
+            for ch in 0..d {
+                let err = (back[tok * d + ch] - k[tok * d + ch]).abs();
+                assert!(err < 3.0, "unbounded err {err}");
+            }
+        }
+        // the n16 most salient channels are bit-exact
+        for j in 0..spec.n16 {
+            let ch = w.order[j];
+            for tok in 0..t {
+                assert_eq!(back[tok * d + ch], k[tok * d + ch]);
+            }
+        }
+    }
+
+    #[test]
+    fn salience_tiering_reduces_error_vs_natural() {
+        // Inject outlier channels with HIGH importance; salience ordering
+        // must protect them and lower q-weighted error vs natural order.
+        let mut rng = Pcg32::seeded(52);
+        let (t, d) = (64, 32);
+        let spec = TierSpec { n16: 2, n4: 6, n2: 24, v_bits: 2 };
+        let mut k = randn(&mut rng, t * d);
+        let mut imp = vec![0.05f32; d];
+        for &ch in &[13usize, 27] {
+            imp[ch] = 3.0;
+            for tok in 0..t {
+                k[tok * d + ch] *= 12.0; // outlier channel
+            }
+        }
+        let q: Vec<f32> = imp.iter().map(|&i| i).collect(); // query ∝ importance
+        let weighted_err = |w: &KeyWindow| -> f32 {
+            let back = dequantize_key_window(w, d, G);
+            let mut e = 0.0;
+            for tok in 0..t {
+                for ch in 0..d {
+                    e += q[ch] * (back[tok * d + ch] - k[tok * d + ch]).abs();
+                }
+            }
+            e
+        };
+        let w_sal = quant(&k, t, d, spec, &imp, Ordering::Salience, opts());
+        let w_nat = quant(&k, t, d, spec, &imp, Ordering::Natural, opts());
+        assert!(weighted_err(&w_sal) < 0.5 * weighted_err(&w_nat));
+    }
+
+    #[test]
+    fn value_window_roundtrip() {
+        let mut rng = Pcg32::seeded(53);
+        let (t, d) = (32, 32);
+        let v = randn(&mut rng, t * d);
+        for bits in [2usize, 4] {
+            let w = quantize_value_window(&v, t, d, bits, G);
+            let back = dequantize_value_window(&w, d, G);
+            let max_err = back
+                .iter()
+                .zip(&v)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            let cap = if bits == 2 { 1.5 } else { 0.3 };
+            assert!(max_err < cap, "bits={bits} err={max_err}");
+        }
+    }
+
+    #[test]
+    fn bf16_passthrough_exact() {
+        let mut rng = Pcg32::seeded(54);
+        let (t, d) = (32, 32);
+        let spec = TierSpec { n16: d, n4: 0, n2: 0, v_bits: 16 };
+        let k = randn(&mut rng, t * d);
+        let w = quant(&k, t, d, spec, &vec![1.0; d], Ordering::Natural, opts());
+        let back = dequantize_key_window(&w, d, G);
+        assert_eq!(back, k);
+        let v = randn(&mut rng, t * d);
+        let wv = quantize_value_window(&v, t, d, 16, G);
+        assert_eq!(dequantize_value_window(&wv, d, G), v);
+    }
+
+    #[test]
+    fn byte_accounting_matches_layout() {
+        let (t, d) = (64, 32);
+        let spec = TierSpec { n16: 2, n4: 6, n2: 24, v_bits: 2 };
+        let k = vec![0.5f32; t * d];
+        let w = quant(&k, t, d, spec, &vec![1.0; d], Ordering::Natural, opts());
+        // k16: t*2 bf16; k4p: t*3 bytes; k2p: t*6 bytes; scales/zeros bf16
+        let want = 2 * (t * 2) + t * 3 + t * 6 + 2 * (2 * (t / 32) * 6 + 2 * (t / 32) * 24) + 4 * d;
+        assert_eq!(key_window_bytes(&w), want);
+    }
+
+    #[test]
+    fn global_scales_windows_collapse_at_2bit_with_outliers() {
+        // KVQuant-style global scales + a few huge outlier tokens => large
+        // error for everyone (the Table 3 KV2 collapse mechanism).
+        let mut rng = Pcg32::seeded(55);
+        let (t, d) = (128, 8);
+        let spec = TierSpec { n16: 0, n4: 0, n2: 8, v_bits: 2 };
+        let mut k = randn(&mut rng, t * d);
+        for ch in 0..d {
+            k[5 * d + ch] = 40.0; // outlier token inflates every channel range
+        }
+        let o_grouped = opts();
+        let o_global = KeyQuantOpts { global_scales: true, ..o_grouped };
+        let wg = quant(&k, t, d, spec, &vec![1.0; d], Ordering::Natural, o_grouped);
+        let wl = quant(&k, t, d, spec, &vec![1.0; d], Ordering::Natural, o_global);
+        let err = |w: &KeyWindow| {
+            let back = dequantize_key_window(w, d, G);
+            back.iter().zip(&k).map(|(a, b)| (a - b).abs()).sum::<f32>()
+        };
+        assert!(err(&wl) > 1.5 * err(&wg));
+    }
+}

@@ -1,0 +1,59 @@
+//! PJRT CPU client wrapper: HLO-text load → compile → cached executables.
+//!
+//! HLO *text* is the interchange format (not serialized protos): jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::executor::Executable;
+use super::registry::Artifact;
+
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    executables: HashMap<String, Executable>,
+    pub compile_times_ms: Vec<(String, f64)>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, executables: HashMap::new(), compile_times_ms: Vec::new() })
+    }
+
+    /// Load + compile one artifact (no-op if already resident).
+    pub fn load(&mut self, artifacts_dir: &Path, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let art = Artifact::load(artifacts_dir, name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            art.hlo_path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {:?}: {e:?}", art.hlo_path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.compile_times_ms.push((name.to_string(), ms));
+        self.executables.insert(name.to_string(), Executable::new(exe, art.manifest));
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Executable> {
+        self.executables
+            .get(name)
+            .with_context(|| format!("executable `{name}` not loaded"))
+    }
+
+    pub fn loaded(&self) -> Vec<&str> {
+        self.executables.keys().map(|s| s.as_str()).collect()
+    }
+}

@@ -1,0 +1,204 @@
+//! Typed execution over PJRT: positional args validated against the
+//! artifact manifest, outputs decomposed from the return tuple.
+
+use anyhow::{bail, Context, Result};
+
+use super::registry::{DType, InputSpec};
+
+/// A borrowed argument value; must match the manifest slot's dtype/elems.
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    U8(&'a [u8]),
+}
+
+impl<'a> Arg<'a> {
+    fn dtype(&self) -> DType {
+        match self {
+            Arg::F32(_) => DType::F32,
+            Arg::I32(_) => DType::I32,
+            Arg::U8(_) => DType::U8,
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Arg::F32(x) => x.len(),
+            Arg::I32(x) => x.len(),
+            Arg::U8(x) => x.len(),
+        }
+    }
+
+    fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
+        let (ty, bytes): (xla::ElementType, &[u8]) = match self {
+            Arg::F32(x) => (xla::ElementType::F32, bytemuck_f32(x)),
+            Arg::I32(x) => (xla::ElementType::S32, bytemuck_i32(x)),
+            Arg::U8(x) => (xla::ElementType::U8, x),
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, shape, bytes)
+            .map_err(|e| anyhow::anyhow!("literal create: {e:?}"))
+    }
+}
+
+/// A device buffer plus the host literal that backs it. TfrtCpu's
+/// BufferFromHostLiteral copies asynchronously, so the literal MUST stay
+/// alive as long as the buffer may be read (dropping it early is a
+/// use-after-free SEGV). The raw-bytes upload path is unusable instead: the
+/// vendored crate passes an ElementType discriminant where the C ABI wants
+/// a PrimitiveType, silently mis-sizing f32 uploads.
+pub struct DeviceArg {
+    pub buf: xla::PjRtBuffer,
+    _backing: xla::Literal,
+}
+
+/// Upload one argument to the device (dynamic-arg path of run_b).
+pub fn upload(client: &xla::PjRtClient, arg: &Arg, shape: &[usize]) -> Result<DeviceArg> {
+    let lit = arg.to_literal(shape)?;
+    let buf = client
+        .buffer_from_host_literal(None, &lit)
+        .map_err(|e| anyhow::anyhow!("buffer upload: {e:?}"))?;
+    Ok(DeviceArg { buf, _backing: lit })
+}
+
+fn bytemuck_f32(x: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4) }
+}
+
+fn bytemuck_i32(x: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4) }
+}
+
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub manifest: Vec<InputSpec>,
+    /// Cumulative wall time spent inside PJRT execute (metrics).
+    pub exec_ns: std::cell::Cell<u64>,
+    pub exec_calls: std::cell::Cell<u64>,
+}
+
+impl Executable {
+    pub fn new(exe: xla::PjRtLoadedExecutable, manifest: Vec<InputSpec>) -> Self {
+        Executable { exe, manifest, exec_ns: 0.into(), exec_calls: 0.into() }
+    }
+
+    /// Run with positional args; returns the decomposed output tuple as
+    /// host literals.
+    pub fn run(&self, args: &[Arg]) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.manifest.len() {
+            bail!("arg count {} != manifest {}", args.len(), self.manifest.len());
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (arg, spec) in args.iter().zip(&self.manifest) {
+            if arg.dtype() != spec.dtype || arg.len() != spec.elems() {
+                bail!(
+                    "arg `{}` mismatch: got {:?}x{}, want {:?}x{}",
+                    spec.name,
+                    arg.dtype(),
+                    arg.len(),
+                    spec.dtype,
+                    spec.elems()
+                );
+            }
+            literals.push(arg.to_literal(&spec.shape)?);
+        }
+        let t0 = std::time::Instant::now();
+        let out = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        let result = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        self.exec_ns
+            .set(self.exec_ns.get() + t0.elapsed().as_nanos() as u64);
+        self.exec_calls.set(self.exec_calls.get() + 1);
+        // aot.py lowers with return_tuple=True
+        result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("decompose tuple: {e:?}"))
+    }
+
+    /// Buffer-argument execution (§Perf): weights live on-device as
+    /// PjRtBuffers uploaded once; only dynamic args transfer per call.
+    /// `bufs[..n_static]` are the cached buffers; `args` fill the remaining
+    /// manifest slots in order.
+    pub fn run_b(
+        &self,
+        client: &xla::PjRtClient,
+        static_bufs: &[DeviceArg],
+        args: &[Arg],
+    ) -> Result<Vec<xla::Literal>> {
+        let n_static = static_bufs.len();
+        if n_static + args.len() != self.manifest.len() {
+            bail!(
+                "static {} + dynamic {} != manifest {}",
+                n_static,
+                args.len(),
+                self.manifest.len()
+            );
+        }
+        let mut all: Vec<&xla::PjRtBuffer> = static_bufs.iter().map(|d| &d.buf).collect();
+        let mut owned = Vec::with_capacity(args.len());
+        for (arg, spec) in args.iter().zip(self.manifest.iter().skip(n_static)) {
+            if arg.dtype() != spec.dtype || arg.len() != spec.elems() {
+                bail!(
+                    "arg `{}` mismatch: got {:?}x{}, want {:?}x{}",
+                    spec.name,
+                    arg.dtype(),
+                    arg.len(),
+                    spec.dtype,
+                    spec.elems()
+                );
+            }
+            owned.push(upload(client, arg, &spec.shape)?);
+        }
+        all.extend(owned.iter().map(|d| &d.buf));
+        let t0 = std::time::Instant::now();
+        let out = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&all)
+            .map_err(|e| anyhow::anyhow!("execute_b: {e:?}"))?;
+        let result = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        self.exec_ns
+            .set(self.exec_ns.get() + t0.elapsed().as_nanos() as u64);
+        self.exec_calls.set(self.exec_calls.get() + 1);
+        result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("decompose tuple: {e:?}"))
+    }
+
+    pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec f32: {e:?}"))
+    }
+
+    /// Slot index of a named input (for building positional arg vectors).
+    pub fn slot(&self, name: &str) -> Result<usize> {
+        self.manifest
+            .iter()
+            .position(|s| s.name == name)
+            .with_context(|| format!("no manifest input `{name}`"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arg_metadata() {
+        let f = [1.0f32, 2.0];
+        let a = Arg::F32(&f);
+        assert_eq!(a.dtype(), DType::F32);
+        assert_eq!(a.len(), 2);
+        let u = [3u8];
+        assert_eq!(Arg::U8(&u).dtype(), DType::U8);
+    }
+
+    #[test]
+    fn f32_bytes_little_endian() {
+        let x = [1.0f32];
+        assert_eq!(bytemuck_f32(&x), 1.0f32.to_le_bytes());
+    }
+}

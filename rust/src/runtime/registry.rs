@@ -1,0 +1,130 @@
+//! Artifact discovery: pairs each `<name>.hlo.txt` with its
+//! `<name>.inputs.json` positional manifest (the python↔rust ABI).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U8,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "u8" => DType::U8,
+            _ => bail!("unknown dtype `{s}`"),
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::U8 => 1,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl InputSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    pub manifest: Vec<InputSpec>,
+}
+
+impl Artifact {
+    pub fn load(artifacts_dir: &Path, name: &str) -> Result<Artifact> {
+        let hlo_path = artifacts_dir.join(format!("{name}.hlo.txt"));
+        if !hlo_path.exists() {
+            bail!("missing artifact {hlo_path:?} — run `make artifacts`");
+        }
+        let mpath = artifacts_dir.join(format!("{name}.inputs.json"));
+        let src = std::fs::read_to_string(&mpath).with_context(|| format!("reading {mpath:?}"))?;
+        let j = Json::parse(&src)?;
+        let mut manifest = Vec::new();
+        for e in j.as_arr()? {
+            manifest.push(InputSpec {
+                name: e.get("name")?.as_str()?.to_string(),
+                shape: e
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|x| x.as_usize())
+                    .collect::<Result<_>>()?,
+                dtype: DType::parse(e.get("dtype")?.as_str()?)?,
+            });
+        }
+        Ok(Artifact { name: name.to_string(), hlo_path, manifest })
+    }
+
+    /// Index of the first non-weight input (weights come first by ABI).
+    pub fn first_dynamic(&self, n_params: usize) -> usize {
+        n_params
+    }
+}
+
+/// Artifact names for a serving setup.
+pub fn decode_artifact(variant: &str) -> String {
+    format!("decode_{variant}")
+}
+
+pub fn prefill_artifact(bucket: usize) -> String {
+    format!("prefill_t{bucket}")
+}
+
+/// Smallest prefill bucket that fits `len` tokens.
+pub fn pick_bucket(buckets: &[usize], len: usize) -> Result<usize> {
+    buckets
+        .iter()
+        .copied()
+        .filter(|&b| b >= len)
+        .min()
+        .with_context(|| format!("prompt of {len} tokens exceeds every prefill bucket"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("f32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("u8").unwrap().size(), 1);
+        assert!(DType::parse("f64").is_err());
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let buckets = [128usize, 512];
+        assert_eq!(pick_bucket(&buckets, 60).unwrap(), 128);
+        assert_eq!(pick_bucket(&buckets, 128).unwrap(), 128);
+        assert_eq!(pick_bucket(&buckets, 129).unwrap(), 512);
+        assert!(pick_bucket(&buckets, 513).is_err());
+    }
+
+    #[test]
+    fn artifact_names() {
+        assert_eq!(decode_artifact("mix30"), "decode_mix30");
+        assert_eq!(prefill_artifact(128), "prefill_t128");
+    }
+}

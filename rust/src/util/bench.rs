@@ -1,0 +1,134 @@
+//! Micro/macro benchmark harness (criterion is not in the offline crate
+//! set; this provides warmup + repeated timing + robust summary stats and a
+//! stable text format that `cargo bench` binaries print).
+
+use std::time::Instant;
+
+use crate::util::stats::percentile;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub median_ms: f64,
+    pub p95_ms: f64,
+    pub min_ms: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>7} iters  mean {:>9.3} ms  median {:>9.3} ms  p95 {:>9.3} ms  min {:>9.3} ms",
+            self.name, self.iters, self.mean_ms, self.median_ms, self.p95_ms, self.min_ms
+        )
+    }
+}
+
+/// Time `f` with warmup; stops after `max_iters` or `budget_ms`, whichever
+/// comes first (minimum 3 measured iterations).
+pub fn bench<F: FnMut()>(name: &str, max_iters: usize, budget_ms: f64, mut f: F) -> BenchResult {
+    // warmup
+    f();
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < max_iters.max(3)
+        && (samples.len() < 3 || start.elapsed().as_secs_f64() * 1e3 < budget_ms)
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+        if samples.len() >= max_iters {
+            break;
+        }
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_ms: mean,
+        median_ms: percentile(&samples, 50.0),
+        p95_ms: percentile(&samples, 95.0),
+        min_ms: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+    }
+}
+
+/// Simple fixed-width table printer for bench/experiment outputs.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) -> String {
+        let ncol = self.header.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n== {} ==\n", self.title);
+        let fmt_row = |cells: &[String], w: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<width$}", c, width = w[i] + 2))
+                .collect::<String>()
+        };
+        out.push_str(&fmt_row(&self.header, &w));
+        out.push('\n');
+        out.push_str(&"-".repeat(w.iter().map(|x| x + 2).sum::<usize>()));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &w));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+pub fn fmt_f(x: f64, prec: usize) -> String {
+    format!("{x:.prec$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let r = bench("noop", 10, 50.0, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters >= 3);
+        assert!(r.min_ms <= r.median_ms && r.median_ms <= r.p95_ms + 1e-9);
+    }
+
+    #[test]
+    fn table_prints_all_rows() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["333".into(), "4".into()]);
+        let s = t.print();
+        assert!(s.contains("demo") && s.contains("333"));
+        assert_eq!(s.lines().filter(|l| !l.is_empty()).count(), 5);
+    }
+}

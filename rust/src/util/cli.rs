@@ -1,0 +1,136 @@
+//! Tiny CLI argument parser (clap is not in the offline crate set).
+//!
+//! Supports `--key value`, `--key=value`, `--flag`, and positional args.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.options.insert(rest.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer, got `{v}`")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be a number, got `{v}`")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer, got `{v}`")),
+        }
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+
+    pub fn subcommand(&self) -> Result<&str> {
+        self.positional
+            .first()
+            .map(|s| s.as_str())
+            .context("missing subcommand")
+    }
+
+    pub fn expect_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.options.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown option --{k} (known: {})", known.join(", "));
+            }
+        }
+        for f in &self.flags {
+            if !known.contains(&f.as_str()) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse(&["serve", "--variant=mix30", "--requests", "64", "--verbose"]);
+        assert_eq!(a.subcommand().unwrap(), "serve");
+        assert_eq!(a.get("variant"), Some("mix30"));
+        assert_eq!(a.usize_or("requests", 1).unwrap(), 64);
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["bench"]);
+        assert_eq!(a.usize_or("n", 7).unwrap(), 7);
+        assert_eq!(a.get_or("method", "mixkvq-mix30"), "mixkvq-mix30");
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.usize_or("n", 1).is_err());
+    }
+
+    #[test]
+    fn unknown_option_detection() {
+        let a = parse(&["x", "--good", "1", "--bad", "2"]);
+        assert!(a.expect_known(&["good"]).is_err());
+        assert!(a.expect_known(&["good", "bad"]).is_ok());
+    }
+}

@@ -1,0 +1,104 @@
+//! Small statistics helpers shared by the bench harness and experiments.
+
+/// Pearson correlation coefficient (Fig. 3a of the paper reports r = 0.16
+/// between query magnitude and key scale).
+pub fn pearson(x: &[f32], y: &[f32]) -> f32 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f32;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let mx = x.iter().sum::<f32>() / n;
+    let my = y.iter().sum::<f32>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (a, b) in x.iter().zip(y) {
+        sxy += (a - mx) * (b - my);
+        sxx += (a - mx) * (a - mx);
+        syy += (b - my) * (b - my);
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        0.0
+    } else {
+        sxy / (sxx * syy).sqrt()
+    }
+}
+
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f32>() / xs.len() as f32
+    }
+}
+
+pub fn mean_f64(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// p-th percentile (0..=100) by linear interpolation on a sorted copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (rank - lo as f64)
+    }
+}
+
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+pub fn rel_l2(approx: &[f32], exact: &[f32]) -> f32 {
+    let num: f32 = approx.iter().zip(exact).map(|(a, e)| (a - e).powi(2)).sum();
+    let den: f32 = exact.iter().map(|e| e * e).sum();
+    (num / den.max(1e-30)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pearson_perfect() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-6);
+        let yneg = [-2.0, -4.0, -6.0, -8.0];
+        assert!((pearson(&x, &yneg) + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pearson_uncorrelated_constant() {
+        let x = [1.0, 2.0, 3.0];
+        let y = [5.0, 5.0, 5.0];
+        assert_eq!(pearson(&x, &y), 0.0);
+    }
+
+    #[test]
+    fn percentile_basic() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn rel_l2_zero_when_equal() {
+        let a = [1.0, -2.0, 3.0];
+        assert!(rel_l2(&a, &a) < 1e-9);
+    }
+}

@@ -1,0 +1,187 @@
+//! Property-test suite for the DESIGN.md §6 invariants, swept with seeded
+//! randomness across module boundaries (the single-module properties live
+//! next to their modules; these exercise the composition).
+
+use mixkvq::coordinator::batcher::Batcher;
+use mixkvq::coordinator::session::{FinishReason, Request, Session};
+use mixkvq::kvcache::accountant;
+use mixkvq::kvcache::cache::RequestCache;
+use mixkvq::model::config::{CacheConfig, ModelConfig};
+use mixkvq::model::sampler::Sampling;
+use mixkvq::quant::methods::Method;
+use mixkvq::quant::salience;
+use mixkvq::quant::window::TierSpec;
+use mixkvq::util::rng::Pcg32;
+
+fn rand_kv(
+    rng: &mut Pcg32,
+    mc: &ModelConfig,
+    t: usize,
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let n = mc.n_kv_heads * t * mc.d_head;
+    let k = (0..mc.n_layers).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+    let v = (0..mc.n_layers).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+    let qa = (0..mc.n_layers)
+        .map(|_| (0..mc.n_kv_heads * mc.d_head).map(|_| rng.f32() + 0.01).collect())
+        .collect();
+    (k, v, qa)
+}
+
+/// Invariant #1+#2 through the full cache: store→dequant stays within the
+/// per-element bound implied by the stored scales, for random tier specs.
+#[test]
+fn cache_roundtrip_error_bounded_over_random_specs() {
+    let mut rng = Pcg32::seeded(1001);
+    let mc = ModelConfig { n_layers: 1, ..ModelConfig::default_build() };
+    let cc = CacheConfig::default_build();
+    for case in 0..20 {
+        // random packable tier split of d_head = 32
+        let n16 = [0usize, 2, 4][rng.below(3) as usize];
+        let mut n4 = 2 * rng.below(8) as usize;
+        if (n16 + n4) % 4 != 0 {
+            n4 += 2;
+        }
+        let n2 = 32 - n16 - n4;
+        let v_bits = [2usize, 4, 16][rng.below(3) as usize];
+        let spec = TierSpec { n16, n4, n2, v_bits };
+        let method = if case % 2 == 0 { Method::mixkvq("mix30") } else { Method::kivi("kv2") };
+        let mut cache = RequestCache::new(&mc, &cc, &[spec], method, 32);
+        let t = 96;
+        let (k, v, qa) = rand_kv(&mut rng, &mc, t);
+        cache.load_prefill(&k, &v, &qa, t).unwrap();
+        let q = cache.qlen;
+        assert!(q >= 64, "case {case}");
+        let d = mc.d_head;
+        let back = cache.heads[0][0].dequant_keys(q);
+        for tok in 0..q {
+            for ch in 0..d {
+                let err = (back[tok * d + ch] - k[0][tok * d + ch]).abs();
+                // worst case at 2-bit for a ~N(0,1) 32-sample group: s/2 ≈
+                // range/6 ≈ 1.2; give slack for tail draws
+                assert!(err < 2.5, "case {case}: err {err}");
+            }
+        }
+        // invariant #5: residual tail is bit-exact
+        let rl = cache.rlen();
+        let res = cache.heads[0][0].res.keys();
+        assert_eq!(res, &k[0][q * d..(q + rl) * d]);
+    }
+}
+
+/// Invariant #3: effective-bits accounting is exact arithmetic over the grid.
+#[test]
+fn effective_bits_exact_over_grid() {
+    for (n16, n4, n2) in mixkvq::harness::pareto::tier_grid(32) {
+        let eb = salience::effective_key_bits(n16, n4, n2);
+        let want = (16 * n16 + 4 * n4 + 2 * n2) as f64 / 32.0;
+        assert_eq!(eb, want);
+        for v_bits in [2usize, 4, 16] {
+            let spec = TierSpec { n16, n4, n2, v_bits };
+            let bpt = accountant::bytes_per_token(&spec, 32, 32);
+            // reconstruct by components
+            let key = 2.0 * n16 as f64 + n4 as f64 / 2.0 + n2 as f64 / 4.0
+                + 4.0 * (n4 + n2) as f64 / 32.0;
+            let val = if v_bits == 16 { 64.0 } else { 32.0 * v_bits as f64 / 8.0 + 4.0 };
+            assert!((bpt - key - val).abs() < 1e-9);
+        }
+    }
+}
+
+/// Invariant #7: RequestCache::bytes_used equals the sum over heads of the
+/// per-head accounting at every point of a request's life.
+#[test]
+fn accountant_matches_component_sum_during_decode() {
+    let mut rng = Pcg32::seeded(1002);
+    let mc = ModelConfig { n_layers: 2, ..ModelConfig::default_build() };
+    let cc = CacheConfig::default_build();
+    let spec = TierSpec { n16: 2, n4: 2, n2: 28, v_bits: 2 };
+    let mut cache = RequestCache::new(&mc, &cc, &[spec; 2], Method::mixkvq("mix225"), 32);
+    let (k, v, qa) = rand_kv(&mut rng, &mc, 64);
+    cache.load_prefill(&k, &v, &qa, 64).unwrap();
+    for _ in 0..80 {
+        let total: usize = cache
+            .heads
+            .iter()
+            .flat_map(|r| r.iter())
+            .map(|h| h.bytes_used(cache.qlen))
+            .sum();
+        assert_eq!(cache.bytes_used(), total);
+        assert!(cache.bytes_used() < cache.bytes_fp16_equiv());
+        let (kn, vn, qn) = rand_kv(&mut rng, &mc, 1);
+        cache.append(&kn, &vn, &qn).unwrap();
+    }
+}
+
+/// Invariant #6: FIFO batcher never starves — with random finish patterns,
+/// every enqueued request is eventually admitted in arrival order.
+#[test]
+fn batcher_fifo_no_starvation() {
+    let mut rng = Pcg32::seeded(1003);
+    let mc = ModelConfig { n_layers: 1, ..ModelConfig::default_build() };
+    let cc = CacheConfig::default_build();
+    for _ in 0..30 {
+        let slots = 1 + rng.below(4) as usize;
+        let n = 5 + rng.below(20) as usize;
+        let mut b = Batcher::new(slots);
+        for id in 0..n as u64 {
+            b.enqueue(Request {
+                id,
+                prompt: vec![1],
+                max_new_tokens: 4,
+                sampling: Sampling::Greedy,
+            });
+        }
+        let mut admitted = Vec::new();
+        let mut guard = 0;
+        while (b.has_work() || b.live() > 0) && guard < 10_000 {
+            guard += 1;
+            while let Some((slot, req)) = b.next_admission() {
+                admitted.push(req.id);
+                let cache = RequestCache::new(
+                    &mc,
+                    &cc,
+                    &[TierSpec { n16: 32, n4: 0, n2: 0, v_bits: 16 }],
+                    Method::bf16(),
+                    32,
+                );
+                b.install(slot, Session::new(req, cache, 5, std::time::Instant::now()));
+            }
+            // randomly finish live sessions
+            for s in b.slots.iter_mut().flatten() {
+                if rng.f32() < 0.5 {
+                    s.finish(FinishReason::Eos);
+                }
+            }
+            b.reap();
+            if admitted.len() == n && b.live() == 0 {
+                break;
+            }
+        }
+        let want: Vec<u64> = (0..n as u64).collect();
+        assert_eq!(admitted, want, "admission must be FIFO and complete");
+    }
+}
+
+/// Invariant #4 at the composition level: tier membership is monotone in
+/// the salience score — the top-A_d channel is always in the first tier.
+#[test]
+fn top_salience_channel_lands_in_top_tier() {
+    let mut rng = Pcg32::seeded(1004);
+    let mc = ModelConfig { n_layers: 1, ..ModelConfig::default_build() };
+    let cc = CacheConfig::default_build();
+    let spec = TierSpec { n16: 2, n4: 2, n2: 28, v_bits: 2 };
+    for _ in 0..10 {
+        let mut cache = RequestCache::new(&mc, &cc, &[spec], Method::mixkvq("mix30"), 32);
+        let t = 64;
+        let (mut k, v, mut qa) = rand_kv(&mut rng, &mc, t);
+        // make channel 9 both high-range and high-importance on head 0
+        let d = mc.d_head;
+        for tok in 0..t {
+            k[0][tok * d + 9] *= 15.0;
+        }
+        qa[0][9] = 50.0;
+        cache.load_prefill(&k, &v, &qa, t).unwrap();
+        let head = &cache.heads[0][0];
+        assert!(head.idx[..spec.n16].contains(&9), "idx={:?}", &head.idx[..4]);
+    }
+}
