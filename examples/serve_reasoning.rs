@@ -1,27 +1,31 @@
 //! End-to-end serving driver (the DESIGN.md validation workload): load the
 //! trained MiniReasoner artifacts, serve a batched mixed trace of reasoning
 //! and retrieval requests through the full L3→L2→L1 stack, and report
-//! accuracy, latency, throughput, and memory vs the BF16 baseline.
+//! accuracy, latency, throughput, and memory vs the BF16 baseline — then
+//! demonstrate the session API serving two tenants with *different*
+//! `MethodSpec`s concurrently through one server.
 //!
 //!     make artifacts && cargo run --release --example serve_reasoning
 //!     (options: --method mixkvq-mix30 --requests 24 --artifacts <dir>)
 
 use anyhow::{bail, Result};
 use mixkvq::coordinator::engine::Engine;
+use mixkvq::coordinator::events::{by_request, validate_stream, RequestStatus};
 use mixkvq::coordinator::metrics::breakdown;
 use mixkvq::coordinator::router::{Server, ServerConfig};
 use mixkvq::coordinator::session::Request;
 use mixkvq::harness::accuracy;
 use mixkvq::harness::workloads::{suite, TaskKind};
 use mixkvq::model::sampler::Sampling;
-use mixkvq::quant::methods::Method;
+use mixkvq::quant::methods::{Method, MethodSpec};
 use mixkvq::util::cli::Args;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
     let artifacts = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
     let n = args.usize_or("requests", 24)?;
-    let methods = ["bf16", args.get_or("method", "mixkvq-mix30").as_str()]
+    let method_name = args.get_or("method", "mixkvq-mix30");
+    let methods = ["bf16", method_name.as_str()]
         .iter()
         .map(|m| Method::by_name(m).ok_or_else(|| anyhow::anyhow!("unknown method {m}")))
         .collect::<Result<Vec<_>>>()?;
@@ -42,25 +46,11 @@ fn main() -> Result<()> {
             );
         }
 
-        // 2) generative serving: mixed reasoning trace, batched
+        // 2) generative serving: mixed reasoning trace, batched (the
+        //    Server::run shim over the session frontend)
         engine.timers = Default::default();
         let mut server = Server::new(engine, ServerConfig::default());
-        let mut reqs = Vec::new();
-        let mut rng = mixkvq::util::rng::Pcg32::seeded(3);
-        for i in 0..n {
-            let task = match i % 3 {
-                0 => mixkvq::harness::workloads::gen_chain(&mut rng, 8),
-                1 => mixkvq::harness::workloads::gen_passkey(&mut rng, 200),
-                _ => mixkvq::harness::workloads::gen_kvlookup(&mut rng, 10),
-            };
-            reqs.push(Request {
-                id: i as u64,
-                prompt: task.prompt,
-                max_new_tokens: 48,
-                sampling: Sampling::Greedy,
-            });
-        }
-        let completed = server.run(reqs)?;
+        let completed = server.run(trace(n, None, None))?;
         if completed.len() != n {
             bail!("served {} of {n} requests", completed.len());
         }
@@ -71,5 +61,75 @@ fn main() -> Result<()> {
             b.model_exec_pct, b.quantize_pct, b.assemble_pct, b.quantize_call_rate_pct
         );
     }
+
+    // 3) per-request routing: two tenants with different precision policies
+    //    share one server — tenant A on the default (the quantized method),
+    //    tenant B pinned to bf16 — batched per decode variant each tick.
+    let spec: MethodSpec = method_name
+        .parse()
+        .map_err(|e: String| anyhow::anyhow!("{e}"))?;
+    let other = if spec == MethodSpec::Bf16 {
+        MethodSpec::MixKvq { op: mixkvq::quant::methods::MixOp::Mix30 }
+    } else {
+        MethodSpec::Bf16
+    };
+    println!("\n===== mixed tenants: {spec} + {other} on one server =====");
+    let engine = Engine::new(&artifacts, spec.build(), 128)?;
+    let mut server = Server::new(engine, ServerConfig::default());
+    let n_mixed = 8.min(n.max(2));
+    server.metrics.start();
+    let ids: Vec<u64> = trace(n_mixed, Some(other), Some(spec))
+        .into_iter()
+        .map(|r| server.submit(r))
+        .collect::<Result<_>>()?;
+    // first tick admits both tenants — verify they run concurrently
+    server.tick()?;
+    let live = ids
+        .iter()
+        .filter(|&&id| matches!(server.poll(id), RequestStatus::Running { .. }))
+        .count();
+    println!("  after tick 1: {live} sessions live concurrently");
+    while server.has_work() {
+        server.tick()?;
+    }
+    server.metrics.stop();
+    let events = server.drain_events();
+    for (id, stream) in by_request(&events) {
+        let max_new = 48;
+        if let Err(e) = validate_stream(&stream, max_new) {
+            bail!("request {id}: malformed event stream: {e}");
+        }
+    }
+    let by_method = server.metrics.completed_by_method();
+    for (m, k) in &by_method {
+        println!("  {m}: {k} requests completed");
+    }
+    if by_method.len() < 2 {
+        bail!("expected two distinct methods to complete on one server");
+    }
+    println!("  all {} event streams well-formed", ids.len());
+    println!("  serving: {}", server.metrics.summary());
     Ok(())
+}
+
+/// A small mixed reasoning/retrieval trace; odd requests get `odd_method`,
+/// even requests `even_method` (None = server default).
+fn trace(n: usize, odd_method: Option<MethodSpec>, even_method: Option<MethodSpec>) -> Vec<Request> {
+    let mut rng = mixkvq::util::rng::Pcg32::seeded(3);
+    (0..n)
+        .map(|i| {
+            let task = match i % 3 {
+                0 => mixkvq::harness::workloads::gen_chain(&mut rng, 8),
+                1 => mixkvq::harness::workloads::gen_passkey(&mut rng, 200),
+                _ => mixkvq::harness::workloads::gen_kvlookup(&mut rng, 10),
+            };
+            Request {
+                id: i as u64,
+                prompt: task.prompt,
+                max_new_tokens: 48,
+                sampling: Sampling::Greedy,
+                method: if i % 2 == 1 { odd_method } else { even_method },
+            }
+        })
+        .collect()
 }

@@ -1,10 +1,16 @@
 //! Continuous batcher: a fixed-slot decode batch (the compiled graph's
 //! static B) fed from a FIFO wait queue — the Orca/vLLM iteration-level
 //! scheduling model specialized to static shapes.
+//!
+//! Slots are not method-homogeneous: each session carries its own
+//! quantization method, and [`Batcher::variant_groups`] partitions the live
+//! slots into per-(decode variant, rotation) sub-batches — one compiled
+//! graph execution each — so tenants with different precision policies
+//! share the same server.
 
 use std::collections::VecDeque;
 
-use crate::coordinator::session::{Request, Session};
+use crate::coordinator::session::{Request, RequestId, Session};
 
 pub struct Batcher {
     pub waiting: VecDeque<Request>,
@@ -49,6 +55,40 @@ impl Batcher {
         self.slots[slot] = Some(session);
     }
 
+    /// Remove a request from the wait queue (cancellation before admission).
+    pub fn remove_waiting(&mut self, id: RequestId) -> Option<Request> {
+        let pos = self.waiting.iter().position(|r| r.id == id)?;
+        self.waiting.remove(pos)
+    }
+
+    /// Partition live, unfinished slots into decode sub-batches keyed by
+    /// (decode variant, rotation). Each group is one execution of that
+    /// variant's compiled graph; the key includes rotation because the `rot`
+    /// matrix is a whole-batch graph input (RotateKV cannot share an
+    /// execution with an unrotated method even on the same variant shapes).
+    /// Groups are ordered by first-occupied slot, members by slot index, so
+    /// sampling order is deterministic.
+    pub fn variant_groups(&self) -> Vec<VariantGroup> {
+        let mut groups: Vec<VariantGroup> = Vec::new();
+        for (i, slot) in self.slots.iter().enumerate() {
+            let Some(sess) = slot else { continue };
+            if sess.is_finished() {
+                continue;
+            }
+            let variant = sess.cache.method.variant.as_str();
+            let rotate = sess.cache.method.rotate;
+            match groups.iter_mut().find(|g| g.variant == variant && g.rotate == rotate) {
+                Some(g) => g.slots.push(i),
+                None => groups.push(VariantGroup {
+                    variant: variant.to_string(),
+                    rotate,
+                    slots: vec![i],
+                }),
+            }
+        }
+        groups
+    }
+
     /// Remove finished sessions, returning them.
     pub fn reap(&mut self) -> Vec<Session> {
         let mut done = Vec::new();
@@ -59,6 +99,14 @@ impl Batcher {
         }
         done
     }
+}
+
+/// One decode sub-batch: the slot indices sharing a (variant, rotation) key.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VariantGroup {
+    pub variant: String,
+    pub rotate: bool,
+    pub slots: Vec<usize>,
 }
 
 #[cfg(test)]
@@ -73,20 +121,30 @@ mod tests {
     use std::time::Instant;
 
     fn req(id: u64) -> Request {
-        Request { id, prompt: vec![1], max_new_tokens: 8, sampling: Sampling::Greedy }
+        Request {
+            id,
+            prompt: vec![1],
+            max_new_tokens: 8,
+            sampling: Sampling::Greedy,
+            method: None,
+        }
     }
 
-    fn session(id: u64) -> Session {
+    fn session_with(id: u64, method: Method) -> Session {
         let mc = ModelConfig { n_layers: 1, ..ModelConfig::default_build() };
         let cc = CacheConfig::default_build();
         let cache = RequestCache::new(
             &mc,
             &cc,
             &[TierSpec { n16: 32, n4: 0, n2: 0, v_bits: 16 }],
-            Method::bf16(),
+            method,
             32,
         );
         Session::new(req(id), cache, 5, Instant::now())
+    }
+
+    fn session(id: u64) -> Session {
+        session_with(id, Method::bf16())
     }
 
     #[test]
@@ -127,5 +185,47 @@ mod tests {
         let (slot, _r) = b.next_admission().unwrap();
         b.install(slot, session(1));
         assert!(b.has_work());
+    }
+
+    #[test]
+    fn remove_waiting_preserves_order() {
+        let mut b = Batcher::new(1);
+        b.enqueue(req(1));
+        b.enqueue(req(2));
+        b.enqueue(req(3));
+        assert_eq!(b.remove_waiting(2).unwrap().id, 2);
+        assert!(b.remove_waiting(9).is_none());
+        let ids: Vec<u64> = b.waiting.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 3]);
+    }
+
+    #[test]
+    fn variant_groups_key_on_variant_and_rotation() {
+        let mut b = Batcher::new(6);
+        b.install(0, session_with(0, Method::kivi("kv2")));
+        b.install(1, session_with(1, Method::bf16()));
+        b.install(2, session_with(2, Method::skvq("kv2"))); // same graph as kivi-kv2
+        b.install(3, session_with(3, Method::rotatekv("kv2"))); // same variant, rotated
+        b.install(5, session_with(5, Method::kivi("kv2")));
+        b.slots[5].as_mut().unwrap().finish(FinishReason::Eos); // excluded
+        let groups = b.variant_groups();
+        assert_eq!(groups.len(), 3);
+        assert_eq!(groups[0].variant, "kv2");
+        assert!(!groups[0].rotate);
+        assert_eq!(groups[0].slots, vec![0, 2]);
+        assert_eq!(groups[1].variant, "bf16");
+        assert_eq!(groups[1].slots, vec![1]);
+        assert_eq!(groups[2], VariantGroup { variant: "kv2".into(), rotate: true, slots: vec![3] });
+    }
+
+    #[test]
+    fn single_method_batch_is_one_group() {
+        let mut b = Batcher::new(3);
+        b.install(0, session_with(0, Method::mixkvq("mix30")));
+        b.install(2, session_with(2, Method::mixkvq("mix30")));
+        let groups = b.variant_groups();
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].slots, vec![0, 2]);
+        assert_eq!(groups[0].variant, "mix30");
     }
 }

@@ -2,19 +2,25 @@
 //! per-request quantized caches; builds batched decode-step inputs in the
 //! exact manifest order and folds the outputs back into the caches.
 //!
-//! One engine serves one (quantization method, decode variant) pair — the
-//! decode graph's tier shapes are compile-time — mirroring how a vLLM
-//! deployment pins one KV-cache dtype per engine process.
+//! One engine holds a *pool* of compiled decode variants (tier shapes are
+//! compile-time, so each variant is its own executable) behind one shared
+//! runtime, weight upload, and prefill graph set. `method`/`variant` name
+//! the engine's default; requests carrying a `MethodSpec` override are
+//! admitted with their own method's cache ([`Engine::admit_prefill_with`])
+//! and decoded through their variant's graph
+//! ([`Engine::decode_step_variant`]) — the server's batcher groups live
+//! slots into per-variant sub-batches each step.
 
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::kvcache::accountant::MemoryAccountant;
 use crate::kvcache::cache::RequestCache;
 use crate::model::config::{Meta, VariantSpec};
 use crate::model::weights::Weights;
-use crate::quant::methods::Method;
+use crate::quant::methods::{Method, MethodSpec};
 use crate::runtime::client::Runtime;
 use crate::runtime::executor::{upload, Arg, DeviceArg, Executable};
 use crate::runtime::registry::{decode_artifact, pick_bucket, prefill_artifact, DType};
@@ -45,12 +51,13 @@ pub struct Engine {
     pub runtime: Runtime,
     pub meta: Meta,
     pub weights: Weights,
+    /// Default decode variant (requests without a `MethodSpec` override).
     pub variant: VariantSpec,
+    /// Default quantization method.
     pub method: Method,
     pub r_limit: usize,
     pub timers: EngineTimers,
     artifacts_dir: PathBuf,
-    decode_name: String,
     rot: Vec<f32>,
     /// Weights uploaded to the device ONCE (§Perf: saves ~2.4 MB of host
     /// literal construction + transfer per decode step).
@@ -102,7 +109,6 @@ impl Engine {
             r_limit,
             timers: EngineTimers::default(),
             artifacts_dir: artifacts_dir.to_path_buf(),
-            decode_name,
             rot,
             weight_bufs,
         })
@@ -112,18 +118,44 @@ impl Engine {
         &self.artifacts_dir
     }
 
-    /// Switch quantization method in place (compiles the new decode variant
-    /// if not already resident; prefill graphs and weights are shared). The
-    /// experiment roster loops use this to avoid re-creating PJRT clients.
+    /// Switch the *default* quantization method in place (compiles the new
+    /// decode variant if not already resident; prefill graphs and weights
+    /// are shared). The experiment roster loops use this to avoid
+    /// re-creating PJRT clients.
     pub fn set_method(&mut self, method: Method) -> Result<()> {
+        self.ensure_method(&method)?;
         let variant = self.meta.variant(&method.variant)?.clone();
-        let decode_name = decode_artifact(&variant.name);
-        self.runtime.load(&self.artifacts_dir.clone(), &decode_name)?;
         self.rot = method.rotation(self.meta.model.d_head);
         self.method = method;
         self.variant = variant;
-        self.decode_name = decode_name;
         Ok(())
+    }
+
+    /// Make `method`'s decode variant resident in the executable pool
+    /// (no-op when already compiled). Per-request routing calls this at
+    /// admission, so a variant compiles at most once per process.
+    pub fn ensure_method(&mut self, method: &Method) -> Result<()> {
+        self.meta
+            .variant(&method.variant)
+            .with_context(|| format!("method `{}`", method.name))?;
+        let decode_name = decode_artifact(&method.variant);
+        self.runtime.load(&self.artifacts_dir.clone(), &decode_name)
+    }
+
+    /// Resolve a request's method override against the engine default.
+    pub fn resolve_method(&self, spec: Option<MethodSpec>) -> Method {
+        spec.map(MethodSpec::build).unwrap_or_else(|| self.method.clone())
+    }
+
+    /// Worst-case cache bytes for one request under `method` (its own
+    /// variant's tier shapes, not the default's).
+    pub fn worst_case_bytes_for(&self, method: &Method) -> Result<usize> {
+        let spec = self.meta.variant(&method.variant)?;
+        Ok(MemoryAccountant::worst_case_request_bytes(
+            &self.meta.model,
+            &self.meta.cache,
+            &spec.layers,
+        ))
     }
 
     pub fn new_cache(&self) -> RequestCache {
@@ -175,23 +207,41 @@ impl Engine {
         Ok(PrefillData { k, v, qabs, t, last_logits })
     }
 
-    /// One batched decode step. `slots[i] = Some((cache, token))` for live
-    /// requests; idle slots are masked out. Returns per-slot logits and
-    /// updates each live cache (append + lazy quantization).
+    /// One batched decode step on the *default* variant. `slots[i] =
+    /// Some((cache, token))` for live requests; idle slots are masked out.
+    /// Returns per-slot logits and updates each live cache (append + lazy
+    /// quantization).
     pub fn decode_step(
         &mut self,
+        slots: &mut [Option<(&mut RequestCache, i32)>],
+    ) -> Result<Vec<Option<Vec<f32>>>> {
+        let variant = self.variant.name.clone();
+        let rot = self.rot.clone();
+        self.decode_step_variant(&variant, &rot, slots)
+    }
+
+    /// One batched decode step through `variant`'s compiled graph (must be
+    /// resident — see [`Engine::ensure_method`]). Every live slot in the
+    /// call must hold a cache built for this variant's tier shapes; the
+    /// batcher's variant groups guarantee that in serving.
+    pub fn decode_step_variant(
+        &mut self,
+        variant: &str,
+        rot: &[f32],
         slots: &mut [Option<(&mut RequestCache, i32)>],
     ) -> Result<Vec<Option<Vec<f32>>>> {
         let b = self.meta.cache.decode_batch;
         if slots.len() != b {
             bail!("decode batch must have exactly {b} slots");
         }
+        let spec = self.meta.variant(variant)?.clone();
+        let decode_name = decode_artifact(variant);
         let t_asm = Instant::now();
-        let owned = self.assemble_args(slots)?;
+        let owned = self.assemble_args(&spec, rot, &decode_name, slots)?;
         let args: Vec<Arg> = owned.iter().map(|o| o.as_arg()).collect();
         self.timers.assemble_ns += t_asm.elapsed().as_nanos() as u64;
 
-        let exe = self.runtime.get(&self.decode_name)?;
+        let exe = self.runtime.get(&decode_name)?;
         let t0 = Instant::now();
         let out = exe.run_b(&self.runtime.client, &self.weight_bufs, &args)?;
         self.timers.decode_exec_ns += t0.elapsed().as_nanos() as u64;
@@ -234,10 +284,25 @@ impl Engine {
         Ok(results)
     }
 
-    /// Quantize a freshly prefilled prompt into a new cache (timed as a
-    /// channel-selection/quantization event).
+    /// Quantize a freshly prefilled prompt into a new cache under the
+    /// default method (timed as a channel-selection/quantization event).
     pub fn admit_prefill(&mut self, pre: &PrefillData) -> Result<RequestCache> {
-        let mut cache = self.new_cache();
+        let method = self.method.clone();
+        self.admit_prefill_with(pre, &method)
+    }
+
+    /// Quantize a freshly prefilled prompt into a cache built for `method`
+    /// — the per-request routing path: the cache gets that method's tier
+    /// shapes, ordering, clipping, and rotation.
+    pub fn admit_prefill_with(&mut self, pre: &PrefillData, method: &Method) -> Result<RequestCache> {
+        let spec = self.meta.variant(&method.variant)?.clone();
+        let mut cache = RequestCache::new(
+            &self.meta.model,
+            &self.meta.cache,
+            &spec.layers,
+            method.clone(),
+            self.r_limit,
+        );
         let t0 = Instant::now();
         cache.load_prefill(&pre.k, &pre.v, &pre.qabs, pre.t)?;
         self.timers.quantize_ns += t0.elapsed().as_nanos() as u64;
@@ -246,13 +311,19 @@ impl Engine {
     }
 
     /// Build the non-weight decode args in manifest order.
-    fn assemble_args(&self, slots: &[Option<(&mut RequestCache, i32)>]) -> Result<Vec<Owned>> {
+    fn assemble_args(
+        &self,
+        vspec: &VariantSpec,
+        rot: &[f32],
+        decode_name: &str,
+        slots: &[Option<(&mut RequestCache, i32)>],
+    ) -> Result<Vec<Owned>> {
         let mc = &self.meta.model;
         let cc = &self.meta.cache;
         let (b, c, r, g) = (cc.decode_batch, cc.capacity, cc.residual, cc.group);
         let (hkv, dh) = (mc.n_kv_heads, mc.d_head);
         let cg = c / g;
-        let exe = self.runtime.get(&self.decode_name)?;
+        let exe = self.runtime.get(decode_name)?;
         let n_params = self.weights.flat.len();
 
         let mut token = vec![0i32; b];
@@ -275,10 +346,24 @@ impl Engine {
                 "pos" => Owned::I32(pos.clone()),
                 "qlen" => Owned::I32(qlen.clone()),
                 "rlen" => Owned::I32(rlen.clone()),
-                "rot" => Owned::F32(self.rot.clone()),
+                "rot" => Owned::F32(rot.to_vec()),
                 name => {
                     let (l, field) = parse_layer_field(name)?;
-                    self.assemble_layer_field(slots, l, field, spec.elems(), spec.dtype, b, c, r, g, cg, hkv, dh)?
+                    self.assemble_layer_field(
+                        vspec,
+                        slots,
+                        l,
+                        field,
+                        spec.elems(),
+                        spec.dtype,
+                        b,
+                        c,
+                        r,
+                        g,
+                        cg,
+                        hkv,
+                        dh,
+                    )?
                 }
             };
             out.push(owned);
@@ -289,6 +374,7 @@ impl Engine {
     #[allow(clippy::too_many_arguments)]
     fn assemble_layer_field(
         &self,
+        vspec: &VariantSpec,
         slots: &[Option<(&mut RequestCache, i32)>],
         l: usize,
         field: &str,
@@ -321,7 +407,7 @@ impl Engine {
             }};
         }
         use crate::kvcache::cache::HeadState;
-        let spec_l = self.variant.layers[l];
+        let spec_l = vspec.layers[l];
         let owned = match field {
             "idx16" => gather!(i32, I32, |hd: &HeadState, dst: &mut [i32]| dst
                 .copy_from_slice(&hd.idx[..spec_l.n16])),

@@ -1,0 +1,254 @@
+//! Per-request lifecycle events emitted by the serving frontend.
+//!
+//! Every request produces a well-formed stream:
+//!
+//! ```text
+//! Queued → Admitted{method} → FirstToken → Token* → Finished{reason}
+//! ```
+//!
+//! Requests that never reach a slot (rejected at submit, cancelled while
+//! queued) produce `Queued → Finished{Rejected|Cancelled}` with no
+//! `Admitted`. [`validate_stream`] checks the shape; the property suite in
+//! `proptest_invariants.rs` sweeps it against randomized schedules and the
+//! integration tests check it against the real engine.
+
+use crate::coordinator::session::{FinishReason, RequestId};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// Request accepted into the wait queue.
+    Queued { id: RequestId },
+    /// Request admitted into a decode slot, prefilled under `method` (the
+    /// resolved per-request quantization policy).
+    Admitted { id: RequestId, method: String },
+    /// The first sampled token (produced by the prefill logits).
+    FirstToken { id: RequestId, token: i32 },
+    /// A subsequent decode-step token.
+    Token { id: RequestId, token: i32 },
+    /// Terminal event; `tokens` is the total generated count.
+    Finished { id: RequestId, reason: FinishReason, tokens: usize },
+}
+
+impl Event {
+    pub fn id(&self) -> RequestId {
+        match *self {
+            Event::Queued { id }
+            | Event::Admitted { id, .. }
+            | Event::FirstToken { id, .. }
+            | Event::Token { id, .. }
+            | Event::Finished { id, .. } => id,
+        }
+    }
+}
+
+/// Append-only event buffer drained by `Server::drain_events`.
+#[derive(Default)]
+pub struct EventLog {
+    buf: Vec<Event>,
+}
+
+impl EventLog {
+    pub fn queued(&mut self, id: RequestId) {
+        self.buf.push(Event::Queued { id });
+    }
+
+    pub fn admitted(&mut self, id: RequestId, method: &str) {
+        self.buf.push(Event::Admitted { id, method: method.to_string() });
+    }
+
+    pub fn first_token(&mut self, id: RequestId, token: i32) {
+        self.buf.push(Event::FirstToken { id, token });
+    }
+
+    pub fn token(&mut self, id: RequestId, token: i32) {
+        self.buf.push(Event::Token { id, token });
+    }
+
+    pub fn finished(&mut self, id: RequestId, reason: FinishReason, tokens: usize) {
+        self.buf.push(Event::Finished { id, reason, tokens });
+    }
+
+    pub fn drain(&mut self) -> Vec<Event> {
+        std::mem::take(&mut self.buf)
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+/// Check that one request's event stream is well-formed:
+/// starts with exactly one `Queued`; if admitted, exactly one `Admitted`,
+/// then one `FirstToken` before any `Token`, generated count (1 + #`Token`)
+/// within `max_new_tokens` (floored at 1: the prefill sample always exists);
+/// exactly one terminal `Finished`, last, with a consistent token count.
+pub fn validate_stream(events: &[Event], max_new_tokens: usize) -> Result<(), String> {
+    if events.is_empty() {
+        return Err("empty stream".into());
+    }
+    if !matches!(events[0], Event::Queued { .. }) {
+        return Err(format!("stream must start with Queued, got {:?}", events[0]));
+    }
+    let id = events[0].id();
+    if events.iter().any(|e| e.id() != id) {
+        return Err("mixed request ids in one stream".into());
+    }
+    let count = |f: fn(&Event) -> bool| events.iter().filter(|e| f(e)).count();
+    if count(|e| matches!(e, Event::Queued { .. })) != 1 {
+        return Err("more than one Queued".into());
+    }
+    let n_finished = count(|e| matches!(e, Event::Finished { .. }));
+    if n_finished != 1 {
+        return Err(format!("want exactly one Finished, got {n_finished}"));
+    }
+    let Some(Event::Finished { reason, tokens, .. }) = events.last() else {
+        return Err("Finished must be the terminal event".into());
+    };
+    let n_admitted = count(|e| matches!(e, Event::Admitted { .. }));
+    let first_pos = events.iter().position(|e| matches!(e, Event::FirstToken { .. }));
+    let n_tokens = count(|e| matches!(e, Event::Token { .. }));
+    match n_admitted {
+        0 => {
+            // never admitted: no token events, terminal reason must say why
+            if first_pos.is_some() || n_tokens > 0 {
+                return Err("tokens emitted without admission".into());
+            }
+            if !matches!(reason, FinishReason::Rejected | FinishReason::Cancelled) {
+                return Err(format!("unadmitted stream finished with {reason:?}"));
+            }
+            if *tokens != 0 {
+                return Err("unadmitted stream reports generated tokens".into());
+            }
+        }
+        1 => {
+            let adm = events.iter().position(|e| matches!(e, Event::Admitted { .. })).unwrap();
+            let Some(first) = first_pos else {
+                return Err("admitted stream missing FirstToken".into());
+            };
+            if first < adm {
+                return Err("FirstToken precedes Admitted".into());
+            }
+            if count(|e| matches!(e, Event::FirstToken { .. })) != 1 {
+                return Err("more than one FirstToken".into());
+            }
+            if events.iter().take(first).any(|e| matches!(e, Event::Token { .. })) {
+                return Err("Token precedes FirstToken".into());
+            }
+            let generated = 1 + n_tokens;
+            if generated > max_new_tokens.max(1) {
+                return Err(format!(
+                    "generated {generated} tokens > max_new_tokens {max_new_tokens}"
+                ));
+            }
+            if *tokens != generated {
+                return Err(format!(
+                    "Finished reports {tokens} tokens, stream has {generated}"
+                ));
+            }
+        }
+        n => return Err(format!("want at most one Admitted, got {n}")),
+    }
+    Ok(())
+}
+
+/// Group a drained event buffer by request id, preserving order.
+pub fn by_request(events: &[Event]) -> Vec<(RequestId, Vec<Event>)> {
+    let mut out: Vec<(RequestId, Vec<Event>)> = Vec::new();
+    for e in events {
+        match out.iter_mut().find(|(id, _)| *id == e.id()) {
+            Some((_, v)) => v.push(e.clone()),
+            None => out.push((e.id(), vec![e.clone()])),
+        }
+    }
+    out
+}
+
+/// Status view returned by `Server::poll`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RequestStatus {
+    /// Never submitted (or submitted to a different server).
+    Unknown,
+    /// Waiting for a free decode slot / memory reservation.
+    Queued,
+    /// Live in a decode slot with `generated` tokens so far.
+    Running { generated: usize },
+    /// Terminal, with the finish reason and the generated tokens.
+    Finished { reason: FinishReason, tokens: Vec<i32> },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn good(id: RequestId) -> Vec<Event> {
+        vec![
+            Event::Queued { id },
+            Event::Admitted { id, method: "bf16".into() },
+            Event::FirstToken { id, token: 5 },
+            Event::Token { id, token: 6 },
+            Event::Token { id, token: 7 },
+            Event::Finished { id, reason: FinishReason::MaxTokens, tokens: 3 },
+        ]
+    }
+
+    #[test]
+    fn accepts_well_formed_stream() {
+        assert_eq!(validate_stream(&good(1), 3), Ok(()));
+        // unadmitted terminal shapes
+        let rejected = vec![
+            Event::Queued { id: 2 },
+            Event::Finished { id: 2, reason: FinishReason::Rejected, tokens: 0 },
+        ];
+        assert_eq!(validate_stream(&rejected, 8), Ok(()));
+    }
+
+    #[test]
+    fn rejects_malformed_streams() {
+        // token budget exceeded
+        assert!(validate_stream(&good(1), 2).is_err());
+        // missing FirstToken
+        let mut s = good(1);
+        s.remove(2);
+        assert!(validate_stream(&s, 3).is_err());
+        // double Finished
+        let mut s = good(1);
+        s.push(Event::Finished { id: 1, reason: FinishReason::Eos, tokens: 3 });
+        assert!(validate_stream(&s, 3).is_err());
+        // Finished not last
+        let mut s = good(1);
+        let fin = s.remove(5);
+        s.insert(3, fin);
+        assert!(validate_stream(&s, 3).is_err());
+        // Token before FirstToken
+        let mut s = good(1);
+        s.swap(2, 3);
+        assert!(validate_stream(&s, 3).is_err());
+        // unadmitted stream with a normal finish reason
+        let s = vec![
+            Event::Queued { id: 3 },
+            Event::Finished { id: 3, reason: FinishReason::Eos, tokens: 0 },
+        ];
+        assert!(validate_stream(&s, 8).is_err());
+    }
+
+    #[test]
+    fn log_drains_in_order_and_groups() {
+        let mut log = EventLog::default();
+        log.queued(1);
+        log.queued(2);
+        log.admitted(1, "bf16");
+        log.first_token(1, 9);
+        assert_eq!(log.len(), 4);
+        let events = log.drain();
+        assert!(log.is_empty());
+        let grouped = by_request(&events);
+        assert_eq!(grouped.len(), 2);
+        assert_eq!(grouped[0].0, 1);
+        assert_eq!(grouped[0].1.len(), 3);
+        assert_eq!(grouped[1].1, vec![Event::Queued { id: 2 }]);
+    }
+}

@@ -18,6 +18,16 @@ pub struct Metrics {
     pub slot_steps: u64,
     pub peak_mem_bytes: usize,
     pub max_concurrent: usize,
+    /// Requests retired with `FinishReason::Rejected` — at submit (prompt
+    /// exceeds every prefill bucket, unknown decode variant, footprint
+    /// beyond the memory budget) or at admission (decode artifact failed
+    /// to load).
+    pub rejected: u64,
+    /// Requests cancelled via `Server::cancel`.
+    pub cancelled: u64,
+    /// Admission attempts deferred because the memory budget was saturated
+    /// (the request stays queued and retries next tick).
+    pub admission_stalls: u64,
 }
 
 impl Metrics {
@@ -69,23 +79,59 @@ impl Metrics {
         }
     }
 
+    /// TTFT p50/p95 over sessions that actually produced a first token —
+    /// rejected/cancelled-in-queue records carry `ttft_ms: None` and are
+    /// excluded rather than dragging the percentiles toward zero.
     pub fn ttft_ms(&self) -> (f64, f64) {
-        let xs: Vec<f64> = self.completed.iter().map(|c| c.ttft_ms).collect();
+        let xs: Vec<f64> = self.completed.iter().filter_map(|c| c.ttft_ms).collect();
         (percentile(&xs, 50.0), percentile(&xs, 95.0))
     }
 
+    /// End-to-end latency p50/p95 over served sessions (same exclusion rule
+    /// as [`Metrics::ttft_ms`]: only sessions that produced tokens count).
     pub fn latency_ms(&self) -> (f64, f64) {
-        let xs: Vec<f64> = self.completed.iter().map(|c| c.total_ms).collect();
+        let xs: Vec<f64> = self
+            .completed
+            .iter()
+            .filter(|c| c.ttft_ms.is_some())
+            .map(|c| c.total_ms)
+            .collect();
+        (percentile(&xs, 50.0), percentile(&xs, 95.0))
+    }
+
+    /// Completion counts per resolved method name, in first-completion
+    /// order — the per-tenant routing receipt for mixed-precision serving.
+    pub fn completed_by_method(&self) -> Vec<(String, usize)> {
+        let mut out: Vec<(String, usize)> = Vec::new();
+        for c in &self.completed {
+            match out.iter_mut().find(|(m, _)| *m == c.method) {
+                Some((_, n)) => *n += 1,
+                None => out.push((c.method.clone(), 1)),
+            }
+        }
+        out
+    }
+
+    /// Queue-wait (submit → admission) p50/p95 over served sessions.
+    pub fn queue_wait_ms(&self) -> (f64, f64) {
+        let xs: Vec<f64> = self
+            .completed
+            .iter()
+            .filter(|c| c.ttft_ms.is_some())
+            .map(|c| c.queue_ms)
+            .collect();
         (percentile(&xs, 50.0), percentile(&xs, 95.0))
     }
 
     pub fn summary(&self) -> String {
         let (ttft50, ttft95) = self.ttft_ms();
         let (lat50, lat95) = self.latency_ms();
+        let (qw50, qw95) = self.queue_wait_ms();
         format!(
             "requests={} gen_tokens={} wall={:.2}s throughput={:.1} tok/s \
              occupancy={:.2} max_concurrent={} peak_kv_mem={:.2} MB \
-             ttft p50/p95={:.0}/{:.0} ms latency p50/p95={:.0}/{:.0} ms",
+             ttft p50/p95={:.0}/{:.0} ms latency p50/p95={:.0}/{:.0} ms \
+             queue p50/p95={:.0}/{:.0} ms rejected={} cancelled={} stalls={}",
             self.completed.len(),
             self.total_generated(),
             self.wall_s(),
@@ -97,6 +143,11 @@ impl Metrics {
             ttft95,
             lat50,
             lat95,
+            qw50,
+            qw95,
+            self.rejected,
+            self.cancelled,
+            self.admission_stalls,
         )
     }
 }
@@ -135,7 +186,9 @@ mod tests {
             prompt_len: 10,
             tokens: vec![1; n],
             reason: FinishReason::Eos,
-            ttft_ms: 5.0 * n as f64,
+            method: "bf16".into(),
+            ttft_ms: Some(5.0 * n as f64),
+            queue_ms: 1.0 * n as f64,
             total_ms: 20.0 * n as f64,
         }
     }
@@ -153,6 +206,32 @@ mod tests {
         assert!((m.batch_occupancy() - 3.0 / 16.0).abs() < 1e-9);
         assert!(m.throughput_tps() > 0.0);
         assert_eq!(m.max_concurrent, 2);
+        assert_eq!((m.rejected, m.cancelled, m.admission_stalls), (0, 0, 0));
+    }
+
+    #[test]
+    fn percentiles_exclude_tokenless_sessions() {
+        let mut m = Metrics::default();
+        m.completed.push(completed(4)); // ttft 20ms, total 80ms, queue 4ms
+        m.completed.push(completed(4));
+        // a request cancelled while queued: no first token — must not drag
+        // the percentiles to zero
+        m.completed.push(Completed {
+            id: 99,
+            prompt_len: 10,
+            tokens: vec![],
+            reason: FinishReason::Cancelled,
+            method: "-".into(),
+            ttft_ms: None,
+            queue_ms: 0.0,
+            total_ms: 0.0,
+        });
+        let (ttft50, _) = m.ttft_ms();
+        let (lat50, _) = m.latency_ms();
+        let (qw50, _) = m.queue_wait_ms();
+        assert!((ttft50 - 20.0).abs() < 1e-9, "ttft p50 {ttft50}");
+        assert!((lat50 - 80.0).abs() < 1e-9);
+        assert!((qw50 - 4.0).abs() < 1e-9);
     }
 
     #[test]

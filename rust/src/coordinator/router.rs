@@ -1,21 +1,39 @@
-//! The serving front door: `Server` drives engine + batcher + scheduler
-//! over a request trace and returns per-request completions + metrics.
+//! The serving front door: a session-oriented, non-blocking frontend over
+//! engine + batcher + scheduler.
+//!
+//! * [`Server::submit`] accepts a request (with an optional per-request
+//!   [`MethodSpec`](crate::quant::methods::MethodSpec) override) and returns
+//!   its `RequestId` immediately;
+//! * [`Server::tick`] runs one scheduling cycle: admissions (prefill into
+//!   free slots, memory permitting) then one decode step per live variant
+//!   group;
+//! * [`Server::poll`] / [`Server::cancel`] / [`Server::drain_events`]
+//!   observe and steer individual requests — every request emits a
+//!   well-formed `Queued → Admitted → FirstToken → Token* → Finished`
+//!   stream (see `coordinator::events`);
+//! * [`Server::run`] is a thin compatibility shim (submit all → tick until
+//!   drained) so offline batch drivers keep working token-for-token.
 //!
 //! Single-threaded by design: the PJRT client is not Send, the sandbox has
 //! one core, and iteration-level batching gives the same throughput math as
 //! an async loop — the *policy* (what gets batched when) is identical to a
 //! threaded deployment.
 
-use anyhow::Result;
+use std::collections::HashMap;
 use std::time::Instant;
+
+use anyhow::{bail, Result};
 
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::engine::Engine;
+use crate::coordinator::events::{Event, EventLog, RequestStatus};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::{Scheduler, SchedulerPolicy};
-use crate::coordinator::session::{Completed, FinishReason, Request, Session};
+use crate::coordinator::session::{Completed, FinishReason, Request, RequestId, Session};
 use crate::kvcache::accountant::MemoryAccountant;
 use crate::model::sampler;
+use crate::model::tokenizer;
+use crate::runtime::registry::pick_bucket;
 use crate::util::rng::Pcg32;
 
 pub struct ServerConfig {
@@ -39,7 +57,12 @@ pub struct Server {
     pub batcher: Batcher,
     pub scheduler: Scheduler,
     pub metrics: Metrics,
+    pub events: EventLog,
     rng: Pcg32,
+    /// Submit timestamps for queued/live requests (queue-wait accounting).
+    submit_times: HashMap<RequestId, Instant>,
+    /// Terminal records by id (the `poll` fast path).
+    finished: HashMap<RequestId, Completed>,
 }
 
 impl Server {
@@ -61,73 +84,233 @@ impl Server {
                 cfg.memory_budget_bytes,
             ),
             metrics: Metrics::default(),
+            events: EventLog::default(),
             rng: Pcg32::seeded(cfg.seed),
+            submit_times: HashMap::new(),
+            finished: HashMap::new(),
         }
     }
 
-    /// Serve a whole trace to completion (offline/batch mode — every bench
-    /// and example drives this; an online server would feed `enqueue`
-    /// from a socket instead).
-    pub fn run(&mut self, requests: Vec<Request>) -> Result<Vec<Completed>> {
-        for r in requests {
-            self.batcher.enqueue(r);
+    /// Accept a request into the wait queue and return its id immediately.
+    /// Rejects up front (with a `Finished{Rejected}` event and a terminal
+    /// record) when the prompt exceeds every prefill bucket, the requested
+    /// method's decode variant is unknown, or the method's worst-case cache
+    /// footprint exceeds the server's whole memory budget (such a request
+    /// could never be admitted and would otherwise stall the queue head
+    /// forever).
+    ///
+    /// Errors only on a programmer mistake: ids must be unique among
+    /// in-flight requests. Reusing the id of a *terminal* request starts a
+    /// fresh lifecycle and replaces its record (drain events between reuses
+    /// to keep streams separable).
+    pub fn submit(&mut self, req: Request) -> Result<RequestId> {
+        let id = req.id;
+        let in_flight = self.batcher.waiting.iter().any(|r| r.id == id)
+            || self.batcher.slots.iter().flatten().any(|s| s.request.id == id);
+        if in_flight {
+            bail!("request id {id} is already in flight on this server");
         }
-        self.metrics.start();
-        while self.batcher.has_work() {
-            self.cycle()?;
+        self.finished.remove(&id);
+        let now = Instant::now();
+        self.submit_times.insert(id, now);
+        self.events.queued(id);
+        let method = self.engine.resolve_method(req.method);
+        let fits = pick_bucket(&self.engine.meta.cache.prefill_buckets, req.prompt.len()).is_ok();
+        let affordable = self
+            .engine
+            .worst_case_bytes_for(&method)
+            .map(|b| b <= self.scheduler.accountant.budget_bytes)
+            .unwrap_or(false); // Err = unknown decode variant
+        if !fits || !affordable {
+            self.metrics.rejected += 1;
+            self.finalize_unadmitted(id, req.prompt.len(), FinishReason::Rejected);
+            return Ok(id);
         }
-        self.metrics.stop();
-        Ok(self.metrics.completed.clone())
+        self.batcher.enqueue(req);
+        Ok(id)
     }
 
-    /// One scheduling cycle: admissions (prefill) then one decode step.
-    pub fn cycle(&mut self) -> Result<()> {
-        // --- admissions -------------------------------------------------
-        let quota = self
-            .scheduler
-            .admission_quota(self.batcher.slots.len() - self.batcher.live(), self.batcher.waiting.len());
-        for _ in 0..quota {
-            if !self.scheduler.try_admit() {
-                break; // memory budget saturated — leave in queue
+    /// Any queued or live work left?
+    pub fn has_work(&self) -> bool {
+        self.batcher.has_work()
+    }
+
+    /// Status of one request (terminal records persist across ticks).
+    pub fn poll(&self, id: RequestId) -> RequestStatus {
+        if let Some(c) = self.finished.get(&id) {
+            return RequestStatus::Finished { reason: c.reason, tokens: c.tokens.clone() };
+        }
+        if self.batcher.waiting.iter().any(|r| r.id == id) {
+            return RequestStatus::Queued;
+        }
+        if let Some(s) = self.batcher.slots.iter().flatten().find(|s| s.request.id == id) {
+            return RequestStatus::Running { generated: s.generated.len() };
+        }
+        RequestStatus::Unknown
+    }
+
+    /// Cancel a queued or live request. Returns false when the id is
+    /// unknown or already terminal.
+    pub fn cancel(&mut self, id: RequestId) -> bool {
+        if let Some(req) = self.batcher.remove_waiting(id) {
+            self.metrics.cancelled += 1;
+            self.finalize_unadmitted(id, req.prompt.len(), FinishReason::Cancelled);
+            return true;
+        }
+        for slot in self.batcher.slots.iter_mut() {
+            let hit = slot
+                .as_ref()
+                .map(|s| s.request.id == id && !s.is_finished())
+                .unwrap_or(false);
+            if hit {
+                let mut sess = slot.take().unwrap();
+                sess.finish(FinishReason::Cancelled);
+                self.metrics.cancelled += 1;
+                self.finalize(sess);
+                return true;
             }
+        }
+        false
+    }
+
+    /// Take all lifecycle events emitted since the last drain.
+    pub fn drain_events(&mut self) -> Vec<Event> {
+        self.events.drain()
+    }
+
+    /// Serve a whole trace to completion — the offline/batch compatibility
+    /// shim, now a thin wrapper over submit/tick: every bench and harness
+    /// experiment drives this; an online server feeds `submit` from a
+    /// socket and calls `tick` on its loop instead. The shim has no event
+    /// consumer, so lifecycle events are discarded as it goes (use
+    /// submit/tick/`drain_events` directly to observe them) — otherwise a
+    /// long trace would accumulate one event per generated token.
+    pub fn run(&mut self, requests: Vec<Request>) -> Result<Vec<Completed>> {
+        self.metrics.start();
+        let before = self.metrics.completed.len();
+        for r in requests {
+            self.submit(r)?;
+        }
+        while self.has_work() {
+            self.tick()?;
+            self.events.drain();
+        }
+        self.events.drain();
+        self.metrics.stop();
+        Ok(self.metrics.completed[before..].to_vec())
+    }
+
+    /// One scheduling cycle: admissions (prefill) then one decode step per
+    /// live variant group.
+    pub fn tick(&mut self) -> Result<()> {
+        if self.metrics.t_start.is_none() {
+            self.metrics.start();
+        }
+        self.admit()?;
+        self.decode()?;
+        // --- reap finished ----------------------------------------------
+        for sess in self.batcher.reap() {
+            self.finalize(sess);
+        }
+        Ok(())
+    }
+
+    /// Admit up to the scheduler quota of waiting requests into free slots,
+    /// resolving each request's method, reserving its variant's worst-case
+    /// bytes, and prefilling through the shared bucket graphs.
+    fn admit(&mut self) -> Result<()> {
+        let quota = self.scheduler.admission_quota(
+            self.batcher.slots.len() - self.batcher.live(),
+            self.batcher.waiting.len(),
+        );
+        for _ in 0..quota {
             let Some((slot, req)) = self.batcher.next_admission() else {
-                self.scheduler.release();
                 break;
             };
-            let t_arrival = Instant::now();
-            let pre = self.engine.prefill(&req.prompt)?;
-            let mut cache = self.engine.admit_prefill(&pre)?;
+            let method = self.engine.resolve_method(req.method);
+            // variant validated at submit; worst-case bytes are per-variant
+            let bytes = self.engine.worst_case_bytes_for(&method)?;
+            if !self.scheduler.try_admit_bytes(bytes) {
+                // memory budget saturated — requeue at the head (FIFO) and
+                // stop admitting this cycle
+                self.metrics.admission_stalls += 1;
+                self.batcher.waiting.push_front(req);
+                break;
+            }
+            // the fallible admission path: if it errors after the memory
+            // reservation (e.g. a decode artifact file missing for this
+            // method), release the bytes and retire just this request with
+            // a terminal Rejected record — one bad tenant must not abort
+            // the tick and strand every other queued/live request
+            let prepared = (|| {
+                self.engine.ensure_method(&method)?;
+                let pre = self.engine.prefill(&req.prompt)?;
+                let cache = self.engine.admit_prefill_with(&pre, &method)?;
+                Ok::<_, anyhow::Error>((pre, cache))
+            })();
+            let (pre, mut cache) = match prepared {
+                Ok(x) => x,
+                Err(e) => {
+                    self.scheduler.release_bytes(bytes);
+                    self.metrics.rejected += 1;
+                    eprintln!("mixkvq: admission of request {} failed: {e:#}", req.id);
+                    self.finalize_unadmitted(req.id, req.prompt.len(), FinishReason::Rejected);
+                    continue;
+                }
+            };
             let first = sampler::sample(&pre.last_logits, req.sampling, &mut self.rng);
             cache.pos = pre.t; // next decode position
-            let mut sess = Session::new(req, cache, first, t_arrival);
-            sess.bytes_reserved = self.scheduler.policy.per_request_bytes;
-            // prompt-only EOS edge case
-            if sess.push_token_is_immediate_finish() {
-                self.finish_session(&mut sess);
-                self.scheduler.release();
-                self.metrics.completed.push(make_completed(&sess));
+            let id = req.id;
+            let max_new = req.max_new_tokens;
+            let t_submit = self.submit_times.get(&id).copied().unwrap_or_else(Instant::now);
+            let mut sess = Session::new(req, cache, first, t_submit);
+            sess.bytes_reserved = bytes;
+            self.events.admitted(id, &method.name);
+            self.events.first_token(id, first);
+            // prompt-only edge case: the prefill sample already finishes the
+            // request — record that token, and report Eos only when the
+            // token actually is EOS (a 1-token budget is MaxTokens)
+            if first == tokenizer::EOS {
+                sess.finish(FinishReason::Eos);
+                self.finalize(sess);
+                continue;
+            }
+            if max_new <= 1 {
+                sess.finish(FinishReason::MaxTokens);
+                self.finalize(sess);
                 continue;
             }
             self.batcher.install(slot, sess);
         }
+        Ok(())
+    }
 
-        // --- decode step -------------------------------------------------
-        let live = self.batcher.live();
-        if live > 0 {
-            let batch = self.batcher.slots.len();
-            self.metrics.record_step(live, batch);
+    /// One decode step over each live (variant, rotation) sub-batch.
+    fn decode(&mut self) -> Result<()> {
+        let groups = self.batcher.variant_groups();
+        let batch = self.batcher.slots.len();
+        // record_step sees one sub-batch at a time; track true concurrency
+        // (all live sessions this tick) across the groups explicitly
+        let live_total: usize = groups.iter().map(|g| g.slots.len()).sum();
+        self.metrics.max_concurrent = self.metrics.max_concurrent.max(live_total);
+        for group in &groups {
+            self.metrics.record_step(group.slots.len(), batch);
+            let rot = {
+                let lead = self.batcher.slots[group.slots[0]].as_ref().unwrap();
+                lead.cache.rot.clone()
+            };
             let mut slots: Vec<Option<(&mut crate::kvcache::cache::RequestCache, i32)>> =
                 Vec::with_capacity(batch);
-            for s in self.batcher.slots.iter_mut() {
+            for (i, s) in self.batcher.slots.iter_mut().enumerate() {
                 match s {
-                    Some(sess) if !sess.is_finished() => {
+                    Some(sess) if group.slots.contains(&i) && !sess.is_finished() => {
                         let tok = sess.next_token;
                         slots.push(Some((&mut sess.cache, tok)));
                     }
                     _ => slots.push(None),
                 }
             }
-            let logits = self.engine.decode_step(&mut slots)?;
+            let logits = self.engine.decode_step_variant(&group.variant, &rot, &mut slots)?;
             drop(slots);
             for (i, lg) in logits.into_iter().enumerate() {
                 if let (Some(sess), Some(lg)) = (self.batcher.slots[i].as_mut(), lg) {
@@ -136,9 +319,13 @@ impl Server {
                         continue;
                     }
                     let tok = sampler::sample(&lg, sess.request.sampling, &mut self.rng);
+                    let id = sess.request.id;
                     sess.push_token(tok);
+                    self.events.token(id, tok);
                 }
             }
+        }
+        if !groups.is_empty() {
             // account live cache bytes for the peak-memory metric
             let live_bytes: usize = self
                 .batcher
@@ -149,42 +336,53 @@ impl Server {
                 .sum();
             self.metrics.peak_mem_bytes = self.metrics.peak_mem_bytes.max(live_bytes);
         }
-
-        // --- reap finished ------------------------------------------------
-        for sess in self.batcher.reap() {
-            self.scheduler.release();
-            self.metrics.completed.push(make_completed(&sess));
-        }
         Ok(())
     }
 
-    fn finish_session(&mut self, sess: &mut Session) {
-        sess.finish(FinishReason::Eos);
+    /// Retire a session: release its memory reservation, emit the terminal
+    /// event, and record the completion.
+    fn finalize(&mut self, sess: Session) {
+        if sess.bytes_reserved > 0 {
+            self.scheduler.release_bytes(sess.bytes_reserved);
+        }
+        let c = make_completed(&sess);
+        self.submit_times.remove(&c.id);
+        self.events.finished(c.id, c.reason, c.tokens.len());
+        self.finished.insert(c.id, c.clone());
+        self.metrics.completed.push(c);
     }
-}
 
-impl Session {
-    /// First sampled token is already EOS / budget is 1.
-    fn push_token_is_immediate_finish(&mut self) -> bool {
-        self.next_token == crate::model::tokenizer::EOS || self.request.max_new_tokens <= 1
+    /// Terminal record for a request that never reached a slot (rejected at
+    /// submit or cancelled while queued).
+    fn finalize_unadmitted(&mut self, id: RequestId, prompt_len: usize, reason: FinishReason) {
+        let t_submit = self.submit_times.remove(&id).unwrap_or_else(Instant::now);
+        let waited = t_submit.elapsed().as_secs_f64() * 1e3;
+        let c = Completed {
+            id,
+            prompt_len,
+            tokens: Vec::new(),
+            reason,
+            method: "-".to_string(),
+            ttft_ms: None,
+            queue_ms: waited,
+            total_ms: waited,
+        };
+        self.events.finished(id, reason, 0);
+        self.finished.insert(id, c.clone());
+        self.metrics.completed.push(c);
     }
 }
 
 fn make_completed(sess: &Session) -> Completed {
-    let ttft = sess
-        .t_first_token
-        .map(|t| t.duration_since(sess.t_arrival).as_secs_f64() * 1e3)
-        .unwrap_or(0.0);
-    let total = sess
-        .t_finish
-        .map(|t| t.duration_since(sess.t_arrival).as_secs_f64() * 1e3)
-        .unwrap_or(0.0);
+    let ms = |t: Instant| t.duration_since(sess.t_arrival).as_secs_f64() * 1e3;
     Completed {
         id: sess.request.id,
         prompt_len: sess.request.prompt.len(),
         tokens: sess.generated.clone(),
         reason: sess.finish_reason().unwrap_or(FinishReason::MaxTokens),
-        ttft_ms: ttft,
-        total_ms: total,
+        method: sess.cache.method.name.clone(),
+        ttft_ms: sess.t_first_token.map(ms),
+        queue_ms: ms(sess.t_admitted),
+        total_ms: sess.t_finish.map(ms).unwrap_or(0.0),
     }
 }

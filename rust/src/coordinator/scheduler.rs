@@ -34,13 +34,25 @@ impl Scheduler {
         free_slots.min(waiting).min(self.policy.max_prefills_per_cycle)
     }
 
-    /// Try to reserve memory for one request.
+    /// Try to reserve memory for one request at the default (policy)
+    /// worst-case size.
     pub fn try_admit(&mut self) -> bool {
-        self.accountant.try_reserve(self.policy.per_request_bytes)
+        self.try_admit_bytes(self.policy.per_request_bytes)
+    }
+
+    /// Try to reserve an exact worst-case byte count — methods route
+    /// per-request, so heterogeneous variants reserve their own footprint
+    /// rather than the server default's.
+    pub fn try_admit_bytes(&mut self, bytes: usize) -> bool {
+        self.accountant.try_reserve(bytes)
     }
 
     pub fn release(&mut self) {
-        self.accountant.release(self.policy.per_request_bytes);
+        self.release_bytes(self.policy.per_request_bytes);
+    }
+
+    pub fn release_bytes(&mut self, bytes: usize) {
+        self.accountant.release(bytes);
     }
 
     /// Max concurrent requests the budget supports (Fig. 5's max batch).
@@ -77,5 +89,15 @@ mod tests {
         s.release();
         assert!(s.try_admit());
         assert_eq!(s.max_concurrent(), 2);
+    }
+
+    #[test]
+    fn byte_exact_admission_for_mixed_variants() {
+        let mut s = sched(250, 100);
+        assert!(s.try_admit_bytes(200)); // a bf16-sized tenant
+        assert!(s.try_admit_bytes(50)); // a 2-bit tenant still fits
+        assert!(!s.try_admit_bytes(1), "budget saturated");
+        s.release_bytes(200);
+        assert!(s.try_admit_bytes(100));
     }
 }

@@ -5,13 +5,22 @@ use std::time::Instant;
 use crate::kvcache::cache::RequestCache;
 use crate::model::sampler::Sampling;
 use crate::model::tokenizer;
+use crate::quant::methods::MethodSpec;
+
+/// Identifier handed back by `Server::submit` and used by `poll`/`cancel`.
+pub type RequestId = u64;
 
 #[derive(Clone, Debug)]
 pub struct Request {
-    pub id: u64,
+    pub id: RequestId,
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
     pub sampling: Sampling,
+    /// Per-request quantization policy. `None` uses the server's default
+    /// method; `Some(spec)` routes this request onto that method's decode
+    /// variant — two tenants with different precision policies share one
+    /// server (the batcher groups live slots into per-variant sub-batches).
+    pub method: Option<MethodSpec>,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -19,6 +28,13 @@ pub enum FinishReason {
     Eos,
     MaxTokens,
     CacheFull,
+    /// Cancelled via `Server::cancel` (queued or mid-decode).
+    Cancelled,
+    /// Rejected: at submit (prompt exceeds every prefill bucket, unknown
+    /// decode variant, or worst-case footprint beyond the whole memory
+    /// budget) or at admission (e.g. the method's decode artifact failed
+    /// to load).
+    Rejected,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -35,7 +51,11 @@ pub struct Session {
     /// Token to feed at the next decode step.
     pub next_token: i32,
     pub phase: Phase,
+    /// When the request entered the queue (submit time).
     pub t_arrival: Instant,
+    /// When the request was admitted for prefill (the session is created at
+    /// admission, so this is the construction time).
+    pub t_admitted: Instant,
     pub t_first_token: Option<Instant>,
     pub t_finish: Option<Instant>,
     pub bytes_reserved: usize,
@@ -43,6 +63,7 @@ pub struct Session {
 
 impl Session {
     pub fn new(request: Request, cache: RequestCache, first_token: i32, t_arrival: Instant) -> Self {
+        let now = Instant::now();
         Session {
             request,
             cache,
@@ -50,7 +71,8 @@ impl Session {
             next_token: first_token,
             phase: Phase::Decoding,
             t_arrival,
-            t_first_token: Some(Instant::now()),
+            t_admitted: now,
+            t_first_token: Some(now),
             t_finish: None,
             bytes_reserved: 0,
         }
@@ -91,11 +113,20 @@ impl Session {
 /// Completed-request record handed back to callers / metrics.
 #[derive(Clone, Debug)]
 pub struct Completed {
-    pub id: u64,
+    pub id: RequestId,
     pub prompt_len: usize,
     pub tokens: Vec<i32>,
     pub reason: FinishReason,
-    pub ttft_ms: f64,
+    /// Resolved method name this request was served under ("-" when it was
+    /// never admitted: rejected or cancelled while queued).
+    pub method: String,
+    /// Submit → first token. `None` when the request never produced a token
+    /// (rejected / cancelled in queue) — such records are excluded from the
+    /// TTFT percentiles instead of dragging them toward zero.
+    pub ttft_ms: Option<f64>,
+    /// Submit → admission (queue wait).
+    pub queue_ms: f64,
+    /// Submit → finish.
     pub total_ms: f64,
 }
 
@@ -121,6 +152,7 @@ mod tests {
             prompt: vec![tokenizer::BOS],
             max_new_tokens: max_new,
             sampling: Sampling::Greedy,
+            method: None,
         };
         Session::new(req, cache, 42, Instant::now())
     }
@@ -147,5 +179,12 @@ mod tests {
         let mut s = mk_session(10);
         s.push_token(21);
         assert_eq!(s.next_token, 21);
+    }
+
+    #[test]
+    fn admission_time_not_before_arrival() {
+        let s = mk_session(10);
+        assert!(s.t_admitted >= s.t_arrival);
+        assert!(s.t_first_token.is_some());
     }
 }

@@ -19,7 +19,7 @@ use crate::model::config::Meta;
 use crate::model::tokenizer;
 use crate::model::weights::Weights;
 use crate::quant::asym;
-use crate::quant::methods::Method;
+use crate::quant::methods::{Method, MethodSpec};
 use crate::quant::salience;
 use crate::quant::window::TierSpec;
 use crate::util::bench::Table;
@@ -215,7 +215,9 @@ pub fn fig3(ctx: &ExpCtx) -> Result<Table> {
 }
 
 /// Fig. 5: memory + throughput vs the 16-bit baseline on a ShareGPT-like
-/// trace under a fixed KV-memory budget.
+/// trace under a fixed KV-memory budget — driven through the session
+/// frontend (`submit`/`tick`), including a mixed-precision row where two
+/// tenants with different `MethodSpec`s share one server.
 pub fn fig5(ctx: &ExpCtx) -> Result<Table> {
     let n_req = if ctx.quick { 12 } else { 48 };
     let max_new = if ctx.quick { 16 } else { 48 };
@@ -228,10 +230,15 @@ pub fn fig5(ctx: &ExpCtx) -> Result<Table> {
         ],
     );
     let mut base_tps = 0.0;
-    for (method, r_limit) in [
-        (Method::bf16(), 128usize),
-        (Method::mixkvq("mix225"), 32),
-        (Method::mixkvq("mix225"), 128),
+    // per-request method overrides: None = the engine default for the row;
+    // the mixed row alternates tenants between mix225 and bf16
+    let none: &[Option<MethodSpec>] = &[];
+    let mixed: &[Option<MethodSpec>] = &[None, Some(MethodSpec::Bf16)];
+    for (label, method, r_limit, overrides) in [
+        ("bf16", Method::bf16(), 128usize, none),
+        ("mixkvq-mix225", Method::mixkvq("mix225"), 32, none),
+        ("mixkvq-mix225", Method::mixkvq("mix225"), 128, none),
+        ("mixed mix225+bf16", Method::mixkvq("mix225"), 128, mixed),
     ] {
         let engine = ctx.engine(method.clone(), r_limit)?;
         let per_req = MemoryAccountant::worst_case_request_bytes(
@@ -244,8 +251,21 @@ pub fn fig5(ctx: &ExpCtx) -> Result<Table> {
             ServerConfig { memory_budget_bytes: budget, max_prefills_per_cycle: 2, seed: ctx.seed },
         );
         let mut rng = Pcg32::seeded(ctx.seed);
-        let trace = workloads::sharegpt_trace(&mut rng, n_req, max_new);
-        server.run(trace)?;
+        let mut trace = workloads::sharegpt_trace(&mut rng, n_req, max_new);
+        if !overrides.is_empty() {
+            for (i, r) in trace.iter_mut().enumerate() {
+                r.method = overrides[i % overrides.len()];
+            }
+        }
+        // session frontend: submit everything, tick until drained
+        server.metrics.start();
+        for r in trace {
+            server.submit(r)?;
+        }
+        while server.has_work() {
+            server.tick()?;
+            server.drain_events(); // no consumer in this driver
+        }
         server.metrics.stop();
         let m = &server.metrics;
         let tps = m.throughput_tps();
@@ -254,7 +274,7 @@ pub fn fig5(ctx: &ExpCtx) -> Result<Table> {
         }
         let (lat50, _) = m.latency_ms();
         table.row(vec![
-            method.name.clone(),
+            label.to_string(),
             format!("{r_limit}"),
             format!("{}", budget / per_req),
             format!("{:.2}", m.peak_mem_bytes as f64 / 1e6),

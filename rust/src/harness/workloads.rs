@@ -5,9 +5,10 @@
 //! chain → AIME/MATH-500 stand-in, passkey/kvlookup/copy → LongBench
 //! stand-in, `sharegpt_trace` → the Fig. 5 throughput workload.
 
+use crate::coordinator::session::Request;
 use crate::model::sampler::Sampling;
 use crate::model::tokenizer::*;
-use crate::coordinator::session::Request;
+use crate::quant::methods::MethodSpec;
 use crate::util::rng::Pcg32;
 
 #[derive(Clone, Debug)]
@@ -216,9 +217,22 @@ pub fn sharegpt_trace(rng: &mut Pcg32, n: usize, max_new: usize) -> Vec<Request>
                 prompt: task.prompt,
                 max_new_tokens: out.max(task.answer.len() + 2),
                 sampling: Sampling::Greedy,
+                method: None,
             }
         })
         .collect()
+}
+
+/// Assign per-request quantization policies round-robin — the multi-tenant
+/// mixed-precision workload (each tenant pins its own `MethodSpec`; the
+/// server batches them per-variant).
+pub fn assign_methods(requests: &mut [Request], specs: &[MethodSpec]) {
+    if specs.is_empty() {
+        return;
+    }
+    for (i, r) in requests.iter_mut().enumerate() {
+        r.method = Some(specs[i % specs.len()]);
+    }
 }
 
 /// The per-benchmark suites of Table 3/4 (fixed sizes, seeded).
@@ -307,6 +321,22 @@ mod tests {
             assert_eq!(x.max_new_tokens, y.max_new_tokens);
         }
         assert!(ta.iter().all(|r| r.prompt.len() <= 482 && r.max_new_tokens <= 64));
+    }
+
+    #[test]
+    fn assign_methods_round_robins() {
+        let mut rng = Pcg32::seeded(76);
+        let mut reqs = sharegpt_trace(&mut rng, 5, 16);
+        assign_methods(
+            &mut reqs,
+            &[MethodSpec::Bf16, MethodSpec::MixKvq { op: crate::quant::methods::MixOp::Mix30 }],
+        );
+        assert_eq!(reqs[0].method, Some(MethodSpec::Bf16));
+        assert!(matches!(reqs[1].method, Some(MethodSpec::MixKvq { .. })));
+        assert_eq!(reqs[2].method, Some(MethodSpec::Bf16));
+        assert_eq!(reqs[4].method, Some(MethodSpec::Bf16));
+        assign_methods(&mut reqs[..1], &[]); // no-op
+        assert_eq!(reqs[0].method, Some(MethodSpec::Bf16));
     }
 
     #[test]

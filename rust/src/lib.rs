@@ -12,6 +12,33 @@
 //!   paged KV cache, salience tracking, continuous batching, and the full
 //!   experiment harness reproducing every table and figure of the paper.
 //!
+//! ## Serving API (v1): sessions, events, per-request routing
+//!
+//! Quantization methods form a typed, closed universe —
+//! [`quant::methods::MethodSpec`] — with `Display`/`FromStr` as the single
+//! source of truth for names and `MethodSpec::all()` enumerating every
+//! constructible variant ([`quant::methods::Method::by_name`] and the
+//! rosters are thin wrappers over it).
+//!
+//! The front door is session-oriented and non-blocking
+//! ([`coordinator::router::Server`]):
+//!
+//! ```text
+//! let id = server.submit(request)?;    // returns immediately
+//! server.tick()?;                      // one scheduling cycle
+//! server.poll(id);                     // Queued / Running / Finished
+//! server.cancel(id);                   // queued or mid-decode
+//! server.drain_events();               // Queued → Admitted → FirstToken
+//!                                      //   → Token* → Finished{reason}
+//! ```
+//!
+//! Each `Request` may carry an `Option<MethodSpec>` override: the engine
+//! keeps a pool of compiled decode variants and the batcher groups live
+//! slots into per-(variant, rotation) sub-batches each decode step, so two
+//! tenants with different precision policies share one server.
+//! `Server::run` remains as a compatibility shim (submit all → tick until
+//! drained) for the offline bench drivers.
+//!
 //! See DESIGN.md for the experiment index and EXPERIMENTS.md for results.
 
 pub mod util {
@@ -50,11 +77,13 @@ pub mod runtime {
     pub mod client;
     pub mod executor;
     pub mod registry;
+    pub mod xla_shim;
 }
 
 pub mod coordinator {
     pub mod batcher;
     pub mod engine;
+    pub mod events;
     pub mod metrics;
     pub mod router;
     pub mod scheduler;

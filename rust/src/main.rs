@@ -1,22 +1,28 @@
 //! MixKVQ CLI — the L3 leader entrypoint.
 //!
 //! Subcommands:
-//!   serve   --method <name> --requests N --max-new N --r-limit N --budget-mb N
+//!   serve   --method <name[,name,...]> --requests N --max-new N --r-limit N --budget-mb N
 //!   bench   --id <fig1|...|tab8|all> [--quick]
 //!   demo    --id tab1            (error-accumulation transcript)
 //!   search  [--quick]            (Fig. 7 Pareto threshold search)
-//!   info                         (artifacts + variants + compile times)
+//!   info                         (methods + artifacts + variants)
+//!
+//! `serve` drives the session frontend (`submit`/`tick`/`drain_events`).
+//! `--method` takes one or more comma-separated method names: the first is
+//! the server default, and with several names the trace's requests are
+//! routed round-robin across them per-request — one server, multiple
+//! precision policies, batched per decode variant.
 
 use std::path::PathBuf;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use mixkvq::coordinator::engine::Engine;
 use mixkvq::coordinator::router::{Server, ServerConfig};
 use mixkvq::harness::experiments::{self, ExpCtx, ALL_IDS};
 use mixkvq::harness::workloads;
 use mixkvq::model::config::Meta;
-use mixkvq::quant::methods::Method;
+use mixkvq::quant::methods::{Method, MethodSpec};
 use mixkvq::util::cli::Args;
 use mixkvq::util::rng::Pcg32;
 
@@ -46,6 +52,14 @@ fn main() -> Result<()> {
                 "mixkvq — query-aware mixed-precision KV cache quantization\n\n\
                  USAGE: mixkvq <serve|bench|demo|search|info> [options]\n\n\
                  serve   --method mixkvq-mix30 --requests 32 --max-new 48 --r-limit 128 --budget-mb 64\n\
+                 \x20       --method accepts a comma-separated list (e.g. mixkvq-mix30,bf16):\n\
+                 \x20       the first name is the server default, and requests are routed\n\
+                 \x20       round-robin across the list per-request — the server batches\n\
+                 \x20       each decode variant separately, so mixed-precision tenants\n\
+                 \x20       share one process. Internally serve uses the session API:\n\
+                 \x20       submit() -> id, tick() per cycle, poll(id), cancel(id), and\n\
+                 \x20       drain_events() (Queued -> Admitted -> FirstToken -> Token* ->\n\
+                 \x20       Finished). Method names are listed by `mixkvq info`.\n\
                  bench   --id all|fig1|fig2|fig3|fig5|fig6|fig7|tab1..tab8 [--quick]\n\
                  demo    --id tab1\n\
                  search  [--quick]\n\
@@ -58,18 +72,24 @@ fn main() -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
-    let method_name = args.get_or("method", "mixkvq-mix30");
-    let Some(method) = Method::by_name(&method_name) else {
-        bail!("unknown method `{method_name}` — see quant::methods::Method::by_name");
-    };
+    let method_arg = args.get_or("method", "mixkvq-mix30");
+    let specs = method_arg
+        .split(',')
+        .map(|name| {
+            name.trim()
+                .parse::<MethodSpec>()
+                .map_err(|e| anyhow::anyhow!("{e}"))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let default_method = specs[0].build();
     let n_requests = args.usize_or("requests", 32)?;
     let max_new = args.usize_or("max-new", 48)?;
     let r_limit = args.usize_or("r-limit", 128)?;
     let budget_mb = args.usize_or("budget-mb", 64)?;
     let seed = args.u64_or("seed", 0)?;
 
-    eprintln!("loading engine ({method_name})...");
-    let engine = Engine::new(&artifacts_dir(args), method, r_limit)?;
+    eprintln!("loading engine (default {})...", default_method.name);
+    let engine = Engine::new(&artifacts_dir(args), default_method, r_limit)?;
     let mut server = Server::new(
         engine,
         ServerConfig {
@@ -79,16 +99,40 @@ fn serve(args: &Args) -> Result<()> {
         },
     );
     let mut rng = Pcg32::seeded(seed);
-    let trace = workloads::sharegpt_trace(&mut rng, n_requests, max_new);
+    let mut trace = workloads::sharegpt_trace(&mut rng, n_requests, max_new);
+    if specs.len() > 1 {
+        workloads::assign_methods(&mut trace, &specs);
+        eprintln!(
+            "routing {n_requests} requests round-robin across {} methods",
+            specs.len()
+        );
+    }
     eprintln!("serving {n_requests} requests (max_new={max_new}, R={r_limit})...");
-    let completed = server.run(trace)?;
+    server.metrics.start();
+    for r in trace {
+        server.submit(r)?;
+    }
+    let mut n_events = 0usize;
+    while server.has_work() {
+        server.tick()?;
+        n_events += server.drain_events().len();
+    }
+    server.metrics.stop();
+    n_events += server.drain_events().len();
     println!("{}", server.metrics.summary());
     let b = mixkvq::coordinator::metrics::breakdown(&server.engine.timers);
     println!(
         "breakdown: model_exec {:.1}%  quantize {:.1}%  assemble {:.1}%  (quant events/step {:.1}%)",
         b.model_exec_pct, b.quantize_pct, b.assemble_pct, b.quantize_call_rate_pct
     );
-    println!("completed {} requests", completed.len());
+    // per-method completion counts (the routing receipt)
+    for (m, n) in server.metrics.completed_by_method() {
+        println!("  {m}: {n} requests");
+    }
+    println!(
+        "completed {} requests ({n_events} lifecycle events)",
+        server.metrics.completed.len()
+    );
     Ok(())
 }
 
@@ -109,6 +153,17 @@ fn bench(args: &Args) -> Result<()> {
 }
 
 fn info(args: &Args) -> Result<()> {
+    println!("methods (per-request routable via serve --method / Request.method):");
+    for m in Method::all() {
+        println!(
+            "  {:<18} variant={:<8} ordering={:?}{}{}",
+            m.name,
+            m.variant,
+            m.ordering,
+            if m.rotate { " rotated" } else { "" },
+            if m.clip < 1.0 { " clipped" } else { "" },
+        );
+    }
     let dir = artifacts_dir(args);
     let meta = Meta::load(&dir)?;
     println!("model: {:?}", meta.model);

@@ -17,9 +17,202 @@
 //! `variant` names a compiled decode graph (artifacts/decode_<variant>.hlo.txt)
 //! whose per-layer TierSpecs fix the static shapes.
 
+use std::fmt;
+use std::str::FromStr;
+
 use crate::quant::rotation;
 use crate::quant::salience::Ordering;
 use crate::quant::window::KeyQuantOpts;
+
+/// MixKVQ operating point: effective key bit-width (Appendix C thresholds).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MixOp {
+    Mix225,
+    Mix30,
+    Mix325,
+}
+
+impl MixOp {
+    pub const ALL: [MixOp; 3] = [MixOp::Mix225, MixOp::Mix30, MixOp::Mix325];
+
+    /// The decode-variant name this operating point compiles to.
+    pub fn variant(self) -> &'static str {
+        match self {
+            MixOp::Mix225 => "mix225",
+            MixOp::Mix30 => "mix30",
+            MixOp::Mix325 => "mix325",
+        }
+    }
+}
+
+impl FromStr for MixOp {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<MixOp, String> {
+        MixOp::ALL
+            .into_iter()
+            .find(|op| op.variant() == s)
+            .ok_or_else(|| format!("unknown MixKVQ operating point `{s}` (mix225|mix30|mix325)"))
+    }
+}
+
+/// KIVI bit assignment, including the K/V-asymmetric modes (Table 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KiviBits {
+    Kv4,
+    Kv2,
+    K4V2,
+    K2V4,
+}
+
+impl KiviBits {
+    pub const ALL: [KiviBits; 4] = [KiviBits::Kv4, KiviBits::Kv2, KiviBits::K4V2, KiviBits::K2V4];
+
+    pub fn variant(self) -> &'static str {
+        match self {
+            KiviBits::Kv4 => "kv4",
+            KiviBits::Kv2 => "kv2",
+            KiviBits::K4V2 => "k4v2",
+            KiviBits::K2V4 => "k2v4",
+        }
+    }
+}
+
+/// Symmetric fixed bit-width used by the KVQuant / RotateKV / SKVQ baselines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FixedBits {
+    Kv4,
+    Kv2,
+}
+
+impl FixedBits {
+    pub const ALL: [FixedBits; 2] = [FixedBits::Kv4, FixedBits::Kv2];
+
+    pub fn variant(self) -> &'static str {
+        match self {
+            FixedBits::Kv4 => "kv4",
+            FixedBits::Kv2 => "kv2",
+        }
+    }
+}
+
+/// The typed, closed universe of quantization methods — the single source of
+/// truth for method names, decode variants, and configuration. `Display`
+/// renders the canonical CLI name, `FromStr` parses it, `MethodSpec::all()`
+/// enumerates every constructible variant (so registries and `--method`
+/// routing can never drift from the zoo), and `build()` produces the
+/// configured [`Method`]. Requests carry an `Option<MethodSpec>` to select
+/// their precision policy per-request (see `coordinator::session::Request`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MethodSpec {
+    /// The paper's method (salience ordering A = I·S).
+    MixKvq { op: MixOp },
+    /// Table 6 ablation: sensitivity-only ordering (A = S).
+    MixKvqErrorOnly { op: MixOp },
+    Kivi { bits: KiviBits },
+    KvQuant { bits: FixedBits },
+    RotateKv { bits: FixedBits },
+    Skvq { bits: FixedBits },
+    KvTuner,
+    Bf16,
+}
+
+impl MethodSpec {
+    /// Every constructible method, in roster order. The registry (`by_name`,
+    /// `Method::all`, `mixkvq info`) derives from this enumeration.
+    pub fn all() -> Vec<MethodSpec> {
+        let mut out = vec![MethodSpec::Bf16];
+        out.extend(KiviBits::ALL.map(|bits| MethodSpec::Kivi { bits }));
+        out.extend(FixedBits::ALL.map(|bits| MethodSpec::KvQuant { bits }));
+        out.extend(FixedBits::ALL.map(|bits| MethodSpec::RotateKv { bits }));
+        out.extend(FixedBits::ALL.map(|bits| MethodSpec::Skvq { bits }));
+        out.push(MethodSpec::KvTuner);
+        out.extend(MixOp::ALL.map(|op| MethodSpec::MixKvq { op }));
+        out.extend(MixOp::ALL.map(|op| MethodSpec::MixKvqErrorOnly { op }));
+        out
+    }
+
+    /// The decode-graph variant this method executes on.
+    pub fn variant(self) -> &'static str {
+        match self {
+            MethodSpec::MixKvq { op } | MethodSpec::MixKvqErrorOnly { op } => op.variant(),
+            MethodSpec::Kivi { bits } => bits.variant(),
+            MethodSpec::KvQuant { bits }
+            | MethodSpec::RotateKv { bits }
+            | MethodSpec::Skvq { bits } => bits.variant(),
+            MethodSpec::KvTuner => "kvtuner",
+            MethodSpec::Bf16 => "bf16",
+        }
+    }
+
+    /// Construct the configured method for this spec.
+    pub fn build(self) -> Method {
+        match self {
+            MethodSpec::MixKvq { op } => Method::mixkvq(op.variant()),
+            MethodSpec::MixKvqErrorOnly { op } => Method::mixkvq_error_only(op.variant()),
+            MethodSpec::Kivi { bits } => Method::kivi(bits.variant()),
+            MethodSpec::KvQuant { bits } => Method::kvquant(bits.variant()),
+            MethodSpec::RotateKv { bits } => Method::rotatekv(bits.variant()),
+            MethodSpec::Skvq { bits } => Method::skvq(bits.variant()),
+            MethodSpec::KvTuner => Method::kvtuner(),
+            MethodSpec::Bf16 => Method::bf16(),
+        }
+    }
+}
+
+impl fmt::Display for MethodSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MethodSpec::MixKvq { op } => write!(f, "mixkvq-{}", op.variant()),
+            MethodSpec::MixKvqErrorOnly { op } => write!(f, "error-only-{}", op.variant()),
+            MethodSpec::Kivi { bits } => write!(f, "kivi-{}", bits.variant()),
+            MethodSpec::KvQuant { bits } => write!(f, "kvquant-{}", bits.variant()),
+            MethodSpec::RotateKv { bits } => write!(f, "rotatekv-{}", bits.variant()),
+            MethodSpec::Skvq { bits } => write!(f, "skvq-{}", bits.variant()),
+            MethodSpec::KvTuner => write!(f, "kvtuner"),
+            MethodSpec::Bf16 => write!(f, "bf16"),
+        }
+    }
+}
+
+impl FromStr for MethodSpec {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<MethodSpec, String> {
+        let unknown = || {
+            let names: Vec<String> = MethodSpec::all().iter().map(|m| m.to_string()).collect();
+            format!("unknown method `{s}` (known: {})", names.join(", "))
+        };
+        if let Some(op) = s.strip_prefix("mixkvq-") {
+            return Ok(MethodSpec::MixKvq { op: op.parse().map_err(|_| unknown())? });
+        }
+        if let Some(op) = s.strip_prefix("error-only-") {
+            return Ok(MethodSpec::MixKvqErrorOnly { op: op.parse().map_err(|_| unknown())? });
+        }
+        if let Some(bits) = s.strip_prefix("kivi-") {
+            let bits = KiviBits::ALL
+                .into_iter()
+                .find(|b| b.variant() == bits)
+                .ok_or_else(unknown)?;
+            return Ok(MethodSpec::Kivi { bits });
+        }
+        let fixed = |bits: &str| FixedBits::ALL.into_iter().find(|b| b.variant() == bits);
+        if let Some(bits) = s.strip_prefix("kvquant-") {
+            return Ok(MethodSpec::KvQuant { bits: fixed(bits).ok_or_else(unknown)? });
+        }
+        if let Some(bits) = s.strip_prefix("rotatekv-") {
+            return Ok(MethodSpec::RotateKv { bits: fixed(bits).ok_or_else(unknown)? });
+        }
+        if let Some(bits) = s.strip_prefix("skvq-") {
+            return Ok(MethodSpec::Skvq { bits: fixed(bits).ok_or_else(unknown)? });
+        }
+        match s {
+            "kvtuner" => Ok(MethodSpec::KvTuner),
+            "bf16" => Ok(MethodSpec::Bf16),
+            _ => Err(unknown()),
+        }
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct Method {
@@ -117,44 +310,35 @@ impl Method {
         KeyQuantOpts { clip: self.clip, global_scales: self.global_scales, group }
     }
 
-    /// The roster evaluated in Table 3 / Fig. 1 (one MixKVQ operating point).
+    /// The roster evaluated in Table 3 / Fig. 1 (one MixKVQ operating
+    /// point) — a thin selection over [`MethodSpec::all`].
     pub fn table3_roster(mix_variant: &str) -> Vec<Method> {
-        vec![
-            Method::bf16(),
-            Method::kivi("kv4"),
-            Method::kivi("kv2"),
-            Method::kvquant("kv4"),
-            Method::kvquant("kv2"),
-            Method::rotatekv("kv4"),
-            Method::rotatekv("kv2"),
-            Method::skvq("kv4"),
-            Method::skvq("kv2"),
-            Method::kvtuner(),
-            Method::mixkvq(mix_variant),
-        ]
+        let op: MixOp = mix_variant
+            .parse()
+            .unwrap_or_else(|e: String| panic!("table3_roster: {e}"));
+        MethodSpec::all()
+            .into_iter()
+            .filter(|s| match s {
+                MethodSpec::Kivi { bits } => matches!(bits, KiviBits::Kv4 | KiviBits::Kv2),
+                MethodSpec::MixKvq { op: o } => *o == op,
+                MethodSpec::MixKvqErrorOnly { .. } => false,
+                _ => true,
+            })
+            .map(MethodSpec::build)
+            .collect()
     }
 
+    /// Every constructible method (derived from [`MethodSpec::all`]; listed
+    /// by `mixkvq info`).
+    pub fn all() -> Vec<Method> {
+        MethodSpec::all().into_iter().map(MethodSpec::build).collect()
+    }
+
+    /// Look up a method by its canonical name — a thin wrapper over
+    /// [`MethodSpec`]'s `FromStr`, so every constructible variant is
+    /// reachable by name.
     pub fn by_name(name: &str) -> Option<Method> {
-        let m = match name {
-            "bf16" => Method::bf16(),
-            "kivi-kv4" => Method::kivi("kv4"),
-            "kivi-kv2" => Method::kivi("kv2"),
-            "kivi-k4v2" => Method::kivi("k4v2"),
-            "kivi-k2v4" => Method::kivi("k2v4"),
-            "kvquant-kv4" => Method::kvquant("kv4"),
-            "kvquant-kv2" => Method::kvquant("kv2"),
-            "rotatekv-kv4" => Method::rotatekv("kv4"),
-            "rotatekv-kv2" => Method::rotatekv("kv2"),
-            "skvq-kv4" => Method::skvq("kv4"),
-            "skvq-kv2" => Method::skvq("kv2"),
-            "kvtuner" => Method::kvtuner(),
-            "mixkvq-mix225" => Method::mixkvq("mix225"),
-            "mixkvq-mix30" => Method::mixkvq("mix30"),
-            "mixkvq-mix325" => Method::mixkvq("mix325"),
-            "error-only-mix30" => Method::mixkvq_error_only("mix30"),
-            _ => return None,
-        };
-        Some(m)
+        name.parse::<MethodSpec>().ok().map(MethodSpec::build)
     }
 }
 
@@ -181,6 +365,50 @@ mod tests {
             let back = Method::by_name(&m.name).expect(&m.name);
             assert_eq!(back.variant, m.variant);
             assert_eq!(back.rotate, m.rotate);
+        }
+    }
+
+    #[test]
+    fn spec_display_parse_roundtrip_covers_every_variant() {
+        let all = MethodSpec::all();
+        assert_eq!(all.len(), 17);
+        let mut names = std::collections::HashSet::new();
+        for spec in all {
+            let name = spec.to_string();
+            assert!(names.insert(name.clone()), "duplicate name {name}");
+            let back: MethodSpec = name.parse().expect(&name);
+            assert_eq!(back, spec);
+            // the built Method's name and variant agree with the spec
+            let m = spec.build();
+            assert_eq!(m.name, name);
+            assert_eq!(m.variant, spec.variant());
+            // and the registry reaches it by name (the old match-list gap)
+            let by = Method::by_name(&name).expect(&name);
+            assert_eq!(by.name, m.name);
+            assert_eq!(by.variant, m.variant);
+        }
+    }
+
+    #[test]
+    fn error_only_variants_reachable_by_name() {
+        for op in ["mix225", "mix30", "mix325"] {
+            let name = format!("error-only-{op}");
+            let m = Method::by_name(&name).expect(&name);
+            assert_eq!(m.ordering, Ordering::SensitivityOnly);
+            assert_eq!(m.variant, op);
+        }
+        assert!(Method::by_name("error-only-mix999").is_none());
+        assert!(Method::by_name("kivi-kv3").is_none());
+        assert!("".parse::<MethodSpec>().is_err());
+    }
+
+    #[test]
+    fn all_matches_spec_enumeration() {
+        let methods = Method::all();
+        let specs = MethodSpec::all();
+        assert_eq!(methods.len(), specs.len());
+        for (m, s) in methods.iter().zip(&specs) {
+            assert_eq!(m.name, s.to_string());
         }
     }
 

@@ -12,6 +12,7 @@ use anyhow::{Context, Result};
 
 use super::executor::Executable;
 use super::registry::Artifact;
+use super::xla_shim as xla;
 
 pub struct Runtime {
     pub client: xla::PjRtClient,

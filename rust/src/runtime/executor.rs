@@ -4,6 +4,7 @@
 use anyhow::{bail, Context, Result};
 
 use super::registry::{DType, InputSpec};
+use super::xla_shim as xla;
 
 /// A borrowed argument value; must match the manifest slot's dtype/elems.
 pub enum Arg<'a> {

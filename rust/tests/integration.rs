@@ -7,15 +7,19 @@
 use std::path::{Path, PathBuf};
 
 use mixkvq::coordinator::engine::Engine;
+use mixkvq::coordinator::events::{by_request, validate_stream, RequestStatus};
 use mixkvq::coordinator::router::{Server, ServerConfig};
+use mixkvq::coordinator::session::{FinishReason, Request};
 use mixkvq::harness::accuracy;
 use mixkvq::harness::perplexity;
 use mixkvq::harness::refdriver::RefDriver;
 use mixkvq::harness::workloads::{self, suite, TaskKind};
 use mixkvq::model::config::Meta;
 use mixkvq::model::reference::RefModel;
+use mixkvq::model::sampler::Sampling;
+use mixkvq::model::tokenizer;
 use mixkvq::model::weights::Weights;
-use mixkvq::quant::methods::Method;
+use mixkvq::quant::methods::{Method, MethodSpec};
 use mixkvq::util::rng::Pcg32;
 
 fn artifacts() -> Option<PathBuf> {
@@ -194,6 +198,192 @@ fn perplexity_orders_by_precision() {
         ppl_kivi2 < ppl_kvq2 * 1.05,
         "KIVI grouped 2-bit ({ppl_kivi2:.3}) should not be much worse than KVQuant global ({ppl_kvq2:.3})"
     );
+}
+
+/// The `Server::run` compatibility shim is token-for-token equivalent to
+/// the batch driver semantics under a fixed seed: the same trace driven
+/// through the manual submit/tick/poll frontend produces identical token
+/// streams and finish reasons, and the event streams are well-formed.
+#[test]
+fn run_shim_matches_frontend_token_for_token() {
+    let dir = need_artifacts!();
+    let make_server = || {
+        let engine = Engine::new(&dir, Method::mixkvq("mix225"), 32).unwrap();
+        Server::new(engine, ServerConfig::default())
+    };
+    let trace = |seed: u64| {
+        let mut rng = Pcg32::seeded(seed);
+        workloads::sharegpt_trace(&mut rng, 6, 12)
+    };
+    // offline batch shim
+    let mut batch = make_server();
+    let completed = batch.run(trace(21)).unwrap();
+    assert_eq!(completed.len(), 6);
+    // manual frontend: submit everything, tick until drained
+    let mut frontend = make_server();
+    let reqs = trace(21);
+    let max_new: Vec<(u64, usize)> = reqs.iter().map(|r| (r.id, r.max_new_tokens)).collect();
+    let ids: Vec<u64> = reqs.into_iter().map(|r| frontend.submit(r).unwrap()).collect();
+    while frontend.has_work() {
+        frontend.tick().unwrap();
+    }
+    for id in ids {
+        let want = completed.iter().find(|c| c.id == id).unwrap();
+        match frontend.poll(id) {
+            RequestStatus::Finished { reason, tokens } => {
+                assert_eq!(tokens, want.tokens, "request {id}: token streams diverge");
+                assert_eq!(reason, want.reason, "request {id}");
+            }
+            other => panic!("request {id} not finished: {other:?}"),
+        }
+    }
+    // lifecycle: one well-formed stream per request
+    let events = frontend.drain_events();
+    let grouped = by_request(&events);
+    assert_eq!(grouped.len(), 6);
+    for (id, stream) in grouped {
+        let mn = max_new.iter().find(|(i, _)| *i == id).unwrap().1;
+        validate_stream(&stream, mn).unwrap_or_else(|e| panic!("request {id}: {e}"));
+    }
+}
+
+/// Two tenants with *different* `MethodSpec`s served concurrently by one
+/// `Server`: per-request routing builds each cache under its own method and
+/// the batcher decodes them as per-variant sub-batches in the same tick.
+#[test]
+fn two_method_specs_served_concurrently() {
+    let dir = need_artifacts!();
+    let engine = Engine::new(&dir, Method::mixkvq("mix225"), 32).unwrap();
+    let mut server = Server::new(engine, ServerConfig::default());
+    let mut rng = Pcg32::seeded(31);
+    let mut ids = Vec::new();
+    for (i, method) in [None, Some(MethodSpec::Bf16)].into_iter().enumerate() {
+        let task = workloads::gen_passkey(&mut rng, 100);
+        ids.push(
+            server
+                .submit(Request {
+                    id: i as u64,
+                    prompt: task.prompt,
+                    max_new_tokens: 8,
+                    sampling: Sampling::Greedy,
+                    method,
+                })
+                .unwrap(),
+        );
+    }
+    // one tick admits both (max_prefills_per_cycle = 2) — they are live at
+    // the same time on different decode variants
+    server.tick().unwrap();
+    for &id in &ids {
+        assert!(
+            matches!(server.poll(id), RequestStatus::Running { .. } | RequestStatus::Finished { .. }),
+            "request {id} should be admitted after the first tick"
+        );
+    }
+    let live = server.batcher.variant_groups();
+    if live.len() == 2 {
+        assert_ne!(live[0].variant, live[1].variant, "distinct decode variants co-scheduled");
+    }
+    while server.has_work() {
+        server.tick().unwrap();
+    }
+    let methods: Vec<&str> = server.metrics.completed.iter().map(|c| c.method.as_str()).collect();
+    assert!(methods.contains(&"mixkvq-mix225"), "{methods:?}");
+    assert!(methods.contains(&"bf16"), "{methods:?}");
+    for c in &server.metrics.completed {
+        assert!(!c.tokens.is_empty());
+        assert!(c.ttft_ms.is_some());
+    }
+    let events = server.drain_events();
+    for (id, stream) in by_request(&events) {
+        validate_stream(&stream, 8).unwrap_or_else(|e| panic!("request {id}: {e}"));
+    }
+}
+
+/// Satellite fix: a 1-token budget records the first sampled token and
+/// reports `MaxTokens` (Eos only when the token actually is EOS).
+#[test]
+fn one_token_budget_records_token_and_reason() {
+    let dir = need_artifacts!();
+    let engine = Engine::new(&dir, Method::bf16(), 32).unwrap();
+    let mut server = Server::new(engine, ServerConfig::default());
+    let mut rng = Pcg32::seeded(41);
+    let task = workloads::gen_kvlookup(&mut rng, 6);
+    let completed = server
+        .run(vec![Request {
+            id: 0,
+            prompt: task.prompt,
+            max_new_tokens: 1,
+            sampling: Sampling::Greedy,
+            method: None,
+        }])
+        .unwrap();
+    assert_eq!(completed.len(), 1);
+    let c = &completed[0];
+    assert_eq!(c.tokens.len(), 1, "the first sampled token must be recorded");
+    if c.tokens[0] == tokenizer::EOS {
+        assert_eq!(c.reason, FinishReason::Eos);
+    } else {
+        assert_eq!(c.reason, FinishReason::MaxTokens);
+    }
+    assert!(c.ttft_ms.is_some());
+}
+
+/// Cancellation: a queued request cancels to a terminal record with no
+/// tokens (excluded from TTFT percentiles); oversized prompts reject at
+/// submit.
+#[test]
+fn cancel_and_reject_paths() {
+    let dir = need_artifacts!();
+    let engine = Engine::new(&dir, Method::mixkvq("mix225"), 32).unwrap();
+    let max_ctx = *engine.meta.cache.prefill_buckets.iter().max().unwrap();
+    let mut server = Server::new(engine, ServerConfig::default());
+    let mut rng = Pcg32::seeded(51);
+    let mk = |id: u64, prompt: Vec<i32>| Request {
+        id,
+        prompt,
+        max_new_tokens: 6,
+        sampling: Sampling::Greedy,
+        method: None,
+    };
+    // oversized prompt → rejected at submit, terminal immediately
+    let big = mk(7, vec![1; max_ctx + 1]);
+    server.submit(big).unwrap();
+    assert!(matches!(
+        server.poll(7),
+        RequestStatus::Finished { reason: FinishReason::Rejected, .. }
+    ));
+    assert_eq!(server.metrics.rejected, 1);
+    // queued cancel before any tick
+    let t1 = workloads::gen_passkey(&mut rng, 80);
+    let t2 = workloads::gen_passkey(&mut rng, 80);
+    server.submit(mk(0, t1.prompt)).unwrap();
+    server.submit(mk(1, t2.prompt)).unwrap();
+    // duplicate in-flight id is a hard error, not a silent drop
+    assert!(server.submit(mk(0, vec![1, 2])).is_err());
+    assert!(server.cancel(1));
+    assert!(!server.cancel(1), "already terminal");
+    match server.poll(1) {
+        RequestStatus::Finished { reason, tokens } => {
+            assert_eq!(reason, FinishReason::Cancelled);
+            assert!(tokens.is_empty());
+        }
+        other => panic!("{other:?}"),
+    }
+    while server.has_work() {
+        server.tick().unwrap();
+    }
+    assert!(matches!(server.poll(0), RequestStatus::Finished { reason: FinishReason::Eos, .. })
+        || matches!(server.poll(0), RequestStatus::Finished { reason: FinishReason::MaxTokens, .. }));
+    assert_eq!(server.metrics.cancelled, 1);
+    // cancelled/rejected records carry no TTFT and don't skew percentiles
+    let cancelled = server.metrics.completed.iter().find(|c| c.id == 1).unwrap();
+    assert!(cancelled.ttft_ms.is_none());
+    let events = server.drain_events();
+    for (id, stream) in by_request(&events) {
+        validate_stream(&stream, 6).unwrap_or_else(|e| panic!("request {id}: {e}"));
+    }
+    assert_eq!(server.poll(99), RequestStatus::Unknown);
 }
 
 #[test]

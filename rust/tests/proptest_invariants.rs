@@ -2,12 +2,17 @@
 //! randomness across module boundaries (the single-module properties live
 //! next to their modules; these exercise the composition).
 
+use std::collections::HashMap;
+use std::time::Instant;
+
 use mixkvq::coordinator::batcher::Batcher;
+use mixkvq::coordinator::events::{by_request, validate_stream, Event, EventLog};
 use mixkvq::coordinator::session::{FinishReason, Request, Session};
 use mixkvq::kvcache::accountant;
 use mixkvq::kvcache::cache::RequestCache;
 use mixkvq::model::config::{CacheConfig, ModelConfig};
 use mixkvq::model::sampler::Sampling;
+use mixkvq::model::tokenizer::EOS;
 use mixkvq::quant::methods::Method;
 use mixkvq::quant::salience;
 use mixkvq::quant::window::TierSpec;
@@ -129,6 +134,7 @@ fn batcher_fifo_no_starvation() {
                 prompt: vec![1],
                 max_new_tokens: 4,
                 sampling: Sampling::Greedy,
+                method: None,
             });
         }
         let mut admitted = Vec::new();
@@ -159,6 +165,114 @@ fn batcher_fifo_no_starvation() {
         }
         let want: Vec<u64> = (0..n as u64).collect();
         assert_eq!(admitted, want, "admission must be FIFO and complete");
+    }
+}
+
+/// Serving-API invariant: every per-request lifecycle stream is well-formed
+/// — exactly one `Queued`, at most one `Admitted`, `FirstToken` before all
+/// `Token`s, generated count within `max_new_tokens`, exactly one terminal
+/// `Finished` — under randomized admission/finish/cancel schedules driven
+/// through the same Batcher + EventLog discipline `Server::tick` uses
+/// (the engine-backed path is checked by the integration tests).
+#[test]
+fn event_streams_well_formed_under_random_schedules() {
+    let mut rng = Pcg32::seeded(1005);
+    let mc = ModelConfig { n_layers: 1, ..ModelConfig::default_build() };
+    let cc = CacheConfig::default_build();
+    let mk_cache = || {
+        RequestCache::new(
+            &mc,
+            &cc,
+            &[TierSpec { n16: 32, n4: 0, n2: 0, v_bits: 16 }],
+            Method::bf16(),
+            32,
+        )
+    };
+    for case in 0..25 {
+        let slots = 1 + rng.below(4) as usize;
+        let n = 3 + rng.below(12) as usize;
+        let mut b = Batcher::new(slots);
+        let mut log = EventLog::default();
+        let mut max_new: HashMap<u64, usize> = HashMap::new();
+        for id in 0..n as u64 {
+            let mn = 1 + rng.below(6) as usize;
+            max_new.insert(id, mn);
+            log.queued(id);
+            b.enqueue(Request {
+                id,
+                prompt: vec![1],
+                max_new_tokens: mn,
+                sampling: Sampling::Greedy,
+                method: None,
+            });
+        }
+        let mut guard = 0;
+        while b.has_work() && guard < 10_000 {
+            guard += 1;
+            // --- admissions (mirrors Server::admit) ----------------------
+            while let Some((slot, req)) = b.next_admission() {
+                let id = req.id;
+                let mn = req.max_new_tokens;
+                let first = if rng.f32() < 0.15 { EOS } else { 7 };
+                let mut sess = Session::new(req, mk_cache(), first, Instant::now());
+                log.admitted(id, "bf16");
+                log.first_token(id, first);
+                if first == EOS {
+                    sess.finish(FinishReason::Eos);
+                    log.finished(id, FinishReason::Eos, sess.generated.len());
+                    continue;
+                }
+                if mn <= 1 {
+                    sess.finish(FinishReason::MaxTokens);
+                    log.finished(id, FinishReason::MaxTokens, sess.generated.len());
+                    continue;
+                }
+                b.install(slot, sess);
+            }
+            // --- random cancellation (queued, then live) -----------------
+            if rng.f32() < 0.15 {
+                if let Some(id) = b.waiting.front().map(|r| r.id) {
+                    b.remove_waiting(id).unwrap();
+                    log.finished(id, FinishReason::Cancelled, 0);
+                }
+            }
+            if rng.f32() < 0.1 {
+                for s in b.slots.iter_mut() {
+                    let live = s.as_ref().map(|x| !x.is_finished()).unwrap_or(false);
+                    if live {
+                        let mut sess = s.take().unwrap();
+                        sess.finish(FinishReason::Cancelled);
+                        log.finished(sess.request.id, FinishReason::Cancelled, sess.generated.len());
+                        break;
+                    }
+                }
+            }
+            // --- one decode step: each live session samples a token ------
+            for s in b.slots.iter_mut().flatten() {
+                if s.is_finished() {
+                    continue;
+                }
+                let tok = if rng.f32() < 0.3 { EOS } else { 9 };
+                let id = s.request.id;
+                s.push_token(tok);
+                log.token(id, tok);
+            }
+            for sess in b.reap() {
+                log.finished(sess.request.id, sess.finish_reason().unwrap(), sess.generated.len());
+            }
+        }
+        assert!(guard < 10_000, "case {case}: schedule did not drain");
+        let events = log.drain();
+        let grouped = by_request(&events);
+        assert_eq!(grouped.len(), n, "case {case}: every request has a stream");
+        for (id, stream) in grouped {
+            validate_stream(&stream, max_new[&id])
+                .unwrap_or_else(|e| panic!("case {case} request {id}: {e}\n{stream:#?}"));
+            assert!(
+                matches!(stream.last(), Some(Event::Finished { .. })),
+                "case {case} request {id}: no terminal event"
+            );
+        }
     }
 }
 
