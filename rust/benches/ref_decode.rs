@@ -1,0 +1,80 @@
+//! `cargo bench --bench ref_decode` — reference-path decode: fused
+//! packed-code attention vs the legacy dequantize-then-attend path.
+//!
+//! Unlike the engine benches this needs **no artifacts** (random weights,
+//! build-default shapes), so it always runs — on CI and on fresh checkouts —
+//! and writes `BENCH_ref_decode.json` so the perf trajectory has data
+//! points. Two context lengths; the fused path must stay ≥3× faster at
+//! qlen ≥ 256 (ISSUE 2 acceptance bar).
+
+use mixkvq::harness::refdriver::RefDriver;
+use mixkvq::model::config::Meta;
+use mixkvq::model::weights::Weights;
+use mixkvq::quant::methods::Method;
+use mixkvq::util::bench::bench;
+use mixkvq::util::json::{self, Json};
+use mixkvq::util::rng::Pcg32;
+
+fn main() {
+    let meta = Meta::default_build();
+    let mc = meta.model.clone();
+    let cc = meta.cache.clone(); // capacity 512, residual 128
+    let weights = Weights::random(&mc, 7);
+    let spec = meta.variant("mix30").unwrap().layers.clone();
+    let r_limit = cc.residual;
+    let mut rng = Pcg32::seeded(11);
+    let mut results = Vec::new();
+    let mut entries = Vec::new();
+
+    for qlen in [256usize, 512] {
+        let driver = RefDriver::new(
+            mc.clone(),
+            cc.clone(),
+            &weights,
+            spec.clone(),
+            Method::mixkvq("mix30"),
+            r_limit,
+        );
+        // prompt sized so exactly `qlen` tokens land in the quantized window
+        let t = qlen + r_limit;
+        let prompt: Vec<i32> = (0..t).map(|_| rng.range(1, 127) as i32).collect();
+        let (cache, _) = driver.prefill(&prompt).unwrap();
+        assert_eq!(cache.qlen, qlen, "prefill split drifted");
+
+        let fused = bench(&format!("fused packed-code decode qlen={qlen}"), 300, 2500.0, || {
+            std::hint::black_box(driver.decode_logits_fused(&cache, 17));
+        });
+        let legacy = bench(&format!("legacy dequant decode    qlen={qlen}"), 300, 2500.0, || {
+            std::hint::black_box(driver.decode_logits_legacy(&cache, 17));
+        });
+        let speedup = legacy.median_ms / fused.median_ms;
+        println!(
+            "qlen={qlen}: fused {:.3} ms  legacy {:.3} ms  speedup {:.2}x{}",
+            fused.median_ms,
+            legacy.median_ms,
+            speedup,
+            if speedup < 3.0 { "  (below the 3x bar!)" } else { "" }
+        );
+        entries.push(json::obj(vec![
+            ("qlen", json::num(qlen as f64)),
+            ("fused_ms", json::num(fused.median_ms)),
+            ("legacy_ms", json::num(legacy.median_ms)),
+            ("speedup", json::num(speedup)),
+        ]));
+        results.push(fused);
+        results.push(legacy);
+    }
+
+    println!("\n== ref_decode ==");
+    for r in &results {
+        println!("{}", r.report());
+    }
+
+    let report = json::obj(vec![
+        ("bench", json::s("ref_decode")),
+        ("variant", json::s("mix30")),
+        ("entries", Json::Arr(entries)),
+    ]);
+    std::fs::write("BENCH_ref_decode.json", report.print() + "\n").expect("write bench json");
+    println!("wrote BENCH_ref_decode.json");
+}

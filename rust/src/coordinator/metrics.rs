@@ -101,9 +101,11 @@ impl Metrics {
 
     /// Completion counts per resolved method name, in first-completion
     /// order — the per-tenant routing receipt for mixed-precision serving.
+    /// Rejected/cancelled-in-queue records never ran a method (placeholder
+    /// "-", `ttft_ms: None`) and are excluded.
     pub fn completed_by_method(&self) -> Vec<(String, usize)> {
         let mut out: Vec<(String, usize)> = Vec::new();
-        for c in &self.completed {
+        for c in self.completed.iter().filter(|c| c.ttft_ms.is_some()) {
             match out.iter_mut().find(|(m, _)| *m == c.method) {
                 Some((_, n)) => *n += 1,
                 None => out.push((c.method.clone(), 1)),
@@ -153,16 +155,25 @@ impl Metrics {
 }
 
 /// Table 7-style breakdown from engine timers: share of per-step wall time
-/// in channel-selection/quantization vs model execution vs host assembly.
+/// in channel-selection/quantization vs model execution vs host assembly,
+/// plus the decode-arg scratch-pool savings (steps that reused pooled
+/// buffers instead of allocating, and the bytes the pool amortizes).
 pub struct Breakdown {
     pub quantize_pct: f64,
     pub model_exec_pct: f64,
     pub assemble_pct: f64,
     pub quantize_call_rate_pct: f64,
+    /// Share of decode steps served from the pooled per-variant arg
+    /// buffers (steady state: ~100%, one build per variant per process).
+    pub assemble_reuse_pct: f64,
+    /// Total heap bytes currently pooled across all variants; a reused
+    /// step saves re-allocating its own variant's share of this.
+    pub scratch_bytes_pooled: u64,
 }
 
 pub fn breakdown(t: &EngineTimers) -> Breakdown {
     let total = (t.decode_exec_ns + t.quantize_ns + t.assemble_ns).max(1) as f64;
+    let assemblies = t.assemble_reuses + t.assemble_builds;
     Breakdown {
         quantize_pct: 100.0 * t.quantize_ns as f64 / total,
         model_exec_pct: 100.0 * t.decode_exec_ns as f64 / total,
@@ -172,6 +183,12 @@ pub fn breakdown(t: &EngineTimers) -> Breakdown {
         } else {
             100.0 * t.quantize_events as f64 / t.decode_steps as f64
         },
+        assemble_reuse_pct: if assemblies == 0 {
+            0.0
+        } else {
+            100.0 * t.assemble_reuses as f64 / assemblies as f64
+        },
+        scratch_bytes_pooled: t.scratch_bytes,
     }
 }
 
@@ -242,10 +259,15 @@ mod tests {
             assemble_ns: 200,
             decode_steps: 10,
             quantize_events: 1,
-            prefill_exec_ns: 0,
+            assemble_reuses: 9,
+            assemble_builds: 1,
+            scratch_bytes: 4096,
+            ..Default::default()
         };
         let b = breakdown(&t);
         assert!((b.quantize_pct + b.model_exec_pct + b.assemble_pct - 100.0).abs() < 1e-6);
         assert!((b.quantize_call_rate_pct - 10.0).abs() < 1e-9);
+        assert!((b.assemble_reuse_pct - 90.0).abs() < 1e-9);
+        assert_eq!(b.scratch_bytes_pooled, 4096);
     }
 }

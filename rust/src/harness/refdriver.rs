@@ -5,6 +5,17 @@
 //! variants (Fig. 6 heatmaps, Fig. 7 Pareto search, Table 5 group-size
 //! sweep). Agreement with the HLO path is enforced by tests/integration.rs
 //! (invariant #8), so results are interchangeable up to float tolerance.
+//!
+//! Decode goes through the **fused packed-code path** by default
+//! ([`RefModel::decode_step_into`]): attention streams straight off the
+//! cache's packed buffers into a per-driver [`DecodeScratch`], so the
+//! steady-state step never dequantizes a window and never allocates. The
+//! old dequantize-then-attend path survives as [`RefDriver::step_legacy`] /
+//! [`RefDriver::decode_logits_legacy`] — the numerical oracle the fused
+//! path is property-tested against (tests/fused_decode.rs) and the baseline
+//! benches/ref_decode.rs measures the speedup over.
+
+use std::cell::RefCell;
 
 use anyhow::Result;
 
@@ -12,7 +23,7 @@ use crate::harness::accuracy::AccuracyReport;
 use crate::harness::workloads::Task;
 use crate::kvcache::cache::RequestCache;
 use crate::model::config::{CacheConfig, ModelConfig};
-use crate::model::reference::{LayerCtx, RefModel};
+use crate::model::reference::{DecodeScratch, LayerCtx, RefModel};
 use crate::model::sampler::{argmax, log_prob};
 use crate::model::weights::Weights;
 use crate::quant::methods::Method;
@@ -24,6 +35,8 @@ pub struct RefDriver<'a> {
     pub specs: Vec<TierSpec>,
     pub method: Method,
     pub r_limit: usize,
+    /// Per-driver decode arena, reused across every step of every request.
+    scratch: RefCell<DecodeScratch>,
 }
 
 impl<'a> RefDriver<'a> {
@@ -35,7 +48,9 @@ impl<'a> RefDriver<'a> {
         method: Method,
         r_limit: usize,
     ) -> Self {
-        RefDriver { model: RefModel::new(mc, w), cc, specs, method, r_limit }
+        let model = RefModel::new(mc, w);
+        let scratch = RefCell::new(DecodeScratch::new(&model.mc, cc.capacity + cc.residual + 1));
+        RefDriver { model, cc, specs, method, r_limit, scratch }
     }
 
     fn new_cache(&self) -> RequestCache {
@@ -50,8 +65,54 @@ impl<'a> RefDriver<'a> {
         Ok((cache, pre.last_logits))
     }
 
-    /// One teacher-forced decode step; returns logits for the next token.
+    /// One teacher-forced decode step (fused path); returns logits for the
+    /// next token.
     pub fn step(&self, cache: &mut RequestCache, token: i32) -> Result<Vec<f32>> {
+        let mut scratch = self.scratch.borrow_mut();
+        self.step_with(cache, token, &mut scratch)?;
+        Ok(scratch.logits.clone())
+    }
+
+    /// The zero-alloc step core: decode into `scratch` (fused packed-code
+    /// attention), then fold the new token into the cache. At steady state
+    /// (no quantization flush this step) this performs zero heap
+    /// allocations — asserted by tests/fused_decode.rs with a counting
+    /// global allocator. Logits land in `scratch.logits`.
+    pub fn step_with(
+        &self,
+        cache: &mut RequestCache,
+        token: i32,
+        scratch: &mut DecodeScratch,
+    ) -> Result<()> {
+        self.model.decode_step_into(token, cache, scratch);
+        cache.append(&scratch.knew, &scratch.vnew, &scratch.qabs)
+    }
+
+    /// Non-mutating fused decode: logits for `token` against the cache as
+    /// is (no append) — the bench/equivalence probe.
+    pub fn decode_logits_fused(&self, cache: &RequestCache, token: i32) -> Vec<f32> {
+        let mut scratch = self.scratch.borrow_mut();
+        self.model.decode_step_into(token, cache, &mut scratch);
+        scratch.logits.clone()
+    }
+
+    /// One teacher-forced decode step through the legacy
+    /// dequantize-then-attend path (the numerical oracle).
+    pub fn step_legacy(&self, cache: &mut RequestCache, token: i32) -> Result<Vec<f32>> {
+        let out = self.legacy_decode(cache, token);
+        cache.append(&out.knew, &out.vnew, &out.qabs)?;
+        Ok(out.logits)
+    }
+
+    /// Non-mutating legacy decode (no append) — bench/equivalence probe.
+    pub fn decode_logits_legacy(&self, cache: &RequestCache, token: i32) -> Vec<f32> {
+        self.legacy_decode(cache, token).logits
+    }
+
+    /// The pre-fused decode path, kept verbatim as the oracle: dequantize
+    /// every head's full quantized window into fresh f32 buffers, then run
+    /// the f32 attention over them.
+    fn legacy_decode(&self, cache: &RequestCache, token: i32) -> crate::model::reference::DecodeOut {
         let mc = &self.model.mc;
         let nl = mc.n_layers;
         let hkv = mc.n_kv_heads;
@@ -90,9 +151,7 @@ impl<'a> RefDriver<'a> {
                 tr,
             })
             .collect();
-        let out = self.model.decode_step(token, cache.pos, &ctx, &cache.rot);
-        cache.append(&out.knew, &out.vnew, &out.qabs)?;
-        Ok(out.logits)
+        self.model.decode_step(token, cache.pos, &ctx, &cache.rot)
     }
 
     /// Teacher-forced answer accuracy (same metric as harness::accuracy).
@@ -172,6 +231,34 @@ mod tests {
         // untrained weights: accuracy is whatever it is, but the loop must
         // have scored every answer position
         assert_eq!(rep.answers, 4 + 1);
+    }
+
+    #[test]
+    fn fused_step_matches_legacy_oracle() {
+        // The fused packed-code decode and the dequantize-then-attend
+        // oracle must agree to float-reassociation tolerance; the full
+        // 17-method sweep lives in tests/fused_decode.rs.
+        let mc = ModelConfig { n_layers: 2, ..ModelConfig::default_build() };
+        let w = Weights::random(&mc, 7);
+        let d = driver(&w, TierSpec { n16: 2, n4: 2, n2: 28, v_bits: 2 }, Method::mixkvq("mix30"));
+        let mut rng = Pcg32::seeded(83);
+        let task = crate::harness::workloads::gen_passkey(&mut rng, 100);
+        let (mut cache, _) = d.prefill(&task.prompt).unwrap();
+        assert!(cache.qlen > 0);
+        let mut cursor = task.prompt.len();
+        for _ in 0..3 {
+            let tok = task.gold[cursor];
+            let fused = d.decode_logits_fused(&cache, tok);
+            let legacy = d.decode_logits_legacy(&cache, tok);
+            let err = fused
+                .iter()
+                .zip(&legacy)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(err < 1e-4, "fused/legacy diverge: {err}");
+            d.step(&mut cache, tok).unwrap();
+            cursor += 1;
+        }
     }
 
     #[test]

@@ -62,6 +62,16 @@ impl HeadState {
         let gk = cc.group;          // key grouping (along tokens)
         let gv = cc.group.min(d);   // value grouping (along channels)
         let cg = c / gk;
+        // Packed rows are indexed per-token, so tier widths must fill whole
+        // bytes — fail loudly instead of silently corrupting the next
+        // token's row (packing::packed_len enforces the same invariant).
+        debug_assert!(spec.n4 % 2 == 0, "u4 tier width {} must be even", spec.n4);
+        debug_assert!(spec.n2 % 4 == 0, "u2 tier width {} must be a multiple of 4", spec.n2);
+        debug_assert!(
+            spec.v_bits == 16 || d % (8 / spec.v_bits) == 0,
+            "value rows of {d} channels at {}-bit do not fill whole bytes",
+            spec.v_bits
+        );
         HeadState {
             spec,
             d,
@@ -70,13 +80,17 @@ impl HeadState {
             idx: (0..d as i32).collect(),
             planned: false,
             k16: vec![0.0; c * spec.n16],
-            k4p: vec![0; c * spec.n4 / 2],
+            k4p: vec![0; packing::packed_len(c * spec.n4, 4)],
             k4s: vec![0.0; cg * spec.n4],
             k4z: vec![0.0; cg * spec.n4],
-            k2p: vec![0; c * spec.n2 / 4],
+            k2p: vec![0; packing::packed_len(c * spec.n2, 2)],
             k2s: vec![0.0; cg * spec.n2],
             k2z: vec![0.0; cg * spec.n2],
-            vp: if spec.v_bits == 16 { Vec::new() } else { vec![0; c * d * spec.v_bits / 8] },
+            vp: if spec.v_bits == 16 {
+                Vec::new()
+            } else {
+                vec![0; packing::packed_len(c * d, spec.v_bits)]
+            },
             vs: if spec.v_bits == 16 { Vec::new() } else { vec![0.0; c * d / gv] },
             vz: if spec.v_bits == 16 { Vec::new() } else { vec![0.0; c * d / gv] },
             vfull: if spec.v_bits == 16 { vec![0.0; c * d] } else { Vec::new() },
@@ -175,6 +189,104 @@ impl HeadState {
             }
         }
         out
+    }
+
+    /// Fused attention scores over the packed quantized window:
+    /// `out[t] = scale * q·dequant(k_t)` streamed **directly from the packed
+    /// tier buffers** — no f32 window is materialized. Per scale-group the
+    /// affine params fold into the query once (`w = q ⊙ s`, `ζ = q·z`; see
+    /// quant::packing module docs), then every token in the group costs one
+    /// BF16 dot plus two packed-code dots.
+    ///
+    /// `qperm` is the (rotated) query permuted into tier order —
+    /// `qperm[j] = q[idx[j]]` — which makes the assembly channel-permutation
+    /// aware without any scatter. `w4`/`w2` are caller scratch of at least
+    /// `n4`/`n2` elements.
+    pub fn scores_into(
+        &self,
+        qperm: &[f32],
+        qlen: usize,
+        scale: f32,
+        w4: &mut [f32],
+        w2: &mut [f32],
+        out: &mut [f32],
+    ) {
+        let (n16, n4, n2) = (self.spec.n16, self.spec.n4, self.spec.n2);
+        let g = self.group;
+        debug_assert!(qlen <= self.capacity);
+        debug_assert_eq!(qperm.len(), self.d);
+        let q16 = &qperm[..n16];
+        let q4 = &qperm[n16..n16 + n4];
+        let q2 = &qperm[n16 + n4..n16 + n4 + n2];
+        let w4 = &mut w4[..n4];
+        let w2 = &mut w2[..n2];
+        let mut tok = 0;
+        while tok < qlen {
+            let grp = tok / g;
+            let mut zdot = 0.0f32;
+            let s4 = &self.k4s[grp * n4..(grp + 1) * n4];
+            let z4 = &self.k4z[grp * n4..(grp + 1) * n4];
+            for j in 0..n4 {
+                w4[j] = q4[j] * s4[j];
+                zdot += q4[j] * z4[j];
+            }
+            let s2 = &self.k2s[grp * n2..(grp + 1) * n2];
+            let z2 = &self.k2z[grp * n2..(grp + 1) * n2];
+            for j in 0..n2 {
+                w2[j] = q2[j] * s2[j];
+                zdot += q2[j] * z2[j];
+            }
+            let end = ((grp + 1) * g).min(qlen);
+            for t in tok..end {
+                let mut acc = zdot;
+                let row16 = &self.k16[t * n16..(t + 1) * n16];
+                for j in 0..n16 {
+                    acc += q16[j] * row16[j];
+                }
+                if n4 > 0 {
+                    acc += packing::dot_packed_u4(&self.k4p[t * n4 / 2..(t + 1) * n4 / 2], w4);
+                }
+                if n2 > 0 {
+                    acc += packing::dot_packed_u2(&self.k2p[t * n2 / 4..(t + 1) * n2 / 4], w2);
+                }
+                out[t] = acc * scale;
+            }
+            tok = end;
+        }
+    }
+
+    /// Fused value-side attention accumulate: `out[ch] += Σ_t probs[t] *
+    /// dequant(v_{t,ch})` streamed directly from the packed (or BF16) value
+    /// buffers — the other half of the zero-dequant decode path.
+    pub fn values_accumulate_into(&self, probs: &[f32], out: &mut [f32]) {
+        let d = self.d;
+        let qlen = probs.len();
+        debug_assert!(qlen <= self.capacity);
+        debug_assert_eq!(out.len(), d);
+        if self.spec.v_bits == 16 {
+            for (t, &p) in probs.iter().enumerate() {
+                let row = &self.vfull[t * d..(t + 1) * d];
+                for j in 0..d {
+                    out[j] += p * row[j];
+                }
+            }
+            return;
+        }
+        let g = self.vgroup();
+        let ng = d / g;
+        for (t, &p) in probs.iter().enumerate() {
+            let s = &self.vs[t * ng..(t + 1) * ng];
+            let z = &self.vz[t * ng..(t + 1) * ng];
+            if self.spec.v_bits == 4 {
+                crate::quant::asym::accumulate_row_u4(
+                    &self.vp[t * d / 2..(t + 1) * d / 2], p, s, z, g, out,
+                );
+            } else {
+                crate::quant::asym::accumulate_row_u2(
+                    &self.vp[t * d / 4..(t + 1) * d / 4], p, s, z, g, out,
+                );
+            }
+        }
     }
 
     /// Exact storage bytes for `qlen` quantized tokens + the residual
@@ -495,6 +607,55 @@ mod tests {
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f32, f32::max);
         assert!(verr < 2.0, "{verr}");
+    }
+
+    #[test]
+    fn streaming_accessors_match_dequant_round_trip() {
+        // scores_into / values_accumulate_into over the packed buffers must
+        // agree with dequantize-then-dot for every tier mix.
+        let mut rng = Pcg32::seeded(68);
+        for (spec, method) in [
+            (TierSpec { n16: 2, n4: 2, n2: 28, v_bits: 2 }, Method::mixkvq("mix30")),
+            (TierSpec { n16: 0, n4: 32, n2: 0, v_bits: 4 }, Method::kivi("kv4")),
+            (TierSpec { n16: 0, n4: 0, n2: 32, v_bits: 2 }, Method::kvquant("kv2")),
+            (TierSpec { n16: 32, n4: 0, n2: 0, v_bits: 16 }, Method::bf16()),
+        ] {
+            let mc = ModelConfig { n_layers: 1, ..ModelConfig::default_build() };
+            let cc = CacheConfig::default_build();
+            let mut cache = RequestCache::new(&mc, &cc, &[spec], method, 32);
+            let t = 96;
+            let n = mc.n_kv_heads * t * mc.d_head;
+            let k: Vec<Vec<f32>> = vec![(0..n).map(|_| rng.normal()).collect()];
+            let v: Vec<Vec<f32>> = vec![(0..n).map(|_| rng.normal()).collect()];
+            let qa: Vec<Vec<f32>> =
+                vec![(0..mc.n_kv_heads * mc.d_head).map(|_| rng.f32() + 0.01).collect()];
+            cache.load_prefill(&k, &v, &qa, t).unwrap();
+            let q = cache.qlen;
+            assert!(q >= 64);
+            let d = mc.d_head;
+            let head = &cache.heads[0][0];
+            // random rotated-space query, permuted into tier order
+            let qvec: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            let qperm: Vec<f32> = head.idx.iter().map(|&i| qvec[i as usize]).collect();
+            let mut w4 = vec![0f32; d];
+            let mut w2 = vec![0f32; d];
+            let mut got = vec![0f32; q];
+            head.scores_into(&qperm, q, 0.25, &mut w4, &mut w2, &mut got);
+            let kd = head.dequant_keys(q);
+            for tok in 0..q {
+                let want: f32 =
+                    (0..d).map(|ch| qvec[ch] * kd[tok * d + ch]).sum::<f32>() * 0.25;
+                assert!((got[tok] - want).abs() < 1e-4, "spec {spec:?} tok {tok}");
+            }
+            let probs: Vec<f32> = (0..q).map(|_| rng.f32() / q as f32).collect();
+            let mut ov = vec![0f32; d];
+            head.values_accumulate_into(&probs, &mut ov);
+            let vd = head.dequant_values(q);
+            for ch in 0..d {
+                let want: f32 = (0..q).map(|tok| probs[tok] * vd[tok * d + ch]).sum();
+                assert!((ov[ch] - want).abs() < 1e-4, "spec {spec:?} ch {ch}");
+            }
+        }
     }
 
     #[test]

@@ -39,6 +39,26 @@
 //! `Server::run` remains as a compatibility shim (submit all → tick until
 //! drained) for the offline bench drivers.
 //!
+//! ## Fused packed-code decode (zero-dequant, zero-alloc)
+//!
+//! The reference decode hot path never materializes dequantized f32
+//! windows: [`model::reference::RefModel::decode_step_into`] computes
+//! attention scores and outputs **directly over the cache's packed u2/u4
+//! buffers** using the affine decomposition documented in
+//! [`quant::packing`] (per scale-group, `q·dequant(c) = (q⊙s)·c + q·z`),
+//! streamed by [`kvcache::cache::HeadState::scores_into`] /
+//! [`kvcache::cache::HeadState::values_accumulate_into`]. Every
+//! intermediate lives in a reusable [`model::reference::DecodeScratch`]
+//! arena and RoPE frequencies are precomputed once per model
+//! ([`model::reference::RopeTable`]), so the steady-state step performs
+//! zero heap allocations and zero `powf` calls — property-tested against
+//! the dequantize-then-attend oracle (kept as
+//! `harness::refdriver::RefDriver::step_legacy`) across the full method
+//! roster in tests/fused_decode.rs, and benchmarked artifact-free by
+//! `cargo bench --bench ref_decode` (writes `BENCH_ref_decode.json`). The
+//! engine's batch assembly pools its decode-arg buffers per variant the
+//! same way ([`coordinator::engine::EngineTimers`] reports the reuse rate).
+//!
 //! See DESIGN.md for the experiment index and EXPERIMENTS.md for results.
 
 pub mod util {

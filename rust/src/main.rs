@@ -125,6 +125,11 @@ fn serve(args: &Args) -> Result<()> {
         "breakdown: model_exec {:.1}%  quantize {:.1}%  assemble {:.1}%  (quant events/step {:.1}%)",
         b.model_exec_pct, b.quantize_pct, b.assemble_pct, b.quantize_call_rate_pct
     );
+    println!(
+        "arg scratch pool: {:.1}% of steps reused pooled buffers ({} KB pooled across variants)",
+        b.assemble_reuse_pct,
+        b.scratch_bytes_pooled / 1024
+    );
     // per-method completion counts (the routing receipt)
     for (m, n) in server.metrics.completed_by_method() {
         println!("  {m}: {n} requests");

@@ -11,11 +11,48 @@
 //! (jax.nn.gelu approximate=True), softmax with max-subtraction.
 
 use super::config::ModelConfig;
-use super::weights::Weights;
+use super::weights::{ParamIndex, Weights};
+use crate::kvcache::cache::{HeadState, RequestCache};
 
 pub struct RefModel<'a> {
     pub mc: ModelConfig,
     pub w: &'a Weights,
+    /// Name→flat-position index resolved once (no format!/hash per step).
+    pub pidx: ParamIndex,
+    /// RoPE inverse-frequency table precomputed once per ModelConfig
+    /// (zero `powf` calls on the decode hot path).
+    pub rope: RopeTable,
+}
+
+/// Precomputed RoPE inverse frequencies: `inv_freq[i] = θ^(−i/half)`.
+/// `apply` is bit-identical to [`apply_rope`], which recomputes the powf
+/// per channel per call.
+#[derive(Clone, Debug)]
+pub struct RopeTable {
+    pub inv_freq: Vec<f32>,
+}
+
+impl RopeTable {
+    pub fn new(d_head: usize, theta: f32) -> RopeTable {
+        let half = d_head / 2;
+        RopeTable {
+            inv_freq: (0..half).map(|i| theta.powf(-(i as f32) / half as f32)).collect(),
+        }
+    }
+
+    /// Half-rotation RoPE in place over one head vector of length
+    /// `2 * inv_freq.len()`.
+    pub fn apply(&self, x: &mut [f32], pos: usize) {
+        let half = self.inv_freq.len();
+        debug_assert_eq!(x.len(), 2 * half);
+        for i in 0..half {
+            let ang = pos as f32 * self.inv_freq[i];
+            let (sin, cos) = ang.sin_cos();
+            let (a, b) = (x[i], x[i + half]);
+            x[i] = a * cos - b * sin;
+            x[i + half] = b * cos + a * sin;
+        }
+    }
 }
 
 /// Full-precision K/V/|Q| for one prompt: `k[l]`/`v[l]` are [Hkv, T, dh]
@@ -51,6 +88,70 @@ pub struct DecodeOut {
     pub qabs: Vec<Vec<f32>>,
 }
 
+/// Per-layer attention context for the *fused* decode path: borrows the
+/// cache's packed tier buffers (and the head-local residual) directly —
+/// nothing is dequantized or copied.
+pub struct QuantLayerCtx<'a> {
+    /// One [`HeadState`] per kv-head, packed buffers + residual + `idx`.
+    pub heads: &'a [HeadState],
+    /// Quantized-window length (tokens).
+    pub tq: usize,
+    /// Residual length (tokens).
+    pub tr: usize,
+}
+
+/// Reusable decode-step arena: every intermediate of
+/// [`RefModel::decode_step_into`] lives here, allocated once per request
+/// (or driver) and reused every step — steady-state decode performs zero
+/// heap allocations.
+pub struct DecodeScratch {
+    pub h: Vec<f32>,       // [d_model] residual stream
+    pub x: Vec<f32>,       // [d_model] rmsnorm output
+    pub q: Vec<f32>,       // [Hq*dh]
+    pub k: Vec<f32>,       // [Hkv*dh]
+    pub v: Vec<f32>,       // [Hkv*dh]
+    pub qrot: Vec<f32>,    // [dh] rotated query head
+    pub qperm: Vec<f32>,   // [dh] rotated query permuted into tier order
+    pub w4: Vec<f32>,      // [dh] per-group folded u4 weights (q ⊙ s)
+    pub w2: Vec<f32>,      // [dh] per-group folded u2 weights
+    pub o: Vec<f32>,       // [Hq*dh] attention output
+    pub proj: Vec<f32>,    // [d_model]
+    pub ff: Vec<f32>,      // [d_ff]
+    pub scores: Vec<f32>,  // [max context] attention scores
+    pub logits: Vec<f32>,  // [vocab]
+    pub knew: Vec<Vec<f32>>, // [L][Hkv*dh]
+    pub vnew: Vec<Vec<f32>>,
+    pub qabs: Vec<Vec<f32>>,
+}
+
+impl DecodeScratch {
+    /// `max_scores` must cover the longest attention span this scratch will
+    /// see (quantized capacity + residual capacity + 1 for self).
+    pub fn new(mc: &ModelConfig, max_scores: usize) -> DecodeScratch {
+        let (hq, hkv, dh) = (mc.n_q_heads, mc.n_kv_heads, mc.d_head);
+        let per_layer = || (0..mc.n_layers).map(|_| vec![0f32; hkv * dh]).collect();
+        DecodeScratch {
+            h: vec![0.0; mc.d_model],
+            x: vec![0.0; mc.d_model],
+            q: vec![0.0; hq * dh],
+            k: vec![0.0; hkv * dh],
+            v: vec![0.0; hkv * dh],
+            qrot: vec![0.0; dh],
+            qperm: vec![0.0; dh],
+            w4: vec![0.0; dh],
+            w2: vec![0.0; dh],
+            o: vec![0.0; hq * dh],
+            proj: vec![0.0; mc.d_model],
+            ff: vec![0.0; mc.d_ff],
+            scores: vec![0.0; max_scores],
+            logits: vec![0.0; mc.vocab],
+            knew: per_layer(),
+            vnew: per_layer(),
+            qabs: per_layer(),
+        }
+    }
+}
+
 pub fn rmsnorm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
     let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
     let inv = 1.0 / (ms + eps).sqrt();
@@ -59,20 +160,33 @@ pub fn rmsnorm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
     }
 }
 
-/// y += x · W for row-major W [n, m].
+/// y = x · W for row-major W [n, m], blocked 4 input rows at a time so each
+/// `out` element is read/written once per block instead of once per row.
+/// The per-element summation order matches the row-at-a-time form.
 pub fn matvec(x: &[f32], w: &[f32], n: usize, m: usize, out: &mut [f32]) {
     debug_assert_eq!(x.len(), n);
     debug_assert_eq!(w.len(), n * m);
-    out[..m].fill(0.0);
-    for i in 0..n {
-        let xi = x[i];
-        if xi == 0.0 {
-            continue;
+    let out = &mut out[..m];
+    out.fill(0.0);
+    let mut i = 0;
+    while i + 4 <= n {
+        let (x0, x1, x2, x3) = (x[i], x[i + 1], x[i + 2], x[i + 3]);
+        let r0 = &w[i * m..(i + 1) * m];
+        let r1 = &w[(i + 1) * m..(i + 2) * m];
+        let r2 = &w[(i + 2) * m..(i + 3) * m];
+        let r3 = &w[(i + 3) * m..(i + 4) * m];
+        for j in 0..m {
+            out[j] = out[j] + x0 * r0[j] + x1 * r1[j] + x2 * r2[j] + x3 * r3[j];
         }
+        i += 4;
+    }
+    while i < n {
+        let xi = x[i];
         let row = &w[i * m..(i + 1) * m];
         for j in 0..m {
             out[j] += xi * row[j];
         }
+        i += 1;
     }
 }
 
@@ -111,7 +225,9 @@ pub fn softmax_inplace(s: &mut [f32]) {
 
 impl<'a> RefModel<'a> {
     pub fn new(mc: ModelConfig, w: &'a Weights) -> Self {
-        RefModel { mc, w }
+        let pidx = ParamIndex::new(w, &mc);
+        let rope = RopeTable::new(mc.d_head, mc.rope_theta);
+        RefModel { mc, w, pidx, rope }
     }
 
     /// Causal full-precision forward; returns logits [T, V] (teacher-forced
@@ -131,25 +247,26 @@ impl<'a> RefModel<'a> {
         let mut x = vec![0f32; d];
         let scale = 1.0 / (dh as f32).sqrt();
         for l in 0..mc.n_layers {
+            let lw = self.pidx.layers[l];
             let (wq, wk, wv, wo) = (
-                self.w.get(&format!("l{l}.wq")),
-                self.w.get(&format!("l{l}.wk")),
-                self.w.get(&format!("l{l}.wv")),
-                self.w.get(&format!("l{l}.wo")),
+                self.w.flat[lw.wq].as_slice(),
+                self.w.flat[lw.wk].as_slice(),
+                self.w.flat[lw.wv].as_slice(),
+                self.w.flat[lw.wo].as_slice(),
             );
             let mut q_all = vec![0f32; t * hq * dh];
             let mut k_all = vec![0f32; t * hkv * dh];
             let mut v_all = vec![0f32; t * hkv * dh];
             for tok in 0..t {
-                rmsnorm(&h[tok * d..(tok + 1) * d], self.w.get(&format!("l{l}.ln1")), mc.rmsnorm_eps, &mut x);
+                rmsnorm(&h[tok * d..(tok + 1) * d], &self.w.flat[lw.ln1], mc.rmsnorm_eps, &mut x);
                 matvec(&x, wq, d, hq * dh, &mut q_all[tok * hq * dh..(tok + 1) * hq * dh]);
                 matvec(&x, wk, d, hkv * dh, &mut k_all[tok * hkv * dh..(tok + 1) * hkv * dh]);
                 matvec(&x, wv, d, hkv * dh, &mut v_all[tok * hkv * dh..(tok + 1) * hkv * dh]);
                 for hh in 0..hq {
-                    apply_rope(&mut q_all[tok * hq * dh + hh * dh..tok * hq * dh + (hh + 1) * dh], tok, mc.rope_theta);
+                    self.rope.apply(&mut q_all[tok * hq * dh + hh * dh..tok * hq * dh + (hh + 1) * dh], tok);
                 }
                 for hh in 0..hkv {
-                    apply_rope(&mut k_all[tok * hkv * dh + hh * dh..tok * hkv * dh + (hh + 1) * dh], tok, mc.rope_theta);
+                    self.rope.apply(&mut k_all[tok * hkv * dh + hh * dh..tok * hkv * dh + (hh + 1) * dh], tok);
                 }
             }
             // attention, causal
@@ -179,11 +296,11 @@ impl<'a> RefModel<'a> {
                 }
             }
             // MLP
-            let (w1, w2) = (self.w.get(&format!("l{l}.w1")), self.w.get(&format!("l{l}.w2")));
+            let (w1, w2) = (self.w.flat[lw.w1].as_slice(), self.w.flat[lw.w2].as_slice());
             let mut ff = vec![0f32; mc.d_ff];
             let mut proj = vec![0f32; d];
             for tok in 0..t {
-                rmsnorm(&h[tok * d..(tok + 1) * d], self.w.get(&format!("l{l}.ln2")), mc.rmsnorm_eps, &mut x);
+                rmsnorm(&h[tok * d..(tok + 1) * d], &self.w.flat[lw.ln2], mc.rmsnorm_eps, &mut x);
                 matvec(&x, w1, d, mc.d_ff, &mut ff);
                 for f in ff.iter_mut() {
                     *f = gelu(*f);
@@ -251,18 +368,19 @@ impl<'a> RefModel<'a> {
         let mut qabss = Vec::new();
         for l in 0..mc.n_layers {
             let c = &ctx[l];
-            rmsnorm(&h, self.w.get(&format!("l{l}.ln1")), mc.rmsnorm_eps, &mut x);
+            let lw = self.pidx.layers[l];
+            rmsnorm(&h, &self.w.flat[lw.ln1], mc.rmsnorm_eps, &mut x);
             let mut q = vec![0f32; hq * dh];
             let mut k = vec![0f32; hkv * dh];
             let mut v = vec![0f32; hkv * dh];
-            matvec(&x, self.w.get(&format!("l{l}.wq")), d, hq * dh, &mut q);
-            matvec(&x, self.w.get(&format!("l{l}.wk")), d, hkv * dh, &mut k);
-            matvec(&x, self.w.get(&format!("l{l}.wv")), d, hkv * dh, &mut v);
+            matvec(&x, &self.w.flat[lw.wq], d, hq * dh, &mut q);
+            matvec(&x, &self.w.flat[lw.wk], d, hkv * dh, &mut k);
+            matvec(&x, &self.w.flat[lw.wv], d, hkv * dh, &mut v);
             for hh in 0..hq {
-                apply_rope(&mut q[hh * dh..(hh + 1) * dh], pos, mc.rope_theta);
+                self.rope.apply(&mut q[hh * dh..(hh + 1) * dh], pos);
             }
             for hh in 0..hkv {
-                apply_rope(&mut k[hh * dh..(hh + 1) * dh], pos, mc.rope_theta);
+                self.rope.apply(&mut k[hh * dh..(hh + 1) * dh], pos);
             }
             let mut qa = vec![0f32; hkv * dh];
             for hh in 0..hq {
@@ -313,17 +431,17 @@ impl<'a> RefModel<'a> {
                 }
             }
             let mut proj = vec![0f32; d];
-            matvec(&o, self.w.get(&format!("l{l}.wo")), hq * dh, d, &mut proj);
+            matvec(&o, &self.w.flat[lw.wo], hq * dh, d, &mut proj);
             for j in 0..d {
                 h[j] += proj[j];
             }
-            rmsnorm(&h, self.w.get(&format!("l{l}.ln2")), mc.rmsnorm_eps, &mut x);
+            rmsnorm(&h, &self.w.flat[lw.ln2], mc.rmsnorm_eps, &mut x);
             let mut ff = vec![0f32; mc.d_ff];
-            matvec(&x, self.w.get(&format!("l{l}.w1")), d, mc.d_ff, &mut ff);
+            matvec(&x, &self.w.flat[lw.w1], d, mc.d_ff, &mut ff);
             for f in ff.iter_mut() {
                 *f = gelu(*f);
             }
-            matvec(&ff, self.w.get(&format!("l{l}.w2")), mc.d_ff, d, &mut proj);
+            matvec(&ff, &self.w.flat[lw.w2], mc.d_ff, d, &mut proj);
             for j in 0..d {
                 h[j] += proj[j];
             }
@@ -337,6 +455,116 @@ impl<'a> RefModel<'a> {
             logits[vtok] = x.iter().zip(&embed[vtok * d..(vtok + 1) * d]).map(|(a, b)| a * b).sum();
         }
         DecodeOut { logits, knew: knews, vnew: vnews, qabs: qabss }
+    }
+
+    /// Fused single-token decode: attention scores and outputs are computed
+    /// **directly over the cache's packed u2/u4 buffers** via the affine
+    /// decomposition (quant::packing module docs) — no dequantized f32
+    /// window is ever materialized — and every intermediate lands in
+    /// `scratch`, so the steady-state step performs zero heap allocations
+    /// and zero `powf` calls. Semantics match [`RefModel::decode_step`]
+    /// over the dequantize-then-attend oracle to float-reassociation
+    /// tolerance (≤1e-4 logits; enforced by tests/fused_decode.rs across
+    /// the full method roster). Outputs: `scratch.logits` /
+    /// `scratch.knew` / `scratch.vnew` / `scratch.qabs`.
+    pub fn decode_step_into(&self, token: i32, cache: &RequestCache, scratch: &mut DecodeScratch) {
+        let mc = &self.mc;
+        let d = mc.d_model;
+        let (hq, hkv, dh, qpk) = (mc.n_q_heads, mc.n_kv_heads, mc.d_head, mc.q_per_kv());
+        let embed = &self.w.flat[self.pidx.embed];
+        let (tq, tr) = (cache.qlen, cache.rlen());
+        let pos = cache.pos;
+        let rot = &cache.rot;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let DecodeScratch {
+            h, x, q, k, v, qrot, qperm, w4, w2, o, proj, ff, scores, logits, knew, vnew, qabs,
+        } = scratch;
+        debug_assert!(scores.len() >= tq + tr + 1, "scratch undersized for context");
+        h.copy_from_slice(&embed[token as usize * d..(token as usize + 1) * d]);
+        for l in 0..mc.n_layers {
+            let lw = self.pidx.layers[l];
+            let ctx = QuantLayerCtx { heads: &cache.heads[l], tq, tr };
+            rmsnorm(h, &self.w.flat[lw.ln1], mc.rmsnorm_eps, x);
+            matvec(x, &self.w.flat[lw.wq], d, hq * dh, q);
+            matvec(x, &self.w.flat[lw.wk], d, hkv * dh, k);
+            matvec(x, &self.w.flat[lw.wv], d, hkv * dh, v);
+            for hh in 0..hq {
+                self.rope.apply(&mut q[hh * dh..(hh + 1) * dh], pos);
+            }
+            for hh in 0..hkv {
+                self.rope.apply(&mut k[hh * dh..(hh + 1) * dh], pos);
+            }
+            let qa = &mut qabs[l];
+            qa.fill(0.0);
+            for hh in 0..hq {
+                for j in 0..dh {
+                    qa[(hh / qpk) * dh + j] += q[hh * dh + j].abs();
+                }
+            }
+            for a in qa.iter_mut() {
+                *a /= qpk as f32;
+            }
+            o.fill(0.0);
+            let s = &mut scores[..tq + tr + 1];
+            for hh in 0..hq {
+                let kvh = hh / qpk;
+                let head = &ctx.heads[kvh];
+                let qh = &q[hh * dh..(hh + 1) * dh];
+                if ctx.tq > 0 {
+                    // score assembly is channel-permutation-aware: align the
+                    // (rotated) query to tier order once, then stream the
+                    // packed tiers.
+                    crate::quant::rotation::rotate_vec(qh, rot, qrot);
+                    for (dst, &src) in qperm.iter_mut().zip(&head.idx) {
+                        *dst = qrot[src as usize];
+                    }
+                    head.scores_into(qperm, ctx.tq, scale, w4, w2, &mut s[..tq]);
+                }
+                let kres = head.res.keys();
+                for t in 0..ctx.tr {
+                    let kk = &kres[t * dh..(t + 1) * dh];
+                    s[tq + t] = qh.iter().zip(kk).map(|(a, b)| a * b).sum::<f32>() * scale;
+                }
+                let kk = &k[kvh * dh..(kvh + 1) * dh];
+                s[tq + tr] = qh.iter().zip(kk).map(|(a, b)| a * b).sum::<f32>() * scale;
+                softmax_inplace(s);
+                let oh = &mut o[hh * dh..(hh + 1) * dh];
+                if ctx.tq > 0 {
+                    head.values_accumulate_into(&s[..tq], oh);
+                }
+                let vres = head.res.values();
+                for t in 0..ctx.tr {
+                    let p = s[tq + t];
+                    let vv = &vres[t * dh..(t + 1) * dh];
+                    for j in 0..dh {
+                        oh[j] += p * vv[j];
+                    }
+                }
+                let p = s[tq + tr];
+                for j in 0..dh {
+                    oh[j] += p * v[kvh * dh + j];
+                }
+            }
+            matvec(o, &self.w.flat[lw.wo], hq * dh, d, proj);
+            for j in 0..d {
+                h[j] += proj[j];
+            }
+            rmsnorm(h, &self.w.flat[lw.ln2], mc.rmsnorm_eps, x);
+            matvec(x, &self.w.flat[lw.w1], d, mc.d_ff, ff);
+            for f in ff.iter_mut() {
+                *f = gelu(*f);
+            }
+            matvec(ff, &self.w.flat[lw.w2], mc.d_ff, d, proj);
+            for j in 0..d {
+                h[j] += proj[j];
+            }
+            knew[l].copy_from_slice(k);
+            vnew[l].copy_from_slice(v);
+        }
+        rmsnorm(h, &self.w.flat[self.pidx.ln_f], mc.rmsnorm_eps, x);
+        for (vtok, lg) in logits.iter_mut().enumerate() {
+            *lg = x.iter().zip(&embed[vtok * d..(vtok + 1) * d]).map(|(a, b)| a * b).sum();
+        }
     }
 }
 
@@ -460,6 +688,34 @@ mod tests {
         apply_rope(&mut x, 17, 10000.0);
         let n1: f32 = x.iter().map(|v| v * v).sum();
         assert!((n0 - n1).abs() / n0 < 1e-5);
+    }
+
+    #[test]
+    fn rope_table_matches_per_call_powf() {
+        let table = RopeTable::new(32, 10000.0);
+        for pos in [0usize, 1, 17, 500] {
+            let mut a: Vec<f32> = (0..32).map(|i| (i as f32 * 0.11).cos()).collect();
+            let mut b = a.clone();
+            apply_rope(&mut a, pos, 10000.0);
+            table.apply(&mut b, pos);
+            assert_eq!(a, b, "pos {pos}");
+        }
+    }
+
+    #[test]
+    fn blocked_matvec_handles_remainder_rows() {
+        // n not a multiple of the 4-row block, and n < 4
+        let mut rng = Pcg32::seeded(9);
+        for (n, m) in [(7usize, 5usize), (3, 4), (4, 3), (13, 8), (1, 2)] {
+            let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let w: Vec<f32> = (0..n * m).map(|_| rng.normal()).collect();
+            let mut got = vec![0f32; m];
+            matvec(&x, &w, n, m, &mut got);
+            for j in 0..m {
+                let want: f32 = (0..n).map(|i| x[i] * w[i * m + j]).sum();
+                assert!((got[j] - want).abs() < 1e-5, "n={n} m={m} j={j}");
+            }
+        }
     }
 
     #[test]

@@ -104,6 +104,56 @@ impl Weights {
     pub fn n_params(&self) -> usize {
         self.flat.iter().map(|v| v.len()).sum()
     }
+
+    /// Resolve a name to its `flat` position (for [`ParamIndex`]).
+    pub fn position(&self, name: &str) -> usize {
+        self.index[name]
+    }
+}
+
+/// One layer's tensor positions in `Weights::flat`.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerParams {
+    pub ln1: usize,
+    pub wq: usize,
+    pub wk: usize,
+    pub wv: usize,
+    pub wo: usize,
+    pub ln2: usize,
+    pub w1: usize,
+    pub w2: usize,
+}
+
+/// Name→position index resolved once per model: hot decode paths index
+/// `Weights::flat` directly instead of hashing a `format!`-ed name per
+/// tensor per step (which also allocates — the fused decode path must not).
+#[derive(Clone, Debug)]
+pub struct ParamIndex {
+    pub embed: usize,
+    pub ln_f: usize,
+    pub layers: Vec<LayerParams>,
+}
+
+impl ParamIndex {
+    pub fn new(w: &Weights, mc: &ModelConfig) -> ParamIndex {
+        let layers = (0..mc.n_layers)
+            .map(|l| LayerParams {
+                ln1: w.position(&format!("l{l}.ln1")),
+                wq: w.position(&format!("l{l}.wq")),
+                wk: w.position(&format!("l{l}.wk")),
+                wv: w.position(&format!("l{l}.wv")),
+                wo: w.position(&format!("l{l}.wo")),
+                ln2: w.position(&format!("l{l}.ln2")),
+                w1: w.position(&format!("l{l}.w1")),
+                w2: w.position(&format!("l{l}.w2")),
+            })
+            .collect();
+        ParamIndex {
+            embed: w.position("embed"),
+            ln_f: w.position("ln_f"),
+            layers,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -140,6 +190,20 @@ mod tests {
     fn rejects_wrong_size() {
         let mc = ModelConfig::default_build();
         assert!(Weights::from_bytes(&[0u8; 16], &mc).is_err());
+    }
+
+    #[test]
+    fn param_index_agrees_with_named_lookup() {
+        let mc = ModelConfig::default_build();
+        let w = Weights::random(&mc, 2);
+        let idx = ParamIndex::new(&w, &mc);
+        assert_eq!(w.flat[idx.embed].as_slice(), w.get("embed"));
+        assert_eq!(w.flat[idx.ln_f].as_slice(), w.get("ln_f"));
+        assert_eq!(idx.layers.len(), mc.n_layers);
+        for l in 0..mc.n_layers {
+            assert_eq!(w.flat[idx.layers[l].wq].as_slice(), w.get(&format!("l{l}.wq")));
+            assert_eq!(w.flat[idx.layers[l].w2].as_slice(), w.get(&format!("l{l}.w2")));
+        }
     }
 
     #[test]

@@ -54,6 +54,35 @@ pub fn decode(q: u8, scale: f32, zero: f32) -> f32 {
     q as f32 * scale + zero
 }
 
+/// Fused value accumulate over one packed u4 row: `out[j] += p * (c_j *
+/// s[j/group] + z[j/group])` straight from the packed bytes — the per-token
+/// half of the affine decomposition (quant::packing module docs). `s`/`z`
+/// are this token's per-channel-group scales/zeros, `out` is the attention
+/// output accumulator ([d]).
+pub fn accumulate_row_u4(packed: &[u8], p: f32, s: &[f32], z: &[f32], group: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), packed.len() * 2);
+    for (i, &b) in packed.iter().enumerate() {
+        let c = crate::quant::packing::unpack_u4_byte(b);
+        let j = 2 * i;
+        let (g0, g1) = (j / group, (j + 1) / group);
+        out[j] += p * (c[0] as f32 * s[g0] + z[g0]);
+        out[j + 1] += p * (c[1] as f32 * s[g1] + z[g1]);
+    }
+}
+
+/// Fused value accumulate over one packed u2 row (4 codes per byte).
+pub fn accumulate_row_u2(packed: &[u8], p: f32, s: &[f32], z: &[f32], group: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), packed.len() * 4);
+    for (i, &b) in packed.iter().enumerate() {
+        let c = crate::quant::packing::unpack_u2_byte(b);
+        let j = 4 * i;
+        for (k, &ck) in c.iter().enumerate() {
+            let g = (j + k) / group;
+            out[j + k] += p * (ck as f32 * s[g] + z[g]);
+        }
+    }
+}
+
 /// Per-channel key quantization over a [t, d] row-major window, groups of
 /// `group` tokens (KIVI layout). Returns (codes [t*d], scales [t/G, d],
 /// zeros [t/G, d]). `clip` = 1.0 disables clipping.
@@ -295,6 +324,49 @@ mod tests {
         let back = dequantize_key_channelwise(&codes, &s, &z, 64, 1, 32);
         for (a, b) in back.iter().zip(&xs) {
             assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn accumulate_rows_match_dequant_then_weight() {
+        use crate::quant::packing;
+        let mut rng = Pcg32::seeded(25);
+        for bits in [2usize, 4] {
+            let (t, d, g) = (16, 32, 8);
+            let v = randn(&mut rng, t * d, 1.0);
+            let (codes, s, z) = quantize_value_tokenwise(&v, t, d, g, bits);
+            let mut packed = Vec::new();
+            for tok in 0..t {
+                let row = &codes[tok * d..(tok + 1) * d];
+                if bits == 4 {
+                    packing::pack_u4(row, &mut packed);
+                } else {
+                    packing::pack_u2(row, &mut packed);
+                }
+            }
+            let vd = dequantize_value_tokenwise(&codes, &s, &z, t, d, g);
+            let probs: Vec<f32> = (0..t).map(|_| rng.f32()).collect();
+            let mut want = vec![0f32; d];
+            for tok in 0..t {
+                for ch in 0..d {
+                    want[ch] += probs[tok] * vd[tok * d + ch];
+                }
+            }
+            let mut got = vec![0f32; d];
+            let row_bytes = packing::packed_len(d, bits);
+            let ng = d / g;
+            for tok in 0..t {
+                let row = &packed[tok * row_bytes..(tok + 1) * row_bytes];
+                let (st, zt) = (&s[tok * ng..(tok + 1) * ng], &z[tok * ng..(tok + 1) * ng]);
+                if bits == 4 {
+                    accumulate_row_u4(row, probs[tok], st, zt, g, &mut got);
+                } else {
+                    accumulate_row_u2(row, probs[tok], st, zt, g, &mut got);
+                }
+            }
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4, "bits={bits}: {a} vs {b}");
+            }
         }
     }
 

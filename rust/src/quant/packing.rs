@@ -1,7 +1,37 @@
 //! u2/u4 bit packing — bit-for-bit identical to python/compile/kernels/quant.py.
 //!
-//! ABI: u4 packs channel pair (2j, 2j+1) into byte j with the *even* channel
+//! # Packed-code ABI
+//!
+//! u4 packs channel pair (2j, 2j+1) into byte j with the *even* channel
 //! in the low nibble; u2 packs quad (4j..4j+3) with channel 4j in bits 0..1.
+//! A packed *row* is one token's codes for one tier, so a tier of width `n`
+//! occupies exactly `packed_len(n, bits)` bytes per token and rows are
+//! byte-aligned iff `n % 2 == 0` (u4) / `n % 4 == 0` (u2). Those alignment
+//! invariants are `debug_assert!`ed here and in `kvcache::cache::HeadState`;
+//! every tier planner (`harness::pareto::tier_grid`, the compiled variants)
+//! only emits aligned widths.
+//!
+//! # Fused packed-code attention (the affine decomposition)
+//!
+//! The decode hot path never materializes dequantized f32 windows. For a
+//! scale-group `g` (G consecutive tokens sharing per-channel scale `s_j`
+//! and zero `z_j`), the query-key score decomposes as
+//!
+//! ```text
+//! q · dequant(c_t) = Σ_j q_j (c_{t,j} s_j + z_j)
+//!                  = Σ_j (q_j s_j) c_{t,j} + Σ_j q_j z_j
+//!                  =      w_g · c_t        +     ζ_g
+//! ```
+//!
+//! so the per-group folded weights `w_g = q ⊙ s_g` and zero-offset
+//! `ζ_g = q · z_g` are computed **once per group** and every token in the
+//! group costs only a code dot [`dot_packed_u4`]/[`dot_packed_u2`] straight
+//! off the packed bytes (LUT nibble/crumb extraction, no unpack buffer).
+//! The value side uses the mirrored per-token form
+//! `p_t · dequant(v_t) = Σ_j (p_t s_{t,jg}) c_{t,j} + p_t z_{t,jg}`
+//! (`quant::asym::accumulate_row_u4`/`_u2`). Consumers:
+//! `kvcache::cache::HeadState::{scores_into, values_accumulate_into}` and
+//! `model::reference::RefModel::decode_step_into`.
 
 /// Pack 4-bit codes (values 0..=15), `codes.len()` must be even.
 pub fn pack_u4(codes: &[u8], out: &mut Vec<u8>) {
@@ -36,8 +66,18 @@ pub fn unpack_u2(packed: &[u8], out: &mut Vec<u8>) {
 }
 
 /// Bytes needed to pack `n` codes at `bits` width (bits ∈ {2, 4, 8}).
+///
+/// Rounds *up*, and `debug_assert!`s that `n` actually fills whole bytes —
+/// an odd tier width would otherwise silently truncate and corrupt the
+/// adjacent token's row (packed rows are indexed as `t * packed_len(n, b)`).
 pub fn packed_len(n: usize, bits: usize) -> usize {
-    n * bits / 8
+    debug_assert!(matches!(bits, 2 | 4 | 8), "unsupported pack width {bits}");
+    let codes_per_byte = 8 / bits;
+    debug_assert!(
+        n % codes_per_byte == 0,
+        "{n} codes at {bits}-bit do not fill whole bytes ({codes_per_byte} codes/byte)"
+    );
+    n.div_ceil(codes_per_byte)
 }
 
 /// LUT-based unpack of a u2 byte into 4 codes — the hot-loop variant used
@@ -50,6 +90,35 @@ pub fn unpack_u2_byte(b: u8) -> [u8; 4] {
 #[inline]
 pub fn unpack_u4_byte(b: u8) -> [u8; 2] {
     [b & 0xF, (b >> 4) & 0xF]
+}
+
+/// Fused code dot: `Σ_j w[j] * code_j` over one packed u4 row, never
+/// materializing the unpacked codes (see the module docs' affine
+/// decomposition — `w` is the per-scale-group folded query `q ⊙ s`).
+#[inline]
+pub fn dot_packed_u4(packed: &[u8], w: &[f32]) -> f32 {
+    debug_assert_eq!(w.len(), packed.len() * 2);
+    let mut acc = 0.0f32;
+    for (&b, wp) in packed.iter().zip(w.chunks_exact(2)) {
+        let c = unpack_u4_byte(b);
+        acc += wp[0] * c[0] as f32 + wp[1] * c[1] as f32;
+    }
+    acc
+}
+
+/// Fused code dot over one packed u2 row (4 codes per byte).
+#[inline]
+pub fn dot_packed_u2(packed: &[u8], w: &[f32]) -> f32 {
+    debug_assert_eq!(w.len(), packed.len() * 4);
+    let mut acc = 0.0f32;
+    for (&b, wq) in packed.iter().zip(w.chunks_exact(4)) {
+        let c = unpack_u2_byte(b);
+        acc += wq[0] * c[0] as f32
+            + wq[1] * c[1] as f32
+            + wq[2] * c[2] as f32
+            + wq[3] * c[3] as f32;
+    }
+    acc
 }
 
 #[cfg(test)]
@@ -99,6 +168,43 @@ mod tests {
         let mut p = Vec::new();
         pack_u2(&[1, 2, 3, 0], &mut p);
         assert_eq!(p, vec![1 | (2 << 2) | (3 << 4)]);
+    }
+
+    #[test]
+    fn dot_packed_matches_unpacked_dot() {
+        let mut rng = Pcg32::seeded(13);
+        for _ in 0..100 {
+            let n4 = 2 * (1 + rng.below(16) as usize);
+            let codes4: Vec<u8> = (0..n4).map(|_| rng.below(16) as u8).collect();
+            let w4: Vec<f32> = (0..n4).map(|_| rng.normal()).collect();
+            let mut p4 = Vec::new();
+            pack_u4(&codes4, &mut p4);
+            let want4: f32 = codes4.iter().zip(&w4).map(|(&c, &w)| w * c as f32).sum();
+            assert!((dot_packed_u4(&p4, &w4) - want4).abs() < 1e-4 * (1.0 + want4.abs()));
+
+            let n2 = 4 * (1 + rng.below(8) as usize);
+            let codes2: Vec<u8> = (0..n2).map(|_| rng.below(4) as u8).collect();
+            let w2: Vec<f32> = (0..n2).map(|_| rng.normal()).collect();
+            let mut p2 = Vec::new();
+            pack_u2(&codes2, &mut p2);
+            let want2: f32 = codes2.iter().zip(&w2).map(|(&c, &w)| w * c as f32).sum();
+            assert!((dot_packed_u2(&p2, &w2) - want2).abs() < 1e-4 * (1.0 + want2.abs()));
+        }
+    }
+
+    #[test]
+    fn packed_len_rounds_up_on_aligned_widths() {
+        assert_eq!(packed_len(32, 2), 8);
+        assert_eq!(packed_len(32, 4), 16);
+        assert_eq!(packed_len(8, 8), 8);
+        assert_eq!(packed_len(0, 2), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn packed_len_rejects_misaligned_widths() {
+        let _ = packed_len(3, 2); // 3 crumbs don't fill a byte
     }
 
     #[test]
