@@ -10,7 +10,7 @@
 
 use anyhow::{bail, Result};
 use mixkvq::coordinator::engine::Engine;
-use mixkvq::coordinator::events::{by_request, validate_stream, RequestStatus};
+use mixkvq::coordinator::events::{by_request, validate_stream};
 use mixkvq::coordinator::metrics::breakdown;
 use mixkvq::coordinator::router::{Server, ServerConfig};
 use mixkvq::coordinator::session::Request;
@@ -82,12 +82,12 @@ fn main() -> Result<()> {
         .into_iter()
         .map(|r| server.submit(r))
         .collect::<Result<_>>()?;
-    // first tick admits both tenants — verify they run concurrently
+    // first tick admits both tenants — verify they run concurrently.
+    // (Count via the batcher, not poll: the first poll observing a
+    // terminal request consumes its full record — poll is not a passive
+    // status probe any more.)
     server.tick()?;
-    let live = ids
-        .iter()
-        .filter(|&&id| matches!(server.poll(id), RequestStatus::Running { .. }))
-        .count();
+    let live = server.batcher.live();
     println!("  after tick 1: {live} sessions live concurrently");
     while server.has_work() {
         server.tick()?;

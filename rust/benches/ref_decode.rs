@@ -1,13 +1,19 @@
 //! `cargo bench --bench ref_decode` — reference-path decode: fused
-//! packed-code attention vs the legacy dequantize-then-attend path.
+//! packed-code attention vs the legacy dequantize-then-attend path, plus
+//! the paged-pool data points (decode streamed from a shared prewarmed
+//! `KvPool` vs a private pool) and a peak-resident-bytes trajectory.
 //!
 //! Unlike the engine benches this needs **no artifacts** (random weights,
 //! build-default shapes), so it always runs — on CI and on fresh checkouts —
-//! and writes `BENCH_ref_decode.json` so the perf trajectory has data
-//! points. Two context lengths; the fused path must stay ≥3× faster at
-//! qlen ≥ 256 (ISSUE 2 acceptance bar).
+//! and writes `BENCH_ref_decode.json` (throughput) and
+//! `BENCH_paged_decode.json` (paged overhead + memory) so the perf
+//! trajectory has data points. Two context lengths; the fused path must
+//! stay ≥3× faster than legacy at qlen ≥ 256 (ISSUE 2 acceptance bar), and
+//! the shared-pool path must not meaningfully lag the private one (pages
+//! change provenance, not access cost).
 
 use mixkvq::harness::refdriver::RefDriver;
+use mixkvq::kvcache::pool::KvPool;
 use mixkvq::model::config::Meta;
 use mixkvq::model::weights::Weights;
 use mixkvq::quant::methods::Method;
@@ -25,6 +31,7 @@ fn main() {
     let mut rng = Pcg32::seeded(11);
     let mut results = Vec::new();
     let mut entries = Vec::new();
+    let mut paged_entries = Vec::new();
 
     for qlen in [256usize, 512] {
         let driver = RefDriver::new(
@@ -41,19 +48,40 @@ fn main() {
         let (cache, _) = driver.prefill(&prompt).unwrap();
         assert_eq!(cache.qlen, qlen, "prefill split drifted");
 
+        // the same request served from a shared, bounded, prewarmed pool —
+        // the serving storage configuration
+        let pages = cache.leased_pages() + cache.pages_per_flush();
+        let pool = KvPool::for_specs(spec.iter(), mc.d_head, cc.group, Some(pages));
+        pool.prewarm(pages);
+        let (pcache, _) = driver.prefill_pooled(&pool, &prompt).unwrap();
+        assert_eq!(pcache.qlen, qlen);
+
         let fused = bench(&format!("fused packed-code decode qlen={qlen}"), 300, 2500.0, || {
             std::hint::black_box(driver.decode_logits_fused(&cache, 17));
+        });
+        let paged = bench(&format!("fused decode, shared pool qlen={qlen}"), 300, 2500.0, || {
+            std::hint::black_box(driver.decode_logits_fused(&pcache, 17));
         });
         let legacy = bench(&format!("legacy dequant decode    qlen={qlen}"), 300, 2500.0, || {
             std::hint::black_box(driver.decode_logits_legacy(&cache, 17));
         });
         let speedup = legacy.median_ms / fused.median_ms;
+        // memory trajectory: what this request actually holds (deployment
+        // bytes) vs what worst-case preallocation would have pinned
+        let peak_resident = pool.stats().high_water * pool.page_deploy_bytes();
+        let worst_case = mixkvq::kvcache::accountant::MemoryAccountant::worst_case_request_bytes(
+            &mc, &cc, &spec,
+        );
         println!(
-            "qlen={qlen}: fused {:.3} ms  legacy {:.3} ms  speedup {:.2}x{}",
+            "qlen={qlen}: fused {:.3} ms  paged {:.3} ms  legacy {:.3} ms  speedup {:.2}x{}",
             fused.median_ms,
+            paged.median_ms,
             legacy.median_ms,
             speedup,
             if speedup < 3.0 { "  (below the 3x bar!)" } else { "" }
+        );
+        println!(
+            "           peak resident {peak_resident} B (pages) vs {worst_case} B worst-case prealloc"
         );
         entries.push(json::obj(vec![
             ("qlen", json::num(qlen as f64)),
@@ -61,7 +89,17 @@ fn main() {
             ("legacy_ms", json::num(legacy.median_ms)),
             ("speedup", json::num(speedup)),
         ]));
+        paged_entries.push(json::obj(vec![
+            ("qlen", json::num(qlen as f64)),
+            ("paged_fused_ms", json::num(paged.median_ms)),
+            ("private_fused_ms", json::num(fused.median_ms)),
+            ("paged_overhead_pct", json::num(100.0 * (paged.median_ms / fused.median_ms - 1.0))),
+            ("peak_resident_bytes", json::num(peak_resident as f64)),
+            ("worst_case_prealloc_bytes", json::num(worst_case as f64)),
+            ("pages_leased", json::num(pcache.leased_pages() as f64)),
+        ]));
         results.push(fused);
+        results.push(paged);
         results.push(legacy);
     }
 
@@ -77,4 +115,13 @@ fn main() {
     ]);
     std::fs::write("BENCH_ref_decode.json", report.print() + "\n").expect("write bench json");
     println!("wrote BENCH_ref_decode.json");
+
+    let paged_report = json::obj(vec![
+        ("bench", json::s("paged_decode")),
+        ("variant", json::s("mix30")),
+        ("entries", Json::Arr(paged_entries)),
+    ]);
+    std::fs::write("BENCH_paged_decode.json", paged_report.print() + "\n")
+        .expect("write paged bench json");
+    println!("wrote BENCH_paged_decode.json");
 }

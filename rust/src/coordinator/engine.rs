@@ -18,7 +18,8 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::kvcache::accountant::MemoryAccountant;
-use crate::kvcache::cache::RequestCache;
+use crate::kvcache::cache::{PageField, RequestCache};
+use crate::kvcache::pool::KvPool;
 use crate::model::config::{Meta, VariantSpec};
 use crate::model::weights::Weights;
 use crate::quant::methods::{Method, MethodSpec};
@@ -79,6 +80,10 @@ pub struct Engine {
     /// the full K/V window gathers — are amortized; small per-step clones
     /// of the variant spec/rotation remain and are noise by comparison).
     arg_pool: HashMap<String, Vec<Owned>>,
+    /// Shared KV page pool caches lease from (`Server::new` installs the
+    /// bounded serving pool); `None` gives each cache a private unbounded
+    /// pool — standalone engine use, benches, tests.
+    kv_pool: Option<KvPool>,
 }
 
 enum Owned {
@@ -166,7 +171,68 @@ impl Engine {
             rot,
             weight_bufs,
             arg_pool: HashMap::new(),
+            kv_pool: None,
         })
+    }
+
+    /// Install the shared KV page pool every admitted request leases from.
+    pub fn set_kv_pool(&mut self, pool: KvPool) {
+        self.kv_pool = Some(pool);
+    }
+
+    pub fn kv_pool(&self) -> Option<&KvPool> {
+        self.kv_pool.as_ref()
+    }
+
+    /// Build a bounded page pool for `budget_bytes`, sized so a page fits
+    /// the *largest* layout any known variant needs (heterogeneous tenants
+    /// share one free list; pages are charged at the worst deployment
+    /// cost). The off-pool residual buffers every admitted request holds
+    /// (one full-capacity X_R per decode slot, worst case) are carved out
+    /// of the byte budget FIRST, so pages + residuals together stay inside
+    /// it — floored at half the budget so tiny test budgets still get a
+    /// usable pool. Pre-warmed so steady-state leasing never allocates.
+    pub fn build_shared_pool(&self, budget_bytes: usize) -> KvPool {
+        let cc = &self.meta.cache;
+        let mc = &self.meta.model;
+        let d = mc.d_head;
+        let page_bytes = self
+            .meta
+            .variants
+            .iter()
+            .flat_map(|v| v.layers.iter())
+            .map(|&s| crate::kvcache::pool::PageLayout::new(s, d, cc.group).deploy_bytes())
+            .max()
+            .unwrap_or(1)
+            .max(1);
+        let resid_per_request = (crate::kvcache::accountant::fp16_bytes_per_token(d)
+            * cc.residual as f64)
+            .ceil() as usize
+            * mc.n_layers
+            * mc.n_kv_heads;
+        let page_budget = budget_bytes
+            .saturating_sub(cc.decode_batch * resid_per_request)
+            .max(budget_bytes / 2);
+        let max_pages = (page_budget / page_bytes).max(1);
+        let specs = self.meta.variants.iter().flat_map(|v| v.layers.iter());
+        let pool = KvPool::for_specs(specs, d, cc.group, Some(max_pages));
+        pool.prewarm(max_pages);
+        pool
+    }
+
+    /// Exact pages a `prompt_len`-token prompt's prefill leases under
+    /// `method` — the scheduler's occupancy-based admission unit.
+    pub fn prefill_pages_for(&self, prompt_len: usize, method: &Method) -> Result<usize> {
+        let spec = self.meta.variant(&method.variant)?;
+        let cc = &self.meta.cache;
+        let (qt, _) =
+            RequestCache::prefill_split(prompt_len, self.r_limit, cc.group, cc.capacity);
+        Ok(crate::kvcache::pool::pages_for_tokens(
+            qt,
+            cc.group,
+            spec.layers.len(),
+            self.meta.model.n_kv_heads,
+        ))
     }
 
     pub fn artifacts_dir(&self) -> &Path {
@@ -214,13 +280,29 @@ impl Engine {
     }
 
     pub fn new_cache(&self) -> RequestCache {
-        RequestCache::new(
-            &self.meta.model,
-            &self.meta.cache,
-            &self.variant.layers,
-            self.method.clone(),
-            self.r_limit,
-        )
+        self.cache_for(&self.variant.layers, self.method.clone())
+    }
+
+    /// Cache under the engine's shared pool when one is installed, else a
+    /// private unbounded pool.
+    fn cache_for(&self, specs: &[crate::quant::window::TierSpec], method: Method) -> RequestCache {
+        match &self.kv_pool {
+            Some(pool) => RequestCache::new_in(
+                pool,
+                &self.meta.model,
+                &self.meta.cache,
+                specs,
+                method,
+                self.r_limit,
+            ),
+            None => RequestCache::new(
+                &self.meta.model,
+                &self.meta.cache,
+                specs,
+                method,
+                self.r_limit,
+            ),
+        }
     }
 
     /// Run prompt prefill through the bucketed prefill graph.
@@ -390,13 +472,7 @@ impl Engine {
     /// shapes, ordering, clipping, and rotation.
     pub fn admit_prefill_with(&mut self, pre: &PrefillData, method: &Method) -> Result<RequestCache> {
         let spec = self.meta.variant(&method.variant)?.clone();
-        let mut cache = RequestCache::new(
-            &self.meta.model,
-            &self.meta.cache,
-            &spec.layers,
-            method.clone(),
-            self.r_limit,
-        );
+        let mut cache = self.cache_for(&spec.layers, method.clone());
         let t0 = Instant::now();
         cache.load_prefill(&pre.k, &pre.v, &pre.qabs, pre.t)?;
         self.timers.quantize_ns += t0.elapsed().as_nanos() as u64;
@@ -476,7 +552,10 @@ impl Engine {
         let per_h = per_b / hkv;
         debug_assert_eq!(per_h * hkv * b, elems);
         // Zero (idle slots must not leak the previous step's data), then
-        // gather each live slot's head buffers into its batch lane.
+        // gather each live slot's head buffers into its batch lane. Tier
+        // fields stream the head's *page table* into the lane
+        // (HeadState::copy_field_*): only leased pages are copied, the
+        // lane's tail past them stays zero — the HLO masks by qlen anyway.
         macro_rules! gather {
             ($buf:expr, $get:expr) => {{
                 let buf = $buf;
@@ -495,6 +574,18 @@ impl Engine {
             }};
         }
         use crate::kvcache::cache::HeadState;
+        macro_rules! gather_pages_f32 {
+            ($pf:expr) => {
+                gather!(owned.f32_mut()?, |hd: &HeadState, dst: &mut [f32]| hd
+                    .copy_field_f32($pf, dst))
+            };
+        }
+        macro_rules! gather_pages_u8 {
+            ($pf:expr) => {
+                gather!(owned.u8_mut()?, |hd: &HeadState, dst: &mut [u8]| hd
+                    .copy_field_u8($pf, dst))
+            };
+        }
         let spec_l = vspec.layers[l];
         match field {
             "idx16" => gather!(owned.i32_mut()?, |hd: &HeadState, dst: &mut [i32]| dst
@@ -503,28 +594,17 @@ impl Engine {
                 .copy_from_slice(&hd.idx[spec_l.n16..spec_l.n16 + spec_l.n4])),
             "idx2" => gather!(owned.i32_mut()?, |hd: &HeadState, dst: &mut [i32]| dst
                 .copy_from_slice(&hd.idx[spec_l.n16 + spec_l.n4..])),
-            "k16" => gather!(owned.f32_mut()?, |hd: &HeadState, dst: &mut [f32]| dst
-                .copy_from_slice(&hd.k16)),
-            "k4p" => gather!(owned.u8_mut()?, |hd: &HeadState, dst: &mut [u8]| dst
-                .copy_from_slice(&hd.k4p)),
-            "k4s" => gather!(owned.f32_mut()?, |hd: &HeadState, dst: &mut [f32]| dst
-                .copy_from_slice(&hd.k4s)),
-            "k4z" => gather!(owned.f32_mut()?, |hd: &HeadState, dst: &mut [f32]| dst
-                .copy_from_slice(&hd.k4z)),
-            "k2p" => gather!(owned.u8_mut()?, |hd: &HeadState, dst: &mut [u8]| dst
-                .copy_from_slice(&hd.k2p)),
-            "k2s" => gather!(owned.f32_mut()?, |hd: &HeadState, dst: &mut [f32]| dst
-                .copy_from_slice(&hd.k2s)),
-            "k2z" => gather!(owned.f32_mut()?, |hd: &HeadState, dst: &mut [f32]| dst
-                .copy_from_slice(&hd.k2z)),
-            "vp" => gather!(owned.u8_mut()?, |hd: &HeadState, dst: &mut [u8]| dst
-                .copy_from_slice(&hd.vp)),
-            "vs" => gather!(owned.f32_mut()?, |hd: &HeadState, dst: &mut [f32]| dst
-                .copy_from_slice(&hd.vs)),
-            "vz" => gather!(owned.f32_mut()?, |hd: &HeadState, dst: &mut [f32]| dst
-                .copy_from_slice(&hd.vz)),
-            "vfull" => gather!(owned.f32_mut()?, |hd: &HeadState, dst: &mut [f32]| dst
-                .copy_from_slice(&hd.vfull)),
+            "k16" => gather_pages_f32!(PageField::K16),
+            "k4p" => gather_pages_u8!(PageField::K4p),
+            "k4s" => gather_pages_f32!(PageField::K4s),
+            "k4z" => gather_pages_f32!(PageField::K4z),
+            "k2p" => gather_pages_u8!(PageField::K2p),
+            "k2s" => gather_pages_f32!(PageField::K2s),
+            "k2z" => gather_pages_f32!(PageField::K2z),
+            "vp" => gather_pages_u8!(PageField::Vp),
+            "vs" => gather_pages_f32!(PageField::Vs),
+            "vz" => gather_pages_f32!(PageField::Vz),
+            "vfull" => gather_pages_f32!(PageField::Vfull),
             "kres" => gather!(owned.f32_mut()?, |hd: &HeadState, dst: &mut [f32]| {
                 let n = hd.res.len * dh;
                 dst[..n].copy_from_slice(hd.res.keys());

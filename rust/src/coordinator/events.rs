@@ -176,8 +176,13 @@ pub enum RequestStatus {
     Queued,
     /// Live in a decode slot with `generated` tokens so far.
     Running { generated: usize },
-    /// Terminal, with the finish reason and the generated tokens.
+    /// Terminal, with the finish reason and the generated tokens. Returned
+    /// by the FIRST poll that observes the terminal state; the server then
+    /// evicts the full record and later polls see [`RequestStatus::Retired`].
     Finished { reason: FinishReason, tokens: Vec<i32> },
+    /// Terminal and already observed once: only the reason and the token
+    /// count remain (the full record was evicted — `Server::poll` docs).
+    Retired { reason: FinishReason, n_tokens: usize },
 }
 
 #[cfg(test)]

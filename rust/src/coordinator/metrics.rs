@@ -28,6 +28,22 @@ pub struct Metrics {
     /// Admission attempts deferred because the memory budget was saturated
     /// (the request stays queued and retries next tick).
     pub admission_stalls: u64,
+    // --- paged KV pool gauges (sampled from KvPool each tick) ------------
+    /// Pages currently leased across all live requests.
+    pub pool_pages_leased: usize,
+    /// Pool capacity in pages (0 when no shared pool is installed).
+    pub pool_pages_total: usize,
+    /// Most pages ever simultaneously leased.
+    pub pool_high_water: usize,
+    /// Lease requests (or flush pre-checks) the pool could not satisfy.
+    pub pool_lease_failures: u64,
+    /// Decode slots parked because their due flush could not lease pages.
+    pub pool_parks: u64,
+    /// Parked slots that resumed decoding after pages freed up.
+    pub pool_resumes: u64,
+    /// Parked sessions force-finished (CacheFull) to break a pool deadlock
+    /// where every live slot was parked and nothing could ever free pages.
+    pub pool_preemptions: u64,
 }
 
 impl Metrics {
@@ -125,6 +141,14 @@ impl Metrics {
         (percentile(&xs, 50.0), percentile(&xs, 95.0))
     }
 
+    /// Record the current pool counters (called once per scheduling tick).
+    pub fn observe_pool(&mut self, stats: &crate::kvcache::pool::PoolStats) {
+        self.pool_pages_leased = stats.leased;
+        self.pool_pages_total = stats.max_pages.unwrap_or(0);
+        self.pool_high_water = stats.high_water;
+        self.pool_lease_failures = stats.lease_failures;
+    }
+
     pub fn summary(&self) -> String {
         let (ttft50, ttft95) = self.ttft_ms();
         let (lat50, lat95) = self.latency_ms();
@@ -133,7 +157,8 @@ impl Metrics {
             "requests={} gen_tokens={} wall={:.2}s throughput={:.1} tok/s \
              occupancy={:.2} max_concurrent={} peak_kv_mem={:.2} MB \
              ttft p50/p95={:.0}/{:.0} ms latency p50/p95={:.0}/{:.0} ms \
-             queue p50/p95={:.0}/{:.0} ms rejected={} cancelled={} stalls={}",
+             queue p50/p95={:.0}/{:.0} ms rejected={} cancelled={} stalls={} \
+             pool pages={}/{} high_water={} lease_fail={} parks={} resumes={} preempt={}",
             self.completed.len(),
             self.total_generated(),
             self.wall_s(),
@@ -150,6 +175,13 @@ impl Metrics {
             self.rejected,
             self.cancelled,
             self.admission_stalls,
+            self.pool_pages_leased,
+            self.pool_pages_total,
+            self.pool_high_water,
+            self.pool_lease_failures,
+            self.pool_parks,
+            self.pool_resumes,
+            self.pool_preemptions,
         )
     }
 }

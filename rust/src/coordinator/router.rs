@@ -1,16 +1,27 @@
 //! The serving front door: a session-oriented, non-blocking frontend over
-//! engine + batcher + scheduler.
+//! engine + batcher + scheduler, storing every live cache in a shared
+//! **paged KV pool** (kvcache::pool).
 //!
 //! * [`Server::submit`] accepts a request (with an optional per-request
 //!   [`MethodSpec`](crate::quant::methods::MethodSpec) override) and returns
 //!   its `RequestId` immediately;
 //! * [`Server::tick`] runs one scheduling cycle: admissions (prefill into
-//!   free slots, memory permitting) then one decode step per live variant
-//!   group;
+//!   free slots — **occupancy-based**: a request is admitted when the pool
+//!   can cover its actual prefill pages and keep a reserve watermark free,
+//!   so concurrency is bounded by what requests *hold*, not their worst
+//!   case) then one decode step per live variant group. A live slot whose
+//!   due quantization flush cannot lease pages is **parked** for the tick
+//!   (its tokens ride in the residual meanwhile) and resumes when pages
+//!   free up; if every live slot is parked the largest page-holder is shed
+//!   as CacheFull so the server never deadlocks;
 //! * [`Server::poll`] / [`Server::cancel`] / [`Server::drain_events`]
 //!   observe and steer individual requests — every request emits a
 //!   well-formed `Queued → Admitted → FirstToken → Token* → Finished`
-//!   stream (see `coordinator::events`);
+//!   stream (see `coordinator::events`). The first poll that observes a
+//!   terminal request takes its full record; the server then keeps only an
+//!   id → (reason, token-count) stub, so a long-lived frontend does not
+//!   retain every completed token stream twice (late polls answer
+//!   [`RequestStatus::Retired`]);
 //! * [`Server::run`] is a thin compatibility shim (submit all → tick until
 //!   drained) so offline batch drivers keep working token-for-token.
 //!
@@ -31,6 +42,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::{Scheduler, SchedulerPolicy};
 use crate::coordinator::session::{Completed, FinishReason, Request, RequestId, Session};
 use crate::kvcache::accountant::MemoryAccountant;
+use crate::kvcache::pool::KvPool;
 use crate::model::sampler;
 use crate::model::tokenizer;
 use crate::runtime::registry::pick_bucket;
@@ -40,6 +52,10 @@ pub struct ServerConfig {
     pub memory_budget_bytes: usize,
     pub max_prefills_per_cycle: usize,
     pub seed: u64,
+    /// Pages the pool keeps free as decode headroom (admission watermark).
+    /// `None` derives a default: one flush worth per decode slot, capped at
+    /// a quarter of the pool.
+    pub reserve_pages: Option<usize>,
 }
 
 impl Default for ServerConfig {
@@ -48,8 +64,20 @@ impl Default for ServerConfig {
             memory_budget_bytes: 64 << 20,
             max_prefills_per_cycle: 2,
             seed: 0,
+            reserve_pages: None,
         }
     }
+}
+
+/// Terminal-record slot in `Server::finished`: never a second copy of the
+/// `Completed` (which lives in `metrics.completed`), and demoted to a stub
+/// once a poll has observed it.
+#[derive(Clone, Copy, Debug)]
+enum Terminal {
+    /// Index into `metrics.completed`; no poll has observed it yet.
+    Pending(usize),
+    /// Observed: only reason + token count remain for late polls.
+    Retired { reason: FinishReason, n_tokens: usize },
 }
 
 pub struct Server {
@@ -58,44 +86,62 @@ pub struct Server {
     pub scheduler: Scheduler,
     pub metrics: Metrics,
     pub events: EventLog,
+    /// The shared page pool every admitted request leases from.
+    pub pool: KvPool,
     rng: Pcg32,
     /// Submit timestamps for queued/live requests (queue-wait accounting).
     submit_times: HashMap<RequestId, Instant>,
-    /// Terminal records by id (the `poll` fast path).
-    finished: HashMap<RequestId, Completed>,
+    /// Terminal records by id (the `poll` fast path) — see [`Terminal`].
+    finished: HashMap<RequestId, Terminal>,
 }
 
 impl Server {
-    pub fn new(engine: Engine, cfg: ServerConfig) -> Server {
+    pub fn new(mut engine: Engine, cfg: ServerConfig) -> Server {
         let per_request = MemoryAccountant::worst_case_request_bytes(
             &engine.meta.model,
             &engine.meta.cache,
             &engine.variant.layers,
         );
         let batch = engine.meta.cache.decode_batch;
+        let pool = engine.build_shared_pool(cfg.memory_budget_bytes);
+        engine.set_kv_pool(pool.clone());
+        let max_pages = pool.max_pages().unwrap_or(usize::MAX);
+        let flush_pages = crate::kvcache::pool::pages_for_tokens(
+            engine.r_limit,
+            engine.meta.cache.group,
+            engine.meta.model.n_layers,
+            engine.meta.model.n_kv_heads,
+        );
+        let reserve = cfg
+            .reserve_pages
+            .unwrap_or_else(|| (batch * flush_pages.max(1)).min(max_pages / 4));
         Server {
-            engine,
             batcher: Batcher::new(batch),
-            scheduler: Scheduler::new(
+            scheduler: Scheduler::with_pool(
                 SchedulerPolicy {
                     max_prefills_per_cycle: cfg.max_prefills_per_cycle,
                     per_request_bytes: per_request,
+                    reserve_pages: reserve,
                 },
                 cfg.memory_budget_bytes,
+                pool.clone(),
             ),
             metrics: Metrics::default(),
             events: EventLog::default(),
+            pool,
             rng: Pcg32::seeded(cfg.seed),
             submit_times: HashMap::new(),
             finished: HashMap::new(),
+            engine,
         }
     }
 
     /// Accept a request into the wait queue and return its id immediately.
     /// Rejects up front (with a `Finished{Rejected}` event and a terminal
     /// record) when the prompt exceeds every prefill bucket, the requested
-    /// method's decode variant is unknown, or the method's worst-case cache
-    /// footprint exceeds the server's whole memory budget (such a request
+    /// method's decode variant is unknown, the method's worst-case cache
+    /// footprint exceeds the server's whole memory budget, or its prefill
+    /// pages can never fit under the admission watermark (such a request
     /// could never be admitted and would otherwise stall the queue head
     /// forever).
     ///
@@ -121,7 +167,12 @@ impl Server {
             .worst_case_bytes_for(&method)
             .map(|b| b <= self.scheduler.accountant.budget_bytes)
             .unwrap_or(false); // Err = unknown decode variant
-        if !fits || !affordable {
+        let admissible = self
+            .engine
+            .prefill_pages_for(req.prompt.len(), &method)
+            .map(|n| self.scheduler.pages_admissible(n))
+            .unwrap_or(false);
+        if !fits || !affordable || !admissible {
             self.metrics.rejected += 1;
             self.finalize_unadmitted(id, req.prompt.len(), FinishReason::Rejected);
             return Ok(id);
@@ -135,10 +186,27 @@ impl Server {
         self.batcher.has_work()
     }
 
-    /// Status of one request (terminal records persist across ticks).
-    pub fn poll(&self, id: RequestId) -> RequestStatus {
-        if let Some(c) = self.finished.get(&id) {
-            return RequestStatus::Finished { reason: c.reason, tokens: c.tokens.clone() };
+    /// Status of one request. The FIRST poll observing a terminal request
+    /// returns `Finished` with the full token stream and evicts the record
+    /// down to a stub; later polls return `Retired` with the reason and
+    /// token count — a long-lived server does not keep every token stream
+    /// in its poll index forever.
+    pub fn poll(&mut self, id: RequestId) -> RequestStatus {
+        if let Some(&t) = self.finished.get(&id) {
+            return match t {
+                Terminal::Pending(idx) => {
+                    let c = &self.metrics.completed[idx];
+                    let status =
+                        RequestStatus::Finished { reason: c.reason, tokens: c.tokens.clone() };
+                    let stub =
+                        Terminal::Retired { reason: c.reason, n_tokens: c.tokens.len() };
+                    self.finished.insert(id, stub);
+                    status
+                }
+                Terminal::Retired { reason, n_tokens } => {
+                    RequestStatus::Retired { reason, n_tokens }
+                }
+            };
         }
         if self.batcher.waiting.iter().any(|r| r.id == id) {
             return RequestStatus::Queued;
@@ -150,7 +218,8 @@ impl Server {
     }
 
     /// Cancel a queued or live request. Returns false when the id is
-    /// unknown or already terminal.
+    /// unknown or already terminal. A live cancel retires the session this
+    /// tick — its cache drops and every leased page returns to the pool.
     pub fn cancel(&mut self, id: RequestId) -> bool {
         if let Some(req) = self.batcher.remove_waiting(id) {
             self.metrics.cancelled += 1;
@@ -201,7 +270,7 @@ impl Server {
     }
 
     /// One scheduling cycle: admissions (prefill) then one decode step per
-    /// live variant group.
+    /// live variant group; pool occupancy gauges are sampled at the end.
     pub fn tick(&mut self) -> Result<()> {
         if self.metrics.t_start.is_none() {
             self.metrics.start();
@@ -212,12 +281,24 @@ impl Server {
         for sess in self.batcher.reap() {
             self.finalize(sess);
         }
+        // --- occupancy gauges: leased pages + live off-pool residuals ---
+        let residuals: usize = self
+            .batcher
+            .slots
+            .iter()
+            .flatten()
+            .map(|s| s.cache.residual_bytes())
+            .sum();
+        self.scheduler.observe_occupancy(residuals);
+        self.metrics.observe_pool(&self.pool.stats());
         Ok(())
     }
 
-    /// Admit up to the scheduler quota of waiting requests into free slots,
-    /// resolving each request's method, reserving its variant's worst-case
-    /// bytes, and prefilling through the shared bucket graphs.
+    /// Admit up to the scheduler quota of waiting requests into free slots.
+    /// Admission is occupancy-based: the request's *exact* prefill page
+    /// count (not its worst case) must fit in the pool above the reserve
+    /// watermark. Short prompts lease few (or zero) pages, so many more of
+    /// them run concurrently than worst-case reservation ever allowed.
     fn admit(&mut self) -> Result<()> {
         let quota = self.scheduler.admission_quota(
             self.batcher.slots.len() - self.batcher.live(),
@@ -228,20 +309,21 @@ impl Server {
                 break;
             };
             let method = self.engine.resolve_method(req.method);
-            // variant validated at submit; worst-case bytes are per-variant
-            let bytes = self.engine.worst_case_bytes_for(&method)?;
-            if !self.scheduler.try_admit_bytes(bytes) {
-                // memory budget saturated — requeue at the head (FIFO) and
+            // variant validated at submit
+            let needed = self.engine.prefill_pages_for(req.prompt.len(), &method)?;
+            if !self.scheduler.try_admit_pages(needed) {
+                // pool below the watermark — requeue at the head (FIFO) and
                 // stop admitting this cycle
                 self.metrics.admission_stalls += 1;
                 self.batcher.waiting.push_front(req);
                 break;
             }
-            // the fallible admission path: if it errors after the memory
-            // reservation (e.g. a decode artifact file missing for this
-            // method), release the bytes and retire just this request with
-            // a terminal Rejected record — one bad tenant must not abort
-            // the tick and strand every other queued/live request
+            // the fallible admission path: if it errors (e.g. a decode
+            // artifact file missing for this method), retire just this
+            // request with a terminal Rejected record — one bad tenant must
+            // not abort the tick and strand every other queued/live
+            // request. A partially-built cache drops here and its leases
+            // return to the pool automatically.
             let prepared = (|| {
                 self.engine.ensure_method(&method)?;
                 let pre = self.engine.prefill(&req.prompt)?;
@@ -251,7 +333,6 @@ impl Server {
             let (pre, mut cache) = match prepared {
                 Ok(x) => x,
                 Err(e) => {
-                    self.scheduler.release_bytes(bytes);
                     self.metrics.rejected += 1;
                     eprintln!("mixkvq: admission of request {} failed: {e:#}", req.id);
                     self.finalize_unadmitted(req.id, req.prompt.len(), FinishReason::Rejected);
@@ -264,7 +345,6 @@ impl Server {
             let max_new = req.max_new_tokens;
             let t_submit = self.submit_times.get(&id).copied().unwrap_or_else(Instant::now);
             let mut sess = Session::new(req, cache, first, t_submit);
-            sess.bytes_reserved = bytes;
             self.events.admitted(id, &method.name);
             self.events.first_token(id, first);
             // prompt-only edge case: the prefill sample already finishes the
@@ -285,25 +365,87 @@ impl Server {
         Ok(())
     }
 
-    /// One decode step over each live (variant, rotation) sub-batch.
+    /// One decode step over each live (variant, rotation) sub-batch,
+    /// preceded by the **parking pass**: a slot whose due quantization
+    /// flush cannot lease its pages — and whose residual can no longer
+    /// absorb the deferral — sits this tick out instead of erroring. When
+    /// every live slot is parked (a pool deadlock: nobody can flush, nobody
+    /// will free), the largest page-holder is shed as CacheFull.
     fn decode(&mut self) -> Result<()> {
-        let groups = self.batcher.variant_groups();
         let batch = self.batcher.slots.len();
+        let mut parked = vec![false; batch];
+        let available = self.pool.available();
+        let mut pending = 0usize;
+        let mut live = 0usize;
+        for (i, slot) in self.batcher.slots.iter_mut().enumerate() {
+            let Some(sess) = slot.as_mut() else { continue };
+            if sess.is_finished() {
+                continue;
+            }
+            live += 1;
+            let due = sess.cache.due_flush_pages();
+            let covered = due == 0 || available.saturating_sub(pending) >= due;
+            if covered {
+                pending += due;
+            }
+            // an uncovered flush can still defer onto residual headroom —
+            // but it must NOT opportunistically lease during its decode
+            // step (flush_hold), or it would steal the pages this pass just
+            // promised to a covered slot in a later variant group. Park
+            // only when the residual is about to overflow too.
+            sess.cache.flush_hold = !covered;
+            if covered || sess.cache.residual_headroom() > 1 {
+                if sess.parked {
+                    sess.parked = false;
+                    self.metrics.pool_resumes += 1;
+                }
+            } else {
+                if !sess.parked {
+                    sess.parked = true;
+                    self.metrics.pool_parks += 1;
+                }
+                parked[i] = true;
+            }
+        }
+        let n_parked = parked.iter().filter(|&&p| p).count();
+        if live > 0 && n_parked == live {
+            let victim = self
+                .batcher
+                .slots
+                .iter()
+                .enumerate()
+                .filter(|(i, s)| parked[*i] && s.is_some())
+                .max_by_key(|(_, s)| s.as_ref().map(|x| x.cache.leased_pages()).unwrap_or(0))
+                .map(|(i, _)| i);
+            if let Some(i) = victim {
+                let sess = self.batcher.slots[i].as_mut().unwrap();
+                sess.finish(FinishReason::CacheFull);
+                self.metrics.pool_preemptions += 1;
+            }
+        }
+        let groups = self.batcher.variant_groups();
         // record_step sees one sub-batch at a time; track true concurrency
-        // (all live sessions this tick) across the groups explicitly
-        let live_total: usize = groups.iter().map(|g| g.slots.len()).sum();
+        // (all live, unparked sessions this tick) across the groups
+        let live_total: usize = groups
+            .iter()
+            .map(|g| g.slots.iter().filter(|&&i| !parked[i]).count())
+            .sum();
         self.metrics.max_concurrent = self.metrics.max_concurrent.max(live_total);
         for group in &groups {
-            self.metrics.record_step(group.slots.len(), batch);
+            let active: Vec<usize> = group.slots.iter().copied().filter(|&i| !parked[i]).collect();
+            if active.is_empty() {
+                continue; // whole sub-batch parked this tick
+            }
+            self.metrics.record_step(active.len(), batch);
             let rot = {
-                let lead = self.batcher.slots[group.slots[0]].as_ref().unwrap();
+                let lead = self.batcher.slots[active[0]].as_ref().unwrap();
                 lead.cache.rot.clone()
             };
             let mut slots: Vec<Option<(&mut crate::kvcache::cache::RequestCache, i32)>> =
                 Vec::with_capacity(batch);
             for (i, s) in self.batcher.slots.iter_mut().enumerate() {
                 match s {
-                    Some(sess) if group.slots.contains(&i) && !sess.is_finished() => {
+                    Some(sess) if active.contains(&i) && !sess.is_finished() => {
                         let tok = sess.next_token;
                         slots.push(Some((&mut sess.cache, tok)));
                     }
@@ -339,16 +481,13 @@ impl Server {
         Ok(())
     }
 
-    /// Retire a session: release its memory reservation, emit the terminal
-    /// event, and record the completion.
+    /// Retire a session: record the completion (the session's cache — and
+    /// every page it leased — drops here) and index the terminal record.
     fn finalize(&mut self, sess: Session) {
-        if sess.bytes_reserved > 0 {
-            self.scheduler.release_bytes(sess.bytes_reserved);
-        }
         let c = make_completed(&sess);
         self.submit_times.remove(&c.id);
         self.events.finished(c.id, c.reason, c.tokens.len());
-        self.finished.insert(c.id, c.clone());
+        self.finished.insert(c.id, Terminal::Pending(self.metrics.completed.len()));
         self.metrics.completed.push(c);
     }
 
@@ -368,7 +507,7 @@ impl Server {
             total_ms: waited,
         };
         self.events.finished(id, reason, 0);
-        self.finished.insert(id, c.clone());
+        self.finished.insert(id, Terminal::Pending(self.metrics.completed.len()));
         self.metrics.completed.push(c);
     }
 }

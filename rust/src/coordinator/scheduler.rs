@@ -3,30 +3,58 @@
 //! Policy (vLLM-style, specialized to a static decode batch):
 //! * decode has priority: run one decode step per cycle over live slots;
 //! * before each decode step, admit up to `max_prefills_per_cycle` waiting
-//!   requests into free slots — if the memory accountant can reserve their
-//!   worst-case cache bytes (prevents mid-request OOM, which would force
-//!   eviction we don't model);
+//!   requests into free slots — admission is **occupancy-based**: a request
+//!   is admitted when the shared page pool can cover its *actual* prefill
+//!   pages and still keep a reserve watermark free for live requests'
+//!   flushes. A 10-token request therefore no longer costs the concurrency
+//!   budget of a 4096-token one; `worst_case_request_bytes` survives only
+//!   as the reject-at-submit upper bound.
+//! * a live slot whose due flush cannot lease pages is *parked* for the
+//!   tick (router::Server::decode), not failed;
 //! * requests whose prompt exceeds every prefill bucket are rejected.
 
 use crate::kvcache::accountant::MemoryAccountant;
+use crate::kvcache::pool::KvPool;
 
 #[derive(Clone, Copy, Debug)]
 pub struct SchedulerPolicy {
     /// Cap on prefills interleaved per decode cycle (bounds decode stall).
     pub max_prefills_per_cycle: usize,
-    /// Worst-case per-request cache bytes (from the accountant).
+    /// Worst-case per-request cache bytes (from the accountant) — the
+    /// submit-time reject bound and the Fig. 5 worst-case-batch yardstick.
     pub per_request_bytes: usize,
+    /// Pages the pool must keep free after an admission — decode headroom
+    /// so live requests' flushes don't immediately starve.
+    pub reserve_pages: usize,
 }
 
 pub struct Scheduler {
     pub policy: SchedulerPolicy,
     pub accountant: MemoryAccountant,
+    /// Shared page pool occupancy-based admission draws from. `None` falls
+    /// back to byte-reservation admission (standalone/unit-test use).
+    pub pool: Option<KvPool>,
     pub rejected: u64,
 }
 
 impl Scheduler {
     pub fn new(policy: SchedulerPolicy, budget_bytes: usize) -> Scheduler {
-        Scheduler { policy, accountant: MemoryAccountant::new(budget_bytes), rejected: 0 }
+        Scheduler {
+            policy,
+            accountant: MemoryAccountant::new(budget_bytes),
+            pool: None,
+            rejected: 0,
+        }
+    }
+
+    /// Scheduler admitting against `pool` occupancy (the serving path).
+    pub fn with_pool(policy: SchedulerPolicy, budget_bytes: usize, pool: KvPool) -> Scheduler {
+        Scheduler {
+            policy,
+            accountant: MemoryAccountant::new(budget_bytes),
+            pool: Some(pool),
+            rejected: 0,
+        }
     }
 
     /// How many admissions to attempt this cycle given free slots.
@@ -34,15 +62,46 @@ impl Scheduler {
         free_slots.min(waiting).min(self.policy.max_prefills_per_cycle)
     }
 
+    /// Occupancy-based admission: can the pool cover `needed` prefill pages
+    /// and still keep the reserve watermark free? Without a pool this is
+    /// the legacy byte reservation at the policy's worst-case size.
+    pub fn try_admit_pages(&mut self, needed: usize) -> bool {
+        match &self.pool {
+            Some(p) => p.available() >= needed + self.policy.reserve_pages,
+            None => self.try_admit_bytes(self.policy.per_request_bytes),
+        }
+    }
+
+    /// Static feasibility: could `needed` pages EVER be admitted under the
+    /// watermark? False means the request must be rejected at submit, or
+    /// it would camp the queue head forever.
+    pub fn pages_admissible(&self, needed: usize) -> bool {
+        match &self.pool {
+            Some(p) => match p.max_pages() {
+                Some(max) => needed + self.policy.reserve_pages <= max,
+                None => true,
+            },
+            None => true,
+        }
+    }
+
+    /// Sample current pool occupancy into the accountant's live/peak gauges
+    /// (leased pages at the pool's per-page deployment cost).
+    pub fn observe_occupancy(&mut self, extra_bytes: usize) {
+        if let Some(p) = &self.pool {
+            let bytes = p.leased() * p.page_deploy_bytes() + extra_bytes;
+            self.accountant.observe(bytes);
+        }
+    }
+
     /// Try to reserve memory for one request at the default (policy)
-    /// worst-case size.
+    /// worst-case size — the legacy admission path, kept as the yardstick
+    /// the occupancy test compares against.
     pub fn try_admit(&mut self) -> bool {
         self.try_admit_bytes(self.policy.per_request_bytes)
     }
 
-    /// Try to reserve an exact worst-case byte count — methods route
-    /// per-request, so heterogeneous variants reserve their own footprint
-    /// rather than the server default's.
+    /// Try to reserve an exact worst-case byte count.
     pub fn try_admit_bytes(&mut self, bytes: usize) -> bool {
         self.accountant.try_reserve(bytes)
     }
@@ -55,7 +114,8 @@ impl Scheduler {
         self.accountant.release(bytes);
     }
 
-    /// Max concurrent requests the budget supports (Fig. 5's max batch).
+    /// Max concurrent requests worst-case admission would allow (Fig. 5's
+    /// max batch under the old scheme — the occupancy admission's baseline).
     pub fn max_concurrent(&self) -> usize {
         self.accountant.budget_bytes / self.policy.per_request_bytes.max(1)
     }
@@ -67,7 +127,11 @@ mod tests {
 
     fn sched(budget: usize, per_req: usize) -> Scheduler {
         Scheduler::new(
-            SchedulerPolicy { max_prefills_per_cycle: 2, per_request_bytes: per_req },
+            SchedulerPolicy {
+                max_prefills_per_cycle: 2,
+                per_request_bytes: per_req,
+                reserve_pages: 0,
+            },
             budget,
         )
     }
@@ -99,5 +163,35 @@ mod tests {
         assert!(!s.try_admit_bytes(1), "budget saturated");
         s.release_bytes(200);
         assert!(s.try_admit_bytes(100));
+    }
+
+    #[test]
+    fn occupancy_admission_respects_watermark() {
+        use crate::quant::window::TierSpec;
+        let spec = TierSpec { n16: 2, n4: 2, n2: 28, v_bits: 2 };
+        let pool = KvPool::for_specs([&spec], 32, 32, Some(10));
+        let mut s = Scheduler::with_pool(
+            SchedulerPolicy {
+                max_prefills_per_cycle: 2,
+                per_request_bytes: 1000,
+                reserve_pages: 2,
+            },
+            1_000_000,
+            pool.clone(),
+        );
+        // 10 pages, 2 reserved: an 8-page request fits, a 9-page one never
+        assert!(s.try_admit_pages(8));
+        assert!(!s.try_admit_pages(9));
+        assert!(!s.pages_admissible(9));
+        assert!(s.pages_admissible(8));
+        // occupancy shrinks what's admissible
+        let a = pool.lease().unwrap();
+        let b = pool.lease().unwrap();
+        assert!(s.try_admit_pages(6));
+        assert!(!s.try_admit_pages(7));
+        s.observe_occupancy(0);
+        assert_eq!(s.accountant.live_bytes, 2 * pool.page_deploy_bytes());
+        drop((a, b));
+        assert!(s.try_admit_pages(8));
     }
 }

@@ -58,7 +58,10 @@ pub struct Session {
     pub t_admitted: Instant,
     pub t_first_token: Option<Instant>,
     pub t_finish: Option<Instant>,
-    pub bytes_reserved: usize,
+    /// Set while the scheduler has parked this slot: a quantization flush
+    /// is due but the shared page pool cannot cover it, so the session sits
+    /// out decode ticks (instead of erroring) until pages free up.
+    pub parked: bool,
 }
 
 impl Session {
@@ -74,7 +77,7 @@ impl Session {
             t_admitted: now,
             t_first_token: Some(now),
             t_finish: None,
-            bytes_reserved: 0,
+            parked: false,
         }
     }
 

@@ -248,7 +248,12 @@ pub fn fig5(ctx: &ExpCtx) -> Result<Table> {
         );
         let mut server = Server::new(
             engine,
-            ServerConfig { memory_budget_bytes: budget, max_prefills_per_cycle: 2, seed: ctx.seed },
+            ServerConfig {
+                memory_budget_bytes: budget,
+                max_prefills_per_cycle: 2,
+                seed: ctx.seed,
+                reserve_pages: None,
+            },
         );
         let mut rng = Pcg32::seeded(ctx.seed);
         let mut trace = workloads::sharegpt_trace(&mut rng, n_req, max_new);

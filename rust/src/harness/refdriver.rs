@@ -57,10 +57,31 @@ impl<'a> RefDriver<'a> {
         RequestCache::new(&self.model.mc, &self.cc, &self.specs, self.method.clone(), self.r_limit)
     }
 
-    /// Prefill prompt into a fresh cache.
+    /// Prefill prompt into a fresh cache (private unbounded page pool).
     pub fn prefill(&self, prompt: &[i32]) -> Result<(RequestCache, Vec<f32>)> {
         let (_, pre) = self.model.forward_full(prompt);
         let mut cache = self.new_cache();
+        cache.load_prefill(&pre.k, &pre.v, &pre.qabs, prompt.len())?;
+        Ok((cache, pre.last_logits))
+    }
+
+    /// Prefill into a cache leasing its pages from `pool` — the serving
+    /// storage configuration, used by benches/tests to measure/verify the
+    /// shared-pool decode path without an engine.
+    pub fn prefill_pooled(
+        &self,
+        pool: &crate::kvcache::pool::KvPool,
+        prompt: &[i32],
+    ) -> Result<(RequestCache, Vec<f32>)> {
+        let (_, pre) = self.model.forward_full(prompt);
+        let mut cache = RequestCache::new_in(
+            pool,
+            &self.model.mc,
+            &self.cc,
+            &self.specs,
+            self.method.clone(),
+            self.r_limit,
+        );
         cache.load_prefill(&pre.k, &pre.v, &pre.qabs, prompt.len())?;
         Ok((cache, pre.last_logits))
     }

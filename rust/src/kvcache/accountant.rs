@@ -34,7 +34,11 @@ pub fn effective_bits(spec: &TierSpec, d: usize, group: usize) -> f64 {
 }
 
 /// Fleet-level accountant: tracks live bytes across requests against a
-/// budget, deciding how many concurrent requests fit (Fig. 5's max batch).
+/// budget. With the paged pool (kvcache::pool) the scheduler admits on
+/// **occupancy** — leased pages, observed via [`MemoryAccountant::observe`]
+/// — and [`MemoryAccountant::worst_case_request_bytes`] survives only as
+/// the reject-at-submit upper bound (a request whose worst case exceeds the
+/// whole budget can never be served and must not camp the queue head).
 pub struct MemoryAccountant {
     pub budget_bytes: usize,
     pub live_bytes: usize,
@@ -44,6 +48,14 @@ pub struct MemoryAccountant {
 impl MemoryAccountant {
     pub fn new(budget_bytes: usize) -> Self {
         MemoryAccountant { budget_bytes, live_bytes: 0, peak_bytes: 0 }
+    }
+
+    /// Record the currently observed occupancy (leased pages × page bytes
+    /// + residuals) — the paged-admission replacement for the old
+    /// reserve/release bookkeeping, sampled once per scheduling tick.
+    pub fn observe(&mut self, live_bytes: usize) {
+        self.live_bytes = live_bytes;
+        self.peak_bytes = self.peak_bytes.max(live_bytes);
     }
 
     pub fn try_reserve(&mut self, bytes: usize) -> bool {
@@ -135,6 +147,16 @@ mod tests {
         assert_eq!(a.peak_bytes, 100);
         a.adjust(40, 70);
         assert_eq!(a.live_bytes, 70);
+    }
+
+    #[test]
+    fn observe_tracks_peak_occupancy() {
+        let mut a = MemoryAccountant::new(100);
+        a.observe(30);
+        a.observe(80);
+        a.observe(10);
+        assert_eq!(a.live_bytes, 10);
+        assert_eq!(a.peak_bytes, 80);
     }
 
     #[test]

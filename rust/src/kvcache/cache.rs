@@ -1,11 +1,21 @@
-//! Per-request quantized KV cache — the Fig. 4 storage layout, held in
-//! exactly the buffers the decode HLO consumes:
+//! Per-request quantized KV cache — the Fig. 4 storage layout, held as a
+//! **page table over pool-leased storage** (kvcache::pool):
 //!
 //! * three-tier quantized key window (BF16 / packed u4 / packed u2 columns,
-//!   grouped scales/zeros) at capacity C,
-//! * per-token quantized value window,
-//! * the full-precision residual buffer X_R,
+//!   grouped scales/zeros), one page per quantization group per head,
+//! * per-token quantized value window (same pages),
+//! * the full-precision residual buffer X_R (flat, off-pool — it is small,
+//!   bounded, and recycled in place),
 //! * per-head channel permutation `idx` + the running I_d accumulator.
+//!
+//! Storage is leased one group-page at a time on `store_key_window` /
+//! `flush` / `load_prefill` and returned to the pool on eviction, error
+//! unwinding, or request retirement (lease `Drop`) — a request's footprint
+//! is proportional to what it holds, never to window capacity. Group-
+//! aligned eviction is a page-table splice (kvcache::eviction). The decode
+//! hot path (`scores_into` / `values_accumulate_into`) and the engine's
+//! batch gathers stream page by page, so the fused zero-alloc decode of
+//! PR 2 is unchanged in cost.
 //!
 //! The channel plan (which channels land in which tier) is decided at the
 //! first quantization event from (prefill I_d) × (window S_d) and reused for
@@ -23,18 +33,32 @@ use crate::quant::rotation;
 use crate::quant::salience::QueryStats;
 use crate::quant::window::{self, TierSpec};
 
+use super::pool::{KvPool, PageLayout, PageLease};
 use super::residual::ResidualBuffer;
 
-/// One (layer, kv-head) cache shard, ABI-shaped at capacity C.
-#[derive(Clone)]
-pub struct HeadState {
-    pub spec: TierSpec,
-    pub d: usize,
-    pub capacity: usize,
-    pub group: usize,
-    /// Channel permutation (tier-concatenated); identity until planned.
-    pub idx: Vec<i32>,
-    pub planned: bool,
+/// Tier region selector for page-streamed gathers (`copy_field_f32` /
+/// `copy_field_u8`) — the engine maps decode-graph input names onto these.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PageField {
+    K16,
+    K4s,
+    K4z,
+    K2s,
+    K2z,
+    Vs,
+    Vz,
+    Vfull,
+    K4p,
+    K2p,
+    Vp,
+}
+
+/// The pre-pool contiguous layout materialized from a page table — the
+/// bit-identity oracle for tests (`tests/paged_cache.rs`): paged storage
+/// must read back exactly what the old flat capacity-sized buffers held
+/// for the leased region.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ContiguousHead {
     pub k16: Vec<f32>,
     pub k4p: Vec<u8>,
     pub k4s: Vec<f32>,
@@ -46,6 +70,22 @@ pub struct HeadState {
     pub vs: Vec<f32>,
     pub vz: Vec<f32>,
     pub vfull: Vec<f32>,
+}
+
+/// One (layer, kv-head) cache shard: a page table of leased group-pages.
+pub struct HeadState {
+    pub spec: TierSpec,
+    pub d: usize,
+    pub capacity: usize,
+    pub group: usize,
+    /// Channel permutation (tier-concatenated); identity until planned.
+    pub idx: Vec<i32>,
+    pub planned: bool,
+    /// Per-spec offsets into a page's arenas.
+    pub layout: PageLayout,
+    /// pages[g] holds tokens [g*G, (g+1)*G) across every tier buffer.
+    pub(crate) pages: Vec<PageLease>,
+    pool: KvPool,
     pub res: ResidualBuffer,
     pub qstats: QueryStats,
 }
@@ -57,80 +97,87 @@ impl HeadState {
         self.group.min(self.d)
     }
 
-    fn new(spec: TierSpec, d: usize, cc: &CacheConfig) -> Self {
-        let c = cc.capacity;
-        let gk = cc.group;          // key grouping (along tokens)
-        let gv = cc.group.min(d);   // value grouping (along channels)
-        let cg = c / gk;
-        // Packed rows are indexed per-token, so tier widths must fill whole
-        // bytes — fail loudly instead of silently corrupting the next
-        // token's row (packing::packed_len enforces the same invariant).
-        debug_assert!(spec.n4 % 2 == 0, "u4 tier width {} must be even", spec.n4);
-        debug_assert!(spec.n2 % 4 == 0, "u2 tier width {} must be a multiple of 4", spec.n2);
-        debug_assert!(
-            spec.v_bits == 16 || d % (8 / spec.v_bits) == 0,
-            "value rows of {d} channels at {}-bit do not fill whole bytes",
-            spec.v_bits
+    fn new(spec: TierSpec, d: usize, cc: &CacheConfig, pool: &KvPool) -> Self {
+        let layout = PageLayout::new(spec, d, cc.group);
+        assert!(
+            pool.fits(&layout),
+            "pool pages too small for spec {spec:?} (layout needs {}f32+{}B)",
+            layout.f_len,
+            layout.b_len
         );
         HeadState {
             spec,
             d,
-            capacity: c,
-            group: gk,
+            capacity: cc.capacity,
+            group: cc.group,
             idx: (0..d as i32).collect(),
             planned: false,
-            k16: vec![0.0; c * spec.n16],
-            k4p: vec![0; packing::packed_len(c * spec.n4, 4)],
-            k4s: vec![0.0; cg * spec.n4],
-            k4z: vec![0.0; cg * spec.n4],
-            k2p: vec![0; packing::packed_len(c * spec.n2, 2)],
-            k2s: vec![0.0; cg * spec.n2],
-            k2z: vec![0.0; cg * spec.n2],
-            vp: if spec.v_bits == 16 {
-                Vec::new()
-            } else {
-                vec![0; packing::packed_len(c * d, spec.v_bits)]
-            },
-            vs: if spec.v_bits == 16 { Vec::new() } else { vec![0.0; c * d / gv] },
-            vz: if spec.v_bits == 16 { Vec::new() } else { vec![0.0; c * d / gv] },
-            vfull: if spec.v_bits == 16 { vec![0.0; c * d] } else { Vec::new() },
+            layout,
+            pages: Vec::with_capacity(cc.capacity / cc.group),
+            pool: pool.clone(),
             res: ResidualBuffer::new(cc.residual, d),
             qstats: QueryStats::new(d),
         }
     }
 
-    /// Write a quantized key window into the ABI buffers at token offset
-    /// `at` (must be group-aligned).
-    fn store_key_window(&mut self, w: &window::KeyWindow, at: usize) {
-        debug_assert_eq!(at % self.group, 0);
-        let t = w.t;
-        let (n16, n4, n2) = (self.spec.n16, self.spec.n4, self.spec.n2);
-        self.k16[at * n16..(at + t) * n16].copy_from_slice(&w.k16);
-        if n4 > 0 {
-            self.k4p[at * n4 / 2..(at + t) * n4 / 2].copy_from_slice(&w.k4p);
-            let g0 = at / self.group;
-            let gn = t / self.group;
-            self.k4s[g0 * n4..(g0 + gn) * n4].copy_from_slice(&w.k4s);
-            self.k4z[g0 * n4..(g0 + gn) * n4].copy_from_slice(&w.k4z);
-        }
-        if n2 > 0 {
-            self.k2p[at * n2 / 4..(at + t) * n2 / 4].copy_from_slice(&w.k2p);
-            let g0 = at / self.group;
-            let gn = t / self.group;
-            self.k2s[g0 * n2..(g0 + gn) * n2].copy_from_slice(&w.k2s);
-            self.k2z[g0 * n2..(g0 + gn) * n2].copy_from_slice(&w.k2z);
-        }
+    /// Pages this head currently leases.
+    pub fn pages_leased(&self) -> usize {
+        self.pages.len()
     }
 
+    /// Write a quantized key window into pool pages at token offset `at`
+    /// (`at` and `w.t` must be group-aligned), leasing pages as needed.
+    fn store_key_window(&mut self, w: &window::KeyWindow, at: usize) -> Result<()> {
+        let g = self.group;
+        debug_assert_eq!(at % g, 0);
+        debug_assert_eq!(w.t % g, 0);
+        let lay = self.layout;
+        let (n16, n4, n2) = (self.spec.n16, self.spec.n4, self.spec.n2);
+        let g0 = at / g;
+        let gn = w.t / g;
+        debug_assert!(g0 <= self.pages.len(), "non-contiguous page write");
+        while self.pages.len() < g0 + gn {
+            self.pages.push(self.pool.lease()?);
+        }
+        for gi in 0..gn {
+            let page = self.pages[g0 + gi].page_mut();
+            page.f[lay.k16r()].copy_from_slice(&w.k16[gi * g * n16..(gi + 1) * g * n16]);
+            if n4 > 0 {
+                page.b[lay.k4pr()].copy_from_slice(&w.k4p[gi * g * n4 / 2..(gi + 1) * g * n4 / 2]);
+                page.f[lay.k4sr()].copy_from_slice(&w.k4s[gi * n4..(gi + 1) * n4]);
+                page.f[lay.k4zr()].copy_from_slice(&w.k4z[gi * n4..(gi + 1) * n4]);
+            }
+            if n2 > 0 {
+                page.b[lay.k2pr()].copy_from_slice(&w.k2p[gi * g * n2 / 4..(gi + 1) * g * n2 / 4]);
+                page.f[lay.k2sr()].copy_from_slice(&w.k2s[gi * n2..(gi + 1) * n2]);
+                page.f[lay.k2zr()].copy_from_slice(&w.k2z[gi * n2..(gi + 1) * n2]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Write a quantized value window into the pages leased by the
+    /// matching key window (keys store first — see `quantize_into`).
     fn store_value_window(&mut self, w: &window::ValueWindow, at: usize) {
-        let (t, d, g) = (w.t, self.d, self.vgroup());
-        if self.spec.v_bits == 16 {
-            self.vfull[at * d..(at + t) * d].copy_from_slice(&w.vfull);
-        } else {
-            let b = self.spec.v_bits;
-            self.vp[at * d * b / 8..(at + t) * d * b / 8].copy_from_slice(&w.vp);
-            self.vs[at * d / g..(at + t) * d / g].copy_from_slice(&w.vs);
-            self.vz[at * d / g..(at + t) * d / g].copy_from_slice(&w.vz);
+        let g = self.group;
+        let (d, gv) = (self.d, self.vgroup());
+        debug_assert_eq!(at % g, 0);
+        debug_assert_eq!(w.t % g, 0);
+        let lay = self.layout;
+        let g0 = at / g;
+        let gn = w.t / g;
+        debug_assert!(g0 + gn <= self.pages.len(), "value write beyond leased pages");
+        for gi in 0..gn {
+            let page = self.pages[g0 + gi].page_mut();
+            if self.spec.v_bits == 16 {
+                page.f[lay.vfullr()].copy_from_slice(&w.vfull[gi * g * d..(gi + 1) * g * d]);
+            } else {
+                let b = self.spec.v_bits;
+                page.b[lay.vpr()]
+                    .copy_from_slice(&w.vp[gi * g * d * b / 8..(gi + 1) * g * d * b / 8]);
+                page.f[lay.vsr()].copy_from_slice(&w.vs[gi * g * d / gv..(gi + 1) * g * d / gv]);
+                page.f[lay.vzr()].copy_from_slice(&w.vz[gi * g * d / gv..(gi + 1) * g * d / gv]);
+            }
         }
     }
 
@@ -139,64 +186,81 @@ impl HeadState {
     pub fn dequant_keys(&self, qlen: usize) -> Vec<f32> {
         let (d, g) = (self.d, self.group);
         let (n16, n4, n2) = (self.spec.n16, self.spec.n4, self.spec.n2);
+        debug_assert!(qlen <= self.pages.len() * g);
         let mut out = vec![0f32; qlen * d];
         let mut row4 = Vec::with_capacity(n4);
         let mut row2 = Vec::with_capacity(n2);
-        for t in 0..qlen {
-            let grp = t / g;
-            for j in 0..n16 {
-                out[t * d + self.idx[j] as usize] = self.k16[t * n16 + j];
+        let mut tok = 0;
+        while tok < qlen {
+            let grp = tok / g;
+            let pv = self.layout.view(self.pages[grp].page());
+            let end = ((grp + 1) * g).min(qlen);
+            for t in tok..end {
+                let ti = t - grp * g;
+                for j in 0..n16 {
+                    out[t * d + self.idx[j] as usize] = pv.k16[ti * n16 + j];
+                }
+                row4.clear();
+                packing::unpack_u4(&pv.k4p[ti * n4 / 2..(ti + 1) * n4 / 2], &mut row4);
+                for j in 0..n4 {
+                    out[t * d + self.idx[n16 + j] as usize] =
+                        row4[j] as f32 * pv.k4s[j] + pv.k4z[j];
+                }
+                row2.clear();
+                packing::unpack_u2(&pv.k2p[ti * n2 / 4..(ti + 1) * n2 / 4], &mut row2);
+                for j in 0..n2 {
+                    out[t * d + self.idx[n16 + n4 + j] as usize] =
+                        row2[j] as f32 * pv.k2s[j] + pv.k2z[j];
+                }
             }
-            row4.clear();
-            packing::unpack_u4(&self.k4p[t * n4 / 2..(t + 1) * n4 / 2], &mut row4);
-            for j in 0..n4 {
-                let s = self.k4s[grp * n4 + j];
-                let z = self.k4z[grp * n4 + j];
-                out[t * d + self.idx[n16 + j] as usize] = row4[j] as f32 * s + z;
-            }
-            row2.clear();
-            packing::unpack_u2(&self.k2p[t * n2 / 4..(t + 1) * n2 / 4], &mut row2);
-            for j in 0..n2 {
-                let s = self.k2s[grp * n2 + j];
-                let z = self.k2z[grp * n2 + j];
-                out[t * d + self.idx[n16 + n4 + j] as usize] = row2[j] as f32 * s + z;
-            }
+            tok = end;
         }
         out
     }
 
     /// Dequantize the first `qlen` value rows.
     pub fn dequant_values(&self, qlen: usize) -> Vec<f32> {
-        let (d, g) = (self.d, self.vgroup());
-        if self.spec.v_bits == 16 {
-            return self.vfull[..qlen * d].to_vec();
-        }
+        let (d, g) = (self.d, self.group);
+        let gv = self.vgroup();
+        debug_assert!(qlen <= self.pages.len() * g);
         let b = self.spec.v_bits;
-        let ng = d / g;
+        let ng = d / gv;
         let mut out = vec![0f32; qlen * d];
         let mut row = Vec::with_capacity(d);
-        for t in 0..qlen {
-            row.clear();
-            if b == 4 {
-                packing::unpack_u4(&self.vp[t * d / 2..(t + 1) * d / 2], &mut row);
-            } else {
-                packing::unpack_u2(&self.vp[t * d / 4..(t + 1) * d / 4], &mut row);
+        let mut tok = 0;
+        while tok < qlen {
+            let grp = tok / g;
+            let pv = self.layout.view(self.pages[grp].page());
+            let end = ((grp + 1) * g).min(qlen);
+            for t in tok..end {
+                let ti = t - grp * g;
+                if b == 16 {
+                    out[t * d..(t + 1) * d].copy_from_slice(&pv.vfull[ti * d..(ti + 1) * d]);
+                    continue;
+                }
+                row.clear();
+                if b == 4 {
+                    packing::unpack_u4(&pv.vp[ti * d / 2..(ti + 1) * d / 2], &mut row);
+                } else {
+                    packing::unpack_u2(&pv.vp[ti * d / 4..(ti + 1) * d / 4], &mut row);
+                }
+                for ch in 0..d {
+                    let s = pv.vs[ti * ng + ch / gv];
+                    let z = pv.vz[ti * ng + ch / gv];
+                    out[t * d + ch] = row[ch] as f32 * s + z;
+                }
             }
-            for ch in 0..d {
-                let s = self.vs[t * ng + ch / g];
-                let z = self.vz[t * ng + ch / g];
-                out[t * d + ch] = row[ch] as f32 * s + z;
-            }
+            tok = end;
         }
         out
     }
 
     /// Fused attention scores over the packed quantized window:
-    /// `out[t] = scale * q·dequant(k_t)` streamed **directly from the packed
-    /// tier buffers** — no f32 window is materialized. Per scale-group the
-    /// affine params fold into the query once (`w = q ⊙ s`, `ζ = q·z`; see
-    /// quant::packing module docs), then every token in the group costs one
-    /// BF16 dot plus two packed-code dots.
+    /// `out[t] = scale * q·dequant(k_t)` streamed **page by page from the
+    /// packed tier buffers** — no f32 window is materialized. Per page
+    /// (= scale group) the affine params fold into the query once
+    /// (`w = q ⊙ s`, `ζ = q·z`; see quant::packing module docs), then every
+    /// token in the page costs one BF16 dot plus two packed-code dots.
     ///
     /// `qperm` is the (rotated) query permuted into tier order —
     /// `qperm[j] = q[idx[j]]` — which makes the assembly channel-permutation
@@ -213,7 +277,7 @@ impl HeadState {
     ) {
         let (n16, n4, n2) = (self.spec.n16, self.spec.n4, self.spec.n2);
         let g = self.group;
-        debug_assert!(qlen <= self.capacity);
+        debug_assert!(qlen <= self.pages.len() * g);
         debug_assert_eq!(qperm.len(), self.d);
         let q16 = &qperm[..n16];
         let q4 = &qperm[n16..n16 + n4];
@@ -223,31 +287,29 @@ impl HeadState {
         let mut tok = 0;
         while tok < qlen {
             let grp = tok / g;
+            let pv = self.layout.view(self.pages[grp].page());
             let mut zdot = 0.0f32;
-            let s4 = &self.k4s[grp * n4..(grp + 1) * n4];
-            let z4 = &self.k4z[grp * n4..(grp + 1) * n4];
             for j in 0..n4 {
-                w4[j] = q4[j] * s4[j];
-                zdot += q4[j] * z4[j];
+                w4[j] = q4[j] * pv.k4s[j];
+                zdot += q4[j] * pv.k4z[j];
             }
-            let s2 = &self.k2s[grp * n2..(grp + 1) * n2];
-            let z2 = &self.k2z[grp * n2..(grp + 1) * n2];
             for j in 0..n2 {
-                w2[j] = q2[j] * s2[j];
-                zdot += q2[j] * z2[j];
+                w2[j] = q2[j] * pv.k2s[j];
+                zdot += q2[j] * pv.k2z[j];
             }
             let end = ((grp + 1) * g).min(qlen);
             for t in tok..end {
+                let ti = t - grp * g;
                 let mut acc = zdot;
-                let row16 = &self.k16[t * n16..(t + 1) * n16];
+                let row16 = &pv.k16[ti * n16..(ti + 1) * n16];
                 for j in 0..n16 {
                     acc += q16[j] * row16[j];
                 }
                 if n4 > 0 {
-                    acc += packing::dot_packed_u4(&self.k4p[t * n4 / 2..(t + 1) * n4 / 2], w4);
+                    acc += packing::dot_packed_u4(&pv.k4p[ti * n4 / 2..(ti + 1) * n4 / 2], w4);
                 }
                 if n2 > 0 {
-                    acc += packing::dot_packed_u2(&self.k2p[t * n2 / 4..(t + 1) * n2 / 4], w2);
+                    acc += packing::dot_packed_u2(&pv.k2p[ti * n2 / 4..(ti + 1) * n2 / 4], w2);
                 }
                 out[t] = acc * scale;
             }
@@ -256,37 +318,124 @@ impl HeadState {
     }
 
     /// Fused value-side attention accumulate: `out[ch] += Σ_t probs[t] *
-    /// dequant(v_{t,ch})` streamed directly from the packed (or BF16) value
-    /// buffers — the other half of the zero-dequant decode path.
+    /// dequant(v_{t,ch})` streamed page by page from the packed (or BF16)
+    /// value buffers — the other half of the zero-dequant decode path.
     pub fn values_accumulate_into(&self, probs: &[f32], out: &mut [f32]) {
         let d = self.d;
+        let g = self.group;
         let qlen = probs.len();
-        debug_assert!(qlen <= self.capacity);
+        debug_assert!(qlen <= self.pages.len() * g);
         debug_assert_eq!(out.len(), d);
-        if self.spec.v_bits == 16 {
-            for (t, &p) in probs.iter().enumerate() {
-                let row = &self.vfull[t * d..(t + 1) * d];
-                for j in 0..d {
-                    out[j] += p * row[j];
+        let gv = self.vgroup();
+        let ng = d / gv;
+        let mut tok = 0;
+        while tok < qlen {
+            let grp = tok / g;
+            let pv = self.layout.view(self.pages[grp].page());
+            let end = ((grp + 1) * g).min(qlen);
+            for t in tok..end {
+                let ti = t - grp * g;
+                let p = probs[t];
+                if self.spec.v_bits == 16 {
+                    let row = &pv.vfull[ti * d..(ti + 1) * d];
+                    for j in 0..d {
+                        out[j] += p * row[j];
+                    }
+                } else {
+                    let s = &pv.vs[ti * ng..(ti + 1) * ng];
+                    let z = &pv.vz[ti * ng..(ti + 1) * ng];
+                    if self.spec.v_bits == 4 {
+                        crate::quant::asym::accumulate_row_u4(
+                            &pv.vp[ti * d / 2..(ti + 1) * d / 2],
+                            p,
+                            s,
+                            z,
+                            gv,
+                            out,
+                        );
+                    } else {
+                        crate::quant::asym::accumulate_row_u2(
+                            &pv.vp[ti * d / 4..(ti + 1) * d / 4],
+                            p,
+                            s,
+                            z,
+                            gv,
+                            out,
+                        );
+                    }
                 }
             }
-            return;
+            tok = end;
         }
-        let g = self.vgroup();
-        let ng = d / g;
-        for (t, &p) in probs.iter().enumerate() {
-            let s = &self.vs[t * ng..(t + 1) * ng];
-            let z = &self.vz[t * ng..(t + 1) * ng];
-            if self.spec.v_bits == 4 {
-                crate::quant::asym::accumulate_row_u4(
-                    &self.vp[t * d / 2..(t + 1) * d / 2], p, s, z, g, out,
-                );
-            } else {
-                crate::quant::asym::accumulate_row_u2(
-                    &self.vp[t * d / 4..(t + 1) * d / 4], p, s, z, g, out,
-                );
-            }
+    }
+
+    /// Stream an f32 tier field's pages into `dst` front-to-back — the
+    /// engine's batch-lane gather iterates the page table through this
+    /// (`dst` beyond the leased pages is left as the caller zeroed it).
+    pub fn copy_field_f32(&self, field: PageField, dst: &mut [f32]) {
+        let lay = self.layout;
+        let r = match field {
+            PageField::K16 => lay.k16r(),
+            PageField::K4s => lay.k4sr(),
+            PageField::K4z => lay.k4zr(),
+            PageField::K2s => lay.k2sr(),
+            PageField::K2z => lay.k2zr(),
+            PageField::Vs => lay.vsr(),
+            PageField::Vz => lay.vzr(),
+            PageField::Vfull => lay.vfullr(),
+            _ => unreachable!("byte field routed to copy_field_f32"),
+        };
+        let n = r.len();
+        for (gi, lease) in self.pages.iter().enumerate() {
+            dst[gi * n..(gi + 1) * n].copy_from_slice(&lease.page().f[r.clone()]);
         }
+    }
+
+    /// Byte-arena counterpart of [`HeadState::copy_field_f32`].
+    pub fn copy_field_u8(&self, field: PageField, dst: &mut [u8]) {
+        let lay = self.layout;
+        let r = match field {
+            PageField::K4p => lay.k4pr(),
+            PageField::K2p => lay.k2pr(),
+            PageField::Vp => lay.vpr(),
+            _ => unreachable!("f32 field routed to copy_field_u8"),
+        };
+        let n = r.len();
+        for (gi, lease) in self.pages.iter().enumerate() {
+            dst[gi * n..(gi + 1) * n].copy_from_slice(&lease.page().b[r.clone()]);
+        }
+    }
+
+    /// Materialize the contiguous (pre-pool) layout for the leased region —
+    /// the test oracle for paged↔contiguous bit-identity.
+    pub fn contiguous(&self) -> ContiguousHead {
+        let np = self.pages.len();
+        let lay = self.layout;
+        let mut c = ContiguousHead {
+            k16: vec![0.0; np * lay.k16r().len()],
+            k4p: vec![0; np * lay.k4pr().len()],
+            k4s: vec![0.0; np * lay.k4sr().len()],
+            k4z: vec![0.0; np * lay.k4zr().len()],
+            k2p: vec![0; np * lay.k2pr().len()],
+            k2s: vec![0.0; np * lay.k2sr().len()],
+            k2z: vec![0.0; np * lay.k2zr().len()],
+            vp: vec![0; np * lay.vpr().len()],
+            vs: vec![0.0; np * lay.vsr().len()],
+            vz: vec![0.0; np * lay.vzr().len()],
+            vfull: vec![0.0; np * lay.vfullr().len()],
+        };
+        self.copy_field_f32(PageField::K16, &mut c.k16);
+        self.copy_field_u8(PageField::K4p, &mut c.k4p);
+        self.copy_field_f32(PageField::K4s, &mut c.k4s);
+        self.copy_field_f32(PageField::K4z, &mut c.k4z);
+        self.copy_field_u8(PageField::K2p, &mut c.k2p);
+        self.copy_field_f32(PageField::K2s, &mut c.k2s);
+        self.copy_field_f32(PageField::K2z, &mut c.k2z);
+        self.copy_field_u8(PageField::Vp, &mut c.vp);
+        self.copy_field_f32(PageField::Vs, &mut c.vs);
+        self.copy_field_f32(PageField::Vz, &mut c.vz);
+        self.copy_field_f32(PageField::Vfull, &mut c.vfull);
+        c
     }
 
     /// Exact storage bytes for `qlen` quantized tokens + the residual
@@ -327,6 +476,16 @@ pub struct RequestCache {
     pub policy: crate::kvcache::eviction::CachePolicy,
     /// Total tokens dropped by sliding-window eviction (ext1 metric).
     pub evicted_tokens: usize,
+    /// Flushes deferred because the shared pool had no free pages — the
+    /// tokens kept riding in the residual instead (`append` docs).
+    pub flush_deferrals: u64,
+    /// One-shot hold set by the scheduler's parking pass: the next append
+    /// defers its due flush even if a pool-wide `can_lease` would pass,
+    /// because the free pages are reserved for other slots this tick
+    /// (without this, a slot later in decode order could steal pages the
+    /// scheduler promised to a covered slot). Cleared by the append.
+    pub flush_hold: bool,
+    pool: KvPool,
     mc_n_kv: usize,
     d: usize,
     group: usize,
@@ -334,7 +493,24 @@ pub struct RequestCache {
 }
 
 impl RequestCache {
+    /// Cache backed by a private unbounded pool — standalone use (the
+    /// reference driver, unit tests, offline analyses). Serving goes
+    /// through [`RequestCache::new_in`] with the server's shared pool.
     pub fn new(
+        mc: &ModelConfig,
+        cc: &CacheConfig,
+        specs: &[TierSpec],
+        method: Method,
+        r_limit: usize,
+    ) -> Self {
+        let pool = KvPool::for_specs(specs.iter(), mc.d_head, cc.group, None);
+        Self::new_in(&pool, mc, cc, specs, method, r_limit)
+    }
+
+    /// Cache leasing its pages from `pool` (the serving configuration: one
+    /// bounded pool shared by every live request).
+    pub fn new_in(
+        pool: &KvPool,
         mc: &ModelConfig,
         cc: &CacheConfig,
         specs: &[TierSpec],
@@ -345,7 +521,11 @@ impl RequestCache {
         assert!(r_limit > 0 && r_limit <= cc.residual && r_limit % cc.group == 0);
         let heads = specs
             .iter()
-            .map(|&s| (0..mc.n_kv_heads).map(|_| HeadState::new(s, mc.d_head, cc)).collect())
+            .map(|&s| {
+                (0..mc.n_kv_heads)
+                    .map(|_| HeadState::new(s, mc.d_head, cc, pool))
+                    .collect()
+            })
             .collect();
         let rot = method.rotation(mc.d_head);
         RequestCache {
@@ -357,11 +537,88 @@ impl RequestCache {
             r_limit,
             policy: crate::kvcache::eviction::CachePolicy::Stop,
             evicted_tokens: 0,
+            flush_deferrals: 0,
+            flush_hold: false,
+            pool: pool.clone(),
             mc_n_kv: mc.n_kv_heads,
             d: mc.d_head,
             group: cc.group,
             capacity: cc.capacity,
         }
+    }
+
+    /// The pool this cache leases from.
+    pub fn pool(&self) -> &KvPool {
+        &self.pool
+    }
+
+    /// Pages currently leased across all layers/heads.
+    pub fn leased_pages(&self) -> usize {
+        self.heads.iter().flatten().map(|h| h.pages_leased()).sum()
+    }
+
+    /// Pages one quantization flush leases (`r_limit` tokens across every
+    /// layer and kv-head).
+    pub fn pages_per_flush(&self) -> usize {
+        super::pool::pages_for_tokens(self.r_limit, self.group, self.heads.len(), self.mc_n_kv)
+    }
+
+    /// NET pages the next append's due flush must lease — 0 when no flush
+    /// is due. In the eviction regime (window full under a sliding-window
+    /// policy) the eviction runs first and returns its pages to the pool,
+    /// so only the shortfall beyond what eviction frees counts (0 when
+    /// `evict >= r_limit` per round — the flush is then self-funding). The
+    /// scheduler's parking probe: a slot whose due flush cannot be covered
+    /// by the pool (and whose residual is nearly full) is parked instead
+    /// of decoded; `append` uses the same number, so a dry pool defers
+    /// rather than letting `flush()` bail mid-tick.
+    pub fn due_flush_pages(&self) -> usize {
+        if self.rlen() < self.r_limit {
+            return 0;
+        }
+        if self.qlen + self.r_limit <= self.capacity {
+            return self.pages_per_flush();
+        }
+        match self.policy {
+            // window full, no eviction: no flush can happen — nothing due
+            crate::kvcache::eviction::CachePolicy::Stop => 0,
+            crate::kvcache::eviction::CachePolicy::SlidingWindow { sink, evict } => {
+                // mirror evict_for's rounds to predict the freed tokens
+                let mut q = self.qlen;
+                let mut freed = 0;
+                while q + self.r_limit > self.capacity && q >= sink + evict {
+                    q -= evict;
+                    freed += evict;
+                }
+                super::pool::pages_for_tokens(
+                    self.r_limit.saturating_sub(freed),
+                    self.group,
+                    self.heads.len(),
+                    self.mc_n_kv,
+                )
+            }
+        }
+    }
+
+    /// Live residual bytes across all heads (deployment convention) — the
+    /// off-pool component of this request's occupancy.
+    pub fn residual_bytes(&self) -> usize {
+        self.heads.iter().flatten().map(|h| h.res.bytes()).sum()
+    }
+
+    /// Residual slots still free: a due-but-deferred flush can ride this
+    /// many more tokens before the request would die CacheFull.
+    pub fn residual_headroom(&self) -> usize {
+        self.heads[0][0].res.capacity - self.rlen()
+    }
+
+    /// How the prefill of a `t`-token prompt splits into (quantized,
+    /// residual) tokens — shared by `load_prefill` and the scheduler's
+    /// exact page-count admission.
+    pub fn prefill_split(t: usize, r_limit: usize, group: usize, capacity: usize) -> (usize, usize) {
+        let mut qt = if t > r_limit { (t - r_limit).div_ceil(group) * group } else { 0 };
+        qt = qt.min(capacity).min(t / group * group);
+        (qt, t - qt)
     }
 
     pub fn rlen(&self) -> usize {
@@ -375,6 +632,8 @@ impl RequestCache {
 
     /// Load prefill K/V (`k[l]`/`v[l]` row-major [Hkv, T, dh]) + the prompt
     /// |Q| statistic, quantizing everything but the most recent tokens.
+    /// Leases the quantized groups' pages up front; fails without leasing
+    /// anything when the shared pool cannot cover them.
     pub fn load_prefill(
         &mut self,
         k: &[Vec<f32>],
@@ -383,15 +642,14 @@ impl RequestCache {
         t: usize,
     ) -> Result<()> {
         let res_cap = self.heads[0][0].res.capacity;
-        let mut qt = if t > self.r_limit {
-            ((t - self.r_limit + self.group - 1) / self.group) * self.group
-        } else {
-            0
-        };
-        qt = qt.min(self.capacity).min(t / self.group * self.group);
-        let rl = t - qt;
+        let (qt, rl) = Self::prefill_split(t, self.r_limit, self.group, self.capacity);
         if rl > res_cap {
             bail!("prompt too long: residual leftover {rl} > capacity {res_cap}");
+        }
+        let need = super::pool::pages_for_tokens(qt, self.group, self.heads.len(), self.mc_n_kv);
+        if !self.pool.can_lease(need) {
+            self.pool.note_lease_failure();
+            bail!("kv pool exhausted: prefill needs {need} pages");
         }
         for l in 0..self.heads.len() {
             for h in 0..self.mc_n_kv {
@@ -402,7 +660,7 @@ impl RequestCache {
                     .qstats
                     .update(&qabs[l][h * d..(h + 1) * d], t as f32);
                 if qt > 0 {
-                    self.quantize_into(l, h, &kh[..qt * d], &vh[..qt * d], qt, 0);
+                    self.quantize_into(l, h, &kh[..qt * d], &vh[..qt * d], qt, 0)?;
                 }
                 let head = &mut self.heads[l][h];
                 head.res.extend(&kh[qt * d..], &vh[qt * d..], rl);
@@ -416,14 +674,39 @@ impl RequestCache {
     /// Append one decoded token's K/V/|Q| (from the decode step outputs);
     /// triggers a lazy quantization flush when the residual has reached
     /// `r_limit`. When the quantized window is full, tokens keep
-    /// accumulating in the residual until it genuinely overflows.
+    /// accumulating in the residual until it genuinely overflows. When a
+    /// flush is due but the **shared pool** has no pages (and eviction
+    /// would not free any), the flush is deferred the same way — the token
+    /// rides in the residual and `flush_deferrals` counts the stall; the
+    /// scheduler parks the slot before the residual itself overflows.
     pub fn append(&mut self, knew: &[Vec<f32>], vnew: &[Vec<f32>], qabs: &[Vec<f32>]) -> Result<()> {
+        let res_cap = self.heads[0][0].res.capacity;
         let can_flush = self.qlen + self.r_limit <= self.capacity
             || !matches!(self.policy, crate::kvcache::eviction::CachePolicy::Stop);
         if self.rlen() >= self.r_limit && can_flush {
-            self.flush()?;
+            // net demand on the pool: eviction (window full under a
+            // sliding-window policy) frees its pages before the flush
+            // leases, so only the shortfall counts — due_flush_pages
+            // mirrors exactly that
+            let net = self.due_flush_pages();
+            let pool_dry = net > 0 && !self.pool.can_lease(net);
+            if pool_dry || self.flush_hold {
+                if self.rlen() >= res_cap {
+                    bail!(
+                        "cache exhausted at pos {}: pool has no pages and residual is full",
+                        self.pos
+                    );
+                }
+                self.flush_deferrals += 1;
+                if pool_dry {
+                    self.pool.note_lease_failure();
+                }
+            } else {
+                self.flush()?;
+            }
         }
-        if self.rlen() >= self.heads[0][0].res.capacity {
+        self.flush_hold = false;
+        if self.rlen() >= res_cap {
             bail!("cache exhausted at pos {}", self.pos);
         }
         let d = self.d;
@@ -439,22 +722,29 @@ impl RequestCache {
     }
 
     /// Quantize `r_limit` residual tokens into the window (the App. D.1
-    /// KeyQuant event).
+    /// KeyQuant event), leasing one page per group per head. Errors without
+    /// partial mutation when the pool cannot cover the whole block.
     pub fn flush(&mut self) -> Result<()> {
         let t = self.r_limit;
         if self.qlen + t > self.capacity {
-            // extension: sliding-window eviction instead of failing
+            // extension: sliding-window eviction instead of failing — the
+            // evicted blocks' pages return to the pool before we lease
             let n = self.evict_for(self.policy, t);
             self.evicted_tokens += n;
         }
         if self.qlen + t > self.capacity {
             bail!("quantized window full ({} + {t} > {})", self.qlen, self.capacity);
         }
+        let need = self.pages_per_flush();
+        if !self.pool.can_lease(need) {
+            self.pool.note_lease_failure();
+            bail!("kv pool exhausted: flush needs {need} pages");
+        }
         for l in 0..self.heads.len() {
             for h in 0..self.mc_n_kv {
                 let (kblk, vblk) = self.heads[l][h].res.drain(t);
                 let at = self.qlen;
-                self.quantize_into(l, h, &kblk, &vblk, t, at);
+                self.quantize_into(l, h, &kblk, &vblk, t, at)?;
             }
         }
         self.qlen += t;
@@ -472,7 +762,15 @@ impl RequestCache {
         }
     }
 
-    fn quantize_into(&mut self, l: usize, h: usize, k: &[f32], v: &[f32], t: usize, at: usize) {
+    fn quantize_into(
+        &mut self,
+        l: usize,
+        h: usize,
+        k: &[f32],
+        v: &[f32],
+        t: usize,
+        at: usize,
+    ) -> Result<()> {
         let d = self.d;
         let g = self.group;
         let opts = self.method.key_opts(g);
@@ -490,10 +788,11 @@ impl RequestCache {
         }
         let order: Vec<usize> = head.idx.iter().map(|&x| x as usize).collect();
         let kw = window::quantize_key_window(&krot, t, d, head.spec, &order, opts);
-        head.store_key_window(&kw, at);
+        head.store_key_window(&kw, at)?;
         let gv = g.min(d);
         let vw = window::quantize_value_window(v, t, d, head.spec.v_bits, gv);
         head.store_value_window(&vw, at);
+        Ok(())
     }
 
     /// Exact cache bytes across all layers/heads (invariant #7).
@@ -564,6 +863,8 @@ mod tests {
         cache.load_prefill(&k, &v, &qa, 50).unwrap();
         assert_eq!(cache.qlen, 0);
         assert_eq!(cache.rlen(), 50);
+        // a short prompt leases NO pages — the point of the pool refactor
+        assert_eq!(cache.leased_pages(), 0);
         // residual keys are bit-exact (invariant #5)
         let d = mc.d_head;
         assert_eq!(cache.heads[0][1].res.keys(), &k[0][1 * 50 * d..1 * 50 * d + 50 * d]);
@@ -611,7 +912,7 @@ mod tests {
 
     #[test]
     fn streaming_accessors_match_dequant_round_trip() {
-        // scores_into / values_accumulate_into over the packed buffers must
+        // scores_into / values_accumulate_into over the packed pages must
         // agree with dequantize-then-dot for every tier mix.
         let mut rng = Pcg32::seeded(68);
         for (spec, method) in [
@@ -715,5 +1016,44 @@ mod tests {
         // after flush: qlen=512 (full); residual has 1 + 127 more = 128 slots
         assert_eq!(cache.qlen, 512);
         assert_eq!(err_at, Some(128), "should exhaust exactly at residual cap");
+    }
+
+    #[test]
+    fn page_accounting_tracks_qlen_and_returns_on_drop() {
+        let (mc, _, mut cache) = setup(Method::mixkvq("mix30"), 32);
+        let mut rng = Pcg32::seeded(69);
+        let t = 128;
+        let (k, v, qa) = rand_kv(&mut rng, &mc, t);
+        cache.load_prefill(&k, &v, &qa, t).unwrap();
+        // one page per group per (layer, kv-head)
+        let groups = cache.qlen / 32;
+        assert_eq!(cache.leased_pages(), groups * mc.n_layers * mc.n_kv_heads);
+        assert_eq!(cache.pool().leased(), cache.leased_pages());
+        assert_eq!(cache.pages_per_flush(), mc.n_layers * mc.n_kv_heads);
+        let pool = cache.pool().clone();
+        drop(cache);
+        assert_eq!(pool.leased(), 0, "retirement must return every page");
+    }
+
+    #[test]
+    fn contiguous_snapshot_roundtrips_through_pages() {
+        let (mc, _, mut cache) = setup(Method::mixkvq("mix30"), 32);
+        let mut rng = Pcg32::seeded(70);
+        let (k, v, qa) = rand_kv(&mut rng, &mc, 96);
+        cache.load_prefill(&k, &v, &qa, 96).unwrap();
+        let head = &cache.heads[0][0];
+        let c = head.contiguous();
+        let (n16, n2) = (head.spec.n16, head.spec.n2);
+        assert_eq!(c.k16.len(), cache.qlen * n16);
+        assert_eq!(c.k2p.len(), cache.qlen * n2 / 4);
+        assert_eq!(c.k2s.len(), (cache.qlen / 32) * n2);
+        // the snapshot and the paged dequant agree on what is stored
+        let kd = head.dequant_keys(cache.qlen);
+        let d = mc.d_head;
+        for tok in 0..cache.qlen {
+            for j in 0..n16 {
+                assert_eq!(kd[tok * d + head.idx[j] as usize], c.k16[tok * n16 + j]);
+            }
+        }
     }
 }

@@ -7,8 +7,11 @@
 //! quantized window is full, drop the oldest non-sink group-aligned block
 //! so decoding can continue indefinitely at bounded memory.
 //!
-//! Eviction operates directly on the packed buffers (byte shifts), so a
-//! compaction costs O(window bytes) with no dequantization.
+//! With paged storage an eviction is a **page-table splice**: the evicted
+//! groups' leases are drained from the table and their pages return to the
+//! shared pool immediately (kvcache::pool), so a compaction costs O(evicted
+//! pages) pointer operations — no byte shifting, no scale re-indexing, and
+//! the freed pages are leasable by other requests in the same tick.
 //!
 //! Positions are NOT renumbered (RoPE already baked into stored keys);
 //! like StreamingLLM-with-cache this changes attention structure relative
@@ -26,39 +29,18 @@ pub enum CachePolicy {
     SlidingWindow { sink: usize, evict: usize },
 }
 
-/// Shift a row-major [capacity, w] buffer left by `n` rows over the range
-/// `[from, len)` (drops rows `[from, from+n)`).
-fn shift_rows<T: Copy>(buf: &mut [T], w: usize, from: usize, n: usize, len: usize) {
-    if w == 0 || n == 0 {
-        return;
-    }
-    buf.copy_within((from + n) * w..len * w, from * w);
-}
-
 impl HeadState {
-    /// Drop quantized tokens `[sink, sink+evict)`, compacting codes and
-    /// scales. Caller updates the request-level qlen.
+    /// Drop quantized tokens `[sink, sink+evict)`: splice their pages out
+    /// of the page table, returning the leases to the pool. Caller updates
+    /// the request-level qlen.
     pub fn evict_block(&mut self, sink: usize, evict: usize, qlen: usize) {
         let g = self.group;
         assert!(sink % g == 0 && evict % g == 0, "eviction must be group-aligned");
         assert!(sink + evict <= qlen);
-        let (n16, n4, n2) = (self.spec.n16, self.spec.n4, self.spec.n2);
-        let d = self.d;
-        shift_rows(&mut self.k16, n16, sink, evict, qlen);
-        shift_rows(&mut self.k4p, n4 / 2, sink, evict, qlen);
-        shift_rows(&mut self.k2p, n2 / 4, sink, evict, qlen);
-        let (gs, ge, gq) = (sink / g, evict / g, qlen / g);
-        shift_rows(&mut self.k4s, n4, gs, ge, gq);
-        shift_rows(&mut self.k4z, n4, gs, ge, gq);
-        shift_rows(&mut self.k2s, n2, gs, ge, gq);
-        shift_rows(&mut self.k2z, n2, gs, ge, gq);
-        if self.spec.v_bits == 16 {
-            shift_rows(&mut self.vfull, d, sink, evict, qlen);
-        } else {
-            shift_rows(&mut self.vp, d * self.spec.v_bits / 8, sink, evict, qlen);
-            shift_rows(&mut self.vs, d / g, sink, evict, qlen);
-            shift_rows(&mut self.vz, d / g, sink, evict, qlen);
-        }
+        debug_assert!(qlen <= self.pages_leased() * g);
+        let (gs, ge) = (sink / g, evict / g);
+        // drain drops each PageLease, which returns its page to the pool
+        drop(self.pages.drain(gs..gs + ge));
     }
 }
 
@@ -163,5 +145,23 @@ mod tests {
         assert_eq!(cache.qlen, q0 - 32);
         let v_after = cache.heads[0][1].dequant_values(cache.qlen);
         assert_eq!(&v_after[..(q0 - 32) * d], &v_before[32 * d..q0 * d]);
+    }
+
+    #[test]
+    fn eviction_returns_pages_to_pool() {
+        let (mc, mut cache) = cache_with(256, Method::mixkvq("mix30"));
+        let q0 = cache.qlen; // 224 → 7 pages per head
+        let leased0 = cache.pool().leased();
+        assert_eq!(leased0, (q0 / 32) * mc.n_kv_heads);
+        let evicted = cache.evict_for(
+            CachePolicy::SlidingWindow { sink: 32, evict: 64 },
+            cache.capacity() - cache.qlen + 64,
+        );
+        assert_eq!(evicted, 64);
+        assert_eq!(
+            cache.pool().leased(),
+            leased0 - (64 / 32) * mc.n_kv_heads,
+            "evicted blocks must free their pages immediately"
+        );
     }
 }

@@ -1,0 +1,596 @@
+//! Shared paged KV storage: fixed-size, group-aligned pages leased from a
+//! `KvPool`.
+//!
+//! # Why pages
+//!
+//! The pre-pool layout allocated every tier buffer at full window capacity
+//! `C` per (layer, kv-head) per request, so a 10-token request cost as much
+//! memory (and as much admission budget) as a 4096-token one. Pages make a
+//! request's footprint proportional to what it actually holds: storage is
+//! leased one quantization group at a time and returned the moment it is
+//! evicted or the request retires, and the scheduler admits on current pool
+//! occupancy instead of the worst case.
+//!
+//! # Page layout
+//!
+//! One [`Page`] stores **one quantization group of G tokens for one
+//! (layer, kv-head)** across every tier buffer of the Fig. 4 layout:
+//!
+//! ```text
+//! f32 arena: [ k16: G*n16 | k4s: n4 | k4z: n4 | k2s: n2 | k2z: n2
+//!            | vs: G*d/gv | vz: G*d/gv ]          (v_bits < 16)
+//!            [ k16: G*n16 | ... | vfull: G*d ]    (v_bits == 16)
+//! u8  arena: [ k4p: G*n4/2 | k2p: G*n2/4 | vp: G*d*v_bits/8 ]
+//! ```
+//!
+//! The per-group scales/zeros live *inside* the page (a group is exactly
+//! one scale block), so evicting a group-aligned window block is a page-
+//! table splice — no byte shifting, no scale re-indexing. Offsets are
+//! derived per [`TierSpec`] by [`PageLayout`]; the same alignment
+//! invariants as `quant::packing::packed_len` apply (`n4 % 2 == 0`,
+//! `n2 % 4 == 0`, value rows fill whole bytes), so every region is
+//! byte-exact and rows are indexed as `ti * row_bytes` within the page.
+//!
+//! A pool's arenas are sized to the **largest** layout it must serve
+//! ([`KvPool::for_specs`]), so heterogeneous decode variants (mixed-
+//! precision tenants, layer-wise specs like kvtuner) share one free list
+//! with zero fragmentation; smaller specs use arena prefixes.
+//!
+//! # Leasing discipline
+//!
+//! [`KvPool::lease`] pops a recycled page (zeroed — no cross-request data
+//! leakage) or grows the pool when unbounded; [`PageLease`] returns the
+//! page on `Drop`, so eviction, cancellation, admission errors, and request
+//! retirement all free storage without an explicit release call — leaks are
+//! structurally impossible (`tests/paged_cache.rs` asserts
+//! `pool.leased() == 0` after drains). Bounded pools (the serving
+//! configuration) are pre-warmed so steady-state leasing never touches the
+//! allocator.
+
+use std::cell::RefCell;
+use std::ops::Range;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::quant::packing;
+use crate::quant::window::TierSpec;
+
+/// Pages `tokens` group-aligned tokens occupy across `n_layers ×
+/// n_kv_heads` heads — one page per quantization group per head. The
+/// single source of the pages-per-token derivation shared by leasing
+/// (`RequestCache::load_prefill`), flush sizing (`pages_per_flush`,
+/// `due_flush_pages`), and admission (`Engine::prefill_pages_for`, the
+/// server's reserve watermark) — these MUST agree or the scheduler admits
+/// on counts that no longer match what the cache leases.
+pub fn pages_for_tokens(tokens: usize, group: usize, n_layers: usize, n_kv_heads: usize) -> usize {
+    (tokens / group) * n_layers * n_kv_heads
+}
+
+/// Raw storage for one page: an f32 arena (BF16-tier columns, scales,
+/// zeros, full-precision values) and a byte arena (packed u4/u2 codes).
+#[derive(Clone, Debug)]
+pub struct Page {
+    pub f: Vec<f32>,
+    pub b: Vec<u8>,
+}
+
+/// Per-spec offsets into a page's arenas (see the module docs for the
+/// region order). Pure arithmetic over `TierSpec` — two caches with the
+/// same spec always agree on the layout.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PageLayout {
+    pub spec: TierSpec,
+    /// Tokens per page (= key scale-group size G).
+    pub g: usize,
+    pub d: usize,
+    /// Value-side channel group (G clamped to d).
+    pub gv: usize,
+    o_k4s: usize,
+    o_k4z: usize,
+    o_k2s: usize,
+    o_k2z: usize,
+    o_vs: usize,
+    o_vz: usize,
+    o_vfull: usize,
+    /// Total f32 elements this layout occupies.
+    pub f_len: usize,
+    o_k2p: usize,
+    o_vp: usize,
+    /// Total bytes this layout occupies.
+    pub b_len: usize,
+}
+
+/// Immutable view of one page under a layout: every tier region as an
+/// exactly-sized slice (empty when the tier is absent). Construction is
+/// pure slicing — no allocation, safe for the zero-alloc decode hot path.
+pub struct GroupView<'a> {
+    pub k16: &'a [f32],
+    pub k4p: &'a [u8],
+    pub k4s: &'a [f32],
+    pub k4z: &'a [f32],
+    pub k2p: &'a [u8],
+    pub k2s: &'a [f32],
+    pub k2z: &'a [f32],
+    pub vp: &'a [u8],
+    pub vs: &'a [f32],
+    pub vz: &'a [f32],
+    pub vfull: &'a [f32],
+}
+
+impl PageLayout {
+    pub fn new(spec: TierSpec, d: usize, group: usize) -> PageLayout {
+        // Same alignment invariants as HeadState / packing::packed_len:
+        // misaligned tier widths would corrupt the adjacent token's row.
+        debug_assert!(spec.n4 % 2 == 0, "u4 tier width {} must be even", spec.n4);
+        debug_assert!(spec.n2 % 4 == 0, "u2 tier width {} must be a multiple of 4", spec.n2);
+        debug_assert!(
+            spec.v_bits == 16 || d % (8 / spec.v_bits) == 0,
+            "value rows of {d} channels at {}-bit do not fill whole bytes",
+            spec.v_bits
+        );
+        let g = group;
+        let gv = group.min(d);
+        let mut f = g * spec.n16; // k16 at offset 0
+        let o_k4s = f;
+        f += spec.n4;
+        let o_k4z = f;
+        f += spec.n4;
+        let o_k2s = f;
+        f += spec.n2;
+        let o_k2z = f;
+        f += spec.n2;
+        let (o_vs, o_vz, o_vfull);
+        if spec.v_bits == 16 {
+            o_vs = f;
+            o_vz = f;
+            o_vfull = f;
+            f += g * d;
+        } else {
+            o_vs = f;
+            f += g * d / gv;
+            o_vz = f;
+            f += g * d / gv;
+            o_vfull = f;
+        }
+        let mut b = packing::packed_len(g * spec.n4, 4); // k4p at offset 0
+        let o_k2p = b;
+        b += packing::packed_len(g * spec.n2, 2);
+        let o_vp = b;
+        if spec.v_bits != 16 {
+            b += packing::packed_len(g * d, spec.v_bits);
+        }
+        PageLayout {
+            spec,
+            g,
+            d,
+            gv,
+            o_k4s,
+            o_k4z,
+            o_k2s,
+            o_k2z,
+            o_vs,
+            o_vz,
+            o_vfull,
+            f_len: f,
+            o_k2p,
+            o_vp,
+            b_len: b,
+        }
+    }
+
+    // --- f32 arena regions -------------------------------------------
+    pub fn k16r(&self) -> Range<usize> {
+        0..self.g * self.spec.n16
+    }
+    pub fn k4sr(&self) -> Range<usize> {
+        self.o_k4s..self.o_k4s + self.spec.n4
+    }
+    pub fn k4zr(&self) -> Range<usize> {
+        self.o_k4z..self.o_k4z + self.spec.n4
+    }
+    pub fn k2sr(&self) -> Range<usize> {
+        self.o_k2s..self.o_k2s + self.spec.n2
+    }
+    pub fn k2zr(&self) -> Range<usize> {
+        self.o_k2z..self.o_k2z + self.spec.n2
+    }
+    pub fn vsr(&self) -> Range<usize> {
+        let n = if self.spec.v_bits == 16 { 0 } else { self.g * self.d / self.gv };
+        self.o_vs..self.o_vs + n
+    }
+    pub fn vzr(&self) -> Range<usize> {
+        let n = if self.spec.v_bits == 16 { 0 } else { self.g * self.d / self.gv };
+        self.o_vz..self.o_vz + n
+    }
+    pub fn vfullr(&self) -> Range<usize> {
+        let n = if self.spec.v_bits == 16 { self.g * self.d } else { 0 };
+        self.o_vfull..self.o_vfull + n
+    }
+
+    // --- byte arena regions ------------------------------------------
+    pub fn k4pr(&self) -> Range<usize> {
+        0..packing::packed_len(self.g * self.spec.n4, 4)
+    }
+    pub fn k2pr(&self) -> Range<usize> {
+        self.o_k2p..self.o_k2p + packing::packed_len(self.g * self.spec.n2, 2)
+    }
+    pub fn vpr(&self) -> Range<usize> {
+        let n = if self.spec.v_bits == 16 {
+            0
+        } else {
+            packing::packed_len(self.g * self.d, self.spec.v_bits)
+        };
+        self.o_vp..self.o_vp + n
+    }
+
+    /// Every tier region of `page` as exactly-sized slices.
+    #[inline]
+    pub fn view<'a>(&self, page: &'a Page) -> GroupView<'a> {
+        GroupView {
+            k16: &page.f[self.k16r()],
+            k4p: &page.b[self.k4pr()],
+            k4s: &page.f[self.k4sr()],
+            k4z: &page.f[self.k4zr()],
+            k2p: &page.b[self.k2pr()],
+            k2s: &page.f[self.k2sr()],
+            k2z: &page.f[self.k2zr()],
+            vp: &page.b[self.vpr()],
+            vs: &page.f[self.vsr()],
+            vz: &page.f[self.vzr()],
+            vfull: &page.f[self.vfullr()],
+        }
+    }
+
+    /// Host bytes one page occupies in the pool arenas (f32 scales etc.).
+    pub fn host_bytes(&self) -> usize {
+        4 * self.f_len + self.b_len
+    }
+
+    /// Deployment-layout bytes of one page (the accountant's byte model:
+    /// BF16 outlier tier and scales/zeros at 2 B, packed codes as-is) —
+    /// `G × accountant::bytes_per_token`.
+    pub fn deploy_bytes(&self) -> usize {
+        let s = self.spec;
+        let key = 2 * self.g * s.n16
+            + self.g * s.n4 / 2
+            + self.g * s.n2 / 4
+            + 2 * 2 * (s.n4 + s.n2);
+        let val = if s.v_bits == 16 {
+            2 * self.g * self.d
+        } else {
+            self.g * self.d * s.v_bits / 8 + 2 * 2 * self.g * self.d / self.gv
+        };
+        key + val
+    }
+}
+
+struct PoolInner {
+    f_len: usize,
+    b_len: usize,
+    /// `None` = unbounded (per-request private pools); `Some` = the shared
+    /// serving pool, capped at a page budget.
+    max_pages: Option<usize>,
+    free: Vec<Page>,
+    leased: usize,
+    high_water: usize,
+    lease_failures: u64,
+    total_leases: u64,
+    /// Deployment bytes charged per leased page (worst layout the pool
+    /// serves) — the accountant's unit for occupancy gauges.
+    page_deploy_bytes: usize,
+}
+
+/// Counter snapshot for metrics/gauges (`coordinator::metrics`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    pub leased: usize,
+    pub free: usize,
+    pub max_pages: Option<usize>,
+    pub high_water: usize,
+    pub lease_failures: u64,
+    pub total_leases: u64,
+    pub page_host_bytes: usize,
+    pub page_deploy_bytes: usize,
+}
+
+/// Cheap-to-clone handle to a shared page pool. Single-threaded by design
+/// (like the rest of the coordinator): `Rc<RefCell>` internally, so leases
+/// and returns are pointer operations on one free list.
+#[derive(Clone)]
+pub struct KvPool {
+    inner: Rc<RefCell<PoolInner>>,
+}
+
+impl KvPool {
+    fn with_arenas(
+        f_len: usize,
+        b_len: usize,
+        max_pages: Option<usize>,
+        page_deploy_bytes: usize,
+    ) -> KvPool {
+        KvPool {
+            inner: Rc::new(RefCell::new(PoolInner {
+                f_len,
+                b_len,
+                max_pages,
+                free: Vec::new(),
+                leased: 0,
+                high_water: 0,
+                lease_failures: 0,
+                total_leases: 0,
+                page_deploy_bytes,
+            })),
+        }
+    }
+
+    /// Pool whose arenas fit every layout in `specs` (a shared pool serves
+    /// heterogeneous variants — including layer-wise ones — from one free
+    /// list). `max_pages: None` grows on demand; `Some(n)` is a hard cap.
+    pub fn for_specs<'s>(
+        specs: impl IntoIterator<Item = &'s TierSpec>,
+        d: usize,
+        group: usize,
+        max_pages: Option<usize>,
+    ) -> KvPool {
+        let mut f_len = 0;
+        let mut b_len = 0;
+        let mut deploy = 0;
+        for &spec in specs {
+            let lay = PageLayout::new(spec, d, group);
+            f_len = f_len.max(lay.f_len);
+            b_len = b_len.max(lay.b_len);
+            deploy = deploy.max(lay.deploy_bytes());
+        }
+        KvPool::with_arenas(f_len, b_len, max_pages, deploy)
+    }
+
+    /// Unbounded private pool for one layout (standalone caches, tests,
+    /// the reference driver).
+    pub fn unbounded_for(layout: &PageLayout) -> KvPool {
+        KvPool::with_arenas(layout.f_len, layout.b_len, None, layout.deploy_bytes())
+    }
+
+    /// Does `layout` fit in this pool's pages?
+    pub fn fits(&self, layout: &PageLayout) -> bool {
+        let inner = self.inner.borrow();
+        layout.f_len <= inner.f_len && layout.b_len <= inner.b_len
+    }
+
+    /// Allocate up to `n` pages into the free list so steady-state leasing
+    /// never hits the allocator (bounded pools clamp at their cap).
+    pub fn prewarm(&self, n: usize) {
+        let mut inner = self.inner.borrow_mut();
+        let cap = inner
+            .max_pages
+            .map(|m| m.saturating_sub(inner.leased + inner.free.len()))
+            .unwrap_or(n)
+            .min(n);
+        let (f_len, b_len) = (inner.f_len, inner.b_len);
+        for _ in 0..cap {
+            inner.free.push(Page { f: vec![0.0; f_len], b: vec![0; b_len] });
+        }
+    }
+
+    /// Can `n` more pages be leased right now? Never counts as a failure —
+    /// this is the scheduler's parking probe.
+    pub fn can_lease(&self, n: usize) -> bool {
+        let inner = self.inner.borrow();
+        match inner.max_pages {
+            Some(max) => inner.leased + n <= max,
+            None => true,
+        }
+    }
+
+    /// Lease one page (zeroed). `Err` when a bounded pool is at its cap —
+    /// recorded in the lease-failure counter.
+    pub fn lease(&self) -> Result<PageLease> {
+        let mut inner = self.inner.borrow_mut();
+        if let Some(max) = inner.max_pages {
+            if inner.leased >= max {
+                inner.lease_failures += 1;
+                drop(inner);
+                bail!("kv pool exhausted: all {max} pages leased");
+            }
+        }
+        let page = match inner.free.pop() {
+            Some(mut p) => {
+                // recycled page: scrub so no tier data leaks across requests
+                p.f.fill(0.0);
+                p.b.fill(0);
+                p
+            }
+            None => Page { f: vec![0.0; inner.f_len], b: vec![0; inner.b_len] },
+        };
+        inner.leased += 1;
+        inner.total_leases += 1;
+        inner.high_water = inner.high_water.max(inner.leased);
+        drop(inner);
+        Ok(PageLease { page: Some(page), pool: Rc::clone(&self.inner) })
+    }
+
+    /// Record an externally observed lease failure (e.g. a deferred flush
+    /// that never called `lease`).
+    pub fn note_lease_failure(&self) {
+        self.inner.borrow_mut().lease_failures += 1;
+    }
+
+    pub fn leased(&self) -> usize {
+        self.inner.borrow().leased
+    }
+
+    /// Pages still leasable. Unbounded pools report `usize::MAX`.
+    pub fn available(&self) -> usize {
+        let inner = self.inner.borrow();
+        match inner.max_pages {
+            Some(max) => max.saturating_sub(inner.leased),
+            None => usize::MAX,
+        }
+    }
+
+    pub fn max_pages(&self) -> Option<usize> {
+        self.inner.borrow().max_pages
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let inner = self.inner.borrow();
+        PoolStats {
+            leased: inner.leased,
+            free: inner.free.len(),
+            max_pages: inner.max_pages,
+            high_water: inner.high_water,
+            lease_failures: inner.lease_failures,
+            total_leases: inner.total_leases,
+            page_host_bytes: 4 * inner.f_len + inner.b_len,
+            page_deploy_bytes: inner.page_deploy_bytes,
+        }
+    }
+
+    /// Deployment bytes one leased page is charged at (worst layout the
+    /// pool serves) — `budget_bytes / page_deploy_bytes` sizes the pool.
+    pub fn page_deploy_bytes(&self) -> usize {
+        self.inner.borrow().page_deploy_bytes
+    }
+}
+
+/// Exclusive lease on one page; returns it to the pool's free list on drop
+/// (eviction, cancellation, error unwinding, request retirement — all the
+/// release paths are the one destructor).
+pub struct PageLease {
+    page: Option<Page>,
+    pool: Rc<RefCell<PoolInner>>,
+}
+
+impl PageLease {
+    #[inline]
+    pub fn page(&self) -> &Page {
+        self.page.as_ref().expect("page present until drop")
+    }
+
+    #[inline]
+    pub fn page_mut(&mut self) -> &mut Page {
+        self.page.as_mut().expect("page present until drop")
+    }
+}
+
+impl Drop for PageLease {
+    fn drop(&mut self) {
+        let mut inner = self.pool.borrow_mut();
+        inner.leased -= 1;
+        if let Some(page) = self.page.take() {
+            inner.free.push(page);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mixspec() -> TierSpec {
+        TierSpec { n16: 2, n4: 2, n2: 28, v_bits: 2 }
+    }
+
+    #[test]
+    fn layout_regions_are_disjoint_and_exhaustive() {
+        for spec in [
+            mixspec(),
+            TierSpec { n16: 0, n4: 32, n2: 0, v_bits: 4 },
+            TierSpec { n16: 32, n4: 0, n2: 0, v_bits: 16 },
+            TierSpec { n16: 0, n4: 0, n2: 32, v_bits: 2 },
+        ] {
+            let lay = PageLayout::new(spec, 32, 32);
+            let mut covered_f = vec![false; lay.f_len];
+            for r in [lay.k16r(), lay.k4sr(), lay.k4zr(), lay.k2sr(), lay.k2zr(), lay.vsr(), lay.vzr(), lay.vfullr()] {
+                for i in r {
+                    assert!(!covered_f[i], "{spec:?}: f32 overlap at {i}");
+                    covered_f[i] = true;
+                }
+            }
+            assert!(covered_f.iter().all(|&c| c), "{spec:?}: f32 gap");
+            let mut covered_b = vec![false; lay.b_len];
+            for r in [lay.k4pr(), lay.k2pr(), lay.vpr()] {
+                for i in r {
+                    assert!(!covered_b[i], "{spec:?}: byte overlap at {i}");
+                    covered_b[i] = true;
+                }
+            }
+            assert!(covered_b.iter().all(|&c| c), "{spec:?}: byte gap");
+        }
+    }
+
+    #[test]
+    fn deploy_bytes_matches_accountant_per_token_model() {
+        let d = 32;
+        let g = 32;
+        for spec in [mixspec(), TierSpec { n16: 32, n4: 0, n2: 0, v_bits: 16 }] {
+            let lay = PageLayout::new(spec, d, g);
+            let per_tok = crate::kvcache::accountant::bytes_per_token(&spec, d, g);
+            assert!(
+                ((lay.deploy_bytes() as f64) - per_tok * g as f64).abs() < 1e-9,
+                "{spec:?}: {} vs {}",
+                lay.deploy_bytes(),
+                per_tok * g as f64
+            );
+        }
+    }
+
+    #[test]
+    fn bounded_pool_caps_and_recycles() {
+        let lay = PageLayout::new(mixspec(), 32, 32);
+        let pool = KvPool::for_specs([&mixspec()], 32, 32, Some(2));
+        assert!(pool.fits(&lay));
+        pool.prewarm(10); // clamps to cap
+        let a = pool.lease().unwrap();
+        let b = pool.lease().unwrap();
+        assert_eq!(pool.leased(), 2);
+        assert_eq!(pool.available(), 0);
+        assert!(!pool.can_lease(1));
+        assert!(pool.lease().is_err());
+        assert_eq!(pool.stats().lease_failures, 1);
+        drop(a);
+        assert_eq!(pool.available(), 1);
+        let c = pool.lease().unwrap();
+        assert!(c.page().f.iter().all(|&x| x == 0.0), "recycled page must be scrubbed");
+        drop(b);
+        drop(c);
+        assert_eq!(pool.leased(), 0);
+        assert_eq!(pool.stats().high_water, 2);
+        assert_eq!(pool.stats().total_leases, 3);
+    }
+
+    #[test]
+    fn unbounded_pool_grows_and_reclaims() {
+        let pool = KvPool::for_specs([&mixspec()], 32, 32, None);
+        let leases: Vec<_> = (0..5).map(|_| pool.lease().unwrap()).collect();
+        assert_eq!(pool.leased(), 5);
+        assert_eq!(pool.available(), usize::MAX);
+        drop(leases);
+        assert_eq!(pool.leased(), 0);
+        assert_eq!(pool.stats().free, 5);
+    }
+
+    #[test]
+    fn shared_pool_sized_for_largest_spec() {
+        let bf16 = TierSpec { n16: 32, n4: 0, n2: 0, v_bits: 16 };
+        let pool = KvPool::for_specs([&mixspec(), &bf16], 32, 32, None);
+        assert!(pool.fits(&PageLayout::new(bf16, 32, 32)));
+        assert!(pool.fits(&PageLayout::new(mixspec(), 32, 32)));
+        // page charged at the worst (bf16) deployment cost
+        assert_eq!(
+            pool.page_deploy_bytes(),
+            PageLayout::new(bf16, 32, 32).deploy_bytes()
+        );
+    }
+
+    #[test]
+    fn lease_writes_are_isolated_per_page() {
+        let pool = KvPool::for_specs([&mixspec()], 32, 32, None);
+        let mut a = pool.lease().unwrap();
+        let mut b = pool.lease().unwrap();
+        a.page_mut().f[0] = 1.0;
+        b.page_mut().f[0] = 2.0;
+        assert_eq!(a.page().f[0], 1.0);
+        assert_eq!(b.page().f[0], 2.0);
+    }
+}

@@ -59,6 +59,40 @@
 //! engine's batch assembly pools its decode-arg buffers per variant the
 //! same way ([`coordinator::engine::EngineTimers`] reports the reuse rate).
 //!
+//! ## Paged KV storage (the `KvPool`)
+//!
+//! Cache storage is **leased, not preallocated**: a request's quantized
+//! window lives in fixed-size, group-aligned pages from a shared
+//! [`kvcache::pool::KvPool`]. One page holds one quantization group (G
+//! tokens) for one (layer, kv-head) across every tier buffer — packed
+//! u4/u2 codes, the group's scales/zeros, value rows, and the BF16 outlier
+//! columns (layout derivation in [`kvcache::pool::PageLayout`]; alignment
+//! invariants in [`quant::packing`]). Pages are leased on prefill/flush and
+//! returned on eviction, cancellation, or retirement via lease `Drop`, so
+//! a 10-token request holds 10 tokens' worth of pages — not window
+//! capacity C. Consequences across the stack:
+//!
+//! * the scheduler admits on **pool occupancy** with a reserve watermark
+//!   ([`coordinator::scheduler::Scheduler::try_admit_pages`]), so short
+//!   requests reach ≥2× the concurrency worst-case reservation allowed
+//!   under the same byte budget (`worst_case_request_bytes` survives only
+//!   as the reject-at-submit bound);
+//! * a decode slot whose due flush cannot lease pages is **parked** for the
+//!   tick, its tokens riding in the residual, and resumes when pages free
+//!   up ([`coordinator::router::Server`]); an all-parked deadlock sheds the
+//!   largest page-holder as CacheFull;
+//! * group-aligned eviction is a page-table splice (kvcache::eviction) —
+//!   freed pages are leasable by other tenants in the same tick;
+//! * the fused decode path and the engine's batch gathers stream page by
+//!   page ([`kvcache::cache::HeadState::scores_into`],
+//!   [`kvcache::cache::HeadState::copy_field_f32`]) and stay zero-alloc
+//!   (bounded pools are pre-warmed; `tests/fused_decode.rs` gates both
+//!   storage configurations, `tests/paged_cache.rs` property-tests paged ↔
+//!   contiguous bit-identity under append/flush/evict interleavings);
+//! * `Metrics` carries pool gauges (pages leased, high water, lease
+//!   failures, park/resume/preemption counts) and `mixkvq info` prints
+//!   bytes-per-page and pages-per-request-at-C for every `MethodSpec`.
+//!
 //! See DESIGN.md for the experiment index and EXPERIMENTS.md for results.
 
 pub mod util {
@@ -90,6 +124,7 @@ pub mod kvcache {
     pub mod accountant;
     pub mod cache;
     pub mod eviction;
+    pub mod pool;
     pub mod residual;
 }
 

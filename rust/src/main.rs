@@ -96,6 +96,7 @@ fn serve(args: &Args) -> Result<()> {
             memory_budget_bytes: budget_mb << 20,
             max_prefills_per_cycle: 2,
             seed,
+            reserve_pages: None,
         },
     );
     let mut rng = Pcg32::seeded(seed);
@@ -129,6 +130,18 @@ fn serve(args: &Args) -> Result<()> {
         "arg scratch pool: {:.1}% of steps reused pooled buffers ({} KB pooled across variants)",
         b.assemble_reuse_pct,
         b.scratch_bytes_pooled / 1024
+    );
+    let ps = server.pool.stats();
+    println!(
+        "kv page pool: {} pages x {} B, high water {} ({} lease failures, \
+         {} parks / {} resumes / {} preemptions)",
+        ps.max_pages.unwrap_or(0),
+        ps.page_deploy_bytes,
+        ps.high_water,
+        ps.lease_failures,
+        server.metrics.pool_parks,
+        server.metrics.pool_resumes,
+        server.metrics.pool_preemptions,
     );
     // per-method completion counts (the routing receipt)
     for (m, n) in server.metrics.completed_by_method() {
@@ -170,7 +183,13 @@ fn info(args: &Args) -> Result<()> {
         );
     }
     let dir = artifacts_dir(args);
-    let meta = Meta::load(&dir)?;
+    let meta = match Meta::load(&dir) {
+        Ok(m) => m,
+        Err(_) => {
+            eprintln!("(artifacts/ not built — reporting the build-default shapes)");
+            Meta::default_build()
+        }
+    };
     println!("model: {:?}", meta.model);
     println!("cache: {:?}", meta.cache);
     println!("variants:");
@@ -181,6 +200,34 @@ fn info(args: &Args) -> Result<()> {
             v.key_bits,
             v.avg_bits,
             v.layers.iter().map(|l| (l.n16, l.n4, l.n2, l.v_bits)).collect::<Vec<_>>()
+        );
+    }
+    // paged-pool geometry: what each method costs the shared page pool
+    // (kvcache::pool). One page = one quantization group (G tokens) for one
+    // (layer, kv-head); bytes are the deployment layout the accountant
+    // charges. pages@C = pages a request leases with the window full.
+    let cc = &meta.cache;
+    let d = meta.model.d_head;
+    let pages_at_c = (cc.capacity / cc.group) * meta.model.n_layers * meta.model.n_kv_heads;
+    println!(
+        "page pool (G={} tokens/page, {} layers x {} kv-heads):",
+        cc.group, meta.model.n_layers, meta.model.n_kv_heads
+    );
+    for spec in MethodSpec::all() {
+        let m = spec.build();
+        let Ok(v) = meta.variant(&m.variant) else { continue };
+        let bytes_per_page = v
+            .layers
+            .iter()
+            .map(|&l| mixkvq::kvcache::pool::PageLayout::new(l, d, cc.group).deploy_bytes())
+            .max()
+            .unwrap_or(0);
+        println!(
+            "  {:<18} bytes/page={:<6} pages/request@C={} ({} KB resident at C)",
+            m.name,
+            bytes_per_page,
+            pages_at_c,
+            bytes_per_page * pages_at_c / 1024,
         );
     }
     Ok(())

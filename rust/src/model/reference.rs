@@ -462,7 +462,11 @@ impl<'a> RefModel<'a> {
     /// decomposition (quant::packing module docs) — no dequantized f32
     /// window is ever materialized — and every intermediate lands in
     /// `scratch`, so the steady-state step performs zero heap allocations
-    /// and zero `powf` calls. Semantics match [`RefModel::decode_step`]
+    /// and zero `powf` calls. Storage is page-streamed: `scores_into` /
+    /// `values_accumulate_into` walk the head's pool-leased page table one
+    /// group-page at a time (kvcache::pool), which costs the same as the
+    /// old contiguous layout — a page is exactly a scale group, so the
+    /// per-group fold already landed on page boundaries. Semantics match [`RefModel::decode_step`]
     /// over the dequantize-then-attend oracle to float-reassociation
     /// tolerance (≤1e-4 logits; enforced by tests/fused_decode.rs across
     /// the full method roster). Outputs: `scratch.logits` /

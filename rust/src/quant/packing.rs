@@ -32,6 +32,22 @@
 //! (`quant::asym::accumulate_row_u4`/`_u2`). Consumers:
 //! `kvcache::cache::HeadState::{scores_into, values_accumulate_into}` and
 //! `model::reference::RefModel::decode_step_into`.
+//!
+//! # Page layout (pooled storage ABI)
+//!
+//! Packed rows no longer live in one capacity-sized buffer: the cache
+//! stores one **page per quantization group per (layer, kv-head)**, leased
+//! from `kvcache::pool::KvPool`. A page's byte arena concatenates
+//! `[k4p: G·n4/2 | k2p: G·n2/4 | vp: G·d·v_bits/8]` and its f32 arena
+//! `[k16: G·n16 | k4s,k4z: n4 each | k2s,k2z: n2 each | vs,vz: G·d/gv each]`
+//! (or `vfull: G·d` at v_bits = 16) — the page size is that sum for the
+//! largest `TierSpec` a pool serves, so heterogeneous variants share one
+//! free list. Because a group is exactly one scale block, the group's
+//! scales/zeros ride inside its page and the same alignment invariants
+//! apply **per page**: `n4 % 2 == 0`, `n2 % 4 == 0`, and value rows fill
+//! whole bytes, so a token's row inside a page is `ti * row_bytes` with
+//! `ti = t mod G`. [`packed_len`] is the single source of those row-byte
+//! counts for both the old contiguous maths and `PageLayout`.
 
 /// Pack 4-bit codes (values 0..=15), `codes.len()` must be even.
 pub fn pack_u4(codes: &[u8], out: &mut Vec<u8>) {

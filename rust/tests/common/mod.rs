@@ -1,0 +1,39 @@
+//! Shared test utilities for the integration-test binaries.
+//!
+//! `CountingAlloc` is the steady-state zero-alloc gate: a test binary
+//! installs it as its `#[global_allocator]` and asserts that hot-path
+//! decode steps do not move the counter (tests/fused_decode.rs gates both
+//! the private-pool and the shared-prewarmed-pool decode paths; it runs on
+//! CI, so an allocation regression fails the job).
+
+#![allow(dead_code)]
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Counts every allocation (and growth realloc) routed through the global
+/// allocator.
+pub struct CountingAlloc;
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Current allocation count (monotonic; diff across a region under test).
+pub fn alloc_count() -> u64 {
+    ALLOC_COUNT.load(Ordering::SeqCst)
+}

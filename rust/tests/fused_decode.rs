@@ -4,13 +4,15 @@
 //!   `MethodSpec::all()` roster (every tier split, v_bits ∈ {2,4,16},
 //!   grouped and global scales, rotation, clipping, layer-wise specs);
 //! * steady-state zero-alloc: a counting global allocator proves a
-//!   non-flushing fused decode step performs zero heap allocations.
+//!   non-flushing fused decode step performs zero heap allocations;
+//! * the same zero-alloc bar for a cache leasing from a shared pre-warmed
+//!   `KvPool` — the serving storage configuration.
 //!
-//! Both tests serialize on a shared lock so the allocation counter is not
-//! polluted by a concurrently running test in this binary.
+//! The tests serialize on a shared lock so the allocation counter is not
+//! polluted by a concurrently running test in this binary. The counting
+//! allocator itself lives in tests/common (shared with the paged-cache
+//! suite, which gates the shared-pool decode path the same way).
 
-use std::alloc::{GlobalAlloc, Layout, System};
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use mixkvq::harness::refdriver::RefDriver;
@@ -20,30 +22,10 @@ use mixkvq::model::weights::Weights;
 use mixkvq::quant::methods::MethodSpec;
 use mixkvq::util::rng::Pcg32;
 
-/// Counts every allocation (and growth realloc) routed through the global
-/// allocator — the steady-state fused decode step must not move it.
-struct CountingAlloc;
-
-static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
-
-unsafe impl GlobalAlloc for CountingAlloc {
-    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
-        System.alloc(layout)
-    }
-
-    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
-    }
-
-    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
-        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
-    }
-}
+mod common;
 
 #[global_allocator]
-static GLOBAL: CountingAlloc = CountingAlloc;
+static GLOBAL: common::CountingAlloc = common::CountingAlloc;
 
 static SERIAL: Mutex<()> = Mutex::new(());
 
@@ -119,9 +101,9 @@ fn steady_state_fused_step_allocates_nothing() {
             driver.step_with(&mut cache, tok, &mut scratch).unwrap();
             continue;
         }
-        let before = ALLOC_COUNT.load(Ordering::SeqCst);
+        let before = common::alloc_count();
         driver.step_with(&mut cache, tok, &mut scratch).unwrap();
-        let after = ALLOC_COUNT.load(Ordering::SeqCst);
+        let after = common::alloc_count();
         measured += after - before;
         steps += 1;
     }
@@ -130,4 +112,57 @@ fn steady_state_fused_step_allocates_nothing() {
         measured, 0,
         "steady-state fused decode allocated {measured} times over {steps} steps"
     );
+}
+
+/// Same zero-alloc bar on the SERVING storage configuration: the cache
+/// leases its pages from a shared, bounded, pre-warmed pool (kvcache::pool)
+/// — page provenance must not add a single steady-state allocation (pool
+/// leases are excluded by pre-warming; flush steps, which lease, are
+/// skipped the same way as above).
+#[test]
+fn steady_state_paged_pool_step_allocates_nothing() {
+    let _guard = SERIAL.lock().unwrap();
+    let meta = Meta::default_build();
+    let mc = meta.model.clone();
+    let weights = Weights::random(&mc, 31);
+    let method = MethodSpec::MixKvq { op: mixkvq::quant::methods::MixOp::Mix30 }.build();
+    let layers = meta.variant("mix30").unwrap().layers.clone();
+    let r_limit = 32;
+    let driver = RefDriver::new(mc.clone(), meta.cache.clone(), &weights, layers.clone(), method, r_limit);
+    let pool = mixkvq::kvcache::pool::KvPool::for_specs(
+        layers.iter(),
+        mc.d_head,
+        meta.cache.group,
+        Some(256),
+    );
+    pool.prewarm(256);
+    let mut rng = Pcg32::seeded(37);
+    let prompt: Vec<i32> = (0..72).map(|_| rng.range(1, 127) as i32).collect();
+    let (mut cache, _) = driver.prefill_pooled(&pool, &prompt).unwrap();
+    assert!(cache.qlen > 0);
+    assert!(cache.leased_pages() > 0, "pooled cache must hold leases");
+    let mut scratch =
+        DecodeScratch::new(&mc, meta.cache.capacity + meta.cache.residual + 1);
+    driver.step_with(&mut cache, 5, &mut scratch).unwrap();
+    let mut measured = 0u64;
+    let mut steps = 0u64;
+    for _ in 0..16 {
+        let tok = rng.range(1, 127) as i32;
+        if cache.rlen() + 1 >= r_limit {
+            driver.step_with(&mut cache, tok, &mut scratch).unwrap();
+            continue;
+        }
+        let before = common::alloc_count();
+        driver.step_with(&mut cache, tok, &mut scratch).unwrap();
+        let after = common::alloc_count();
+        measured += after - before;
+        steps += 1;
+    }
+    assert!(steps >= 8, "not enough non-flushing steps measured");
+    assert_eq!(
+        measured, 0,
+        "paged-pool steady-state decode allocated {measured} times over {steps} steps"
+    );
+    drop(cache);
+    assert_eq!(pool.leased(), 0, "no lease leak after retirement");
 }

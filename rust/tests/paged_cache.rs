@@ -1,0 +1,331 @@
+//! Paged KV-pool invariants (no artifacts needed):
+//!
+//! * **bit-identity property**: under randomized append/flush/evict
+//!   interleavings, the paged cache reads back exactly what the pre-pool
+//!   contiguous layout would hold — a per-head mirror maintained with the
+//!   old flat-buffer semantics (append = extend, evict = row shift) must
+//!   stay bitwise equal to `HeadState::contiguous()` at every step;
+//! * **occupancy admission**: under the same `MemoryAccountant` byte
+//!   budget, occupancy-based admission accepts ≥2× more concurrent short
+//!   requests than worst-case reservation (the headline of the refactor);
+//! * **pool exhaustion**: a due flush on an exhausted pool defers (tokens
+//!   ride the residual, `flush_deferrals` counts the park) and resumes once
+//!   pages free up; no lease leaks on error or retirement paths —
+//!   `pool.leased() == 0` after every drain.
+
+use mixkvq::coordinator::scheduler::{Scheduler, SchedulerPolicy};
+use mixkvq::kvcache::accountant::MemoryAccountant;
+use mixkvq::kvcache::cache::{ContiguousHead, HeadState, RequestCache};
+use mixkvq::kvcache::eviction::CachePolicy;
+use mixkvq::kvcache::pool::{KvPool, PageLayout};
+use mixkvq::model::config::{CacheConfig, ModelConfig};
+use mixkvq::quant::methods::Method;
+use mixkvq::quant::window::TierSpec;
+use mixkvq::util::rng::Pcg32;
+
+fn rand_kv(
+    rng: &mut Pcg32,
+    mc: &ModelConfig,
+    t: usize,
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let n = mc.n_kv_heads * t * mc.d_head;
+    let k = (0..mc.n_layers).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+    let v = (0..mc.n_layers).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+    let qa = (0..mc.n_layers)
+        .map(|_| (0..mc.n_kv_heads * mc.d_head).map(|_| rng.f32() + 0.01).collect())
+        .collect();
+    (k, v, qa)
+}
+
+/// Remove `n` rows of width `w` starting at row `from` — the old contiguous
+/// layout's eviction (shift_rows) semantics, kept here as the oracle.
+fn drain_rows<T>(v: &mut Vec<T>, w: usize, from: usize, n: usize) {
+    v.drain(from * w..(from + n) * w);
+}
+
+/// Apply a contiguous-semantics eviction of `n` tokens after `sink` to the
+/// mirror (both group-aligned, as `evict_block` asserts).
+fn mirror_evict(m: &mut ContiguousHead, head: &HeadState, sink: usize, n: usize) {
+    let g = head.group;
+    let (n16, n4, n2) = (head.spec.n16, head.spec.n4, head.spec.n2);
+    let (d, gv, vb) = (head.d, head.vgroup(), head.spec.v_bits);
+    drain_rows(&mut m.k16, n16, sink, n);
+    drain_rows(&mut m.k4p, n4 / 2, sink, n);
+    drain_rows(&mut m.k2p, n2 / 4, sink, n);
+    drain_rows(&mut m.k4s, n4, sink / g, n / g);
+    drain_rows(&mut m.k4z, n4, sink / g, n / g);
+    drain_rows(&mut m.k2s, n2, sink / g, n / g);
+    drain_rows(&mut m.k2z, n2, sink / g, n / g);
+    if vb == 16 {
+        drain_rows(&mut m.vfull, d, sink, n);
+    } else {
+        drain_rows(&mut m.vp, d * vb / 8, sink, n);
+        drain_rows(&mut m.vs, d / gv, sink, n);
+        drain_rows(&mut m.vz, d / gv, sink, n);
+    }
+}
+
+/// Append whatever the cache quantized beyond the mirror's horizon (the
+/// contiguous semantics of a flush: extend at the tail), then demand
+/// bitwise equality over the WHOLE window — any corruption of previously
+/// stored groups, mis-spliced page table, or wrong scale block shows here.
+fn sync_and_check(m: &mut ContiguousHead, head: &HeadState, ctx: &str) {
+    let snap = head.contiguous();
+    macro_rules! sync {
+        ($f:ident) => {{
+            assert!(snap.$f.len() >= m.$f.len(), "{ctx}: {} shrank unexpectedly", stringify!($f));
+            let at = m.$f.len();
+            m.$f.extend_from_slice(&snap.$f[at..]);
+        }};
+    }
+    sync!(k16);
+    sync!(k4p);
+    sync!(k4s);
+    sync!(k4z);
+    sync!(k2p);
+    sync!(k2s);
+    sync!(k2z);
+    sync!(vp);
+    sync!(vs);
+    sync!(vz);
+    sync!(vfull);
+    assert_eq!(*m, snap, "{ctx}: paged storage diverged from the contiguous oracle");
+}
+
+#[test]
+fn paged_bit_identical_to_contiguous_under_interleavings() {
+    let cases = [
+        (901u64, CachePolicy::Stop),
+        (902, CachePolicy::SlidingWindow { sink: 32, evict: 32 }),
+        (903, CachePolicy::SlidingWindow { sink: 0, evict: 64 }),
+        (904, CachePolicy::SlidingWindow { sink: 64, evict: 32 }),
+    ];
+    for (seed, policy) in cases {
+        let mc = ModelConfig { n_layers: 2, ..ModelConfig::default_build() };
+        let cc = CacheConfig { capacity: 256, residual: 64, ..CacheConfig::default_build() };
+        let spec = TierSpec { n16: 2, n4: 2, n2: 28, v_bits: 2 };
+        let mut cache =
+            RequestCache::new(&mc, &cc, &vec![spec; 2], Method::mixkvq("mix30"), 32);
+        cache.policy = policy;
+        let mut rng = Pcg32::seeded(seed);
+        let t0 = 96; // prefill: 64 quantized + 32 residual
+        let (k, v, qa) = rand_kv(&mut rng, &mc, t0);
+        cache.load_prefill(&k, &v, &qa, t0).unwrap();
+        assert_eq!(cache.qlen, 64, "{seed}");
+        let mut mirrors: Vec<Vec<ContiguousHead>> = cache
+            .heads
+            .iter()
+            .map(|row| row.iter().map(|h| h.contiguous()).collect())
+            .collect();
+        let mut evicted_seen = cache.evicted_tokens;
+        let sink = match policy {
+            CachePolicy::SlidingWindow { sink, .. } => sink,
+            CachePolicy::Stop => 0,
+        };
+        for step in 0..400 {
+            // occasionally force explicit eviction rounds on top of the
+            // flush-triggered ones (rare enough that the window still fills
+            // and the flush-path eviction fires too)
+            if step % 181 == 180 {
+                let n = cache.evict_for(policy, 64);
+                if n > 0 {
+                    for (l, row) in mirrors.iter_mut().enumerate() {
+                        for (h, m) in row.iter_mut().enumerate() {
+                            mirror_evict(m, &cache.heads[l][h], sink, n);
+                        }
+                    }
+                }
+            }
+            let (kn, vn, qn) = rand_kv(&mut rng, &mc, 1);
+            if cache.append(&kn, &vn, &qn).is_err() {
+                assert!(matches!(policy, CachePolicy::Stop), "only Stop may exhaust");
+                break;
+            }
+            let evicted_now = cache.evicted_tokens - evicted_seen;
+            evicted_seen = cache.evicted_tokens;
+            for (l, row) in mirrors.iter_mut().enumerate() {
+                for (h, m) in row.iter_mut().enumerate() {
+                    if evicted_now > 0 {
+                        mirror_evict(m, &cache.heads[l][h], sink, evicted_now);
+                    }
+                    sync_and_check(m, &cache.heads[l][h], &format!("seed {seed} step {step} l{l}h{h}"));
+                }
+            }
+        }
+        // and the pool reclaims everything at retirement
+        let pool = cache.pool().clone();
+        drop(cache);
+        assert_eq!(pool.leased(), 0, "seed {seed}: leaked leases");
+    }
+}
+
+/// The headline integration property: under the SAME byte budget, admitting
+/// on pool occupancy accepts ≥2× more concurrent short requests than the
+/// old worst-case reservation (which charged every request full window
+/// capacity C up front).
+#[test]
+fn occupancy_admission_doubles_short_request_concurrency() {
+    let mc = ModelConfig::default_build(); // 4 layers x 2 kv-heads
+    let cc = CacheConfig::default_build(); // C=512, G=32, residual 128
+    let spec = TierSpec { n16: 2, n4: 2, n2: 28, v_bits: 2 };
+    let specs = vec![spec; mc.n_layers];
+    let r_limit = 32;
+    let wc = MemoryAccountant::worst_case_request_bytes(&mc, &cc, &specs);
+    let budget = 2 * wc;
+    let worst_case_batch = budget / wc; // the old admission: exactly 2
+    assert_eq!(worst_case_batch, 2);
+
+    let layout = PageLayout::new(spec, mc.d_head, cc.group);
+    let max_pages = budget / layout.deploy_bytes();
+    let pool = KvPool::for_specs(specs.iter(), mc.d_head, cc.group, Some(max_pages));
+    pool.prewarm(max_pages);
+    // reserve: four flushes of decode headroom
+    let reserve = 4 * (r_limit / cc.group) * mc.n_layers * mc.n_kv_heads;
+    let mut sched = Scheduler::with_pool(
+        SchedulerPolicy {
+            max_prefills_per_cycle: usize::MAX,
+            per_request_bytes: wc,
+            reserve_pages: reserve,
+        },
+        budget,
+        pool.clone(),
+    );
+
+    // short requests: 96-token prompts → 64 quantized tokens → 2 pages per
+    // (layer, head) = 16 pages, vs 128 pages worst case
+    let mut rng = Pcg32::seeded(41);
+    let t = 96;
+    let pages_per_req =
+        (RequestCache::prefill_split(t, r_limit, cc.group, cc.capacity).0 / cc.group)
+            * mc.n_layers
+            * mc.n_kv_heads;
+    let mut admitted = Vec::new();
+    while sched.try_admit_pages(pages_per_req) {
+        let mut cache =
+            RequestCache::new_in(&pool, &mc, &cc, &specs, Method::mixkvq("mix30"), r_limit);
+        let (k, v, qa) = rand_kv(&mut rng, &mc, t);
+        cache.load_prefill(&k, &v, &qa, t).unwrap();
+        admitted.push(cache);
+        sched.observe_occupancy(0);
+    }
+    assert!(
+        admitted.len() >= 2 * worst_case_batch,
+        "occupancy admission must at least double the worst-case batch: \
+         got {} vs worst-case {}",
+        admitted.len(),
+        worst_case_batch
+    );
+    // the accountant observed real occupancy, bounded by the budget
+    assert!(sched.accountant.peak_bytes > 0);
+    assert!(sched.accountant.peak_bytes <= budget);
+    drop(admitted);
+    assert_eq!(pool.leased(), 0, "retired requests must return every page");
+}
+
+/// A due flush on an exhausted shared pool defers (the token rides the
+/// residual, `flush_deferrals` counts the park) and the flush lands as soon
+/// as another tenant frees pages — the cache-level half of park-then-resume.
+#[test]
+fn flush_defers_on_exhausted_pool_then_resumes() {
+    let mc = ModelConfig { n_layers: 1, ..ModelConfig::default_build() };
+    let cc = CacheConfig::default_build();
+    let spec = TierSpec { n16: 2, n4: 2, n2: 28, v_bits: 2 };
+    // room for A's prefill (4 pages) + B's prefill (2 pages), nothing more
+    let pool = KvPool::for_specs([&spec], mc.d_head, cc.group, Some(6));
+    pool.prewarm(6);
+    let mut rng = Pcg32::seeded(43);
+
+    let mut a = RequestCache::new_in(&pool, &mc, &cc, &[spec], Method::mixkvq("mix30"), 32);
+    let (k, v, qa) = rand_kv(&mut rng, &mc, 96);
+    a.load_prefill(&k, &v, &qa, 96).unwrap(); // 64 quantized = 4 pages
+    assert_eq!(a.leased_pages(), 4);
+
+    let mut b = RequestCache::new_in(&pool, &mc, &cc, &[spec], Method::kivi("kv2"), 32);
+    let (k, v, qa) = rand_kv(&mut rng, &mc, 64);
+    b.load_prefill(&k, &v, &qa, 64).unwrap(); // 32 quantized = 2 pages
+    assert_eq!(pool.leased(), 6);
+    assert!(!pool.can_lease(1));
+
+    // A's residual sits at r_limit → a flush is due, but the pool is dry:
+    // the append defers and the token rides in the residual
+    assert_eq!(a.rlen(), 32);
+    assert_eq!(a.due_flush_pages(), 2);
+    let (kn, vn, qn) = rand_kv(&mut rng, &mc, 1);
+    a.append(&kn, &vn, &qn).unwrap();
+    assert_eq!(a.qlen, 64, "flush must defer, not fail");
+    assert_eq!(a.rlen(), 33);
+    assert!(a.flush_deferrals >= 1);
+    assert!(pool.stats().lease_failures >= 1);
+
+    // tenant B retires → its pages free → the next append flushes
+    drop(b);
+    assert!(pool.can_lease(2));
+    let (kn, vn, qn) = rand_kv(&mut rng, &mc, 1);
+    a.append(&kn, &vn, &qn).unwrap();
+    assert_eq!(a.qlen, 96, "deferred flush must land once pages free up");
+    assert_eq!(a.rlen(), 2);
+
+    drop(a);
+    assert_eq!(pool.leased(), 0);
+}
+
+/// Admission paths that fail must not leak leases: an unaffordable prefill
+/// errors before leasing anything, and a half-used cache dropped on an
+/// error path returns everything.
+#[test]
+fn no_lease_leak_on_error_paths() {
+    let mc = ModelConfig { n_layers: 1, ..ModelConfig::default_build() };
+    let cc = CacheConfig::default_build();
+    let spec = TierSpec { n16: 0, n4: 32, n2: 0, v_bits: 4 };
+    let pool = KvPool::for_specs([&spec], mc.d_head, cc.group, Some(2));
+    pool.prewarm(2);
+    let mut rng = Pcg32::seeded(47);
+    // needs 4 pages (64 quantized tokens x 2 heads / 32-token pages)
+    let mut big = RequestCache::new_in(&pool, &mc, &cc, &[spec], Method::kivi("kv4"), 32);
+    let (k, v, qa) = rand_kv(&mut rng, &mc, 96);
+    let err = big.load_prefill(&k, &v, &qa, 96).unwrap_err();
+    assert!(format!("{err}").contains("pool exhausted"), "{err}");
+    assert_eq!(pool.leased(), 0, "failed prefill must lease nothing");
+    assert_eq!(pool.stats().lease_failures, 1);
+    drop(big);
+
+    // a cache that did lease, dropped mid-flight (cancel path)
+    let mut small = RequestCache::new_in(&pool, &mc, &cc, &[spec], Method::kivi("kv4"), 32);
+    let (k, v, qa) = rand_kv(&mut rng, &mc, 64);
+    small.load_prefill(&k, &v, &qa, 64).unwrap();
+    assert_eq!(pool.leased(), 2);
+    drop(small);
+    assert_eq!(pool.leased(), 0);
+}
+
+/// Scores/values streamed from a shared prewarmed pool are bit-identical to
+/// the private-pool cache fed the same data — page provenance must not
+/// change a single bit of the decode-visible state.
+#[test]
+fn shared_pool_cache_matches_private_pool_cache() {
+    let mc = ModelConfig { n_layers: 2, ..ModelConfig::default_build() };
+    let cc = CacheConfig::default_build();
+    let spec = TierSpec { n16: 2, n4: 2, n2: 28, v_bits: 2 };
+    let specs = vec![spec; 2];
+    let shared = KvPool::for_specs(specs.iter(), mc.d_head, cc.group, Some(64));
+    shared.prewarm(64);
+    let mut rng = Pcg32::seeded(53);
+    let t = 160;
+    let (k, v, qa) = rand_kv(&mut rng, &mc, t);
+    let mut private =
+        RequestCache::new(&mc, &cc, &specs, Method::mixkvq("mix30"), 32);
+    let mut pooled =
+        RequestCache::new_in(&shared, &mc, &cc, &specs, Method::mixkvq("mix30"), 32);
+    private.load_prefill(&k, &v, &qa, t).unwrap();
+    pooled.load_prefill(&k, &v, &qa, t).unwrap();
+    assert_eq!(private.qlen, pooled.qlen);
+    for l in 0..mc.n_layers {
+        for h in 0..mc.n_kv_heads {
+            assert_eq!(
+                private.heads[l][h].contiguous(),
+                pooled.heads[l][h].contiguous(),
+                "l{l}h{h}"
+            );
+        }
+    }
+}
