@@ -1,0 +1,110 @@
+//! `cargo bench --bench prefill` — chunked GEMM-blocked direct-to-page
+//! prefill vs the legacy full-materialization path (`forward_full` +
+//! `load_prefill`): wall time AND peak-resident prefill bytes.
+//!
+//! Like ref_decode, this needs **no artifacts** (random weights,
+//! build-default shapes), so it always runs — on CI and fresh checkouts —
+//! and writes `BENCH_prefill.json` so the perf trajectory has data points.
+//! Two prompt lengths; the blocked-chunked path must stay ≥3× faster than
+//! legacy at T ≥ 256 and its f32 working set ≥2× smaller (no `[L]`-layer
+//! f32 K/V stash, no `T × vocab` logits — ISSUE 4 acceptance bar).
+//!
+//! The memory numbers are the f32 working sets each path pins while
+//! prefilling (measured from the actual buffers: the legacy path's
+//! `PrefillOut` stash + full logits + per-layer QKV internals vs the
+//! chunked run's arena); the quantized cache both paths produce costs the
+//! same and is excluded from the ratio.
+
+use mixkvq::harness::refdriver::RefDriver;
+use mixkvq::model::config::Meta;
+use mixkvq::model::reference::PrefillRun;
+use mixkvq::model::weights::Weights;
+use mixkvq::quant::methods::Method;
+use mixkvq::util::bench::bench;
+use mixkvq::util::json::{self, Json};
+use mixkvq::util::rng::Pcg32;
+
+fn main() {
+    let meta = Meta::default_build();
+    let mc = meta.model.clone();
+    let cc = meta.cache.clone(); // capacity 512, residual 128, group 32
+    let weights = Weights::random(&mc, 7);
+    let spec = meta.variant("mix30").unwrap().layers.clone();
+    let r_limit = cc.residual;
+    let mut rng = Pcg32::seeded(19);
+    let mut results = Vec::new();
+    let mut entries = Vec::new();
+
+    for t in [256usize, 512] {
+        let driver = RefDriver::new(
+            mc.clone(),
+            cc.clone(),
+            &weights,
+            spec.clone(),
+            Method::mixkvq("mix30"),
+            r_limit,
+        );
+        let prompt: Vec<i32> = (0..t).map(|_| rng.range(1, 127) as i32).collect();
+
+        let chunked = bench(&format!("chunked blocked prefill  T={t}"), 200, 2500.0, || {
+            std::hint::black_box(driver.prefill(&prompt).unwrap());
+        });
+        let legacy = bench(&format!("legacy forward_full      T={t}"), 200, 2500.0, || {
+            std::hint::black_box(driver.prefill_legacy(&prompt).unwrap());
+        });
+        let speedup = legacy.median_ms / chunked.median_ms;
+
+        // --- peak-resident f32 working sets, from the real buffers ------
+        // legacy: the [L]-layer PrefillOut stash + the T×vocab logits it
+        // computes and production discards + forward_full's per-layer
+        // q_all/k_all/v_all internals + the [T, d] hidden state
+        let (full_logits, pre) = driver.model.forward_full(&prompt);
+        let stash: usize = pre.k.iter().map(Vec::len).sum::<usize>()
+            + pre.v.iter().map(Vec::len).sum::<usize>()
+            + pre.qabs.iter().map(Vec::len).sum::<usize>();
+        let (hq, hkv, dh) = (mc.n_q_heads, mc.n_kv_heads, mc.d_head);
+        let internals = t * mc.d_model + t * (hq + 2 * hkv) * dh;
+        let legacy_peak = 4 * (full_logits.len() + stash + internals);
+        // chunked: one arena — h + ONE layer's K/V + chunk tiles + the
+        // last-position logits
+        let chunked_peak = PrefillRun::new(&mc, t, cc.group).resident_bytes();
+        let mem_ratio = legacy_peak as f64 / chunked_peak as f64;
+
+        println!(
+            "T={t}: chunked {:.3} ms  legacy {:.3} ms  speedup {:.2}x{}",
+            chunked.median_ms,
+            legacy.median_ms,
+            speedup,
+            if speedup < 3.0 { "  (below the 3x bar!)" } else { "" }
+        );
+        println!(
+            "      peak resident {chunked_peak} B (chunked arena) vs {legacy_peak} B legacy \
+             f32 working set ({mem_ratio:.2}x{})",
+            if mem_ratio < 2.0 { "  (below the 2x bar!)" } else { "" }
+        );
+        entries.push(json::obj(vec![
+            ("t", json::num(t as f64)),
+            ("chunked_ms", json::num(chunked.median_ms)),
+            ("legacy_ms", json::num(legacy.median_ms)),
+            ("speedup", json::num(speedup)),
+            ("chunked_peak_bytes", json::num(chunked_peak as f64)),
+            ("legacy_peak_bytes", json::num(legacy_peak as f64)),
+            ("peak_ratio", json::num(mem_ratio)),
+        ]));
+        results.push(chunked);
+        results.push(legacy);
+    }
+
+    println!("\n== prefill ==");
+    for r in &results {
+        println!("{}", r.report());
+    }
+
+    let report = json::obj(vec![
+        ("bench", json::s("prefill")),
+        ("variant", json::s("mix30")),
+        ("entries", Json::Arr(entries)),
+    ]);
+    std::fs::write("BENCH_prefill.json", report.print() + "\n").expect("write bench json");
+    println!("wrote BENCH_prefill.json");
+}

@@ -21,7 +21,8 @@ use crate::kvcache::accountant::MemoryAccountant;
 use crate::kvcache::cache::{PageField, RequestCache};
 use crate::kvcache::pool::KvPool;
 use crate::model::config::{Meta, VariantSpec};
-use crate::model::weights::Weights;
+use crate::model::reference::{PrefillRun, RefModel, RopeTable};
+use crate::model::weights::{ParamIndex, Weights};
 use crate::quant::methods::{Method, MethodSpec};
 use crate::runtime::client::Runtime;
 use crate::runtime::executor::{upload, Arg, DeviceArg, Executable};
@@ -57,6 +58,22 @@ pub struct EngineTimers {
     /// buffers (recomputed each step, so error paths can't skew it). A
     /// reused step saves re-allocating its own variant's share of this.
     pub scratch_bytes: u64,
+    /// (layer, chunk) units processed by the chunked prefill pipeline —
+    /// the admission scheduler's unit of prefill work per tick.
+    pub prefill_chunks: u64,
+    /// Prompt tokens whose chunked prefill completed (prefill tok/s =
+    /// `prefill_tokens / prefill_exec_ns`).
+    pub prefill_tokens: u64,
+}
+
+/// An in-flight chunked prefill: the request's cache (quantized pages fill
+/// in as layers close) plus the resumable [`PrefillRun`]. Advanced a
+/// bounded number of (layer, chunk) units per serving tick by
+/// [`Engine::advance_prefill_chunked`], so a long prompt no longer
+/// monopolizes a tick against live decoders.
+pub struct ChunkedPrefill {
+    pub cache: RequestCache,
+    pub run: PrefillRun,
 }
 
 pub struct Engine {
@@ -84,6 +101,11 @@ pub struct Engine {
     /// bounded serving pool); `None` gives each cache a private unbounded
     /// pool — standalone engine use, benches, tests.
     kv_pool: Option<KvPool>,
+    /// Prebuilt reference-model lookup parts for the chunked prefill path —
+    /// resolved once per engine so the per-tick advance does not redo
+    /// name-resolution lookups (`RefModel::with_parts`).
+    ref_pidx: ParamIndex,
+    ref_rope: RopeTable,
 }
 
 enum Owned {
@@ -159,6 +181,8 @@ impl Engine {
             .zip(&spec)
             .map(|(w, (_, shape))| upload(&runtime.client, &Arg::F32(w), shape))
             .collect::<Result<Vec<_>>>()?;
+        let ref_pidx = ParamIndex::new(&weights, &meta.model);
+        let ref_rope = RopeTable::new(meta.model.d_head, meta.model.rope_theta);
         Ok(Engine {
             runtime,
             meta,
@@ -172,6 +196,8 @@ impl Engine {
             weight_bufs,
             arg_pool: HashMap::new(),
             kv_pool: None,
+            ref_pidx,
+            ref_rope,
         })
     }
 
@@ -458,6 +484,53 @@ impl Engine {
         self.timers.decode_exec_ns += t0.elapsed().as_nanos() as u64;
         self.timers.decode_steps += 1;
         Ok(out)
+    }
+
+    /// Begin a chunked GEMM-blocked prefill for `prompt` under `method`:
+    /// builds the request's cache (shared pool when installed) and the
+    /// resumable run. No work happens yet — drive it with
+    /// [`Engine::advance_prefill_chunked`]. This is the serving admission
+    /// path; the bucketed HLO [`Engine::prefill`] + [`Engine::admit_prefill_with`]
+    /// pair remains for the compiled-graph harness flows.
+    pub fn begin_prefill_chunked(&self, prompt: &[i32], method: &Method) -> Result<ChunkedPrefill> {
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        let spec = self.meta.variant(&method.variant)?.clone();
+        let cache = self.cache_for(&spec.layers, method.clone());
+        let run = PrefillRun::new(&self.meta.model, prompt.len(), self.meta.cache.group);
+        Ok(ChunkedPrefill { cache, run })
+    }
+
+    /// Advance a chunked prefill by up to `max_chunks` (layer, chunk)
+    /// units, accounting the work in `EngineTimers` (`prefill_exec_ns`,
+    /// `prefill_chunks`, and on completion `prefill_tokens` plus one
+    /// quantization event — parity with `admit_prefill_with`). Returns
+    /// `true` when the prefill is complete and
+    /// `ChunkedPrefill::run.last_logits()` is valid.
+    pub fn advance_prefill_chunked(
+        &mut self,
+        cp: &mut ChunkedPrefill,
+        prompt: &[i32],
+        max_chunks: usize,
+    ) -> Result<bool> {
+        let model = RefModel::with_parts(
+            self.meta.model.clone(),
+            &self.weights,
+            self.ref_pidx.clone(),
+            self.ref_rope.clone(),
+        );
+        let before = cp.run.chunks_done();
+        let t0 = Instant::now();
+        let done = cp.run.advance(&model, prompt, &mut cp.cache, max_chunks);
+        self.timers.prefill_exec_ns += t0.elapsed().as_nanos() as u64;
+        self.timers.prefill_chunks += (cp.run.chunks_done() - before) as u64;
+        let done = done?;
+        if done {
+            self.timers.prefill_tokens += prompt.len() as u64;
+            self.timers.quantize_events += 1;
+        }
+        Ok(done)
     }
 
     /// Quantize a freshly prefilled prompt into a new cache under the

@@ -1,16 +1,216 @@
 //! Serving metrics: latency/throughput aggregates (Fig. 5) and the
 //! operation-level time breakdown (Table 7).
+//!
+//! Completion records live in a **bounded ring** ([`CompletedLog`]): a
+//! long-lived server keeps only the most recent `cap` full `Completed`
+//! records (token streams) while totals, per-method counts, and the
+//! TTFT/latency/queue-wait percentiles **stream** over every completion
+//! ever via fixed-size reservoirs — memory no longer grows with uptime.
 
+use std::collections::VecDeque;
 use std::time::Instant;
 
+use crate::util::rng::Pcg32;
 use crate::util::stats::percentile;
 
 use super::engine::EngineTimers;
 use super::session::Completed;
 
+/// Default retained capacity of [`CompletedLog`] — generous enough that
+/// every bench/offline trace gets its full record set back from
+/// `Server::run`, small enough to bound a long-lived server.
+pub const COMPLETED_RING_DEFAULT: usize = 4096;
+
+/// Samples each percentile reservoir keeps. Below this many observations
+/// the percentiles are exact; beyond it they are a uniform sample
+/// (Algorithm R, deterministic seed).
+const RESERVOIR_SAMPLES: usize = 512;
+
+/// Fixed-size uniform sample over an unbounded stream (Vitter's
+/// Algorithm R) — the streamed substitute for "sort every observation
+/// ever" percentile queries.
+pub struct Reservoir {
+    cap: usize,
+    seen: u64,
+    samples: Vec<f64>,
+    rng: Pcg32,
+}
+
+impl Reservoir {
+    pub fn new(cap: usize) -> Reservoir {
+        Reservoir {
+            cap: cap.max(1),
+            seen: 0,
+            samples: Vec::new(),
+            rng: Pcg32::seeded(0x5eed_cafe),
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+        } else {
+            let j = (self.rng.next_u64() % self.seen) as usize;
+            if j < self.cap {
+                self.samples[j] = x;
+            }
+        }
+    }
+
+    /// Observations ever pushed (≥ the retained sample count).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        percentile(&self.samples, p)
+    }
+}
+
+/// Bounded completion log: a fixed-capacity ring of the most recent
+/// [`Completed`] records plus streamed aggregates over everything ever
+/// pushed. Records are addressed by a monotonically increasing sequence
+/// number ([`CompletedLog::push`] returns it); once the ring evicts a
+/// record, [`CompletedLog::get`] answers `None` and the caller falls back
+/// to whatever stub it kept (`Server::poll` keeps reason + token count).
+pub struct CompletedLog {
+    cap: usize,
+    buf: VecDeque<Completed>,
+    /// Sequence number of `buf[0]`.
+    start: u64,
+    n_total: u64,
+    gen_tokens: u64,
+    prompt_tokens: u64,
+    /// Completion counts per resolved method (served sessions only), in
+    /// first-completion order.
+    by_method: Vec<(String, u64)>,
+    ttft: Reservoir,
+    latency: Reservoir,
+    queue_wait: Reservoir,
+}
+
+impl Default for CompletedLog {
+    fn default() -> Self {
+        CompletedLog::with_capacity(COMPLETED_RING_DEFAULT)
+    }
+}
+
+impl CompletedLog {
+    pub fn with_capacity(cap: usize) -> CompletedLog {
+        let cap = cap.max(1);
+        CompletedLog {
+            cap,
+            buf: VecDeque::with_capacity(cap.min(1024)),
+            start: 0,
+            n_total: 0,
+            gen_tokens: 0,
+            prompt_tokens: 0,
+            by_method: Vec::new(),
+            ttft: Reservoir::new(RESERVOIR_SAMPLES),
+            latency: Reservoir::new(RESERVOIR_SAMPLES),
+            queue_wait: Reservoir::new(RESERVOIR_SAMPLES),
+        }
+    }
+
+    /// Record a completion: fold it into the streamed aggregates, retain
+    /// the full record (evicting the oldest when at capacity), and return
+    /// its sequence number.
+    pub fn push(&mut self, c: Completed) -> u64 {
+        self.n_total += 1;
+        self.gen_tokens += c.tokens.len() as u64;
+        self.prompt_tokens += c.prompt_len as u64;
+        // rejected/cancelled-in-queue records never ran a method and carry
+        // `ttft_ms: None` — excluded from latency stats and method counts,
+        // exactly as the pre-ring percentile filters did
+        if let Some(t) = c.ttft_ms {
+            self.ttft.push(t);
+            self.latency.push(c.total_ms);
+            self.queue_wait.push(c.queue_ms);
+            match self.by_method.iter_mut().find(|(m, _)| *m == c.method) {
+                Some((_, n)) => *n += 1,
+                None => self.by_method.push((c.method.clone(), 1)),
+            }
+        }
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.start += 1;
+        }
+        let seq = self.start + self.buf.len() as u64;
+        self.buf.push_back(c);
+        seq
+    }
+
+    /// The record at `seq`, if the ring still retains it.
+    pub fn get(&self, seq: u64) -> Option<&Completed> {
+        if seq < self.start {
+            return None;
+        }
+        self.buf.get((seq - self.start) as usize)
+    }
+
+    /// Completions ever recorded. Deliberately NOT named `len`: the
+    /// iterators yield only the RETAINED records
+    /// ([`CompletedLog::retained`]), so a `len`-style name would invite
+    /// `len() == iter().count()` assumptions that break past capacity.
+    pub fn total(&self) -> usize {
+        self.n_total as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_total == 0
+    }
+
+    /// Full records currently resident in the ring.
+    pub fn retained(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Iterate the retained records, oldest first.
+    pub fn iter(&self) -> impl Iterator<Item = &Completed> {
+        self.buf.iter()
+    }
+
+    /// The next sequence number to be assigned (= total ever pushed).
+    pub fn end_seq(&self) -> u64 {
+        self.start + self.buf.len() as u64
+    }
+
+    /// Clone the retained records with sequence ≥ `seq` (oldest first) —
+    /// `Server::run`'s "what completed since I started" query.
+    pub fn since(&self, seq: u64) -> Vec<Completed> {
+        let skip = seq.saturating_sub(self.start) as usize;
+        self.buf.iter().skip(skip).cloned().collect()
+    }
+
+    pub fn total_generated(&self) -> usize {
+        self.gen_tokens as usize
+    }
+
+    pub fn total_prompt(&self) -> usize {
+        self.prompt_tokens as usize
+    }
+
+    pub fn by_method(&self) -> Vec<(String, usize)> {
+        self.by_method.iter().map(|(m, n)| (m.clone(), *n as usize)).collect()
+    }
+}
+
+/// `for c in &metrics.completed` iterates the retained records, oldest
+/// first — the Vec-era loop shape keeps working.
+impl<'a> IntoIterator for &'a CompletedLog {
+    type Item = &'a Completed;
+    type IntoIter = std::collections::vec_deque::Iter<'a, Completed>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.buf.iter()
+    }
+}
+
 #[derive(Default)]
 pub struct Metrics {
-    pub completed: Vec<Completed>,
+    /// Bounded ring + streamed aggregates — see [`CompletedLog`].
+    pub completed: CompletedLog,
     pub t_start: Option<Instant>,
     pub t_end: Option<Instant>,
     pub decode_steps: u64,
@@ -39,6 +239,10 @@ pub struct Metrics {
     pub pool_lease_failures: u64,
     /// Decode slots parked because their due flush could not lease pages.
     pub pool_parks: u64,
+    /// In-flight chunked prefills that sat a tick out because the pool
+    /// could not cover their remaining page claim (they resume when
+    /// decode frees pages — never Rejected for pool contention).
+    pub prefill_parks: u64,
     /// Parked slots that resumed decoding after pages freed up.
     pub pool_resumes: u64,
     /// Parked sessions force-finished (CacheFull) to break a pool deadlock
@@ -70,11 +274,11 @@ impl Metrics {
     }
 
     pub fn total_generated(&self) -> usize {
-        self.completed.iter().map(|c| c.tokens.len()).sum()
+        self.completed.total_generated()
     }
 
     pub fn total_prompt(&self) -> usize {
-        self.completed.iter().map(|c| c.prompt_len).sum()
+        self.completed.total_prompt()
     }
 
     /// Generated tokens per second (the Fig. 5 throughput metric).
@@ -97,48 +301,36 @@ impl Metrics {
 
     /// TTFT p50/p95 over sessions that actually produced a first token —
     /// rejected/cancelled-in-queue records carry `ttft_ms: None` and are
-    /// excluded rather than dragging the percentiles toward zero.
+    /// excluded rather than dragging the percentiles toward zero. Streamed:
+    /// exact up to the reservoir size, a uniform sample beyond it.
     pub fn ttft_ms(&self) -> (f64, f64) {
-        let xs: Vec<f64> = self.completed.iter().filter_map(|c| c.ttft_ms).collect();
-        (percentile(&xs, 50.0), percentile(&xs, 95.0))
+        (self.completed.ttft.percentile(50.0), self.completed.ttft.percentile(95.0))
     }
 
     /// End-to-end latency p50/p95 over served sessions (same exclusion rule
     /// as [`Metrics::ttft_ms`]: only sessions that produced tokens count).
     pub fn latency_ms(&self) -> (f64, f64) {
-        let xs: Vec<f64> = self
-            .completed
-            .iter()
-            .filter(|c| c.ttft_ms.is_some())
-            .map(|c| c.total_ms)
-            .collect();
-        (percentile(&xs, 50.0), percentile(&xs, 95.0))
+        (
+            self.completed.latency.percentile(50.0),
+            self.completed.latency.percentile(95.0),
+        )
     }
 
     /// Completion counts per resolved method name, in first-completion
     /// order — the per-tenant routing receipt for mixed-precision serving.
     /// Rejected/cancelled-in-queue records never ran a method (placeholder
-    /// "-", `ttft_ms: None`) and are excluded.
+    /// "-", `ttft_ms: None`) and are excluded. Streamed — counts survive
+    /// ring eviction.
     pub fn completed_by_method(&self) -> Vec<(String, usize)> {
-        let mut out: Vec<(String, usize)> = Vec::new();
-        for c in self.completed.iter().filter(|c| c.ttft_ms.is_some()) {
-            match out.iter_mut().find(|(m, _)| *m == c.method) {
-                Some((_, n)) => *n += 1,
-                None => out.push((c.method.clone(), 1)),
-            }
-        }
-        out
+        self.completed.by_method()
     }
 
     /// Queue-wait (submit → admission) p50/p95 over served sessions.
     pub fn queue_wait_ms(&self) -> (f64, f64) {
-        let xs: Vec<f64> = self
-            .completed
-            .iter()
-            .filter(|c| c.ttft_ms.is_some())
-            .map(|c| c.queue_ms)
-            .collect();
-        (percentile(&xs, 50.0), percentile(&xs, 95.0))
+        (
+            self.completed.queue_wait.percentile(50.0),
+            self.completed.queue_wait.percentile(95.0),
+        )
     }
 
     /// Record the current pool counters (called once per scheduling tick).
@@ -158,8 +350,9 @@ impl Metrics {
              occupancy={:.2} max_concurrent={} peak_kv_mem={:.2} MB \
              ttft p50/p95={:.0}/{:.0} ms latency p50/p95={:.0}/{:.0} ms \
              queue p50/p95={:.0}/{:.0} ms rejected={} cancelled={} stalls={} \
-             pool pages={}/{} high_water={} lease_fail={} parks={} resumes={} preempt={}",
-            self.completed.len(),
+             pool pages={}/{} high_water={} lease_fail={} parks={} resumes={} preempt={} \
+             prefill_parks={}",
+            self.completed.total(),
             self.total_generated(),
             self.wall_s(),
             self.throughput_tps(),
@@ -182,6 +375,7 @@ impl Metrics {
             self.pool_parks,
             self.pool_resumes,
             self.pool_preemptions,
+            self.prefill_parks,
         )
     }
 }
@@ -201,6 +395,12 @@ pub struct Breakdown {
     /// Total heap bytes currently pooled across all variants; a reused
     /// step saves re-allocating its own variant's share of this.
     pub scratch_bytes_pooled: u64,
+    /// Chunked-prefill (layer, chunk) units processed — the admission
+    /// scheduler's per-tick unit of prefill work.
+    pub prefill_chunks: u64,
+    /// Prompt tokens prefilled per second of prefill wall time (the
+    /// blocked-chunked pipeline's throughput; 0 when no prefill ran).
+    pub prefill_tok_s: f64,
 }
 
 pub fn breakdown(t: &EngineTimers) -> Breakdown {
@@ -221,6 +421,12 @@ pub fn breakdown(t: &EngineTimers) -> Breakdown {
             100.0 * t.assemble_reuses as f64 / assemblies as f64
         },
         scratch_bytes_pooled: t.scratch_bytes,
+        prefill_chunks: t.prefill_chunks,
+        prefill_tok_s: if t.prefill_exec_ns == 0 {
+            0.0
+        } else {
+            t.prefill_tokens as f64 / (t.prefill_exec_ns as f64 * 1e-9)
+        },
     }
 }
 
@@ -281,6 +487,47 @@ mod tests {
         assert!((ttft50 - 20.0).abs() < 1e-9, "ttft p50 {ttft50}");
         assert!((lat50 - 80.0).abs() < 1e-9);
         assert!((qw50 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ring_bounds_retained_records_but_streams_totals() {
+        let mut m = Metrics { completed: CompletedLog::with_capacity(3), ..Metrics::default() };
+        let mut seqs = Vec::new();
+        for i in 0..5 {
+            seqs.push(m.completed.push(completed(i + 1)));
+        }
+        // totals/percentiles cover all 5; only the last 3 full records stay
+        assert_eq!(m.completed.total(), 5);
+        assert_eq!(m.completed.retained(), 3);
+        assert_eq!(m.total_generated(), 1 + 2 + 3 + 4 + 5);
+        assert_eq!(m.total_prompt(), 5 * 10);
+        assert_eq!(m.completed_by_method(), vec![("bf16".to_string(), 5)]);
+        // evicted seqs answer None, retained ones round-trip
+        assert!(m.completed.get(seqs[0]).is_none());
+        assert!(m.completed.get(seqs[1]).is_none());
+        assert_eq!(m.completed.get(seqs[4]).unwrap().tokens.len(), 5);
+        assert_eq!(m.completed.iter().count(), 3);
+        assert_eq!(m.completed.end_seq(), 5);
+        assert_eq!(m.completed.since(seqs[3]).len(), 2);
+        // percentiles stream over everything ever (exact under the
+        // reservoir size): ttft values were 5,10,..,25 → p50 = 15
+        let (p50, _) = m.ttft_ms();
+        assert!((p50 - 15.0).abs() < 1e-9, "{p50}");
+    }
+
+    #[test]
+    fn reservoir_is_exact_under_cap_and_bounded_over_it() {
+        let mut r = Reservoir::new(8);
+        for i in 0..8 {
+            r.push(i as f64);
+        }
+        assert!((r.percentile(50.0) - 3.5).abs() < 1e-9);
+        for i in 8..10_000 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.seen(), 10_000);
+        // sample stays bounded and within the observed range
+        assert!(r.percentile(0.0) >= 0.0 && r.percentile(100.0) < 10_000.0);
     }
 
     #[test]

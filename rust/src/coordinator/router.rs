@@ -5,15 +5,20 @@
 //! * [`Server::submit`] accepts a request (with an optional per-request
 //!   [`MethodSpec`](crate::quant::methods::MethodSpec) override) and returns
 //!   its `RequestId` immediately;
-//! * [`Server::tick`] runs one scheduling cycle: admissions (prefill into
-//!   free slots — **occupancy-based**: a request is admitted when the pool
-//!   can cover its actual prefill pages and keep a reserve watermark free,
-//!   so concurrency is bounded by what requests *hold*, not their worst
-//!   case) then one decode step per live variant group. A live slot whose
-//!   due quantization flush cannot lease pages is **parked** for the tick
-//!   (its tokens ride in the residual meanwhile) and resumes when pages
-//!   free up; if every live slot is parked the largest page-holder is shed
-//!   as CacheFull so the server never deadlocks;
+//! * [`Server::tick`] runs one scheduling cycle: admissions — still
+//!   **occupancy-based**: a request starts prefilling when the pool can
+//!   cover its actual prefill pages and keep a reserve watermark free — then
+//!   **chunked prefill work** under a per-tick `(layer, chunk)` unit budget
+//!   (`ServerConfig::prefill_chunks_per_tick`): prompts prefill through the
+//!   blocked direct-to-page pipeline
+//!   ([`crate::coordinator::engine::ChunkedPrefill`]), quantized pages
+//!   filling in as layers close, and a long prompt spreads across ticks
+//!   instead of monopolizing one against live decoders; then one decode
+//!   step per live variant group. A live slot whose due quantization flush
+//!   cannot lease pages is **parked** for the tick (its tokens ride in the
+//!   residual meanwhile) and resumes when pages free up; if every live slot
+//!   is parked the largest page-holder is shed as CacheFull so the server
+//!   never deadlocks;
 //! * [`Server::poll`] / [`Server::cancel`] / [`Server::drain_events`]
 //!   observe and steer individual requests — every request emits a
 //!   well-formed `Queued → Admitted → FirstToken → Token* → Finished`
@@ -36,7 +41,7 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::coordinator::batcher::Batcher;
-use crate::coordinator::engine::Engine;
+use crate::coordinator::engine::{ChunkedPrefill, Engine};
 use crate::coordinator::events::{Event, EventLog, RequestStatus};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::{Scheduler, SchedulerPolicy};
@@ -56,6 +61,17 @@ pub struct ServerConfig {
     /// `None` derives a default: one flush worth per decode slot, capped at
     /// a quarter of the pool.
     pub reserve_pages: Option<usize>,
+    /// Chunked-prefill `(layer, chunk)` units one tick may spend across all
+    /// in-flight prefills. The default is generous (typical prompts admit
+    /// in one tick, matching the pre-chunked behavior); lower it to bound
+    /// the decode stall a batch of long prompts can inject per tick — an
+    /// unfinished prefill simply resumes next tick.
+    pub prefill_chunks_per_tick: usize,
+    /// Retained capacity of the bounded completion ring
+    /// (`Metrics::completed`) — totals and percentiles stream past it, but
+    /// only this many full `Completed` records (token streams) stay
+    /// resident for `poll`/`Server::run` to hand out.
+    pub completed_ring: usize,
 }
 
 impl Default for ServerConfig {
@@ -65,17 +81,45 @@ impl Default for ServerConfig {
             max_prefills_per_cycle: 2,
             seed: 0,
             reserve_pages: None,
+            prefill_chunks_per_tick: 256,
+            completed_ring: crate::coordinator::metrics::COMPLETED_RING_DEFAULT,
         }
     }
 }
 
+/// One in-flight chunked prefill owned by the server between admission
+/// (request left the wait queue, pages reserved by occupancy) and slot
+/// installation (prefill complete, first token sampled). Dropping it — on
+/// cancel or a mid-run error — returns every page the cache leased.
+struct PendingPrefill {
+    req: Request,
+    method: crate::quant::methods::Method,
+    cp: ChunkedPrefill,
+    /// Prefill pages this run was admitted against (its occupancy claim).
+    /// Leasing is incremental (one page per group as layers close), so
+    /// admission must count `pages_claimed − leased` of every pending run
+    /// as already spoken for — otherwise two runs admitted in the same
+    /// tick could both pass the occupancy probe and the later one would
+    /// die Rejected mid-prefill instead of waiting its turn in the queue.
+    pages_claimed: usize,
+}
+
+impl PendingPrefill {
+    /// Claimed pages this run has not leased yet.
+    fn outstanding_pages(&self) -> usize {
+        self.pages_claimed.saturating_sub(self.cp.cache.leased_pages())
+    }
+}
+
 /// Terminal-record slot in `Server::finished`: never a second copy of the
-/// `Completed` (which lives in `metrics.completed`), and demoted to a stub
-/// once a poll has observed it.
+/// `Completed` (which lives in the bounded `metrics.completed` ring), and
+/// demoted to a stub once a poll has observed it. The reason/count ride
+/// here too, so a record the ring has already evicted still answers late
+/// polls correctly (as `Retired`).
 #[derive(Clone, Copy, Debug)]
 enum Terminal {
-    /// Index into `metrics.completed`; no poll has observed it yet.
-    Pending(usize),
+    /// Sequence number in `metrics.completed`; no poll has observed it yet.
+    Pending { seq: u64, reason: FinishReason, n_tokens: usize },
     /// Observed: only reason + token count remain for late polls.
     Retired { reason: FinishReason, n_tokens: usize },
 }
@@ -93,6 +137,10 @@ pub struct Server {
     submit_times: HashMap<RequestId, Instant>,
     /// Terminal records by id (the `poll` fast path) — see [`Terminal`].
     finished: HashMap<RequestId, Terminal>,
+    /// In-flight chunked prefills (admitted by occupancy, not yet in a
+    /// decode slot), advanced FIFO under the per-tick chunk budget.
+    prefills: Vec<PendingPrefill>,
+    prefill_chunks_per_tick: usize,
 }
 
 impl Server {
@@ -126,12 +174,19 @@ impl Server {
                 cfg.memory_budget_bytes,
                 pool.clone(),
             ),
-            metrics: Metrics::default(),
+            metrics: Metrics {
+                completed: crate::coordinator::metrics::CompletedLog::with_capacity(
+                    cfg.completed_ring,
+                ),
+                ..Metrics::default()
+            },
             events: EventLog::default(),
             pool,
             rng: Pcg32::seeded(cfg.seed),
             submit_times: HashMap::new(),
             finished: HashMap::new(),
+            prefills: Vec::new(),
+            prefill_chunks_per_tick: cfg.prefill_chunks_per_tick.max(1),
             engine,
         }
     }
@@ -152,6 +207,7 @@ impl Server {
     pub fn submit(&mut self, req: Request) -> Result<RequestId> {
         let id = req.id;
         let in_flight = self.batcher.waiting.iter().any(|r| r.id == id)
+            || self.prefills.iter().any(|p| p.req.id == id)
             || self.batcher.slots.iter().flatten().any(|s| s.request.id == id);
         if in_flight {
             bail!("request id {id} is already in flight on this server");
@@ -181,9 +237,9 @@ impl Server {
         Ok(id)
     }
 
-    /// Any queued or live work left?
+    /// Any queued, prefilling, or live work left?
     pub fn has_work(&self) -> bool {
-        self.batcher.has_work()
+        self.batcher.has_work() || !self.prefills.is_empty()
     }
 
     /// Status of one request. The FIRST poll observing a terminal request
@@ -194,13 +250,17 @@ impl Server {
     pub fn poll(&mut self, id: RequestId) -> RequestStatus {
         if let Some(&t) = self.finished.get(&id) {
             return match t {
-                Terminal::Pending(idx) => {
-                    let c = &self.metrics.completed[idx];
-                    let status =
-                        RequestStatus::Finished { reason: c.reason, tokens: c.tokens.clone() };
-                    let stub =
-                        Terminal::Retired { reason: c.reason, n_tokens: c.tokens.len() };
-                    self.finished.insert(id, stub);
+                Terminal::Pending { seq, reason, n_tokens } => {
+                    // the ring may already have evicted a record nobody
+                    // polled in time — the stub still answers correctly
+                    let status = match self.metrics.completed.get(seq) {
+                        Some(c) => RequestStatus::Finished {
+                            reason: c.reason,
+                            tokens: c.tokens.clone(),
+                        },
+                        None => RequestStatus::Retired { reason, n_tokens },
+                    };
+                    self.finished.insert(id, Terminal::Retired { reason, n_tokens });
                     status
                 }
                 Terminal::Retired { reason, n_tokens } => {
@@ -208,7 +268,11 @@ impl Server {
                 }
             };
         }
-        if self.batcher.waiting.iter().any(|r| r.id == id) {
+        if self.batcher.waiting.iter().any(|r| r.id == id)
+            || self.prefills.iter().any(|p| p.req.id == id)
+        {
+            // chunked prefill in flight: no slot, no tokens yet — still
+            // pre-admission from the event stream's point of view
             return RequestStatus::Queued;
         }
         if let Some(s) = self.batcher.slots.iter().flatten().find(|s| s.request.id == id) {
@@ -224,6 +288,14 @@ impl Server {
         if let Some(req) = self.batcher.remove_waiting(id) {
             self.metrics.cancelled += 1;
             self.finalize_unadmitted(id, req.prompt.len(), FinishReason::Cancelled);
+            return true;
+        }
+        if let Some(pos) = self.prefills.iter().position(|p| p.req.id == id) {
+            // mid-prefill cancel: dropping the pending run returns every
+            // page its cache leased
+            let p = self.prefills.remove(pos);
+            self.metrics.cancelled += 1;
+            self.finalize_unadmitted(id, p.req.prompt.len(), FinishReason::Cancelled);
             return true;
         }
         for slot in self.batcher.slots.iter_mut() {
@@ -254,9 +326,14 @@ impl Server {
     /// consumer, so lifecycle events are discarded as it goes (use
     /// submit/tick/`drain_events` directly to observe them) — otherwise a
     /// long trace would accumulate one event per generated token.
+    /// Returns the records the bounded completion ring still retains for
+    /// this run — a trace longer than `ServerConfig::completed_ring` loses
+    /// its oldest full records (totals and percentiles still stream over
+    /// everything; size the ring to the trace when the full return
+    /// matters).
     pub fn run(&mut self, requests: Vec<Request>) -> Result<Vec<Completed>> {
         self.metrics.start();
-        let before = self.metrics.completed.len();
+        let before = self.metrics.completed.end_seq();
         for r in requests {
             self.submit(r)?;
         }
@@ -266,52 +343,64 @@ impl Server {
         }
         self.events.drain();
         self.metrics.stop();
-        Ok(self.metrics.completed[before..].to_vec())
+        Ok(self.metrics.completed.since(before))
     }
 
-    /// One scheduling cycle: admissions (prefill) then one decode step per
-    /// live variant group; pool occupancy gauges are sampled at the end.
+    /// One scheduling cycle: admissions (start chunked prefills), a
+    /// budgeted round of prefill chunk work (completed prompts install into
+    /// decode slots), then one decode step per live variant group; pool
+    /// occupancy gauges are sampled at the end.
     pub fn tick(&mut self) -> Result<()> {
         if self.metrics.t_start.is_none() {
             self.metrics.start();
         }
         self.admit()?;
+        self.advance_prefills()?;
         self.decode()?;
         // --- reap finished ----------------------------------------------
         for sess in self.batcher.reap() {
             self.finalize(sess);
         }
-        // --- occupancy gauges: leased pages + live off-pool residuals ---
+        // --- occupancy gauges: leased pages + live off-pool residuals,
+        // including in-flight chunked prefills' caches (their leased pages
+        // are already in the pool counter; their residual rows are not) ---
         let residuals: usize = self
             .batcher
             .slots
             .iter()
             .flatten()
             .map(|s| s.cache.residual_bytes())
-            .sum();
+            .sum::<usize>()
+            + self.prefills.iter().map(|p| p.cp.cache.residual_bytes()).sum::<usize>();
         self.scheduler.observe_occupancy(residuals);
         self.metrics.observe_pool(&self.pool.stats());
         Ok(())
     }
 
-    /// Admit up to the scheduler quota of waiting requests into free slots.
-    /// Admission is occupancy-based: the request's *exact* prefill page
-    /// count (not its worst case) must fit in the pool above the reserve
-    /// watermark. Short prompts lease few (or zero) pages, so many more of
-    /// them run concurrently than worst-case reservation ever allowed.
+    /// Admit up to the scheduler quota of waiting requests into chunked
+    /// prefill runs. Admission is occupancy-based: the request's *exact*
+    /// prefill page count (not its worst case) must fit in the pool above
+    /// the reserve watermark. Short prompts lease few (or zero) pages, so
+    /// many more of them run concurrently than worst-case reservation ever
+    /// allowed. Each in-flight prefill holds a claim on one decode slot
+    /// (installed when its run completes), so admissions are capped by
+    /// `free slots − pending prefills`.
     fn admit(&mut self) -> Result<()> {
-        let quota = self.scheduler.admission_quota(
-            self.batcher.slots.len() - self.batcher.live(),
-            self.batcher.waiting.len(),
-        );
+        let free = (self.batcher.slots.len() - self.batcher.live())
+            .saturating_sub(self.prefills.len());
+        let quota = self.scheduler.admission_quota(free, self.batcher.waiting.len());
         for _ in 0..quota {
-            let Some((slot, req)) = self.batcher.next_admission() else {
+            let Some(req) = self.batcher.waiting.pop_front() else {
                 break;
             };
             let method = self.engine.resolve_method(req.method);
             // variant validated at submit
             let needed = self.engine.prefill_pages_for(req.prompt.len(), &method)?;
-            if !self.scheduler.try_admit_pages(needed) {
+            // pages already promised to in-flight prefills but not leased
+            // yet (leasing is incremental) count as spoken for
+            let outstanding: usize =
+                self.prefills.iter().map(PendingPrefill::outstanding_pages).sum();
+            if !self.scheduler.try_admit_pages(needed + outstanding) {
                 // pool below the watermark — requeue at the head (FIFO) and
                 // stop admitting this cycle
                 self.metrics.admission_stalls += 1;
@@ -322,46 +411,96 @@ impl Server {
             // artifact file missing for this method), retire just this
             // request with a terminal Rejected record — one bad tenant must
             // not abort the tick and strand every other queued/live
-            // request. A partially-built cache drops here and its leases
-            // return to the pool automatically.
-            let prepared = (|| {
+            // request.
+            let started = (|| {
                 self.engine.ensure_method(&method)?;
-                let pre = self.engine.prefill(&req.prompt)?;
-                let cache = self.engine.admit_prefill_with(&pre, &method)?;
-                Ok::<_, anyhow::Error>((pre, cache))
+                self.engine.begin_prefill_chunked(&req.prompt, &method)
             })();
-            let (pre, mut cache) = match prepared {
-                Ok(x) => x,
+            match started {
+                Ok(cp) => {
+                    self.prefills.push(PendingPrefill { req, method, cp, pages_claimed: needed })
+                }
                 Err(e) => {
                     self.metrics.rejected += 1;
                     eprintln!("mixkvq: admission of request {} failed: {e:#}", req.id);
                     self.finalize_unadmitted(req.id, req.prompt.len(), FinishReason::Rejected);
-                    continue;
                 }
-            };
-            let first = sampler::sample(&pre.last_logits, req.sampling, &mut self.rng);
-            cache.pos = pre.t; // next decode position
-            let id = req.id;
-            let max_new = req.max_new_tokens;
-            let t_submit = self.submit_times.get(&id).copied().unwrap_or_else(Instant::now);
-            let mut sess = Session::new(req, cache, first, t_submit);
-            self.events.admitted(id, &method.name);
-            self.events.first_token(id, first);
-            // prompt-only edge case: the prefill sample already finishes the
-            // request — record that token, and report Eos only when the
-            // token actually is EOS (a 1-token budget is MaxTokens)
-            if first == tokenizer::EOS {
-                sess.finish(FinishReason::Eos);
-                self.finalize(sess);
-                continue;
             }
-            if max_new <= 1 {
-                sess.finish(FinishReason::MaxTokens);
-                self.finalize(sess);
-                continue;
-            }
-            self.batcher.install(slot, sess);
         }
+        Ok(())
+    }
+
+    /// Spend the tick's chunk budget on in-flight prefills, FIFO: the
+    /// oldest prefill drains first (bounded TTFT ordering), and whatever
+    /// completes installs into its decode slot immediately — same tick,
+    /// first token sampled from the last-position logits. A run whose
+    /// remaining page claim the pool cannot currently cover (decode
+    /// flushes lease directly and may drain it between ticks) is **parked**
+    /// for the tick — same philosophy as the decode slots' flush parking —
+    /// and resumes when pages free, instead of advancing into a failing
+    /// lease and dying. A run that still errors mid-flight retires as
+    /// Rejected; dropping its cache returns every leased page.
+    fn advance_prefills(&mut self) -> Result<()> {
+        let mut budget = self.prefill_chunks_per_tick;
+        let mut i = 0;
+        while i < self.prefills.len() && budget > 0 {
+            let p = &mut self.prefills[i];
+            if !self.pool.can_lease(p.outstanding_pages()) {
+                // pool below this run's remaining claim — sit the tick out
+                self.metrics.prefill_parks += 1;
+                i += 1;
+                continue;
+            }
+            let before = p.cp.run.chunks_done();
+            let res = self.engine.advance_prefill_chunked(&mut p.cp, &p.req.prompt, budget);
+            budget = budget.saturating_sub(p.cp.run.chunks_done() - before);
+            match res {
+                Err(e) => {
+                    let p = self.prefills.remove(i);
+                    self.metrics.rejected += 1;
+                    eprintln!("mixkvq: prefill of request {} failed: {e:#}", p.req.id);
+                    self.finalize_unadmitted(p.req.id, p.req.prompt.len(), FinishReason::Rejected);
+                }
+                Ok(true) => {
+                    let p = self.prefills.remove(i);
+                    self.install_prefilled(p)?;
+                }
+                Ok(false) => i += 1,
+            }
+        }
+        Ok(())
+    }
+
+    /// A completed chunked prefill becomes a live session: sample the first
+    /// token from the last-position logits and install into a free slot
+    /// (guaranteed by the admission accounting).
+    fn install_prefilled(&mut self, p: PendingPrefill) -> Result<()> {
+        let PendingPrefill { req, method, cp, .. } = p;
+        let ChunkedPrefill { cache, run } = cp;
+        let first = sampler::sample(run.last_logits(), req.sampling, &mut self.rng);
+        let id = req.id;
+        let max_new = req.max_new_tokens;
+        let t_submit = self.submit_times.get(&id).copied().unwrap_or_else(Instant::now);
+        let mut sess = Session::new(req, cache, first, t_submit);
+        self.events.admitted(id, &method.name);
+        self.events.first_token(id, first);
+        // prompt-only edge case: the prefill sample already finishes the
+        // request — record that token, and report Eos only when the
+        // token actually is EOS (a 1-token budget is MaxTokens)
+        if first == tokenizer::EOS {
+            sess.finish(FinishReason::Eos);
+            self.finalize(sess);
+            return Ok(());
+        }
+        if max_new <= 1 {
+            sess.finish(FinishReason::MaxTokens);
+            self.finalize(sess);
+            return Ok(());
+        }
+        let Some(slot) = self.batcher.free_slot() else {
+            bail!("no free decode slot for completed prefill (admission accounting bug)");
+        };
+        self.batcher.install(slot, sess);
         Ok(())
     }
 
@@ -487,8 +626,9 @@ impl Server {
         let c = make_completed(&sess);
         self.submit_times.remove(&c.id);
         self.events.finished(c.id, c.reason, c.tokens.len());
-        self.finished.insert(c.id, Terminal::Pending(self.metrics.completed.len()));
-        self.metrics.completed.push(c);
+        let (id, reason, n_tokens) = (c.id, c.reason, c.tokens.len());
+        let seq = self.metrics.completed.push(c);
+        self.finished.insert(id, Terminal::Pending { seq, reason, n_tokens });
     }
 
     /// Terminal record for a request that never reached a slot (rejected at
@@ -507,8 +647,8 @@ impl Server {
             total_ms: waited,
         };
         self.events.finished(id, reason, 0);
-        self.finished.insert(id, Terminal::Pending(self.metrics.completed.len()));
-        self.metrics.completed.push(c);
+        let seq = self.metrics.completed.push(c);
+        self.finished.insert(id, Terminal::Pending { seq, reason, n_tokens: 0 });
     }
 }
 

@@ -253,6 +253,7 @@ pub fn fig5(ctx: &ExpCtx) -> Result<Table> {
                 max_prefills_per_cycle: 2,
                 seed: ctx.seed,
                 reserve_pages: None,
+                ..ServerConfig::default()
             },
         );
         let mut rng = Pcg32::seeded(ctx.seed);

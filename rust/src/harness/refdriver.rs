@@ -14,6 +14,15 @@
 //! [`RefDriver::decode_logits_legacy`] — the numerical oracle the fused
 //! path is property-tested against (tests/fused_decode.rs) and the baseline
 //! benches/ref_decode.rs measures the speedup over.
+//!
+//! Prefill goes through the **chunked GEMM-blocked path** by default
+//! ([`crate::model::reference::PrefillRun`]): group-aligned token tiles,
+//! one streaming pass over each weight per tile, direct-to-page
+//! quantization as each layer closes, and a last-position-only vocab
+//! projection. The old full-materialization path
+//! (`RefModel::forward_full` + `RequestCache::load_prefill`) survives as
+//! [`RefDriver::prefill_legacy`] — the oracle tests/blocked_prefill.rs
+//! checks against and the baseline benches/prefill.rs measures.
 
 use std::cell::RefCell;
 
@@ -23,7 +32,7 @@ use crate::harness::accuracy::AccuracyReport;
 use crate::harness::workloads::Task;
 use crate::kvcache::cache::RequestCache;
 use crate::model::config::{CacheConfig, ModelConfig};
-use crate::model::reference::{DecodeScratch, LayerCtx, RefModel};
+use crate::model::reference::{DecodeScratch, LayerCtx, PrefillRun, RefModel};
 use crate::model::sampler::{argmax, log_prob};
 use crate::model::weights::Weights;
 use crate::quant::methods::Method;
@@ -57,23 +66,32 @@ impl<'a> RefDriver<'a> {
         RequestCache::new(&self.model.mc, &self.cc, &self.specs, self.method.clone(), self.r_limit)
     }
 
-    /// Prefill prompt into a fresh cache (private unbounded page pool).
-    pub fn prefill(&self, prompt: &[i32]) -> Result<(RequestCache, Vec<f32>)> {
-        let (_, pre) = self.model.forward_full(prompt);
-        let mut cache = self.new_cache();
-        cache.load_prefill(&pre.k, &pre.v, &pre.qabs, prompt.len())?;
-        Ok((cache, pre.last_logits))
+    /// Run the chunked blocked prefill to completion into `cache`.
+    fn prefill_chunked(&self, cache: &mut RequestCache, prompt: &[i32]) -> Result<Vec<f32>> {
+        let mut run = PrefillRun::new(&self.model.mc, prompt.len(), self.cc.group);
+        while !run.advance(&self.model, prompt, cache, usize::MAX)? {}
+        Ok(run.last_logits().to_vec())
     }
 
-    /// Prefill into a cache leasing its pages from `pool` — the serving
-    /// storage configuration, used by benches/tests to measure/verify the
-    /// shared-pool decode path without an engine.
+    /// Prefill prompt into a fresh cache (private unbounded page pool)
+    /// through the chunked GEMM-blocked pipeline: K/V quantize straight
+    /// into pool pages as each layer closes — no full f32 prefill stash,
+    /// no `T × vocab` logits. The pre-blocked path survives as
+    /// [`RefDriver::prefill_legacy`] (the oracle).
+    pub fn prefill(&self, prompt: &[i32]) -> Result<(RequestCache, Vec<f32>)> {
+        let mut cache = self.new_cache();
+        let last = self.prefill_chunked(&mut cache, prompt)?;
+        Ok((cache, last))
+    }
+
+    /// Chunked prefill into a cache leasing its pages from `pool` — the
+    /// serving storage configuration, used by benches/tests to
+    /// measure/verify the shared-pool paths without an engine.
     pub fn prefill_pooled(
         &self,
         pool: &crate::kvcache::pool::KvPool,
         prompt: &[i32],
     ) -> Result<(RequestCache, Vec<f32>)> {
-        let (_, pre) = self.model.forward_full(prompt);
         let mut cache = RequestCache::new_in(
             pool,
             &self.model.mc,
@@ -82,16 +100,43 @@ impl<'a> RefDriver<'a> {
             self.method.clone(),
             self.r_limit,
         );
+        let last = self.prefill_chunked(&mut cache, prompt)?;
+        Ok((cache, last))
+    }
+
+    /// The pre-blocked prefill path, kept verbatim as the oracle and bench
+    /// baseline: full teacher-forced `T × vocab` logits via per-token
+    /// matvecs, the `[L]`-layer f32 K/V stash, then a bulk
+    /// `load_prefill` re-copy into the cache.
+    pub fn prefill_legacy(&self, prompt: &[i32]) -> Result<(RequestCache, Vec<f32>)> {
+        let (_, pre) = self.model.forward_full(prompt);
+        let mut cache = self.new_cache();
         cache.load_prefill(&pre.k, &pre.v, &pre.qabs, prompt.len())?;
         Ok((cache, pre.last_logits))
     }
 
     /// One teacher-forced decode step (fused path); returns logits for the
-    /// next token.
+    /// next token. Clones the vocab-sized logits out of the scratch —
+    /// hot evaluation loops use the borrow-returning
+    /// [`RefDriver::step_into`] instead.
     pub fn step(&self, cache: &mut RequestCache, token: i32) -> Result<Vec<f32>> {
         let mut scratch = self.scratch.borrow_mut();
         self.step_with(cache, token, &mut scratch)?;
         Ok(scratch.logits.clone())
+    }
+
+    /// Borrow-returning decode step: like [`RefDriver::step`] but hands
+    /// back `&scratch.logits` instead of cloning a vocab-sized vector per
+    /// step — the accuracy/perplexity harness loops (and anything else
+    /// that owns a [`DecodeScratch`]) read the logits in place.
+    pub fn step_into<'s>(
+        &self,
+        cache: &mut RequestCache,
+        token: i32,
+        scratch: &'s mut DecodeScratch,
+    ) -> Result<&'s [f32]> {
+        self.step_with(cache, token, scratch)?;
+        Ok(&scratch.logits)
     }
 
     /// The zero-alloc step core: decode into `scratch` (fused packed-code
@@ -176,8 +221,11 @@ impl<'a> RefDriver<'a> {
     }
 
     /// Teacher-forced answer accuracy (same metric as harness::accuracy).
+    /// Steps through [`RefDriver::step_into`] over the shared per-driver
+    /// scratch — no vocab-sized logits clone per step.
     pub fn accuracy(&self, tasks: &[Task]) -> Result<AccuracyReport> {
         let mut rep = AccuracyReport::default();
+        let mut scratch = self.scratch.borrow_mut();
         for task in tasks {
             let (mut cache, last_logits) = self.prefill(&task.prompt)?;
             let mut ok = true;
@@ -196,9 +244,9 @@ impl<'a> RefDriver<'a> {
             let mut cursor = task.prompt.len();
             check(cursor, &last_logits);
             while cursor < task.gold.len() - 1 {
-                let logits = self.step(&mut cache, task.gold[cursor])?;
+                let logits = self.step_into(&mut cache, task.gold[cursor], &mut scratch)?;
                 cursor += 1;
-                check(cursor, &logits);
+                check(cursor, logits);
             }
             rep.tasks += 1;
             rep.answers += task.answer_positions.len();
@@ -210,17 +258,19 @@ impl<'a> RefDriver<'a> {
         Ok(rep)
     }
 
-    /// Teacher-forced perplexity (Table 5 sweeps).
+    /// Teacher-forced perplexity (Table 5 sweeps); borrow-returning steps,
+    /// same as [`RefDriver::accuracy`].
     pub fn perplexity(&self, seqs: &[Vec<i32>]) -> Result<f64> {
         let mut nll = 0.0;
         let mut n = 0usize;
+        let mut scratch = self.scratch.borrow_mut();
         for seq in seqs {
             let (mut cache, last) = self.prefill(&seq[..1])?;
             nll += -log_prob(&last, seq[1]);
             n += 1;
             for cursor in 1..seq.len() - 1 {
-                let logits = self.step(&mut cache, seq[cursor])?;
-                nll += -log_prob(&logits, seq[cursor + 1]);
+                let logits = self.step_into(&mut cache, seq[cursor], &mut scratch)?;
+                nll += -log_prob(logits, seq[cursor + 1]);
                 n += 1;
             }
         }

@@ -641,16 +641,10 @@ impl RequestCache {
         qabs: &[Vec<f32>],
         t: usize,
     ) -> Result<()> {
-        let res_cap = self.heads[0][0].res.capacity;
+        // same capacity/occupancy validation as the chunked path — one
+        // derivation, two admission flavors
+        self.begin_prefill(t)?;
         let (qt, rl) = Self::prefill_split(t, self.r_limit, self.group, self.capacity);
-        if rl > res_cap {
-            bail!("prompt too long: residual leftover {rl} > capacity {res_cap}");
-        }
-        let need = super::pool::pages_for_tokens(qt, self.group, self.heads.len(), self.mc_n_kv);
-        if !self.pool.can_lease(need) {
-            self.pool.note_lease_failure();
-            bail!("kv pool exhausted: prefill needs {need} pages");
-        }
         for l in 0..self.heads.len() {
             for h in 0..self.mc_n_kv {
                 let d = self.d;
@@ -669,6 +663,78 @@ impl RequestCache {
         self.qlen = qt;
         self.pos = t;
         Ok(())
+    }
+
+    /// Validate a chunked prefill of `t` tokens before any layer stores:
+    /// the residual leftover must fit X_R and the pool must currently
+    /// cover the quantized window's pages. Leases nothing — pages are
+    /// leased one group at a time as [`RequestCache::store_prefill_layer`]
+    /// stores them (a shared pool drying up mid-run surfaces as an error
+    /// from the store; dropping the cache returns what was leased).
+    pub fn begin_prefill(&self, t: usize) -> Result<()> {
+        let res_cap = self.heads[0][0].res.capacity;
+        let (qt, rl) = Self::prefill_split(t, self.r_limit, self.group, self.capacity);
+        if rl > res_cap {
+            bail!("prompt too long: residual leftover {rl} > capacity {res_cap}");
+        }
+        let need = super::pool::pages_for_tokens(qt, self.group, self.heads.len(), self.mc_n_kv);
+        if !self.pool.can_lease(need) {
+            self.pool.note_lease_failure();
+            bail!("kv pool exhausted: prefill needs {need} pages");
+        }
+        Ok(())
+    }
+
+    /// Chunked-prefill layer sink: quantize layer `l`'s full-precision K/V
+    /// — token-major `[t, Hkv*dh]`, exactly as the blocked forward produces
+    /// them — straight into pool pages (one lease per quantization group as
+    /// each group stores) plus the f32 residual tail, without ever
+    /// materializing the `[L]`-layer prefill stash the legacy
+    /// `load_prefill` path consumes. Per head the flow is identical to
+    /// `load_prefill` (|q| statistics first, then one whole-window
+    /// quantization so KVQuant-style global scales span the full window):
+    /// given bit-identical K/V/|q| inputs the stored pages are
+    /// bit-identical too (tests/blocked_prefill.rs asserts this across
+    /// pooled and private caches). `kbuf`/`vbuf` are caller gather scratch
+    /// of at least `t * d_head` elements.
+    #[allow(clippy::too_many_arguments)]
+    pub fn store_prefill_layer(
+        &mut self,
+        l: usize,
+        k: &[f32],
+        v: &[f32],
+        qabs: &[f32],
+        t: usize,
+        kbuf: &mut [f32],
+        vbuf: &mut [f32],
+    ) -> Result<()> {
+        let d = self.d;
+        let stride = self.mc_n_kv * d;
+        debug_assert_eq!(k.len(), t * stride);
+        debug_assert!(kbuf.len() >= t * d && vbuf.len() >= t * d);
+        let (qt, rl) = Self::prefill_split(t, self.r_limit, self.group, self.capacity);
+        for h in 0..self.mc_n_kv {
+            for s in 0..t {
+                let row = s * stride + h * d;
+                kbuf[s * d..(s + 1) * d].copy_from_slice(&k[row..row + d]);
+                vbuf[s * d..(s + 1) * d].copy_from_slice(&v[row..row + d]);
+            }
+            self.heads[l][h].qstats.update(&qabs[h * d..(h + 1) * d], t as f32);
+            if qt > 0 {
+                self.quantize_into(l, h, &kbuf[..qt * d], &vbuf[..qt * d], qt, 0)?;
+            }
+            let head = &mut self.heads[l][h];
+            head.res.extend(&kbuf[qt * d..t * d], &vbuf[qt * d..t * d], rl);
+        }
+        Ok(())
+    }
+
+    /// Seal a chunked prefill: set the window/position cursors once every
+    /// layer has stored (`store_prefill_layer` for `0..n_layers`).
+    pub fn finish_prefill(&mut self, t: usize) {
+        let (qt, _) = Self::prefill_split(t, self.r_limit, self.group, self.capacity);
+        self.qlen = qt;
+        self.pos = t;
     }
 
     /// Append one decoded token's K/V/|Q| (from the decode step outputs);
@@ -1033,6 +1099,55 @@ mod tests {
         let pool = cache.pool().clone();
         drop(cache);
         assert_eq!(pool.leased(), 0, "retirement must return every page");
+    }
+
+    #[test]
+    fn chunked_layer_store_is_bit_identical_to_load_prefill() {
+        // Same K/V/|q| through the chunked-prefill sink (token-major,
+        // layer at a time) and the legacy bulk path must produce the same
+        // pages, residual, and cursors — bit for bit.
+        let (mc, _, mut legacy) = setup(Method::mixkvq("mix30"), 32);
+        let (_, _, mut chunked) = setup(Method::mixkvq("mix30"), 32);
+        let mut rng = Pcg32::seeded(71);
+        let t = 100; // unaligned: 64 quantized + 36 residual
+        let (k, v, qa) = rand_kv(&mut rng, &mc, t);
+        legacy.load_prefill(&k, &v, &qa, t).unwrap();
+        let d = mc.d_head;
+        let stride = mc.n_kv_heads * d;
+        let mut kbuf = vec![0f32; t * d];
+        let mut vbuf = vec![0f32; t * d];
+        chunked.begin_prefill(t).unwrap();
+        for l in 0..mc.n_layers {
+            // convert the head-major fixture to the token-major layout the
+            // blocked forward produces
+            let mut kt = vec![0f32; t * stride];
+            let mut vt = vec![0f32; t * stride];
+            for h in 0..mc.n_kv_heads {
+                for s in 0..t {
+                    kt[s * stride + h * d..s * stride + (h + 1) * d]
+                        .copy_from_slice(&k[l][h * t * d + s * d..h * t * d + (s + 1) * d]);
+                    vt[s * stride + h * d..s * stride + (h + 1) * d]
+                        .copy_from_slice(&v[l][h * t * d + s * d..h * t * d + (s + 1) * d]);
+                }
+            }
+            chunked
+                .store_prefill_layer(l, &kt, &vt, &qa[l], t, &mut kbuf, &mut vbuf)
+                .unwrap();
+        }
+        chunked.finish_prefill(t);
+        assert_eq!(chunked.qlen, legacy.qlen);
+        assert_eq!(chunked.pos, legacy.pos);
+        assert_eq!(chunked.rlen(), legacy.rlen());
+        assert_eq!(chunked.leased_pages(), legacy.leased_pages());
+        for l in 0..mc.n_layers {
+            for h in 0..mc.n_kv_heads {
+                let (a, b) = (&chunked.heads[l][h], &legacy.heads[l][h]);
+                assert_eq!(a.idx, b.idx, "l={l} h={h}: channel plans differ");
+                assert_eq!(a.contiguous(), b.contiguous(), "l={l} h={h}");
+                assert_eq!(a.res.keys(), b.res.keys());
+                assert_eq!(a.res.values(), b.res.values());
+            }
+        }
     }
 
     #[test]

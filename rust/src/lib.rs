@@ -59,6 +59,46 @@
 //! engine's batch assembly pools its decode-arg buffers per variant the
 //! same way ([`coordinator::engine::EngineTimers`] reports the reuse rate).
 //!
+//! ## Chunked GEMM-blocked prefill (direct-to-page, last-logit-only)
+//!
+//! Prefill — the TTFT/admission half of the hot path — no longer runs the
+//! naive full-materialization forward. The production path is
+//! [`model::reference::PrefillRun`]: the prompt is processed
+//! **layer-streamed, chunk-tiled** (chunk = the quantization group G, so
+//! tile boundaries line up with page boundaries):
+//!
+//! * every projection (QKV, output, MLP) goes through
+//!   [`model::reference::matmul_blocked`] — 4-token × 4-weight-row tiles,
+//!   one streaming pass over each weight matrix per tile instead of one
+//!   per token, bit-identical summation order to the per-token `matvec`;
+//! * attention streams over the layer's own f32 K/V with multi-accumulator
+//!   dots ([`model::reference::dot_lanes`]), every intermediate living in a
+//!   reusable [`model::reference::PrefillScratch`] arena — a steady-state
+//!   (layer, chunk) unit performs **zero heap allocations** (gated by
+//!   tests/blocked_prefill.rs with the counting allocator);
+//! * as each layer closes, its K/V quantize **straight into `RequestCache`
+//!   pool pages** ([`kvcache::cache::RequestCache::store_prefill_layer`]
+//!   leases one page per group as it stores) — the `[L]`-layer f32
+//!   `PrefillOut` stash and the `[Hkv, T, dh]` re-stash copy at admission
+//!   are gone, so peak prefill memory is ~one layer of f32 plus the
+//!   quantized pages (≥2× smaller; `cargo bench --bench prefill` writes
+//!   `BENCH_prefill.json`);
+//! * the vocab projection runs for the **last position only** — the
+//!   `T × vocab` logits matrix every production caller discarded is gone.
+//!   Full teacher-forced logits remain available from the
+//!   [`model::reference::RefModel::forward_full`] oracle, which the
+//!   chunked path is property-tested against to ≤1e-4 across the full
+//!   method roster (tests/blocked_prefill.rs), mirroring the PR 2
+//!   fused-vs-legacy decode pattern
+//!   (`harness::refdriver::RefDriver::prefill_legacy` is the baseline).
+//!
+//! Serving admits by the same unit: `Server::tick` budgets
+//! `prefill_chunks_per_tick` (layer, chunk) units across in-flight
+//! [`coordinator::engine::ChunkedPrefill`] runs, so a long prompt spreads
+//! over ticks instead of monopolizing one against live decoders, and
+//! `EngineTimers` reports prefill chunk counts + tok/s in the serve
+//! breakdown.
+//!
 //! ## Paged KV storage (the `KvPool`)
 //!
 //! Cache storage is **leased, not preallocated**: a request's quantized

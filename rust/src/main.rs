@@ -97,6 +97,7 @@ fn serve(args: &Args) -> Result<()> {
             max_prefills_per_cycle: 2,
             seed,
             reserve_pages: None,
+            ..ServerConfig::default()
         },
     );
     let mut rng = Pcg32::seeded(seed);
@@ -131,6 +132,13 @@ fn serve(args: &Args) -> Result<()> {
         b.assemble_reuse_pct,
         b.scratch_bytes_pooled / 1024
     );
+    let t = &server.engine.timers;
+    if t.prefill_chunks > 0 {
+        println!(
+            "prefill: {} tokens in {} chunks, {:.0} tok/s (chunked direct-to-page)",
+            t.prefill_tokens, b.prefill_chunks, b.prefill_tok_s
+        );
+    }
     let ps = server.pool.stats();
     println!(
         "kv page pool: {} pages x {} B, high water {} ({} lease failures, \
@@ -149,7 +157,7 @@ fn serve(args: &Args) -> Result<()> {
     }
     println!(
         "completed {} requests ({n_events} lifecycle events)",
-        server.metrics.completed.len()
+        server.metrics.completed.total()
     );
     Ok(())
 }

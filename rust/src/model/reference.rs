@@ -1,14 +1,27 @@
 //! Pure-Rust MiniReasoner — the f32 oracle mirroring python/compile/model.py.
 //!
-//! Two uses:
+//! Three uses:
 //! * invariant #8 (DESIGN.md): the HLO executables must agree with this
 //!   implementation to ~1e-4 (tests/integration.rs);
 //! * the *flexible* experiment path: analyses that sweep tier counts or
 //!   thresholds beyond the compiled HLO variants (Figs. 6/7, Table 5/6
-//!   sweeps) run here, where shapes are not baked into a graph.
+//!   sweeps) run here, where shapes are not baked into a graph;
+//! * the **production prefill path**: [`PrefillRun`] is a chunked,
+//!   GEMM-blocked, direct-to-cache prefill pipeline ([`matmul_blocked`] +
+//!   [`PrefillScratch`]) that quantizes each layer's K/V straight into
+//!   `RequestCache` pool pages as it is produced and projects logits for
+//!   the **last position only**. [`RefModel::forward_full`] survives as the
+//!   numerical oracle it is property-tested against
+//!   (tests/blocked_prefill.rs), mirroring the PR 2 fused-vs-legacy decode
+//!   pattern.
 //!
 //! Numerics deliberately match jax: RMSNorm, half-rotation RoPE, tanh-GELU
-//! (jax.nn.gelu approximate=True), softmax with max-subtraction.
+//! (jax.nn.gelu approximate=True), softmax with max-subtraction. The
+//! chunked prefill reassociates attention reductions ([`dot_lanes`]) — it
+//! agrees with the sequential oracle to float-reassociation tolerance, not
+//! bit-for-bit.
+
+use anyhow::{bail, Result};
 
 use super::config::ModelConfig;
 use super::weights::{ParamIndex, Weights};
@@ -190,6 +203,95 @@ pub fn matvec(x: &[f32], w: &[f32], n: usize, m: usize, out: &mut [f32]) {
     }
 }
 
+/// Multi-accumulator dot product: eight independent partial sums break the
+/// sequential-add dependency chain of a naive `zip().sum::<f32>()` (which
+/// the compiler must keep latency-bound — f32 addition is not
+/// reassociable), so the loop vectorizes. Used by the chunked-prefill
+/// attention scores and the last-logit projection. Reassociates the
+/// reduction: results differ from the sequential sum by float-reassociation
+/// noise, covered by the ≤1e-4 oracle tolerance.
+#[inline]
+pub fn dot_lanes(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0f32; 8];
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    for (xs, ys) in (&mut ca).zip(&mut cb) {
+        for u in 0..8 {
+            acc[u] += xs[u] * ys[u];
+        }
+    }
+    let mut tail = 0.0;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += x * y;
+    }
+    tail + ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]))
+}
+
+/// Y = X · W for row-major X [t, n], W [n, m]: the chunked-prefill GEMM,
+/// blocked 4 tokens × 4 weight rows so each weight row is streamed once per
+/// 4-token tile (the per-token [`matvec`] streams every weight matrix once
+/// *per token* — the dominant prefill cost this tiling removes) and the
+/// inner loop carries 16 independent FMA chains. The per-element summation
+/// order matches [`matvec`] exactly (ascending 4-row blocks, then the
+/// remainder), so a blocked QKV projection is bit-identical to the
+/// per-token oracle; remainder tokens fall back to [`matvec`] itself.
+pub fn matmul_blocked(x: &[f32], t: usize, w: &[f32], n: usize, m: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), t * n);
+    debug_assert_eq!(w.len(), n * m);
+    let out = &mut out[..t * m];
+    let mut tok = 0;
+    while tok + 4 <= t {
+        let (x0, rest) = x[tok * n..(tok + 4) * n].split_at(n);
+        let (x1, rest) = rest.split_at(n);
+        let (x2, x3) = rest.split_at(n);
+        let block = &mut out[tok * m..(tok + 4) * m];
+        let (o0, rest) = block.split_at_mut(m);
+        let (o1, rest) = rest.split_at_mut(m);
+        let (o2, o3) = rest.split_at_mut(m);
+        o0.fill(0.0);
+        o1.fill(0.0);
+        o2.fill(0.0);
+        o3.fill(0.0);
+        let mut i = 0;
+        while i + 4 <= n {
+            let r0 = &w[i * m..(i + 1) * m];
+            let r1 = &w[(i + 1) * m..(i + 2) * m];
+            let r2 = &w[(i + 2) * m..(i + 3) * m];
+            let r3 = &w[(i + 3) * m..(i + 4) * m];
+            let (a0, a1, a2, a3) = (x0[i], x0[i + 1], x0[i + 2], x0[i + 3]);
+            let (b0, b1, b2, b3) = (x1[i], x1[i + 1], x1[i + 2], x1[i + 3]);
+            let (c0, c1, c2, c3) = (x2[i], x2[i + 1], x2[i + 2], x2[i + 3]);
+            let (d0, d1, d2, d3) = (x3[i], x3[i + 1], x3[i + 2], x3[i + 3]);
+            for j in 0..m {
+                let (w0, w1, w2, w3) = (r0[j], r1[j], r2[j], r3[j]);
+                o0[j] = o0[j] + a0 * w0 + a1 * w1 + a2 * w2 + a3 * w3;
+                o1[j] = o1[j] + b0 * w0 + b1 * w1 + b2 * w2 + b3 * w3;
+                o2[j] = o2[j] + c0 * w0 + c1 * w1 + c2 * w2 + c3 * w3;
+                o3[j] = o3[j] + d0 * w0 + d1 * w1 + d2 * w2 + d3 * w3;
+            }
+            i += 4;
+        }
+        while i < n {
+            let row = &w[i * m..(i + 1) * m];
+            let (a, b, c, d) = (x0[i], x1[i], x2[i], x3[i]);
+            for j in 0..m {
+                let r = row[j];
+                o0[j] += a * r;
+                o1[j] += b * r;
+                o2[j] += c * r;
+                o3[j] += d * r;
+            }
+            i += 1;
+        }
+        tok += 4;
+    }
+    while tok < t {
+        matvec(&x[tok * n..(tok + 1) * n], w, n, m, &mut out[tok * m..(tok + 1) * m]);
+        tok += 1;
+    }
+}
+
 /// jax.nn.gelu(approximate=True): 0.5x(1+tanh(√(2/π)(x+0.044715x³))).
 pub fn gelu(x: f32) -> f32 {
     const C: f32 = 0.797_884_6; // sqrt(2/pi)
@@ -227,6 +329,14 @@ impl<'a> RefModel<'a> {
     pub fn new(mc: ModelConfig, w: &'a Weights) -> Self {
         let pidx = ParamIndex::new(w, &mc);
         let rope = RopeTable::new(mc.d_head, mc.rope_theta);
+        RefModel { mc, w, pidx, rope }
+    }
+
+    /// Assemble from prebuilt lookup parts: callers that construct a
+    /// transient `RefModel` on a hot path (the engine's per-tick
+    /// chunked-prefill advance) cache the [`ParamIndex`]/[`RopeTable`]
+    /// once and skip the per-call name resolution `new` performs.
+    pub fn with_parts(mc: ModelConfig, w: &'a Weights, pidx: ParamIndex, rope: RopeTable) -> Self {
         RefModel { mc, w, pidx, rope }
     }
 
@@ -572,6 +682,349 @@ impl<'a> RefModel<'a> {
     }
 }
 
+/// Reusable chunked-prefill arena: every intermediate of a [`PrefillRun`]
+/// lives here, allocated once per run and reused for every chunk of every
+/// layer — the steady-state chunk performs **zero heap allocations**
+/// (asserted by tests/blocked_prefill.rs with the counting allocator).
+///
+/// The only full-prompt activations are the residual stream `h` and ONE
+/// layer's K/V — the legacy path's `[L]`-layer `PrefillOut` stash, its
+/// `[Hkv, T, dh]` re-stash copy at admission, and the `T × vocab` logits
+/// matrix all disappear, which is where the ≥2× peak-resident-bytes
+/// reduction of benches/prefill.rs comes from.
+pub struct PrefillScratch {
+    /// [t, d_model] residual stream.
+    h: Vec<f32>,
+    /// [chunk, d_model] rmsnorm output tile.
+    x: Vec<f32>,
+    /// [chunk, Hq*dh] query tile.
+    q: Vec<f32>,
+    /// [t, Hkv*dh] CURRENT layer keys (post-RoPE), reused layer to layer.
+    k: Vec<f32>,
+    /// [t, Hkv*dh] current layer values.
+    v: Vec<f32>,
+    /// [chunk, Hq*dh] attention output tile.
+    o: Vec<f32>,
+    /// [chunk, d_model] projection tile.
+    proj: Vec<f32>,
+    /// [chunk, d_ff] MLP tile.
+    ff: Vec<f32>,
+    /// [t] attention scores for one (token, head).
+    scores: Vec<f32>,
+    /// [L][Hkv*dh] running |q| sums, normalized at each layer's close.
+    qabs: Vec<Vec<f32>>,
+    /// [t, dh] per-head gather buffers feeding the direct-to-page
+    /// quantization sink (`RequestCache::store_prefill_layer`).
+    kg: Vec<f32>,
+    vg: Vec<f32>,
+    /// [vocab] logits for the LAST position only.
+    logits: Vec<f32>,
+}
+
+impl PrefillScratch {
+    pub fn new(mc: &ModelConfig, t: usize, chunk: usize) -> PrefillScratch {
+        let (hq, hkv, dh) = (mc.n_q_heads, mc.n_kv_heads, mc.d_head);
+        PrefillScratch {
+            h: vec![0.0; t * mc.d_model],
+            x: vec![0.0; chunk * mc.d_model],
+            q: vec![0.0; chunk * hq * dh],
+            k: vec![0.0; t * hkv * dh],
+            v: vec![0.0; t * hkv * dh],
+            o: vec![0.0; chunk * hq * dh],
+            proj: vec![0.0; chunk * mc.d_model],
+            ff: vec![0.0; chunk * mc.d_ff],
+            scores: vec![0.0; t],
+            qabs: (0..mc.n_layers).map(|_| vec![0f32; hkv * dh]).collect(),
+            kg: vec![0.0; t * dh],
+            vg: vec![0.0; t * dh],
+            logits: vec![0.0; mc.vocab],
+        }
+    }
+
+    /// Host bytes this arena pins while the prefill runs — the chunked
+    /// path's peak f32 working set (quantized pages are accounted
+    /// separately by the cache's own byte model).
+    pub fn resident_bytes(&self) -> usize {
+        4 * (self.h.len()
+            + self.x.len()
+            + self.q.len()
+            + self.k.len()
+            + self.v.len()
+            + self.o.len()
+            + self.proj.len()
+            + self.ff.len()
+            + self.scores.len()
+            + self.qabs.iter().map(Vec::len).sum::<usize>()
+            + self.kg.len()
+            + self.vg.len()
+            + self.logits.len())
+    }
+}
+
+/// Resumable chunked GEMM-blocked prefill — the production prefill path.
+///
+/// The prompt is processed **layer-streamed, chunk-tiled**: for each layer,
+/// group-aligned token tiles run rmsnorm → blocked QKV ([`matmul_blocked`])
+/// → RoPE → streaming causal attention (over the layer's own f32 K/V, so
+/// logits match the [`RefModel::forward_full`] oracle to reassociation
+/// tolerance for *every* quantization method) → blocked output + MLP
+/// projections; when a layer's last tile completes, its K/V quantize
+/// **directly into the cache's pool pages**
+/// ([`RequestCache::store_prefill_layer`] leases one page per group as it
+/// stores) and the f32 buffer is recycled for the next layer. After the
+/// final layer, the vocab projection runs for the **last position only**
+/// (the full `T × vocab` logits of the legacy path were always discarded by
+/// production callers).
+///
+/// The unit of work is one (layer, chunk) tile: [`PrefillRun::advance`]
+/// processes up to `max_chunks` units and returns, so a serving tick can
+/// interleave a long prompt's prefill with live decode steps
+/// (`coordinator::router::Server` budgets units per tick). One chunk-unit
+/// at steady state allocates nothing.
+pub struct PrefillRun {
+    t: usize,
+    chunk: usize,
+    layer: usize,
+    /// Tokens completed in the current layer.
+    tok: usize,
+    started: bool,
+    done: bool,
+    chunks_done: usize,
+    scratch: PrefillScratch,
+}
+
+impl PrefillRun {
+    /// `chunk` should be a multiple of the cache's quantization group G so
+    /// tile boundaries line up with page boundaries (correctness does not
+    /// depend on it: quantization happens at layer close over the full
+    /// group-aligned window).
+    pub fn new(mc: &ModelConfig, t: usize, chunk: usize) -> PrefillRun {
+        assert!(t > 0, "empty prompt");
+        assert!(chunk > 0, "chunk must be positive");
+        PrefillRun {
+            t,
+            chunk,
+            layer: 0,
+            tok: 0,
+            started: false,
+            done: false,
+            chunks_done: 0,
+            scratch: PrefillScratch::new(mc, t, chunk),
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// (layer, chunk) units processed so far.
+    pub fn chunks_done(&self) -> usize {
+        self.chunks_done
+    }
+
+    /// Chunk units per layer (the last may be short).
+    pub fn chunks_per_layer(&self) -> usize {
+        self.t.div_ceil(self.chunk)
+    }
+
+    /// Total (layer, chunk) units this run will process.
+    pub fn total_chunks(&self, n_layers: usize) -> usize {
+        self.chunks_per_layer() * n_layers
+    }
+
+    /// Peak f32 working-set bytes of this run's arena.
+    pub fn resident_bytes(&self) -> usize {
+        self.scratch.resident_bytes()
+    }
+
+    /// Last-position logits — valid once [`PrefillRun::is_done`].
+    pub fn last_logits(&self) -> &[f32] {
+        debug_assert!(self.done, "prefill not complete");
+        &self.scratch.logits
+    }
+
+    /// Process up to `max_chunks` (layer, chunk) units, quantizing each
+    /// completed layer straight into `cache` pool pages. Returns `true`
+    /// when the whole prefill (including the last-logit projection and the
+    /// cache's `finish_prefill`) is complete. The first call validates the
+    /// prompt against cache capacity and current pool occupancy
+    /// (`RequestCache::begin_prefill`) before any page is leased; a pool
+    /// that dries up mid-run (pages taken by concurrent decode flushes)
+    /// surfaces as an error from the layer store — the caller drops the
+    /// cache and every already-leased page returns to the pool.
+    pub fn advance(
+        &mut self,
+        model: &RefModel<'_>,
+        tokens: &[i32],
+        cache: &mut RequestCache,
+        max_chunks: usize,
+    ) -> Result<bool> {
+        if self.done {
+            return Ok(true);
+        }
+        if tokens.len() != self.t {
+            bail!("prefill run sized for {} tokens, got {}", self.t, tokens.len());
+        }
+        if !self.started {
+            cache.begin_prefill(self.t)?;
+            let d = model.mc.d_model;
+            let embed = &model.w.flat[model.pidx.embed];
+            for (row, &tokid) in self.scratch.h.chunks_exact_mut(d).zip(tokens) {
+                row.copy_from_slice(&embed[tokid as usize * d..(tokid as usize + 1) * d]);
+            }
+            self.started = true;
+        }
+        let mut budget = max_chunks;
+        while budget > 0 && !self.done {
+            self.chunk_step(model);
+            self.chunks_done += 1;
+            budget -= 1;
+            self.tok = (self.tok + self.chunk).min(self.t);
+            if self.tok == self.t {
+                self.close_layer(model, cache)?;
+                self.layer += 1;
+                self.tok = 0;
+                if self.layer == model.mc.n_layers {
+                    self.project_last(model);
+                    cache.finish_prefill(self.t);
+                    self.done = true;
+                }
+            }
+        }
+        Ok(self.done)
+    }
+
+    /// One (layer, chunk) tile: the zero-alloc steady-state unit.
+    fn chunk_step(&mut self, model: &RefModel<'_>) {
+        let mc = &model.mc;
+        let (d, dff) = (mc.d_model, mc.d_ff);
+        let (hq, hkv, dh, qpk) = (mc.n_q_heads, mc.n_kv_heads, mc.d_head, mc.q_per_kv());
+        let (hqd, hkvd) = (hq * dh, hkv * dh);
+        let scale = 1.0 / (dh as f32).sqrt();
+        let t0 = self.tok;
+        let t1 = (t0 + self.chunk).min(self.t);
+        let cl = t1 - t0;
+        let lw = model.pidx.layers[self.layer];
+        let PrefillScratch { h, x, q, k, v, o, proj, ff, scores, qabs, .. } = &mut self.scratch;
+        // --- blocked QKV: one streaming pass over each weight per tile ---
+        for i in 0..cl {
+            rmsnorm(
+                &h[(t0 + i) * d..(t0 + i + 1) * d],
+                &model.w.flat[lw.ln1],
+                mc.rmsnorm_eps,
+                &mut x[i * d..(i + 1) * d],
+            );
+        }
+        matmul_blocked(&x[..cl * d], cl, &model.w.flat[lw.wq], d, hqd, &mut q[..cl * hqd]);
+        let kdst = &mut k[t0 * hkvd..t1 * hkvd];
+        matmul_blocked(&x[..cl * d], cl, &model.w.flat[lw.wk], d, hkvd, kdst);
+        let vdst = &mut v[t0 * hkvd..t1 * hkvd];
+        matmul_blocked(&x[..cl * d], cl, &model.w.flat[lw.wv], d, hkvd, vdst);
+        for i in 0..cl {
+            for hh in 0..hq {
+                model.rope.apply(&mut q[i * hqd + hh * dh..i * hqd + (hh + 1) * dh], t0 + i);
+            }
+            let krow = (t0 + i) * hkvd;
+            for hh in 0..hkv {
+                model.rope.apply(&mut k[krow + hh * dh..krow + (hh + 1) * dh], t0 + i);
+            }
+        }
+        // --- I_d accumulation (post-RoPE |q|, forward_full's order) ------
+        let qa = &mut qabs[self.layer];
+        for i in 0..cl {
+            for hh in 0..hq {
+                let base = (hh / qpk) * dh;
+                let qrow = &q[i * hqd + hh * dh..i * hqd + (hh + 1) * dh];
+                for (j, qv) in qrow.iter().enumerate() {
+                    qa[base + j] += qv.abs();
+                }
+            }
+        }
+        // --- streaming causal attention over the layer's f32 K/V ---------
+        o[..cl * hqd].fill(0.0);
+        for i in 0..cl {
+            let span = t0 + i + 1;
+            for hh in 0..hq {
+                let kvh = hh / qpk;
+                let qh = &q[i * hqd + hh * dh..i * hqd + (hh + 1) * dh];
+                let s = &mut scores[..span];
+                for (sc, krow) in s.iter_mut().zip(k.chunks_exact(hkvd)) {
+                    *sc = dot_lanes(qh, &krow[kvh * dh..(kvh + 1) * dh]) * scale;
+                }
+                softmax_inplace(s);
+                let oh = &mut o[i * hqd + hh * dh..i * hqd + (hh + 1) * dh];
+                for (p, vrow) in s.iter().zip(v.chunks_exact(hkvd)) {
+                    let vv = &vrow[kvh * dh..(kvh + 1) * dh];
+                    for j in 0..dh {
+                        oh[j] += p * vv[j];
+                    }
+                }
+            }
+        }
+        matmul_blocked(&o[..cl * hqd], cl, &model.w.flat[lw.wo], hqd, d, &mut proj[..cl * d]);
+        for i in 0..cl {
+            let hrow = &mut h[(t0 + i) * d..(t0 + i + 1) * d];
+            for (hv, pv) in hrow.iter_mut().zip(&proj[i * d..(i + 1) * d]) {
+                *hv += pv;
+            }
+        }
+        // --- blocked MLP -------------------------------------------------
+        for i in 0..cl {
+            rmsnorm(
+                &h[(t0 + i) * d..(t0 + i + 1) * d],
+                &model.w.flat[lw.ln2],
+                mc.rmsnorm_eps,
+                &mut x[i * d..(i + 1) * d],
+            );
+        }
+        matmul_blocked(&x[..cl * d], cl, &model.w.flat[lw.w1], d, dff, &mut ff[..cl * dff]);
+        for f in ff[..cl * dff].iter_mut() {
+            *f = gelu(*f);
+        }
+        matmul_blocked(&ff[..cl * dff], cl, &model.w.flat[lw.w2], dff, d, &mut proj[..cl * d]);
+        for i in 0..cl {
+            let hrow = &mut h[(t0 + i) * d..(t0 + i + 1) * d];
+            for (hv, pv) in hrow.iter_mut().zip(&proj[i * d..(i + 1) * d]) {
+                *hv += pv;
+            }
+        }
+    }
+
+    /// Layer close: normalize the |q| accumulator and quantize the layer's
+    /// K/V straight into the cache (pages lease one group at a time inside
+    /// the store; the residual tail stays f32).
+    fn close_layer(&mut self, model: &RefModel<'_>, cache: &mut RequestCache) -> Result<()> {
+        let l = self.layer;
+        let denom = (self.t * model.mc.q_per_kv()) as f32;
+        for a in self.scratch.qabs[l].iter_mut() {
+            *a /= denom;
+        }
+        let PrefillScratch { k, v, qabs, kg, vg, .. } = &mut self.scratch;
+        cache.store_prefill_layer(l, k, v, &qabs[l], self.t, kg, vg)
+    }
+
+    /// Final norm + vocab projection for the LAST position only — the
+    /// legacy `T × vocab` logits matrix (discarded by every production
+    /// caller) is gone. Full teacher-forced logits remain available from
+    /// the [`RefModel::forward_full`] oracle.
+    fn project_last(&mut self, model: &RefModel<'_>) {
+        let mc = &model.mc;
+        let d = mc.d_model;
+        let PrefillScratch { h, x, logits, .. } = &mut self.scratch;
+        let x = &mut x[..d];
+        rmsnorm(
+            &h[(self.t - 1) * d..self.t * d],
+            &model.w.flat[model.pidx.ln_f],
+            mc.rmsnorm_eps,
+            x,
+        );
+        let embed = &model.w.flat[model.pidx.embed];
+        for (vtok, lg) in logits.iter_mut().enumerate() {
+            *lg = dot_lanes(x, &embed[vtok * d..(vtok + 1) * d]);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -719,6 +1172,68 @@ mod tests {
                 let want: f32 = (0..n).map(|i| x[i] * w[i * m + j]).sum();
                 assert!((got[j] - want).abs() < 1e-5, "n={n} m={m} j={j}");
             }
+        }
+    }
+
+    #[test]
+    fn dot_lanes_matches_sequential_sum() {
+        let mut rng = Pcg32::seeded(12);
+        for n in [1usize, 7, 8, 15, 32, 33, 128] {
+            let a: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let got = dot_lanes(&a, &b);
+            assert!((got - want).abs() < 1e-4 * (1.0 + want.abs()), "n={n}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn matmul_blocked_is_bit_identical_to_matvec() {
+        // remainder tokens AND remainder rows, plus the aligned fast path
+        let mut rng = Pcg32::seeded(13);
+        for (t, n, m) in [(1usize, 5usize, 3usize), (3, 8, 4), (4, 7, 5), (9, 13, 6), (8, 16, 32)] {
+            let x: Vec<f32> = (0..t * n).map(|_| rng.normal()).collect();
+            let w: Vec<f32> = (0..n * m).map(|_| rng.normal()).collect();
+            let mut got = vec![0f32; t * m];
+            matmul_blocked(&x, t, &w, n, m, &mut got);
+            let mut want = vec![0f32; m];
+            for tok in 0..t {
+                matvec(&x[tok * n..(tok + 1) * n], &w, n, m, &mut want);
+                assert_eq!(&got[tok * m..(tok + 1) * m], &want[..], "t={t} n={n} m={m} tok={tok}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_matches_forward_full_last_logits() {
+        // The production chunked path vs the oracle, including an unaligned
+        // prompt length; full 17-method sweep lives in tests/blocked_prefill.rs.
+        use crate::kvcache::cache::RequestCache;
+        use crate::model::config::CacheConfig;
+        use crate::quant::methods::Method;
+        use crate::quant::window::TierSpec;
+        let mc = tiny_mc();
+        let w = Weights::random(&mc, 21);
+        let model = RefModel::new(mc.clone(), &w);
+        let cc = CacheConfig::default_build();
+        let spec = TierSpec { n16: 2, n4: 2, n2: 28, v_bits: 2 };
+        let mut rng = Pcg32::seeded(22);
+        for t in [37usize, 70] {
+            let toks: Vec<i32> = (0..t).map(|_| rng.range(1, 127) as i32).collect();
+            let mut cache = RequestCache::new(&mc, &cc, &[spec; 2], Method::mixkvq("mix30"), 32);
+            let mut run = PrefillRun::new(&mc, t, cc.group);
+            while !run.advance(&model, &toks, &mut cache, 1).unwrap() {}
+            assert_eq!(run.chunks_done(), run.total_chunks(mc.n_layers));
+            let (_, pre) = model.forward_full(&toks);
+            let err = run
+                .last_logits()
+                .iter()
+                .zip(&pre.last_logits)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(err <= 1e-4, "t={t}: chunked/oracle logits diverge by {err}");
+            assert_eq!(cache.pos, t);
+            assert_eq!(cache.qlen + cache.rlen(), t);
         }
     }
 

@@ -48,6 +48,30 @@
 //! whole bytes, so a token's row inside a page is `ti * row_bytes` with
 //! `ti = t mod G`. [`packed_len`] is the single source of those row-byte
 //! counts for both the old contiguous maths and `PageLayout`.
+//!
+//! # Prefill path (direct-to-page quantization)
+//!
+//! Pages are not only a decode-time layout: the chunked prefill pipeline
+//! (`model::reference::PrefillRun`) writes them as the prompt is produced.
+//! Its contract, in terms of this ABI:
+//!
+//! * **chunk size = quantization group alignment** — the forward runs in
+//!   G-token tiles, and when a layer closes, its group-aligned window
+//!   quantizes through the same `window::quantize_key_window` /
+//!   `quantize_value_window` code as a decode-time flush, leasing **one
+//!   page per group per (layer, kv-head)** as each group stores
+//!   (`RequestCache::store_prefill_layer`). KVQuant-style global scales
+//!   still span the whole prefill window because the layer quantizes in
+//!   one call — chunking tiles the *forward*, never the scale blocks;
+//! * **last-logit-only projection** — the prefill returns logits for the
+//!   final position only; full `[T, vocab]` teacher-forced logits exist
+//!   only on the oracle path (`RefModel::forward_full`), which the chunked
+//!   path must match to ≤1e-4 (tests/blocked_prefill.rs). Prefill
+//!   attention runs over the layer's own f32 K/V, so that bound holds for
+//!   every method in the roster, 2-bit included;
+//! * **bit-identity** — given identical K/V/|q| inputs the chunked sink
+//!   stores bit-identical pages to the bulk `load_prefill` path, and
+//!   pooled vs private chunked admissions are bitwise equal page for page.
 
 /// Pack 4-bit codes (values 0..=15), `codes.len()` must be even.
 pub fn pack_u4(codes: &[u8], out: &mut Vec<u8>) {

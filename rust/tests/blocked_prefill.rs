@@ -1,0 +1,186 @@
+//! Chunked GEMM-blocked prefill vs the `forward_full` oracle:
+//!
+//! * equivalence property: ≤1e-4 last-logit agreement across the FULL
+//!   `MethodSpec::all()` roster (every tier split, v_bits ∈ {2,4,16},
+//!   grouped and global scales, rotation, clipping, layer-wise specs),
+//!   including an unaligned prompt length — prefill attention runs over
+//!   the layer's own f32 K/V, so the agreement holds for every
+//!   quantization method, not just bf16;
+//! * paged↔contiguous bit-identity after chunked admission: the SAME
+//!   prompt chunk-prefilled into a private-pool cache and a shared
+//!   prewarmed-pool cache must store bit-identical pages (and release
+//!   every lease on retirement);
+//! * steady-state zero-alloc: once the run's arena is warm, a mid-layer
+//!   (layer, chunk) unit performs zero heap allocations (counting global
+//!   allocator, same gate as the fused-decode suite);
+//! * resumability: advancing one chunk at a time is bit-identical to one
+//!   uninterrupted run — the serving tick's budgeted interleaving cannot
+//!   change results.
+
+use std::sync::Mutex;
+
+use mixkvq::harness::refdriver::RefDriver;
+use mixkvq::kvcache::cache::RequestCache;
+use mixkvq::kvcache::pool::KvPool;
+use mixkvq::model::config::Meta;
+use mixkvq::model::reference::{PrefillRun, RefModel};
+use mixkvq::model::weights::Weights;
+use mixkvq::quant::methods::{Method, MethodSpec};
+use mixkvq::util::rng::Pcg32;
+
+mod common;
+
+#[global_allocator]
+static GLOBAL: common::CountingAlloc = common::CountingAlloc;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
+}
+
+/// Chunked prefill must agree with the full-materialization oracle for
+/// every constructible method, and the pooled/private chunked caches must
+/// be bit-identical page for page.
+#[test]
+fn chunked_prefill_matches_oracle_across_full_method_roster() {
+    let _guard = SERIAL.lock().unwrap();
+    let meta = Meta::default_build();
+    let mc = meta.model.clone();
+    let weights = Weights::random(&mc, 41);
+    let specs = MethodSpec::all();
+    assert_eq!(specs.len(), 17, "roster drifted — update this test");
+    for spec in specs {
+        let method = spec.build();
+        let layers = meta.variant(&method.variant).unwrap().layers.clone();
+        let driver =
+            RefDriver::new(mc.clone(), meta.cache.clone(), &weights, layers.clone(), method, 32);
+        let mut rng = Pcg32::seeded(4100 + spec.variant().len() as u64);
+        // long enough to quantize (> r_limit), unaligned on purpose
+        let t = 70;
+        let prompt: Vec<i32> = (0..t).map(|_| rng.range(1, 127) as i32).collect();
+        let (cache, last) = driver.prefill(&prompt).unwrap();
+        assert!(cache.qlen >= 32, "{spec:?}: window must quantize");
+        // --- oracle agreement (continuous path: no quantization feeds
+        // the prefill logits, so 1e-4 holds for 2-bit methods too) -------
+        let (_, pre) = driver.model.forward_full(&prompt);
+        let err = max_abs_diff(&last, &pre.last_logits);
+        assert!(err <= 1e-4, "{spec:?}: chunked/oracle logits diverge by {err}");
+        assert!(last.iter().all(|x| x.is_finite()), "{spec:?}: non-finite logits");
+        // --- admission shape matches the legacy load_prefill path -------
+        let (lcache, llast) = driver.prefill_legacy(&prompt).unwrap();
+        assert_eq!(cache.qlen, lcache.qlen, "{spec:?}");
+        assert_eq!(cache.rlen(), lcache.rlen(), "{spec:?}");
+        assert_eq!(cache.pos, lcache.pos, "{spec:?}");
+        assert_eq!(cache.leased_pages(), lcache.leased_pages(), "{spec:?}");
+        assert!(max_abs_diff(&last, &llast) <= 1e-4, "{spec:?}");
+        // --- paged↔contiguous bit-identity after chunked admission:
+        // shared prewarmed pool vs private pool, same prompt ------------
+        let pages = cache.leased_pages() + cache.pages_per_flush();
+        let pool = KvPool::for_specs(layers.iter(), mc.d_head, meta.cache.group, Some(pages));
+        pool.prewarm(pages);
+        let (pcache, plast) = driver.prefill_pooled(&pool, &prompt).unwrap();
+        assert_eq!(plast, last, "{spec:?}: pooled chunked prefill must be bit-identical");
+        for (lrow, prow) in cache.heads.iter().zip(&pcache.heads) {
+            for (a, b) in lrow.iter().zip(prow) {
+                assert_eq!(a.idx, b.idx, "{spec:?}: channel plans differ");
+                assert_eq!(a.contiguous(), b.contiguous(), "{spec:?}: pages differ");
+                assert_eq!(a.res.keys(), b.res.keys(), "{spec:?}: residuals differ");
+                assert_eq!(a.res.values(), b.res.values(), "{spec:?}");
+            }
+        }
+        drop(pcache);
+        assert_eq!(pool.leased(), 0, "{spec:?}: lease leak after retirement");
+    }
+}
+
+/// Once the arena is warm, a mid-layer chunk unit allocates nothing; and
+/// budgeted single-chunk stepping is bit-identical to an uninterrupted
+/// run (the serving tick's interleaving is invisible to the result).
+#[test]
+fn steady_state_prefill_chunk_allocates_nothing_and_resumes_exactly() {
+    let _guard = SERIAL.lock().unwrap();
+    let meta = Meta::default_build();
+    let mc = meta.model.clone();
+    let cc = meta.cache.clone();
+    let weights = Weights::random(&mc, 43);
+    let model = RefModel::new(mc.clone(), &weights);
+    let layers = meta.variant("mix30").unwrap().layers.clone();
+    let mut rng = Pcg32::seeded(47);
+    let t = 192;
+    let prompt: Vec<i32> = (0..t).map(|_| rng.range(1, 127) as i32).collect();
+
+    let mut cache =
+        RequestCache::new(&mc, &cc, &layers, Method::mixkvq("mix30"), 32);
+    let mut run = PrefillRun::new(&mc, t, cc.group);
+    let per_layer = run.chunks_per_layer();
+    assert!(per_layer >= 3, "need mid-layer chunks to measure");
+    // warm up through all of layer 0 (embedding, arena first touches, the
+    // quantization sink's first gather) …
+    for _ in 0..per_layer {
+        run.advance(&model, &prompt, &mut cache, 1).unwrap();
+    }
+    // … then a layer-1 chunk that closes no layer must allocate nothing
+    let before = common::alloc_count();
+    run.advance(&model, &prompt, &mut cache, 1).unwrap();
+    let after = common::alloc_count();
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state prefill chunk allocated {} times",
+        after - before
+    );
+    while !run.advance(&model, &prompt, &mut cache, 1).unwrap() {}
+    assert_eq!(run.chunks_done(), run.total_chunks(mc.n_layers));
+
+    // resumability: the single-chunk-stepped cache and logits are
+    // bit-identical to an uninterrupted run over the same prompt
+    let mut cache_oneshot =
+        RequestCache::new(&mc, &cc, &layers, Method::mixkvq("mix30"), 32);
+    let mut oneshot = PrefillRun::new(&mc, t, cc.group);
+    assert!(oneshot
+        .advance(&model, &prompt, &mut cache_oneshot, usize::MAX)
+        .unwrap());
+    assert_eq!(run.last_logits(), oneshot.last_logits());
+    assert_eq!(cache.qlen, cache_oneshot.qlen);
+    assert_eq!(cache.rlen(), cache_oneshot.rlen());
+    for (arow, brow) in cache.heads.iter().zip(&cache_oneshot.heads) {
+        for (a, b) in arow.iter().zip(brow) {
+            assert_eq!(a.contiguous(), b.contiguous());
+            assert_eq!(a.dequant_keys(cache.qlen), b.dequant_keys(cache_oneshot.qlen));
+        }
+    }
+}
+
+/// The chunked cache must decode exactly like a cache admitted through the
+/// legacy bulk path would: the fused decode over it stays finite and the
+/// steady-state step count/positions line up.
+#[test]
+fn chunked_admission_feeds_fused_decode() {
+    let _guard = SERIAL.lock().unwrap();
+    let meta = Meta::default_build();
+    let mc = meta.model.clone();
+    let weights = Weights::random(&mc, 53);
+    let layers = meta.variant("mix30").unwrap().layers.clone();
+    let driver = RefDriver::new(
+        mc.clone(),
+        meta.cache.clone(),
+        &weights,
+        layers,
+        Method::mixkvq("mix30"),
+        32,
+    );
+    let mut rng = Pcg32::seeded(59);
+    let prompt: Vec<i32> = (0..100).map(|_| rng.range(1, 127) as i32).collect();
+    let (mut cache, _) = driver.prefill(&prompt).unwrap();
+    assert!(cache.qlen >= 64);
+    for step in 0..4 {
+        let tok = rng.range(1, 127) as i32;
+        let fused = driver.decode_logits_fused(&cache, tok);
+        let oracle = driver.decode_logits_legacy(&cache, tok);
+        let err = max_abs_diff(&fused, &oracle);
+        assert!(err <= 1e-4, "step {step}: fused/oracle diverge by {err} on chunked cache");
+        driver.step(&mut cache, tok).unwrap();
+    }
+    assert_eq!(cache.pos, prompt.len() + 4);
+}

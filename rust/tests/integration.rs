@@ -430,6 +430,7 @@ fn pool_pressure_parks_and_drains_cleanly() {
             max_prefills_per_cycle: 2,
             seed: 7,
             reserve_pages: Some(4),
+            ..ServerConfig::default()
         },
     );
     let mut rng = Pcg32::seeded(17);
@@ -473,6 +474,7 @@ fn server_occupancy_admission_beats_worst_case() {
             max_prefills_per_cycle: batch,
             seed: 5,
             reserve_pages: None,
+            ..ServerConfig::default()
         },
     );
     let worst_case_batch = budget / worst; // == 2 under the old admission
