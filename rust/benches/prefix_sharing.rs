@@ -1,0 +1,154 @@
+//! `cargo bench --bench prefix_sharing` — cross-request prefix page
+//! sharing: K requests over one prompt adopt the registered shared pages
+//! (a `PrefixIndex` hit) instead of each running a private chunked prefill.
+//!
+//! Like ref_decode/prefill this needs **no artifacts** (random weights,
+//! build-default shapes), so it always runs — on CI and fresh checkouts —
+//! and writes `BENCH_prefix_sharing.json`, which the CI `bench-gate` binary
+//! holds to the ROADMAP bars: K sharers must hold ≥2× fewer prefix pages
+//! than K private copies (page dedup), and hits must actually skip their
+//! prefill chunks (compute skipped, not just bytes). The timed comparison
+//! is the hit-install path (reference pages + copy the bounded residual
+//! tail) against the full chunked prefill it replaces.
+
+use mixkvq::harness::refdriver::RefDriver;
+use mixkvq::kvcache::cache::RequestCache;
+use mixkvq::kvcache::pool::{prefix_seed, prompt_chain_key, KvPool, PrefixIndex};
+use mixkvq::model::config::Meta;
+use mixkvq::model::weights::Weights;
+use mixkvq::quant::methods::Method;
+use mixkvq::util::bench::bench;
+use mixkvq::util::json::{self, Json};
+use mixkvq::util::rng::Pcg32;
+
+fn main() {
+    let meta = Meta::default_build();
+    let mc = meta.model.clone();
+    let cc = meta.cache.clone(); // capacity 512, residual 128, group 32
+    let weights = Weights::random(&mc, 7);
+    let specs = meta.variant("mix30").unwrap().layers.clone();
+    let r_limit = cc.residual;
+    let k_req = 4usize;
+    let mut rng = Pcg32::seeded(23);
+    let mut results = Vec::new();
+    let mut entries = Vec::new();
+
+    for t in [256usize, 512] {
+        let driver = RefDriver::new(
+            mc.clone(),
+            cc.clone(),
+            &weights,
+            specs.clone(),
+            Method::mixkvq("mix30"),
+            r_limit,
+        );
+        let prompt: Vec<i32> = (0..t).map(|_| rng.range(1, 127) as i32).collect();
+
+        // private-mode yardstick: what ONE request's prefill leases
+        let (private_cache, _) = driver.prefill(&prompt).unwrap();
+        let pages_per_req = private_cache.leased_pages();
+        drop(private_cache);
+
+        // the serving configuration: bounded prewarmed pool + prefix index
+        let pool = KvPool::for_specs(specs.iter(), mc.d_head, cc.group, Some(4 * pages_per_req));
+        pool.prewarm(4 * pages_per_req);
+        let mut index = PrefixIndex::new(2 * pages_per_req, pool.page_deploy_bytes());
+        let seed = prefix_seed(
+            &driver.method.name,
+            r_limit,
+            cc.group,
+            cc.capacity,
+            mc.n_layers,
+            mc.n_kv_heads,
+            mc.d_head,
+        );
+        let key = prompt_chain_key(seed, &prompt, cc.group);
+
+        let (mut producer, last) = driver.prefill_pooled(&pool, &prompt).unwrap();
+        assert!(producer.register_prefix(&mut index, key, &prompt, &last));
+        let prefix_pages = pool.leased();
+        assert_eq!(prefix_pages, pages_per_req, "registration must not lease");
+
+        // timed: adopting the registered prompt vs prefilling it
+        let hit = bench(&format!("prefix-hit install       T={t}"), 300, 2500.0, || {
+            let mut c = RequestCache::new_in(
+                &pool,
+                &mc,
+                &cc,
+                &specs,
+                Method::mixkvq("mix30"),
+                r_limit,
+            );
+            c.install_prefix(index.peek(key, &prompt).unwrap()).unwrap();
+            std::hint::black_box(&c);
+        });
+        let miss = bench(&format!("full chunked prefill     T={t}"), 100, 2500.0, || {
+            std::hint::black_box(driver.prefill_pooled(&pool, &prompt).unwrap());
+        });
+        let speedup = miss.median_ms / hit.median_ms;
+
+        // K resident sharers (producer + K-1 hits): page dedup in the pool
+        let sharers: Vec<RequestCache> = (0..k_req - 1)
+            .map(|_| {
+                let mut c = RequestCache::new_in(
+                    &pool,
+                    &mc,
+                    &cc,
+                    &specs,
+                    Method::mixkvq("mix30"),
+                    r_limit,
+                );
+                c.install_prefix(index.lookup(key, &prompt).unwrap()).unwrap();
+                c
+            })
+            .collect();
+        let shared_pages = pool.leased();
+        let private_equiv = k_req * pages_per_req;
+        let dedup_ratio = private_equiv as f64 / shared_pages.max(1) as f64;
+        // compute skipped: every hit skips the whole prompt's chunk grid
+        let chunks_per_prefill = t.div_ceil(cc.group) * mc.n_layers;
+        let chunks_skipped = (k_req - 1) * chunks_per_prefill;
+        let bytes_deduped = index.stats().bytes_deduped;
+
+        println!(
+            "T={t} K={k_req}: hit {:.3} ms  full prefill {:.3} ms  install speedup {:.1}x",
+            hit.median_ms, miss.median_ms, speedup
+        );
+        println!(
+            "      pages {shared_pages} shared vs {private_equiv} private-mode \
+             ({dedup_ratio:.2}x dedup{}), {chunks_skipped} chunks skipped, \
+             {bytes_deduped} B deduped",
+            if dedup_ratio < 2.0 { "  (below the 2x bar!)" } else { "" }
+        );
+        entries.push(json::obj(vec![
+            ("t", json::num(t as f64)),
+            ("k", json::num(k_req as f64)),
+            ("hit_install_ms", json::num(hit.median_ms)),
+            ("full_prefill_ms", json::num(miss.median_ms)),
+            ("install_speedup", json::num(speedup)),
+            ("pages_shared", json::num(shared_pages as f64)),
+            ("pages_private_equiv", json::num(private_equiv as f64)),
+            ("dedup_ratio", json::num(dedup_ratio)),
+            ("chunks_skipped", json::num(chunks_skipped as f64)),
+            ("bytes_deduped", json::num(bytes_deduped as f64)),
+        ]));
+        results.push(hit);
+        results.push(miss);
+        drop(sharers);
+        drop(producer);
+        assert_eq!(pool.leased(), prefix_pages, "index must be the last holder");
+    }
+
+    println!("\n== prefix_sharing ==");
+    for r in &results {
+        println!("{}", r.report());
+    }
+
+    let report = json::obj(vec![
+        ("bench", json::s("prefix_sharing")),
+        ("variant", json::s("mix30")),
+        ("entries", Json::Arr(entries)),
+    ]);
+    std::fs::write("BENCH_prefix_sharing.json", report.print() + "\n").expect("write bench json");
+    println!("wrote BENCH_prefix_sharing.json");
+}

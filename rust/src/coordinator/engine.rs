@@ -11,15 +11,17 @@
 //! ([`Engine::decode_step_variant`]) — the server's batcher groups live
 //! slots into per-variant sub-batches each step.
 
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::rc::Rc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use crate::kvcache::accountant::MemoryAccountant;
 use crate::kvcache::cache::{PageField, RequestCache};
-use crate::kvcache::pool::KvPool;
+use crate::kvcache::pool::{prefix_seed, prompt_chain_key, KvPool, PrefixIndex};
 use crate::model::config::{Meta, VariantSpec};
 use crate::model::reference::{PrefillRun, RefModel, RopeTable};
 use crate::model::weights::{ParamIndex, Weights};
@@ -64,6 +66,13 @@ pub struct EngineTimers {
     /// Prompt tokens whose chunked prefill completed (prefill tok/s =
     /// `prefill_tokens / prefill_exec_ns`).
     pub prefill_tokens: u64,
+    /// (layer, chunk) units NEVER executed because the prompt hit the
+    /// shared prefix index — the compute half of the sharing win
+    /// (`prefill_chunks` counts only units that actually ran).
+    pub prefill_chunks_skipped: u64,
+    /// Ticks whose in-flight prefill round ran in non-FIFO order because
+    /// shortest-remaining-chunks scheduling promoted a shorter prompt.
+    pub prefill_reorders: u64,
 }
 
 /// An in-flight chunked prefill: the request's cache (quantized pages fill
@@ -101,6 +110,11 @@ pub struct Engine {
     /// bounded serving pool); `None` gives each cache a private unbounded
     /// pool — standalone engine use, benches, tests.
     kv_pool: Option<KvPool>,
+    /// Cross-request prefix index (`Server::new` installs it alongside the
+    /// pool): `begin_prefill_chunked` consults it before running a single
+    /// chunk, and completed prefills register into it. `None` disables
+    /// sharing (standalone engine use).
+    prefix_index: Option<Rc<RefCell<PrefixIndex>>>,
     /// Prebuilt reference-model lookup parts for the chunked prefill path —
     /// resolved once per engine so the per-tick advance does not redo
     /// name-resolution lookups (`RefModel::with_parts`).
@@ -196,6 +210,7 @@ impl Engine {
             weight_bufs,
             arg_pool: HashMap::new(),
             kv_pool: None,
+            prefix_index: None,
             ref_pidx,
             ref_rope,
         })
@@ -208,6 +223,82 @@ impl Engine {
 
     pub fn kv_pool(&self) -> Option<&KvPool> {
         self.kv_pool.as_ref()
+    }
+
+    /// Install the cross-request prefix index (shared with the server,
+    /// which registers completed prefills and sheds entries under pool
+    /// pressure).
+    pub fn set_prefix_index(&mut self, index: Rc<RefCell<PrefixIndex>>) {
+        self.prefix_index = Some(index);
+    }
+
+    pub fn prefix_index(&self) -> Option<&Rc<RefCell<PrefixIndex>>> {
+        self.prefix_index.as_ref()
+    }
+
+    /// Content-addressed key for `prompt` under `method`: the hash-chain
+    /// walk of `pool::prompt_chain_key`, seeded by everything that shapes
+    /// what the prompt quantizes into (method identity, residual split,
+    /// group, capacity, model cache geometry).
+    pub fn prefix_key_for(&self, prompt: &[i32], method: &Method) -> u64 {
+        let cc = &self.meta.cache;
+        let mc = &self.meta.model;
+        let seed = prefix_seed(
+            &method.name,
+            self.r_limit,
+            cc.group,
+            cc.capacity,
+            mc.n_layers,
+            mc.n_kv_heads,
+            mc.d_head,
+        );
+        prompt_chain_key(seed, prompt, cc.group)
+    }
+
+    /// Pages this prompt's admission will actually charge the pool: zero
+    /// when the prefix index already holds the prompt (shared pages are
+    /// charged once, at registration — the amortized-admission win),
+    /// otherwise the exact prefill page count. Uses a counter-free probe so
+    /// admission sizing does not pollute hit/miss telemetry.
+    pub fn prefill_pages_for_prompt(&self, prompt: &[i32], method: &Method) -> Result<usize> {
+        if let Some(ix) = &self.prefix_index {
+            let key = self.prefix_key_for(prompt, method);
+            if ix.borrow().peek(key, prompt).is_some() {
+                // the variant must still be valid for this request
+                self.meta.variant(&method.variant)?;
+                return Ok(0);
+            }
+        }
+        self.prefill_pages_for(prompt.len(), method)
+    }
+
+    /// Stamp `prompt`'s prefix entry (if resident and verified) most
+    /// recently used — the admission pass calls this before any
+    /// pressure-shedding so the entry a zero-page claim rests on is the
+    /// LAST candidate for eviction, not the first.
+    pub fn touch_prefix(&mut self, prompt: &[i32], method: &Method) {
+        if let Some(ix) = self.prefix_index.clone() {
+            let key = self.prefix_key_for(prompt, method);
+            ix.borrow_mut().touch(key, prompt);
+        }
+    }
+
+    /// Register a freshly completed (non-hit) prefill into the prefix
+    /// index: the cache's window pages convert to shared form and future
+    /// requests with the same prompt skip their prefill. No-op without an
+    /// index or on a duplicate key.
+    pub fn register_prefix(
+        &mut self,
+        cache: &mut RequestCache,
+        prompt: &[i32],
+        method: &Method,
+        last_logits: &[f32],
+    ) -> bool {
+        let Some(ix) = self.prefix_index.clone() else {
+            return false;
+        };
+        let key = self.prefix_key_for(prompt, method);
+        cache.register_prefix(&mut ix.borrow_mut(), key, prompt, last_logits)
     }
 
     /// Build a bounded page pool for `budget_bytes`, sized so a page fits
@@ -488,15 +579,42 @@ impl Engine {
 
     /// Begin a chunked GEMM-blocked prefill for `prompt` under `method`:
     /// builds the request's cache (shared pool when installed) and the
-    /// resumable run. No work happens yet — drive it with
-    /// [`Engine::advance_prefill_chunked`]. This is the serving admission
-    /// path; the bucketed HLO [`Engine::prefill`] + [`Engine::admit_prefill_with`]
-    /// pair remains for the compiled-graph harness flows.
-    pub fn begin_prefill_chunked(&self, prompt: &[i32], method: &Method) -> Result<ChunkedPrefill> {
+    /// resumable run. The **prefix index is consulted first**: on a hit the
+    /// cache adopts the registered shared pages/plans/residual and the run
+    /// comes back already complete (`PrefillRun::new_shared`) — every
+    /// (layer, chunk) unit of the prompt is skipped, counted in
+    /// `EngineTimers::prefill_chunks_skipped`. Otherwise no work happens
+    /// yet — drive it with [`Engine::advance_prefill_chunked`]. This is the
+    /// serving admission path; the bucketed HLO [`Engine::prefill`] +
+    /// [`Engine::admit_prefill_with`] pair remains for the compiled-graph
+    /// harness flows.
+    pub fn begin_prefill_chunked(
+        &mut self,
+        prompt: &[i32],
+        method: &Method,
+    ) -> Result<ChunkedPrefill> {
         if prompt.is_empty() {
             bail!("empty prompt");
         }
         let spec = self.meta.variant(&method.variant)?.clone();
+        if let Some(ix) = self.prefix_index.clone() {
+            let key = self.prefix_key_for(prompt, method);
+            let mut ixb = ix.borrow_mut();
+            if let Some(entry) = ixb.lookup(key, prompt) {
+                let mut cache = self.cache_for(&spec.layers, method.clone());
+                cache.install_prefix(entry)?;
+                let run = PrefillRun::new_shared(
+                    &self.meta.model,
+                    prompt.len(),
+                    self.meta.cache.group,
+                    entry.last_logits(),
+                );
+                let skipped = run.total_chunks(self.meta.model.n_layers) as u64;
+                drop(ixb);
+                self.timers.prefill_chunks_skipped += skipped;
+                return Ok(ChunkedPrefill { cache, run });
+            }
+        }
         let cache = self.cache_for(&spec.layers, method.clone());
         let run = PrefillRun::new(&self.meta.model, prompt.len(), self.meta.cache.group);
         Ok(ChunkedPrefill { cache, run })
@@ -520,13 +638,16 @@ impl Engine {
             self.ref_pidx.clone(),
             self.ref_rope.clone(),
         );
+        // a prefix-index hit arrives already done: its tokens were never
+        // prefilled here, so they must not inflate prefill tok/s
+        let already_done = cp.run.is_done();
         let before = cp.run.chunks_done();
         let t0 = Instant::now();
         let done = cp.run.advance(&model, prompt, &mut cp.cache, max_chunks);
         self.timers.prefill_exec_ns += t0.elapsed().as_nanos() as u64;
         self.timers.prefill_chunks += (cp.run.chunks_done() - before) as u64;
         let done = done?;
-        if done {
+        if done && !already_done {
             self.timers.prefill_tokens += prompt.len() as u64;
             self.timers.quantize_events += 1;
         }

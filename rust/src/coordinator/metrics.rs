@@ -248,6 +248,28 @@ pub struct Metrics {
     /// Parked sessions force-finished (CacheFull) to break a pool deadlock
     /// where every live slot was parked and nothing could ever free pages.
     pub pool_preemptions: u64,
+    // --- cross-request prefix sharing gauges (from PrefixIndex) ----------
+    /// Prompts served from a shared prefix entry (entire prefill skipped).
+    pub prefix_hits: u64,
+    /// Prompts that ran a full prefill (and then registered their pages).
+    pub prefix_misses: u64,
+    /// Prefix entries currently resident.
+    pub prefix_entries: usize,
+    /// Pool pages currently pinned by prefix entries (each counted once —
+    /// that single charge IS the dedup).
+    pub prefix_pages_pinned: usize,
+    /// Deployment bytes consumers adopted instead of leasing privately,
+    /// cumulative over all hits.
+    pub prefix_bytes_deduped: u64,
+    /// Prefix entries shed (LRU cap at registration, or pool pressure).
+    pub prefix_evictions: u64,
+    /// Chain-key collisions caught by the prompt-token verify (answered as
+    /// misses, never served — nonzero values are expected to be vanishingly
+    /// rare and worth investigating).
+    pub prefix_collisions: u64,
+    /// Off-pool bytes held by entry sidecars (residual snapshots, logits,
+    /// plans) — the bounded retention overhead of full prefill skipping.
+    pub prefix_sidecar_bytes: usize,
 }
 
 impl Metrics {
@@ -341,6 +363,19 @@ impl Metrics {
         self.pool_lease_failures = stats.lease_failures;
     }
 
+    /// Record the prefix-index counters (called once per scheduling tick
+    /// when cross-request sharing is enabled).
+    pub fn observe_prefix(&mut self, stats: &crate::kvcache::pool::PrefixStats) {
+        self.prefix_hits = stats.hits;
+        self.prefix_misses = stats.misses;
+        self.prefix_entries = stats.entries;
+        self.prefix_pages_pinned = stats.pages_pinned;
+        self.prefix_bytes_deduped = stats.bytes_deduped;
+        self.prefix_evictions = stats.evictions;
+        self.prefix_collisions = stats.collisions;
+        self.prefix_sidecar_bytes = stats.sidecar_bytes;
+    }
+
     pub fn summary(&self) -> String {
         let (ttft50, ttft95) = self.ttft_ms();
         let (lat50, lat95) = self.latency_ms();
@@ -351,7 +386,8 @@ impl Metrics {
              ttft p50/p95={:.0}/{:.0} ms latency p50/p95={:.0}/{:.0} ms \
              queue p50/p95={:.0}/{:.0} ms rejected={} cancelled={} stalls={} \
              pool pages={}/{} high_water={} lease_fail={} parks={} resumes={} preempt={} \
-             prefill_parks={}",
+             prefill_parks={} \
+             prefix hits={} misses={} entries={} pinned={} deduped={:.2}MB shed={}",
             self.completed.total(),
             self.total_generated(),
             self.wall_s(),
@@ -376,6 +412,12 @@ impl Metrics {
             self.pool_resumes,
             self.pool_preemptions,
             self.prefill_parks,
+            self.prefix_hits,
+            self.prefix_misses,
+            self.prefix_entries,
+            self.prefix_pages_pinned,
+            self.prefix_bytes_deduped as f64 / 1e6,
+            self.prefix_evictions,
         )
     }
 }

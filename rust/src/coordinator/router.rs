@@ -7,17 +7,28 @@
 //!   its `RequestId` immediately;
 //! * [`Server::tick`] runs one scheduling cycle: admissions — still
 //!   **occupancy-based**: a request starts prefilling when the pool can
-//!   cover its actual prefill pages and keep a reserve watermark free — then
-//!   **chunked prefill work** under a per-tick `(layer, chunk)` unit budget
-//!   (`ServerConfig::prefill_chunks_per_tick`): prompts prefill through the
-//!   blocked direct-to-page pipeline
+//!   cover its actual prefill pages and keep a reserve watermark free, and a
+//!   prompt the **prefix index** already holds charges ZERO pages (its
+//!   shared pages were charged once, at registration) — then **chunked
+//!   prefill work** under a per-tick `(layer, chunk)` unit budget
+//!   (`ServerConfig::prefill_chunks_per_tick`), ordered
+//!   shortest-remaining-chunks first (stable by arrival, so short prompts
+//!   stop queueing behind long ones; reorder ticks are counted in
+//!   `EngineTimers::prefill_reorders`): prompts prefill through the blocked
+//!   direct-to-page pipeline
 //!   ([`crate::coordinator::engine::ChunkedPrefill`]), quantized pages
 //!   filling in as layers close, and a long prompt spreads across ticks
-//!   instead of monopolizing one against live decoders; then one decode
-//!   step per live variant group. A live slot whose due quantization flush
-//!   cannot lease pages is **parked** for the tick (its tokens ride in the
-//!   residual meanwhile) and resumes when pages free up; if every live slot
-//!   is parked the largest page-holder is shed as CacheFull so the server
+//!   instead of monopolizing one against live decoders — unless the prompt
+//!   hits the prefix index, in which case its ENTIRE prefill is skipped:
+//!   the cache adopts the registered shared pages copy-on-write and the
+//!   first token samples from the registered logits the same tick. Each
+//!   completed non-hit prefill registers its prompt into the index before
+//!   installing. Then one decode step per live variant group. A live slot
+//!   whose due quantization flush cannot lease pages is **parked** for the
+//!   tick (its tokens ride in the residual meanwhile) and resumes when
+//!   pages free up; under pool pressure the index sheds LRU entries first
+//!   (retention never outranks a live flush); if every live slot is parked
+//!   the largest *private* page-holder is shed as CacheFull so the server
 //!   never deadlocks;
 //! * [`Server::poll`] / [`Server::cancel`] / [`Server::drain_events`]
 //!   observe and steer individual requests — every request emits a
@@ -35,7 +46,9 @@
 //! an async loop — the *policy* (what gets batched when) is identical to a
 //! threaded deployment.
 
+use std::cell::RefCell;
 use std::collections::HashMap;
+use std::rc::Rc;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -47,7 +60,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::{Scheduler, SchedulerPolicy};
 use crate::coordinator::session::{Completed, FinishReason, Request, RequestId, Session};
 use crate::kvcache::accountant::MemoryAccountant;
-use crate::kvcache::pool::KvPool;
+use crate::kvcache::pool::{KvPool, PrefixIndex};
 use crate::model::sampler;
 use crate::model::tokenizer;
 use crate::runtime::registry::pick_bucket;
@@ -72,6 +85,10 @@ pub struct ServerConfig {
     /// only this many full `Completed` records (token streams) stay
     /// resident for `poll`/`Server::run` to hand out.
     pub completed_ring: usize,
+    /// Pool pages the cross-request prefix index may pin (retained shared
+    /// prompt windows). `None` derives a default of a quarter of the pool;
+    /// `Some(0)` disables prefix sharing.
+    pub prefix_cache_pages: Option<usize>,
 }
 
 impl Default for ServerConfig {
@@ -83,6 +100,7 @@ impl Default for ServerConfig {
             reserve_pages: None,
             prefill_chunks_per_tick: 256,
             completed_ring: crate::coordinator::metrics::COMPLETED_RING_DEFAULT,
+            prefix_cache_pages: None,
         }
     }
 }
@@ -95,19 +113,33 @@ struct PendingPrefill {
     req: Request,
     method: crate::quant::methods::Method,
     cp: ChunkedPrefill,
-    /// Prefill pages this run was admitted against (its occupancy claim).
-    /// Leasing is incremental (one page per group as layers close), so
-    /// admission must count `pages_claimed − leased` of every pending run
-    /// as already spoken for — otherwise two runs admitted in the same
-    /// tick could both pass the occupancy probe and the later one would
-    /// die Rejected mid-prefill instead of waiting its turn in the queue.
+    /// Prefill pages this run was admitted against (its occupancy claim;
+    /// ZERO for a prefix-index hit — shared pages were charged once, at
+    /// registration). Leasing is incremental (one page per group as layers
+    /// close), so admission must count `pages_claimed − leased` of every
+    /// pending run as already spoken for — otherwise two runs admitted in
+    /// the same tick could both pass the occupancy probe and the later one
+    /// would die Rejected mid-prefill instead of waiting its turn in the
+    /// queue.
     pages_claimed: usize,
+    /// Admission sequence — the stable tie-break of the
+    /// shortest-remaining-chunks prefill round.
+    arrival: u64,
 }
 
 impl PendingPrefill {
     /// Claimed pages this run has not leased yet.
     fn outstanding_pages(&self) -> usize {
         self.pages_claimed.saturating_sub(self.cp.cache.leased_pages())
+    }
+
+    /// (layer, chunk) units still to run — the SRTF ordering key.
+    fn remaining_chunks(&self, n_layers: usize) -> usize {
+        if self.cp.run.is_done() {
+            0
+        } else {
+            self.cp.run.total_chunks(n_layers) - self.cp.run.chunks_done()
+        }
     }
 }
 
@@ -138,9 +170,12 @@ pub struct Server {
     /// Terminal records by id (the `poll` fast path) — see [`Terminal`].
     finished: HashMap<RequestId, Terminal>,
     /// In-flight chunked prefills (admitted by occupancy, not yet in a
-    /// decode slot), advanced FIFO under the per-tick chunk budget.
+    /// decode slot), advanced shortest-remaining-chunks-first (stable by
+    /// arrival) under the per-tick chunk budget.
     prefills: Vec<PendingPrefill>,
     prefill_chunks_per_tick: usize,
+    /// Admission counter feeding `PendingPrefill::arrival`.
+    prefill_seq: u64,
 }
 
 impl Server {
@@ -163,6 +198,16 @@ impl Server {
         let reserve = cfg
             .reserve_pages
             .unwrap_or_else(|| (batch * flush_pages.max(1)).min(max_pages / 4));
+        // cross-request prefix sharing: the index may pin up to a quarter
+        // of the pool by default (LRU-shed under pressure, so retention
+        // never starves live flushes)
+        let prefix_cap = cfg.prefix_cache_pages.unwrap_or(max_pages / 4);
+        if prefix_cap > 0 {
+            engine.set_prefix_index(Rc::new(RefCell::new(PrefixIndex::new(
+                prefix_cap,
+                pool.page_deploy_bytes(),
+            ))));
+        }
         Server {
             batcher: Batcher::new(batch),
             scheduler: Scheduler::with_pool(
@@ -187,7 +232,18 @@ impl Server {
             finished: HashMap::new(),
             prefills: Vec::new(),
             prefill_chunks_per_tick: cfg.prefill_chunks_per_tick.max(1),
+            prefill_seq: 0,
             engine,
+        }
+    }
+
+    /// Drop one LRU prefix-index entry (pages with no other holder return
+    /// to the pool immediately). Returns false when there is no index or it
+    /// is empty.
+    fn shed_prefix_entry(&mut self) -> bool {
+        match self.engine.prefix_index() {
+            Some(ix) => ix.borrow_mut().shed_lru(),
+            None => false,
         }
     }
 
@@ -223,9 +279,12 @@ impl Server {
             .worst_case_bytes_for(&method)
             .map(|b| b <= self.scheduler.accountant.budget_bytes)
             .unwrap_or(false); // Err = unknown decode variant
+        // prefix-index hits charge zero pages, so a prompt whose pages
+        // could never fit privately is still admissible while its entry is
+        // resident (admit() re-checks and retires it if the entry is shed)
         let admissible = self
             .engine
-            .prefill_pages_for(req.prompt.len(), &method)
+            .prefill_pages_for_prompt(&req.prompt, &method)
             .map(|n| self.scheduler.pages_admissible(n))
             .unwrap_or(false);
         if !fits || !affordable || !admissible {
@@ -374,6 +433,10 @@ impl Server {
             + self.prefills.iter().map(|p| p.cp.cache.residual_bytes()).sum::<usize>();
         self.scheduler.observe_occupancy(residuals);
         self.metrics.observe_pool(&self.pool.stats());
+        if let Some(ix) = self.engine.prefix_index() {
+            let stats = ix.borrow().stats();
+            self.metrics.observe_prefix(&stats);
+        }
         Ok(())
     }
 
@@ -394,13 +457,36 @@ impl Server {
                 break;
             };
             let method = self.engine.resolve_method(req.method);
-            // variant validated at submit
-            let needed = self.engine.prefill_pages_for(req.prompt.len(), &method)?;
+            // variant validated at submit; a prefix-index hit charges zero
+            // pages (its shared pages were charged once, at registration)
+            let needed = self.engine.prefill_pages_for_prompt(&req.prompt, &method)?;
+            if needed == 0 {
+                // this admission rests on a prefix entry: make it the
+                // most-recently-used so the shed loop below cannot evict
+                // the very entry it is about to serve
+                self.engine.touch_prefix(&req.prompt, &method);
+            }
             // pages already promised to in-flight prefills but not leased
             // yet (leasing is incremental) count as spoken for
             let outstanding: usize =
                 self.prefills.iter().map(PendingPrefill::outstanding_pages).sum();
+            // under pressure, retained prefix entries yield before a live
+            // admission stalls (their pages free if nobody else holds them)
+            while !self.scheduler.try_admit_pages(needed + outstanding)
+                && self.shed_prefix_entry()
+            {}
+            // shedding may have evicted the very entry this prompt hit —
+            // re-derive the claim so a now-missing entry charges full pages
+            let needed = self.engine.prefill_pages_for_prompt(&req.prompt, &method)?;
             if !self.scheduler.try_admit_pages(needed + outstanding) {
+                if !self.scheduler.pages_admissible(needed) {
+                    // admitted at submit against a prefix entry that has
+                    // since been shed, and the pages can never fit
+                    // privately — retire it rather than camp the queue head
+                    self.metrics.rejected += 1;
+                    self.finalize_unadmitted(req.id, req.prompt.len(), FinishReason::Rejected);
+                    continue;
+                }
                 // pool below the watermark — requeue at the head (FIFO) and
                 // stop admitting this cycle
                 self.metrics.admission_stalls += 1;
@@ -418,7 +504,14 @@ impl Server {
             })();
             match started {
                 Ok(cp) => {
-                    self.prefills.push(PendingPrefill { req, method, cp, pages_claimed: needed })
+                    self.prefill_seq += 1;
+                    self.prefills.push(PendingPrefill {
+                        req,
+                        method,
+                        cp,
+                        pages_claimed: needed,
+                        arrival: self.prefill_seq,
+                    })
                 }
                 Err(e) => {
                     self.metrics.rejected += 1;
@@ -430,10 +523,17 @@ impl Server {
         Ok(())
     }
 
-    /// Spend the tick's chunk budget on in-flight prefills, FIFO: the
-    /// oldest prefill drains first (bounded TTFT ordering), and whatever
-    /// completes installs into its decode slot immediately — same tick,
-    /// first token sampled from the last-position logits. A run whose
+    /// Spend the tick's chunk budget on in-flight prefills,
+    /// **shortest-remaining-chunks first** (stable tie-break by arrival):
+    /// a short prompt admitted behind a long one finishes — and frees its
+    /// decode-slot claim — without waiting for the long prompt to drain,
+    /// trading a little TTFT fairness for slot turnover under mixed prompt
+    /// lengths (the PR 4 ROADMAP follow-on; ticks where the round actually
+    /// ran out of arrival order are counted in
+    /// `EngineTimers::prefill_reorders`). Whatever completes installs into
+    /// its decode slot immediately — same tick, first token sampled from
+    /// the last-position logits (prefix-index hits arrive already complete
+    /// and install first, having zero remaining chunks). A run whose
     /// remaining page claim the pool cannot currently cover (decode
     /// flushes lease directly and may drain it between ticks) is **parked**
     /// for the tick — same philosophy as the decode slots' flush parking —
@@ -441,6 +541,15 @@ impl Server {
     /// lease and dying. A run that still errors mid-flight retires as
     /// Rejected; dropping its cache returns every leased page.
     fn advance_prefills(&mut self) -> Result<()> {
+        if self.prefills.len() > 1 {
+            let nl = self.engine.meta.model.n_layers;
+            self.prefills
+                .sort_by_key(|p| (p.remaining_chunks(nl), p.arrival));
+            // a reorder tick = the round will run out of arrival order
+            if self.prefills.windows(2).any(|w| w[0].arrival > w[1].arrival) {
+                self.engine.timers.prefill_reorders += 1;
+            }
+        }
         let mut budget = self.prefill_chunks_per_tick;
         let mut i = 0;
         while i < self.prefills.len() && budget > 0 {
@@ -471,12 +580,17 @@ impl Server {
         Ok(())
     }
 
-    /// A completed chunked prefill becomes a live session: sample the first
-    /// token from the last-position logits and install into a free slot
-    /// (guaranteed by the admission accounting).
+    /// A completed chunked prefill becomes a live session: the prompt is
+    /// registered into the prefix index (no-op for hits — the entry already
+    /// exists — and for duplicate prompts completing the same tick), then
+    /// the first token samples from the last-position logits and the
+    /// session installs into a free slot (guaranteed by the admission
+    /// accounting).
     fn install_prefilled(&mut self, p: PendingPrefill) -> Result<()> {
         let PendingPrefill { req, method, cp, .. } = p;
-        let ChunkedPrefill { cache, run } = cp;
+        let ChunkedPrefill { mut cache, run } = cp;
+        self.engine
+            .register_prefix(&mut cache, &req.prompt, &method, run.last_logits());
         let first = sampler::sample(run.last_logits(), req.sampling, &mut self.rng);
         let id = req.id;
         let max_new = req.max_new_tokens;
@@ -513,6 +627,19 @@ impl Server {
     fn decode(&mut self) -> Result<()> {
         let batch = self.batcher.slots.len();
         let mut parked = vec![false; batch];
+        // pool pressure: retained prefix entries yield before any live slot
+        // parks — shed LRU entries until the tick's total flush demand fits
+        // (or the index is empty; pages pinned only by an entry free
+        // immediately, co-held pages free when their last tenant retires)
+        let total_due: usize = self
+            .batcher
+            .slots
+            .iter()
+            .flatten()
+            .filter(|s| !s.is_finished())
+            .map(|s| s.cache.due_flush_pages())
+            .sum();
+        while self.pool.available() < total_due && self.shed_prefix_entry() {}
         let available = self.pool.available();
         let mut pending = 0usize;
         let mut live = 0usize;
@@ -548,13 +675,16 @@ impl Server {
         }
         let n_parked = parked.iter().filter(|&&p| p).count();
         if live > 0 && n_parked == live {
+            // shed the largest PRIVATE page-holder: shedding a shared-page
+            // holder frees nothing while co-tenants or the index keep the
+            // pages alive
             let victim = self
                 .batcher
                 .slots
                 .iter()
                 .enumerate()
                 .filter(|(i, s)| parked[*i] && s.is_some())
-                .max_by_key(|(_, s)| s.as_ref().map(|x| x.cache.leased_pages()).unwrap_or(0))
+                .max_by_key(|(_, s)| s.as_ref().map(|x| x.cache.private_pages()).unwrap_or(0))
                 .map(|(i, _)| i);
             if let Some(i) = victim {
                 let sess = self.batcher.slots[i].as_mut().unwrap();

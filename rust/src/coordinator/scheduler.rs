@@ -8,7 +8,14 @@
 //!   pages and still keep a reserve watermark free for live requests'
 //!   flushes. A 10-token request therefore no longer costs the concurrency
 //!   budget of a 4096-token one; `worst_case_request_bytes` survives only
-//!   as the reject-at-submit upper bound.
+//!   as the reject-at-submit upper bound. **Shared prefix pages are charged
+//!   once**: the pool's `leased` counter (which both `try_admit_pages` and
+//!   `observe_occupancy` read) counts a refcounted page exactly once no
+//!   matter how many requests reference it, and a request whose prompt hits
+//!   the prefix index is admitted at ZERO pages (`Engine::
+//!   prefill_pages_for_prompt`) — N tenants over one prompt cost the
+//!   admission budget of one, which is the concurrency half of the
+//!   prefix-sharing win.
 //! * a live slot whose due flush cannot lease pages is *parked* for the
 //!   tick (router::Server::decode), not failed;
 //! * requests whose prompt exceeds every prefill bucket are rejected.
@@ -86,7 +93,8 @@ impl Scheduler {
     }
 
     /// Sample current pool occupancy into the accountant's live/peak gauges
-    /// (leased pages at the pool's per-page deployment cost).
+    /// (leased pages at the pool's per-page deployment cost; a shared
+    /// prefix page is one leased page however many requests hold it).
     pub fn observe_occupancy(&mut self, extra_bytes: usize) {
         if let Some(p) = &self.pool {
             let bytes = p.leased() * p.page_deploy_bytes() + extra_bytes;

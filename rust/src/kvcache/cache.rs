@@ -23,6 +23,34 @@
 //! permutation must be stable across a request. I_d keeps accumulating and
 //! is re-consulted if the plan is recomputed via `replan()` (used by the
 //! refresh ablation).
+//!
+//! # Cross-request prefix sharing (the CoW seam)
+//!
+//! A page table may begin with **shared read-only prefix pages**
+//! ([`crate::kvcache::pool::PageRef::Shared`]) adopted from a
+//! [`PrefixIndex`] entry: N requests over the same prompt hold refcounted
+//! references to ONE set of quantized pages instead of quantizing N private
+//! copies. The seam contract:
+//!
+//! * **immutability precondition** — a flushed page is never written again
+//!   (appends mutate the residual; later flushes lease *new* pages), so
+//!   sharing changes provenance, not a single stored bit. Writes through a
+//!   shared [`PageRef`](crate::kvcache::pool::PageRef) panic.
+//! * **whole-prompt keying** — the channel plan and the per-group scale
+//!   blocks are functions of the entire quantized window *and* the whole
+//!   prompt's |Q| statistics, so bit-exact sharing requires the entire
+//!   prompt to match ([`crate::kvcache::pool::prompt_chain_key`]); an entry
+//!   therefore also carries the plans, |Q| state, residual tail, and last
+//!   logits, letting a hit skip the prefill compute outright.
+//! * **CoW at the seam** — divergence past the shared region copies
+//!   nothing: the first flush after installation leases private pages and
+//!   appends them after the shared ones. Evicting a shared page only drops
+//!   this request's table entry and reference; the page returns to the pool
+//!   when its last holder (co-tenant or index entry) lets go.
+//!
+//! Every read path (`scores_into`, `values_accumulate_into`, `dequant_*`,
+//! `copy_field_*`, `contiguous`) streams through shared and private pages
+//! identically, so the fused zero-alloc decode is unchanged in cost.
 
 use anyhow::{bail, Result};
 
@@ -33,7 +61,7 @@ use crate::quant::rotation;
 use crate::quant::salience::QueryStats;
 use crate::quant::window::{self, TierSpec};
 
-use super::pool::{KvPool, PageLayout, PageLease};
+use super::pool::{KvPool, PageLayout, PageRef, PrefixEntry, PrefixIndex, SharedLease};
 use super::residual::ResidualBuffer;
 
 /// Tier region selector for page-streamed gathers (`copy_field_f32` /
@@ -83,8 +111,9 @@ pub struct HeadState {
     pub planned: bool,
     /// Per-spec offsets into a page's arenas.
     pub layout: PageLayout,
-    /// pages[g] holds tokens [g*G, (g+1)*G) across every tier buffer.
-    pub(crate) pages: Vec<PageLease>,
+    /// pages[g] holds tokens [g*G, (g+1)*G) across every tier buffer —
+    /// private (writable) leases, or shared read-only prefix pages.
+    pub(crate) pages: Vec<PageRef>,
     pool: KvPool,
     pub res: ResidualBuffer,
     pub qstats: QueryStats,
@@ -125,6 +154,31 @@ impl HeadState {
         self.pages.len()
     }
 
+    /// Pages in this head's table that are shared prefix pages.
+    pub fn shared_pages(&self) -> usize {
+        self.pages.iter().filter(|p| p.is_shared()).count()
+    }
+
+    /// Convert the first `groups` table entries to the shared form
+    /// (idempotent) and return one extra reference per page for the prefix
+    /// index. Cold path — registration happens once per distinct prompt.
+    pub(crate) fn share_prefix(&mut self, groups: usize) -> Vec<SharedLease> {
+        debug_assert!(groups <= self.pages.len());
+        let mut refs = Vec::with_capacity(groups);
+        let tail = self.pages.split_off(groups);
+        let head = std::mem::take(&mut self.pages);
+        self.pages = head
+            .into_iter()
+            .map(|p| {
+                let (p, s) = p.into_shared();
+                refs.push(s);
+                p
+            })
+            .collect();
+        self.pages.extend(tail);
+        refs
+    }
+
     /// Write a quantized key window into pool pages at token offset `at`
     /// (`at` and `w.t` must be group-aligned), leasing pages as needed.
     fn store_key_window(&mut self, w: &window::KeyWindow, at: usize) -> Result<()> {
@@ -137,7 +191,9 @@ impl HeadState {
         let gn = w.t / g;
         debug_assert!(g0 <= self.pages.len(), "non-contiguous page write");
         while self.pages.len() < g0 + gn {
-            self.pages.push(self.pool.lease()?);
+            // divergence past a shared prefix lands here: NEW private pages
+            // are leased and appended — shared pages are never written
+            self.pages.push(PageRef::Private(self.pool.lease()?));
         }
         for gi in 0..gn {
             let page = self.pages[g0 + gi].page_mut();
@@ -485,6 +541,14 @@ pub struct RequestCache {
     /// (without this, a slot later in decode order could steal pages the
     /// scheduler promised to a covered slot). Cleared by the append.
     pub flush_hold: bool,
+    /// Tokens at the head of the quantized window whose pages are shared
+    /// (refcounted prefix pages adopted from — or registered into — a
+    /// `PrefixIndex`). Shared pages stay a contiguous window prefix even
+    /// under sink-preserving eviction (the evicted interior splices out and
+    /// the survivors compact), so one scalar tracks the seam; eviction
+    /// accounting treats these pages as freeing nothing to the pool (other
+    /// holders may keep them alive).
+    pub shared_prefix_tokens: usize,
     pool: KvPool,
     mc_n_kv: usize,
     d: usize,
@@ -539,6 +603,7 @@ impl RequestCache {
             evicted_tokens: 0,
             flush_deferrals: 0,
             flush_hold: false,
+            shared_prefix_tokens: 0,
             pool: pool.clone(),
             mc_n_kv: mc.n_kv_heads,
             d: mc.d_head,
@@ -552,9 +617,22 @@ impl RequestCache {
         &self.pool
     }
 
-    /// Pages currently leased across all layers/heads.
+    /// Pages currently leased across all layers/heads (shared pages count
+    /// once per holder here; the POOL counts each shared page once total).
     pub fn leased_pages(&self) -> usize {
         self.heads.iter().flatten().map(|h| h.pages_leased()).sum()
+    }
+
+    /// Shared prefix pages referenced across all layers/heads.
+    pub fn shared_pages(&self) -> usize {
+        self.heads.iter().flatten().map(|h| h.shared_pages()).sum()
+    }
+
+    /// Private (exclusively leased) pages across all layers/heads — what
+    /// this request ALONE returns to the pool at retirement, and therefore
+    /// the right size for preemption-victim selection.
+    pub fn private_pages(&self) -> usize {
+        self.leased_pages() - self.shared_pages()
     }
 
     /// Pages one quantization flush leases (`r_limit` tokens across every
@@ -583,12 +661,19 @@ impl RequestCache {
             // window full, no eviction: no flush can happen — nothing due
             crate::kvcache::eviction::CachePolicy::Stop => 0,
             crate::kvcache::eviction::CachePolicy::SlidingWindow { sink, evict } => {
-                // mirror evict_for's rounds to predict the freed tokens
+                // mirror evict_for's rounds to predict the freed tokens.
+                // Evicted SHARED pages may be kept alive by co-tenants or
+                // the prefix index, so only private evicted tokens count as
+                // pool-funding the flush (pessimistic: worst case the flush
+                // defers onto the residual, which is always safe).
                 let mut q = self.qlen;
+                let mut shared = self.shared_prefix_tokens.min(q);
                 let mut freed = 0;
                 while q + self.r_limit > self.capacity && q >= sink + evict {
+                    let overlap = shared.saturating_sub(sink).min(evict);
+                    shared -= overlap;
+                    freed += evict - overlap;
                     q -= evict;
-                    freed += evict;
                 }
                 super::pool::pages_for_tokens(
                     self.r_limit.saturating_sub(freed),
@@ -735,6 +820,131 @@ impl RequestCache {
         let (qt, _) = Self::prefill_split(t, self.r_limit, self.group, self.capacity);
         self.qlen = qt;
         self.pos = t;
+    }
+
+    /// Publish this cache's freshly prefilled prompt into `index` under
+    /// `key` (see `pool::prompt_chain_key` — `prompt` is the token sequence
+    /// the key was derived from; the entry retains a copy so every probe
+    /// verifies it and a hash collision can never serve the wrong prompt's
+    /// pages): the quantized window's pages convert to shared read-only
+    /// form in place and the entry captures the channel plans, |Q| state,
+    /// residual tail, and `last_logits` — enough for a later request with
+    /// the same prompt to skip its prefill entirely. Must be called before
+    /// any decode appends (the entry must be exactly the prompt's prefill
+    /// state); returns false without side effects on a duplicate key, an
+    /// evicted window, a prompt that does not match this cache's state, or
+    /// an entry the index's page cap could never accept — every refusal
+    /// happens BEFORE the sidecar is assembled, so it copies nothing.
+    pub fn register_prefix(
+        &mut self,
+        index: &mut PrefixIndex,
+        key: u64,
+        prompt: &[i32],
+        last_logits: &[f32],
+    ) -> bool {
+        // an evicted window is no longer the pristine prompt prefill (and
+        // makes pos != qlen + rlen below) — refuse it BEFORE any assert
+        if self.evicted_tokens > 0 || prompt.len() != self.pos || index.contains(key) {
+            return false;
+        }
+        debug_assert_eq!(
+            self.pos,
+            self.qlen + self.rlen(),
+            "register_prefix requires the pristine prefill state (no appends yet)"
+        );
+        let groups = self.qlen / self.group;
+        let nl = self.heads.len();
+        if !index.would_accept(groups * nl * self.mc_n_kv) {
+            return false;
+        }
+        let planned = groups > 0;
+        let mut pages = Vec::with_capacity(nl);
+        let mut plans = Vec::with_capacity(if planned { nl } else { 0 });
+        let mut qstats = Vec::with_capacity(nl);
+        let mut res_k = Vec::with_capacity(nl);
+        let mut res_v = Vec::with_capacity(nl);
+        for row in self.heads.iter_mut() {
+            let mut prow = Vec::with_capacity(self.mc_n_kv);
+            let mut plrow = Vec::with_capacity(self.mc_n_kv);
+            let mut qrow = Vec::with_capacity(self.mc_n_kv);
+            let mut krow = Vec::with_capacity(self.mc_n_kv);
+            let mut vrow = Vec::with_capacity(self.mc_n_kv);
+            for head in row.iter_mut() {
+                prow.push(head.share_prefix(groups));
+                if planned {
+                    plrow.push(head.idx.clone());
+                }
+                qrow.push((head.qstats.sum_abs.clone(), head.qstats.count));
+                krow.push(head.res.keys().to_vec());
+                vrow.push(head.res.values().to_vec());
+            }
+            pages.push(prow);
+            if planned {
+                plans.push(plrow);
+            }
+            qstats.push(qrow);
+            res_k.push(krow);
+            res_v.push(vrow);
+        }
+        // the producer's own prefix is shared from here on, whatever the
+        // index decides — eviction accounting must go pessimistic
+        self.shared_prefix_tokens = self.qlen;
+        let entry = PrefixEntry::new(
+            prompt.to_vec(),
+            self.qlen,
+            self.group,
+            self.d,
+            pages,
+            plans,
+            qstats,
+            res_k,
+            res_v,
+            last_logits.to_vec(),
+        );
+        index.insert(key, entry)
+    }
+
+    /// Adopt a registered prompt: reference its shared pages (no lease, no
+    /// quantization), restore the channel plans and |Q| statistics that
+    /// produced them, copy the bounded residual tail, and set the cursors —
+    /// the whole prefill, skipped. The cache must be fresh; the entry must
+    /// have been registered under a key whose seed matches this cache's
+    /// method/geometry (`pool::prefix_seed` guarantees that in serving).
+    pub fn install_prefix(&mut self, entry: &PrefixEntry) -> Result<()> {
+        if self.pos != 0 || self.qlen != 0 || self.rlen() != 0 {
+            bail!("install_prefix requires a fresh cache");
+        }
+        let nl = self.heads.len();
+        if entry.pages.len() != nl
+            || entry.pages.first().map(Vec::len) != Some(self.mc_n_kv)
+            || entry.group != self.group
+            || entry.d != self.d
+        {
+            bail!("prefix entry geometry mismatch");
+        }
+        let rl = entry.t - entry.qt;
+        if rl > self.heads[0][0].res.capacity || entry.qt > self.capacity {
+            bail!("prefix entry exceeds this cache's window/residual capacity");
+        }
+        let planned = entry.qt > 0;
+        for (l, row) in self.heads.iter_mut().enumerate() {
+            for (h, head) in row.iter_mut().enumerate() {
+                head.pages =
+                    entry.pages[l][h].iter().cloned().map(PageRef::Shared).collect();
+                if planned {
+                    head.idx = entry.plans[l][h].clone();
+                    head.planned = true;
+                }
+                let (sum_abs, count) = &entry.qstats[l][h];
+                head.qstats.sum_abs.copy_from_slice(sum_abs);
+                head.qstats.count = *count;
+                head.res.extend(&entry.res_k[l][h], &entry.res_v[l][h], rl);
+            }
+        }
+        self.qlen = entry.qt;
+        self.pos = entry.t;
+        self.shared_prefix_tokens = entry.qt;
+        Ok(())
     }
 
     /// Append one decoded token's K/V/|Q| (from the decode step outputs);
@@ -1148,6 +1358,155 @@ mod tests {
                 assert_eq!(a.res.values(), b.res.values());
             }
         }
+    }
+
+    #[test]
+    fn register_install_roundtrip_and_cow_divergence() {
+        use crate::kvcache::pool::{KvPool, PrefixIndex};
+        let mc = ModelConfig { n_layers: 2, ..ModelConfig::default_build() };
+        let cc = CacheConfig::default_build();
+        let spec = TierSpec { n16: 2, n4: 2, n2: 28, v_bits: 2 };
+        let specs = vec![spec; 2];
+        let pool = KvPool::for_specs(specs.iter(), mc.d_head, cc.group, Some(64));
+        pool.prewarm(64);
+        let mut index = PrefixIndex::new(64, pool.page_deploy_bytes());
+        let mut rng = Pcg32::seeded(77);
+        let t = 160; // 128 quantized (4 groups) + 32 residual at r_limit=32
+        let (k, v, qa) = rand_kv(&mut rng, &mc, t);
+        let method = Method::mixkvq("mix30");
+        let mut producer =
+            RequestCache::new_in(&pool, &mc, &cc, &specs, method.clone(), 32);
+        producer.load_prefill(&k, &v, &qa, t).unwrap();
+        let prefix_pages = pool.leased();
+        let prompt: Vec<i32> = (0..t as i32).collect();
+        let logits = vec![1.5, -2.5, 0.25];
+        assert!(producer.register_prefix(&mut index, 42, &prompt, &logits));
+        assert_eq!(producer.shared_prefix_tokens, producer.qlen);
+        assert_eq!(pool.leased(), prefix_pages, "registration must lease nothing");
+        assert_eq!(index.pages_pinned(), prefix_pages);
+        assert_eq!(index.peek(42, &prompt).unwrap().last_logits(), &logits[..]);
+        // duplicate registration refused; so is a wrong-length prompt
+        assert!(!producer.register_prefix(&mut index, 42, &prompt, &logits));
+        assert!(!producer.register_prefix(&mut index, 43, &prompt[..t - 1], &logits));
+
+        // a private cache fed the same prefill is the bit-identity oracle
+        let mut oracle = RequestCache::new(&mc, &cc, &specs, method.clone(), 32);
+        oracle.load_prefill(&k, &v, &qa, t).unwrap();
+
+        // consumer adopts the prompt: zero new pool pages, zero compute
+        let mut consumer =
+            RequestCache::new_in(&pool, &mc, &cc, &specs, method.clone(), 32);
+        consumer.install_prefix(index.lookup(42, &prompt).unwrap()).unwrap();
+        assert_eq!(pool.leased(), prefix_pages, "a hit must lease nothing");
+        assert_eq!(consumer.qlen, oracle.qlen);
+        assert_eq!(consumer.pos, oracle.pos);
+        assert_eq!(consumer.rlen(), oracle.rlen());
+        assert_eq!(consumer.shared_pages(), consumer.leased_pages());
+        assert_eq!(consumer.private_pages(), 0);
+        for l in 0..2 {
+            for h in 0..mc.n_kv_heads {
+                let (a, b) = (&consumer.heads[l][h], &oracle.heads[l][h]);
+                assert_eq!(a.idx, b.idx, "l{l}h{h}: plan must transfer");
+                assert!(a.planned);
+                assert_eq!(a.qstats.sum_abs, b.qstats.sum_abs);
+                assert_eq!(a.qstats.count, b.qstats.count);
+                assert_eq!(a.contiguous(), b.contiguous(), "l{l}h{h}");
+                assert_eq!(a.res.keys(), b.res.keys());
+                assert_eq!(a.res.values(), b.res.values());
+            }
+        }
+        // CoW divergence: decode appends flush into NEW private pages after
+        // the shared seam, bit-identical to the oracle fed the same tokens
+        for _ in 0..33 {
+            let (kn, vn, qn) = rand_kv(&mut rng, &mc, 1);
+            consumer.append(&kn, &vn, &qn).unwrap();
+            oracle.append(&kn, &vn, &qn).unwrap();
+        }
+        assert_eq!(consumer.qlen, oracle.qlen);
+        assert!(consumer.private_pages() > 0, "divergence must lease private pages");
+        assert_eq!(consumer.shared_prefix_tokens, 128);
+        for l in 0..2 {
+            for h in 0..mc.n_kv_heads {
+                assert_eq!(
+                    consumer.heads[l][h].contiguous(),
+                    oracle.heads[l][h].contiguous(),
+                    "post-divergence l{l}h{h}"
+                );
+            }
+        }
+        let tail = consumer.private_pages();
+        assert_eq!(pool.leased(), prefix_pages + tail);
+        // retirement returns ONLY the private tail; the index still pins
+        // the prefix (and the producer still references it)
+        drop(consumer);
+        assert_eq!(pool.leased(), prefix_pages);
+        drop(producer);
+        assert_eq!(pool.leased(), prefix_pages, "index pin keeps the prefix alive");
+        index.clear();
+        assert_eq!(pool.leased(), 0);
+    }
+
+    #[test]
+    fn residual_only_prompt_registers_and_installs_without_pages() {
+        use crate::kvcache::pool::{KvPool, PrefixIndex};
+        let mc = ModelConfig { n_layers: 2, ..ModelConfig::default_build() };
+        let cc = CacheConfig::default_build();
+        let spec = TierSpec { n16: 2, n4: 2, n2: 28, v_bits: 2 };
+        let specs = vec![spec; 2];
+        let pool = KvPool::for_specs(specs.iter(), mc.d_head, cc.group, Some(16));
+        pool.prewarm(16);
+        let mut index = PrefixIndex::new(16, pool.page_deploy_bytes());
+        let mut rng = Pcg32::seeded(78);
+        let t = 20; // < r_limit: everything rides the residual, zero pages
+        let (k, v, qa) = rand_kv(&mut rng, &mc, t);
+        let mut producer =
+            RequestCache::new_in(&pool, &mc, &cc, &specs, Method::kivi("kv2"), 32);
+        producer.load_prefill(&k, &v, &qa, t).unwrap();
+        assert_eq!(producer.leased_pages(), 0);
+        let prompt: Vec<i32> = (0..t as i32).collect();
+        assert!(producer.register_prefix(&mut index, 7, &prompt, &[0.5]));
+        let mut consumer =
+            RequestCache::new_in(&pool, &mc, &cc, &specs, Method::kivi("kv2"), 32);
+        consumer.install_prefix(index.lookup(7, &prompt).unwrap()).unwrap();
+        assert_eq!((consumer.qlen, consumer.pos, consumer.rlen()), (0, t, t));
+        assert!(!consumer.heads[0][0].planned, "no window, no plan yet");
+        assert_eq!(consumer.heads[0][0].res.keys(), producer.heads[0][0].res.keys());
+        // the first flush after divergence plans privately, like any cache
+        for _ in 0..13 {
+            let (kn, vn, qn) = rand_kv(&mut rng, &mc, 1);
+            consumer.append(&kn, &vn, &qn).unwrap();
+        }
+        assert_eq!(consumer.qlen, 32);
+        assert!(consumer.heads[0][0].planned);
+        assert_eq!(consumer.shared_pages(), 0);
+    }
+
+    #[test]
+    fn install_prefix_rejects_geometry_mismatch_and_used_cache() {
+        use crate::kvcache::pool::{KvPool, PrefixIndex};
+        let mc = ModelConfig { n_layers: 2, ..ModelConfig::default_build() };
+        let cc = CacheConfig::default_build();
+        let spec = TierSpec { n16: 2, n4: 2, n2: 28, v_bits: 2 };
+        let specs = vec![spec; 2];
+        let pool = KvPool::for_specs(specs.iter(), mc.d_head, cc.group, None);
+        let mut index = PrefixIndex::new(1024, pool.page_deploy_bytes());
+        let mut rng = Pcg32::seeded(79);
+        let (k, v, qa) = rand_kv(&mut rng, &mc, 96);
+        let mut producer =
+            RequestCache::new_in(&pool, &mc, &cc, &specs, Method::mixkvq("mix30"), 32);
+        producer.load_prefill(&k, &v, &qa, 96).unwrap();
+        let prompt: Vec<i32> = (0..96).collect();
+        assert!(producer.register_prefix(&mut index, 1, &prompt, &[0.0]));
+        // a cache that already holds state must refuse an install
+        let mut used =
+            RequestCache::new_in(&pool, &mc, &cc, &specs, Method::mixkvq("mix30"), 32);
+        used.load_prefill(&k, &v, &qa, 96).unwrap();
+        assert!(used.install_prefix(index.peek(1, &prompt).unwrap()).is_err());
+        // a single-layer cache must refuse a two-layer entry
+        let mc1 = ModelConfig { n_layers: 1, ..ModelConfig::default_build() };
+        let mut wrong =
+            RequestCache::new(&mc1, &cc, &specs[..1].to_vec(), Method::mixkvq("mix30"), 32);
+        assert!(wrong.install_prefix(index.peek(1, &prompt).unwrap()).is_err());
     }
 
     #[test]

@@ -47,6 +47,13 @@ impl HeadState {
 impl RequestCache {
     /// Apply a sliding-window eviction so that at least `needed` more
     /// quantized tokens fit. Returns tokens evicted.
+    ///
+    /// Shared prefix pages may be evicted like any others: the splice drops
+    /// only THIS request's reference — the page returns to the pool when its
+    /// last holder (a co-tenant or the prefix index) lets go. The shared
+    /// region stays a window prefix across rounds (the evicted interior
+    /// splices out and the survivors compact), so the request-level
+    /// `shared_prefix_tokens` scalar shrinks by exactly the overlap.
     pub fn evict_for(&mut self, policy: CachePolicy, needed: usize) -> usize {
         let CachePolicy::SlidingWindow { sink, evict } = policy else {
             return 0;
@@ -60,6 +67,8 @@ impl RequestCache {
                     self.heads[row][h].evict_block(sink, evict, qlen);
                 }
             }
+            let overlap = self.shared_prefix_tokens.saturating_sub(sink).min(evict);
+            self.shared_prefix_tokens -= overlap;
             self.qlen -= evict;
             total += evict;
         }

@@ -46,8 +46,31 @@
 //! `pool.leased() == 0` after drains). Bounded pools (the serving
 //! configuration) are pre-warmed so steady-state leasing never touches the
 //! allocator.
+//!
+//! # Cross-request prefix sharing
+//!
+//! Once a page has been flushed it is never written again (the residual
+//! buffers all mutation; later flushes lease *new* pages) — which makes a
+//! prompt's quantized window safe to share across requests. [`SharedLease`]
+//! is the refcounted form of a lease: `clone` bumps the count, `drop`
+//! decrements it, and the page returns to the pool only when the last
+//! holder drops. [`PrefixIndex`] is the content-addressed registry of such
+//! shared prompt windows: entries are keyed by a group-aligned rolling hash
+//! chain over the prompt tokens ([`prompt_chain_key`]) scoped to the
+//! quantization identity ([`prefix_seed`]), so a lookup is an O(chunks)
+//! hash walk to ONE candidate entry plus a single token-compare verify on
+//! it (the collision backstop — a 64-bit key match can never serve another
+//! prompt's pages), never a scan. An entry pins one reference per page
+//! (retention for future tenants, LRU-shed under a page cap or pool
+//! pressure) plus the small per-request state a consumer needs to skip the
+//! prefill entirely: channel plans, |Q| statistics, the f32 residual tail,
+//! and the last-position logits. N requests over one prompt therefore pay
+//! ~1× its quantized bytes and zero prefill compute; the pool's `leased`
+//! counter counts every shared page exactly once, which is what makes the
+//! scheduler's occupancy admission charge shared pages once too.
 
 use std::cell::RefCell;
+use std::collections::HashMap;
 use std::ops::Range;
 use std::rc::Rc;
 
@@ -483,6 +506,455 @@ impl Drop for PageLease {
     }
 }
 
+/// Refcounted, **read-only** lease on a flushed page: `clone` bumps the
+/// count, `drop` decrements it, and the underlying [`PageLease`] (and with
+/// it the page) returns to the pool when the count reaches zero. The pool's
+/// `leased` counter sees the page exactly once no matter how many requests
+/// hold it — that single charge is the memory-dedup win of prefix sharing.
+#[derive(Clone)]
+pub struct SharedLease {
+    inner: Rc<PageLease>,
+}
+
+impl SharedLease {
+    pub fn new(lease: PageLease) -> SharedLease {
+        SharedLease { inner: Rc::new(lease) }
+    }
+
+    #[inline]
+    pub fn page(&self) -> &Page {
+        self.inner.page()
+    }
+
+    /// Current holders (page tables + the prefix index entry).
+    pub fn refs(&self) -> usize {
+        Rc::strong_count(&self.inner)
+    }
+}
+
+/// One page-table slot: either an exclusive (writable) lease or a shared
+/// read-only prefix page. The seam contract of copy-on-write sharing lives
+/// here: reads stream through either variant identically, while a write to
+/// a shared page is a hard bug (shared pages are immutable after their
+/// flush — divergence past the shared region leases *new* private pages,
+/// it never touches old ones).
+pub enum PageRef {
+    Private(PageLease),
+    Shared(SharedLease),
+}
+
+impl PageRef {
+    #[inline]
+    pub fn page(&self) -> &Page {
+        match self {
+            PageRef::Private(l) => l.page(),
+            PageRef::Shared(s) => s.page(),
+        }
+    }
+
+    /// Writable access — **private pages only**. Panicking here (instead of
+    /// silently corrupting every co-tenant of the page) is deliberate: no
+    /// correct store path ever addresses a page below the shared seam.
+    #[inline]
+    pub fn page_mut(&mut self) -> &mut Page {
+        match self {
+            PageRef::Private(l) => l.page_mut(),
+            PageRef::Shared(_) => {
+                panic!("copy-on-write violation: shared prefix pages are read-only after flush")
+            }
+        }
+    }
+
+    pub fn is_shared(&self) -> bool {
+        matches!(self, PageRef::Shared(_))
+    }
+
+    /// Convert this slot to the shared form (idempotent), handing back one
+    /// additional [`SharedLease`] reference for the prefix index.
+    pub fn into_shared(self) -> (PageRef, SharedLease) {
+        match self {
+            PageRef::Private(l) => {
+                let s = SharedLease::new(l);
+                (PageRef::Shared(s.clone()), s)
+            }
+            PageRef::Shared(s) => {
+                let extra = s.clone();
+                (PageRef::Shared(s), extra)
+            }
+        }
+    }
+}
+
+// --- content-addressed prefix index -------------------------------------
+
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Namespace half of a prefix key: everything that shapes what a prompt
+/// quantizes *into*. Two requests may share pages only when the method (tier
+/// shapes, ordering, rotation, clipping), the residual split (`r_limit`),
+/// the group size, the window capacity, and the model cache geometry all
+/// agree — the chain walk then only has to compare tokens.
+pub fn prefix_seed(
+    method_name: &str,
+    r_limit: usize,
+    group: usize,
+    capacity: usize,
+    n_layers: usize,
+    n_kv_heads: usize,
+    d_head: usize,
+) -> u64 {
+    let mut h = fnv1a(0xcbf2_9ce4_8422_2325, method_name.as_bytes());
+    for v in [r_limit, group, capacity, n_layers, n_kv_heads, d_head] {
+        h = fnv1a(h, &(v as u64).to_le_bytes());
+    }
+    h
+}
+
+/// Group-aligned rolling hash chain over a prompt: one link per G-token
+/// group plus a final link for the unaligned tail, so the walk is
+/// O(chunks) and a shared prefix of two prompts shares a hash prefix. The
+/// full-prompt key (the last link) is what [`PrefixIndex`] entries are
+/// registered under: the channel plan and the scale blocks are functions of
+/// the *whole* quantized window plus the whole prompt's |Q| statistics, so
+/// bit-exact sharing requires the entire prompt to match, not just a
+/// leading slice (see the `kvcache::cache` docs for the seam contract).
+///
+/// ```
+/// use mixkvq::kvcache::pool::{prefix_seed, prompt_chain_key};
+/// let seed = prefix_seed("mixkvq-mix30", 128, 32, 512, 4, 2, 32);
+/// let a = prompt_chain_key(seed, &[1, 2, 3, 4], 2);
+/// assert_eq!(a, prompt_chain_key(seed, &[1, 2, 3, 4], 2));
+/// assert_ne!(a, prompt_chain_key(seed, &[1, 2, 3, 5], 2)); // content-addressed
+/// assert_ne!(a, prompt_chain_key(seed, &[1, 2, 3], 2)); // length-sensitive
+/// ```
+pub fn prompt_chain_key(seed: u64, tokens: &[i32], group: usize) -> u64 {
+    let mut h = seed;
+    for chunk in tokens.chunks(group.max(1)) {
+        let mut link = fnv1a(h, &(chunk.len() as u64).to_le_bytes());
+        for &t in chunk {
+            link = fnv1a(link, &t.to_le_bytes());
+        }
+        h = link;
+    }
+    h
+}
+
+/// Everything a consumer request needs to adopt a registered prompt without
+/// running its prefill: the shared quantized pages, the channel plans and
+/// |Q| statistics that produced them, the f32 residual tail, and the
+/// last-position logits. The page vectors hold one [`SharedLease`]
+/// reference each, so an entry *pins* its pages in the pool until it is
+/// shed (LRU, under the index page cap or pool pressure).
+pub struct PrefixEntry {
+    /// Prompt length (tokens).
+    pub t: usize,
+    /// Quantized-window tokens (group-aligned; `t - qt` rides the residual).
+    pub qt: usize,
+    /// The registered prompt itself: every probe compares it against the
+    /// requesting prompt, so a 64-bit chain-key collision (FNV-1a is not
+    /// cryptographic) degrades to a recorded miss — it can never serve
+    /// another prompt's KV pages. Tiny next to the f32 residual snapshot.
+    pub(crate) tokens: Vec<i32>,
+    pub(crate) group: usize,
+    pub(crate) d: usize,
+    /// `pages[layer][head][group]`.
+    pub(crate) pages: Vec<Vec<Vec<SharedLease>>>,
+    /// Channel permutation per `[layer][head]`; empty when `qt == 0` (a
+    /// residual-only prompt never planned its channels).
+    pub(crate) plans: Vec<Vec<Vec<i32>>>,
+    /// `(sum_abs, count)` |Q| accumulator state per `[layer][head]`.
+    pub(crate) qstats: Vec<Vec<(Vec<f32>, f32)>>,
+    /// Residual K/V rows `[qt..t)` per `[layer][head]`, row-major `[rl, d]`.
+    pub(crate) res_k: Vec<Vec<Vec<f32>>>,
+    pub(crate) res_v: Vec<Vec<Vec<f32>>>,
+    pub(crate) last_logits: Vec<f32>,
+    /// LRU stamp, bumped on every hit.
+    stamp: u64,
+}
+
+impl PrefixEntry {
+    /// Assembled by `RequestCache::register_prefix` — the only producer.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn new(
+        tokens: Vec<i32>,
+        qt: usize,
+        group: usize,
+        d: usize,
+        pages: Vec<Vec<Vec<SharedLease>>>,
+        plans: Vec<Vec<Vec<i32>>>,
+        qstats: Vec<Vec<(Vec<f32>, f32)>>,
+        res_k: Vec<Vec<Vec<f32>>>,
+        res_v: Vec<Vec<Vec<f32>>>,
+        last_logits: Vec<f32>,
+    ) -> PrefixEntry {
+        PrefixEntry {
+            t: tokens.len(),
+            qt,
+            tokens,
+            group,
+            d,
+            pages,
+            plans,
+            qstats,
+            res_k,
+            res_v,
+            last_logits,
+            stamp: 0,
+        }
+    }
+
+    /// Pool pages this entry pins (one reference per page).
+    pub fn pages_count(&self) -> usize {
+        self.pages.iter().flatten().map(Vec::len).sum()
+    }
+
+    /// Last-position logits of the registered prompt (the consumer's first
+    /// sampling input — prefill compute skipped, not just bytes).
+    pub fn last_logits(&self) -> &[f32] {
+        &self.last_logits
+    }
+
+    /// Off-pool bytes the entry itself retains (prompt copy, residual
+    /// snapshot, logits, plans, |Q| state) — the bounded per-entry overhead
+    /// of full prefill skipping, reported so operators can budget the index
+    /// honestly.
+    pub fn sidecar_bytes(&self) -> usize {
+        let f32s = self.res_k.iter().flatten().map(Vec::len).sum::<usize>()
+            + self.res_v.iter().flatten().map(Vec::len).sum::<usize>()
+            + self.qstats.iter().flatten().map(|(s, _)| s.len() + 1).sum::<usize>()
+            + self.last_logits.len();
+        let i32s = self.plans.iter().flatten().map(Vec::len).sum::<usize>() + self.tokens.len();
+        4 * (f32s + i32s)
+    }
+}
+
+/// Counter snapshot for metrics (`coordinator::metrics::Metrics::observe_prefix`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrefixStats {
+    pub entries: usize,
+    pub pages_pinned: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    /// Entries shed — by the LRU cap at insert or by pool-pressure shedding.
+    pub evictions: u64,
+    /// Registrations refused because the entry alone exceeds the page cap.
+    pub rejected: u64,
+    /// Probes whose 64-bit chain key matched a resident entry but whose
+    /// prompt tokens did not — a hash collision, recorded as a miss and
+    /// never served (the token compare is the correctness backstop).
+    pub collisions: u64,
+    /// Deployment bytes consumers did NOT lease privately (pages adopted on
+    /// hits × bytes/page), cumulative.
+    pub bytes_deduped: u64,
+    /// Off-pool bytes currently held by entry sidecars (prompt copies,
+    /// residual snapshots, logits, plans).
+    pub sidecar_bytes: usize,
+}
+
+/// Content-addressed registry of shared prompt windows, LRU-bounded by the
+/// pool pages it may pin. Single-threaded like the pool (`Rc` refcounts);
+/// the server owns one behind `Rc<RefCell<…>>` shared with the engine.
+/// Hard ceiling on resident prefix entries regardless of the page cap —
+/// residual-only prompts pin ZERO pages but still hold a bounded sidecar
+/// (prompt copy, residual snapshot, logits), so a page cap alone would let
+/// a stream of distinct short prompts grow the index forever.
+const PREFIX_MAX_ENTRIES: usize = 1024;
+
+pub struct PrefixIndex {
+    map: HashMap<u64, PrefixEntry>,
+    max_pages: usize,
+    max_entries: usize,
+    page_deploy_bytes: usize,
+    clock: u64,
+    pinned_pages: usize,
+    /// Running sum of entry sidecars — kept incrementally (like
+    /// `pinned_pages`) so the per-tick `stats()` gauge is O(1), not a walk
+    /// of every entry's nested vectors.
+    sidecar_bytes: usize,
+    hits: u64,
+    misses: u64,
+    insertions: u64,
+    evictions: u64,
+    rejected: u64,
+    collisions: u64,
+    bytes_deduped: u64,
+}
+
+impl PrefixIndex {
+    /// `max_pages` caps the pool pages entries may pin (entry COUNT is
+    /// additionally capped at [`PREFIX_MAX_ENTRIES`], bounding the
+    /// sidecars of zero-page residual-only entries); `page_deploy_bytes`
+    /// is the pool's per-page charge (for the bytes-deduped gauge).
+    pub fn new(max_pages: usize, page_deploy_bytes: usize) -> PrefixIndex {
+        PrefixIndex {
+            map: HashMap::new(),
+            max_pages,
+            max_entries: PREFIX_MAX_ENTRIES,
+            page_deploy_bytes,
+            clock: 0,
+            pinned_pages: 0,
+            sidecar_bytes: 0,
+            hits: 0,
+            misses: 0,
+            insertions: 0,
+            evictions: 0,
+            rejected: 0,
+            collisions: 0,
+            bytes_deduped: 0,
+        }
+    }
+
+    pub fn contains(&self, key: u64) -> bool {
+        self.map.contains_key(&key)
+    }
+
+    /// Counter-free probe (admission sizing uses this so a submit-time
+    /// estimate does not inflate the hit/miss telemetry). `prompt` is
+    /// compared against the entry's registered tokens: a 64-bit chain-key
+    /// collision answers `None`, exactly like `lookup` — the key is an
+    /// address, the token compare is the correctness check.
+    pub fn peek(&self, key: u64, prompt: &[i32]) -> Option<&PrefixEntry> {
+        self.map.get(&key).filter(|e| e.tokens == prompt)
+    }
+
+    /// The consuming probe: verifies the prompt against the entry's
+    /// registered tokens (a chain-key collision is recorded and answered as
+    /// a miss — it must never serve another prompt's KV), then records a
+    /// hit, stamping the entry most-recently used and crediting its pages
+    /// as deduped bytes.
+    pub fn lookup(&mut self, key: u64, prompt: &[i32]) -> Option<&PrefixEntry> {
+        self.clock += 1;
+        match self.map.get(&key) {
+            None => {
+                self.misses += 1;
+                return None;
+            }
+            Some(e) if e.tokens != prompt => {
+                self.collisions += 1;
+                self.misses += 1;
+                return None;
+            }
+            Some(_) => {}
+        }
+        self.hits += 1;
+        let clock = self.clock;
+        let deploy = self.page_deploy_bytes;
+        let e = self.map.get_mut(&key).expect("presence just checked");
+        e.stamp = clock;
+        self.bytes_deduped += (e.pages_count() * deploy) as u64;
+        Some(&*e)
+    }
+
+    /// Stamp a verified entry most-recently-used WITHOUT recording a hit —
+    /// the admission pass touches the entry a zero-page claim rests on, so
+    /// its own pressure-shedding loop cannot evict it out from under the
+    /// request it is about to serve.
+    pub fn touch(&mut self, key: u64, prompt: &[i32]) {
+        self.clock += 1;
+        let clock = self.clock;
+        if let Some(e) = self.map.get_mut(&key) {
+            if e.tokens == prompt {
+                e.stamp = clock;
+            }
+        }
+    }
+
+    /// Can an entry pinning `pages` pool pages ever be accepted? The
+    /// producer consults this BEFORE assembling (deep-copying) an entry, so
+    /// an over-cap prompt costs nothing.
+    pub fn would_accept(&self, pages: usize) -> bool {
+        pages <= self.max_pages
+    }
+
+    /// Register an entry, shedding LRU entries until it fits under the page
+    /// cap (and the entry-count cap — see [`PrefixIndex::new`]). Returns
+    /// false (and drops the entry's references) when the key already exists
+    /// or the entry alone exceeds the cap.
+    pub fn insert(&mut self, key: u64, entry: PrefixEntry) -> bool {
+        if let Some(e) = self.map.get_mut(&key) {
+            self.clock += 1;
+            e.stamp = self.clock;
+            return false;
+        }
+        let need = entry.pages_count();
+        if need > self.max_pages {
+            self.rejected += 1;
+            return false;
+        }
+        while self.pinned_pages + need > self.max_pages || self.map.len() >= self.max_entries {
+            if !self.shed_lru() {
+                break;
+            }
+        }
+        self.clock += 1;
+        let mut entry = entry;
+        entry.stamp = self.clock;
+        self.pinned_pages += need;
+        self.sidecar_bytes += entry.sidecar_bytes();
+        self.insertions += 1;
+        self.map.insert(key, entry);
+        true
+    }
+
+    /// Drop the least-recently-used entry, releasing its page references
+    /// (pages with no other holder return to the pool immediately). The
+    /// server calls this under pool pressure — retention never outranks a
+    /// live request's flush.
+    pub fn shed_lru(&mut self) -> bool {
+        let Some((&key, _)) = self.map.iter().min_by_key(|(_, e)| e.stamp) else {
+            return false;
+        };
+        let e = self.map.remove(&key).expect("key just observed");
+        self.pinned_pages -= e.pages_count();
+        self.sidecar_bytes -= e.sidecar_bytes();
+        self.evictions += 1;
+        true
+    }
+
+    /// Drop every entry (all pinned pages release).
+    pub fn clear(&mut self) {
+        self.evictions += self.map.len() as u64;
+        self.map.clear();
+        self.pinned_pages = 0;
+        self.sidecar_bytes = 0;
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Pool pages currently pinned by entries.
+    pub fn pages_pinned(&self) -> usize {
+        self.pinned_pages
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        PrefixStats {
+            entries: self.map.len(),
+            pages_pinned: self.pinned_pages,
+            hits: self.hits,
+            misses: self.misses,
+            insertions: self.insertions,
+            evictions: self.evictions,
+            rejected: self.rejected,
+            collisions: self.collisions,
+            bytes_deduped: self.bytes_deduped,
+            sidecar_bytes: self.sidecar_bytes,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -592,5 +1064,139 @@ mod tests {
         b.page_mut().f[0] = 2.0;
         assert_eq!(a.page().f[0], 1.0);
         assert_eq!(b.page().f[0], 2.0);
+    }
+
+    #[test]
+    fn shared_lease_frees_page_only_at_zero_refs() {
+        let pool = KvPool::for_specs([&mixspec()], 32, 32, Some(2));
+        pool.prewarm(2);
+        let mut lease = pool.lease().unwrap();
+        lease.page_mut().f[0] = 7.0;
+        let a = SharedLease::new(lease);
+        let b = a.clone();
+        let c = b.clone();
+        assert_eq!(a.refs(), 3);
+        // a shared page is leased ONCE no matter how many holders
+        assert_eq!(pool.leased(), 1);
+        assert_eq!(a.page().f[0], 7.0);
+        drop(a);
+        drop(c);
+        assert_eq!(b.refs(), 1);
+        assert_eq!(pool.leased(), 1, "page must stay leased while any ref lives");
+        drop(b);
+        assert_eq!(pool.leased(), 0, "last ref must return the page");
+    }
+
+    #[test]
+    fn page_ref_share_is_idempotent_and_reads_both_variants() {
+        let pool = KvPool::for_specs([&mixspec()], 32, 32, None);
+        let mut lease = pool.lease().unwrap();
+        lease.page_mut().b[0] = 9;
+        let p = PageRef::Private(lease);
+        assert!(!p.is_shared());
+        let (p, extra) = p.into_shared();
+        assert!(p.is_shared());
+        assert_eq!(extra.refs(), 2);
+        let (p, extra2) = p.into_shared();
+        assert_eq!(p.page().b[0], 9);
+        assert_eq!(extra2.refs(), 3);
+        drop((extra, extra2));
+        drop(p);
+        assert_eq!(pool.leased(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "copy-on-write violation")]
+    fn writing_a_shared_page_panics() {
+        let pool = KvPool::for_specs([&mixspec()], 32, 32, None);
+        let (mut p, _extra) = PageRef::Private(pool.lease().unwrap()).into_shared();
+        let _ = p.page_mut();
+    }
+
+    #[test]
+    fn chain_key_is_group_aligned_and_prefix_sensitive() {
+        let seed = prefix_seed("mixkvq-mix30", 128, 32, 512, 4, 2, 32);
+        let other_seed = prefix_seed("kivi-kv2", 128, 32, 512, 4, 2, 32);
+        assert_ne!(seed, other_seed, "method identity must scope the key");
+        let toks: Vec<i32> = (0..100).collect();
+        let k1 = prompt_chain_key(seed, &toks, 32);
+        assert_eq!(k1, prompt_chain_key(seed, &toks, 32));
+        // any token change, anywhere, changes the key
+        let mut t2 = toks.clone();
+        t2[0] = 999;
+        assert_ne!(k1, prompt_chain_key(seed, &t2, 32));
+        let mut t3 = toks.clone();
+        t3[99] = 999;
+        assert_ne!(k1, prompt_chain_key(seed, &t3, 32));
+        // length-sensitive: a strict prefix keys differently
+        assert_ne!(k1, prompt_chain_key(seed, &toks[..96], 32));
+        assert_ne!(k1, prompt_chain_key(other_seed, &toks, 32));
+    }
+
+    fn tiny_prompt(groups: usize) -> Vec<i32> {
+        (0..(groups * 32 + 4) as i32).collect()
+    }
+
+    fn tiny_entry(pool: &KvPool, groups: usize) -> PrefixEntry {
+        let pages = vec![vec![(0..groups)
+            .map(|_| SharedLease::new(pool.lease().unwrap()))
+            .collect::<Vec<_>>()]];
+        PrefixEntry {
+            t: groups * 32 + 4,
+            qt: groups * 32,
+            tokens: tiny_prompt(groups),
+            group: 32,
+            d: 32,
+            pages,
+            plans: vec![vec![(0..32).collect()]],
+            qstats: vec![vec![(vec![0.5; 32], 1.0)]],
+            res_k: vec![vec![vec![0.0; 4 * 32]]],
+            res_v: vec![vec![vec![0.0; 4 * 32]]],
+            last_logits: vec![1.0, 2.0],
+            stamp: 0,
+        }
+    }
+
+    #[test]
+    fn prefix_index_hits_misses_and_lru_cap() {
+        let pool = KvPool::for_specs([&mixspec()], 32, 32, None);
+        let prompt = tiny_prompt(2);
+        let mut ix = PrefixIndex::new(4, pool.page_deploy_bytes());
+        assert!(ix.insert(1, tiny_entry(&pool, 2)));
+        assert!(ix.insert(2, tiny_entry(&pool, 2)));
+        assert_eq!((ix.len(), ix.pages_pinned()), (2, 4));
+        assert_eq!(pool.leased(), 4);
+        // duplicate registration is refused (but refreshes recency)
+        assert!(!ix.insert(1, tiny_entry(&pool, 2)));
+        assert_eq!(ix.len(), 2);
+        // hit key 1 so key 2 becomes LRU
+        assert!(ix.lookup(1, &prompt).is_some());
+        assert!(ix.lookup(99, &prompt).is_none());
+        // a key collision (right key, different prompt) is a verified MISS,
+        // never a wrong-prompt hit
+        assert!(ix.peek(1, &[9, 9, 9]).is_none());
+        assert!(ix.lookup(1, &[9, 9, 9]).is_none());
+        let s = ix.stats();
+        assert_eq!((s.hits, s.misses, s.insertions), (1, 2, 2));
+        assert_eq!(s.collisions, 1);
+        assert_eq!(
+            s.bytes_deduped,
+            (2 * pool.page_deploy_bytes()) as u64,
+            "a hit credits the adopted pages as deduped bytes"
+        );
+        assert!(s.sidecar_bytes > 0);
+        // inserting a third 2-page entry under the 4-page cap sheds the LRU
+        // (key 2) and releases its pages
+        assert!(ix.insert(3, tiny_entry(&pool, 2)));
+        assert!(ix.contains(1) && ix.contains(3) && !ix.contains(2));
+        assert_eq!(ix.stats().evictions, 1);
+        assert_eq!(pool.leased(), 4, "shed entry's pages freed, duplicate's dropped");
+        // an entry bigger than the whole cap is rejected outright
+        assert!(!ix.insert(4, tiny_entry(&pool, 5)));
+        assert_eq!(ix.stats().rejected, 1);
+        assert_eq!(pool.leased(), 4, "rejected entry's pages must release");
+        ix.clear();
+        assert_eq!((ix.len(), ix.pages_pinned()), (0, 0));
+        assert_eq!(pool.leased(), 0, "cleared index frees everything it pinned");
     }
 }

@@ -133,6 +133,56 @@
 //!   failures, park/resume/preemption counts) and `mixkvq info` prints
 //!   bytes-per-page and pages-per-request-at-C for every `MethodSpec`.
 //!
+//! ## Cross-request prefix sharing (refcounted copy-on-write prompt pages)
+//!
+//! Under multi-tenant traffic the same prompt arrives again and again
+//! (retried chain-of-thought rollouts, best-of-N sampling, shared
+//! scaffolds). A flushed page is **immutable** — appends mutate only the
+//! residual, later flushes lease new pages — so a prompt's quantized window
+//! is safe to share across requests:
+//!
+//! * [`kvcache::pool::SharedLease`] is the refcounted lease (`clone` bumps,
+//!   `drop` decrements, the page frees at zero), and a page table mixes
+//!   shared prefix pages with private tail pages behind
+//!   [`kvcache::pool::PageRef`] — every read path streams both identically
+//!   (the fused decode stays zero-alloc; gated in tests/fused_decode.rs),
+//!   while writing a shared page panics;
+//! * [`kvcache::pool::PrefixIndex`] is the content-addressed registry:
+//!   entries are keyed by a group-aligned rolling hash chain over the
+//!   prompt ([`kvcache::pool::prompt_chain_key`]) scoped to the
+//!   quantization identity ([`kvcache::pool::prefix_seed`]) — an O(chunks)
+//!   hash walk to one candidate entry, verified by a single token compare
+//!   so a 64-bit collision is a recorded miss, never a wrong-prompt hit.
+//!   **The key covers the whole prompt**:
+//!   the channel plan and scale blocks are functions of the entire
+//!   quantized window plus the whole prompt's |Q| statistics, so bit-exact
+//!   sharing requires full-prompt equality (prefix-only matching with a
+//!   frozen plan is a documented ROADMAP follow-on);
+//! * an entry carries everything a consumer needs to **skip the prefill
+//!   entirely** — shared pages, channel plans, |Q| state, the bounded f32
+//!   residual tail, last-position logits
+//!   (`RequestCache::register_prefix` / `install_prefix`,
+//!   `PrefillRun::new_shared`) — so a hit costs a page-table clone plus a
+//!   residual copy, and N requests over one prompt pay ~1× its quantized
+//!   bytes and zero prefill compute;
+//! * **CoW at the seam**: divergence (decode appends) copies nothing — the
+//!   first flush past the shared region leases private pages; eviction of
+//!   a shared page drops only the local reference. `tests/prefix_sharing.rs`
+//!   property-tests K sharers against K private caches for bit-identity
+//!   under append/flush/evict/cancel churn and holds the deduped page
+//!   budget (prefix once + private tails);
+//! * serving charges shared pages **once**: the pool's `leased` counter
+//!   sees a refcounted page a single time, prefix-hit admissions claim
+//!   zero pages (`Engine::prefill_pages_for_prompt`), the index sheds LRU
+//!   entries under pool pressure (retention never outranks a live flush),
+//!   and `Metrics` reports hits/misses/pinned pages/bytes-deduped/chunks
+//!   skipped (`mixkvq serve` + `mixkvq info` surface them). The bench
+//!   `cargo bench --bench prefix_sharing` writes
+//!   `BENCH_prefix_sharing.json`, and CI's `bench-gate` binary fails the
+//!   build if the dedup ratio, the decode/prefill speedups, the f32
+//!   working-set shrink, or the paged overhead regress past the ROADMAP
+//!   bars.
+//!
 //! See DESIGN.md for the experiment index and EXPERIMENTS.md for results.
 
 pub mod util {

@@ -151,6 +151,21 @@ fn serve(args: &Args) -> Result<()> {
         server.metrics.pool_resumes,
         server.metrics.pool_preemptions,
     );
+    let m = &server.metrics;
+    println!(
+        "prefix sharing: {} hits / {} misses, {} entries pinning {} pages \
+         ({:.2} MB deduped, {} prefill chunks skipped, {} reorder ticks, \
+         {} entries shed, {} KB sidecar)",
+        m.prefix_hits,
+        m.prefix_misses,
+        m.prefix_entries,
+        m.prefix_pages_pinned,
+        m.prefix_bytes_deduped as f64 / 1e6,
+        t.prefill_chunks_skipped,
+        t.prefill_reorders,
+        m.prefix_evictions,
+        m.prefix_sidecar_bytes / 1024,
+    );
     // per-method completion counts (the routing receipt)
     for (m, n) in server.metrics.completed_by_method() {
         println!("  {m}: {n} requests");
@@ -238,5 +253,26 @@ fn info(args: &Args) -> Result<()> {
             bytes_per_page * pages_at_c / 1024,
         );
     }
+    // cross-request prefix sharing: what one retained prompt costs beyond
+    // its (shared, charged-once) pool pages. Keyed by (method, R, G, C,
+    // model geometry) x a G-token rolling hash chain over the full prompt;
+    // K requests over one prompt hold ~1/K of private-mode prefix pages and
+    // skip their prefill compute entirely.
+    let mc = &meta.model;
+    // residual K/V snapshot + last logits + per-head plans and |Q| state;
+    // the retained prompt copy adds 4 B/token on top
+    let heads = mc.n_layers * mc.n_kv_heads;
+    let sidecar = 4 * mc.vocab
+        + 2 * 4 * cc.residual * heads * d
+        + 4 * d * heads // plans
+        + 4 * (d + 1) * heads; // |Q| sums + count
+    println!(
+        "prefix sharing: key=(method,R,G,C) x {}-token hash chain; \
+         <= {} KB + 4 B/prompt-token sidecar/entry (residual snapshot, \
+         last logits, plans, |Q| state, prompt copy) on top of the shared \
+         pages above",
+        cc.group,
+        sidecar / 1024,
+    );
     Ok(())
 }

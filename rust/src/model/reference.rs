@@ -813,6 +813,30 @@ impl PrefillRun {
         }
     }
 
+    /// A run whose whole prompt was served from a shared prefix entry
+    /// (`kvcache::pool::PrefixIndex`): no chunk will ever execute — the
+    /// cache adopted the registered pages/residual and `last_logits` is the
+    /// entry's snapshot, so `advance` reports done immediately and
+    /// `total_chunks` tells the caller how many (layer, chunk) units of
+    /// compute were skipped. The arena is minimal (one-token scratch): a
+    /// hit must not pin a prompt-sized f32 working set it will never touch.
+    pub fn new_shared(mc: &ModelConfig, t: usize, chunk: usize, last_logits: &[f32]) -> PrefillRun {
+        assert!(t > 0, "empty prompt");
+        assert!(chunk > 0, "chunk must be positive");
+        let mut scratch = PrefillScratch::new(mc, 1, 1);
+        scratch.logits.copy_from_slice(last_logits);
+        PrefillRun {
+            t,
+            chunk,
+            layer: mc.n_layers,
+            tok: 0,
+            started: true,
+            done: true,
+            chunks_done: 0,
+            scratch,
+        }
+    }
+
     pub fn is_done(&self) -> bool {
         self.done
     }

@@ -72,6 +72,23 @@
 //! * **bit-identity** — given identical K/V/|q| inputs the chunked sink
 //!   stores bit-identical pages to the bulk `load_prefill` path, and
 //!   pooled vs private chunked admissions are bitwise equal page for page.
+//!
+//! # Shared pages are read-only after flush (sharing ABI)
+//!
+//! The prefill/flush contract above has a corollary the cross-request
+//! prefix sharing of `kvcache::pool::PrefixIndex` depends on: **no code
+//! path writes a page after its flush completes**. Appends land in the
+//! residual buffer; the next flush quantizes into freshly leased pages;
+//! eviction splices table entries without touching bytes. A page is
+//! therefore immutable from the moment `store_key_window` /
+//! `store_value_window` return, which is exactly what makes it safe to
+//! hand the same physical page to N requests behind a refcounted
+//! `SharedLease`: co-tenants read the packed rows concurrently with zero
+//! coordination, and the packed-row layout, the in-page scales/zeros, and
+//! the alignment invariants documented above are the complete contract a
+//! reader needs. The write paths enforce the rule mechanically — a
+//! `page_mut` through a shared `PageRef` panics ("copy-on-write
+//! violation") rather than corrupt a co-tenant.
 
 /// Pack 4-bit codes (values 0..=15), `codes.len()` must be even.
 pub fn pack_u4(codes: &[u8], out: &mut Vec<u8>) {

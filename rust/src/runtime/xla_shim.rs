@@ -1,6 +1,7 @@
 //! Backend seam for the PJRT bindings.
 //!
-//! With the `pjrt` feature, this re-exports the vendored `xla` crate (the
+//! With the `pjrt` feature AND `--cfg pjrt_linked` (the artifact build
+//! environment), this re-exports the vendored `xla` crate (the
 //! artifact build environment's PJRT bindings). Without it — the default in
 //! the offline build set — a stub with the same surface compiles instead:
 //! every entry point type-checks, and the only reachable runtime call,
@@ -8,13 +9,18 @@
 //! non-executing layers (quantization, caches, batching, the serving
 //! frontend) stay fully usable and testable.
 
-#[cfg(feature = "pjrt")]
+// The real bindings need BOTH the `pjrt` feature AND the artifact build's
+// `--cfg pjrt_linked` (set once the vendored xla crate is wired into
+// [dependencies]); with the feature alone — e.g. CI's feature-matrix
+// `cargo check --features pjrt` on a plain checkout — the stub still
+// compiles, so the gated surface cannot rot unnoticed.
+#[cfg(all(feature = "pjrt", pjrt_linked))]
 pub use xla::*;
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", pjrt_linked)))]
 pub use stub::*;
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", pjrt_linked)))]
 mod stub {
     use std::fmt;
 
@@ -30,11 +36,15 @@ mod stub {
     impl std::error::Error for Error {}
 
     fn unavailable<T>() -> Result<T, Error> {
-        Err(Error(
-            "PJRT runtime unavailable: built without the `pjrt` feature \
-             (rebuild with --features pjrt and the vendored xla crate)"
-                .to_string(),
-        ))
+        let why = if cfg!(feature = "pjrt") {
+            "the `pjrt` feature is on but the vendored xla crate is not \
+             linked (wire it into [dependencies] and build with \
+             RUSTFLAGS=\"--cfg pjrt_linked\")"
+        } else {
+            "built without the `pjrt` feature (rebuild with --features pjrt \
+             and the vendored xla crate)"
+        };
+        Err(Error(format!("PJRT runtime unavailable: {why}")))
     }
 
     #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -166,3 +166,87 @@ fn steady_state_paged_pool_step_allocates_nothing() {
     drop(cache);
     assert_eq!(pool.leased(), 0, "no lease leak after retirement");
 }
+
+/// Zero-alloc over a SHARED prefix: a cache that adopted another request's
+/// registered prompt (refcounted read-only pages from the prefix index)
+/// must decode at exactly the same steady-state cost — streaming through an
+/// `Rc`-held page is pointer-chasing, not allocating. This is the serving
+/// shape of cross-request prefix sharing, held to the same release gate.
+#[test]
+fn steady_state_shared_prefix_decode_allocates_nothing() {
+    let _guard = SERIAL.lock().unwrap();
+    let meta = Meta::default_build();
+    let mc = meta.model.clone();
+    let weights = Weights::random(&mc, 41);
+    let method = MethodSpec::MixKvq { op: mixkvq::quant::methods::MixOp::Mix30 }.build();
+    let layers = meta.variant("mix30").unwrap().layers.clone();
+    let r_limit = 32;
+    let driver = RefDriver::new(
+        mc.clone(),
+        meta.cache.clone(),
+        &weights,
+        layers.clone(),
+        method.clone(),
+        r_limit,
+    );
+    let pool = mixkvq::kvcache::pool::KvPool::for_specs(
+        layers.iter(),
+        mc.d_head,
+        meta.cache.group,
+        Some(256),
+    );
+    pool.prewarm(256);
+    let mut index = mixkvq::kvcache::pool::PrefixIndex::new(128, pool.page_deploy_bytes());
+    let mut rng = Pcg32::seeded(43);
+    let prompt: Vec<i32> = (0..72).map(|_| rng.range(1, 127) as i32).collect();
+    let (mut producer, last) = driver.prefill_pooled(&pool, &prompt).unwrap();
+    assert!(producer.register_prefix(&mut index, 0xabcd, &prompt, &last));
+    let pinned = pool.leased();
+    let mut cache = mixkvq::kvcache::cache::RequestCache::new_in(
+        &pool,
+        &mc,
+        &meta.cache,
+        &layers,
+        method,
+        r_limit,
+    );
+    cache.install_prefix(index.lookup(0xabcd, &prompt).unwrap()).unwrap();
+    assert!(cache.shared_pages() > 0, "the window must be shared");
+    assert_eq!(cache.private_pages(), 0);
+    assert_eq!(pool.leased(), pinned, "the install must lease nothing");
+    // fused decode over the shared window matches the oracle bit-for-bit
+    // semantics-wise (same pages, different provenance)
+    let tok = rng.range(1, 127) as i32;
+    assert_eq!(
+        driver.decode_logits_fused(&cache, tok),
+        driver.decode_logits_fused(&producer, tok),
+        "shared and producer caches must decode identically"
+    );
+    let mut scratch =
+        DecodeScratch::new(&mc, meta.cache.capacity + meta.cache.residual + 1);
+    driver.step_with(&mut cache, 5, &mut scratch).unwrap();
+    let mut measured = 0u64;
+    let mut steps = 0u64;
+    for _ in 0..16 {
+        let tok = rng.range(1, 127) as i32;
+        if cache.rlen() + 1 >= r_limit {
+            driver.step_with(&mut cache, tok, &mut scratch).unwrap();
+            continue;
+        }
+        let before = common::alloc_count();
+        driver.step_with(&mut cache, tok, &mut scratch).unwrap();
+        let after = common::alloc_count();
+        measured += after - before;
+        steps += 1;
+    }
+    assert!(steps >= 8, "not enough non-flushing steps measured");
+    assert_eq!(
+        measured, 0,
+        "shared-prefix steady-state decode allocated {measured} times over {steps} steps"
+    );
+    drop(cache);
+    drop(producer);
+    assert_eq!(pool.leased(), index.pages_pinned(), "only the index pin remains");
+    index.clear();
+    assert_eq!(pool.leased(), 0, "no lease leak after the index lets go");
+}

@@ -1,0 +1,275 @@
+//! Cross-request prefix sharing invariants (no artifacts needed):
+//!
+//! * **bit-identity property**: K requests adopting one registered prompt
+//!   (refcounted copy-on-write pages) and then diverging — per-request
+//!   decode appends, flushes, sliding-window eviction, mid-flight cancel —
+//!   must stay bitwise equal to K private caches fed the same data at every
+//!   step: page contents, channel plans, |Q| state, residual rows;
+//! * **deduped page budget**: while K requests share a prefix, the pool
+//!   holds prefix pages ONCE (`~1/K`× private mode) plus each request's
+//!   private divergence tail — never more;
+//! * **no leaks**: after every drain (drops, cancels, index clear)
+//!   `pool.leased() == 0`;
+//! * **seam discipline**: evicting shared pages drops only the local
+//!   table reference; co-tenants and the index keep the bytes alive.
+
+use mixkvq::kvcache::cache::{ContiguousHead, RequestCache};
+use mixkvq::kvcache::eviction::CachePolicy;
+use mixkvq::kvcache::pool::{KvPool, PrefixIndex};
+use mixkvq::model::config::{CacheConfig, ModelConfig};
+use mixkvq::quant::methods::Method;
+use mixkvq::quant::window::TierSpec;
+use mixkvq::util::rng::Pcg32;
+
+fn rand_kv(
+    rng: &mut Pcg32,
+    mc: &ModelConfig,
+    t: usize,
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let n = mc.n_kv_heads * t * mc.d_head;
+    let k = (0..mc.n_layers).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+    let v = (0..mc.n_layers).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+    let qa = (0..mc.n_layers)
+        .map(|_| (0..mc.n_kv_heads * mc.d_head).map(|_| rng.f32() + 0.01).collect())
+        .collect();
+    (k, v, qa)
+}
+
+fn snapshot(cache: &RequestCache, mc: &ModelConfig) -> Vec<ContiguousHead> {
+    (0..mc.n_layers)
+        .flat_map(|l| (0..mc.n_kv_heads).map(move |h| (l, h)))
+        .map(|(l, h)| cache.heads[l][h].contiguous())
+        .collect()
+}
+
+fn assert_mirrors(shared: &RequestCache, private: &RequestCache, mc: &ModelConfig, ctx: &str) {
+    assert_eq!(shared.qlen, private.qlen, "{ctx}: qlen");
+    assert_eq!(shared.pos, private.pos, "{ctx}: pos");
+    assert_eq!(shared.rlen(), private.rlen(), "{ctx}: rlen");
+    assert_eq!(shared.evicted_tokens, private.evicted_tokens, "{ctx}: evicted");
+    for l in 0..mc.n_layers {
+        for h in 0..mc.n_kv_heads {
+            let (a, b) = (&shared.heads[l][h], &private.heads[l][h]);
+            assert_eq!(a.idx, b.idx, "{ctx}: l{l}h{h} plan");
+            assert_eq!(a.contiguous(), b.contiguous(), "{ctx}: l{l}h{h} pages");
+            assert_eq!(a.res.keys(), b.res.keys(), "{ctx}: l{l}h{h} res keys");
+            assert_eq!(a.res.values(), b.res.values(), "{ctx}: l{l}h{h} res values");
+            assert_eq!(a.qstats.sum_abs, b.qstats.sum_abs, "{ctx}: l{l}h{h} qstats");
+        }
+    }
+}
+
+/// The headline property: K sharers with divergent decode tails under
+/// append/flush/evict/cancel churn stay bit-identical to K private caches,
+/// the pool never exceeds the deduped budget (prefix once + private
+/// tails), and everything drains to zero leases.
+#[test]
+fn k_sharers_stay_bit_identical_to_private_caches_under_churn() {
+    let mc = ModelConfig { n_layers: 2, ..ModelConfig::default_build() };
+    let cc = CacheConfig { capacity: 256, residual: 64, ..CacheConfig::default_build() };
+    let spec = TierSpec { n16: 2, n4: 2, n2: 28, v_bits: 2 };
+    let specs = vec![spec; mc.n_layers];
+    let r_limit = 32;
+    let k_req = 3usize;
+    let method = Method::mixkvq("mix30");
+
+    let pool = KvPool::for_specs(specs.iter(), mc.d_head, cc.group, Some(512));
+    pool.prewarm(512);
+    let mut index = PrefixIndex::new(256, pool.page_deploy_bytes());
+
+    // one shared prompt: 160 tokens = 128 quantized (4 groups/head) + 32
+    // residual; a producer registers it, K consumers adopt it
+    let mut seed_rng = Pcg32::seeded(1009);
+    let t0 = 160;
+    let (k0, v0, qa0) = rand_kv(&mut seed_rng, &mc, t0);
+    let prompt0: Vec<i32> = (0..t0 as i32).collect();
+    let mut producer = RequestCache::new_in(&pool, &mc, &cc, &specs, method.clone(), r_limit);
+    producer.load_prefill(&k0, &v0, &qa0, t0).unwrap();
+    assert!(producer.register_prefix(&mut index, 0xfeed, &prompt0, &[0.25, 0.75]));
+    let prefix_pages = pool.leased();
+    assert_eq!(prefix_pages, (128 / cc.group) * mc.n_layers * mc.n_kv_heads);
+    drop(producer);
+    assert_eq!(pool.leased(), prefix_pages, "index pins the prefix alone");
+
+    let mut shared: Vec<Option<RequestCache>> = Vec::new();
+    let mut private: Vec<Option<RequestCache>> = Vec::new();
+    let mut tail_rngs: Vec<Pcg32> = Vec::new();
+    for r in 0..k_req {
+        let mut s = RequestCache::new_in(&pool, &mc, &cc, &specs, method.clone(), r_limit);
+        s.install_prefix(index.lookup(0xfeed, &prompt0).unwrap()).unwrap();
+        // request 1 diverges in POLICY too: sliding-window eviction that
+        // will eventually splice shared pages out of its own table
+        if r == 1 {
+            s.policy = CachePolicy::SlidingWindow { sink: 32, evict: 32 };
+        }
+        let mut p = RequestCache::new(&mc, &cc, &specs, method.clone(), r_limit);
+        p.load_prefill(&k0, &v0, &qa0, t0).unwrap();
+        if r == 1 {
+            p.policy = CachePolicy::SlidingWindow { sink: 32, evict: 32 };
+        }
+        assert_mirrors(&s, &p, &mc, &format!("install r{r}"));
+        shared.push(Some(s));
+        private.push(Some(p));
+        tail_rngs.push(Pcg32::seeded(7000 + r as u64));
+    }
+    assert_eq!(pool.leased(), prefix_pages, "K installs lease ZERO new pages");
+
+    let mut max_leased = pool.leased();
+    for step in 0..220 {
+        for r in 0..k_req {
+            let (Some(s), Some(p)) = (&mut shared[r], &mut private[r]) else { continue };
+            // divergent tails: each request's decode stream is distinct
+            let (kn, vn, qn) = rand_kv(&mut tail_rngs[r], &mc, 1);
+            match (s.append(&kn, &vn, &qn), p.append(&kn, &vn, &qn)) {
+                (Ok(()), Ok(())) => {}
+                (Err(_), Err(_)) => {
+                    // both exhaust identically (Stop policy fills up)
+                    continue;
+                }
+                (a, b) => panic!("r{r} step {step}: shared {a:?} vs private {b:?} diverged"),
+            }
+            if step % 10 == r {
+                assert_mirrors(s, p, &mc, &format!("step {step} r{r}"));
+            }
+        }
+        // deduped page budget: prefix once + every live request's private
+        // divergence tail — never a page more
+        let tails: usize = shared
+            .iter()
+            .flatten()
+            .map(RequestCache::private_pages)
+            .sum();
+        assert_eq!(
+            pool.leased(),
+            prefix_pages + tails,
+            "step {step}: pool must hold prefix ONCE plus private tails"
+        );
+        max_leased = max_leased.max(pool.leased());
+        // cancel churn: request 2 retires mid-flight
+        if step == 120 {
+            let before = pool.leased();
+            let dropped_tail = shared[2].as_ref().unwrap().private_pages();
+            shared[2] = None;
+            private[2] = None;
+            assert_eq!(
+                pool.leased(),
+                before - dropped_tail,
+                "cancel returns ONLY the private tail (prefix stays shared)"
+            );
+        }
+    }
+
+    // the eviction-policy sharer must have spliced shared pages out of its
+    // OWN table without disturbing anyone else
+    let evictor = shared[1].as_ref().unwrap();
+    assert!(evictor.evicted_tokens > 0, "sliding window must have evicted");
+    assert!(
+        evictor.shared_prefix_tokens < 128,
+        "eviction must consume the shared seam counter"
+    );
+    let survivor = shared[0].as_ref().unwrap();
+    let survivor_snap = snapshot(survivor, &mc);
+    assert_eq!(
+        survivor_snap,
+        snapshot(private[0].as_ref().unwrap(), &mc),
+        "co-tenant unaffected by another sharer's eviction"
+    );
+
+    // drain: drop all sharers → only the index pin remains → clear → zero
+    shared.clear();
+    private.clear();
+    assert_eq!(pool.leased(), prefix_pages, "after drops only the index pins pages");
+    index.clear();
+    assert_eq!(pool.leased(), 0, "no leaks after the index lets go");
+    assert!(max_leased <= 512, "budget never exceeded");
+}
+
+/// A prompt shorter than the residual limit registers a zero-page entry —
+/// consumers still skip the prefill (residual + |Q| state adopted) and
+/// plan their channels privately at the first flush, bit-identical to
+/// private mode.
+#[test]
+fn residual_only_prompt_shares_compute_not_pages() {
+    let mc = ModelConfig { n_layers: 2, ..ModelConfig::default_build() };
+    let cc = CacheConfig::default_build();
+    let spec = TierSpec { n16: 2, n4: 2, n2: 28, v_bits: 2 };
+    let specs = vec![spec; mc.n_layers];
+    let pool = KvPool::for_specs(specs.iter(), mc.d_head, cc.group, Some(64));
+    pool.prewarm(64);
+    let mut index = PrefixIndex::new(64, pool.page_deploy_bytes());
+    let mut rng = Pcg32::seeded(1013);
+    let t0 = 24; // < r_limit = 32: zero pages, residual only
+    let (k0, v0, qa0) = rand_kv(&mut rng, &mc, t0);
+    let mut producer = RequestCache::new_in(&pool, &mc, &cc, &specs, Method::kivi("kv2"), 32);
+    producer.load_prefill(&k0, &v0, &qa0, t0).unwrap();
+    let prompt0: Vec<i32> = (0..t0 as i32).collect();
+    assert!(producer.register_prefix(&mut index, 9, &prompt0, &[1.0]));
+    assert_eq!(index.pages_pinned(), 0);
+
+    let mut s = RequestCache::new_in(&pool, &mc, &cc, &specs, Method::kivi("kv2"), 32);
+    s.install_prefix(index.lookup(9, &prompt0).unwrap()).unwrap();
+    let mut p = RequestCache::new(&mc, &cc, &specs, Method::kivi("kv2"), 32);
+    p.load_prefill(&k0, &v0, &qa0, t0).unwrap();
+    assert_mirrors(&s, &p, &mc, "residual-only install");
+    // drive both through the first private flush: plans appear, identical
+    let mut tail = Pcg32::seeded(1014);
+    for step in 0..40 {
+        let (kn, vn, qn) = rand_kv(&mut tail, &mc, 1);
+        s.append(&kn, &vn, &qn).unwrap();
+        p.append(&kn, &vn, &qn).unwrap();
+        if step % 8 == 0 {
+            assert_mirrors(&s, &p, &mc, &format!("residual-only step {step}"));
+        }
+    }
+    assert!(s.qlen > 0 && s.heads[0][0].planned);
+    assert_eq!(s.shared_pages(), 0, "divergence pages are private");
+    assert_mirrors(&s, &p, &mc, "residual-only end");
+}
+
+/// Two different prompts never collide: distinct keys, distinct entries,
+/// and the index sheds LRU under its page cap while co-tenant references
+/// keep evicted entries' pages alive until their holders retire.
+#[test]
+fn distinct_prompts_get_distinct_entries_and_lru_respects_holders() {
+    let mc = ModelConfig { n_layers: 1, ..ModelConfig::default_build() };
+    let cc = CacheConfig::default_build();
+    let spec = TierSpec { n16: 2, n4: 2, n2: 28, v_bits: 2 };
+    let specs = vec![spec];
+    let pool = KvPool::for_specs(specs.iter(), mc.d_head, cc.group, Some(64));
+    pool.prewarm(64);
+    // cap: exactly one 96-token prompt's pages (64 quantized = 2 groups x
+    // 2 heads = 4 pages) — the second registration must shed the first
+    let mut index = PrefixIndex::new(4, pool.page_deploy_bytes());
+    let mut rng = Pcg32::seeded(1021);
+
+    let (ka, va, qaa) = rand_kv(&mut rng, &mc, 96);
+    let prompt_a: Vec<i32> = (0..96).collect();
+    let prompt_b: Vec<i32> = (1000..1096).collect();
+    let mut a = RequestCache::new_in(&pool, &mc, &cc, &specs, Method::mixkvq("mix30"), 32);
+    a.load_prefill(&ka, &va, &qaa, 96).unwrap();
+    assert!(a.register_prefix(&mut index, 100, &prompt_a, &[0.0]));
+
+    // a consumer holds prompt A's pages
+    let mut holder = RequestCache::new_in(&pool, &mc, &cc, &specs, Method::mixkvq("mix30"), 32);
+    holder.install_prefix(index.lookup(100, &prompt_a).unwrap()).unwrap();
+    let a_pages = holder.leased_pages();
+    assert_eq!(pool.leased(), a_pages);
+
+    let (kb, vb, qab) = rand_kv(&mut rng, &mc, 96);
+    let mut b = RequestCache::new_in(&pool, &mc, &cc, &specs, Method::mixkvq("mix30"), 32);
+    b.load_prefill(&kb, &vb, &qab, 96).unwrap();
+    assert!(b.register_prefix(&mut index, 200, &prompt_b, &[0.0]));
+    // A's entry was shed for the cap, but the holder (and producer a) keep
+    // its pages alive — shedding breaks retention, never correctness
+    assert!(!index.contains(100));
+    assert!(index.contains(200));
+    assert_eq!(pool.leased(), 2 * a_pages, "A pages alive via holders, B pinned");
+    let before = snapshot(&holder, &mc);
+    drop(a);
+    assert_eq!(snapshot(&holder, &mc), before, "holder's bytes untouched by shed");
+    drop(holder);
+    assert_eq!(pool.leased(), a_pages, "only B's pinned pages remain");
+    drop(b);
+    index.clear();
+    assert_eq!(pool.leased(), 0);
+}

@@ -1,0 +1,322 @@
+//! `bench-gate` — the CI regression gate over the artifact-free bench
+//! reports. The ROADMAP's perf bars stop being aspirational here: CI runs
+//! the benches, then this binary parses their JSON artifacts and **fails
+//! the job** when any bar regresses:
+//!
+//! * `BENCH_ref_decode.json` — fused packed-code decode must stay ≥3× the
+//!   legacy dequantize-then-attend path at qlen ≥ 256;
+//! * `BENCH_paged_decode.json` — shared-pool paged decode overhead over the
+//!   private-pool path must stay ≤ ~5% (pages change provenance, not
+//!   access cost);
+//! * `BENCH_prefill.json` — chunked GEMM-blocked prefill must stay ≥3× the
+//!   legacy `forward_full` path at T ≥ 256, with a ≥2× smaller f32 working
+//!   set;
+//! * `BENCH_prefix_sharing.json` — K requests over one prompt must hold
+//!   ≥2× fewer prefix pages than private mode and actually skip prefill
+//!   chunks (dedup that stops deduping is a regression too).
+//!
+//! A missing or unparseable artifact is itself a violation: the gate exists
+//! so a bench that silently stops running (or changes schema) cannot merge.
+//! Run locally after `cargo bench --bench ref_decode --bench prefill
+//! --bench prefix_sharing` from the artifact directory:
+//!
+//! ```text
+//! cargo run --release --bin bench-gate [dir]
+//! ```
+//!
+//! The thresholds are unit-tested below against synthetically degraded
+//! reports, so the parser/threshold logic itself cannot rot unnoticed.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use mixkvq::util::json::Json;
+
+use anyhow::Result;
+
+/// Fused decode must stay at least this many × over legacy (qlen ≥ 256).
+pub const DECODE_SPEEDUP_MIN: f64 = 3.0;
+/// Chunked prefill must stay at least this many × over legacy (T ≥ 256).
+pub const PREFILL_SPEEDUP_MIN: f64 = 3.0;
+/// Chunked prefill's f32 working set must stay at least this many × smaller.
+pub const PREFILL_MEM_RATIO_MIN: f64 = 2.0;
+/// Shared-pool decode may cost at most this % over the private pool.
+pub const PAGED_OVERHEAD_MAX_PCT: f64 = 5.0;
+/// K sharers must hold at least this many × fewer prefix pages than
+/// K private copies would.
+pub const PREFIX_DEDUP_MIN: f64 = 2.0;
+
+/// Context length/prompt length at and above which the decode/prefill
+/// speedup bars apply (short contexts are fixed-overhead dominated).
+const LONG_CONTEXT: f64 = 256.0;
+
+fn gate_ref_decode(j: &Json) -> Result<Vec<String>> {
+    let mut v = Vec::new();
+    let entries = j.get("entries")?.as_arr()?;
+    if entries.is_empty() {
+        v.push("ref_decode: report has NO entries — did the bench measure anything?".to_string());
+    }
+    for e in entries {
+        let qlen = e.get("qlen")?.as_f64()?;
+        let speedup = e.get("speedup")?.as_f64()?;
+        if qlen >= LONG_CONTEXT && speedup < DECODE_SPEEDUP_MIN {
+            v.push(format!(
+                "ref_decode: fused decode speedup {speedup:.2}x < \
+                 {DECODE_SPEEDUP_MIN}x at qlen={qlen}"
+            ));
+        }
+    }
+    Ok(v)
+}
+
+fn gate_paged_decode(j: &Json) -> Result<Vec<String>> {
+    let mut v = Vec::new();
+    let entries = j.get("entries")?.as_arr()?;
+    if entries.is_empty() {
+        v.push("paged_decode: report has NO entries — did the bench measure anything?".to_string());
+    }
+    for e in entries {
+        let qlen = e.get("qlen")?.as_f64()?;
+        let overhead = e.get("paged_overhead_pct")?.as_f64()?;
+        if overhead > PAGED_OVERHEAD_MAX_PCT {
+            v.push(format!(
+                "paged_decode: shared-pool overhead {overhead:.2}% > \
+                 {PAGED_OVERHEAD_MAX_PCT}% at qlen={qlen}"
+            ));
+        }
+    }
+    Ok(v)
+}
+
+fn gate_prefill(j: &Json) -> Result<Vec<String>> {
+    let mut v = Vec::new();
+    let entries = j.get("entries")?.as_arr()?;
+    if entries.is_empty() {
+        v.push("prefill: report has NO entries — did the bench measure anything?".to_string());
+    }
+    for e in entries {
+        let t = e.get("t")?.as_f64()?;
+        let speedup = e.get("speedup")?.as_f64()?;
+        let mem = e.get("peak_ratio")?.as_f64()?;
+        if t >= LONG_CONTEXT && speedup < PREFILL_SPEEDUP_MIN {
+            v.push(format!(
+                "prefill: chunked speedup {speedup:.2}x < {PREFILL_SPEEDUP_MIN}x at T={t}"
+            ));
+        }
+        if mem < PREFILL_MEM_RATIO_MIN {
+            v.push(format!(
+                "prefill: f32 working-set shrink {mem:.2}x < {PREFILL_MEM_RATIO_MIN}x at T={t}"
+            ));
+        }
+    }
+    Ok(v)
+}
+
+fn gate_prefix_sharing(j: &Json) -> Result<Vec<String>> {
+    let mut v = Vec::new();
+    let entries = j.get("entries")?.as_arr()?;
+    if entries.is_empty() {
+        v.push("prefix_sharing: report has NO entries — did the bench measure anything?".to_string());
+    }
+    for e in entries {
+        let t = e.get("t")?.as_f64()?;
+        let dedup = e.get("dedup_ratio")?.as_f64()?;
+        let skipped = e.get("chunks_skipped")?.as_f64()?;
+        let deduped = e.get("bytes_deduped")?.as_f64()?;
+        if dedup < PREFIX_DEDUP_MIN {
+            v.push(format!(
+                "prefix_sharing: page dedup {dedup:.2}x < {PREFIX_DEDUP_MIN}x at T={t}"
+            ));
+        }
+        if skipped <= 0.0 {
+            v.push(format!("prefix_sharing: no prefill chunks skipped at T={t}"));
+        }
+        if deduped <= 0.0 {
+            v.push(format!("prefix_sharing: no bytes deduped at T={t}"));
+        }
+    }
+    Ok(v)
+}
+
+type Gate = fn(&Json) -> Result<Vec<String>>;
+
+const GATES: [(&str, Gate); 4] = [
+    ("BENCH_ref_decode.json", gate_ref_decode),
+    ("BENCH_paged_decode.json", gate_paged_decode),
+    ("BENCH_prefill.json", gate_prefill),
+    ("BENCH_prefix_sharing.json", gate_prefix_sharing),
+];
+
+/// Run every gate over `dir`, returning the full violation list (empty =
+/// every bar holds).
+fn run_gates(dir: &Path) -> Vec<String> {
+    let mut violations = Vec::new();
+    for (file, gate) in GATES {
+        let path = dir.join(file);
+        match std::fs::read_to_string(&path) {
+            Err(e) => violations.push(format!(
+                "{file}: missing ({e}) — did its bench run before the gate?"
+            )),
+            Ok(src) => match Json::parse(&src).and_then(|j| gate(&j)) {
+                Ok(v) => violations.extend(v),
+                Err(e) => violations.push(format!("{file}: bad report schema: {e}")),
+            },
+        }
+    }
+    violations
+}
+
+fn main() -> ExitCode {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| ".".to_string());
+    let violations = run_gates(Path::new(&dir));
+    if violations.is_empty() {
+        println!(
+            "bench-gate: all ROADMAP perf bars hold \
+             (decode >= {DECODE_SPEEDUP_MIN}x, prefill >= {PREFILL_SPEEDUP_MIN}x, \
+             f32 shrink >= {PREFILL_MEM_RATIO_MIN}x, paged overhead <= \
+             {PAGED_OVERHEAD_MAX_PCT}%, prefix dedup >= {PREFIX_DEDUP_MIN}x)"
+        );
+        return ExitCode::SUCCESS;
+    }
+    eprintln!("bench-gate: {} violation(s):", violations.len());
+    for v in &violations {
+        eprintln!("  FAIL {v}");
+    }
+    ExitCode::FAILURE
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(src: &str) -> Json {
+        Json::parse(src).unwrap()
+    }
+
+    fn decode_report(speedup_256: f64, speedup_512: f64) -> String {
+        format!(
+            r#"{{"bench":"ref_decode","entries":[
+                {{"qlen":256,"fused_ms":1.0,"legacy_ms":{},"speedup":{speedup_256}}},
+                {{"qlen":512,"fused_ms":1.0,"legacy_ms":{},"speedup":{speedup_512}}}]}}"#,
+            speedup_256, speedup_512
+        )
+    }
+
+    #[test]
+    fn healthy_decode_report_passes() {
+        let v = gate_ref_decode(&parse(&decode_report(3.4, 4.1))).unwrap();
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn degraded_decode_speedup_fails() {
+        let v = gate_ref_decode(&parse(&decode_report(2.9, 4.1))).unwrap();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("qlen=256"), "{v:?}");
+        // both entries degraded → both reported
+        let v = gate_ref_decode(&parse(&decode_report(1.0, 2.0))).unwrap();
+        assert_eq!(v.len(), 2);
+    }
+
+    #[test]
+    fn short_context_is_exempt_from_the_decode_bar() {
+        let src = r#"{"entries":[{"qlen":64,"speedup":1.1}]}"#;
+        assert!(gate_ref_decode(&parse(src)).unwrap().is_empty());
+    }
+
+    #[test]
+    fn paged_overhead_gate() {
+        let ok = r#"{"entries":[{"qlen":256,"paged_overhead_pct":1.2},
+                                {"qlen":512,"paged_overhead_pct":-0.5}]}"#;
+        assert!(gate_paged_decode(&parse(ok)).unwrap().is_empty());
+        let bad = r#"{"entries":[{"qlen":256,"paged_overhead_pct":7.5}]}"#;
+        let v = gate_paged_decode(&parse(bad)).unwrap();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("7.50%"), "{v:?}");
+    }
+
+    #[test]
+    fn prefill_gate_checks_speed_and_memory_independently() {
+        let ok = r#"{"entries":[{"t":256,"speedup":3.5,"peak_ratio":2.6},
+                                {"t":512,"speedup":4.0,"peak_ratio":3.0}]}"#;
+        assert!(gate_prefill(&parse(ok)).unwrap().is_empty());
+        let slow = r#"{"entries":[{"t":256,"speedup":2.0,"peak_ratio":2.6}]}"#;
+        assert_eq!(gate_prefill(&parse(slow)).unwrap().len(), 1);
+        let fat = r#"{"entries":[{"t":256,"speedup":3.5,"peak_ratio":1.5}]}"#;
+        let v = gate_prefill(&parse(fat)).unwrap();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("working-set"), "{v:?}");
+        // the memory bar applies at every T, the speed bar only at T >= 256
+        let short = r#"{"entries":[{"t":64,"speedup":1.0,"peak_ratio":1.0}]}"#;
+        assert_eq!(gate_prefill(&parse(short)).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn prefix_sharing_gate() {
+        let ok = r#"{"entries":[{"t":256,"dedup_ratio":3.8,"chunks_skipped":96,
+                                 "bytes_deduped":1000000}]}"#;
+        assert!(gate_prefix_sharing(&parse(ok)).unwrap().is_empty());
+        let bad = r#"{"entries":[{"t":256,"dedup_ratio":1.1,"chunks_skipped":0,
+                                  "bytes_deduped":0}]}"#;
+        let v = gate_prefix_sharing(&parse(bad)).unwrap();
+        assert_eq!(v.len(), 3, "{v:?}");
+    }
+
+    #[test]
+    fn empty_entries_are_a_violation() {
+        // a bench that regresses to writing no data must not pass green
+        let empty = r#"{"bench":"x","entries":[]}"#;
+        for gate in [
+            gate_ref_decode as Gate,
+            gate_paged_decode,
+            gate_prefill,
+            gate_prefix_sharing,
+        ] {
+            let v = gate(&parse(empty)).unwrap();
+            assert_eq!(v.len(), 1);
+            assert!(v[0].contains("NO entries"), "{v:?}");
+        }
+    }
+
+    #[test]
+    fn schema_drift_and_missing_files_are_violations() {
+        // a renamed field must fail loudly, not silently pass
+        let drifted = r#"{"entries":[{"qlen":256,"speed_up":3.5}]}"#;
+        assert!(gate_ref_decode(&parse(drifted)).is_err());
+        // an empty directory reports one violation per expected artifact
+        let dir = std::env::temp_dir().join("mixkvq_bench_gate_empty_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let v = run_gates(&dir);
+        assert_eq!(v.len(), GATES.len());
+        assert!(v.iter().all(|x| x.contains("missing")), "{v:?}");
+    }
+
+    #[test]
+    fn end_to_end_pass_and_fail_over_a_real_directory() {
+        let dir = std::env::temp_dir().join("mixkvq_bench_gate_e2e_test");
+        let _ = std::fs::create_dir_all(&dir);
+        std::fs::write(dir.join("BENCH_ref_decode.json"), decode_report(3.2, 3.9)).unwrap();
+        std::fs::write(
+            dir.join("BENCH_paged_decode.json"),
+            r#"{"entries":[{"qlen":256,"paged_overhead_pct":0.8}]}"#,
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("BENCH_prefill.json"),
+            r#"{"entries":[{"t":256,"speedup":3.3,"peak_ratio":2.4}]}"#,
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("BENCH_prefix_sharing.json"),
+            r#"{"entries":[{"t":256,"dedup_ratio":3.5,"chunks_skipped":96,
+                            "bytes_deduped":500000}]}"#,
+        )
+        .unwrap();
+        assert!(run_gates(&dir).is_empty());
+        // degrade ONE artifact → exactly its violations surface
+        std::fs::write(dir.join("BENCH_ref_decode.json"), decode_report(2.0, 3.9)).unwrap();
+        let v = run_gates(&dir);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("ref_decode"), "{v:?}");
+    }
+}
