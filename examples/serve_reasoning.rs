@@ -129,6 +129,7 @@ fn trace(n: usize, odd_method: Option<MethodSpec>, even_method: Option<MethodSpe
                 max_new_tokens: 48,
                 sampling: Sampling::Greedy,
                 method: if i % 2 == 1 { odd_method } else { even_method },
+                tenant: (i % 2) as u32,
             }
         })
         .collect()

@@ -127,6 +127,7 @@ mod tests {
             max_new_tokens: 8,
             sampling: Sampling::Greedy,
             method: None,
+            tenant: 0,
         }
     }
 

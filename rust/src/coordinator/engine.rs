@@ -23,7 +23,7 @@ use crate::kvcache::accountant::MemoryAccountant;
 use crate::kvcache::cache::{PageField, RequestCache};
 use crate::kvcache::pool::{prefix_seed, prompt_chain_key, KvPool, PrefixIndex};
 use crate::model::config::{Meta, VariantSpec};
-use crate::model::reference::{PrefillRun, RefModel, RopeTable};
+use crate::model::reference::{DecodeScratch, PrefillRun, RefModel, RopeTable};
 use crate::model::weights::{ParamIndex, Weights};
 use crate::quant::methods::{Method, MethodSpec};
 use crate::runtime::client::Runtime;
@@ -86,7 +86,13 @@ pub struct ChunkedPrefill {
 }
 
 pub struct Engine {
-    pub runtime: Runtime,
+    /// Compiled-graph backend. `None` = pure-Rust reference backend
+    /// ([`Engine::new_reference`]): prefill already runs through the
+    /// chunked reference pipeline, and decode dispatches per-slot through
+    /// `RefModel::decode_step_into` — no PJRT runtime, no artifacts. The
+    /// serving layers (admission, paging, batching, policy) are identical
+    /// either way, which is what the traffic/policy harnesses exercise.
+    runtime: Option<Runtime>,
     pub meta: Meta,
     pub weights: Weights,
     /// Default decode variant (requests without a `MethodSpec` override).
@@ -120,6 +126,10 @@ pub struct Engine {
     /// name-resolution lookups (`RefModel::with_parts`).
     ref_pidx: ParamIndex,
     ref_rope: RopeTable,
+    /// Reference-backend decode arena, reused across steps (same shape as
+    /// `RefDriver`'s per-driver scratch). `None` until the first reference
+    /// decode step; unused on the compiled backend.
+    ref_scratch: Option<DecodeScratch>,
 }
 
 enum Owned {
@@ -198,7 +208,7 @@ impl Engine {
         let ref_pidx = ParamIndex::new(&weights, &meta.model);
         let ref_rope = RopeTable::new(meta.model.d_head, meta.model.rope_theta);
         Ok(Engine {
-            runtime,
+            runtime: Some(runtime),
             meta,
             weights,
             variant,
@@ -213,7 +223,47 @@ impl Engine {
             prefix_index: None,
             ref_pidx,
             ref_rope,
+            ref_scratch: None,
         })
+    }
+
+    /// Build an engine over the pure-Rust reference model with synthetic
+    /// weights — no PJRT runtime, no compiled artifacts on disk. Serving
+    /// semantics (occupancy admission, paged storage, prefix sharing,
+    /// per-variant sub-batching, precision policies) are identical to the
+    /// compiled backend; only the per-step numerics run through
+    /// `RefModel`. This is what the traffic/policy harnesses and CI build
+    /// a [`crate::coordinator::router::Server`] on.
+    pub fn new_reference(meta: Meta, seed: u64, method: Method, r_limit: usize) -> Result<Engine> {
+        let weights = Weights::random(&meta.model, seed);
+        let variant = meta.variant(&method.variant)?.clone();
+        let rot = method.rotation(meta.model.d_head);
+        let ref_pidx = ParamIndex::new(&weights, &meta.model);
+        let ref_rope = RopeTable::new(meta.model.d_head, meta.model.rope_theta);
+        Ok(Engine {
+            runtime: None,
+            meta,
+            weights,
+            variant,
+            method,
+            r_limit,
+            timers: EngineTimers::default(),
+            artifacts_dir: PathBuf::new(),
+            rot,
+            weight_bufs: Vec::new(),
+            arg_pool: HashMap::new(),
+            kv_pool: None,
+            prefix_index: None,
+            ref_pidx,
+            ref_rope,
+            ref_scratch: None,
+        })
+    }
+
+    /// True when this engine decodes through the pure-Rust reference model
+    /// instead of compiled PJRT graphs.
+    pub fn is_reference(&self) -> bool {
+        self.runtime.is_none()
     }
 
     /// Install the shared KV page pool every admitted request leases from.
@@ -371,13 +421,18 @@ impl Engine {
 
     /// Make `method`'s decode variant resident in the executable pool
     /// (no-op when already compiled). Per-request routing calls this at
-    /// admission, so a variant compiles at most once per process.
+    /// admission, so a variant compiles at most once per process. On the
+    /// reference backend this is validation only — every known variant's
+    /// tier shapes decode through the same reference model.
     pub fn ensure_method(&mut self, method: &Method) -> Result<()> {
         self.meta
             .variant(&method.variant)
             .with_context(|| format!("method `{}`", method.name))?;
+        let Some(runtime) = self.runtime.as_mut() else {
+            return Ok(());
+        };
         let decode_name = decode_artifact(&method.variant);
-        self.runtime.load(&self.artifacts_dir.clone(), &decode_name)
+        runtime.load(&self.artifacts_dir.clone(), &decode_name)
     }
 
     /// Resolve a request's method override against the engine default.
@@ -422,18 +477,23 @@ impl Engine {
         }
     }
 
-    /// Run prompt prefill through the bucketed prefill graph.
+    /// Run prompt prefill through the bucketed prefill graph
+    /// (compiled-backend only; the serving path uses
+    /// [`Engine::begin_prefill_chunked`], which works on both backends).
     pub fn prefill(&mut self, tokens: &[i32]) -> Result<PrefillData> {
+        let Some(runtime) = self.runtime.as_ref() else {
+            bail!("bucketed HLO prefill needs the compiled backend (reference engine)");
+        };
         let mc = &self.meta.model;
         let t = tokens.len();
         let bucket = pick_bucket(&self.meta.cache.prefill_buckets, t)?;
-        let exe = self.runtime.get(&prefill_artifact(bucket))?;
+        let exe = runtime.get(&prefill_artifact(bucket))?;
         let mut padded = tokens.to_vec();
         padded.resize(bucket, 0);
         let length = [t as i32];
         let args = [Arg::I32(&padded), Arg::I32(&length)];
         let t0 = Instant::now();
-        let out = exe.run_b(&self.runtime.client, &self.weight_bufs, &args)?;
+        let out = exe.run_b(&runtime.client, &self.weight_bufs, &args)?;
         self.timers.prefill_exec_ns += t0.elapsed().as_nanos() as u64;
         if out.len() != 4 {
             bail!("prefill returned {} outputs, want 4", out.len());
@@ -487,6 +547,9 @@ impl Engine {
         let b = self.meta.cache.decode_batch;
         if slots.len() != b {
             bail!("decode batch must have exactly {b} slots");
+        }
+        if self.runtime.is_none() {
+            return self.decode_step_reference(variant, slots);
         }
         let spec = self.meta.variant(variant)?.clone();
         let decode_name = decode_artifact(variant);
@@ -545,6 +608,56 @@ impl Engine {
         Ok(results)
     }
 
+    /// One decode step on the reference backend: each live slot runs the
+    /// fused packed-code reference decode (`RefModel::decode_step_into`)
+    /// and folds its new token into the cache — semantically the per-slot
+    /// unfolding of the compiled batched step, against the same caches and
+    /// tier shapes. The sub-batch's `variant` is validated like the
+    /// compiled path validates artifact residency; the per-slot tier
+    /// shapes live in each cache, so heterogeneous groups decode
+    /// correctly.
+    fn decode_step_reference(
+        &mut self,
+        variant: &str,
+        slots: &mut [Option<(&mut RequestCache, i32)>],
+    ) -> Result<Vec<Option<Vec<f32>>>> {
+        self.meta.variant(variant)?;
+        let cc = &self.meta.cache;
+        let mut scratch = match self.ref_scratch.take() {
+            Some(s) => s,
+            None => DecodeScratch::new(&self.meta.model, cc.capacity + cc.residual + 1),
+        };
+        let model = RefModel::with_parts(
+            self.meta.model.clone(),
+            &self.weights,
+            self.ref_pidx.clone(),
+            self.ref_rope.clone(),
+        );
+        let mut results = Vec::with_capacity(slots.len());
+        let t0 = Instant::now();
+        for slot in slots.iter_mut() {
+            match slot {
+                None => results.push(None),
+                Some((cache, tok)) => {
+                    model.decode_step_into(*tok, cache, &mut scratch);
+                    let tq = Instant::now();
+                    let before = cache.qlen;
+                    cache.append(&scratch.knew, &scratch.vnew, &scratch.qabs)?;
+                    if cache.qlen != before {
+                        self.timers.quantize_events += 1;
+                        self.timers.quantize_ns += tq.elapsed().as_nanos() as u64;
+                    }
+                    results.push(Some(scratch.logits.clone()));
+                }
+            }
+        }
+        self.timers.decode_exec_ns += t0.elapsed().as_nanos() as u64;
+        self.timers.decode_steps += 1;
+        drop(model);
+        self.ref_scratch = Some(scratch);
+        Ok(results)
+    }
+
     /// The fallible middle of a pooled decode step: refill `pool` in place,
     /// account the assembly timers, and execute. The caller owns putting
     /// `pool` back into `arg_pool` whatever this returns.
@@ -569,9 +682,10 @@ impl Engine {
         let args: Vec<Arg> = pool.iter().map(|o| o.as_arg()).collect();
         self.timers.assemble_ns += t_asm.elapsed().as_nanos() as u64;
 
-        let exe = self.runtime.get(decode_name)?;
+        let runtime = self.runtime.as_ref().context("compiled decode without runtime")?;
+        let exe = runtime.get(decode_name)?;
         let t0 = Instant::now();
-        let out = exe.run_b(&self.runtime.client, &self.weight_bufs, &args)?;
+        let out = exe.run_b(&runtime.client, &self.weight_bufs, &args)?;
         self.timers.decode_exec_ns += t0.elapsed().as_nanos() as u64;
         self.timers.decode_steps += 1;
         Ok(out)
@@ -689,7 +803,11 @@ impl Engine {
         let cc = &self.meta.cache;
         let b = cc.decode_batch;
         let (hkv, dh) = (mc.n_kv_heads, mc.d_head);
-        let exe = self.runtime.get(decode_name)?;
+        let exe = self
+            .runtime
+            .as_ref()
+            .context("compiled decode without runtime")?
+            .get(decode_name)?;
         let n_params = self.weights.flat.len();
         let n_args = exe.manifest.len() - n_params;
         if pool.is_empty() {

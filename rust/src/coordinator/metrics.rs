@@ -26,6 +26,14 @@ pub const COMPLETED_RING_DEFAULT: usize = 4096;
 /// (Algorithm R, deterministic seed).
 const RESERVOIR_SAMPLES: usize = 512;
 
+/// Distinct tenants tracked with their own percentile reservoirs before
+/// further tenants fold into one shared overflow bucket — bounds per-tenant
+/// SLO memory no matter how many tenant ids traffic presents.
+pub const TENANT_MAX: usize = 16;
+
+/// Tenant key of the overflow bucket (never a real tenant id).
+pub const TENANT_OVERFLOW: u32 = u32::MAX;
+
 /// Fixed-size uniform sample over an unbounded stream (Vitter's
 /// Algorithm R) — the streamed substitute for "sort every observation
 /// ever" percentile queries.
@@ -68,6 +76,34 @@ impl Reservoir {
     }
 }
 
+/// Per-tenant SLO aggregates: streamed TTFT/latency/queue-wait reservoirs
+/// plus served/unserved counts. At most [`TENANT_MAX`] tenants get their
+/// own entry; the rest share the [`TENANT_OVERFLOW`] bucket.
+pub struct TenantStat {
+    pub tenant: u32,
+    /// Sessions that produced tokens (counted in the reservoirs).
+    pub completed: u64,
+    /// Sessions retired without a first token (rejected / cancelled while
+    /// queued) — the fairness denominator the reservoirs exclude.
+    pub unserved: u64,
+    pub ttft: Reservoir,
+    pub latency: Reservoir,
+    pub queue_wait: Reservoir,
+}
+
+impl TenantStat {
+    fn new(tenant: u32) -> TenantStat {
+        TenantStat {
+            tenant,
+            completed: 0,
+            unserved: 0,
+            ttft: Reservoir::new(RESERVOIR_SAMPLES),
+            latency: Reservoir::new(RESERVOIR_SAMPLES),
+            queue_wait: Reservoir::new(RESERVOIR_SAMPLES),
+        }
+    }
+}
+
 /// Bounded completion log: a fixed-capacity ring of the most recent
 /// [`Completed`] records plus streamed aggregates over everything ever
 /// pushed. Records are addressed by a monotonically increasing sequence
@@ -88,6 +124,9 @@ pub struct CompletedLog {
     ttft: Reservoir,
     latency: Reservoir,
     queue_wait: Reservoir,
+    /// Per-tenant reservoirs, first-seen order; entry [`TENANT_MAX`]+ fold
+    /// into the [`TENANT_OVERFLOW`] bucket.
+    by_tenant: Vec<TenantStat>,
 }
 
 impl Default for CompletedLog {
@@ -110,7 +149,28 @@ impl CompletedLog {
             ttft: Reservoir::new(RESERVOIR_SAMPLES),
             latency: Reservoir::new(RESERVOIR_SAMPLES),
             queue_wait: Reservoir::new(RESERVOIR_SAMPLES),
+            by_tenant: Vec::new(),
         }
+    }
+
+    /// The tenant's stat entry, created on first sight; tenants beyond
+    /// [`TENANT_MAX`] share the overflow bucket.
+    fn tenant_entry(&mut self, tenant: u32) -> &mut TenantStat {
+        let key = match self.by_tenant.iter().position(|t| t.tenant == tenant) {
+            Some(i) => i,
+            None if self.by_tenant.len() < TENANT_MAX => {
+                self.by_tenant.push(TenantStat::new(tenant));
+                self.by_tenant.len() - 1
+            }
+            None => match self.by_tenant.iter().position(|t| t.tenant == TENANT_OVERFLOW) {
+                Some(i) => i,
+                None => {
+                    self.by_tenant.push(TenantStat::new(TENANT_OVERFLOW));
+                    self.by_tenant.len() - 1
+                }
+            },
+        };
+        &mut self.by_tenant[key]
     }
 
     /// Record a completion: fold it into the streamed aggregates, retain
@@ -131,6 +191,13 @@ impl CompletedLog {
                 Some((_, n)) => *n += 1,
                 None => self.by_method.push((c.method.clone(), 1)),
             }
+            let ts = self.tenant_entry(c.tenant);
+            ts.completed += 1;
+            ts.ttft.push(t);
+            ts.latency.push(c.total_ms);
+            ts.queue_wait.push(c.queue_ms);
+        } else {
+            self.tenant_entry(c.tenant).unserved += 1;
         }
         if self.buf.len() == self.cap {
             self.buf.pop_front();
@@ -194,6 +261,26 @@ impl CompletedLog {
     pub fn by_method(&self) -> Vec<(String, usize)> {
         self.by_method.iter().map(|(m, n)| (m.clone(), *n as usize)).collect()
     }
+
+    /// Per-tenant SLO stats, first-seen order (overflow bucket last if it
+    /// ever engaged).
+    pub fn by_tenant(&self) -> &[TenantStat] {
+        &self.by_tenant
+    }
+
+    /// Arbitrary-percentile access to the streamed global reservoirs
+    /// (served sessions only) — the traffic harness reads p99s here.
+    pub fn ttft_percentile(&self, p: f64) -> f64 {
+        self.ttft.percentile(p)
+    }
+
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        self.latency.percentile(p)
+    }
+
+    pub fn queue_wait_percentile(&self, p: f64) -> f64 {
+        self.queue_wait.percentile(p)
+    }
 }
 
 /// `for c in &metrics.completed` iterates the retained records, oldest
@@ -228,6 +315,13 @@ pub struct Metrics {
     /// Admission attempts deferred because the memory budget was saturated
     /// (the request stays queued and retries next tick).
     pub admission_stalls: u64,
+    /// Admissions the precision policy degraded below its top ladder rung
+    /// because the pool could not cover the preferred variant's pages.
+    pub policy_degradations: u64,
+    /// Park events per tenant id (fairness: who absorbs pool pressure).
+    pub tenant_parks: Vec<(u32, u64)>,
+    /// Deadlock preemptions per tenant id (who gets force-finished).
+    pub tenant_preemptions: Vec<(u32, u64)>,
     // --- paged KV pool gauges (sampled from KvPool each tick) ------------
     /// Pages currently leased across all live requests.
     pub pool_pages_leased: usize,
@@ -355,6 +449,21 @@ impl Metrics {
         )
     }
 
+    /// Per-tenant SLO stats (streamed; see [`CompletedLog::by_tenant`]).
+    pub fn tenants(&self) -> &[TenantStat] {
+        self.completed.by_tenant()
+    }
+
+    /// Count a park event against `tenant` (fairness accounting).
+    pub fn note_tenant_park(&mut self, tenant: u32) {
+        bump(&mut self.tenant_parks, tenant);
+    }
+
+    /// Count a deadlock preemption against `tenant`.
+    pub fn note_tenant_preempt(&mut self, tenant: u32) {
+        bump(&mut self.tenant_preemptions, tenant);
+    }
+
     /// Record the current pool counters (called once per scheduling tick).
     pub fn observe_pool(&mut self, stats: &crate::kvcache::pool::PoolStats) {
         self.pool_pages_leased = stats.leased;
@@ -380,7 +489,7 @@ impl Metrics {
         let (ttft50, ttft95) = self.ttft_ms();
         let (lat50, lat95) = self.latency_ms();
         let (qw50, qw95) = self.queue_wait_ms();
-        format!(
+        let mut out = format!(
             "requests={} gen_tokens={} wall={:.2}s throughput={:.1} tok/s \
              occupancy={:.2} max_concurrent={} peak_kv_mem={:.2} MB \
              ttft p50/p95={:.0}/{:.0} ms latency p50/p95={:.0}/{:.0} ms \
@@ -418,8 +527,46 @@ impl Metrics {
             self.prefix_pages_pinned,
             self.prefix_bytes_deduped as f64 / 1e6,
             self.prefix_evictions,
-        )
+        );
+        if self.policy_degradations > 0 {
+            out.push_str(&format!(" policy_degradations={}", self.policy_degradations));
+        }
+        for t in self.tenants() {
+            let name = if t.tenant == TENANT_OVERFLOW {
+                "overflow".to_string()
+            } else {
+                t.tenant.to_string()
+            };
+            let parks = count_for(&self.tenant_parks, t.tenant);
+            let preempts = count_for(&self.tenant_preemptions, t.tenant);
+            out.push_str(&format!(
+                "\n  tenant {name}: served={} unserved={} \
+                 ttft p50/p99={:.0}/{:.0} ms latency p50/p99={:.0}/{:.0} ms \
+                 queue p50/p99={:.0}/{:.0} ms parks={parks} preempt={preempts}",
+                t.completed,
+                t.unserved,
+                t.ttft.percentile(50.0),
+                t.ttft.percentile(99.0),
+                t.latency.percentile(50.0),
+                t.latency.percentile(99.0),
+                t.queue_wait.percentile(50.0),
+                t.queue_wait.percentile(99.0),
+            ));
+        }
+        out
     }
+}
+
+fn bump(counts: &mut Vec<(u32, u64)>, tenant: u32) {
+    match counts.iter_mut().find(|(t, _)| *t == tenant) {
+        Some((_, n)) => *n += 1,
+        None => counts.push((tenant, 1)),
+    }
+}
+
+/// The count recorded for `tenant` in a `(tenant, count)` list (0 if none).
+pub fn count_for(counts: &[(u32, u64)], tenant: u32) -> u64 {
+    counts.iter().find(|(t, _)| *t == tenant).map_or(0, |(_, n)| *n)
 }
 
 /// Table 7-style breakdown from engine timers: share of per-step wall time
@@ -484,6 +631,7 @@ mod tests {
             tokens: vec![1; n],
             reason: FinishReason::Eos,
             method: "bf16".into(),
+            tenant: 0,
             ttft_ms: Some(5.0 * n as f64),
             queue_ms: 1.0 * n as f64,
             total_ms: 20.0 * n as f64,
@@ -519,6 +667,7 @@ mod tests {
             tokens: vec![],
             reason: FinishReason::Cancelled,
             method: "-".into(),
+            tenant: 0,
             ttft_ms: None,
             queue_ms: 0.0,
             total_ms: 0.0,
@@ -570,6 +719,70 @@ mod tests {
         assert_eq!(r.seen(), 10_000);
         // sample stays bounded and within the observed range
         assert!(r.percentile(0.0) >= 0.0 && r.percentile(100.0) < 10_000.0);
+    }
+
+    #[test]
+    fn tenant_reservoirs_keyed_and_capped() {
+        let mut m = Metrics::default();
+        // two tenants with distinct latency profiles
+        for i in 0..4 {
+            m.completed.push(Completed { tenant: 1, ..completed(i + 1) });
+            m.completed.push(Completed {
+                tenant: 2,
+                ttft_ms: Some(100.0),
+                total_ms: 400.0,
+                ..completed(i + 1)
+            });
+        }
+        // tenant 2 also loses one request in queue
+        m.completed.push(Completed {
+            tenant: 2,
+            ttft_ms: None,
+            tokens: vec![],
+            reason: FinishReason::Rejected,
+            method: "-".into(),
+            ..completed(1)
+        });
+        let ts = m.tenants();
+        assert_eq!(ts.len(), 2);
+        let t1 = ts.iter().find(|t| t.tenant == 1).unwrap();
+        let t2 = ts.iter().find(|t| t.tenant == 2).unwrap();
+        assert_eq!((t1.completed, t1.unserved), (4, 0));
+        assert_eq!((t2.completed, t2.unserved), (4, 1));
+        // reservoirs are per-tenant: tenant 2's ttft is constant 100
+        assert!((t2.ttft.percentile(50.0) - 100.0).abs() < 1e-9);
+        assert!(t1.ttft.percentile(99.0) < 100.0);
+        // summary renders a line per tenant
+        let s = m.summary();
+        assert!(s.contains("tenant 1:"), "{s}");
+        assert!(s.contains("tenant 2:"), "{s}");
+    }
+
+    #[test]
+    fn tenant_overflow_bucket_bounds_memory() {
+        let mut m = Metrics::default();
+        for t in 0..(TENANT_MAX as u32 + 10) {
+            m.completed.push(Completed { tenant: t, ..completed(1) });
+        }
+        let ts = m.tenants();
+        // TENANT_MAX distinct entries + one overflow bucket
+        assert_eq!(ts.len(), TENANT_MAX + 1);
+        let ov = ts.iter().find(|t| t.tenant == TENANT_OVERFLOW).unwrap();
+        assert_eq!(ov.completed, 10);
+        // overflow keeps folding, never grows new entries
+        m.completed.push(Completed { tenant: 9999, ..completed(1) });
+        assert_eq!(m.tenants().len(), TENANT_MAX + 1);
+    }
+
+    #[test]
+    fn tenant_fairness_counters() {
+        let mut m = Metrics::default();
+        m.note_tenant_park(3);
+        m.note_tenant_park(3);
+        m.note_tenant_preempt(4);
+        assert_eq!(count_for(&m.tenant_parks, 3), 2);
+        assert_eq!(count_for(&m.tenant_parks, 4), 0);
+        assert_eq!(count_for(&m.tenant_preemptions, 4), 1);
     }
 
     #[test]

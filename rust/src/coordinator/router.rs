@@ -63,6 +63,8 @@ use crate::kvcache::accountant::MemoryAccountant;
 use crate::kvcache::pool::{KvPool, PrefixIndex};
 use crate::model::sampler;
 use crate::model::tokenizer;
+use crate::quant::methods::Method;
+use crate::quant::policy::{PrecisionPolicy, SpecCosts};
 use crate::runtime::registry::pick_bucket;
 use crate::util::rng::Pcg32;
 
@@ -89,6 +91,14 @@ pub struct ServerConfig {
     /// prompt windows). `None` derives a default of a quarter of the pool;
     /// `Some(0)` disables prefix sharing.
     pub prefix_cache_pages: Option<usize>,
+    /// Server-side precision policy for requests that do not pin a
+    /// [`MethodSpec`](crate::quant::methods::MethodSpec) themselves. `None`
+    /// keeps the pre-policy behavior (the engine's default method). With a
+    /// policy installed, admission walks the policy's candidate ladder:
+    /// under pool pressure a new request degrades to a cheaper variant
+    /// (counted in `Metrics::policy_degradations`) instead of stalling the
+    /// queue. Requests with an explicit `method` bypass the policy.
+    pub policy: Option<PrecisionPolicy>,
 }
 
 impl Default for ServerConfig {
@@ -101,6 +111,7 @@ impl Default for ServerConfig {
             prefill_chunks_per_tick: 256,
             completed_ring: crate::coordinator::metrics::COMPLETED_RING_DEFAULT,
             prefix_cache_pages: None,
+            policy: None,
         }
     }
 }
@@ -176,6 +187,11 @@ pub struct Server {
     prefill_chunks_per_tick: usize,
     /// Admission counter feeding `PendingPrefill::arrival`.
     prefill_seq: u64,
+    /// Server-side precision policy (see `ServerConfig::policy`).
+    policy: Option<PrecisionPolicy>,
+    /// Worst-case byte cost of every spec under this engine's Meta — the
+    /// policy's cost model, computed once at construction.
+    spec_costs: SpecCosts,
 }
 
 impl Server {
@@ -233,7 +249,23 @@ impl Server {
             prefills: Vec::new(),
             prefill_chunks_per_tick: cfg.prefill_chunks_per_tick.max(1),
             prefill_seq: 0,
+            policy: cfg.policy,
+            spec_costs: SpecCosts::from_meta(&engine.meta),
             engine,
+        }
+    }
+
+    /// The request's admission ladder: candidate methods most-preferred
+    /// first. An explicit per-request `MethodSpec` pins a single rung
+    /// (bypassing any policy); otherwise the server policy's candidates
+    /// apply; with no policy, the engine's default method is the only rung.
+    fn admission_ladder(&self, req: &Request) -> Vec<Method> {
+        if let Some(spec) = req.method {
+            return vec![spec.build()];
+        }
+        match &self.policy {
+            Some(p) => p.candidates(&self.spec_costs).into_iter().map(|s| s.build()).collect(),
+            None => vec![self.engine.resolve_method(None)],
         }
     }
 
@@ -272,24 +304,30 @@ impl Server {
         let now = Instant::now();
         self.submit_times.insert(id, now);
         self.events.queued(id);
-        let method = self.engine.resolve_method(req.method);
         let fits = pick_bucket(&self.engine.meta.cache.prefill_buckets, req.prompt.len()).is_ok();
-        let affordable = self
-            .engine
-            .worst_case_bytes_for(&method)
-            .map(|b| b <= self.scheduler.accountant.budget_bytes)
-            .unwrap_or(false); // Err = unknown decode variant
-        // prefix-index hits charge zero pages, so a prompt whose pages
-        // could never fit privately is still admissible while its entry is
-        // resident (admit() re-checks and retires it if the entry is shed)
-        let admissible = self
-            .engine
-            .prefill_pages_for_prompt(&req.prompt, &method)
-            .map(|n| self.scheduler.pages_admissible(n))
-            .unwrap_or(false);
-        if !fits || !affordable || !admissible {
+        // at least one ladder rung must be affordable (worst-case footprint
+        // inside the whole budget) and admissible. Prefix-index hits charge
+        // zero pages, so a prompt whose pages could never fit privately is
+        // still admissible while its entry is resident (admit() re-checks
+        // and retires it if the entry is shed). An empty ladder (e.g. a
+        // MemorySlo budget below every spec) rejects everything unpinned.
+        let serveable = fits
+            && self.admission_ladder(&req).iter().any(|method| {
+                let affordable = self
+                    .engine
+                    .worst_case_bytes_for(method)
+                    .map(|b| b <= self.scheduler.accountant.budget_bytes)
+                    .unwrap_or(false); // Err = unknown decode variant
+                affordable
+                    && self
+                        .engine
+                        .prefill_pages_for_prompt(&req.prompt, method)
+                        .map(|n| self.scheduler.pages_admissible(n))
+                        .unwrap_or(false)
+            });
+        if !serveable {
             self.metrics.rejected += 1;
-            self.finalize_unadmitted(id, req.prompt.len(), FinishReason::Rejected);
+            self.finalize_unadmitted(id, req.prompt.len(), req.tenant, FinishReason::Rejected);
             return Ok(id);
         }
         self.batcher.enqueue(req);
@@ -346,7 +384,7 @@ impl Server {
     pub fn cancel(&mut self, id: RequestId) -> bool {
         if let Some(req) = self.batcher.remove_waiting(id) {
             self.metrics.cancelled += 1;
-            self.finalize_unadmitted(id, req.prompt.len(), FinishReason::Cancelled);
+            self.finalize_unadmitted(id, req.prompt.len(), req.tenant, FinishReason::Cancelled);
             return true;
         }
         if let Some(pos) = self.prefills.iter().position(|p| p.req.id == id) {
@@ -354,7 +392,7 @@ impl Server {
             // page its cache leased
             let p = self.prefills.remove(pos);
             self.metrics.cancelled += 1;
-            self.finalize_unadmitted(id, p.req.prompt.len(), FinishReason::Cancelled);
+            self.finalize_unadmitted(id, p.req.prompt.len(), p.req.tenant, FinishReason::Cancelled);
             return true;
         }
         for slot in self.batcher.slots.iter_mut() {
@@ -456,35 +494,64 @@ impl Server {
             let Some(req) = self.batcher.waiting.pop_front() else {
                 break;
             };
-            let method = self.engine.resolve_method(req.method);
-            // variant validated at submit; a prefix-index hit charges zero
-            // pages (its shared pages were charged once, at registration)
-            let needed = self.engine.prefill_pages_for_prompt(&req.prompt, &method)?;
-            if needed == 0 {
-                // this admission rests on a prefix entry: make it the
-                // most-recently-used so the shed loop below cannot evict
-                // the very entry it is about to serve
-                self.engine.touch_prefix(&req.prompt, &method);
-            }
+            // variants validated at submit; a prefix-index hit charges zero
+            // pages (its shared pages were charged once, at registration).
+            // With a policy installed the ladder has multiple rungs: walk it
+            // most-preferred first and admit on the first rung whose pages
+            // the pool can cover — under pressure that is a cheaper variant
+            // instead of a stall.
+            let ladder = self.admission_ladder(&req);
             // pages already promised to in-flight prefills but not leased
             // yet (leasing is incremental) count as spoken for
             let outstanding: usize =
                 self.prefills.iter().map(PendingPrefill::outstanding_pages).sum();
-            // under pressure, retained prefix entries yield before a live
-            // admission stalls (their pages free if nobody else holds them)
-            while !self.scheduler.try_admit_pages(needed + outstanding)
-                && self.shed_prefix_entry()
-            {}
-            // shedding may have evicted the very entry this prompt hit —
-            // re-derive the claim so a now-missing entry charges full pages
-            let needed = self.engine.prefill_pages_for_prompt(&req.prompt, &method)?;
-            if !self.scheduler.try_admit_pages(needed + outstanding) {
-                if !self.scheduler.pages_admissible(needed) {
+            let mut chosen: Option<(Method, usize, usize)> = None;
+            for (rank, method) in ladder.iter().enumerate() {
+                let needed = self.engine.prefill_pages_for_prompt(&req.prompt, method)?;
+                if needed == 0 {
+                    // this admission rests on a prefix entry: make it the
+                    // most-recently-used so the shed loop below cannot
+                    // evict the very entry it is about to serve
+                    self.engine.touch_prefix(&req.prompt, method);
+                }
+                // under pressure, retained prefix entries yield before the
+                // preferred rung degrades (their pages free if nobody else
+                // holds them); only the top rung sheds — a lower rung
+                // exists precisely to avoid evicting retained state
+                if rank == 0 {
+                    while !self.scheduler.try_admit_pages(needed + outstanding)
+                        && self.shed_prefix_entry()
+                    {}
+                }
+                // shedding may have evicted the very entry this prompt hit
+                // — re-derive the claim so a now-missing entry charges full
+                // pages
+                let needed = self.engine.prefill_pages_for_prompt(&req.prompt, method)?;
+                if self.scheduler.try_admit_pages(needed + outstanding) {
+                    chosen = Some((method.clone(), needed, rank));
+                    break;
+                }
+            }
+            let Some((method, needed, rank)) = chosen else {
+                // not even the cheapest rung fits right now
+                let cheapest_fits = match ladder.last() {
+                    Some(method) => {
+                        let n = self.engine.prefill_pages_for_prompt(&req.prompt, method)?;
+                        self.scheduler.pages_admissible(n)
+                    }
+                    None => false,
+                };
+                if !cheapest_fits {
                     // admitted at submit against a prefix entry that has
                     // since been shed, and the pages can never fit
                     // privately — retire it rather than camp the queue head
                     self.metrics.rejected += 1;
-                    self.finalize_unadmitted(req.id, req.prompt.len(), FinishReason::Rejected);
+                    self.finalize_unadmitted(
+                        req.id,
+                        req.prompt.len(),
+                        req.tenant,
+                        FinishReason::Rejected,
+                    );
                     continue;
                 }
                 // pool below the watermark — requeue at the head (FIFO) and
@@ -492,6 +559,9 @@ impl Server {
                 self.metrics.admission_stalls += 1;
                 self.batcher.waiting.push_front(req);
                 break;
+            };
+            if rank > 0 {
+                self.metrics.policy_degradations += 1;
             }
             // the fallible admission path: if it errors (e.g. a decode
             // artifact file missing for this method), retire just this
@@ -516,7 +586,12 @@ impl Server {
                 Err(e) => {
                     self.metrics.rejected += 1;
                     eprintln!("mixkvq: admission of request {} failed: {e:#}", req.id);
-                    self.finalize_unadmitted(req.id, req.prompt.len(), FinishReason::Rejected);
+                    self.finalize_unadmitted(
+                        req.id,
+                        req.prompt.len(),
+                        req.tenant,
+                        FinishReason::Rejected,
+                    );
                 }
             }
         }
@@ -568,7 +643,12 @@ impl Server {
                     let p = self.prefills.remove(i);
                     self.metrics.rejected += 1;
                     eprintln!("mixkvq: prefill of request {} failed: {e:#}", p.req.id);
-                    self.finalize_unadmitted(p.req.id, p.req.prompt.len(), FinishReason::Rejected);
+                    self.finalize_unadmitted(
+                        p.req.id,
+                        p.req.prompt.len(),
+                        p.req.tenant,
+                        FinishReason::Rejected,
+                    );
                 }
                 Ok(true) => {
                     let p = self.prefills.remove(i);
@@ -669,6 +749,7 @@ impl Server {
                 if !sess.parked {
                     sess.parked = true;
                     self.metrics.pool_parks += 1;
+                    self.metrics.note_tenant_park(sess.request.tenant);
                 }
                 parked[i] = true;
             }
@@ -689,7 +770,9 @@ impl Server {
             if let Some(i) = victim {
                 let sess = self.batcher.slots[i].as_mut().unwrap();
                 sess.finish(FinishReason::CacheFull);
+                let tenant = sess.request.tenant;
                 self.metrics.pool_preemptions += 1;
+                self.metrics.note_tenant_preempt(tenant);
             }
         }
         let groups = self.batcher.variant_groups();
@@ -763,7 +846,13 @@ impl Server {
 
     /// Terminal record for a request that never reached a slot (rejected at
     /// submit or cancelled while queued).
-    fn finalize_unadmitted(&mut self, id: RequestId, prompt_len: usize, reason: FinishReason) {
+    fn finalize_unadmitted(
+        &mut self,
+        id: RequestId,
+        prompt_len: usize,
+        tenant: u32,
+        reason: FinishReason,
+    ) {
         let t_submit = self.submit_times.remove(&id).unwrap_or_else(Instant::now);
         let waited = t_submit.elapsed().as_secs_f64() * 1e3;
         let c = Completed {
@@ -772,6 +861,7 @@ impl Server {
             tokens: Vec::new(),
             reason,
             method: "-".to_string(),
+            tenant,
             ttft_ms: None,
             queue_ms: waited,
             total_ms: waited,
@@ -790,6 +880,7 @@ fn make_completed(sess: &Session) -> Completed {
         tokens: sess.generated.clone(),
         reason: sess.finish_reason().unwrap_or(FinishReason::MaxTokens),
         method: sess.cache.method.name.clone(),
+        tenant: sess.request.tenant,
         ttft_ms: sess.t_first_token.map(ms),
         queue_ms: ms(sess.t_admitted),
         total_ms: sess.t_finish.map(ms).unwrap_or(0.0),

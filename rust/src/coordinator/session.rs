@@ -20,7 +20,12 @@ pub struct Request {
     /// method; `Some(spec)` routes this request onto that method's decode
     /// variant — two tenants with different precision policies share one
     /// server (the batcher groups live slots into per-variant sub-batches).
+    /// Pinning a method here bypasses any server-side `PrecisionPolicy`.
     pub method: Option<MethodSpec>,
+    /// Tenant id for multi-tenant SLO accounting (per-tenant percentile
+    /// reservoirs, park/preempt fairness counters). Single-tenant callers
+    /// pass 0.
+    pub tenant: u32,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -123,6 +128,8 @@ pub struct Completed {
     /// Resolved method name this request was served under ("-" when it was
     /// never admitted: rejected or cancelled while queued).
     pub method: String,
+    /// Tenant id carried through from the request (SLO accounting).
+    pub tenant: u32,
     /// Submit → first token. `None` when the request never produced a token
     /// (rejected / cancelled in queue) — such records are excluded from the
     /// TTFT percentiles instead of dragging them toward zero.
@@ -156,6 +163,7 @@ mod tests {
             max_new_tokens: max_new,
             sampling: Sampling::Greedy,
             method: None,
+            tenant: 0,
         };
         Session::new(req, cache, 42, Instant::now())
     }

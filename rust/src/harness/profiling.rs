@@ -1,0 +1,183 @@
+//! Offline sensitivity profiling — the measurement half of the adaptive
+//! precision policy (`quant::policy`).
+//!
+//! KVTuner-style one-layer-at-a-time sweep: for each [`MethodSpec`] and each
+//! layer `l`, run teacher-forced perplexity on a seeded calibration corpus
+//! (`harness::perplexity::corpus`) through [`RefDriver`] with every layer
+//! pinned at bf16 *except* `l`, which takes the spec's tier layout for that
+//! layer. The mean-NLL delta vs the all-bf16 baseline is that (spec, layer)
+//! sensitivity; summing over layers predicts the full-spec error, and
+//! [`SensitivityProfile::predicted_bound`] adds compounding slack to turn
+//! the prediction into a quotable bound.
+//!
+//! The sweep is O(|specs| × n_layers) perplexity evaluations, so it runs
+//! once per model via `mixkvq profile` and is cached as a JSON artifact
+//! (default `profile.json`) that `PrecisionPolicy::LayerSensitivity` loads
+//! at serving time.
+
+use anyhow::{bail, Result};
+
+use crate::harness::perplexity::corpus;
+use crate::harness::refdriver::RefDriver;
+use crate::kvcache::accountant::MemoryAccountant;
+use crate::model::config::Meta;
+use crate::model::weights::Weights;
+use crate::quant::methods::{Method, MethodSpec};
+use crate::quant::policy::{ProfileEntry, SensitivityProfile};
+use crate::quant::window::TierSpec;
+
+/// Calibration workload shape. Defaults are sized so the sweep finishes in
+/// seconds on the build-default model while still engaging quantization
+/// (`seq_len` > `r_limit`, so the window actually flushes past the
+/// full-precision residual).
+#[derive(Clone, Debug)]
+pub struct ProfileConfig {
+    /// Calibration sequences.
+    pub seqs: usize,
+    /// Tokens per sequence.
+    pub seq_len: usize,
+    /// Corpus seed (recorded in the artifact for reproducibility).
+    pub seed: u64,
+    /// Residual limit for the reference driver — kept small so most of the
+    /// context lives in the quantized window.
+    pub r_limit: usize,
+}
+
+impl Default for ProfileConfig {
+    fn default() -> Self {
+        ProfileConfig { seqs: 4, seq_len: 96, seed: 1234, r_limit: 32 }
+    }
+}
+
+fn bf16_layer(d_head: usize) -> TierSpec {
+    TierSpec { n16: d_head, n4: 0, n2: 0, v_bits: 16 }
+}
+
+/// Mean NLL (nats/token) of `specs`' layer layout under `method`.
+fn mean_nll(
+    meta: &Meta,
+    weights: &Weights,
+    layers: Vec<TierSpec>,
+    method: Method,
+    cfg: &ProfileConfig,
+    seqs: &[Vec<i32>],
+) -> Result<f64> {
+    let driver = RefDriver::new(
+        meta.model.clone(),
+        meta.cache.clone(),
+        weights,
+        layers,
+        method,
+        cfg.r_limit,
+    );
+    Ok(driver.perplexity(seqs)?.ln())
+}
+
+/// Run the sensitivity sweep for `specs` and assemble the profile.
+/// Unknown-variant specs are an error (the caller picked them); `Bf16` is
+/// accepted and short-circuits to zero error without re-running the sweep.
+pub fn profile(
+    meta: &Meta,
+    weights: &Weights,
+    specs: &[MethodSpec],
+    cfg: &ProfileConfig,
+) -> Result<SensitivityProfile> {
+    if cfg.seq_len <= cfg.r_limit {
+        bail!(
+            "seq_len {} must exceed r_limit {} or quantization never engages",
+            cfg.seq_len,
+            cfg.r_limit
+        );
+    }
+    let nl = meta.model.n_layers;
+    let bf16 = bf16_layer(meta.model.d_head);
+    let seqs = corpus(cfg.seqs, cfg.seq_len, cfg.seed);
+    let baseline_nll = mean_nll(meta, weights, vec![bf16; nl], Method::bf16(), cfg, &seqs)?;
+    let mut entries = Vec::with_capacity(specs.len());
+    for &spec in specs {
+        let variant = meta.variant(spec.variant())?.clone();
+        let worst_case_bytes =
+            MemoryAccountant::worst_case_request_bytes(&meta.model, &meta.cache, &variant.layers);
+        let layer_err = if spec == MethodSpec::Bf16 {
+            vec![0.0; nl]
+        } else {
+            let method = spec.build();
+            let mut errs = Vec::with_capacity(nl);
+            for l in 0..nl {
+                let mut layers = vec![bf16; nl];
+                layers[l] = variant.layers[l];
+                let nll = mean_nll(meta, weights, layers, method.clone(), cfg, &seqs)?;
+                errs.push((nll - baseline_nll).max(0.0));
+            }
+            errs
+        };
+        entries.push(ProfileEntry { spec, layer_err, worst_case_bytes });
+    }
+    Ok(SensitivityProfile {
+        baseline_nll,
+        n_layers: nl,
+        calib_seed: cfg.seed,
+        entries,
+    })
+}
+
+/// Measured full-spec error (mean-NLL delta vs bf16, all layers quantized
+/// at once) on the *same* calibration corpus the profile was built from —
+/// the quantity `predicted_bound` must cover. Used by the E2E policy test
+/// and by `mixkvq profile --check`.
+pub fn measured_error(
+    meta: &Meta,
+    weights: &Weights,
+    spec: MethodSpec,
+    profile: &SensitivityProfile,
+    cfg: &ProfileConfig,
+) -> Result<f64> {
+    let variant = meta.variant(spec.variant())?.clone();
+    let seqs = corpus(cfg.seqs, cfg.seq_len, profile.calib_seed);
+    let nll = mean_nll(meta, weights, variant.layers, spec.build(), cfg, &seqs)?;
+    Ok((nll - profile.baseline_nll).max(0.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+
+    fn small_meta() -> Meta {
+        let mut meta = Meta::default_build();
+        meta.model = ModelConfig { n_layers: 2, ..meta.model };
+        for v in &mut meta.variants {
+            v.layers.truncate(2);
+            while v.layers.len() < 2 {
+                let last = *v.layers.last().unwrap();
+                v.layers.push(last);
+            }
+        }
+        meta
+    }
+
+    #[test]
+    fn profile_shapes_and_bf16_is_zero() {
+        let meta = small_meta();
+        let w = Weights::random(&meta.model, 11);
+        let cfg = ProfileConfig { seqs: 2, seq_len: 64, ..ProfileConfig::default() };
+        let specs = [MethodSpec::Bf16, MethodSpec::Kivi { bits: crate::quant::methods::KiviBits::Kv2 }];
+        let p = profile(&meta, &w, &specs, &cfg).unwrap();
+        assert_eq!(p.n_layers, 2);
+        assert_eq!(p.entries.len(), 2);
+        assert!(p.baseline_nll.is_finite());
+        assert_eq!(p.predicted_error(MethodSpec::Bf16), Some(0.0));
+        let kv2 = p.predicted_error(specs[1]).unwrap();
+        assert!(kv2.is_finite() && kv2 >= 0.0);
+        // per-layer deltas are individually non-negative and finite
+        assert!(p.entries[1].layer_err.iter().all(|e| e.is_finite() && *e >= 0.0));
+    }
+
+    #[test]
+    fn seq_len_must_engage_quantization() {
+        let meta = small_meta();
+        let w = Weights::random(&meta.model, 11);
+        let cfg = ProfileConfig { seq_len: 16, r_limit: 32, ..ProfileConfig::default() };
+        assert!(profile(&meta, &w, &[MethodSpec::Bf16], &cfg).is_err());
+    }
+}

@@ -1,0 +1,552 @@
+//! Production traffic harness — seeded, deterministic load generation
+//! driven through the real serving stack (`Server::submit/tick/poll`).
+//!
+//! Three arrival families cover the shapes production fleets see:
+//! Poisson-with-bursts (steady arrivals punctuated by spikes), diurnal
+//! ramps (smooth load swell/ebb over a period), and closed-loop sessions
+//! (a fixed user population that thinks, submits, waits, resubmits).
+//! Prompt mix, tenant assignment, and per-request method pins are drawn
+//! from decorrelated named RNG streams ([`crate::util::rng::stream`]), so
+//! one seed fixes the entire workload and two runs with the same seed must
+//! produce byte-identical schedules AND byte-identical serving outcomes —
+//! the harness folds every finished request's id, finish reason, and token
+//! stream into an FNV-1a fingerprint (never wall-clock values) that the
+//! bench gate compares across a same-seed double run.
+//!
+//! Per-tenant SLO tracking (p50/p99 TTFT/latency, queue wait, park/evict
+//! fairness) comes straight from [`Metrics`]' tenant reservoirs; the
+//! report serializes to `BENCH_traffic.json` via [`report_json`].
+
+use anyhow::Result;
+
+use crate::coordinator::engine::Engine;
+use crate::coordinator::events::{Event, RequestStatus};
+use crate::coordinator::metrics::count_for;
+use crate::coordinator::router::{Server, ServerConfig};
+use crate::coordinator::session::{FinishReason, Request};
+use crate::model::sampler::Sampling;
+use crate::quant::methods::MethodSpec;
+use crate::quant::policy::PrecisionPolicy;
+use crate::util::json::{num, obj, s, Json};
+use crate::util::rng::{stream, Pcg32};
+
+/// Arrival process shaping when sessions hit `Server::submit`.
+#[derive(Clone, Debug)]
+pub enum Arrival {
+    /// Poisson arrivals at `rate` per tick, with a burst window of
+    /// `burst_len` ticks at `burst_rate` every `burst_every` ticks.
+    PoissonBurst { rate: f64, burst_every: usize, burst_len: usize, burst_rate: f64 },
+    /// Smooth sinusoidal ramp between `lo` and `hi` arrivals/tick over
+    /// `period` ticks — the diurnal load curve.
+    DiurnalRamp { lo: f64, hi: f64, period: usize },
+    /// Closed loop: `concurrency` users each submit, wait for their
+    /// session to finish, think for `think_ticks`, and submit again until
+    /// the session budget is spent. In-flight never exceeds `concurrency`.
+    ClosedLoop { concurrency: usize, think_ticks: usize },
+}
+
+#[derive(Clone, Debug)]
+pub struct TrafficConfig {
+    pub seed: u64,
+    /// Total sessions to run through the server.
+    pub sessions: usize,
+    /// Tenant population; requests are assigned by draw from the seeded
+    /// "tenants" stream. 0 or 1 means single-tenant.
+    pub tenants: u32,
+    pub arrival: Arrival,
+    /// Upper bound on per-session decode length (each session draws its
+    /// own `max_new_tokens` in `2..=max_new`).
+    pub max_new: usize,
+    /// Distinct prompts in the pool — a small pool exercises cross-request
+    /// prefix sharing the way production template traffic does.
+    pub prompt_pool: usize,
+    /// Prompt length range `[prompt_lo, prompt_hi)`.
+    pub prompt_lo: usize,
+    pub prompt_hi: usize,
+    /// Per-request method pins drawn uniformly from this list; empty means
+    /// every request is unpinned (the server's policy decides).
+    pub method_mix: Vec<MethodSpec>,
+    pub memory_budget_bytes: usize,
+    /// Server-side precision policy under test (`None` = engine default).
+    pub policy: Option<PrecisionPolicy>,
+    pub max_prefills_per_cycle: usize,
+    /// Hard tick ceiling — a stuck run terminates with whatever completed.
+    pub max_ticks: usize,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> Self {
+        TrafficConfig {
+            seed: 7,
+            sessions: 200,
+            tenants: 4,
+            arrival: Arrival::PoissonBurst {
+                rate: 8.0,
+                burst_every: 40,
+                burst_len: 8,
+                burst_rate: 64.0,
+            },
+            max_new: 6,
+            prompt_pool: 8,
+            prompt_lo: 32,
+            prompt_hi: 96,
+            method_mix: Vec::new(),
+            memory_budget_bytes: 64 << 20,
+            policy: None,
+            max_prefills_per_cycle: 8,
+            max_ticks: 100_000,
+        }
+    }
+}
+
+/// Knuth's product-of-uniforms Poisson sampler — exact for the small
+/// per-tick rates the harness uses, and deterministic given the stream.
+fn poisson(rng: &mut Pcg32, lambda: f64) -> usize {
+    let l = (-lambda).exp();
+    let mut k = 0usize;
+    let mut p = 1.0f64;
+    loop {
+        p *= rng.f32() as f64;
+        if p <= l || k > 4096 {
+            return k;
+        }
+        k += 1;
+    }
+}
+
+fn rate_at(arrival: &Arrival, tick: usize) -> f64 {
+    match *arrival {
+        Arrival::PoissonBurst { rate, burst_every, burst_len, burst_rate } => {
+            if burst_every > 0 && tick % burst_every < burst_len {
+                burst_rate
+            } else {
+                rate
+            }
+        }
+        Arrival::DiurnalRamp { lo, hi, period } => {
+            let phase = tick as f64 / period.max(1) as f64;
+            lo + (hi - lo) * 0.5 * (1.0 - (2.0 * std::f64::consts::PI * phase).cos())
+        }
+        Arrival::ClosedLoop { .. } => 0.0,
+    }
+}
+
+/// Open-loop arrival schedule: the submit tick of each session, ascending.
+/// Empty for closed-loop traffic (arrivals are event-driven there). Same
+/// seed ⇒ identical schedule.
+pub fn build_schedule(cfg: &TrafficConfig) -> Vec<usize> {
+    if matches!(cfg.arrival, Arrival::ClosedLoop { .. }) {
+        return Vec::new();
+    }
+    let mut rng = stream(cfg.seed, "arrivals");
+    let mut out = Vec::with_capacity(cfg.sessions);
+    let mut tick = 0usize;
+    while out.len() < cfg.sessions {
+        let lam = rate_at(&cfg.arrival, tick).max(0.01);
+        let k = poisson(&mut rng, lam).min(cfg.sessions - out.len());
+        for _ in 0..k {
+            out.push(tick);
+        }
+        tick += 1;
+        if tick >= cfg.max_ticks {
+            out.resize(cfg.sessions, tick);
+            break;
+        }
+    }
+    out
+}
+
+/// The full request list, ids `0..sessions`, drawn from decorrelated named
+/// streams so prompt mix / tenant mix / method mix are individually stable
+/// under config changes to the others.
+pub fn gen_requests(cfg: &TrafficConfig) -> Vec<Request> {
+    let pool_n = cfg.prompt_pool.max(1);
+    let mut prng = stream(cfg.seed, "prompts");
+    let hi = cfg.prompt_hi.max(cfg.prompt_lo + 1);
+    let pool: Vec<Vec<i32>> = (0..pool_n)
+        .map(|_| {
+            let ctx = prng.range(cfg.prompt_lo as u32, hi as u32) as usize;
+            crate::harness::workloads::gen_passkey(&mut prng, ctx).prompt
+        })
+        .collect();
+    let mut pick = stream(cfg.seed, "mix");
+    let mut trng = stream(cfg.seed, "tenants");
+    let mut mrng = stream(cfg.seed, "methods");
+    let n_tenants = cfg.tenants.max(1);
+    (0..cfg.sessions)
+        .map(|i| Request {
+            id: i as u64,
+            prompt: pool[pick.below(pool_n as u32) as usize].clone(),
+            max_new_tokens: 2 + pick.below(cfg.max_new.max(3) as u32 - 1) as usize,
+            sampling: Sampling::Greedy,
+            method: if cfg.method_mix.is_empty() {
+                None
+            } else {
+                Some(cfg.method_mix[mrng.below(cfg.method_mix.len() as u32) as usize])
+            },
+            tenant: trng.below(n_tenants),
+        })
+        .collect()
+}
+
+/// FNV-1a over u64 words — the deterministic outcome fingerprint.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn fold(&mut self, x: u64) {
+        for b in x.to_le_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+}
+
+fn reason_code(r: FinishReason) -> u64 {
+    match r {
+        FinishReason::Eos => 1,
+        FinishReason::MaxTokens => 2,
+        FinishReason::CacheFull => 3,
+        FinishReason::Cancelled => 4,
+        FinishReason::Rejected => 5,
+    }
+}
+
+/// Per-tenant slice of the report — reservoir percentiles plus the
+/// fairness counters (who absorbed parks/preemptions).
+#[derive(Clone, Debug)]
+pub struct TenantSummary {
+    pub tenant: u32,
+    pub served: u64,
+    pub unserved: u64,
+    pub p50_ttft_ms: f64,
+    pub p99_ttft_ms: f64,
+    pub p50_latency_ms: f64,
+    pub p99_latency_ms: f64,
+    pub p99_queue_ms: f64,
+    pub parks: u64,
+    pub preemptions: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct TrafficReport {
+    pub seed: u64,
+    pub sessions: usize,
+    /// Sessions that reached a terminal state (includes rejected).
+    pub completed: usize,
+    pub rejected: u64,
+    pub ticks: usize,
+    /// Peak submitted-but-not-finished sessions — the concurrency the run
+    /// actually sustained.
+    pub max_in_flight: usize,
+    /// Peak simultaneously *decoding* sessions (batch occupancy).
+    pub max_concurrent_decode: usize,
+    pub policy_degradations: u64,
+    pub p50_ttft_ms: f64,
+    pub p99_ttft_ms: f64,
+    pub p50_latency_ms: f64,
+    pub p99_latency_ms: f64,
+    pub tenants: Vec<TenantSummary>,
+    /// FNV-1a over (id, reason, token stream) of every finished session
+    /// plus the per-tenant served/unserved and fairness counters. Contains
+    /// no wall-clock material: same seed ⇒ same fingerprint, always.
+    pub fingerprint: u64,
+    /// Human-readable metrics summary (wall-clock figures live here only).
+    pub summary: String,
+}
+
+/// Drive `cfg.sessions` seeded sessions through a real `Server` built on
+/// `engine`, and report outcomes + per-tenant SLOs. Deterministic modulo
+/// wall-clock ms fields: the fingerprint covers everything else.
+pub fn run(engine: Engine, cfg: &TrafficConfig) -> Result<TrafficReport> {
+    let server_cfg = ServerConfig {
+        memory_budget_bytes: cfg.memory_budget_bytes,
+        max_prefills_per_cycle: cfg.max_prefills_per_cycle,
+        seed: cfg.seed,
+        policy: cfg.policy.clone(),
+        ..ServerConfig::default()
+    };
+    let mut server = Server::new(engine, server_cfg);
+    let reqs = gen_requests(cfg);
+    let schedule = build_schedule(cfg);
+    let (closed, concurrency, think_ticks) = match cfg.arrival {
+        Arrival::ClosedLoop { concurrency, think_ticks } => (true, concurrency.max(1), think_ticks),
+        _ => (false, 0, 0),
+    };
+
+    let mut next = 0usize; // next unsubmitted request index
+    let mut due: Vec<usize> = Vec::new(); // closed-loop resubmit ticks
+    let mut in_flight = 0usize;
+    let mut max_in_flight = 0usize;
+    let mut finished = 0usize;
+    let mut fp = Fnv::new();
+    let mut tick = 0usize;
+
+    loop {
+        // -- submissions due this tick --------------------------------
+        if closed {
+            if tick == 0 {
+                for _ in 0..concurrency.min(cfg.sessions) {
+                    server.submit(reqs[next].clone())?;
+                    next += 1;
+                    in_flight += 1;
+                }
+            }
+            let mut i = 0;
+            while i < due.len() {
+                if due[i] <= tick && next < cfg.sessions {
+                    due.swap_remove(i);
+                    server.submit(reqs[next].clone())?;
+                    next += 1;
+                    in_flight += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        } else {
+            while next < cfg.sessions && schedule[next] <= tick {
+                server.submit(reqs[next].clone())?;
+                next += 1;
+                in_flight += 1;
+            }
+        }
+        max_in_flight = max_in_flight.max(in_flight);
+
+        if next >= cfg.sessions && in_flight == 0 && !server.has_work() {
+            break;
+        }
+
+        server.tick()?;
+
+        // -- fold outcomes; feed the closed loop ----------------------
+        for e in server.drain_events() {
+            if let Event::Finished { id, reason, tokens } = e {
+                finished += 1;
+                in_flight = in_flight.saturating_sub(1);
+                fp.fold(id);
+                fp.fold(reason_code(reason));
+                fp.fold(tokens as u64);
+                if let RequestStatus::Finished { tokens: toks, .. } = server.poll(id) {
+                    for t in toks {
+                        fp.fold(t as u64);
+                    }
+                }
+                if closed && next + due.len() < cfg.sessions {
+                    due.push(tick + think_ticks.max(1));
+                }
+            }
+        }
+
+        tick += 1;
+        if tick >= cfg.max_ticks {
+            break;
+        }
+    }
+
+    // Tenant SLO counters are deterministic (no wall-clock input), so they
+    // join the fingerprint: same-seed runs must agree on who got served,
+    // who got parked, and who got preempted — not just on token streams.
+    let m = &server.metrics;
+    let mut tenants = Vec::new();
+    for t in m.tenants() {
+        fp.fold(t.tenant as u64);
+        fp.fold(t.completed);
+        fp.fold(t.unserved);
+        let parks = count_for(&m.tenant_parks, t.tenant);
+        let preemptions = count_for(&m.tenant_preemptions, t.tenant);
+        fp.fold(parks);
+        fp.fold(preemptions);
+        tenants.push(TenantSummary {
+            tenant: t.tenant,
+            served: t.completed,
+            unserved: t.unserved,
+            p50_ttft_ms: t.ttft.percentile(50.0),
+            p99_ttft_ms: t.ttft.percentile(99.0),
+            p50_latency_ms: t.latency.percentile(50.0),
+            p99_latency_ms: t.latency.percentile(99.0),
+            p99_queue_ms: t.queue_wait.percentile(99.0),
+            parks,
+            preemptions,
+        });
+    }
+    fp.fold(m.policy_degradations);
+
+    Ok(TrafficReport {
+        seed: cfg.seed,
+        sessions: cfg.sessions,
+        completed: finished,
+        rejected: m.rejected,
+        ticks: tick,
+        max_in_flight,
+        max_concurrent_decode: m.max_concurrent,
+        policy_degradations: m.policy_degradations,
+        p50_ttft_ms: m.completed.ttft_percentile(50.0),
+        p99_ttft_ms: m.completed.ttft_percentile(99.0),
+        p50_latency_ms: m.completed.latency_percentile(50.0),
+        p99_latency_ms: m.completed.latency_percentile(99.0),
+        tenants,
+        fingerprint: fp.0,
+        summary: m.summary(),
+    })
+}
+
+/// Same-seed agreement: fingerprints (which fold ids, reasons, token
+/// streams, and tenant counters) must match exactly.
+pub fn deterministic_pair(a: &TrafficReport, b: &TrafficReport) -> bool {
+    a.fingerprint == b.fingerprint && a.completed == b.completed && a.ticks == b.ticks
+}
+
+/// `BENCH_traffic.json` payload. `repeat` is the same-seed re-run used for
+/// the determinism bit; ms percentiles come from run `a` (wall-clock, so
+/// excluded from the fingerprint and from any equality check).
+pub fn report_json(a: &TrafficReport, repeat: &TrafficReport) -> Json {
+    let tenants: Vec<Json> = a
+        .tenants
+        .iter()
+        .map(|t| {
+            obj(vec![
+                ("tenant", num(t.tenant as f64)),
+                ("served", num(t.served as f64)),
+                ("unserved", num(t.unserved as f64)),
+                ("p50_ttft_ms", num(t.p50_ttft_ms)),
+                ("p99_ttft_ms", num(t.p99_ttft_ms)),
+                ("p50_latency_ms", num(t.p50_latency_ms)),
+                ("p99_latency_ms", num(t.p99_latency_ms)),
+                ("p99_queue_ms", num(t.p99_queue_ms)),
+                ("parks", num(t.parks as f64)),
+                ("preemptions", num(t.preemptions as f64)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("schema", s("traffic-v1")),
+        ("seed", num(a.seed as f64)),
+        ("sessions", num(a.sessions as f64)),
+        ("completed", num(a.completed as f64)),
+        ("rejected", num(a.rejected as f64)),
+        ("ticks", num(a.ticks as f64)),
+        ("max_in_flight", num(a.max_in_flight as f64)),
+        ("max_concurrent_decode", num(a.max_concurrent_decode as f64)),
+        ("policy_degradations", num(a.policy_degradations as f64)),
+        ("p50_ttft_ms", num(a.p50_ttft_ms)),
+        ("p99_ttft_ms", num(a.p99_ttft_ms)),
+        ("p50_latency_ms", num(a.p50_latency_ms)),
+        ("p99_latency_ms", num(a.p99_latency_ms)),
+        ("fingerprint", s(&format!("{:016x}", a.fingerprint))),
+        ("fingerprint_repeat", s(&format!("{:016x}", repeat.fingerprint))),
+        (
+            "deterministic",
+            Json::Bool(deterministic_pair(a, repeat)),
+        ),
+        ("tenants", Json::Arr(tenants)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::{Meta, ModelConfig};
+    use crate::quant::methods::Method;
+
+    fn small_meta() -> Meta {
+        let mut meta = Meta::default_build();
+        meta.model = ModelConfig { n_layers: 2, ..meta.model };
+        for v in &mut meta.variants {
+            v.layers.truncate(2);
+            while v.layers.len() < 2 {
+                let last = *v.layers.last().unwrap();
+                v.layers.push(last);
+            }
+        }
+        meta
+    }
+
+    fn small_cfg() -> TrafficConfig {
+        TrafficConfig {
+            sessions: 24,
+            tenants: 3,
+            arrival: Arrival::PoissonBurst {
+                rate: 4.0,
+                burst_every: 10,
+                burst_len: 2,
+                burst_rate: 12.0,
+            },
+            max_new: 3,
+            prompt_pool: 4,
+            prompt_lo: 24,
+            prompt_hi: 48,
+            ..TrafficConfig::default()
+        }
+    }
+
+    fn engine() -> Engine {
+        Engine::new_reference(small_meta(), 11, Method::bf16(), 32).unwrap()
+    }
+
+    #[test]
+    fn schedule_is_seeded_and_sorted() {
+        let cfg = small_cfg();
+        let a = build_schedule(&cfg);
+        let b = build_schedule(&cfg);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), cfg.sessions);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        let other = build_schedule(&TrafficConfig { seed: 8, ..cfg });
+        assert_ne!(a, other);
+    }
+
+    #[test]
+    fn requests_are_seeded_and_tenanted() {
+        let cfg = small_cfg();
+        let a = gen_requests(&cfg);
+        let b = gen_requests(&cfg);
+        assert_eq!(a.len(), cfg.sessions);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.tenant, y.tenant);
+            assert_eq!(x.max_new_tokens, y.max_new_tokens);
+        }
+        assert!(a.iter().all(|r| r.tenant < cfg.tenants));
+        assert!(a.iter().any(|r| r.tenant != a[0].tenant));
+    }
+
+    #[test]
+    fn poisson_mean_tracks_lambda() {
+        let mut rng = Pcg32::new(3, 4);
+        let n = 2000;
+        let total: usize = (0..n).map(|_| poisson(&mut rng, 3.0)).sum();
+        let mean = total as f64 / n as f64;
+        assert!((mean - 3.0).abs() < 0.3, "poisson mean {mean}");
+    }
+
+    #[test]
+    fn open_loop_run_completes_and_repeats() {
+        let cfg = small_cfg();
+        let a = run(engine(), &cfg).unwrap();
+        let b = run(engine(), &cfg).unwrap();
+        assert_eq!(a.completed, cfg.sessions);
+        assert_eq!(a.rejected, 0);
+        assert!(deterministic_pair(&a, &b), "same-seed runs diverged");
+        assert!(!a.tenants.is_empty());
+        let served: u64 = a.tenants.iter().map(|t| t.served).sum();
+        assert_eq!(served as usize, cfg.sessions);
+        let j = report_json(&a, &b);
+        assert_eq!(j.get("deterministic").unwrap(), &Json::Bool(true));
+        assert_eq!(j.get("schema").unwrap(), &Json::Str("traffic-v1".into()));
+    }
+
+    #[test]
+    fn closed_loop_bounds_concurrency() {
+        let cfg = TrafficConfig {
+            sessions: 12,
+            arrival: Arrival::ClosedLoop { concurrency: 4, think_ticks: 1 },
+            ..small_cfg()
+        };
+        let r = run(engine(), &cfg).unwrap();
+        assert_eq!(r.completed, cfg.sessions);
+        assert!(r.max_in_flight <= 4, "closed loop leaked: {}", r.max_in_flight);
+    }
+}

@@ -9,7 +9,7 @@ use crate::coordinator::session::Request;
 use crate::model::sampler::Sampling;
 use crate::model::tokenizer::*;
 use crate::quant::methods::MethodSpec;
-use crate::util::rng::Pcg32;
+use crate::util::rng::{stream, Pcg32};
 
 #[derive(Clone, Debug)]
 pub struct Task {
@@ -218,9 +218,29 @@ pub fn sharegpt_trace(rng: &mut Pcg32, n: usize, max_new: usize) -> Vec<Request>
                 max_new_tokens: out.max(task.answer.len() + 2),
                 sampling: Sampling::Greedy,
                 method: None,
+                tenant: 0,
             }
         })
         .collect()
+}
+
+/// [`sharegpt_trace`] from a root seed via the shared named-stream
+/// derivation ([`crate::util::rng::stream`]) — one `--seed` reproduces the
+/// whole trace regardless of what else drew from other streams.
+pub fn sharegpt_trace_seeded(seed: u64, n: usize, max_new: usize) -> Vec<Request> {
+    let mut rng = stream(seed, "sharegpt");
+    sharegpt_trace(&mut rng, n, max_new)
+}
+
+/// Assign tenant ids round-robin — the multi-tenant counterpart of
+/// [`assign_methods`] for traces built outside `harness::traffic`.
+pub fn assign_tenants(requests: &mut [Request], n_tenants: u32) {
+    if n_tenants == 0 {
+        return;
+    }
+    for (i, r) in requests.iter_mut().enumerate() {
+        r.tenant = i as u32 % n_tenants;
+    }
 }
 
 /// Assign per-request quantization policies round-robin — the multi-tenant
@@ -235,9 +255,11 @@ pub fn assign_methods(requests: &mut [Request], specs: &[MethodSpec]) {
     }
 }
 
-/// The per-benchmark suites of Table 3/4 (fixed sizes, seeded).
+/// The per-benchmark suites of Table 3/4 (fixed sizes, seeded). Each task
+/// family draws from its own named sub-stream of `seed`, so adding a
+/// family (or drawing more from one) never perturbs the others.
 pub fn suite(kind: TaskKind, n: usize, seed: u64, long: bool) -> Vec<Task> {
-    let mut rng = Pcg32::new(seed, kind as u64 + 1);
+    let mut rng = stream(seed, kind.name());
     (0..n)
         .map(|_| match kind {
             // sizes chosen so the quantized window (R=32 residual) holds a
@@ -346,5 +368,34 @@ mod tests {
         assert_eq!(s1[3].gold, s2[3].gold);
         let long = suite(TaskKind::Passkey, 2, 1, true);
         assert!(long[0].prompt.len() > 400);
+        // different families draw decorrelated streams of the same seed
+        let other = suite(TaskKind::Copy, 5, 42, false);
+        assert_ne!(s1[0].gold, other[0].gold);
+    }
+
+    #[test]
+    fn seeded_trace_reproduces_prompt_mix() {
+        // same root seed ⇒ identical prompts, lengths, and budgets
+        let a = sharegpt_trace_seeded(9, 16, 32);
+        let b = sharegpt_trace_seeded(9, 16, 32);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new_tokens, y.max_new_tokens);
+        }
+        let c = sharegpt_trace_seeded(10, 16, 32);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.prompt != y.prompt));
+    }
+
+    #[test]
+    fn assign_tenants_round_robins() {
+        let mut reqs = sharegpt_trace_seeded(3, 5, 8);
+        assign_tenants(&mut reqs, 2);
+        assert_eq!(
+            reqs.iter().map(|r| r.tenant).collect::<Vec<_>>(),
+            vec![0, 1, 0, 1, 0]
+        );
+        assign_tenants(&mut reqs[..1], 0); // no-op
+        assert_eq!(reqs[0].tenant, 0);
     }
 }

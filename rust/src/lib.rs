@@ -183,6 +183,41 @@
 //!   working-set shrink, or the paged overhead regress past the ROADMAP
 //!   bars.
 //!
+//! ## Adaptive precision policy + production traffic harness
+//!
+//! Who picks a request's [`quant::methods::MethodSpec`] when the caller
+//! doesn't? A server-side [`quant::policy::PrecisionPolicy`]:
+//!
+//! * **Offline sensitivity profiling** ([`harness::profiling`]): a
+//!   KVTuner-style one-layer-at-a-time sweep measures each spec's
+//!   per-layer mean-NLL delta vs all-bf16 on a seeded calibration corpus
+//!   through `RefDriver`, cached as a JSON artifact (`mixkvq profile`,
+//!   default `profile.json`). Summed per-layer deltas predict full-spec
+//!   error; [`quant::policy::SensitivityProfile::predicted_bound`] adds
+//!   compounding slack to make the prediction a quotable bound (gated in
+//!   tests/policy_traffic.rs).
+//! * **Runtime policy** ([`quant::policy::PrecisionPolicy`]): `Fixed`
+//!   pins one rung; `MemorySlo { budget_bytes }` admits the most accurate
+//!   spec whose worst-case footprint fits the per-request byte budget;
+//!   `LayerSensitivity { profile }` orders specs by predicted error and
+//!   keeps the Pareto frontier (each cheaper rung strictly cheaper in
+//!   bytes). The policy yields a candidate **ladder**, and the
+//!   enforcement point is `KvPool` occupancy admission: under pool
+//!   pressure a new request degrades to a cheaper rung (counted in
+//!   `Metrics::policy_degradations`) instead of parking the queue.
+//!   Explicit per-request pins bypass the policy.
+//! * **Traffic harness** ([`harness::traffic`]): seeded deterministic
+//!   arrival generators (Poisson bursts, diurnal ramps, closed-loop
+//!   sessions) with prompt/tenant/method mixes on decorrelated RNG
+//!   streams, driven through the real `Server::submit/tick/poll` loop at
+//!   thousands of concurrent sessions. Per-tenant SLOs (p50/p99
+//!   TTFT/latency, queue wait, park/preempt fairness) come from
+//!   `Metrics`' tenant reservoirs; outcomes fold into a wall-clock-free
+//!   FNV-1a fingerprint, and `mixkvq traffic` runs the same seed twice to
+//!   prove bit-identical serving before emitting `BENCH_traffic.json`
+//!   (CI's bench gate enforces the p99-TTFT bar and zero same-seed
+//!   drift).
+//!
 //! See DESIGN.md for the experiment index and EXPERIMENTS.md for results.
 
 pub mod util {
@@ -197,6 +232,7 @@ pub mod quant {
     pub mod asym;
     pub mod methods;
     pub mod packing;
+    pub mod policy;
     pub mod rotation;
     pub mod salience;
     pub mod window;
@@ -240,6 +276,8 @@ pub mod harness {
     pub mod experiments;
     pub mod pareto;
     pub mod perplexity;
+    pub mod profiling;
     pub mod refdriver;
+    pub mod traffic;
     pub mod workloads;
 }

@@ -6,6 +6,10 @@
 //!   demo    --id tab1            (error-accumulation transcript)
 //!   search  [--quick]            (Fig. 7 Pareto threshold search)
 //!   info                         (methods + artifacts + variants)
+//!   profile --out profile.json   (offline sensitivity sweep -> policy artifact)
+//!   traffic --sessions N --seed S --out BENCH_traffic.json
+//!           (seeded multi-tenant load through the real server; runs the
+//!            same seed twice and records the determinism verdict)
 //!
 //! `serve` drives the session frontend (`submit`/`tick`/`drain_events`).
 //! `--method` takes one or more comma-separated method names: the first is
@@ -47,10 +51,12 @@ fn main() -> Result<()> {
             Ok(())
         }
         "info" => info(&args),
+        "profile" => profile(&args),
+        "traffic" => traffic(&args),
         _ => {
             println!(
                 "mixkvq — query-aware mixed-precision KV cache quantization\n\n\
-                 USAGE: mixkvq <serve|bench|demo|search|info> [options]\n\n\
+                 USAGE: mixkvq <serve|bench|demo|search|info|profile|traffic> [options]\n\n\
                  serve   --method mixkvq-mix30 --requests 32 --max-new 48 --r-limit 128 --budget-mb 64\n\
                  \x20       --method accepts a comma-separated list (e.g. mixkvq-mix30,bf16):\n\
                  \x20       the first name is the server default, and requests are routed\n\
@@ -63,7 +69,17 @@ fn main() -> Result<()> {
                  bench   --id all|fig1|fig2|fig3|fig5|fig6|fig7|tab1..tab8 [--quick]\n\
                  demo    --id tab1\n\
                  search  [--quick]\n\
-                 info\n\n\
+                 info\n\
+                 profile --out profile.json --seqs 4 --len 96 --seed 1234 --r-limit 32\n\
+                 \x20       one-layer-at-a-time sensitivity sweep over every MethodSpec;\n\
+                 \x20       the JSON artifact feeds PrecisionPolicy::LayerSensitivity.\n\
+                 traffic --sessions 200 --tenants 4 --seed 7 --max-new 6 --budget-mb 64\n\
+                 \x20       --arrival poisson|diurnal|closed --out BENCH_traffic.json\n\
+                 \x20       [--policy slo:<mb>|profile:<path>|fixed:<method>]\n\
+                 \x20       seeded multi-tenant load through submit/tick/poll on the\n\
+                 \x20       reference engine (no artifacts needed); same seed runs twice\n\
+                 \x20       and the report records per-tenant p50/p99 SLOs plus the\n\
+                 \x20       determinism verdict.\n\n\
                  Global: --artifacts <dir> (default: artifacts)"
             );
             Ok(())
@@ -174,6 +190,140 @@ fn serve(args: &Args) -> Result<()> {
         "completed {} requests ({n_events} lifecycle events)",
         server.metrics.completed.total()
     );
+    Ok(())
+}
+
+/// Offline sensitivity sweep — writes the policy artifact
+/// `PrecisionPolicy::LayerSensitivity` loads at serving time.
+fn profile(args: &Args) -> Result<()> {
+    use mixkvq::harness::profiling;
+    use mixkvq::model::weights::Weights;
+
+    let out = args.get_or("out", "profile.json");
+    let cfg = profiling::ProfileConfig {
+        seqs: args.usize_or("seqs", 4)?,
+        seq_len: args.usize_or("len", 96)?,
+        seed: args.u64_or("seed", 1234)?,
+        r_limit: args.usize_or("r-limit", 32)?,
+    };
+    let dir = artifacts_dir(args);
+    let meta = match Meta::load(&dir) {
+        Ok(m) => m,
+        Err(_) => {
+            eprintln!("(artifacts/ not built — profiling the build-default model)");
+            Meta::default_build()
+        }
+    };
+    let weights = Weights::load(&dir, &meta.model)
+        .unwrap_or_else(|_| Weights::random(&meta.model, args.u64_or("weights-seed", 11).unwrap_or(11)));
+    let specs: Vec<MethodSpec> = MethodSpec::all()
+        .into_iter()
+        .filter(|s| meta.variant(s.variant()).is_ok())
+        .collect();
+    eprintln!(
+        "profiling {} specs x {} layers (seqs={}, len={}, seed={})...",
+        specs.len(),
+        meta.model.n_layers,
+        cfg.seqs,
+        cfg.seq_len,
+        cfg.seed
+    );
+    let prof = profiling::profile(&meta, &weights, &specs, &cfg)?;
+    for e in &prof.entries {
+        let name = e.spec.to_string();
+        println!(
+            "  {name:<18} predicted_err={:.4} bound={:.4} worst_case={} KB",
+            prof.predicted_error(e.spec).unwrap_or(0.0),
+            prof.predicted_bound(e.spec).unwrap_or(0.0),
+            e.worst_case_bytes / 1024,
+        );
+    }
+    prof.save(std::path::Path::new(&out))?;
+    println!(
+        "wrote {out} (baseline_nll={:.4}, {} specs)",
+        prof.baseline_nll,
+        prof.entries.len()
+    );
+    Ok(())
+}
+
+/// Seeded multi-tenant traffic through the real server on the reference
+/// engine (artifact-free). Runs the same seed twice; the JSON report
+/// carries both fingerprints and the determinism verdict the bench gate
+/// checks.
+fn traffic(args: &Args) -> Result<()> {
+    use mixkvq::harness::traffic::{self as tr, Arrival, TrafficConfig};
+    use mixkvq::quant::policy::{PrecisionPolicy, SensitivityProfile};
+
+    let out = args.get_or("out", "BENCH_traffic.json");
+    let arrival = match args.get_or("arrival", "poisson").as_str() {
+        "diurnal" => Arrival::DiurnalRamp { lo: 2.0, hi: 24.0, period: 64 },
+        "closed" => Arrival::ClosedLoop {
+            concurrency: args.usize_or("concurrency", 32)?,
+            think_ticks: args.usize_or("think", 2)?,
+        },
+        _ => Arrival::PoissonBurst {
+            rate: 8.0,
+            burst_every: 40,
+            burst_len: 8,
+            burst_rate: 64.0,
+        },
+    };
+    let policy = if let Some(p) = args.get("policy") {
+        Some(match p.split_once(':') {
+            Some(("slo", mb)) => PrecisionPolicy::MemorySlo {
+                budget_bytes: mb.parse::<usize>().map_err(|e| anyhow::anyhow!("bad --policy slo:<mb>: {e}"))? << 20,
+            },
+            Some(("profile", path)) => PrecisionPolicy::LayerSensitivity {
+                profile: SensitivityProfile::load(std::path::Path::new(path))?,
+            },
+            Some(("fixed", name)) => PrecisionPolicy::Fixed(
+                name.parse::<MethodSpec>().map_err(|e| anyhow::anyhow!("{e}"))?,
+            ),
+            _ => anyhow::bail!("--policy takes slo:<mb> | profile:<path> | fixed:<method>"),
+        })
+    } else {
+        None
+    };
+    let cfg = TrafficConfig {
+        seed: args.u64_or("seed", 7)?,
+        sessions: args.usize_or("sessions", 200)?,
+        tenants: args.usize_or("tenants", 4)? as u32,
+        arrival,
+        max_new: args.usize_or("max-new", 6)?,
+        memory_budget_bytes: args.usize_or("budget-mb", 64)? << 20,
+        policy,
+        ..TrafficConfig::default()
+    };
+    let r_limit = args.usize_or("r-limit", 32)?;
+    let engine_seed = args.u64_or("weights-seed", 11)?;
+    let mk_engine = || Engine::new_reference(Meta::default_build(), engine_seed, Method::bf16(), r_limit);
+
+    eprintln!(
+        "traffic: {} sessions, {} tenants, seed {} (running twice for determinism)...",
+        cfg.sessions, cfg.tenants, cfg.seed
+    );
+    let a = tr::run(mk_engine()?, &cfg)?;
+    let b = tr::run(mk_engine()?, &cfg)?;
+    let j = tr::report_json(&a, &b);
+    std::fs::write(&out, j.print())?;
+    println!("{}", a.summary);
+    println!(
+        "traffic: completed {}/{} (rejected {}), {} ticks, max in-flight {}, \
+         p99 ttft {:.1} ms, policy degradations {}, deterministic={}",
+        a.completed,
+        a.sessions,
+        a.rejected,
+        a.ticks,
+        a.max_in_flight,
+        a.p99_ttft_ms,
+        a.policy_degradations,
+        tr::deterministic_pair(&a, &b),
+    );
+    println!("wrote {out}");
+    if !tr::deterministic_pair(&a, &b) {
+        anyhow::bail!("same-seed traffic runs diverged: {:016x} vs {:016x}", a.fingerprint, b.fingerprint);
+    }
     Ok(())
 }
 

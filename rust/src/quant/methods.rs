@@ -103,6 +103,15 @@ impl FixedBits {
 /// routing can never drift from the zoo), and `build()` produces the
 /// configured [`Method`]. Requests carry an `Option<MethodSpec>` to select
 /// their precision policy per-request (see `coordinator::session::Request`).
+///
+/// Who chooses a spec: an explicit per-request pin always wins and bypasses
+/// any server-side policy — the caller takes responsibility for the cost.
+/// Unpinned requests are resolved at admission by the server's
+/// `quant::policy::PrecisionPolicy` (fixed rung, memory-SLO ladder, or
+/// sensitivity-profile Pareto frontier), which may degrade them to a
+/// cheaper spec under `KvPool` pressure; with no policy installed the
+/// engine's default method applies. Offline code (benches, the experiment
+/// harness) builds `Method`s directly and never consults a policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum MethodSpec {
     /// The paper's method (salience ordering A = I·S).

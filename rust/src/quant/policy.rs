@@ -1,0 +1,366 @@
+//! Adaptive precision policy: *choosing* a request's [`MethodSpec`] instead
+//! of configuring it — the serving-side decision layer the paper's premise
+//! implies (precision by difficulty/relevance) and the related work makes
+//! explicit (KVTuner's offline layer-sensitivity plans, KVmix's per-layer
+//! bit-widths under a memory budget).
+//!
+//! A [`PrecisionPolicy`] resolves an **admission ladder**: an ordered list
+//! of candidate specs, most preferred first, every entry drawn from
+//! [`MethodSpec::all`]. The server tries the ladder top-down against the
+//! pool's occupancy admission — under pool pressure a new request degrades
+//! to a cheaper rung instead of stalling the queue, which turns the
+//! existing `KvPool`/scheduler watermark into a memory-vs-accuracy dial.
+//! Requests carrying an explicit `MethodSpec` override bypass the policy
+//! entirely (see `quant::methods` on who may choose).
+//!
+//! Costs come from [`SpecCosts`] (worst-case request bytes per spec, from
+//! the accountant); quality predictions come from a [`SensitivityProfile`]
+//! measured offline by `harness::profiling` and cached as a JSON artifact.
+
+use anyhow::{bail, Context, Result};
+
+use crate::kvcache::accountant::MemoryAccountant;
+use crate::model::config::Meta;
+use crate::quant::methods::MethodSpec;
+use crate::util::json::{num, obj, s, Json};
+
+/// Multiplicative slack on a profile's additive per-layer error sum when
+/// quoting a *bound* (cross-layer quantization errors compound, so the sum
+/// is a prediction, not a guarantee).
+pub const PREDICTED_BOUND_SLACK: f64 = 4.0;
+/// Absolute slack (nats of mean NLL) added on top of the multiplicative
+/// term, so near-zero predictions still quote a usable bound.
+pub const PREDICTED_BOUND_EPS: f64 = 0.25;
+
+/// Worst-case per-request byte cost of every resolvable spec under one
+/// `Meta`, sorted most→least expensive (ties keep roster order). The
+/// policy's shared cost model: both the `MemorySlo` filter and the
+/// degradation ladders walk this table.
+#[derive(Clone, Debug)]
+pub struct SpecCosts {
+    entries: Vec<(MethodSpec, usize)>,
+}
+
+impl SpecCosts {
+    /// Cost out every spec whose decode variant `meta` knows (unknown
+    /// variants are simply not admissible and are dropped).
+    pub fn from_meta(meta: &Meta) -> SpecCosts {
+        let mut entries: Vec<(MethodSpec, usize)> = MethodSpec::all()
+            .into_iter()
+            .filter_map(|spec| {
+                let v = meta.variant(spec.variant()).ok()?;
+                let bytes = MemoryAccountant::worst_case_request_bytes(
+                    &meta.model,
+                    &meta.cache,
+                    &v.layers,
+                );
+                Some((spec, bytes))
+            })
+            .collect();
+        entries.sort_by(|a, b| b.1.cmp(&a.1)); // stable: ties keep roster order
+        SpecCosts { entries }
+    }
+
+    /// Worst-case request bytes for `spec` (`None` when its variant is
+    /// unknown to the `Meta` this table was built from).
+    pub fn cost(&self, spec: MethodSpec) -> Option<usize> {
+        self.entries.iter().find(|(s, _)| *s == spec).map(|(_, c)| *c)
+    }
+
+    /// `(spec, worst-case bytes)` pairs, most expensive first.
+    pub fn iter(&self) -> impl Iterator<Item = (MethodSpec, usize)> + '_ {
+        self.entries.iter().copied()
+    }
+
+    pub fn most_expensive(&self) -> Option<MethodSpec> {
+        self.entries.first().map(|(s, _)| *s)
+    }
+
+    pub fn cheapest(&self) -> Option<MethodSpec> {
+        self.entries.last().map(|(s, _)| *s)
+    }
+}
+
+/// Offline sensitivity profile: per-(spec, layer) error deltas on a
+/// calibration workload, measured by `harness::profiling::profile` with
+/// every *other* layer pinned at bf16 (the KVTuner-style one-layer-at-a-time
+/// sweep). Error is the mean-NLL delta vs the all-bf16 baseline, clamped at
+/// zero. Serialized as a JSON artifact so the sweep runs once per model.
+#[derive(Clone, Debug, Default)]
+pub struct SensitivityProfile {
+    /// Mean NLL of the all-bf16 baseline on the calibration set.
+    pub baseline_nll: f64,
+    pub n_layers: usize,
+    /// Calibration workload identity (seed recorded for reproducibility).
+    pub calib_seed: u64,
+    pub entries: Vec<ProfileEntry>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ProfileEntry {
+    pub spec: MethodSpec,
+    /// `layer_err[l]` = mean-NLL delta with only layer `l` quantized under
+    /// this spec (≥ 0).
+    pub layer_err: Vec<f64>,
+    /// Worst-case request bytes under this spec (denormalized from the
+    /// cost table at profiling time, so the artifact is self-contained).
+    pub worst_case_bytes: usize,
+}
+
+impl SensitivityProfile {
+    fn entry(&self, spec: MethodSpec) -> Option<&ProfileEntry> {
+        self.entries.iter().find(|e| e.spec == spec)
+    }
+
+    /// Additive per-layer error prediction for serving `spec` on all
+    /// layers at once (`None` when the spec was not profiled).
+    pub fn predicted_error(&self, spec: MethodSpec) -> Option<f64> {
+        self.entry(spec).map(|e| e.layer_err.iter().sum())
+    }
+
+    /// The bound the profile is willing to quote for `spec`'s measured
+    /// error on the calibration set: the additive prediction with
+    /// compounding slack. `harness::profiling` verifies measured error
+    /// stays inside this.
+    pub fn predicted_bound(&self, spec: MethodSpec) -> Option<f64> {
+        self.predicted_error(spec)
+            .map(|e| e * PREDICTED_BOUND_SLACK + PREDICTED_BOUND_EPS)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                obj(vec![
+                    ("spec", s(&e.spec.to_string())),
+                    (
+                        "layer_err",
+                        Json::Arr(e.layer_err.iter().map(|&x| num(x)).collect()),
+                    ),
+                    ("worst_case_bytes", num(e.worst_case_bytes as f64)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("schema", s("mixkvq-profile-v1")),
+            ("baseline_nll", num(self.baseline_nll)),
+            ("n_layers", num(self.n_layers as f64)),
+            ("calib_seed", num(self.calib_seed as f64)),
+            ("entries", Json::Arr(entries)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SensitivityProfile> {
+        let schema = j.get("schema")?.as_str()?;
+        if schema != "mixkvq-profile-v1" {
+            bail!("unknown profile schema `{schema}`");
+        }
+        let n_layers = j.get("n_layers")?.as_usize()?;
+        let mut entries = Vec::new();
+        for e in j.get("entries")?.as_arr()? {
+            let name = e.get("spec")?.as_str()?;
+            let spec: MethodSpec = name
+                .parse()
+                .map_err(|err: String| anyhow::anyhow!("{err}"))?;
+            let layer_err: Vec<f64> = e
+                .get("layer_err")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_f64())
+                .collect::<Result<_>>()?;
+            if layer_err.len() != n_layers {
+                bail!("profile entry `{name}`: {} layer errors, want {n_layers}", layer_err.len());
+            }
+            entries.push(ProfileEntry {
+                spec,
+                layer_err,
+                worst_case_bytes: e.get("worst_case_bytes")?.as_usize()?,
+            });
+        }
+        Ok(SensitivityProfile {
+            baseline_nll: j.get("baseline_nll")?.as_f64()?,
+            n_layers,
+            calib_seed: j.get("calib_seed")?.as_f64()? as u64,
+            entries,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().print())
+            .with_context(|| format!("writing profile {path:?}"))
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<SensitivityProfile> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading profile {path:?}"))?;
+        Self::from_json(&Json::parse(&src)?)
+    }
+}
+
+/// Runtime precision policy: how the server resolves a `MethodSpec` for a
+/// request that did not pin one itself.
+#[derive(Clone, Debug)]
+pub enum PrecisionPolicy {
+    /// Every unpinned request serves under this one spec (the pre-policy
+    /// behavior, as a policy). Single-rung ladder: no degradation.
+    Fixed(MethodSpec),
+    /// Serve the most expensive spec whose **worst-case** request bytes
+    /// fit `budget_bytes`; under pool pressure degrade down the cost
+    /// ladder (still inside the budget). An empty ladder — no spec fits —
+    /// rejects at submit.
+    MemorySlo { budget_bytes: usize },
+    /// Serve the profile's lowest-predicted-error spec; the degradation
+    /// ladder is the (error, bytes) Pareto frontier, so each rung down is
+    /// strictly cheaper (never a lateral move that costs quality for
+    /// nothing).
+    LayerSensitivity { profile: SensitivityProfile },
+}
+
+impl PrecisionPolicy {
+    /// The admission ladder: candidate specs most-preferred first. Every
+    /// entry is one of [`MethodSpec::all`] with a variant `costs` knows;
+    /// an empty ladder means no spec is acceptable and the request must
+    /// be rejected. Walking left→right never increases worst-case bytes
+    /// (degradation is monotone by construction).
+    pub fn candidates(&self, costs: &SpecCosts) -> Vec<MethodSpec> {
+        match self {
+            PrecisionPolicy::Fixed(spec) => {
+                // unknown-variant Fixed pins nothing admissible
+                costs.cost(*spec).map(|_| *spec).into_iter().collect()
+            }
+            PrecisionPolicy::MemorySlo { budget_bytes } => costs
+                .iter()
+                .filter(|(_, c)| *c <= *budget_bytes)
+                .map(|(spec, _)| spec)
+                .collect(),
+            PrecisionPolicy::LayerSensitivity { profile } => {
+                // sort by predicted error (cheaper bytes break ties), then
+                // keep the Pareto frontier: each kept rung is strictly
+                // cheaper than the previous one
+                let mut scored: Vec<(MethodSpec, f64, usize)> = costs
+                    .iter()
+                    .filter_map(|(spec, c)| {
+                        profile.predicted_error(spec).map(|e| (spec, e, c))
+                    })
+                    .collect();
+                scored.sort_by(|a, b| {
+                    a.1.partial_cmp(&b.1)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.2.cmp(&b.2))
+                });
+                let mut ladder = Vec::new();
+                let mut min_cost = usize::MAX;
+                for (spec, _, c) in scored {
+                    if c < min_cost {
+                        ladder.push(spec);
+                        min_cost = c;
+                    }
+                }
+                ladder
+            }
+        }
+    }
+
+    /// The ladder's top rung — what an unpressured admission serves.
+    pub fn resolve(&self, costs: &SpecCosts) -> Option<MethodSpec> {
+        self.candidates(costs).into_iter().next()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn costs() -> SpecCosts {
+        SpecCosts::from_meta(&Meta::default_build())
+    }
+
+    #[test]
+    fn cost_table_covers_all_specs_sorted() {
+        let c = costs();
+        // default_build knows every variant, so all 17 specs cost out
+        assert_eq!(c.iter().count(), MethodSpec::all().len());
+        let v: Vec<usize> = c.iter().map(|(_, b)| b).collect();
+        assert!(v.windows(2).all(|w| w[0] >= w[1]), "not sorted desc: {v:?}");
+        assert_eq!(c.most_expensive(), Some(MethodSpec::Bf16));
+        assert!(c.cost(MethodSpec::Bf16).unwrap() > c.cost(c.cheapest().unwrap()).unwrap());
+    }
+
+    #[test]
+    fn fixed_is_single_rung() {
+        let c = costs();
+        let p = PrecisionPolicy::Fixed(MethodSpec::KvTuner);
+        assert_eq!(p.candidates(&c), vec![MethodSpec::KvTuner]);
+        assert_eq!(p.resolve(&c), Some(MethodSpec::KvTuner));
+    }
+
+    #[test]
+    fn memory_slo_respects_budget_and_degrades_monotone() {
+        let c = costs();
+        let max = c.cost(MethodSpec::Bf16).unwrap();
+        let p = PrecisionPolicy::MemorySlo { budget_bytes: max };
+        let ladder = p.candidates(&c);
+        assert_eq!(ladder.len(), MethodSpec::all().len());
+        let costs_desc: Vec<usize> = ladder.iter().map(|&s| c.cost(s).unwrap()).collect();
+        assert!(costs_desc.windows(2).all(|w| w[0] >= w[1]));
+        // a budget below the cheapest spec resolves nothing
+        let min = c.cost(c.cheapest().unwrap()).unwrap();
+        let p = PrecisionPolicy::MemorySlo { budget_bytes: min - 1 };
+        assert!(p.resolve(&c).is_none());
+    }
+
+    #[test]
+    fn sensitivity_ladder_is_pareto_frontier() {
+        let c = costs();
+        let meta = Meta::default_build();
+        // synthetic profile: error inversely ordered with cost (realistic)
+        let entries: Vec<ProfileEntry> = c
+            .iter()
+            .enumerate()
+            .map(|(i, (spec, bytes))| ProfileEntry {
+                spec,
+                layer_err: vec![i as f64 * 0.01; meta.model.n_layers],
+                worst_case_bytes: bytes,
+            })
+            .collect();
+        let profile = SensitivityProfile {
+            baseline_nll: 1.0,
+            n_layers: meta.model.n_layers,
+            calib_seed: 0,
+            entries,
+        };
+        let p = PrecisionPolicy::LayerSensitivity { profile };
+        let ladder = p.candidates(&c);
+        assert!(!ladder.is_empty());
+        // best-quality first (here: the most expensive), strictly cheaper
+        // down the ladder
+        assert_eq!(ladder[0], MethodSpec::Bf16);
+        let lc: Vec<usize> = ladder.iter().map(|&s| c.cost(s).unwrap()).collect();
+        assert!(lc.windows(2).all(|w| w[0] > w[1]), "{lc:?}");
+    }
+
+    #[test]
+    fn profile_json_roundtrip() {
+        let profile = SensitivityProfile {
+            baseline_nll: 3.5,
+            n_layers: 2,
+            calib_seed: 17,
+            entries: vec![ProfileEntry {
+                spec: MethodSpec::KvTuner,
+                layer_err: vec![0.25, 0.0],
+                worst_case_bytes: 12345,
+            }],
+        };
+        let back = SensitivityProfile::from_json(&profile.to_json()).unwrap();
+        assert_eq!(back.n_layers, 2);
+        assert_eq!(back.calib_seed, 17);
+        assert_eq!(back.entries.len(), 1);
+        assert_eq!(back.entries[0].spec, MethodSpec::KvTuner);
+        assert_eq!(back.entries[0].worst_case_bytes, 12345);
+        assert!((back.predicted_error(MethodSpec::KvTuner).unwrap() - 0.25).abs() < 1e-12);
+        let bound = back.predicted_bound(MethodSpec::KvTuner).unwrap();
+        assert!(bound >= 0.25 * PREDICTED_BOUND_SLACK);
+        assert!(back.predicted_error(MethodSpec::Bf16).is_none());
+    }
+}

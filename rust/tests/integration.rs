@@ -267,6 +267,7 @@ fn two_method_specs_served_concurrently() {
                     max_new_tokens: 8,
                     sampling: Sampling::Greedy,
                     method,
+                    tenant: 0,
                 })
                 .unwrap(),
         );
@@ -316,6 +317,7 @@ fn one_token_budget_records_token_and_reason() {
             max_new_tokens: 1,
             sampling: Sampling::Greedy,
             method: None,
+            tenant: 0,
         }])
         .unwrap();
     assert_eq!(completed.len(), 1);
@@ -345,6 +347,7 @@ fn cancel_and_reject_paths() {
         max_new_tokens: 6,
         sampling: Sampling::Greedy,
         method: None,
+        tenant: 0,
     };
     // oversized prompt → rejected at submit, terminal immediately
     let big = mk(7, vec![1; max_ctx + 1]);
@@ -501,6 +504,7 @@ fn server_occupancy_admission_beats_worst_case() {
                 max_new_tokens: 24,
                 sampling: Sampling::Greedy,
                 method: None,
+                tenant: 0,
             })
             .unwrap();
     }

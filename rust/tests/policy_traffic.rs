@@ -1,0 +1,231 @@
+//! Tier-1 tests for the adaptive precision policy engine and the
+//! production traffic harness (artifact-free: everything runs on the
+//! reference engine / `RefDriver`).
+//!
+//! * property tests: `MemorySlo` never quotes a spec over its byte budget,
+//!   every resolved spec is a member of `MethodSpec::all()`, and
+//!   degradation is monotone (a tighter budget never resolves to a more
+//!   expensive spec);
+//! * E2E policy test: under a byte budget the most expensive spec cannot
+//!   fit, a pinned-most-expensive run serves nothing while a `MemorySlo`
+//!   policy run serves every session by degrading admissions;
+//! * profiling bound: the full-spec measured error on the calibration
+//!   corpus stays within the profile's predicted bound;
+//! * scale: the traffic harness sustains >= 1000 concurrent sessions
+//!   through the real `submit`/`tick`/`poll` loop with per-tenant SLO
+//!   stats in the report.
+
+use mixkvq::coordinator::engine::Engine;
+use mixkvq::harness::profiling::{self, ProfileConfig};
+use mixkvq::harness::traffic::{self, Arrival, TrafficConfig};
+use mixkvq::model::config::{Meta, ModelConfig};
+use mixkvq::model::weights::Weights;
+use mixkvq::quant::methods::{KiviBits, Method, MethodSpec};
+use mixkvq::quant::policy::{PrecisionPolicy, SpecCosts};
+use mixkvq::util::rng::Pcg32;
+
+/// 2-layer build-default model: fast enough for debug-mode serving tests,
+/// deep enough that per-layer profiling means something.
+fn small_meta() -> Meta {
+    let mut meta = Meta::default_build();
+    meta.model = ModelConfig { n_layers: 2, ..meta.model };
+    for v in &mut meta.variants {
+        v.layers.truncate(2);
+        while v.layers.len() < 2 {
+            let last = *v.layers.last().unwrap();
+            v.layers.push(last);
+        }
+    }
+    meta
+}
+
+fn reference_engine() -> Engine {
+    Engine::new_reference(small_meta(), 11, Method::bf16(), 32).unwrap()
+}
+
+// ---------------------------------------------------------------- policy --
+
+#[test]
+fn memory_slo_never_exceeds_budget_and_stays_in_roster() {
+    let costs = SpecCosts::from_meta(&Meta::default_build());
+    let all = MethodSpec::all();
+    let max_cost = costs.iter().map(|(_, c)| c).max().unwrap();
+    let mut rng = Pcg32::seeded(2024);
+    for _ in 0..200 {
+        let budget = rng.below(2 * max_cost as u32 + 1) as usize;
+        let policy = PrecisionPolicy::MemorySlo { budget_bytes: budget };
+        for spec in policy.candidates(&costs) {
+            let cost = costs.cost(spec).expect("candidate must have a cost");
+            assert!(
+                cost <= budget,
+                "{spec} costs {cost} B over the {budget} B SLO"
+            );
+            assert!(all.contains(&spec), "{spec} not in MethodSpec::all()");
+        }
+        if let Some(spec) = policy.resolve(&costs) {
+            assert!(costs.cost(spec).unwrap() <= budget);
+        } else {
+            // nothing fits only when the budget undercuts the cheapest spec
+            let min_cost = costs.iter().map(|(_, c)| c).min().unwrap();
+            assert!(budget < min_cost, "resolve returned None at {budget} B");
+        }
+    }
+}
+
+#[test]
+fn degradation_is_monotone_in_the_budget() {
+    let costs = SpecCosts::from_meta(&Meta::default_build());
+    let max_cost = costs.iter().map(|(_, c)| c).max().unwrap();
+    let mut prev_cost: Option<usize> = None;
+    // sweep the budget upward: the resolved spec's cost may only rise
+    for budget in (0..=max_cost + 1024).step_by(512) {
+        let policy = PrecisionPolicy::MemorySlo { budget_bytes: budget };
+        let cost = policy.resolve(&costs).map(|s| costs.cost(s).unwrap());
+        if let (Some(p), Some(c)) = (prev_cost, cost) {
+            assert!(
+                c >= p,
+                "budget {budget} resolved cheaper ({c} B) than a tighter budget did ({p} B)"
+            );
+        }
+        if cost.is_some() {
+            prev_cost = cost;
+        }
+    }
+    // and the roster's extremes resolve as expected
+    let open = PrecisionPolicy::MemorySlo { budget_bytes: usize::MAX };
+    assert_eq!(open.resolve(&costs), costs.most_expensive());
+}
+
+#[test]
+fn fixed_policy_resolves_to_its_pin() {
+    let costs = SpecCosts::from_meta(&Meta::default_build());
+    for spec in MethodSpec::all() {
+        let policy = PrecisionPolicy::Fixed(spec);
+        assert_eq!(policy.resolve(&costs), Some(spec));
+        assert_eq!(policy.candidates(&costs), vec![spec]);
+    }
+}
+
+// --------------------------------------------------------- E2E: serving --
+
+/// Under a byte budget the most expensive spec (bf16) cannot fit, pinning
+/// every request to bf16 serves nothing — while a `MemorySlo` policy run
+/// degrades admissions to cheaper rungs and serves every session.
+#[test]
+fn tight_budget_policy_outserves_pinned_most_expensive() {
+    let meta = small_meta();
+    let costs = SpecCosts::from_meta(&meta);
+    let most = costs.most_expensive().unwrap();
+    assert_eq!(most, MethodSpec::Bf16);
+    let bf16_cost = costs.cost(most).unwrap();
+    let min_cost = costs.iter().map(|(_, c)| c).min().unwrap();
+    assert!(min_cost < bf16_cost, "need a cost spread for this test");
+    // a budget the cheapest rungs clear but bf16 does not
+    let budget = bf16_cost - 1;
+
+    let base = TrafficConfig {
+        sessions: 12,
+        tenants: 2,
+        arrival: Arrival::PoissonBurst {
+            rate: 4.0,
+            burst_every: 8,
+            burst_len: 2,
+            burst_rate: 8.0,
+        },
+        max_new: 3,
+        prompt_pool: 3,
+        prompt_lo: 24,
+        prompt_hi: 40,
+        memory_budget_bytes: budget,
+        ..TrafficConfig::default()
+    };
+
+    // pinned most-expensive: every request rejected at submit
+    let pinned_cfg = TrafficConfig { method_mix: vec![most], ..base.clone() };
+    let pinned = traffic::run(reference_engine(), &pinned_cfg).unwrap();
+    let pinned_served = pinned.completed as u64 - pinned.rejected;
+    assert_eq!(pinned_served, 0, "bf16 must not fit under {budget} B");
+
+    // MemorySlo policy: unpinned requests degrade to affordable rungs
+    let slo_cfg = TrafficConfig {
+        policy: Some(PrecisionPolicy::MemorySlo { budget_bytes: budget }),
+        ..base
+    };
+    let served_run = traffic::run(reference_engine(), &slo_cfg).unwrap();
+    let served = served_run.completed as u64 - served_run.rejected;
+    assert_eq!(served_run.completed, slo_cfg.sessions, "all sessions terminal");
+    assert!(
+        served > pinned_served,
+        "policy run served {served}, pinned served {pinned_served}"
+    );
+    assert_eq!(served as usize, slo_cfg.sessions, "policy run must serve all");
+}
+
+// ------------------------------------------------------------ profiling --
+
+/// The profile's predicted bound (summed per-layer sensitivities plus
+/// compounding slack) must cover the measured full-spec error on the same
+/// calibration corpus — the guarantee `LayerSensitivity` quotes from.
+#[test]
+fn measured_error_stays_within_the_predicted_bound() {
+    let meta = small_meta();
+    let w = Weights::random(&meta.model, 11);
+    let cfg = ProfileConfig { seqs: 2, seq_len: 64, ..ProfileConfig::default() };
+    let specs = [
+        MethodSpec::Kivi { bits: KiviBits::Kv4 },
+        MethodSpec::Kivi { bits: KiviBits::Kv2 },
+    ];
+    let prof = profiling::profile(&meta, &w, &specs, &cfg).unwrap();
+    for &spec in &specs {
+        let measured = profiling::measured_error(&meta, &w, spec, &prof, &cfg).unwrap();
+        let bound = prof.predicted_bound(spec).unwrap();
+        assert!(
+            measured <= bound,
+            "{spec}: measured {measured:.4} exceeds predicted bound {bound:.4}"
+        );
+    }
+    // and a sensitivity policy built from the profile is usable end to end
+    let costs = SpecCosts::from_meta(&meta);
+    let policy = PrecisionPolicy::LayerSensitivity { profile: prof };
+    let resolved = policy.resolve(&costs).expect("profile yields a ladder");
+    assert!(MethodSpec::all().contains(&resolved));
+}
+
+// ---------------------------------------------------------------- scale --
+
+/// The harness sustains >= 1000 concurrent sessions through the real
+/// server: a hot burst submits every session within a few ticks while the
+/// decode batch drains slowly, so in-flight peaks near the full count.
+#[test]
+fn traffic_sustains_a_thousand_concurrent_sessions() {
+    let cfg = TrafficConfig {
+        sessions: 1100,
+        tenants: 5,
+        arrival: Arrival::PoissonBurst {
+            rate: 300.0,
+            burst_every: 1,
+            burst_len: 0,
+            burst_rate: 0.0,
+        },
+        max_new: 3,
+        prompt_pool: 3,
+        prompt_lo: 24,
+        prompt_hi: 40,
+        ..TrafficConfig::default()
+    };
+    let r = traffic::run(reference_engine(), &cfg).unwrap();
+    assert_eq!(r.completed, cfg.sessions, "every session must reach terminal");
+    assert_eq!(r.rejected, 0, "no rejections under the default budget");
+    assert!(
+        r.max_in_flight >= 1000,
+        "peak concurrency {} < 1000",
+        r.max_in_flight
+    );
+    assert!(!r.tenants.is_empty());
+    let served: u64 = r.tenants.iter().map(|t| t.served).sum();
+    assert_eq!(served as usize, cfg.sessions);
+    for t in &r.tenants {
+        assert!(t.p99_ttft_ms >= t.p50_ttft_ms);
+        assert!(t.p99_latency_ms >= t.p50_latency_ms);
+    }
+}

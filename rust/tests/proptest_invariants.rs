@@ -135,6 +135,7 @@ fn batcher_fifo_no_starvation() {
                 max_new_tokens: 4,
                 sampling: Sampling::Greedy,
                 method: None,
+                tenant: 0,
             });
         }
         let mut admitted = Vec::new();
@@ -204,6 +205,7 @@ fn event_streams_well_formed_under_random_schedules() {
                 max_new_tokens: mn,
                 sampling: Sampling::Greedy,
                 method: None,
+                tenant: 0,
             });
         }
         let mut guard = 0;

@@ -13,7 +13,11 @@
 //!   set;
 //! * `BENCH_prefix_sharing.json` — K requests over one prompt must hold
 //!   ≥2× fewer prefix pages than private mode and actually skip prefill
-//!   chunks (dedup that stops deduping is a regression too).
+//!   chunks (dedup that stops deduping is a regression too);
+//! * `BENCH_traffic.json` — the seeded traffic smoke (`mixkvq traffic`)
+//!   must finish every session, hold the p99 TTFT bar, carry per-tenant
+//!   SLO stats, and show **zero same-seed drift** (the harness runs the
+//!   seed twice; diverging fingerprints mean serving nondeterminism).
 //!
 //! A missing or unparseable artifact is itself a violation: the gate exists
 //! so a bench that silently stops running (or changes schema) cannot merge.
@@ -45,6 +49,10 @@ pub const PAGED_OVERHEAD_MAX_PCT: f64 = 5.0;
 /// K sharers must hold at least this many × fewer prefix pages than
 /// K private copies would.
 pub const PREFIX_DEDUP_MIN: f64 = 2.0;
+/// Traffic smoke (200 sessions, reference engine): p99 TTFT may not
+/// exceed this many ms. Generous on purpose — the bar catches scheduler
+/// pathologies (admission livelock, queue starvation), not machine noise.
+pub const TRAFFIC_P99_TTFT_MAX_MS: f64 = 5000.0;
 
 /// Context length/prompt length at and above which the decode/prefill
 /// speedup bars apply (short contexts are fixed-overhead dominated).
@@ -138,13 +146,49 @@ fn gate_prefix_sharing(j: &Json) -> Result<Vec<String>> {
     Ok(v)
 }
 
+fn gate_traffic(j: &Json) -> Result<Vec<String>> {
+    let mut v = Vec::new();
+    let sessions = j.get("sessions")?.as_f64()?;
+    let completed = j.get("completed")?.as_f64()?;
+    if completed <= 0.0 {
+        v.push("traffic: NO sessions completed — did the harness run?".to_string());
+    } else if completed < sessions {
+        v.push(format!(
+            "traffic: only {completed} of {sessions} sessions reached a \
+             terminal state (run hit its tick ceiling — scheduler stall?)"
+        ));
+    }
+    // zero same-seed drift: the harness runs the seed twice and folds every
+    // outcome (ids, reasons, token streams, tenant counters — never
+    // wall-clock) into the fingerprints; any divergence fails the build
+    let fp = j.get("fingerprint")?.as_str()?;
+    let fp2 = j.get("fingerprint_repeat")?.as_str()?;
+    if !matches!(j.get("deterministic")?, Json::Bool(true)) || fp != fp2 {
+        v.push(format!(
+            "traffic: same-seed runs diverged (fingerprint {fp} vs {fp2}) — \
+             nondeterminism in the serving path"
+        ));
+    }
+    let p99 = j.get("p99_ttft_ms")?.as_f64()?;
+    if p99 > TRAFFIC_P99_TTFT_MAX_MS {
+        v.push(format!(
+            "traffic: p99 TTFT {p99:.1} ms > {TRAFFIC_P99_TTFT_MAX_MS} ms"
+        ));
+    }
+    if j.get("tenants")?.as_arr()?.is_empty() {
+        v.push("traffic: report carries no per-tenant SLO stats".to_string());
+    }
+    Ok(v)
+}
+
 type Gate = fn(&Json) -> Result<Vec<String>>;
 
-const GATES: [(&str, Gate); 4] = [
+const GATES: [(&str, Gate); 5] = [
     ("BENCH_ref_decode.json", gate_ref_decode),
     ("BENCH_paged_decode.json", gate_paged_decode),
     ("BENCH_prefill.json", gate_prefill),
     ("BENCH_prefix_sharing.json", gate_prefix_sharing),
+    ("BENCH_traffic.json", gate_traffic),
 ];
 
 /// Run every gate over `dir`, returning the full violation list (empty =
@@ -174,7 +218,8 @@ fn main() -> ExitCode {
             "bench-gate: all ROADMAP perf bars hold \
              (decode >= {DECODE_SPEEDUP_MIN}x, prefill >= {PREFILL_SPEEDUP_MIN}x, \
              f32 shrink >= {PREFILL_MEM_RATIO_MIN}x, paged overhead <= \
-             {PAGED_OVERHEAD_MAX_PCT}%, prefix dedup >= {PREFIX_DEDUP_MIN}x)"
+             {PAGED_OVERHEAD_MAX_PCT}%, prefix dedup >= {PREFIX_DEDUP_MIN}x, \
+             traffic p99 TTFT <= {TRAFFIC_P99_TTFT_MAX_MS} ms + deterministic)"
         );
         return ExitCode::SUCCESS;
     }
@@ -262,6 +307,55 @@ mod tests {
         assert_eq!(v.len(), 3, "{v:?}");
     }
 
+    fn traffic_report(completed: f64, p99: f64, fp: &str, fp2: &str, det: bool) -> String {
+        format!(
+            r#"{{"schema":"traffic-v1","sessions":200,"completed":{completed},
+                 "rejected":0,"ticks":120,"max_in_flight":64,
+                 "p99_ttft_ms":{p99},"fingerprint":"{fp}",
+                 "fingerprint_repeat":"{fp2}","deterministic":{det},
+                 "tenants":[{{"tenant":0,"served":100}},{{"tenant":1,"served":100}}]}}"#
+        )
+    }
+
+    #[test]
+    fn healthy_traffic_report_passes() {
+        let src = traffic_report(200.0, 41.5, "deadbeef", "deadbeef", true);
+        assert!(gate_traffic(&parse(&src)).unwrap().is_empty());
+    }
+
+    #[test]
+    fn traffic_nondeterminism_fails() {
+        // diverging fingerprints fail even if the bool lies
+        let src = traffic_report(200.0, 41.5, "deadbeef", "deadbee0", true);
+        let v = gate_traffic(&parse(&src)).unwrap();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("diverged"), "{v:?}");
+        // and an honest false fails too
+        let src = traffic_report(200.0, 41.5, "deadbeef", "deadbeef", false);
+        assert_eq!(gate_traffic(&parse(&src)).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn traffic_slo_and_completion_bars() {
+        let slow = traffic_report(200.0, 9000.0, "aa", "aa", true);
+        let v = gate_traffic(&parse(&slow)).unwrap();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("p99 TTFT"), "{v:?}");
+        let stalled = traffic_report(150.0, 41.5, "aa", "aa", true);
+        let v = gate_traffic(&parse(&stalled)).unwrap();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("terminal"), "{v:?}");
+        let dead = traffic_report(0.0, 0.0, "aa", "aa", true);
+        let v = gate_traffic(&parse(&dead)).unwrap();
+        assert!(v[0].contains("NO sessions"), "{v:?}");
+        let no_tenants = r#"{"sessions":10,"completed":10,"p99_ttft_ms":1.0,
+            "fingerprint":"aa","fingerprint_repeat":"aa","deterministic":true,
+            "tenants":[]}"#;
+        let v = gate_traffic(&parse(no_tenants)).unwrap();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("per-tenant"), "{v:?}");
+    }
+
     #[test]
     fn empty_entries_are_a_violation() {
         // a bench that regresses to writing no data must not pass green
@@ -310,6 +404,11 @@ mod tests {
             dir.join("BENCH_prefix_sharing.json"),
             r#"{"entries":[{"t":256,"dedup_ratio":3.5,"chunks_skipped":96,
                             "bytes_deduped":500000}]}"#,
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("BENCH_traffic.json"),
+            traffic_report(200.0, 38.2, "0123abcd", "0123abcd", true),
         )
         .unwrap();
         assert!(run_gates(&dir).is_empty());
