@@ -94,6 +94,8 @@ impl Batcher {
         let mut done = Vec::new();
         for s in self.slots.iter_mut() {
             if s.as_ref().map(|x| x.is_finished()).unwrap_or(false) {
+                // unwrap guarded: the branch condition only holds for an
+                // occupied slot, so take() always yields Some here
                 done.push(s.take().unwrap());
             }
         }
@@ -128,6 +130,7 @@ mod tests {
             sampling: Sampling::Greedy,
             method: None,
             tenant: 0,
+            deadline_ticks: None,
         }
     }
 

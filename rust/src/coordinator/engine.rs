@@ -17,7 +17,7 @@ use std::path::{Path, PathBuf};
 use std::rc::Rc;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::kvcache::accountant::MemoryAccountant;
 use crate::kvcache::cache::{PageField, RequestCache};
@@ -29,6 +29,7 @@ use crate::quant::methods::{Method, MethodSpec};
 use crate::runtime::client::Runtime;
 use crate::runtime::executor::{upload, Arg, DeviceArg, Executable};
 use crate::runtime::registry::{decode_artifact, pick_bucket, prefill_artifact, DType};
+use crate::util::faults::{FaultInjector, FaultSite};
 
 /// Prefill products shaped for RequestCache::load_prefill.
 pub struct PrefillData {
@@ -130,6 +131,9 @@ pub struct Engine {
     /// `RefDriver`'s per-driver scratch). `None` until the first reference
     /// decode step; unused on the compiled backend.
     ref_scratch: Option<DecodeScratch>,
+    /// Deterministic fault injection (chaos testing), shared with the
+    /// server and the pool. `None` (the default) makes every hook free.
+    faults: Option<Rc<RefCell<FaultInjector>>>,
 }
 
 enum Owned {
@@ -224,6 +228,7 @@ impl Engine {
             ref_pidx,
             ref_rope,
             ref_scratch: None,
+            faults: None,
         })
     }
 
@@ -257,6 +262,7 @@ impl Engine {
             ref_pidx,
             ref_rope,
             ref_scratch: None,
+            faults: None,
         })
     }
 
@@ -284,6 +290,13 @@ impl Engine {
 
     pub fn prefix_index(&self) -> Option<&Rc<RefCell<PrefixIndex>>> {
         self.prefix_index.as_ref()
+    }
+
+    /// Install the deterministic fault injector (shared with the server
+    /// and the pool). Arms the `PrefillChunk`, `DecodeStep`, and
+    /// `PrefixCorrupt` hooks.
+    pub fn set_faults(&mut self, faults: Rc<RefCell<FaultInjector>>) {
+        self.faults = Some(faults);
     }
 
     /// Content-addressed key for `prompt` under `method`: the hash-chain
@@ -608,6 +621,63 @@ impl Engine {
         Ok(results)
     }
 
+    /// One batched decode step with **per-slot error isolation**: a failing
+    /// slot (an injected `DecodeStep` fault or a per-request cache error)
+    /// yields `Some(Err(..))` for that slot only — the rest of the variant
+    /// group completes its step normally, which is what lets the router
+    /// retire one bad request without poisoning its group or the tick. The
+    /// outer `Err` is reserved for batch-level contract violations (wrong
+    /// slot count, unknown variant). On the compiled backend a graph
+    /// execution failure is inherently batch-wide; it is fanned out to
+    /// every live slot so each request retires individually instead of the
+    /// error killing the server tick.
+    pub fn decode_step_isolated(
+        &mut self,
+        variant: &str,
+        rot: &[f32],
+        slots: &mut [Option<(&mut RequestCache, i32)>],
+    ) -> Result<Vec<Option<Result<Vec<f32>>>>> {
+        let b = self.meta.cache.decode_batch;
+        if slots.len() != b {
+            bail!("decode batch must have exactly {b} slots");
+        }
+        // Injected decode-step faults are drawn per live slot (one victim,
+        // not the group); victims are masked out of the batch before the
+        // step runs and reported as per-slot errors afterwards.
+        let mut injected = vec![false; slots.len()];
+        if let Some(f) = self.faults.clone() {
+            let mut f = f.borrow_mut();
+            for (i, s) in slots.iter_mut().enumerate() {
+                if s.is_some() && f.should_fail(FaultSite::DecodeStep) {
+                    injected[i] = true;
+                    *s = None;
+                }
+            }
+        }
+        let stepped: Vec<Option<Result<Vec<f32>>>> = if self.runtime.is_none() {
+            self.decode_step_reference_isolated(variant, slots)?
+        } else {
+            match self.decode_step_variant(variant, rot, slots) {
+                Ok(res) => res.into_iter().map(|o| o.map(Ok)).collect(),
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    slots.iter().map(|s| s.as_ref().map(|_| Err(anyhow!("{msg}")))).collect()
+                }
+            }
+        };
+        Ok(stepped
+            .into_iter()
+            .zip(injected)
+            .map(|(o, hit)| {
+                if hit {
+                    Some(Err(anyhow!("injected transient fault: decode step")))
+                } else {
+                    o
+                }
+            })
+            .collect())
+    }
+
     /// One decode step on the reference backend: each live slot runs the
     /// fused packed-code reference decode (`RefModel::decode_step_into`)
     /// and folds its new token into the cache — semantically the per-slot
@@ -615,12 +685,30 @@ impl Engine {
     /// tier shapes. The sub-batch's `variant` is validated like the
     /// compiled path validates artifact residency; the per-slot tier
     /// shapes live in each cache, so heterogeneous groups decode
-    /// correctly.
+    /// correctly. A slot's first failing error is collapsed into a
+    /// whole-batch `Err` here (legacy contract for benches and harness
+    /// drivers); the serving path goes through
+    /// [`Engine::decode_step_isolated`] instead.
     fn decode_step_reference(
         &mut self,
         variant: &str,
         slots: &mut [Option<(&mut RequestCache, i32)>],
     ) -> Result<Vec<Option<Vec<f32>>>> {
+        self.decode_step_reference_isolated(variant, slots)?
+            .into_iter()
+            .map(Option::transpose)
+            .collect()
+    }
+
+    /// Per-slot body of the reference decode step: a slot whose
+    /// `cache.append` fails carries its own `Err` while the remaining
+    /// slots still step (their caches stay coherent — nothing after a
+    /// failing slot depends on it).
+    fn decode_step_reference_isolated(
+        &mut self,
+        variant: &str,
+        slots: &mut [Option<(&mut RequestCache, i32)>],
+    ) -> Result<Vec<Option<Result<Vec<f32>>>>> {
         self.meta.variant(variant)?;
         let cc = &self.meta.cache;
         let mut scratch = match self.ref_scratch.take() {
@@ -642,12 +730,16 @@ impl Engine {
                     model.decode_step_into(*tok, cache, &mut scratch);
                     let tq = Instant::now();
                     let before = cache.qlen;
-                    cache.append(&scratch.knew, &scratch.vnew, &scratch.qabs)?;
-                    if cache.qlen != before {
-                        self.timers.quantize_events += 1;
-                        self.timers.quantize_ns += tq.elapsed().as_nanos() as u64;
+                    match cache.append(&scratch.knew, &scratch.vnew, &scratch.qabs) {
+                        Ok(()) => {
+                            if cache.qlen != before {
+                                self.timers.quantize_events += 1;
+                                self.timers.quantize_ns += tq.elapsed().as_nanos() as u64;
+                            }
+                            results.push(Some(Ok(scratch.logits.clone())));
+                        }
+                        Err(e) => results.push(Some(Err(e))),
                     }
-                    results.push(Some(scratch.logits.clone()));
                 }
             }
         }
@@ -714,7 +806,19 @@ impl Engine {
         if let Some(ix) = self.prefix_index.clone() {
             let key = self.prefix_key_for(prompt, method);
             let mut ixb = ix.borrow_mut();
-            if let Some(entry) = ixb.lookup(key, prompt) {
+            // Injected prefix corruption (drawn only when an entry is
+            // actually resident): the entry is treated as having failed
+            // its token verify — distrusted, dropped, recorded as a
+            // collision-miss — and the request falls through to a full
+            // prefill. A corrupted entry is never served.
+            let corrupt = ixb.contains(key)
+                && self
+                    .faults
+                    .as_ref()
+                    .is_some_and(|f| f.borrow_mut().should_fail(FaultSite::PrefixCorrupt));
+            if corrupt {
+                ixb.discard_corrupt(key);
+            } else if let Some(entry) = ixb.lookup(key, prompt) {
                 let mut cache = self.cache_for(&spec.layers, method.clone());
                 cache.install_prefix(entry)?;
                 let run = PrefillRun::new_shared(
@@ -746,6 +850,14 @@ impl Engine {
         prompt: &[i32],
         max_chunks: usize,
     ) -> Result<bool> {
+        // Injected prefill-chunk fault: this advance errors before doing
+        // any work — the run's cache state is untouched, so the router's
+        // retry machinery can requeue the request cleanly.
+        if let Some(f) = &self.faults {
+            if f.borrow_mut().should_fail(FaultSite::PrefillChunk) {
+                bail!("injected transient fault: prefill chunk step");
+            }
+        }
         let model = RefModel::with_parts(
             self.meta.model.clone(),
             &self.weights,

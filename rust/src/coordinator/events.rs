@@ -117,7 +117,15 @@ pub fn validate_stream(events: &[Event], max_new_tokens: usize) -> Result<(), St
             if first_pos.is_some() || n_tokens > 0 {
                 return Err("tokens emitted without admission".into());
             }
-            if !matches!(reason, FinishReason::Rejected | FinishReason::Cancelled) {
+            // Error covers exhausted prefill retries; DeadlineExceeded a
+            // request shed from queue/backoff/prefill before admission
+            if !matches!(
+                reason,
+                FinishReason::Rejected
+                    | FinishReason::Cancelled
+                    | FinishReason::Error
+                    | FinishReason::DeadlineExceeded
+            ) {
                 return Err(format!("unadmitted stream finished with {reason:?}"));
             }
             if *tokens != 0 {

@@ -318,6 +318,50 @@ pub struct Metrics {
     /// Admissions the precision policy degraded below its top ladder rung
     /// because the pool could not cover the preferred variant's pages.
     pub policy_degradations: u64,
+    // --- failure handling: faults, retries, deadlines, watchdog ----------
+    /// Requests rejected at submit because the wait queue sat at
+    /// `ServerConfig::max_queue` (bounded-queue backpressure).
+    pub queue_rejections: u64,
+    /// Failed prefill runs re-queued for a backoff retry.
+    pub prefill_retries: u64,
+    /// Retry ladders that stepped down to a cheaper admission rung after
+    /// `MAX_PREFILL_ATTEMPTS` failures at one rung.
+    pub retry_degradations: u64,
+    /// Requests retired as `Error` after exhausting retries on the
+    /// cheapest rung.
+    pub retries_exhausted: u64,
+    /// Requests that completed a clean prefill after at least one failed
+    /// attempt — the retry ladder's success counter.
+    pub fault_recoveries: u64,
+    /// Live sessions retired as `Error` by a failed decode step (injected
+    /// fault or real append error); the rest of the sub-batch proceeds.
+    pub decode_errors: u64,
+    /// "Can't happen" accounting bugs survived by retiring one request as
+    /// `Error` instead of poisoning the tick.
+    pub internal_errors: u64,
+    /// Admitted work (in-flight prefill or live slot) retired at its tick
+    /// deadline.
+    pub deadline_exceeded: u64,
+    /// Queued or backoff-waiting requests shed at their deadline before
+    /// ever being admitted.
+    pub deadline_shed: u64,
+    /// Park-watchdog prefix-entry sheds (a slot starved
+    /// `PARK_WATCHDOG_DEGRADE` consecutive ticks frees pinned pages).
+    pub watchdog_degrades: u64,
+    /// Park-watchdog forced session sheds (starved `PARK_WATCHDOG_SHED`
+    /// consecutive ticks).
+    pub watchdog_sheds: u64,
+    /// Error retirements per tenant id (decode-step failures, exhausted
+    /// retries).
+    pub tenant_errors: Vec<(u32, u64)>,
+    /// Deadline retirements per tenant id.
+    pub tenant_deadlines: Vec<(u32, u64)>,
+    /// Fault-injection draws per site, gauge sampled from the injector
+    /// each tick (all zero when no fault plan is installed). Indexed by
+    /// `FaultSite::index()`.
+    pub faults_drawn: [u64; 4],
+    /// Injected failures per site (same indexing as `faults_drawn`).
+    pub faults_injected: [u64; 4],
     /// Park events per tenant id (fairness: who absorbs pool pressure).
     pub tenant_parks: Vec<(u32, u64)>,
     /// Deadlock preemptions per tenant id (who gets force-finished).
@@ -464,6 +508,24 @@ impl Metrics {
         bump(&mut self.tenant_preemptions, tenant);
     }
 
+    /// Count an error retirement (decode failure, exhausted retries)
+    /// against `tenant`.
+    pub fn note_tenant_error(&mut self, tenant: u32) {
+        bump(&mut self.tenant_errors, tenant);
+    }
+
+    /// Count a deadline retirement against `tenant`.
+    pub fn note_tenant_deadline(&mut self, tenant: u32) {
+        bump(&mut self.tenant_deadlines, tenant);
+    }
+
+    /// Record the fault injector's cumulative per-site counters (called
+    /// once per scheduling tick when a fault plan is installed).
+    pub fn observe_faults(&mut self, stats: &crate::util::faults::FaultStats) {
+        self.faults_drawn = stats.drawn;
+        self.faults_injected = stats.injected;
+    }
+
     /// Record the current pool counters (called once per scheduling tick).
     pub fn observe_pool(&mut self, stats: &crate::kvcache::pool::PoolStats) {
         self.pool_pages_leased = stats.leased;
@@ -531,6 +593,44 @@ impl Metrics {
         if self.policy_degradations > 0 {
             out.push_str(&format!(" policy_degradations={}", self.policy_degradations));
         }
+        let faults_total: u64 = self.faults_injected.iter().sum();
+        let failures_seen = faults_total > 0
+            || self.queue_rejections > 0
+            || self.prefill_retries > 0
+            || self.retry_degradations > 0
+            || self.retries_exhausted > 0
+            || self.fault_recoveries > 0
+            || self.decode_errors > 0
+            || self.internal_errors > 0
+            || self.deadline_exceeded > 0
+            || self.deadline_shed > 0
+            || self.watchdog_degrades > 0
+            || self.watchdog_sheds > 0;
+        if failures_seen {
+            out.push_str(&format!(
+                "\n  failures: faults_injected={faults_total} \
+                 (lease={} prefill={} decode={} prefix={}) \
+                 prefill_retries={} retry_degradations={} exhausted={} \
+                 recovered={} decode_errors={} internal={} \
+                 deadline_exceeded={} deadline_shed={} queue_rejects={} \
+                 watchdog degrade/shed={}/{}",
+                self.faults_injected[0],
+                self.faults_injected[1],
+                self.faults_injected[2],
+                self.faults_injected[3],
+                self.prefill_retries,
+                self.retry_degradations,
+                self.retries_exhausted,
+                self.fault_recoveries,
+                self.decode_errors,
+                self.internal_errors,
+                self.deadline_exceeded,
+                self.deadline_shed,
+                self.queue_rejections,
+                self.watchdog_degrades,
+                self.watchdog_sheds,
+            ));
+        }
         for t in self.tenants() {
             let name = if t.tenant == TENANT_OVERFLOW {
                 "overflow".to_string()
@@ -539,10 +639,13 @@ impl Metrics {
             };
             let parks = count_for(&self.tenant_parks, t.tenant);
             let preempts = count_for(&self.tenant_preemptions, t.tenant);
+            let errors = count_for(&self.tenant_errors, t.tenant);
+            let deadlines = count_for(&self.tenant_deadlines, t.tenant);
             out.push_str(&format!(
                 "\n  tenant {name}: served={} unserved={} \
                  ttft p50/p99={:.0}/{:.0} ms latency p50/p99={:.0}/{:.0} ms \
-                 queue p50/p99={:.0}/{:.0} ms parks={parks} preempt={preempts}",
+                 queue p50/p99={:.0}/{:.0} ms parks={parks} preempt={preempts} \
+                 errors={errors} deadlines={deadlines}",
                 t.completed,
                 t.unserved,
                 t.ttft.percentile(50.0),
@@ -783,6 +886,44 @@ mod tests {
         assert_eq!(count_for(&m.tenant_parks, 3), 2);
         assert_eq!(count_for(&m.tenant_parks, 4), 0);
         assert_eq!(count_for(&m.tenant_preemptions, 4), 1);
+    }
+
+    #[test]
+    fn failure_counters_render_only_when_engaged() {
+        let mut m = Metrics::default();
+        // a clean run keeps the summary free of the failures line
+        assert!(!m.summary().contains("failures:"), "{}", m.summary());
+        m.prefill_retries = 3;
+        m.retry_degradations = 1;
+        m.fault_recoveries = 2;
+        m.decode_errors = 1;
+        m.deadline_shed = 4;
+        m.queue_rejections = 2;
+        m.faults_injected = [5, 3, 1, 0];
+        m.faults_drawn = [50, 30, 10, 0];
+        m.note_tenant_error(7);
+        m.note_tenant_deadline(7);
+        m.note_tenant_deadline(7);
+        m.completed.push(Completed { tenant: 7, ..completed(1) });
+        let s = m.summary();
+        assert!(s.contains("failures: faults_injected=9"), "{s}");
+        assert!(s.contains("prefill_retries=3"), "{s}");
+        assert!(s.contains("deadline_shed=4"), "{s}");
+        assert!(s.contains("errors=1 deadlines=2"), "{s}");
+        assert_eq!(count_for(&m.tenant_errors, 7), 1);
+        assert_eq!(count_for(&m.tenant_deadlines, 7), 2);
+    }
+
+    #[test]
+    fn observe_faults_copies_per_site_counters() {
+        let mut m = Metrics::default();
+        let stats = crate::util::faults::FaultStats {
+            drawn: [10, 20, 30, 40],
+            injected: [1, 2, 3, 4],
+        };
+        m.observe_faults(&stats);
+        assert_eq!(m.faults_drawn, [10, 20, 30, 40]);
+        assert_eq!(m.faults_injected, [1, 2, 3, 4]);
     }
 
     #[test]

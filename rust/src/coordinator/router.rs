@@ -66,7 +66,22 @@ use crate::model::tokenizer;
 use crate::quant::methods::Method;
 use crate::quant::policy::{PrecisionPolicy, SpecCosts};
 use crate::runtime::registry::pick_bucket;
+use crate::util::faults::{FaultInjector, FaultPlan};
 use crate::util::rng::Pcg32;
+
+/// Failed-prefill retry budget per ladder rung: after this many attempts
+/// the request retries at the next cheaper rung (if the ladder has one)
+/// before giving up as [`FinishReason::Error`].
+const MAX_PREFILL_ATTEMPTS: u32 = 3;
+
+/// Consecutive parked ticks before the park-watchdog *degrades* on the
+/// slot's behalf (sheds a retained prefix-index entry to free pages).
+const PARK_WATCHDOG_DEGRADE: u32 = 8;
+
+/// Consecutive parked ticks before the park-watchdog *sheds* the slot
+/// itself (retired as CacheFull) — a slot starved this long is blocking a
+/// fixed decode slot without any prospect of progress.
+const PARK_WATCHDOG_SHED: u32 = 16;
 
 pub struct ServerConfig {
     pub memory_budget_bytes: usize,
@@ -99,6 +114,19 @@ pub struct ServerConfig {
     /// (counted in `Metrics::policy_degradations`) instead of stalling the
     /// queue. Requests with an explicit `method` bypass the policy.
     pub policy: Option<PrecisionPolicy>,
+    /// Bounded wait queue: a submit arriving while this many requests are
+    /// already waiting is rejected immediately (terminal `Rejected` record,
+    /// counted in `Metrics::queue_rejections`) so backpressure reaches the
+    /// caller instead of the queue growing without bound — under a `Fixed`
+    /// policy with a full pool, queued requests otherwise wait forever.
+    /// `None` keeps the queue unbounded.
+    pub max_queue: Option<usize>,
+    /// Deterministic fault plan (chaos testing): installing an armed plan
+    /// wires a shared [`FaultInjector`] into the pool (lease denial) and
+    /// the engine (prefill-chunk, decode-step, and prefix-corruption
+    /// faults). Same seed → same fault schedule. `None` (the default)
+    /// leaves every hook free on the happy path.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for ServerConfig {
@@ -112,6 +140,8 @@ impl Default for ServerConfig {
             completed_ring: crate::coordinator::metrics::COMPLETED_RING_DEFAULT,
             prefix_cache_pages: None,
             policy: None,
+            max_queue: None,
+            faults: None,
         }
     }
 }
@@ -154,6 +184,25 @@ impl PendingPrefill {
     }
 }
 
+/// A failed prefill waiting out its ticks-based backoff before re-entering
+/// the wait queue. The attempt/rung state lives in `Server::retry_state`
+/// (keyed by id), so the queue round-trip stays a plain `Request`.
+struct RetryTicket {
+    req: Request,
+    /// Tick at which this retry re-enters the wait queue.
+    ready_tick: u64,
+}
+
+/// Per-request retry bookkeeping: how many prefill attempts failed at the
+/// current ladder rung, and the lowest rung the request may be admitted at
+/// (advanced one rung per exhausted attempt budget — the PM-KVQ-style
+/// degradation axis: retry cheaper, don't crash or camp the queue).
+#[derive(Clone, Copy, Default)]
+struct RetryState {
+    attempt: u32,
+    min_rank: usize,
+}
+
 /// Terminal-record slot in `Server::finished`: never a second copy of the
 /// `Completed` (which lives in the bounded `metrics.completed` ring), and
 /// demoted to a stub once a poll has observed it. The reason/count ride
@@ -192,6 +241,20 @@ pub struct Server {
     /// Worst-case byte cost of every spec under this engine's Meta — the
     /// policy's cost model, computed once at construction.
     spec_costs: SpecCosts,
+    /// Monotonic tick counter — the clock for deadlines and retry backoff
+    /// (ticks, not wall time: deterministic under the seeded harness).
+    ticks: u64,
+    /// Submit tick per queued/in-flight id (deadline accounting).
+    submit_ticks: HashMap<RequestId, u64>,
+    /// Failed prefills waiting out their backoff (see [`RetryTicket`]).
+    retries: Vec<RetryTicket>,
+    /// Retry bookkeeping per in-flight id (see [`RetryState`]).
+    retry_state: HashMap<RequestId, RetryState>,
+    /// Bounded wait queue (see `ServerConfig::max_queue`).
+    max_queue: Option<usize>,
+    /// Shared deterministic fault injector (chaos testing); also installed
+    /// into the pool and the engine. `None` = no plan.
+    faults: Option<Rc<RefCell<FaultInjector>>>,
 }
 
 impl Server {
@@ -224,6 +287,13 @@ impl Server {
                 pool.page_deploy_bytes(),
             ))));
         }
+        // deterministic fault injection: one shared injector wired into the
+        // pool (lease denial) and the engine (prefill/decode/prefix sites)
+        let faults = cfg.faults.filter(FaultPlan::is_armed).map(FaultInjector::shared);
+        if let Some(f) = &faults {
+            pool.set_fault_injector(Rc::clone(f));
+            engine.set_faults(Rc::clone(f));
+        }
         Server {
             batcher: Batcher::new(batch),
             scheduler: Scheduler::with_pool(
@@ -251,8 +321,19 @@ impl Server {
             prefill_seq: 0,
             policy: cfg.policy,
             spec_costs: SpecCosts::from_meta(&engine.meta),
+            ticks: 0,
+            submit_ticks: HashMap::new(),
+            retries: Vec::new(),
+            retry_state: HashMap::new(),
+            max_queue: cfg.max_queue,
+            faults,
             engine,
         }
+    }
+
+    /// Ticks the server has run (the deadline/backoff clock).
+    pub fn ticks(&self) -> u64 {
+        self.ticks
     }
 
     /// The request's admission ladder: candidate methods most-preferred
@@ -296,6 +377,7 @@ impl Server {
         let id = req.id;
         let in_flight = self.batcher.waiting.iter().any(|r| r.id == id)
             || self.prefills.iter().any(|p| p.req.id == id)
+            || self.retries.iter().any(|t| t.req.id == id)
             || self.batcher.slots.iter().flatten().any(|s| s.request.id == id);
         if in_flight {
             bail!("request id {id} is already in flight on this server");
@@ -303,7 +385,16 @@ impl Server {
         self.finished.remove(&id);
         let now = Instant::now();
         self.submit_times.insert(id, now);
+        self.submit_ticks.insert(id, self.ticks);
         self.events.queued(id);
+        // bounded queue: reject-at-submit backpressure instead of unbounded
+        // growth (a Fixed policy over a full pool never drains the head)
+        if self.max_queue.is_some_and(|maxq| self.batcher.waiting.len() >= maxq) {
+            self.metrics.queue_rejections += 1;
+            self.metrics.rejected += 1;
+            self.finalize_unadmitted(id, req.prompt.len(), req.tenant, FinishReason::Rejected);
+            return Ok(id);
+        }
         let fits = pick_bucket(&self.engine.meta.cache.prefill_buckets, req.prompt.len()).is_ok();
         // at least one ladder rung must be affordable (worst-case footprint
         // inside the whole budget) and admissible. Prefix-index hits charge
@@ -334,9 +425,9 @@ impl Server {
         Ok(id)
     }
 
-    /// Any queued, prefilling, or live work left?
+    /// Any queued, prefilling, retrying, or live work left?
     pub fn has_work(&self) -> bool {
-        self.batcher.has_work() || !self.prefills.is_empty()
+        self.batcher.has_work() || !self.prefills.is_empty() || !self.retries.is_empty()
     }
 
     /// Status of one request. The FIRST poll observing a terminal request
@@ -367,9 +458,11 @@ impl Server {
         }
         if self.batcher.waiting.iter().any(|r| r.id == id)
             || self.prefills.iter().any(|p| p.req.id == id)
+            || self.retries.iter().any(|t| t.req.id == id)
         {
-            // chunked prefill in flight: no slot, no tokens yet — still
-            // pre-admission from the event stream's point of view
+            // chunked prefill in flight or a retry waiting out its backoff:
+            // no slot, no tokens yet — still pre-admission from the event
+            // stream's point of view
             return RequestStatus::Queued;
         }
         if let Some(s) = self.batcher.slots.iter().flatten().find(|s| s.request.id == id) {
@@ -393,6 +486,12 @@ impl Server {
             let p = self.prefills.remove(pos);
             self.metrics.cancelled += 1;
             self.finalize_unadmitted(id, p.req.prompt.len(), p.req.tenant, FinishReason::Cancelled);
+            return true;
+        }
+        if let Some(pos) = self.retries.iter().position(|t| t.req.id == id) {
+            let t = self.retries.remove(pos);
+            self.metrics.cancelled += 1;
+            self.finalize_unadmitted(id, t.req.prompt.len(), t.req.tenant, FinishReason::Cancelled);
             return true;
         }
         for slot in self.batcher.slots.iter_mut() {
@@ -443,16 +542,24 @@ impl Server {
         Ok(self.metrics.completed.since(before))
     }
 
-    /// One scheduling cycle: admissions (start chunked prefills), a
-    /// budgeted round of prefill chunk work (completed prompts install into
-    /// decode slots), then one decode step per live variant group; pool
-    /// occupancy gauges are sampled at the end.
+    /// One scheduling cycle: the tick clock advances, deadlines are
+    /// enforced (queued past-deadline requests shed, live ones retire),
+    /// backoff-expired retries re-enter the queue, then admissions (start
+    /// chunked prefills), a budgeted round of prefill chunk work
+    /// (completed prompts install into decode slots), then one decode step
+    /// per live variant group; pool occupancy gauges are sampled at the
+    /// end. Per-request failures inside any phase retire only that request
+    /// — `Err` from a tick is reserved for batch-level contract
+    /// violations, never a single tenant's fault.
     pub fn tick(&mut self) -> Result<()> {
         if self.metrics.t_start.is_none() {
             self.metrics.start();
         }
-        self.admit()?;
-        self.advance_prefills()?;
+        self.ticks += 1;
+        self.enforce_deadlines();
+        self.release_ready_retries();
+        self.admit();
+        self.advance_prefills();
         self.decode()?;
         // --- reap finished ----------------------------------------------
         for sess in self.batcher.reap() {
@@ -475,7 +582,217 @@ impl Server {
             let stats = ix.borrow().stats();
             self.metrics.observe_prefix(&stats);
         }
+        if let Some(f) = &self.faults {
+            self.metrics.observe_faults(&f.borrow().stats());
+        }
         Ok(())
+    }
+
+    /// Cross-subsystem self-audit, callable between ticks (chaos soak runs
+    /// it after every one; tests assert it at drain). Checks that the three
+    /// independent bookkeepers — pool lease counter, cache page holders,
+    /// prefix-index pin counter — agree, and that every in-flight request
+    /// id lives in exactly one lifecycle stage. Returns the first violation
+    /// as an error; `Ok(())` means the books balance.
+    pub fn check_invariants(&self) -> Result<()> {
+        // 1. page accounting: every page the pool counts as leased must be
+        //    held by a namable owner — a live slot's or in-flight prefill's
+        //    private pages, plus each DISTINCT shared page reachable from a
+        //    holder or the prefix index (the pool charges shared pages once)
+        let mut private = 0usize;
+        let mut shared_ids: Vec<usize> = Vec::new();
+        for sess in self.batcher.slots.iter().flatten() {
+            private += sess.cache.private_pages();
+            sess.cache.collect_shared_page_ids(&mut shared_ids);
+        }
+        for p in &self.prefills {
+            private += p.cp.cache.private_pages();
+            p.cp.cache.collect_shared_page_ids(&mut shared_ids);
+        }
+        if let Some(ix) = self.engine.prefix_index() {
+            let ix = ix.borrow();
+            let mut index_ids: Vec<usize> = Vec::new();
+            ix.collect_page_ids(&mut index_ids);
+            index_ids.sort_unstable();
+            index_ids.dedup();
+            if index_ids.len() != ix.pages_pinned() {
+                bail!(
+                    "invariant violation: prefix index pins {} pages but its \
+                     entries hold {} distinct pages",
+                    ix.pages_pinned(),
+                    index_ids.len()
+                );
+            }
+            shared_ids.extend_from_slice(&index_ids);
+        }
+        shared_ids.sort_unstable();
+        shared_ids.dedup();
+        let expected = private + shared_ids.len();
+        let leased = self.pool.leased();
+        if leased != expected {
+            bail!(
+                "invariant violation: pool leases {leased} pages but live \
+                 holders account for {expected} ({private} private + {} \
+                 distinct shared)",
+                shared_ids.len()
+            );
+        }
+        // 2. id-disjointness: each in-flight id lives in exactly one stage,
+        //    and never alongside a terminal record
+        let mut ids: Vec<RequestId> = Vec::new();
+        ids.extend(self.batcher.waiting.iter().map(|r| r.id));
+        ids.extend(self.retries.iter().map(|t| t.req.id));
+        ids.extend(self.prefills.iter().map(|p| p.req.id));
+        ids.extend(self.batcher.slots.iter().flatten().map(|s| s.request.id));
+        let n = ids.len();
+        let mut uniq = ids.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        if uniq.len() != n {
+            bail!("invariant violation: a request id occupies two lifecycle stages");
+        }
+        for id in &ids {
+            if self.finished.contains_key(id) {
+                bail!("invariant violation: request {id} is both in flight and terminal");
+            }
+        }
+        // 3. submit bookkeeping covers exactly the in-flight ids (terminal
+        //    requests must not accumulate clock entries forever)
+        for id in &ids {
+            if !self.submit_times.contains_key(id) || !self.submit_ticks.contains_key(id) {
+                bail!("invariant violation: in-flight request {id} has no submit record");
+            }
+        }
+        if self.submit_times.len() != n || self.submit_ticks.len() != n {
+            bail!(
+                "invariant violation: {} submit-time / {} submit-tick records \
+                 for {n} in-flight requests",
+                self.submit_times.len(),
+                self.submit_ticks.len()
+            );
+        }
+        // 4. between ticks no retired session may still hold a slot (reap
+        //    runs every tick), and retry state only exists for in-flight ids
+        if self.batcher.slots.iter().flatten().any(|s| s.is_finished()) {
+            bail!("invariant violation: finished session still resident after reap");
+        }
+        for id in self.retry_state.keys() {
+            if !ids.contains(id) {
+                bail!("invariant violation: retry state for request {id} not in flight");
+            }
+        }
+        Ok(())
+    }
+
+    /// Has a request with `deadline_ticks = d` submitted at `t0` expired?
+    fn past_deadline(&self, t0: u64, deadline: Option<u64>) -> bool {
+        deadline.is_some_and(|d| self.ticks.saturating_sub(t0) >= d)
+    }
+
+    /// Enforce tick-based per-request deadlines, most-upstream first:
+    /// queued requests (and retries waiting out a backoff) past their
+    /// deadline are shed from the queue — they must not stall the head —
+    /// in-flight prefills drop (their leases return), and live slots
+    /// retire as `DeadlineExceeded` this tick.
+    fn enforce_deadlines(&mut self) {
+        // queued
+        let expired: Vec<RequestId> = self
+            .batcher
+            .waiting
+            .iter()
+            .filter(|r| {
+                let t0 = self.submit_ticks.get(&r.id).copied().unwrap_or(self.ticks);
+                self.past_deadline(t0, r.deadline_ticks)
+            })
+            .map(|r| r.id)
+            .collect();
+        for id in expired {
+            if let Some(req) = self.batcher.remove_waiting(id) {
+                self.metrics.deadline_shed += 1;
+                self.metrics.note_tenant_deadline(req.tenant);
+                self.finalize_unadmitted(
+                    id,
+                    req.prompt.len(),
+                    req.tenant,
+                    FinishReason::DeadlineExceeded,
+                );
+            }
+        }
+        // backoff retries
+        let mut i = 0;
+        while i < self.retries.len() {
+            let r = &self.retries[i].req;
+            let t0 = self.submit_ticks.get(&r.id).copied().unwrap_or(self.ticks);
+            if self.past_deadline(t0, r.deadline_ticks) {
+                let t = self.retries.remove(i);
+                self.metrics.deadline_shed += 1;
+                self.metrics.note_tenant_deadline(t.req.tenant);
+                self.finalize_unadmitted(
+                    t.req.id,
+                    t.req.prompt.len(),
+                    t.req.tenant,
+                    FinishReason::DeadlineExceeded,
+                );
+            } else {
+                i += 1;
+            }
+        }
+        // in-flight prefills (dropping the run returns its leased pages)
+        let mut i = 0;
+        while i < self.prefills.len() {
+            let r = &self.prefills[i].req;
+            let t0 = self.submit_ticks.get(&r.id).copied().unwrap_or(self.ticks);
+            if self.past_deadline(t0, r.deadline_ticks) {
+                let p = self.prefills.remove(i);
+                self.metrics.deadline_exceeded += 1;
+                self.metrics.note_tenant_deadline(p.req.tenant);
+                self.finalize_unadmitted(
+                    p.req.id,
+                    p.req.prompt.len(),
+                    p.req.tenant,
+                    FinishReason::DeadlineExceeded,
+                );
+            } else {
+                i += 1;
+            }
+        }
+        // live slots (reaped into terminal records later this tick)
+        let now = self.ticks;
+        for slot in self.batcher.slots.iter_mut() {
+            let Some(sess) = slot.as_mut() else { continue };
+            if sess.is_finished() {
+                continue;
+            }
+            let t0 = self
+                .submit_ticks
+                .get(&sess.request.id)
+                .copied()
+                .unwrap_or(now);
+            let expired = sess
+                .request
+                .deadline_ticks
+                .is_some_and(|d| now.saturating_sub(t0) >= d);
+            if expired {
+                sess.finish(FinishReason::DeadlineExceeded);
+                self.metrics.deadline_exceeded += 1;
+                self.metrics.note_tenant_deadline(sess.request.tenant);
+            }
+        }
+    }
+
+    /// Move backoff-expired retries back into the wait queue (FIFO at the
+    /// back — a retry does not jump fresh arrivals).
+    fn release_ready_retries(&mut self) {
+        let now = self.ticks;
+        let mut i = 0;
+        while i < self.retries.len() {
+            if self.retries[i].ready_tick <= now {
+                let t = self.retries.remove(i);
+                self.batcher.waiting.push_back(t.req);
+            } else {
+                i += 1;
+            }
+        }
     }
 
     /// Admit up to the scheduler quota of waiting requests into chunked
@@ -486,7 +803,7 @@ impl Server {
     /// allowed. Each in-flight prefill holds a claim on one decode slot
     /// (installed when its run completes), so admissions are capped by
     /// `free slots − pending prefills`.
-    fn admit(&mut self) -> Result<()> {
+    fn admit(&mut self) {
         let free = (self.batcher.slots.len() - self.batcher.live())
             .saturating_sub(self.prefills.len());
         let quota = self.scheduler.admission_quota(free, self.batcher.waiting.len());
@@ -501,13 +818,31 @@ impl Server {
             // the pool can cover — under pressure that is a cheaper variant
             // instead of a stall.
             let ladder = self.admission_ladder(&req);
+            // a request that exhausted its retries at one rung re-enters
+            // pinned to the next cheaper one: rungs below min_rank already
+            // failed MAX_PREFILL_ATTEMPTS times and are not offered again
+            let min_rank = self
+                .retry_state
+                .get(&req.id)
+                .map(|s| s.min_rank)
+                .unwrap_or(0)
+                .min(ladder.len().saturating_sub(1));
             // pages already promised to in-flight prefills but not leased
             // yet (leasing is incremental) count as spoken for
             let outstanding: usize =
                 self.prefills.iter().map(PendingPrefill::outstanding_pages).sum();
             let mut chosen: Option<(Method, usize, usize)> = None;
             for (rank, method) in ladder.iter().enumerate() {
-                let needed = self.engine.prefill_pages_for_prompt(&req.prompt, method)?;
+                if rank < min_rank {
+                    continue;
+                }
+                // a rung whose page claim cannot even be derived (unknown
+                // bucket/variant for this prompt) is skipped, not a tick
+                // error — the ladder may still hold a serveable rung
+                let Ok(needed) = self.engine.prefill_pages_for_prompt(&req.prompt, method)
+                else {
+                    continue;
+                };
                 if needed == 0 {
                     // this admission rests on a prefix entry: make it the
                     // most-recently-used so the shed loop below cannot
@@ -516,9 +851,9 @@ impl Server {
                 }
                 // under pressure, retained prefix entries yield before the
                 // preferred rung degrades (their pages free if nobody else
-                // holds them); only the top rung sheds — a lower rung
-                // exists precisely to avoid evicting retained state
-                if rank == 0 {
+                // holds them); only the top offered rung sheds — a lower
+                // rung exists precisely to avoid evicting retained state
+                if rank == min_rank {
                     while !self.scheduler.try_admit_pages(needed + outstanding)
                         && self.shed_prefix_entry()
                     {}
@@ -526,7 +861,10 @@ impl Server {
                 // shedding may have evicted the very entry this prompt hit
                 // — re-derive the claim so a now-missing entry charges full
                 // pages
-                let needed = self.engine.prefill_pages_for_prompt(&req.prompt, method)?;
+                let Ok(needed) = self.engine.prefill_pages_for_prompt(&req.prompt, method)
+                else {
+                    continue;
+                };
                 if self.scheduler.try_admit_pages(needed + outstanding) {
                     chosen = Some((method.clone(), needed, rank));
                     break;
@@ -534,13 +872,12 @@ impl Server {
             }
             let Some((method, needed, rank)) = chosen else {
                 // not even the cheapest rung fits right now
-                let cheapest_fits = match ladder.last() {
-                    Some(method) => {
-                        let n = self.engine.prefill_pages_for_prompt(&req.prompt, method)?;
-                        self.scheduler.pages_admissible(n)
-                    }
-                    None => false,
-                };
+                let cheapest_fits = ladder.last().is_some_and(|method| {
+                    self.engine
+                        .prefill_pages_for_prompt(&req.prompt, method)
+                        .map(|n| self.scheduler.pages_admissible(n))
+                        .unwrap_or(false)
+                });
                 if !cheapest_fits {
                     // admitted at submit against a prefix entry that has
                     // since been shed, and the pages can never fit
@@ -560,7 +897,7 @@ impl Server {
                 self.batcher.waiting.push_front(req);
                 break;
             };
-            if rank > 0 {
+            if rank > min_rank {
                 self.metrics.policy_degradations += 1;
             }
             // the fallible admission path: if it errors (e.g. a decode
@@ -595,7 +932,6 @@ impl Server {
                 }
             }
         }
-        Ok(())
     }
 
     /// Spend the tick's chunk budget on in-flight prefills,
@@ -613,9 +949,10 @@ impl Server {
     /// flushes lease directly and may drain it between ticks) is **parked**
     /// for the tick — same philosophy as the decode slots' flush parking —
     /// and resumes when pages free, instead of advancing into a failing
-    /// lease and dying. A run that still errors mid-flight retires as
-    /// Rejected; dropping its cache returns every leased page.
-    fn advance_prefills(&mut self) -> Result<()> {
+    /// lease and dying. A run that errors mid-flight drops (every leased
+    /// page returns) and enters the bounded retry-with-degradation path —
+    /// only the failing request is touched, never the tick.
+    fn advance_prefills(&mut self) {
         if self.prefills.len() > 1 {
             let nl = self.engine.meta.model.n_layers;
             self.prefills
@@ -641,23 +978,55 @@ impl Server {
             match res {
                 Err(e) => {
                     let p = self.prefills.remove(i);
-                    self.metrics.rejected += 1;
-                    eprintln!("mixkvq: prefill of request {} failed: {e:#}", p.req.id);
-                    self.finalize_unadmitted(
-                        p.req.id,
-                        p.req.prompt.len(),
-                        p.req.tenant,
-                        FinishReason::Rejected,
-                    );
+                    self.handle_prefill_failure(p, e);
                 }
                 Ok(true) => {
                     let p = self.prefills.remove(i);
-                    self.install_prefilled(p)?;
+                    self.install_prefilled(p);
                 }
                 Ok(false) => i += 1,
             }
         }
-        Ok(())
+    }
+
+    /// A prefill step failed — injected fault or real error. The failed run
+    /// drops here (every page it leased returns to the pool) and the
+    /// request enters bounded retry-with-backoff: it re-queues after an
+    /// exponential tick backoff, and once `MAX_PREFILL_ATTEMPTS` failures
+    /// accumulate at one admission-ladder rung it retries pinned to the
+    /// next *cheaper* rung instead. A failure with no cheaper rung left
+    /// retires the request as `Error`. Only the failing request is
+    /// touched; the tick and every other in-flight request proceed.
+    fn handle_prefill_failure(&mut self, p: PendingPrefill, e: anyhow::Error) {
+        let PendingPrefill { req, .. } = p;
+        let id = req.id;
+        let mut st = self.retry_state.get(&id).copied().unwrap_or_default();
+        st.attempt += 1;
+        if st.attempt >= MAX_PREFILL_ATTEMPTS {
+            if st.min_rank + 1 < self.admission_ladder(&req).len() {
+                st.min_rank += 1;
+                st.attempt = 0;
+                self.metrics.retry_degradations += 1;
+            } else {
+                self.metrics.retries_exhausted += 1;
+                self.metrics.note_tenant_error(req.tenant);
+                eprintln!(
+                    "mixkvq: request {id} failed its last prefill attempt \
+                     on the cheapest rung: {e:#}"
+                );
+                self.finalize_unadmitted(
+                    id,
+                    req.prompt.len(),
+                    req.tenant,
+                    FinishReason::Error,
+                );
+                return;
+            }
+        }
+        self.metrics.prefill_retries += 1;
+        let backoff = 1u64 << st.attempt.min(6);
+        self.retry_state.insert(id, st);
+        self.retries.push(RetryTicket { req, ready_tick: self.ticks + backoff });
     }
 
     /// A completed chunked prefill becomes a live session: the prompt is
@@ -666,13 +1035,18 @@ impl Server {
     /// the first token samples from the last-position logits and the
     /// session installs into a free slot (guaranteed by the admission
     /// accounting).
-    fn install_prefilled(&mut self, p: PendingPrefill) -> Result<()> {
+    fn install_prefilled(&mut self, p: PendingPrefill) {
         let PendingPrefill { req, method, cp, .. } = p;
         let ChunkedPrefill { mut cache, run } = cp;
+        let id = req.id;
+        if self.retry_state.remove(&id).is_some() {
+            // the request had failed at least one prefill attempt and has
+            // now completed cleanly — the retry ladder did its job
+            self.metrics.fault_recoveries += 1;
+        }
         self.engine
             .register_prefix(&mut cache, &req.prompt, &method, run.last_logits());
         let first = sampler::sample(run.last_logits(), req.sampling, &mut self.rng);
-        let id = req.id;
         let max_new = req.max_new_tokens;
         let t_submit = self.submit_times.get(&id).copied().unwrap_or_else(Instant::now);
         let mut sess = Session::new(req, cache, first, t_submit);
@@ -684,18 +1058,27 @@ impl Server {
         if first == tokenizer::EOS {
             sess.finish(FinishReason::Eos);
             self.finalize(sess);
-            return Ok(());
+            return;
         }
         if max_new <= 1 {
             sess.finish(FinishReason::MaxTokens);
             self.finalize(sess);
-            return Ok(());
+            return;
         }
         let Some(slot) = self.batcher.free_slot() else {
-            bail!("no free decode slot for completed prefill (admission accounting bug)");
+            // admission accounting bug — but one stranded request must not
+            // poison the tick for every other tenant: retire it as Error
+            // (its cache, and every leased page, drops with the session)
+            self.metrics.internal_errors += 1;
+            eprintln!(
+                "mixkvq: no free decode slot for completed prefill of request \
+                 {id} (admission accounting bug)"
+            );
+            sess.finish(FinishReason::Error);
+            self.finalize(sess);
+            return;
         };
         self.batcher.install(slot, sess);
-        Ok(())
     }
 
     /// One decode step over each live (variant, rotation) sub-batch,
@@ -723,6 +1106,8 @@ impl Server {
         let available = self.pool.available();
         let mut pending = 0usize;
         let mut live = 0usize;
+        let mut watchdog_degrades = 0usize;
+        let mut watchdog_victims: Vec<usize> = Vec::new();
         for (i, slot) in self.batcher.slots.iter_mut().enumerate() {
             let Some(sess) = slot.as_mut() else { continue };
             if sess.is_finished() {
@@ -741,6 +1126,7 @@ impl Server {
             // only when the residual is about to overflow too.
             sess.cache.flush_hold = !covered;
             if covered || sess.cache.residual_headroom() > 1 {
+                sess.parked_streak = 0;
                 if sess.parked {
                     sess.parked = false;
                     self.metrics.pool_resumes += 1;
@@ -752,22 +1138,49 @@ impl Server {
                     self.metrics.note_tenant_park(sess.request.tenant);
                 }
                 parked[i] = true;
+                // park-watchdog: a slot starved for this many CONSECUTIVE
+                // ticks escalates — first frees pinned prefix pages, then
+                // sheds itself rather than starve forever (each threshold
+                // fires once per streak; a resume resets the streak)
+                sess.parked_streak += 1;
+                if sess.parked_streak == PARK_WATCHDOG_SHED {
+                    watchdog_victims.push(i);
+                } else if sess.parked_streak == PARK_WATCHDOG_DEGRADE {
+                    watchdog_degrades += 1;
+                }
+            }
+        }
+        for _ in 0..watchdog_degrades {
+            if self.shed_prefix_entry() {
+                self.metrics.watchdog_degrades += 1;
+            }
+        }
+        for i in watchdog_victims {
+            if let Some(sess) = self.batcher.slots[i].as_mut() {
+                if !sess.is_finished() {
+                    sess.finish(FinishReason::CacheFull);
+                    self.metrics.watchdog_sheds += 1;
+                    self.metrics.note_tenant_preempt(sess.request.tenant);
+                }
             }
         }
         let n_parked = parked.iter().filter(|&&p| p).count();
         if live > 0 && n_parked == live {
             // shed the largest PRIVATE page-holder: shedding a shared-page
             // holder frees nothing while co-tenants or the index keep the
-            // pages alive
+            // pages alive (skip anything a watchdog just finished)
             let victim = self
                 .batcher
                 .slots
                 .iter()
                 .enumerate()
-                .filter(|(i, s)| parked[*i] && s.is_some())
+                .filter(|(i, s)| {
+                    parked[*i] && s.as_ref().is_some_and(|x| !x.is_finished())
+                })
                 .max_by_key(|(_, s)| s.as_ref().map(|x| x.cache.private_pages()).unwrap_or(0))
                 .map(|(i, _)| i);
             if let Some(i) = victim {
+                // unwrap guarded: the filter above only yields occupied slots
                 let sess = self.batcher.slots[i].as_mut().unwrap();
                 sess.finish(FinishReason::CacheFull);
                 let tenant = sess.request.tenant;
@@ -804,18 +1217,36 @@ impl Server {
                     _ => slots.push(None),
                 }
             }
-            let logits = self.engine.decode_step_variant(&group.variant, &rot, &mut slots)?;
+            // per-slot isolation: a slot whose step failed (injected fault
+            // or real append error) retires alone with `Error` — the rest
+            // of the sub-batch keeps its logits, and the tick proceeds.
+            // `Err` from the call itself is a batch-contract violation
+            // (slot-count mismatch), never one tenant's fault.
+            let step = self.engine.decode_step_isolated(&group.variant, &rot, &mut slots)?;
             drop(slots);
-            for (i, lg) in logits.into_iter().enumerate() {
-                if let (Some(sess), Some(lg)) = (self.batcher.slots[i].as_mut(), lg) {
-                    if sess.cache.remaining() == 0 {
-                        sess.finish(FinishReason::CacheFull);
-                        continue;
+            for (i, res) in step.into_iter().enumerate() {
+                let Some(res) = res else { continue };
+                let Some(sess) = self.batcher.slots[i].as_mut() else { continue };
+                match res {
+                    Ok(lg) => {
+                        if sess.cache.remaining() == 0 {
+                            sess.finish(FinishReason::CacheFull);
+                            continue;
+                        }
+                        let tok = sampler::sample(&lg, sess.request.sampling, &mut self.rng);
+                        let id = sess.request.id;
+                        sess.push_token(tok);
+                        self.events.token(id, tok);
                     }
-                    let tok = sampler::sample(&lg, sess.request.sampling, &mut self.rng);
-                    let id = sess.request.id;
-                    sess.push_token(tok);
-                    self.events.token(id, tok);
+                    Err(e) => {
+                        self.metrics.decode_errors += 1;
+                        self.metrics.note_tenant_error(sess.request.tenant);
+                        eprintln!(
+                            "mixkvq: decode step of request {} failed: {e:#}",
+                            sess.request.id
+                        );
+                        sess.finish(FinishReason::Error);
+                    }
                 }
             }
         }
@@ -838,6 +1269,8 @@ impl Server {
     fn finalize(&mut self, sess: Session) {
         let c = make_completed(&sess);
         self.submit_times.remove(&c.id);
+        self.submit_ticks.remove(&c.id);
+        self.retry_state.remove(&c.id);
         self.events.finished(c.id, c.reason, c.tokens.len());
         let (id, reason, n_tokens) = (c.id, c.reason, c.tokens.len());
         let seq = self.metrics.completed.push(c);
@@ -854,6 +1287,8 @@ impl Server {
         reason: FinishReason,
     ) {
         let t_submit = self.submit_times.remove(&id).unwrap_or_else(Instant::now);
+        self.submit_ticks.remove(&id);
+        self.retry_state.remove(&id);
         let waited = t_submit.elapsed().as_secs_f64() * 1e3;
         let c = Completed {
             id,

@@ -26,6 +26,13 @@ pub struct Request {
     /// reservoirs, park/preempt fairness counters). Single-tenant callers
     /// pass 0.
     pub tenant: u32,
+    /// Per-request deadline in **server ticks** (not wall-clock), counted
+    /// from submit. A queued request past its deadline is shed from the
+    /// queue (instead of stalling the head); a live one retires as
+    /// [`FinishReason::DeadlineExceeded`]. `None` = no deadline. Ticks keep
+    /// deadline outcomes deterministic under the seeded traffic harness —
+    /// wall-clock deadlines would make the fingerprint load-dependent.
+    pub deadline_ticks: Option<u64>,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -36,10 +43,18 @@ pub enum FinishReason {
     /// Cancelled via `Server::cancel` (queued or mid-decode).
     Cancelled,
     /// Rejected: at submit (prompt exceeds every prefill bucket, unknown
-    /// decode variant, or worst-case footprint beyond the whole memory
-    /// budget) or at admission (e.g. the method's decode artifact failed
-    /// to load).
+    /// decode variant, worst-case footprint beyond the whole memory
+    /// budget, or a full bounded queue) or at admission (e.g. the method's
+    /// decode artifact failed to load).
     Rejected,
+    /// A per-request error (injected fault, decode-step failure, exhausted
+    /// prefill retries) retired this request. Error isolation: only the
+    /// failing request carries this reason — the tick, its variant group,
+    /// and every other request proceed.
+    Error,
+    /// The request's tick-based deadline (`Request::deadline_ticks`)
+    /// expired before it finished.
+    DeadlineExceeded,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -67,6 +82,10 @@ pub struct Session {
     /// is due but the shared page pool cannot cover it, so the session sits
     /// out decode ticks (instead of erroring) until pages free up.
     pub parked: bool,
+    /// Consecutive ticks this slot has been parked — the park-watchdog's
+    /// escalation counter (reset on resume): a slot parked too long first
+    /// degrades (prefix entries shed on its behalf), then is shed.
+    pub parked_streak: u32,
 }
 
 impl Session {
@@ -83,6 +102,7 @@ impl Session {
             t_first_token: Some(now),
             t_finish: None,
             parked: false,
+            parked_streak: 0,
         }
     }
 
@@ -164,6 +184,7 @@ mod tests {
             sampling: Sampling::Greedy,
             method: None,
             tenant: 0,
+            deadline_ticks: None,
         };
         Session::new(req, cache, 42, Instant::now())
     }

@@ -27,6 +27,7 @@ use crate::coordinator::session::{FinishReason, Request};
 use crate::model::sampler::Sampling;
 use crate::quant::methods::MethodSpec;
 use crate::quant::policy::PrecisionPolicy;
+use crate::util::faults::FaultPlan;
 use crate::util::json::{num, obj, s, Json};
 use crate::util::rng::{stream, Pcg32};
 
@@ -72,6 +73,15 @@ pub struct TrafficConfig {
     pub max_prefills_per_cycle: usize,
     /// Hard tick ceiling — a stuck run terminates with whatever completed.
     pub max_ticks: usize,
+    /// Chaos soak: per-draw fault probability injected at every fault site
+    /// (lease denial, prefill chunk, decode step, prefix corruption) via a
+    /// `FaultPlan` seeded from `seed`. 0.0 disables injection entirely;
+    /// > 0.0 also runs `Server::check_invariants` after every tick and
+    /// audits for leaked pages at drain.
+    pub chaos: f64,
+    /// Tick deadline stamped on every generated request (`None` = no
+    /// deadline). Ticks, not wall-clock — fingerprints stay deterministic.
+    pub deadline_ticks: Option<u64>,
 }
 
 impl Default for TrafficConfig {
@@ -95,6 +105,8 @@ impl Default for TrafficConfig {
             policy: None,
             max_prefills_per_cycle: 8,
             max_ticks: 100_000,
+            chaos: 0.0,
+            deadline_ticks: None,
         }
     }
 }
@@ -185,6 +197,7 @@ pub fn gen_requests(cfg: &TrafficConfig) -> Vec<Request> {
                 Some(cfg.method_mix[mrng.below(cfg.method_mix.len() as u32) as usize])
             },
             tenant: trng.below(n_tenants),
+            deadline_ticks: cfg.deadline_ticks,
         })
         .collect()
 }
@@ -212,6 +225,8 @@ fn reason_code(r: FinishReason) -> u64 {
         FinishReason::CacheFull => 3,
         FinishReason::Cancelled => 4,
         FinishReason::Rejected => 5,
+        FinishReason::Error => 6,
+        FinishReason::DeadlineExceeded => 7,
     }
 }
 
@@ -250,9 +265,28 @@ pub struct TrafficReport {
     pub p50_latency_ms: f64,
     pub p99_latency_ms: f64,
     pub tenants: Vec<TenantSummary>,
+    // --- chaos soak (all zero when `TrafficConfig::chaos` is 0.0) --------
+    /// The per-site fault probability this run injected with.
+    pub chaos_rate: f64,
+    /// Ticks after which `Server::check_invariants` reported a violation.
+    pub invariant_violations: u64,
+    /// Pool pages still leased but pinned by nobody after every session
+    /// reached a terminal state (must be 0).
+    pub leaked_pages: u64,
+    /// Per-site injected-fault counts (lease, prefill, decode, prefix).
+    pub faults_injected: [u64; 4],
+    /// Failed prefill runs that re-queued for a backoff retry.
+    pub prefill_retries: u64,
+    /// Requests that completed cleanly after at least one failed attempt.
+    pub fault_recoveries: u64,
+    /// Requests retired as `Error` (exhausted retries + decode failures).
+    pub errors: u64,
+    /// Requests retired at their tick deadline (admitted + shed-in-queue).
+    pub deadline_retirements: u64,
     /// FNV-1a over (id, reason, token stream) of every finished session
-    /// plus the per-tenant served/unserved and fairness counters. Contains
-    /// no wall-clock material: same seed ⇒ same fingerprint, always.
+    /// plus the per-tenant served/unserved and fairness counters, and —
+    /// under chaos — the fault/retry/deadline counters. Contains no
+    /// wall-clock material: same seed ⇒ same fingerprint, always.
     pub fingerprint: u64,
     /// Human-readable metrics summary (wall-clock figures live here only).
     pub summary: String,
@@ -262,14 +296,19 @@ pub struct TrafficReport {
 /// `engine`, and report outcomes + per-tenant SLOs. Deterministic modulo
 /// wall-clock ms fields: the fingerprint covers everything else.
 pub fn run(engine: Engine, cfg: &TrafficConfig) -> Result<TrafficReport> {
+    let chaos = cfg.chaos > 0.0;
     let server_cfg = ServerConfig {
         memory_budget_bytes: cfg.memory_budget_bytes,
         max_prefills_per_cycle: cfg.max_prefills_per_cycle,
         seed: cfg.seed,
         policy: cfg.policy.clone(),
+        // the chaos fault plan shares the workload seed: one seed fixes
+        // the schedule, the prompts, AND the fault sequence
+        faults: chaos.then(|| FaultPlan::uniform(cfg.seed, cfg.chaos)),
         ..ServerConfig::default()
     };
     let mut server = Server::new(engine, server_cfg);
+    let mut invariant_violations = 0u64;
     let reqs = gen_requests(cfg);
     let schedule = build_schedule(cfg);
     let (closed, concurrency, think_ticks) = match cfg.arrival {
@@ -320,6 +359,16 @@ pub fn run(engine: Engine, cfg: &TrafficConfig) -> Result<TrafficReport> {
         }
 
         server.tick()?;
+        if chaos {
+            // the soak's core claim: the books balance after EVERY tick,
+            // not just at drain
+            if let Err(e) = server.check_invariants() {
+                if invariant_violations == 0 {
+                    eprintln!("mixkvq: chaos tick {tick}: {e:#}");
+                }
+                invariant_violations += 1;
+            }
+        }
 
         // -- fold outcomes; feed the closed loop ----------------------
         for e in server.drain_events() {
@@ -374,6 +423,30 @@ pub fn run(engine: Engine, cfg: &TrafficConfig) -> Result<TrafficReport> {
     }
     fp.fold(m.policy_degradations);
 
+    // Post-drain page audit: every session is terminal, so the only pages
+    // the pool may still lease are the ones the prefix index pins.
+    let pinned = server
+        .engine
+        .prefix_index()
+        .map(|ix| ix.borrow().pages_pinned())
+        .unwrap_or(0);
+    let leaked_pages = server.pool.leased().saturating_sub(pinned) as u64;
+    let errors = m.decode_errors + m.retries_exhausted + m.internal_errors;
+    let deadline_retirements = m.deadline_exceeded + m.deadline_shed;
+    if chaos {
+        // recovery/deadline outcomes are seeded-deterministic too: fold
+        // them so a same-seed pair must agree on the whole failure story
+        for x in m.faults_injected {
+            fp.fold(x);
+        }
+        fp.fold(m.prefill_retries);
+        fp.fold(m.fault_recoveries);
+        fp.fold(errors);
+        fp.fold(deadline_retirements);
+        fp.fold(invariant_violations);
+        fp.fold(leaked_pages);
+    }
+
     Ok(TrafficReport {
         seed: cfg.seed,
         sessions: cfg.sessions,
@@ -388,6 +461,14 @@ pub fn run(engine: Engine, cfg: &TrafficConfig) -> Result<TrafficReport> {
         p50_latency_ms: m.completed.latency_percentile(50.0),
         p99_latency_ms: m.completed.latency_percentile(99.0),
         tenants,
+        chaos_rate: cfg.chaos,
+        invariant_violations,
+        leaked_pages,
+        faults_injected: m.faults_injected,
+        prefill_retries: m.prefill_retries,
+        fault_recoveries: m.fault_recoveries,
+        errors,
+        deadline_retirements,
         fingerprint: fp.0,
         summary: m.summary(),
     })
@@ -435,6 +516,17 @@ pub fn report_json(a: &TrafficReport, repeat: &TrafficReport) -> Json {
         ("p99_ttft_ms", num(a.p99_ttft_ms)),
         ("p50_latency_ms", num(a.p50_latency_ms)),
         ("p99_latency_ms", num(a.p99_latency_ms)),
+        ("chaos_rate", num(a.chaos_rate)),
+        ("invariant_violations", num(a.invariant_violations as f64)),
+        ("leaked_pages", num(a.leaked_pages as f64)),
+        (
+            "faults_injected",
+            Json::Arr(a.faults_injected.iter().map(|&x| num(x as f64)).collect()),
+        ),
+        ("prefill_retries", num(a.prefill_retries as f64)),
+        ("fault_recoveries", num(a.fault_recoveries as f64)),
+        ("errors", num(a.errors as f64)),
+        ("deadline_retirements", num(a.deadline_retirements as f64)),
         ("fingerprint", s(&format!("{:016x}", a.fingerprint))),
         ("fingerprint_repeat", s(&format!("{:016x}", repeat.fingerprint))),
         (
@@ -536,6 +628,49 @@ mod tests {
         let j = report_json(&a, &b);
         assert_eq!(j.get("deterministic").unwrap(), &Json::Bool(true));
         assert_eq!(j.get("schema").unwrap(), &Json::Str("traffic-v1".into()));
+    }
+
+    #[test]
+    fn chaos_soak_recovers_and_balances_books() {
+        let cfg = TrafficConfig { chaos: 0.1, ..small_cfg() };
+        let a = run(engine(), &cfg).unwrap();
+        let b = run(engine(), &cfg).unwrap();
+        // every session reaches a terminal state despite injected faults,
+        // the books balance after every tick, and nothing leaks at drain
+        assert_eq!(a.completed, cfg.sessions, "{}", a.summary);
+        assert_eq!(a.invariant_violations, 0, "{}", a.summary);
+        assert_eq!(a.leaked_pages, 0, "{}", a.summary);
+        assert!(
+            a.faults_injected.iter().sum::<u64>() > 0,
+            "10% chaos never fired: {:?}",
+            a.faults_injected
+        );
+        // the fault schedule is seeded: the entire failure story repeats
+        assert!(deterministic_pair(&a, &b), "same-seed chaos runs diverged");
+        assert_eq!(a.faults_injected, b.faults_injected);
+        let j = report_json(&a, &b);
+        assert_eq!(j.get("deterministic").unwrap(), &Json::Bool(true));
+        assert_eq!(j.get("leaked_pages").unwrap(), &num(0.0));
+    }
+
+    #[test]
+    fn clean_run_reports_zero_failure_counters() {
+        let cfg = small_cfg();
+        let r = run(engine(), &cfg).unwrap();
+        assert_eq!(r.chaos_rate, 0.0);
+        assert_eq!(r.faults_injected, [0; 4]);
+        assert_eq!(r.errors, 0);
+        assert_eq!((r.prefill_retries, r.fault_recoveries), (0, 0));
+    }
+
+    #[test]
+    fn zero_tick_deadline_sheds_every_session() {
+        let cfg = TrafficConfig { deadline_ticks: Some(0), ..small_cfg() };
+        let r = run(engine(), &cfg).unwrap();
+        // nothing can be admitted before the deadline pass sheds it, yet
+        // every session still reaches a terminal record
+        assert_eq!(r.completed, cfg.sessions);
+        assert_eq!(r.deadline_retirements as usize, cfg.sessions, "{}", r.summary);
     }
 
     #[test]

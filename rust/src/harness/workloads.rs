@@ -219,6 +219,7 @@ pub fn sharegpt_trace(rng: &mut Pcg32, n: usize, max_new: usize) -> Vec<Request>
                 sampling: Sampling::Greedy,
                 method: None,
                 tenant: 0,
+                deadline_ticks: None,
             }
         })
         .collect()

@@ -635,6 +635,22 @@ impl RequestCache {
         self.leased_pages() - self.shared_pages()
     }
 
+    /// Append the pool identity of every SHARED page this cache references
+    /// (one entry per holder — co-held pages repeat across callers, and
+    /// the prefix index contributes its own references; audits dedup by
+    /// id). Together with [`RequestCache::private_pages`], this reconciles
+    /// live holders against the pool's once-per-page `leased` counter in
+    /// `Server::check_invariants`.
+    pub fn collect_shared_page_ids(&self, out: &mut Vec<usize>) {
+        for head in self.heads.iter().flatten() {
+            for p in &head.pages {
+                if let super::pool::PageRef::Shared(s) = p {
+                    out.push(s.page_id());
+                }
+            }
+        }
+    }
+
     /// Pages one quantization flush leases (`r_limit` tokens across every
     /// layer and kv-head).
     pub fn pages_per_flush(&self) -> usize {

@@ -78,6 +78,7 @@ use anyhow::{bail, Result};
 
 use crate::quant::packing;
 use crate::quant::window::TierSpec;
+use crate::util::faults::{FaultInjector, FaultSite};
 
 /// Pages `tokens` group-aligned tokens occupy across `n_layers ×
 /// n_kv_heads` heads — one page per quantization group per head. The
@@ -302,6 +303,10 @@ struct PoolInner {
     /// Deployment bytes charged per leased page (worst layout the pool
     /// serves) — the accountant's unit for occupancy gauges.
     page_deploy_bytes: usize,
+    /// Deterministic fault injection (chaos testing): when installed,
+    /// `lease` may be denied transiently at the plan's `LeaseDenial` rate.
+    /// `None` (the default) costs nothing on the lease path.
+    faults: Option<Rc<RefCell<FaultInjector>>>,
 }
 
 /// Counter snapshot for metrics/gauges (`coordinator::metrics`).
@@ -343,6 +348,7 @@ impl KvPool {
                 lease_failures: 0,
                 total_leases: 0,
                 page_deploy_bytes,
+                faults: None,
             })),
         }
     }
@@ -405,9 +411,26 @@ impl KvPool {
         }
     }
 
+    /// Install a deterministic fault injector: `lease` then fails
+    /// transiently at the plan's `LeaseDenial` rate (counted in
+    /// `lease_failures`, like a real cap denial). All clones of this pool
+    /// share the injector — it lives in the shared inner state.
+    pub fn set_fault_injector(&self, faults: Rc<RefCell<FaultInjector>>) {
+        self.inner.borrow_mut().faults = Some(faults);
+    }
+
     /// Lease one page (zeroed). `Err` when a bounded pool is at its cap —
-    /// recorded in the lease-failure counter.
+    /// recorded in the lease-failure counter — or when an installed fault
+    /// injector denies the lease transiently (chaos testing; also counted,
+    /// since callers cannot and should not tell the two apart).
     pub fn lease(&self) -> Result<PageLease> {
+        let faults = self.inner.borrow().faults.clone();
+        if let Some(f) = faults {
+            if f.borrow_mut().should_fail(FaultSite::LeaseDenial) {
+                self.inner.borrow_mut().lease_failures += 1;
+                bail!("injected transient fault: kv pool lease denied");
+            }
+        }
         let mut inner = self.inner.borrow_mut();
         if let Some(max) = inner.max_pages {
             if inner.leased >= max {
@@ -485,6 +508,9 @@ pub struct PageLease {
 }
 
 impl PageLease {
+    // The `expect`s below are true invariant checks, not per-request error
+    // paths: `page` is only `None` inside `Drop::drop`, which no accessor
+    // can race single-threaded — a trip here is a use-after-drop bug.
     #[inline]
     pub fn page(&self) -> &Page {
         self.page.as_ref().expect("page present until drop")
@@ -529,6 +555,15 @@ impl SharedLease {
     /// Current holders (page tables + the prefix index entry).
     pub fn refs(&self) -> usize {
         Rc::strong_count(&self.inner)
+    }
+
+    /// Stable identity of the underlying pool lease — the same physical
+    /// page yields the same id from every holder. The pool's `leased`
+    /// counter charges each id exactly once, so invariant audits
+    /// (`Server::check_invariants`) dedup holders by this id to reconcile
+    /// against `KvPool::leased`.
+    pub fn page_id(&self) -> usize {
+        Rc::as_ptr(&self.inner) as usize
     }
 }
 
@@ -714,6 +749,15 @@ impl PrefixEntry {
         self.pages.iter().flatten().map(Vec::len).sum()
     }
 
+    /// Append the pool identity of every page this entry pins (see
+    /// [`SharedLease::page_id`]) — invariant audits dedup these against
+    /// the ids live caches hold.
+    pub fn collect_page_ids(&self, out: &mut Vec<usize>) {
+        for s in self.pages.iter().flatten().flatten() {
+            out.push(s.page_id());
+        }
+    }
+
     /// Last-position logits of the registered prompt (the consumer's first
     /// sampling input — prefill compute skipped, not just bytes).
     pub fn last_logits(&self) -> &[f32] {
@@ -846,6 +890,8 @@ impl PrefixIndex {
         self.hits += 1;
         let clock = self.clock;
         let deploy = self.page_deploy_bytes;
+        // invariant, not a request-path error: the match above already
+        // proved the key resident and nothing ran in between
         let e = self.map.get_mut(&key).expect("presence just checked");
         e.stamp = clock;
         self.bytes_deduped += (e.pages_count() * deploy) as u64;
@@ -911,11 +957,38 @@ impl PrefixIndex {
         let Some((&key, _)) = self.map.iter().min_by_key(|(_, e)| e.stamp) else {
             return false;
         };
+        // invariant, not a request-path error: the key was read out of the
+        // map on the line above
         let e = self.map.remove(&key).expect("key just observed");
         self.pinned_pages -= e.pages_count();
         self.sidecar_bytes -= e.sidecar_bytes();
         self.evictions += 1;
         true
+    }
+
+    /// Drop a distrusted entry — the corruption/verify-fail path (today
+    /// reached via injected `FaultSite::PrefixCorrupt` faults): its page
+    /// references release, and the probe is recorded exactly like a
+    /// chain-key collision (a miss, never served). Returns false when the
+    /// key is not resident.
+    pub fn discard_corrupt(&mut self, key: u64) -> bool {
+        let Some(e) = self.map.remove(&key) else {
+            return false;
+        };
+        self.pinned_pages -= e.pages_count();
+        self.sidecar_bytes -= e.sidecar_bytes();
+        self.evictions += 1;
+        self.collisions += 1;
+        self.misses += 1;
+        true
+    }
+
+    /// Append the pool identity of every page pinned by any entry (see
+    /// [`SharedLease::page_id`]).
+    pub fn collect_page_ids(&self, out: &mut Vec<usize>) {
+        for e in self.map.values() {
+            e.collect_page_ids(out);
+        }
     }
 
     /// Drop every entry (all pinned pages release).

@@ -218,11 +218,54 @@
 //!   (CI's bench gate enforces the p99-TTFT bar and zero same-seed
 //!   drift).
 //!
+//! ## Failure handling (deterministic faults, deadlines, bounded retries)
+//!
+//! The serving loop is hardened around one rule: **a failure belongs to a
+//! request, never to the tick**. `Err` from `Server::tick` is reserved for
+//! batch-level contract violations; everything a single tenant can trigger
+//! retires only that tenant's request with a terminal
+//! `FinishReason::Error` / `DeadlineExceeded` record and a well-formed
+//! event stream.
+//!
+//! * **Deterministic fault injection** ([`util::faults`]): a
+//!   [`util::faults::FaultPlan`] (seed + per-site rates) arms a
+//!   [`util::faults::FaultInjector`] drawing from one named RNG stream per
+//!   [`util::faults::FaultSite`] — transient pool-lease denial, prefill
+//!   chunk-step error, decode-step error, prefix-index entry corruption
+//!   (detected and discarded via `PrefixIndex::discard_corrupt`). Same
+//!   seed ⇒ same fault schedule, so every chaos failure reproduces
+//!   exactly; with no plan installed the hooks cost one `Option` check.
+//! * **Retry-with-degradation**: a failed prefill drops its run (every
+//!   leased page returns via lease `Drop`), re-queues after an exponential
+//!   tick backoff, and after `MAX_PREFILL_ATTEMPTS` failures at one
+//!   admission-ladder rung retries pinned to the next *cheaper* rung;
+//!   exhausting the cheapest rung retires the request as `Error`. Clean
+//!   completion after a failure counts `Metrics::fault_recoveries`.
+//! * **Deadlines are ticks, not wall-clock** (`Request::deadline_ticks`):
+//!   queued/backoff requests past deadline shed before admission
+//!   (`deadline_shed`), in-flight prefills and live slots retire as
+//!   `DeadlineExceeded` — fingerprints stay bit-deterministic.
+//! * **Park-watchdog**: a slot parked `PARK_WATCHDOG_DEGRADE` consecutive
+//!   ticks frees pinned prefix pages; at `PARK_WATCHDOG_SHED` it sheds
+//!   itself (CacheFull) instead of starving forever. A bounded wait queue
+//!   (`ServerConfig::max_queue`) rejects at submit instead of growing
+//!   without bound.
+//! * **Self-audit + chaos gate**: `Server::check_invariants` proves the
+//!   three independent bookkeepers agree — pool leases vs live holders'
+//!   private pages + distinct shared pages vs prefix-index pins — plus
+//!   lifecycle-stage disjointness. `mixkvq traffic --chaos <rate>` soaks
+//!   200+ sessions under ≥5% faults at all four sites, asserts the books
+//!   balance after every tick, zero leaked pages at drain, and an
+//!   identical same-seed fingerprint, then emits `BENCH_chaos.json` for
+//!   CI's bench gate (tests/chaos.rs runs randomized fault × cancel ×
+//!   deadline interleavings on top).
+//!
 //! See DESIGN.md for the experiment index and EXPERIMENTS.md for results.
 
 pub mod util {
     pub mod bench;
     pub mod cli;
+    pub mod faults;
     pub mod json;
     pub mod rng;
     pub mod stats;

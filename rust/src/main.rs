@@ -10,6 +10,9 @@
 //!   traffic --sessions N --seed S --out BENCH_traffic.json
 //!           (seeded multi-tenant load through the real server; runs the
 //!            same seed twice and records the determinism verdict)
+//!           --chaos R injects seeded faults at rate R at every fault site
+//!           and audits invariants each tick (writes BENCH_chaos.json);
+//!           --deadline-ticks D stamps a tick deadline on every request
 //!
 //! `serve` drives the session frontend (`submit`/`tick`/`drain_events`).
 //! `--method` takes one or more comma-separated method names: the first is
@@ -76,10 +79,14 @@ fn main() -> Result<()> {
                  traffic --sessions 200 --tenants 4 --seed 7 --max-new 6 --budget-mb 64\n\
                  \x20       --arrival poisson|diurnal|closed --out BENCH_traffic.json\n\
                  \x20       [--policy slo:<mb>|profile:<path>|fixed:<method>]\n\
+                 \x20       [--chaos 0.05] [--deadline-ticks 500]\n\
                  \x20       seeded multi-tenant load through submit/tick/poll on the\n\
                  \x20       reference engine (no artifacts needed); same seed runs twice\n\
                  \x20       and the report records per-tenant p50/p99 SLOs plus the\n\
-                 \x20       determinism verdict.\n\n\
+                 \x20       determinism verdict. --chaos injects seeded faults at every\n\
+                 \x20       site (lease/prefill/decode/prefix), audits invariants each\n\
+                 \x20       tick, and fails on any violation, leak, or stranded session\n\
+                 \x20       (default artifact becomes BENCH_chaos.json).\n\n\
                  Global: --artifacts <dir> (default: artifacts)"
             );
             Ok(())
@@ -255,7 +262,15 @@ fn traffic(args: &Args) -> Result<()> {
     use mixkvq::harness::traffic::{self as tr, Arrival, TrafficConfig};
     use mixkvq::quant::policy::{PrecisionPolicy, SensitivityProfile};
 
-    let out = args.get_or("out", "BENCH_traffic.json");
+    let chaos = args.f64_or("chaos", 0.0)?;
+    if !(0.0..=1.0).contains(&chaos) {
+        anyhow::bail!("--chaos takes a fault rate in [0, 1], got {chaos}");
+    }
+    // chaos soaks get their own artifact so the bench gate can hold both
+    // the clean-traffic and the chaos bars at once
+    let default_out = if chaos > 0.0 { "BENCH_chaos.json" } else { "BENCH_traffic.json" };
+    let out = args.get_or("out", default_out);
+    let deadline = args.u64_or("deadline-ticks", 0)?;
     let arrival = match args.get_or("arrival", "poisson").as_str() {
         "diurnal" => Arrival::DiurnalRamp { lo: 2.0, hi: 24.0, period: 64 },
         "closed" => Arrival::ClosedLoop {
@@ -293,6 +308,8 @@ fn traffic(args: &Args) -> Result<()> {
         max_new: args.usize_or("max-new", 6)?,
         memory_budget_bytes: args.usize_or("budget-mb", 64)? << 20,
         policy,
+        chaos,
+        deadline_ticks: (deadline > 0).then_some(deadline),
         ..TrafficConfig::default()
     };
     let r_limit = args.usize_or("r-limit", 32)?;
@@ -320,9 +337,39 @@ fn traffic(args: &Args) -> Result<()> {
         a.policy_degradations,
         tr::deterministic_pair(&a, &b),
     );
+    if chaos > 0.0 {
+        println!(
+            "chaos: rate {:.3}, faults injected {:?}, prefill retries {}, \
+             recovered {}, errors {}, deadline retirements {}, \
+             invariant violations {}, leaked pages {}",
+            a.chaos_rate,
+            a.faults_injected,
+            a.prefill_retries,
+            a.fault_recoveries,
+            a.errors,
+            a.deadline_retirements,
+            a.invariant_violations,
+            a.leaked_pages,
+        );
+    }
     println!("wrote {out}");
     if !tr::deterministic_pair(&a, &b) {
         anyhow::bail!("same-seed traffic runs diverged: {:016x} vs {:016x}", a.fingerprint, b.fingerprint);
+    }
+    if chaos > 0.0 {
+        // the soak's hard assertions: chaos must never corrupt the books
+        if a.invariant_violations > 0 {
+            anyhow::bail!("chaos soak hit {} invariant violations", a.invariant_violations);
+        }
+        if a.leaked_pages > 0 {
+            anyhow::bail!("chaos soak leaked {} pool pages at drain", a.leaked_pages);
+        }
+        if a.completed != a.sessions {
+            anyhow::bail!(
+                "chaos soak stranded {} sessions short of a terminal state",
+                a.sessions - a.completed
+            );
+        }
     }
     Ok(())
 }

@@ -1,0 +1,246 @@
+//! Deterministic, seeded fault injection for chaos testing the serving
+//! path.
+//!
+//! A [`FaultPlan`] names a per-site injection rate and a seed; a
+//! [`FaultInjector`] turns it into four independent deterministic draw
+//! streams (one per [`FaultSite`], derived with the same
+//! [`crate::util::rng::stream`] named-stream discipline the traffic
+//! harness uses), so **the same seed produces the same fault schedule** —
+//! a chaos soak is exactly as reproducible as a clean run. The injector is
+//! shared single-threaded (`Rc<RefCell<…>>`, like the pool and the prefix
+//! index) between the server, the engine, and the KV pool; every hook is
+//! `Option`-gated and free when no plan is installed.
+//!
+//! The four sites are the real failure surfaces of the request lifecycle:
+//!
+//! * [`FaultSite::LeaseDenial`] — `KvPool::lease` fails transiently, as a
+//!   fragmented or contended allocator would.
+//! * [`FaultSite::PrefillChunk`] — one `Engine::advance_prefill_chunked`
+//!   step errors; the router's retry-with-backoff machinery absorbs it.
+//! * [`FaultSite::DecodeStep`] — one slot's decode step errors; per-slot
+//!   isolation retires that request without poisoning its variant group.
+//! * [`FaultSite::PrefixCorrupt`] — a prefix-index entry fails its verify;
+//!   the entry is distrusted and dropped, the request falls back to a full
+//!   prefill (corrupted pages are never served).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::util::rng::{stream, Pcg32};
+
+/// A failure surface faults can be injected at. `name()` doubles as the
+/// RNG stream name, so each site draws from its own deterministic stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Transient `KvPool::lease` denial.
+    LeaseDenial,
+    /// One chunked-prefill advance step errors.
+    PrefillChunk,
+    /// One slot's decode step errors.
+    DecodeStep,
+    /// A prefix-index entry fails its token verify (corruption).
+    PrefixCorrupt,
+}
+
+impl FaultSite {
+    pub const ALL: [FaultSite; 4] = [
+        FaultSite::LeaseDenial,
+        FaultSite::PrefillChunk,
+        FaultSite::DecodeStep,
+        FaultSite::PrefixCorrupt,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::LeaseDenial => "fault-lease",
+            FaultSite::PrefillChunk => "fault-prefill",
+            FaultSite::DecodeStep => "fault-decode",
+            FaultSite::PrefixCorrupt => "fault-prefix",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            FaultSite::LeaseDenial => 0,
+            FaultSite::PrefillChunk => 1,
+            FaultSite::DecodeStep => 2,
+            FaultSite::PrefixCorrupt => 3,
+        }
+    }
+}
+
+/// Per-site injection rates plus the seed the draw streams derive from.
+/// Pure data — install it via `ServerConfig::faults` (or build a
+/// [`FaultInjector`] directly in tests).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Injection probability per draw, indexed by [`FaultSite::index`].
+    pub rates: [f64; 4],
+}
+
+impl FaultPlan {
+    /// The same rate at every site — the chaos soak's default shape.
+    pub fn uniform(seed: u64, rate: f64) -> FaultPlan {
+        FaultPlan { seed, rates: [rate; 4] }
+    }
+
+    /// Builder-style per-site override.
+    pub fn with_rate(mut self, site: FaultSite, rate: f64) -> FaultPlan {
+        self.rates[site.index()] = rate;
+        self
+    }
+
+    pub fn rate(&self, site: FaultSite) -> f64 {
+        self.rates[site.index()]
+    }
+
+    /// Is any site armed? A plan of all-zero rates is equivalent to no
+    /// plan at all.
+    pub fn is_armed(&self) -> bool {
+        self.rates.iter().any(|&r| r > 0.0)
+    }
+}
+
+/// Counter snapshot, indexed by [`FaultSite::index`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultStats {
+    /// Draws taken at each site (one per hook evaluation with a live plan).
+    pub drawn: [u64; 4],
+    /// Faults actually injected at each site.
+    pub injected: [u64; 4],
+}
+
+impl FaultStats {
+    pub fn injected_total(&self) -> u64 {
+        self.injected.iter().sum()
+    }
+
+    pub fn injected_at(&self, site: FaultSite) -> u64 {
+        self.injected[site.index()]
+    }
+}
+
+/// The live draw state: one deterministic [`Pcg32`] stream per site.
+/// Single-threaded by design (shared as `Rc<RefCell<FaultInjector>>`);
+/// with a fixed call schedule — which the deterministic server loop
+/// guarantees — the injected-fault schedule is a pure function of the
+/// plan.
+pub struct FaultInjector {
+    plan: FaultPlan,
+    streams: [Pcg32; 4],
+    drawn: [u64; 4],
+    injected: [u64; 4],
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        let streams =
+            [0, 1, 2, 3].map(|i| stream(plan.seed, FaultSite::ALL[i].name()));
+        FaultInjector { plan, streams, drawn: [0; 4], injected: [0; 4] }
+    }
+
+    /// Shared handle the server hands to the pool and the engine.
+    pub fn shared(plan: FaultPlan) -> Rc<RefCell<FaultInjector>> {
+        Rc::new(RefCell::new(FaultInjector::new(plan)))
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// One deterministic draw at `site`. Zero-rate sites never draw (so a
+    /// partially armed plan doesn't advance streams it never uses).
+    pub fn should_fail(&mut self, site: FaultSite) -> bool {
+        let i = site.index();
+        let rate = self.plan.rates[i];
+        if rate <= 0.0 {
+            return false;
+        }
+        self.drawn[i] += 1;
+        let hit = (self.streams[i].f32() as f64) < rate;
+        if hit {
+            self.injected[i] += 1;
+        }
+        hit
+    }
+
+    pub fn stats(&self) -> FaultStats {
+        FaultStats { drawn: self.drawn, injected: self.injected }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let mut a = FaultInjector::new(FaultPlan::uniform(7, 0.25));
+        let mut b = FaultInjector::new(FaultPlan::uniform(7, 0.25));
+        for site in FaultSite::ALL {
+            for _ in 0..256 {
+                assert_eq!(a.should_fail(site), b.should_fail(site));
+            }
+        }
+        assert_eq!(a.stats().injected, b.stats().injected);
+        assert!(a.stats().injected_total() > 0, "25% over 1024 draws must fire");
+    }
+
+    #[test]
+    fn sites_draw_from_independent_streams() {
+        // Drawing at one site must not perturb another site's schedule.
+        let mut interleaved = FaultInjector::new(FaultPlan::uniform(3, 0.5));
+        let mut solo = FaultInjector::new(FaultPlan::uniform(3, 0.5));
+        let mut a = Vec::new();
+        for _ in 0..64 {
+            a.push(interleaved.should_fail(FaultSite::DecodeStep));
+            interleaved.should_fail(FaultSite::LeaseDenial);
+            interleaved.should_fail(FaultSite::PrefixCorrupt);
+        }
+        let b: Vec<bool> =
+            (0..64).map(|_| solo.should_fail(FaultSite::DecodeStep)).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn zero_rate_never_fires_and_never_draws() {
+        let mut f = FaultInjector::new(FaultPlan::uniform(9, 0.0));
+        for site in FaultSite::ALL {
+            for _ in 0..64 {
+                assert!(!f.should_fail(site));
+            }
+        }
+        assert_eq!(f.stats().drawn, [0; 4]);
+        assert_eq!(f.stats().injected_total(), 0);
+    }
+
+    #[test]
+    fn rate_one_always_fires() {
+        let mut f = FaultInjector::new(FaultPlan::uniform(1, 1.0));
+        assert!(f.should_fail(FaultSite::LeaseDenial));
+        assert_eq!(f.stats().injected_at(FaultSite::LeaseDenial), 1);
+    }
+
+    #[test]
+    fn per_site_rates_compose() {
+        let plan = FaultPlan::uniform(5, 0.0).with_rate(FaultSite::PrefillChunk, 1.0);
+        assert!(plan.is_armed());
+        assert_eq!(plan.rate(FaultSite::LeaseDenial), 0.0);
+        let mut f = FaultInjector::new(plan);
+        assert!(!f.should_fail(FaultSite::LeaseDenial));
+        assert!(f.should_fail(FaultSite::PrefillChunk));
+    }
+
+    #[test]
+    fn observed_rate_tracks_plan() {
+        let mut f = FaultInjector::new(FaultPlan::uniform(11, 0.1));
+        let mut hits = 0;
+        for _ in 0..10_000 {
+            if f.should_fail(FaultSite::DecodeStep) {
+                hits += 1;
+            }
+        }
+        assert!((800..1200).contains(&hits), "10% ± 2%: got {hits}");
+    }
+}

@@ -1,0 +1,252 @@
+//! Chaos suite: randomized request interleavings driven through a real
+//! `Server` with deterministic fault injection armed at every site (pool
+//! lease denial, prefill-chunk error, decode-step error, prefix-entry
+//! corruption — see `util::faults`).
+//!
+//! Each case mixes the four hazards the lifecycle hardening must absorb:
+//! injected faults, client cancels at random ticks, per-request tick
+//! deadlines, and submit churn (staggered arrivals, never one batch). The
+//! properties checked are the DESIGN.md §6 serving invariants under fire:
+//!
+//! 1. the server never panics and every submitted request reaches exactly
+//!    one terminal state with a well-formed event stream;
+//! 2. `Server::check_invariants` holds after EVERY tick, not just at drain
+//!    (page books balance, id sets stay disjoint, bookkeeping maps track
+//!    exactly the in-flight population);
+//! 3. after drain, every leased pool page is pinned by the prefix index —
+//!    zero lease leaks, no matter which faults fired;
+//! 4. the same seed replays the same outcomes bit-for-bit.
+//!
+//! Runs on the artifact-free reference engine, so this is tier-1.
+
+use std::collections::HashMap;
+
+use mixkvq::coordinator::engine::Engine;
+use mixkvq::coordinator::events::{by_request, validate_stream, Event};
+use mixkvq::coordinator::router::{Server, ServerConfig};
+use mixkvq::coordinator::session::{FinishReason, Request};
+use mixkvq::harness::workloads;
+use mixkvq::model::config::{Meta, ModelConfig};
+use mixkvq::model::sampler::Sampling;
+use mixkvq::quant::methods::Method;
+use mixkvq::util::faults::FaultPlan;
+use mixkvq::util::rng::Pcg32;
+
+/// Two-layer build so prefill/decode stay cheap enough for a sweep.
+fn small_meta() -> Meta {
+    let mut meta = Meta::default_build();
+    meta.model = ModelConfig { n_layers: 2, ..meta.model };
+    for v in &mut meta.variants {
+        v.layers.truncate(2);
+        while v.layers.len() < 2 {
+            let last = *v.layers.last().unwrap();
+            v.layers.push(last);
+        }
+    }
+    meta
+}
+
+fn small_engine() -> Engine {
+    Engine::new_reference(small_meta(), 11, Method::bf16(), 32).unwrap()
+}
+
+/// Pages the prefix index legitimately pins after all sessions retire —
+/// the only pages allowed to remain leased at drain.
+fn pinned_pages(server: &Server) -> usize {
+    server.engine.prefix_index().map(|ix| ix.borrow().pages_pinned()).unwrap_or(0)
+}
+
+fn gen_request(rng: &mut Pcg32, id: u64) -> Request {
+    let ctx = 16 + rng.below(32) as usize;
+    Request {
+        id,
+        prompt: workloads::gen_passkey(rng, ctx).prompt,
+        max_new_tokens: 2 + rng.below(5) as usize,
+        sampling: Sampling::Greedy,
+        method: None,
+        tenant: rng.below(3),
+        // a quarter of the load carries a tick deadline tight enough that
+        // fault-induced retries can blow it — deadline × fault interaction
+        deadline_ticks: (rng.below(4) == 0).then(|| 10 + rng.below(30) as u64),
+    }
+}
+
+/// Drive one seeded chaos case to drain; panics on any invariant breach.
+/// Returns (all events in emission order, per-request max_new budgets).
+fn run_case(server: &mut Server, seed: u64, n: usize) -> (Vec<Event>, HashMap<u64, usize>) {
+    let mut rng = Pcg32::seeded(seed);
+    let mut pending: Vec<Request> = (0..n).map(|i| gen_request(&mut rng, i as u64)).collect();
+    pending.reverse(); // pop() submits in id order
+    let max_new: HashMap<u64, usize> =
+        pending.iter().map(|r| (r.id, r.max_new_tokens)).collect();
+    let mut submitted: Vec<u64> = Vec::new();
+    let mut events = Vec::new();
+    let mut guard = 0;
+    while !pending.is_empty() || server.has_work() {
+        // churn: 0–2 staggered arrivals per tick, never one up-front batch
+        for _ in 0..rng.below(3) {
+            if let Some(r) = pending.pop() {
+                submitted.push(r.id);
+                server.submit(r).unwrap();
+            }
+        }
+        // ~10% of ticks cancel a random request; cancelling an already
+        // terminal id must be a harmless no-op (cancel returns false)
+        if !submitted.is_empty() && rng.below(10) == 0 {
+            let id = submitted[rng.below(submitted.len() as u32) as usize];
+            server.cancel(id);
+        }
+        server.tick().unwrap();
+        // the tentpole claim: books balance after EVERY tick under fire
+        if let Err(e) = server.check_invariants() {
+            panic!("seed {seed} tick {guard}: invariant violated: {e:#}");
+        }
+        events.extend(server.drain_events());
+        guard += 1;
+        assert!(guard < 10_000, "seed {seed}: chaos case failed to drain");
+    }
+    events.extend(server.drain_events());
+    (events, max_new)
+}
+
+/// Hazard sweep: faults × cancels × deadlines × churn across seeds, with
+/// the invariant audit after every tick and a leak audit at drain.
+#[test]
+fn chaos_interleavings_drain_clean_across_seeds() {
+    for case in 0..6u64 {
+        let seed = 9000 + case;
+        let mut server = Server::new(
+            small_engine(),
+            ServerConfig {
+                seed,
+                faults: Some(FaultPlan::uniform(seed, 0.15)),
+                max_prefills_per_cycle: 2,
+                ..ServerConfig::default()
+            },
+        );
+        let n = 10 + (case as usize % 3) * 3;
+        let (events, max_new) = run_case(&mut server, seed, n);
+
+        // every request terminal, every stream well-formed
+        let streams = by_request(&events);
+        assert_eq!(streams.len(), n, "seed {seed}: missing request streams");
+        for (id, stream) in &streams {
+            if let Err(e) = validate_stream(stream, max_new[id]) {
+                panic!("seed {seed} req {id}: malformed stream: {e}");
+            }
+            assert!(
+                matches!(stream.last(), Some(Event::Finished { .. })),
+                "seed {seed} req {id}: no terminal event"
+            );
+        }
+        // zero lease leaks: only prefix-pinned pages may remain leased
+        assert_eq!(
+            server.pool.leased(),
+            pinned_pages(&server),
+            "seed {seed}: leaked pages after drain"
+        );
+        // the soak must actually have been a soak — faults fired
+        let injected: u64 = server.metrics.faults_injected.iter().sum();
+        assert!(injected > 0, "seed {seed}: chaos case injected no faults");
+    }
+}
+
+/// Same seed, same fault plan, same arrivals ⇒ bit-identical event streams
+/// and bit-identical per-site fault counts across two fresh servers.
+#[test]
+fn same_seed_chaos_replays_bit_identical_outcomes() {
+    let run = || {
+        let mut server = Server::new(
+            small_engine(),
+            ServerConfig {
+                seed: 77,
+                faults: Some(FaultPlan::uniform(77, 0.2)),
+                ..ServerConfig::default()
+            },
+        );
+        let (events, _) = run_case(&mut server, 77, 12);
+        (events, server.metrics.faults_injected, server.metrics.faults_drawn)
+    };
+    let (ea, ia, da) = run();
+    let (eb, ib, db) = run();
+    assert_eq!(ea, eb, "same-seed chaos runs diverged in event streams");
+    assert_eq!(ia, ib, "same-seed chaos runs diverged in injected faults");
+    assert_eq!(da, db, "same-seed chaos runs diverged in fault draws");
+}
+
+/// Bounded queue backpressure: with `max_queue = 2` and no ticks between
+/// submits, the third and later submissions retire `Rejected` at submit —
+/// deterministically, with well-formed two-event streams.
+#[test]
+fn bounded_queue_rejects_deterministically_at_submit() {
+    let mut server = Server::new(
+        small_engine(),
+        ServerConfig { max_queue: Some(2), ..ServerConfig::default() },
+    );
+    let mut rng = Pcg32::seeded(55);
+    let n = 8usize;
+    let mut max_new = HashMap::new();
+    for i in 0..n {
+        let mut req = gen_request(&mut rng, i as u64);
+        req.deadline_ticks = None;
+        max_new.insert(req.id, req.max_new_tokens);
+        server.submit(req).unwrap();
+    }
+    assert_eq!(server.metrics.queue_rejections, (n - 2) as u64);
+    let mut events = Vec::new();
+    let mut guard = 0;
+    while server.has_work() {
+        server.tick().unwrap();
+        server.check_invariants().unwrap();
+        events.extend(server.drain_events());
+        guard += 1;
+        assert!(guard < 10_000, "bounded-queue drain stalled");
+    }
+    events.extend(server.drain_events());
+    let streams = by_request(&events);
+    assert_eq!(streams.len(), n);
+    let mut rejected = 0;
+    for (id, stream) in &streams {
+        validate_stream(stream, max_new[id]).unwrap();
+        if let Some(Event::Finished { reason: FinishReason::Rejected, .. }) = stream.last() {
+            rejected += 1;
+        }
+    }
+    assert_eq!(rejected, n - 2, "every over-quota submit must retire Rejected");
+    assert_eq!(server.pool.leased(), pinned_pages(&server));
+}
+
+/// A one-tick deadline expires while still queued: `enforce_deadlines`
+/// runs before admission each tick, so every request retires
+/// `DeadlineExceeded` without ever touching the pool.
+#[test]
+fn tight_deadlines_retire_every_queued_request() {
+    let mut server = Server::new(small_engine(), ServerConfig::default());
+    let mut rng = Pcg32::seeded(66);
+    let n = 6usize;
+    let mut max_new = HashMap::new();
+    for i in 0..n {
+        let mut req = gen_request(&mut rng, i as u64);
+        req.deadline_ticks = Some(1);
+        max_new.insert(req.id, req.max_new_tokens);
+        server.submit(req).unwrap();
+    }
+    server.tick().unwrap();
+    server.check_invariants().unwrap();
+    assert!(!server.has_work(), "one-tick deadlines must clear the queue in one tick");
+    let events = server.drain_events();
+    let streams = by_request(&events);
+    assert_eq!(streams.len(), n);
+    for (id, stream) in &streams {
+        validate_stream(stream, max_new[id]).unwrap();
+        assert!(
+            matches!(
+                stream.last(),
+                Some(Event::Finished { reason: FinishReason::DeadlineExceeded, .. })
+            ),
+            "req {id}: expected DeadlineExceeded terminal"
+        );
+    }
+    assert_eq!(server.metrics.deadline_shed, n as u64);
+    assert_eq!(server.pool.leased(), pinned_pages(&server));
+}

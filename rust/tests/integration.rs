@@ -268,6 +268,7 @@ fn two_method_specs_served_concurrently() {
                     sampling: Sampling::Greedy,
                     method,
                     tenant: 0,
+                    deadline_ticks: None,
                 })
                 .unwrap(),
         );
@@ -318,6 +319,7 @@ fn one_token_budget_records_token_and_reason() {
             sampling: Sampling::Greedy,
             method: None,
             tenant: 0,
+            deadline_ticks: None,
         }])
         .unwrap();
     assert_eq!(completed.len(), 1);
@@ -348,6 +350,7 @@ fn cancel_and_reject_paths() {
         sampling: Sampling::Greedy,
         method: None,
         tenant: 0,
+        deadline_ticks: None,
     };
     // oversized prompt → rejected at submit, terminal immediately
     let big = mk(7, vec![1; max_ctx + 1]);
@@ -505,6 +508,7 @@ fn server_occupancy_admission_beats_worst_case() {
                 sampling: Sampling::Greedy,
                 method: None,
                 tenant: 0,
+                deadline_ticks: None,
             })
             .unwrap();
     }

@@ -136,6 +136,7 @@ fn batcher_fifo_no_starvation() {
                 sampling: Sampling::Greedy,
                 method: None,
                 tenant: 0,
+                deadline_ticks: None,
             });
         }
         let mut admitted = Vec::new();
@@ -206,6 +207,7 @@ fn event_streams_well_formed_under_random_schedules() {
                 sampling: Sampling::Greedy,
                 method: None,
                 tenant: 0,
+                deadline_ticks: None,
             });
         }
         let mut guard = 0;

@@ -17,7 +17,12 @@
 //! * `BENCH_traffic.json` — the seeded traffic smoke (`mixkvq traffic`)
 //!   must finish every session, hold the p99 TTFT bar, carry per-tenant
 //!   SLO stats, and show **zero same-seed drift** (the harness runs the
-//!   seed twice; diverging fingerprints mean serving nondeterminism).
+//!   seed twice; diverging fingerprints mean serving nondeterminism);
+//! * `BENCH_chaos.json` — the seeded chaos soak (`mixkvq traffic --chaos`)
+//!   must have actually injected faults, recovered every session to a
+//!   terminal state, passed the cross-subsystem invariant audit on every
+//!   tick, leaked zero pool pages at drain, and repeated the identical
+//!   failure story on the same-seed rerun.
 //!
 //! A missing or unparseable artifact is itself a violation: the gate exists
 //! so a bench that silently stops running (or changes schema) cannot merge.
@@ -181,14 +186,75 @@ fn gate_traffic(j: &Json) -> Result<Vec<String>> {
     Ok(v)
 }
 
+fn gate_chaos(j: &Json) -> Result<Vec<String>> {
+    let mut v = Vec::new();
+    // the soak must actually have injected faults — a chaos artifact from
+    // a zero-rate run would pass every robustness bar vacuously
+    let rate = j.get("chaos_rate")?.as_f64()?;
+    if rate <= 0.0 {
+        v.push(format!(
+            "chaos: artifact written with chaos_rate {rate} — the soak \
+             injected nothing"
+        ));
+    }
+    let injected: f64 = j
+        .get("faults_injected")?
+        .as_arr()?
+        .iter()
+        .map(|x| x.as_f64().unwrap_or(0.0))
+        .sum();
+    if rate > 0.0 && injected <= 0.0 {
+        v.push("chaos: no faults fired despite a nonzero rate".to_string());
+    }
+    // recovery machinery must be reporting (schema presence is the check;
+    // zero retries at a real fault rate would mean the hooks fell off)
+    let retries = j.get("prefill_retries")?.as_f64()?;
+    let _recoveries = j.get("fault_recoveries")?.as_f64()?;
+    let _errors = j.get("errors")?.as_f64()?;
+    if injected > 0.0 && retries <= 0.0 {
+        v.push("chaos: faults fired but the retry path never engaged".to_string());
+    }
+    let sessions = j.get("sessions")?.as_f64()?;
+    let completed = j.get("completed")?.as_f64()?;
+    if completed < sessions {
+        v.push(format!(
+            "chaos: {completed} of {sessions} sessions reached a terminal \
+             state — injected faults stranded requests"
+        ));
+    }
+    let violations = j.get("invariant_violations")?.as_f64()?;
+    if violations > 0.0 {
+        v.push(format!(
+            "chaos: {violations} tick(s) failed the cross-subsystem \
+             invariant audit"
+        ));
+    }
+    let leaked = j.get("leaked_pages")?.as_f64()?;
+    if leaked > 0.0 {
+        v.push(format!("chaos: {leaked} pool pages leaked at drain"));
+    }
+    // fault schedules are seeded: the soak reruns the seed and the entire
+    // failure story must repeat bit-for-bit
+    let fp = j.get("fingerprint")?.as_str()?;
+    let fp2 = j.get("fingerprint_repeat")?.as_str()?;
+    if !matches!(j.get("deterministic")?, Json::Bool(true)) || fp != fp2 {
+        v.push(format!(
+            "chaos: same-seed soaks diverged (fingerprint {fp} vs {fp2}) — \
+             nondeterministic failure handling"
+        ));
+    }
+    Ok(v)
+}
+
 type Gate = fn(&Json) -> Result<Vec<String>>;
 
-const GATES: [(&str, Gate); 5] = [
+const GATES: [(&str, Gate); 6] = [
     ("BENCH_ref_decode.json", gate_ref_decode),
     ("BENCH_paged_decode.json", gate_paged_decode),
     ("BENCH_prefill.json", gate_prefill),
     ("BENCH_prefix_sharing.json", gate_prefix_sharing),
     ("BENCH_traffic.json", gate_traffic),
+    ("BENCH_chaos.json", gate_chaos),
 ];
 
 /// Run every gate over `dir`, returning the full violation list (empty =
@@ -219,7 +285,8 @@ fn main() -> ExitCode {
              (decode >= {DECODE_SPEEDUP_MIN}x, prefill >= {PREFILL_SPEEDUP_MIN}x, \
              f32 shrink >= {PREFILL_MEM_RATIO_MIN}x, paged overhead <= \
              {PAGED_OVERHEAD_MAX_PCT}%, prefix dedup >= {PREFIX_DEDUP_MIN}x, \
-             traffic p99 TTFT <= {TRAFFIC_P99_TTFT_MAX_MS} ms + deterministic)"
+             traffic p99 TTFT <= {TRAFFIC_P99_TTFT_MAX_MS} ms + deterministic, \
+             chaos soak all-terminal + invariant-clean + leak-free)"
         );
         return ExitCode::SUCCESS;
     }
@@ -356,6 +423,72 @@ mod tests {
         assert!(v[0].contains("per-tenant"), "{v:?}");
     }
 
+    fn chaos_report(
+        completed: f64,
+        violations: f64,
+        leaked: f64,
+        injected: &str,
+        retries: f64,
+        det: bool,
+        fp2: &str,
+    ) -> String {
+        format!(
+            r#"{{"schema":"traffic-v1","sessions":200,"completed":{completed},
+                 "rejected":0,"ticks":300,"chaos_rate":0.05,
+                 "invariant_violations":{violations},"leaked_pages":{leaked},
+                 "faults_injected":{injected},"prefill_retries":{retries},
+                 "fault_recoveries":9,"errors":2,"deadline_retirements":0,
+                 "p99_ttft_ms":50.0,"fingerprint":"feedface",
+                 "fingerprint_repeat":"{fp2}","deterministic":{det},
+                 "tenants":[{{"tenant":0,"served":200}}]}}"#
+        )
+    }
+
+    #[test]
+    fn healthy_chaos_report_passes() {
+        let src = chaos_report(200.0, 0.0, 0.0, "[12,8,5,2]", 11.0, true, "feedface");
+        let v = gate_chaos(&parse(&src)).unwrap();
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn chaos_gate_catches_every_degradation_independently() {
+        // stranded sessions
+        let v = gate_chaos(&parse(&chaos_report(150.0, 0.0, 0.0, "[12,8,5,2]", 11.0, true, "feedface"))).unwrap();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("terminal"), "{v:?}");
+        // invariant violations
+        let v = gate_chaos(&parse(&chaos_report(200.0, 3.0, 0.0, "[12,8,5,2]", 11.0, true, "feedface"))).unwrap();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("invariant"), "{v:?}");
+        // leaked pages
+        let v = gate_chaos(&parse(&chaos_report(200.0, 0.0, 4.0, "[12,8,5,2]", 11.0, true, "feedface"))).unwrap();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("leaked"), "{v:?}");
+        // vacuous soak: nothing injected
+        let v = gate_chaos(&parse(&chaos_report(200.0, 0.0, 0.0, "[0,0,0,0]", 0.0, true, "feedface"))).unwrap();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("no faults fired"), "{v:?}");
+        // faults fired but the retry machinery never engaged
+        let v = gate_chaos(&parse(&chaos_report(200.0, 0.0, 0.0, "[12,8,5,2]", 0.0, true, "feedface"))).unwrap();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("retry path"), "{v:?}");
+        // nondeterministic failure story
+        let v = gate_chaos(&parse(&chaos_report(200.0, 0.0, 0.0, "[12,8,5,2]", 11.0, true, "feedfacf"))).unwrap();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("diverged"), "{v:?}");
+    }
+
+    #[test]
+    fn chaos_gate_rejects_missing_recovery_counters() {
+        // a report that drops the recovery counters is schema drift
+        let src = r#"{"sessions":200,"completed":200,"chaos_rate":0.05,
+            "invariant_violations":0,"leaked_pages":0,
+            "faults_injected":[1,1,1,1],
+            "fingerprint":"aa","fingerprint_repeat":"aa","deterministic":true}"#;
+        assert!(gate_chaos(&parse(src)).is_err());
+    }
+
     #[test]
     fn empty_entries_are_a_violation() {
         // a bench that regresses to writing no data must not pass green
@@ -409,6 +542,11 @@ mod tests {
         std::fs::write(
             dir.join("BENCH_traffic.json"),
             traffic_report(200.0, 38.2, "0123abcd", "0123abcd", true),
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("BENCH_chaos.json"),
+            chaos_report(200.0, 0.0, 0.0, "[12,8,5,2]", 11.0, true, "feedface"),
         )
         .unwrap();
         assert!(run_gates(&dir).is_empty());
