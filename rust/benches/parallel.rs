@@ -1,0 +1,89 @@
+//! `cargo bench --bench parallel` — worker-pool scaling through the real
+//! serving stack: the same seeded closed-loop workload at `workers = 1`
+//! and `workers = 4`, timed end to end.
+//!
+//! Like the other artifact-free benches this needs no artifacts (random
+//! weights, build-default shapes), so it always runs — on CI and fresh
+//! checkouts — and writes `BENCH_parallel.json` for the bench gate, which
+//! holds two bars over it:
+//!
+//! * tick throughput at 4 workers must stay ≥ 2× the single-threaded run
+//!   (the ISSUE acceptance bar for the worker pool);
+//! * ZERO fingerprint drift between the widths — the parallel path is a
+//!   perf optimisation, not a semantics change, so both runs must report
+//!   the identical outcome fingerprint (ids, reasons, token streams,
+//!   tenant counters) and the identical tick count.
+//!
+//! Because outcomes are bit-identical, the two runs execute the *same*
+//! tick sequence — wall-time ratio IS the scaling, with no workload noise.
+
+use std::time::Instant;
+
+use mixkvq::coordinator::engine::Engine;
+use mixkvq::harness::traffic::{self as tr, Arrival, TrafficConfig};
+use mixkvq::model::config::Meta;
+use mixkvq::quant::methods::Method;
+use mixkvq::util::json::{self, Json};
+
+fn main() {
+    let cfg_at = |workers: usize| TrafficConfig {
+        seed: 21,
+        sessions: 48,
+        tenants: 4,
+        // closed loop keeps the decode batch full: scaling measures the
+        // sharded compute, not arrival gaps
+        arrival: Arrival::ClosedLoop { concurrency: 8, think_ticks: 1 },
+        max_new: 32,
+        prompt_lo: 48,
+        prompt_hi: 96,
+        workers,
+        ..TrafficConfig::default()
+    };
+    let engine = || {
+        Engine::new_reference(Meta::default_build(), 11, Method::bf16(), 32)
+            .expect("reference engine")
+    };
+
+    let mut entries = Vec::new();
+    let mut reports = Vec::new();
+    for workers in [1usize, 4] {
+        let cfg = cfg_at(workers);
+        let t0 = Instant::now();
+        let r = tr::run(engine(), &cfg).expect("traffic run");
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let ticks_per_s = r.ticks as f64 / (wall_ms / 1e3).max(1e-9);
+        println!(
+            "workers={workers}: {} sessions, {} ticks in {:.1} ms ({:.1} ticks/s), \
+             fingerprint {:016x}",
+            r.completed, r.ticks, wall_ms, ticks_per_s, r.fingerprint
+        );
+        assert_eq!(r.completed, cfg.sessions, "workers={workers}: sessions stranded");
+        entries.push(json::obj(vec![
+            ("workers", json::num(workers as f64)),
+            ("wall_ms", json::num(wall_ms)),
+            ("ticks", json::num(r.ticks as f64)),
+            ("ticks_per_s", json::num(ticks_per_s)),
+            ("fingerprint", json::s(&format!("{:016x}", r.fingerprint))),
+        ]));
+        reports.push(r);
+    }
+
+    let drift = reports[0].fingerprint != reports[1].fingerprint
+        || reports[0].ticks != reports[1].ticks;
+    let e = |i: usize, k: &str| entries[i].get(k).unwrap().as_f64().unwrap();
+    let scaling = e(1, "ticks_per_s") / e(0, "ticks_per_s").max(1e-9);
+    println!(
+        "parallel scaling: {scaling:.2}x tick throughput at 4 workers{}{}",
+        if scaling < 2.0 { "  (below the 2x bar!)" } else { "" },
+        if drift { "  FINGERPRINT DRIFT" } else { "" }
+    );
+
+    let report = json::obj(vec![
+        ("bench", json::s("parallel")),
+        ("entries", Json::Arr(entries)),
+        ("scaling", json::num(scaling)),
+        ("fingerprint_drift", Json::Bool(drift)),
+    ]);
+    std::fs::write("BENCH_parallel.json", report.print() + "\n").expect("write bench json");
+    println!("wrote BENCH_parallel.json");
+}

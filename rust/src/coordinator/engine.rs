@@ -8,13 +8,16 @@
 //! the engine's default; requests carrying a `MethodSpec` override are
 //! admitted with their own method's cache ([`Engine::admit_prefill_with`])
 //! and decoded through their variant's graph
-//! ([`Engine::decode_step_variant`]) — the server's batcher groups live
-//! slots into per-variant sub-batches each step.
+//! ([`Engine::decode_step_isolated`]) — the server's batcher groups live
+//! slots into per-variant sub-batches each step, and
+//! [`Engine::decode_groups_isolated`] fans a whole tick's groups across
+//! the engine's worker pool (crate docs, "Threading model").
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -29,7 +32,8 @@ use crate::quant::methods::{Method, MethodSpec};
 use crate::runtime::client::Runtime;
 use crate::runtime::executor::{upload, Arg, DeviceArg, Executable};
 use crate::runtime::registry::{decode_artifact, pick_bucket, prefill_artifact, DType};
-use crate::util::faults::{FaultInjector, FaultSite};
+use crate::util::faults::{draw_key, FaultInjector, FaultSite};
+use crate::util::workers::WorkerPool;
 
 /// Prefill products shaped for RequestCache::load_prefill.
 pub struct PrefillData {
@@ -74,6 +78,42 @@ pub struct EngineTimers {
     /// Ticks whose in-flight prefill round ran in non-FIFO order because
     /// shortest-remaining-chunks scheduling promoted a shorter prompt.
     pub prefill_reorders: u64,
+    /// Per-worker busy nanoseconds inside worker-pool jobs (index =
+    /// worker id; worker 0 is the coordinator thread running its own
+    /// share inline). Len 0 until a pool is installed; len 1 at
+    /// `workers = 1`.
+    pub worker_busy_ns: Vec<u64>,
+    /// Per-worker job counts — the dispatch-imbalance gauge's raw data.
+    pub worker_jobs: Vec<u64>,
+    /// Ticks that used the parallel decode/prefill paths (`workers > 1`
+    /// with more than one unit of work to shard).
+    pub parallel_ticks: u64,
+}
+
+impl EngineTimers {
+    /// Effective parallel speedup over the worker-pool sections:
+    /// `sum(busy) / max(busy)` — how many workers' worth of compute the
+    /// pool actually extracted (1.0 = single-threaded, `n` = perfectly
+    /// balanced across `n` workers).
+    pub fn parallel_speedup(&self) -> f64 {
+        let max = self.worker_busy_ns.iter().copied().max().unwrap_or(0);
+        if max == 0 {
+            return 1.0;
+        }
+        self.worker_busy_ns.iter().sum::<u64>() as f64 / max as f64
+    }
+
+    /// Dispatch imbalance across workers in [0, 1]: `(max - min) / max`
+    /// over per-worker busy time. 0 = perfectly even; values near 1 mean
+    /// one worker did nearly all the work (sharding is not helping).
+    pub fn dispatch_imbalance(&self) -> f64 {
+        let max = self.worker_busy_ns.iter().copied().max().unwrap_or(0);
+        if max == 0 || self.worker_busy_ns.len() < 2 {
+            return 0.0;
+        }
+        let min = self.worker_busy_ns.iter().copied().min().unwrap_or(0);
+        (max - min) as f64 / max as f64
+    }
 }
 
 /// An in-flight chunked prefill: the request's cache (quantized pages fill
@@ -84,6 +124,18 @@ pub struct EngineTimers {
 pub struct ChunkedPrefill {
     pub cache: RequestCache,
     pub run: PrefillRun,
+}
+
+/// One variant sub-batch of a serving tick, shaped for
+/// [`Engine::decode_groups_isolated`]: the batcher's per-variant slot
+/// grouping with each live slot holding its request's cache and next
+/// token. Groups are independent by construction (a request occupies
+/// exactly one slot of one group), which is what lets the engine fan a
+/// whole tick's slots across the worker pool.
+pub struct DecodeGroup<'c> {
+    pub variant: String,
+    pub rot: Vec<f32>,
+    pub slots: Vec<Option<(&'c mut RequestCache, i32)>>,
 }
 
 pub struct Engine {
@@ -133,7 +185,19 @@ pub struct Engine {
     ref_scratch: Option<DecodeScratch>,
     /// Deterministic fault injection (chaos testing), shared with the
     /// server and the pool. `None` (the default) makes every hook free.
-    faults: Option<Rc<RefCell<FaultInjector>>>,
+    /// Draws are stateless keyed functions of `(plan.seed, site, key)`
+    /// (util::faults), so sharing the injector across worker threads
+    /// cannot perturb replay schedules.
+    faults: Option<Arc<FaultInjector>>,
+    /// Worker pool for the parallel decode/prefill paths. `None` until
+    /// [`Engine::set_workers`]; a 1-sized pool runs everything inline on
+    /// the coordinator (exact single-threaded behavior).
+    workers: Option<WorkerPool>,
+    /// Ordinal for `PrefixCorrupt` fault draws — the prefix index is
+    /// coordinator-only, so a sequential counter is already
+    /// schedule-independent; it feeds `draw_key` to decorrelate
+    /// consecutive draws.
+    prefix_fault_seq: u64,
 }
 
 enum Owned {
@@ -229,6 +293,8 @@ impl Engine {
             ref_rope,
             ref_scratch: None,
             faults: None,
+            workers: None,
+            prefix_fault_seq: 0,
         })
     }
 
@@ -263,6 +329,8 @@ impl Engine {
             ref_rope,
             ref_scratch: None,
             faults: None,
+            workers: None,
+            prefix_fault_seq: 0,
         })
     }
 
@@ -295,8 +363,37 @@ impl Engine {
     /// Install the deterministic fault injector (shared with the server
     /// and the pool). Arms the `PrefillChunk`, `DecodeStep`, and
     /// `PrefixCorrupt` hooks.
-    pub fn set_faults(&mut self, faults: Rc<RefCell<FaultInjector>>) {
+    pub fn set_faults(&mut self, faults: Arc<FaultInjector>) {
         self.faults = Some(faults);
+    }
+
+    /// Install a worker pool of size `n` (clamped to ≥ 1). Per-worker
+    /// decode arenas are allocated and warmed here, once, so the parallel
+    /// steady state stays zero-alloc like the single-threaded path.
+    /// `n = 1` keeps every path inline on the coordinator thread — exact
+    /// current behavior.
+    pub fn set_workers(&mut self, n: usize) {
+        let cc = &self.meta.cache;
+        let max_scores = cc.capacity + cc.residual + 1;
+        self.workers = Some(WorkerPool::new(n.max(1), &self.meta.model, max_scores));
+        let size = self.workers.as_ref().map_or(1, WorkerPool::size);
+        self.timers.worker_busy_ns = vec![0; size];
+        self.timers.worker_jobs = vec![0; size];
+    }
+
+    /// Installed worker-pool size (1 when no pool has been installed).
+    pub fn workers(&self) -> usize {
+        self.workers.as_ref().map_or(1, WorkerPool::size)
+    }
+
+    /// Refresh `timers.worker_busy_ns` / `timers.worker_jobs` from the
+    /// pool's cumulative per-worker counters.
+    fn sync_worker_timers(&mut self) {
+        if let Some(pool) = &self.workers {
+            let loads = pool.loads();
+            self.timers.worker_busy_ns = loads.iter().map(|l| l.busy_ns).collect();
+            self.timers.worker_jobs = loads.iter().map(|l| l.jobs).collect();
+        }
     }
 
     /// Content-addressed key for `prompt` under `method`: the hash-chain
@@ -537,21 +634,28 @@ impl Engine {
     /// One batched decode step on the *default* variant. `slots[i] =
     /// Some((cache, token))` for live requests; idle slots are masked out.
     /// Returns per-slot logits and updates each live cache (append + lazy
-    /// quantization).
+    /// quantization). Legacy whole-batch error contract for benches and
+    /// harness drivers: the first failing slot's error collapses the call
+    /// — internally this is [`Engine::decode_step_isolated`] with the
+    /// per-slot `Result`s transposed, so both entries share one step
+    /// implementation.
     pub fn decode_step(
         &mut self,
         slots: &mut [Option<(&mut RequestCache, i32)>],
     ) -> Result<Vec<Option<Vec<f32>>>> {
         let variant = self.variant.name.clone();
         let rot = self.rot.clone();
-        self.decode_step_variant(&variant, &rot, slots)
+        self.decode_step_isolated(&variant, &rot, slots)?
+            .into_iter()
+            .map(Option::transpose)
+            .collect()
     }
 
     /// One batched decode step through `variant`'s compiled graph (must be
     /// resident — see [`Engine::ensure_method`]). Every live slot in the
     /// call must hold a cache built for this variant's tier shapes; the
     /// batcher's variant groups guarantee that in serving.
-    pub fn decode_step_variant(
+    fn decode_step_compiled(
         &mut self,
         variant: &str,
         rot: &[f32],
@@ -560,9 +664,6 @@ impl Engine {
         let b = self.meta.cache.decode_batch;
         if slots.len() != b {
             bail!("decode batch must have exactly {b} slots");
-        }
-        if self.runtime.is_none() {
-            return self.decode_step_reference(variant, slots);
         }
         let spec = self.meta.variant(variant)?.clone();
         let decode_name = decode_artifact(variant);
@@ -643,21 +744,27 @@ impl Engine {
         }
         // Injected decode-step faults are drawn per live slot (one victim,
         // not the group); victims are masked out of the batch before the
-        // step runs and reported as per-slot errors afterwards.
+        // step runs and reported as per-slot errors afterwards. Each
+        // slot's draw is keyed by its own cache's per-request ordinal
+        // stream, so the outcome depends only on (seed, request, step
+        // number) — never on slot position, group order, or worker
+        // schedule.
         let mut injected = vec![false; slots.len()];
         if let Some(f) = self.faults.clone() {
-            let mut f = f.borrow_mut();
             for (i, s) in slots.iter_mut().enumerate() {
-                if s.is_some() && f.should_fail(FaultSite::DecodeStep) {
-                    injected[i] = true;
-                    *s = None;
+                if let Some((cache, _)) = s {
+                    let key = cache.next_decode_fault_key();
+                    if f.should_fail(FaultSite::DecodeStep, key) {
+                        injected[i] = true;
+                        *s = None;
+                    }
                 }
             }
         }
         let stepped: Vec<Option<Result<Vec<f32>>>> = if self.runtime.is_none() {
             self.decode_step_reference_isolated(variant, slots)?
         } else {
-            match self.decode_step_variant(variant, rot, slots) {
+            match self.decode_step_compiled(variant, rot, slots) {
                 Ok(res) => res.into_iter().map(|o| o.map(Ok)).collect(),
                 Err(e) => {
                     let msg = format!("{e:#}");
@@ -678,32 +785,134 @@ impl Engine {
             .collect())
     }
 
-    /// One decode step on the reference backend: each live slot runs the
-    /// fused packed-code reference decode (`RefModel::decode_step_into`)
-    /// and folds its new token into the cache — semantically the per-slot
-    /// unfolding of the compiled batched step, against the same caches and
-    /// tier shapes. The sub-batch's `variant` is validated like the
-    /// compiled path validates artifact residency; the per-slot tier
-    /// shapes live in each cache, so heterogeneous groups decode
-    /// correctly. A slot's first failing error is collapsed into a
-    /// whole-batch `Err` here (legacy contract for benches and harness
-    /// drivers); the serving path goes through
-    /// [`Engine::decode_step_isolated`] instead.
-    fn decode_step_reference(
+    /// One full serving tick of decode work: every variant group's
+    /// sub-batch, stepped with per-slot error isolation and — on the
+    /// reference backend with `workers > 1` and more than one live slot —
+    /// fanned across the worker pool one job per live slot
+    /// (threading-model boundary (a)). The merge is deterministic: job
+    /// results fold back in (group, slot) index order, never completion
+    /// order, and every cache mutation (`append`, page leases,
+    /// quantization) happens on the coordinator thread in that same
+    /// order — so logits, cache contents, pool books, and fault draws
+    /// are bit-identical to running [`Engine::decode_step_isolated`] per
+    /// group sequentially (gated by tests/parallel.rs). With a single
+    /// live slot the sequential path runs instead, where the per-head
+    /// attention split (boundary (c)) picks up the parallelism.
+    pub fn decode_groups_isolated(
         &mut self,
-        variant: &str,
-        slots: &mut [Option<(&mut RequestCache, i32)>],
-    ) -> Result<Vec<Option<Vec<f32>>>> {
-        self.decode_step_reference_isolated(variant, slots)?
-            .into_iter()
-            .map(Option::transpose)
-            .collect()
+        groups: &mut [DecodeGroup<'_>],
+    ) -> Result<Vec<Vec<Option<Result<Vec<f32>>>>>> {
+        let live: usize = groups
+            .iter()
+            .map(|g| g.slots.iter().filter(|s| s.is_some()).count())
+            .sum();
+        if !(self.runtime.is_none() && self.workers() > 1 && live > 1) {
+            let mut out = Vec::with_capacity(groups.len());
+            for g in groups.iter_mut() {
+                out.push(self.decode_step_isolated(&g.variant, &g.rot, &mut g.slots)?);
+            }
+            return Ok(out);
+        }
+        let b = self.meta.cache.decode_batch;
+        for g in groups.iter() {
+            if g.slots.len() != b {
+                bail!("decode batch must have exactly {b} slots");
+            }
+            self.meta.variant(&g.variant)?;
+        }
+        // Keyed per-slot fault draws in (group, slot) order — identical
+        // to the sequential path's draws because each key comes from the
+        // request's own ordinal stream, not from call order.
+        let mut injected: Vec<Vec<bool>> =
+            groups.iter().map(|g| vec![false; g.slots.len()]).collect();
+        if let Some(f) = self.faults.clone() {
+            for (gi, g) in groups.iter_mut().enumerate() {
+                for (i, s) in g.slots.iter_mut().enumerate() {
+                    if let Some((cache, _)) = s {
+                        let key = cache.next_decode_fault_key();
+                        if f.should_fail(FaultSite::DecodeStep, key) {
+                            injected[gi][i] = true;
+                            *s = None;
+                        }
+                    }
+                }
+            }
+        }
+        let mut workers = self.workers.take().expect("parallel path requires a pool");
+        let model = RefModel::with_parts(
+            self.meta.model.clone(),
+            &self.weights,
+            self.ref_pidx.clone(),
+            self.ref_rope.clone(),
+        );
+        let t0 = Instant::now();
+        // One job per live slot. Jobs only READ their cache — the whole
+        // forward pass is pure compute against per-worker arenas; outputs
+        // come back as owned buffers (the compiled path's per-slot
+        // gathers allocate comparably).
+        let mut order: Vec<(usize, usize)> = Vec::new();
+        let mut jobs = Vec::new();
+        for (gi, g) in groups.iter().enumerate() {
+            for (i, s) in g.slots.iter().enumerate() {
+                if let Some((cache, tok)) = s {
+                    let cache: &RequestCache = &**cache;
+                    let tok = *tok;
+                    let m = &model;
+                    order.push((gi, i));
+                    jobs.push(move |ws: &mut crate::util::workers::WorkerScratch| {
+                        m.decode_step_into(tok, cache, &mut ws.decode);
+                        (
+                            ws.decode.logits.clone(),
+                            ws.decode.knew.clone(),
+                            ws.decode.vnew.clone(),
+                            ws.decode.qabs.clone(),
+                        )
+                    });
+                }
+            }
+        }
+        let stepped = workers.run(jobs);
+        let mut out: Vec<Vec<Option<Result<Vec<f32>>>>> = groups
+            .iter()
+            .map(|g| (0..g.slots.len()).map(|_| None).collect())
+            .collect();
+        for ((gi, i), (logits, kn, vn, qn)) in order.into_iter().zip(stepped) {
+            let (cache, _) = groups[gi].slots[i].as_mut().expect("live slot");
+            let tq = Instant::now();
+            let before = cache.qlen;
+            out[gi][i] = Some(match cache.append(&kn, &vn, &qn) {
+                Ok(()) => {
+                    if cache.qlen != before {
+                        self.timers.quantize_events += 1;
+                        self.timers.quantize_ns += tq.elapsed().as_nanos() as u64;
+                    }
+                    Ok(logits)
+                }
+                Err(e) => Err(e),
+            });
+        }
+        for (gi, hits) in injected.iter().enumerate() {
+            for (i, &hit) in hits.iter().enumerate() {
+                if hit {
+                    out[gi][i] = Some(Err(anyhow!("injected transient fault: decode step")));
+                }
+            }
+        }
+        self.timers.decode_exec_ns += t0.elapsed().as_nanos() as u64;
+        self.timers.decode_steps += groups.len() as u64;
+        self.timers.parallel_ticks += 1;
+        drop(model);
+        self.workers = Some(workers);
+        self.sync_worker_timers();
+        Ok(out)
     }
 
     /// Per-slot body of the reference decode step: a slot whose
     /// `cache.append` fails carries its own `Err` while the remaining
     /// slots still step (their caches stay coherent — nothing after a
-    /// failing slot depends on it).
+    /// failing slot depends on it). With a worker pool installed each
+    /// slot's attention splits across the pool by query-head range
+    /// (threading-model boundary (c)) — bit-identical to the inline path.
     fn decode_step_reference_isolated(
         &mut self,
         variant: &str,
@@ -715,6 +924,7 @@ impl Engine {
             Some(s) => s,
             None => DecodeScratch::new(&self.meta.model, cc.capacity + cc.residual + 1),
         };
+        let mut workers = self.workers.take();
         let model = RefModel::with_parts(
             self.meta.model.clone(),
             &self.weights,
@@ -727,7 +937,12 @@ impl Engine {
             match slot {
                 None => results.push(None),
                 Some((cache, tok)) => {
-                    model.decode_step_into(*tok, cache, &mut scratch);
+                    match workers.as_mut() {
+                        Some(pool) if pool.size() > 1 => {
+                            model.decode_step_into_mt(*tok, cache, &mut scratch, pool)
+                        }
+                        _ => model.decode_step_into(*tok, cache, &mut scratch),
+                    }
                     let tq = Instant::now();
                     let before = cache.qlen;
                     match cache.append(&scratch.knew, &scratch.vnew, &scratch.qabs) {
@@ -747,6 +962,8 @@ impl Engine {
         self.timers.decode_steps += 1;
         drop(model);
         self.ref_scratch = Some(scratch);
+        self.workers = workers;
+        self.sync_worker_timers();
         Ok(results)
     }
 
@@ -811,11 +1028,16 @@ impl Engine {
             // its token verify — distrusted, dropped, recorded as a
             // collision-miss — and the request falls through to a full
             // prefill. A corrupted entry is never served.
-            let corrupt = ixb.contains(key)
-                && self
-                    .faults
-                    .as_ref()
-                    .is_some_and(|f| f.borrow_mut().should_fail(FaultSite::PrefixCorrupt));
+            let corrupt = ixb.contains(key) && {
+                match self.faults.as_ref() {
+                    Some(f) => {
+                        let k = draw_key(0, self.prefix_fault_seq);
+                        self.prefix_fault_seq += 1;
+                        f.should_fail(FaultSite::PrefixCorrupt, k)
+                    }
+                    None => false,
+                }
+            };
             if corrupt {
                 ixb.discard_corrupt(key);
             } else if let Some(entry) = ixb.lookup(key, prompt) {
@@ -852,9 +1074,12 @@ impl Engine {
     ) -> Result<bool> {
         // Injected prefill-chunk fault: this advance errors before doing
         // any work — the run's cache state is untouched, so the router's
-        // retry machinery can requeue the request cleanly.
+        // retry machinery can requeue the request cleanly. The draw is
+        // keyed by the request's own prefill ordinal stream, so it is
+        // independent of tick composition and worker schedule.
         if let Some(f) = &self.faults {
-            if f.borrow_mut().should_fail(FaultSite::PrefillChunk) {
+            let key = cp.cache.next_prefill_fault_key();
+            if f.should_fail(FaultSite::PrefillChunk, key) {
                 bail!("injected transient fault: prefill chunk step");
             }
         }
@@ -878,6 +1103,120 @@ impl Engine {
             self.timers.quantize_events += 1;
         }
         Ok(done)
+    }
+
+    /// Advance a whole tick's in-flight chunked prefills (threading-model
+    /// boundary (b)). Each entry is `(prefill, prompt, max_chunks)`; the
+    /// returned Vec is in item order, each entry exactly what
+    /// [`Engine::advance_prefill_chunked`] would have returned for that
+    /// item.
+    ///
+    /// The parallel path is **abundance-gated**: prefill units lease pool
+    /// pages as layers close, so items run concurrently only when the
+    /// pool could satisfy every item's worst-case claim — then no lease
+    /// can fail for lack of pages regardless of worker interleaving, and
+    /// the only lease outcomes left are the keyed fault draws, which are
+    /// schedule-independent by construction. Under scarcity (or
+    /// `workers = 1`, or a compiled runtime) items advance sequentially —
+    /// the exact legacy path, including its pressure/`pool_dry`
+    /// semantics.
+    pub fn advance_prefills_parallel(
+        &mut self,
+        items: &mut [(&mut ChunkedPrefill, &[i32], usize)],
+    ) -> Vec<Result<bool>> {
+        let abundant = match &self.kv_pool {
+            None => true,
+            Some(pool) => {
+                let cc = &self.meta.cache;
+                let mc = &self.meta.model;
+                let claim: usize = items
+                    .iter()
+                    .map(|(_, prompt, _)| {
+                        let (qt, _) = RequestCache::prefill_split(
+                            prompt.len(),
+                            self.r_limit,
+                            cc.group,
+                            cc.capacity,
+                        );
+                        crate::kvcache::pool::pages_for_tokens(
+                            qt,
+                            cc.group,
+                            mc.n_layers,
+                            mc.n_kv_heads,
+                        )
+                    })
+                    .sum();
+                pool.available() >= claim
+            }
+        };
+        if !(self.runtime.is_none() && self.workers() > 1 && items.len() > 1 && abundant) {
+            return items
+                .iter_mut()
+                .map(|(cp, prompt, mx)| self.advance_prefill_chunked(cp, prompt, *mx))
+                .collect();
+        }
+        // Keyed fault draws up front in item order (per-request ordinal
+        // streams — identical draws to the sequential path); victims
+        // error without touching their run, exactly like the inline hook.
+        let mut verdicts: Vec<Option<Result<bool>>> = items.iter().map(|_| None).collect();
+        if let Some(f) = self.faults.clone() {
+            for (i, (cp, _, _)) in items.iter_mut().enumerate() {
+                let key = cp.cache.next_prefill_fault_key();
+                if f.should_fail(FaultSite::PrefillChunk, key) {
+                    verdicts[i] =
+                        Some(Err(anyhow!("injected transient fault: prefill chunk step")));
+                }
+            }
+        }
+        let mut workers = self.workers.take().expect("parallel path requires a pool");
+        let model = RefModel::with_parts(
+            self.meta.model.clone(),
+            &self.weights,
+            self.ref_pidx.clone(),
+            self.ref_rope.clone(),
+        );
+        let t0 = Instant::now();
+        // One job per live item: a ChunkedPrefill *is* its own resumable
+        // arena (run + cache), so jobs are disjoint by construction and
+        // need no worker scratch.
+        let mut order: Vec<usize> = Vec::new();
+        let mut jobs = Vec::new();
+        for (i, (cp, prompt, mx)) in items.iter_mut().enumerate() {
+            if verdicts[i].is_some() {
+                continue;
+            }
+            let cp: &mut ChunkedPrefill = &mut **cp;
+            let prompt: &[i32] = *prompt;
+            let mx = *mx;
+            let m = &model;
+            order.push(i);
+            jobs.push(move |_ws: &mut crate::util::workers::WorkerScratch| {
+                let already_done = cp.run.is_done();
+                let before = cp.run.chunks_done();
+                let done = cp.run.advance(m, prompt, &mut cp.cache, mx);
+                (cp.run.chunks_done() - before, already_done, done)
+            });
+        }
+        let stepped = workers.run(jobs);
+        for (i, (delta, already_done, done)) in order.into_iter().zip(stepped) {
+            self.timers.prefill_chunks += delta as u64;
+            verdicts[i] = Some(match done {
+                Err(e) => Err(e),
+                Ok(done) => {
+                    if done && !already_done {
+                        self.timers.prefill_tokens += items[i].1.len() as u64;
+                        self.timers.quantize_events += 1;
+                    }
+                    Ok(done)
+                }
+            });
+        }
+        self.timers.prefill_exec_ns += t0.elapsed().as_nanos() as u64;
+        self.timers.parallel_ticks += 1;
+        drop(model);
+        self.workers = Some(workers);
+        self.sync_worker_timers();
+        verdicts.into_iter().map(|v| v.expect("every item resolved")).collect()
     }
 
     /// Quantize a freshly prefilled prompt into a new cache under the

@@ -693,6 +693,19 @@ pub struct Breakdown {
     /// Prompt tokens prefilled per second of prefill wall time (the
     /// blocked-chunked pipeline's throughput; 0 when no prefill ran).
     pub prefill_tok_s: f64,
+    /// Worker-pool lanes the engine sharded ticks across (1 = the
+    /// single-threaded path; the remaining fields are then trivial).
+    pub workers: usize,
+    /// Effective parallel speedup: total worker-busy time over the
+    /// critical-path (busiest worker) time. 1.0 when single-threaded or
+    /// idle; approaches `workers` under perfect load balance.
+    pub parallel_speedup: f64,
+    /// Dispatch imbalance: (busiest − idlest) busy time as a share of the
+    /// busiest, in percent. 0 = perfectly balanced shards.
+    pub dispatch_imbalance_pct: f64,
+    /// Ticks that actually fanned work out across the pool (multi-slot
+    /// decode or abundant chunked prefill).
+    pub parallel_ticks: u64,
 }
 
 pub fn breakdown(t: &EngineTimers) -> Breakdown {
@@ -719,6 +732,10 @@ pub fn breakdown(t: &EngineTimers) -> Breakdown {
         } else {
             t.prefill_tokens as f64 / (t.prefill_exec_ns as f64 * 1e-9)
         },
+        workers: t.worker_busy_ns.len().max(1),
+        parallel_speedup: t.parallel_speedup(),
+        dispatch_imbalance_pct: 100.0 * t.dispatch_imbalance(),
+        parallel_ticks: t.parallel_ticks,
     }
 }
 
@@ -944,5 +961,30 @@ mod tests {
         assert!((b.quantize_call_rate_pct - 10.0).abs() < 1e-9);
         assert!((b.assemble_reuse_pct - 90.0).abs() < 1e-9);
         assert_eq!(b.scratch_bytes_pooled, 4096);
+        // no worker pool installed: the parallel gauges are trivial
+        assert_eq!(b.workers, 1);
+        assert!((b.parallel_speedup - 1.0).abs() < 1e-9);
+        assert!((b.dispatch_imbalance_pct - 0.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn breakdown_reports_parallel_speedup_and_imbalance() {
+        let t = EngineTimers {
+            worker_busy_ns: vec![100, 80, 60, 60],
+            worker_jobs: vec![4, 4, 3, 3],
+            parallel_ticks: 7,
+            ..Default::default()
+        };
+        let b = breakdown(&t);
+        assert_eq!(b.workers, 4);
+        // 300 ns of busy work, 100 ns critical path -> 3x effective
+        assert!((b.parallel_speedup - 3.0).abs() < 1e-9, "{}", b.parallel_speedup);
+        // busiest 100, idlest 60 -> 40% imbalance
+        assert!(
+            (b.dispatch_imbalance_pct - 40.0).abs() < 1e-9,
+            "{}",
+            b.dispatch_imbalance_pct
+        );
+        assert_eq!(b.parallel_ticks, 7);
     }
 }

@@ -41,20 +41,27 @@
 //! * [`Server::run`] is a thin compatibility shim (submit all → tick until
 //!   drained) so offline batch drivers keep working token-for-token.
 //!
-//! Single-threaded by design: the PJRT client is not Send, the sandbox has
-//! one core, and iteration-level batching gives the same throughput math as
-//! an async loop — the *policy* (what gets batched when) is identical to a
-//! threaded deployment.
+//! The *coordinator* is single-threaded: one thread owns admission,
+//! batching, sampling, the prefix index, and all pool bookkeeping, so
+//! serving policy stays sequentially deterministic. Per-tick **compute**
+//! shards across a fixed worker pool (`ServerConfig::workers`, see the
+//! crate docs' "Threading model"): decode sub-batches fan out one job per
+//! live slot, chunked-prefill units advance concurrently under the
+//! abundance gate, and a lone decode splits by attention head — all with
+//! index-ordered merges, so results are bit-identical to `workers = 1`
+//! (the exact legacy single-threaded path). On the compiled backend the
+//! PJRT client is not Send, so ticks stay inline regardless of `workers`.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use crate::coordinator::batcher::Batcher;
-use crate::coordinator::engine::{ChunkedPrefill, Engine};
+use crate::coordinator::engine::{ChunkedPrefill, DecodeGroup, Engine};
 use crate::coordinator::events::{Event, EventLog, RequestStatus};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::{Scheduler, SchedulerPolicy};
@@ -127,6 +134,23 @@ pub struct ServerConfig {
     /// faults). Same seed → same fault schedule. `None` (the default)
     /// leaves every hook free on the happy path.
     pub faults: Option<FaultPlan>,
+    /// Fixed worker-pool size for per-tick compute sharding (crate docs,
+    /// "Threading model"). Defaults to the machine's available
+    /// parallelism; `1` is the exact legacy single-threaded path. Results
+    /// are bit-identical at every value — only wall time changes.
+    pub workers: usize,
+}
+
+/// Default worker count: the `MIXKVQ_WORKERS` environment variable when
+/// set (CI runs the whole suite at a pinned width this way), else the
+/// machine's available parallelism (1 when it cannot be determined).
+pub fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("MIXKVQ_WORKERS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 impl Default for ServerConfig {
@@ -142,6 +166,7 @@ impl Default for ServerConfig {
             policy: None,
             max_queue: None,
             faults: None,
+            workers: default_workers(),
         }
     }
 }
@@ -253,8 +278,10 @@ pub struct Server {
     /// Bounded wait queue (see `ServerConfig::max_queue`).
     max_queue: Option<usize>,
     /// Shared deterministic fault injector (chaos testing); also installed
-    /// into the pool and the engine. `None` = no plan.
-    faults: Option<Rc<RefCell<FaultInjector>>>,
+    /// into the pool and the engine (and reachable from worker threads —
+    /// draws are stateless keyed functions, see util::faults). `None` =
+    /// no plan.
+    faults: Option<Arc<FaultInjector>>,
 }
 
 impl Server {
@@ -291,9 +318,12 @@ impl Server {
         // pool (lease denial) and the engine (prefill/decode/prefix sites)
         let faults = cfg.faults.filter(FaultPlan::is_armed).map(FaultInjector::shared);
         if let Some(f) = &faults {
-            pool.set_fault_injector(Rc::clone(f));
-            engine.set_faults(Rc::clone(f));
+            pool.set_fault_injector(Arc::clone(f));
+            engine.set_faults(Arc::clone(f));
         }
+        // fixed worker pool for per-tick compute sharding; per-worker
+        // arenas are warmed here, once
+        engine.set_workers(cfg.workers);
         Server {
             batcher: Batcher::new(batch),
             scheduler: Scheduler::with_pool(
@@ -583,7 +613,7 @@ impl Server {
             self.metrics.observe_prefix(&stats);
         }
         if let Some(f) = &self.faults {
-            self.metrics.observe_faults(&f.borrow().stats());
+            self.metrics.observe_faults(&f.stats());
         }
         Ok(())
     }
@@ -910,7 +940,11 @@ impl Server {
                 self.engine.begin_prefill_chunked(&req.prompt, &method)
             })();
             match started {
-                Ok(cp) => {
+                Ok(mut cp) => {
+                    // key every fault draw this request's cache will ever
+                    // make to the request id — replay-deterministic per
+                    // site regardless of tick composition or worker count
+                    cp.cache.set_fault_key(req.id);
                     self.prefill_seq += 1;
                     self.prefills.push(PendingPrefill {
                         req,
@@ -963,6 +997,58 @@ impl Server {
             }
         }
         let mut budget = self.prefill_chunks_per_tick;
+        // Abundance fast path (threading-model boundary (b)): when the
+        // pool can cover EVERY in-flight run's remaining page claim at
+        // once, no run can park and no lease can fail for lack of pages —
+        // so the tick's chunk budget is pre-allocated shortest-first on
+        // the coordinator (exactly the amounts the sequential loop would
+        // hand out) and the whole round goes to the engine as one batch,
+        // which advances the runs concurrently. Merge is in item (SRTF)
+        // order, so installs, retries, and first-token sampling happen in
+        // the same order as the sequential loop at any worker count. Under
+        // scarcity the legacy interleaved park-check/advance loop below
+        // runs instead — identical semantics to the pre-pool-sharding
+        // server, on every path, at `workers = 1`.
+        let total_outstanding: usize =
+            self.prefills.iter().map(PendingPrefill::outstanding_pages).sum();
+        if !self.prefills.is_empty() && self.pool.can_lease(total_outstanding) {
+            let nl = self.engine.meta.model.n_layers;
+            let mut allocs: Vec<usize> = Vec::new();
+            for p in self.prefills.iter() {
+                if budget == 0 {
+                    break;
+                }
+                let alloc = p.remaining_chunks(nl).min(budget);
+                budget -= alloc;
+                allocs.push(alloc);
+            }
+            let mut items: Vec<(&mut ChunkedPrefill, &[i32], usize)> = self
+                .prefills
+                .iter_mut()
+                .zip(allocs.iter())
+                .map(|(p, &alloc)| {
+                    let PendingPrefill { req, cp, .. } = p;
+                    (cp, req.prompt.as_slice(), alloc)
+                })
+                .collect();
+            let results = self.engine.advance_prefills_parallel(&mut items);
+            drop(items);
+            let mut idx = 0usize;
+            for res in results {
+                match res {
+                    Err(e) => {
+                        let p = self.prefills.remove(idx);
+                        self.handle_prefill_failure(p, e);
+                    }
+                    Ok(true) => {
+                        let p = self.prefills.remove(idx);
+                        self.install_prefilled(p);
+                    }
+                    Ok(false) => idx += 1,
+                }
+            }
+            return;
+        }
         let mut i = 0;
         while i < self.prefills.len() && budget > 0 {
             let p = &mut self.prefills[i];
@@ -1196,34 +1282,48 @@ impl Server {
             .map(|g| g.slots.iter().filter(|&&i| !parked[i]).count())
             .sum();
         self.metrics.max_concurrent = self.metrics.max_concurrent.max(live_total);
-        for group in &groups {
-            let active: Vec<usize> = group.slots.iter().copied().filter(|&i| !parked[i]).collect();
-            if active.is_empty() {
-                continue; // whole sub-batch parked this tick
-            }
-            self.metrics.record_step(active.len(), batch);
-            let rot = {
-                let lead = self.batcher.slots[active[0]].as_ref().unwrap();
-                lead.cache.rot.clone()
-            };
-            let mut slots: Vec<Option<(&mut crate::kvcache::cache::RequestCache, i32)>> =
-                Vec::with_capacity(batch);
-            for (i, s) in self.batcher.slots.iter_mut().enumerate() {
-                match s {
-                    Some(sess) if active.contains(&i) && !sess.is_finished() => {
+        // Build every group's slot view at once — a request occupies
+        // exactly one slot of one group, so the per-slot `&mut` borrows
+        // partition — and hand the whole tick's decode work to the engine
+        // in a single call: the worker pool shards it one job per live
+        // slot (threading-model boundary (a)) and merges in (group, slot)
+        // order, bit-identical to stepping the groups sequentially.
+        let mut dgs: Vec<DecodeGroup> = Vec::new();
+        {
+            let mut sess_refs: Vec<Option<&mut crate::coordinator::session::Session>> =
+                self.batcher.slots.iter_mut().map(Option::as_mut).collect();
+            for group in &groups {
+                let active: Vec<usize> =
+                    group.slots.iter().copied().filter(|&i| !parked[i]).collect();
+                if active.is_empty() {
+                    continue; // whole sub-batch parked this tick
+                }
+                self.metrics.record_step(active.len(), batch);
+                let rot = sess_refs[active[0]].as_ref().unwrap().cache.rot.clone();
+                let mut slots: Vec<Option<(&mut crate::kvcache::cache::RequestCache, i32)>> =
+                    Vec::with_capacity(batch);
+                for i in 0..batch {
+                    let live = active.contains(&i)
+                        && sess_refs[i].as_ref().is_some_and(|s| !s.is_finished());
+                    if live {
+                        let sess = sess_refs[i].take().unwrap();
                         let tok = sess.next_token;
                         slots.push(Some((&mut sess.cache, tok)));
+                    } else {
+                        slots.push(None);
                     }
-                    _ => slots.push(None),
                 }
+                dgs.push(DecodeGroup { variant: group.variant.clone(), rot, slots });
             }
-            // per-slot isolation: a slot whose step failed (injected fault
-            // or real append error) retires alone with `Error` — the rest
-            // of the sub-batch keeps its logits, and the tick proceeds.
-            // `Err` from the call itself is a batch-contract violation
-            // (slot-count mismatch), never one tenant's fault.
-            let step = self.engine.decode_step_isolated(&group.variant, &rot, &mut slots)?;
-            drop(slots);
+        }
+        // per-slot isolation: a slot whose step failed (injected fault
+        // or real append error) retires alone with `Error` — the rest
+        // of the sub-batch keeps its logits, and the tick proceeds.
+        // `Err` from the call itself is a batch-contract violation
+        // (slot-count mismatch), never one tenant's fault.
+        let step_groups = self.engine.decode_groups_isolated(&mut dgs)?;
+        drop(dgs);
+        for step in step_groups {
             for (i, res) in step.into_iter().enumerate() {
                 let Some(res) = res else { continue };
                 let Some(sess) = self.batcher.slots[i].as_mut() else { continue };

@@ -82,6 +82,10 @@ pub struct TrafficConfig {
     /// Tick deadline stamped on every generated request (`None` = no
     /// deadline). Ticks, not wall-clock — fingerprints stay deterministic.
     pub deadline_ticks: Option<u64>,
+    /// Worker-pool size threaded to [`ServerConfig::workers`]. Outcomes
+    /// are bit-identical at every value (crate docs, "Threading model"),
+    /// so the fingerprint never depends on it — only wall time does.
+    pub workers: usize,
 }
 
 impl Default for TrafficConfig {
@@ -107,6 +111,7 @@ impl Default for TrafficConfig {
             max_ticks: 100_000,
             chaos: 0.0,
             deadline_ticks: None,
+            workers: crate::coordinator::router::default_workers(),
         }
     }
 }
@@ -305,6 +310,7 @@ pub fn run(engine: Engine, cfg: &TrafficConfig) -> Result<TrafficReport> {
         // the chaos fault plan shares the workload seed: one seed fixes
         // the schedule, the prompts, AND the fault sequence
         faults: chaos.then(|| FaultPlan::uniform(cfg.seed, cfg.chaos)),
+        workers: cfg.workers.max(1),
         ..ServerConfig::default()
     };
     let mut server = Server::new(engine, server_cfg);
@@ -430,7 +436,14 @@ pub fn run(engine: Engine, cfg: &TrafficConfig) -> Result<TrafficReport> {
         .prefix_index()
         .map(|ix| ix.borrow().pages_pinned())
         .unwrap_or(0);
-    let leaked_pages = server.pool.leased().saturating_sub(pinned) as u64;
+    let leaked_before_clear = server.pool.leased().saturating_sub(pinned) as u64;
+    // Then release those pins too: between the two same-seed runs the pool
+    // must sit at EXACTLY zero leases — a pin the index forgot to count
+    // (or a clear that fails to return pages) is a leak, not bookkeeping.
+    if let Some(ix) = server.engine.prefix_index() {
+        ix.borrow_mut().clear();
+    }
+    let leaked_pages = leaked_before_clear.max(server.pool.leased() as u64);
     let errors = m.decode_errors + m.retries_exhausted + m.internal_errors;
     let deadline_retirements = m.deadline_exceeded + m.deadline_shed;
     if chaos {
@@ -651,6 +664,42 @@ mod tests {
         let j = report_json(&a, &b);
         assert_eq!(j.get("deterministic").unwrap(), &Json::Bool(true));
         assert_eq!(j.get("leaked_pages").unwrap(), &num(0.0));
+    }
+
+    #[test]
+    fn worker_count_does_not_change_fingerprint() {
+        // the tentpole bit-identity claim, end to end through the harness:
+        // the same seed at workers=1 and workers=4 must agree on every
+        // deterministic outcome (ids, reasons, token streams, tenant
+        // counters), not merely "both complete"
+        let narrow = TrafficConfig { workers: 1, ..small_cfg() };
+        let wide = TrafficConfig { workers: 4, ..small_cfg() };
+        let a = run(engine(), &narrow).unwrap();
+        let b = run(engine(), &wide).unwrap();
+        assert!(
+            deterministic_pair(&a, &b),
+            "workers=4 drifted from workers=1: {:016x} vs {:016x}",
+            a.fingerprint,
+            b.fingerprint
+        );
+    }
+
+    #[test]
+    fn chaos_fingerprint_is_worker_count_invariant() {
+        // fault draws are keyed to (request, ordinal), never to thread
+        // schedule: the entire failure story must survive a width change
+        let narrow = TrafficConfig { chaos: 0.1, workers: 1, ..small_cfg() };
+        let wide = TrafficConfig { chaos: 0.1, workers: 4, ..small_cfg() };
+        let a = run(engine(), &narrow).unwrap();
+        let b = run(engine(), &wide).unwrap();
+        assert!(
+            deterministic_pair(&a, &b),
+            "chaos at workers=4 drifted from workers=1: {:016x} vs {:016x}",
+            a.fingerprint,
+            b.fingerprint
+        );
+        assert_eq!(a.faults_injected, b.faults_injected);
+        assert_eq!((a.leaked_pages, b.leaked_pages), (0, 0));
     }
 
     #[test]

@@ -117,6 +117,15 @@ pub struct HeadState {
     pool: KvPool,
     pub res: ResidualBuffer,
     pub qstats: QueryStats,
+    /// Fault-draw context for this head's pool leases: a deterministic
+    /// function of the owning request's fault key and this head's (layer,
+    /// kv-head) position, set by `RequestCache::set_fault_key`. Together
+    /// with `lease_seq` it makes every lease-denial draw a pure function
+    /// of request identity × lease ordinal — independent of which worker
+    /// thread runs the flush (see `util::faults`).
+    fault_ctx: u64,
+    /// This head's own monotone lease ordinal (advances per lease attempt).
+    lease_seq: u64,
 }
 
 impl HeadState {
@@ -146,6 +155,8 @@ impl HeadState {
             pool: pool.clone(),
             res: ResidualBuffer::new(cc.residual, d),
             qstats: QueryStats::new(d),
+            fault_ctx: 0,
+            lease_seq: 0,
         }
     }
 
@@ -192,8 +203,12 @@ impl HeadState {
         debug_assert!(g0 <= self.pages.len(), "non-contiguous page write");
         while self.pages.len() < g0 + gn {
             // divergence past a shared prefix lands here: NEW private pages
-            // are leased and appended — shared pages are never written
-            self.pages.push(PageRef::Private(self.pool.lease()?));
+            // are leased and appended — shared pages are never written. The
+            // keyed draw keeps injected lease denials replay-deterministic
+            // whatever worker thread runs this flush.
+            let key = crate::util::faults::draw_key(self.fault_ctx, self.lease_seq);
+            self.lease_seq += 1;
+            self.pages.push(PageRef::Private(self.pool.lease_keyed(key)?));
         }
         for gi in 0..gn {
             let page = self.pages[g0 + gi].page_mut();
@@ -554,6 +569,18 @@ pub struct RequestCache {
     d: usize,
     group: usize,
     capacity: usize,
+    /// Stable fault-draw identity of the owning request (the request id in
+    /// serving, set by the engine at cache creation; 0 for standalone
+    /// caches, which never have an injector installed). Every chaos draw
+    /// belonging to this request — lease denials, decode-step faults,
+    /// prefill-chunk faults — keys off this plus a per-site ordinal owned
+    /// here, so the fault schedule is a pure function of request behavior,
+    /// not thread schedule (see `util::faults`).
+    fault_key: u64,
+    /// Per-request decode-step draw ordinal (one per attempted step).
+    decode_fault_seq: u64,
+    /// Per-request prefill-chunk draw ordinal (one per attempted advance).
+    prefill_fault_seq: u64,
 }
 
 impl RequestCache {
@@ -609,12 +636,49 @@ impl RequestCache {
             d: mc.d_head,
             group: cc.group,
             capacity: cc.capacity,
+            fault_key: 0,
+            decode_fault_seq: 0,
+            prefill_fault_seq: 0,
         }
     }
 
     /// The pool this cache leases from.
     pub fn pool(&self) -> &KvPool {
         &self.pool
+    }
+
+    /// Install the owning request's fault-draw identity (serving sets this
+    /// to the request id at cache creation) and derive each head's lease
+    /// draw context from it — distinct per (layer, kv-head) so co-resident
+    /// heads' denial schedules decorrelate.
+    pub fn set_fault_key(&mut self, key: u64) {
+        self.fault_key = key;
+        let n_kv = self.mc_n_kv as u64;
+        for (l, row) in self.heads.iter_mut().enumerate() {
+            for (h, head) in row.iter_mut().enumerate() {
+                head.fault_ctx = crate::util::faults::draw_key(key, l as u64 * n_kv + h as u64);
+            }
+        }
+    }
+
+    pub fn fault_key(&self) -> u64 {
+        self.fault_key
+    }
+
+    /// Next decode-step fault-draw key (advances this request's ordinal) —
+    /// the engine consults `FaultSite::DecodeStep` with it once per
+    /// attempted step, on the coordinator, before dispatch.
+    pub fn next_decode_fault_key(&mut self) -> u64 {
+        let k = crate::util::faults::draw_key(self.fault_key, self.decode_fault_seq);
+        self.decode_fault_seq += 1;
+        k
+    }
+
+    /// Next prefill-chunk fault-draw key (advances this request's ordinal).
+    pub fn next_prefill_fault_key(&mut self) -> u64 {
+        let k = crate::util::faults::draw_key(self.fault_key, self.prefill_fault_seq);
+        self.prefill_fault_seq += 1;
+        k
     }
 
     /// Pages currently leased across all layers/heads (shared pages count
@@ -1129,6 +1193,37 @@ mod tests {
             .map(|_| (0..mc.n_kv_heads * mc.d_head).map(|_| rng.f32() + 0.01).collect())
             .collect();
         (k, v, qa)
+    }
+
+    #[test]
+    fn request_cache_is_send() {
+        // worker-pool jobs carry &mut RequestCache across threads, and the
+        // per-head attention split shares &[HeadState] between workers
+        fn assert_send<T: Send>() {}
+        fn assert_sync<T: Sync>() {}
+        assert_send::<RequestCache>();
+        assert_send::<HeadState>();
+        assert_sync::<RequestCache>();
+        assert_sync::<HeadState>();
+    }
+
+    #[test]
+    fn fault_keys_are_deterministic_per_request() {
+        let (_, _, mut a) = setup(Method::mixkvq("mix30"), 128);
+        let (_, _, mut b) = setup(Method::mixkvq("mix30"), 128);
+        a.set_fault_key(42);
+        b.set_fault_key(42);
+        for _ in 0..8 {
+            assert_eq!(a.next_decode_fault_key(), b.next_decode_fault_key());
+            assert_eq!(a.next_prefill_fault_key(), b.next_prefill_fault_key());
+        }
+        // distinct requests draw from distinct key sequences
+        let (_, _, mut c) = setup(Method::mixkvq("mix30"), 128);
+        c.set_fault_key(43);
+        assert_ne!(a.next_decode_fault_key(), c.next_decode_fault_key());
+        // heads get decorrelated lease contexts
+        assert_ne!(a.heads[0][0].fault_ctx, a.heads[0][1].fault_ctx);
+        assert_ne!(a.heads[0][0].fault_ctx, a.heads[1][0].fault_ctx);
     }
 
     #[test]

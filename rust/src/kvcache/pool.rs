@@ -69,10 +69,9 @@
 //! counter counts every shared page exactly once, which is what makes the
 //! scheduler's occupancy admission charge shared pages once too.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::ops::Range;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use anyhow::{bail, Result};
 
@@ -304,9 +303,9 @@ struct PoolInner {
     /// serves) — the accountant's unit for occupancy gauges.
     page_deploy_bytes: usize,
     /// Deterministic fault injection (chaos testing): when installed,
-    /// `lease` may be denied transiently at the plan's `LeaseDenial` rate.
-    /// `None` (the default) costs nothing on the lease path.
-    faults: Option<Rc<RefCell<FaultInjector>>>,
+    /// `lease_keyed` may be denied transiently at the plan's `LeaseDenial`
+    /// rate. `None` (the default) costs nothing on the lease path.
+    faults: Option<Arc<FaultInjector>>,
 }
 
 /// Counter snapshot for metrics/gauges (`coordinator::metrics`).
@@ -322,12 +321,22 @@ pub struct PoolStats {
     pub page_deploy_bytes: usize,
 }
 
-/// Cheap-to-clone handle to a shared page pool. Single-threaded by design
-/// (like the rest of the coordinator): `Rc<RefCell>` internally, so leases
-/// and returns are pointer operations on one free list.
+/// Cheap-to-clone handle to a shared page pool. Thread-safe
+/// (`Arc<Mutex>` internally) so worker-pool decode/prefill jobs can
+/// lease and return pages concurrently: every critical section is a
+/// pointer operation on one free list plus counter bumps — no user code
+/// ever runs under the lock, so contention is bounded by page traffic,
+/// not compute. Lock recovery ignores poisoning deliberately: the pool's
+/// invariants are maintained before any statement that could panic, and
+/// `PageLease::drop` must be able to return pages while a worker job is
+/// unwinding (the worker pool catches and re-raises job panics).
 #[derive(Clone)]
 pub struct KvPool {
-    inner: Rc<RefCell<PoolInner>>,
+    inner: Arc<Mutex<PoolInner>>,
+}
+
+fn lock_inner(inner: &Mutex<PoolInner>) -> MutexGuard<'_, PoolInner> {
+    inner.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 impl KvPool {
@@ -338,7 +347,7 @@ impl KvPool {
         page_deploy_bytes: usize,
     ) -> KvPool {
         KvPool {
-            inner: Rc::new(RefCell::new(PoolInner {
+            inner: Arc::new(Mutex::new(PoolInner {
                 f_len,
                 b_len,
                 max_pages,
@@ -382,14 +391,14 @@ impl KvPool {
 
     /// Does `layout` fit in this pool's pages?
     pub fn fits(&self, layout: &PageLayout) -> bool {
-        let inner = self.inner.borrow();
+        let inner = lock_inner(&self.inner);
         layout.f_len <= inner.f_len && layout.b_len <= inner.b_len
     }
 
     /// Allocate up to `n` pages into the free list so steady-state leasing
     /// never hits the allocator (bounded pools clamp at their cap).
     pub fn prewarm(&self, n: usize) {
-        let mut inner = self.inner.borrow_mut();
+        let mut inner = lock_inner(&self.inner);
         let cap = inner
             .max_pages
             .map(|m| m.saturating_sub(inner.leased + inner.free.len()))
@@ -402,36 +411,50 @@ impl KvPool {
     }
 
     /// Can `n` more pages be leased right now? Never counts as a failure —
-    /// this is the scheduler's parking probe.
+    /// this is the scheduler's parking probe. With workers > 1 the answer
+    /// is only schedule-invariant when the caller holds a reservation (the
+    /// router's parking pass guarantees the sum of unparked slots' needs
+    /// fits before the parallel phase dispatches).
     pub fn can_lease(&self, n: usize) -> bool {
-        let inner = self.inner.borrow();
+        let inner = lock_inner(&self.inner);
         match inner.max_pages {
             Some(max) => inner.leased + n <= max,
             None => true,
         }
     }
 
-    /// Install a deterministic fault injector: `lease` then fails
+    /// Install a deterministic fault injector: `lease_keyed` then fails
     /// transiently at the plan's `LeaseDenial` rate (counted in
     /// `lease_failures`, like a real cap denial). All clones of this pool
     /// share the injector — it lives in the shared inner state.
-    pub fn set_fault_injector(&self, faults: Rc<RefCell<FaultInjector>>) {
-        self.inner.borrow_mut().faults = Some(faults);
+    pub fn set_fault_injector(&self, faults: Arc<FaultInjector>) {
+        lock_inner(&self.inner).faults = Some(faults);
     }
 
-    /// Lease one page (zeroed). `Err` when a bounded pool is at its cap —
-    /// recorded in the lease-failure counter — or when an installed fault
-    /// injector denies the lease transiently (chaos testing; also counted,
-    /// since callers cannot and should not tell the two apart).
-    pub fn lease(&self) -> Result<PageLease> {
-        let faults = self.inner.borrow().faults.clone();
+    /// Lease one page under a deterministic draw key (see
+    /// [`crate::util::faults::draw_key`]): an installed fault injector may
+    /// deny the lease transiently at the plan's `LeaseDenial` rate. The
+    /// key, not call order, decides the outcome — worker threads leasing
+    /// in any interleaving reproduce the same fault schedule. This is the
+    /// production path (`HeadState::store_key_window` supplies the key);
+    /// [`KvPool::lease`] is the fault-free form for standalone caches and
+    /// tests.
+    pub fn lease_keyed(&self, key: u64) -> Result<PageLease> {
+        let faults = lock_inner(&self.inner).faults.clone();
         if let Some(f) = faults {
-            if f.borrow_mut().should_fail(FaultSite::LeaseDenial) {
-                self.inner.borrow_mut().lease_failures += 1;
+            if f.should_fail(FaultSite::LeaseDenial, key) {
+                lock_inner(&self.inner).lease_failures += 1;
                 bail!("injected transient fault: kv pool lease denied");
             }
         }
-        let mut inner = self.inner.borrow_mut();
+        self.lease()
+    }
+
+    /// Lease one page (zeroed). `Err` when a bounded pool is at its cap —
+    /// recorded in the lease-failure counter. Never consults the fault
+    /// injector (that is [`KvPool::lease_keyed`]'s job).
+    pub fn lease(&self) -> Result<PageLease> {
+        let mut inner = lock_inner(&self.inner);
         if let Some(max) = inner.max_pages {
             if inner.leased >= max {
                 inner.lease_failures += 1;
@@ -452,22 +475,22 @@ impl KvPool {
         inner.total_leases += 1;
         inner.high_water = inner.high_water.max(inner.leased);
         drop(inner);
-        Ok(PageLease { page: Some(page), pool: Rc::clone(&self.inner) })
+        Ok(PageLease { page: Some(page), pool: Arc::clone(&self.inner) })
     }
 
     /// Record an externally observed lease failure (e.g. a deferred flush
     /// that never called `lease`).
     pub fn note_lease_failure(&self) {
-        self.inner.borrow_mut().lease_failures += 1;
+        lock_inner(&self.inner).lease_failures += 1;
     }
 
     pub fn leased(&self) -> usize {
-        self.inner.borrow().leased
+        lock_inner(&self.inner).leased
     }
 
     /// Pages still leasable. Unbounded pools report `usize::MAX`.
     pub fn available(&self) -> usize {
-        let inner = self.inner.borrow();
+        let inner = lock_inner(&self.inner);
         match inner.max_pages {
             Some(max) => max.saturating_sub(inner.leased),
             None => usize::MAX,
@@ -475,11 +498,11 @@ impl KvPool {
     }
 
     pub fn max_pages(&self) -> Option<usize> {
-        self.inner.borrow().max_pages
+        lock_inner(&self.inner).max_pages
     }
 
     pub fn stats(&self) -> PoolStats {
-        let inner = self.inner.borrow();
+        let inner = lock_inner(&self.inner);
         PoolStats {
             leased: inner.leased,
             free: inner.free.len(),
@@ -495,7 +518,7 @@ impl KvPool {
     /// Deployment bytes one leased page is charged at (worst layout the
     /// pool serves) — `budget_bytes / page_deploy_bytes` sizes the pool.
     pub fn page_deploy_bytes(&self) -> usize {
-        self.inner.borrow().page_deploy_bytes
+        lock_inner(&self.inner).page_deploy_bytes
     }
 }
 
@@ -504,13 +527,14 @@ impl KvPool {
 /// release paths are the one destructor).
 pub struct PageLease {
     page: Option<Page>,
-    pool: Rc<RefCell<PoolInner>>,
+    pool: Arc<Mutex<PoolInner>>,
 }
 
 impl PageLease {
     // The `expect`s below are true invariant checks, not per-request error
     // paths: `page` is only `None` inside `Drop::drop`, which no accessor
-    // can race single-threaded — a trip here is a use-after-drop bug.
+    // can race (a lease is exclusively owned; `&mut self` guards the
+    // mutation) — a trip here is a use-after-drop bug.
     #[inline]
     pub fn page(&self) -> &Page {
         self.page.as_ref().expect("page present until drop")
@@ -524,7 +548,10 @@ impl PageLease {
 
 impl Drop for PageLease {
     fn drop(&mut self) {
-        let mut inner = self.pool.borrow_mut();
+        // poison-recovering lock: this destructor must return the page even
+        // while a worker job is unwinding (the pool re-raises the panic on
+        // the coordinator after the drain barrier)
+        let mut inner = lock_inner(&self.pool);
         inner.leased -= 1;
         if let Some(page) = self.page.take() {
             inner.free.push(page);
@@ -539,12 +566,12 @@ impl Drop for PageLease {
 /// hold it — that single charge is the memory-dedup win of prefix sharing.
 #[derive(Clone)]
 pub struct SharedLease {
-    inner: Rc<PageLease>,
+    inner: Arc<PageLease>,
 }
 
 impl SharedLease {
     pub fn new(lease: PageLease) -> SharedLease {
-        SharedLease { inner: Rc::new(lease) }
+        SharedLease { inner: Arc::new(lease) }
     }
 
     #[inline]
@@ -554,7 +581,7 @@ impl SharedLease {
 
     /// Current holders (page tables + the prefix index entry).
     pub fn refs(&self) -> usize {
-        Rc::strong_count(&self.inner)
+        Arc::strong_count(&self.inner)
     }
 
     /// Stable identity of the underlying pool lease — the same physical
@@ -563,7 +590,7 @@ impl SharedLease {
     /// (`Server::check_invariants`) dedup holders by this id to reconcile
     /// against `KvPool::leased`.
     pub fn page_id(&self) -> usize {
-        Rc::as_ptr(&self.inner) as usize
+        Arc::as_ptr(&self.inner) as usize
     }
 }
 
@@ -803,8 +830,11 @@ pub struct PrefixStats {
 }
 
 /// Content-addressed registry of shared prompt windows, LRU-bounded by the
-/// pool pages it may pin. Single-threaded like the pool (`Rc` refcounts);
-/// the server owns one behind `Rc<RefCell<…>>` shared with the engine.
+/// pool pages it may pin. Coordinator-only by design — the server owns one
+/// behind `Rc<RefCell<…>>` shared with the engine and it never crosses a
+/// worker-pool thread boundary (prefix probes, registrations, and
+/// pressure-shedding all run on the coordinator between parallel phases),
+/// so it needs no lock even though the leases it pins are `Arc`s.
 /// Hard ceiling on resident prefix entries regardless of the page cap —
 /// residual-only prompts pin ZERO pages but still hold a bounded sidecar
 /// (prompt copy, residual snapshot, logits), so a page cap alone would let
@@ -1102,6 +1132,69 @@ mod tests {
         assert_eq!(pool.leased(), 0);
         assert_eq!(pool.stats().high_water, 2);
         assert_eq!(pool.stats().total_leases, 3);
+    }
+
+    #[test]
+    fn pool_handles_are_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<KvPool>();
+        assert_send_sync::<PageLease>();
+        assert_send_sync::<SharedLease>();
+        assert_send_sync::<PageRef>();
+    }
+
+    #[test]
+    fn keyed_lease_faults_are_schedule_independent() {
+        use crate::util::faults::{draw_key, FaultPlan};
+        let make = || {
+            let pool = KvPool::for_specs([&mixspec()], 32, 32, None);
+            pool.set_fault_injector(FaultInjector::shared(FaultPlan::uniform(13, 0.5)));
+            pool
+        };
+        let keys: Vec<u64> = (0..64).map(|s| draw_key(5, s)).collect();
+        let fwd: Vec<bool> = {
+            let pool = make();
+            keys.iter().map(|&k| pool.lease_keyed(k).is_err()).collect()
+        };
+        let rev: Vec<bool> = {
+            let pool = make();
+            let mut r: Vec<bool> =
+                keys.iter().rev().map(|&k| pool.lease_keyed(k).is_err()).collect();
+            r.reverse();
+            r
+        };
+        assert_eq!(fwd, rev, "lease-denial schedule must not depend on draw order");
+        assert!(fwd.iter().any(|&x| x), "50% over 64 draws must deny at least once");
+        // denied leases count as failures; unkeyed lease never draws
+        let pool = make();
+        let denied = keys.iter().filter(|&&k| pool.lease_keyed(k).is_err()).count();
+        assert_eq!(pool.stats().lease_failures, denied as u64);
+        assert!(pool.lease().is_ok());
+    }
+
+    #[test]
+    fn concurrent_lease_and_return_balances_books() {
+        let pool = KvPool::for_specs([&mixspec()], 32, 32, Some(64));
+        pool.prewarm(64);
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let p = pool.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..200 {
+                        let a = p.lease().unwrap();
+                        let b = p.lease().unwrap();
+                        drop(a);
+                        drop(b);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(pool.leased(), 0);
+        assert_eq!(pool.stats().total_leases, 4 * 400);
+        assert!(pool.stats().high_water <= 8);
     }
 
     #[test]

@@ -260,6 +260,56 @@
 //!   CI's bench gate (tests/chaos.rs runs randomized fault × cancel ×
 //!   deadline interleavings on top).
 //!
+//! ## Threading model (the multi-core engine)
+//!
+//! The serving hot loop shards across a fixed-size
+//! [`util::workers::WorkerPool`] (`ServerConfig::workers`, default =
+//! available parallelism; `--workers N` on `mixkvq serve`/`traffic`;
+//! `workers = 1` is *exactly* the single-threaded engine — no pool
+//! threads exist). Three independence boundaries are sharded:
+//!
+//! * **Decode slots** — `Batcher::variant_groups` partitions live slots
+//!   into per-(variant, rotation) sub-batches; each slot's step is
+//!   per-slot isolated (`Engine::decode_step_isolated` semantics), so
+//!   slots dispatch to workers as independent jobs and their
+//!   `Result<logits>`s merge back **in (group, slot) index order** —
+//!   never completion order. Sampling stays on the coordinator thread in
+//!   that same order, so the shared sampler RNG consumes draws exactly as
+//!   the sequential engine did.
+//! * **Chunked-prefill units** — each in-flight
+//!   [`coordinator::engine::ChunkedPrefill`] advances independently;
+//!   shortest-remaining-chunks stays the dispatch priority. Parallel
+//!   dispatch is **abundance-gated**: the batch runs concurrently only
+//!   when free pool pages cover every candidate's outstanding worst-case
+//!   page claim, otherwise the tick falls back to the exact sequential
+//!   admit-as-you-go path — so page-scarcity outcomes are identical at
+//!   every worker count.
+//! * **Per-head attention** within one decode step —
+//!   [`model::reference::RefModel::decode_step_into_mt`] splits the
+//!   query-head loop into contiguous ranges (deterministic
+//!   `split_ranges`), each worker writing a disjoint slice of the
+//!   attention output; per-layer barrier, fixed-order reassembly.
+//!
+//! Determinism is structural, not fenced: every worker writes only its
+//! own pre-warmed arena ([`util::workers::WorkerScratch`], built at pool
+//! construction so the zero-alloc steady-state gate holds) plus disjoint
+//! output slots; all reductions merge in input-index order (the
+//! `matmul_blocked` summation-order discipline lifted to the scheduling
+//! layer); and fault draws are **stateless keyed draws** — a pure
+//! function of `(seed, site, request-context key, per-context counter)`
+//! ([`util::faults::FaultInjector::should_fail`]) — so the chaos
+//! schedule cannot drift with thread interleaving. The shared mutable
+//! spine is minimal: `KvPool` is `Arc<Mutex<…>>` (lease/free are short
+//! critical sections; `can_lease` decisions are made schedule-invariant
+//! by the router's parking-pass page reservations), the `FaultInjector`
+//! is a lock-free `Arc`, and the `PrefixIndex` stays coordinator-only.
+//! `tests/parallel.rs` property-tests `workers=1` vs `workers=N`
+//! byte-identity — logits, event streams, metrics fingerprints — across
+//! the full `MethodSpec` roster, and `cargo bench --bench parallel`
+//! writes `BENCH_parallel.json` whose ≥2× tick-throughput-at-4-workers
+//! bar CI's `bench-gate` enforces alongside zero same-seed fingerprint
+//! drift.
+//!
 //! See DESIGN.md for the experiment index and EXPERIMENTS.md for results.
 
 pub mod util {
@@ -269,6 +319,7 @@ pub mod util {
     pub mod json;
     pub mod rng;
     pub mod stats;
+    pub mod workers;
 }
 
 pub mod quant {

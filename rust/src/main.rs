@@ -25,7 +25,7 @@ use std::path::PathBuf;
 use anyhow::Result;
 
 use mixkvq::coordinator::engine::Engine;
-use mixkvq::coordinator::router::{Server, ServerConfig};
+use mixkvq::coordinator::router::{default_workers, Server, ServerConfig};
 use mixkvq::harness::experiments::{self, ExpCtx, ALL_IDS};
 use mixkvq::harness::workloads;
 use mixkvq::model::config::Meta;
@@ -61,6 +61,9 @@ fn main() -> Result<()> {
                 "mixkvq — query-aware mixed-precision KV cache quantization\n\n\
                  USAGE: mixkvq <serve|bench|demo|search|info|profile|traffic> [options]\n\n\
                  serve   --method mixkvq-mix30 --requests 32 --max-new 48 --r-limit 128 --budget-mb 64\n\
+                 \x20       [--workers N]  worker-pool lanes for per-tick compute sharding\n\
+                 \x20       (default: MIXKVQ_WORKERS env or available parallelism; 1 = the\n\
+                 \x20       single-threaded path; outputs are bit-identical at every N)\n\
                  \x20       --method accepts a comma-separated list (e.g. mixkvq-mix30,bf16):\n\
                  \x20       the first name is the server default, and requests are routed\n\
                  \x20       round-robin across the list per-request — the server batches\n\
@@ -79,7 +82,7 @@ fn main() -> Result<()> {
                  traffic --sessions 200 --tenants 4 --seed 7 --max-new 6 --budget-mb 64\n\
                  \x20       --arrival poisson|diurnal|closed --out BENCH_traffic.json\n\
                  \x20       [--policy slo:<mb>|profile:<path>|fixed:<method>]\n\
-                 \x20       [--chaos 0.05] [--deadline-ticks 500]\n\
+                 \x20       [--chaos 0.05] [--deadline-ticks 500] [--workers N]\n\
                  \x20       seeded multi-tenant load through submit/tick/poll on the\n\
                  \x20       reference engine (no artifacts needed); same seed runs twice\n\
                  \x20       and the report records per-tenant p50/p99 SLOs plus the\n\
@@ -110,6 +113,7 @@ fn serve(args: &Args) -> Result<()> {
     let r_limit = args.usize_or("r-limit", 128)?;
     let budget_mb = args.usize_or("budget-mb", 64)?;
     let seed = args.u64_or("seed", 0)?;
+    let workers = args.usize_or("workers", default_workers())?.max(1);
 
     eprintln!("loading engine (default {})...", default_method.name);
     let engine = Engine::new(&artifacts_dir(args), default_method, r_limit)?;
@@ -120,6 +124,7 @@ fn serve(args: &Args) -> Result<()> {
             max_prefills_per_cycle: 2,
             seed,
             reserve_pages: None,
+            workers,
             ..ServerConfig::default()
         },
     );
@@ -154,6 +159,11 @@ fn serve(args: &Args) -> Result<()> {
         "arg scratch pool: {:.1}% of steps reused pooled buffers ({} KB pooled across variants)",
         b.assemble_reuse_pct,
         b.scratch_bytes_pooled / 1024
+    );
+    println!(
+        "worker pool: {} lanes, effective speedup {:.2}x, dispatch imbalance {:.1}% \
+         ({} parallel ticks)",
+        b.workers, b.parallel_speedup, b.dispatch_imbalance_pct, b.parallel_ticks
     );
     let t = &server.engine.timers;
     if t.prefill_chunks > 0 {
@@ -310,6 +320,7 @@ fn traffic(args: &Args) -> Result<()> {
         policy,
         chaos,
         deadline_ticks: (deadline > 0).then_some(deadline),
+        workers: args.usize_or("workers", default_workers())?.max(1),
         ..TrafficConfig::default()
     };
     let r_limit = args.usize_or("r-limit", 32)?;

@@ -589,7 +589,6 @@ impl<'a> RefModel<'a> {
         let (tq, tr) = (cache.qlen, cache.rlen());
         let pos = cache.pos;
         let rot = &cache.rot;
-        let scale = 1.0 / (dh as f32).sqrt();
         let DecodeScratch {
             h, x, q, k, v, qrot, qperm, w4, w2, o, proj, ff, scores, logits, knew, vnew, qabs,
         } = scratch;
@@ -619,45 +618,190 @@ impl<'a> RefModel<'a> {
                 *a /= qpk as f32;
             }
             o.fill(0.0);
-            let s = &mut scores[..tq + tr + 1];
-            for hh in 0..hq {
-                let kvh = hh / qpk;
-                let head = &ctx.heads[kvh];
-                let qh = &q[hh * dh..(hh + 1) * dh];
-                if ctx.tq > 0 {
-                    // score assembly is channel-permutation-aware: align the
-                    // (rotated) query to tier order once, then stream the
-                    // packed tiers.
-                    crate::quant::rotation::rotate_vec(qh, rot, qrot);
-                    for (dst, &src) in qperm.iter_mut().zip(&head.idx) {
-                        *dst = qrot[src as usize];
-                    }
-                    head.scores_into(qperm, ctx.tq, scale, w4, w2, &mut s[..tq]);
+            self.attn_head_range(&ctx, rot, q, k, v, 0, hq, qrot, qperm, w4, w2, scores, o);
+            matvec(o, &self.w.flat[lw.wo], hq * dh, d, proj);
+            for j in 0..d {
+                h[j] += proj[j];
+            }
+            rmsnorm(h, &self.w.flat[lw.ln2], mc.rmsnorm_eps, x);
+            matvec(x, &self.w.flat[lw.w1], d, mc.d_ff, ff);
+            for f in ff.iter_mut() {
+                *f = gelu(*f);
+            }
+            matvec(ff, &self.w.flat[lw.w2], mc.d_ff, d, proj);
+            for j in 0..d {
+                h[j] += proj[j];
+            }
+            knew[l].copy_from_slice(k);
+            vnew[l].copy_from_slice(v);
+        }
+        rmsnorm(h, &self.w.flat[self.pidx.ln_f], mc.rmsnorm_eps, x);
+        for (vtok, lg) in logits.iter_mut().enumerate() {
+            *lg = x.iter().zip(&embed[vtok * d..(vtok + 1) * d]).map(|(a, b)| a * b).sum();
+        }
+    }
+
+    /// Fused attention for one contiguous range `[h0, h1)` of query heads —
+    /// the worker-pool head-split unit (threading-model boundary (c)), and
+    /// the body of [`RefModel::decode_step_into`]'s head loop when called
+    /// with the full range. Query heads are fully independent: each reads
+    /// the shared post-RoPE `q`/`k`/`v` and the layer's cache heads, and
+    /// writes only `o` (this range's `(h1-h0)*dh` output slice), so any
+    /// partition of `0..Hq` into ranges produces bit-identical outputs to
+    /// the sequential loop. `qrot`/`qperm`/`w4`/`w2`/`scores` are the
+    /// calling worker's arena lanes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attn_head_range(
+        &self,
+        ctx: &QuantLayerCtx,
+        rot: &[f32],
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        h0: usize,
+        h1: usize,
+        qrot: &mut [f32],
+        qperm: &mut [f32],
+        w4: &mut [f32],
+        w2: &mut [f32],
+        scores: &mut [f32],
+        o: &mut [f32],
+    ) {
+        let mc = &self.mc;
+        let (dh, qpk) = (mc.d_head, mc.q_per_kv());
+        let (tq, tr) = (ctx.tq, ctx.tr);
+        let scale = 1.0 / (dh as f32).sqrt();
+        debug_assert!(scores.len() >= tq + tr + 1, "scratch undersized for context");
+        debug_assert_eq!(o.len(), (h1 - h0) * dh);
+        let s = &mut scores[..tq + tr + 1];
+        for hh in h0..h1 {
+            let kvh = hh / qpk;
+            let head = &ctx.heads[kvh];
+            let qh = &q[hh * dh..(hh + 1) * dh];
+            if tq > 0 {
+                // score assembly is channel-permutation-aware: align the
+                // (rotated) query to tier order once, then stream the
+                // packed tiers.
+                crate::quant::rotation::rotate_vec(qh, rot, qrot);
+                for (dst, &src) in qperm.iter_mut().zip(&head.idx) {
+                    *dst = qrot[src as usize];
                 }
-                let kres = head.res.keys();
-                for t in 0..ctx.tr {
-                    let kk = &kres[t * dh..(t + 1) * dh];
-                    s[tq + t] = qh.iter().zip(kk).map(|(a, b)| a * b).sum::<f32>() * scale;
-                }
-                let kk = &k[kvh * dh..(kvh + 1) * dh];
-                s[tq + tr] = qh.iter().zip(kk).map(|(a, b)| a * b).sum::<f32>() * scale;
-                softmax_inplace(s);
-                let oh = &mut o[hh * dh..(hh + 1) * dh];
-                if ctx.tq > 0 {
-                    head.values_accumulate_into(&s[..tq], oh);
-                }
-                let vres = head.res.values();
-                for t in 0..ctx.tr {
-                    let p = s[tq + t];
-                    let vv = &vres[t * dh..(t + 1) * dh];
-                    for j in 0..dh {
-                        oh[j] += p * vv[j];
-                    }
-                }
-                let p = s[tq + tr];
+                head.scores_into(qperm, tq, scale, w4, w2, &mut s[..tq]);
+            }
+            let kres = head.res.keys();
+            for t in 0..tr {
+                let kk = &kres[t * dh..(t + 1) * dh];
+                s[tq + t] = qh.iter().zip(kk).map(|(a, b)| a * b).sum::<f32>() * scale;
+            }
+            let kk = &k[kvh * dh..(kvh + 1) * dh];
+            s[tq + tr] = qh.iter().zip(kk).map(|(a, b)| a * b).sum::<f32>() * scale;
+            softmax_inplace(s);
+            let oh = &mut o[(hh - h0) * dh..(hh - h0 + 1) * dh];
+            if tq > 0 {
+                head.values_accumulate_into(&s[..tq], oh);
+            }
+            let vres = head.res.values();
+            for t in 0..tr {
+                let p = s[tq + t];
+                let vv = &vres[t * dh..(t + 1) * dh];
                 for j in 0..dh {
-                    oh[j] += p * v[kvh * dh + j];
+                    oh[j] += p * vv[j];
                 }
+            }
+            let p = s[tq + tr];
+            for j in 0..dh {
+                oh[j] += p * v[kvh * dh + j];
+            }
+        }
+    }
+
+    /// [`RefModel::decode_step_into`] with each layer's query-head loop
+    /// split across `pool` (threading-model boundary (c)): contiguous head
+    /// ranges ([`crate::util::workers::split_ranges`] — a pure function of
+    /// `(Hq, workers)`), each range writing a disjoint slice of the
+    /// attention output from its own worker arena, reassembled at a
+    /// per-layer barrier in range order. Bit-identical to the
+    /// single-threaded path at every worker count because heads are
+    /// independent and nothing is reduced across ranges (gated by
+    /// tests/parallel.rs); at `pool.size() == 1` it *is* the
+    /// single-threaded path.
+    pub fn decode_step_into_mt(
+        &self,
+        token: i32,
+        cache: &RequestCache,
+        scratch: &mut DecodeScratch,
+        pool: &mut crate::util::workers::WorkerPool,
+    ) {
+        if pool.size() == 1 {
+            return self.decode_step_into(token, cache, scratch);
+        }
+        let mc = &self.mc;
+        let d = mc.d_model;
+        let (hq, hkv, dh, qpk) = (mc.n_q_heads, mc.n_kv_heads, mc.d_head, mc.q_per_kv());
+        let embed = &self.w.flat[self.pidx.embed];
+        let (tq, tr) = (cache.qlen, cache.rlen());
+        let pos = cache.pos;
+        let rot = &cache.rot[..];
+        let DecodeScratch {
+            h, x, q, k, v, o, proj, ff, logits, knew, vnew, qabs, ..
+        } = scratch;
+        h.copy_from_slice(&embed[token as usize * d..(token as usize + 1) * d]);
+        let ranges = crate::util::workers::split_ranges(hq, pool.size());
+        for l in 0..mc.n_layers {
+            let lw = self.pidx.layers[l];
+            rmsnorm(h, &self.w.flat[lw.ln1], mc.rmsnorm_eps, x);
+            matvec(x, &self.w.flat[lw.wq], d, hq * dh, q);
+            matvec(x, &self.w.flat[lw.wk], d, hkv * dh, k);
+            matvec(x, &self.w.flat[lw.wv], d, hkv * dh, v);
+            for hh in 0..hq {
+                self.rope.apply(&mut q[hh * dh..(hh + 1) * dh], pos);
+            }
+            for hh in 0..hkv {
+                self.rope.apply(&mut k[hh * dh..(hh + 1) * dh], pos);
+            }
+            let qa = &mut qabs[l];
+            qa.fill(0.0);
+            for hh in 0..hq {
+                for j in 0..dh {
+                    qa[(hh / qpk) * dh + j] += q[hh * dh + j].abs();
+                }
+            }
+            for a in qa.iter_mut() {
+                *a /= qpk as f32;
+            }
+            o.fill(0.0);
+            {
+                // fan the head ranges out: each job gets the disjoint
+                // output slice its range owns plus its worker's arena lanes
+                let (q, k, v) = (&q[..], &k[..], &v[..]);
+                let heads = &cache.heads[l][..];
+                let mut rest: &mut [f32] = o;
+                let mut jobs = Vec::with_capacity(ranges.len());
+                for &(h0, h1) in &ranges {
+                    let (chunk, tail) = rest.split_at_mut((h1 - h0) * dh);
+                    rest = tail;
+                    jobs.push(move |ws: &mut crate::util::workers::WorkerScratch| {
+                        let ds = &mut ws.decode;
+                        let ctx = QuantLayerCtx { heads, tq, tr };
+                        self.attn_head_range(
+                            &ctx,
+                            rot,
+                            q,
+                            k,
+                            v,
+                            h0,
+                            h1,
+                            &mut ds.qrot,
+                            &mut ds.qperm,
+                            &mut ds.w4,
+                            &mut ds.w2,
+                            &mut ds.scores,
+                            chunk,
+                        );
+                    });
+                }
+                // per-layer barrier: run() blocks until every range lands
+                pool.run(jobs);
             }
             matvec(o, &self.w.flat[lw.wo], hq * dh, d, proj);
             for j in 0..d {

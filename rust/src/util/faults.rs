@@ -2,14 +2,24 @@
 //! path.
 //!
 //! A [`FaultPlan`] names a per-site injection rate and a seed; a
-//! [`FaultInjector`] turns it into four independent deterministic draw
-//! streams (one per [`FaultSite`], derived with the same
-//! [`crate::util::rng::stream`] named-stream discipline the traffic
-//! harness uses), so **the same seed produces the same fault schedule** —
-//! a chaos soak is exactly as reproducible as a clean run. The injector is
-//! shared single-threaded (`Rc<RefCell<…>>`, like the pool and the prefix
-//! index) between the server, the engine, and the KV pool; every hook is
-//! `Option`-gated and free when no plan is installed.
+//! [`FaultInjector`] turns it into a **stateless keyed draw** per site:
+//! every hook supplies a deterministic key (request/cache identity × a
+//! per-context draw counter) and the outcome is a pure function of
+//! `(seed, site, key)` — no mutable stream state at all. That is what
+//! makes the schedule replay-deterministic *regardless of thread
+//! schedule*: with the worker pool enabled, lease denials and prefill
+//! faults are drawn from worker threads in whatever order the OS runs
+//! them, yet the same seed still produces the same fault schedule, and
+//! `workers = 1` and `workers = N` produce the *identical* schedule. (The
+//! pre-PR-8 injector kept one sequential Pcg32 stream per site, which is
+//! deterministic only under a fixed call order — exactly what a thread
+//! pool does not guarantee.)
+//!
+//! The injector is shared as `Arc<FaultInjector>` between the server, the
+//! engine, and the KV pool; the only interior state is the atomic
+//! drawn/injected counters (order-independent sums, so stats are
+//! deterministic too). Every hook is `Option`-gated and free when no plan
+//! is installed.
 //!
 //! The four sites are the real failure surfaces of the request lifecycle:
 //!
@@ -23,13 +33,14 @@
 //!   the entry is distrusted and dropped, the request falls back to a full
 //!   prefill (corrupted pages are never served).
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
-use crate::util::rng::{stream, Pcg32};
+use crate::util::rng::{mix64, stream};
 
 /// A failure surface faults can be injected at. `name()` doubles as the
-/// RNG stream name, so each site draws from its own deterministic stream.
+/// RNG stream name, so each site draws from its own decorrelated function
+/// of the key.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FaultSite {
     /// Transient `KvPool::lease` denial.
@@ -69,8 +80,17 @@ impl FaultSite {
     }
 }
 
-/// Per-site injection rates plus the seed the draw streams derive from.
-/// Pure data — install it via `ServerConfig::faults` (or build a
+/// Combine a stable context identity (request/cache fault key) with that
+/// context's own monotonically increasing draw counter into a draw key.
+/// Each context owns its counter, so the key sequence is a pure function
+/// of that context's behavior — independent of how contexts interleave
+/// across worker threads.
+pub fn draw_key(ctx: u64, seq: u64) -> u64 {
+    mix64(mix64(ctx) ^ seq.wrapping_mul(0x9e37_79b9_7f4a_7c15))
+}
+
+/// Per-site injection rates plus the seed the draws derive from. Pure
+/// data — install it via `ServerConfig::faults` (or build a
 /// [`FaultInjector`] directly in tests).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct FaultPlan {
@@ -121,52 +141,61 @@ impl FaultStats {
     }
 }
 
-/// The live draw state: one deterministic [`Pcg32`] stream per site.
-/// Single-threaded by design (shared as `Rc<RefCell<FaultInjector>>`);
-/// with a fixed call schedule — which the deterministic server loop
-/// guarantees — the injected-fault schedule is a pure function of the
-/// plan.
+/// The keyed draw oracle. `should_fail(site, key)` is a pure function of
+/// `(plan.seed, site, key)`; the struct carries only the atomic
+/// drawn/injected tallies, so a shared `Arc<FaultInjector>` is safe to
+/// consult from any worker thread without perturbing any other draw.
 pub struct FaultInjector {
     plan: FaultPlan,
-    streams: [Pcg32; 4],
-    drawn: [u64; 4],
-    injected: [u64; 4],
+    drawn: [AtomicU64; 4],
+    injected: [AtomicU64; 4],
 }
 
 impl FaultInjector {
     pub fn new(plan: FaultPlan) -> FaultInjector {
-        let streams =
-            [0, 1, 2, 3].map(|i| stream(plan.seed, FaultSite::ALL[i].name()));
-        FaultInjector { plan, streams, drawn: [0; 4], injected: [0; 4] }
+        FaultInjector {
+            plan,
+            drawn: [0; 4].map(AtomicU64::new),
+            injected: [0; 4].map(AtomicU64::new),
+        }
     }
 
     /// Shared handle the server hands to the pool and the engine.
-    pub fn shared(plan: FaultPlan) -> Rc<RefCell<FaultInjector>> {
-        Rc::new(RefCell::new(FaultInjector::new(plan)))
+    pub fn shared(plan: FaultPlan) -> Arc<FaultInjector> {
+        Arc::new(FaultInjector::new(plan))
     }
 
     pub fn plan(&self) -> &FaultPlan {
         &self.plan
     }
 
-    /// One deterministic draw at `site`. Zero-rate sites never draw (so a
-    /// partially armed plan doesn't advance streams it never uses).
-    pub fn should_fail(&mut self, site: FaultSite) -> bool {
+    /// One deterministic draw at `site` under `key` (see [`draw_key`]).
+    /// Zero-rate sites never draw (so a partially armed plan doesn't tally
+    /// sites it never uses). The same `(site, key)` always yields the same
+    /// verdict — callers must advance their per-context counter per draw.
+    pub fn should_fail(&self, site: FaultSite, key: u64) -> bool {
         let i = site.index();
         let rate = self.plan.rates[i];
         if rate <= 0.0 {
             return false;
         }
-        self.drawn[i] += 1;
-        let hit = (self.streams[i].f32() as f64) < rate;
+        self.drawn[i].fetch_add(1, Ordering::Relaxed);
+        // One decorrelated named stream per (seed ⊕ mixed key, site): the
+        // site name folds through the same SplitMix64 finalizer the
+        // traffic harness streams use, so sites stay independent under
+        // identical keys.
+        let hit = (stream(self.plan.seed ^ mix64(key), site.name()).f32() as f64) < rate;
         if hit {
-            self.injected[i] += 1;
+            self.injected[i].fetch_add(1, Ordering::Relaxed);
         }
         hit
     }
 
     pub fn stats(&self) -> FaultStats {
-        FaultStats { drawn: self.drawn, injected: self.injected }
+        FaultStats {
+            drawn: [0, 1, 2, 3].map(|i| self.drawn[i].load(Ordering::Relaxed)),
+            injected: [0, 1, 2, 3].map(|i| self.injected[i].load(Ordering::Relaxed)),
+        }
     }
 }
 
@@ -176,11 +205,12 @@ mod tests {
 
     #[test]
     fn same_seed_same_schedule() {
-        let mut a = FaultInjector::new(FaultPlan::uniform(7, 0.25));
-        let mut b = FaultInjector::new(FaultPlan::uniform(7, 0.25));
+        let a = FaultInjector::new(FaultPlan::uniform(7, 0.25));
+        let b = FaultInjector::new(FaultPlan::uniform(7, 0.25));
         for site in FaultSite::ALL {
-            for _ in 0..256 {
-                assert_eq!(a.should_fail(site), b.should_fail(site));
+            for seq in 0..256u64 {
+                let k = draw_key(42, seq);
+                assert_eq!(a.should_fail(site, k), b.should_fail(site, k));
             }
         }
         assert_eq!(a.stats().injected, b.stats().injected);
@@ -188,27 +218,55 @@ mod tests {
     }
 
     #[test]
-    fn sites_draw_from_independent_streams() {
-        // Drawing at one site must not perturb another site's schedule.
-        let mut interleaved = FaultInjector::new(FaultPlan::uniform(3, 0.5));
-        let mut solo = FaultInjector::new(FaultPlan::uniform(3, 0.5));
-        let mut a = Vec::new();
-        for _ in 0..64 {
-            a.push(interleaved.should_fail(FaultSite::DecodeStep));
-            interleaved.should_fail(FaultSite::LeaseDenial);
-            interleaved.should_fail(FaultSite::PrefixCorrupt);
-        }
-        let b: Vec<bool> =
-            (0..64).map(|_| solo.should_fail(FaultSite::DecodeStep)).collect();
+    fn draw_order_does_not_matter() {
+        // The worker-pool property: the same set of (site, key) draws in a
+        // different order — e.g. a different thread interleaving — yields
+        // the identical schedule and identical tallies.
+        let fwd = FaultInjector::new(FaultPlan::uniform(3, 0.5));
+        let rev = FaultInjector::new(FaultPlan::uniform(3, 0.5));
+        let keys: Vec<u64> = (0..128).map(|s| draw_key(9, s)).collect();
+        let a: Vec<bool> =
+            keys.iter().map(|&k| fwd.should_fail(FaultSite::DecodeStep, k)).collect();
+        let mut b: Vec<bool> = keys
+            .iter()
+            .rev()
+            .map(|&k| rev.should_fail(FaultSite::DecodeStep, k))
+            .collect();
+        b.reverse();
         assert_eq!(a, b);
+        assert_eq!(fwd.stats().injected, rev.stats().injected);
+    }
+
+    #[test]
+    fn sites_draw_from_independent_streams() {
+        // Drawing at one site must not perturb another site's schedule,
+        // and identical keys at different sites must decorrelate.
+        let interleaved = FaultInjector::new(FaultPlan::uniform(3, 0.5));
+        let solo = FaultInjector::new(FaultPlan::uniform(3, 0.5));
+        let mut a = Vec::new();
+        for seq in 0..64u64 {
+            let k = draw_key(1, seq);
+            a.push(interleaved.should_fail(FaultSite::DecodeStep, k));
+            interleaved.should_fail(FaultSite::LeaseDenial, k);
+            interleaved.should_fail(FaultSite::PrefixCorrupt, k);
+        }
+        let b: Vec<bool> = (0..64u64)
+            .map(|seq| solo.should_fail(FaultSite::DecodeStep, draw_key(1, seq)))
+            .collect();
+        assert_eq!(a, b);
+        // same keys, different site ⇒ a different (decorrelated) schedule
+        let c: Vec<bool> = (0..64u64)
+            .map(|seq| solo.should_fail(FaultSite::LeaseDenial, draw_key(1, seq)))
+            .collect();
+        assert_ne!(a, c);
     }
 
     #[test]
     fn zero_rate_never_fires_and_never_draws() {
-        let mut f = FaultInjector::new(FaultPlan::uniform(9, 0.0));
+        let f = FaultInjector::new(FaultPlan::uniform(9, 0.0));
         for site in FaultSite::ALL {
-            for _ in 0..64 {
-                assert!(!f.should_fail(site));
+            for seq in 0..64u64 {
+                assert!(!f.should_fail(site, draw_key(0, seq)));
             }
         }
         assert_eq!(f.stats().drawn, [0; 4]);
@@ -217,8 +275,8 @@ mod tests {
 
     #[test]
     fn rate_one_always_fires() {
-        let mut f = FaultInjector::new(FaultPlan::uniform(1, 1.0));
-        assert!(f.should_fail(FaultSite::LeaseDenial));
+        let f = FaultInjector::new(FaultPlan::uniform(1, 1.0));
+        assert!(f.should_fail(FaultSite::LeaseDenial, draw_key(0, 0)));
         assert_eq!(f.stats().injected_at(FaultSite::LeaseDenial), 1);
     }
 
@@ -227,20 +285,27 @@ mod tests {
         let plan = FaultPlan::uniform(5, 0.0).with_rate(FaultSite::PrefillChunk, 1.0);
         assert!(plan.is_armed());
         assert_eq!(plan.rate(FaultSite::LeaseDenial), 0.0);
-        let mut f = FaultInjector::new(plan);
-        assert!(!f.should_fail(FaultSite::LeaseDenial));
-        assert!(f.should_fail(FaultSite::PrefillChunk));
+        let f = FaultInjector::new(plan);
+        assert!(!f.should_fail(FaultSite::LeaseDenial, draw_key(0, 0)));
+        assert!(f.should_fail(FaultSite::PrefillChunk, draw_key(0, 0)));
     }
 
     #[test]
     fn observed_rate_tracks_plan() {
-        let mut f = FaultInjector::new(FaultPlan::uniform(11, 0.1));
+        let f = FaultInjector::new(FaultPlan::uniform(11, 0.1));
         let mut hits = 0;
-        for _ in 0..10_000 {
-            if f.should_fail(FaultSite::DecodeStep) {
+        for seq in 0..10_000u64 {
+            if f.should_fail(FaultSite::DecodeStep, draw_key(17, seq)) {
                 hits += 1;
             }
         }
         assert!((800..1200).contains(&hits), "10% ± 2%: got {hits}");
+    }
+
+    #[test]
+    fn injector_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<FaultInjector>();
+        assert_send_sync::<Arc<FaultInjector>>();
     }
 }

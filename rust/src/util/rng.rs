@@ -28,8 +28,10 @@ impl SplitMix64 {
     }
 }
 
-/// SplitMix64 finalizer: a bijective avalanche over 64 bits.
-fn mix64(mut z: u64) -> u64 {
+/// SplitMix64 finalizer: a bijective avalanche over 64 bits. Public so the
+/// fault injector can derive schedule-independent keyed draws from the same
+/// mixer the named streams use.
+pub fn mix64(mut z: u64) -> u64 {
     z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
     z ^ (z >> 31)

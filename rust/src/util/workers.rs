@@ -1,0 +1,382 @@
+//! Fixed-size worker pool for the multi-core engine (PR 8).
+//!
+//! A [`WorkerPool`] owns `n - 1` persistent OS threads plus the calling
+//! thread (worker 0), each with a pre-warmed [`WorkerScratch`] arena built
+//! at pool construction — the steady-state decode path allocates nothing
+//! on any worker thread (the arenas are the same [`DecodeScratch`] the
+//! single-threaded engine reuses). `workers = 1` spawns no threads and
+//! runs every job inline on the caller's scratch: it is *exactly* the
+//! pre-pool single-threaded engine, not a degenerate thread pool.
+//!
+//! # Determinism contract
+//!
+//! [`WorkerPool::run`] assigns job `i` to worker `i % n` (a pure function
+//! of the job index) and returns results **in job-index order**, whatever
+//! order workers finish in — the deterministic-merge rule the bit-identity
+//! gate relies on (the `matmul_blocked` summation-order discipline, lifted
+//! to the scheduling layer). Jobs must be data-independent: nothing in the
+//! pool serializes them, and the engine's dispatchers only hand out
+//! disjoint slots / disjoint head ranges.
+//!
+//! # Borrowed jobs
+//!
+//! Jobs may borrow caller state (caches, weights, output slices). `run`
+//! erases the borrow lifetime to ship closures to the persistent threads,
+//! which is sound because `run` blocks until every dispatched job has sent
+//! its result back — no borrow outlives the call. A panicking job is
+//! caught on the worker, carried home through the result channel, and
+//! re-raised on the caller *after* all jobs drain, preserving the same
+//! no-escape guarantee on the unwind path.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::model::config::ModelConfig;
+use crate::model::reference::DecodeScratch;
+
+/// Per-worker arena, pre-warmed at pool construction. One per worker
+/// (including the caller-as-worker-0), owned by that worker for the pool's
+/// lifetime — jobs receive `&mut` to *their* worker's arena only.
+pub struct WorkerScratch {
+    /// Worker index in `0..n`.
+    pub id: usize,
+    /// The fused-decode arena: slot-level decode jobs run whole steps in
+    /// it; head-split jobs borrow its `qrot`/`qperm`/`w4`/`w2`/`scores`
+    /// lanes. Prefill jobs don't need it — a `PrefillRun` *is* its own
+    /// resumable arena, so prefill units carry their scratch with them.
+    pub decode: DecodeScratch,
+}
+
+/// Busy-time snapshot for one worker (observability satellite).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerLoad {
+    pub busy_ns: u64,
+    pub jobs: u64,
+}
+
+type ErasedJob = Box<dyn FnOnce(&mut WorkerScratch) + Send + 'static>;
+
+struct SpawnedWorker {
+    tx: Option<Sender<ErasedJob>>,
+    busy_ns: Arc<AtomicU64>,
+    jobs: Arc<AtomicU64>,
+    handle: Option<JoinHandle<()>>,
+}
+
+pub struct WorkerPool {
+    /// Workers 1..n; worker 0 is the calling thread.
+    spawned: Vec<SpawnedWorker>,
+    local: WorkerScratch,
+    local_busy_ns: u64,
+    local_jobs: u64,
+}
+
+fn worker_main(
+    rx: Receiver<ErasedJob>,
+    mut scratch: WorkerScratch,
+    busy: Arc<AtomicU64>,
+    jobs: Arc<AtomicU64>,
+) {
+    // Jobs arrive pre-wrapped in catch_unwind, so this loop never unwinds;
+    // it exits when the pool drops its Sender.
+    while let Ok(job) = rx.recv() {
+        let t0 = Instant::now();
+        job(&mut scratch);
+        busy.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        jobs.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+impl WorkerPool {
+    /// Build a pool of `n` workers (clamped to ≥ 1), each with a decode
+    /// arena sized for `mc` and `max_scores` (quantized capacity +
+    /// residual + 1, same sizing as the engine's own scratch).
+    pub fn new(n: usize, mc: &ModelConfig, max_scores: usize) -> WorkerPool {
+        let n = n.max(1);
+        let mut spawned = Vec::with_capacity(n - 1);
+        for id in 1..n {
+            let scratch = WorkerScratch { id, decode: DecodeScratch::new(mc, max_scores) };
+            let busy = Arc::new(AtomicU64::new(0));
+            let jobs = Arc::new(AtomicU64::new(0));
+            let (tx, rx) = channel::<ErasedJob>();
+            let (b, j) = (busy.clone(), jobs.clone());
+            let handle = std::thread::Builder::new()
+                .name(format!("mixkvq-worker-{id}"))
+                .spawn(move || worker_main(rx, scratch, b, j))
+                .expect("spawn worker thread");
+            spawned.push(SpawnedWorker {
+                tx: Some(tx),
+                busy_ns: busy,
+                jobs,
+                handle: Some(handle),
+            });
+        }
+        WorkerPool {
+            spawned,
+            local: WorkerScratch { id: 0, decode: DecodeScratch::new(mc, max_scores) },
+            local_busy_ns: 0,
+            local_jobs: 0,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.spawned.len() + 1
+    }
+
+    /// The caller-thread worker's arena — the single-threaded engine path
+    /// borrows this directly so `workers = 1` reuses the same pre-warmed
+    /// allocation story as before the pool existed.
+    pub fn local_scratch(&mut self) -> &mut WorkerScratch {
+        &mut self.local
+    }
+
+    /// Per-worker busy counters, index 0 = the calling thread.
+    pub fn loads(&self) -> Vec<WorkerLoad> {
+        let mut out = Vec::with_capacity(self.size());
+        out.push(WorkerLoad { busy_ns: self.local_busy_ns, jobs: self.local_jobs });
+        for w in &self.spawned {
+            out.push(WorkerLoad {
+                busy_ns: w.busy_ns.load(Ordering::Relaxed),
+                jobs: w.jobs.load(Ordering::Relaxed),
+            });
+        }
+        out
+    }
+
+    /// Run `jobs` across the pool and return their results in job-index
+    /// order. Job `i` runs on worker `i % n`; worker 0 is the calling
+    /// thread, which executes its share while the spawned workers drain
+    /// theirs. Blocks until every job completes (the borrow-soundness
+    /// barrier). With `n == 1` every job runs inline, in order.
+    pub fn run<'a, T, F>(&mut self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'a,
+        F: FnOnce(&mut WorkerScratch) -> T + Send + 'a,
+    {
+        let n = self.size();
+        let total = jobs.len();
+        if n == 1 || total <= 1 {
+            let mut out = Vec::with_capacity(total);
+            for f in jobs {
+                let t0 = Instant::now();
+                out.push(f(&mut self.local));
+                self.local_busy_ns += t0.elapsed().as_nanos() as u64;
+                self.local_jobs += 1;
+            }
+            return out;
+        }
+
+        let mut results: Vec<Option<T>> = (0..total).map(|_| None).collect();
+        let mut panics: Vec<Box<dyn std::any::Any + Send>> = Vec::new();
+        let (rtx, rrx) = channel::<(usize, std::thread::Result<T>)>();
+        let mut local_jobs: Vec<(usize, F)> = Vec::new();
+        let mut remote = 0usize;
+        for (i, f) in jobs.into_iter().enumerate() {
+            let w = i % n;
+            if w == 0 {
+                local_jobs.push((i, f));
+                continue;
+            }
+            let tx = rtx.clone();
+            let job: Box<dyn FnOnce(&mut WorkerScratch) + Send + 'a> =
+                Box::new(move |s: &mut WorkerScratch| {
+                    let r = catch_unwind(AssertUnwindSafe(|| f(s)));
+                    let _ = tx.send((i, r));
+                });
+            // SAFETY: lifetime erasure only — we block below until every
+            // dispatched job has reported back (success or panic), so no
+            // borrow captured by `job` outlives this call.
+            let job: ErasedJob = unsafe { std::mem::transmute(job) };
+            self.spawned[w - 1]
+                .tx
+                .as_ref()
+                .expect("worker pool already shut down")
+                .send(job)
+                .expect("worker thread died");
+            remote += 1;
+        }
+        drop(rtx);
+        // Worker 0's share runs here while the spawned workers execute.
+        for (i, f) in local_jobs {
+            let t0 = Instant::now();
+            match catch_unwind(AssertUnwindSafe(|| f(&mut self.local))) {
+                Ok(v) => results[i] = Some(v),
+                Err(p) => panics.push(p),
+            }
+            self.local_busy_ns += t0.elapsed().as_nanos() as u64;
+            self.local_jobs += 1;
+        }
+        // The barrier: every remote job must report before we return (or
+        // unwind) — this is what makes the lifetime erasure above sound.
+        for _ in 0..remote {
+            let (i, r) = rrx.recv().expect("worker pool result channel broken");
+            match r {
+                Ok(v) => results[i] = Some(v),
+                Err(p) => panics.push(p),
+            }
+        }
+        if let Some(p) = panics.into_iter().next() {
+            resume_unwind(p);
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("worker job produced no result"))
+            .collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for w in &mut self.spawned {
+            w.tx.take(); // closes the channel; the worker loop exits
+        }
+        for w in &mut self.spawned {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Split `len` items into up to `parts` contiguous ranges, remainder
+/// spread over the leading ranges — the deterministic head-split /
+/// slot-split rule. Returns only non-empty ranges.
+pub fn split_ranges(len: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.max(1).min(len.max(1));
+    let base = len / parts;
+    let rem = len % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut at = 0;
+    for p in 0..parts {
+        let take = base + usize::from(p < rem);
+        if take == 0 {
+            break;
+        }
+        out.push((at, at + take));
+        at += take;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+
+    fn pool(n: usize) -> WorkerPool {
+        let mc = ModelConfig { n_layers: 1, ..ModelConfig::default_build() };
+        WorkerPool::new(n, &mc, 64)
+    }
+
+    #[test]
+    fn results_come_back_in_job_order() {
+        let mut p = pool(4);
+        for round in 0..8 {
+            let jobs: Vec<_> = (0..23)
+                .map(|i| move |_s: &mut WorkerScratch| i * 10 + round)
+                .collect();
+            let got = p.run(jobs);
+            let want: Vec<_> = (0..23).map(|i| i * 10 + round).collect();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn single_worker_runs_inline() {
+        let mut p = pool(1);
+        assert_eq!(p.size(), 1);
+        let caller = std::thread::current().id();
+        let jobs: Vec<_> = (0..4)
+            .map(|i| {
+                move |s: &mut WorkerScratch| {
+                    assert_eq!(s.id, 0, "workers=1 must run on the caller arena");
+                    assert_eq!(std::thread::current().id(), caller);
+                    i
+                }
+            })
+            .collect();
+        let got = p.run(jobs);
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        let loads = p.loads();
+        assert_eq!(loads.len(), 1);
+        assert_eq!(loads[0].jobs, 4);
+    }
+
+    #[test]
+    fn jobs_can_borrow_and_mutate_disjoint_slices() {
+        let mut p = pool(3);
+        let mut data = vec![0u64; 12];
+        {
+            let chunks: Vec<&mut [u64]> = data.chunks_mut(4).collect();
+            let jobs: Vec<_> = chunks
+                .into_iter()
+                .enumerate()
+                .map(|(ci, chunk)| {
+                    move |_s: &mut WorkerScratch| {
+                        for (j, v) in chunk.iter_mut().enumerate() {
+                            *v = (ci * 100 + j) as u64;
+                        }
+                        ci
+                    }
+                })
+                .collect();
+            let ids = p.run(jobs);
+            assert_eq!(ids, vec![0, 1, 2]);
+        }
+        assert_eq!(data[0], 0);
+        assert_eq!(data[4], 100);
+        assert_eq!(data[11], 203);
+    }
+
+    #[test]
+    fn worker_panic_propagates_after_drain() {
+        let mut p = pool(4);
+        let jobs: Vec<Box<dyn FnOnce(&mut WorkerScratch) -> usize + Send>> = (0..8)
+            .map(|i| {
+                Box::new(move |_s: &mut WorkerScratch| {
+                    if i == 5 {
+                        panic!("job 5 exploded");
+                    }
+                    i
+                }) as _
+            })
+            .collect();
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| p.run(jobs)));
+        assert!(r.is_err(), "panic must propagate to the caller");
+        // pool still usable after a job panic
+        let ok = p.run((0..4).map(|i| move |_s: &mut WorkerScratch| i).collect::<Vec<_>>());
+        assert_eq!(ok, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn jobs_land_on_distinct_workers() {
+        let mut p = pool(4);
+        let ids = p.run(
+            (0..8)
+                .map(|_| {
+                    |s: &mut WorkerScratch| {
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                        s.id
+                    }
+                })
+                .collect::<Vec<_>>(),
+        );
+        // job i runs on worker i % 4, by construction
+        assert_eq!(ids, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+        let loads = p.loads();
+        assert_eq!(loads.len(), 4);
+        assert!(loads.iter().all(|l| l.jobs == 2), "{loads:?}");
+    }
+
+    #[test]
+    fn split_ranges_covers_exactly() {
+        assert_eq!(split_ranges(10, 4), vec![(0, 3), (3, 6), (6, 8), (8, 10)]);
+        assert_eq!(split_ranges(3, 8), vec![(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(split_ranges(0, 4), Vec::<(usize, usize)>::new());
+        assert_eq!(split_ranges(7, 1), vec![(0, 7)]);
+    }
+}

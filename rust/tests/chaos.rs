@@ -151,6 +151,47 @@ fn chaos_interleavings_drain_clean_across_seeds() {
     }
 }
 
+/// The hazard sweep at `workers = 4`: faults × cancels × deadlines × churn
+/// with the per-tick `check_invariants` audit (inside `run_case`) — and the
+/// whole failure story must match the single-threaded run bit for bit,
+/// because fault draws are keyed to (request, ordinal), never to a thread
+/// schedule.
+#[test]
+fn chaos_sweep_at_four_workers_matches_single_threaded() {
+    let run_at = |workers: usize| {
+        let mut server = Server::new(
+            small_engine(),
+            ServerConfig {
+                seed: 4242,
+                faults: Some(FaultPlan::uniform(4242, 0.15)),
+                max_prefills_per_cycle: 2,
+                workers,
+                ..ServerConfig::default()
+            },
+        );
+        let n = 14;
+        let (events, max_new) = run_case(&mut server, 4242, n);
+        let streams = by_request(&events);
+        assert_eq!(streams.len(), n, "workers={workers}: missing request streams");
+        for (id, stream) in &streams {
+            validate_stream(stream, max_new[id])
+                .unwrap_or_else(|e| panic!("workers={workers} req {id}: {e}"));
+        }
+        assert_eq!(
+            server.pool.leased(),
+            pinned_pages(&server),
+            "workers={workers}: leaked pages after drain"
+        );
+        (events, server.metrics.faults_injected, server.metrics.faults_drawn)
+    };
+    let (e1, i1, d1) = run_at(1);
+    let (e4, i4, d4) = run_at(4);
+    assert!(i4.iter().sum::<u64>() > 0, "chaos sweep injected no faults");
+    assert_eq!(e1, e4, "workers=4 chaos sweep diverged from workers=1");
+    assert_eq!(i1, i4, "injected-fault counts diverged between widths");
+    assert_eq!(d1, d4, "fault-draw counts diverged between widths");
+}
+
 /// Same seed, same fault plan, same arrivals ⇒ bit-identical event streams
 /// and bit-identical per-site fault counts across two fresh servers.
 #[test]

@@ -1,0 +1,207 @@
+//! Worker-pool bit-identity property suite — the tentpole gate for the
+//! fixed-size worker pool (crate docs, "Threading model").
+//!
+//! The pool's contract is not "statistically close", it is *byte-identical*:
+//! at every worker count the engine must produce the same logits bits, the
+//! same event streams, and the same deterministic metrics, because every
+//! reduction merges in fixed slot/group/head order (never completion order)
+//! and every fault draw is keyed to (request, ordinal), never to a thread
+//! schedule. These properties hold across the FULL `MethodSpec::all()`
+//! roster — every tier split, v_bits choice, rotation, and clipping.
+//!
+//! Runs on the artifact-free reference engine, so this is tier-1.
+
+use std::collections::HashMap;
+
+use mixkvq::coordinator::engine::Engine;
+use mixkvq::coordinator::events::{by_request, validate_stream, Event};
+use mixkvq::coordinator::router::{Server, ServerConfig};
+use mixkvq::coordinator::session::Request;
+use mixkvq::harness::refdriver::RefDriver;
+use mixkvq::harness::workloads;
+use mixkvq::model::config::{Meta, ModelConfig};
+use mixkvq::model::reference::DecodeScratch;
+use mixkvq::model::sampler::Sampling;
+use mixkvq::model::weights::Weights;
+use mixkvq::quant::methods::{Method, MethodSpec};
+use mixkvq::util::rng::Pcg32;
+use mixkvq::util::workers::WorkerPool;
+
+/// Two-layer build so a 17-spec × 2-width server sweep stays cheap.
+fn small_meta() -> Meta {
+    let mut meta = Meta::default_build();
+    meta.model = ModelConfig { n_layers: 2, ..meta.model };
+    for v in &mut meta.variants {
+        v.layers.truncate(2);
+        while v.layers.len() < 2 {
+            let last = *v.layers.last().unwrap();
+            v.layers.push(last);
+        }
+    }
+    meta
+}
+
+fn small_engine() -> Engine {
+    Engine::new_reference(small_meta(), 11, Method::bf16(), 32).unwrap()
+}
+
+/// Boundary (c): the per-kv-head fan-out (`decode_step_into_mt`) must
+/// reproduce the single-threaded `decode_step_into` logits BIT for BIT —
+/// same f32 words, not merely within tolerance — for every constructible
+/// method, with the quantized window and the residual both populated.
+#[test]
+fn sharded_decode_logits_bit_identical_across_roster() {
+    let meta = Meta::default_build();
+    let mc = meta.model.clone();
+    let weights = Weights::random(&mc, 17);
+    let max_scores = meta.cache.capacity + meta.cache.residual + 1;
+    let specs = MethodSpec::all();
+    assert_eq!(specs.len(), 17, "roster drifted — update this test");
+    for spec in specs {
+        let method = spec.build();
+        let layers = meta.variant(&method.variant).unwrap().layers.clone();
+        let driver =
+            RefDriver::new(mc.clone(), meta.cache.clone(), &weights, layers, method, 32);
+        let mut pool = WorkerPool::new(4, &mc, max_scores);
+        assert_eq!(pool.size(), 4);
+        let mut seq = DecodeScratch::new(&mc, max_scores);
+        let mut par = DecodeScratch::new(&mc, max_scores);
+        let mut rng = Pcg32::seeded(4200 + spec.variant().len() as u64);
+        // long enough that the quantized window is populated (> r_limit)
+        let prompt: Vec<i32> = (0..72).map(|_| rng.range(1, 127) as i32).collect();
+        let (mut cache, _) = driver.prefill(&prompt).unwrap();
+        assert!(cache.qlen >= 64, "{spec:?}: window must quantize");
+        assert!(cache.rlen() > 0, "{spec:?}: residual must be populated");
+        for step in 0..4 {
+            let tok = rng.range(1, 127) as i32;
+            driver.model.decode_step_into(tok, &cache, &mut seq);
+            driver.model.decode_step_into_mt(tok, &cache, &mut par, &mut pool);
+            assert_eq!(seq.logits.len(), par.logits.len());
+            for (i, (a, b)) in seq.logits.iter().zip(&par.logits).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{spec:?} step {step}: logit {i} drifted ({a} vs {b})"
+                );
+            }
+            driver.step(&mut cache, tok).unwrap();
+        }
+    }
+}
+
+fn gen_request(rng: &mut Pcg32, id: u64, spec: MethodSpec) -> Request {
+    let ctx = 24 + rng.below(24) as usize;
+    Request {
+        id,
+        prompt: workloads::gen_passkey(rng, ctx).prompt,
+        max_new_tokens: 2 + rng.below(4) as usize,
+        sampling: Sampling::Greedy,
+        method: Some(spec),
+        tenant: rng.below(2),
+        deadline_ticks: None,
+    }
+}
+
+/// Deterministic serving outcome of one width: the full event stream plus
+/// every wall-clock-free metric the tick loop advances.
+#[allow(clippy::type_complexity)]
+fn run_at(spec: MethodSpec, workers: usize) -> (Vec<Event>, Vec<(&'static str, u64)>) {
+    let mut server = Server::new(
+        small_engine(),
+        ServerConfig { seed: 33, workers, ..ServerConfig::default() },
+    );
+    let mut rng = Pcg32::seeded(1234);
+    let n = 6usize;
+    let mut max_new = HashMap::new();
+    for i in 0..n {
+        let req = gen_request(&mut rng, i as u64, spec);
+        max_new.insert(req.id, req.max_new_tokens);
+        server.submit(req).unwrap();
+    }
+    let mut events = Vec::new();
+    let mut guard = 0;
+    while server.has_work() {
+        server.tick().unwrap();
+        server.check_invariants().unwrap();
+        events.extend(server.drain_events());
+        guard += 1;
+        assert!(guard < 10_000, "{spec:?} workers={workers}: drain stalled");
+    }
+    events.extend(server.drain_events());
+    let streams = by_request(&events);
+    assert_eq!(streams.len(), n, "{spec:?} workers={workers}: missing streams");
+    for (id, stream) in &streams {
+        validate_stream(stream, max_new[id]).unwrap();
+    }
+    let m = &server.metrics;
+    let t = &server.engine.timers;
+    let fingerprint = vec![
+        ("completed", m.completed.total() as u64),
+        ("generated", m.total_generated() as u64),
+        ("prompt", m.total_prompt() as u64),
+        ("decode_steps", m.decode_steps),
+        ("live_slot_steps", m.live_slot_steps),
+        ("slot_steps", m.slot_steps),
+        ("max_concurrent", m.max_concurrent as u64),
+        ("rejected", m.rejected),
+        ("decode_errors", m.decode_errors),
+        ("pool_high_water", m.pool_high_water as u64),
+        ("pool_parks", m.pool_parks),
+        ("prefill_parks", m.prefill_parks),
+        ("prefix_hits", m.prefix_hits),
+        ("prefix_misses", m.prefix_misses),
+        ("peak_mem", m.peak_mem_bytes as u64),
+        ("quantize_events", t.quantize_events),
+        ("prefill_chunks", t.prefill_chunks),
+        ("prefill_tokens", t.prefill_tokens),
+        ("engine_decode_steps", t.decode_steps),
+    ];
+    (events, fingerprint)
+}
+
+/// Boundaries (a) + (b) end to end: for every method in the roster, a
+/// served workload at `workers = 1` and `workers = 4` must agree on the
+/// byte-exact event stream (ids, tokens, reasons, order) and on every
+/// deterministic metric the server books.
+#[test]
+fn server_outcomes_identical_at_any_worker_count_across_roster() {
+    for spec in MethodSpec::all() {
+        let (e1, m1) = run_at(spec, 1);
+        let (e4, m4) = run_at(spec, 4);
+        assert_eq!(e1, e4, "{spec:?}: event streams diverged between widths");
+        for ((k, a), (_, b)) in m1.iter().zip(&m4) {
+            assert_eq!(a, b, "{spec:?}: metric {k} diverged between widths");
+        }
+    }
+}
+
+/// Width must also not perturb the *scheduler RNG*: a lone request (no
+/// batching at all) still routes through the parallel prefill path and the
+/// per-head decode fan-out, and every width must reproduce the width-1
+/// event stream exactly — including odd widths that split heads unevenly.
+#[test]
+fn single_request_is_width_invariant() {
+    let run_w = |workers: usize| -> Vec<Event> {
+        let mut server = Server::new(
+            small_engine(),
+            ServerConfig { seed: 5, workers, ..ServerConfig::default() },
+        );
+        let mut rng = Pcg32::seeded(9);
+        server.submit(gen_request(&mut rng, 0, MethodSpec::Bf16)).unwrap();
+        let mut events = Vec::new();
+        let mut guard = 0;
+        while server.has_work() {
+            server.tick().unwrap();
+            server.check_invariants().unwrap();
+            events.extend(server.drain_events());
+            guard += 1;
+            assert!(guard < 10_000);
+        }
+        events.extend(server.drain_events());
+        events
+    };
+    let base = run_w(1);
+    for workers in [2usize, 4, 7] {
+        assert_eq!(base, run_w(workers), "workers={workers} diverged on a lone request");
+    }
+}

@@ -22,7 +22,11 @@
 //!   must have actually injected faults, recovered every session to a
 //!   terminal state, passed the cross-subsystem invariant audit on every
 //!   tick, leaked zero pool pages at drain, and repeated the identical
-//!   failure story on the same-seed rerun.
+//!   failure story on the same-seed rerun;
+//! * `BENCH_parallel.json` — the worker pool must hold ≥2× tick throughput
+//!   at 4 workers over the single-threaded run, with ZERO fingerprint
+//!   drift between the widths (parallelism is a perf optimisation, never a
+//!   semantics change).
 //!
 //! A missing or unparseable artifact is itself a violation: the gate exists
 //! so a bench that silently stops running (or changes schema) cannot merge.
@@ -58,6 +62,9 @@ pub const PREFIX_DEDUP_MIN: f64 = 2.0;
 /// exceed this many ms. Generous on purpose — the bar catches scheduler
 /// pathologies (admission livelock, queue starvation), not machine noise.
 pub const TRAFFIC_P99_TTFT_MAX_MS: f64 = 5000.0;
+/// The worker pool must hold at least this many × tick throughput at
+/// 4 workers over the single-threaded run of the same seeded workload.
+pub const PARALLEL_SCALING_MIN: f64 = 2.0;
 
 /// Context length/prompt length at and above which the decode/prefill
 /// speedup bars apply (short contexts are fixed-overhead dominated).
@@ -246,15 +253,62 @@ fn gate_chaos(j: &Json) -> Result<Vec<String>> {
     Ok(v)
 }
 
+fn gate_parallel(j: &Json) -> Result<Vec<String>> {
+    let mut v = Vec::new();
+    let entries = j.get("entries")?.as_arr()?;
+    if entries.is_empty() {
+        v.push("parallel: report has NO entries — did the bench measure anything?".to_string());
+        return Ok(v);
+    }
+    // locate the two widths the bench runs; losing either is schema drift
+    let mut base: Option<(f64, String, f64)> = None; // (ticks_per_s, fp, ticks)
+    let mut wide: Option<(f64, String, f64)> = None;
+    for e in entries {
+        let workers = e.get("workers")?.as_f64()?;
+        let tps = e.get("ticks_per_s")?.as_f64()?;
+        let fp = e.get("fingerprint")?.as_str()?.to_string();
+        let ticks = e.get("ticks")?.as_f64()?;
+        if workers == 1.0 {
+            base = Some((tps, fp, ticks));
+        } else if workers == 4.0 {
+            wide = Some((tps, fp, ticks));
+        }
+    }
+    let (Some(base), Some(wide)) = (base, wide) else {
+        v.push(
+            "parallel: report is missing the workers=1 or workers=4 entry".to_string(),
+        );
+        return Ok(v);
+    };
+    // zero drift: bit-identity is the pool's contract, so both widths must
+    // report the same fingerprint AND the same tick count
+    if base.1 != wide.1 || base.2 != wide.2 {
+        v.push(format!(
+            "parallel: workers=4 drifted from workers=1 (fingerprint {} vs {}, \
+             ticks {} vs {}) — the pool changed semantics, not just speed",
+            base.1, wide.1, base.2, wide.2
+        ));
+    }
+    let scaling = wide.0 / base.0.max(1e-9);
+    if scaling < PARALLEL_SCALING_MIN {
+        v.push(format!(
+            "parallel: tick-throughput scaling {scaling:.2}x < \
+             {PARALLEL_SCALING_MIN}x at 4 workers"
+        ));
+    }
+    Ok(v)
+}
+
 type Gate = fn(&Json) -> Result<Vec<String>>;
 
-const GATES: [(&str, Gate); 6] = [
+const GATES: [(&str, Gate); 7] = [
     ("BENCH_ref_decode.json", gate_ref_decode),
     ("BENCH_paged_decode.json", gate_paged_decode),
     ("BENCH_prefill.json", gate_prefill),
     ("BENCH_prefix_sharing.json", gate_prefix_sharing),
     ("BENCH_traffic.json", gate_traffic),
     ("BENCH_chaos.json", gate_chaos),
+    ("BENCH_parallel.json", gate_parallel),
 ];
 
 /// Run every gate over `dir`, returning the full violation list (empty =
@@ -286,7 +340,8 @@ fn main() -> ExitCode {
              f32 shrink >= {PREFILL_MEM_RATIO_MIN}x, paged overhead <= \
              {PAGED_OVERHEAD_MAX_PCT}%, prefix dedup >= {PREFIX_DEDUP_MIN}x, \
              traffic p99 TTFT <= {TRAFFIC_P99_TTFT_MAX_MS} ms + deterministic, \
-             chaos soak all-terminal + invariant-clean + leak-free)"
+             chaos soak all-terminal + invariant-clean + leak-free, \
+             parallel scaling >= {PARALLEL_SCALING_MIN}x + drift-free)"
         );
         return ExitCode::SUCCESS;
     }
@@ -489,6 +544,46 @@ mod tests {
         assert!(gate_chaos(&parse(src)).is_err());
     }
 
+    fn parallel_report(tps1: f64, tps4: f64, fp1: &str, fp4: &str) -> String {
+        format!(
+            r#"{{"bench":"parallel","entries":[
+                {{"workers":1,"wall_ms":900.0,"ticks":120,"ticks_per_s":{tps1},
+                  "fingerprint":"{fp1}"}},
+                {{"workers":4,"wall_ms":300.0,"ticks":120,"ticks_per_s":{tps4},
+                  "fingerprint":"{fp4}"}}],
+                "scaling":{},"fingerprint_drift":{}}}"#,
+            tps4 / tps1,
+            fp1 != fp4
+        )
+    }
+
+    #[test]
+    fn healthy_parallel_report_passes() {
+        let src = parallel_report(100.0, 280.0, "cafe0123", "cafe0123");
+        assert!(gate_parallel(&parse(&src)).unwrap().is_empty());
+    }
+
+    #[test]
+    fn parallel_gate_catches_scaling_and_drift_independently() {
+        // below the 2x bar
+        let v = gate_parallel(&parse(&parallel_report(100.0, 150.0, "aa", "aa"))).unwrap();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("1.50x"), "{v:?}");
+        // fingerprint drift between widths — even at great scaling
+        let v = gate_parallel(&parse(&parallel_report(100.0, 390.0, "aa", "ab"))).unwrap();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("drifted"), "{v:?}");
+        // a report missing one width is schema drift, not a pass
+        let one = r#"{"entries":[{"workers":1,"ticks":10,"ticks_per_s":50.0,
+                       "fingerprint":"aa"}]}"#;
+        let v = gate_parallel(&parse(one)).unwrap();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("missing"), "{v:?}");
+        let empty = r#"{"entries":[]}"#;
+        let v = gate_parallel(&parse(empty)).unwrap();
+        assert!(v[0].contains("NO entries"), "{v:?}");
+    }
+
     #[test]
     fn empty_entries_are_a_violation() {
         // a bench that regresses to writing no data must not pass green
@@ -547,6 +642,11 @@ mod tests {
         std::fs::write(
             dir.join("BENCH_chaos.json"),
             chaos_report(200.0, 0.0, 0.0, "[12,8,5,2]", 11.0, true, "feedface"),
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("BENCH_parallel.json"),
+            parallel_report(100.0, 275.0, "cafe0123", "cafe0123"),
         )
         .unwrap();
         assert!(run_gates(&dir).is_empty());
