@@ -565,6 +565,27 @@ impl Engine {
         self.cache_for(&self.variant.layers, self.method.clone())
     }
 
+    /// Cache scaffold for an explicit `method` — the restore path rebuilds
+    /// each live request's cache from its *snapshotted* method name (which
+    /// may differ from the request's submitted method after policy
+    /// degradation or retry-ladder descent), then overlays the
+    /// snapshotted state.
+    pub fn new_cache_for(&self, method: &Method) -> Result<RequestCache> {
+        let spec = self.meta.variant(&method.variant)?;
+        Ok(self.cache_for(&spec.layers, method.clone()))
+    }
+
+    /// Current `PrefixCorrupt` draw ordinal (snapshotted so a restored
+    /// server's prefix-verification fault schedule continues the series).
+    pub fn prefix_fault_seq(&self) -> u64 {
+        self.prefix_fault_seq
+    }
+
+    /// Overwrite the `PrefixCorrupt` draw ordinal (restore only).
+    pub fn set_prefix_fault_seq(&mut self, seq: u64) {
+        self.prefix_fault_seq = seq;
+    }
+
     /// Cache under the engine's shared pool when one is installed, else a
     /// private unbounded pool.
     fn cache_for(&self, specs: &[crate::quant::window::TierSpec], method: Method) -> RequestCache {

@@ -72,6 +72,67 @@ impl EventLog {
         std::mem::take(&mut self.buf)
     }
 
+    /// Serialize the undrained buffer (events emitted since the caller's
+    /// last `drain_events`; a restored server re-delivers them).
+    pub fn write_snap<W: std::io::Write>(
+        &self,
+        w: &mut crate::util::snapshot::SnapWriter<W>,
+    ) -> crate::util::snapshot::SnapResult<()> {
+        w.usize(self.buf.len())?;
+        for e in &self.buf {
+            w.u64(e.id())?;
+            match e {
+                Event::Queued { .. } => w.u8(0)?,
+                Event::Admitted { method, .. } => {
+                    w.u8(1)?;
+                    w.str(method)?;
+                }
+                Event::FirstToken { token, .. } => {
+                    w.u8(2)?;
+                    w.i32(*token)?;
+                }
+                Event::Token { token, .. } => {
+                    w.u8(3)?;
+                    w.i32(*token)?;
+                }
+                Event::Finished { reason, tokens, .. } => {
+                    w.u8(4)?;
+                    w.u8(reason_tag(*reason))?;
+                    w.usize(*tokens)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Replace the buffer with snapshotted pending events.
+    pub fn read_snap<R: std::io::Read>(
+        &mut self,
+        r: &mut crate::util::snapshot::SnapReader<R>,
+    ) -> crate::util::snapshot::SnapResult<()> {
+        use crate::util::snapshot::corrupt;
+        let n = r.usize("event count")?;
+        let mut buf = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            let id = r.u64("event id")?;
+            let tag = r.u8("event tag")?;
+            buf.push(match tag {
+                0 => Event::Queued { id },
+                1 => Event::Admitted { id, method: r.str("event method")? },
+                2 => Event::FirstToken { id, token: r.i32("event token")? },
+                3 => Event::Token { id, token: r.i32("event token")? },
+                4 => {
+                    let reason = reason_from_tag(r.u8("finish reason")?)?;
+                    let tokens = r.usize("finished tokens")?;
+                    Event::Finished { id, reason, tokens }
+                }
+                t => return Err(corrupt(format!("unknown event tag {t}"))),
+            });
+        }
+        self.buf = buf;
+        Ok(())
+    }
+
     pub fn len(&self) -> usize {
         self.buf.len()
     }
@@ -79,6 +140,37 @@ impl EventLog {
     pub fn is_empty(&self) -> bool {
         self.buf.is_empty()
     }
+}
+
+/// Stable wire tag for a [`FinishReason`] (snapshot ABI — append-only).
+pub fn reason_tag(reason: FinishReason) -> u8 {
+    match reason {
+        FinishReason::Eos => 0,
+        FinishReason::MaxTokens => 1,
+        FinishReason::CacheFull => 2,
+        FinishReason::Cancelled => 3,
+        FinishReason::Rejected => 4,
+        FinishReason::Error => 5,
+        FinishReason::DeadlineExceeded => 6,
+    }
+}
+
+/// Inverse of [`reason_tag`]; unknown tags are a corrupt-stream error.
+pub fn reason_from_tag(tag: u8) -> crate::util::snapshot::SnapResult<FinishReason> {
+    Ok(match tag {
+        0 => FinishReason::Eos,
+        1 => FinishReason::MaxTokens,
+        2 => FinishReason::CacheFull,
+        3 => FinishReason::Cancelled,
+        4 => FinishReason::Rejected,
+        5 => FinishReason::Error,
+        6 => FinishReason::DeadlineExceeded,
+        t => {
+            return Err(crate::util::snapshot::corrupt(format!(
+                "unknown finish-reason tag {t}"
+            )))
+        }
+    })
 }
 
 /// Check that one request's event stream is well-formed:
@@ -246,6 +338,41 @@ mod tests {
             Event::Finished { id: 3, reason: FinishReason::Eos, tokens: 0 },
         ];
         assert!(validate_stream(&s, 8).is_err());
+    }
+
+    #[test]
+    fn log_snapshot_round_trips_pending_events() {
+        use crate::util::snapshot::{SnapReader, SnapWriter};
+        let mut log = EventLog::default();
+        log.queued(7);
+        log.admitted(7, "k2-v2-g32");
+        log.first_token(7, -3);
+        log.token(7, 11);
+        log.finished(7, FinishReason::DeadlineExceeded, 2);
+        let mut buf = Vec::new();
+        let mut w = SnapWriter::new(&mut buf).unwrap();
+        log.write_snap(&mut w).unwrap();
+        w.finish().unwrap();
+
+        let mut log2 = EventLog::default();
+        let mut r = SnapReader::new(&buf[..]).unwrap();
+        log2.read_snap(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(log2.drain(), log.drain());
+
+        // every finish reason survives its wire tag
+        for reason in [
+            FinishReason::Eos,
+            FinishReason::MaxTokens,
+            FinishReason::CacheFull,
+            FinishReason::Cancelled,
+            FinishReason::Rejected,
+            FinishReason::Error,
+            FinishReason::DeadlineExceeded,
+        ] {
+            assert_eq!(reason_from_tag(reason_tag(reason)).unwrap(), reason);
+        }
+        assert!(reason_from_tag(9).is_err());
     }
 
     #[test]

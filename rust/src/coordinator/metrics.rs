@@ -8,12 +8,16 @@
 //! ever via fixed-size reservoirs — memory no longer grows with uptime.
 
 use std::collections::VecDeque;
+use std::io::{Read, Write};
 use std::time::Instant;
 
+use crate::util::faults::N_FAULT_SITES;
 use crate::util::rng::Pcg32;
+use crate::util::snapshot::{corrupt, SnapReader, SnapResult, SnapWriter};
 use crate::util::stats::percentile;
 
 use super::engine::EngineTimers;
+use super::events::{reason_from_tag, reason_tag};
 use super::session::Completed;
 
 /// Default retained capacity of [`CompletedLog`] — generous enough that
@@ -74,6 +78,35 @@ impl Reservoir {
     pub fn percentile(&self, p: f64) -> f64 {
         percentile(&self.samples, p)
     }
+
+    /// Serialize the full sampler state — including the Algorithm-R RNG
+    /// position, so a restored reservoir makes the same keep/replace
+    /// decisions on future observations as the uninterrupted one.
+    pub fn write_snap<W: Write>(&self, w: &mut SnapWriter<W>) -> SnapResult<()> {
+        w.usize(self.cap)?;
+        w.u64(self.seen)?;
+        w.slice_f64(&self.samples)?;
+        let (state, inc) = self.rng.state();
+        w.u64(state)?;
+        w.u64(inc)
+    }
+
+    pub fn read_snap<R: Read>(&mut self, r: &mut SnapReader<R>) -> SnapResult<()> {
+        self.cap = r.usize("reservoir cap")?.max(1);
+        self.seen = r.u64("reservoir seen")?;
+        self.samples = r.vec_f64("reservoir samples")?;
+        if self.samples.len() > self.cap {
+            return Err(corrupt(format!(
+                "reservoir holds {} samples over cap {}",
+                self.samples.len(),
+                self.cap
+            )));
+        }
+        let state = r.u64("reservoir rng state")?;
+        let inc = r.u64("reservoir rng inc")?;
+        self.rng = Pcg32::from_state(state, inc);
+        Ok(())
+    }
 }
 
 /// Per-tenant SLO aggregates: streamed TTFT/latency/queue-wait reservoirs
@@ -102,6 +135,61 @@ impl TenantStat {
             queue_wait: Reservoir::new(RESERVOIR_SAMPLES),
         }
     }
+
+    fn write_snap<W: Write>(&self, w: &mut SnapWriter<W>) -> SnapResult<()> {
+        w.u32(self.tenant)?;
+        w.u64(self.completed)?;
+        w.u64(self.unserved)?;
+        self.ttft.write_snap(w)?;
+        self.latency.write_snap(w)?;
+        self.queue_wait.write_snap(w)
+    }
+
+    fn read_snap<R: Read>(r: &mut SnapReader<R>) -> SnapResult<TenantStat> {
+        let mut ts = TenantStat::new(r.u32("tenant id")?);
+        ts.completed = r.u64("tenant completed")?;
+        ts.unserved = r.u64("tenant unserved")?;
+        ts.ttft.read_snap(r)?;
+        ts.latency.read_snap(r)?;
+        ts.queue_wait.read_snap(r)?;
+        Ok(ts)
+    }
+}
+
+fn write_completed<W: Write>(w: &mut SnapWriter<W>, c: &Completed) -> SnapResult<()> {
+    w.u64(c.id)?;
+    w.usize(c.prompt_len)?;
+    w.slice_i32(&c.tokens)?;
+    w.u8(reason_tag(c.reason))?;
+    w.str(&c.method)?;
+    w.u32(c.tenant)?;
+    match c.ttft_ms {
+        Some(t) => {
+            w.bool(true)?;
+            w.f64(t)?;
+        }
+        None => w.bool(false)?,
+    }
+    w.f64(c.queue_ms)?;
+    w.f64(c.total_ms)
+}
+
+fn read_completed<R: Read>(r: &mut SnapReader<R>) -> SnapResult<Completed> {
+    Ok(Completed {
+        id: r.u64("completed id")?,
+        prompt_len: r.usize("completed prompt_len")?,
+        tokens: r.vec_i32("completed tokens")?,
+        reason: reason_from_tag(r.u8("completed reason")?)?,
+        method: r.str("completed method")?,
+        tenant: r.u32("completed tenant")?,
+        ttft_ms: if r.bool("completed has_ttft")? {
+            Some(r.f64("completed ttft_ms")?)
+        } else {
+            None
+        },
+        queue_ms: r.f64("completed queue_ms")?,
+        total_ms: r.f64("completed total_ms")?,
+    })
 }
 
 /// Bounded completion log: a fixed-capacity ring of the most recent
@@ -281,6 +369,67 @@ impl CompletedLog {
     pub fn queue_wait_percentile(&self, p: f64) -> f64 {
         self.queue_wait.percentile(p)
     }
+
+    /// Serialize the ring, the streamed totals, and every reservoir.
+    pub fn write_snap<W: Write>(&self, w: &mut SnapWriter<W>) -> SnapResult<()> {
+        w.usize(self.cap)?;
+        w.u64(self.start)?;
+        w.u64(self.n_total)?;
+        w.u64(self.gen_tokens)?;
+        w.u64(self.prompt_tokens)?;
+        w.usize(self.buf.len())?;
+        for c in &self.buf {
+            write_completed(w, c)?;
+        }
+        w.usize(self.by_method.len())?;
+        for (m, n) in &self.by_method {
+            w.str(m)?;
+            w.u64(*n)?;
+        }
+        self.ttft.write_snap(w)?;
+        self.latency.write_snap(w)?;
+        self.queue_wait.write_snap(w)?;
+        w.usize(self.by_tenant.len())?;
+        for ts in &self.by_tenant {
+            ts.write_snap(w)?;
+        }
+        Ok(())
+    }
+
+    pub fn read_snap<R: Read>(&mut self, r: &mut SnapReader<R>) -> SnapResult<()> {
+        self.cap = r.usize("completed-log cap")?.max(1);
+        self.start = r.u64("completed-log start")?;
+        self.n_total = r.u64("completed-log total")?;
+        self.gen_tokens = r.u64("completed-log gen_tokens")?;
+        self.prompt_tokens = r.u64("completed-log prompt_tokens")?;
+        let n = r.usize("completed-log retained")?;
+        if n > self.cap {
+            return Err(corrupt(format!(
+                "completed-log retains {n} records over cap {}",
+                self.cap
+            )));
+        }
+        self.buf.clear();
+        for _ in 0..n {
+            self.buf.push_back(read_completed(r)?);
+        }
+        let n_methods = r.usize("completed-log method count")?;
+        self.by_method.clear();
+        for _ in 0..n_methods {
+            let m = r.str("completed-log method name")?;
+            let count = r.u64("completed-log method count")?;
+            self.by_method.push((m, count));
+        }
+        self.ttft.read_snap(r)?;
+        self.latency.read_snap(r)?;
+        self.queue_wait.read_snap(r)?;
+        let n_tenants = r.usize("completed-log tenant count")?;
+        self.by_tenant.clear();
+        for _ in 0..n_tenants {
+            self.by_tenant.push(TenantStat::read_snap(r)?);
+        }
+        Ok(())
+    }
 }
 
 /// `for c in &metrics.completed` iterates the retained records, oldest
@@ -359,9 +508,22 @@ pub struct Metrics {
     /// Fault-injection draws per site, gauge sampled from the injector
     /// each tick (all zero when no fault plan is installed). Indexed by
     /// `FaultSite::index()`.
-    pub faults_drawn: [u64; 4],
+    pub faults_drawn: [u64; N_FAULT_SITES],
     /// Injected failures per site (same indexing as `faults_drawn`).
-    pub faults_injected: [u64; 4],
+    pub faults_injected: [u64; N_FAULT_SITES],
+    // --- crash recovery: snapshot/restore/scrub counters ------------------
+    /// Successful `Server::snapshot` calls (torn writes don't count).
+    pub snapshots: u64,
+    /// Completed `Server::restore` loads — carried across the restore, so
+    /// a twice-restored server reports 2.
+    pub restores: u64,
+    /// KV pages quarantined by a checksum mismatch (restore verification or
+    /// a live scrub) over the server's whole lineage.
+    pub pages_quarantined: u64,
+    /// Requests retired as `Error` because a restore found their pages
+    /// corrupt (shared prefix pages degrade to index-entry sheds instead
+    /// and are counted under `prefix_evictions`/`prefix_collisions`).
+    pub restore_retired: u64,
     /// Park events per tenant id (fairness: who absorbs pool pressure).
     pub tenant_parks: Vec<(u32, u64)>,
     /// Deadlock preemptions per tenant id (who gets force-finished).
@@ -547,6 +709,152 @@ impl Metrics {
         self.prefix_sidecar_bytes = stats.sidecar_bytes;
     }
 
+    /// Serialize every counter, gauge, and reservoir. The wall-clock
+    /// anchors (`t_start`/`t_end`) are deliberately NOT snapshotted — a
+    /// restored server re-stamps them, so wall-time-derived readouts
+    /// (throughput, percentile milliseconds) measure the new process while
+    /// the deterministic counters continue the old one's series.
+    pub fn write_snap<W: Write>(&self, w: &mut SnapWriter<W>) -> SnapResult<()> {
+        self.completed.write_snap(w)?;
+        for v in [self.decode_steps, self.live_slot_steps, self.slot_steps] {
+            w.u64(v)?;
+        }
+        w.usize(self.peak_mem_bytes)?;
+        w.usize(self.max_concurrent)?;
+        for v in [
+            self.rejected,
+            self.cancelled,
+            self.admission_stalls,
+            self.policy_degradations,
+            self.queue_rejections,
+            self.prefill_retries,
+            self.retry_degradations,
+            self.retries_exhausted,
+            self.fault_recoveries,
+            self.decode_errors,
+            self.internal_errors,
+            self.deadline_exceeded,
+            self.deadline_shed,
+            self.watchdog_degrades,
+            self.watchdog_sheds,
+        ] {
+            w.u64(v)?;
+        }
+        for counts in [
+            &self.tenant_errors,
+            &self.tenant_deadlines,
+            &self.tenant_parks,
+            &self.tenant_preemptions,
+        ] {
+            w.usize(counts.len())?;
+            for (t, n) in counts.iter() {
+                w.u32(*t)?;
+                w.u64(*n)?;
+            }
+        }
+        w.slice_u64(&self.faults_drawn)?;
+        w.slice_u64(&self.faults_injected)?;
+        for v in [self.snapshots, self.restores, self.pages_quarantined, self.restore_retired] {
+            w.u64(v)?;
+        }
+        w.usize(self.pool_pages_leased)?;
+        w.usize(self.pool_pages_total)?;
+        w.usize(self.pool_high_water)?;
+        w.u64(self.pool_lease_failures)?;
+        for v in [self.pool_parks, self.prefill_parks, self.pool_resumes, self.pool_preemptions] {
+            w.u64(v)?;
+        }
+        w.u64(self.prefix_hits)?;
+        w.u64(self.prefix_misses)?;
+        w.usize(self.prefix_entries)?;
+        w.usize(self.prefix_pages_pinned)?;
+        w.u64(self.prefix_bytes_deduped)?;
+        w.u64(self.prefix_evictions)?;
+        w.u64(self.prefix_collisions)?;
+        w.usize(self.prefix_sidecar_bytes)
+    }
+
+    pub fn read_snap<R: Read>(&mut self, r: &mut SnapReader<R>) -> SnapResult<()> {
+        self.completed.read_snap(r)?;
+        self.decode_steps = r.u64("metrics decode_steps")?;
+        self.live_slot_steps = r.u64("metrics live_slot_steps")?;
+        self.slot_steps = r.u64("metrics slot_steps")?;
+        self.peak_mem_bytes = r.usize("metrics peak_mem_bytes")?;
+        self.max_concurrent = r.usize("metrics max_concurrent")?;
+        for v in [
+            &mut self.rejected,
+            &mut self.cancelled,
+            &mut self.admission_stalls,
+            &mut self.policy_degradations,
+            &mut self.queue_rejections,
+            &mut self.prefill_retries,
+            &mut self.retry_degradations,
+            &mut self.retries_exhausted,
+            &mut self.fault_recoveries,
+            &mut self.decode_errors,
+            &mut self.internal_errors,
+            &mut self.deadline_exceeded,
+            &mut self.deadline_shed,
+            &mut self.watchdog_degrades,
+            &mut self.watchdog_sheds,
+        ] {
+            *v = r.u64("metrics counter")?;
+        }
+        for counts in [
+            &mut self.tenant_errors,
+            &mut self.tenant_deadlines,
+            &mut self.tenant_parks,
+            &mut self.tenant_preemptions,
+        ] {
+            let n = r.usize("metrics tenant-count len")?;
+            counts.clear();
+            for _ in 0..n {
+                let t = r.u32("metrics tenant id")?;
+                let c = r.u64("metrics tenant count")?;
+                counts.push((t, c));
+            }
+        }
+        for arr in [&mut self.faults_drawn, &mut self.faults_injected] {
+            let v = r.vec_u64("metrics fault counters")?;
+            if v.len() != N_FAULT_SITES {
+                return Err(corrupt(format!(
+                    "fault counter array has {} sites (this build has {N_FAULT_SITES})",
+                    v.len()
+                )));
+            }
+            arr.copy_from_slice(&v);
+        }
+        for v in [
+            &mut self.snapshots,
+            &mut self.restores,
+            &mut self.pages_quarantined,
+            &mut self.restore_retired,
+        ] {
+            *v = r.u64("metrics recovery counter")?;
+        }
+        self.pool_pages_leased = r.usize("metrics pool leased")?;
+        self.pool_pages_total = r.usize("metrics pool total")?;
+        self.pool_high_water = r.usize("metrics pool high_water")?;
+        self.pool_lease_failures = r.u64("metrics pool lease_failures")?;
+        for v in [
+            &mut self.pool_parks,
+            &mut self.prefill_parks,
+            &mut self.pool_resumes,
+            &mut self.pool_preemptions,
+        ] {
+            *v = r.u64("metrics pool counter")?;
+        }
+        self.prefix_hits = r.u64("metrics prefix hits")?;
+        self.prefix_misses = r.u64("metrics prefix misses")?;
+        self.prefix_entries = r.usize("metrics prefix entries")?;
+        self.prefix_pages_pinned = r.usize("metrics prefix pinned")?;
+        self.prefix_bytes_deduped = r.u64("metrics prefix deduped")?;
+        self.prefix_evictions = r.u64("metrics prefix evictions")?;
+        self.prefix_collisions = r.u64("metrics prefix collisions")?;
+        self.prefix_sidecar_bytes = r.usize("metrics prefix sidecar")?;
+        Ok(())
+    }
+
     pub fn summary(&self) -> String {
         let (ttft50, ttft95) = self.ttft_ms();
         let (lat50, lat95) = self.latency_ms();
@@ -609,7 +917,7 @@ impl Metrics {
         if failures_seen {
             out.push_str(&format!(
                 "\n  failures: faults_injected={faults_total} \
-                 (lease={} prefill={} decode={} prefix={}) \
+                 (lease={} prefill={} decode={} prefix={} snapwrite={} snapcorrupt={}) \
                  prefill_retries={} retry_degradations={} exhausted={} \
                  recovered={} decode_errors={} internal={} \
                  deadline_exceeded={} deadline_shed={} queue_rejects={} \
@@ -618,6 +926,8 @@ impl Metrics {
                 self.faults_injected[1],
                 self.faults_injected[2],
                 self.faults_injected[3],
+                self.faults_injected[4],
+                self.faults_injected[5],
                 self.prefill_retries,
                 self.retry_degradations,
                 self.retries_exhausted,
@@ -629,6 +939,17 @@ impl Metrics {
                 self.queue_rejections,
                 self.watchdog_degrades,
                 self.watchdog_sheds,
+            ));
+        }
+        if self.snapshots > 0
+            || self.restores > 0
+            || self.pages_quarantined > 0
+            || self.restore_retired > 0
+        {
+            out.push_str(&format!(
+                "\n  recovery: snapshots={} restores={} pages_quarantined={} \
+                 restore_retired={}",
+                self.snapshots, self.restores, self.pages_quarantined, self.restore_retired,
             ));
         }
         for t in self.tenants() {
@@ -916,8 +1237,8 @@ mod tests {
         m.decode_errors = 1;
         m.deadline_shed = 4;
         m.queue_rejections = 2;
-        m.faults_injected = [5, 3, 1, 0];
-        m.faults_drawn = [50, 30, 10, 0];
+        m.faults_injected = [5, 3, 1, 0, 0, 0];
+        m.faults_drawn = [50, 30, 10, 0, 0, 0];
         m.note_tenant_error(7);
         m.note_tenant_deadline(7);
         m.note_tenant_deadline(7);
@@ -935,12 +1256,76 @@ mod tests {
     fn observe_faults_copies_per_site_counters() {
         let mut m = Metrics::default();
         let stats = crate::util::faults::FaultStats {
-            drawn: [10, 20, 30, 40],
-            injected: [1, 2, 3, 4],
+            drawn: [10, 20, 30, 40, 50, 60],
+            injected: [1, 2, 3, 4, 5, 6],
         };
         m.observe_faults(&stats);
-        assert_eq!(m.faults_drawn, [10, 20, 30, 40]);
-        assert_eq!(m.faults_injected, [1, 2, 3, 4]);
+        assert_eq!(m.faults_drawn, [10, 20, 30, 40, 50, 60]);
+        assert_eq!(m.faults_injected, [1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn metrics_snapshot_round_trips_counters_and_reservoir_state() {
+        use crate::util::snapshot::{SnapReader, SnapWriter};
+        let mut m = Metrics { completed: CompletedLog::with_capacity(3), ..Metrics::default() };
+        for i in 0..5 {
+            m.completed.push(Completed { tenant: (i % 2) as u32, ..completed(i + 1) });
+        }
+        m.completed.push(Completed {
+            tenant: 1,
+            ttft_ms: None,
+            tokens: vec![],
+            reason: FinishReason::Rejected,
+            method: "-".into(),
+            ..completed(1)
+        });
+        m.record_step(2, 8);
+        m.prefill_retries = 3;
+        m.deadline_shed = 4;
+        m.faults_injected = [5, 3, 1, 0, 2, 1];
+        m.snapshots = 2;
+        m.restores = 1;
+        m.pages_quarantined = 7;
+        m.restore_retired = 1;
+        m.note_tenant_park(1);
+        m.pool_high_water = 42;
+        m.prefix_hits = 9;
+
+        let mut buf = Vec::new();
+        let mut w = SnapWriter::new(&mut buf).unwrap();
+        m.write_snap(&mut w).unwrap();
+        w.finish().unwrap();
+
+        let mut m2 = Metrics::default();
+        let mut r = SnapReader::new(&buf[..]).unwrap();
+        m2.read_snap(&mut r).unwrap();
+        r.finish().unwrap();
+
+        assert_eq!(m2.completed.total(), m.completed.total());
+        assert_eq!(m2.completed.retained(), m.completed.retained());
+        assert_eq!(m2.completed.end_seq(), m.completed.end_seq());
+        assert_eq!(m2.completed_by_method(), m.completed_by_method());
+        assert_eq!(m2.ttft_ms(), m.ttft_ms());
+        assert_eq!(m2.faults_injected, m.faults_injected);
+        assert_eq!(
+            (m2.snapshots, m2.restores, m2.pages_quarantined, m2.restore_retired),
+            (2, 1, 7, 1)
+        );
+        assert_eq!(count_for(&m2.tenant_parks, 1), 1);
+        assert_eq!(m2.pool_high_water, 42);
+        assert_eq!(m2.prefix_hits, 9);
+        // reservoir RNG state carried over: identical future pushes make
+        // identical keep/replace decisions
+        let (t1, t2) = {
+            let mut a = m;
+            let mut b = m2;
+            for i in 0..2000 {
+                a.completed.push(completed(i + 1));
+                b.completed.push(completed(i + 1));
+            }
+            (a.ttft_ms(), b.ttft_ms())
+        };
+        assert_eq!(t1, t2);
     }
 
     #[test]

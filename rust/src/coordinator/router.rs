@@ -62,19 +62,21 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::engine::{ChunkedPrefill, DecodeGroup, Engine};
-use crate::coordinator::events::{Event, EventLog, RequestStatus};
+use crate::coordinator::events::{reason_from_tag, reason_tag, Event, EventLog, RequestStatus};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::{Scheduler, SchedulerPolicy};
-use crate::coordinator::session::{Completed, FinishReason, Request, RequestId, Session};
+use crate::coordinator::session::{Completed, FinishReason, Phase, Request, RequestId, Session};
 use crate::kvcache::accountant::MemoryAccountant;
-use crate::kvcache::pool::{KvPool, PrefixIndex};
-use crate::model::sampler;
+use crate::kvcache::pool::{KvPool, Page, PageLease, PrefixIndex, SharedLease};
+use crate::model::reference::PrefillRun;
+use crate::model::sampler::{self, Sampling};
 use crate::model::tokenizer;
-use crate::quant::methods::Method;
+use crate::quant::methods::{Method, MethodSpec};
 use crate::quant::policy::{PrecisionPolicy, SpecCosts};
 use crate::runtime::registry::pick_bucket;
-use crate::util::faults::{FaultInjector, FaultPlan};
+use crate::util::faults::{draw_key, FaultInjector, FaultPlan, FaultSite};
 use crate::util::rng::Pcg32;
+use crate::util::snapshot::{corrupt, page_checksum, SnapReader, SnapResult, SnapWriter};
 
 /// Failed-prefill retry budget per ladder rung: after this many attempts
 /// the request retries at the next cheaper rung (if the ladder has one)
@@ -90,6 +92,7 @@ const PARK_WATCHDOG_DEGRADE: u32 = 8;
 /// fixed decode slot without any prospect of progress.
 const PARK_WATCHDOG_SHED: u32 = 16;
 
+#[derive(Clone)]
 pub struct ServerConfig {
     pub memory_budget_bytes: usize,
     pub max_prefills_per_cycle: usize,
@@ -277,6 +280,10 @@ pub struct Server {
     retry_state: HashMap<RequestId, RetryState>,
     /// Bounded wait queue (see `ServerConfig::max_queue`).
     max_queue: Option<usize>,
+    /// Monotonic snapshot ordinal — keys the `SnapshotWrite`/
+    /// `SnapshotCorrupt` fault draws, and is itself snapshotted so a
+    /// restored server continues the same fault-draw series.
+    snapshot_seq: u64,
     /// Shared deterministic fault injector (chaos testing); also installed
     /// into the pool and the engine (and reachable from worker threads —
     /// draws are stateless keyed functions, see util::faults). `None` =
@@ -356,6 +363,7 @@ impl Server {
             retries: Vec::new(),
             retry_state: HashMap::new(),
             max_queue: cfg.max_queue,
+            snapshot_seq: 0,
             faults,
             engine,
         }
@@ -711,7 +719,641 @@ impl Server {
                 bail!("invariant violation: retry state for request {id} not in flight");
             }
         }
+        // 5. page integrity coverage: at a tick boundary every live page —
+        //    reachable from a slot, an in-flight prefill, or the prefix
+        //    index — is sealed under exactly one checksum entry, and no
+        //    quarantined page id is reachable from any holder (a
+        //    quarantined page must have been discarded, never re-issued)
+        let mut live_page_ids: Vec<usize> = Vec::new();
+        self.walk_pages(&mut |p, _| live_page_ids.push(p.id()));
+        live_page_ids.sort_unstable();
+        live_page_ids.dedup();
+        let sealed_ids = self.pool.checksum_ids();
+        if sealed_ids != live_page_ids {
+            bail!(
+                "invariant violation: {} live pages across holders but {} \
+                 checksum entries in the pool (every live page must be \
+                 sealed exactly once)",
+                live_page_ids.len(),
+                sealed_ids.len()
+            );
+        }
+        for id in &live_page_ids {
+            if self.pool.is_quarantined(*id) {
+                bail!("invariant violation: quarantined page {id:#x} still reachable from a holder");
+            }
+        }
         Ok(())
+    }
+
+    /// Visit every live page in deterministic holder order: decode slots
+    /// (slot index ascending), then in-flight prefills (admission order),
+    /// then the prefix index (entry stamp order). The bool is `true` for a
+    /// shared reference. The snapshot writer's page-serial numbering and
+    /// the integrity audit both walk this exact order.
+    fn walk_pages(&self, f: &mut dyn FnMut(&Page, bool)) {
+        for sess in self.batcher.slots.iter().flatten() {
+            sess.cache.for_each_page(f);
+        }
+        for p in &self.prefills {
+            p.cp.cache.for_each_page(f);
+        }
+        if let Some(ix) = self.engine.prefix_index() {
+            ix.borrow().for_each_page(&mut |p| f(p, true));
+        }
+    }
+
+    // --- crash-safe serving: snapshot / restore / scrub ------------------
+
+    /// Serialize the server's complete live state to `w` (the
+    /// `mixkvq-snap-v1` stream — see the crate docs, "Crash recovery &
+    /// snapshot ABI"). Call **between ticks only**: `tick` is synchronous,
+    /// so any point outside it is a quiesce point where every leased page
+    /// is sealed and no compute is in flight. Returns the bytes written.
+    ///
+    /// Every page is written with its FNV-1a checksum; an armed
+    /// [`FaultSite::SnapshotWrite`] plan can tear the write (stream ends
+    /// after the geometry prologue, `Err` returned) and
+    /// [`FaultSite::SnapshotCorrupt`] bit-flips a page's serialized arenas
+    /// *after* its checksum — restore detects exactly that page.
+    pub fn snapshot<W: std::io::Write>(&mut self, w: W) -> SnapResult<u64> {
+        const SNAP_FAULT_CTX: u64 = 0x6d78_6b76_715f_736e; // "mxkvq_sn"
+        let ordinal = self.snapshot_seq;
+        self.snapshot_seq += 1;
+        let mut w = SnapWriter::new(w)?;
+        self.write_geometry(&mut w)?;
+        if let Some(f) = &self.faults {
+            if f.should_fail(FaultSite::SnapshotWrite, draw_key(SNAP_FAULT_CTX, ordinal)) {
+                // torn write: the stream ends mid-prologue; a restore from
+                // it fails structurally (truncation names the field) and
+                // the caller keeps serving from live state
+                return Err(corrupt(format!(
+                    "injected torn snapshot write (ordinal {ordinal})"
+                )));
+            }
+        }
+        // scalars: the deterministic clocks a restored server continues
+        w.u64(self.ticks)?;
+        w.u64(self.prefill_seq)?;
+        w.u64(self.snapshot_seq)?;
+        let (state, inc) = self.rng.state();
+        w.u64(state)?;
+        w.u64(inc)?;
+        w.u64(self.engine.prefix_fault_seq())?;
+        // pool counters
+        let ps = self.pool.stats();
+        w.usize(ps.high_water)?;
+        w.u64(ps.lease_failures)?;
+        w.u64(ps.total_leases)?;
+        // fault-injector tallies (draw *positions* live in the per-cache
+        // fault seqs and the ordinals above; these are just the counters)
+        match &self.faults {
+            Some(f) => {
+                w.bool(true)?;
+                let s = f.stats();
+                w.slice_u64(&s.drawn)?;
+                w.slice_u64(&s.injected)?;
+            }
+            None => w.bool(false)?,
+        }
+        // pages: dedup every live page across holders into a serial space
+        // (first-encounter order over the deterministic `walk_pages` walk),
+        // then write each page once with its checksum
+        let mut serials: HashMap<usize, u32> = HashMap::new();
+        self.walk_pages(&mut |p, _| {
+            let next = serials.len() as u32;
+            serials.entry(p.id()).or_insert(next);
+        });
+        w.usize(serials.len())?;
+        let pool = self.pool.clone();
+        let faults = self.faults.clone();
+        let corrupt_ctx = draw_key(SNAP_FAULT_CTX, ordinal);
+        let mut written = vec![false; serials.len()];
+        let mut page_err: Option<crate::util::snapshot::SnapError> = None;
+        self.walk_pages(&mut |p, _| {
+            if page_err.is_some() {
+                return;
+            }
+            let serial = serials[&p.id()] as usize;
+            if written[serial] {
+                return;
+            }
+            written[serial] = true;
+            let checksum = pool
+                .sealed_checksum(p.id())
+                .unwrap_or_else(|| page_checksum(&p.f, &p.b));
+            let flip = faults.as_ref().is_some_and(|f| {
+                f.should_fail(FaultSite::SnapshotCorrupt, draw_key(corrupt_ctx, serial as u64))
+            });
+            let res = (|| -> SnapResult<()> {
+                if flip {
+                    // bit-flip AFTER the checksum was taken: the restore
+                    // verifier must catch exactly this page
+                    let mut f32s = p.f.clone();
+                    let mut bytes = p.b.clone();
+                    if let Some(x) = f32s.first_mut() {
+                        *x = f32::from_bits(x.to_bits() ^ 1);
+                    } else if let Some(x) = bytes.first_mut() {
+                        *x ^= 1;
+                    }
+                    w.slice_f32(&f32s)?;
+                    w.bytes(&bytes)?;
+                } else {
+                    w.slice_f32(&p.f)?;
+                    w.bytes(&p.b)?;
+                }
+                w.u64(checksum)
+            })();
+            if let Err(e) = res {
+                page_err = Some(e);
+            }
+        });
+        if let Some(e) = page_err {
+            return Err(e);
+        }
+        // submit clocks (wall-clock submit_times are re-stamped on restore)
+        let mut submit: Vec<(u64, u64)> =
+            self.submit_ticks.iter().map(|(k, v)| (*k, *v)).collect();
+        submit.sort_unstable();
+        w.usize(submit.len())?;
+        for (id, t) in submit {
+            w.u64(id)?;
+            w.u64(t)?;
+        }
+        // wait queue (FIFO order preserved)
+        w.usize(self.batcher.waiting.len())?;
+        for req in &self.batcher.waiting {
+            write_request(&mut w, req)?;
+        }
+        // decode slots: index-exact, so variant grouping and free-slot
+        // selection replay identically
+        w.usize(self.batcher.slots.len())?;
+        for slot in &self.batcher.slots {
+            let Some(sess) = slot else {
+                w.bool(false)?;
+                continue;
+            };
+            w.bool(true)?;
+            write_request(&mut w, &sess.request)?;
+            w.slice_i32(&sess.generated)?;
+            w.i32(sess.next_token)?;
+            w.bool(sess.parked)?;
+            w.u32(sess.parked_streak)?;
+            // the RESOLVED method (may be a policy-degraded rung, not the
+            // request's submitted spec)
+            w.str(&sess.cache.method.name)?;
+            sess.cache.write_snap(&mut w, &mut |id| serial_for(&serials, id))?;
+        }
+        // in-flight chunked prefills
+        w.usize(self.prefills.len())?;
+        for p in &self.prefills {
+            write_request(&mut w, &p.req)?;
+            w.str(&p.method.name)?;
+            w.usize(p.pages_claimed)?;
+            w.u64(p.arrival)?;
+            p.cp.cache.write_snap(&mut w, &mut |id| serial_for(&serials, id))?;
+            p.cp.run.write_snap(&mut w, &self.engine.meta.model)?;
+        }
+        // backoff retries + retry ladder state
+        w.usize(self.retries.len())?;
+        for t in &self.retries {
+            write_request(&mut w, &t.req)?;
+            w.u64(t.ready_tick)?;
+        }
+        let mut rs: Vec<(u64, RetryState)> =
+            self.retry_state.iter().map(|(k, v)| (*k, *v)).collect();
+        rs.sort_unstable_by_key(|(k, _)| *k);
+        w.usize(rs.len())?;
+        for (id, st) in rs {
+            w.u64(id)?;
+            w.u32(st.attempt)?;
+            w.usize(st.min_rank)?;
+        }
+        // terminal records (poll index)
+        let mut fin: Vec<(u64, Terminal)> = self.finished.iter().map(|(k, v)| (*k, *v)).collect();
+        fin.sort_unstable_by_key(|(k, _)| *k);
+        w.usize(fin.len())?;
+        for (id, t) in fin {
+            w.u64(id)?;
+            match t {
+                Terminal::Pending { seq, reason, n_tokens } => {
+                    w.u8(0)?;
+                    w.u64(seq)?;
+                    w.u8(reason_tag(reason))?;
+                    w.usize(n_tokens)?;
+                }
+                Terminal::Retired { reason, n_tokens } => {
+                    w.u8(1)?;
+                    w.u8(reason_tag(reason))?;
+                    w.usize(n_tokens)?;
+                }
+            }
+        }
+        // prefix index (entries reference the shared page serials above)
+        match self.engine.prefix_index() {
+            Some(ix) => {
+                w.bool(true)?;
+                ix.borrow().write_snap(&mut w, &mut |id| serial_for(&serials, id))?;
+            }
+            None => w.bool(false)?,
+        }
+        // undrained lifecycle events, then the metrics books. `snapshots`
+        // is bumped BEFORE the metrics section so a restored server and the
+        // uninterrupted one agree on the counter.
+        self.events.write_snap(&mut w)?;
+        self.metrics.snapshots += 1;
+        self.metrics.write_snap(&mut w)?;
+        w.finish()
+    }
+
+    /// Rebuild a server from a snapshot stream. `engine` and `cfg` must
+    /// match the snapshotting process (same artifacts, budget, workers,
+    /// fault plan, …) — the geometry prologue rejects gross mismatches
+    /// with a named error; behavioral equivalence additionally needs the
+    /// same config, which is deliberately NOT serialized (config belongs
+    /// to the operator, not the snapshot).
+    ///
+    /// Integrity: every page's checksum is re-verified. A corrupt page is
+    /// quarantined and only its owners degrade — a slot or in-flight
+    /// prefill holding it retires as [`FinishReason::Error`]
+    /// (`Metrics::restore_retired`), a prefix entry referencing it is
+    /// dropped collision-miss-style — the load itself still succeeds.
+    /// Structural damage (truncation, bad magic, misaligned trailer)
+    /// fails the whole restore with a descriptive error instead.
+    pub fn restore<R: std::io::Read>(engine: Engine, cfg: ServerConfig, r: R) -> SnapResult<Server> {
+        let mut srv = Server::new(engine, cfg);
+        let mut r = SnapReader::new(r)?;
+        srv.overlay(&mut r)?;
+        r.finish()?;
+        Ok(srv)
+    }
+
+    /// Overlay a snapshot stream onto this freshly constructed server.
+    fn overlay<R: std::io::Read>(&mut self, r: &mut SnapReader<R>) -> SnapResult<()> {
+        use crate::util::faults::{FaultStats, N_FAULT_SITES};
+        self.check_geometry(r)?;
+        self.ticks = r.u64("server ticks")?;
+        self.prefill_seq = r.u64("server prefill_seq")?;
+        self.snapshot_seq = r.u64("server snapshot_seq")?;
+        let state = r.u64("server rng state")?;
+        let inc = r.u64("server rng inc")?;
+        self.rng = Pcg32::from_state(state, inc);
+        let pfs = r.u64("engine prefix_fault_seq")?;
+        self.engine.set_prefix_fault_seq(pfs);
+        let high_water = r.usize("pool high_water")?;
+        let lease_failures = r.u64("pool lease_failures")?;
+        let total_leases = r.u64("pool total_leases")?;
+        self.pool.restore_counters(high_water, lease_failures, total_leases);
+        if r.bool("fault stats present")? {
+            let drawn = r.vec_u64("fault drawn")?;
+            let injected = r.vec_u64("fault injected")?;
+            if drawn.len() != N_FAULT_SITES || injected.len() != N_FAULT_SITES {
+                return Err(corrupt(format!(
+                    "fault counter arrays have {} sites (this build has {N_FAULT_SITES})",
+                    drawn.len()
+                )));
+            }
+            if let Some(f) = &self.faults {
+                let mut s = FaultStats::default();
+                s.drawn.copy_from_slice(&drawn);
+                s.injected.copy_from_slice(&injected);
+                f.restore_stats(&s);
+            }
+        }
+        // pages: lease fresh storage per serial, verify the checksum, and
+        // quarantine (instead of installing) anything that fails
+        let n_pages = r.usize("page count")?;
+        let (f_len, b_len) = self.pool.arena_dims();
+        let mut quarantined = 0u64;
+        let mut leases: Vec<Option<PageLease>> = Vec::with_capacity(n_pages);
+        for serial in 0..n_pages {
+            let f32s = r.vec_f32("page f arena")?;
+            let bytes = r.bytes("page b arena")?;
+            let stored = r.u64("page checksum")?;
+            if f32s.len() != f_len || bytes.len() != b_len {
+                return Err(corrupt(format!(
+                    "page {serial} arenas are {}f32/{}b but this pool's pages \
+                     are {f_len}f32/{b_len}b",
+                    f32s.len(),
+                    bytes.len()
+                )));
+            }
+            let mut lease = self.pool.lease().map_err(|e| {
+                corrupt(format!("pool cannot cover snapshot page {serial}: {e:#}"))
+            })?;
+            if page_checksum(&f32s, &bytes) != stored {
+                // integrity failure: condemn the storage; the owners of
+                // this serial degrade per-request when they resolve it
+                self.pool.quarantine_page(lease.page().id());
+                quarantined += 1;
+                drop(lease);
+                leases.push(None);
+            } else {
+                lease.page_mut().f.copy_from_slice(&f32s);
+                lease.page_mut().b.copy_from_slice(&bytes);
+                self.pool.seal_page(lease.page());
+                leases.push(Some(lease));
+            }
+        }
+        let pages = RefCell::new(leases);
+        let shared: RefCell<Vec<Option<SharedLease>>> = RefCell::new(vec![None; n_pages]);
+        let mut resolve_private = |s: u32| -> Option<PageLease> {
+            pages.borrow_mut().get_mut(s as usize).and_then(Option::take)
+        };
+        let mut resolve_shared = |s: u32| -> Option<SharedLease> {
+            let mut sh = shared.borrow_mut();
+            let slot = sh.get_mut(s as usize)?;
+            if slot.is_none() {
+                let lease = pages.borrow_mut().get_mut(s as usize)?.take()?;
+                *slot = Some(SharedLease::new(lease));
+            }
+            slot.clone()
+        };
+        // submit clocks: ticks from the snapshot, wall times re-stamped now
+        let now = Instant::now();
+        let n_submit = r.usize("submit-tick count")?;
+        for _ in 0..n_submit {
+            let id = r.u64("submit-tick id")?;
+            let tick = r.u64("submit-tick tick")?;
+            self.submit_ticks.insert(id, tick);
+            self.submit_times.insert(id, now);
+        }
+        let n_waiting = r.usize("waiting count")?;
+        for _ in 0..n_waiting {
+            let req = read_request(r)?;
+            self.batcher.waiting.push_back(req);
+        }
+        // decode slots — corrupt-page casualties are collected and retired
+        // AFTER the metrics books are restored (so their terminal records
+        // land in the restored completion log, not the scaffold's)
+        let mut retired_slots: Vec<Session> = Vec::new();
+        let mut retired_prefills: Vec<Request> = Vec::new();
+        let n_slots = r.usize("slot count")?;
+        if n_slots != self.batcher.slots.len() {
+            return Err(corrupt(format!(
+                "snapshot has {n_slots} decode slots, this server has {}",
+                self.batcher.slots.len()
+            )));
+        }
+        for i in 0..n_slots {
+            if !r.bool("slot occupied")? {
+                continue;
+            }
+            let req = read_request(r)?;
+            let generated = r.vec_i32("session generated")?;
+            let next_token = r.i32("session next_token")?;
+            let parked = r.bool("session parked")?;
+            let parked_streak = r.u32("session parked_streak")?;
+            let method_name = r.str("session method")?;
+            let method = Method::by_name(&method_name).ok_or_else(|| {
+                corrupt(format!("snapshot session method `{method_name}` is unknown"))
+            })?;
+            self.engine.ensure_method(&method).map_err(|e| {
+                corrupt(format!("loading snapshot method `{method_name}`: {e:#}"))
+            })?;
+            let mut cache = self.engine.new_cache_for(&method).map_err(|e| {
+                corrupt(format!("rebuilding cache for `{method_name}`: {e:#}"))
+            })?;
+            let healthy = cache.read_snap(r, &mut resolve_private, &mut resolve_shared)?;
+            let sess = Session {
+                request: req,
+                cache,
+                generated,
+                next_token,
+                phase: Phase::Decoding,
+                t_arrival: now,
+                t_admitted: now,
+                t_first_token: Some(now),
+                t_finish: None,
+                parked,
+                parked_streak,
+            };
+            if healthy {
+                self.batcher.slots[i] = Some(sess);
+            } else {
+                retired_slots.push(sess);
+            }
+        }
+        // in-flight chunked prefills
+        let n_prefills = r.usize("prefill count")?;
+        for _ in 0..n_prefills {
+            let req = read_request(r)?;
+            let method_name = r.str("prefill method")?;
+            let pages_claimed = r.usize("prefill pages_claimed")?;
+            let arrival = r.u64("prefill arrival")?;
+            let method = Method::by_name(&method_name).ok_or_else(|| {
+                corrupt(format!("snapshot prefill method `{method_name}` is unknown"))
+            })?;
+            self.engine.ensure_method(&method).map_err(|e| {
+                corrupt(format!("loading snapshot method `{method_name}`: {e:#}"))
+            })?;
+            let mut cache = self.engine.new_cache_for(&method).map_err(|e| {
+                corrupt(format!("rebuilding cache for `{method_name}`: {e:#}"))
+            })?;
+            let healthy = cache.read_snap(r, &mut resolve_private, &mut resolve_shared)?;
+            let run = PrefillRun::read_snap(r, &self.engine.meta.model)?;
+            if healthy {
+                self.prefills.push(PendingPrefill {
+                    req,
+                    method,
+                    cp: ChunkedPrefill { cache, run },
+                    pages_claimed,
+                    arrival,
+                });
+            } else {
+                retired_prefills.push(req);
+            }
+        }
+        let n_retries = r.usize("retry count")?;
+        for _ in 0..n_retries {
+            let req = read_request(r)?;
+            let ready_tick = r.u64("retry ready_tick")?;
+            self.retries.push(RetryTicket { req, ready_tick });
+        }
+        let n_rs = r.usize("retry-state count")?;
+        for _ in 0..n_rs {
+            let id = r.u64("retry-state id")?;
+            let attempt = r.u32("retry-state attempt")?;
+            let min_rank = r.usize("retry-state min_rank")?;
+            self.retry_state.insert(id, RetryState { attempt, min_rank });
+        }
+        let n_fin = r.usize("terminal count")?;
+        for _ in 0..n_fin {
+            let id = r.u64("terminal id")?;
+            let t = match r.u8("terminal tag")? {
+                0 => Terminal::Pending {
+                    seq: r.u64("terminal seq")?,
+                    reason: reason_from_tag(r.u8("terminal reason")?)?,
+                    n_tokens: r.usize("terminal n_tokens")?,
+                },
+                1 => Terminal::Retired {
+                    reason: reason_from_tag(r.u8("terminal reason")?)?,
+                    n_tokens: r.usize("terminal n_tokens")?,
+                },
+                t => return Err(corrupt(format!("unknown terminal tag {t}"))),
+            };
+            self.finished.insert(id, t);
+        }
+        // prefix index: entries with a quarantined page drop per-entry
+        // (collision-miss semantics) inside read_snap
+        if r.bool("prefix index present")? {
+            match self.engine.prefix_index() {
+                Some(ix) => {
+                    ix.borrow_mut().read_snap(r, &mut resolve_shared)?;
+                }
+                None => {
+                    // this config disables sharing: parse the section into
+                    // a throwaway index and let its pages free on drop
+                    let mut tmp = PrefixIndex::new(0, self.pool.page_deploy_bytes());
+                    tmp.read_snap(r, &mut resolve_shared)?;
+                }
+            }
+        }
+        self.events.read_snap(r)?;
+        self.metrics.read_snap(r)?;
+        // leftover leases (pages whose every owner was corrupt-retired, or
+        // orphaned by a dropped index entry) return to the pool here
+        drop(resolve_private);
+        drop(resolve_shared);
+        drop(shared);
+        drop(pages);
+        // the books above are the snapshot's; everything from here on is
+        // this process's own history
+        self.metrics.restores += 1;
+        self.metrics.pages_quarantined += quarantined;
+        self.metrics.start();
+        for mut sess in retired_slots {
+            self.metrics.restore_retired += 1;
+            self.metrics.note_tenant_error(sess.request.tenant);
+            sess.finish(FinishReason::Error);
+            self.finalize(sess);
+        }
+        for req in retired_prefills {
+            self.metrics.restore_retired += 1;
+            self.metrics.note_tenant_error(req.tenant);
+            self.finalize_unadmitted(req.id, req.prompt.len(), req.tenant, FinishReason::Error);
+        }
+        Ok(())
+    }
+
+    /// Live integrity scrub: re-verify every live page against its sealed
+    /// checksum (the same check restore runs), quarantine mismatches, and
+    /// degrade per-owner — a slot or in-flight prefill holding a corrupt
+    /// page retires as [`FinishReason::Error`]; prefix entries referencing
+    /// one are dropped collision-miss-style. Returns the number of pages
+    /// quarantined (0 = clean bill).
+    pub fn scrub(&mut self) -> usize {
+        let pool = self.pool.clone();
+        let mut bad: Vec<usize> = Vec::new();
+        self.walk_pages(&mut |p, _| {
+            if !pool.verify_page(p) {
+                bad.push(p.id());
+            }
+        });
+        bad.sort_unstable();
+        bad.dedup();
+        if bad.is_empty() {
+            return 0;
+        }
+        // condemn first, so every release below discards the storage
+        for &id in &bad {
+            self.pool.quarantine_page(id);
+        }
+        let holds_bad = |cache: &crate::kvcache::cache::RequestCache| {
+            let mut hit = false;
+            cache.for_each_page(&mut |p, _| hit |= bad.binary_search(&p.id()).is_ok());
+            hit
+        };
+        let victims: Vec<usize> = self
+            .batcher
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.as_ref().is_some_and(|s| holds_bad(&s.cache)))
+            .map(|(i, _)| i)
+            .collect();
+        for i in victims {
+            let mut sess = self.batcher.slots[i].take().unwrap();
+            self.metrics.restore_retired += 1;
+            self.metrics.note_tenant_error(sess.request.tenant);
+            sess.finish(FinishReason::Error);
+            self.finalize(sess);
+        }
+        let mut i = 0;
+        while i < self.prefills.len() {
+            if holds_bad(&self.prefills[i].cp.cache) {
+                let p = self.prefills.remove(i);
+                self.metrics.restore_retired += 1;
+                self.metrics.note_tenant_error(p.req.tenant);
+                self.finalize_unadmitted(
+                    p.req.id,
+                    p.req.prompt.len(),
+                    p.req.tenant,
+                    FinishReason::Error,
+                );
+            } else {
+                i += 1;
+            }
+        }
+        if let Some(ix) = self.engine.prefix_index() {
+            let mut ix = ix.borrow_mut();
+            for &id in &bad {
+                ix.shed_page(id);
+            }
+        }
+        self.metrics.pages_quarantined += bad.len() as u64;
+        bad.len()
+    }
+
+    /// Geometry prologue: everything the snapshot's page tables and run
+    /// scratch implicitly assume about the engine. Checked field-by-field
+    /// on restore so a mismatch names the offending value.
+    fn write_geometry<W: std::io::Write>(&self, w: &mut SnapWriter<W>) -> SnapResult<()> {
+        for (_, v) in self.geometry_fields() {
+            w.usize(v)?;
+        }
+        w.opt_u64(self.pool.max_pages().map(|n| n as u64))
+    }
+
+    fn check_geometry<R: std::io::Read>(&self, r: &mut SnapReader<R>) -> SnapResult<()> {
+        for (name, cur) in self.geometry_fields() {
+            let snap = r.usize(name)?;
+            if snap != cur {
+                return Err(corrupt(format!(
+                    "geometry mismatch: snapshot `{name}` = {snap}, this \
+                     server has {cur}"
+                )));
+            }
+        }
+        let snap_max = r.opt_u64("pool max_pages")?;
+        let cur_max = self.pool.max_pages().map(|n| n as u64);
+        if snap_max != cur_max {
+            return Err(corrupt(format!(
+                "geometry mismatch: snapshot `pool max_pages` = {snap_max:?}, \
+                 this server has {cur_max:?}"
+            )));
+        }
+        Ok(())
+    }
+
+    fn geometry_fields(&self) -> [(&'static str, usize); 12] {
+        let m = &self.engine.meta.model;
+        let c = &self.engine.meta.cache;
+        let (f_len, b_len) = self.pool.arena_dims();
+        [
+            ("n_layers", m.n_layers),
+            ("n_kv_heads", m.n_kv_heads),
+            ("d_head", m.d_head),
+            ("d_model", m.d_model),
+            ("vocab", m.vocab),
+            ("group", c.group),
+            ("capacity", c.capacity),
+            ("residual", c.residual),
+            ("decode_batch", c.decode_batch),
+            ("r_limit", self.engine.r_limit),
+            ("page f_len", f_len),
+            ("page b_len", b_len),
+        ]
     }
 
     /// Has a request with `deadline_ticks = d` submitted at `t0` expired?
@@ -1405,6 +2047,64 @@ impl Server {
         let seq = self.metrics.completed.push(c);
         self.finished.insert(id, Terminal::Pending { seq, reason, n_tokens: 0 });
     }
+}
+
+/// Map a live page id to its snapshot serial. Every id reachable from
+/// `walk_pages` was assigned a serial in the dedup pass, so a miss here is
+/// a walk-order bug, not a data condition.
+fn serial_for(serials: &HashMap<usize, u32>, id: usize) -> u32 {
+    *serials
+        .get(&id)
+        .expect("page reachable from walk_pages but absent from serial map")
+}
+
+fn write_request<W: std::io::Write>(w: &mut SnapWriter<W>, req: &Request) -> SnapResult<()> {
+    w.u64(req.id)?;
+    w.slice_i32(&req.prompt)?;
+    w.usize(req.max_new_tokens)?;
+    match req.sampling {
+        Sampling::Greedy => w.u8(0)?,
+        Sampling::TopP { temperature, top_p } => {
+            w.u8(1)?;
+            w.f32(temperature)?;
+            w.f32(top_p)?;
+        }
+    }
+    match &req.method {
+        Some(spec) => {
+            w.bool(true)?;
+            w.str(&spec.to_string())?;
+        }
+        None => w.bool(false)?,
+    }
+    w.u32(req.tenant)?;
+    w.opt_u64(req.deadline_ticks)
+}
+
+fn read_request<R: std::io::Read>(r: &mut SnapReader<R>) -> SnapResult<Request> {
+    let id = r.u64("request id")?;
+    let prompt = r.vec_i32("request prompt")?;
+    let max_new_tokens = r.usize("request max_new_tokens")?;
+    let sampling = match r.u8("request sampling tag")? {
+        0 => Sampling::Greedy,
+        1 => Sampling::TopP {
+            temperature: r.f32("request temperature")?,
+            top_p: r.f32("request top_p")?,
+        },
+        t => return Err(corrupt(format!("unknown request sampling tag {t}"))),
+    };
+    let method = if r.bool("request has_method")? {
+        let s = r.str("request method spec")?;
+        Some(
+            s.parse::<MethodSpec>()
+                .map_err(|_| corrupt(format!("unknown method spec `{s}` in snapshot request")))?,
+        )
+    } else {
+        None
+    };
+    let tenant = r.u32("request tenant")?;
+    let deadline_ticks = r.opt_u64("request deadline_ticks")?;
+    Ok(Request { id, prompt, max_new_tokens, sampling, method, tenant, deadline_ticks })
 }
 
 fn make_completed(sess: &Session) -> Completed {

@@ -27,7 +27,7 @@ use crate::coordinator::session::{FinishReason, Request};
 use crate::model::sampler::Sampling;
 use crate::quant::methods::MethodSpec;
 use crate::quant::policy::PrecisionPolicy;
-use crate::util::faults::FaultPlan;
+use crate::util::faults::{FaultPlan, N_FAULT_SITES};
 use crate::util::json::{num, obj, s, Json};
 use crate::util::rng::{stream, Pcg32};
 
@@ -278,8 +278,9 @@ pub struct TrafficReport {
     /// Pool pages still leased but pinned by nobody after every session
     /// reached a terminal state (must be 0).
     pub leaked_pages: u64,
-    /// Per-site injected-fault counts (lease, prefill, decode, prefix).
-    pub faults_injected: [u64; 4],
+    /// Per-site injected-fault counts (lease, prefill, decode, prefix,
+    /// snapshot-write, snapshot-corrupt).
+    pub faults_injected: [u64; N_FAULT_SITES],
     /// Failed prefill runs that re-queued for a backoff retry.
     pub prefill_retries: u64,
     /// Requests that completed cleanly after at least one failed attempt.
@@ -297,194 +298,361 @@ pub struct TrafficReport {
     pub summary: String,
 }
 
-/// Drive `cfg.sessions` seeded sessions through a real `Server` built on
-/// `engine`, and report outcomes + per-tenant SLOs. Deterministic modulo
-/// wall-clock ms fields: the fingerprint covers everything else.
-pub fn run(engine: Engine, cfg: &TrafficConfig) -> Result<TrafficReport> {
+/// The `ServerConfig` a traffic run derives from its workload config —
+/// shared by [`run`] and [`run_with_kill`] so an interrupted-and-restored
+/// run serves under exactly the same regime as an uninterrupted one.
+fn server_cfg_for(cfg: &TrafficConfig) -> ServerConfig {
     let chaos = cfg.chaos > 0.0;
-    let server_cfg = ServerConfig {
+    ServerConfig {
         memory_budget_bytes: cfg.memory_budget_bytes,
         max_prefills_per_cycle: cfg.max_prefills_per_cycle,
         seed: cfg.seed,
         policy: cfg.policy.clone(),
         // the chaos fault plan shares the workload seed: one seed fixes
-        // the schedule, the prompts, AND the fault sequence
-        faults: chaos.then(|| FaultPlan::uniform(cfg.seed, cfg.chaos)),
+        // the schedule, the prompts, AND the fault sequence. Serving sites
+        // only — snapshot torn-write/bit-flip faults are exercised by the
+        // dedicated snapshot tests, not the soak.
+        faults: chaos.then(|| FaultPlan::serving_uniform(cfg.seed, cfg.chaos)),
         workers: cfg.workers.max(1),
         ..ServerConfig::default()
-    };
-    let mut server = Server::new(engine, server_cfg);
-    let mut invariant_violations = 0u64;
-    let reqs = gen_requests(cfg);
-    let schedule = build_schedule(cfg);
-    let (closed, concurrency, think_ticks) = match cfg.arrival {
-        Arrival::ClosedLoop { concurrency, think_ticks } => (true, concurrency.max(1), think_ticks),
-        _ => (false, 0, 0),
-    };
+    }
+}
 
-    let mut next = 0usize; // next unsubmitted request index
-    let mut due: Vec<usize> = Vec::new(); // closed-loop resubmit ticks
-    let mut in_flight = 0usize;
-    let mut max_in_flight = 0usize;
-    let mut finished = 0usize;
-    let mut fp = Fnv::new();
-    let mut tick = 0usize;
+/// Harness-side run state: everything `run`'s loop tracks OUTSIDE the
+/// server. Factored out so [`run_with_kill`] can drive the identical loop
+/// while swapping the server underneath it at the kill tick — the driver
+/// deliberately survives the "crash" (it plays the role of the clients,
+/// who exist in other processes and notice nothing).
+struct Driver<'a> {
+    cfg: &'a TrafficConfig,
+    chaos: bool,
+    reqs: Vec<Request>,
+    schedule: Vec<usize>,
+    closed: bool,
+    concurrency: usize,
+    think_ticks: usize,
+    next: usize,        // next unsubmitted request index
+    due: Vec<usize>,    // closed-loop resubmit ticks
+    in_flight: usize,
+    max_in_flight: usize,
+    finished: usize,
+    fp: Fnv,
+    tick: usize,
+    invariant_violations: u64,
+}
 
-    loop {
+impl<'a> Driver<'a> {
+    fn new(cfg: &'a TrafficConfig) -> Driver<'a> {
+        let (closed, concurrency, think_ticks) = match cfg.arrival {
+            Arrival::ClosedLoop { concurrency, think_ticks } => {
+                (true, concurrency.max(1), think_ticks)
+            }
+            _ => (false, 0, 0),
+        };
+        Driver {
+            cfg,
+            chaos: cfg.chaos > 0.0,
+            reqs: gen_requests(cfg),
+            schedule: build_schedule(cfg),
+            closed,
+            concurrency,
+            think_ticks,
+            next: 0,
+            due: Vec::new(),
+            in_flight: 0,
+            max_in_flight: 0,
+            finished: 0,
+            fp: Fnv::new(),
+            tick: 0,
+            invariant_violations: 0,
+        }
+    }
+
+    /// One loop iteration: submit what's due, advance the server a tick,
+    /// fold outcomes. Returns `false` once every session is terminal (or
+    /// the tick ceiling is hit).
+    fn step(&mut self, server: &mut Server) -> Result<bool> {
+        let cfg = self.cfg;
         // -- submissions due this tick --------------------------------
-        if closed {
-            if tick == 0 {
-                for _ in 0..concurrency.min(cfg.sessions) {
-                    server.submit(reqs[next].clone())?;
-                    next += 1;
-                    in_flight += 1;
+        if self.closed {
+            if self.tick == 0 {
+                for _ in 0..self.concurrency.min(cfg.sessions) {
+                    server.submit(self.reqs[self.next].clone())?;
+                    self.next += 1;
+                    self.in_flight += 1;
                 }
             }
             let mut i = 0;
-            while i < due.len() {
-                if due[i] <= tick && next < cfg.sessions {
-                    due.swap_remove(i);
-                    server.submit(reqs[next].clone())?;
-                    next += 1;
-                    in_flight += 1;
+            while i < self.due.len() {
+                if self.due[i] <= self.tick && self.next < cfg.sessions {
+                    self.due.swap_remove(i);
+                    server.submit(self.reqs[self.next].clone())?;
+                    self.next += 1;
+                    self.in_flight += 1;
                 } else {
                     i += 1;
                 }
             }
         } else {
-            while next < cfg.sessions && schedule[next] <= tick {
-                server.submit(reqs[next].clone())?;
-                next += 1;
-                in_flight += 1;
+            while self.next < cfg.sessions && self.schedule[self.next] <= self.tick {
+                server.submit(self.reqs[self.next].clone())?;
+                self.next += 1;
+                self.in_flight += 1;
             }
         }
-        max_in_flight = max_in_flight.max(in_flight);
+        self.max_in_flight = self.max_in_flight.max(self.in_flight);
 
-        if next >= cfg.sessions && in_flight == 0 && !server.has_work() {
-            break;
+        if self.next >= cfg.sessions && self.in_flight == 0 && !server.has_work() {
+            return Ok(false);
         }
 
         server.tick()?;
-        if chaos {
+        if self.chaos {
             // the soak's core claim: the books balance after EVERY tick,
             // not just at drain
             if let Err(e) = server.check_invariants() {
-                if invariant_violations == 0 {
-                    eprintln!("mixkvq: chaos tick {tick}: {e:#}");
+                if self.invariant_violations == 0 {
+                    eprintln!("mixkvq: chaos tick {}: {e:#}", self.tick);
                 }
-                invariant_violations += 1;
+                self.invariant_violations += 1;
             }
         }
 
         // -- fold outcomes; feed the closed loop ----------------------
         for e in server.drain_events() {
             if let Event::Finished { id, reason, tokens } = e {
-                finished += 1;
-                in_flight = in_flight.saturating_sub(1);
-                fp.fold(id);
-                fp.fold(reason_code(reason));
-                fp.fold(tokens as u64);
+                self.finished += 1;
+                self.in_flight = self.in_flight.saturating_sub(1);
+                self.fp.fold(id);
+                self.fp.fold(reason_code(reason));
+                self.fp.fold(tokens as u64);
                 if let RequestStatus::Finished { tokens: toks, .. } = server.poll(id) {
                     for t in toks {
-                        fp.fold(t as u64);
+                        self.fp.fold(t as u64);
                     }
                 }
-                if closed && next + due.len() < cfg.sessions {
-                    due.push(tick + think_ticks.max(1));
+                if self.closed && self.next + self.due.len() < cfg.sessions {
+                    self.due.push(self.tick + self.think_ticks.max(1));
                 }
             }
         }
 
-        tick += 1;
-        if tick >= cfg.max_ticks {
+        self.tick += 1;
+        Ok(self.tick < cfg.max_ticks)
+    }
+
+    /// Post-drain tail: tenant folding, the page-leak audit, and report
+    /// assembly — identical for interrupted and uninterrupted runs.
+    fn report(mut self, mut server: Server) -> TrafficReport {
+        let cfg = self.cfg;
+        // Tenant SLO counters are deterministic (no wall-clock input), so
+        // they join the fingerprint: same-seed runs must agree on who got
+        // served, who got parked, and who got preempted — not just on
+        // token streams.
+        let m = &server.metrics;
+        let mut tenants = Vec::new();
+        for t in m.tenants() {
+            self.fp.fold(t.tenant as u64);
+            self.fp.fold(t.completed);
+            self.fp.fold(t.unserved);
+            let parks = count_for(&m.tenant_parks, t.tenant);
+            let preemptions = count_for(&m.tenant_preemptions, t.tenant);
+            self.fp.fold(parks);
+            self.fp.fold(preemptions);
+            tenants.push(TenantSummary {
+                tenant: t.tenant,
+                served: t.completed,
+                unserved: t.unserved,
+                p50_ttft_ms: t.ttft.percentile(50.0),
+                p99_ttft_ms: t.ttft.percentile(99.0),
+                p50_latency_ms: t.latency.percentile(50.0),
+                p99_latency_ms: t.latency.percentile(99.0),
+                p99_queue_ms: t.queue_wait.percentile(99.0),
+                parks,
+                preemptions,
+            });
+        }
+        self.fp.fold(m.policy_degradations);
+
+        // Post-drain page audit: every session is terminal, so the only
+        // pages the pool may still lease are the ones the prefix index pins.
+        let pinned = server
+            .engine
+            .prefix_index()
+            .map(|ix| ix.borrow().pages_pinned())
+            .unwrap_or(0);
+        let leaked_before_clear = server.pool.leased().saturating_sub(pinned) as u64;
+        // Then release those pins too: between the two same-seed runs the
+        // pool must sit at EXACTLY zero leases — a pin the index forgot to
+        // count (or a clear that fails to return pages) is a leak, not
+        // bookkeeping.
+        if let Some(ix) = server.engine.prefix_index() {
+            ix.borrow_mut().clear();
+        }
+        let leaked_pages = leaked_before_clear.max(server.pool.leased() as u64);
+        let m = &server.metrics;
+        let errors = m.decode_errors + m.retries_exhausted + m.internal_errors;
+        let deadline_retirements = m.deadline_exceeded + m.deadline_shed;
+        if self.chaos {
+            // recovery/deadline outcomes are seeded-deterministic too: fold
+            // them so a same-seed pair must agree on the whole failure story
+            for x in m.faults_injected {
+                self.fp.fold(x);
+            }
+            self.fp.fold(m.prefill_retries);
+            self.fp.fold(m.fault_recoveries);
+            self.fp.fold(errors);
+            self.fp.fold(deadline_retirements);
+            self.fp.fold(self.invariant_violations);
+            self.fp.fold(leaked_pages);
+        }
+
+        TrafficReport {
+            seed: cfg.seed,
+            sessions: cfg.sessions,
+            completed: self.finished,
+            rejected: m.rejected,
+            ticks: self.tick,
+            max_in_flight: self.max_in_flight,
+            max_concurrent_decode: m.max_concurrent,
+            policy_degradations: m.policy_degradations,
+            p50_ttft_ms: m.completed.ttft_percentile(50.0),
+            p99_ttft_ms: m.completed.ttft_percentile(99.0),
+            p50_latency_ms: m.completed.latency_percentile(50.0),
+            p99_latency_ms: m.completed.latency_percentile(99.0),
+            tenants,
+            chaos_rate: cfg.chaos,
+            invariant_violations: self.invariant_violations,
+            leaked_pages,
+            faults_injected: m.faults_injected,
+            prefill_retries: m.prefill_retries,
+            fault_recoveries: m.fault_recoveries,
+            errors,
+            deadline_retirements,
+            fingerprint: self.fp.0,
+            summary: m.summary(),
+        }
+    }
+}
+
+/// Drive `cfg.sessions` seeded sessions through a real `Server` built on
+/// `engine`, and report outcomes + per-tenant SLOs. Deterministic modulo
+/// wall-clock ms fields: the fingerprint covers everything else.
+pub fn run(engine: Engine, cfg: &TrafficConfig) -> Result<TrafficReport> {
+    let mut server = Server::new(engine, server_cfg_for(cfg));
+    let mut d = Driver::new(cfg);
+    while d.step(&mut server)? {}
+    Ok(d.report(server))
+}
+
+/// Wall-clock figures from one kill-and-restore cycle — the raw material
+/// of `BENCH_restore.json`'s latency gate.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RestoreStats {
+    /// Serialized snapshot size.
+    pub snapshot_bytes: u64,
+    /// Wall time of `Server::snapshot` into a memory buffer.
+    pub snapshot_ms: f64,
+    /// Wall time of engine rebuild + `Server::restore` + the post-restore
+    /// invariant check.
+    pub restore_ms: f64,
+    /// The LONGEST single driver step observed after the restore — the
+    /// yardstick the gate compares `restore_ms` against (restore must cost
+    /// no more than ~2 ticks of service).
+    pub tick_ms: f64,
+}
+
+/// [`run`], except the server is snapshotted at the `kill_at_tick`
+/// boundary, torn down entirely (engine included), and rebuilt from the
+/// snapshot via `mk_engine` — then the run continues to drain. The driver
+/// persists across the kill on purpose: it stands in for the client
+/// population, which lives in other processes and must notice nothing.
+///
+/// The returned report must be byte-identical (fingerprint and all folded
+/// counters) to an uninterrupted [`run`] with the same `cfg`.
+pub fn run_with_kill(
+    mk_engine: &dyn Fn() -> Result<Engine>,
+    cfg: &TrafficConfig,
+    kill_at_tick: u64,
+) -> Result<(TrafficReport, RestoreStats)> {
+    let server_cfg = server_cfg_for(cfg);
+    let mut server = Server::new(mk_engine()?, server_cfg.clone());
+    let mut d = Driver::new(cfg);
+    let mut stats = RestoreStats::default();
+    let mut killed = false;
+    loop {
+        if !killed && d.tick as u64 >= kill_at_tick {
+            killed = true;
+            let t0 = std::time::Instant::now();
+            let mut buf: Vec<u8> = Vec::new();
+            stats.snapshot_bytes = server
+                .snapshot(&mut buf)
+                .map_err(|e| anyhow::anyhow!("snapshot at tick {}: {e}", d.tick))?;
+            stats.snapshot_ms = t0.elapsed().as_secs_f64() * 1e3;
+            // the "crash": the server AND its engine (weights, prefix
+            // index, method caches) drop; nothing survives but the bytes
+            drop(server);
+            let t1 = std::time::Instant::now();
+            server = Server::restore(mk_engine()?, server_cfg.clone(), buf.as_slice())
+                .map_err(|e| anyhow::anyhow!("restore at tick {}: {e}", d.tick))?;
+            server.check_invariants()?;
+            stats.restore_ms = t1.elapsed().as_secs_f64() * 1e3;
+        }
+        let t0 = std::time::Instant::now();
+        let more = d.step(&mut server)?;
+        if killed {
+            stats.tick_ms = stats.tick_ms.max(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        if !more {
             break;
         }
     }
+    Ok((d.report(server), stats))
+}
 
-    // Tenant SLO counters are deterministic (no wall-clock input), so they
-    // join the fingerprint: same-seed runs must agree on who got served,
-    // who got parked, and who got preempted — not just on token streams.
-    let m = &server.metrics;
-    let mut tenants = Vec::new();
-    for t in m.tenants() {
-        fp.fold(t.tenant as u64);
-        fp.fold(t.completed);
-        fp.fold(t.unserved);
-        let parks = count_for(&m.tenant_parks, t.tenant);
-        let preemptions = count_for(&m.tenant_preemptions, t.tenant);
-        fp.fold(parks);
-        fp.fold(preemptions);
-        tenants.push(TenantSummary {
-            tenant: t.tenant,
-            served: t.completed,
-            unserved: t.unserved,
-            p50_ttft_ms: t.ttft.percentile(50.0),
-            p99_ttft_ms: t.ttft.percentile(99.0),
-            p50_latency_ms: t.latency.percentile(50.0),
-            p99_latency_ms: t.latency.percentile(99.0),
-            p99_queue_ms: t.queue_wait.percentile(99.0),
-            parks,
-            preemptions,
-        });
-    }
-    fp.fold(m.policy_degradations);
+/// One `--kill-at-tick` trial for the restore report.
+#[derive(Clone, Debug)]
+pub struct RestoreTrial {
+    pub workers: usize,
+    pub stats: RestoreStats,
+    /// Uninterrupted same-seed fingerprint.
+    pub fingerprint: u64,
+    /// Fingerprint of the killed-and-restored run.
+    pub fingerprint_restored: u64,
+    /// `fingerprint != fingerprint_restored` — any drift fails the gate.
+    pub drift: bool,
+}
 
-    // Post-drain page audit: every session is terminal, so the only pages
-    // the pool may still lease are the ones the prefix index pins.
-    let pinned = server
-        .engine
-        .prefix_index()
-        .map(|ix| ix.borrow().pages_pinned())
-        .unwrap_or(0);
-    let leaked_before_clear = server.pool.leased().saturating_sub(pinned) as u64;
-    // Then release those pins too: between the two same-seed runs the pool
-    // must sit at EXACTLY zero leases — a pin the index forgot to count
-    // (or a clear that fails to return pages) is a leak, not bookkeeping.
-    if let Some(ix) = server.engine.prefix_index() {
-        ix.borrow_mut().clear();
-    }
-    let leaked_pages = leaked_before_clear.max(server.pool.leased() as u64);
-    let errors = m.decode_errors + m.retries_exhausted + m.internal_errors;
-    let deadline_retirements = m.deadline_exceeded + m.deadline_shed;
-    if chaos {
-        // recovery/deadline outcomes are seeded-deterministic too: fold
-        // them so a same-seed pair must agree on the whole failure story
-        for x in m.faults_injected {
-            fp.fold(x);
-        }
-        fp.fold(m.prefill_retries);
-        fp.fold(m.fault_recoveries);
-        fp.fold(errors);
-        fp.fold(deadline_retirements);
-        fp.fold(invariant_violations);
-        fp.fold(leaked_pages);
-    }
-
-    Ok(TrafficReport {
-        seed: cfg.seed,
-        sessions: cfg.sessions,
-        completed: finished,
-        rejected: m.rejected,
-        ticks: tick,
-        max_in_flight,
-        max_concurrent_decode: m.max_concurrent,
-        policy_degradations: m.policy_degradations,
-        p50_ttft_ms: m.completed.ttft_percentile(50.0),
-        p99_ttft_ms: m.completed.ttft_percentile(99.0),
-        p50_latency_ms: m.completed.latency_percentile(50.0),
-        p99_latency_ms: m.completed.latency_percentile(99.0),
-        tenants,
-        chaos_rate: cfg.chaos,
-        invariant_violations,
-        leaked_pages,
-        faults_injected: m.faults_injected,
-        prefill_retries: m.prefill_retries,
-        fault_recoveries: m.fault_recoveries,
-        errors,
-        deadline_retirements,
-        fingerprint: fp.0,
-        summary: m.summary(),
-    })
+/// `BENCH_restore.json` payload (schema `restore-v1`): one kill-and-restore
+/// trial per worker width, each judged against its uninterrupted twin.
+pub fn restore_report_json(sessions: usize, trials: &[RestoreTrial]) -> Json {
+    let runs: Vec<Json> = trials
+        .iter()
+        .map(|t| {
+            obj(vec![
+                ("workers", num(t.workers as f64)),
+                ("snapshot_bytes", num(t.stats.snapshot_bytes as f64)),
+                ("snapshot_ms", num(t.stats.snapshot_ms)),
+                ("restore_ms", num(t.stats.restore_ms)),
+                ("tick_ms", num(t.stats.tick_ms)),
+                ("fingerprint", s(&format!("{:016x}", t.fingerprint))),
+                (
+                    "fingerprint_restored",
+                    s(&format!("{:016x}", t.fingerprint_restored)),
+                ),
+                ("drift", Json::Bool(t.drift)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("schema", s("restore-v1")),
+        ("sessions", num(sessions as f64)),
+        ("runs", Json::Arr(runs)),
+        (
+            "deterministic",
+            Json::Bool(trials.iter().all(|t| !t.drift)),
+        ),
+    ])
 }
 
 /// Same-seed agreement: fingerprints (which fold ids, reasons, token
@@ -707,7 +875,7 @@ mod tests {
         let cfg = small_cfg();
         let r = run(engine(), &cfg).unwrap();
         assert_eq!(r.chaos_rate, 0.0);
-        assert_eq!(r.faults_injected, [0; 4]);
+        assert_eq!(r.faults_injected, [0; N_FAULT_SITES]);
         assert_eq!(r.errors, 0);
         assert_eq!((r.prefill_retries, r.fault_recoveries), (0, 0));
     }
@@ -720,6 +888,52 @@ mod tests {
         // every session still reaches a terminal record
         assert_eq!(r.completed, cfg.sessions);
         assert_eq!(r.deadline_retirements as usize, cfg.sessions, "{}", r.summary);
+    }
+
+    #[test]
+    fn kill_and_restore_matches_uninterrupted_run() {
+        let cfg = small_cfg();
+        let clean = run(engine(), &cfg).unwrap();
+        let (restored, stats) =
+            run_with_kill(&|| Ok(engine()), &cfg, 3).unwrap();
+        assert!(
+            deterministic_pair(&clean, &restored),
+            "restore drifted: {:016x} vs {:016x}\n{}",
+            clean.fingerprint,
+            restored.fingerprint,
+            restored.summary
+        );
+        assert!(stats.snapshot_bytes > 0, "kill tick never reached");
+        let j = restore_report_json(
+            cfg.sessions,
+            &[RestoreTrial {
+                workers: cfg.workers,
+                stats,
+                fingerprint: clean.fingerprint,
+                fingerprint_restored: restored.fingerprint,
+                drift: clean.fingerprint != restored.fingerprint,
+            }],
+        );
+        assert_eq!(j.get("schema").unwrap(), &Json::Str("restore-v1".into()));
+        assert_eq!(j.get("deterministic").unwrap(), &Json::Bool(true));
+    }
+
+    #[test]
+    fn kill_and_restore_under_chaos_matches_uninterrupted_run() {
+        // the fault schedule is keyed, not positional: tearing the server
+        // down mid-soak and restoring must replay the identical failure
+        // story (counters fold into the fingerprint under chaos)
+        let cfg = TrafficConfig { chaos: 0.1, ..small_cfg() };
+        let clean = run(engine(), &cfg).unwrap();
+        let (restored, _) = run_with_kill(&|| Ok(engine()), &cfg, 5).unwrap();
+        assert!(
+            deterministic_pair(&clean, &restored),
+            "chaos restore drifted: {:016x} vs {:016x}",
+            clean.fingerprint,
+            restored.fingerprint
+        );
+        assert_eq!(clean.faults_injected, restored.faults_injected);
+        assert_eq!((clean.leaked_pages, restored.leaked_pages), (0, 0));
     }
 
     #[test]

@@ -61,7 +61,7 @@ use crate::quant::rotation;
 use crate::quant::salience::QueryStats;
 use crate::quant::window::{self, TierSpec};
 
-use super::pool::{KvPool, PageLayout, PageRef, PrefixEntry, PrefixIndex, SharedLease};
+use super::pool::{KvPool, PageLayout, PageLease, PageRef, PrefixEntry, PrefixIndex, SharedLease};
 use super::residual::ResidualBuffer;
 
 /// Tier region selector for page-streamed gathers (`copy_field_f32` /
@@ -225,6 +225,19 @@ impl HeadState {
             }
         }
         Ok(())
+    }
+
+    /// Record integrity checksums for the pages covering tokens
+    /// `[at, at+t)` — called once a flush has completed BOTH the key and
+    /// value stores for those pages (after which they are never written
+    /// again; see the pool's sharing docs). `KvPool::verify_page` checks
+    /// against these seals on scrub and restore.
+    fn seal_groups(&self, at: usize, t: usize) {
+        let g0 = at / self.group;
+        let gn = t / self.group;
+        for p in &self.pages[g0..g0 + gn] {
+            self.pool.seal_page(p.page());
+        }
     }
 
     /// Write a quantized value window into the pages leased by the
@@ -1148,6 +1161,10 @@ impl RequestCache {
         let gv = g.min(d);
         let vw = window::quantize_value_window(v, t, d, head.spec.v_bits, gv);
         head.store_value_window(&vw, at);
+        // both stores complete — the pages are immutable from here on
+        // (later flushes lease NEW pages), so seal their integrity
+        // checksums for live scrubs and snapshot verification
+        head.seal_groups(at, t);
         Ok(())
     }
 
@@ -1169,6 +1186,152 @@ impl RequestCache {
     /// Importance snapshot for analyses (Fig. 3).
     pub fn importance(&self, l: usize, h: usize) -> Vec<f32> {
         self.heads[l][h].qstats.importance()
+    }
+
+    /// Visit every page this cache references (with its shared flag), in
+    /// deterministic (layer, head, group) order — the snapshot's
+    /// page-numbering pass and the live scrub both walk holders this way.
+    pub fn for_each_page(&self, f: &mut dyn FnMut(&crate::kvcache::pool::Page, bool)) {
+        for row in &self.heads {
+            for head in row {
+                for p in &head.pages {
+                    f(p.page(), p.is_shared());
+                }
+            }
+        }
+    }
+
+    /// Serialize this cache's mutable state (cursors, policy, fault
+    /// ordinals, and per-head plans/|Q| stats/residual rows/page tables).
+    /// Geometry and method identity are NOT written here — the server
+    /// records the method name and `r_limit` alongside and rebuilds the
+    /// scaffold from config, then overlays with
+    /// [`RequestCache::read_snap`]. `serial_of` maps a page's pool
+    /// identity ([`crate::kvcache::pool::Page::id`]) to its snapshot
+    /// serial (the server numbers pages once across all holders).
+    pub fn write_snap<W: std::io::Write>(
+        &self,
+        w: &mut crate::util::snapshot::SnapWriter<W>,
+        serial_of: &mut dyn FnMut(usize) -> u32,
+    ) -> crate::util::snapshot::SnapResult<()> {
+        w.usize(self.qlen)?;
+        w.usize(self.pos)?;
+        w.usize(self.evicted_tokens)?;
+        w.usize(self.shared_prefix_tokens)?;
+        w.u64(self.flush_deferrals)?;
+        w.bool(self.flush_hold)?;
+        match self.policy {
+            crate::kvcache::eviction::CachePolicy::Stop => w.u8(0)?,
+            crate::kvcache::eviction::CachePolicy::SlidingWindow { sink, evict } => {
+                w.u8(1)?;
+                w.usize(sink)?;
+                w.usize(evict)?;
+            }
+        }
+        w.u64(self.fault_key)?;
+        w.u64(self.decode_fault_seq)?;
+        w.u64(self.prefill_fault_seq)?;
+        for row in &self.heads {
+            for head in row {
+                w.bool(head.planned)?;
+                w.slice_i32(&head.idx)?;
+                w.u64(head.lease_seq)?;
+                w.slice_f32(&head.qstats.sum_abs)?;
+                w.f32(head.qstats.count)?;
+                head.res.write_snap(w)?;
+                w.usize(head.pages.len())?;
+                for p in &head.pages {
+                    w.bool(p.is_shared())?;
+                    w.u32(serial_of(p.page().id()))?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Overlay snapshotted state onto this freshly constructed cache (same
+    /// method/geometry as the writer — the server's geometry guard and
+    /// method re-resolution guarantee that). Page serials resolve through
+    /// the caller: `resolve_private` hands over the exclusive lease on a
+    /// reloaded page (each private serial has exactly one owner);
+    /// `resolve_shared` returns one reference to a shared page. Either
+    /// answering `None` — the payload failed its checksum — poisons the
+    /// cache: the record is still consumed (the stream stays aligned) and
+    /// `Ok(false)` tells the caller to retire the owning request instead
+    /// of aborting the load. Structural damage is a hard `Err`.
+    pub fn read_snap<R: std::io::Read>(
+        &mut self,
+        r: &mut crate::util::snapshot::SnapReader<R>,
+        resolve_private: &mut dyn FnMut(u32) -> Option<PageLease>,
+        resolve_shared: &mut dyn FnMut(u32) -> Option<SharedLease>,
+    ) -> crate::util::snapshot::SnapResult<bool> {
+        use crate::util::snapshot::corrupt;
+        self.qlen = r.usize("cache qlen")?;
+        self.pos = r.usize("cache pos")?;
+        self.evicted_tokens = r.usize("cache evicted_tokens")?;
+        self.shared_prefix_tokens = r.usize("cache shared_prefix_tokens")?;
+        self.flush_deferrals = r.u64("cache flush_deferrals")?;
+        self.flush_hold = r.bool("cache flush_hold")?;
+        self.policy = match r.u8("cache policy tag")? {
+            0 => crate::kvcache::eviction::CachePolicy::Stop,
+            1 => {
+                let sink = r.usize("cache policy sink")?;
+                let evict = r.usize("cache policy evict")?;
+                crate::kvcache::eviction::CachePolicy::SlidingWindow { sink, evict }
+            }
+            t => return Err(corrupt(format!("cache policy tag {t} (want 0 or 1)"))),
+        };
+        let fault_key = r.u64("cache fault_key")?;
+        // re-derive every head's fault_ctx from the key FIRST; the ordinals
+        // read below then overwrite the zeroed counters
+        self.set_fault_key(fault_key);
+        self.decode_fault_seq = r.u64("cache decode_fault_seq")?;
+        self.prefill_fault_seq = r.u64("cache prefill_fault_seq")?;
+        let mut healthy = true;
+        for row in self.heads.iter_mut() {
+            for head in row.iter_mut() {
+                head.planned = r.bool("head planned")?;
+                let idx = r.vec_i32("head plan")?;
+                if idx.len() != head.d {
+                    return Err(corrupt(format!(
+                        "head plan has {} channels (geometry says {})",
+                        idx.len(),
+                        head.d
+                    )));
+                }
+                head.idx = idx;
+                head.lease_seq = r.u64("head lease_seq")?;
+                let sum_abs = r.vec_f32("head qstat sums")?;
+                if sum_abs.len() != head.qstats.sum_abs.len() {
+                    return Err(corrupt(format!(
+                        "head qstats have {} channels (geometry says {})",
+                        sum_abs.len(),
+                        head.qstats.sum_abs.len()
+                    )));
+                }
+                head.qstats.sum_abs = sum_abs;
+                head.qstats.count = r.f32("head qstat count")?;
+                head.res.read_snap(r)?;
+                let n_pages = r.len("head page count")?;
+                head.pages.clear();
+                for _ in 0..n_pages {
+                    let shared = r.bool("head page shared flag")?;
+                    let serial = r.u32("head page serial")?;
+                    if shared {
+                        match resolve_shared(serial) {
+                            Some(s) => head.pages.push(PageRef::Shared(s)),
+                            None => healthy = false,
+                        }
+                    } else {
+                        match resolve_private(serial) {
+                            Some(l) => head.pages.push(PageRef::Private(l)),
+                            None => healthy = false,
+                        }
+                    }
+                }
+            }
+        }
+        Ok(healthy)
     }
 }
 

@@ -69,7 +69,7 @@
 //! counter counts every shared page exactly once, which is what makes the
 //! scheduler's occupancy admission charge shared pages once too.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::ops::Range;
 use std::sync::{Arc, Mutex, MutexGuard};
 
@@ -78,6 +78,7 @@ use anyhow::{bail, Result};
 use crate::quant::packing;
 use crate::quant::window::TierSpec;
 use crate::util::faults::{FaultInjector, FaultSite};
+use crate::util::snapshot::{corrupt, SnapReader, SnapResult, SnapWriter};
 
 /// Pages `tokens` group-aligned tokens occupy across `n_layers ×
 /// n_kv_heads` heads — one page per quantization group per head. The
@@ -96,6 +97,24 @@ pub fn pages_for_tokens(tokens: usize, group: usize, n_layers: usize, n_kv_heads
 pub struct Page {
     pub f: Vec<f32>,
     pub b: Vec<u8>,
+}
+
+impl Page {
+    /// Stable identity of this page's storage: the heap address of its f32
+    /// arena (falling back to the byte arena for f32-less layouts). The
+    /// buffers never reallocate after construction — pages are fixed-size —
+    /// so the id survives moves of the `Page` value itself (into a
+    /// `SharedLease`, through the free list) and is unique among live
+    /// allocations. Keys the pool's per-page checksum registry and the
+    /// quarantine set.
+    #[inline]
+    pub fn id(&self) -> usize {
+        if self.f.is_empty() {
+            self.b.as_ptr() as usize
+        } else {
+            self.f.as_ptr() as usize
+        }
+    }
 }
 
 /// Per-spec offsets into a page's arenas (see the module docs for the
@@ -306,6 +325,17 @@ struct PoolInner {
     /// `lease_keyed` may be denied transiently at the plan's `LeaseDenial`
     /// rate. `None` (the default) costs nothing on the lease path.
     faults: Option<Arc<FaultInjector>>,
+    /// Integrity registry: `Page::id` → FNV-1a checksum, recorded when a
+    /// page's flush seals it (`seal_page`) and removed when the lease
+    /// returns. A sealed page is immutable (see the sharing docs), so a
+    /// later `verify_page` mismatch is bit rot / corruption, not staleness.
+    checksums: HashMap<usize, u64>,
+    /// Page ids condemned by a failed verify: their buffers are discarded
+    /// (never recycled) when the owning lease drops, and `check_invariants`
+    /// asserts no holder still references them.
+    quarantined: HashSet<usize>,
+    /// Lifetime count of quarantined pages (metrics gauge).
+    quarantined_total: u64,
 }
 
 /// Counter snapshot for metrics/gauges (`coordinator::metrics`).
@@ -319,6 +349,10 @@ pub struct PoolStats {
     pub total_leases: u64,
     pub page_host_bytes: usize,
     pub page_deploy_bytes: usize,
+    /// Pages currently covered by a seal checksum.
+    pub sealed: usize,
+    /// Lifetime count of pages quarantined by failed integrity checks.
+    pub quarantined_total: u64,
 }
 
 /// Cheap-to-clone handle to a shared page pool. Thread-safe
@@ -358,6 +392,9 @@ impl KvPool {
                 total_leases: 0,
                 page_deploy_bytes,
                 faults: None,
+                checksums: HashMap::new(),
+                quarantined: HashSet::new(),
+                quarantined_total: 0,
             })),
         }
     }
@@ -512,6 +549,8 @@ impl KvPool {
             total_leases: inner.total_leases,
             page_host_bytes: 4 * inner.f_len + inner.b_len,
             page_deploy_bytes: inner.page_deploy_bytes,
+            sealed: inner.checksums.len(),
+            quarantined_total: inner.quarantined_total,
         }
     }
 
@@ -519,6 +558,81 @@ impl KvPool {
     /// pool serves) — `budget_bytes / page_deploy_bytes` sizes the pool.
     pub fn page_deploy_bytes(&self) -> usize {
         lock_inner(&self.inner).page_deploy_bytes
+    }
+
+    /// Arena dimensions `(f_len, b_len)` — snapshot geometry guards compare
+    /// these before attempting to reload any page payloads.
+    pub fn arena_dims(&self) -> (usize, usize) {
+        let inner = lock_inner(&self.inner);
+        (inner.f_len, inner.b_len)
+    }
+
+    // --- page integrity (seal / verify / quarantine) -----------------
+
+    /// Record `page`'s content checksum in the integrity registry. Called
+    /// once a flush completes a page (`RequestCache::quantize_into` — after
+    /// which the page is immutable, see the sharing docs), and again on
+    /// restore after a reloaded payload verifies. Re-sealing overwrites,
+    /// so the registry always reflects the final flushed content.
+    pub fn seal_page(&self, page: &Page) {
+        let h = crate::util::snapshot::page_checksum(&page.f, &page.b);
+        lock_inner(&self.inner).checksums.insert(page.id(), h);
+    }
+
+    /// Re-derive `page`'s checksum and compare it against the seal record.
+    /// `false` means corruption (content drifted since seal) — or a page
+    /// that was never sealed, which the fourth `check_invariants` audit
+    /// rules out for every live page at a tick boundary.
+    pub fn verify_page(&self, page: &Page) -> bool {
+        let h = crate::util::snapshot::page_checksum(&page.f, &page.b);
+        lock_inner(&self.inner).checksums.get(&page.id()) == Some(&h)
+    }
+
+    /// The seal checksum recorded for a page id, if any.
+    pub fn sealed_checksum(&self, id: usize) -> Option<u64> {
+        lock_inner(&self.inner).checksums.get(&id).copied()
+    }
+
+    /// Condemn a page id after a failed integrity check: its seal record is
+    /// dropped and, when the owning lease returns, the buffers are
+    /// discarded instead of recycled (capacity self-heals — `lease`
+    /// allocates fresh storage once the free list runs dry). The *caller*
+    /// retires the owning request / sheds the owning prefix entry; the pool
+    /// only guarantees the bytes never serve again.
+    pub fn quarantine_page(&self, id: usize) {
+        let mut inner = lock_inner(&self.inner);
+        inner.checksums.remove(&id);
+        if inner.quarantined.insert(id) {
+            inner.quarantined_total += 1;
+        }
+    }
+
+    pub fn is_quarantined(&self, id: usize) -> bool {
+        lock_inner(&self.inner).quarantined.contains(&id)
+    }
+
+    /// Every page id currently covered by a seal record (sorted, so audits
+    /// get a deterministic view).
+    pub fn checksum_ids(&self) -> Vec<usize> {
+        let mut ids: Vec<usize> = lock_inner(&self.inner).checksums.keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Lifetime count of quarantined pages.
+    pub fn quarantined_total(&self) -> u64 {
+        lock_inner(&self.inner).quarantined_total
+    }
+
+    /// Overwrite the lifetime counters from a snapshot so a restored
+    /// server's gauges continue the interrupted run's series (the live
+    /// `leased` count is rebuilt by the restore's actual leases, never
+    /// overwritten).
+    pub fn restore_counters(&self, high_water: usize, lease_failures: u64, total_leases: u64) {
+        let mut inner = lock_inner(&self.inner);
+        inner.high_water = inner.high_water.max(high_water);
+        inner.lease_failures = lease_failures;
+        inner.total_leases = total_leases;
     }
 }
 
@@ -554,7 +668,14 @@ impl Drop for PageLease {
         let mut inner = lock_inner(&self.pool);
         inner.leased -= 1;
         if let Some(page) = self.page.take() {
-            inner.free.push(page);
+            inner.checksums.remove(&page.id());
+            if inner.quarantined.remove(&page.id()) {
+                // condemned storage is discarded, never recycled; capacity
+                // self-heals because `lease` allocates fresh buffers once
+                // the free list runs dry
+            } else {
+                inner.free.push(page);
+            }
         }
     }
 }
@@ -1056,6 +1177,213 @@ impl PrefixIndex {
             sidecar_bytes: self.sidecar_bytes,
         }
     }
+
+    /// Visit every page pinned by any entry, in the same stamp order
+    /// [`PrefixIndex::write_snap`] walks them — the snapshot's
+    /// page-numbering pass and the live scrub share this walk.
+    pub fn for_each_page(&self, f: &mut dyn FnMut(&Page)) {
+        let mut order: Vec<&PrefixEntry> = self.map.values().collect();
+        order.sort_by_key(|e| e.stamp);
+        for e in order {
+            for s in e.pages.iter().flatten().flatten() {
+                f(s.page());
+            }
+        }
+    }
+
+    /// Shed every entry pinning page `id` — the scrub's quarantine path:
+    /// a corrupt shared prefix page degrades its entries to future
+    /// collision-misses (re-prefill), per [`PrefixIndex::discard_corrupt`].
+    /// Returns the number of entries shed.
+    pub fn shed_page(&mut self, id: usize) -> usize {
+        let keys: Vec<u64> = self
+            .map
+            .iter()
+            .filter(|(_, e)| e.pages.iter().flatten().flatten().any(|s| s.page().id() == id))
+            .map(|(&k, _)| k)
+            .collect();
+        for &k in &keys {
+            self.discard_corrupt(k);
+        }
+        keys.len()
+    }
+
+    // --- snapshot codec ----------------------------------------------
+
+    /// Serialize every entry plus the LRU clock and counters.
+    /// `serial_of` maps a page's pool identity ([`Page::id`]) to the serial
+    /// the snapshot's page section wrote it under — the server owns that
+    /// numbering (pages shared between a slot and the index are written
+    /// once). Entries are emitted in stamp order, so the bytes are
+    /// deterministic and a restored index rebuilds in a canonical order.
+    pub fn write_snap<W: std::io::Write>(
+        &self,
+        w: &mut SnapWriter<W>,
+        serial_of: &mut dyn FnMut(usize) -> u32,
+    ) -> SnapResult<()> {
+        let mut order: Vec<(&u64, &PrefixEntry)> = self.map.iter().collect();
+        order.sort_by_key(|(_, e)| e.stamp);
+        w.usize(order.len())?;
+        for (&key, e) in order {
+            w.u64(key)?;
+            w.u64(e.stamp)?;
+            w.usize(e.qt)?;
+            w.slice_i32(&e.tokens)?;
+            w.usize(e.group)?;
+            w.usize(e.d)?;
+            // residual-only entries carry EMPTY plan/qstat grids (not grids
+            // of empties) — record that shape explicitly
+            w.bool(!e.plans.is_empty())?;
+            w.bool(!e.qstats.is_empty())?;
+            w.usize(e.pages.len())?;
+            for l in 0..e.pages.len() {
+                w.usize(e.pages[l].len())?;
+                for h in 0..e.pages[l].len() {
+                    w.usize(e.pages[l][h].len())?;
+                    for s in &e.pages[l][h] {
+                        w.u32(serial_of(s.page().id()))?;
+                    }
+                    if !e.plans.is_empty() {
+                        w.slice_i32(&e.plans[l][h])?;
+                    }
+                    if !e.qstats.is_empty() {
+                        w.slice_f32(&e.qstats[l][h].0)?;
+                        w.f32(e.qstats[l][h].1)?;
+                    }
+                    w.slice_f32(&e.res_k[l][h])?;
+                    w.slice_f32(&e.res_v[l][h])?;
+                }
+            }
+            w.slice_f32(&e.last_logits)?;
+        }
+        w.u64(self.clock)?;
+        for c in [
+            self.hits,
+            self.misses,
+            self.insertions,
+            self.evictions,
+            self.rejected,
+            self.collisions,
+            self.bytes_deduped,
+        ] {
+            w.u64(c)?;
+        }
+        Ok(())
+    }
+
+    /// Rebuild entries from a snapshot into this (freshly constructed)
+    /// index. `resolve` turns a page serial into a [`SharedLease`] on the
+    /// reloaded page — answering `None` for a serial whose payload failed
+    /// its checksum. An entry touching any such serial is dropped whole and
+    /// recorded exactly like [`PrefixIndex::discard_corrupt`] (a future
+    /// probe re-prefills on the miss); structural damage to the stream
+    /// itself is a hard `Err`. Returns the number of entries dropped.
+    pub fn read_snap<R: std::io::Read>(
+        &mut self,
+        r: &mut SnapReader<R>,
+        resolve: &mut dyn FnMut(u32) -> Option<SharedLease>,
+    ) -> SnapResult<usize> {
+        let n_entries = r.len("prefix entry count")?;
+        let mut dropped = 0usize;
+        for _ in 0..n_entries {
+            let key = r.u64("prefix entry key")?;
+            let stamp = r.u64("prefix entry stamp")?;
+            let qt = r.usize("prefix entry qt")?;
+            let tokens = r.vec_i32("prefix entry tokens")?;
+            let group = r.usize("prefix entry group")?;
+            let d = r.usize("prefix entry d")?;
+            let t = tokens.len();
+            if qt > t || (group > 0 && qt % group != 0) {
+                return Err(corrupt(format!(
+                    "prefix entry {key:#x}: qt {qt} inconsistent with t {t}, group {group}"
+                )));
+            }
+            let has_plans = r.bool("prefix entry plan flag")?;
+            let has_qstats = r.bool("prefix entry qstat flag")?;
+            let n_layers = r.len("prefix entry layers")?;
+            let mut poisoned = false;
+            let mut pages: Vec<Vec<Vec<SharedLease>>> = Vec::with_capacity(n_layers);
+            let mut plans: Vec<Vec<Vec<i32>>> = Vec::with_capacity(n_layers);
+            let mut qstats: Vec<Vec<(Vec<f32>, f32)>> = Vec::with_capacity(n_layers);
+            let mut res_k: Vec<Vec<Vec<f32>>> = Vec::with_capacity(n_layers);
+            let mut res_v: Vec<Vec<Vec<f32>>> = Vec::with_capacity(n_layers);
+            for _ in 0..n_layers {
+                let n_heads = r.len("prefix entry heads")?;
+                let mut lp = Vec::with_capacity(n_heads);
+                let mut lpl = Vec::with_capacity(n_heads);
+                let mut lq = Vec::with_capacity(n_heads);
+                let mut lrk = Vec::with_capacity(n_heads);
+                let mut lrv = Vec::with_capacity(n_heads);
+                for _ in 0..n_heads {
+                    let n_groups = r.len("prefix entry page row")?;
+                    let mut row = Vec::with_capacity(n_groups);
+                    for _ in 0..n_groups {
+                        let serial = r.u32("prefix entry page serial")?;
+                        match resolve(serial) {
+                            Some(s) => row.push(s),
+                            None => poisoned = true,
+                        }
+                    }
+                    lp.push(row);
+                    if has_plans {
+                        lpl.push(r.vec_i32("prefix entry plan")?);
+                    }
+                    if has_qstats {
+                        let qs = r.vec_f32("prefix entry qstat sums")?;
+                        let qc = r.f32("prefix entry qstat count")?;
+                        lq.push((qs, qc));
+                    }
+                    let rk = r.vec_f32("prefix entry residual keys")?;
+                    let rv = r.vec_f32("prefix entry residual values")?;
+                    if rk.len() != (t - qt) * d || rv.len() != (t - qt) * d {
+                        return Err(corrupt(format!(
+                            "prefix entry {key:#x}: residual rows {}x{} do not cover {} tail tokens of {d} channels",
+                            rk.len() / d.max(1), d, t - qt
+                        )));
+                    }
+                    lrk.push(rk);
+                    lrv.push(rv);
+                }
+                pages.push(lp);
+                if has_plans {
+                    plans.push(lpl);
+                }
+                if has_qstats {
+                    qstats.push(lq);
+                }
+                res_k.push(lrk);
+                res_v.push(lrv);
+            }
+            let last_logits = r.vec_f32("prefix entry logits")?;
+            if poisoned {
+                // page-level corruption degrades this one entry to a future
+                // collision-miss (per discard_corrupt), never the whole load
+                dropped += 1;
+                continue;
+            }
+            let mut entry = PrefixEntry::new(
+                tokens, qt, group, d, pages, plans, qstats, res_k, res_v, last_logits,
+            );
+            entry.stamp = stamp;
+            self.pinned_pages += entry.pages_count();
+            self.sidecar_bytes += entry.sidecar_bytes();
+            self.map.insert(key, entry);
+        }
+        self.clock = r.u64("prefix clock")?;
+        self.hits = r.u64("prefix hits")?;
+        self.misses = r.u64("prefix misses")?;
+        self.insertions = r.u64("prefix insertions")?;
+        self.evictions = r.u64("prefix evictions")?;
+        self.rejected = r.u64("prefix rejected")?;
+        self.collisions = r.u64("prefix collisions")?;
+        self.bytes_deduped = r.u64("prefix bytes_deduped")?;
+        for _ in 0..dropped {
+            self.evictions += 1;
+            self.collisions += 1;
+            self.misses += 1;
+        }
+        Ok(dropped)
+    }
 }
 
 #[cfg(test)]
@@ -1321,6 +1649,131 @@ mod tests {
             last_logits: vec![1.0, 2.0],
             stamp: 0,
         }
+    }
+
+    #[test]
+    fn seal_verify_quarantine_lifecycle() {
+        let pool = KvPool::for_specs([&mixspec()], 32, 32, Some(2));
+        pool.prewarm(2);
+        let mut a = pool.lease().unwrap();
+        a.page_mut().f[0] = 3.5;
+        a.page_mut().b[1] = 9;
+        let id = a.page().id();
+        // unsealed pages never verify
+        assert!(!pool.verify_page(a.page()));
+        pool.seal_page(a.page());
+        assert_eq!(pool.stats().sealed, 1);
+        assert!(pool.verify_page(a.page()));
+        assert_eq!(
+            pool.sealed_checksum(id),
+            Some(crate::util::snapshot::page_checksum(&a.page().f, &a.page().b))
+        );
+        // corruption after seal fails verification
+        a.page_mut().b[1] ^= 0x40;
+        assert!(!pool.verify_page(a.page()));
+        pool.quarantine_page(id);
+        assert!(pool.is_quarantined(id));
+        assert_eq!(pool.quarantined_total(), 1);
+        assert_eq!(pool.stats().sealed, 0, "quarantine drops the seal record");
+        // the condemned page's buffers are discarded on drop, not recycled
+        drop(a);
+        assert!(!pool.is_quarantined(id), "quarantine entry clears with the lease");
+        assert_eq!(pool.stats().free, 1, "only the prewarmed sibling remains");
+        // capacity self-heals: both pages still leasable
+        let b = pool.lease().unwrap();
+        let c = pool.lease().unwrap();
+        assert_eq!(pool.leased(), 2);
+        drop((b, c));
+        // a healthy page's seal record clears on drop too
+        let d = pool.lease().unwrap();
+        pool.seal_page(d.page());
+        assert_eq!(pool.stats().sealed, 1);
+        drop(d);
+        assert_eq!(pool.stats().sealed, 0);
+        assert_eq!(pool.quarantined_total(), 1, "lifetime counter never rewinds");
+    }
+
+    #[test]
+    fn prefix_index_snapshot_round_trips_and_drops_corrupt_entries() {
+        use crate::util::snapshot::{SnapReader, SnapWriter};
+        let pool = KvPool::for_specs([&mixspec()], 32, 32, None);
+        let mut ix = PrefixIndex::new(8, pool.page_deploy_bytes());
+        assert!(ix.insert(1, tiny_entry(&pool, 2)));
+        assert!(ix.insert(2, tiny_entry(&pool, 2)));
+        assert!(ix.lookup(1, &tiny_prompt(2)).is_some()); // bump stamps + counters
+        let before = ix.stats();
+
+        // number pages in first-encounter order, capturing their content
+        let mut serials: HashMap<usize, u32> = HashMap::new();
+        let mut payloads: Vec<(Vec<f32>, Vec<u8>)> = Vec::new();
+        for e in ix.map.values() {
+            for s in e.pages.iter().flatten().flatten() {
+                serials.entry(s.page().id()).or_insert_with(|| {
+                    payloads.push((s.page().f.clone(), s.page().b.clone()));
+                    (payloads.len() - 1) as u32
+                });
+            }
+        }
+        let mut buf = Vec::new();
+        let mut w = SnapWriter::new(&mut buf).unwrap();
+        ix.write_snap(&mut w, &mut |id| serials[&id]).unwrap();
+        w.finish().unwrap();
+
+        // clean round trip into a fresh index over a fresh pool
+        let pool2 = KvPool::for_specs([&mixspec()], 32, 32, None);
+        let restore = |drop_serial: Option<u32>| {
+            let mut ix2 = PrefixIndex::new(8, pool2.page_deploy_bytes());
+            let mut leases: HashMap<u32, SharedLease> = HashMap::new();
+            let mut r = SnapReader::new(&buf[..]).unwrap();
+            let dropped = ix2
+                .read_snap(&mut r, &mut |serial| {
+                    if Some(serial) == drop_serial {
+                        return None;
+                    }
+                    Some(
+                        leases
+                            .entry(serial)
+                            .or_insert_with(|| {
+                                let (f, b) = &payloads[serial as usize];
+                                let mut l = pool2.lease().unwrap();
+                                l.page_mut().f.copy_from_slice(f);
+                                l.page_mut().b.copy_from_slice(b);
+                                SharedLease::new(l)
+                            })
+                            .clone(),
+                    )
+                })
+                .unwrap();
+            r.finish().unwrap();
+            (ix2, dropped)
+        };
+        let (mut ix2, dropped) = restore(None);
+        assert_eq!(dropped, 0);
+        assert_eq!(ix2.len(), 2);
+        assert_eq!(ix2.pages_pinned(), 4);
+        let after = ix2.stats();
+        assert_eq!(
+            (after.hits, after.misses, after.insertions, after.sidecar_bytes),
+            (before.hits, before.misses, before.insertions, before.sidecar_bytes)
+        );
+        // restored entries serve lookups with the registered content
+        let hit = ix2.lookup(1, &tiny_prompt(2)).expect("restored entry must hit");
+        assert_eq!(hit.last_logits(), &[1.0, 2.0]);
+        assert_eq!((hit.t, hit.qt), (2 * 32 + 4, 2 * 32));
+        // LRU order survives: key 2 (stale stamp) sheds first
+        assert!(ix2.shed_lru());
+        assert!(ix2.contains(1) && !ix2.contains(2));
+
+        // a corrupt page serial drops only its owning entry, per
+        // discard_corrupt semantics (evictions/collisions/misses bump)
+        let (ix3, dropped) = restore(Some(0));
+        assert_eq!(dropped, 1);
+        assert_eq!(ix3.len(), 1);
+        assert_eq!(ix3.pages_pinned(), 2);
+        let s3 = ix3.stats();
+        assert_eq!(s3.evictions, before.evictions + 1);
+        assert_eq!(s3.collisions, before.collisions + 1);
+        assert_eq!(s3.misses, before.misses + 1);
     }
 
     #[test]

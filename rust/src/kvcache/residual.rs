@@ -70,6 +70,44 @@ impl ResidualBuffer {
     pub fn bytes(&self) -> usize {
         2 * 2 * self.len * self.d
     }
+
+    /// Serialize the valid rows (the zeroed tail past `len` reconstructs as
+    /// zeros; capacity and d are geometry, rebuilt from config on restore).
+    pub fn write_snap<W: std::io::Write>(
+        &self,
+        w: &mut crate::util::snapshot::SnapWriter<W>,
+    ) -> crate::util::snapshot::SnapResult<()> {
+        w.usize(self.len)?;
+        w.slice_f32(self.keys())?;
+        w.slice_f32(self.values())
+    }
+
+    /// Overlay snapshotted rows onto this (freshly constructed) buffer.
+    pub fn read_snap<R: std::io::Read>(
+        &mut self,
+        r: &mut crate::util::snapshot::SnapReader<R>,
+    ) -> crate::util::snapshot::SnapResult<()> {
+        use crate::util::snapshot::corrupt;
+        let len = r.usize("residual len")?;
+        if len > self.capacity {
+            return Err(corrupt(format!(
+                "residual len {len} exceeds capacity {}",
+                self.capacity
+            )));
+        }
+        let k = r.vec_f32("residual keys")?;
+        let v = r.vec_f32("residual values")?;
+        if k.len() != len * self.d || v.len() != len * self.d {
+            return Err(corrupt(format!(
+                "residual rows {}x{} do not match len {len}",
+                k.len() / self.d.max(1),
+                self.d
+            )));
+        }
+        self.len = 0;
+        self.extend(&k, &v, len);
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -104,6 +142,30 @@ mod tests {
         let mut rb = ResidualBuffer::new(1, 2);
         rb.push(&[0.0, 0.0], &[0.0, 0.0]);
         rb.push(&[0.0, 0.0], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn snapshot_round_trips_valid_rows_only() {
+        use crate::util::snapshot::{SnapReader, SnapWriter};
+        let mut rb = ResidualBuffer::new(4, 2);
+        rb.push(&[1.0, 2.0], &[3.0, 4.0]);
+        rb.push(&[5.0, 6.0], &[7.0, 8.0]);
+        let mut buf = Vec::new();
+        let mut w = SnapWriter::new(&mut buf).unwrap();
+        rb.write_snap(&mut w).unwrap();
+        w.finish().unwrap();
+        let mut rb2 = ResidualBuffer::new(4, 2);
+        let mut r = SnapReader::new(&buf[..]).unwrap();
+        rb2.read_snap(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(rb2.len, 2);
+        assert_eq!(rb2.keys(), rb.keys());
+        assert_eq!(rb2.values(), rb.values());
+        // a snapshot claiming more rows than this geometry holds is corrupt
+        let mut tiny = ResidualBuffer::new(1, 2);
+        let mut r = SnapReader::new(&buf[..]).unwrap();
+        let err = tiny.read_snap(&mut r).unwrap_err();
+        assert!(err.to_string().contains("exceeds capacity"), "{err}");
     }
 
     #[test]

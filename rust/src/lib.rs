@@ -260,6 +260,49 @@
 //!   CI's bench gate (tests/chaos.rs runs randomized fault × cancel ×
 //!   deadline interleavings on top).
 //!
+//! ## Crash recovery & snapshot ABI (`mixkvq-snap-v1`)
+//!
+//! The live server is **checkpointable**: at any point outside `tick()`
+//! (every tick boundary is a quiesce point — no background threads hold
+//! state between ticks), [`coordinator::router::Server::snapshot`]
+//! serializes the entire serving state through [`util::snapshot`]'s
+//! length-delimited, versioned codec (`mixkvq-snap-v1` magic + schema
+//! version, every field written through a named-field writer so a torn
+//! stream fails with *which* field truncated, never a panic).
+//! [`coordinator::router::Server::restore`] rebuilds a server from the
+//! bytes that **passes `check_invariants` immediately** and then replays
+//! the uninterrupted run's event stream bit for bit — the equivalence
+//! contract `tests/snapshot.rs` and the CI kill-and-restore smoke
+//! (`mixkvq traffic --kill-at-tick`, `BENCH_restore.json`, eighth
+//! bench-gate bar) enforce at workers {1, 4}, chaos on/off.
+//!
+//! What the stream carries: pool page arenas with **per-page FNV-1a
+//! checksums**, every slot's page tables (private and refcounted shared
+//! pages, refcounts reconstructed through the restore-time lease
+//! resolvers), residual tails, channel plans + |Q| state, in-flight
+//! chunked prefills, the prefix index, queue/backoff/retry state, RNG
+//! positions, fault-draw ordinals, and the metrics reservoirs. What it
+//! deliberately does **not** carry: wall-clock `Instant`s (re-stamped at
+//! restore; fingerprints are wall-clock-free so this cannot drift them),
+//! operator config (`ServerConfig` is provided by the caller and checked
+//! against the snapshot's named geometry fields — a mismatch is refused
+//! by field name), and the pool's lifetime `quarantined_total` counter
+//! (`Metrics::pages_quarantined` carries the lineage across restores).
+//!
+//! Integrity is **per page, and failure is per request**: a checksum
+//! mismatch at restore — or found live by [`coordinator::router::Server::scrub`]
+//! — quarantines the page and retires only the owning request as
+//! `FinishReason::Error` (a corrupt *shared* prefix page is dropped from
+//! the index collision-miss-style); the load itself never aborts, so a
+//! fully corrupt snapshot still restores with queued page-less requests
+//! riding through. [`util::faults::FaultSite::SnapshotWrite`] (torn
+//! mid-stream write) and [`util::faults::FaultSite::SnapshotCorrupt`]
+//! (per-page bit flip) make both failure modes deterministically
+//! injectable. `mixkvq serve --snapshot-path <file> --snapshot-every-ticks
+//! N` writes periodic atomic (tmp + rename) snapshots and `--restore`
+//! resumes from one; `mixkvq info` prints the schema version and
+//! estimated snapshot bytes per `MethodSpec`.
+//!
 //! ## Threading model (the multi-core engine)
 //!
 //! The serving hot loop shards across a fixed-size
@@ -318,6 +361,7 @@ pub mod util {
     pub mod faults;
     pub mod json;
     pub mod rng;
+    pub mod snapshot;
     pub mod stats;
     pub mod workers;
 }

@@ -12,7 +12,9 @@
 //!            same seed twice and records the determinism verdict)
 //!           --chaos R injects seeded faults at rate R at every fault site
 //!           and audits invariants each tick (writes BENCH_chaos.json);
-//!           --deadline-ticks D stamps a tick deadline on every request
+//!           --deadline-ticks D stamps a tick deadline on every request;
+//!           --kill-at-tick N snapshots/tears down/restores mid-run and
+//!           demands zero fingerprint drift (writes BENCH_restore.json)
 //!
 //! `serve` drives the session frontend (`submit`/`tick`/`drain_events`).
 //! `--method` takes one or more comma-separated method names: the first is
@@ -61,6 +63,12 @@ fn main() -> Result<()> {
                 "mixkvq — query-aware mixed-precision KV cache quantization\n\n\
                  USAGE: mixkvq <serve|bench|demo|search|info|profile|traffic> [options]\n\n\
                  serve   --method mixkvq-mix30 --requests 32 --max-new 48 --r-limit 128 --budget-mb 64\n\
+                 \x20       [--snapshot-path state.snap --snapshot-every-ticks 50] write a\n\
+                 \x20       crash-safe mixkvq-snap-v1 image of the live server every N ticks\n\
+                 \x20       (write-then-rename; a failed write never clobbers the last good\n\
+                 \x20       image). Add --restore to resume from the image instead of\n\
+                 \x20       starting cold — corrupt pages quarantine and retire only their\n\
+                 \x20       owning requests.\n\
                  \x20       [--workers N]  worker-pool lanes for per-tick compute sharding\n\
                  \x20       (default: MIXKVQ_WORKERS env or available parallelism; 1 = the\n\
                  \x20       single-threaded path; outputs are bit-identical at every N)\n\
@@ -89,7 +97,12 @@ fn main() -> Result<()> {
                  \x20       determinism verdict. --chaos injects seeded faults at every\n\
                  \x20       site (lease/prefill/decode/prefix), audits invariants each\n\
                  \x20       tick, and fails on any violation, leak, or stranded session\n\
-                 \x20       (default artifact becomes BENCH_chaos.json).\n\n\
+                 \x20       (default artifact becomes BENCH_chaos.json).\n\
+                 \x20       --kill-at-tick N snapshots the server at tick N, tears it\n\
+                 \x20       down completely, restores from the bytes, and drains — at\n\
+                 \x20       workers 1 and 4 — failing on any fingerprint drift vs the\n\
+                 \x20       uninterrupted run (writes BENCH_restore.json; --restore is\n\
+                 \x20       implied).\n\n\
                  Global: --artifacts <dir> (default: artifacts)"
             );
             Ok(())
@@ -117,17 +130,32 @@ fn serve(args: &Args) -> Result<()> {
 
     eprintln!("loading engine (default {})...", default_method.name);
     let engine = Engine::new(&artifacts_dir(args), default_method, r_limit)?;
-    let mut server = Server::new(
-        engine,
-        ServerConfig {
-            memory_budget_bytes: budget_mb << 20,
-            max_prefills_per_cycle: 2,
-            seed,
-            reserve_pages: None,
-            workers,
-            ..ServerConfig::default()
-        },
-    );
+    let server_cfg = ServerConfig {
+        memory_budget_bytes: budget_mb << 20,
+        max_prefills_per_cycle: 2,
+        seed,
+        reserve_pages: None,
+        workers,
+        ..ServerConfig::default()
+    };
+    // crash safety: --snapshot-path (+ --snapshot-every-ticks N) writes a
+    // mixkvq-snap-v1 image of the live server every N ticks; --restore
+    // resumes from that image instead of starting cold
+    let snap_path = args.get("snapshot-path");
+    let snap_every = args.u64_or("snapshot-every-ticks", 0)?;
+    let mut server = match (&snap_path, args.has("restore")) {
+        (Some(p), true) => {
+            let f = std::fs::File::open(p)
+                .map_err(|e| anyhow::anyhow!("--restore: cannot open {p}: {e}"))?;
+            let s = Server::restore(engine, server_cfg, std::io::BufReader::new(f))
+                .map_err(|e| anyhow::anyhow!("--restore from {p}: {e}"))?;
+            eprintln!("restored server state from {p}");
+            s
+        }
+        (None, true) => anyhow::bail!("--restore requires --snapshot-path <file>"),
+        _ => Server::new(engine, server_cfg),
+    };
+    let resumed = args.has("restore");
     let mut rng = Pcg32::seeded(seed);
     let mut trace = workloads::sharegpt_trace(&mut rng, n_requests, max_new);
     if specs.len() > 1 {
@@ -137,15 +165,44 @@ fn serve(args: &Args) -> Result<()> {
             specs.len()
         );
     }
-    eprintln!("serving {n_requests} requests (max_new={max_new}, R={r_limit})...");
-    server.metrics.start();
-    for r in trace {
-        server.submit(r)?;
+    if resumed {
+        // a resumed server already owns the interrupted work (queued,
+        // prefilling, decoding); drain that instead of re-submitting
+        eprintln!("draining restored work (max_new={max_new}, R={r_limit})...");
+    } else {
+        eprintln!("serving {n_requests} requests (max_new={max_new}, R={r_limit})...");
+        server.metrics.start();
+        for r in trace {
+            server.submit(r)?;
+        }
     }
     let mut n_events = 0usize;
+    let mut ticks_since_snap = 0u64;
     while server.has_work() {
         server.tick()?;
         n_events += server.drain_events().len();
+        ticks_since_snap += 1;
+        if let (Some(p), true) = (&snap_path, snap_every > 0 && ticks_since_snap >= snap_every) {
+            ticks_since_snap = 0;
+            // write-then-rename so a crash mid-write never clobbers the
+            // last good image
+            let tmp = format!("{p}.tmp");
+            let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+            match server.snapshot(&mut f) {
+                Ok(bytes) => {
+                    use std::io::Write as _;
+                    f.flush()?;
+                    drop(f);
+                    std::fs::rename(&tmp, p)?;
+                    eprintln!("snapshot: {bytes} B -> {p}");
+                }
+                Err(e) => {
+                    drop(f);
+                    let _ = std::fs::remove_file(&tmp);
+                    eprintln!("snapshot failed (serving continues): {e}");
+                }
+            }
+        }
     }
     server.metrics.stop();
     n_events += server.drain_events().len();
@@ -327,6 +384,46 @@ fn traffic(args: &Args) -> Result<()> {
     let engine_seed = args.u64_or("weights-seed", 11)?;
     let mk_engine = || Engine::new_reference(Meta::default_build(), engine_seed, Method::bf16(), r_limit);
 
+    // kill-and-restore smoke: snapshot the server at a tick boundary, tear
+    // it down (engine included), restore from the bytes, drain — at worker
+    // widths 1 and 4 — and demand zero fingerprint drift vs uninterrupted
+    // same-seed runs. (--restore is implied and accepted as a flag.)
+    let kill_at = args.u64_or("kill-at-tick", 0)?;
+    if kill_at > 0 {
+        let out = args.get_or("out", "BENCH_restore.json");
+        let mut trials: Vec<tr::RestoreTrial> = Vec::new();
+        for workers in [1usize, 4] {
+            let wcfg = TrafficConfig { workers, ..cfg.clone() };
+            eprintln!(
+                "kill-restore: {} sessions, workers={workers}, kill at tick {kill_at}...",
+                wcfg.sessions
+            );
+            let clean = tr::run(mk_engine()?, &wcfg)?;
+            let (restored, stats) = tr::run_with_kill(&mk_engine, &wcfg, kill_at)?;
+            let drift = clean.fingerprint != restored.fingerprint
+                || !tr::deterministic_pair(&clean, &restored);
+            println!(
+                "workers={workers}: snapshot {} B in {:.2} ms, restore {:.2} ms \
+                 (worst post-restore tick {:.2} ms), drift={drift}",
+                stats.snapshot_bytes, stats.snapshot_ms, stats.restore_ms, stats.tick_ms
+            );
+            trials.push(tr::RestoreTrial {
+                workers,
+                stats,
+                fingerprint: clean.fingerprint,
+                fingerprint_restored: restored.fingerprint,
+                drift,
+            });
+        }
+        let j = tr::restore_report_json(cfg.sessions, &trials);
+        std::fs::write(&out, j.print())?;
+        println!("wrote {out}");
+        if trials.iter().any(|t| t.drift) {
+            anyhow::bail!("kill-and-restore drifted from the uninterrupted run");
+        }
+        return Ok(());
+    }
+
     eprintln!(
         "traffic: {} sessions, {} tenants, seed {} (running twice for determinism)...",
         cfg.sessions, cfg.tenants, cfg.seed
@@ -482,5 +579,34 @@ fn info(args: &Args) -> Result<()> {
         cc.group,
         sidecar / 1024,
     );
+    // crash-safe serving: what a snapshot of one capacity-full request
+    // costs per method. Serialized page = f32 arena + byte arena + length
+    // prefixes + FNV checksum; arenas are host-layout (PageLayout), so the
+    // estimate is exact per page and a floor per request (scalars, plans,
+    // and metrics sections add a few KB per server on top).
+    println!(
+        "snapshot ABI: {} (schema v{}, per-page FNV-1a checksums, quarantine on mismatch)",
+        String::from_utf8_lossy(mixkvq::util::snapshot::SNAP_MAGIC).trim_end(),
+        mixkvq::util::snapshot::SNAP_VERSION,
+    );
+    for spec in MethodSpec::all() {
+        let m = spec.build();
+        let Ok(v) = meta.variant(&m.variant) else { continue };
+        let page_snap_bytes = v
+            .layers
+            .iter()
+            .map(|&l| {
+                let lay = mixkvq::kvcache::pool::PageLayout::new(l, d, cc.group);
+                lay.host_bytes() + 24 // two length prefixes + checksum
+            })
+            .max()
+            .unwrap_or(0);
+        println!(
+            "  {:<18} snapshot bytes/page={:<6} ~{} KB/request@C",
+            m.name,
+            page_snap_bytes,
+            page_snap_bytes * pages_at_c / 1024,
+        );
+    }
     Ok(())
 }

@@ -1011,6 +1011,105 @@ impl PrefillRun {
         &self.scratch.logits
     }
 
+    /// Serialize the resumable state: progress counters plus the
+    /// *persistent* scratch planes — the residual stream `h`, the current
+    /// layer's K/V rows, the per-layer |q| accumulators, and the logits.
+    /// The per-tile planes (`x`/`q`/`o`/`proj`/`ff`/`scores`/gathers) are
+    /// written and fully consumed inside one chunk unit, and a snapshot
+    /// only ever happens between units (the tick-boundary quiesce), so
+    /// they reconstruct as fresh zeroed tiles. Shared-hit runs
+    /// ([`PrefillRun::new_shared`]) carry only their logits.
+    pub fn write_snap<W: std::io::Write>(
+        &self,
+        w: &mut crate::util::snapshot::SnapWriter<W>,
+        mc: &ModelConfig,
+    ) -> crate::util::snapshot::SnapResult<()> {
+        w.usize(self.t)?;
+        w.usize(self.chunk)?;
+        w.usize(self.layer)?;
+        w.usize(self.tok)?;
+        w.bool(self.started)?;
+        w.bool(self.done)?;
+        w.usize(self.chunks_done)?;
+        let shared = self.scratch.h.len() != self.t * mc.d_model;
+        w.bool(shared)?;
+        if !shared {
+            w.slice_f32(&self.scratch.h)?;
+            w.slice_f32(&self.scratch.k)?;
+            w.slice_f32(&self.scratch.v)?;
+            for a in &self.scratch.qabs {
+                w.slice_f32(a)?;
+            }
+        }
+        w.slice_f32(&self.scratch.logits)
+    }
+
+    /// Rebuild a run from a snapshot (fresh transient tiles, restored
+    /// persistent planes). The next [`PrefillRun::advance`] continues at
+    /// exactly the interrupted (layer, chunk) unit.
+    pub fn read_snap<R: std::io::Read>(
+        r: &mut crate::util::snapshot::SnapReader<R>,
+        mc: &ModelConfig,
+    ) -> crate::util::snapshot::SnapResult<PrefillRun> {
+        use crate::util::snapshot::corrupt;
+        let t = r.usize("prefill run t")?;
+        let chunk = r.usize("prefill run chunk")?;
+        if t == 0 || chunk == 0 {
+            return Err(corrupt(format!("prefill run t={t}, chunk={chunk} (both must be > 0)")));
+        }
+        let layer = r.usize("prefill run layer")?;
+        let tok = r.usize("prefill run tok")?;
+        let started = r.bool("prefill run started")?;
+        let done = r.bool("prefill run done")?;
+        let chunks_done = r.usize("prefill run chunks_done")?;
+        if layer > mc.n_layers || tok > t {
+            return Err(corrupt(format!(
+                "prefill run cursor (layer {layer}, tok {tok}) outside ({}, {t})",
+                mc.n_layers
+            )));
+        }
+        let shared = r.bool("prefill run shared flag")?;
+        let expect = |name: &str, got: usize, want: usize| {
+            if got == want {
+                Ok(())
+            } else {
+                Err(corrupt(format!("prefill run {name}: {got} elements (geometry says {want})")))
+            }
+        };
+        if shared {
+            let logits = r.vec_f32("prefill run logits")?;
+            expect("logits", logits.len(), mc.vocab)?;
+            let mut run = PrefillRun::new_shared(mc, t, chunk, &logits);
+            run.chunks_done = chunks_done;
+            Ok(run)
+        } else {
+            let mut run = PrefillRun::new(mc, t, chunk);
+            run.layer = layer;
+            run.tok = tok;
+            run.started = started;
+            run.done = done;
+            run.chunks_done = chunks_done;
+            let h = r.vec_f32("prefill run h")?;
+            expect("h", h.len(), t * mc.d_model)?;
+            run.scratch.h = h;
+            let k = r.vec_f32("prefill run k")?;
+            expect("k", k.len(), t * mc.n_kv_heads * mc.d_head)?;
+            run.scratch.k = k;
+            let v = r.vec_f32("prefill run v")?;
+            expect("v", v.len(), t * mc.n_kv_heads * mc.d_head)?;
+            run.scratch.v = v;
+            for l in 0..mc.n_layers {
+                let a = r.vec_f32("prefill run qabs")?;
+                expect("qabs", a.len(), mc.n_kv_heads * mc.d_head)?;
+                run.scratch.qabs[l] = a;
+            }
+            let logits = r.vec_f32("prefill run logits")?;
+            expect("logits", logits.len(), mc.vocab)?;
+            run.scratch.logits = logits;
+            Ok(run)
+        }
+    }
+
     /// Process up to `max_chunks` (layer, chunk) units, quantizing each
     /// completed layer straight into `cache` pool pages. Returns `true`
     /// when the whole prefill (including the last-logit projection and the

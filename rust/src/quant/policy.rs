@@ -151,37 +151,68 @@ impl SensitivityProfile {
         ])
     }
 
+    /// Parse a profile artifact. Every failure names the offending field
+    /// (`profile field \`x\`: …`) so a hand-edited or version-skewed
+    /// `profile.json` is diagnosable from the error alone.
     pub fn from_json(j: &Json) -> Result<SensitivityProfile> {
-        let schema = j.get("schema")?.as_str()?;
+        let field = |name: &'static str| move || format!("profile field `{name}`");
+        let schema = j
+            .get("schema")
+            .and_then(|v| v.as_str())
+            .with_context(field("schema"))?;
         if schema != "mixkvq-profile-v1" {
-            bail!("unknown profile schema `{schema}`");
+            bail!(
+                "unknown profile schema `{schema}` (this build reads mixkvq-profile-v1 \
+                 — regenerate with `mixkvq profile`)"
+            );
         }
-        let n_layers = j.get("n_layers")?.as_usize()?;
+        let n_layers = j
+            .get("n_layers")
+            .and_then(|v| v.as_usize())
+            .with_context(field("n_layers"))?;
         let mut entries = Vec::new();
-        for e in j.get("entries")?.as_arr()? {
-            let name = e.get("spec")?.as_str()?;
+        for (i, e) in j
+            .get("entries")
+            .and_then(|v| v.as_arr())
+            .with_context(field("entries"))?
+            .iter()
+            .enumerate()
+        {
+            let ctx = |name: &'static str| move || format!("profile entry {i} field `{name}`");
+            let name = e.get("spec").and_then(|v| v.as_str()).with_context(ctx("spec"))?;
             let spec: MethodSpec = name
                 .parse()
-                .map_err(|err: String| anyhow::anyhow!("{err}"))?;
+                .map_err(|err: String| anyhow::anyhow!("profile entry {i}: {err}"))?;
             let layer_err: Vec<f64> = e
-                .get("layer_err")?
-                .as_arr()?
+                .get("layer_err")
+                .and_then(|v| v.as_arr())
+                .with_context(ctx("layer_err"))?
                 .iter()
                 .map(|x| x.as_f64())
-                .collect::<Result<_>>()?;
+                .collect::<Result<_>>()
+                .with_context(ctx("layer_err"))?;
             if layer_err.len() != n_layers {
                 bail!("profile entry `{name}`: {} layer errors, want {n_layers}", layer_err.len());
             }
             entries.push(ProfileEntry {
                 spec,
                 layer_err,
-                worst_case_bytes: e.get("worst_case_bytes")?.as_usize()?,
+                worst_case_bytes: e
+                    .get("worst_case_bytes")
+                    .and_then(|v| v.as_usize())
+                    .with_context(ctx("worst_case_bytes"))?,
             });
         }
         Ok(SensitivityProfile {
-            baseline_nll: j.get("baseline_nll")?.as_f64()?,
+            baseline_nll: j
+                .get("baseline_nll")
+                .and_then(|v| v.as_f64())
+                .with_context(field("baseline_nll"))?,
             n_layers,
-            calib_seed: j.get("calib_seed")?.as_f64()? as u64,
+            calib_seed: j
+                .get("calib_seed")
+                .and_then(|v| v.as_usize())
+                .with_context(field("calib_seed"))? as u64,
             entries,
         })
     }
@@ -362,5 +393,44 @@ mod tests {
         let bound = back.predicted_bound(MethodSpec::KvTuner).unwrap();
         assert!(bound >= 0.25 * PREDICTED_BOUND_SLACK);
         assert!(back.predicted_error(MethodSpec::Bf16).is_none());
+    }
+
+    #[test]
+    fn malformed_profiles_error_with_field_names() {
+        // wrong schema version names both what it found and what it wants
+        let j = Json::parse(r#"{"schema": "mixkvq-profile-v9"}"#).unwrap();
+        let e = format!("{:#}", SensitivityProfile::from_json(&j).unwrap_err());
+        assert!(e.contains("mixkvq-profile-v9"), "{e}");
+        assert!(e.contains("mixkvq-profile-v1"), "{e}");
+        // missing field → error names it
+        let j = Json::parse(r#"{"schema": "mixkvq-profile-v1"}"#).unwrap();
+        let e = format!("{:#}", SensitivityProfile::from_json(&j).unwrap_err());
+        assert!(e.contains("n_layers"), "{e}");
+        // wrong type deep in an entry → error names entry index and field
+        let j = Json::parse(
+            r#"{"schema": "mixkvq-profile-v1", "baseline_nll": 1.0, "n_layers": 1,
+                "calib_seed": 0,
+                "entries": [{"spec": "kvtuner", "layer_err": [0.1],
+                             "worst_case_bytes": "lots"}]}"#,
+        )
+        .unwrap();
+        let e = format!("{:#}", SensitivityProfile::from_json(&j).unwrap_err());
+        assert!(e.contains("worst_case_bytes"), "{e}");
+        assert!(e.contains("a string"), "{e}");
+        // truncated file: parse error, never a panic
+        let good = SensitivityProfile {
+            baseline_nll: 1.0,
+            n_layers: 1,
+            calib_seed: 0,
+            entries: vec![],
+        }
+        .to_json()
+        .print();
+        for cut in 0..good.len() - 1 {
+            assert!(
+                Json::parse(&good[..cut]).is_err(),
+                "truncation at {cut} parsed"
+            );
+        }
     }
 }

@@ -21,7 +21,7 @@
 //! deterministic too). Every hook is `Option`-gated and free when no plan
 //! is installed.
 //!
-//! The four sites are the real failure surfaces of the request lifecycle:
+//! The sites are the real failure surfaces of the request lifecycle:
 //!
 //! * [`FaultSite::LeaseDenial`] — `KvPool::lease` fails transiently, as a
 //!   fragmented or contended allocator would.
@@ -32,6 +32,11 @@
 //! * [`FaultSite::PrefixCorrupt`] — a prefix-index entry fails its verify;
 //!   the entry is distrusted and dropped, the request falls back to a full
 //!   prefill (corrupted pages are never served).
+//! * [`FaultSite::SnapshotWrite`] — a `Server::snapshot` write tears
+//!   mid-stream (truncated output, as a crashed disk write would leave).
+//! * [`FaultSite::SnapshotCorrupt`] — a serialized KV page's bytes take a
+//!   bit flip on the way out; restore detects it via the per-page checksum
+//!   and quarantines the page instead of serving corrupt KV.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -51,14 +56,24 @@ pub enum FaultSite {
     DecodeStep,
     /// A prefix-index entry fails its token verify (corruption).
     PrefixCorrupt,
+    /// A snapshot write tears mid-stream (truncated on-disk state).
+    SnapshotWrite,
+    /// A serialized KV page takes a bit flip (caught by its checksum).
+    SnapshotCorrupt,
 }
 
+/// Number of fault sites — the length of every per-site array
+/// ([`FaultPlan::rates`], [`FaultStats`], the metrics mirrors).
+pub const N_FAULT_SITES: usize = 6;
+
 impl FaultSite {
-    pub const ALL: [FaultSite; 4] = [
+    pub const ALL: [FaultSite; N_FAULT_SITES] = [
         FaultSite::LeaseDenial,
         FaultSite::PrefillChunk,
         FaultSite::DecodeStep,
         FaultSite::PrefixCorrupt,
+        FaultSite::SnapshotWrite,
+        FaultSite::SnapshotCorrupt,
     ];
 
     pub fn name(self) -> &'static str {
@@ -67,6 +82,8 @@ impl FaultSite {
             FaultSite::PrefillChunk => "fault-prefill",
             FaultSite::DecodeStep => "fault-decode",
             FaultSite::PrefixCorrupt => "fault-prefix",
+            FaultSite::SnapshotWrite => "fault-snapwrite",
+            FaultSite::SnapshotCorrupt => "fault-snapcorrupt",
         }
     }
 
@@ -76,6 +93,8 @@ impl FaultSite {
             FaultSite::PrefillChunk => 1,
             FaultSite::DecodeStep => 2,
             FaultSite::PrefixCorrupt => 3,
+            FaultSite::SnapshotWrite => 4,
+            FaultSite::SnapshotCorrupt => 5,
         }
     }
 }
@@ -96,13 +115,23 @@ pub fn draw_key(ctx: u64, seq: u64) -> u64 {
 pub struct FaultPlan {
     pub seed: u64,
     /// Injection probability per draw, indexed by [`FaultSite::index`].
-    pub rates: [f64; 4],
+    pub rates: [f64; N_FAULT_SITES],
 }
 
 impl FaultPlan {
     /// The same rate at every site — the chaos soak's default shape.
     pub fn uniform(seed: u64, rate: f64) -> FaultPlan {
-        FaultPlan { seed, rates: [rate; 4] }
+        FaultPlan { seed, rates: [rate; N_FAULT_SITES] }
+    }
+
+    /// The chaos soak's serving shape: every *serving-path* site armed at
+    /// `rate`, snapshot sites left quiet (those are armed explicitly by the
+    /// snapshot fault tests — a kill/restore equivalence run must not have
+    /// its one snapshot torn by the background chaos rate).
+    pub fn serving_uniform(seed: u64, rate: f64) -> FaultPlan {
+        FaultPlan::uniform(seed, rate)
+            .with_rate(FaultSite::SnapshotWrite, 0.0)
+            .with_rate(FaultSite::SnapshotCorrupt, 0.0)
     }
 
     /// Builder-style per-site override.
@@ -126,9 +155,9 @@ impl FaultPlan {
 #[derive(Clone, Copy, Debug, Default)]
 pub struct FaultStats {
     /// Draws taken at each site (one per hook evaluation with a live plan).
-    pub drawn: [u64; 4],
+    pub drawn: [u64; N_FAULT_SITES],
     /// Faults actually injected at each site.
-    pub injected: [u64; 4],
+    pub injected: [u64; N_FAULT_SITES],
 }
 
 impl FaultStats {
@@ -147,16 +176,16 @@ impl FaultStats {
 /// consult from any worker thread without perturbing any other draw.
 pub struct FaultInjector {
     plan: FaultPlan,
-    drawn: [AtomicU64; 4],
-    injected: [AtomicU64; 4],
+    drawn: [AtomicU64; N_FAULT_SITES],
+    injected: [AtomicU64; N_FAULT_SITES],
 }
 
 impl FaultInjector {
     pub fn new(plan: FaultPlan) -> FaultInjector {
         FaultInjector {
             plan,
-            drawn: [0; 4].map(AtomicU64::new),
-            injected: [0; 4].map(AtomicU64::new),
+            drawn: [0; N_FAULT_SITES].map(AtomicU64::new),
+            injected: [0; N_FAULT_SITES].map(AtomicU64::new),
         }
     }
 
@@ -192,9 +221,23 @@ impl FaultInjector {
     }
 
     pub fn stats(&self) -> FaultStats {
-        FaultStats {
-            drawn: [0, 1, 2, 3].map(|i| self.drawn[i].load(Ordering::Relaxed)),
-            injected: [0, 1, 2, 3].map(|i| self.injected[i].load(Ordering::Relaxed)),
+        let mut s = FaultStats::default();
+        for i in 0..N_FAULT_SITES {
+            s.drawn[i] = self.drawn[i].load(Ordering::Relaxed);
+            s.injected[i] = self.injected[i].load(Ordering::Relaxed);
+        }
+        s
+    }
+
+    /// Reinstate tallies captured by a snapshot — a restored server's fault
+    /// counters continue from where the snapshotted one stood, so the
+    /// chaos-soak fingerprint folds identical totals whether or not the run
+    /// was interrupted. The draws themselves are stateless keyed functions,
+    /// so only the tallies need restoring.
+    pub fn restore_stats(&self, stats: &FaultStats) {
+        for i in 0..N_FAULT_SITES {
+            self.drawn[i].store(stats.drawn[i], Ordering::Relaxed);
+            self.injected[i].store(stats.injected[i], Ordering::Relaxed);
         }
     }
 }
@@ -269,8 +312,37 @@ mod tests {
                 assert!(!f.should_fail(site, draw_key(0, seq)));
             }
         }
-        assert_eq!(f.stats().drawn, [0; 4]);
+        assert_eq!(f.stats().drawn, [0; N_FAULT_SITES]);
         assert_eq!(f.stats().injected_total(), 0);
+    }
+
+    #[test]
+    fn restore_stats_round_trips_tallies() {
+        let a = FaultInjector::new(FaultPlan::uniform(7, 0.5));
+        for seq in 0..64u64 {
+            a.should_fail(FaultSite::DecodeStep, draw_key(1, seq));
+            a.should_fail(FaultSite::SnapshotCorrupt, draw_key(2, seq));
+        }
+        let snap = a.stats();
+        let b = FaultInjector::new(FaultPlan::uniform(7, 0.5));
+        b.restore_stats(&snap);
+        assert_eq!(b.stats().drawn, snap.drawn);
+        assert_eq!(b.stats().injected, snap.injected);
+        // draws continue identically after restore (stateless keyed draws)
+        assert_eq!(
+            a.should_fail(FaultSite::DecodeStep, draw_key(1, 64)),
+            b.should_fail(FaultSite::DecodeStep, draw_key(1, 64))
+        );
+        assert_eq!(a.stats().injected, b.stats().injected);
+    }
+
+    #[test]
+    fn serving_uniform_leaves_snapshot_sites_quiet() {
+        let plan = FaultPlan::serving_uniform(3, 0.25);
+        assert_eq!(plan.rate(FaultSite::SnapshotWrite), 0.0);
+        assert_eq!(plan.rate(FaultSite::SnapshotCorrupt), 0.0);
+        assert_eq!(plan.rate(FaultSite::DecodeStep), 0.25);
+        assert!(plan.is_armed());
     }
 
     #[test]

@@ -36,28 +36,48 @@ impl Json {
         }
     }
 
-    pub fn as_f64(&self) -> Result<f64> {
+    /// One-word description of the variant — so "expected X, found Y"
+    /// errors name what the artifact actually contained.
+    fn kind(&self) -> &'static str {
         match self {
-            Json::Num(n) => Ok(*n),
-            _ => bail!("not a number"),
+            Json::Null => "null",
+            Json::Bool(_) => "a bool",
+            Json::Num(_) => "a number",
+            Json::Str(_) => "a string",
+            Json::Arr(_) => "an array",
+            Json::Obj(_) => "an object",
         }
     }
 
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            v => bail!("expected a number, found {}", v.kind()),
+        }
+    }
+
+    /// Strict: the number must be a finite non-negative integer — a
+    /// negative count or NaN in an artifact is schema damage, not a value
+    /// to silently truncate to 0.
     pub fn as_usize(&self) -> Result<usize> {
-        Ok(self.as_f64()? as usize)
+        let n = self.as_f64()?;
+        if !n.is_finite() || n < 0.0 || n.fract() != 0.0 {
+            bail!("expected a non-negative integer, found {n}");
+        }
+        Ok(n as usize)
     }
 
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
-            _ => bail!("not a string"),
+            v => bail!("expected a string, found {}", v.kind()),
         }
     }
 
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(v) => Ok(v),
-            _ => bail!("not an array"),
+            v => bail!("expected an array, found {}", v.kind()),
         }
     }
 
@@ -249,7 +269,13 @@ impl<'a> Parser<'a> {
                         b'b' => s.push('\u{8}'),
                         b'f' => s.push('\u{c}'),
                         b'u' => {
-                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+                            // bounds-checked: a `\uXX` cut off by truncation
+                            // is a parse error, not a slice panic
+                            let hex = self
+                                .b
+                                .get(self.i..self.i + 4)
+                                .ok_or_else(|| anyhow!("truncated \\u escape at {}", self.i))?;
+                            let hex = std::str::from_utf8(hex)?;
                             let cp = u32::from_str_radix(hex, 16)?;
                             self.i += 4;
                             s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
@@ -258,11 +284,16 @@ impl<'a> Parser<'a> {
                     }
                 }
                 c => {
-                    // re-decode UTF-8 runs
+                    // re-decode UTF-8 runs; a multibyte sequence the input
+                    // ends in the middle of is a parse error, not a panic
                     let start = self.i - 1;
                     let len = utf8_len(c);
+                    let run = self
+                        .b
+                        .get(start..start + len)
+                        .ok_or_else(|| anyhow!("truncated UTF-8 sequence at {start}"))?;
                     self.i = start + len;
-                    s.push_str(std::str::from_utf8(&self.b[start..self.i])?);
+                    s.push_str(std::str::from_utf8(run)?);
                 }
             }
         }
@@ -328,5 +359,35 @@ mod tests {
     fn unicode_escape() {
         let v = Json::parse(r#""éx""#).unwrap();
         assert_eq!(v.as_str().unwrap(), "éx");
+    }
+
+    #[test]
+    fn truncated_inputs_error_instead_of_panicking() {
+        // every cut point of a string exercising \u escapes and multibyte
+        // UTF-8 must parse or error — never slice out of bounds
+        let src = r#"{"k": "aéé", "n": 12}"#;
+        assert!(Json::parse(src).is_ok());
+        for cut in 0..src.len() {
+            if !src.is_char_boundary(cut) {
+                continue;
+            }
+            let _ = Json::parse(&src[..cut]); // must not panic
+        }
+        // the historical panic, pinned directly: a \u escape cut off by
+        // truncation used to slice out of bounds
+        assert!(Json::parse(r#""\u00"#).is_err());
+        assert!(Json::parse(r#""\u"#).is_err());
+    }
+
+    #[test]
+    fn accessors_name_what_they_found() {
+        let v = Json::parse(r#"{"s": "hi", "neg": -3, "frac": 1.5}"#).unwrap();
+        let e = v.get("s").unwrap().as_f64().unwrap_err().to_string();
+        assert!(e.contains("a string"), "unhelpful error: {e}");
+        let e = v.get("neg").unwrap().as_usize().unwrap_err().to_string();
+        assert!(e.contains("-3"), "unhelpful error: {e}");
+        assert!(v.get("frac").unwrap().as_usize().is_err());
+        let e = v.get("missing").unwrap_err().to_string();
+        assert!(e.contains("missing"), "unhelpful error: {e}");
     }
 }

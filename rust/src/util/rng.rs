@@ -70,6 +70,19 @@ impl Pcg32 {
         Self::new(seed, 0xda3e_39cb_94b9_5bdb)
     }
 
+    /// Raw `(state, inc)` pair — the complete generator state, captured by
+    /// `Server::snapshot` so a restored server's sampler continues the
+    /// exact draw sequence of the one it replaces.
+    pub fn state(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator at an exact `(state, inc)` position (the inverse
+    /// of [`Pcg32::state`] — no warm-up draws, unlike [`Pcg32::new`]).
+    pub fn from_state(state: u64, inc: u64) -> Self {
+        Pcg32 { state, inc }
+    }
+
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
         self.state = old
@@ -193,6 +206,19 @@ mod tests {
         }
         // different seeds ⇒ different streams under the same name
         assert_ne!(stream(7, "arrivals").next_u64(), stream(8, "arrivals").next_u64());
+    }
+
+    #[test]
+    fn state_round_trip_continues_the_sequence() {
+        let mut a = Pcg32::seeded(42);
+        for _ in 0..17 {
+            a.next_u32();
+        }
+        let (s, inc) = a.state();
+        let mut b = Pcg32::from_state(s, inc);
+        for _ in 0..64 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
     }
 
     #[test]

@@ -1,0 +1,507 @@
+//! Length-prefixed, versioned binary codec for crash-safe serving
+//! snapshots (`mixkvq-snap-v1`) — no external serialization crates.
+//!
+//! The format is deliberately dumb: a magic + version header, then a fixed
+//! sequence of primitive fields and length-prefixed arrays written in one
+//! documented order by `Server::snapshot` and read back in the same order
+//! by `Server::restore`, closed by a trailer sentinel so truncation is
+//! always detected. Every multi-byte value is little-endian. There is no
+//! self-description or field tagging — the version number in the header IS
+//! the schema contract, and a version bump invalidates old snapshots
+//! loudly instead of misparsing them.
+//!
+//! Error discipline (the same bar as the hardened JSON loaders): a
+//! malformed, truncated, or version-mismatched snapshot returns a
+//! descriptive [`SnapError`] naming the field being read and the byte
+//! offset — never a panic, never an out-of-bounds slice. Corruption
+//! *inside* a KV page's payload is deliberately NOT a codec-level error:
+//! pages carry a per-page FNV-1a checksum ([`page_checksum`]) and the
+//! restore path quarantines a mismatching page and retires only its owning
+//! request (see `coordinator::router`).
+
+use std::io::{Read, Write};
+
+/// Magic line opening every snapshot stream.
+pub const SNAP_MAGIC: &[u8; 15] = b"mixkvq-snap-v1\n";
+
+/// Schema version written after the magic; bump on ANY layout change.
+pub const SNAP_VERSION: u32 = 1;
+
+/// Trailer sentinel closing the stream — a read that ends without it was
+/// truncated.
+pub const SNAP_TRAILER: u64 = 0x6d78_6b76_7120_454e; // "mxkvq EN"
+
+/// Per-field sanity cap on length prefixes (bytes or elements): a corrupt
+/// length must fail with a named error, not an allocator abort.
+const MAX_FIELD_LEN: u64 = 1 << 31;
+
+/// Snapshot codec failure: an I/O error from the underlying stream, or a
+/// structural corruption naming the offending field and byte offset.
+#[derive(Debug)]
+pub enum SnapError {
+    Io(std::io::Error),
+    Corrupt(String),
+}
+
+impl std::fmt::Display for SnapError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SnapError::Io(e) => write!(f, "snapshot i/o error: {e}"),
+            SnapError::Corrupt(msg) => write!(f, "snapshot corrupt: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SnapError {}
+
+impl From<std::io::Error> for SnapError {
+    fn from(e: std::io::Error) -> SnapError {
+        SnapError::Io(e)
+    }
+}
+
+pub type SnapResult<T> = Result<T, SnapError>;
+
+/// Shorthand for a structural-corruption error.
+pub fn corrupt(msg: impl Into<String>) -> SnapError {
+    SnapError::Corrupt(msg.into())
+}
+
+// --- checksums -----------------------------------------------------------
+
+/// FNV-1a over a byte slice (same constants as the prefix-index chain
+/// hash and the traffic fingerprint).
+pub fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Per-page integrity checksum over both arenas (f32 bits LE, then the
+/// byte arena). Computed when a page is sealed after its quantization
+/// store, re-verified by `KvPool::verify_page` scrubs and on restore.
+pub fn page_checksum(f: &[f32], b: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &x in f {
+        h = fnv1a(h, &x.to_bits().to_le_bytes());
+    }
+    fnv1a(h, b)
+}
+
+// --- writer --------------------------------------------------------------
+
+/// Forward-only snapshot writer; tracks bytes written so the caller can
+/// report snapshot size.
+pub struct SnapWriter<W: Write> {
+    w: W,
+    written: u64,
+}
+
+impl<W: Write> SnapWriter<W> {
+    /// Open a writer and emit the magic + version header.
+    pub fn new(w: W) -> SnapResult<SnapWriter<W>> {
+        let mut sw = SnapWriter { w, written: 0 };
+        sw.raw(SNAP_MAGIC)?;
+        sw.u32(SNAP_VERSION)?;
+        Ok(sw)
+    }
+
+    pub fn bytes_written(&self) -> u64 {
+        self.written
+    }
+
+    pub fn raw(&mut self, bytes: &[u8]) -> SnapResult<()> {
+        self.w.write_all(bytes)?;
+        self.written += bytes.len() as u64;
+        Ok(())
+    }
+
+    pub fn u8(&mut self, v: u8) -> SnapResult<()> {
+        self.raw(&[v])
+    }
+
+    pub fn bool(&mut self, v: bool) -> SnapResult<()> {
+        self.u8(v as u8)
+    }
+
+    pub fn u32(&mut self, v: u32) -> SnapResult<()> {
+        self.raw(&v.to_le_bytes())
+    }
+
+    pub fn u64(&mut self, v: u64) -> SnapResult<()> {
+        self.raw(&v.to_le_bytes())
+    }
+
+    pub fn usize(&mut self, v: usize) -> SnapResult<()> {
+        self.u64(v as u64)
+    }
+
+    pub fn i32(&mut self, v: i32) -> SnapResult<()> {
+        self.raw(&v.to_le_bytes())
+    }
+
+    pub fn f32(&mut self, v: f32) -> SnapResult<()> {
+        self.raw(&v.to_bits().to_le_bytes())
+    }
+
+    pub fn f64(&mut self, v: f64) -> SnapResult<()> {
+        self.raw(&v.to_bits().to_le_bytes())
+    }
+
+    pub fn opt_u64(&mut self, v: Option<u64>) -> SnapResult<()> {
+        match v {
+            None => self.u8(0),
+            Some(x) => {
+                self.u8(1)?;
+                self.u64(x)
+            }
+        }
+    }
+
+    pub fn bytes(&mut self, v: &[u8]) -> SnapResult<()> {
+        self.u64(v.len() as u64)?;
+        self.raw(v)
+    }
+
+    pub fn str(&mut self, v: &str) -> SnapResult<()> {
+        self.bytes(v.as_bytes())
+    }
+
+    pub fn slice_f32(&mut self, v: &[f32]) -> SnapResult<()> {
+        self.u64(v.len() as u64)?;
+        for &x in v {
+            self.f32(x)?;
+        }
+        Ok(())
+    }
+
+    pub fn slice_f64(&mut self, v: &[f64]) -> SnapResult<()> {
+        self.u64(v.len() as u64)?;
+        for &x in v {
+            self.f64(x)?;
+        }
+        Ok(())
+    }
+
+    pub fn slice_i32(&mut self, v: &[i32]) -> SnapResult<()> {
+        self.u64(v.len() as u64)?;
+        for &x in v {
+            self.i32(x)?;
+        }
+        Ok(())
+    }
+
+    pub fn slice_u64(&mut self, v: &[u64]) -> SnapResult<()> {
+        self.u64(v.len() as u64)?;
+        for &x in v {
+            self.u64(x)?;
+        }
+        Ok(())
+    }
+
+    /// Emit the trailer sentinel and flush; must be the final call.
+    pub fn finish(mut self) -> SnapResult<u64> {
+        self.u64(SNAP_TRAILER)?;
+        self.w.flush()?;
+        Ok(self.written)
+    }
+}
+
+// --- reader --------------------------------------------------------------
+
+/// Forward-only snapshot reader. Every read names the field it is
+/// consuming so a truncated or garbled stream fails with "snapshot
+/// corrupt: truncated reading `<field>` at byte N", never a panic.
+pub struct SnapReader<R: Read> {
+    r: R,
+    read: u64,
+}
+
+impl<R: Read> SnapReader<R> {
+    /// Open a reader and validate the magic + version header.
+    pub fn new(r: R) -> SnapResult<SnapReader<R>> {
+        let mut sr = SnapReader { r, read: 0 };
+        let mut magic = [0u8; 15];
+        sr.fill(&mut magic, "header magic")?;
+        if &magic != SNAP_MAGIC {
+            return Err(corrupt(format!(
+                "bad magic {:?} (expected {:?}) — not a mixkvq snapshot",
+                String::from_utf8_lossy(&magic),
+                String::from_utf8_lossy(SNAP_MAGIC),
+            )));
+        }
+        let version = sr.u32("header version")?;
+        if version != SNAP_VERSION {
+            return Err(corrupt(format!(
+                "schema version {version} (this build reads version {SNAP_VERSION})"
+            )));
+        }
+        Ok(sr)
+    }
+
+    pub fn bytes_read(&self) -> u64 {
+        self.read
+    }
+
+    fn fill(&mut self, buf: &mut [u8], field: &str) -> SnapResult<()> {
+        let at = self.read;
+        self.r.read_exact(buf).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                corrupt(format!("truncated reading `{field}` at byte {at}"))
+            } else {
+                SnapError::Io(e)
+            }
+        })?;
+        self.read += buf.len() as u64;
+        Ok(())
+    }
+
+    pub fn u8(&mut self, field: &str) -> SnapResult<u8> {
+        let mut b = [0u8; 1];
+        self.fill(&mut b, field)?;
+        Ok(b[0])
+    }
+
+    pub fn bool(&mut self, field: &str) -> SnapResult<bool> {
+        match self.u8(field)? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(corrupt(format!("field `{field}`: bool byte {v} (want 0 or 1)"))),
+        }
+    }
+
+    pub fn u32(&mut self, field: &str) -> SnapResult<u32> {
+        let mut b = [0u8; 4];
+        self.fill(&mut b, field)?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    pub fn u64(&mut self, field: &str) -> SnapResult<u64> {
+        let mut b = [0u8; 8];
+        self.fill(&mut b, field)?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    pub fn usize(&mut self, field: &str) -> SnapResult<usize> {
+        Ok(self.u64(field)? as usize)
+    }
+
+    pub fn i32(&mut self, field: &str) -> SnapResult<i32> {
+        let mut b = [0u8; 4];
+        self.fill(&mut b, field)?;
+        Ok(i32::from_le_bytes(b))
+    }
+
+    pub fn f32(&mut self, field: &str) -> SnapResult<f32> {
+        Ok(f32::from_bits(self.u32(field)?))
+    }
+
+    pub fn f64(&mut self, field: &str) -> SnapResult<f64> {
+        Ok(f64::from_bits(self.u64(field)?))
+    }
+
+    pub fn opt_u64(&mut self, field: &str) -> SnapResult<Option<u64>> {
+        match self.u8(field)? {
+            0 => Ok(None),
+            1 => Ok(Some(self.u64(field)?)),
+            v => Err(corrupt(format!("field `{field}`: option tag {v} (want 0 or 1)"))),
+        }
+    }
+
+    /// Read a length prefix, rejecting implausible values so a corrupt
+    /// length fails with a named error instead of an allocator abort.
+    pub fn len(&mut self, field: &str) -> SnapResult<usize> {
+        let n = self.u64(field)?;
+        if n > MAX_FIELD_LEN {
+            return Err(corrupt(format!("field `{field}`: implausible length {n}")));
+        }
+        Ok(n as usize)
+    }
+
+    pub fn bytes(&mut self, field: &str) -> SnapResult<Vec<u8>> {
+        let n = self.len(field)?;
+        let mut v = vec![0u8; n];
+        self.fill(&mut v, field)?;
+        Ok(v)
+    }
+
+    pub fn str(&mut self, field: &str) -> SnapResult<String> {
+        let b = self.bytes(field)?;
+        String::from_utf8(b)
+            .map_err(|_| corrupt(format!("field `{field}`: invalid utf-8 string")))
+    }
+
+    pub fn vec_f32(&mut self, field: &str) -> SnapResult<Vec<f32>> {
+        let n = self.len(field)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f32(field)?);
+        }
+        Ok(v)
+    }
+
+    pub fn vec_f64(&mut self, field: &str) -> SnapResult<Vec<f64>> {
+        let n = self.len(field)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f64(field)?);
+        }
+        Ok(v)
+    }
+
+    pub fn vec_i32(&mut self, field: &str) -> SnapResult<Vec<i32>> {
+        let n = self.len(field)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.i32(field)?);
+        }
+        Ok(v)
+    }
+
+    pub fn vec_u64(&mut self, field: &str) -> SnapResult<Vec<u64>> {
+        let n = self.len(field)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.u64(field)?);
+        }
+        Ok(v)
+    }
+
+    /// Consume and validate the trailer sentinel — the final call.
+    pub fn finish(mut self) -> SnapResult<u64> {
+        let t = self.u64("trailer sentinel")?;
+        if t != SNAP_TRAILER {
+            return Err(corrupt(format!(
+                "trailer sentinel {t:#x} (expected {SNAP_TRAILER:#x}) — stream misaligned"
+            )));
+        }
+        Ok(self.read)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_round_trip() {
+        let mut buf = Vec::new();
+        let mut w = SnapWriter::new(&mut buf).unwrap();
+        w.u8(7).unwrap();
+        w.bool(true).unwrap();
+        w.u32(0xdead_beef).unwrap();
+        w.u64(u64::MAX - 3).unwrap();
+        w.i32(-42).unwrap();
+        w.f32(1.5e-3).unwrap();
+        w.f64(-2.25).unwrap();
+        w.opt_u64(None).unwrap();
+        w.opt_u64(Some(99)).unwrap();
+        w.str("mixkvq-mix30").unwrap();
+        w.slice_f32(&[0.0, -0.5, f32::MIN_POSITIVE]).unwrap();
+        w.slice_i32(&[-1, 0, i32::MAX]).unwrap();
+        w.slice_u64(&[1, 2, 3]).unwrap();
+        w.slice_f64(&[0.125]).unwrap();
+        w.bytes(&[9, 8, 7]).unwrap();
+        let written = w.finish().unwrap();
+        assert_eq!(written, buf.len() as u64);
+
+        let mut r = SnapReader::new(&buf[..]).unwrap();
+        assert_eq!(r.u8("a").unwrap(), 7);
+        assert!(r.bool("b").unwrap());
+        assert_eq!(r.u32("c").unwrap(), 0xdead_beef);
+        assert_eq!(r.u64("d").unwrap(), u64::MAX - 3);
+        assert_eq!(r.i32("e").unwrap(), -42);
+        assert_eq!(r.f32("f").unwrap(), 1.5e-3);
+        assert_eq!(r.f64("g").unwrap(), -2.25);
+        assert_eq!(r.opt_u64("h").unwrap(), None);
+        assert_eq!(r.opt_u64("i").unwrap(), Some(99));
+        assert_eq!(r.str("j").unwrap(), "mixkvq-mix30");
+        assert_eq!(r.vec_f32("k").unwrap(), vec![0.0, -0.5, f32::MIN_POSITIVE]);
+        assert_eq!(r.vec_i32("l").unwrap(), vec![-1, 0, i32::MAX]);
+        assert_eq!(r.vec_u64("m").unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.vec_f64("n").unwrap(), vec![0.125]);
+        assert_eq!(r.bytes("o").unwrap(), vec![9, 8, 7]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_named_errors() {
+        let err = SnapReader::new(&b"not-a-snapshot!!"[..]).unwrap_err();
+        assert!(err.to_string().contains("bad magic"), "{err}");
+
+        let mut buf = Vec::new();
+        let w = SnapWriter::new(&mut buf).unwrap();
+        w.finish().unwrap();
+        buf[SNAP_MAGIC.len()] = 99; // version byte
+        let err = SnapReader::new(&buf[..]).unwrap_err();
+        assert!(err.to_string().contains("schema version 99"), "{err}");
+    }
+
+    #[test]
+    fn truncation_names_the_field_never_panics() {
+        let mut buf = Vec::new();
+        let mut w = SnapWriter::new(&mut buf).unwrap();
+        w.str("hello").unwrap();
+        w.u64(5).unwrap();
+        w.finish().unwrap();
+        // every possible truncation point must yield Err, not panic
+        for cut in 0..buf.len() {
+            let short = &buf[..cut];
+            let r = SnapReader::new(short);
+            let Ok(mut r) = r else { continue };
+            let res = r
+                .str("greeting")
+                .and_then(|_| r.u64("count"))
+                .and_then(|_| r.finish());
+            assert!(res.is_err(), "cut at {cut} must error");
+        }
+        // full stream names a missing trailing field
+        let mut r = SnapReader::new(&buf[..buf.len() - 8]).unwrap();
+        r.str("greeting").unwrap();
+        r.u64("count").unwrap();
+        let err = r.finish().unwrap_err();
+        assert!(err.to_string().contains("trailer sentinel"), "{err}");
+    }
+
+    #[test]
+    fn implausible_length_is_rejected() {
+        let mut buf = Vec::new();
+        let mut w = SnapWriter::new(&mut buf).unwrap();
+        w.u64(u64::MAX / 2).unwrap(); // poses as a length prefix
+        w.finish().unwrap();
+        let mut r = SnapReader::new(&buf[..]).unwrap();
+        let err = r.vec_f32("huge").unwrap_err();
+        assert!(err.to_string().contains("implausible length"), "{err}");
+    }
+
+    #[test]
+    fn wrong_trailer_is_a_misalignment_error() {
+        let mut buf = Vec::new();
+        let mut w = SnapWriter::new(&mut buf).unwrap();
+        w.u64(1).unwrap();
+        w.finish().unwrap();
+        let mut r = SnapReader::new(&buf[..]).unwrap();
+        // skip nothing: the first u64 is data, so finish() reads it as the
+        // trailer and must flag the misalignment
+        let err = r.finish().unwrap_err();
+        assert!(err.to_string().contains("trailer sentinel"), "{err}");
+    }
+
+    #[test]
+    fn page_checksum_is_content_sensitive() {
+        let f = vec![0.5f32, -1.0, 3.25];
+        let b = vec![1u8, 2, 3, 4];
+        let h = page_checksum(&f, &b);
+        assert_eq!(h, page_checksum(&f, &b));
+        let mut f2 = f.clone();
+        f2[1] = -1.0000001;
+        assert_ne!(h, page_checksum(&f2, &b));
+        let mut b2 = b.clone();
+        b2[3] ^= 0x10;
+        assert_ne!(h, page_checksum(&f, &b2));
+        // -0.0 and 0.0 are distinct bit patterns and must hash differently
+        assert_ne!(page_checksum(&[0.0], &[]), page_checksum(&[-0.0], &[]));
+    }
+}

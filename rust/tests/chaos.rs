@@ -192,6 +192,107 @@ fn chaos_sweep_at_four_workers_matches_single_threaded() {
     assert_eq!(d1, d4, "fault-draw counts diverged between widths");
 }
 
+/// `run_case`, except the server is snapshotted at the `kill_at` tick
+/// boundary, torn down entirely, and rebuilt from the bytes — the
+/// submission loop (the "client population") survives the crash and keeps
+/// driving the replica.
+fn run_case_with_kill(
+    cfg: &ServerConfig,
+    seed: u64,
+    n: usize,
+    kill_at: usize,
+) -> (Vec<Event>, HashMap<u64, usize>, Server) {
+    let mut server = Server::new(small_engine(), cfg.clone());
+    let mut rng = Pcg32::seeded(seed);
+    let mut pending: Vec<Request> = (0..n).map(|i| gen_request(&mut rng, i as u64)).collect();
+    pending.reverse();
+    let max_new: HashMap<u64, usize> =
+        pending.iter().map(|r| (r.id, r.max_new_tokens)).collect();
+    let mut submitted: Vec<u64> = Vec::new();
+    let mut events = Vec::new();
+    let mut guard = 0;
+    let mut killed = false;
+    while !pending.is_empty() || server.has_work() {
+        // the crash: at the tick boundary the log is drained, so the
+        // replica's event stream continues the original's seamlessly
+        if !killed && guard >= kill_at {
+            killed = true;
+            let mut buf: Vec<u8> = Vec::new();
+            server.snapshot(&mut buf).unwrap_or_else(|e| {
+                panic!("seed {seed} tick {guard}: snapshot failed: {e}")
+            });
+            drop(server);
+            server = Server::restore(small_engine(), cfg.clone(), buf.as_slice())
+                .unwrap_or_else(|e| panic!("seed {seed} tick {guard}: restore failed: {e}"));
+            server.check_invariants().unwrap();
+        }
+        for _ in 0..rng.below(3) {
+            if let Some(r) = pending.pop() {
+                submitted.push(r.id);
+                server.submit(r).unwrap();
+            }
+        }
+        if !submitted.is_empty() && rng.below(10) == 0 {
+            let id = submitted[rng.below(submitted.len() as u32) as usize];
+            server.cancel(id);
+        }
+        server.tick().unwrap();
+        if let Err(e) = server.check_invariants() {
+            panic!("seed {seed} tick {guard}: invariant violated: {e:#}");
+        }
+        events.extend(server.drain_events());
+        guard += 1;
+        assert!(guard < 10_000, "seed {seed}: killed chaos case failed to drain");
+    }
+    events.extend(server.drain_events());
+    (events, max_new, server)
+}
+
+/// Snapshot-mid-chaos: the full hazard sweep (faults × cancels × deadlines
+/// × churn) with a snapshot/teardown/restore dropped at several mid-run
+/// tick boundaries — each killed run must replay the uninterrupted run's
+/// event stream AND fault story bit for bit, and still drain leak-free.
+#[test]
+fn snapshot_restore_mid_chaos_replays_identically() {
+    // serving-path sites armed; snapshot sites quiet so the equivalence
+    // snapshot itself is not torn by the background chaos rate
+    let cfg = ServerConfig {
+        seed: 5150,
+        faults: Some(FaultPlan::serving_uniform(5150, 0.15)),
+        max_prefills_per_cycle: 2,
+        ..ServerConfig::default()
+    };
+    let n = 12;
+    let mut baseline = Server::new(small_engine(), cfg.clone());
+    let (e1, max_new) = run_case(&mut baseline, 5150, n);
+    let i1 = baseline.metrics.faults_injected;
+    assert!(i1.iter().sum::<u64>() > 0, "sweep injected no faults");
+
+    for kill_at in [1usize, 4, 9] {
+        let (e2, _, replica) = run_case_with_kill(&cfg, 5150, n, kill_at);
+        assert_eq!(
+            e1, e2,
+            "kill at tick {kill_at}: restored run diverged from uninterrupted"
+        );
+        assert_eq!(
+            i1, replica.metrics.faults_injected,
+            "kill at tick {kill_at}: fault story diverged across the restore"
+        );
+        assert_eq!(replica.metrics.restores, 1);
+        let streams = by_request(&e2);
+        assert_eq!(streams.len(), n, "kill at tick {kill_at}: missing streams");
+        for (id, stream) in &streams {
+            validate_stream(stream, max_new[id])
+                .unwrap_or_else(|e| panic!("kill {kill_at} req {id}: {e}"));
+        }
+        assert_eq!(
+            replica.pool.leased(),
+            pinned_pages(&replica),
+            "kill at tick {kill_at}: leaked pages after drain"
+        );
+    }
+}
+
 /// Same seed, same fault plan, same arrivals ⇒ bit-identical event streams
 /// and bit-identical per-site fault counts across two fresh servers.
 #[test]

@@ -1,0 +1,356 @@
+//! Crash-safety suite: deterministic snapshot/restore of a live `Server`
+//! with integrity-checked KV pages.
+//!
+//! The contract under test (lib.rs "Crash recovery & snapshot ABI"):
+//!
+//! 1. **Equivalence** — killing the server at an arbitrary tick boundary,
+//!    restoring from the snapshot bytes, and draining produces the exact
+//!    event stream of the uninterrupted same-seed run, across methods,
+//!    worker widths {1, 4}, and chaos on/off (`harness::traffic` level and
+//!    raw `Server` level both);
+//! 2. **Degradation, not abortion** — a snapshot whose every KV page took
+//!    a bit flip still restores: each corrupt page is quarantined and only
+//!    its owning request retires `Error`; queued (page-less) requests ride
+//!    through and complete;
+//! 3. **Torn writes fail cleanly** — an injected mid-stream write fault
+//!    makes `snapshot` return `Err` and leaves the live server serving;
+//! 4. **Truncation never panics** — every prefix of a valid snapshot is a
+//!    descriptive `Err` from `restore`, not a slice panic or an abort.
+//!
+//! Runs on the artifact-free reference engine, so this is tier-1.
+
+use std::collections::HashMap;
+
+use mixkvq::coordinator::engine::Engine;
+use mixkvq::coordinator::events::{by_request, validate_stream, Event};
+use mixkvq::coordinator::router::{Server, ServerConfig};
+use mixkvq::coordinator::session::{FinishReason, Request};
+use mixkvq::harness::traffic::{
+    deterministic_pair, run, run_with_kill, Arrival, TrafficConfig,
+};
+use mixkvq::harness::workloads;
+use mixkvq::model::config::{Meta, ModelConfig};
+use mixkvq::model::sampler::Sampling;
+use mixkvq::quant::methods::Method;
+use mixkvq::util::faults::{FaultPlan, FaultSite};
+use mixkvq::util::rng::Pcg32;
+
+/// Two-layer build so the sweep stays cheap.
+fn small_meta() -> Meta {
+    let mut meta = Meta::default_build();
+    meta.model = ModelConfig { n_layers: 2, ..meta.model };
+    for v in &mut meta.variants {
+        v.layers.truncate(2);
+        while v.layers.len() < 2 {
+            let last = *v.layers.last().unwrap();
+            v.layers.push(last);
+        }
+    }
+    meta
+}
+
+fn small_engine() -> Engine {
+    Engine::new_reference(small_meta(), 11, Method::bf16(), 32).unwrap()
+}
+
+fn small_cfg(workers: usize, chaos: f64) -> TrafficConfig {
+    TrafficConfig {
+        seed: 1717,
+        sessions: 24,
+        tenants: 3,
+        arrival: Arrival::PoissonBurst {
+            rate: 4.0,
+            burst_every: 10,
+            burst_len: 3,
+            burst_rate: 12.0,
+        },
+        max_new: 5,
+        prompt_pool: 4,
+        prompt_lo: 24,
+        prompt_hi: 64,
+        chaos,
+        workers,
+        max_prefills_per_cycle: 2,
+        ..TrafficConfig::default()
+    }
+}
+
+fn gen_request(rng: &mut Pcg32, id: u64) -> Request {
+    let ctx = 16 + rng.below(32) as usize;
+    Request {
+        id,
+        prompt: workloads::gen_passkey(rng, ctx).prompt,
+        max_new_tokens: 2 + rng.below(5) as usize,
+        sampling: Sampling::Greedy,
+        method: None,
+        tenant: rng.below(3),
+        deadline_ticks: None,
+    }
+}
+
+/// Submit `n` requests and tick until pages are actually leased — the
+/// snapshot under test must carry live KV state, not an idle server.
+fn warm_server(server: &mut Server, seed: u64, n: usize) -> HashMap<u64, usize> {
+    let mut rng = Pcg32::seeded(seed);
+    let mut max_new = HashMap::new();
+    for i in 0..n {
+        let req = gen_request(&mut rng, i as u64);
+        max_new.insert(req.id, req.max_new_tokens);
+        server.submit(req).unwrap();
+    }
+    let mut guard = 0;
+    while server.pool.leased() == 0 {
+        server.tick().unwrap();
+        guard += 1;
+        assert!(guard < 100, "server never leased a page");
+    }
+    server.check_invariants().unwrap();
+    max_new
+}
+
+/// Tick to drain, auditing invariants every tick; returns all events.
+fn drain(server: &mut Server) -> Vec<Event> {
+    let mut events = server.drain_events();
+    let mut guard = 0;
+    while server.has_work() {
+        server.tick().unwrap();
+        server.check_invariants().unwrap();
+        events.extend(server.drain_events());
+        guard += 1;
+        assert!(guard < 10_000, "drain stalled");
+    }
+    events.extend(server.drain_events());
+    events
+}
+
+/// Equivalence at the harness level: kill-at-tick → restore → drain must
+/// reproduce the uninterrupted run's fingerprint bit for bit, across
+/// method mixes × worker widths {1, 4} × chaos on/off.
+#[test]
+fn kill_and_restore_matches_uninterrupted_across_configs() {
+    let mixes: [&[&str]; 2] = [&[], &["mixkvq-mix225", "kivi-kv2"]];
+    for mix in mixes {
+        for workers in [1usize, 4] {
+            for chaos in [0.0, 0.1] {
+                let mut cfg = small_cfg(workers, chaos);
+                cfg.method_mix = mix.iter().map(|s| s.parse().unwrap()).collect();
+                let label = format!("mix={mix:?} workers={workers} chaos={chaos}");
+                let mk = || Engine::new_reference(small_meta(), 11, Method::bf16(), 32);
+                let clean = run(mk().unwrap(), &cfg).unwrap();
+                let (restored, stats) = run_with_kill(&mk, &cfg, 3).unwrap();
+                assert!(stats.snapshot_bytes > 0, "{label}: kill tick never reached");
+                assert!(
+                    deterministic_pair(&clean, &restored),
+                    "{label}: killed-and-restored run drifted \
+                     (fingerprint {:016x} vs {:016x})",
+                    clean.fingerprint,
+                    restored.fingerprint
+                );
+                assert_eq!(
+                    clean.faults_injected, restored.faults_injected,
+                    "{label}: fault story diverged across the restore"
+                );
+                assert_eq!(restored.leaked_pages, 0, "{label}: leaked pages");
+            }
+        }
+    }
+}
+
+/// Equivalence at the raw `Server` level: after the snapshot point both
+/// the original (uninterrupted) server and the restored replica receive
+/// zero further input — their drained event streams must be identical.
+#[test]
+fn restored_server_replays_the_original_event_stream() {
+    let cfg = ServerConfig { seed: 31, max_prefills_per_cycle: 2, ..ServerConfig::default() };
+    let mut server = Server::new(small_engine(), cfg.clone());
+    let max_new = warm_server(&mut server, 31, 10);
+    let pre = server.drain_events(); // both tails start from an empty log
+
+    let mut buf: Vec<u8> = Vec::new();
+    let bytes = server.snapshot(&mut buf).unwrap();
+    assert_eq!(bytes as usize, buf.len());
+    assert_eq!(server.metrics.snapshots, 1);
+
+    let tail_live = drain(&mut server);
+    drop(server); // the "crash"
+
+    let mut replica = Server::restore(small_engine(), cfg, buf.as_slice()).unwrap();
+    replica.check_invariants().unwrap();
+    assert_eq!(replica.metrics.restores, 1);
+    assert_eq!(replica.metrics.pages_quarantined, 0);
+    assert_eq!(replica.scrub(), 0, "clean restore must scrub clean");
+    let tail_replica = drain(&mut replica);
+    assert_eq!(
+        tail_live, tail_replica,
+        "restored server diverged from the uninterrupted original"
+    );
+
+    // the combined stream is well-formed per request
+    let mut events = pre;
+    events.extend(tail_replica);
+    let streams = by_request(&events);
+    assert_eq!(streams.len(), max_new.len());
+    for (id, stream) in &streams {
+        validate_stream(stream, max_new[id]).unwrap();
+    }
+}
+
+/// Degradation, not abortion: with `SnapshotCorrupt` armed at rate 1.0
+/// EVERY serialized page takes a bit flip. The restore must still succeed
+/// — each corrupt page quarantined, only its owning (admitted) request
+/// retired `Error` — while queued page-less requests complete normally.
+#[test]
+fn fully_corrupt_snapshot_degrades_per_request_never_aborts() {
+    let cfg = ServerConfig {
+        seed: 47,
+        faults: Some(
+            FaultPlan::uniform(47, 0.0).with_rate(FaultSite::SnapshotCorrupt, 1.0),
+        ),
+        max_prefills_per_cycle: 1,
+        ..ServerConfig::default()
+    };
+    let mut server = Server::new(small_engine(), cfg.clone());
+    let n = 10;
+    let max_new = warm_server(&mut server, 47, n);
+    server.drain_events();
+
+    let mut buf: Vec<u8> = Vec::new();
+    server.snapshot(&mut buf).unwrap();
+    drop(server);
+
+    let mut replica = Server::restore(small_engine(), cfg, buf.as_slice()).unwrap();
+    replica.check_invariants().unwrap();
+    assert!(
+        replica.metrics.pages_quarantined > 0,
+        "rate-1.0 corruption must quarantine every restored page"
+    );
+    assert!(
+        replica.metrics.restore_retired > 0,
+        "page-owning requests must retire at restore"
+    );
+    let events = drain(&mut replica);
+    let streams = by_request(&events);
+    let mut errored = 0;
+    let mut completed = 0;
+    for (id, stream) in &streams {
+        validate_stream(stream, max_new[id]).unwrap();
+        match stream.last() {
+            Some(Event::Finished { reason: FinishReason::Error, .. }) => errored += 1,
+            Some(Event::Finished { .. }) => completed += 1,
+            other => panic!("req {id}: no terminal event, got {other:?}"),
+        }
+    }
+    assert_eq!(errored as u64, replica.metrics.restore_retired);
+    assert!(
+        completed > 0,
+        "queued page-less requests must survive a fully corrupt snapshot"
+    );
+    replica.check_invariants().unwrap();
+}
+
+/// A seeded partial corruption rate quarantines a strict subset and stays
+/// reproducible: same seed, same snapshot, same casualty list.
+#[test]
+fn partial_corruption_is_deterministic() {
+    let attempt = || {
+        let cfg = ServerConfig {
+            seed: 53,
+            faults: Some(
+                FaultPlan::uniform(53, 0.0).with_rate(FaultSite::SnapshotCorrupt, 0.4),
+            ),
+            max_prefills_per_cycle: 1,
+            ..ServerConfig::default()
+        };
+        let mut server = Server::new(small_engine(), cfg.clone());
+        warm_server(&mut server, 53, 10);
+        server.drain_events();
+        let mut buf: Vec<u8> = Vec::new();
+        server.snapshot(&mut buf).unwrap();
+        let mut replica = Server::restore(small_engine(), cfg, buf.as_slice()).unwrap();
+        replica.check_invariants().unwrap();
+        let events = drain(&mut replica);
+        (replica.metrics.pages_quarantined, replica.metrics.restore_retired, events)
+    };
+    let (q1, r1, e1) = attempt();
+    let (q2, r2, e2) = attempt();
+    assert_eq!(q1, q2, "quarantine count must replay bit-for-bit");
+    assert_eq!(r1, r2, "casualty count must replay bit-for-bit");
+    assert_eq!(e1, e2, "post-restore event streams must replay bit-for-bit");
+}
+
+/// Torn writes: with `SnapshotWrite` armed at 1.0 the snapshot attempt
+/// errors mid-stream — and the LIVE server keeps serving as if nothing
+/// happened (the operator keeps the previous snapshot file).
+#[test]
+fn torn_snapshot_write_errors_and_leaves_the_server_serving() {
+    let cfg = ServerConfig {
+        seed: 61,
+        faults: Some(
+            FaultPlan::uniform(61, 0.0).with_rate(FaultSite::SnapshotWrite, 1.0),
+        ),
+        ..ServerConfig::default()
+    };
+    let mut server = Server::new(small_engine(), cfg);
+    let max_new = warm_server(&mut server, 61, 8);
+    let mut buf: Vec<u8> = Vec::new();
+    let err = server.snapshot(&mut buf).unwrap_err();
+    assert!(
+        err.to_string().contains("torn"),
+        "torn-write error must say what happened: {err}"
+    );
+    // serving continues: drain clean, every stream terminal
+    server.check_invariants().unwrap();
+    let events = drain(&mut server);
+    let streams = by_request(&events);
+    assert_eq!(streams.len(), max_new.len());
+    for (id, stream) in &streams {
+        validate_stream(stream, max_new[id]).unwrap();
+        assert!(matches!(stream.last(), Some(Event::Finished { .. })));
+    }
+}
+
+/// Every truncation of a valid snapshot is a descriptive `Err`, never a
+/// panic — the restore path must survive arbitrarily torn files.
+#[test]
+fn truncated_snapshots_error_never_panic() {
+    let cfg = ServerConfig { seed: 67, ..ServerConfig::default() };
+    let mut server = Server::new(small_engine(), cfg.clone());
+    warm_server(&mut server, 67, 6);
+    let mut buf: Vec<u8> = Vec::new();
+    server.snapshot(&mut buf).unwrap();
+    drop(server);
+
+    // all of the header region, a spread across the body, the final byte
+    let mut cuts: Vec<usize> = (0..buf.len().min(64)).collect();
+    for k in 1..=16usize {
+        cuts.push(buf.len() * k / 17);
+    }
+    cuts.push(buf.len().saturating_sub(1));
+    cuts.sort_unstable();
+    cuts.dedup();
+    for cut in cuts {
+        let r = Server::restore(small_engine(), cfg.clone(), &buf[..cut]);
+        assert!(r.is_err(), "restore from {cut}/{} bytes must fail", buf.len());
+    }
+}
+
+/// Geometry guard: a snapshot taken under one server geometry must refuse
+/// to load into a server built differently, naming the field.
+#[test]
+fn geometry_mismatch_is_refused_by_name() {
+    let cfg = ServerConfig { seed: 71, ..ServerConfig::default() };
+    let mut server = Server::new(small_engine(), cfg.clone());
+    warm_server(&mut server, 71, 4);
+    let mut buf: Vec<u8> = Vec::new();
+    server.snapshot(&mut buf).unwrap();
+    drop(server);
+
+    // same model, different residual budget — a geometry field
+    let narrow = Engine::new_reference(small_meta(), 11, Method::bf16(), 16).unwrap();
+    let err = Server::restore(narrow, cfg, buf.as_slice()).unwrap_err();
+    let msg = err.to_string();
+    assert!(
+        msg.contains("geometry") && msg.contains("r_limit"),
+        "geometry refusal must name the field: {msg}"
+    );
+}

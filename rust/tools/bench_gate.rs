@@ -26,7 +26,13 @@
 //! * `BENCH_parallel.json` — the worker pool must hold ≥2× tick throughput
 //!   at 4 workers over the single-threaded run, with ZERO fingerprint
 //!   drift between the widths (parallelism is a perf optimisation, never a
-//!   semantics change).
+//!   semantics change);
+//! * `BENCH_restore.json` — the kill-and-restore smoke (`mixkvq traffic
+//!   --kill-at-tick`) must show **zero drift** between every
+//!   killed-and-restored run and its uninterrupted same-seed twin, a
+//!   non-empty snapshot, and a restore cost of at most ~2 ticks of
+//!   service (crash recovery that loses state or stalls serving is a
+//!   regression, not a feature).
 //!
 //! A missing or unparseable artifact is itself a violation: the gate exists
 //! so a bench that silently stops running (or changes schema) cannot merge.
@@ -65,6 +71,10 @@ pub const TRAFFIC_P99_TTFT_MAX_MS: f64 = 5000.0;
 /// The worker pool must hold at least this many × tick throughput at
 /// 4 workers over the single-threaded run of the same seeded workload.
 pub const PARALLEL_SCALING_MIN: f64 = 2.0;
+/// Restoring from a snapshot may cost at most this many × the slowest
+/// post-restore tick — crash recovery must not stall serving for longer
+/// than a couple of ticks of ordinary work.
+pub const RESTORE_COST_MAX_TICKS: f64 = 2.0;
 
 /// Context length/prompt length at and above which the decode/prefill
 /// speedup bars apply (short contexts are fixed-overhead dominated).
@@ -299,9 +309,64 @@ fn gate_parallel(j: &Json) -> Result<Vec<String>> {
     Ok(v)
 }
 
+fn gate_restore(j: &Json) -> Result<Vec<String>> {
+    let mut v = Vec::new();
+    // the writer stamps its schema; a version we don't read is drift, and
+    // judging its runs by v1 rules would be guessing
+    let schema = j.get("schema")?.as_str()?;
+    if schema != "restore-v1" {
+        v.push(format!(
+            "restore: unknown report schema `{schema}` (this gate reads restore-v1)"
+        ));
+        return Ok(v);
+    }
+    let runs = j.get("runs")?.as_arr()?;
+    if runs.is_empty() {
+        v.push(
+            "restore: report has NO runs — did the kill-and-restore smoke run?".to_string(),
+        );
+        return Ok(v);
+    }
+    for r in runs {
+        let workers = r.get("workers")?.as_f64()?;
+        let bytes = r.get("snapshot_bytes")?.as_f64()?;
+        let restore_ms = r.get("restore_ms")?.as_f64()?;
+        let tick_ms = r.get("tick_ms")?.as_f64()?;
+        let fp = r.get("fingerprint")?.as_str()?;
+        let fp2 = r.get("fingerprint_restored")?.as_str()?;
+        if bytes <= 0.0 {
+            v.push(format!(
+                "restore: empty snapshot at workers={workers} — the kill tick \
+                 was never reached"
+            ));
+        }
+        // zero drift: the killed-and-restored run must replay the exact
+        // event stream of its uninterrupted twin; divergence means the
+        // snapshot lost (or invented) serving state
+        if !matches!(r.get("drift")?, Json::Bool(false)) || fp != fp2 {
+            v.push(format!(
+                "restore: killed-and-restored run drifted from its \
+                 uninterrupted twin at workers={workers} (fingerprint {fp} \
+                 vs {fp2}) — the snapshot lost state"
+            ));
+        }
+        if restore_ms > RESTORE_COST_MAX_TICKS * tick_ms {
+            v.push(format!(
+                "restore: restore cost {restore_ms:.2} ms > \
+                 {RESTORE_COST_MAX_TICKS}x the slowest post-restore tick \
+                 ({tick_ms:.2} ms) at workers={workers}"
+            ));
+        }
+    }
+    if !matches!(j.get("deterministic")?, Json::Bool(true)) {
+        v.push("restore: report's own deterministic verdict is false".to_string());
+    }
+    Ok(v)
+}
+
 type Gate = fn(&Json) -> Result<Vec<String>>;
 
-const GATES: [(&str, Gate); 7] = [
+const GATES: [(&str, Gate); 8] = [
     ("BENCH_ref_decode.json", gate_ref_decode),
     ("BENCH_paged_decode.json", gate_paged_decode),
     ("BENCH_prefill.json", gate_prefill),
@@ -309,6 +374,7 @@ const GATES: [(&str, Gate); 7] = [
     ("BENCH_traffic.json", gate_traffic),
     ("BENCH_chaos.json", gate_chaos),
     ("BENCH_parallel.json", gate_parallel),
+    ("BENCH_restore.json", gate_restore),
 ];
 
 /// Run every gate over `dir`, returning the full violation list (empty =
@@ -341,7 +407,9 @@ fn main() -> ExitCode {
              {PAGED_OVERHEAD_MAX_PCT}%, prefix dedup >= {PREFIX_DEDUP_MIN}x, \
              traffic p99 TTFT <= {TRAFFIC_P99_TTFT_MAX_MS} ms + deterministic, \
              chaos soak all-terminal + invariant-clean + leak-free, \
-             parallel scaling >= {PARALLEL_SCALING_MIN}x + drift-free)"
+             parallel scaling >= {PARALLEL_SCALING_MIN}x + drift-free, \
+             kill-and-restore drift-free + restore <= \
+             {RESTORE_COST_MAX_TICKS}x tick)"
         );
         return ExitCode::SUCCESS;
     }
@@ -584,6 +652,79 @@ mod tests {
         assert!(v[0].contains("NO entries"), "{v:?}");
     }
 
+    fn restore_report(
+        fp1: &str,
+        fp1r: &str,
+        restore_ms: f64,
+        tick_ms: f64,
+        bytes: f64,
+    ) -> String {
+        let drift = fp1 != fp1r;
+        format!(
+            r#"{{"schema":"restore-v1","sessions":24,"runs":[
+                {{"workers":1,"snapshot_bytes":{bytes},"snapshot_ms":0.8,
+                  "restore_ms":{restore_ms},"tick_ms":{tick_ms},
+                  "fingerprint":"{fp1}","fingerprint_restored":"{fp1r}",
+                  "drift":{drift}}},
+                {{"workers":4,"snapshot_bytes":{bytes},"snapshot_ms":0.8,
+                  "restore_ms":{restore_ms},"tick_ms":{tick_ms},
+                  "fingerprint":"0b5e55ed","fingerprint_restored":"0b5e55ed",
+                  "drift":false}}],
+                "deterministic":{}}}"#,
+            !drift
+        )
+    }
+
+    #[test]
+    fn healthy_restore_report_passes() {
+        let src = restore_report("c0ffee01", "c0ffee01", 3.0, 2.0, 81920.0);
+        let v = gate_restore(&parse(&src)).unwrap();
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn restore_gate_catches_every_degradation_independently() {
+        // drift between the killed run and its uninterrupted twin — the
+        // mismatched fingerprints AND the honest drift/deterministic flags
+        // each trip, but drift is reported once per run
+        let v = gate_restore(&parse(&restore_report(
+            "c0ffee01", "c0ffee02", 3.0, 2.0, 81920.0,
+        )))
+        .unwrap();
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v[0].contains("drifted") && v[0].contains("workers=1"), "{v:?}");
+        assert!(v[1].contains("deterministic"), "{v:?}");
+        // a lying drift=false with equal fingerprints but deterministic
+        // honestly false still fails on the summary verdict
+        let src = restore_report("aa", "aa", 3.0, 2.0, 81920.0)
+            .replace(r#""deterministic":true"#, r#""deterministic":false"#);
+        let v = gate_restore(&parse(&src)).unwrap();
+        assert_eq!(v.len(), 1, "{v:?}");
+        // restore slower than 2 ticks of service (both runs trip)
+        let v = gate_restore(&parse(&restore_report("aa", "aa", 9.0, 2.0, 81920.0))).unwrap();
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v[0].contains("restore cost"), "{v:?}");
+        // empty snapshot: the kill tick was never reached
+        let v = gate_restore(&parse(&restore_report("aa", "aa", 3.0, 2.0, 0.0))).unwrap();
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v[0].contains("empty snapshot"), "{v:?}");
+        // no runs at all
+        let none = r#"{"schema":"restore-v1","sessions":24,"runs":[],
+                       "deterministic":true}"#;
+        let v = gate_restore(&parse(none)).unwrap();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("NO runs"), "{v:?}");
+        // a schema we don't read is drift, not a pass
+        let v2 = r#"{"schema":"restore-v2","runs":[],"deterministic":true}"#;
+        let v = gate_restore(&parse(v2)).unwrap();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("restore-v2") && v[0].contains("restore-v1"), "{v:?}");
+        // a run missing a field is schema drift → hard error
+        let gutted = r#"{"schema":"restore-v1","runs":[{"workers":1}],
+                         "deterministic":true}"#;
+        assert!(gate_restore(&parse(gutted)).is_err());
+    }
+
     #[test]
     fn empty_entries_are_a_violation() {
         // a bench that regresses to writing no data must not pass green
@@ -647,6 +788,11 @@ mod tests {
         std::fs::write(
             dir.join("BENCH_parallel.json"),
             parallel_report(100.0, 275.0, "cafe0123", "cafe0123"),
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("BENCH_restore.json"),
+            restore_report("c0ffee01", "c0ffee01", 2.5, 1.8, 65536.0),
         )
         .unwrap();
         assert!(run_gates(&dir).is_empty());
