@@ -40,7 +40,7 @@ fn main() {
         let task = workloads::gen_passkey(&mut rng, 450);
         let pre = engine.prefill(&task.prompt).unwrap();
         let mut caches: Vec<RequestCache> =
-            (0..b).map(|_| engine.admit_prefill(&pre).unwrap()).collect();
+            (0..b).map(|_| engine.quantize_prefill(&pre).unwrap()).collect();
         let name = format!("decode step B={b} qlen={} ({})", caches[0].qlen, method.name);
         results.push(bench(&name, 100, 3000.0, || {
             let mut slots: Vec<Option<(&mut RequestCache, i32)>> =

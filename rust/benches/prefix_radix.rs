@@ -1,0 +1,336 @@
+//! `cargo bench --bench prefix_radix` — the shared-system-prompt serving
+//! workload over the radix prefix tree: one producer registers a 2048-token
+//! system prefix, then K consumers arrive with divergent ~64-token suffixes
+//! and take frozen-plan *partial* hits through the unified
+//! `Engine::admit_prefill` API, resuming their chunked prefills from the
+//! divergence seam instead of token 0.
+//!
+//! Like the other reference benches this needs **no artifacts** (random
+//! weights, build-default shapes with a widened cache capacity), so it
+//! always runs and writes `BENCH_prefix_radix.json`, which the CI
+//! `bench-gate` binary holds to the ROADMAP bars:
+//!
+//! * page dedup ≥2×: K resident partial-hit consumers must hold ≥2× fewer
+//!   pool pages than K private prefills would;
+//! * zero same-seed fingerprint drift: the whole scenario runs twice from
+//!   identical seeds with the tree enabled and must produce bit-identical
+//!   logits, admission verdicts, and lease counts;
+//! * frozen-plan error: a `frozen_plan_sweep` over the serving roster —
+//!   every method whose frozen-plan default is ON must measure inside
+//!   `FROZEN_PLAN_NLL_BUDGET`.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use mixkvq::coordinator::engine::{Engine, PrefillAdmission};
+use mixkvq::harness::profiling::{frozen_plan_sweep, FrozenPlanConfig};
+use mixkvq::kvcache::radix::RadixTree;
+use mixkvq::model::config::Meta;
+use mixkvq::quant::methods::{Method, MethodSpec};
+use mixkvq::util::bench::bench;
+use mixkvq::util::json::{self, Json};
+use mixkvq::util::rng::Pcg32;
+
+const SHARED_TOKENS: usize = 2048;
+const SUFFIX_TOKENS: usize = 64;
+const K_CONSUMERS: usize = 4;
+const SEED: u64 = 4801;
+
+/// Build-default shapes except the cache window, widened so a 2048-token
+/// system prefix fits the quantized window (default capacity is 512).
+fn bench_meta() -> Meta {
+    let mut meta = Meta::default_build();
+    meta.cache.capacity = 2048;
+    meta
+}
+
+fn fnv1a(acc: u64, bytes: &[u8]) -> u64 {
+    let mut h = acc;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn mix_usize(acc: u64, v: usize) -> u64 {
+    fnv1a(acc, &(v as u64).to_le_bytes())
+}
+
+fn mix_logits(acc: u64, logits: &[f32]) -> u64 {
+    let mut h = acc;
+    for &x in logits {
+        h = fnv1a(h, &x.to_bits().to_le_bytes());
+    }
+    h
+}
+
+struct Scenario {
+    fingerprint: u64,
+    matched_tokens: usize,
+    seam: usize,
+    pages_shared: usize,
+    pages_private_equiv: usize,
+    dedup_ratio: f64,
+    chunks_skipped: usize,
+    bytes_deduped: u64,
+}
+
+/// One full pass of the workload: producer registration, then K staggered
+/// consumers taking frozen-plan partial hits through `admit_prefill`.
+/// Everything observable folds into the fingerprint so a repeat run from
+/// the same seed must reproduce it bit-for-bit.
+fn run_scenario(
+    meta: &Meta,
+    method: &Method,
+    producer_prompt: &[i32],
+    consumer_prompts: &[Vec<i32>],
+    private_pages_per_consumer: usize,
+) -> Scenario {
+    let r_limit = meta.cache.residual;
+    let group = meta.cache.group;
+    let mut engine =
+        Engine::new_reference(meta.clone(), SEED, method.clone(), r_limit).expect("engine");
+    let pool = engine.build_shared_pool(64 << 20);
+    let page_bytes = pool.page_deploy_bytes();
+    engine.set_kv_pool(pool);
+    let tree = Rc::new(RefCell::new(RadixTree::new(1 << 20, page_bytes)));
+    engine.set_prefix_tree(tree.clone());
+
+    let mut fp = 0xcbf29ce484222325u64;
+
+    // producer: a miss, run to completion, register the chain
+    let (adm, mut pcp) = engine.admit_prefill(producer_prompt, method).expect("producer admit");
+    assert_eq!(adm, PrefillAdmission::Miss, "producer must miss the empty tree");
+    while !engine
+        .advance_prefill_chunked(&mut pcp, producer_prompt, usize::MAX)
+        .expect("producer chunk")
+    {}
+    let last = pcp.run.last_logits().to_vec();
+    assert!(
+        engine.register_prefix(&mut pcp.cache, producer_prompt, method, &last),
+        "producer registration refused"
+    );
+    fp = mix_logits(fp, &last);
+    drop(pcp);
+
+    // staggered consumers: admit all K, then round-robin small chunk
+    // budgets so their resumed prefills are in flight concurrently
+    let mut matched_tokens = 0;
+    let mut seam_at = 0;
+    let mut live = Vec::new();
+    for prompt in consumer_prompts {
+        let (adm, cp) = engine.admit_prefill(prompt, method).expect("consumer admit");
+        match adm {
+            PrefillAdmission::PartialHit { matched_tokens: m, seam } => {
+                matched_tokens = m;
+                seam_at = seam;
+                fp = mix_usize(mix_usize(fp, m), seam);
+            }
+            other => panic!("consumer expected a partial hit, got {other:?}"),
+        }
+        live.push(cp);
+    }
+    let mut done = vec![false; live.len()];
+    while done.iter().any(|d| !d) {
+        for (i, cp) in live.iter_mut().enumerate() {
+            if !done[i] {
+                done[i] = engine
+                    .advance_prefill_chunked(cp, &consumer_prompts[i], 4)
+                    .expect("consumer chunk");
+            }
+        }
+    }
+    for cp in &live {
+        fp = mix_logits(fp, cp.run.last_logits());
+        fp = mix_usize(fp, cp.cache.leased_pages());
+    }
+
+    // dedup accounting while all K consumers are resident
+    let pages_shared = engine.kv_pool().expect("pool").leased();
+    let pages_private_equiv = K_CONSUMERS * private_pages_per_consumer;
+    let dedup_ratio = pages_private_equiv as f64 / pages_shared.max(1) as f64;
+    let chunks_skipped = K_CONSUMERS * (seam_at / group) * meta.model.n_layers;
+    let stats = tree.borrow().stats();
+    fp = mix_usize(fp, pages_shared);
+    fp = mix_usize(fp, stats.partial_hits as usize);
+    tree.borrow().audit().expect("tree audit");
+
+    drop(live);
+    assert_eq!(
+        engine.kv_pool().expect("pool").leased(),
+        tree.borrow().pages_pinned(),
+        "after the consumers retire the tree must be the only holder"
+    );
+
+    Scenario {
+        fingerprint: fp,
+        matched_tokens,
+        seam: seam_at,
+        pages_shared,
+        pages_private_equiv,
+        dedup_ratio,
+        chunks_skipped,
+        bytes_deduped: stats.bytes_deduped,
+    }
+}
+
+fn main() {
+    let meta = bench_meta();
+    let method = Method::mixkvq("mix30");
+    let r_limit = meta.cache.residual;
+    let group = meta.cache.group;
+    assert_eq!(SHARED_TOKENS % group, 0);
+
+    let mut rng = Pcg32::seeded(SEED);
+    let vocab = meta.model.vocab as i32;
+    let mut toks = |n: usize| -> Vec<i32> {
+        (0..n).map(|_| (rng.next_u32() as i32).rem_euclid(vocab)).collect()
+    };
+    let shared = toks(SHARED_TOKENS);
+    // the producer ends exactly r_limit past the shared boundary so its
+    // quantized window — the registered chain — covers the prefix precisely
+    let producer_prompt: Vec<i32> =
+        shared.iter().copied().chain(toks(r_limit)).collect();
+    let consumer_prompts: Vec<Vec<i32>> = (0..K_CONSUMERS)
+        .map(|_| shared.iter().copied().chain(toks(SUFFIX_TOKENS)).collect())
+        .collect();
+    let t = consumer_prompts[0].len();
+
+    // private-mode yardstick: the same consumer prompt prefilled on a
+    // tree-less but otherwise identical engine
+    let mut private_engine =
+        Engine::new_reference(meta.clone(), SEED, method.clone(), r_limit).expect("engine");
+    let pool = private_engine.build_shared_pool(64 << 20);
+    private_engine.set_kv_pool(pool);
+    let (adm, mut ecp) =
+        private_engine.admit_prefill(&consumer_prompts[0], &method).expect("private admit");
+    assert_eq!(adm, PrefillAdmission::Miss);
+    while !private_engine
+        .advance_prefill_chunked(&mut ecp, &consumer_prompts[0], usize::MAX)
+        .expect("private chunk")
+    {}
+    let private_pages_per_consumer = ecp.cache.leased_pages();
+    drop(ecp);
+
+    // same-seed determinism: the whole scenario twice, bit-for-bit
+    let first = run_scenario(&meta, &method, &producer_prompt, &consumer_prompts, private_pages_per_consumer);
+    let second = run_scenario(&meta, &method, &producer_prompt, &consumer_prompts, private_pages_per_consumer);
+    let drift = first.fingerprint != second.fingerprint;
+    assert!(!drift, "same-seed fingerprint drift with the tree enabled");
+
+    // timed: a frozen-plan partial-hit resume vs the full prefill it skips
+    let mut timed_engine =
+        Engine::new_reference(meta.clone(), SEED, method.clone(), r_limit).expect("engine");
+    let pool = timed_engine.build_shared_pool(64 << 20);
+    let page_bytes = pool.page_deploy_bytes();
+    timed_engine.set_kv_pool(pool);
+    timed_engine.set_prefix_tree(Rc::new(RefCell::new(RadixTree::new(1 << 20, page_bytes))));
+    let (_, mut pcp) =
+        timed_engine.admit_prefill(&producer_prompt, &method).expect("producer admit");
+    while !timed_engine
+        .advance_prefill_chunked(&mut pcp, &producer_prompt, usize::MAX)
+        .expect("producer chunk")
+    {}
+    let last = pcp.run.last_logits().to_vec();
+    assert!(timed_engine.register_prefix(&mut pcp.cache, &producer_prompt, &method, &last));
+    drop(pcp);
+    let hit = bench(&format!("partial-hit resume      T={t}"), 40, 2500.0, || {
+        let (adm, mut cp) =
+            timed_engine.admit_prefill(&consumer_prompts[0], &method).expect("admit");
+        assert!(matches!(adm, PrefillAdmission::PartialHit { .. }));
+        while !timed_engine
+            .advance_prefill_chunked(&mut cp, &consumer_prompts[0], usize::MAX)
+            .expect("chunk")
+        {}
+        std::hint::black_box(&cp);
+    });
+    let miss = bench(&format!("full chunked prefill    T={t}"), 20, 2500.0, || {
+        let (_, mut cp) =
+            private_engine.admit_prefill(&consumer_prompts[0], &method).expect("admit");
+        while !private_engine
+            .advance_prefill_chunked(&mut cp, &consumer_prompts[0], usize::MAX)
+            .expect("chunk")
+        {}
+        std::hint::black_box(&cp);
+    });
+    let speedup = miss.median_ms / hit.median_ms;
+
+    // frozen-plan ablation over the serving roster (build-default shapes —
+    // the sweep sizes its own prompts)
+    let sweep_specs: Vec<MethodSpec> = ["mixkvq-mix30", "bf16", "kivi-kv2", "kvquant-kv2", "kvtuner"]
+        .iter()
+        .map(|n| n.parse::<MethodSpec>().expect("roster name"))
+        .collect();
+    let sweep = frozen_plan_sweep(&Meta::default_build(), &sweep_specs, &FrozenPlanConfig::default())
+        .expect("frozen-plan sweep");
+
+    println!(
+        "T={t} K={K_CONSUMERS}: matched {} of {SHARED_TOKENS} shared tokens, seam {}",
+        first.matched_tokens, first.seam
+    );
+    println!(
+        "      pages {} shared vs {} private-mode ({:.2}x dedup{}), {} chunks skipped, {} B deduped",
+        first.pages_shared,
+        first.pages_private_equiv,
+        first.dedup_ratio,
+        if first.dedup_ratio < 2.0 { "  (below the 2x bar!)" } else { "" },
+        first.chunks_skipped,
+        first.bytes_deduped
+    );
+    println!(
+        "      resume {:.3} ms vs full prefill {:.3} ms ({speedup:.1}x), fingerprint {:#018x} (repeat drift: {drift})",
+        hit.median_ms, miss.median_ms, first.fingerprint
+    );
+    for e in &sweep {
+        println!(
+            "      frozen-plan {:<16} default_on={} nll_delta={:.4} within_budget={}",
+            e.spec.to_string(),
+            e.default_on,
+            e.nll_delta,
+            e.within_budget
+        );
+    }
+    println!("\n== prefix_radix ==");
+    println!("{}", hit.report());
+    println!("{}", miss.report());
+
+    let entries = vec![json::obj(vec![
+        ("t", json::num(t as f64)),
+        ("k", json::num(K_CONSUMERS as f64)),
+        ("shared_tokens", json::num(SHARED_TOKENS as f64)),
+        ("matched_tokens", json::num(first.matched_tokens as f64)),
+        ("seam", json::num(first.seam as f64)),
+        ("hit_resume_ms", json::num(hit.median_ms)),
+        ("full_prefill_ms", json::num(miss.median_ms)),
+        ("resume_speedup", json::num(speedup)),
+        ("pages_shared", json::num(first.pages_shared as f64)),
+        ("pages_private_equiv", json::num(first.pages_private_equiv as f64)),
+        ("dedup_ratio", json::num(first.dedup_ratio)),
+        ("chunks_skipped", json::num(first.chunks_skipped as f64)),
+        ("bytes_deduped", json::num(first.bytes_deduped as f64)),
+    ])];
+    let frozen = sweep
+        .iter()
+        .map(|e| {
+            json::obj(vec![
+                ("method", json::s(&e.spec.to_string())),
+                ("default_on", Json::Bool(e.default_on)),
+                ("logit_err", json::num(e.logit_err)),
+                ("nll_delta", json::num(e.nll_delta)),
+                ("within_budget", Json::Bool(e.within_budget)),
+            ])
+        })
+        .collect();
+    let report = json::obj(vec![
+        ("bench", json::s("prefix_radix")),
+        ("variant", json::s("mix30")),
+        ("entries", Json::Arr(entries)),
+        ("fingerprint", json::s(&format!("{:#018x}", first.fingerprint))),
+        ("fingerprint_repeat", json::s(&format!("{:#018x}", second.fingerprint))),
+        ("fingerprint_drift", Json::Bool(drift)),
+        ("frozen_plan", Json::Arr(frozen)),
+    ]);
+    std::fs::write("BENCH_prefix_radix.json", report.print() + "\n").expect("write bench json");
+    println!("wrote BENCH_prefix_radix.json");
+}

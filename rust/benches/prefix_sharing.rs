@@ -1,6 +1,7 @@
 //! `cargo bench --bench prefix_sharing` — cross-request prefix page
 //! sharing: K requests over one prompt adopt the registered shared pages
-//! (a `PrefixIndex` hit) instead of each running a private chunked prefill.
+//! (a full `RadixTree` hit) instead of each running a private chunked
+//! prefill.
 //!
 //! Like ref_decode/prefill this needs **no artifacts** (random weights,
 //! build-default shapes), so it always runs — on CI and fresh checkouts —
@@ -13,7 +14,8 @@
 
 use mixkvq::harness::refdriver::RefDriver;
 use mixkvq::kvcache::cache::RequestCache;
-use mixkvq::kvcache::pool::{prefix_seed, prompt_chain_key, KvPool, PrefixIndex};
+use mixkvq::kvcache::pool::{prefix_seed, KvPool};
+use mixkvq::kvcache::radix::{PrefixProbe, RadixTree};
 use mixkvq::model::config::Meta;
 use mixkvq::model::weights::Weights;
 use mixkvq::quant::methods::Method;
@@ -49,10 +51,10 @@ fn main() {
         let pages_per_req = private_cache.leased_pages();
         drop(private_cache);
 
-        // the serving configuration: bounded prewarmed pool + prefix index
+        // the serving configuration: bounded prewarmed pool + prefix tree
         let pool = KvPool::for_specs(specs.iter(), mc.d_head, cc.group, Some(4 * pages_per_req));
         pool.prewarm(4 * pages_per_req);
-        let mut index = PrefixIndex::new(2 * pages_per_req, pool.page_deploy_bytes());
+        let mut index = RadixTree::new(2 * pages_per_req, pool.page_deploy_bytes());
         let seed = prefix_seed(
             &driver.method.name,
             r_limit,
@@ -62,10 +64,9 @@ fn main() {
             mc.n_kv_heads,
             mc.d_head,
         );
-        let key = prompt_chain_key(seed, &prompt, cc.group);
 
         let (mut producer, last) = driver.prefill_pooled(&pool, &prompt).unwrap();
-        assert!(producer.register_prefix(&mut index, key, &prompt, &last));
+        assert!(producer.register_prefix(&mut index, seed, &prompt, &last));
         let prefix_pages = pool.leased();
         assert_eq!(prefix_pages, pages_per_req, "registration must not lease");
 
@@ -79,7 +80,12 @@ fn main() {
                 Method::mixkvq("mix30"),
                 r_limit,
             );
-            c.install_prefix(index.peek(key, &prompt).unwrap()).unwrap();
+            let m = match index.lookup(seed, &prompt, cc.group, 0) {
+                PrefixProbe::Full(m) => m,
+                _ => panic!("expected a full prefix hit"),
+            };
+            c.install_prefix(&m).unwrap();
+            drop(m);
             std::hint::black_box(&c);
         });
         let miss = bench(&format!("full chunked prefill     T={t}"), 100, 2500.0, || {
@@ -98,7 +104,12 @@ fn main() {
                     Method::mixkvq("mix30"),
                     r_limit,
                 );
-                c.install_prefix(index.lookup(key, &prompt).unwrap()).unwrap();
+                let m = match index.lookup(seed, &prompt, cc.group, 0) {
+                    PrefixProbe::Full(m) => m,
+                    _ => panic!("expected a full prefix hit"),
+                };
+                c.install_prefix(&m).unwrap();
+                drop(m);
                 c
             })
             .collect();

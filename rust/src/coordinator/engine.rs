@@ -6,7 +6,7 @@
 //! compile-time, so each variant is its own executable) behind one shared
 //! runtime, weight upload, and prefill graph set. `method`/`variant` name
 //! the engine's default; requests carrying a `MethodSpec` override are
-//! admitted with their own method's cache ([`Engine::admit_prefill_with`])
+//! admitted with their own method's cache ([`Engine::quantize_prefill_with`])
 //! and decoded through their variant's graph
 //! ([`Engine::decode_step_isolated`]) — the server's batcher groups live
 //! slots into per-variant sub-batches each step, and
@@ -24,7 +24,8 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::kvcache::accountant::MemoryAccountant;
 use crate::kvcache::cache::{PageField, RequestCache};
-use crate::kvcache::pool::{prefix_seed, prompt_chain_key, KvPool, PrefixIndex};
+use crate::kvcache::pool::{prefix_seed, prompt_chain_key, KvPool};
+use crate::kvcache::radix::{PrefixPeek, PrefixProbe, RadixTree};
 use crate::model::config::{Meta, VariantSpec};
 use crate::model::reference::{DecodeScratch, PrefillRun, RefModel, RopeTable};
 use crate::model::weights::{ParamIndex, Weights};
@@ -72,8 +73,9 @@ pub struct EngineTimers {
     /// `prefill_tokens / prefill_exec_ns`).
     pub prefill_tokens: u64,
     /// (layer, chunk) units NEVER executed because the prompt hit the
-    /// shared prefix index — the compute half of the sharing win
-    /// (`prefill_chunks` counts only units that actually ran).
+    /// shared prefix tree (fully or up to a partial-hit seam) — the
+    /// compute half of the sharing win (`prefill_chunks` counts only
+    /// units that actually ran).
     pub prefill_chunks_skipped: u64,
     /// Ticks whose in-flight prefill round ran in non-FIFO order because
     /// shortest-remaining-chunks scheduling promoted a shorter prompt.
@@ -126,6 +128,23 @@ pub struct ChunkedPrefill {
     pub run: PrefillRun,
 }
 
+/// How [`Engine::admit_prefill`] satisfied a prompt against the radix
+/// prefix tree — the unified admission verdict the router's scheduler and
+/// the metrics layer both key off.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrefillAdmission {
+    /// The whole prompt was registered: pages/residual/logits adopted
+    /// bit-exactly, the run arrives already complete, zero chunks execute.
+    FullHit,
+    /// A group-aligned strict prefix was registered: the cache adopted
+    /// `matched_tokens` of shared pages under the producer's frozen channel
+    /// plan, and the chunked prefill resumes at `seam` (`== matched_tokens`)
+    /// instead of token 0.
+    PartialHit { matched_tokens: usize, seam: usize },
+    /// No usable prefix: a full chunked prefill runs from token 0.
+    Miss,
+}
+
 /// One variant sub-batch of a serving tick, shaped for
 /// [`Engine::decode_groups_isolated`]: the batcher's per-variant slot
 /// grouping with each live slot holding its request's cache and next
@@ -169,11 +188,15 @@ pub struct Engine {
     /// bounded serving pool); `None` gives each cache a private unbounded
     /// pool — standalone engine use, benches, tests.
     kv_pool: Option<KvPool>,
-    /// Cross-request prefix index (`Server::new` installs it alongside the
-    /// pool): `begin_prefill_chunked` consults it before running a single
-    /// chunk, and completed prefills register into it. `None` disables
-    /// sharing (standalone engine use).
-    prefix_index: Option<Rc<RefCell<PrefixIndex>>>,
+    /// Cross-request radix prefix tree (`Server::new` installs it alongside
+    /// the pool): [`Engine::admit_prefill`] probes it before running a
+    /// single chunk, and completed prefills register into it. `None`
+    /// disables sharing (standalone engine use).
+    prefix_tree: Option<Rc<RefCell<RadixTree>>>,
+    /// Frozen-plan (partial-hit) override: `Some(v)` forces partial
+    /// adoption on/off; `None` defers to the per-method default
+    /// ([`frozen_plan_default`]). Full hits are served either way.
+    frozen_plan: Option<bool>,
     /// Prebuilt reference-model lookup parts for the chunked prefill path —
     /// resolved once per engine so the per-tick advance does not redo
     /// name-resolution lookups (`RefModel::with_parts`).
@@ -193,7 +216,7 @@ pub struct Engine {
     /// [`Engine::set_workers`]; a 1-sized pool runs everything inline on
     /// the coordinator (exact single-threaded behavior).
     workers: Option<WorkerPool>,
-    /// Ordinal for `PrefixCorrupt` fault draws — the prefix index is
+    /// Ordinal for `PrefixCorrupt` fault draws — the prefix tree is
     /// coordinator-only, so a sequential counter is already
     /// schedule-independent; it feeds `draw_key` to decorrelate
     /// consecutive draws.
@@ -288,7 +311,8 @@ impl Engine {
             weight_bufs,
             arg_pool: HashMap::new(),
             kv_pool: None,
-            prefix_index: None,
+            prefix_tree: None,
+            frozen_plan: None,
             ref_pidx,
             ref_rope,
             ref_scratch: None,
@@ -324,7 +348,8 @@ impl Engine {
             weight_bufs: Vec::new(),
             arg_pool: HashMap::new(),
             kv_pool: None,
-            prefix_index: None,
+            prefix_tree: None,
+            frozen_plan: None,
             ref_pidx,
             ref_rope,
             ref_scratch: None,
@@ -349,15 +374,29 @@ impl Engine {
         self.kv_pool.as_ref()
     }
 
-    /// Install the cross-request prefix index (shared with the server,
-    /// which registers completed prefills and sheds entries under pool
-    /// pressure).
-    pub fn set_prefix_index(&mut self, index: Rc<RefCell<PrefixIndex>>) {
-        self.prefix_index = Some(index);
+    /// Install the cross-request radix prefix tree (shared with the
+    /// server, which registers completed prefills and sheds nodes under
+    /// pool pressure).
+    pub fn set_prefix_tree(&mut self, tree: Rc<RefCell<RadixTree>>) {
+        self.prefix_tree = Some(tree);
     }
 
-    pub fn prefix_index(&self) -> Option<&Rc<RefCell<PrefixIndex>>> {
-        self.prefix_index.as_ref()
+    pub fn prefix_tree(&self) -> Option<&Rc<RefCell<RadixTree>>> {
+        self.prefix_tree.as_ref()
+    }
+
+    /// Override (or restore the per-method default for) frozen-plan
+    /// partial-hit adoption. `Some(true)` serves partial hits for every
+    /// method, `Some(false)` serves full hits only, `None` defers to
+    /// [`frozen_plan_default`].
+    pub fn set_frozen_plan(&mut self, v: Option<bool>) {
+        self.frozen_plan = v;
+    }
+
+    /// Whether [`Engine::admit_prefill`] may serve `method` a frozen-plan
+    /// partial hit (the configured override, else the method default).
+    pub fn frozen_plan_enabled(&self, method: &Method) -> bool {
+        self.frozen_plan.unwrap_or_else(|| frozen_plan_default(method))
     }
 
     /// Install the deterministic fault injector (shared with the server
@@ -396,14 +435,14 @@ impl Engine {
         }
     }
 
-    /// Content-addressed key for `prompt` under `method`: the hash-chain
-    /// walk of `pool::prompt_chain_key`, seeded by everything that shapes
-    /// what the prompt quantizes into (method identity, residual split,
-    /// group, capacity, model cache geometry).
-    pub fn prefix_key_for(&self, prompt: &[i32], method: &Method) -> u64 {
+    /// Hash-chain seed for `method` — everything that shapes what a prompt
+    /// quantizes into (method identity, residual split, group, capacity,
+    /// model cache geometry). Prompts hashed under different seeds can
+    /// never collide in the radix tree.
+    pub fn prefix_seed_for(&self, method: &Method) -> u64 {
         let cc = &self.meta.cache;
         let mc = &self.meta.model;
-        let seed = prefix_seed(
+        prefix_seed(
             &method.name,
             self.r_limit,
             cc.group,
@@ -411,42 +450,75 @@ impl Engine {
             mc.n_layers,
             mc.n_kv_heads,
             mc.d_head,
-        );
-        prompt_chain_key(seed, prompt, cc.group)
+        )
+    }
+
+    /// Content-addressed full-prompt key for `prompt` under `method`: the
+    /// hash-chain walk of `pool::prompt_chain_key` from
+    /// [`Engine::prefix_seed_for`].
+    pub fn prefix_key_for(&self, prompt: &[i32], method: &Method) -> u64 {
+        prompt_chain_key(self.prefix_seed_for(method), prompt, self.meta.cache.group)
+    }
+
+    /// Deepest partial-walk depth (in groups) `prompt` may adopt from the
+    /// tree under `method`: 0 when frozen-plan mode is off for the method,
+    /// else capped at the consumer's own quantized-window end and strictly
+    /// short of the whole prompt (the resumed prefill must recompute at
+    /// least the last token to project logits).
+    fn partial_walk_cap(&self, prompt_len: usize, method: &Method) -> usize {
+        if !self.frozen_plan_enabled(method) {
+            return 0;
+        }
+        let cc = &self.meta.cache;
+        let (qt_c, _) = RequestCache::prefill_split(prompt_len, self.r_limit, cc.group, cc.capacity);
+        RadixTree::partial_walk_groups(qt_c, prompt_len, cc.group)
     }
 
     /// Pages this prompt's admission will actually charge the pool: zero
-    /// when the prefix index already holds the prompt (shared pages are
-    /// charged once, at registration — the amortized-admission win),
-    /// otherwise the exact prefill page count. Uses a counter-free probe so
-    /// admission sizing does not pollute hit/miss telemetry.
+    /// on a full hit (shared pages are charged once, at registration — the
+    /// amortized-admission win), the divergent tail's pages on a partial
+    /// hit, otherwise the exact prefill page count. Uses a counter-free
+    /// probe so admission sizing does not pollute hit/miss telemetry.
     pub fn prefill_pages_for_prompt(&self, prompt: &[i32], method: &Method) -> Result<usize> {
-        if let Some(ix) = &self.prefix_index {
-            let key = self.prefix_key_for(prompt, method);
-            if ix.borrow().peek(key, prompt).is_some() {
-                // the variant must still be valid for this request
-                self.meta.variant(&method.variant)?;
-                return Ok(0);
+        let full = self.prefill_pages_for(prompt.len(), method)?;
+        let Some(tree) = &self.prefix_tree else {
+            return Ok(full);
+        };
+        let seed = self.prefix_seed_for(method);
+        let cc = &self.meta.cache;
+        let cap = self.partial_walk_cap(prompt.len(), method);
+        match tree.borrow().peek(seed, prompt, cc.group, cap) {
+            PrefixPeek::Full => Ok(0),
+            PrefixPeek::Partial(matched) => {
+                let shared = crate::kvcache::pool::pages_for_tokens(
+                    matched,
+                    cc.group,
+                    self.meta.variant(&method.variant)?.layers.len(),
+                    self.meta.model.n_kv_heads,
+                );
+                Ok(full.saturating_sub(shared))
             }
+            PrefixPeek::Miss => Ok(full),
         }
-        self.prefill_pages_for(prompt.len(), method)
     }
 
-    /// Stamp `prompt`'s prefix entry (if resident and verified) most
-    /// recently used — the admission pass calls this before any
-    /// pressure-shedding so the entry a zero-page claim rests on is the
-    /// LAST candidate for eviction, not the first.
+    /// Stamp the ENTIRE verified node path `prompt`'s claim rests on (and
+    /// the full-prompt tail, if resident) most recently used — the
+    /// admission pass calls this before any pressure-shedding so no node
+    /// under a zero/partial-page claim is the next eviction candidate.
     pub fn touch_prefix(&mut self, prompt: &[i32], method: &Method) {
-        if let Some(ix) = self.prefix_index.clone() {
-            let key = self.prefix_key_for(prompt, method);
-            ix.borrow_mut().touch(key, prompt);
+        if let Some(tree) = self.prefix_tree.clone() {
+            let seed = self.prefix_seed_for(method);
+            let cap = self.partial_walk_cap(prompt.len(), method);
+            tree.borrow_mut().touch_path(seed, prompt, self.meta.cache.group, cap);
         }
     }
 
-    /// Register a freshly completed (non-hit) prefill into the prefix
-    /// index: the cache's window pages convert to shared form and future
-    /// requests with the same prompt skip their prefill. No-op without an
-    /// index or on a duplicate key.
+    /// Register a freshly completed (non-full-hit) prefill into the radix
+    /// tree: the cache's window pages convert to shared form, one node per
+    /// quantization group, and future requests sharing ANY prefix length
+    /// reuse them. No-op without a tree, on a duplicate, or on a
+    /// plan-conflicting chain.
     pub fn register_prefix(
         &mut self,
         cache: &mut RequestCache,
@@ -454,11 +526,11 @@ impl Engine {
         method: &Method,
         last_logits: &[f32],
     ) -> bool {
-        let Some(ix) = self.prefix_index.clone() else {
+        let Some(tree) = self.prefix_tree.clone() else {
             return false;
         };
-        let key = self.prefix_key_for(prompt, method);
-        cache.register_prefix(&mut ix.borrow_mut(), key, prompt, last_logits)
+        let seed = self.prefix_seed_for(method);
+        cache.register_prefix(&mut tree.borrow_mut(), seed, prompt, last_logits)
     }
 
     /// Build a bounded page pool for `budget_bytes`, sized so a page fits
@@ -610,7 +682,7 @@ impl Engine {
 
     /// Run prompt prefill through the bucketed prefill graph
     /// (compiled-backend only; the serving path uses
-    /// [`Engine::begin_prefill_chunked`], which works on both backends).
+    /// [`Engine::admit_prefill`], which works on both backends).
     pub fn prefill(&mut self, tokens: &[i32]) -> Result<PrefillData> {
         let Some(runtime) = self.runtime.as_ref() else {
             bail!("bucketed HLO prefill needs the compiled backend (reference engine)");
@@ -1021,35 +1093,50 @@ impl Engine {
         Ok(out)
     }
 
-    /// Begin a chunked GEMM-blocked prefill for `prompt` under `method`:
-    /// builds the request's cache (shared pool when installed) and the
-    /// resumable run. The **prefix index is consulted first**: on a hit the
-    /// cache adopts the registered shared pages/plans/residual and the run
-    /// comes back already complete (`PrefillRun::new_shared`) — every
-    /// (layer, chunk) unit of the prompt is skipped, counted in
-    /// `EngineTimers::prefill_chunks_skipped`. Otherwise no work happens
-    /// yet — drive it with [`Engine::advance_prefill_chunked`]. This is the
-    /// serving admission path; the bucketed HLO [`Engine::prefill`] +
-    /// [`Engine::admit_prefill_with`] pair remains for the compiled-graph
-    /// harness flows.
-    pub fn begin_prefill_chunked(
+    /// The ONE prefill-admission entry: build `prompt`'s cache (shared
+    /// pool when installed) and its resumable chunked run, consulting the
+    /// radix prefix tree first. Three verdicts, one API:
+    ///
+    /// * [`PrefillAdmission::FullHit`] — the cache adopts the registered
+    ///   shared pages/plans/residual and the run comes back already
+    ///   complete (`PrefillRun::new_shared`); every (layer, chunk) unit is
+    ///   skipped, counted in `EngineTimers::prefill_chunks_skipped`.
+    /// * [`PrefillAdmission::PartialHit`] — frozen-plan mode: the cache
+    ///   adopts the deepest verified prefix under the producer's channel
+    ///   plan and the run resumes at the divergence seam
+    ///   (`PrefillRun::new_resumed`); only the skipped prefix units are
+    ///   credited.
+    /// * [`PrefillAdmission::Miss`] — a fresh run from token 0.
+    ///
+    /// No chunk executes here — drive the returned run with
+    /// [`Engine::advance_prefill_chunked`]. This is the serving admission
+    /// path; the bucketed HLO [`Engine::prefill`] +
+    /// [`Engine::quantize_prefill_with`] pair remains for the
+    /// compiled-graph harness flows.
+    pub fn admit_prefill(
         &mut self,
         prompt: &[i32],
         method: &Method,
-    ) -> Result<ChunkedPrefill> {
+    ) -> Result<(PrefillAdmission, ChunkedPrefill)> {
         if prompt.is_empty() {
             bail!("empty prompt");
         }
         let spec = self.meta.variant(&method.variant)?.clone();
-        if let Some(ix) = self.prefix_index.clone() {
-            let key = self.prefix_key_for(prompt, method);
-            let mut ixb = ix.borrow_mut();
-            // Injected prefix corruption (drawn only when an entry is
-            // actually resident): the entry is treated as having failed
-            // its token verify — distrusted, dropped, recorded as a
-            // collision-miss — and the request falls through to a full
-            // prefill. A corrupted entry is never served.
-            let corrupt = ixb.contains(key) && {
+        let mc_layers = self.meta.model.n_layers;
+        let group = self.meta.cache.group;
+        if let Some(tree) = self.prefix_tree.clone() {
+            let seed = self.prefix_seed_for(method);
+            let key = prompt_chain_key(seed, prompt, group);
+            let mut tb = tree.borrow_mut();
+            // Injected prefix corruption (drawn only when a full-prompt
+            // tail is actually resident — the same residency gate and
+            // draw-ordinal schedule as the flat index, so existing chaos
+            // replays stay valid): the tail is treated as having failed
+            // its token verify — distrusted, dropped with its private
+            // chain, recorded as a collision-miss — and the request falls
+            // through to a full prefill. A corrupted entry is never
+            // served, not even as a partial hit.
+            let corrupt = tb.contains(key) && {
                 match self.faults.as_ref() {
                     Some(f) => {
                         let k = draw_key(0, self.prefix_fault_seq);
@@ -1060,31 +1147,57 @@ impl Engine {
                 }
             };
             if corrupt {
-                ixb.discard_corrupt(key);
-            } else if let Some(entry) = ixb.lookup(key, prompt) {
-                let mut cache = self.cache_for(&spec.layers, method.clone());
-                cache.install_prefix(entry)?;
-                let run = PrefillRun::new_shared(
-                    &self.meta.model,
-                    prompt.len(),
-                    self.meta.cache.group,
-                    entry.last_logits(),
-                );
-                let skipped = run.total_chunks(self.meta.model.n_layers) as u64;
-                drop(ixb);
-                self.timers.prefill_chunks_skipped += skipped;
-                return Ok(ChunkedPrefill { cache, run });
+                tb.discard_corrupt(key);
+            } else {
+                let cap = self.partial_walk_cap(prompt.len(), method);
+                match tb.lookup(seed, prompt, group, cap) {
+                    PrefixProbe::Full(m) => {
+                        let mut cache = self.cache_for(&spec.layers, method.clone());
+                        cache.install_prefix(&m)?;
+                        let run = PrefillRun::new_shared(
+                            &self.meta.model,
+                            prompt.len(),
+                            group,
+                            m.last_logits(),
+                        );
+                        let skipped = run.total_chunks(mc_layers) as u64;
+                        drop(tb);
+                        self.timers.prefill_chunks_skipped += skipped;
+                        return Ok((PrefillAdmission::FullHit, ChunkedPrefill { cache, run }));
+                    }
+                    PrefixProbe::Partial(m) => {
+                        let matched = m.t;
+                        let mut cache = self.cache_for(&spec.layers, method.clone());
+                        cache.install_prefix(&m)?;
+                        let run = PrefillRun::new_resumed(
+                            &self.meta.model,
+                            prompt.len(),
+                            group,
+                            matched,
+                        );
+                        let t = prompt.len();
+                        let skipped =
+                            (t.div_ceil(group) - (t - matched).div_ceil(group)) * mc_layers;
+                        drop(tb);
+                        self.timers.prefill_chunks_skipped += skipped as u64;
+                        return Ok((
+                            PrefillAdmission::PartialHit { matched_tokens: matched, seam: matched },
+                            ChunkedPrefill { cache, run },
+                        ));
+                    }
+                    PrefixProbe::Miss => {}
+                }
             }
         }
         let cache = self.cache_for(&spec.layers, method.clone());
-        let run = PrefillRun::new(&self.meta.model, prompt.len(), self.meta.cache.group);
-        Ok(ChunkedPrefill { cache, run })
+        let run = PrefillRun::new(&self.meta.model, prompt.len(), group);
+        Ok((PrefillAdmission::Miss, ChunkedPrefill { cache, run }))
     }
 
     /// Advance a chunked prefill by up to `max_chunks` (layer, chunk)
     /// units, accounting the work in `EngineTimers` (`prefill_exec_ns`,
     /// `prefill_chunks`, and on completion `prefill_tokens` plus one
-    /// quantization event — parity with `admit_prefill_with`). Returns
+    /// quantization event — parity with `quantize_prefill_with`). Returns
     /// `true` when the prefill is complete and
     /// `ChunkedPrefill::run.last_logits()` is valid.
     pub fn advance_prefill_chunked(
@@ -1242,15 +1355,17 @@ impl Engine {
 
     /// Quantize a freshly prefilled prompt into a new cache under the
     /// default method (timed as a channel-selection/quantization event).
-    pub fn admit_prefill(&mut self, pre: &PrefillData) -> Result<RequestCache> {
+    /// Harness/bench entry — serving admission goes through
+    /// [`Engine::admit_prefill`].
+    pub fn quantize_prefill(&mut self, pre: &PrefillData) -> Result<RequestCache> {
         let method = self.method.clone();
-        self.admit_prefill_with(pre, &method)
+        self.quantize_prefill_with(pre, &method)
     }
 
     /// Quantize a freshly prefilled prompt into a cache built for `method`
     /// — the per-request routing path: the cache gets that method's tier
     /// shapes, ordering, clipping, and rotation.
-    pub fn admit_prefill_with(&mut self, pre: &PrefillData, method: &Method) -> Result<RequestCache> {
+    pub fn quantize_prefill_with(&mut self, pre: &PrefillData, method: &Method) -> Result<RequestCache> {
         let spec = self.meta.variant(&method.variant)?.clone();
         let mut cache = self.cache_for(&spec.layers, method.clone());
         let t0 = Instant::now();
@@ -1401,6 +1516,18 @@ impl Engine {
         }
         Ok(())
     }
+}
+
+/// Per-method default for frozen-plan partial hits: methods whose scales
+/// are derived per-window adopt a producer's plan/scales losslessly for
+/// the matched prefix and only the tail re-quantizes under them — within
+/// the measured error budget (`harness::profiling::frozen_plan_error`).
+/// Methods with *global* scale state (KVQuant's nuq-style global grids)
+/// fold every token into one running estimate, so adopting a producer's
+/// mid-stream state shifts ALL subsequent quantization — those default
+/// off and serve full hits only.
+pub fn frozen_plan_default(m: &Method) -> bool {
+    !m.global_scales
 }
 
 fn parse_layer_field(name: &str) -> Result<(usize, &str)> {

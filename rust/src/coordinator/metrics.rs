@@ -548,14 +548,20 @@ pub struct Metrics {
     /// Parked sessions force-finished (CacheFull) to break a pool deadlock
     /// where every live slot was parked and nothing could ever free pages.
     pub pool_preemptions: u64,
-    // --- cross-request prefix sharing gauges (from PrefixIndex) ----------
-    /// Prompts served from a shared prefix entry (entire prefill skipped).
+    // --- cross-request prefix sharing gauges (from the radix tree) -------
+    /// Prompts served from a full prefix-tree hit (entire prefill skipped).
     pub prefix_hits: u64,
+    /// Prompts served frozen-plan from a partial (interior-node) hit —
+    /// only the divergent tail ran a prefill.
+    pub prefix_partial_hits: u64,
     /// Prompts that ran a full prefill (and then registered their pages).
     pub prefix_misses: u64,
-    /// Prefix entries currently resident.
+    /// Full prompt tails currently registered in the tree.
     pub prefix_entries: usize,
-    /// Pool pages currently pinned by prefix entries (each counted once —
+    /// Interior radix nodes currently resident (each spans one
+    /// quantization group of prompt tokens).
+    pub prefix_nodes: usize,
+    /// Pool pages currently pinned by tree nodes (each counted once —
     /// that single charge IS the dedup).
     pub prefix_pages_pinned: usize,
     /// Deployment bytes consumers adopted instead of leasing privately,
@@ -567,6 +573,9 @@ pub struct Metrics {
     /// misses, never served — nonzero values are expected to be vanishingly
     /// rare and worth investigating).
     pub prefix_collisions: u64,
+    /// Partial hits refused because the producer's frozen plan was not
+    /// adoptable under the consumer's method (served as misses).
+    pub prefix_plan_conflicts: u64,
     /// Off-pool bytes held by entry sidecars (residual snapshots, logits,
     /// plans) — the bounded retention overhead of full prefill skipping.
     pub prefix_sidecar_bytes: usize,
@@ -696,16 +705,19 @@ impl Metrics {
         self.pool_lease_failures = stats.lease_failures;
     }
 
-    /// Record the prefix-index counters (called once per scheduling tick
-    /// when cross-request sharing is enabled).
-    pub fn observe_prefix(&mut self, stats: &crate::kvcache::pool::PrefixStats) {
+    /// Record the radix prefix-tree counters (called once per scheduling
+    /// tick when cross-request sharing is enabled).
+    pub fn observe_prefix(&mut self, stats: &crate::kvcache::radix::PrefixStats) {
         self.prefix_hits = stats.hits;
+        self.prefix_partial_hits = stats.partial_hits;
         self.prefix_misses = stats.misses;
         self.prefix_entries = stats.entries;
+        self.prefix_nodes = stats.nodes;
         self.prefix_pages_pinned = stats.pages_pinned;
         self.prefix_bytes_deduped = stats.bytes_deduped;
         self.prefix_evictions = stats.evictions;
         self.prefix_collisions = stats.collisions;
+        self.prefix_plan_conflicts = stats.plan_conflicts;
         self.prefix_sidecar_bytes = stats.sidecar_bytes;
     }
 
@@ -765,12 +777,15 @@ impl Metrics {
             w.u64(v)?;
         }
         w.u64(self.prefix_hits)?;
+        w.u64(self.prefix_partial_hits)?;
         w.u64(self.prefix_misses)?;
         w.usize(self.prefix_entries)?;
+        w.usize(self.prefix_nodes)?;
         w.usize(self.prefix_pages_pinned)?;
         w.u64(self.prefix_bytes_deduped)?;
         w.u64(self.prefix_evictions)?;
         w.u64(self.prefix_collisions)?;
+        w.u64(self.prefix_plan_conflicts)?;
         w.usize(self.prefix_sidecar_bytes)
     }
 
@@ -845,12 +860,15 @@ impl Metrics {
             *v = r.u64("metrics pool counter")?;
         }
         self.prefix_hits = r.u64("metrics prefix hits")?;
+        self.prefix_partial_hits = r.u64("metrics prefix partial hits")?;
         self.prefix_misses = r.u64("metrics prefix misses")?;
         self.prefix_entries = r.usize("metrics prefix entries")?;
+        self.prefix_nodes = r.usize("metrics prefix nodes")?;
         self.prefix_pages_pinned = r.usize("metrics prefix pinned")?;
         self.prefix_bytes_deduped = r.u64("metrics prefix deduped")?;
         self.prefix_evictions = r.u64("metrics prefix evictions")?;
         self.prefix_collisions = r.u64("metrics prefix collisions")?;
+        self.prefix_plan_conflicts = r.u64("metrics prefix plan conflicts")?;
         self.prefix_sidecar_bytes = r.usize("metrics prefix sidecar")?;
         Ok(())
     }
@@ -866,7 +884,8 @@ impl Metrics {
              queue p50/p95={:.0}/{:.0} ms rejected={} cancelled={} stalls={} \
              pool pages={}/{} high_water={} lease_fail={} parks={} resumes={} preempt={} \
              prefill_parks={} \
-             prefix hits={} misses={} entries={} pinned={} deduped={:.2}MB shed={}",
+             prefix hits={} partial={} misses={} entries={} nodes={} pinned={} \
+             deduped={:.2}MB shed={}",
             self.completed.total(),
             self.total_generated(),
             self.wall_s(),
@@ -892,8 +911,10 @@ impl Metrics {
             self.pool_preemptions,
             self.prefill_parks,
             self.prefix_hits,
+            self.prefix_partial_hits,
             self.prefix_misses,
             self.prefix_entries,
+            self.prefix_nodes,
             self.prefix_pages_pinned,
             self.prefix_bytes_deduped as f64 / 1e6,
             self.prefix_evictions,

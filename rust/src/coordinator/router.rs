@@ -8,7 +8,8 @@
 //! * [`Server::tick`] runs one scheduling cycle: admissions — still
 //!   **occupancy-based**: a request starts prefilling when the pool can
 //!   cover its actual prefill pages and keep a reserve watermark free, and a
-//!   prompt the **prefix index** already holds charges ZERO pages (its
+//!   prompt the **radix prefix tree** already covers charges only its
+//!   divergent tail (a fully registered prompt charges ZERO pages — its
 //!   shared pages were charged once, at registration) — then **chunked
 //!   prefill work** under a per-tick `(layer, chunk)` unit budget
 //!   (`ServerConfig::prefill_chunks_per_tick`), ordered
@@ -18,18 +19,20 @@
 //!   direct-to-page pipeline
 //!   ([`crate::coordinator::engine::ChunkedPrefill`]), quantized pages
 //!   filling in as layers close, and a long prompt spreads across ticks
-//!   instead of monopolizing one against live decoders — unless the prompt
-//!   hits the prefix index, in which case its ENTIRE prefill is skipped:
-//!   the cache adopts the registered shared pages copy-on-write and the
-//!   first token samples from the registered logits the same tick. Each
-//!   completed non-hit prefill registers its prompt into the index before
-//!   installing. Then one decode step per live variant group. A live slot
-//!   whose due quantization flush cannot lease pages is **parked** for the
-//!   tick (its tokens ride in the residual meanwhile) and resumes when
-//!   pages free up; under pool pressure the index sheds LRU entries first
-//!   (retention never outranks a live flush); if every live slot is parked
-//!   the largest *private* page-holder is shed as CacheFull so the server
-//!   never deadlocks;
+//!   instead of monopolizing one against live decoders — unless
+//!   [`Engine::admit_prefill`] answers from the tree: a full hit skips the
+//!   ENTIRE prefill (the cache adopts the registered shared pages
+//!   copy-on-write and the first token samples from the registered logits
+//!   the same tick), and a frozen-plan partial hit adopts the deepest
+//!   registered prefix and resumes prefill from the divergence seam. Each
+//!   completed non-full-hit prefill registers its prompt into the tree
+//!   before installing. Then one decode step per live variant group. A
+//!   live slot whose due quantization flush cannot lease pages is
+//!   **parked** for the tick (its tokens ride in the residual meanwhile)
+//!   and resumes when pages free up; under pool pressure the tree sheds
+//!   LRU leaves first (retention never outranks a live flush); if every
+//!   live slot is parked the largest *private* page-holder is shed as
+//!   CacheFull so the server never deadlocks;
 //! * [`Server::poll`] / [`Server::cancel`] / [`Server::drain_events`]
 //!   observe and steer individual requests — every request emits a
 //!   well-formed `Queued → Admitted → FirstToken → Token* → Finished`
@@ -42,7 +45,7 @@
 //!   drained) so offline batch drivers keep working token-for-token.
 //!
 //! The *coordinator* is single-threaded: one thread owns admission,
-//! batching, sampling, the prefix index, and all pool bookkeeping, so
+//! batching, sampling, the prefix tree, and all pool bookkeeping, so
 //! serving policy stays sequentially deterministic. Per-tick **compute**
 //! shards across a fixed worker pool (`ServerConfig::workers`, see the
 //! crate docs' "Threading model"): decode sub-batches fan out one job per
@@ -67,7 +70,8 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::{Scheduler, SchedulerPolicy};
 use crate::coordinator::session::{Completed, FinishReason, Phase, Request, RequestId, Session};
 use crate::kvcache::accountant::MemoryAccountant;
-use crate::kvcache::pool::{KvPool, Page, PageLease, PrefixIndex, SharedLease};
+use crate::kvcache::pool::{KvPool, Page, PageLease, SharedLease};
+use crate::kvcache::radix::RadixTree;
 use crate::model::reference::PrefillRun;
 use crate::model::sampler::{self, Sampling};
 use crate::model::tokenizer;
@@ -84,7 +88,7 @@ use crate::util::snapshot::{corrupt, page_checksum, SnapReader, SnapResult, Snap
 const MAX_PREFILL_ATTEMPTS: u32 = 3;
 
 /// Consecutive parked ticks before the park-watchdog *degrades* on the
-/// slot's behalf (sheds a retained prefix-index entry to free pages).
+/// slot's behalf (sheds a retained prefix-tree leaf to free pages).
 const PARK_WATCHDOG_DEGRADE: u32 = 8;
 
 /// Consecutive parked ticks before the park-watchdog *sheds* the slot
@@ -112,10 +116,17 @@ pub struct ServerConfig {
     /// only this many full `Completed` records (token streams) stay
     /// resident for `poll`/`Server::run` to hand out.
     pub completed_ring: usize,
-    /// Pool pages the cross-request prefix index may pin (retained shared
-    /// prompt windows). `None` derives a default of a quarter of the pool;
-    /// `Some(0)` disables prefix sharing.
+    /// Pool pages the cross-request radix prefix tree may pin (retained
+    /// shared prompt-prefix groups). `None` derives a default of a quarter
+    /// of the pool; `Some(0)` disables prefix sharing.
     pub prefix_cache_pages: Option<usize>,
+    /// Frozen-plan partial-hit override threaded to
+    /// [`Engine::set_frozen_plan`]: `Some(true)` serves partial prefix
+    /// hits for every method, `Some(false)` serves full hits only, `None`
+    /// (the default) defers to the per-method default
+    /// ([`crate::coordinator::engine::frozen_plan_default`] — the
+    /// error-budget ablation's verdict).
+    pub frozen_plan: Option<bool>,
     /// Server-side precision policy for requests that do not pin a
     /// [`MethodSpec`](crate::quant::methods::MethodSpec) themselves. `None`
     /// keeps the pre-policy behavior (the engine's default method). With a
@@ -142,11 +153,21 @@ pub struct ServerConfig {
     /// parallelism; `1` is the exact legacy single-threaded path. Results
     /// are bit-identical at every value — only wall time changes.
     pub workers: usize,
+    /// Periodic crash-safe snapshot target (`mixkvq-snap-v2` image,
+    /// write-then-rename). The server itself never writes it — the
+    /// operator loop (`main.rs serve`) does — but it resolves here so env
+    /// defaults live in exactly one place ([`ServerConfig::builder`]).
+    pub snapshot_path: Option<std::path::PathBuf>,
+    /// Ticks between periodic snapshots (0 disables them even with a path
+    /// configured).
+    pub snapshot_every_ticks: u64,
 }
 
 /// Default worker count: the `MIXKVQ_WORKERS` environment variable when
 /// set (CI runs the whole suite at a pinned width this way), else the
 /// machine's available parallelism (1 when it cannot be determined).
+/// [`ServerConfig::builder`] consults this — callers who just want the
+/// resolved default should go through the builder.
 pub fn default_workers() -> usize {
     if let Ok(v) = std::env::var("MIXKVQ_WORKERS") {
         if let Ok(n) = v.trim().parse::<usize>() {
@@ -156,20 +177,155 @@ pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+impl ServerConfig {
+    /// Start a [`ServerConfigBuilder`]. Every environment default —
+    /// `MIXKVQ_WORKERS`, `MIXKVQ_FROZEN_PLAN`, `MIXKVQ_PREFIX_CACHE_PAGES`,
+    /// `MIXKVQ_SNAPSHOT_PATH`/`MIXKVQ_SNAPSHOT_EVERY_TICKS` — resolves in
+    /// exactly one place: [`ServerConfigBuilder::build`], and only for
+    /// fields the caller did not set explicitly. `ServerConfig::default()`
+    /// is `builder().build()`, so plain struct-update construction
+    /// (`..Default::default()`) picks the same env defaults up.
+    pub fn builder() -> ServerConfigBuilder {
+        ServerConfigBuilder::default()
+    }
+}
+
 impl Default for ServerConfig {
     fn default() -> Self {
+        ServerConfig::builder().build()
+    }
+}
+
+/// Builder for [`ServerConfig`] — the ONE place environment defaults
+/// resolve (see [`ServerConfig::builder`]). Unset fields fall back to
+/// their env variable when one exists, else the hard-coded default.
+#[derive(Default)]
+pub struct ServerConfigBuilder {
+    memory_budget_bytes: Option<usize>,
+    max_prefills_per_cycle: Option<usize>,
+    seed: Option<u64>,
+    reserve_pages: Option<Option<usize>>,
+    prefill_chunks_per_tick: Option<usize>,
+    completed_ring: Option<usize>,
+    prefix_cache_pages: Option<Option<usize>>,
+    frozen_plan: Option<Option<bool>>,
+    policy: Option<Option<PrecisionPolicy>>,
+    max_queue: Option<Option<usize>>,
+    faults: Option<Option<FaultPlan>>,
+    workers: Option<usize>,
+    snapshot_path: Option<Option<std::path::PathBuf>>,
+    snapshot_every_ticks: Option<u64>,
+}
+
+/// Parse a boolean-ish env value ("1"/"true"/"on" vs "0"/"false"/"off");
+/// anything else is ignored (None).
+fn env_bool(name: &str) -> Option<bool> {
+    let v = std::env::var(name).ok()?;
+    match v.trim().to_ascii_lowercase().as_str() {
+        "1" | "true" | "on" | "yes" => Some(true),
+        "0" | "false" | "off" | "no" => Some(false),
+        _ => None,
+    }
+}
+
+impl ServerConfigBuilder {
+    pub fn memory_budget_bytes(mut self, v: usize) -> Self {
+        self.memory_budget_bytes = Some(v);
+        self
+    }
+
+    pub fn max_prefills_per_cycle(mut self, v: usize) -> Self {
+        self.max_prefills_per_cycle = Some(v);
+        self
+    }
+
+    pub fn seed(mut self, v: u64) -> Self {
+        self.seed = Some(v);
+        self
+    }
+
+    pub fn reserve_pages(mut self, v: Option<usize>) -> Self {
+        self.reserve_pages = Some(v);
+        self
+    }
+
+    pub fn prefill_chunks_per_tick(mut self, v: usize) -> Self {
+        self.prefill_chunks_per_tick = Some(v);
+        self
+    }
+
+    pub fn completed_ring(mut self, v: usize) -> Self {
+        self.completed_ring = Some(v);
+        self
+    }
+
+    pub fn prefix_cache_pages(mut self, v: Option<usize>) -> Self {
+        self.prefix_cache_pages = Some(v);
+        self
+    }
+
+    pub fn frozen_plan(mut self, v: Option<bool>) -> Self {
+        self.frozen_plan = Some(v);
+        self
+    }
+
+    pub fn policy(mut self, v: Option<PrecisionPolicy>) -> Self {
+        self.policy = Some(v);
+        self
+    }
+
+    pub fn max_queue(mut self, v: Option<usize>) -> Self {
+        self.max_queue = Some(v);
+        self
+    }
+
+    pub fn faults(mut self, v: Option<FaultPlan>) -> Self {
+        self.faults = Some(v);
+        self
+    }
+
+    pub fn workers(mut self, v: usize) -> Self {
+        self.workers = Some(v.max(1));
+        self
+    }
+
+    pub fn snapshot(mut self, path: Option<std::path::PathBuf>, every_ticks: u64) -> Self {
+        self.snapshot_path = Some(path);
+        self.snapshot_every_ticks = Some(every_ticks);
+        self
+    }
+
+    /// Resolve into a [`ServerConfig`]: explicit settings win, then env
+    /// variables, then hard-coded defaults.
+    pub fn build(self) -> ServerConfig {
+        let env_usize = |name: &str| {
+            std::env::var(name).ok().and_then(|v| v.trim().parse::<usize>().ok())
+        };
+        let env_u64 =
+            |name: &str| std::env::var(name).ok().and_then(|v| v.trim().parse::<u64>().ok());
         ServerConfig {
-            memory_budget_bytes: 64 << 20,
-            max_prefills_per_cycle: 2,
-            seed: 0,
-            reserve_pages: None,
-            prefill_chunks_per_tick: 256,
-            completed_ring: crate::coordinator::metrics::COMPLETED_RING_DEFAULT,
-            prefix_cache_pages: None,
-            policy: None,
-            max_queue: None,
-            faults: None,
-            workers: default_workers(),
+            memory_budget_bytes: self.memory_budget_bytes.unwrap_or(64 << 20),
+            max_prefills_per_cycle: self.max_prefills_per_cycle.unwrap_or(2),
+            seed: self.seed.unwrap_or(0),
+            reserve_pages: self.reserve_pages.unwrap_or(None),
+            prefill_chunks_per_tick: self.prefill_chunks_per_tick.unwrap_or(256),
+            completed_ring: self
+                .completed_ring
+                .unwrap_or(crate::coordinator::metrics::COMPLETED_RING_DEFAULT),
+            prefix_cache_pages: self
+                .prefix_cache_pages
+                .unwrap_or_else(|| env_usize("MIXKVQ_PREFIX_CACHE_PAGES")),
+            frozen_plan: self.frozen_plan.unwrap_or_else(|| env_bool("MIXKVQ_FROZEN_PLAN")),
+            policy: self.policy.unwrap_or(None),
+            max_queue: self.max_queue.unwrap_or(None),
+            faults: self.faults.unwrap_or(None),
+            workers: self.workers.unwrap_or_else(default_workers),
+            snapshot_path: self.snapshot_path.unwrap_or_else(|| {
+                std::env::var("MIXKVQ_SNAPSHOT_PATH").ok().map(std::path::PathBuf::from)
+            }),
+            snapshot_every_ticks: self
+                .snapshot_every_ticks
+                .unwrap_or_else(|| env_u64("MIXKVQ_SNAPSHOT_EVERY_TICKS").unwrap_or(0)),
         }
     }
 }
@@ -183,7 +339,8 @@ struct PendingPrefill {
     method: crate::quant::methods::Method,
     cp: ChunkedPrefill,
     /// Prefill pages this run was admitted against (its occupancy claim;
-    /// ZERO for a prefix-index hit — shared pages were charged once, at
+    /// ZERO for a full prefix-tree hit, only the divergent tail for a
+    /// frozen-plan partial hit — shared pages were charged once, at
     /// registration). Leasing is incremental (one page per group as layers
     /// close), so admission must count `pages_claimed − leased` of every
     /// pending run as already spoken for — otherwise two runs admitted in
@@ -311,16 +468,17 @@ impl Server {
         let reserve = cfg
             .reserve_pages
             .unwrap_or_else(|| (batch * flush_pages.max(1)).min(max_pages / 4));
-        // cross-request prefix sharing: the index may pin up to a quarter
-        // of the pool by default (LRU-shed under pressure, so retention
-        // never starves live flushes)
+        // cross-request prefix sharing: the radix tree may pin up to a
+        // quarter of the pool by default (LRU-shed from the leaves under
+        // pressure, so retention never starves live flushes)
         let prefix_cap = cfg.prefix_cache_pages.unwrap_or(max_pages / 4);
         if prefix_cap > 0 {
-            engine.set_prefix_index(Rc::new(RefCell::new(PrefixIndex::new(
+            engine.set_prefix_tree(Rc::new(RefCell::new(RadixTree::new(
                 prefix_cap,
                 pool.page_deploy_bytes(),
             ))));
         }
+        engine.set_frozen_plan(cfg.frozen_plan);
         // deterministic fault injection: one shared injector wired into the
         // pool (lease denial) and the engine (prefill/decode/prefix sites)
         let faults = cfg.faults.filter(FaultPlan::is_armed).map(FaultInjector::shared);
@@ -388,11 +546,11 @@ impl Server {
         }
     }
 
-    /// Drop one LRU prefix-index entry (pages with no other holder return
-    /// to the pool immediately). Returns false when there is no index or it
-    /// is empty.
+    /// Drop one LRU radix-tree leaf (pages with no other holder return to
+    /// the pool immediately; interior nodes with live descendants are
+    /// never shed). Returns false when there is no tree or it is empty.
     fn shed_prefix_entry(&mut self) -> bool {
-        match self.engine.prefix_index() {
+        match self.engine.prefix_tree() {
             Some(ix) => ix.borrow_mut().shed_lru(),
             None => false,
         }
@@ -435,10 +593,11 @@ impl Server {
         }
         let fits = pick_bucket(&self.engine.meta.cache.prefill_buckets, req.prompt.len()).is_ok();
         // at least one ladder rung must be affordable (worst-case footprint
-        // inside the whole budget) and admissible. Prefix-index hits charge
-        // zero pages, so a prompt whose pages could never fit privately is
-        // still admissible while its entry is resident (admit() re-checks
-        // and retires it if the entry is shed). An empty ladder (e.g. a
+        // inside the whole budget) and admissible. Full prefix-tree hits
+        // charge zero pages (partial hits only their divergent tail), so a
+        // prompt whose pages could never fit privately is still admissible
+        // while its match is resident (admit() re-checks and retires it if
+        // the nodes are shed). An empty ladder (e.g. a
         // MemorySlo budget below every spec) rejects everything unpinned.
         let serveable = fits
             && self.admission_ladder(&req).iter().any(|method| {
@@ -466,6 +625,13 @@ impl Server {
     /// Any queued, prefilling, retrying, or live work left?
     pub fn has_work(&self) -> bool {
         self.batcher.has_work() || !self.prefills.is_empty() || !self.retries.is_empty()
+    }
+
+    /// In-flight chunked prefills — admitted (pages claimed, possibly a
+    /// prefix adopted) but not yet installed into a decode slot. Tests use
+    /// this to place kill points mid-prefill.
+    pub fn prefills_in_flight(&self) -> usize {
+        self.prefills.len()
     }
 
     /// Status of one request. The FIRST poll observing a terminal request
@@ -616,7 +782,7 @@ impl Server {
             + self.prefills.iter().map(|p| p.cp.cache.residual_bytes()).sum::<usize>();
         self.scheduler.observe_occupancy(residuals);
         self.metrics.observe_pool(&self.pool.stats());
-        if let Some(ix) = self.engine.prefix_index() {
+        if let Some(ix) = self.engine.prefix_tree() {
             let stats = ix.borrow().stats();
             self.metrics.observe_prefix(&stats);
         }
@@ -629,14 +795,16 @@ impl Server {
     /// Cross-subsystem self-audit, callable between ticks (chaos soak runs
     /// it after every one; tests assert it at drain). Checks that the three
     /// independent bookkeepers — pool lease counter, cache page holders,
-    /// prefix-index pin counter — agree, and that every in-flight request
+    /// radix-tree pin counter — agree (the tree also passes its own
+    /// structural [`RadixTree::audit`]), and that every in-flight request
     /// id lives in exactly one lifecycle stage. Returns the first violation
     /// as an error; `Ok(())` means the books balance.
     pub fn check_invariants(&self) -> Result<()> {
         // 1. page accounting: every page the pool counts as leased must be
         //    held by a namable owner — a live slot's or in-flight prefill's
         //    private pages, plus each DISTINCT shared page reachable from a
-        //    holder or the prefix index (the pool charges shared pages once)
+        //    holder or the radix prefix tree (the pool charges shared pages
+        //    once)
         let mut private = 0usize;
         let mut shared_ids: Vec<usize> = Vec::new();
         for sess in self.batcher.slots.iter().flatten() {
@@ -647,16 +815,19 @@ impl Server {
             private += p.cp.cache.private_pages();
             p.cp.cache.collect_shared_page_ids(&mut shared_ids);
         }
-        if let Some(ix) = self.engine.prefix_index() {
+        if let Some(ix) = self.engine.prefix_tree() {
             let ix = ix.borrow();
+            if let Err(e) = ix.audit() {
+                bail!("invariant violation: radix tree audit: {e}");
+            }
             let mut index_ids: Vec<usize> = Vec::new();
             ix.collect_page_ids(&mut index_ids);
             index_ids.sort_unstable();
             index_ids.dedup();
             if index_ids.len() != ix.pages_pinned() {
                 bail!(
-                    "invariant violation: prefix index pins {} pages but its \
-                     entries hold {} distinct pages",
+                    "invariant violation: prefix tree pins {} pages but its \
+                     nodes hold {} distinct pages",
                     ix.pages_pinned(),
                     index_ids.len()
                 );
@@ -748,7 +919,8 @@ impl Server {
 
     /// Visit every live page in deterministic holder order: decode slots
     /// (slot index ascending), then in-flight prefills (admission order),
-    /// then the prefix index (entry stamp order). The bool is `true` for a
+    /// then the prefix radix tree (canonical (depth, key) node order). The
+    /// bool is `true` for a
     /// shared reference. The snapshot writer's page-serial numbering and
     /// the integrity audit both walk this exact order.
     fn walk_pages(&self, f: &mut dyn FnMut(&Page, bool)) {
@@ -758,7 +930,7 @@ impl Server {
         for p in &self.prefills {
             p.cp.cache.for_each_page(f);
         }
-        if let Some(ix) = self.engine.prefix_index() {
+        if let Some(ix) = self.engine.prefix_tree() {
             ix.borrow().for_each_page(&mut |p| f(p, true));
         }
     }
@@ -766,7 +938,7 @@ impl Server {
     // --- crash-safe serving: snapshot / restore / scrub ------------------
 
     /// Serialize the server's complete live state to `w` (the
-    /// `mixkvq-snap-v1` stream — see the crate docs, "Crash recovery &
+    /// `mixkvq-snap-v2` stream — see the crate docs, "Crash recovery &
     /// snapshot ABI"). Call **between ticks only**: `tick` is synchronous,
     /// so any point outside it is a quiesce point where every leased page
     /// is sealed and no compute is in flight. Returns the bytes written.
@@ -949,8 +1121,8 @@ impl Server {
                 }
             }
         }
-        // prefix index (entries reference the shared page serials above)
-        match self.engine.prefix_index() {
+        // prefix radix tree (nodes reference the shared page serials above)
+        match self.engine.prefix_tree() {
             Some(ix) => {
                 w.bool(true)?;
                 ix.borrow().write_snap(&mut w, &mut |id| serial_for(&serials, id))?;
@@ -1194,17 +1366,17 @@ impl Server {
             };
             self.finished.insert(id, t);
         }
-        // prefix index: entries with a quarantined page drop per-entry
-        // (collision-miss semantics) inside read_snap
-        if r.bool("prefix index present")? {
-            match self.engine.prefix_index() {
+        // prefix radix tree: nodes with a quarantined page drop with their
+        // whole subtree (collision-miss semantics) inside read_snap
+        if r.bool("prefix tree present")? {
+            match self.engine.prefix_tree() {
                 Some(ix) => {
                     ix.borrow_mut().read_snap(r, &mut resolve_shared)?;
                 }
                 None => {
                     // this config disables sharing: parse the section into
-                    // a throwaway index and let its pages free on drop
-                    let mut tmp = PrefixIndex::new(0, self.pool.page_deploy_bytes());
+                    // a throwaway tree and let its pages free on drop
+                    let mut tmp = RadixTree::new(0, self.pool.page_deploy_bytes());
                     tmp.read_snap(r, &mut resolve_shared)?;
                 }
             }
@@ -1295,7 +1467,7 @@ impl Server {
                 i += 1;
             }
         }
-        if let Some(ix) = self.engine.prefix_index() {
+        if let Some(ix) = self.engine.prefix_tree() {
             let mut ix = ix.borrow_mut();
             for &id in &bad {
                 ix.shed_page(id);
@@ -1483,8 +1655,9 @@ impl Server {
             let Some(req) = self.batcher.waiting.pop_front() else {
                 break;
             };
-            // variants validated at submit; a prefix-index hit charges zero
-            // pages (its shared pages were charged once, at registration).
+            // variants validated at submit; a full prefix-tree hit charges
+            // zero pages and a partial hit only its divergent tail (shared
+            // pages were charged once, at registration).
             // With a policy installed the ladder has multiple rungs: walk it
             // most-preferred first and admit on the first rung whose pages
             // the pool can cover — under pressure that is a cheaper variant
@@ -1515,12 +1688,14 @@ impl Server {
                 else {
                     continue;
                 };
-                if needed == 0 {
-                    // this admission rests on a prefix entry: make it the
-                    // most-recently-used so the shed loop below cannot
-                    // evict the very entry it is about to serve
-                    self.engine.touch_prefix(&req.prompt, method);
-                }
+                // this admission may rest on a tree match — full hit
+                // (needed == 0) or partial hit (needed covers only the
+                // divergent tail). Stamp the ENTIRE matched node path
+                // most-recently-used so the shed loop below cannot evict
+                // the very nodes it is about to serve; touching only the
+                // leaf used to leave a partial hit's interior ancestors
+                // stale and sheddable mid-admission.
+                self.engine.touch_prefix(&req.prompt, method);
                 // under pressure, retained prefix entries yield before the
                 // preferred rung degrades (their pages free if nobody else
                 // holds them); only the top offered rung sheds — a lower
@@ -1579,10 +1754,10 @@ impl Server {
             // request.
             let started = (|| {
                 self.engine.ensure_method(&method)?;
-                self.engine.begin_prefill_chunked(&req.prompt, &method)
+                self.engine.admit_prefill(&req.prompt, &method)
             })();
             match started {
-                Ok(mut cp) => {
+                Ok((_admission, mut cp)) => {
                     // key every fault draw this request's cache will ever
                     // make to the request id — replay-deterministic per
                     // site regardless of tick composition or worker count
@@ -1619,8 +1794,10 @@ impl Server {
     /// ran out of arrival order are counted in
     /// `EngineTimers::prefill_reorders`). Whatever completes installs into
     /// its decode slot immediately — same tick, first token sampled from
-    /// the last-position logits (prefix-index hits arrive already complete
-    /// and install first, having zero remaining chunks). A run whose
+    /// the last-position logits (full prefix-tree hits arrive already
+    /// complete and install first, having zero remaining chunks; partial
+    /// hits resume from their divergence seam with only the tail's chunks
+    /// left). A run whose
     /// remaining page claim the pool cannot currently cover (decode
     /// flushes lease directly and may drain it between ticks) is **parked**
     /// for the tick — same philosophy as the decode slots' flush parking —
@@ -1758,8 +1935,10 @@ impl Server {
     }
 
     /// A completed chunked prefill becomes a live session: the prompt is
-    /// registered into the prefix index (no-op for hits — the entry already
-    /// exists — and for duplicate prompts completing the same tick), then
+    /// registered into the prefix radix tree (a partial hit's completed
+    /// tail extends the matched chain; a no-op for full hits — the chain
+    /// already exists — and for duplicate prompts completing the same
+    /// tick), then
     /// the first token samples from the last-position logits and the
     /// session installs into a free slot (guaranteed by the admission
     /// accounting).

@@ -12,10 +12,12 @@
 //!   once**: the pool's `leased` counter (which both `try_admit_pages` and
 //!   `observe_occupancy` read) counts a refcounted page exactly once no
 //!   matter how many requests reference it, and a request whose prompt hits
-//!   the prefix index is admitted at ZERO pages (`Engine::
+//!   the prefix tree in full is admitted at ZERO pages (`Engine::
 //!   prefill_pages_for_prompt`) — N tenants over one prompt cost the
 //!   admission budget of one, which is the concurrency half of the
-//!   prefix-sharing win.
+//!   prefix-sharing win. A partial hit is charged only its seam-to-end
+//!   tail, and admission touches the matched node path first so pressure
+//!   shedding cannot evict the prefix it is about to adopt.
 //! * a live slot whose due flush cannot lease pages is *parked* for the
 //!   tick (router::Server::decode), not failed;
 //! * requests whose prompt exceeds every prefill bucket are rejected.

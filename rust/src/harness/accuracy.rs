@@ -57,7 +57,7 @@ pub fn evaluate(engine: &mut Engine, tasks: &[Task]) -> Result<AccuracyReport> {
         let mut live: Vec<Option<Live>> = Vec::with_capacity(batch);
         for task in chunk {
             let pre = engine.prefill(&task.prompt)?;
-            let cache = engine.admit_prefill(&pre)?;
+            let cache = engine.quantize_prefill(&pre)?;
             let mut l = Live { task, cache, cursor: task.prompt.len(), ok: true, hits: 0 };
             // the prefill's last logits predict gold[prompt_len]
             score_position(&pre.last_logits, &mut l);
@@ -124,7 +124,7 @@ fn score_position(logits: &[f32], l: &mut Live) {
 pub fn rollout(engine: &mut Engine, task: &Task, max_new: usize) -> Result<Vec<i32>> {
     let batch = engine.meta.cache.decode_batch;
     let pre = engine.prefill(&task.prompt)?;
-    let mut cache = engine.admit_prefill(&pre)?;
+    let mut cache = engine.quantize_prefill(&pre)?;
     let mut out = Vec::new();
     let mut tok = argmax(&pre.last_logits);
     out.push(tok);

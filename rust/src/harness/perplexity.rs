@@ -57,7 +57,7 @@ pub fn evaluate(engine: &mut Engine, seqs: &[Vec<i32>]) -> Result<PplReport> {
         let mut caches: Vec<Option<(RequestCache, usize)>> = Vec::with_capacity(batch);
         for seq in chunk {
             let pre = engine.prefill(&seq[..1])?;
-            let cache = engine.admit_prefill(&pre)?;
+            let cache = engine.quantize_prefill(&pre)?;
             report.nll_sum += -log_prob(&pre.last_logits, seq[1]);
             report.tokens += 1;
             caches.push(Some((cache, 1)));

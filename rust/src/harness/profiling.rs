@@ -138,6 +138,179 @@ pub fn measured_error(
     Ok((nll - profile.baseline_nll).max(0.0))
 }
 
+// --- frozen-plan error-budget ablation ---------------------------------
+//
+// A frozen-plan partial hit serves the matched prefix from the producer's
+// quantized pages (bit-identical bytes for an identical prefix), adopts
+// the producer's channel plan and scale state, and resumes chunked
+// prefill from the divergence seam under the consumer's own plan. The
+// resumed tail attends over the *dequantized* prefix rows
+// (`RequestCache::dequant_prefix_into`) where an exact private prefill
+// attends over the raw full-precision rows, so the served logits carry a
+// small quantization-class delta even for methods whose plan state is a
+// pure function of the shared prefix (`global_scales == false`).
+// Globally-scaled methods (KVQuant) additionally adopt scale state that
+// embeds the *producer's whole prompt*, so their delta is unbounded by
+// construction — they default OFF and carry no budget promise. This sweep
+// MEASURES the delta per [`MethodSpec`] on a seeded workload — the
+// verdict justifies the per-method serving default
+// (`coordinator::engine::frozen_plan_default`), and the bench gate holds
+// every default-on method to [`FROZEN_PLAN_NLL_BUDGET`].
+
+/// Error budget a method must meet for frozen-plan partial hits to be on
+/// by default: the last-position NLL delta (nats, at the exact run's
+/// argmax token) between a frozen-plan partial hit and an exact private
+/// prefill of the same prompt. Sized as 2× the profile machinery's
+/// absolute slack ([`crate::quant::policy::PREDICTED_BOUND_EPS`]) because
+/// this is a single-position measurement, not a corpus mean.
+pub const FROZEN_PLAN_NLL_BUDGET: f64 = 0.5;
+
+/// One method's frozen-plan ablation measurement.
+#[derive(Clone, Debug)]
+pub struct FrozenPlanEntry {
+    pub spec: MethodSpec,
+    /// The serving default (`frozen_plan_default`) for this method.
+    pub default_on: bool,
+    /// Max-abs last-position logit delta, frozen-plan vs exact.
+    pub logit_err: f64,
+    /// Last-position NLL delta (nats) at the exact run's argmax token.
+    pub nll_delta: f64,
+    /// `nll_delta <= FROZEN_PLAN_NLL_BUDGET` — the sweep's verdict.
+    pub within_budget: bool,
+}
+
+/// Shape of the frozen-plan ablation workload. The producer prompt is
+/// `shared_tokens + r_limit` long so its quantized window ends exactly at
+/// the shared boundary; the consumer shares `shared_tokens` and then
+/// diverges for `tail_tokens`.
+#[derive(Clone, Debug)]
+pub struct FrozenPlanConfig {
+    pub seed: u64,
+    pub r_limit: usize,
+    /// Shared prefix length (must be a whole number of quant groups).
+    pub shared_tokens: usize,
+    /// Divergent consumer tail.
+    pub tail_tokens: usize,
+}
+
+impl Default for FrozenPlanConfig {
+    fn default() -> Self {
+        FrozenPlanConfig { seed: 4242, r_limit: 32, shared_tokens: 64, tail_tokens: 64 }
+    }
+}
+
+fn last_nll_at(logits: &[f32], tok: usize) -> f64 {
+    let mx = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let z: f64 = logits.iter().map(|&x| ((x as f64) - mx).exp()).sum();
+    -((logits[tok] as f64 - mx) - z.ln())
+}
+
+fn run_prefill_to_done(
+    engine: &mut crate::coordinator::engine::Engine,
+    prompt: &[i32],
+    method: &Method,
+) -> Result<(crate::coordinator::engine::PrefillAdmission, crate::coordinator::engine::ChunkedPrefill)>
+{
+    let (adm, mut cp) = engine.admit_prefill(prompt, method)?;
+    while !engine.advance_prefill_chunked(&mut cp, prompt, usize::MAX)? {}
+    Ok((adm, cp))
+}
+
+/// Measure one method's frozen-plan error: producer registers its prompt
+/// into a radix tree, a consumer sharing `shared_tokens` takes a forced
+/// frozen-plan partial hit, and the consumer's last-position logits are
+/// compared against an exact private prefill of the identical prompt on an
+/// identically-seeded engine with no tree.
+pub fn frozen_plan_error(meta: &Meta, spec: MethodSpec, cfg: &FrozenPlanConfig) -> Result<FrozenPlanEntry> {
+    use crate::coordinator::engine::{frozen_plan_default, Engine, PrefillAdmission};
+    use crate::kvcache::radix::RadixTree;
+    use crate::util::rng::Pcg32;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    let group = meta.cache.group;
+    if cfg.shared_tokens == 0 || cfg.shared_tokens % group != 0 {
+        bail!(
+            "shared_tokens {} must be a positive multiple of the quant group {group}",
+            cfg.shared_tokens
+        );
+    }
+    let method = spec.build();
+    let mut rng = Pcg32::seeded(cfg.seed);
+    let vocab = meta.model.vocab as i32;
+    let mut toks = |n: usize| -> Vec<i32> {
+        (0..n).map(|_| (rng.next_u32() as i32).rem_euclid(vocab)).collect()
+    };
+    let shared = toks(cfg.shared_tokens);
+    // producer ends exactly r_limit past the boundary: its quantized window
+    // closes at shared_tokens, so the registered chain covers the shared
+    // prefix precisely
+    let producer: Vec<i32> = shared.iter().copied().chain(toks(cfg.r_limit)).collect();
+    let consumer: Vec<i32> = shared.iter().copied().chain(toks(cfg.tail_tokens + cfg.r_limit)).collect();
+
+    // frozen path: tree installed, frozen-plan FORCED on so even methods
+    // that default off get measured
+    let mut frozen_engine = Engine::new_reference(meta.clone(), cfg.seed, method.clone(), cfg.r_limit)?;
+    let pool = frozen_engine.build_shared_pool(64 << 20);
+    let page_bytes = pool.page_deploy_bytes();
+    frozen_engine.set_kv_pool(pool);
+    frozen_engine.set_prefix_tree(Rc::new(RefCell::new(RadixTree::new(1 << 20, page_bytes))));
+    frozen_engine.set_frozen_plan(Some(true));
+    let (adm, mut pcp) = run_prefill_to_done(&mut frozen_engine, &producer, &method)?;
+    if adm != PrefillAdmission::Miss {
+        bail!("producer prompt unexpectedly hit the empty tree");
+    }
+    let last = pcp.run.last_logits().to_vec();
+    if !frozen_engine.register_prefix(&mut pcp.cache, &producer, &method, &last) {
+        bail!("producer registration refused");
+    }
+    let (adm, ccp) = run_prefill_to_done(&mut frozen_engine, &consumer, &method)?;
+    match adm {
+        PrefillAdmission::PartialHit { matched_tokens, .. } if matched_tokens == cfg.shared_tokens => {}
+        other => bail!(
+            "consumer expected a partial hit at {} tokens, got {other:?}",
+            cfg.shared_tokens
+        ),
+    }
+    let frozen_logits = ccp.run.last_logits().to_vec();
+
+    // exact path: identically seeded engine, no tree — a private prefill
+    let mut exact_engine = Engine::new_reference(meta.clone(), cfg.seed, method.clone(), cfg.r_limit)?;
+    let (_, ecp) = run_prefill_to_done(&mut exact_engine, &consumer, &method)?;
+    let exact_logits = ecp.run.last_logits();
+
+    let logit_err = frozen_logits
+        .iter()
+        .zip(exact_logits)
+        .map(|(a, b)| (a - b).abs() as f64)
+        .fold(0.0, f64::max);
+    let argmax = exact_logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    let nll_delta = (last_nll_at(&frozen_logits, argmax) - last_nll_at(exact_logits, argmax)).abs();
+    Ok(FrozenPlanEntry {
+        spec,
+        default_on: frozen_plan_default(&method),
+        logit_err,
+        nll_delta,
+        within_budget: nll_delta <= FROZEN_PLAN_NLL_BUDGET,
+    })
+}
+
+/// Run [`frozen_plan_error`] for every spec. The serving contract the
+/// bench gate holds: every method whose default is ON measures within
+/// [`FROZEN_PLAN_NLL_BUDGET`].
+pub fn frozen_plan_sweep(
+    meta: &Meta,
+    specs: &[MethodSpec],
+    cfg: &FrozenPlanConfig,
+) -> Result<Vec<FrozenPlanEntry>> {
+    specs.iter().map(|&s| frozen_plan_error(meta, s, cfg)).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -179,5 +352,43 @@ mod tests {
         let w = Weights::random(&meta.model, 11);
         let cfg = ProfileConfig { seq_len: 16, r_limit: 32, ..ProfileConfig::default() };
         assert!(profile(&meta, &w, &[MethodSpec::Bf16], &cfg).is_err());
+    }
+
+    #[test]
+    fn frozen_plan_default_on_methods_measure_within_budget() {
+        let meta = Meta::default_build();
+        let cfg = FrozenPlanConfig::default();
+        let specs: Vec<MethodSpec> = ["mixkvq-mix30", "kivi-kv2", "kvquant-kv2", "kvtuner"]
+            .iter()
+            .map(|n| n.parse::<MethodSpec>().unwrap())
+            .collect();
+        let entries = frozen_plan_sweep(&meta, &specs, &cfg).unwrap();
+        assert_eq!(entries.len(), specs.len());
+        for e in &entries {
+            assert!(e.logit_err.is_finite() && e.nll_delta.is_finite(), "{:?}", e.spec);
+            // the serving contract: every method whose frozen-plan default
+            // is ON must measure inside the error budget (globally-scaled
+            // methods default OFF and carry no such promise)
+            if e.default_on {
+                assert!(
+                    e.within_budget,
+                    "{:?}: frozen-plan nll delta {} exceeds budget {}",
+                    e.spec, e.nll_delta, FROZEN_PLAN_NLL_BUDGET
+                );
+            }
+        }
+        // the plan-locality split the serving default encodes: the paper
+        // method plans from the shared prefix alone and defaults ON;
+        // KVQuant's whole-prompt scale state defaults OFF
+        assert!(entries[0].default_on, "mixkvq must default frozen-plan ON");
+        assert!(!entries[2].default_on, "kvquant must default frozen-plan OFF");
+    }
+
+    #[test]
+    fn frozen_plan_config_rejects_unaligned_prefix() {
+        let meta = Meta::default_build();
+        let cfg = FrozenPlanConfig { shared_tokens: 33, ..FrozenPlanConfig::default() };
+        let spec = "mixkvq-mix30".parse::<MethodSpec>().unwrap();
+        assert!(frozen_plan_error(&meta, spec, &cfg).is_err());
     }
 }

@@ -303,19 +303,20 @@ pub struct TrafficReport {
 /// run serves under exactly the same regime as an uninterrupted one.
 fn server_cfg_for(cfg: &TrafficConfig) -> ServerConfig {
     let chaos = cfg.chaos > 0.0;
-    ServerConfig {
-        memory_budget_bytes: cfg.memory_budget_bytes,
-        max_prefills_per_cycle: cfg.max_prefills_per_cycle,
-        seed: cfg.seed,
-        policy: cfg.policy.clone(),
-        // the chaos fault plan shares the workload seed: one seed fixes
-        // the schedule, the prompts, AND the fault sequence. Serving sites
-        // only — snapshot torn-write/bit-flip faults are exercised by the
-        // dedicated snapshot tests, not the soak.
-        faults: chaos.then(|| FaultPlan::serving_uniform(cfg.seed, cfg.chaos)),
-        workers: cfg.workers.max(1),
-        ..ServerConfig::default()
-    }
+    // the chaos fault plan shares the workload seed: one seed fixes the
+    // schedule, the prompts, AND the fault sequence. Serving sites only —
+    // snapshot torn-write/bit-flip faults are exercised by the dedicated
+    // snapshot tests, not the soak. Fields not pinned here (prefix cache,
+    // frozen plan, snapshot target) resolve their env defaults inside
+    // ServerConfigBuilder::build().
+    ServerConfig::builder()
+        .memory_budget_bytes(cfg.memory_budget_bytes)
+        .max_prefills_per_cycle(cfg.max_prefills_per_cycle)
+        .seed(cfg.seed)
+        .policy(cfg.policy.clone())
+        .faults(chaos.then(|| FaultPlan::serving_uniform(cfg.seed, cfg.chaos)))
+        .workers(cfg.workers.max(1))
+        .build()
 }
 
 /// Harness-side run state: everything `run`'s loop tracks OUTSIDE the
@@ -475,18 +476,18 @@ impl<'a> Driver<'a> {
         self.fp.fold(m.policy_degradations);
 
         // Post-drain page audit: every session is terminal, so the only
-        // pages the pool may still lease are the ones the prefix index pins.
+        // pages the pool may still lease are the ones the radix tree pins.
         let pinned = server
             .engine
-            .prefix_index()
+            .prefix_tree()
             .map(|ix| ix.borrow().pages_pinned())
             .unwrap_or(0);
         let leaked_before_clear = server.pool.leased().saturating_sub(pinned) as u64;
         // Then release those pins too: between the two same-seed runs the
-        // pool must sit at EXACTLY zero leases — a pin the index forgot to
+        // pool must sit at EXACTLY zero leases — a pin the tree forgot to
         // count (or a clear that fails to return pages) is a leak, not
         // bookkeeping.
-        if let Some(ix) = server.engine.prefix_index() {
+        if let Some(ix) = server.engine.prefix_tree() {
             ix.borrow_mut().clear();
         }
         let leaked_pages = leaked_before_clear.max(server.pool.leased() as u64);

@@ -28,25 +28,38 @@
 //!
 //! A page table may begin with **shared read-only prefix pages**
 //! ([`crate::kvcache::pool::PageRef::Shared`]) adopted from a
-//! [`PrefixIndex`] entry: N requests over the same prompt hold refcounted
-//! references to ONE set of quantized pages instead of quantizing N private
-//! copies. The seam contract:
+//! [`crate::kvcache::radix::RadixTree`] probe: N requests over the same
+//! prompt (or the same prompt *prefix*) hold refcounted references to ONE
+//! set of quantized pages instead of quantizing N private copies. The seam
+//! contract:
 //!
 //! * **immutability precondition** — a flushed page is never written again
 //!   (appends mutate the residual; later flushes lease *new* pages), so
 //!   sharing changes provenance, not a single stored bit. Writes through a
-//!   shared [`PageRef`](crate::kvcache::pool::PageRef) panic.
-//! * **whole-prompt keying** — the channel plan and the per-group scale
-//!   blocks are functions of the entire quantized window *and* the whole
-//!   prompt's |Q| statistics, so bit-exact sharing requires the entire
-//!   prompt to match ([`crate::kvcache::pool::prompt_chain_key`]); an entry
-//!   therefore also carries the plans, |Q| state, residual tail, and last
-//!   logits, letting a hit skip the prefill compute outright.
+//!   shared [`PageRef`](crate::kvcache::pool::PageRef) panic. Radix nodes
+//!   hold exactly such flushed pages, one `(layer, head)` set per G-token
+//!   group.
+//! * **full hits are bit-exact, partial hits are frozen-plan** — the
+//!   channel plan and the per-group scale blocks are functions of the
+//!   entire quantized window *and* the whole prompt's |Q| statistics, so
+//!   bit-exact adoption requires the entire prompt to match
+//!   ([`crate::kvcache::pool::prompt_chain_key`]); a full-hit tail carries
+//!   the plans, |Q| state, residual tail, and last logits, letting the
+//!   consumer skip the prefill compute outright. A **partial** hit
+//!   ([`crate::kvcache::radix::PrefixProbe::Partial`]) instead adopts the
+//!   producer's *frozen* plan and |Q| state for the matched groups and
+//!   resumes chunked prefill from the divergence seam
+//!   ([`RequestCache::begin_prefill_from`] /
+//!   [`RequestCache::store_prefill_layer_from`]): the tail quantizes under
+//!   the producer's channel permutation with tail-window scales, a
+//!   bounded, per-method-measured approximation
+//!   (`harness::profiling::frozen_plan_error`).
 //! * **CoW at the seam** — divergence past the shared region copies
-//!   nothing: the first flush after installation leases private pages and
-//!   appends them after the shared ones. Evicting a shared page only drops
-//!   this request's table entry and reference; the page returns to the pool
-//!   when its last holder (co-tenant or index entry) lets go.
+//!   nothing: the first flush (or resumed-prefill store) after
+//!   installation leases private pages and appends them after the shared
+//!   ones. Evicting a shared page only drops this request's table entry
+//!   and reference; the page returns to the pool when its last holder
+//!   (co-tenant or radix node) lets go.
 //!
 //! Every read path (`scores_into`, `values_accumulate_into`, `dequant_*`,
 //! `copy_field_*`, `contiguous`) streams through shared and private pages
@@ -61,7 +74,8 @@ use crate::quant::rotation;
 use crate::quant::salience::QueryStats;
 use crate::quant::window::{self, TierSpec};
 
-use super::pool::{KvPool, PageLayout, PageLease, PageRef, PrefixEntry, PrefixIndex, SharedLease};
+use super::pool::{KvPool, PageLayout, PageLease, PageRef, SharedLease};
+use super::radix::{PrefixMatch, PrefixPayload, RadixTree};
 use super::residual::ResidualBuffer;
 
 /// Tier region selector for page-streamed gathers (`copy_field_f32` /
@@ -571,7 +585,7 @@ pub struct RequestCache {
     pub flush_hold: bool,
     /// Tokens at the head of the quantized window whose pages are shared
     /// (refcounted prefix pages adopted from — or registered into — a
-    /// `PrefixIndex`). Shared pages stay a contiguous window prefix even
+    /// `RadixTree`). Shared pages stay a contiguous window prefix even
     /// under sink-preserving eviction (the evicted interior splices out and
     /// the survivors compact), so one scalar tracks the seam; eviction
     /// accounting treats these pages as freeing nothing to the pool (other
@@ -714,7 +728,7 @@ impl RequestCache {
 
     /// Append the pool identity of every SHARED page this cache references
     /// (one entry per holder — co-held pages repeat across callers, and
-    /// the prefix index contributes its own references; audits dedup by
+    /// the prefix tree contributes its own references; audits dedup by
     /// id). Together with [`RequestCache::private_pages`], this reconciles
     /// live holders against the pool's once-per-page `leased` counter in
     /// `Server::check_invariants`.
@@ -756,7 +770,7 @@ impl RequestCache {
             crate::kvcache::eviction::CachePolicy::SlidingWindow { sink, evict } => {
                 // mirror evict_for's rounds to predict the freed tokens.
                 // Evicted SHARED pages may be kept alive by co-tenants or
-                // the prefix index, so only private evicted tokens count as
+                // the prefix tree, so only private evicted tokens count as
                 // pool-funding the flush (pessimistic: worst case the flush
                 // defers onto the residual, which is always safe).
                 let mut q = self.qlen;
@@ -863,6 +877,43 @@ impl RequestCache {
         Ok(())
     }
 
+    /// Validate a seam-resumed chunked prefill of `t` tokens: the cache
+    /// must hold exactly the `seam` installed prefix tokens (a partial
+    /// [`RequestCache::install_prefix`]), the residual leftover must fit
+    /// X_R, and the pool must cover the *tail* window's pages only — the
+    /// matched prefix is already paid for by its shared pages. Leases
+    /// nothing, like [`RequestCache::begin_prefill`]. `seam == 0` is the
+    /// plain fresh-prefill validation.
+    pub fn begin_prefill_from(&self, t: usize, seam: usize) -> Result<()> {
+        if seam == 0 {
+            return self.begin_prefill(t);
+        }
+        if self.qlen != seam || self.pos != seam || self.rlen() != 0 {
+            bail!(
+                "seam resume requires an installed prefix of exactly {seam} tokens \
+                 (cache holds qlen {} pos {} rlen {})",
+                self.qlen,
+                self.pos,
+                self.rlen()
+            );
+        }
+        let res_cap = self.heads[0][0].res.capacity;
+        let (qt, rl) = Self::prefill_split(t, self.r_limit, self.group, self.capacity);
+        if seam > qt || seam % self.group.max(1) != 0 {
+            bail!("seam {seam} beyond or misaligned with quantized window {qt}");
+        }
+        if rl > res_cap {
+            bail!("prompt too long: residual leftover {rl} > capacity {res_cap}");
+        }
+        let need =
+            super::pool::pages_for_tokens(qt - seam, self.group, self.heads.len(), self.mc_n_kv);
+        if !self.pool.can_lease(need) {
+            self.pool.note_lease_failure();
+            bail!("kv pool exhausted: resumed prefill needs {need} tail pages");
+        }
+        Ok(())
+    }
+
     /// Chunked-prefill layer sink: quantize layer `l`'s full-precision K/V
     /// — token-major `[t, Hkv*dh]`, exactly as the blocked forward produces
     /// them — straight into pool pages (one lease per quantization group as
@@ -886,25 +937,86 @@ impl RequestCache {
         kbuf: &mut [f32],
         vbuf: &mut [f32],
     ) -> Result<()> {
+        self.store_prefill_layer_from(l, k, v, qabs, t, 0, kbuf, vbuf)
+    }
+
+    /// Seam-resumed layer sink: like [`RequestCache::store_prefill_layer`]
+    /// but stores only rows `[seam, t)` — the matched prefix's pages are
+    /// already installed (shared, read-only), so the tail quantizes into
+    /// *new* private pages appended after them (`store_key_window` at a
+    /// group-aligned offset). Because the frozen plan is installed
+    /// (`planned == true`), `quantize_into` skips channel planning and the
+    /// tail packs under the producer's permutation with its own
+    /// tail-window scale blocks — the frozen-plan approximation. The |Q|
+    /// accumulator continues from the adopted state with the tail's
+    /// queries only. `k`/`v` are still full token-major `[t, Hkv*dh]`
+    /// buffers (the resumed forward reconstructs prefix rows for
+    /// attention); `seam == 0` is the plain full store.
+    #[allow(clippy::too_many_arguments)]
+    pub fn store_prefill_layer_from(
+        &mut self,
+        l: usize,
+        k: &[f32],
+        v: &[f32],
+        qabs: &[f32],
+        t: usize,
+        seam: usize,
+        kbuf: &mut [f32],
+        vbuf: &mut [f32],
+    ) -> Result<()> {
         let d = self.d;
         let stride = self.mc_n_kv * d;
         debug_assert_eq!(k.len(), t * stride);
-        debug_assert!(kbuf.len() >= t * d && vbuf.len() >= t * d);
+        debug_assert!(seam <= t && seam % self.group.max(1) == 0);
+        debug_assert!(kbuf.len() >= (t - seam) * d && vbuf.len() >= (t - seam) * d);
         let (qt, rl) = Self::prefill_split(t, self.r_limit, self.group, self.capacity);
+        debug_assert!(seam <= qt, "seam past the quantized window");
+        let tail = t - seam;
+        let qtail = qt - seam;
         for h in 0..self.mc_n_kv {
-            for s in 0..t {
-                let row = s * stride + h * d;
+            for s in 0..tail {
+                let row = (seam + s) * stride + h * d;
                 kbuf[s * d..(s + 1) * d].copy_from_slice(&k[row..row + d]);
                 vbuf[s * d..(s + 1) * d].copy_from_slice(&v[row..row + d]);
             }
-            self.heads[l][h].qstats.update(&qabs[h * d..(h + 1) * d], t as f32);
-            if qt > 0 {
-                self.quantize_into(l, h, &kbuf[..qt * d], &vbuf[..qt * d], qt, 0)?;
+            self.heads[l][h].qstats.update(&qabs[h * d..(h + 1) * d], tail as f32);
+            if qtail > 0 {
+                self.quantize_into(l, h, &kbuf[..qtail * d], &vbuf[..qtail * d], qtail, seam)?;
             }
             let head = &mut self.heads[l][h];
-            head.res.extend(&kbuf[qt * d..t * d], &vbuf[qt * d..t * d], rl);
+            head.res.extend(&kbuf[qtail * d..tail * d], &vbuf[qtail * d..tail * d], rl);
         }
         Ok(())
+    }
+
+    /// Reconstruct the installed prefix's K/V rows `[0, seam)` for layer
+    /// `l`, token-major `[seam, Hkv*dh]` in RAW channel space — what a
+    /// seam-resumed chunked prefill feeds its streaming attention. Keys
+    /// dequantize from the shared pages in rotated space, so rotating
+    /// methods map them back through Rᵀ ([`rotation::unrotate_rows`]);
+    /// values are stored unrotated. Lossy by design: the reconstructed
+    /// rows carry the producer's quantization error, which is exactly the
+    /// frozen-plan approximation `harness::profiling::frozen_plan_error`
+    /// measures against its per-method bound.
+    pub fn dequant_prefix_into(&self, l: usize, seam: usize, k_out: &mut [f32], v_out: &mut [f32]) {
+        let d = self.d;
+        let stride = self.mc_n_kv * d;
+        debug_assert!(seam <= self.qlen && seam % self.group.max(1) == 0);
+        debug_assert!(k_out.len() >= seam * stride && v_out.len() >= seam * stride);
+        for h in 0..self.mc_n_kv {
+            let head = &self.heads[l][h];
+            let mut kd = head.dequant_keys(seam);
+            if self.method.rotate {
+                rotation::unrotate_rows(&mut kd, seam, d, &self.rot);
+            }
+            let vd = head.dequant_values(seam);
+            for s in 0..seam {
+                k_out[s * stride + h * d..s * stride + (h + 1) * d]
+                    .copy_from_slice(&kd[s * d..(s + 1) * d]);
+                v_out[s * stride + h * d..s * stride + (h + 1) * d]
+                    .copy_from_slice(&vd[s * d..(s + 1) * d]);
+            }
+        }
     }
 
     /// Seal a chunked prefill: set the window/position cursors once every
@@ -915,29 +1027,35 @@ impl RequestCache {
         self.pos = t;
     }
 
-    /// Publish this cache's freshly prefilled prompt into `index` under
-    /// `key` (see `pool::prompt_chain_key` — `prompt` is the token sequence
-    /// the key was derived from; the entry retains a copy so every probe
-    /// verifies it and a hash collision can never serve the wrong prompt's
-    /// pages): the quantized window's pages convert to shared read-only
-    /// form in place and the entry captures the channel plans, |Q| state,
+    /// Publish this cache's freshly prefilled prompt into `tree` under the
+    /// quantization-identity `seed` (see `pool::prefix_seed` — `prompt` is
+    /// the token sequence the chain links derive from; nodes and the tail
+    /// retain token copies so every probe verifies them and a hash
+    /// collision can never serve the wrong prompt's pages): the quantized
+    /// window's pages convert to shared read-only form in place, one radix
+    /// node per group, and the tail captures the channel plans, |Q| state,
     /// residual tail, and `last_logits` — enough for a later request with
-    /// the same prompt to skip its prefill entirely. Must be called before
-    /// any decode appends (the entry must be exactly the prompt's prefill
-    /// state); returns false without side effects on a duplicate key, an
-    /// evicted window, a prompt that does not match this cache's state, or
-    /// an entry the index's page cap could never accept — every refusal
-    /// happens BEFORE the sidecar is assembled, so it copies nothing.
+    /// the same prompt to skip its prefill entirely, and for one with the
+    /// same prompt *prefix* to resume from the seam under the frozen plan.
+    /// Must be called before any decode appends (the payload must be
+    /// exactly the prompt's prefill state); returns false without side
+    /// effects on a duplicate key, an evicted window, a prompt that does
+    /// not match this cache's state, or a payload the tree's page cap
+    /// could never accept — every refusal happens BEFORE the sidecar is
+    /// assembled, so it copies nothing. (Collision and plan-conflict
+    /// refusals happen inside [`RadixTree::register`], after assembly —
+    /// they require the chain walk.)
     pub fn register_prefix(
         &mut self,
-        index: &mut PrefixIndex,
-        key: u64,
+        tree: &mut RadixTree,
+        seed: u64,
         prompt: &[i32],
         last_logits: &[f32],
     ) -> bool {
+        let key = super::pool::prompt_chain_key(seed, prompt, self.group);
         // an evicted window is no longer the pristine prompt prefill (and
         // makes pos != qlen + rlen below) — refuse it BEFORE any assert
-        if self.evicted_tokens > 0 || prompt.len() != self.pos || index.contains(key) {
+        if self.evicted_tokens > 0 || prompt.len() != self.pos || tree.contains(key) {
             return false;
         }
         debug_assert_eq!(
@@ -947,7 +1065,7 @@ impl RequestCache {
         );
         let groups = self.qlen / self.group;
         let nl = self.heads.len();
-        if !index.would_accept(groups * nl * self.mc_n_kv) {
+        if !tree.would_accept(groups * nl * self.mc_n_kv) {
             return false;
         }
         let planned = groups > 0;
@@ -980,63 +1098,71 @@ impl RequestCache {
             res_v.push(vrow);
         }
         // the producer's own prefix is shared from here on, whatever the
-        // index decides — eviction accounting must go pessimistic
+        // tree decides — eviction accounting must go pessimistic
         self.shared_prefix_tokens = self.qlen;
-        let entry = PrefixEntry::new(
-            prompt.to_vec(),
-            self.qlen,
-            self.group,
-            self.d,
+        let payload = PrefixPayload {
+            tokens: prompt.to_vec(),
+            qt: self.qlen,
+            group: self.group,
+            d: self.d,
+            layers: nl,
+            heads: self.mc_n_kv,
             pages,
             plans,
             qstats,
             res_k,
             res_v,
-            last_logits.to_vec(),
-        );
-        index.insert(key, entry)
+            last_logits: last_logits.to_vec(),
+        };
+        tree.register(seed, payload)
     }
 
-    /// Adopt a registered prompt: reference its shared pages (no lease, no
+    /// Adopt a probe result: reference its shared pages (no lease, no
     /// quantization), restore the channel plans and |Q| statistics that
-    /// produced them, copy the bounded residual tail, and set the cursors —
-    /// the whole prefill, skipped. The cache must be fresh; the entry must
-    /// have been registered under a key whose seed matches this cache's
-    /// method/geometry (`pool::prefix_seed` guarantees that in serving).
-    pub fn install_prefix(&mut self, entry: &PrefixEntry) -> Result<()> {
+    /// produced them, copy the bounded residual tail, and set the cursors.
+    /// For a **full** match that is the whole prefill, skipped; for a
+    /// **partial** match (`t == qt == matched tokens`, empty residual) the
+    /// cache is left at the divergence seam — frozen plan installed,
+    /// `planned` set — ready for [`RequestCache::begin_prefill_from`]. The
+    /// cache must be fresh; the match must come from a probe whose seed
+    /// matches this cache's method/geometry (`pool::prefix_seed`
+    /// guarantees that in serving).
+    pub fn install_prefix(&mut self, m: &PrefixMatch) -> Result<()> {
         if self.pos != 0 || self.qlen != 0 || self.rlen() != 0 {
             bail!("install_prefix requires a fresh cache");
         }
         let nl = self.heads.len();
-        if entry.pages.len() != nl
-            || entry.pages.first().map(Vec::len) != Some(self.mc_n_kv)
-            || entry.group != self.group
-            || entry.d != self.d
+        if (m.qt > 0
+            && (m.pages.len() != nl || m.pages.first().map(Vec::len) != Some(self.mc_n_kv)))
+            || m.group != self.group
+            || m.d != self.d
         {
-            bail!("prefix entry geometry mismatch");
+            bail!("prefix match geometry mismatch");
         }
-        let rl = entry.t - entry.qt;
-        if rl > self.heads[0][0].res.capacity || entry.qt > self.capacity {
-            bail!("prefix entry exceeds this cache's window/residual capacity");
+        let rl = m.t - m.qt;
+        if rl > self.heads[0][0].res.capacity || m.qt > self.capacity {
+            bail!("prefix match exceeds this cache's window/residual capacity");
         }
-        let planned = entry.qt > 0;
+        let planned = m.qt > 0;
         for (l, row) in self.heads.iter_mut().enumerate() {
             for (h, head) in row.iter_mut().enumerate() {
-                head.pages =
-                    entry.pages[l][h].iter().cloned().map(PageRef::Shared).collect();
                 if planned {
-                    head.idx = entry.plans[l][h].clone();
+                    head.pages =
+                        m.pages[l][h].iter().cloned().map(PageRef::Shared).collect();
+                    head.idx = m.plans[l][h].clone();
                     head.planned = true;
                 }
-                let (sum_abs, count) = &entry.qstats[l][h];
+                let (sum_abs, count) = &m.qstats[l][h];
                 head.qstats.sum_abs.copy_from_slice(sum_abs);
                 head.qstats.count = *count;
-                head.res.extend(&entry.res_k[l][h], &entry.res_v[l][h], rl);
+                if rl > 0 {
+                    head.res.extend(&m.res_k[l][h], &m.res_v[l][h], rl);
+                }
             }
         }
-        self.qlen = entry.qt;
-        self.pos = entry.t;
-        self.shared_prefix_tokens = entry.qt;
+        self.qlen = m.qt;
+        self.pos = m.t;
+        self.shared_prefix_tokens = m.qt;
         Ok(())
     }
 
@@ -1634,16 +1760,29 @@ mod tests {
         }
     }
 
+    fn probe_full(
+        tree: &mut crate::kvcache::radix::RadixTree,
+        seed: u64,
+        prompt: &[i32],
+        group: usize,
+    ) -> crate::kvcache::radix::PrefixMatch {
+        match tree.lookup(seed, prompt, group, 0) {
+            crate::kvcache::radix::PrefixProbe::Full(m) => m,
+            _ => panic!("expected a full prefix hit"),
+        }
+    }
+
     #[test]
     fn register_install_roundtrip_and_cow_divergence() {
-        use crate::kvcache::pool::{KvPool, PrefixIndex};
+        use crate::kvcache::pool::KvPool;
+        use crate::kvcache::radix::{PrefixPeek, RadixTree};
         let mc = ModelConfig { n_layers: 2, ..ModelConfig::default_build() };
         let cc = CacheConfig::default_build();
         let spec = TierSpec { n16: 2, n4: 2, n2: 28, v_bits: 2 };
         let specs = vec![spec; 2];
         let pool = KvPool::for_specs(specs.iter(), mc.d_head, cc.group, Some(64));
         pool.prewarm(64);
-        let mut index = PrefixIndex::new(64, pool.page_deploy_bytes());
+        let mut tree = RadixTree::new(64, pool.page_deploy_bytes());
         let mut rng = Pcg32::seeded(77);
         let t = 160; // 128 quantized (4 groups) + 32 residual at r_limit=32
         let (k, v, qa) = rand_kv(&mut rng, &mc, t);
@@ -1654,14 +1793,16 @@ mod tests {
         let prefix_pages = pool.leased();
         let prompt: Vec<i32> = (0..t as i32).collect();
         let logits = vec![1.5, -2.5, 0.25];
-        assert!(producer.register_prefix(&mut index, 42, &prompt, &logits));
+        let seed = 42u64;
+        assert!(producer.register_prefix(&mut tree, seed, &prompt, &logits));
         assert_eq!(producer.shared_prefix_tokens, producer.qlen);
         assert_eq!(pool.leased(), prefix_pages, "registration must lease nothing");
-        assert_eq!(index.pages_pinned(), prefix_pages);
-        assert_eq!(index.peek(42, &prompt).unwrap().last_logits(), &logits[..]);
+        assert_eq!(tree.pages_pinned(), prefix_pages);
+        assert_eq!(tree.node_count(), 4, "one node per quantized group");
+        assert_eq!(tree.peek(seed, &prompt, cc.group, 0), PrefixPeek::Full);
         // duplicate registration refused; so is a wrong-length prompt
-        assert!(!producer.register_prefix(&mut index, 42, &prompt, &logits));
-        assert!(!producer.register_prefix(&mut index, 43, &prompt[..t - 1], &logits));
+        assert!(!producer.register_prefix(&mut tree, seed, &prompt, &logits));
+        assert!(!producer.register_prefix(&mut tree, 43, &prompt[..t - 1], &logits));
 
         // a private cache fed the same prefill is the bit-identity oracle
         let mut oracle = RequestCache::new(&mc, &cc, &specs, method.clone(), 32);
@@ -1670,7 +1811,9 @@ mod tests {
         // consumer adopts the prompt: zero new pool pages, zero compute
         let mut consumer =
             RequestCache::new_in(&pool, &mc, &cc, &specs, method.clone(), 32);
-        consumer.install_prefix(index.lookup(42, &prompt).unwrap()).unwrap();
+        let m = probe_full(&mut tree, seed, &prompt, cc.group);
+        consumer.install_prefix(&m).unwrap();
+        drop(m);
         assert_eq!(pool.leased(), prefix_pages, "a hit must lease nothing");
         assert_eq!(consumer.qlen, oracle.qlen);
         assert_eq!(consumer.pos, oracle.pos);
@@ -1710,26 +1853,27 @@ mod tests {
         }
         let tail = consumer.private_pages();
         assert_eq!(pool.leased(), prefix_pages + tail);
-        // retirement returns ONLY the private tail; the index still pins
+        // retirement returns ONLY the private tail; the tree still pins
         // the prefix (and the producer still references it)
         drop(consumer);
         assert_eq!(pool.leased(), prefix_pages);
         drop(producer);
-        assert_eq!(pool.leased(), prefix_pages, "index pin keeps the prefix alive");
-        index.clear();
+        assert_eq!(pool.leased(), prefix_pages, "tree pin keeps the prefix alive");
+        tree.clear();
         assert_eq!(pool.leased(), 0);
     }
 
     #[test]
     fn residual_only_prompt_registers_and_installs_without_pages() {
-        use crate::kvcache::pool::{KvPool, PrefixIndex};
+        use crate::kvcache::pool::KvPool;
+        use crate::kvcache::radix::RadixTree;
         let mc = ModelConfig { n_layers: 2, ..ModelConfig::default_build() };
         let cc = CacheConfig::default_build();
         let spec = TierSpec { n16: 2, n4: 2, n2: 28, v_bits: 2 };
         let specs = vec![spec; 2];
         let pool = KvPool::for_specs(specs.iter(), mc.d_head, cc.group, Some(16));
         pool.prewarm(16);
-        let mut index = PrefixIndex::new(16, pool.page_deploy_bytes());
+        let mut tree = RadixTree::new(16, pool.page_deploy_bytes());
         let mut rng = Pcg32::seeded(78);
         let t = 20; // < r_limit: everything rides the residual, zero pages
         let (k, v, qa) = rand_kv(&mut rng, &mc, t);
@@ -1738,10 +1882,12 @@ mod tests {
         producer.load_prefill(&k, &v, &qa, t).unwrap();
         assert_eq!(producer.leased_pages(), 0);
         let prompt: Vec<i32> = (0..t as i32).collect();
-        assert!(producer.register_prefix(&mut index, 7, &prompt, &[0.5]));
+        assert!(producer.register_prefix(&mut tree, 7, &prompt, &[0.5]));
+        assert_eq!(tree.node_count(), 0, "no quantized groups, no nodes");
         let mut consumer =
             RequestCache::new_in(&pool, &mc, &cc, &specs, Method::kivi("kv2"), 32);
-        consumer.install_prefix(index.lookup(7, &prompt).unwrap()).unwrap();
+        let m = probe_full(&mut tree, 7, &prompt, cc.group);
+        consumer.install_prefix(&m).unwrap();
         assert_eq!((consumer.qlen, consumer.pos, consumer.rlen()), (0, t, t));
         assert!(!consumer.heads[0][0].planned, "no window, no plan yet");
         assert_eq!(consumer.heads[0][0].res.keys(), producer.heads[0][0].res.keys());
@@ -1757,30 +1903,106 @@ mod tests {
 
     #[test]
     fn install_prefix_rejects_geometry_mismatch_and_used_cache() {
-        use crate::kvcache::pool::{KvPool, PrefixIndex};
+        use crate::kvcache::pool::KvPool;
+        use crate::kvcache::radix::RadixTree;
         let mc = ModelConfig { n_layers: 2, ..ModelConfig::default_build() };
         let cc = CacheConfig::default_build();
         let spec = TierSpec { n16: 2, n4: 2, n2: 28, v_bits: 2 };
         let specs = vec![spec; 2];
         let pool = KvPool::for_specs(specs.iter(), mc.d_head, cc.group, None);
-        let mut index = PrefixIndex::new(1024, pool.page_deploy_bytes());
+        let mut tree = RadixTree::new(1024, pool.page_deploy_bytes());
         let mut rng = Pcg32::seeded(79);
         let (k, v, qa) = rand_kv(&mut rng, &mc, 96);
         let mut producer =
             RequestCache::new_in(&pool, &mc, &cc, &specs, Method::mixkvq("mix30"), 32);
         producer.load_prefill(&k, &v, &qa, 96).unwrap();
         let prompt: Vec<i32> = (0..96).collect();
-        assert!(producer.register_prefix(&mut index, 1, &prompt, &[0.0]));
+        assert!(producer.register_prefix(&mut tree, 1, &prompt, &[0.0]));
         // a cache that already holds state must refuse an install
         let mut used =
             RequestCache::new_in(&pool, &mc, &cc, &specs, Method::mixkvq("mix30"), 32);
         used.load_prefill(&k, &v, &qa, 96).unwrap();
-        assert!(used.install_prefix(index.peek(1, &prompt).unwrap()).is_err());
-        // a single-layer cache must refuse a two-layer entry
+        let m = probe_full(&mut tree, 1, &prompt, cc.group);
+        assert!(used.install_prefix(&m).is_err());
+        // a single-layer cache must refuse a two-layer match
         let mc1 = ModelConfig { n_layers: 1, ..ModelConfig::default_build() };
         let mut wrong =
             RequestCache::new(&mc1, &cc, &specs[..1].to_vec(), Method::mixkvq("mix30"), 32);
-        assert!(wrong.install_prefix(index.peek(1, &prompt).unwrap()).is_err());
+        assert!(wrong.install_prefix(&m).is_err());
+    }
+
+    #[test]
+    fn partial_install_resumes_prefill_from_seam() {
+        use crate::kvcache::pool::KvPool;
+        use crate::kvcache::radix::{PrefixProbe, RadixTree};
+        let mc = ModelConfig { n_layers: 2, ..ModelConfig::default_build() };
+        let cc = CacheConfig::default_build();
+        let spec = TierSpec { n16: 2, n4: 2, n2: 28, v_bits: 2 };
+        let specs = vec![spec; 2];
+        let pool = KvPool::for_specs(specs.iter(), mc.d_head, cc.group, Some(64));
+        pool.prewarm(64);
+        let mut tree = RadixTree::new(64, pool.page_deploy_bytes());
+        let mut rng = Pcg32::seeded(81);
+        let t = 160; // producer: qt = 128 (4 groups)
+        let (k, v, qa) = rand_kv(&mut rng, &mc, t);
+        let method = Method::mixkvq("mix30");
+        let mut producer =
+            RequestCache::new_in(&pool, &mc, &cc, &specs, method.clone(), 32);
+        producer.load_prefill(&k, &v, &qa, t).unwrap();
+        let prompt: Vec<i32> = (0..t as i32).collect();
+        let seed = 5u64;
+        assert!(producer.register_prefix(&mut tree, seed, &prompt, &[0.0]));
+        let prefix_pages = pool.leased();
+
+        // a prompt sharing the first 3 groups then diverging partial-hits at
+        // the deepest verified node: M = 96 tokens
+        let mut prompt2 = prompt.clone();
+        for x in prompt2.iter_mut().skip(96) {
+            *x += 1000;
+        }
+        let (qt_c, _) = RequestCache::prefill_split(t, 32, cc.group, cc.capacity);
+        let cap = RadixTree::partial_walk_groups(qt_c, t, cc.group);
+        let m = match tree.lookup(seed, &prompt2, cc.group, cap) {
+            PrefixProbe::Partial(m) => m,
+            other => panic!("expected partial, got {:?}", std::mem::discriminant(&other)),
+        };
+        assert_eq!((m.t, m.qt), (96, 96));
+        let mut consumer =
+            RequestCache::new_in(&pool, &mc, &cc, &specs, method.clone(), 32);
+        consumer.install_prefix(&m).unwrap();
+        drop(m);
+        assert_eq!(pool.leased(), prefix_pages, "partial install leases nothing");
+        assert_eq!((consumer.qlen, consumer.pos, consumer.rlen()), (96, 96, 0));
+        assert!(consumer.heads[0][0].planned, "frozen plan adopted");
+        assert_eq!(consumer.shared_prefix_tokens, 96);
+
+        // resume chunked-prefill bookkeeping from the seam and store the tail
+        consumer.begin_prefill_from(t, 96).unwrap();
+        let d = mc.d_head;
+        let mut kbuf = vec![0.0f32; t * d];
+        let mut vbuf = vec![0.0f32; t * d];
+        let (k2, v2, qa2) = rand_kv(&mut rng, &mc, t);
+        for l in 0..mc.n_layers {
+            consumer
+                .store_prefill_layer_from(l, &k2[l], &v2[l], &qa2[l], t, 96, &mut kbuf, &mut vbuf)
+                .unwrap();
+        }
+        consumer.finish_prefill(t);
+        assert_eq!((consumer.qlen, consumer.pos, consumer.rlen()), (128, 160, 32));
+        let tail_pages = consumer.private_pages();
+        assert!(tail_pages > 0, "tail group must land in private pages");
+        assert_eq!(pool.leased(), prefix_pages + tail_pages);
+        assert_eq!(consumer.shared_pages() + tail_pages, consumer.leased_pages());
+
+        // the consumer can extend the tree under the adopted plan: same
+        // shared nodes, one new leaf chain for the divergent group
+        assert!(consumer.register_prefix(&mut tree, seed, &prompt2, &[0.0]));
+        assert_eq!(tree.node_count(), 5, "3 shared + 1 old leaf + 1 new leaf");
+        assert_eq!(tree.stats().plan_conflicts, 0);
+        drop(consumer);
+        drop(producer);
+        tree.clear();
+        assert_eq!(pool.leased(), 0);
     }
 
     #[test]

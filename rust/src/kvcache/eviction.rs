@@ -50,7 +50,7 @@ impl RequestCache {
     ///
     /// Shared prefix pages may be evicted like any others: the splice drops
     /// only THIS request's reference — the page returns to the pool when its
-    /// last holder (a co-tenant or the prefix index) lets go. The shared
+    /// last holder (a co-tenant or the prefix tree) lets go. The shared
     /// region stays a window prefix across rounds (the evicted interior
     /// splices out and the survivors compact), so the request-level
     /// `shared_prefix_tokens` scalar shrinks by exactly the overlap.

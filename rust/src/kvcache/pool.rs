@@ -54,20 +54,21 @@
 //! prompt's quantized window safe to share across requests. [`SharedLease`]
 //! is the refcounted form of a lease: `clone` bumps the count, `drop`
 //! decrements it, and the page returns to the pool only when the last
-//! holder drops. [`PrefixIndex`] is the content-addressed registry of such
-//! shared prompt windows: entries are keyed by a group-aligned rolling hash
-//! chain over the prompt tokens ([`prompt_chain_key`]) scoped to the
-//! quantization identity ([`prefix_seed`]), so a lookup is an O(chunks)
-//! hash walk to ONE candidate entry plus a single token-compare verify on
-//! it (the collision backstop — a 64-bit key match can never serve another
-//! prompt's pages), never a scan. An entry pins one reference per page
-//! (retention for future tenants, LRU-shed under a page cap or pool
-//! pressure) plus the small per-request state a consumer needs to skip the
-//! prefill entirely: channel plans, |Q| statistics, the f32 residual tail,
-//! and the last-position logits. N requests over one prompt therefore pay
-//! ~1× its quantized bytes and zero prefill compute; the pool's `leased`
-//! counter counts every shared page exactly once, which is what makes the
-//! scheduler's occupancy admission charge shared pages once too.
+//! holder drops. The content-addressed registry of such shared prompt
+//! windows is [`crate::kvcache::radix::RadixTree`]: a group-aligned radix
+//! tree over prompt chunks whose node keys are the intermediate links of
+//! the rolling hash chain ([`prompt_chain_links`]) scoped to the
+//! quantization identity ([`prefix_seed`]), so a probe is an O(chunks)
+//! hash walk with a token-compare verify per node (the collision backstop —
+//! a 64-bit link match can never serve another prompt's pages), never a
+//! scan. Each node pins one reference per page of its G-token span
+//! (retention for future tenants, LRU-shed from the leaves under a page cap
+//! or pool pressure); a full-prompt tail additionally carries the small
+//! per-request state a consumer needs to skip the prefill entirely. N
+//! requests over one prompt therefore pay ~1× its quantized bytes and zero
+//! (full hit) or tail-only (partial hit) prefill compute; the pool's
+//! `leased` counter counts every shared page exactly once, which is what
+//! makes the scheduler's occupancy admission charge shared pages once too.
 
 use std::collections::{HashMap, HashSet};
 use std::ops::Range;
@@ -78,7 +79,6 @@ use anyhow::{bail, Result};
 use crate::quant::packing;
 use crate::quant::window::TierSpec;
 use crate::util::faults::{FaultInjector, FaultSite};
-use crate::util::snapshot::{corrupt, SnapReader, SnapResult, SnapWriter};
 
 /// Pages `tokens` group-aligned tokens occupy across `n_layers ×
 /// n_kv_heads` heads — one page per quantization group per head. The
@@ -700,7 +700,7 @@ impl SharedLease {
         self.inner.page()
     }
 
-    /// Current holders (page tables + the prefix index entry).
+    /// Current holders (page tables + the prefix tree's pin).
     pub fn refs(&self) -> usize {
         Arc::strong_count(&self.inner)
     }
@@ -753,7 +753,7 @@ impl PageRef {
     }
 
     /// Convert this slot to the shared form (idempotent), handing back one
-    /// additional [`SharedLease`] reference for the prefix index.
+    /// additional [`SharedLease`] reference for the prefix tree.
     pub fn into_shared(self) -> (PageRef, SharedLease) {
         match self {
             PageRef::Private(l) => {
@@ -768,9 +768,9 @@ impl PageRef {
     }
 }
 
-// --- content-addressed prefix index -------------------------------------
+// --- content-addressed prefix keys --------------------------------------
 
-fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+pub(crate) fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
     for &b in bytes {
         h ^= b as u64;
         h = h.wrapping_mul(0x100_0000_01b3);
@@ -802,11 +802,14 @@ pub fn prefix_seed(
 /// Group-aligned rolling hash chain over a prompt: one link per G-token
 /// group plus a final link for the unaligned tail, so the walk is
 /// O(chunks) and a shared prefix of two prompts shares a hash prefix. The
-/// full-prompt key (the last link) is what [`PrefixIndex`] entries are
-/// registered under: the channel plan and the scale blocks are functions of
-/// the *whole* quantized window plus the whole prompt's |Q| statistics, so
-/// bit-exact sharing requires the entire prompt to match, not just a
-/// leading slice (see the `kvcache::cache` docs for the seam contract).
+/// full-prompt key (the last link) is what radix-tree *tails* (the
+/// full-prefill sidecar state) are registered under; the intermediate
+/// links ([`prompt_chain_links`]) key the tree's interior nodes, one per
+/// full G-token group, so a probe descends the shared hash prefix and a
+/// partial hit adopts exactly the matched groups. Bit-exact sharing still
+/// requires the entire prompt to match — partial hits run in frozen-plan
+/// mode with a bounded, measured extra quantization error (see the
+/// `kvcache::cache` docs for the seam contract).
 ///
 /// ```
 /// use mixkvq::kvcache::pool::{prefix_seed, prompt_chain_key};
@@ -828,562 +831,23 @@ pub fn prompt_chain_key(seed: u64, tokens: &[i32], group: usize) -> u64 {
     h
 }
 
-/// Everything a consumer request needs to adopt a registered prompt without
-/// running its prefill: the shared quantized pages, the channel plans and
-/// |Q| statistics that produced them, the f32 residual tail, and the
-/// last-position logits. The page vectors hold one [`SharedLease`]
-/// reference each, so an entry *pins* its pages in the pool until it is
-/// shed (LRU, under the index page cap or pool pressure).
-pub struct PrefixEntry {
-    /// Prompt length (tokens).
-    pub t: usize,
-    /// Quantized-window tokens (group-aligned; `t - qt` rides the residual).
-    pub qt: usize,
-    /// The registered prompt itself: every probe compares it against the
-    /// requesting prompt, so a 64-bit chain-key collision (FNV-1a is not
-    /// cryptographic) degrades to a recorded miss — it can never serve
-    /// another prompt's KV pages. Tiny next to the f32 residual snapshot.
-    pub(crate) tokens: Vec<i32>,
-    pub(crate) group: usize,
-    pub(crate) d: usize,
-    /// `pages[layer][head][group]`.
-    pub(crate) pages: Vec<Vec<Vec<SharedLease>>>,
-    /// Channel permutation per `[layer][head]`; empty when `qt == 0` (a
-    /// residual-only prompt never planned its channels).
-    pub(crate) plans: Vec<Vec<Vec<i32>>>,
-    /// `(sum_abs, count)` |Q| accumulator state per `[layer][head]`.
-    pub(crate) qstats: Vec<Vec<(Vec<f32>, f32)>>,
-    /// Residual K/V rows `[qt..t)` per `[layer][head]`, row-major `[rl, d]`.
-    pub(crate) res_k: Vec<Vec<Vec<f32>>>,
-    pub(crate) res_v: Vec<Vec<Vec<f32>>>,
-    pub(crate) last_logits: Vec<f32>,
-    /// LRU stamp, bumped on every hit.
-    stamp: u64,
-}
-
-impl PrefixEntry {
-    /// Assembled by `RequestCache::register_prefix` — the only producer.
-    #[allow(clippy::too_many_arguments)]
-    pub(crate) fn new(
-        tokens: Vec<i32>,
-        qt: usize,
-        group: usize,
-        d: usize,
-        pages: Vec<Vec<Vec<SharedLease>>>,
-        plans: Vec<Vec<Vec<i32>>>,
-        qstats: Vec<Vec<(Vec<f32>, f32)>>,
-        res_k: Vec<Vec<Vec<f32>>>,
-        res_v: Vec<Vec<Vec<f32>>>,
-        last_logits: Vec<f32>,
-    ) -> PrefixEntry {
-        PrefixEntry {
-            t: tokens.len(),
-            qt,
-            tokens,
-            group,
-            d,
-            pages,
-            plans,
-            qstats,
-            res_k,
-            res_v,
-            last_logits,
-            stamp: 0,
+/// Every intermediate link of the [`prompt_chain_key`] chain, one per
+/// (possibly partial) chunk, in walk order: `links[i]` keys the prefix
+/// `tokens[..(i+1)*group]` (clamped to `tokens.len()`). These are the radix
+/// tree's node addresses — a probe descends link by link, and two prompts
+/// sharing a group-aligned prefix share the corresponding link prefix.
+pub fn prompt_chain_links(seed: u64, tokens: &[i32], group: usize) -> Vec<u64> {
+    let mut h = seed;
+    let mut links = Vec::with_capacity(tokens.len().div_ceil(group.max(1)));
+    for chunk in tokens.chunks(group.max(1)) {
+        let mut link = fnv1a(h, &(chunk.len() as u64).to_le_bytes());
+        for &t in chunk {
+            link = fnv1a(link, &t.to_le_bytes());
         }
+        h = link;
+        links.push(link);
     }
-
-    /// Pool pages this entry pins (one reference per page).
-    pub fn pages_count(&self) -> usize {
-        self.pages.iter().flatten().map(Vec::len).sum()
-    }
-
-    /// Append the pool identity of every page this entry pins (see
-    /// [`SharedLease::page_id`]) — invariant audits dedup these against
-    /// the ids live caches hold.
-    pub fn collect_page_ids(&self, out: &mut Vec<usize>) {
-        for s in self.pages.iter().flatten().flatten() {
-            out.push(s.page_id());
-        }
-    }
-
-    /// Last-position logits of the registered prompt (the consumer's first
-    /// sampling input — prefill compute skipped, not just bytes).
-    pub fn last_logits(&self) -> &[f32] {
-        &self.last_logits
-    }
-
-    /// Off-pool bytes the entry itself retains (prompt copy, residual
-    /// snapshot, logits, plans, |Q| state) — the bounded per-entry overhead
-    /// of full prefill skipping, reported so operators can budget the index
-    /// honestly.
-    pub fn sidecar_bytes(&self) -> usize {
-        let f32s = self.res_k.iter().flatten().map(Vec::len).sum::<usize>()
-            + self.res_v.iter().flatten().map(Vec::len).sum::<usize>()
-            + self.qstats.iter().flatten().map(|(s, _)| s.len() + 1).sum::<usize>()
-            + self.last_logits.len();
-        let i32s = self.plans.iter().flatten().map(Vec::len).sum::<usize>() + self.tokens.len();
-        4 * (f32s + i32s)
-    }
-}
-
-/// Counter snapshot for metrics (`coordinator::metrics::Metrics::observe_prefix`).
-#[derive(Clone, Copy, Debug, Default)]
-pub struct PrefixStats {
-    pub entries: usize,
-    pub pages_pinned: usize,
-    pub hits: u64,
-    pub misses: u64,
-    pub insertions: u64,
-    /// Entries shed — by the LRU cap at insert or by pool-pressure shedding.
-    pub evictions: u64,
-    /// Registrations refused because the entry alone exceeds the page cap.
-    pub rejected: u64,
-    /// Probes whose 64-bit chain key matched a resident entry but whose
-    /// prompt tokens did not — a hash collision, recorded as a miss and
-    /// never served (the token compare is the correctness backstop).
-    pub collisions: u64,
-    /// Deployment bytes consumers did NOT lease privately (pages adopted on
-    /// hits × bytes/page), cumulative.
-    pub bytes_deduped: u64,
-    /// Off-pool bytes currently held by entry sidecars (prompt copies,
-    /// residual snapshots, logits, plans).
-    pub sidecar_bytes: usize,
-}
-
-/// Content-addressed registry of shared prompt windows, LRU-bounded by the
-/// pool pages it may pin. Coordinator-only by design — the server owns one
-/// behind `Rc<RefCell<…>>` shared with the engine and it never crosses a
-/// worker-pool thread boundary (prefix probes, registrations, and
-/// pressure-shedding all run on the coordinator between parallel phases),
-/// so it needs no lock even though the leases it pins are `Arc`s.
-/// Hard ceiling on resident prefix entries regardless of the page cap —
-/// residual-only prompts pin ZERO pages but still hold a bounded sidecar
-/// (prompt copy, residual snapshot, logits), so a page cap alone would let
-/// a stream of distinct short prompts grow the index forever.
-const PREFIX_MAX_ENTRIES: usize = 1024;
-
-pub struct PrefixIndex {
-    map: HashMap<u64, PrefixEntry>,
-    max_pages: usize,
-    max_entries: usize,
-    page_deploy_bytes: usize,
-    clock: u64,
-    pinned_pages: usize,
-    /// Running sum of entry sidecars — kept incrementally (like
-    /// `pinned_pages`) so the per-tick `stats()` gauge is O(1), not a walk
-    /// of every entry's nested vectors.
-    sidecar_bytes: usize,
-    hits: u64,
-    misses: u64,
-    insertions: u64,
-    evictions: u64,
-    rejected: u64,
-    collisions: u64,
-    bytes_deduped: u64,
-}
-
-impl PrefixIndex {
-    /// `max_pages` caps the pool pages entries may pin (entry COUNT is
-    /// additionally capped at [`PREFIX_MAX_ENTRIES`], bounding the
-    /// sidecars of zero-page residual-only entries); `page_deploy_bytes`
-    /// is the pool's per-page charge (for the bytes-deduped gauge).
-    pub fn new(max_pages: usize, page_deploy_bytes: usize) -> PrefixIndex {
-        PrefixIndex {
-            map: HashMap::new(),
-            max_pages,
-            max_entries: PREFIX_MAX_ENTRIES,
-            page_deploy_bytes,
-            clock: 0,
-            pinned_pages: 0,
-            sidecar_bytes: 0,
-            hits: 0,
-            misses: 0,
-            insertions: 0,
-            evictions: 0,
-            rejected: 0,
-            collisions: 0,
-            bytes_deduped: 0,
-        }
-    }
-
-    pub fn contains(&self, key: u64) -> bool {
-        self.map.contains_key(&key)
-    }
-
-    /// Counter-free probe (admission sizing uses this so a submit-time
-    /// estimate does not inflate the hit/miss telemetry). `prompt` is
-    /// compared against the entry's registered tokens: a 64-bit chain-key
-    /// collision answers `None`, exactly like `lookup` — the key is an
-    /// address, the token compare is the correctness check.
-    pub fn peek(&self, key: u64, prompt: &[i32]) -> Option<&PrefixEntry> {
-        self.map.get(&key).filter(|e| e.tokens == prompt)
-    }
-
-    /// The consuming probe: verifies the prompt against the entry's
-    /// registered tokens (a chain-key collision is recorded and answered as
-    /// a miss — it must never serve another prompt's KV), then records a
-    /// hit, stamping the entry most-recently used and crediting its pages
-    /// as deduped bytes.
-    pub fn lookup(&mut self, key: u64, prompt: &[i32]) -> Option<&PrefixEntry> {
-        self.clock += 1;
-        match self.map.get(&key) {
-            None => {
-                self.misses += 1;
-                return None;
-            }
-            Some(e) if e.tokens != prompt => {
-                self.collisions += 1;
-                self.misses += 1;
-                return None;
-            }
-            Some(_) => {}
-        }
-        self.hits += 1;
-        let clock = self.clock;
-        let deploy = self.page_deploy_bytes;
-        // invariant, not a request-path error: the match above already
-        // proved the key resident and nothing ran in between
-        let e = self.map.get_mut(&key).expect("presence just checked");
-        e.stamp = clock;
-        self.bytes_deduped += (e.pages_count() * deploy) as u64;
-        Some(&*e)
-    }
-
-    /// Stamp a verified entry most-recently-used WITHOUT recording a hit —
-    /// the admission pass touches the entry a zero-page claim rests on, so
-    /// its own pressure-shedding loop cannot evict it out from under the
-    /// request it is about to serve.
-    pub fn touch(&mut self, key: u64, prompt: &[i32]) {
-        self.clock += 1;
-        let clock = self.clock;
-        if let Some(e) = self.map.get_mut(&key) {
-            if e.tokens == prompt {
-                e.stamp = clock;
-            }
-        }
-    }
-
-    /// Can an entry pinning `pages` pool pages ever be accepted? The
-    /// producer consults this BEFORE assembling (deep-copying) an entry, so
-    /// an over-cap prompt costs nothing.
-    pub fn would_accept(&self, pages: usize) -> bool {
-        pages <= self.max_pages
-    }
-
-    /// Register an entry, shedding LRU entries until it fits under the page
-    /// cap (and the entry-count cap — see [`PrefixIndex::new`]). Returns
-    /// false (and drops the entry's references) when the key already exists
-    /// or the entry alone exceeds the cap.
-    pub fn insert(&mut self, key: u64, entry: PrefixEntry) -> bool {
-        if let Some(e) = self.map.get_mut(&key) {
-            self.clock += 1;
-            e.stamp = self.clock;
-            return false;
-        }
-        let need = entry.pages_count();
-        if need > self.max_pages {
-            self.rejected += 1;
-            return false;
-        }
-        while self.pinned_pages + need > self.max_pages || self.map.len() >= self.max_entries {
-            if !self.shed_lru() {
-                break;
-            }
-        }
-        self.clock += 1;
-        let mut entry = entry;
-        entry.stamp = self.clock;
-        self.pinned_pages += need;
-        self.sidecar_bytes += entry.sidecar_bytes();
-        self.insertions += 1;
-        self.map.insert(key, entry);
-        true
-    }
-
-    /// Drop the least-recently-used entry, releasing its page references
-    /// (pages with no other holder return to the pool immediately). The
-    /// server calls this under pool pressure — retention never outranks a
-    /// live request's flush.
-    pub fn shed_lru(&mut self) -> bool {
-        let Some((&key, _)) = self.map.iter().min_by_key(|(_, e)| e.stamp) else {
-            return false;
-        };
-        // invariant, not a request-path error: the key was read out of the
-        // map on the line above
-        let e = self.map.remove(&key).expect("key just observed");
-        self.pinned_pages -= e.pages_count();
-        self.sidecar_bytes -= e.sidecar_bytes();
-        self.evictions += 1;
-        true
-    }
-
-    /// Drop a distrusted entry — the corruption/verify-fail path (today
-    /// reached via injected `FaultSite::PrefixCorrupt` faults): its page
-    /// references release, and the probe is recorded exactly like a
-    /// chain-key collision (a miss, never served). Returns false when the
-    /// key is not resident.
-    pub fn discard_corrupt(&mut self, key: u64) -> bool {
-        let Some(e) = self.map.remove(&key) else {
-            return false;
-        };
-        self.pinned_pages -= e.pages_count();
-        self.sidecar_bytes -= e.sidecar_bytes();
-        self.evictions += 1;
-        self.collisions += 1;
-        self.misses += 1;
-        true
-    }
-
-    /// Append the pool identity of every page pinned by any entry (see
-    /// [`SharedLease::page_id`]).
-    pub fn collect_page_ids(&self, out: &mut Vec<usize>) {
-        for e in self.map.values() {
-            e.collect_page_ids(out);
-        }
-    }
-
-    /// Drop every entry (all pinned pages release).
-    pub fn clear(&mut self) {
-        self.evictions += self.map.len() as u64;
-        self.map.clear();
-        self.pinned_pages = 0;
-        self.sidecar_bytes = 0;
-    }
-
-    pub fn len(&self) -> usize {
-        self.map.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
-    }
-
-    /// Pool pages currently pinned by entries.
-    pub fn pages_pinned(&self) -> usize {
-        self.pinned_pages
-    }
-
-    pub fn stats(&self) -> PrefixStats {
-        PrefixStats {
-            entries: self.map.len(),
-            pages_pinned: self.pinned_pages,
-            hits: self.hits,
-            misses: self.misses,
-            insertions: self.insertions,
-            evictions: self.evictions,
-            rejected: self.rejected,
-            collisions: self.collisions,
-            bytes_deduped: self.bytes_deduped,
-            sidecar_bytes: self.sidecar_bytes,
-        }
-    }
-
-    /// Visit every page pinned by any entry, in the same stamp order
-    /// [`PrefixIndex::write_snap`] walks them — the snapshot's
-    /// page-numbering pass and the live scrub share this walk.
-    pub fn for_each_page(&self, f: &mut dyn FnMut(&Page)) {
-        let mut order: Vec<&PrefixEntry> = self.map.values().collect();
-        order.sort_by_key(|e| e.stamp);
-        for e in order {
-            for s in e.pages.iter().flatten().flatten() {
-                f(s.page());
-            }
-        }
-    }
-
-    /// Shed every entry pinning page `id` — the scrub's quarantine path:
-    /// a corrupt shared prefix page degrades its entries to future
-    /// collision-misses (re-prefill), per [`PrefixIndex::discard_corrupt`].
-    /// Returns the number of entries shed.
-    pub fn shed_page(&mut self, id: usize) -> usize {
-        let keys: Vec<u64> = self
-            .map
-            .iter()
-            .filter(|(_, e)| e.pages.iter().flatten().flatten().any(|s| s.page().id() == id))
-            .map(|(&k, _)| k)
-            .collect();
-        for &k in &keys {
-            self.discard_corrupt(k);
-        }
-        keys.len()
-    }
-
-    // --- snapshot codec ----------------------------------------------
-
-    /// Serialize every entry plus the LRU clock and counters.
-    /// `serial_of` maps a page's pool identity ([`Page::id`]) to the serial
-    /// the snapshot's page section wrote it under — the server owns that
-    /// numbering (pages shared between a slot and the index are written
-    /// once). Entries are emitted in stamp order, so the bytes are
-    /// deterministic and a restored index rebuilds in a canonical order.
-    pub fn write_snap<W: std::io::Write>(
-        &self,
-        w: &mut SnapWriter<W>,
-        serial_of: &mut dyn FnMut(usize) -> u32,
-    ) -> SnapResult<()> {
-        let mut order: Vec<(&u64, &PrefixEntry)> = self.map.iter().collect();
-        order.sort_by_key(|(_, e)| e.stamp);
-        w.usize(order.len())?;
-        for (&key, e) in order {
-            w.u64(key)?;
-            w.u64(e.stamp)?;
-            w.usize(e.qt)?;
-            w.slice_i32(&e.tokens)?;
-            w.usize(e.group)?;
-            w.usize(e.d)?;
-            // residual-only entries carry EMPTY plan/qstat grids (not grids
-            // of empties) — record that shape explicitly
-            w.bool(!e.plans.is_empty())?;
-            w.bool(!e.qstats.is_empty())?;
-            w.usize(e.pages.len())?;
-            for l in 0..e.pages.len() {
-                w.usize(e.pages[l].len())?;
-                for h in 0..e.pages[l].len() {
-                    w.usize(e.pages[l][h].len())?;
-                    for s in &e.pages[l][h] {
-                        w.u32(serial_of(s.page().id()))?;
-                    }
-                    if !e.plans.is_empty() {
-                        w.slice_i32(&e.plans[l][h])?;
-                    }
-                    if !e.qstats.is_empty() {
-                        w.slice_f32(&e.qstats[l][h].0)?;
-                        w.f32(e.qstats[l][h].1)?;
-                    }
-                    w.slice_f32(&e.res_k[l][h])?;
-                    w.slice_f32(&e.res_v[l][h])?;
-                }
-            }
-            w.slice_f32(&e.last_logits)?;
-        }
-        w.u64(self.clock)?;
-        for c in [
-            self.hits,
-            self.misses,
-            self.insertions,
-            self.evictions,
-            self.rejected,
-            self.collisions,
-            self.bytes_deduped,
-        ] {
-            w.u64(c)?;
-        }
-        Ok(())
-    }
-
-    /// Rebuild entries from a snapshot into this (freshly constructed)
-    /// index. `resolve` turns a page serial into a [`SharedLease`] on the
-    /// reloaded page — answering `None` for a serial whose payload failed
-    /// its checksum. An entry touching any such serial is dropped whole and
-    /// recorded exactly like [`PrefixIndex::discard_corrupt`] (a future
-    /// probe re-prefills on the miss); structural damage to the stream
-    /// itself is a hard `Err`. Returns the number of entries dropped.
-    pub fn read_snap<R: std::io::Read>(
-        &mut self,
-        r: &mut SnapReader<R>,
-        resolve: &mut dyn FnMut(u32) -> Option<SharedLease>,
-    ) -> SnapResult<usize> {
-        let n_entries = r.len("prefix entry count")?;
-        let mut dropped = 0usize;
-        for _ in 0..n_entries {
-            let key = r.u64("prefix entry key")?;
-            let stamp = r.u64("prefix entry stamp")?;
-            let qt = r.usize("prefix entry qt")?;
-            let tokens = r.vec_i32("prefix entry tokens")?;
-            let group = r.usize("prefix entry group")?;
-            let d = r.usize("prefix entry d")?;
-            let t = tokens.len();
-            if qt > t || (group > 0 && qt % group != 0) {
-                return Err(corrupt(format!(
-                    "prefix entry {key:#x}: qt {qt} inconsistent with t {t}, group {group}"
-                )));
-            }
-            let has_plans = r.bool("prefix entry plan flag")?;
-            let has_qstats = r.bool("prefix entry qstat flag")?;
-            let n_layers = r.len("prefix entry layers")?;
-            let mut poisoned = false;
-            let mut pages: Vec<Vec<Vec<SharedLease>>> = Vec::with_capacity(n_layers);
-            let mut plans: Vec<Vec<Vec<i32>>> = Vec::with_capacity(n_layers);
-            let mut qstats: Vec<Vec<(Vec<f32>, f32)>> = Vec::with_capacity(n_layers);
-            let mut res_k: Vec<Vec<Vec<f32>>> = Vec::with_capacity(n_layers);
-            let mut res_v: Vec<Vec<Vec<f32>>> = Vec::with_capacity(n_layers);
-            for _ in 0..n_layers {
-                let n_heads = r.len("prefix entry heads")?;
-                let mut lp = Vec::with_capacity(n_heads);
-                let mut lpl = Vec::with_capacity(n_heads);
-                let mut lq = Vec::with_capacity(n_heads);
-                let mut lrk = Vec::with_capacity(n_heads);
-                let mut lrv = Vec::with_capacity(n_heads);
-                for _ in 0..n_heads {
-                    let n_groups = r.len("prefix entry page row")?;
-                    let mut row = Vec::with_capacity(n_groups);
-                    for _ in 0..n_groups {
-                        let serial = r.u32("prefix entry page serial")?;
-                        match resolve(serial) {
-                            Some(s) => row.push(s),
-                            None => poisoned = true,
-                        }
-                    }
-                    lp.push(row);
-                    if has_plans {
-                        lpl.push(r.vec_i32("prefix entry plan")?);
-                    }
-                    if has_qstats {
-                        let qs = r.vec_f32("prefix entry qstat sums")?;
-                        let qc = r.f32("prefix entry qstat count")?;
-                        lq.push((qs, qc));
-                    }
-                    let rk = r.vec_f32("prefix entry residual keys")?;
-                    let rv = r.vec_f32("prefix entry residual values")?;
-                    if rk.len() != (t - qt) * d || rv.len() != (t - qt) * d {
-                        return Err(corrupt(format!(
-                            "prefix entry {key:#x}: residual rows {}x{} do not cover {} tail tokens of {d} channels",
-                            rk.len() / d.max(1), d, t - qt
-                        )));
-                    }
-                    lrk.push(rk);
-                    lrv.push(rv);
-                }
-                pages.push(lp);
-                if has_plans {
-                    plans.push(lpl);
-                }
-                if has_qstats {
-                    qstats.push(lq);
-                }
-                res_k.push(lrk);
-                res_v.push(lrv);
-            }
-            let last_logits = r.vec_f32("prefix entry logits")?;
-            if poisoned {
-                // page-level corruption degrades this one entry to a future
-                // collision-miss (per discard_corrupt), never the whole load
-                dropped += 1;
-                continue;
-            }
-            let mut entry = PrefixEntry::new(
-                tokens, qt, group, d, pages, plans, qstats, res_k, res_v, last_logits,
-            );
-            entry.stamp = stamp;
-            self.pinned_pages += entry.pages_count();
-            self.sidecar_bytes += entry.sidecar_bytes();
-            self.map.insert(key, entry);
-        }
-        self.clock = r.u64("prefix clock")?;
-        self.hits = r.u64("prefix hits")?;
-        self.misses = r.u64("prefix misses")?;
-        self.insertions = r.u64("prefix insertions")?;
-        self.evictions = r.u64("prefix evictions")?;
-        self.rejected = r.u64("prefix rejected")?;
-        self.collisions = r.u64("prefix collisions")?;
-        self.bytes_deduped = r.u64("prefix bytes_deduped")?;
-        for _ in 0..dropped {
-            self.evictions += 1;
-            self.collisions += 1;
-            self.misses += 1;
-        }
-        Ok(dropped)
-    }
+    links
 }
 
 #[cfg(test)]
@@ -1625,30 +1089,16 @@ mod tests {
         // length-sensitive: a strict prefix keys differently
         assert_ne!(k1, prompt_chain_key(seed, &toks[..96], 32));
         assert_ne!(k1, prompt_chain_key(other_seed, &toks, 32));
-    }
-
-    fn tiny_prompt(groups: usize) -> Vec<i32> {
-        (0..(groups * 32 + 4) as i32).collect()
-    }
-
-    fn tiny_entry(pool: &KvPool, groups: usize) -> PrefixEntry {
-        let pages = vec![vec![(0..groups)
-            .map(|_| SharedLease::new(pool.lease().unwrap()))
-            .collect::<Vec<_>>()]];
-        PrefixEntry {
-            t: groups * 32 + 4,
-            qt: groups * 32,
-            tokens: tiny_prompt(groups),
-            group: 32,
-            d: 32,
-            pages,
-            plans: vec![vec![(0..32).collect()]],
-            qstats: vec![vec![(vec![0.5; 32], 1.0)]],
-            res_k: vec![vec![vec![0.0; 4 * 32]]],
-            res_v: vec![vec![vec![0.0; 4 * 32]]],
-            last_logits: vec![1.0, 2.0],
-            stamp: 0,
-        }
+        // the link chain exposes every group-aligned prefix key: the last
+        // link IS the full key, and link i keys tokens[..(i+1)*32]
+        let links = prompt_chain_links(seed, &toks, 32);
+        assert_eq!(links.len(), 4); // 3 full groups + unaligned tail
+        assert_eq!(*links.last().unwrap(), k1);
+        assert_eq!(links[2], prompt_chain_key(seed, &toks[..96], 32));
+        // shared-prefix prompts share a link prefix, then diverge
+        let links3 = prompt_chain_links(seed, &t3, 32);
+        assert_eq!(links[..3], links3[..3]);
+        assert_ne!(links[3], links3[3]);
     }
 
     #[test]
@@ -1693,129 +1143,4 @@ mod tests {
         assert_eq!(pool.quarantined_total(), 1, "lifetime counter never rewinds");
     }
 
-    #[test]
-    fn prefix_index_snapshot_round_trips_and_drops_corrupt_entries() {
-        use crate::util::snapshot::{SnapReader, SnapWriter};
-        let pool = KvPool::for_specs([&mixspec()], 32, 32, None);
-        let mut ix = PrefixIndex::new(8, pool.page_deploy_bytes());
-        assert!(ix.insert(1, tiny_entry(&pool, 2)));
-        assert!(ix.insert(2, tiny_entry(&pool, 2)));
-        assert!(ix.lookup(1, &tiny_prompt(2)).is_some()); // bump stamps + counters
-        let before = ix.stats();
-
-        // number pages in first-encounter order, capturing their content
-        let mut serials: HashMap<usize, u32> = HashMap::new();
-        let mut payloads: Vec<(Vec<f32>, Vec<u8>)> = Vec::new();
-        for e in ix.map.values() {
-            for s in e.pages.iter().flatten().flatten() {
-                serials.entry(s.page().id()).or_insert_with(|| {
-                    payloads.push((s.page().f.clone(), s.page().b.clone()));
-                    (payloads.len() - 1) as u32
-                });
-            }
-        }
-        let mut buf = Vec::new();
-        let mut w = SnapWriter::new(&mut buf).unwrap();
-        ix.write_snap(&mut w, &mut |id| serials[&id]).unwrap();
-        w.finish().unwrap();
-
-        // clean round trip into a fresh index over a fresh pool
-        let pool2 = KvPool::for_specs([&mixspec()], 32, 32, None);
-        let restore = |drop_serial: Option<u32>| {
-            let mut ix2 = PrefixIndex::new(8, pool2.page_deploy_bytes());
-            let mut leases: HashMap<u32, SharedLease> = HashMap::new();
-            let mut r = SnapReader::new(&buf[..]).unwrap();
-            let dropped = ix2
-                .read_snap(&mut r, &mut |serial| {
-                    if Some(serial) == drop_serial {
-                        return None;
-                    }
-                    Some(
-                        leases
-                            .entry(serial)
-                            .or_insert_with(|| {
-                                let (f, b) = &payloads[serial as usize];
-                                let mut l = pool2.lease().unwrap();
-                                l.page_mut().f.copy_from_slice(f);
-                                l.page_mut().b.copy_from_slice(b);
-                                SharedLease::new(l)
-                            })
-                            .clone(),
-                    )
-                })
-                .unwrap();
-            r.finish().unwrap();
-            (ix2, dropped)
-        };
-        let (mut ix2, dropped) = restore(None);
-        assert_eq!(dropped, 0);
-        assert_eq!(ix2.len(), 2);
-        assert_eq!(ix2.pages_pinned(), 4);
-        let after = ix2.stats();
-        assert_eq!(
-            (after.hits, after.misses, after.insertions, after.sidecar_bytes),
-            (before.hits, before.misses, before.insertions, before.sidecar_bytes)
-        );
-        // restored entries serve lookups with the registered content
-        let hit = ix2.lookup(1, &tiny_prompt(2)).expect("restored entry must hit");
-        assert_eq!(hit.last_logits(), &[1.0, 2.0]);
-        assert_eq!((hit.t, hit.qt), (2 * 32 + 4, 2 * 32));
-        // LRU order survives: key 2 (stale stamp) sheds first
-        assert!(ix2.shed_lru());
-        assert!(ix2.contains(1) && !ix2.contains(2));
-
-        // a corrupt page serial drops only its owning entry, per
-        // discard_corrupt semantics (evictions/collisions/misses bump)
-        let (ix3, dropped) = restore(Some(0));
-        assert_eq!(dropped, 1);
-        assert_eq!(ix3.len(), 1);
-        assert_eq!(ix3.pages_pinned(), 2);
-        let s3 = ix3.stats();
-        assert_eq!(s3.evictions, before.evictions + 1);
-        assert_eq!(s3.collisions, before.collisions + 1);
-        assert_eq!(s3.misses, before.misses + 1);
-    }
-
-    #[test]
-    fn prefix_index_hits_misses_and_lru_cap() {
-        let pool = KvPool::for_specs([&mixspec()], 32, 32, None);
-        let prompt = tiny_prompt(2);
-        let mut ix = PrefixIndex::new(4, pool.page_deploy_bytes());
-        assert!(ix.insert(1, tiny_entry(&pool, 2)));
-        assert!(ix.insert(2, tiny_entry(&pool, 2)));
-        assert_eq!((ix.len(), ix.pages_pinned()), (2, 4));
-        assert_eq!(pool.leased(), 4);
-        // duplicate registration is refused (but refreshes recency)
-        assert!(!ix.insert(1, tiny_entry(&pool, 2)));
-        assert_eq!(ix.len(), 2);
-        // hit key 1 so key 2 becomes LRU
-        assert!(ix.lookup(1, &prompt).is_some());
-        assert!(ix.lookup(99, &prompt).is_none());
-        // a key collision (right key, different prompt) is a verified MISS,
-        // never a wrong-prompt hit
-        assert!(ix.peek(1, &[9, 9, 9]).is_none());
-        assert!(ix.lookup(1, &[9, 9, 9]).is_none());
-        let s = ix.stats();
-        assert_eq!((s.hits, s.misses, s.insertions), (1, 2, 2));
-        assert_eq!(s.collisions, 1);
-        assert_eq!(
-            s.bytes_deduped,
-            (2 * pool.page_deploy_bytes()) as u64,
-            "a hit credits the adopted pages as deduped bytes"
-        );
-        assert!(s.sidecar_bytes > 0);
-        // inserting a third 2-page entry under the 4-page cap sheds the LRU
-        // (key 2) and releases its pages
-        assert!(ix.insert(3, tiny_entry(&pool, 2)));
-        assert!(ix.contains(1) && ix.contains(3) && !ix.contains(2));
-        assert_eq!(ix.stats().evictions, 1);
-        assert_eq!(pool.leased(), 4, "shed entry's pages freed, duplicate's dropped");
-        // an entry bigger than the whole cap is rejected outright
-        assert!(!ix.insert(4, tiny_entry(&pool, 5)));
-        assert_eq!(ix.stats().rejected, 1);
-        assert_eq!(pool.leased(), 4, "rejected entry's pages must release");
-        ix.clear();
-        assert_eq!((ix.len(), ix.pages_pinned()), (0, 0));
-        assert_eq!(pool.leased(), 0, "cleared index frees everything it pinned");
-    }
 }

@@ -1,0 +1,1555 @@
+//! Group-aligned radix tree over prompt chunks — the cross-request prefix
+//! registry that replaced the flat full-prompt `PrefixIndex` (PR 5).
+//!
+//! # Shape
+//!
+//! One interior [`Node`] per **full G-token group** of a registered prompt,
+//! keyed by the corresponding intermediate link of the rolling hash chain
+//! ([`crate::kvcache::pool::prompt_chain_links`]): node keys for two
+//! prompts sharing a group-aligned prefix coincide exactly on the shared
+//! groups, so ONE registration serves every prefix length. A node holds
+//! its span's [`SharedLease`] pages (one per `(layer, kv-head)`), a copy of
+//! its span tokens (the token-verify backstop — a 64-bit link collision is
+//! counted and answered as a miss, never served), and an `Rc` of its
+//! producer's [`FrozenPlan`] (channel permutations + |Q| statistics). A
+//! full-prompt registration additionally anchors a [`TailState`] at its
+//! deepest node: the sidecar a consumer needs to skip the prefill entirely
+//! (residual rows, last-position logits).
+//!
+//! # Probe semantics
+//!
+//! [`RadixTree::lookup`] first checks the full-prompt tail (bit-exact
+//! adoption — the PR 5 fast path, `PrefixProbe::Full`); otherwise it walks
+//! the chain links group by group, token-verifying each node, and returns
+//! the deepest verified match as `PrefixProbe::Partial`. The consumer then
+//! runs in **frozen-plan mode**: it adopts the producer's plan + scale
+//! state for the matched prefix and resumes chunked prefill from the
+//! divergence seam (see `kvcache::cache` for the seam contract). The extra
+//! quantization error of frozen-plan adoption is bounded and measured per
+//! method by `harness::profiling::frozen_plan_error`; methods whose
+//! measured error exceeds the profile-predicted bound keep frozen-plan
+//! mode off by default (`Engine::frozen_plan_default`).
+//!
+//! # Refcounts and shedding
+//!
+//! A tail pins its anchor node (`Node::tails`), and a node with children
+//! or tails is never shed — so every resident chain is intact from depth 1
+//! to its deepest consumer. LRU shedding ([`RadixTree::shed_lru`]) only
+//! ever removes tails and *leaf* nodes (childless, tailless), eroding cold
+//! chains from the deep end; an interior node shared by several suffixes
+//! survives until every dependent has been shed. Pages release to the pool
+//! the moment their last holder (node or live cache) drops.
+
+use std::collections::{HashMap, HashSet};
+use std::rc::Rc;
+
+use crate::kvcache::pool::{prompt_chain_key, prompt_chain_links, Page, SharedLease};
+use crate::util::snapshot::{corrupt, SnapReader, SnapResult, SnapWriter};
+
+/// Hard ceiling on resident tails regardless of the page cap —
+/// residual-only prompts pin ZERO pages but still hold a bounded sidecar
+/// (prompt copy, residual snapshot, logits), so a page cap alone would let
+/// a stream of distinct short prompts grow the tree forever.
+const PREFIX_MAX_ENTRIES: usize = 1024;
+
+/// One registration's quantizer state, shared (`Rc`) by every node that
+/// registration created plus its tail. A partial-hit consumer adopts this
+/// wholesale: the channel permutations make the producer's packed pages
+/// decodable, the |Q| statistics seed the consumer's own accumulator. The
+/// |Q| state is the producer's *whole-prompt* accumulator — for a partial
+/// hit that is an approximation (the producer's suffix differed), which is
+/// exactly the bounded error frozen-plan mode signs up for.
+pub struct FrozenPlan {
+    /// Snapshot identity (monotonic per tree) — nodes and tails reference
+    /// plans by id in the snapshot codec so shared `Rc`s restore shared.
+    pub(crate) id: u64,
+    pub(crate) layers: usize,
+    pub(crate) heads: usize,
+    pub(crate) group: usize,
+    pub(crate) d: usize,
+    /// Channel permutation per `[layer][head]`; empty when the producer
+    /// never planned (residual-only registration, `qt == 0`).
+    pub(crate) plans: Vec<Vec<Vec<i32>>>,
+    /// `(sum_abs, count)` |Q| accumulator state per `[layer][head]`.
+    pub(crate) qstats: Vec<Vec<(Vec<f32>, f32)>>,
+}
+
+impl FrozenPlan {
+    fn sidecar_bytes(&self) -> usize {
+        let i32s = self.plans.iter().flatten().map(Vec::len).sum::<usize>();
+        let f32s = self.qstats.iter().flatten().map(|(s, _)| s.len() + 1).sum::<usize>();
+        4 * (i32s + f32s)
+    }
+}
+
+/// One full G-token group of a registered prompt.
+struct Node {
+    /// Chain link of the parent group (the quantization-identity seed for
+    /// depth-1 nodes, which have no parent node).
+    parent: u64,
+    /// 1-based group index: this node covers prompt tokens
+    /// `[(depth-1)*G, depth*G)`.
+    depth: usize,
+    /// The span's tokens — every probe compares these (collision backstop).
+    span: Vec<i32>,
+    /// Chain links of resident child nodes (depth+1 extensions).
+    children: Vec<u64>,
+    /// One page per `(layer, kv-head)`, flattened `layer * heads + head`.
+    pages: Vec<SharedLease>,
+    frozen: Rc<FrozenPlan>,
+    /// Tails anchored at this node (full-prompt registrations whose
+    /// quantized window ends here).
+    tails: usize,
+    /// LRU stamp, bumped on every probe that traverses this node.
+    stamp: u64,
+}
+
+impl Node {
+    fn sheddable(&self) -> bool {
+        self.children.is_empty() && self.tails == 0
+    }
+}
+
+/// Full-prefill sidecar state, keyed by the full-prompt chain key. What a
+/// `PrefixProbe::Full` consumer needs beyond the chain's pages: the
+/// residual tail rows, the last-position logits, and (via `frozen`) the
+/// plan/|Q| state.
+struct TailState {
+    t: usize,
+    qt: usize,
+    /// The registered prompt itself (full-hit token verify).
+    tokens: Vec<i32>,
+    /// Anchor node (chain link at depth `qt / G`); `None` when `qt == 0`
+    /// (a residual-only prompt pins no pages).
+    node: Option<u64>,
+    frozen: Rc<FrozenPlan>,
+    /// Residual K/V rows `[qt..t)` per `[layer][head]`, row-major `[rl, d]`.
+    res_k: Vec<Vec<Vec<f32>>>,
+    res_v: Vec<Vec<Vec<f32>>>,
+    last_logits: Vec<f32>,
+    stamp: u64,
+}
+
+impl TailState {
+    fn sidecar_bytes(&self) -> usize {
+        let f32s = self.res_k.iter().flatten().map(Vec::len).sum::<usize>()
+            + self.res_v.iter().flatten().map(Vec::len).sum::<usize>()
+            + self.last_logits.len();
+        4 * (f32s + self.tokens.len())
+    }
+}
+
+/// Everything a producer hands to [`RadixTree::register`]: the prompt, its
+/// shared quantized pages `[layer][head][group]`, the quantizer state that
+/// produced them, and the full-prefill sidecar. Assembled by
+/// `RequestCache::register_prefix` — the only producer.
+pub struct PrefixPayload {
+    pub tokens: Vec<i32>,
+    pub qt: usize,
+    pub group: usize,
+    pub d: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub pages: Vec<Vec<Vec<SharedLease>>>,
+    pub plans: Vec<Vec<Vec<i32>>>,
+    pub qstats: Vec<Vec<(Vec<f32>, f32)>>,
+    pub res_k: Vec<Vec<Vec<f32>>>,
+    pub res_v: Vec<Vec<Vec<f32>>>,
+    pub last_logits: Vec<f32>,
+}
+
+impl PrefixPayload {
+    pub fn pages_count(&self) -> usize {
+        self.pages.iter().flatten().map(Vec::len).sum()
+    }
+}
+
+/// An assembled probe result: everything `RequestCache::install_prefix`
+/// needs, with one cloned [`SharedLease`] per page — the clones pin the
+/// pages between probe and install, so a pressure shed in between can
+/// never free storage the consumer is about to adopt. For a partial match
+/// `t == qt == matched_tokens` and the residual/logits are empty (the
+/// consumer recomputes its own tail from the divergence seam).
+pub struct PrefixMatch {
+    pub t: usize,
+    pub qt: usize,
+    pub group: usize,
+    pub d: usize,
+    pub(crate) pages: Vec<Vec<Vec<SharedLease>>>,
+    pub(crate) plans: Vec<Vec<Vec<i32>>>,
+    pub(crate) qstats: Vec<Vec<(Vec<f32>, f32)>>,
+    pub(crate) res_k: Vec<Vec<Vec<f32>>>,
+    pub(crate) res_v: Vec<Vec<Vec<f32>>>,
+    pub(crate) last_logits: Vec<f32>,
+}
+
+impl PrefixMatch {
+    pub fn pages_count(&self) -> usize {
+        self.pages.iter().flatten().map(Vec::len).sum()
+    }
+
+    /// Last-position logits of the registered prompt (full hits only — the
+    /// consumer's first sampling input).
+    pub fn last_logits(&self) -> &[f32] {
+        &self.last_logits
+    }
+}
+
+/// What [`RadixTree::lookup`] answers.
+pub enum PrefixProbe {
+    /// The whole prompt is registered: adopt pages + residual + logits,
+    /// skip the prefill entirely (bit-exact).
+    Full(PrefixMatch),
+    /// A group-aligned strict prefix is registered: adopt its pages under
+    /// the producer's frozen plan and resume prefill from the seam.
+    Partial(PrefixMatch),
+    Miss,
+}
+
+/// Counter-free probe answer for admission sizing ([`RadixTree::peek`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrefixPeek {
+    Full,
+    /// Matched tokens (group-aligned, `> 0`).
+    Partial(usize),
+    Miss,
+}
+
+/// Counter snapshot for metrics (`coordinator::metrics::Metrics::observe_prefix`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrefixStats {
+    /// Resident tails (full-prompt registrations).
+    pub entries: usize,
+    /// Resident interior nodes (one per shared G-token group).
+    pub nodes: usize,
+    pub pages_pinned: usize,
+    /// Full-prompt hits (entire prefill skipped).
+    pub hits: u64,
+    /// Deepest-prefix hits (prefill resumed from the seam, frozen plan).
+    pub partial_hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    /// Tails + nodes shed — LRU cap at insert, pool pressure, corruption.
+    pub evictions: u64,
+    /// Registrations refused because the payload alone exceeds the page cap.
+    pub rejected: u64,
+    /// Probes whose chain link matched a resident node/tail but whose
+    /// tokens did not — a hash collision, recorded and never served.
+    pub collisions: u64,
+    /// Registrations refused because their channel plans disagreed with a
+    /// resident node on the shared path (a producer that did NOT adopt the
+    /// frozen plan — mixing its pages with the resident plan would decode
+    /// garbage, so the new chain is refused, never spliced).
+    pub plan_conflicts: u64,
+    /// Deployment bytes consumers adopted instead of leasing privately
+    /// (pages adopted on full + partial hits × bytes/page), cumulative.
+    pub bytes_deduped: u64,
+    /// Off-pool bytes held by sidecars (span/prompt copies, residual
+    /// snapshots, logits, frozen plans).
+    pub sidecar_bytes: usize,
+}
+
+/// The tree itself. Coordinator-only by design — the server owns one
+/// behind `Rc<RefCell<…>>` shared with the engine and it never crosses a
+/// worker-pool thread boundary (probes, registrations, and
+/// pressure-shedding all run on the coordinator between parallel phases),
+/// so it needs no lock even though the leases it pins are `Arc`s.
+pub struct RadixTree {
+    nodes: HashMap<u64, Node>,
+    tails: HashMap<u64, TailState>,
+    max_pages: usize,
+    max_entries: usize,
+    page_deploy_bytes: usize,
+    clock: u64,
+    next_plan_id: u64,
+    pinned_pages: usize,
+    sidecar_bytes: usize,
+    hits: u64,
+    partial_hits: u64,
+    misses: u64,
+    insertions: u64,
+    evictions: u64,
+    rejected: u64,
+    collisions: u64,
+    plan_conflicts: u64,
+    bytes_deduped: u64,
+}
+
+impl RadixTree {
+    /// `max_pages` caps the pool pages nodes may pin (tail COUNT is
+    /// additionally capped at [`PREFIX_MAX_ENTRIES`]); `page_deploy_bytes`
+    /// is the pool's per-page charge (for the bytes-deduped gauge).
+    pub fn new(max_pages: usize, page_deploy_bytes: usize) -> RadixTree {
+        RadixTree {
+            nodes: HashMap::new(),
+            tails: HashMap::new(),
+            max_pages,
+            max_entries: PREFIX_MAX_ENTRIES,
+            page_deploy_bytes,
+            clock: 0,
+            next_plan_id: 0,
+            pinned_pages: 0,
+            sidecar_bytes: 0,
+            hits: 0,
+            partial_hits: 0,
+            misses: 0,
+            insertions: 0,
+            evictions: 0,
+            rejected: 0,
+            collisions: 0,
+            plan_conflicts: 0,
+            bytes_deduped: 0,
+        }
+    }
+
+    /// Is a full-prompt tail registered under `key`? (Corrupt-fault draws
+    /// gate on residency, like the flat index did.)
+    pub fn contains(&self, key: u64) -> bool {
+        self.tails.contains_key(&key)
+    }
+
+    /// Number of full groups of `prompt` eligible for a partial walk: never
+    /// past the consumer's own quantized-window end (`qt_c`), and never the
+    /// whole prompt (the resumed prefill must recompute at least the last
+    /// token so it can project logits).
+    pub fn partial_walk_groups(qt_c: usize, t: usize, group: usize) -> usize {
+        if group == 0 || t == 0 {
+            return 0;
+        }
+        qt_c.min(t - 1) / group
+    }
+
+    /// Counter-free probe (admission sizing uses this so a submit-time
+    /// estimate does not inflate the hit/miss telemetry). `max_groups`
+    /// bounds the partial walk (see [`RadixTree::partial_walk_groups`]);
+    /// pass 0 to consider full hits only (frozen-plan mode disabled).
+    pub fn peek(&self, seed: u64, prompt: &[i32], group: usize, max_groups: usize) -> PrefixPeek {
+        let full_key = prompt_chain_key(seed, prompt, group);
+        if let Some(tail) = self.tails.get(&full_key) {
+            if tail.tokens == prompt {
+                return PrefixPeek::Full;
+            }
+        }
+        let matched = self.walk(seed, prompt, group, max_groups);
+        if matched == 0 {
+            PrefixPeek::Miss
+        } else {
+            PrefixPeek::Partial(matched * group)
+        }
+    }
+
+    /// Deepest verified match, in groups (0 = none). Pure walk, no
+    /// counters, no stamps.
+    fn walk(&self, seed: u64, prompt: &[i32], group: usize, max_groups: usize) -> usize {
+        let cap = max_groups.min(if group == 0 { 0 } else { prompt.len() / group });
+        if cap == 0 {
+            return 0;
+        }
+        let links = prompt_chain_links(seed, prompt, group);
+        let mut matched = 0;
+        for g in 0..cap {
+            let Some(node) = self.nodes.get(&links[g]) else { break };
+            if node.span != prompt[g * group..(g + 1) * group] {
+                break;
+            }
+            matched = g + 1;
+        }
+        matched
+    }
+
+    /// The consuming probe. Full-prompt tails are checked first (bit-exact
+    /// adoption); otherwise the chain is walked to the deepest verified
+    /// node and answered as a partial match under the producer's frozen
+    /// plan. Either hit stamps the whole consumed path most-recently-used
+    /// and credits the adopted pages as deduped bytes; token mismatches on
+    /// a resident link are counted as collisions and never served.
+    pub fn lookup(
+        &mut self,
+        seed: u64,
+        prompt: &[i32],
+        group: usize,
+        max_groups: usize,
+    ) -> PrefixProbe {
+        self.clock += 1;
+        let clock = self.clock;
+        let full_key = prompt_chain_key(seed, prompt, group);
+        match self.tails.get_mut(&full_key) {
+            Some(tail) if tail.tokens == prompt => {
+                tail.stamp = clock;
+                let (t, qt, node) = (tail.t, tail.qt, tail.node);
+                let frozen = tail.frozen.clone();
+                let res_k = tail.res_k.clone();
+                let res_v = tail.res_v.clone();
+                let last_logits = tail.last_logits.clone();
+                let pages = self.stamp_and_collect(node, qt / group.max(1), clock);
+                let m = PrefixMatch {
+                    t,
+                    qt,
+                    group,
+                    d: frozen.d,
+                    pages,
+                    plans: frozen.plans.clone(),
+                    qstats: frozen.qstats.clone(),
+                    res_k,
+                    res_v,
+                    last_logits,
+                };
+                self.hits += 1;
+                self.bytes_deduped += (m.pages_count() * self.page_deploy_bytes) as u64;
+                return PrefixProbe::Full(m);
+            }
+            Some(_) => self.collisions += 1,
+            None => {}
+        }
+        let matched = self.walk(seed, prompt, group, max_groups);
+        if matched == 0 {
+            self.misses += 1;
+            return PrefixProbe::Miss;
+        }
+        let links = prompt_chain_links(seed, prompt, group);
+        let anchor = links[matched - 1];
+        let frozen = self.nodes[&anchor].frozen.clone();
+        let (layers, heads) = (frozen.layers, frozen.heads);
+        let pages = self.stamp_and_collect(Some(anchor), matched, clock);
+        let m = PrefixMatch {
+            t: matched * group,
+            qt: matched * group,
+            group,
+            d: frozen.d,
+            pages,
+            plans: frozen.plans.clone(),
+            qstats: frozen.qstats.clone(),
+            res_k: vec![vec![Vec::new(); heads]; layers],
+            res_v: vec![vec![Vec::new(); heads]; layers],
+            last_logits: Vec::new(),
+        };
+        self.partial_hits += 1;
+        self.bytes_deduped += (m.pages_count() * self.page_deploy_bytes) as u64;
+        PrefixProbe::Partial(m)
+    }
+
+    /// Stamp the `groups`-deep chain ending at `anchor` and clone its pages
+    /// back into `[layer][head][group]` shape. Chain integrity (every
+    /// ancestor resident) is a structural invariant — a tail pins its
+    /// anchor, an anchor's ancestors all have children — so absence here is
+    /// a bug, not a request-path error.
+    fn stamp_and_collect(
+        &mut self,
+        anchor: Option<u64>,
+        groups: usize,
+        clock: u64,
+    ) -> Vec<Vec<Vec<SharedLease>>> {
+        let Some(anchor) = anchor else { return Vec::new() };
+        let (layers, heads) = {
+            let f = &self.nodes[&anchor].frozen;
+            (f.layers, f.heads)
+        };
+        let mut pages = vec![vec![vec![None; groups]; heads]; layers];
+        let mut key = anchor;
+        for g in (0..groups).rev() {
+            let node = self.nodes.get_mut(&key).expect("chain ancestor missing");
+            debug_assert_eq!(node.depth, g + 1, "chain depth mismatch");
+            node.stamp = clock;
+            for l in 0..layers {
+                for h in 0..heads {
+                    pages[l][h][g] = Some(node.pages[l * heads + h].clone());
+                }
+            }
+            key = node.parent;
+        }
+        pages
+            .into_iter()
+            .map(|lh| {
+                lh.into_iter()
+                    .map(|row| row.into_iter().map(|p| p.expect("page collected")).collect())
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Stamp a verified path (and, if resident, the full-prompt tail)
+    /// most-recently-used WITHOUT recording a hit — the admission pass
+    /// touches the ENTIRE node path a claim rests on, so its own
+    /// pressure-shedding loop cannot evict an interior node out from under
+    /// the request it is about to serve.
+    pub fn touch_path(&mut self, seed: u64, prompt: &[i32], group: usize, max_groups: usize) {
+        self.clock += 1;
+        let clock = self.clock;
+        let full_key = prompt_chain_key(seed, prompt, group);
+        let mut tail_groups = None;
+        if let Some(tail) = self.tails.get_mut(&full_key) {
+            if tail.tokens == prompt {
+                tail.stamp = clock;
+                tail_groups = Some(tail.qt / group.max(1));
+            }
+        }
+        let matched = match tail_groups {
+            // a resident full hit pins its whole chain regardless of the
+            // partial-walk cap
+            Some(g) => g,
+            None => self.walk(seed, prompt, group, max_groups),
+        };
+        if matched == 0 {
+            return;
+        }
+        let links = prompt_chain_links(seed, prompt, group);
+        for link in &links[..matched] {
+            if let Some(node) = self.nodes.get_mut(link) {
+                node.stamp = clock;
+            }
+        }
+    }
+
+    /// Can a payload pinning `pages` pool pages ever be accepted? The
+    /// producer consults this BEFORE assembling (deep-copying) a payload,
+    /// so an over-cap prompt costs nothing.
+    pub fn would_accept(&self, pages: usize) -> bool {
+        pages <= self.max_pages
+    }
+
+    /// Register a full prefill. The chain is verified first: a resident
+    /// node whose span tokens differ is a collision, one whose frozen plan
+    /// differs from the payload's is a plan conflict — either refuses the
+    /// whole registration (dropping the payload's references) rather than
+    /// splice inconsistent state into a shared chain. New nodes are created
+    /// for absent groups only (a follower that adopted the producer's
+    /// frozen plan extends the chain with just its divergent suffix), the
+    /// tail is anchored at the deepest node, and LRU shedding makes room
+    /// under the page and entry caps — never shedding the path being
+    /// registered. Returns false on duplicate (refreshing recency),
+    /// collision, plan conflict, or an over-cap payload.
+    pub fn register(&mut self, seed: u64, p: PrefixPayload) -> bool {
+        let full_key = prompt_chain_key(seed, &p.tokens, p.group);
+        if let Some(tail) = self.tails.get_mut(&full_key) {
+            self.clock += 1;
+            tail.stamp = self.clock;
+            return false;
+        }
+        let total_pages = p.pages_count();
+        if total_pages > self.max_pages {
+            self.rejected += 1;
+            return false;
+        }
+        let group = p.group.max(1);
+        let n_groups = p.qt / group;
+        let links = prompt_chain_links(seed, &p.tokens, p.group);
+        // pass 1: verify the resident part of the chain, count absent nodes
+        let mut absent = 0usize;
+        for g in 0..n_groups {
+            match self.nodes.get(&links[g]) {
+                Some(node) => {
+                    if node.span != p.tokens[g * group..(g + 1) * group] {
+                        self.collisions += 1;
+                        return false;
+                    }
+                    if node.frozen.plans != p.plans {
+                        self.plan_conflicts += 1;
+                        return false;
+                    }
+                }
+                None => absent += 1,
+            }
+        }
+        let per_node = p.layers * p.heads;
+        let need = absent * per_node;
+        // pass 2: stamp the reused path MRU, then shed around it until the
+        // new nodes and the tail fit. Exhaustion cannot strand us over cap:
+        // whatever survives shedding is exactly our own (excluded) path,
+        // and path + need = total_pages ≤ max_pages was checked above.
+        self.clock += 1;
+        let clock = self.clock;
+        let mut path: HashSet<u64> = HashSet::new();
+        for g in 0..n_groups {
+            if let Some(node) = self.nodes.get_mut(&links[g]) {
+                node.stamp = clock;
+                path.insert(links[g]);
+            }
+        }
+        while self.pinned_pages + need > self.max_pages || self.tails.len() >= self.max_entries {
+            if !self.shed_lru_excluding(&path) {
+                break;
+            }
+        }
+        // pass 3: create the absent nodes and anchor the tail
+        let frozen = Rc::new(FrozenPlan {
+            id: self.next_plan_id,
+            layers: p.layers,
+            heads: p.heads,
+            group: p.group,
+            d: p.d,
+            plans: p.plans,
+            qstats: p.qstats,
+        });
+        self.next_plan_id += 1;
+        self.sidecar_bytes += frozen.sidecar_bytes();
+        for g in 0..n_groups {
+            let key = links[g];
+            if self.nodes.contains_key(&key) {
+                continue;
+            }
+            let parent = if g == 0 { seed } else { links[g - 1] };
+            if g > 0 {
+                // invariant: pass 1 verified every ancestor resident or
+                // created by this loop in depth order
+                let pn = self.nodes.get_mut(&parent).expect("parent node resident");
+                pn.children.push(key);
+            }
+            let mut pages = Vec::with_capacity(per_node);
+            for l in 0..p.layers {
+                for h in 0..p.heads {
+                    pages.push(p.pages[l][h][g].clone());
+                }
+            }
+            let span = p.tokens[g * group..(g + 1) * group].to_vec();
+            self.sidecar_bytes += 4 * span.len();
+            self.pinned_pages += per_node;
+            self.nodes.insert(
+                key,
+                Node {
+                    parent,
+                    depth: g + 1,
+                    span,
+                    children: Vec::new(),
+                    pages,
+                    frozen: frozen.clone(),
+                    tails: 0,
+                    stamp: clock,
+                },
+            );
+        }
+        let anchor = if n_groups > 0 { Some(links[n_groups - 1]) } else { None };
+        if let Some(a) = anchor {
+            self.nodes.get_mut(&a).expect("anchor resident").tails += 1;
+        }
+        let tail = TailState {
+            t: p.tokens.len(),
+            qt: p.qt,
+            tokens: p.tokens,
+            node: anchor,
+            frozen,
+            res_k: p.res_k,
+            res_v: p.res_v,
+            last_logits: p.last_logits,
+            stamp: clock,
+        };
+        self.sidecar_bytes += tail.sidecar_bytes();
+        self.tails.insert(full_key, tail);
+        self.insertions += 1;
+        true
+    }
+
+    /// Release accounting for a frozen plan about to lose a holder: the
+    /// caller still owns `f`, so a strong count of 1 means this drop is the
+    /// last and its sidecar charge retires.
+    fn release_frozen(&mut self, f: &Rc<FrozenPlan>) {
+        if Rc::strong_count(f) == 1 {
+            self.sidecar_bytes -= f.sidecar_bytes();
+        }
+    }
+
+    /// Remove one node (must be sheddable), unlinking it from its parent.
+    fn remove_node(&mut self, key: u64) {
+        let node = self.nodes.remove(&key).expect("node resident");
+        debug_assert!(node.sheddable(), "removing a pinned node");
+        self.pinned_pages -= node.pages.len();
+        self.sidecar_bytes -= 4 * node.span.len();
+        if node.depth > 1 {
+            if let Some(parent) = self.nodes.get_mut(&node.parent) {
+                parent.children.retain(|&c| c != key);
+            }
+        }
+        self.release_frozen(&node.frozen);
+        self.evictions += 1;
+    }
+
+    /// Remove one tail (sidecar + anchor unpin). Does NOT cascade into its
+    /// chain: bare node chains still serve partial hits and erode leaf-
+    /// first under LRU pressure like any other cold state.
+    fn remove_tail(&mut self, key: u64) {
+        let tail = self.tails.remove(&key).expect("tail resident");
+        self.sidecar_bytes -= tail.sidecar_bytes();
+        if let Some(a) = tail.node {
+            self.nodes.get_mut(&a).expect("anchor resident").tails -= 1;
+        }
+        self.release_frozen(&tail.frozen);
+        self.evictions += 1;
+    }
+
+    /// Drop the least-recently-used sheddable entity — a tail or a *leaf*
+    /// node (childless, tailless; interior nodes and anchors are pinned by
+    /// their dependents, so chains erode from the deep end). The server
+    /// calls this under pool pressure — retention never outranks a live
+    /// request's flush. Returns false when nothing can be shed.
+    pub fn shed_lru(&mut self) -> bool {
+        self.shed_lru_excluding(&HashSet::new())
+    }
+
+    fn shed_lru_excluding(&mut self, exclude: &HashSet<u64>) -> bool {
+        // (stamp, kind, key) min — deterministic under ties
+        let tail = self.tails.iter().map(|(&k, t)| (t.stamp, 0u8, k)).min();
+        let node = self
+            .nodes
+            .iter()
+            .filter(|(k, n)| n.sheddable() && !exclude.contains(k))
+            .map(|(&k, n)| (n.stamp, 1u8, k))
+            .min();
+        match (tail, node) {
+            (None, None) => false,
+            (Some(t), None) => {
+                self.remove_tail(t.2);
+                true
+            }
+            (None, Some(n)) => {
+                self.remove_node(n.2);
+                true
+            }
+            (Some(t), Some(n)) => {
+                if t < n {
+                    self.remove_tail(t.2);
+                } else {
+                    self.remove_node(n.2);
+                }
+                true
+            }
+        }
+    }
+
+    /// Drop a distrusted full-prompt registration — the corruption/
+    /// verify-fail path (today reached via injected `FaultSite::PrefixCorrupt`
+    /// faults): the tail is removed and its chain is cascaded from the
+    /// anchor upward, removing every node only this registration used
+    /// (nodes with other children or tails survive — they serve other
+    /// chains). Recorded exactly like a chain-key collision (a miss, never
+    /// served). Returns false when the key is not resident.
+    pub fn discard_corrupt(&mut self, key: u64) -> bool {
+        if !self.tails.contains_key(&key) {
+            return false;
+        }
+        let anchor = self.tails[&key].node;
+        self.remove_tail(key);
+        let mut cursor = anchor;
+        while let Some(k) = cursor {
+            let Some(node) = self.nodes.get(&k) else { break };
+            if !node.sheddable() {
+                break;
+            }
+            cursor = if node.depth > 1 { Some(node.parent) } else { None };
+            self.remove_node(k);
+        }
+        self.collisions += 1;
+        self.misses += 1;
+        true
+    }
+
+    /// Shed every node holding page `id` AND everything below it — the
+    /// scrub's quarantine path: a corrupt interior span makes every
+    /// descendant's prefix unreachable, so the whole subtree (and any tail
+    /// anchored inside it) goes. Dependent tails are recorded per
+    /// [`RadixTree::discard_corrupt`]. Returns the number of entities shed.
+    pub fn shed_page(&mut self, id: usize) -> usize {
+        let mut infected: Vec<u64> = self
+            .nodes
+            .iter()
+            .filter(|(_, n)| n.pages.iter().any(|s| s.page().id() == id))
+            .map(|(&k, _)| k)
+            .collect();
+        // expand to full subtrees
+        let mut doomed: HashSet<u64> = HashSet::new();
+        while let Some(k) = infected.pop() {
+            if !doomed.insert(k) {
+                continue;
+            }
+            if let Some(n) = self.nodes.get(&k) {
+                infected.extend(n.children.iter().copied());
+            }
+        }
+        if doomed.is_empty() {
+            return 0;
+        }
+        let tail_keys: Vec<u64> = self
+            .tails
+            .iter()
+            .filter(|(_, t)| t.node.is_some_and(|a| doomed.contains(&a)))
+            .map(|(&k, _)| k)
+            .collect();
+        let mut shed = 0usize;
+        for k in &tail_keys {
+            self.remove_tail(*k);
+            self.collisions += 1;
+            self.misses += 1;
+            shed += 1;
+        }
+        // remove deepest-first so parents shed as leaves
+        let mut order: Vec<u64> = doomed.iter().copied().collect();
+        order.sort_by_key(|k| std::cmp::Reverse(self.nodes[k].depth));
+        for k in order {
+            self.remove_node(k);
+            shed += 1;
+        }
+        shed
+    }
+
+    /// Append the pool identity of every page pinned by any node (see
+    /// [`SharedLease::page_id`]) — invariant audits dedup these against
+    /// the ids live caches hold.
+    pub fn collect_page_ids(&self, out: &mut Vec<usize>) {
+        for n in self.nodes.values() {
+            for s in &n.pages {
+                out.push(s.page_id());
+            }
+        }
+    }
+
+    /// Drop everything (all pinned pages release).
+    pub fn clear(&mut self) {
+        self.evictions += (self.tails.len() + self.nodes.len()) as u64;
+        self.tails.clear();
+        self.nodes.clear();
+        self.pinned_pages = 0;
+        self.sidecar_bytes = 0;
+    }
+
+    /// Resident tails (full-prompt registrations).
+    pub fn len(&self) -> usize {
+        self.tails.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tails.is_empty() && self.nodes.is_empty()
+    }
+
+    /// Resident interior nodes.
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Pool pages currently pinned by nodes.
+    pub fn pages_pinned(&self) -> usize {
+        self.pinned_pages
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        PrefixStats {
+            entries: self.tails.len(),
+            nodes: self.nodes.len(),
+            pages_pinned: self.pinned_pages,
+            hits: self.hits,
+            partial_hits: self.partial_hits,
+            misses: self.misses,
+            insertions: self.insertions,
+            evictions: self.evictions,
+            rejected: self.rejected,
+            collisions: self.collisions,
+            plan_conflicts: self.plan_conflicts,
+            bytes_deduped: self.bytes_deduped,
+            sidecar_bytes: self.sidecar_bytes,
+        }
+    }
+
+    /// Canonical node walk order — (depth, key) — shared by
+    /// [`RadixTree::for_each_page`] and the snapshot codec, so the
+    /// snapshot's page-numbering pass and the live scrub visit pages in
+    /// the same deterministic sequence.
+    fn node_order(&self) -> Vec<u64> {
+        let mut order: Vec<u64> = self.nodes.keys().copied().collect();
+        order.sort_by_key(|k| (self.nodes[k].depth, *k));
+        order
+    }
+
+    /// Visit every page pinned by any node, in canonical (depth, key)
+    /// order.
+    pub fn for_each_page(&self, f: &mut dyn FnMut(&Page)) {
+        for k in self.node_order() {
+            for s in &self.nodes[&k].pages {
+                f(s.page());
+            }
+        }
+    }
+
+    /// Structural self-check for `Server::check_invariants`: recomputed
+    /// page pins match the incremental counter, parent/child links are
+    /// coherent, every tail's anchor chain is resident, and per-node tail
+    /// counts agree with the tails map.
+    pub fn audit(&self) -> Result<(), String> {
+        let pinned: usize = self.nodes.values().map(|n| n.pages.len()).sum();
+        if pinned != self.pinned_pages {
+            return Err(format!(
+                "radix pinned_pages counter {} != recomputed {}",
+                self.pinned_pages, pinned
+            ));
+        }
+        let mut anchored: HashMap<u64, usize> = HashMap::new();
+        for (key, tail) in &self.tails {
+            if let Some(a) = tail.node {
+                let Some(node) = self.nodes.get(&a) else {
+                    return Err(format!("tail {key:#x} anchored at missing node {a:#x}"));
+                };
+                if node.depth * tail.frozen.group.max(1) != tail.qt {
+                    return Err(format!("tail {key:#x} anchor depth mismatch"));
+                }
+                *anchored.entry(a).or_insert(0) += 1;
+            } else if tail.qt != 0 {
+                return Err(format!("tail {key:#x} has qt {} but no anchor", tail.qt));
+            }
+        }
+        for (&key, node) in &self.nodes {
+            if node.tails != anchored.get(&key).copied().unwrap_or(0) {
+                return Err(format!("node {key:#x} tail refcount drift"));
+            }
+            if node.depth > 1 {
+                let Some(parent) = self.nodes.get(&node.parent) else {
+                    return Err(format!("node {key:#x} orphaned (parent missing)"));
+                };
+                if parent.depth + 1 != node.depth {
+                    return Err(format!("node {key:#x} depth discontinuity"));
+                }
+                if !parent.children.contains(&key) {
+                    return Err(format!("node {key:#x} missing from parent's children"));
+                }
+            }
+            for &c in &node.children {
+                if !self.nodes.contains_key(&c) {
+                    return Err(format!("node {key:#x} lists missing child {c:#x}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // --- snapshot codec ----------------------------------------------
+
+    /// Serialize the whole tree: the frozen-plan table (unique by id), the
+    /// nodes in canonical (depth, key) order (parents always precede
+    /// children), the tails in key order, then the LRU clock and counters.
+    /// `serial_of` maps a page's pool identity ([`Page::id`]) to the
+    /// serial the snapshot's page section wrote it under — the server owns
+    /// that numbering (pages shared between a slot and the tree are
+    /// written once).
+    pub fn write_snap<W: std::io::Write>(
+        &self,
+        w: &mut SnapWriter<W>,
+        serial_of: &mut dyn FnMut(usize) -> u32,
+    ) -> SnapResult<()> {
+        // unique frozen plans, by id
+        let mut plans: HashMap<u64, &Rc<FrozenPlan>> = HashMap::new();
+        for n in self.nodes.values() {
+            plans.entry(n.frozen.id).or_insert(&n.frozen);
+        }
+        for t in self.tails.values() {
+            plans.entry(t.frozen.id).or_insert(&t.frozen);
+        }
+        let mut plan_order: Vec<u64> = plans.keys().copied().collect();
+        plan_order.sort_unstable();
+        w.usize(plan_order.len())?;
+        for id in &plan_order {
+            let f = plans[id];
+            w.u64(f.id)?;
+            for v in [f.layers, f.heads, f.group, f.d] {
+                w.usize(v)?;
+            }
+            w.bool(!f.plans.is_empty())?;
+            w.bool(!f.qstats.is_empty())?;
+            if !f.plans.is_empty() {
+                for l in 0..f.layers {
+                    for h in 0..f.heads {
+                        w.slice_i32(&f.plans[l][h])?;
+                    }
+                }
+            }
+            if !f.qstats.is_empty() {
+                for l in 0..f.layers {
+                    for h in 0..f.heads {
+                        w.slice_f32(&f.qstats[l][h].0)?;
+                        w.f32(f.qstats[l][h].1)?;
+                    }
+                }
+            }
+        }
+        let order = self.node_order();
+        w.usize(order.len())?;
+        for key in &order {
+            let n = &self.nodes[key];
+            w.u64(*key)?;
+            w.u64(n.parent)?;
+            w.usize(n.depth)?;
+            w.u64(n.stamp)?;
+            w.slice_i32(&n.span)?;
+            w.u64(n.frozen.id)?;
+            w.usize(n.pages.len())?;
+            for s in &n.pages {
+                w.u32(serial_of(s.page().id()))?;
+            }
+        }
+        let mut tail_order: Vec<u64> = self.tails.keys().copied().collect();
+        tail_order.sort_unstable();
+        w.usize(tail_order.len())?;
+        for key in &tail_order {
+            let t = &self.tails[key];
+            w.u64(*key)?;
+            w.u64(t.stamp)?;
+            w.usize(t.t)?;
+            w.usize(t.qt)?;
+            w.slice_i32(&t.tokens)?;
+            w.bool(t.node.is_some())?;
+            if let Some(a) = t.node {
+                w.u64(a)?;
+            }
+            w.u64(t.frozen.id)?;
+            for l in 0..t.frozen.layers {
+                for h in 0..t.frozen.heads {
+                    w.slice_f32(&t.res_k[l][h])?;
+                    w.slice_f32(&t.res_v[l][h])?;
+                }
+            }
+            w.slice_f32(&t.last_logits)?;
+        }
+        w.u64(self.clock)?;
+        w.u64(self.next_plan_id)?;
+        for c in [
+            self.hits,
+            self.partial_hits,
+            self.misses,
+            self.insertions,
+            self.evictions,
+            self.rejected,
+            self.collisions,
+            self.plan_conflicts,
+            self.bytes_deduped,
+        ] {
+            w.u64(c)?;
+        }
+        Ok(())
+    }
+
+    /// Rebuild the tree from a snapshot into this (freshly constructed)
+    /// instance. `resolve` turns a page serial into a [`SharedLease`] on
+    /// the reloaded page — answering `None` for a serial whose payload
+    /// failed its checksum. A node touching any such serial is dropped
+    /// along with its whole subtree and every tail anchored inside it
+    /// (recorded per [`RadixTree::discard_corrupt`] / node evictions);
+    /// structural damage to the stream itself is a hard `Err`. Returns the
+    /// number of entities dropped.
+    pub fn read_snap<R: std::io::Read>(
+        &mut self,
+        r: &mut SnapReader<R>,
+        resolve: &mut dyn FnMut(u32) -> Option<SharedLease>,
+    ) -> SnapResult<usize> {
+        let n_plans = r.len("radix plan count")?;
+        let mut plans: HashMap<u64, Rc<FrozenPlan>> = HashMap::new();
+        for _ in 0..n_plans {
+            let id = r.u64("radix plan id")?;
+            let layers = r.usize("radix plan layers")?;
+            let heads = r.usize("radix plan heads")?;
+            let group = r.usize("radix plan group")?;
+            let d = r.usize("radix plan d")?;
+            let has_plans = r.bool("radix plan flag")?;
+            let has_qstats = r.bool("radix qstat flag")?;
+            let mut pl: Vec<Vec<Vec<i32>>> = Vec::new();
+            if has_plans {
+                for _ in 0..layers {
+                    let mut row = Vec::with_capacity(heads);
+                    for _ in 0..heads {
+                        row.push(r.vec_i32("radix plan perm")?);
+                    }
+                    pl.push(row);
+                }
+            }
+            let mut qs: Vec<Vec<(Vec<f32>, f32)>> = Vec::new();
+            if has_qstats {
+                for _ in 0..layers {
+                    let mut row = Vec::with_capacity(heads);
+                    for _ in 0..heads {
+                        let s = r.vec_f32("radix qstat sums")?;
+                        let c = r.f32("radix qstat count")?;
+                        row.push((s, c));
+                    }
+                    qs.push(row);
+                }
+            }
+            let f = Rc::new(FrozenPlan { id, layers, heads, group, d, plans: pl, qstats: qs });
+            self.sidecar_bytes += f.sidecar_bytes();
+            plans.insert(id, f);
+        }
+        let mut dropped = 0usize;
+        let mut poisoned: HashSet<u64> = HashSet::new();
+        let n_nodes = r.len("radix node count")?;
+        for _ in 0..n_nodes {
+            let key = r.u64("radix node key")?;
+            let parent = r.u64("radix node parent")?;
+            let depth = r.usize("radix node depth")?;
+            let stamp = r.u64("radix node stamp")?;
+            let span = r.vec_i32("radix node span")?;
+            let plan_id = r.u64("radix node plan")?;
+            let n_pages = r.len("radix node pages")?;
+            let mut pages = Vec::with_capacity(n_pages);
+            let mut poison = false;
+            for _ in 0..n_pages {
+                let serial = r.u32("radix node page serial")?;
+                match resolve(serial) {
+                    Some(s) => pages.push(s),
+                    None => poison = true,
+                }
+            }
+            let Some(frozen) = plans.get(&plan_id) else {
+                return Err(corrupt(format!("radix node {key:#x}: unknown plan {plan_id}")));
+            };
+            if depth == 0 || span.len() != frozen.group {
+                return Err(corrupt(format!(
+                    "radix node {key:#x}: depth {depth} / span {} inconsistent with group {}",
+                    span.len(),
+                    frozen.group
+                )));
+            }
+            // nodes arrive parent-first: a poisoned or dropped parent
+            // orphans the whole subtree (its prefix is unreachable)
+            if poison || (depth > 1 && (poisoned.contains(&parent) || !self.nodes.contains_key(&parent))) {
+                poisoned.insert(key);
+                dropped += 1;
+                continue;
+            }
+            if depth > 1 {
+                self.nodes.get_mut(&parent).expect("parent resident").children.push(key);
+            }
+            self.pinned_pages += pages.len();
+            self.sidecar_bytes += 4 * span.len();
+            self.nodes.insert(
+                key,
+                Node {
+                    parent,
+                    depth,
+                    span,
+                    children: Vec::new(),
+                    pages,
+                    frozen: frozen.clone(),
+                    tails: 0,
+                    stamp,
+                },
+            );
+        }
+        let n_tails = r.len("radix tail count")?;
+        let mut dropped_tails = 0usize;
+        for _ in 0..n_tails {
+            let key = r.u64("radix tail key")?;
+            let stamp = r.u64("radix tail stamp")?;
+            let t = r.usize("radix tail t")?;
+            let qt = r.usize("radix tail qt")?;
+            let tokens = r.vec_i32("radix tail tokens")?;
+            let anchor = if r.bool("radix tail anchor flag")? {
+                Some(r.u64("radix tail anchor")?)
+            } else {
+                None
+            };
+            let plan_id = r.u64("radix tail plan")?;
+            let Some(frozen) = plans.get(&plan_id).cloned() else {
+                return Err(corrupt(format!("radix tail {key:#x}: unknown plan {plan_id}")));
+            };
+            if qt > t || tokens.len() != t || (frozen.group > 0 && qt % frozen.group != 0) {
+                return Err(corrupt(format!(
+                    "radix tail {key:#x}: qt {qt} inconsistent with t {t}, group {}",
+                    frozen.group
+                )));
+            }
+            let mut res_k = Vec::with_capacity(frozen.layers);
+            let mut res_v = Vec::with_capacity(frozen.layers);
+            for _ in 0..frozen.layers {
+                let mut lk = Vec::with_capacity(frozen.heads);
+                let mut lv = Vec::with_capacity(frozen.heads);
+                for _ in 0..frozen.heads {
+                    let rk = r.vec_f32("radix tail residual keys")?;
+                    let rv = r.vec_f32("radix tail residual values")?;
+                    if rk.len() != (t - qt) * frozen.d || rv.len() != (t - qt) * frozen.d {
+                        return Err(corrupt(format!(
+                            "radix tail {key:#x}: residual rows do not cover {} tail tokens",
+                            t - qt
+                        )));
+                    }
+                    lk.push(rk);
+                    lv.push(rv);
+                }
+                res_k.push(lk);
+                res_v.push(lv);
+            }
+            let last_logits = r.vec_f32("radix tail logits")?;
+            // a tail whose anchor was dropped (poisoned subtree) drops too
+            let anchor_ok = match anchor {
+                Some(a) => self.nodes.contains_key(&a),
+                None => qt == 0,
+            };
+            if !anchor_ok {
+                dropped += 1;
+                dropped_tails += 1;
+                continue;
+            }
+            if let Some(a) = anchor {
+                self.nodes.get_mut(&a).expect("anchor resident").tails += 1;
+            }
+            let tail =
+                TailState { t, qt, tokens, node: anchor, frozen, res_k, res_v, last_logits, stamp };
+            self.sidecar_bytes += tail.sidecar_bytes();
+            self.tails.insert(key, tail);
+        }
+        // plans nobody referenced (all holders dropped) retire their charge
+        for f in plans.values() {
+            if Rc::strong_count(f) == 1 {
+                self.sidecar_bytes -= f.sidecar_bytes();
+            }
+        }
+        self.clock = r.u64("radix clock")?;
+        self.next_plan_id = r.u64("radix next_plan_id")?;
+        self.hits = r.u64("radix hits")?;
+        self.partial_hits = r.u64("radix partial_hits")?;
+        self.misses = r.u64("radix misses")?;
+        self.insertions = r.u64("radix insertions")?;
+        self.evictions = r.u64("radix evictions")?;
+        self.rejected = r.u64("radix rejected")?;
+        self.collisions = r.u64("radix collisions")?;
+        self.plan_conflicts = r.u64("radix plan_conflicts")?;
+        self.bytes_deduped = r.u64("radix bytes_deduped")?;
+        self.evictions += dropped as u64;
+        self.collisions += dropped_tails as u64;
+        self.misses += dropped_tails as u64;
+        Ok(dropped)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::pool::{KvPool, PageRef};
+    use crate::quant::window::TierSpec;
+    use crate::util::snapshot::{SnapReader, SnapWriter};
+
+    const G: usize = 4; // group (tokens per page/node span)
+    const D: usize = 32; // head dim (pool layout requires a packable spec)
+
+    fn mixspec() -> TierSpec {
+        TierSpec { n16: 2, n4: 2, n2: 28, v_bits: 2 }
+    }
+
+    fn pool(max: Option<usize>) -> KvPool {
+        KvPool::for_specs([&mixspec()], D, G, max)
+    }
+
+    fn shared_page(pool: &KvPool) -> SharedLease {
+        let (p, extra) = PageRef::Private(pool.lease().unwrap()).into_shared();
+        drop(p);
+        extra
+    }
+
+    /// A 1-layer / 1-head payload over `tokens` with `qt` quantized tokens
+    /// (qt / G fresh pool pages) and an identity channel plan.
+    fn payload(pool: &KvPool, tokens: Vec<i32>, qt: usize) -> PrefixPayload {
+        assert!(qt % G == 0 && qt <= tokens.len());
+        let groups = qt / G;
+        let rl = tokens.len() - qt;
+        PrefixPayload {
+            qt,
+            group: G,
+            d: D,
+            layers: 1,
+            heads: 1,
+            pages: vec![vec![(0..groups).map(|_| shared_page(pool)).collect()]],
+            plans: if qt > 0 { vec![vec![(0..D as i32).collect()]] } else { Vec::new() },
+            qstats: vec![vec![(vec![0.5; D], qt as f32)]],
+            res_k: vec![vec![vec![0.25; rl * D]]],
+            res_v: vec![vec![vec![0.75; rl * D]]],
+            last_logits: vec![1.0, -2.0],
+            tokens,
+        }
+    }
+
+    #[test]
+    fn register_then_full_partial_and_miss_probes() {
+        let pool = pool(None);
+        let mut tree = RadixTree::new(1024, pool.page_deploy_bytes());
+        let seed = 11u64;
+        let prompt: Vec<i32> = (0..12).collect(); // qt 8 = 2 groups, rl 4
+        assert!(tree.register(seed, payload(&pool, prompt.clone(), 8)));
+        assert_eq!((tree.len(), tree.node_count(), tree.pages_pinned()), (1, 2, 2));
+        assert_eq!(pool.leased(), 2, "payload drop leaves only node pins");
+        tree.audit().unwrap();
+
+        // full hit: bit-exact sidecar back
+        let m = match tree.lookup(seed, &prompt, G, 0) {
+            PrefixProbe::Full(m) => m,
+            _ => panic!("expected full"),
+        };
+        assert_eq!((m.t, m.qt, m.pages_count()), (12, 8, 2));
+        assert_eq!(m.last_logits(), &[1.0, -2.0]);
+        assert_eq!(m.res_k[0][0].len(), 4 * D);
+        drop(m);
+
+        // partial: same first 2 groups, divergent third
+        let mut p2: Vec<i32> = (0..12).collect();
+        for x in p2.iter_mut().skip(8) {
+            *x += 100;
+        }
+        let m = match tree.lookup(seed, &p2, G, 2) {
+            PrefixProbe::Partial(m) => m,
+            _ => panic!("expected partial"),
+        };
+        assert_eq!((m.t, m.qt, m.pages_count()), (8, 8, 2));
+        assert!(m.last_logits().is_empty() && m.res_k[0][0].is_empty());
+        drop(m);
+
+        // a cap of 0 (frozen-plan mode off) turns the same probe into a miss
+        assert!(matches!(tree.lookup(seed, &p2, G, 0), PrefixProbe::Miss));
+        // a different seed never sees the chain
+        assert!(matches!(tree.lookup(seed ^ 1, &prompt, G, 2), PrefixProbe::Miss));
+
+        let s = tree.stats();
+        assert_eq!((s.hits, s.partial_hits, s.misses), (1, 1, 2));
+        assert_eq!(s.bytes_deduped, (4 * pool.page_deploy_bytes()) as u64);
+        assert_eq!(tree.peek(seed, &prompt, G, 0), PrefixPeek::Full);
+        assert_eq!(tree.peek(seed, &p2, G, 2), PrefixPeek::Partial(8));
+        assert_eq!(tree.stats().hits, s.hits, "peek must not count");
+
+        tree.clear();
+        assert!(tree.is_empty());
+        assert_eq!(pool.leased(), 0, "clear releases every pinned page");
+    }
+
+    #[test]
+    fn partial_walk_cap_keeps_the_last_token_recomputable() {
+        // a full-length walk cap still refuses to match the WHOLE prompt
+        assert_eq!(RadixTree::partial_walk_groups(8, 8, 4), 1);
+        assert_eq!(RadixTree::partial_walk_groups(8, 12, 4), 2);
+        assert_eq!(RadixTree::partial_walk_groups(4, 12, 4), 1);
+        assert_eq!(RadixTree::partial_walk_groups(0, 12, 4), 0);
+        assert_eq!(RadixTree::partial_walk_groups(8, 0, 4), 0);
+        assert_eq!(RadixTree::partial_walk_groups(8, 8, 0), 0);
+    }
+
+    #[test]
+    fn interior_nodes_survive_until_every_dependent_sheds() {
+        let pool = pool(None);
+        let mut tree = RadixTree::new(1024, pool.page_deploy_bytes());
+        let seed = 3u64;
+        // two prompts share group 1, diverge in group 2
+        let a: Vec<i32> = vec![0, 1, 2, 3, 10, 11, 12, 13];
+        let b: Vec<i32> = vec![0, 1, 2, 3, 20, 21, 22, 23];
+        assert!(tree.register(seed, payload(&pool, a.clone(), 8)));
+        assert!(tree.register(seed, payload(&pool, b.clone(), 8)));
+        assert_eq!((tree.len(), tree.node_count(), tree.pages_pinned()), (2, 3, 3));
+        tree.audit().unwrap();
+
+        // LRU erosion: tail A (oldest), then leaf 2a, then tail B, then
+        // leaf 2b, then the shared root — which must survive every shed
+        // while ANY descendant (tail or child node) still pins it.
+        assert!(tree.shed_lru());
+        assert_eq!((tree.len(), tree.node_count()), (1, 3));
+        assert!(tree.shed_lru());
+        assert_eq!((tree.len(), tree.node_count()), (1, 2));
+        assert!(tree.shed_lru());
+        assert_eq!((tree.len(), tree.node_count()), (0, 2));
+        assert!(tree.shed_lru());
+        assert_eq!((tree.len(), tree.node_count()), (0, 1));
+        assert!(tree.shed_lru());
+        assert!(tree.is_empty());
+        assert!(!tree.shed_lru(), "nothing left to shed");
+        assert_eq!(tree.stats().evictions, 5);
+        assert_eq!(pool.leased(), 0);
+        tree.audit().unwrap();
+    }
+
+    #[test]
+    fn touch_path_protects_a_chain_from_lru() {
+        let pool = pool(None);
+        let mut tree = RadixTree::new(1024, pool.page_deploy_bytes());
+        let seed = 5u64;
+        let a: Vec<i32> = (0..8).collect();
+        let b: Vec<i32> = (100..108).collect();
+        assert!(tree.register(seed, payload(&pool, a.clone(), 8)));
+        assert!(tree.register(seed, payload(&pool, b.clone(), 8)));
+        let key_a = prompt_chain_key(seed, &a, G);
+        let key_b = prompt_chain_key(seed, &b, G);
+        // A registered first (older), but an admission touch makes its
+        // whole claim newest — pressure shedding must evict B instead.
+        tree.touch_path(seed, &a, G, 0);
+        assert!(tree.shed_lru());
+        assert!(tree.contains(key_a) && !tree.contains(key_b));
+    }
+
+    #[test]
+    fn register_refuses_duplicates_plan_conflicts_and_over_cap_payloads() {
+        let pool = pool(None);
+        let mut tree = RadixTree::new(2, pool.page_deploy_bytes());
+        let seed = 7u64;
+        let prompt: Vec<i32> = (0..8).collect();
+        assert!(tree.register(seed, payload(&pool, prompt.clone(), 8)));
+        // duplicate: refused, recency refreshed, nothing counted as new
+        assert!(!tree.register(seed, payload(&pool, prompt.clone(), 8)));
+        assert_eq!(tree.stats().insertions, 1);
+        // conflicting channel plan on the shared path: refused outright
+        let mut conflicting = payload(&pool, vec![0, 1, 2, 3, 50, 51, 52, 53], 8);
+        conflicting.plans = vec![vec![(0..D as i32).rev().collect()]];
+        assert!(!tree.register(seed, conflicting));
+        assert_eq!(tree.stats().plan_conflicts, 1);
+        assert_eq!((tree.len(), tree.node_count()), (1, 2));
+        // a payload that can never fit the page cap is rejected, not shed for
+        let big = payload(&pool, (0..12).collect(), 12);
+        assert!(!tree.register(seed ^ 9, big));
+        assert_eq!(tree.stats().rejected, 1);
+        tree.audit().unwrap();
+    }
+
+    #[test]
+    fn page_pressure_sheds_cold_chains_to_admit_new_ones() {
+        let pool = pool(None);
+        let mut tree = RadixTree::new(2, pool.page_deploy_bytes());
+        let seed = 13u64;
+        let a: Vec<i32> = (0..8).collect();
+        let b: Vec<i32> = (50..58).collect();
+        assert!(tree.register(seed, payload(&pool, a.clone(), 8)));
+        assert!(tree.register(seed, payload(&pool, b.clone(), 8)));
+        // B fits only by fully evicting A's tail + 2 nodes
+        assert!(!tree.contains(prompt_chain_key(seed, &a, G)));
+        assert!(tree.contains(prompt_chain_key(seed, &b, G)));
+        assert_eq!((tree.len(), tree.node_count(), tree.pages_pinned()), (1, 2, 2));
+        assert_eq!(tree.stats().evictions, 3);
+        assert_eq!(pool.leased(), 2);
+        tree.audit().unwrap();
+    }
+
+    #[test]
+    fn entry_cap_bounds_residual_only_tails() {
+        let pool = pool(None);
+        let mut tree = RadixTree::new(0, pool.page_deploy_bytes());
+        for i in 0..(PREFIX_MAX_ENTRIES + 5) {
+            let tokens = vec![i as i32, -1, -2]; // t < G: qt = 0, zero pages
+            assert!(tree.register(21, payload(&pool, tokens, 0)));
+        }
+        assert_eq!(tree.len(), PREFIX_MAX_ENTRIES);
+        assert_eq!(tree.stats().evictions, 5);
+        assert_eq!(tree.node_count(), 0);
+        tree.audit().unwrap();
+    }
+
+    #[test]
+    fn discard_corrupt_cascades_private_nodes_but_spares_shared_ones() {
+        let pool = pool(None);
+        let mut tree = RadixTree::new(1024, pool.page_deploy_bytes());
+        let seed = 17u64;
+        let a: Vec<i32> = vec![0, 1, 2, 3, 10, 11, 12, 13];
+        let b: Vec<i32> = vec![0, 1, 2, 3, 20, 21, 22, 23];
+        assert!(tree.register(seed, payload(&pool, a.clone(), 8)));
+        assert!(tree.register(seed, payload(&pool, b.clone(), 8)));
+        let key_a = prompt_chain_key(seed, &a, G);
+        assert!(tree.discard_corrupt(key_a));
+        // A's leaf went with its tail; the shared root serves B and stays
+        assert_eq!((tree.len(), tree.node_count(), tree.pages_pinned()), (1, 2, 2));
+        let s = tree.stats();
+        assert_eq!((s.collisions, s.misses), (1, 1));
+        assert!(!tree.discard_corrupt(key_a), "already gone");
+        tree.audit().unwrap();
+    }
+
+    #[test]
+    fn shed_page_quarantines_the_whole_subtree() {
+        let pool = pool(None);
+        let mut tree = RadixTree::new(1024, pool.page_deploy_bytes());
+        let seed = 19u64;
+        let a: Vec<i32> = (0..12).collect();
+        assert!(tree.register(seed, payload(&pool, a.clone(), 12)));
+        let mut ids = Vec::new();
+        tree.for_each_page(&mut |p| ids.push(p.id()));
+        assert_eq!(ids.len(), 3);
+        // the canonical walk is depth order: ids[0] is the root's page, so
+        // quarantining it condemns every descendant and the anchored tail
+        assert_eq!(tree.shed_page(ids[0]), 4);
+        assert!(tree.is_empty());
+        assert_eq!(tree.pages_pinned(), 0);
+        assert_eq!(pool.leased(), 0);
+        assert_eq!(tree.shed_page(ids[0]), 0, "idempotent once gone");
+        tree.audit().unwrap();
+    }
+
+    /// Serialize `tree`, then rebuild it through `resolve` built over
+    /// freshly leased stand-in pages (the server normally reloads page
+    /// payloads itself — the tree codec only tracks identity).
+    fn roundtrip(tree: &RadixTree, pool: &KvPool, poison: &[u32]) -> (RadixTree, usize) {
+        let mut ids = Vec::new();
+        tree.for_each_page(&mut |p| ids.push(p.id()));
+        let mut buf = Vec::new();
+        let mut w = SnapWriter::new(&mut buf).unwrap();
+        tree.write_snap(&mut w, &mut |id| {
+            ids.iter().position(|&i| i == id).expect("page known") as u32
+        })
+        .unwrap();
+        w.finish().unwrap();
+        let stand_ins: Vec<SharedLease> = ids.iter().map(|_| shared_page(pool)).collect();
+        let mut r = SnapReader::new(&buf[..]).unwrap();
+        let mut restored = RadixTree::new(1024, pool.page_deploy_bytes());
+        let dropped = restored
+            .read_snap(&mut r, &mut |serial| {
+                if poison.contains(&serial) {
+                    None
+                } else {
+                    Some(stand_ins[serial as usize].clone())
+                }
+            })
+            .unwrap();
+        r.finish().unwrap();
+        (restored, dropped)
+    }
+
+    #[test]
+    fn snapshot_roundtrip_preserves_structure_counters_and_probes() {
+        let pool = pool(None);
+        let mut tree = RadixTree::new(1024, pool.page_deploy_bytes());
+        let seed = 23u64;
+        let a: Vec<i32> = vec![0, 1, 2, 3, 10, 11, 12, 13, -5, -6];
+        let b: Vec<i32> = vec![0, 1, 2, 3, 20, 21, 22, 23];
+        assert!(tree.register(seed, payload(&pool, a.clone(), 8)));
+        assert!(tree.register(seed, payload(&pool, b.clone(), 8)));
+        let _ = tree.lookup(seed, &a, G, 0); // bump some counters
+        let _ = tree.lookup(seed, &[9; 8], G, 2);
+
+        let (mut restored, dropped) = roundtrip(&tree, &pool, &[]);
+        assert_eq!(dropped, 0);
+        restored.audit().unwrap();
+        assert_eq!(restored.len(), tree.len());
+        assert_eq!(restored.node_count(), tree.node_count());
+        assert_eq!(restored.pages_pinned(), tree.pages_pinned());
+        let (s0, s1) = (tree.stats(), restored.stats());
+        assert_eq!(
+            (s0.hits, s0.partial_hits, s0.misses, s0.insertions, s0.bytes_deduped),
+            (s1.hits, s1.partial_hits, s1.misses, s1.insertions, s1.bytes_deduped)
+        );
+        assert_eq!(s0.sidecar_bytes, s1.sidecar_bytes, "sidecar charge restores exactly");
+        // the restored tree answers the same probes, sidecar intact
+        match restored.lookup(seed, &a, G, 0) {
+            PrefixProbe::Full(m) => {
+                assert_eq!((m.t, m.qt), (10, 8));
+                assert_eq!(m.last_logits(), &[1.0, -2.0]);
+                assert_eq!(m.res_k[0][0].len(), 2 * D);
+            }
+            _ => panic!("expected full hit after restore"),
+        }
+        // a second registration under the restored tree keeps extending it
+        let c: Vec<i32> = vec![0, 1, 2, 3, 30, 31, 32, 33];
+        assert!(restored.register(seed, payload(&pool, c, 8)));
+        restored.audit().unwrap();
+    }
+
+    #[test]
+    fn snapshot_restore_drops_poisoned_subtrees_whole() {
+        let pool = pool(None);
+        let mut tree = RadixTree::new(1024, pool.page_deploy_bytes());
+        let seed = 29u64;
+        let a: Vec<i32> = vec![0, 1, 2, 3, 10, 11, 12, 13];
+        let b: Vec<i32> = vec![0, 1, 2, 3, 20, 21, 22, 23];
+        assert!(tree.register(seed, payload(&pool, a.clone(), 8)));
+        assert!(tree.register(seed, payload(&pool, b.clone(), 8)));
+        // serial 0 is the shared root's page (canonical depth order): a
+        // failed checksum there orphans EVERYTHING — both leaves, both tails
+        let (restored, dropped) = roundtrip(&tree, &pool, &[0]);
+        assert_eq!(dropped, 5);
+        assert!(restored.is_empty());
+        restored.audit().unwrap();
+        let s = restored.stats();
+        assert_eq!(s.evictions, tree.stats().evictions + 5);
+        // the two dropped tails read back as collision+miss, like discard_corrupt
+        assert_eq!(s.misses, tree.stats().misses + 2);
+    }
+}

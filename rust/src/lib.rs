@@ -133,13 +133,13 @@
 //!   failures, park/resume/preemption counts) and `mixkvq info` prints
 //!   bytes-per-page and pages-per-request-at-C for every `MethodSpec`.
 //!
-//! ## Cross-request prefix sharing (refcounted copy-on-write prompt pages)
+//! ## Cross-request prefix sharing (radix tree, frozen-plan partial hits)
 //!
-//! Under multi-tenant traffic the same prompt arrives again and again
-//! (retried chain-of-thought rollouts, best-of-N sampling, shared
-//! scaffolds). A flushed page is **immutable** — appends mutate only the
-//! residual, later flushes lease new pages — so a prompt's quantized window
-//! is safe to share across requests:
+//! Under multi-tenant traffic the same prompt *prefix* arrives again and
+//! again (shared system prompts, retried chain-of-thought rollouts,
+//! best-of-N sampling). A flushed page is **immutable** — appends mutate
+//! only the residual, later flushes lease new pages — so a prompt's
+//! quantized window is safe to share across requests:
 //!
 //! * [`kvcache::pool::SharedLease`] is the refcounted lease (`clone` bumps,
 //!   `drop` decrements, the page frees at zero), and a page table mixes
@@ -147,41 +147,60 @@
 //!   [`kvcache::pool::PageRef`] — every read path streams both identically
 //!   (the fused decode stays zero-alloc; gated in tests/fused_decode.rs),
 //!   while writing a shared page panics;
-//! * [`kvcache::pool::PrefixIndex`] is the content-addressed registry:
-//!   entries are keyed by a group-aligned rolling hash chain over the
-//!   prompt ([`kvcache::pool::prompt_chain_key`]) scoped to the
-//!   quantization identity ([`kvcache::pool::prefix_seed`]) — an O(chunks)
-//!   hash walk to one candidate entry, verified by a single token compare
-//!   so a 64-bit collision is a recorded miss, never a wrong-prompt hit.
-//!   **The key covers the whole prompt**:
-//!   the channel plan and scale blocks are functions of the entire
-//!   quantized window plus the whole prompt's |Q| statistics, so bit-exact
-//!   sharing requires full-prompt equality (prefix-only matching with a
-//!   frozen plan is a documented ROADMAP follow-on);
-//! * an entry carries everything a consumer needs to **skip the prefill
-//!   entirely** — shared pages, channel plans, |Q| state, the bounded f32
-//!   residual tail, last-position logits
-//!   (`RequestCache::register_prefix` / `install_prefix`,
-//!   `PrefillRun::new_shared`) — so a hit costs a page-table clone plus a
-//!   residual copy, and N requests over one prompt pay ~1× its quantized
-//!   bytes and zero prefill compute;
+//! * [`kvcache::radix::RadixTree`] is the registry: a radix tree over
+//!   group-aligned prompt chunks, keyed by a rolling hash chain
+//!   ([`kvcache::pool::prompt_chain_key`]) scoped to the quantization
+//!   identity ([`kvcache::pool::prefix_seed`]). Each interior node pins one
+//!   quant group's span pages plus the producer's frozen channel plan; a
+//!   tail anchors a full-prompt registration (residual snapshot, |Q|
+//!   state, last-position logits). **One registration serves every prefix
+//!   length**: a probe walks the chain and returns the deepest
+//!   token-verified match, so a 64-bit hash collision is a recorded miss,
+//!   never a wrong-prompt hit;
+//! * a **full hit skips the prefill entirely** — shared pages, channel
+//!   plans, |Q| state, the bounded f32 residual tail, and last-position
+//!   logits adopt bit-exactly (`RequestCache::register_prefix` /
+//!   `install_prefix`, `PrefillRun::new_shared`) — so N requests over one
+//!   prompt pay ~1× its quantized bytes and zero prefill compute;
+//! * a **partial hit runs frozen-plan mode**: a consumer sharing a strict
+//!   group-aligned prefix adopts the producer's channel plan and scale
+//!   state for the matched groups and resumes its chunked prefill at the
+//!   divergence seam (`RequestCache::begin_prefill_from`) instead of token
+//!   0. Deliberately lossy — the plan was derived from the producer's
+//!   window, not this prompt's — so the error is *measured*, not assumed:
+//!   [`harness::profiling::frozen_plan_sweep`] holds every method whose
+//!   [`coordinator::engine::frozen_plan_default`] is ON to
+//!   [`harness::profiling::FROZEN_PLAN_NLL_BUDGET`] (globally-scaled
+//!   methods default OFF; `ServerConfig::frozen_plan` overrides);
+//! * **one admission API**: [`coordinator::engine::Engine::admit_prefill`]
+//!   probes the tree and returns the verdict —
+//!   [`coordinator::engine::PrefillAdmission`]: `FullHit` /
+//!   `PartialHit { matched_tokens, seam }` / `Miss` — plus the run; the
+//!   router's scheduler, the metrics layer, and the benches all key off
+//!   it, and admission touches the whole matched node path before any
+//!   pressure shedding so a hit can never shed its own prefix;
 //! * **CoW at the seam**: divergence (decode appends) copies nothing — the
 //!   first flush past the shared region leases private pages; eviction of
-//!   a shared page drops only the local reference. `tests/prefix_sharing.rs`
-//!   property-tests K sharers against K private caches for bit-identity
-//!   under append/flush/evict/cancel churn and holds the deduped page
-//!   budget (prefix once + private tails);
+//!   a shared page drops only the local reference. The tree LRU-sheds
+//!   from the leaves (tails before interior nodes; a node is never shed
+//!   while a child or tail still depends on it), so retention never
+//!   outranks a live flush. `tests/prefix_sharing.rs` property-tests K
+//!   sharers at *different depths* against private caches for
+//!   bit-identity under append/flush/evict/cancel churn, holds the
+//!   deduped page budget (prefix once + private tails), and erodes a
+//!   populated tree shed by shed against `RadixTree::audit`;
 //! * serving charges shared pages **once**: the pool's `leased` counter
-//!   sees a refcounted page a single time, prefix-hit admissions claim
-//!   zero pages (`Engine::prefill_pages_for_prompt`), the index sheds LRU
-//!   entries under pool pressure (retention never outranks a live flush),
-//!   and `Metrics` reports hits/misses/pinned pages/bytes-deduped/chunks
-//!   skipped (`mixkvq serve` + `mixkvq info` surface them). The bench
-//!   `cargo bench --bench prefix_sharing` writes
-//!   `BENCH_prefix_sharing.json`, and CI's `bench-gate` binary fails the
-//!   build if the dedup ratio, the decode/prefill speedups, the f32
-//!   working-set shrink, or the paged overhead regress past the ROADMAP
-//!   bars.
+//!   sees a refcounted page a single time, full-hit admissions claim
+//!   zero pages (`Engine::prefill_pages_for_prompt`), and `Metrics`
+//!   reports hits/partial hits/misses/pinned pages/bytes-deduped/chunks
+//!   skipped (`mixkvq serve` + `mixkvq info` surface them). Two benches
+//!   feed CI's `bench-gate`: `cargo bench --bench prefix_sharing`
+//!   (full-hit dedup and install speedup, `BENCH_prefix_sharing.json`)
+//!   and `cargo bench --bench prefix_radix` (the shared-system-prompt
+//!   workload — 2048-token shared prefix, divergent suffixes taking
+//!   frozen-plan partial hits; `BENCH_prefix_radix.json`), whose ≥2×
+//!   dedup, zero same-seed fingerprint drift, and frozen-plan error
+//!   budget the gate enforces as the ninth bar.
 //!
 //! ## Adaptive precision policy + production traffic harness
 //!
@@ -231,8 +250,8 @@
 //!   [`util::faults::FaultPlan`] (seed + per-site rates) arms a
 //!   [`util::faults::FaultInjector`] drawing from one named RNG stream per
 //!   [`util::faults::FaultSite`] — transient pool-lease denial, prefill
-//!   chunk-step error, decode-step error, prefix-index entry corruption
-//!   (detected and discarded via `PrefixIndex::discard_corrupt`). Same
+//!   chunk-step error, decode-step error, prefix-tree entry corruption
+//!   (detected and discarded via `RadixTree::discard_corrupt`). Same
 //!   seed ⇒ same fault schedule, so every chaos failure reproduces
 //!   exactly; with no plan installed the hooks cost one `Option` check.
 //! * **Retry-with-degradation**: a failed prefill drops its run (every
@@ -252,7 +271,8 @@
 //!   without bound.
 //! * **Self-audit + chaos gate**: `Server::check_invariants` proves the
 //!   three independent bookkeepers agree — pool leases vs live holders'
-//!   private pages + distinct shared pages vs prefix-index pins — plus
+//!   private pages + distinct shared pages vs the radix tree's pins (the
+//!   tree's own `audit` recomputes them from its nodes and tails) — plus
 //!   lifecycle-stage disjointness. `mixkvq traffic --chaos <rate>` soaks
 //!   200+ sessions under ≥5% faults at all four sites, asserts the books
 //!   balance after every tick, zero leaked pages at drain, and an
@@ -260,13 +280,13 @@
 //!   CI's bench gate (tests/chaos.rs runs randomized fault × cancel ×
 //!   deadline interleavings on top).
 //!
-//! ## Crash recovery & snapshot ABI (`mixkvq-snap-v1`)
+//! ## Crash recovery & snapshot ABI (`mixkvq-snap-v2`)
 //!
 //! The live server is **checkpointable**: at any point outside `tick()`
 //! (every tick boundary is a quiesce point — no background threads hold
 //! state between ticks), [`coordinator::router::Server::snapshot`]
 //! serializes the entire serving state through [`util::snapshot`]'s
-//! length-delimited, versioned codec (`mixkvq-snap-v1` magic + schema
+//! length-delimited, versioned codec (`mixkvq-snap-v2` magic + schema
 //! version, every field written through a named-field writer so a torn
 //! stream fails with *which* field truncated, never a panic).
 //! [`coordinator::router::Server::restore`] rebuilds a server from the
@@ -280,7 +300,9 @@
 //! checksums**, every slot's page tables (private and refcounted shared
 //! pages, refcounts reconstructed through the restore-time lease
 //! resolvers), residual tails, channel plans + |Q| state, in-flight
-//! chunked prefills, the prefix index, queue/backoff/retry state, RNG
+//! chunked prefills, the radix prefix tree (interior nodes and tails in
+//! canonical order, frozen plans by table, recency clock and hit
+//! counters), queue/backoff/retry state, RNG
 //! positions, fault-draw ordinals, and the metrics reservoirs. What it
 //! deliberately does **not** carry: wall-clock `Instant`s (re-stamped at
 //! restore; fingerprints are wall-clock-free so this cannot drift them),
@@ -293,7 +315,7 @@
 //! mismatch at restore — or found live by [`coordinator::router::Server::scrub`]
 //! — quarantines the page and retires only the owning request as
 //! `FinishReason::Error` (a corrupt *shared* prefix page is dropped from
-//! the index collision-miss-style); the load itself never aborts, so a
+//! the tree collision-miss-style); the load itself never aborts, so a
 //! fully corrupt snapshot still restores with queued page-less requests
 //! riding through. [`util::faults::FaultSite::SnapshotWrite`] (torn
 //! mid-stream write) and [`util::faults::FaultSite::SnapshotCorrupt`]
@@ -345,7 +367,7 @@
 //! spine is minimal: `KvPool` is `Arc<Mutex<…>>` (lease/free are short
 //! critical sections; `can_lease` decisions are made schedule-invariant
 //! by the router's parking-pass page reservations), the `FaultInjector`
-//! is a lock-free `Arc`, and the `PrefixIndex` stays coordinator-only.
+//! is a lock-free `Arc`, and the radix prefix tree stays coordinator-only.
 //! `tests/parallel.rs` property-tests `workers=1` vs `workers=N`
 //! byte-identity — logits, event streams, metrics fingerprints — across
 //! the full `MethodSpec` roster, and `cargo bench --bench parallel`
@@ -389,6 +411,7 @@ pub mod kvcache {
     pub mod cache;
     pub mod eviction;
     pub mod pool;
+    pub mod radix;
     pub mod residual;
 }
 

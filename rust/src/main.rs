@@ -64,7 +64,7 @@ fn main() -> Result<()> {
                  USAGE: mixkvq <serve|bench|demo|search|info|profile|traffic> [options]\n\n\
                  serve   --method mixkvq-mix30 --requests 32 --max-new 48 --r-limit 128 --budget-mb 64\n\
                  \x20       [--snapshot-path state.snap --snapshot-every-ticks 50] write a\n\
-                 \x20       crash-safe mixkvq-snap-v1 image of the live server every N ticks\n\
+                 \x20       crash-safe mixkvq-snap-v2 image of the live server every N ticks\n\
                  \x20       (write-then-rename; a failed write never clobbers the last good\n\
                  \x20       image). Add --restore to resume from the image instead of\n\
                  \x20       starting cold — corrupt pages quarantine and retire only their\n\
@@ -72,6 +72,13 @@ fn main() -> Result<()> {
                  \x20       [--workers N]  worker-pool lanes for per-tick compute sharding\n\
                  \x20       (default: MIXKVQ_WORKERS env or available parallelism; 1 = the\n\
                  \x20       single-threaded path; outputs are bit-identical at every N)\n\
+                 \x20       [--frozen-plan on|off]  serve partial prefix-tree hits by\n\
+                 \x20       adopting the producer's frozen quantization plan (default:\n\
+                 \x20       MIXKVQ_FROZEN_PLAN env, else per-method ablation verdict).\n\
+                 \x20       Unset flags fall back to env defaults resolved by\n\
+                 \x20       ServerConfig::builder(): MIXKVQ_WORKERS, MIXKVQ_FROZEN_PLAN,\n\
+                 \x20       MIXKVQ_PREFIX_CACHE_PAGES, MIXKVQ_SNAPSHOT_PATH,\n\
+                 \x20       MIXKVQ_SNAPSHOT_EVERY_TICKS.\n\
                  \x20       --method accepts a comma-separated list (e.g. mixkvq-mix30,bf16):\n\
                  \x20       the first name is the server default, and requests are routed\n\
                  \x20       round-robin across the list per-request — the server batches\n\
@@ -126,30 +133,46 @@ fn serve(args: &Args) -> Result<()> {
     let r_limit = args.usize_or("r-limit", 128)?;
     let budget_mb = args.usize_or("budget-mb", 64)?;
     let seed = args.u64_or("seed", 0)?;
-    let workers = args.usize_or("workers", default_workers())?.max(1);
 
     eprintln!("loading engine (default {})...", default_method.name);
     let engine = Engine::new(&artifacts_dir(args), default_method, r_limit)?;
-    let server_cfg = ServerConfig {
-        memory_budget_bytes: budget_mb << 20,
-        max_prefills_per_cycle: 2,
-        seed,
-        reserve_pages: None,
-        workers,
-        ..ServerConfig::default()
-    };
+    // everything not set by a CLI flag resolves to its env default inside
+    // ServerConfigBuilder::build() — MIXKVQ_WORKERS, MIXKVQ_FROZEN_PLAN,
+    // MIXKVQ_PREFIX_CACHE_PAGES, MIXKVQ_SNAPSHOT_PATH /
+    // MIXKVQ_SNAPSHOT_EVERY_TICKS — in exactly one place
+    let mut cfg_b = ServerConfig::builder()
+        .memory_budget_bytes(budget_mb << 20)
+        .max_prefills_per_cycle(2)
+        .seed(seed);
+    if args.get("workers").is_some() {
+        cfg_b = cfg_b.workers(args.usize_or("workers", 1)?);
+    }
+    if let Some(v) = args.get("frozen-plan") {
+        cfg_b = cfg_b.frozen_plan(Some(match v.as_str() {
+            "on" | "true" | "1" => true,
+            "off" | "false" | "0" => false,
+            other => anyhow::bail!("--frozen-plan takes on|off, got {other}"),
+        }));
+    }
     // crash safety: --snapshot-path (+ --snapshot-every-ticks N) writes a
-    // mixkvq-snap-v1 image of the live server every N ticks; --restore
+    // mixkvq-snap-v2 image of the live server every N ticks; --restore
     // resumes from that image instead of starting cold
-    let snap_path = args.get("snapshot-path");
-    let snap_every = args.u64_or("snapshot-every-ticks", 0)?;
+    if args.get("snapshot-path").is_some() || args.get("snapshot-every-ticks").is_some() {
+        cfg_b = cfg_b.snapshot(
+            args.get("snapshot-path").map(PathBuf::from),
+            args.u64_or("snapshot-every-ticks", 0)?,
+        );
+    }
+    let server_cfg = cfg_b.build();
+    let snap_path = server_cfg.snapshot_path.clone();
+    let snap_every = server_cfg.snapshot_every_ticks;
     let mut server = match (&snap_path, args.has("restore")) {
         (Some(p), true) => {
             let f = std::fs::File::open(p)
-                .map_err(|e| anyhow::anyhow!("--restore: cannot open {p}: {e}"))?;
+                .map_err(|e| anyhow::anyhow!("--restore: cannot open {}: {e}", p.display()))?;
             let s = Server::restore(engine, server_cfg, std::io::BufReader::new(f))
-                .map_err(|e| anyhow::anyhow!("--restore from {p}: {e}"))?;
-            eprintln!("restored server state from {p}");
+                .map_err(|e| anyhow::anyhow!("--restore from {}: {e}", p.display()))?;
+            eprintln!("restored server state from {}", p.display());
             s
         }
         (None, true) => anyhow::bail!("--restore requires --snapshot-path <file>"),
@@ -186,7 +209,7 @@ fn serve(args: &Args) -> Result<()> {
             ticks_since_snap = 0;
             // write-then-rename so a crash mid-write never clobbers the
             // last good image
-            let tmp = format!("{p}.tmp");
+            let tmp = PathBuf::from(format!("{}.tmp", p.display()));
             let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
             match server.snapshot(&mut f) {
                 Ok(bytes) => {
@@ -194,7 +217,7 @@ fn serve(args: &Args) -> Result<()> {
                     f.flush()?;
                     drop(f);
                     std::fs::rename(&tmp, p)?;
-                    eprintln!("snapshot: {bytes} B -> {p}");
+                    eprintln!("snapshot: {bytes} B -> {}", p.display());
                 }
                 Err(e) => {
                     drop(f);
@@ -243,12 +266,15 @@ fn serve(args: &Args) -> Result<()> {
     );
     let m = &server.metrics;
     println!(
-        "prefix sharing: {} hits / {} misses, {} entries pinning {} pages \
+        "prefix sharing: {} full + {} partial hits / {} misses, {} tails \
+         ({} nodes) pinning {} pages \
          ({:.2} MB deduped, {} prefill chunks skipped, {} reorder ticks, \
          {} entries shed, {} KB sidecar)",
         m.prefix_hits,
+        m.prefix_partial_hits,
         m.prefix_misses,
         m.prefix_entries,
+        m.prefix_nodes,
         m.prefix_pages_pinned,
         m.prefix_bytes_deduped as f64 / 1e6,
         t.prefill_chunks_skipped,

@@ -928,6 +928,12 @@ impl PrefillScratch {
 pub struct PrefillRun {
     t: usize,
     chunk: usize,
+    /// Resume seam: the first token this run computes. Zero for a plain
+    /// run; a partial prefix hit sets it to the matched (group-aligned)
+    /// token count and every layer reconstructs rows `[0, seam)` from the
+    /// installed shared pages ([`RequestCache::dequant_prefix_into`])
+    /// before its first tile runs.
+    seam: usize,
     layer: usize,
     /// Tokens completed in the current layer.
     tok: usize,
@@ -948,6 +954,7 @@ impl PrefillRun {
         PrefillRun {
             t,
             chunk,
+            seam: 0,
             layer: 0,
             tok: 0,
             started: false,
@@ -957,8 +964,33 @@ impl PrefillRun {
         }
     }
 
+    /// A run resuming from a partial prefix hit: the cache already holds
+    /// the matched prefix (`RequestCache::install_prefix`, frozen-plan
+    /// mode), so only tokens `[seam, t)` are computed — per layer, rows
+    /// `[0, seam)` of the K/V planes are reconstructed from the shared
+    /// pages before the first tile, the streaming attention then sees the
+    /// full causal context, and the layer close quantizes just the tail
+    /// under the adopted plan (`RequestCache::store_prefill_layer_from`).
+    /// `seam` must be group-aligned and a strict prefix (the last token is
+    /// always recomputed so the final logits can project).
+    pub fn new_resumed(mc: &ModelConfig, t: usize, chunk: usize, seam: usize) -> PrefillRun {
+        assert!(chunk > 0, "chunk must be positive");
+        assert!(seam > 0 && seam < t, "seam {seam} must be a strict prefix of {t}");
+        PrefillRun {
+            t,
+            chunk,
+            seam,
+            layer: 0,
+            tok: seam,
+            started: false,
+            done: false,
+            chunks_done: 0,
+            scratch: PrefillScratch::new(mc, t, chunk),
+        }
+    }
+
     /// A run whose whole prompt was served from a shared prefix entry
-    /// (`kvcache::pool::PrefixIndex`): no chunk will ever execute — the
+    /// (a `kvcache::radix::RadixTree` full hit): no chunk will ever execute — the
     /// cache adopted the registered pages/residual and `last_logits` is the
     /// entry's snapshot, so `advance` reports done immediately and
     /// `total_chunks` tells the caller how many (layer, chunk) units of
@@ -972,6 +1004,7 @@ impl PrefillRun {
         PrefillRun {
             t,
             chunk,
+            seam: 0,
             layer: mc.n_layers,
             tok: 0,
             started: true,
@@ -990,9 +1023,10 @@ impl PrefillRun {
         self.chunks_done
     }
 
-    /// Chunk units per layer (the last may be short).
+    /// Chunk units per layer (the last may be short). A resumed run only
+    /// tiles its tail — the matched prefix's units are the skipped work.
     pub fn chunks_per_layer(&self) -> usize {
-        self.t.div_ceil(self.chunk)
+        (self.t - self.seam).div_ceil(self.chunk)
     }
 
     /// Total (layer, chunk) units this run will process.
@@ -1026,6 +1060,7 @@ impl PrefillRun {
     ) -> crate::util::snapshot::SnapResult<()> {
         w.usize(self.t)?;
         w.usize(self.chunk)?;
+        w.usize(self.seam)?;
         w.usize(self.layer)?;
         w.usize(self.tok)?;
         w.bool(self.started)?;
@@ -1057,14 +1092,18 @@ impl PrefillRun {
         if t == 0 || chunk == 0 {
             return Err(corrupt(format!("prefill run t={t}, chunk={chunk} (both must be > 0)")));
         }
+        let seam = r.usize("prefill run seam")?;
+        if seam >= t {
+            return Err(corrupt(format!("prefill run seam {seam} not a strict prefix of {t}")));
+        }
         let layer = r.usize("prefill run layer")?;
         let tok = r.usize("prefill run tok")?;
         let started = r.bool("prefill run started")?;
         let done = r.bool("prefill run done")?;
         let chunks_done = r.usize("prefill run chunks_done")?;
-        if layer > mc.n_layers || tok > t {
+        if layer > mc.n_layers || tok > t || tok < seam {
             return Err(corrupt(format!(
-                "prefill run cursor (layer {layer}, tok {tok}) outside ({}, {t})",
+                "prefill run cursor (layer {layer}/{}, tok {tok}) outside seam {seam} .. {t}",
                 mc.n_layers
             )));
         }
@@ -1084,6 +1123,7 @@ impl PrefillRun {
             Ok(run)
         } else {
             let mut run = PrefillRun::new(mc, t, chunk);
+            run.seam = seam;
             run.layer = layer;
             run.tok = tok;
             run.started = started;
@@ -1133,9 +1173,12 @@ impl PrefillRun {
             bail!("prefill run sized for {} tokens, got {}", self.t, tokens.len());
         }
         if !self.started {
-            cache.begin_prefill(self.t)?;
+            cache.begin_prefill_from(self.t, self.seam)?;
             let d = model.mc.d_model;
             let embed = &model.w.flat[model.pidx.embed];
+            // the residual stream for rows `[0, seam)` is never read (every
+            // tile starts at the seam), so filling all rows uniformly is
+            // harmless and keeps the plain/resumed paths identical
             for (row, &tokid) in self.scratch.h.chunks_exact_mut(d).zip(tokens) {
                 row.copy_from_slice(&embed[tokid as usize * d..(tokid as usize + 1) * d]);
             }
@@ -1143,6 +1186,17 @@ impl PrefillRun {
         }
         let mut budget = max_chunks;
         while budget > 0 && !self.done {
+            if self.seam > 0 && self.tok == self.seam {
+                // first tile of a layer: rebuild the matched prefix's K/V
+                // rows from the installed shared pages so the streaming
+                // attention sees the full causal context
+                cache.dequant_prefix_into(
+                    self.layer,
+                    self.seam,
+                    &mut self.scratch.k,
+                    &mut self.scratch.v,
+                );
+            }
             self.chunk_step(model);
             self.chunks_done += 1;
             budget -= 1;
@@ -1150,7 +1204,7 @@ impl PrefillRun {
             if self.tok == self.t {
                 self.close_layer(model, cache)?;
                 self.layer += 1;
-                self.tok = 0;
+                self.tok = self.seam;
                 if self.layer == model.mc.n_layers {
                     self.project_last(model);
                     cache.finish_prefill(self.t);
@@ -1262,12 +1316,13 @@ impl PrefillRun {
     /// the store; the residual tail stays f32).
     fn close_layer(&mut self, model: &RefModel<'_>, cache: &mut RequestCache) -> Result<()> {
         let l = self.layer;
-        let denom = (self.t * model.mc.q_per_kv()) as f32;
+        // a resumed run accumulated |q| over the tail's queries only
+        let denom = ((self.t - self.seam) * model.mc.q_per_kv()) as f32;
         for a in self.scratch.qabs[l].iter_mut() {
             *a /= denom;
         }
         let PrefillScratch { k, v, qabs, kg, vg, .. } = &mut self.scratch;
-        cache.store_prefill_layer(l, k, v, &qabs[l], self.t, kg, vg)
+        cache.store_prefill_layer_from(l, k, v, &qabs[l], self.t, self.seam, kg, vg)
     }
 
     /// Final norm + vocab projection for the LAST position only — the

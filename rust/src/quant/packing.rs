@@ -76,7 +76,7 @@
 //! # Shared pages are read-only after flush (sharing ABI)
 //!
 //! The prefill/flush contract above has a corollary the cross-request
-//! prefix sharing of `kvcache::pool::PrefixIndex` depends on: **no code
+//! prefix sharing of `kvcache::radix::RadixTree` depends on: **no code
 //! path writes a page after its flush completes**. Appends land in the
 //! residual buffer; the next flush quantizes into freshly leased pages;
 //! eviction splices table entries without touching bytes. A page is
@@ -86,9 +86,14 @@
 //! `SharedLease`: co-tenants read the packed rows concurrently with zero
 //! coordination, and the packed-row layout, the in-page scales/zeros, and
 //! the alignment invariants documented above are the complete contract a
-//! reader needs. The write paths enforce the rule mechanically — a
-//! `page_mut` through a shared `PageRef` panics ("copy-on-write
-//! violation") rather than corrupt a co-tenant.
+//! reader needs. This holds per *group*, not just per prompt — a radix
+//! interior node pins one flushed group's pages, so a frozen-plan partial
+//! hit adopts a strict prefix of a producer's pages while the producer
+//! (or a deeper sharer) keeps reading the rest; the seam is always a
+//! flush boundary, so no page is ever half-shared. The write paths
+//! enforce the rule mechanically — a `page_mut` through a shared
+//! `PageRef` panics ("copy-on-write violation") rather than corrupt a
+//! co-tenant.
 
 /// Pack 4-bit codes (values 0..=15), `codes.len()` must be even.
 pub fn pack_u4(codes: &[u8], out: &mut Vec<u8>) {

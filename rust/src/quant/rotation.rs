@@ -59,6 +59,31 @@ pub fn rotate_rows(x: &mut [f32], t: usize, d: usize, rot: &[f32]) {
     }
 }
 
+/// y = x · Rᵀ — the inverse of [`rotate_vec`] for orthonormal R (both the
+/// scaled Hadamard and identity qualify), so dequantized rotated-space keys
+/// can be mapped back to raw channel space for seam-resumed prefill.
+pub fn unrotate_vec(x: &[f32], rot: &[f32], out: &mut [f32]) {
+    let d = x.len();
+    debug_assert_eq!(rot.len(), d * d);
+    for j in 0..d {
+        let mut acc = 0.0;
+        for i in 0..d {
+            acc += x[i] * rot[j * d + i];
+        }
+        out[j] = acc;
+    }
+}
+
+/// Un-rotate each row of a [t, d] matrix in place (scratch-allocating).
+pub fn unrotate_rows(x: &mut [f32], t: usize, d: usize, rot: &[f32]) {
+    let mut tmp = vec![0.0f32; d];
+    for tok in 0..t {
+        let row = &mut x[tok * d..(tok + 1) * d];
+        unrotate_vec(row, rot, &mut tmp);
+        row.copy_from_slice(&tmp);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -107,6 +132,21 @@ mod tests {
         rotate_vec(&x, &h, &mut y);
         let max = y.iter().fold(0.0f32, |m, v| m.max(v.abs()));
         assert!((max - 8.0 / (d as f32).sqrt()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn unrotate_inverts_rotate() {
+        let d = 32;
+        let h = hadamard(d);
+        let mut rng = Pcg32::seeded(97);
+        let x: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0; d];
+        let mut back = vec![0.0; d];
+        rotate_vec(&x, &h, &mut y);
+        unrotate_vec(&y, &h, &mut back);
+        for (a, b) in x.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! Length-prefixed, versioned binary codec for crash-safe serving
-//! snapshots (`mixkvq-snap-v1`) — no external serialization crates.
+//! snapshots (`mixkvq-snap-v2`) — no external serialization crates.
 //!
 //! The format is deliberately dumb: a magic + version header, then a fixed
 //! sequence of primitive fields and length-prefixed arrays written in one
@@ -21,11 +21,13 @@
 
 use std::io::{Read, Write};
 
-/// Magic line opening every snapshot stream.
-pub const SNAP_MAGIC: &[u8; 15] = b"mixkvq-snap-v1\n";
+/// Magic line opening every snapshot stream. v2 replaced the flat prefix
+/// index section with the radix prefix tree (nodes + anchored tails +
+/// frozen-plan table); v1 images are rejected loudly, not misparsed.
+pub const SNAP_MAGIC: &[u8; 15] = b"mixkvq-snap-v2\n";
 
 /// Schema version written after the magic; bump on ANY layout change.
-pub const SNAP_VERSION: u32 = 1;
+pub const SNAP_VERSION: u32 = 2;
 
 /// Trailer sentinel closing the stream — a read that ends without it was
 /// truncated.

@@ -50,10 +50,10 @@ fn small_engine() -> Engine {
     Engine::new_reference(small_meta(), 11, Method::bf16(), 32).unwrap()
 }
 
-/// Pages the prefix index legitimately pins after all sessions retire —
+/// Pages the prefix tree legitimately pins after all sessions retire —
 /// the only pages allowed to remain leased at drain.
 fn pinned_pages(server: &Server) -> usize {
-    server.engine.prefix_index().map(|ix| ix.borrow().pages_pinned()).unwrap_or(0)
+    server.engine.prefix_tree().map(|ix| ix.borrow().pages_pinned()).unwrap_or(0)
 }
 
 fn gen_request(rng: &mut Pcg32, id: u64) -> Request {

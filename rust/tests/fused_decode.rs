@@ -196,7 +196,7 @@ fn steady_state_shared_prefix_decode_allocates_nothing() {
         Some(256),
     );
     pool.prewarm(256);
-    let mut index = mixkvq::kvcache::pool::PrefixIndex::new(128, pool.page_deploy_bytes());
+    let mut index = mixkvq::kvcache::radix::RadixTree::new(128, pool.page_deploy_bytes());
     let mut rng = Pcg32::seeded(43);
     let prompt: Vec<i32> = (0..72).map(|_| rng.range(1, 127) as i32).collect();
     let (mut producer, last) = driver.prefill_pooled(&pool, &prompt).unwrap();
@@ -210,7 +210,12 @@ fn steady_state_shared_prefix_decode_allocates_nothing() {
         method,
         r_limit,
     );
-    cache.install_prefix(index.lookup(0xabcd, &prompt).unwrap()).unwrap();
+    let m = match index.lookup(0xabcd, &prompt, meta.cache.group, 0) {
+        mixkvq::kvcache::radix::PrefixProbe::Full(m) => m,
+        _ => panic!("expected full prefix hit"),
+    };
+    cache.install_prefix(&m).unwrap();
+    drop(m);
     assert!(cache.shared_pages() > 0, "the window must be shared");
     assert_eq!(cache.private_pages(), 0);
     assert_eq!(pool.leased(), pinned, "the install must lease nothing");

@@ -96,7 +96,7 @@ fn hlo_decode_matches_reference_driver_quantized() {
         let task = workloads::gen_passkey(&mut rng, 120); // long enough to quantize
         // HLO path
         let pre = engine.prefill(&task.prompt).unwrap();
-        let mut hlo_cache = engine.admit_prefill(&pre).unwrap();
+        let mut hlo_cache = engine.quantize_prefill(&pre).unwrap();
         assert!(hlo_cache.qlen > 0, "window must quantize ({})", method.name);
         // reference path
         let (mut ref_cache, ref_last) = driver.prefill(&task.prompt).unwrap();
@@ -140,15 +140,15 @@ fn batched_decode_slots_are_independent() {
     let b = engine.meta.cache.decode_batch;
 
     let pre1 = engine.prefill(&t1.prompt).unwrap();
-    let mut alone = engine.admit_prefill(&pre1).unwrap();
+    let mut alone = engine.quantize_prefill(&pre1).unwrap();
     let mut slots: Vec<Option<(&mut mixkvq::kvcache::cache::RequestCache, i32)>> = (0..b).map(|_| None).collect();
     slots[0] = Some((&mut alone, t1.gold[t1.prompt.len()]));
     let logits_alone = engine.decode_step(&mut slots).unwrap()[0].clone().unwrap();
 
     let pre1b = engine.prefill(&t1.prompt).unwrap();
     let pre2 = engine.prefill(&t2.prompt).unwrap();
-    let mut c1 = engine.admit_prefill(&pre1b).unwrap();
-    let mut c2 = engine.admit_prefill(&pre2).unwrap();
+    let mut c1 = engine.quantize_prefill(&pre1b).unwrap();
+    let mut c2 = engine.quantize_prefill(&pre2).unwrap();
     let mut slots: Vec<Option<(&mut mixkvq::kvcache::cache::RequestCache, i32)>> = (0..b).map(|_| None).collect();
     slots[0] = Some((&mut c1, t1.gold[t1.prompt.len()]));
     slots[3] = Some((&mut c2, t2.gold[t2.prompt.len()]));
@@ -444,17 +444,17 @@ fn pool_pressure_parks_and_drains_cleanly() {
     let n = trace.len();
     let completed = server.run(trace).unwrap();
     assert_eq!(completed.len(), n, "every request must reach a terminal state");
-    // after the trace only the prefix index's deliberate retention may
+    // after the trace only the prefix tree's deliberate retention may
     // remain leased — every request-held page must have returned
     let pinned = server
         .engine
-        .prefix_index()
+        .prefix_tree()
         .map(|ix| ix.borrow().pages_pinned())
         .unwrap_or(0);
     assert_eq!(
         server.pool.leased(),
         pinned,
-        "pool must drain to exactly the prefix-index retention"
+        "pool must drain to exactly the prefix-tree retention"
     );
     assert!(
         server.metrics.pool_high_water > 0,
@@ -521,11 +521,11 @@ fn server_occupancy_admission_beats_worst_case() {
         server.metrics.max_concurrent,
         worst_case_batch
     );
-    // drained up to the prefix index's deliberate retention (see
+    // drained up to the prefix tree's deliberate retention (see
     // pool_pressure_parks_and_drains_cleanly)
     let pinned = server
         .engine
-        .prefix_index()
+        .prefix_tree()
         .map(|ix| ix.borrow().pages_pinned())
         .unwrap_or(0);
     assert_eq!(server.pool.leased(), pinned);

@@ -1,26 +1,35 @@
-//! Cross-request prefix sharing invariants (no artifacts needed):
+//! Cross-request prefix sharing invariants over the radix tree (no
+//! artifacts needed):
 //!
-//! * **bit-identity property**: K requests adopting one registered prompt
-//!   (refcounted copy-on-write pages) and then diverging — per-request
-//!   decode appends, flushes, sliding-window eviction, mid-flight cancel —
-//!   must stay bitwise equal to K private caches fed the same data at every
-//!   step: page contents, channel plans, |Q| state, residual rows;
+//! * **bit-identity property**: K requests adopting registered prompts at
+//!   DIFFERENT tree depths (refcounted copy-on-write pages) and then
+//!   diverging — per-request decode appends, flushes, sliding-window
+//!   eviction, mid-flight cancel — must stay bitwise equal to private
+//!   caches fed the same data at every step: page contents, channel
+//!   plans, |Q| state, residual rows;
 //! * **deduped page budget**: while K requests share a prefix, the pool
-//!   holds prefix pages ONCE (`~1/K`× private mode) plus each request's
-//!   private divergence tail — never more;
-//! * **no leaks**: after every drain (drops, cancels, index clear)
+//!   holds each shared group ONCE (`~1/K`× private mode) plus each
+//!   request's private divergence tail — never more;
+//! * **refcount discipline**: LRU shedding only ever removes tails and
+//!   leaf nodes; an interior node (children or anchored tails) is never
+//!   shed while a descendant is pinned, so every resident chain stays
+//!   intact from depth 1 down (`RadixTree::audit` after every shed);
+//! * **no leaks**: after every drain (drops, cancels, tree clear)
 //!   `pool.leased() == 0`;
 //! * **seam discipline**: evicting shared pages drops only the local
-//!   table reference; co-tenants and the index keep the bytes alive.
+//!   table reference; co-tenants and the tree keep the bytes alive.
 
 use mixkvq::kvcache::cache::{ContiguousHead, RequestCache};
 use mixkvq::kvcache::eviction::CachePolicy;
-use mixkvq::kvcache::pool::{KvPool, PrefixIndex};
+use mixkvq::kvcache::pool::{prompt_chain_key, KvPool};
+use mixkvq::kvcache::radix::{PrefixMatch, PrefixProbe, RadixTree};
 use mixkvq::model::config::{CacheConfig, ModelConfig};
 use mixkvq::quant::methods::Method;
 use mixkvq::quant::window::TierSpec;
 use mixkvq::util::rng::Pcg32;
 
+/// Head-major `[h][t][d]` per-layer K/V + per-channel |Q| stats — the
+/// legacy `load_prefill` layout.
 fn rand_kv(
     rng: &mut Pcg32,
     mc: &ModelConfig,
@@ -33,6 +42,67 @@ fn rand_kv(
         .map(|_| (0..mc.n_kv_heads * mc.d_head).map(|_| rng.f32() + 0.01).collect())
         .collect();
     (k, v, qa)
+}
+
+/// Token-major `[t, Hkv*dh]` per-layer K/V + |Q| stats — the chunked
+/// `store_prefill_layer_from` layout (what the blocked forward produces).
+fn rand_kv_tokmajor(
+    rng: &mut Pcg32,
+    mc: &ModelConfig,
+    t: usize,
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let stride = mc.n_kv_heads * mc.d_head;
+    let k = (0..mc.n_layers).map(|_| (0..t * stride).map(|_| rng.normal()).collect()).collect();
+    let v = (0..mc.n_layers).map(|_| (0..t * stride).map(|_| rng.normal()).collect()).collect();
+    let qa = (0..mc.n_layers).map(|_| (0..stride).map(|_| rng.f32() + 0.01).collect()).collect();
+    (k, v, qa)
+}
+
+fn full_hit(tree: &mut RadixTree, seed: u64, prompt: &[i32], group: usize) -> PrefixMatch {
+    // max_groups 0: full-tail adoption only, the partial walk stays off
+    match tree.lookup(seed, prompt, group, 0) {
+        PrefixProbe::Full(m) => m,
+        PrefixProbe::Partial(_) => panic!("expected full prefix hit, got partial"),
+        PrefixProbe::Miss => panic!("expected full prefix hit, got miss"),
+    }
+}
+
+fn partial_hit(
+    tree: &mut RadixTree,
+    seed: u64,
+    prompt: &[i32],
+    group: usize,
+    max_groups: usize,
+) -> PrefixMatch {
+    match tree.lookup(seed, prompt, group, max_groups) {
+        PrefixProbe::Partial(m) => m,
+        PrefixProbe::Full(_) => panic!("expected partial prefix hit, got full"),
+        PrefixProbe::Miss => panic!("expected partial prefix hit, got miss"),
+    }
+}
+
+/// Frozen-plan seam resume at the cache level: quantize rows `[seam, t)`
+/// of a token-major prompt into private tail pages under the installed
+/// plan, then seal the cursors — what `PrefillRun::new_resumed` drives in
+/// serving, minus the attention compute.
+fn resume_tail(
+    c: &mut RequestCache,
+    mc: &ModelConfig,
+    k: &[Vec<f32>],
+    v: &[Vec<f32>],
+    qa: &[Vec<f32>],
+    t: usize,
+    seam: usize,
+) {
+    c.begin_prefill_from(t, seam).unwrap();
+    let d = mc.d_head;
+    let mut kbuf = vec![0.0f32; (t - seam) * d];
+    let mut vbuf = vec![0.0f32; (t - seam) * d];
+    for l in 0..mc.n_layers {
+        c.store_prefill_layer_from(l, &k[l], &v[l], &qa[l], t, seam, &mut kbuf, &mut vbuf)
+            .unwrap();
+    }
+    c.finish_prefill(t);
 }
 
 fn snapshot(cache: &RequestCache, mc: &ModelConfig) -> Vec<ContiguousHead> {
@@ -75,7 +145,7 @@ fn k_sharers_stay_bit_identical_to_private_caches_under_churn() {
 
     let pool = KvPool::for_specs(specs.iter(), mc.d_head, cc.group, Some(512));
     pool.prewarm(512);
-    let mut index = PrefixIndex::new(256, pool.page_deploy_bytes());
+    let mut tree = RadixTree::new(256, pool.page_deploy_bytes());
 
     // one shared prompt: 160 tokens = 128 quantized (4 groups/head) + 32
     // residual; a producer registers it, K consumers adopt it
@@ -85,18 +155,22 @@ fn k_sharers_stay_bit_identical_to_private_caches_under_churn() {
     let prompt0: Vec<i32> = (0..t0 as i32).collect();
     let mut producer = RequestCache::new_in(&pool, &mc, &cc, &specs, method.clone(), r_limit);
     producer.load_prefill(&k0, &v0, &qa0, t0).unwrap();
-    assert!(producer.register_prefix(&mut index, 0xfeed, &prompt0, &[0.25, 0.75]));
+    assert!(producer.register_prefix(&mut tree, 0xfeed, &prompt0, &[0.25, 0.75]));
     let prefix_pages = pool.leased();
     assert_eq!(prefix_pages, (128 / cc.group) * mc.n_layers * mc.n_kv_heads);
+    assert_eq!(tree.node_count(), 128 / cc.group, "one node per shared group");
+    tree.audit().unwrap();
     drop(producer);
-    assert_eq!(pool.leased(), prefix_pages, "index pins the prefix alone");
+    assert_eq!(pool.leased(), prefix_pages, "tree pins the prefix alone");
 
     let mut shared: Vec<Option<RequestCache>> = Vec::new();
     let mut private: Vec<Option<RequestCache>> = Vec::new();
     let mut tail_rngs: Vec<Pcg32> = Vec::new();
     for r in 0..k_req {
         let mut s = RequestCache::new_in(&pool, &mc, &cc, &specs, method.clone(), r_limit);
-        s.install_prefix(index.lookup(0xfeed, &prompt0).unwrap()).unwrap();
+        let m = full_hit(&mut tree, 0xfeed, &prompt0, cc.group);
+        s.install_prefix(&m).unwrap();
+        drop(m); // the probe's lease clones must not distort pool accounting
         // request 1 diverges in POLICY too: sliding-window eviction that
         // will eventually splice shared pages out of its own table
         if r == 1 {
@@ -175,13 +249,220 @@ fn k_sharers_stay_bit_identical_to_private_caches_under_churn() {
         "co-tenant unaffected by another sharer's eviction"
     );
 
-    // drain: drop all sharers → only the index pin remains → clear → zero
+    // drain: drop all sharers → only the tree pin remains → clear → zero
     shared.clear();
     private.clear();
-    assert_eq!(pool.leased(), prefix_pages, "after drops only the index pins pages");
-    index.clear();
-    assert_eq!(pool.leased(), 0, "no leaks after the index lets go");
+    assert_eq!(pool.leased(), prefix_pages, "after drops only the tree pins pages");
+    tree.clear();
+    assert_eq!(pool.leased(), 0, "no leaks after the tree lets go");
     assert!(max_leased <= 512, "budget never exceeded");
+}
+
+/// Sharers adopting at DIFFERENT tree depths stay bit-identical to private
+/// caches: one full hit on the original registration (depth 4 anchor), one
+/// full hit on a frozen-plan follower's extension (shared depth 1–2 plus
+/// its own depth 3–4 branch). The follower itself exercises the partial-hit
+/// path end to end: probe → install at the seam → seam-resumed store under
+/// the adopted plan → registration extending the chain with ONLY its
+/// divergent suffix. The deduped budget counts every shared group once.
+#[test]
+fn sharers_at_different_depths_stay_bit_identical_to_private_caches() {
+    let mc = ModelConfig { n_layers: 2, ..ModelConfig::default_build() };
+    let cc = CacheConfig { capacity: 256, residual: 64, ..CacheConfig::default_build() };
+    let spec = TierSpec { n16: 2, n4: 2, n2: 28, v_bits: 2 };
+    let specs = vec![spec; mc.n_layers];
+    let r_limit = 32;
+    let method = Method::mixkvq("mix30");
+    let seed = 0xbeef_u64;
+    let per_group = mc.n_layers * mc.n_kv_heads;
+
+    let pool = KvPool::for_specs(specs.iter(), mc.d_head, cc.group, Some(512));
+    pool.prewarm(512);
+    let mut tree = RadixTree::new(256, pool.page_deploy_bytes());
+    let mut rng = Pcg32::seeded(2027);
+
+    // producer A: 160 tokens (4 quantized groups + 32 residual)
+    let t0 = 160;
+    let prompt_a: Vec<i32> = (0..t0 as i32).collect();
+    let (k0, v0, qa0) = rand_kv(&mut rng, &mc, t0);
+    let mut producer_a = RequestCache::new_in(&pool, &mc, &cc, &specs, method.clone(), r_limit);
+    producer_a.load_prefill(&k0, &v0, &qa0, t0).unwrap();
+    assert!(producer_a.register_prefix(&mut tree, seed, &prompt_a, &[0.5]));
+    assert_eq!(tree.pages_pinned(), 4 * per_group);
+
+    // follower C: shares A's first two groups (64 tokens), diverges after.
+    // Partial probe → install at the seam → frozen-plan resume → register:
+    // the chain gains ONLY the two divergent groups.
+    let seam = 2 * cc.group;
+    let mut prompt_c: Vec<i32> = prompt_a[..seam].to_vec();
+    prompt_c.extend(9000..9000 + (t0 - seam) as i32);
+    let (kc, vc, qac) = rand_kv_tokmajor(&mut rng, &mc, t0);
+    let mut consumer_c = RequestCache::new_in(&pool, &mc, &cc, &specs, method.clone(), r_limit);
+    let cap = RadixTree::partial_walk_groups(128, t0, cc.group);
+    let m = partial_hit(&mut tree, seed, &prompt_c, cc.group, cap);
+    assert_eq!(m.t, seam, "deepest verified match is the shared two groups");
+    assert_eq!(m.qt, seam);
+    consumer_c.install_prefix(&m).unwrap();
+    drop(m);
+    resume_tail(&mut consumer_c, &mc, &kc, &vc, &qac, t0, seam);
+    assert!(consumer_c.register_prefix(&mut tree, seed, &prompt_c, &[0.75]));
+    assert_eq!(
+        tree.pages_pinned(),
+        6 * per_group,
+        "follower extends the chain with its divergent suffix only"
+    );
+    assert_eq!(tree.node_count(), 6);
+    assert_eq!(tree.len(), 2);
+    tree.audit().unwrap();
+    assert_eq!(pool.leased(), 6 * per_group, "every shared group held once");
+
+    // sharer on A (full hit at depth 4) mirrors a fresh private prefill;
+    // sharer on C (full hit through the shared depth 1–2 prefix plus C's
+    // own branch) mirrors the follower that computed that state
+    let mut s_a = RequestCache::new_in(&pool, &mc, &cc, &specs, method.clone(), r_limit);
+    let m = full_hit(&mut tree, seed, &prompt_a, cc.group);
+    s_a.install_prefix(&m).unwrap();
+    drop(m);
+    let mut private_a = RequestCache::new(&mc, &cc, &specs, method.clone(), r_limit);
+    private_a.load_prefill(&k0, &v0, &qa0, t0).unwrap();
+    assert_mirrors(&s_a, &private_a, &mc, "depth-4 sharer install");
+
+    let mut s_c = RequestCache::new_in(&pool, &mc, &cc, &specs, method.clone(), r_limit);
+    let m = full_hit(&mut tree, seed, &prompt_c, cc.group);
+    s_c.install_prefix(&m).unwrap();
+    drop(m);
+    assert_mirrors(&s_c, &consumer_c, &mc, "branch sharer install");
+    assert_eq!(pool.leased(), 6 * per_group, "installs lease ZERO new pages");
+
+    // divergent decode churn: each sharer mirrors its private twin while
+    // the pool never exceeds shared-once + private tails
+    let mut rng_a = Pcg32::seeded(3001);
+    let mut rng_c = Pcg32::seeded(3002);
+    for step in 0..100 {
+        let (ka, va, qa) = rand_kv(&mut rng_a, &mc, 1);
+        match (s_a.append(&ka, &va, &qa), private_a.append(&ka, &va, &qa)) {
+            (Ok(()), Ok(())) | (Err(_), Err(_)) => {}
+            (a, b) => panic!("step {step}: depth-4 sharer {a:?} vs private {b:?} diverged"),
+        }
+        let (kc1, vc1, qc1) = rand_kv(&mut rng_c, &mc, 1);
+        match (s_c.append(&kc1, &vc1, &qc1), consumer_c.append(&kc1, &vc1, &qc1)) {
+            (Ok(()), Ok(())) | (Err(_), Err(_)) => {}
+            (a, b) => panic!("step {step}: branch sharer {a:?} vs follower {b:?} diverged"),
+        }
+        if step % 10 == 0 {
+            assert_mirrors(&s_a, &private_a, &mc, &format!("step {step} depth-4"));
+            assert_mirrors(&s_c, &consumer_c, &mc, &format!("step {step} branch"));
+        }
+        let tails = s_a.private_pages()
+            + s_c.private_pages()
+            + producer_a.private_pages()
+            + consumer_c.private_pages();
+        assert_eq!(
+            pool.leased(),
+            tree.pages_pinned() + tails,
+            "step {step}: shared groups once plus private tails"
+        );
+    }
+    assert_mirrors(&s_a, &private_a, &mc, "depth-4 end");
+    assert_mirrors(&s_c, &consumer_c, &mc, "branch end");
+
+    // drain to zero
+    drop(s_a);
+    drop(s_c);
+    drop(private_a);
+    drop(producer_a);
+    drop(consumer_c);
+    assert_eq!(pool.leased(), tree.pages_pinned(), "only the tree pins pages");
+    tree.clear();
+    assert_eq!(pool.leased(), 0, "no leaks after the tree lets go");
+}
+
+/// Refcount discipline under LRU pressure: shedding erodes chains from
+/// the deep end — tails first, then leaf nodes — and an interior node is
+/// NEVER removed while a descendant (child node or anchored tail) is
+/// still resident. The structural audit holds after every single shed,
+/// and the last surviving node is the depth-1 root of the shared chain,
+/// still serving partial hits.
+#[test]
+fn interior_nodes_survive_until_every_dependent_sheds() {
+    let mc = ModelConfig { n_layers: 2, ..ModelConfig::default_build() };
+    let cc = CacheConfig { capacity: 256, residual: 64, ..CacheConfig::default_build() };
+    let spec = TierSpec { n16: 2, n4: 2, n2: 28, v_bits: 2 };
+    let specs = vec![spec; mc.n_layers];
+    let r_limit = 32;
+    let method = Method::mixkvq("mix30");
+    let seed = 0xabc_u64;
+    let per_group = mc.n_layers * mc.n_kv_heads;
+
+    let pool = KvPool::for_specs(specs.iter(), mc.d_head, cc.group, Some(512));
+    pool.prewarm(512);
+    let mut tree = RadixTree::new(256, pool.page_deploy_bytes());
+    let mut rng = Pcg32::seeded(4099);
+
+    // chain A: 4 groups; follower C branches after group 2
+    let t0 = 160;
+    let prompt_a: Vec<i32> = (0..t0 as i32).collect();
+    let (k0, v0, qa0) = rand_kv(&mut rng, &mc, t0);
+    let mut producer_a = RequestCache::new_in(&pool, &mc, &cc, &specs, method.clone(), r_limit);
+    producer_a.load_prefill(&k0, &v0, &qa0, t0).unwrap();
+    assert!(producer_a.register_prefix(&mut tree, seed, &prompt_a, &[0.5]));
+
+    let seam = 2 * cc.group;
+    let mut prompt_c: Vec<i32> = prompt_a[..seam].to_vec();
+    prompt_c.extend(5000..5000 + (t0 - seam) as i32);
+    let (kc, vc, qac) = rand_kv_tokmajor(&mut rng, &mc, t0);
+    let mut consumer_c = RequestCache::new_in(&pool, &mc, &cc, &specs, method.clone(), r_limit);
+    let cap = RadixTree::partial_walk_groups(128, t0, cc.group);
+    let m = partial_hit(&mut tree, seed, &prompt_c, cc.group, cap);
+    consumer_c.install_prefix(&m).unwrap();
+    drop(m);
+    resume_tail(&mut consumer_c, &mc, &kc, &vc, &qac, t0, seam);
+    assert!(consumer_c.register_prefix(&mut tree, seed, &prompt_c, &[0.75]));
+    assert_eq!(tree.node_count(), 6);
+    assert_eq!(tree.len(), 2);
+    assert_eq!(tree.pages_pinned(), 6 * per_group);
+    tree.audit().unwrap();
+
+    // retire every cache: the tree alone keeps the chains alive
+    drop(producer_a);
+    drop(consumer_c);
+    assert_eq!(pool.leased(), 6 * per_group);
+
+    // first shed takes the LRU TAIL — the anchor and every interior node
+    // above it survive untouched even though the tail was the coldest
+    // entity in the whole tree
+    assert!(tree.shed_lru());
+    assert_eq!(tree.len(), 1, "LRU tail shed first");
+    assert_eq!(tree.node_count(), 6, "no node shed while its chain is pinned");
+    tree.audit().unwrap();
+
+    // erode until a single node remains, auditing after EVERY shed: an
+    // interior removed ahead of a descendant would orphan that descendant
+    // and fail the audit's parent/child integrity checks
+    while tree.node_count() > 1 {
+        assert!(tree.shed_lru(), "tree still has sheddable state");
+        tree.audit().unwrap();
+        assert_eq!(
+            pool.leased(),
+            tree.pages_pinned(),
+            "every shed returns its pages to the pool immediately"
+        );
+    }
+    // the survivor is the depth-1 root — it still serves partial hits for
+    // any prompt sharing the first group
+    let mut probe: Vec<i32> = prompt_a[..cc.group].to_vec();
+    probe.extend(7000..7000 + (t0 - cc.group) as i32);
+    let m = partial_hit(&mut tree, seed, &probe, cc.group, cap);
+    assert_eq!(m.t, cc.group, "depth-1 root still answers one-group matches");
+    drop(m);
+
+    // final drain: everything sheds, zero leases remain
+    while tree.shed_lru() {
+        tree.audit().unwrap();
+    }
+    assert!(tree.is_empty());
+    assert_eq!(tree.pages_pinned(), 0);
+    assert_eq!(pool.leased(), 0, "no leaks after the full erosion");
 }
 
 /// A prompt shorter than the residual limit registers a zero-page entry —
@@ -196,18 +477,22 @@ fn residual_only_prompt_shares_compute_not_pages() {
     let specs = vec![spec; mc.n_layers];
     let pool = KvPool::for_specs(specs.iter(), mc.d_head, cc.group, Some(64));
     pool.prewarm(64);
-    let mut index = PrefixIndex::new(64, pool.page_deploy_bytes());
+    let mut tree = RadixTree::new(64, pool.page_deploy_bytes());
     let mut rng = Pcg32::seeded(1013);
     let t0 = 24; // < r_limit = 32: zero pages, residual only
     let (k0, v0, qa0) = rand_kv(&mut rng, &mc, t0);
     let mut producer = RequestCache::new_in(&pool, &mc, &cc, &specs, Method::kivi("kv2"), 32);
     producer.load_prefill(&k0, &v0, &qa0, t0).unwrap();
     let prompt0: Vec<i32> = (0..t0 as i32).collect();
-    assert!(producer.register_prefix(&mut index, 9, &prompt0, &[1.0]));
-    assert_eq!(index.pages_pinned(), 0);
+    assert!(producer.register_prefix(&mut tree, 9, &prompt0, &[1.0]));
+    assert_eq!(tree.pages_pinned(), 0);
+    assert_eq!(tree.node_count(), 0, "a residual-only tail anchors no node");
+    tree.audit().unwrap();
 
     let mut s = RequestCache::new_in(&pool, &mc, &cc, &specs, Method::kivi("kv2"), 32);
-    s.install_prefix(index.lookup(9, &prompt0).unwrap()).unwrap();
+    let m = full_hit(&mut tree, 9, &prompt0, cc.group);
+    s.install_prefix(&m).unwrap();
+    drop(m);
     let mut p = RequestCache::new(&mc, &cc, &specs, Method::kivi("kv2"), 32);
     p.load_prefill(&k0, &v0, &qa0, t0).unwrap();
     assert_mirrors(&s, &p, &mc, "residual-only install");
@@ -226,9 +511,10 @@ fn residual_only_prompt_shares_compute_not_pages() {
     assert_mirrors(&s, &p, &mc, "residual-only end");
 }
 
-/// Two different prompts never collide: distinct keys, distinct entries,
-/// and the index sheds LRU under its page cap while co-tenant references
-/// keep evicted entries' pages alive until their holders retire.
+/// Two different prompts never collide: distinct chain keys, distinct
+/// tails, and the tree sheds LRU under its page cap while co-tenant
+/// references keep evicted entries' pages alive until their holders
+/// retire.
 #[test]
 fn distinct_prompts_get_distinct_entries_and_lru_respects_holders() {
     let mc = ModelConfig { n_layers: 1, ..ModelConfig::default_build() };
@@ -239,30 +525,36 @@ fn distinct_prompts_get_distinct_entries_and_lru_respects_holders() {
     pool.prewarm(64);
     // cap: exactly one 96-token prompt's pages (64 quantized = 2 groups x
     // 2 heads = 4 pages) — the second registration must shed the first
-    let mut index = PrefixIndex::new(4, pool.page_deploy_bytes());
+    let mut tree = RadixTree::new(4, pool.page_deploy_bytes());
     let mut rng = Pcg32::seeded(1021);
 
     let (ka, va, qaa) = rand_kv(&mut rng, &mc, 96);
     let prompt_a: Vec<i32> = (0..96).collect();
     let prompt_b: Vec<i32> = (1000..1096).collect();
+    let key_a = prompt_chain_key(100, &prompt_a, cc.group);
+    let key_b = prompt_chain_key(200, &prompt_b, cc.group);
     let mut a = RequestCache::new_in(&pool, &mc, &cc, &specs, Method::mixkvq("mix30"), 32);
     a.load_prefill(&ka, &va, &qaa, 96).unwrap();
-    assert!(a.register_prefix(&mut index, 100, &prompt_a, &[0.0]));
+    assert!(a.register_prefix(&mut tree, 100, &prompt_a, &[0.0]));
 
     // a consumer holds prompt A's pages
     let mut holder = RequestCache::new_in(&pool, &mc, &cc, &specs, Method::mixkvq("mix30"), 32);
-    holder.install_prefix(index.lookup(100, &prompt_a).unwrap()).unwrap();
+    let m = full_hit(&mut tree, 100, &prompt_a, cc.group);
+    holder.install_prefix(&m).unwrap();
+    drop(m);
     let a_pages = holder.leased_pages();
     assert_eq!(pool.leased(), a_pages);
 
     let (kb, vb, qab) = rand_kv(&mut rng, &mc, 96);
     let mut b = RequestCache::new_in(&pool, &mc, &cc, &specs, Method::mixkvq("mix30"), 32);
     b.load_prefill(&kb, &vb, &qab, 96).unwrap();
-    assert!(b.register_prefix(&mut index, 200, &prompt_b, &[0.0]));
-    // A's entry was shed for the cap, but the holder (and producer a) keep
-    // its pages alive — shedding breaks retention, never correctness
-    assert!(!index.contains(100));
-    assert!(index.contains(200));
+    assert!(b.register_prefix(&mut tree, 200, &prompt_b, &[0.0]));
+    // A's whole chain (tail + both nodes) was shed for the cap, but the
+    // holder (and producer a) keep its pages alive — shedding breaks
+    // retention, never correctness
+    assert!(!tree.contains(key_a));
+    assert!(tree.contains(key_b));
+    tree.audit().unwrap();
     assert_eq!(pool.leased(), 2 * a_pages, "A pages alive via holders, B pinned");
     let before = snapshot(&holder, &mc);
     drop(a);
@@ -270,6 +562,6 @@ fn distinct_prompts_get_distinct_entries_and_lru_respects_holders() {
     drop(holder);
     assert_eq!(pool.leased(), a_pages, "only B's pinned pages remain");
     drop(b);
-    index.clear();
+    tree.clear();
     assert_eq!(pool.leased(), 0);
 }

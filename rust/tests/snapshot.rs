@@ -7,7 +7,8 @@
 //!    restoring from the snapshot bytes, and draining produces the exact
 //!    event stream of the uninterrupted same-seed run, across methods,
 //!    worker widths {1, 4}, and chaos on/off (`harness::traffic` level and
-//!    raw `Server` level both);
+//!    raw `Server` level both) — including a kill with a populated prefix
+//!    radix tree and in-flight frozen-plan partial-hit prefills;
 //! 2. **Degradation, not abortion** — a snapshot whose every KV page took
 //!    a bit flip still restores: each corrupt page is quarantined and only
 //!    its owning request retires `Error`; queued (page-less) requests ride
@@ -331,6 +332,117 @@ fn truncated_snapshots_error_never_panic() {
     for cut in cuts {
         let r = Server::restore(small_engine(), cfg.clone(), &buf[..cut]);
         assert!(r.is_err(), "restore from {cut}/{} bytes must fail", buf.len());
+    }
+}
+
+/// The radix-tree roundtrip: kill a server with a POPULATED prefix tree
+/// (a registered shared prompt) and IN-FLIGHT partial-hit prefills, at
+/// worker widths {1, 4}. The restore must rebuild the tree exactly —
+/// entries, nodes, pinned pages, hit/partial-hit counters — pass the
+/// structural audit, and the drained event stream must match the
+/// uninterrupted server's bit for bit.
+#[test]
+fn populated_tree_and_in_flight_partial_hits_survive_the_kill() {
+    for workers in [1usize, 4] {
+        let cfg = ServerConfig {
+            seed: 83,
+            max_prefills_per_cycle: 2,
+            // one chunk per tick keeps wave-2 prefills in flight at the
+            // kill point — the snapshot must carry resumed-run state
+            prefill_chunks_per_tick: 1,
+            workers,
+            ..ServerConfig::default()
+        };
+        let mut server = Server::new(small_engine(), cfg.clone());
+        let mk_req = |id: u64, prompt: Vec<i32>, max_new: usize| Request {
+            id,
+            prompt,
+            max_new_tokens: max_new,
+            sampling: Sampling::Greedy,
+            method: None,
+            tenant: 0,
+            deadline_ticks: None,
+        };
+        // wave 1: the producer — 96 tokens = 2 quantized groups + 32
+        // residual; drain it so its prefill registers in the tree
+        let prefix: Vec<i32> = (0..96).map(|i| (i * 7 % 126) as i32 + 1).collect();
+        let mut max_new: HashMap<u64, usize> = HashMap::new();
+        max_new.insert(0, 2);
+        server.submit(mk_req(0, prefix.clone(), 2)).unwrap();
+        let mut guard = 0;
+        while server.has_work() {
+            server.tick().unwrap();
+            guard += 1;
+            assert!(guard < 1000, "workers={workers}: producer never drained");
+        }
+        let tree = server.engine.prefix_tree().expect("tree on by default").clone();
+        assert_eq!(tree.borrow().len(), 1, "producer prompt must register");
+        assert!(tree.borrow().pages_pinned() > 0);
+
+        // wave 2: four sharers diverging after the shared two groups (the
+        // frozen-plan partial-hit path) plus one exact repeat (full hit)
+        for r in 1..=4u64 {
+            let mut p = prefix[..64].to_vec();
+            p.extend((0..32).map(|i| ((r as i32 * 13 + i) % 126) + 1));
+            max_new.insert(r, 3);
+            server.submit(mk_req(r, p, 3)).unwrap();
+        }
+        max_new.insert(5, 3);
+        server.submit(mk_req(5, prefix.clone(), 3)).unwrap();
+        server.tick().unwrap();
+        server.tick().unwrap();
+        let before = tree.borrow().stats();
+        assert!(
+            before.partial_hits > 0,
+            "workers={workers}: wave 2 must record partial hits before the kill"
+        );
+        assert!(
+            server.prefills_in_flight() > 0,
+            "workers={workers}: the kill point must have prefills in flight"
+        );
+
+        // the event log is not part of the snapshot — drain it so the
+        // live tail and the replica tail start from the same empty log
+        let pre = server.drain_events();
+        let mut buf: Vec<u8> = Vec::new();
+        server.snapshot(&mut buf).unwrap();
+        let tail_live = drain(&mut server);
+        drop(server); // the "crash"
+
+        let mut replica = Server::restore(small_engine(), cfg, buf.as_slice()).unwrap();
+        replica.check_invariants().unwrap();
+        let rtree = replica.engine.prefix_tree().expect("restored tree").clone();
+        {
+            let t = rtree.borrow();
+            t.audit().unwrap();
+            let after = t.stats();
+            assert_eq!(after.entries, before.entries, "workers={workers}: entries");
+            assert_eq!(after.nodes, before.nodes, "workers={workers}: nodes");
+            assert_eq!(
+                after.pages_pinned, before.pages_pinned,
+                "workers={workers}: pinned pages"
+            );
+            assert_eq!(after.hits, before.hits, "workers={workers}: hit counter");
+            assert_eq!(
+                after.partial_hits, before.partial_hits,
+                "workers={workers}: partial-hit counter"
+            );
+        }
+        let tail_replica = drain(&mut replica);
+        assert_eq!(
+            tail_live, tail_replica,
+            "workers={workers}: restored server diverged from the original"
+        );
+        let mut events = pre;
+        events.extend(tail_replica);
+        let streams = by_request(&events);
+        assert_eq!(streams.len(), max_new.len(), "workers={workers}: stream count");
+        for (id, stream) in &streams {
+            validate_stream(stream, max_new[id]).unwrap();
+        }
+        // the replayed sharers drained: only the tree's deliberate
+        // retention may remain leased
+        assert_eq!(replica.pool.leased(), rtree.borrow().pages_pinned());
     }
 }
 

@@ -14,6 +14,12 @@
 //! * `BENCH_prefix_sharing.json` — K requests over one prompt must hold
 //!   ≥2× fewer prefix pages than private mode and actually skip prefill
 //!   chunks (dedup that stops deduping is a regression too);
+//! * `BENCH_prefix_radix.json` — the shared-system-prompt radix workload:
+//!   K consumers with divergent suffixes must take frozen-plan partial
+//!   hits (≥2× page dedup over private mode, chunks actually skipped),
+//!   the same-seed rerun must show **zero fingerprint drift** with the
+//!   tree enabled, and every method whose frozen-plan default is ON must
+//!   measure inside the frozen-plan error budget;
 //! * `BENCH_traffic.json` — the seeded traffic smoke (`mixkvq traffic`)
 //!   must finish every session, hold the p99 TTFT bar, carry per-tenant
 //!   SLO stats, and show **zero same-seed drift** (the harness runs the
@@ -49,6 +55,7 @@
 use std::path::Path;
 use std::process::ExitCode;
 
+use mixkvq::harness::profiling::FROZEN_PLAN_NLL_BUDGET;
 use mixkvq::util::json::Json;
 
 use anyhow::Result;
@@ -163,6 +170,65 @@ fn gate_prefix_sharing(j: &Json) -> Result<Vec<String>> {
         }
         if deduped <= 0.0 {
             v.push(format!("prefix_sharing: no bytes deduped at T={t}"));
+        }
+    }
+    Ok(v)
+}
+
+fn gate_prefix_radix(j: &Json) -> Result<Vec<String>> {
+    let mut v = Vec::new();
+    let entries = j.get("entries")?.as_arr()?;
+    if entries.is_empty() {
+        v.push("prefix_radix: report has NO entries — did the bench measure anything?".to_string());
+        return Ok(v);
+    }
+    for e in entries {
+        let t = e.get("t")?.as_f64()?;
+        let matched = e.get("matched_tokens")?.as_f64()?;
+        let dedup = e.get("dedup_ratio")?.as_f64()?;
+        let skipped = e.get("chunks_skipped")?.as_f64()?;
+        if matched <= 0.0 {
+            v.push(format!(
+                "prefix_radix: zero tokens matched at T={t} — partial hits \
+                 were never served"
+            ));
+        }
+        if dedup < PREFIX_DEDUP_MIN {
+            v.push(format!(
+                "prefix_radix: page dedup {dedup:.2}x < {PREFIX_DEDUP_MIN}x at T={t}"
+            ));
+        }
+        if skipped <= 0.0 {
+            v.push(format!("prefix_radix: no prefill chunks skipped at T={t}"));
+        }
+    }
+    // zero same-seed drift with the tree enabled: the bench runs the whole
+    // scenario twice and folds logits, admission verdicts, and lease counts
+    // into the fingerprints — sharing must change cost, never semantics
+    let fp = j.get("fingerprint")?.as_str()?;
+    let fp2 = j.get("fingerprint_repeat")?.as_str()?;
+    if !matches!(j.get("fingerprint_drift")?, Json::Bool(false)) || fp != fp2 {
+        v.push(format!(
+            "prefix_radix: same-seed runs diverged with the tree enabled \
+             (fingerprint {fp} vs {fp2}) — prefix sharing is nondeterministic"
+        ));
+    }
+    // frozen-plan ablation: every method served partial hits by default
+    // must measure inside the error budget
+    let frozen = j.get("frozen_plan")?.as_arr()?;
+    if frozen.is_empty() {
+        v.push("prefix_radix: report carries no frozen-plan sweep entries".to_string());
+    }
+    for f in frozen {
+        let name = f.get("method")?.as_str()?;
+        let on = matches!(f.get("default_on")?, Json::Bool(true));
+        let within = matches!(f.get("within_budget")?, Json::Bool(true));
+        if on && !within {
+            let nll = f.get("nll_delta")?.as_f64()?;
+            v.push(format!(
+                "prefix_radix: default-ON method `{name}` measured frozen-plan \
+                 nll delta {nll:.4} > {FROZEN_PLAN_NLL_BUDGET} nats"
+            ));
         }
     }
     Ok(v)
@@ -366,11 +432,12 @@ fn gate_restore(j: &Json) -> Result<Vec<String>> {
 
 type Gate = fn(&Json) -> Result<Vec<String>>;
 
-const GATES: [(&str, Gate); 8] = [
+const GATES: [(&str, Gate); 9] = [
     ("BENCH_ref_decode.json", gate_ref_decode),
     ("BENCH_paged_decode.json", gate_paged_decode),
     ("BENCH_prefill.json", gate_prefill),
     ("BENCH_prefix_sharing.json", gate_prefix_sharing),
+    ("BENCH_prefix_radix.json", gate_prefix_radix),
     ("BENCH_traffic.json", gate_traffic),
     ("BENCH_chaos.json", gate_chaos),
     ("BENCH_parallel.json", gate_parallel),
@@ -405,6 +472,8 @@ fn main() -> ExitCode {
              (decode >= {DECODE_SPEEDUP_MIN}x, prefill >= {PREFILL_SPEEDUP_MIN}x, \
              f32 shrink >= {PREFILL_MEM_RATIO_MIN}x, paged overhead <= \
              {PAGED_OVERHEAD_MAX_PCT}%, prefix dedup >= {PREFIX_DEDUP_MIN}x, \
+             radix partial-hit dedup >= {PREFIX_DEDUP_MIN}x + drift-free + \
+             frozen-plan <= {FROZEN_PLAN_NLL_BUDGET} nats, \
              traffic p99 TTFT <= {TRAFFIC_P99_TTFT_MAX_MS} ms + deterministic, \
              chaos soak all-terminal + invariant-clean + leak-free, \
              parallel scaling >= {PARALLEL_SCALING_MIN}x + drift-free, \
@@ -495,6 +564,86 @@ mod tests {
                                   "bytes_deduped":0}]}"#;
         let v = gate_prefix_sharing(&parse(bad)).unwrap();
         assert_eq!(v.len(), 3, "{v:?}");
+    }
+
+    fn prefix_radix_report(
+        dedup: f64,
+        matched: f64,
+        skipped: f64,
+        fp2: &str,
+        nll: f64,
+    ) -> String {
+        let within = nll <= FROZEN_PLAN_NLL_BUDGET;
+        format!(
+            r#"{{"bench":"prefix_radix","variant":"mix30","entries":[
+                {{"t":2112,"k":4,"shared_tokens":2048,"matched_tokens":{matched},
+                  "seam":{matched},"hit_resume_ms":4.0,"full_prefill_ms":60.0,
+                  "resume_speedup":15.0,"pages_shared":512,
+                  "pages_private_equiv":1984,"dedup_ratio":{dedup},
+                  "chunks_skipped":{skipped},"bytes_deduped":4000000}}],
+                "fingerprint":"0xabad1dea","fingerprint_repeat":"{fp2}",
+                "fingerprint_drift":{},
+                "frozen_plan":[
+                  {{"method":"mixkvq-mix30","default_on":true,"logit_err":0.01,
+                    "nll_delta":{nll},"within_budget":{within}}},
+                  {{"method":"kvquant-kv2","default_on":false,"logit_err":2.0,
+                    "nll_delta":1.7,"within_budget":false}}]}}"#,
+            fp2 != "0xabad1dea"
+        )
+    }
+
+    #[test]
+    fn healthy_prefix_radix_report_passes() {
+        let src = prefix_radix_report(3.8, 1984.0, 992.0, "0xabad1dea", 0.01);
+        let v = gate_prefix_radix(&parse(&src)).unwrap();
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn prefix_radix_gate_catches_every_degradation_independently() {
+        // dedup below the 2x bar
+        let v = gate_prefix_radix(&parse(&prefix_radix_report(
+            1.3, 1984.0, 992.0, "0xabad1dea", 0.01,
+        )))
+        .unwrap();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("1.30x"), "{v:?}");
+        // partial hits never served (and therefore nothing skipped)
+        let v = gate_prefix_radix(&parse(&prefix_radix_report(
+            3.8, 0.0, 0.0, "0xabad1dea", 0.01,
+        )))
+        .unwrap();
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v[0].contains("zero tokens matched"), "{v:?}");
+        assert!(v[1].contains("chunks skipped"), "{v:?}");
+        // same-seed fingerprint drift with the tree enabled
+        let v = gate_prefix_radix(&parse(&prefix_radix_report(
+            3.8, 1984.0, 992.0, "0xabad1deb", 0.01,
+        )))
+        .unwrap();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("diverged"), "{v:?}");
+        // a default-ON method outside the frozen-plan budget (the
+        // default-OFF kvquant entry is outside it in every report and must
+        // never trip the bar)
+        let v = gate_prefix_radix(&parse(&prefix_radix_report(
+            3.8, 1984.0, 992.0, "0xabad1dea", 0.9,
+        )))
+        .unwrap();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("mixkvq-mix30"), "{v:?}");
+        // a sweep that vanished is a regression, not a pass
+        let src = prefix_radix_report(3.8, 1984.0, 992.0, "0xabad1dea", 0.01);
+        let start = src.find(r#""frozen_plan""#).unwrap();
+        let gutted = format!("{}\"frozen_plan\":[]}}", &src[..start]);
+        let v = gate_prefix_radix(&parse(&gutted)).unwrap();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("no frozen-plan sweep"), "{v:?}");
+        // no entries at all
+        let empty = r#"{"entries":[]}"#;
+        let v = gate_prefix_radix(&parse(empty)).unwrap();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("NO entries"), "{v:?}");
     }
 
     fn traffic_report(completed: f64, p99: f64, fp: &str, fp2: &str, det: bool) -> String {
@@ -773,6 +922,11 @@ mod tests {
             dir.join("BENCH_prefix_sharing.json"),
             r#"{"entries":[{"t":256,"dedup_ratio":3.5,"chunks_skipped":96,
                             "bytes_deduped":500000}]}"#,
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("BENCH_prefix_radix.json"),
+            prefix_radix_report(3.8, 1984.0, 992.0, "0xabad1dea", 0.01),
         )
         .unwrap();
         std::fs::write(
